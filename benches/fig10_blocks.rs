@@ -1,0 +1,67 @@
+//! Figure 10 reproduction.
+//!
+//! (a) Execution time of a single 1024×1024 weight matrix at 10× BCR
+//!     pruning as the number of blocks grows (x-axis 1 → 4096). The paper
+//!     shows a flat region up to ~256 blocks, then a sharp rise — the
+//!     index/control overhead outgrowing the remaining per-block
+//!     parallelism.
+//! (b) Execution time vs block size (first dim, second fixed at 16) for a
+//!     VGG-16 L8-shaped layer — time drops to a plateau as blocks grow.
+//!     (The accuracy series of 10(b) is produced by the python harness:
+//!     `python -m compile.experiments.table1`.)
+
+use grim::bench::{fmt_ms, quick_mode, Report};
+use grim::blockopt::{run_layer, synthesize};
+use grim::gemm::bcrc_gemm::GemmParams;
+use grim::util::{Rng, ThreadPool};
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 3 } else { 9 };
+    let pool = ThreadPool::new(8);
+    let mut rng = Rng::new(0xF16_10);
+
+    // ---- (a): 1024x1024 @ 10x, sweep number of blocks -----------------
+    let mut rep = Report::new(
+        "fig10a",
+        "Figure 10(a): exec time vs #blocks (1024x1024, 10x BCR)",
+        &["blocks", "grid", "cpu1_ms", "cpu8_ms"],
+    );
+    let n = 64;
+    for grid in [1usize, 2, 4, 8, 16, 32, 64] {
+        let blocks = grid * grid;
+        let layer = synthesize(
+            1024,
+            1024,
+            [1024 / grid, 1024 / grid],
+            10.0,
+            GemmParams::default(),
+            &mut rng,
+        );
+        let pool1 = ThreadPool::new(1);
+        let t1 = run_layer(&layer, n, &pool1, iters, &mut rng);
+        let t8 = {
+            // force the parallel path (the many-thread "GPU-like" series)
+            let x = grim::tensor::Tensor::rand_uniform(&[1024, n], 1.0, &mut rng);
+            grim::util::timer::time_median_ms(iters, 1, || {
+                std::hint::black_box(layer.gemm.execute_parallel(&x, &pool));
+            })
+        };
+        rep.row(vec![blocks.to_string(), format!("{grid}x{grid}"), fmt_ms(t1), fmt_ms(t8)]);
+    }
+    rep.finish();
+
+    // ---- (b): VGG L8-shaped layer, sweep block first dim ---------------
+    let mut rep = Report::new(
+        "fig10b",
+        "Figure 10(b): exec time vs block size (VGG L8 [512,4608], col-block 16)",
+        &["block", "ms"],
+    );
+    let (rows, cols) = (512usize, 4608usize);
+    for br in [1usize, 2, 4, 8, 16, 32, 64] {
+        let layer = synthesize(rows, cols, [br, 16], 8.0, GemmParams::default(), &mut rng);
+        let ms = run_layer(&layer, 64, &pool, iters, &mut rng);
+        rep.row(vec![format!("{br}x16"), fmt_ms(ms)]);
+    }
+    rep.finish();
+}

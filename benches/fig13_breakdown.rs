@@ -1,0 +1,99 @@
+//! Figure 13 reproduction: per-optimization breakdown on the VGG Table-4
+//! CONV layers (L1–L9). Variants, cumulative as in the paper:
+//!
+//!   No-Opt   — BCR-pruned weights, identity row order, no LRE, unroll 1
+//!   +Reorder — group-by-signature matrix reordering (§4.2)
+//!   +LRE     — register-level load redundancy elimination, unroll 4 (§4.4)
+//!   +Tuning  — GA-tuned (unroll, n-tile) per layer (§4.5)
+//!
+//! Expected shape: each step is ≥ the previous; reorder 1.2–1.9×, LRE an
+//! extra 1.1–3.5×, tuning a further fraction (paper's CPU numbers).
+
+use grim::bench::{fmt_ms, fmt_x, quick_mode, Report};
+use grim::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
+use grim::models::vgg::TABLE4_LAYERS;
+use grim::sparse::{Bcrc, BcrConfig, BcrMask, ReorderPlan};
+use grim::tensor::Tensor;
+use grim::tuner::{tune_layer, GaConfig, SearchSpace};
+use grim::util::{timer, Rng, ThreadPool};
+
+/// Spatial size of each Table-4 layer's output at 32x32 CIFAR input
+/// (after the VGG pooling ladder): L1-2 -> 32², L3-4 -> 16², L5-6 -> 8²,
+/// L7 -> 4², L8-9 -> 4².
+const GEMM_N: [usize; 9] = [1024, 1024, 256, 256, 64, 64, 16, 16, 16];
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 3 } else { 9 };
+    let rate = 8.0;
+    let pool = ThreadPool::new(8);
+
+    let mut rep = Report::new(
+        "fig13",
+        "Figure 13: optimization breakdown on VGG L1-L9 (speedup over No-Opt)",
+        &["layer", "shape", "noopt_ms", "+Reorder", "+LRE", "+Tuning"],
+    );
+
+    for (li, (name, shape)) in TABLE4_LAYERS.iter().enumerate() {
+        let [f, c, kh, kw] = *shape;
+        let (rows, cols) = (f, c * kh * kw);
+        let n = GEMM_N[li];
+        let mut rng = Rng::new(li as u64 + 100);
+        let block_c = grim::models::fit_divisor(cols, 16);
+        let cfg = BcrConfig::from_block_size(rows, cols, 4.min(rows), block_c);
+        let mask = BcrMask::random(rows, cols, cfg, rate, &mut rng);
+        let mut w = Tensor::rand_uniform(&[rows, cols], 0.3, &mut rng);
+        mask.apply(&mut w);
+        let x = Tensor::rand_uniform(&[cols, n], 1.0, &mut rng);
+
+        // No-Opt: identity order, no LRE
+        let sigs: Vec<Vec<u32>> = (0..rows).map(|r| mask.row_columns(r)).collect();
+        let ident = ReorderPlan::identity(sigs, rows, cols);
+        let enc_ident = Bcrc::encode(&w, &mask, &ident);
+        let noopt = BcrcGemm::new(enc_ident, GemmParams { unroll: 1, n_tile: usize::MAX, lre: false });
+        let t_noopt = timer::time_median_ms(iters, 1, || {
+            std::hint::black_box(noopt.execute_parallel(&x, &pool));
+        });
+
+        // +Reorder
+        let plan = ReorderPlan::from_mask(&mask);
+        let enc = Bcrc::encode(&w, &mask, &plan);
+        let reorder =
+            BcrcGemm::new(enc.clone(), GemmParams { unroll: 1, n_tile: usize::MAX, lre: false });
+        let t_reorder = timer::time_median_ms(iters, 1, || {
+            std::hint::black_box(reorder.execute_parallel(&x, &pool));
+        });
+
+        // +LRE
+        let lre = BcrcGemm::new(enc.clone(), GemmParams { unroll: 4, n_tile: usize::MAX, lre: true });
+        let t_lre = timer::time_median_ms(iters, 1, || {
+            std::hint::black_box(lre.execute_parallel(&x, &pool));
+        });
+
+        // +Tuning (GA over unroll x n-tile)
+        let ga = GaConfig {
+            population: if quick { 4 } else { 8 },
+            generations: if quick { 2 } else { 4 },
+            eval_iters: 3,
+            ..Default::default()
+        };
+        let res = tune_layer(&SearchSpace::default(), ga, |cfgp| {
+            let g = BcrcGemm::new(enc.clone(), cfgp.gemm_params());
+            std::hint::black_box(g.execute(&x));
+        });
+        let tuned = BcrcGemm::new(enc.clone(), res.best.gemm_params());
+        let t_tuned = timer::time_median_ms(iters, 1, || {
+            std::hint::black_box(tuned.execute_parallel(&x, &pool));
+        });
+
+        rep.row(vec![
+            name.to_string(),
+            format!("[{rows},{cols}]xN{n}"),
+            fmt_ms(t_noopt),
+            fmt_x(t_noopt / t_reorder),
+            fmt_x(t_noopt / t_lre),
+            fmt_x(t_noopt / t_tuned.min(t_lre)),
+        ]);
+    }
+    rep.finish();
+}

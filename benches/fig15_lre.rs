@@ -1,0 +1,66 @@
+//! Figure 15 reproduction: register load counts before/after LRE for the
+//! GRU layers R1–R3 (152×1024, 512×1024, 1024×1024 — the paper's shapes)
+//! and the VGG Table-4 CONV layers. Counts are exact analytic functions
+//! of the storage layout (see gemm::loadcount).
+
+use grim::bench::{fmt_x, Report};
+use grim::gemm::loadcount::bcrc_input_loads;
+use grim::models::vgg::TABLE4_LAYERS;
+use grim::sparse::{Bcrc, BcrConfig, BcrMask};
+use grim::tensor::Tensor;
+use grim::util::Rng;
+
+fn encode(rows: usize, cols: usize, rate: f64, seed: u64) -> Bcrc {
+    let mut rng = Rng::new(seed);
+    let bc = grim::models::fit_divisor(cols, 16);
+    let br = grim::models::fit_divisor(rows, 4);
+    let cfg = BcrConfig::from_block_size(rows, cols, br, bc);
+    let mask = BcrMask::random(rows, cols, cfg, rate, &mut rng);
+    let mut w = Tensor::rand_uniform(&[rows, cols], 0.3, &mut rng);
+    mask.apply(&mut w);
+    Bcrc::from_masked(&w, &mask)
+}
+
+fn main() {
+    let mut rep = Report::new(
+        "fig15",
+        "Figure 15: register load counts before/after LRE (unroll=4)",
+        &["layer", "shape", "n", "loads_no_lre", "loads_lre", "reduction"],
+    );
+
+    // RNN layers R1-R3 at 10x, GEMV batch 32
+    for (name, rows, cols) in [("R1", 152usize, 1024usize), ("R2", 512, 1024), ("R3", 1024, 1024)] {
+        let enc = encode(rows, cols, 10.0, rows as u64);
+        let n = 32;
+        let no = bcrc_input_loads(&enc, n, 1, false);
+        let yes = bcrc_input_loads(&enc, n, 4, true);
+        rep.row(vec![
+            name.into(),
+            format!("{rows}x{cols}"),
+            n.to_string(),
+            no.to_string(),
+            yes.to_string(),
+            fmt_x(no as f64 / yes as f64),
+        ]);
+        assert!(yes < no, "LRE must reduce loads on {name}");
+    }
+
+    // CNN layers from Table 4 at 8x
+    const GEMM_N: [usize; 9] = [1024, 1024, 256, 256, 64, 64, 16, 16, 16];
+    for (li, (name, [f, c, kh, kw])) in TABLE4_LAYERS.iter().enumerate() {
+        let (rows, cols) = (*f, c * kh * kw);
+        let enc = encode(rows, cols, 8.0, 200 + li as u64);
+        let n = GEMM_N[li];
+        let no = bcrc_input_loads(&enc, n, 1, false);
+        let yes = bcrc_input_loads(&enc, n, 4, true);
+        rep.row(vec![
+            name.to_string(),
+            format!("{rows}x{cols}"),
+            n.to_string(),
+            no.to_string(),
+            yes.to_string(),
+            fmt_x(no as f64 / yes as f64),
+        ]);
+    }
+    rep.finish();
+}

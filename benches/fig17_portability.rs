@@ -1,0 +1,83 @@
+//! Figure 17 reproduction: portability across devices. The paper runs
+//! VGG on a Snapdragon 845 phone and a Kirin 980 phone and shows the
+//! same framework ordering. Our device analogs are thread-count/core
+//! presets (DESIGN.md §2): S855→8 workers, S845→6, Kirin 980→4 — the
+//! claim under test is that GRIM's *relative ordering and speedup* is
+//! stable as compute shrinks, not any absolute number.
+
+use grim::bench::{fmt_ms, fmt_x, quick_mode, Report};
+use grim::compiler::passes::{compile, Backend, CompileOptions};
+use grim::engine::Engine;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::tensor::Tensor;
+use grim::util::{timer, Rng};
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 2 } else { 5 };
+    let devices = [("S855-analog", 8usize), ("S845-analog", 6), ("Kirin980-analog", 4)];
+
+    let opts = InitOptions { rate: 8.0, block: [4, 16], seed: 0xF17 };
+    let module = build_model(ModelKind::Vgg16, Preset::CifarMini, opts);
+    let weights = random_weights(&module, opts);
+    let mut rng = Rng::new(2);
+    let x = Tensor::rand_uniform(&[3, 32, 32], 1.0, &mut rng);
+
+    let mut dense_m = module.clone();
+    dense_m.irs.clear();
+    let mut dense_w = weights.clone();
+    for lw in dense_w.values_mut() {
+        lw.mask = None;
+    }
+
+    let mut rep = Report::new(
+        "fig17",
+        "Figure 17: portability (VGG, device analogs = worker presets)",
+        &["device", "threads", "TFLite", "MNN/TVM", "CSR", "GRIM", "grim_speedup"],
+    );
+
+    for (dev, threads) in devices {
+        let t_naive = {
+            let plan =
+                compile(&dense_m, &dense_w, CompileOptions::for_backend(Backend::NaiveDense)).unwrap();
+            let e = Engine::new(plan, threads);
+            timer::time_median_ms(iters, 1, || {
+                std::hint::black_box(e.run(&x).unwrap());
+            })
+        };
+        let t_opt = {
+            let plan =
+                compile(&dense_m, &dense_w, CompileOptions::for_backend(Backend::OptDense)).unwrap();
+            let e = Engine::new(plan, threads);
+            timer::time_median_ms(iters, 1, || {
+                std::hint::black_box(e.run(&x).unwrap());
+            })
+        };
+        let t_csr = {
+            let plan =
+                compile(&module, &weights, CompileOptions::for_backend(Backend::CsrSparse)).unwrap();
+            let e = Engine::new(plan, threads);
+            timer::time_median_ms(iters, 1, || {
+                std::hint::black_box(e.run(&x).unwrap());
+            })
+        };
+        let t_grim = {
+            let plan = compile(&module, &weights, CompileOptions::default()).unwrap();
+            let e = Engine::new(plan, threads);
+            timer::time_median_ms(iters, 1, || {
+                std::hint::black_box(e.run(&x).unwrap());
+            })
+        };
+        rep.row(vec![
+            dev.into(),
+            threads.to_string(),
+            fmt_ms(t_naive),
+            fmt_ms(t_opt),
+            fmt_ms(t_csr),
+            fmt_ms(t_grim),
+            fmt_x(t_naive / t_grim),
+        ]);
+        assert!(t_grim <= t_naive, "GRIM ordering must hold on {dev}");
+    }
+    rep.finish();
+}

@@ -1,0 +1,82 @@
+//! End-to-end validation driver (DESIGN.md §5 E2E): load the model the
+//! python side trained + ADMM-pruned + exported (`make train-demo` →
+//! `artifacts/demo_cnn.grim`), serve batched requests through the L3
+//! coordinator, and report latency percentiles + throughput + the
+//! paper's real-time criterion (33 ms/frame).
+//!
+//! Falls back to a randomly initialized model when the trained artifact
+//! is absent, so the example always runs.
+//!
+//!     make train-demo && cargo run --release --example e2e_serve
+
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::coordinator::{BatchPolicy, Server, ServerConfig};
+use grim::engine::Engine;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::tensor::Tensor;
+use grim::util::Rng;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let trained = Path::new("artifacts/demo_cnn.grim");
+    let (module, weights, provenance) = if trained.exists() {
+        let (m, w) = grim::formats::load_grim(trained)?;
+        (m, w, "trained by python ADMM (artifacts/demo_cnn.grim)")
+    } else {
+        let opts = InitOptions { rate: 6.0, block: [4, 16], seed: 3 };
+        let m = build_model(ModelKind::Vgg16, Preset::CifarMini, opts);
+        let w = random_weights(&m, opts);
+        (m, w, "random weights (run `make train-demo` for the trained model)")
+    };
+    println!("model: {} — {provenance}", module.name);
+
+    let plan = compile(&module, &weights, CompileOptions::default())?;
+    println!("storage: {} KiB, {} steps", plan.storage_bytes() / 1024, plan.steps.len());
+    let engine = Engine::new(plan, 8);
+
+    let config = ServerConfig {
+        queue_capacity: 256,
+        batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+    };
+    let server = Server::start(engine, config);
+
+    // Drive a batched workload: 4 client threads x 64 requests.
+    let shapes = module.graph.infer_shapes()?;
+    let in_dims = shapes[module.graph.input()?].dims().to_vec();
+    let server = std::sync::Arc::new(server);
+    let clients = 4;
+    let per_client = 64;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = std::sync::Arc::clone(&server);
+        let dims = in_dims.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c);
+            for _ in 0..per_client {
+                let x = Tensor::rand_uniform(&dims, 1.0, &mut rng);
+                let resp = s.infer(x).expect("infer");
+                assert!(resp.output.data().iter().all(|v| v.is_finite()));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let stats = server.stats();
+    println!("\n=== E2E serving report ===");
+    println!("requests: {} in {:.2} s -> {:.1} req/s", stats.completed, wall, stats.completed as f64 / wall);
+    println!(
+        "latency ms: p50={:.3} p90={:.3} p99={:.3} max={:.3}",
+        stats.latency_ms.p50, stats.latency_ms.p90, stats.latency_ms.p99, stats.latency_ms.max
+    );
+    println!("exec ms:    p50={:.3}   queue ms: p50={:.3}", stats.exec_ms.p50, stats.queue_ms.p50);
+    let rt = stats.latency_ms.p99 < 33.0;
+    println!(
+        "real-time criterion (33 ms/frame, §1): {}",
+        if rt { "PASS" } else { "MISS (host-dependent)" }
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: build a BCR-pruned ResNet-18 mini, compile it with the
+//! GRIM compiler, and run one inference — the 30-second tour of the
+//! public API.
+//!
+//!     cargo run --release --example quickstart
+
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::engine::Engine;
+use grim::graph::dsl;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::tensor::Tensor;
+use grim::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A model from the zoo: ResNet-18 (CIFAR mini preset), BCR-pruned
+    //    at 8x with the paper's preferred 4x16 blocks.
+    let opts = InitOptions { rate: 8.0, block: [4, 16], seed: 7 };
+    let module = build_model(ModelKind::Resnet18, Preset::CifarMini, opts);
+    let weights = random_weights(&module, opts);
+
+    // The module is just DSL — print a few lines of it.
+    let text = dsl::print(&module);
+    println!("--- DSL (first 8 lines) ---");
+    for line in text.lines().take(8) {
+        println!("{line}");
+    }
+
+    // 2. Compile: reorder -> BCRC -> LRE/tiling -> fused plan.
+    let plan = compile(&module, &weights, CompileOptions::default())?;
+    println!(
+        "\ncompiled '{}': {} steps, {} KiB weights",
+        module.name,
+        plan.steps.len(),
+        plan.storage_bytes() / 1024
+    );
+
+    // 3. Run.
+    let mut engine = Engine::new(plan, 8);
+    engine.collect_metrics = true;
+    let mut rng = Rng::new(1);
+    let x = Tensor::rand_uniform(&[3, 32, 32], 1.0, &mut rng);
+    engine.run(&x)?; // warmup
+    let (out, metrics) = engine.run_with_metrics(&x)?;
+    println!("\nprediction: class {} (p={:.3})", out.argmax(), out.data()[out.argmax()]);
+    println!("latency: {:.3} ms over {} steps", metrics.total_ms(), metrics.layers.len());
+    Ok(())
+}

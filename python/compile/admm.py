@@ -1,0 +1,133 @@
+"""ADMM-based weight pruning (paper §5.2, Eq. 1–5).
+
+The constrained problem  min f(W) s.t. W ∈ S  is split via an auxiliary Z
+and a scaled dual U:
+
+  W-step (Eq. 3):  SGD on  f(W) + ρ/2 Σ ||W - Z + U||²
+  Z-step (Eq. 4–5): Z = Π_S(W + U)   (the projection of prune/*)
+  dual:             U += W - Z
+
+ρ ramps exponentially (1e-4 → 1e-1 in the paper); after the ADMM epochs
+the mask is frozen (hard projection) and the survivors are retrained.
+"""
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class AdmmConfig:
+    admm_epochs: int = 8
+    retrain_epochs: int = 8
+    lr: float = 1e-2
+    rho_start: float = 1e-4
+    rho_end: float = 1e-1
+    batch: int = 64
+    seed: int = 0
+
+
+def _sgd_epoch(loss_fn, params, data, labels, lr, batch, key):
+    """One shuffled-minibatch SGD epoch; returns updated params."""
+    n = data.shape[0]
+    perm = jax.random.permutation(key, n)
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    steps = max(1, n // batch)
+    for s in range(steps):
+        idx = perm[s * batch:(s + 1) * batch]
+        g = grad_fn(params, data[idx], labels[idx])
+        params = jax.tree_util.tree_map(lambda p, gi: p - lr * gi, params, g)
+    return params
+
+
+def admm_prune(
+    forward: Callable,           # forward(params, x, masks=None) -> logits
+    loss: Callable,              # loss(logits, labels) -> scalar
+    params: Dict[str, jnp.ndarray],
+    prune_targets: Dict[str, Callable],  # name -> project(w) -> (w_proj, mask)
+    train_data,
+    train_labels,
+    cfg: AdmmConfig,
+    eval_fn: Optional[Callable] = None,
+):
+    """Run ADMM pruning + mask-frozen retraining.
+
+    `prune_targets[name]` is the projection for that weight (partial-applied
+    with its rate/grid). Returns (params, masks, history).
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    names = list(prune_targets)
+    Z = {n: np.asarray(params[n]).copy() for n in names}
+    U = {n: np.zeros_like(Z[n]) for n in names}
+    for n in names:  # start feasible
+        Z[n], _ = prune_targets[n](Z[n])
+
+    rhos = np.geomspace(cfg.rho_start, cfg.rho_end, max(cfg.admm_epochs, 1))
+    history = []
+
+    def admm_loss(p, x, y, rho):
+        logits = forward(p, x)
+        base = loss(logits, y)
+        reg = 0.0
+        for n in names:
+            diff = p[n] - jnp.asarray(Z[n]) + jnp.asarray(U[n])
+            reg = reg + 0.5 * rho * jnp.sum(diff * diff)
+        return base + reg
+
+    # --- ADMM phase -------------------------------------------------
+    for epoch in range(cfg.admm_epochs):
+        rho = float(rhos[epoch])
+        key, sub = jax.random.split(key)
+        params = _sgd_epoch(
+            lambda p, x, y: admm_loss(p, x, y, rho),
+            params, train_data, train_labels, cfg.lr, cfg.batch, sub)
+        # Z and U updates (Eq. 5 + dual ascent)
+        for n in names:
+            wu = np.asarray(params[n]) + U[n]
+            Z[n], _ = prune_targets[n](wu)
+            U[n] = U[n] + np.asarray(params[n]) - Z[n]
+        if eval_fn:
+            history.append(("admm", epoch, float(eval_fn(params, None))))
+
+    # --- hard projection + mask freeze ------------------------------
+    masks = {}
+    for n in names:
+        w_proj, mask = prune_targets[n](np.asarray(params[n]))
+        params = dict(params)
+        params[n] = jnp.asarray(w_proj)
+        masks[n] = jnp.asarray(mask)
+
+    # --- masked retraining (cosine-ish decayed lr, §6.1) -------------
+    def masked_loss(p, x, y):
+        return loss(forward(p, x, masks=masks), y)
+
+    for epoch in range(cfg.retrain_epochs):
+        lr = cfg.lr * 0.5 * (1 + np.cos(np.pi * epoch / max(cfg.retrain_epochs, 1)))
+        key, sub = jax.random.split(key)
+        params = _sgd_epoch(masked_loss, params, train_data, train_labels,
+                            float(lr), cfg.batch, sub)
+        # keep iterates feasible (projected SGD on the frozen mask)
+        params = dict(params)
+        for n in names:
+            params[n] = params[n] * masks[n]
+        if eval_fn:
+            history.append(("retrain", epoch, float(eval_fn(params, masks))))
+
+    return params, masks, history
+
+
+def sparsity_report(masks):
+    """Achieved pruning rate per weight and overall."""
+    rows = {}
+    tot_n, tot_k = 0, 0
+    for n, m in masks.items():
+        m = np.asarray(m)
+        kept = int(m.sum())
+        rows[n] = m.size / max(kept, 1)
+        tot_n += m.size
+        tot_k += kept
+    rows["__overall__"] = tot_n / max(tot_k, 1)
+    return rows

@@ -1,0 +1,123 @@
+"""AOT export: lower the L2 jax functions (with the L1 Pallas kernel
+inlined, interpret=True) to HLO **text** for the rust PJRT runtime.
+
+HLO text, not `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md and gen_hlo.py.
+
+Artifacts written (each `<name>.hlo.txt`):
+  bcr_gemm_256x512   the L1 kernel alone at a canonical RNN-layer size
+  mlp_head           a 2-layer kernel-backed MLP head (L2 calling L1)
+  gru_cell           one dense GRU cell step (the XLA dense baseline for
+                     Figure 12's framework comparison)
+  cnn_fwd            the micro-CNN forward (dense XLA baseline, Figure 11)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.bcr_gemm import bcr_gemm
+from .kernels.ref import random_bcr_compact
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def export(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    rng = np.random.default_rng(0)
+
+    # ---- L1 kernel alone: 256x512 @ ~10x, batch 32 ------------------
+    rows, cols, n = 256, 512, 32
+    w_tiles, ri, ci = random_bcr_compact(rng, rows, cols, 8, 8, 0.32, 0.32)
+    x = jax.ShapeDtypeStruct((cols, n), jnp.float32)
+
+    wj, rj, cj = jnp.asarray(w_tiles), jnp.asarray(ri), jnp.asarray(ci)
+
+    def kernel_fn(xx):
+        # weights/indices closed over -> baked into the HLO as constants,
+        # so the rust side feeds only the activation
+        return (bcr_gemm(wj, rj, cj, xx, rows=rows),)
+
+    export(kernel_fn, (x,), os.path.join(args.out, "bcr_gemm_256x512.hlo.txt"))
+
+    # ---- L2 calling L1: two kernel-backed FC layers ------------------
+    w1, r1, c1 = random_bcr_compact(rng, 128, 256, 8, 8, 0.4, 0.4)
+    w2, r2, c2 = random_bcr_compact(rng, 64, 128, 4, 8, 0.4, 0.4)
+    b1 = np.zeros(128, np.float32)
+    b2 = np.zeros(64, np.float32)
+
+    def mlp_fn(xx):
+        compacts = [
+            (jnp.asarray(w1), jnp.asarray(r1), jnp.asarray(c1), 128),
+            (jnp.asarray(w2), jnp.asarray(r2), jnp.asarray(c2), 64),
+        ]
+        return (M.mlp_kernel_forward(compacts, [jnp.asarray(b1), jnp.asarray(b2)], xx),)
+
+    export(mlp_fn, (jax.ShapeDtypeStruct((256, 16), jnp.float32),),
+           os.path.join(args.out, "mlp_head.hlo.txt"))
+
+    # ---- dense GRU cell (XLA baseline) -------------------------------
+    hidden, in_f = 128, 39
+    wz = jnp.asarray(rng.standard_normal((hidden, in_f + hidden)).astype(np.float32) * 0.05)
+    wr = jnp.asarray(rng.standard_normal((hidden, in_f + hidden)).astype(np.float32) * 0.05)
+    wh = jnp.asarray(rng.standard_normal((hidden, in_f + hidden)).astype(np.float32) * 0.05)
+
+    def gru_cell(xt, h):
+        cat = jnp.concatenate([xt, h], axis=-1)
+        z = jax.nn.sigmoid(cat @ wz.T)
+        r = jax.nn.sigmoid(cat @ wr.T)
+        cat2 = jnp.concatenate([xt, r * h], axis=-1)
+        hc = jnp.tanh(cat2 @ wh.T)
+        return ((1 - z) * h + z * hc,)
+
+    export(
+        gru_cell,
+        (jax.ShapeDtypeStruct((32, in_f), jnp.float32),
+         jax.ShapeDtypeStruct((32, hidden), jnp.float32)),
+        os.path.join(args.out, "gru_cell.hlo.txt"),
+    )
+
+    # ---- deterministic bridge check (rust integration test) ----------
+    # fn(x, y) = (x @ y + 2,) over f32[2,2] — the rust side asserts the
+    # numbers, proving the jax->HLO-text->PJRT path end to end.
+    def bridge_fn(a, b):
+        return (jnp.matmul(a, b) + 2.0,)
+
+    spec22 = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    export(bridge_fn, (spec22, spec22), os.path.join(args.out, "bridge_check.hlo.txt"))
+
+    # ---- dense micro-CNN forward (XLA baseline) ----------------------
+    params = M.init_cnn(rng, in_shape=(3, 32, 32), classes=10)
+
+    def cnn_fn(xx):
+        return (M.cnn_forward(params, xx),)
+
+    export(cnn_fn, (jax.ShapeDtypeStruct((1, 3, 32, 32), jnp.float32),),
+           os.path.join(args.out, "cnn_fwd.hlo.txt"))
+
+
+if __name__ == "__main__":
+    main()

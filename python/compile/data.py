@@ -1,0 +1,56 @@
+"""Synthetic datasets standing in for CIFAR-10 / ImageNet / TIMIT
+(DESIGN.md §2): class-structured, learnable, procedurally generated.
+The quantity under test is the accuracy *delta between pruning schemes at
+equal rate*, which these tasks expose just as the real datasets do.
+"""
+
+import numpy as np
+
+
+def cifar_like(rng, n=2048, classes=10, shape=(3, 32, 32)):
+    """Class prototypes = smoothed random images; samples = prototype +
+    noise + random shift. [N,C,H,W] float32 in ~[-1,1], int labels."""
+    c, h, w = shape
+    protos = rng.standard_normal((classes, c, h, w)).astype(np.float32)
+    # cheap smoothing: average pool then upsample (structure over pixels)
+    for k in range(classes):
+        for ch in range(c):
+            p = protos[k, ch]
+            p4 = p.reshape(h // 4, 4, w // 4, 4).mean((1, 3))
+            protos[k, ch] = np.kron(p4, np.ones((4, 4), np.float32))
+    labels = rng.integers(0, classes, size=n)
+    data = protos[labels] + 0.35 * rng.standard_normal((n, c, h, w)).astype(np.float32)
+    shift = rng.integers(-2, 3, size=(n, 2))
+    for i in range(n):
+        data[i] = np.roll(data[i], tuple(shift[i]), axis=(1, 2))
+    return data.astype(np.float32), labels.astype(np.int32)
+
+
+def imagenet_like(rng, n=2048, classes=16, shape=(3, 64, 64)):
+    """Same generator at ImageNet-analog scale."""
+    return cifar_like(rng, n=n, classes=classes, shape=shape)
+
+
+def timit_like(rng, n=1024, classes=40, seq=20, feat=39):
+    """Phone-classification analog: each frame's class follows a short
+    Markov chain over `classes` phones; features = class embedding +
+    noise, with temporal smoothing. Returns ([N,T,F], [N,T]) — per-frame
+    labels, so error rate is a PER analog."""
+    emb = rng.standard_normal((classes, feat)).astype(np.float32)
+    X = np.zeros((n, seq, feat), np.float32)
+    Y = np.zeros((n, seq), np.int32)
+    for i in range(n):
+        state = rng.integers(0, classes)
+        for t in range(seq):
+            if rng.random() < 0.3:
+                state = rng.integers(0, classes)
+            Y[i, t] = state
+            X[i, t] = emb[state] + 0.45 * rng.standard_normal(feat)
+        # temporal smoothing (coarticulation analog)
+        X[i, 1:] = 0.75 * X[i, 1:] + 0.25 * X[i, :-1]
+    return X, Y
+
+
+def split(data, labels, frac=0.85):
+    k = int(len(data) * frac)
+    return (data[:k], labels[:k]), (data[k:], labels[k:])

@@ -1,0 +1,2 @@
+"""Accuracy-side experiment harnesses: Tables 1–3 of the paper
+(accuracy / PER vs pruning rate, BCR vs baseline schemes)."""

@@ -1,0 +1,159 @@
+"""Shared harness for the accuracy tables: train a model dense, then for
+each (scheme, rate) run ADMM pruning + retraining and report accuracy.
+
+The paper's claim under test (Tables 1–3): at matched pruning rate,
+BCR ≳ irregular > pattern > filter/column — fine granularity wins, and
+BCR matches unstructured while keeping structure.
+"""
+
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import data as D
+from .. import model as M
+from ..admm import AdmmConfig, admm_prune
+from ..prune import (bcr_project, column_project, filter_project,
+                     irregular_project, two_four_project)
+
+
+def fit_divisor(n, want):
+    d = min(max(want, 1), n)
+    while n % d:
+        d -= 1
+    return d
+
+
+def make_scheme(name, rate, rows, cols, block=(4, 16)):
+    """Projection closure for a scheme at a rate, in GEMM space."""
+    if name == "bcr":
+        gr = rows // fit_divisor(rows, block[0])
+        gc = cols // fit_divisor(cols, block[1])
+        return lambda w: _reshaped(w, rows, cols, lambda m: bcr_project(m, gr, gc, rate))
+    if name == "irregular":
+        return lambda w: _reshaped(w, rows, cols, lambda m: irregular_project(m, rate))
+    if name == "filter":
+        return lambda w: _reshaped(w, rows, cols, lambda m: filter_project(m, rate))
+    if name == "column":
+        return lambda w: _reshaped(w, rows, cols, lambda m: column_project(m, rate))
+    if name == "2:4":
+        assert abs(rate - 2.0) < 1e-6, "2:4 is a fixed 2x scheme"
+        return lambda w: _reshaped(w, rows, cols, two_four_project)
+    raise ValueError(name)
+
+
+def _reshaped(w, rows, cols, f):
+    orig = np.asarray(w)
+    wp, m = f(orig.reshape(rows, cols))
+    return wp.reshape(orig.shape), m.reshape(orig.shape)
+
+
+def run_cnn_table(schemes_rates, seed=0, n_train=1024, quick=True,
+                  widths=(16, 32), in_shape=(3, 32, 32), classes=10):
+    """Returns rows: (scheme, rate, dense_acc, sparse_acc, achieved_rate)."""
+    rng = np.random.default_rng(seed)
+    X, Y = D.cifar_like(rng, n=n_train, classes=classes, shape=in_shape)
+    (Xtr, Ytr), (Xte, Yte) = D.split(jnp.asarray(X), jnp.asarray(Y))
+    params0 = M.init_cnn(rng, in_shape, classes, widths)
+    fwd = functools.partial(M.cnn_forward, widths=widths)
+
+    def loss(logits, labels):
+        return M.cross_entropy(logits, labels)
+
+    from ..admm import _sgd_epoch
+    key = jax.random.PRNGKey(seed)
+    cfg = AdmmConfig(admm_epochs=3 if quick else 8,
+                     retrain_epochs=6 if quick else 10, lr=5e-3, seed=seed)
+    for _ in range(8 if quick else 12):
+        key, sub = jax.random.split(key)
+        params0 = _sgd_epoch(lambda p, x, y: loss(fwd(p, x), y), params0,
+                             Xtr, Ytr, cfg.lr, cfg.batch, sub)
+
+    @jax.jit
+    def acc(p, masks):
+        return M.accuracy(fwd(p, Xte, masks=masks), Yte)
+
+    dense_acc = float(acc(params0, None))
+    rows_out = []
+    for scheme, rate in schemes_rates:
+        targets = {}
+        # conv1 is exempt (paper practice: the tiny input layer is kept
+        # dense — it is <2%% of weights and disproportionately sensitive)
+        for i in range(1, len(widths)):
+            name = f"conv{i + 1}"
+            w = np.asarray(params0[name])
+            targets[name] = make_scheme(scheme, rate, w.shape[0], w.shape[1] * 9)
+        wfc = np.asarray(params0["fc1"])
+        targets["fc1"] = make_scheme(scheme, rate, wfc.shape[0], wfc.shape[1])
+        try:
+            params, masks, _ = admm_prune(fwd, loss, dict(params0), targets,
+                                          Xtr, Ytr, cfg)
+        except AssertionError as e:
+            rows_out.append(dict(scheme=scheme, rate=rate, dense=dense_acc,
+                                 sparse=None, achieved=None, note=str(e)))
+            continue
+        sparse_acc = float(acc(params, masks))
+        total = sum(np.asarray(m).size for m in masks.values())
+        kept = sum(int(np.asarray(m).sum()) for m in masks.values())
+        rows_out.append(dict(scheme=scheme, rate=rate, dense=dense_acc,
+                             sparse=sparse_acc, achieved=total / max(kept, 1)))
+        print(f"  {scheme:>10} @ {rate:>5.1f}x: {dense_acc:.3f} -> {sparse_acc:.3f} "
+              f"(achieved {total / max(kept, 1):.1f}x)")
+    return dict(dense_acc=dense_acc, rows=rows_out)
+
+
+def run_gru_table(schemes_rates, seed=0, n_train=640, quick=True):
+    """Returns rows with PER (phone-error-rate analog)."""
+    rng = np.random.default_rng(seed)
+    X, Y = D.timit_like(rng, n=n_train)
+    (Xtr, Ytr), (Xte, Yte) = D.split(jnp.asarray(X), jnp.asarray(Y))
+    params0 = M.init_gru(rng, 39, 64, 2, 40)
+    fwd = functools.partial(M.gru_forward, layers=2)
+
+    def loss(logits, labels):
+        return M.cross_entropy(logits, labels)
+
+    from ..admm import _sgd_epoch
+    key = jax.random.PRNGKey(seed)
+    cfg = AdmmConfig(admm_epochs=3 if quick else 8,
+                     retrain_epochs=4 if quick else 10, lr=5e-2, seed=seed,
+                     batch=32)
+    for _ in range(10 if quick else 20):
+        key, sub = jax.random.split(key)
+        params0 = _sgd_epoch(lambda p, x, y: loss(fwd(p, x), y), params0,
+                             Xtr, Ytr, cfg.lr, cfg.batch, sub)
+
+    @jax.jit
+    def per(p, masks):
+        return 1.0 - M.accuracy(fwd(p, Xte, masks=masks), Yte)
+
+    dense_per = float(per(params0, None))
+    rows_out = []
+    for scheme, rate in schemes_rates:
+        targets = {}
+        for l in range(2):
+            for gate in "zrh":
+                name = f"gru.l{l}.{gate}"
+                w = np.asarray(params0[name])
+                targets[name] = make_scheme(scheme, rate, w.shape[0], w.shape[1])
+        params, masks, _ = admm_prune(fwd, loss, dict(params0), targets,
+                                      Xtr, Ytr, cfg)
+        sparse_per = float(per(params, masks))
+        total = sum(np.asarray(m).size for m in masks.values())
+        kept = sum(int(np.asarray(m).sum()) for m in masks.values())
+        rows_out.append(dict(scheme=scheme, rate=rate, dense_per=dense_per,
+                             sparse_per=sparse_per, achieved=total / max(kept, 1)))
+        print(f"  {scheme:>10} @ {rate:>6.1f}x: PER {dense_per:.3f} -> {sparse_per:.3f} "
+              f"(achieved {total / max(kept, 1):.1f}x)")
+    return dict(dense_per=dense_per, rows=rows_out)
+
+
+def save_json(obj, path):
+    import os
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2)
+    print(f"[saved {path}]")

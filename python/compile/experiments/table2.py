@@ -1,0 +1,42 @@
+"""Table 2 analog: accuracy vs pruning rate on the ImageNet-like task
+(64x64, 16 classes — the larger synthetic preset)."""
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import data as D
+from .. import model as M
+from .common import run_cnn_table, save_json
+
+SCHEMES = [
+    ("bcr", 2.0), ("bcr", 4.0), ("bcr", 8.0),
+    ("irregular", 4.0),
+    ("filter", 2.0), ("filter", 4.0),
+    ("2:4", 2.0),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../bench_out/table2.json")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("Table 2 (ImageNet analog): accuracy vs pruning scheme/rate")
+    # reuse the cnn harness with the imagenet-like generator by patching
+    # the data module's default task size through a scoped wrapper
+    result = run_cnn_table(SCHEMES, seed=args.seed, quick=not args.full,
+                           in_shape=(3, 64, 64), classes=16)
+    result["table"] = "table2"
+    result["paper_reference"] = (
+        "GRIM Table 2: BCR holds accuracy to 8x where filter pruning "
+        "degrades by mid-single digits")
+    save_json(result, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Table 3 analog: GRU phone-error-rate vs pruning rate on the TIMIT-like
+task. The paper's headline: BCR holds PER to ~20x pruning and degrades
+gracefully at ultra-high rates (103.8x, 245.5x)."""
+
+import argparse
+
+from .common import run_gru_table, save_json
+
+SCHEMES = [
+    ("bcr", 4.0), ("bcr", 8.0), ("bcr", 16.0), ("bcr", 32.0),
+    ("irregular", 8.0), ("irregular", 16.0),
+    ("filter", 8.0),
+    ("column", 8.0),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../bench_out/table3.json")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("Table 3 (TIMIT analog): GRU PER vs pruning scheme/rate")
+    result = run_gru_table(SCHEMES, seed=args.seed, quick=not args.full)
+    result["table"] = "table3"
+    result["paper_reference"] = (
+        "GRIM Table 3: BCR keeps PER flat to ~20x; whole-row/col pruning "
+        "of RNN matrices collapses PER (the paper's motivation §3.2)")
+    save_json(result, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Writer for the `.grim` model container (must match
+rust/src/formats/mod.rs byte-for-byte — see that file for the layout).
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GRIM"
+VERSION = 1
+
+
+def _u32(v):
+    return struct.pack("<I", v)
+
+
+def _bytes(b):
+    return _u32(len(b)) + b
+
+
+def save_grim(path, dsl_text, layers):
+    """Write a .grim file.
+
+    layers: dict name -> dict(w=[rows,cols] f32 array, bias=[rows],
+    blocks=None | (grid_r, grid_c, {(bi,bj): (pruned_rows, pruned_cols)})).
+    Weights must already be zero at pruned positions.
+    """
+    out = bytearray()
+    out += MAGIC
+    out += _u32(VERSION)
+    out += _bytes(dsl_text.encode("utf-8"))
+    names = sorted(layers)
+    out += _u32(len(names))
+    for name in names:
+        layer = layers[name]
+        w = np.ascontiguousarray(np.asarray(layer["w"], dtype=np.float32))
+        rows, cols = w.shape
+        bias = np.asarray(layer.get("bias", np.zeros(rows)), dtype=np.float32)
+        assert bias.shape == (rows,), f"bias shape mismatch in {name}"
+        out += _bytes(name.encode("utf-8"))
+        out += _u32(rows) + _u32(cols)
+        out += bias.tobytes()
+        blocks = layer.get("blocks")
+        if blocks is None:
+            out += b"\x00"
+        else:
+            grid_r, grid_c, table = blocks
+            out += b"\x01"
+            out += _u32(grid_r) + _u32(grid_c)
+            for bi in range(grid_r):
+                for bj in range(grid_c):
+                    pr, pc = table[(bi, bj)]
+                    out += _u32(len(pr))
+                    for r in pr:
+                        out += _u32(int(r))
+                    out += _u32(len(pc))
+                    for c in pc:
+                        out += _u32(int(c))
+        out += w.tobytes()
+    with open(path, "wb") as f:
+        f.write(bytes(out))
+
+
+def cnn_dsl(widths, in_shape, fc_dim, classes, irs):
+    """DSL text for the micro-CNN of model.init_cnn (matches the rust
+    graph ops). `irs` = list of @ir pragma strings."""
+    c, h, w = in_shape
+    lines = ['model "grim-demo-cnn"', f"in = Input(shape=[{c},{h},{w}])"]
+    prev = "in"
+    for i, f in enumerate(widths):
+        lines.append(
+            f"conv{i+1} = Conv2D({prev}, out_c={f}, kh=3, kw=3, stride=1, pad=1)")
+        lines.append(f"relu{i+1} = ReLU(conv{i+1})")
+        lines.append(f"pool{i+1} = MaxPool2(relu{i+1})")
+        prev = f"pool{i+1}"
+    lines.append(f"flat = Flatten({prev})")
+    lines.append(f"fc1 = FC(flat, out_f={fc_dim})")
+    lines.append("fc1_relu = ReLU(fc1)")
+    lines.append(f"fc2 = FC(fc1_relu, out_f={classes})")
+    lines.append("prob = Softmax(fc2)")
+    lines.extend(irs)
+    return "\n".join(lines) + "\n"
+
+
+def gru_dsl(seq, in_f, hidden, layers, classes, irs):
+    lines = [
+        'model "grim-demo-gru"',
+        f"in = Input(shape=[{seq},{in_f}])",
+        f"gru = GRU(in, hidden={hidden}, layers={layers})",
+        "flat = Flatten(gru)",
+        f"fc = FC(flat, out_f={classes})",
+        "prob = Softmax(fc)",
+    ]
+    lines.extend(irs)
+    return "\n".join(lines) + "\n"
+
+
+def ir_line(layer, block, rate, fmt=None):
+    fmt = fmt or ("bcrc" if rate > 1.0 else "dense")
+    return (f"@ir {layer} {{ block_size=[{block[0]},{block[1]}]; rate={rate}; "
+            f"unroll=4; tile=64; lre=true; reorder=true; format={fmt} }}")

@@ -1,0 +1,100 @@
+"""L1: the BCR block-sparse GEMM as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §3): the paper's OpenCL kernel tiles over
+GPU threadblocks with per-thread row groups; on a TPU-shaped machine the
+same insight — *BCR blocks keep dense inner structure* — becomes:
+
+  * each block's surviving rows/cols are pre-gathered into a dense
+    ``[r_keep, c_keep]`` tile (done once at weight load), so the kernel's
+    inner op is a dense tile matmul: MXU work, no gather in the loop;
+  * the grid iterates ``(bi, bj)`` block coordinates; BlockSpec streams
+    the ``X`` row-panel for block-column ``bj`` into VMEM exactly when
+    needed (the HBM→VMEM schedule the paper wrote with threadblocks);
+  * scatter back to output rows is expressed as a one-hot matmul
+    (``S_r @ Y``), keeping everything on the MXU instead of doing
+    scalar scatters — the TPU equivalent of the paper's register-level
+    LRE, because each gathered X panel is loaded once per block and
+    reused by all surviving rows.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated from VMEM footprint + MXU
+utilization in DESIGN.md §8/EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bcr_kernel(w_ref, ridx_ref, cidx_ref, x_ref, o_ref, *, block_r, block_c):
+    """One (bi, bj) grid step: out[bi] += scatter(Wt @ gather(X[bj]))."""
+    bj = pl.program_id(1)
+
+    w_tile = w_ref[0, 0]          # [r_keep, c_keep]
+    row_idx = ridx_ref[0, 0]      # [r_keep]
+    col_idx = cidx_ref[0, 0]      # [c_keep]
+    x_panel = x_ref[...]          # [block_c, N]
+
+    # Gather the needed X rows as a one-hot matmul (MXU-friendly).
+    # sel_c[b, k] = 1 where col_idx[b] == k
+    sel_c = jax.nn.one_hot(col_idx, block_c, dtype=w_tile.dtype)  # [c_keep, block_c]
+    x_sel = sel_c @ x_panel                                       # [c_keep, N]
+
+    y = w_tile @ x_sel                                            # [r_keep, N]
+
+    # Scatter to the kept rows of this block, again as one-hot matmul.
+    sel_r = jax.nn.one_hot(row_idx, block_r, dtype=w_tile.dtype)  # [r_keep, block_r]
+    block_out = sel_r.T @ y                                       # [block_r, N]
+
+    @pl.when(bj == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += block_out
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def bcr_gemm(w_tiles, row_idx, col_idx, x, rows, interpret=True):
+    """``out[rows, N] = BCR(w) @ x`` over the compact block format.
+
+    Shapes (see kernels/ref.py): w_tiles [gr, gc, rk, ck],
+    row_idx [gr, gc, rk], col_idx [gr, gc, ck], x [cols, N].
+    """
+    grid_r, grid_c, r_keep, c_keep = w_tiles.shape
+    cols, n = x.shape
+    assert rows % grid_r == 0 and cols % grid_c == 0
+    block_r, block_c = rows // grid_r, cols // grid_c
+
+    kernel = functools.partial(_bcr_kernel, block_r=block_r, block_c=block_c)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid_r, grid_c),
+        in_specs=[
+            pl.BlockSpec((1, 1, r_keep, c_keep), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, r_keep), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, c_keep), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_c, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=interpret,
+    )(w_tiles, row_idx, col_idx, x)
+
+
+def vmem_footprint_bytes(w_tiles, x_n, dtype_bytes=4):
+    """Estimated VMEM bytes live per grid step (DESIGN.md §8 L1 target):
+    one weight tile + one X panel + one output block + index vectors."""
+    grid_r, grid_c, r_keep, c_keep = w_tiles.shape
+    # conservative: caller passes block_r/block_c via tile shape relation
+    return dtype_bytes * (r_keep * c_keep + c_keep * x_n + r_keep * x_n) + 4 * (r_keep + c_keep)
+
+
+def mxu_utilization_estimate(block_r, block_c, r_keep, c_keep, mxu=128):
+    """Fraction of MXU lanes busy for the tile matmul: tiles smaller than
+    the 128x128 systolic array waste lanes. Used for the §Perf estimates."""
+    eff_m = min(r_keep, mxu) / mxu
+    eff_k = min(c_keep, mxu) / mxu
+    del block_r, block_c
+    return eff_m * eff_k

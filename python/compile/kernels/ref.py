@@ -1,0 +1,68 @@
+"""Pure-jnp reference oracle for the BCR block-sparse GEMM kernel.
+
+The compact block format (shared with the Pallas kernel in bcr_gemm.py):
+
+  w_tiles : f32[grid_r, grid_c, r_keep, c_keep]  -- per-block dense tiles of
+            the surviving weights (rows/cols gathered, same keep counts in
+            every block; the python mask generator enforces uniformity)
+  row_idx : i32[grid_r, grid_c, r_keep]          -- local row index of each
+            kept tile row inside its block
+  col_idx : i32[grid_r, grid_c, c_keep]          -- local col index of each
+            kept tile col inside its block
+
+The dense weight matrix it encodes is
+
+  W[bi*br + row_idx[bi,bj,a], bj*bc + col_idx[bi,bj,b]] = w_tiles[bi,bj,a,b]
+
+and the kernel computes ``out = W @ X``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_dense(w_tiles, row_idx, col_idx, rows, cols):
+    """Reconstruct the dense W from the compact block format (numpy)."""
+    w_tiles = np.asarray(w_tiles)
+    row_idx = np.asarray(row_idx)
+    col_idx = np.asarray(col_idx)
+    grid_r, grid_c, r_keep, c_keep = w_tiles.shape
+    br, bc = rows // grid_r, cols // grid_c
+    w = np.zeros((rows, cols), dtype=w_tiles.dtype)
+    for bi in range(grid_r):
+        for bj in range(grid_c):
+            for a in range(r_keep):
+                r = bi * br + int(row_idx[bi, bj, a])
+                for b in range(c_keep):
+                    c = bj * bc + int(col_idx[bi, bj, b])
+                    w[r, c] = w_tiles[bi, bj, a, b]
+    return w
+
+
+def bcr_gemm_ref(w_tiles, row_idx, col_idx, x, rows):
+    """Oracle: decode to dense and matmul (jnp, differentiable-free path)."""
+    cols = x.shape[0]
+    w = decode_dense(w_tiles, row_idx, col_idx, rows, cols)
+    return jnp.asarray(w) @ x
+
+
+def random_bcr_compact(rng, rows, cols, grid_r, grid_c, keep_frac_r, keep_frac_c,
+                       dtype=np.float32):
+    """Generate a random compact-format BCR weight set.
+
+    keep_frac_* in (0, 1]; every block keeps the same (r_keep, c_keep) so
+    tiles stack into one array (the TPU-friendly uniformity the Pallas
+    kernel assumes; the rust side supports ragged blocks, see DESIGN.md).
+    """
+    assert rows % grid_r == 0 and cols % grid_c == 0
+    br, bc = rows // grid_r, cols // grid_c
+    r_keep = max(1, int(round(br * keep_frac_r)))
+    c_keep = max(1, int(round(bc * keep_frac_c)))
+    w_tiles = rng.standard_normal((grid_r, grid_c, r_keep, c_keep)).astype(dtype)
+    row_idx = np.zeros((grid_r, grid_c, r_keep), dtype=np.int32)
+    col_idx = np.zeros((grid_r, grid_c, c_keep), dtype=np.int32)
+    for bi in range(grid_r):
+        for bj in range(grid_c):
+            row_idx[bi, bj] = np.sort(rng.choice(br, size=r_keep, replace=False))
+            col_idx[bi, bj] = np.sort(rng.choice(bc, size=c_keep, replace=False))
+    return w_tiles, row_idx, col_idx

@@ -1,0 +1,153 @@
+"""L2: jax model definitions — the paper's evaluation networks at mini
+scale, with forward passes that can route their GEMMs through the L1
+Pallas kernel (inference/export path) or through dense masked matmuls
+(ADMM training path).
+
+Training is dense-with-mask (exactly the paper's setup: ADMM training in a
+framework, compiler inference afterwards); `use_kernel=True` swaps the FC
+GEMMs for the Pallas BCR kernel so the lowered HLO exercises L1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.bcr_gemm import bcr_gemm
+
+
+# ---------------------------------------------------------------- CNN ----
+
+def init_cnn(rng, in_shape=(3, 32, 32), classes=10, widths=(8, 16), fc_dim=64):
+    """A VGG-style micro CNN: [conv-relu-pool] per width, then 2 FCs.
+
+    Returns a dict of params: conv kernels [F,C,KH,KW], fc matrices
+    [out, in], biases.
+    """
+    c, h, w = in_shape
+    params = {}
+    in_c = c
+    for i, f in enumerate(widths):
+        k = rng.standard_normal((f, in_c, 3, 3)).astype(np.float32)
+        params[f"conv{i + 1}"] = jnp.asarray(k * np.sqrt(2.0 / (in_c * 9)))
+        params[f"conv{i + 1}_b"] = jnp.zeros((f,), jnp.float32)
+        in_c = f
+        h, w = h // 2, w // 2
+    flat = in_c * h * w
+    params["fc1"] = jnp.asarray(
+        rng.standard_normal((fc_dim, flat)).astype(np.float32) * np.sqrt(2.0 / flat))
+    params["fc1_b"] = jnp.zeros((fc_dim,), jnp.float32)
+    params["fc2"] = jnp.asarray(
+        rng.standard_normal((classes, fc_dim)).astype(np.float32) * np.sqrt(2.0 / fc_dim))
+    params["fc2_b"] = jnp.zeros((classes,), jnp.float32)
+    return params
+
+
+def cnn_forward(params, x, widths=(8, 16), masks=None):
+    """Forward over a batch ``x[B,C,H,W]`` -> logits ``[B,classes]``.
+
+    `masks` (name -> 0/1 array in the weight's own shape) is applied
+    multiplicatively — the ADMM-regularized training path.
+    """
+    def get(name):
+        w = params[name]
+        if masks and name in masks:
+            w = w * masks[name].reshape(w.shape)
+        return w
+
+    h = x
+    for i in range(len(widths)):
+        k = get(f"conv{i + 1}")
+        h = jax.lax.conv_general_dilated(
+            h, k, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        h = h + params[f"conv{i + 1}_b"][None, :, None, None]
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ get("fc1").T + params["fc1_b"])
+    return h @ get("fc2").T + params["fc2_b"]
+
+
+# ---------------------------------------------------------------- GRU ----
+
+def init_gru(rng, in_f, hidden, layers=2, classes=40):
+    params = {}
+    d = in_f
+    for l in range(layers):
+        for gate in "zrh":
+            params[f"gru.l{l}.{gate}"] = jnp.asarray(
+                rng.standard_normal((hidden, d + hidden)).astype(np.float32)
+                * np.sqrt(1.0 / (d + hidden)))
+            params[f"gru.l{l}.{gate}_b"] = jnp.zeros((hidden,), jnp.float32)
+        d = hidden
+    params["fc"] = jnp.asarray(
+        rng.standard_normal((classes, hidden)).astype(np.float32) * np.sqrt(2.0 / hidden))
+    params["fc_b"] = jnp.zeros((classes,), jnp.float32)
+    return params
+
+
+def gru_forward(params, x, layers=2, masks=None):
+    """``x[B,T,F]`` -> per-frame logits ``[B,T,classes]`` (phone posteriors,
+    the TIMIT-style output)."""
+    def get(name):
+        w = params[name]
+        if masks and name in masks:
+            w = w * masks[name].reshape(w.shape)
+        return w
+
+    h = x
+    b, t, _ = x.shape
+    for l in range(layers):
+        wz, wr, wh = get(f"gru.l{l}.z"), get(f"gru.l{l}.r"), get(f"gru.l{l}.h")
+        bz, br, bh = (params[f"gru.l{l}.z_b"], params[f"gru.l{l}.r_b"],
+                      params[f"gru.l{l}.h_b"])
+        hidden = wz.shape[0]
+
+        def step(state, xt, wz=wz, wr=wr, wh=wh, bz=bz, br=br, bh=bh):
+            cat = jnp.concatenate([xt, state], axis=-1)
+            z = jax.nn.sigmoid(cat @ wz.T + bz)
+            r = jax.nn.sigmoid(cat @ wr.T + br)
+            cat2 = jnp.concatenate([xt, r * state], axis=-1)
+            hc = jnp.tanh(cat2 @ wh.T + bh)
+            new = (1 - z) * state + z * hc
+            return new, new
+
+        init = jnp.zeros((b, hidden), x.dtype)
+        _, seq = jax.lax.scan(step, init, jnp.swapaxes(h, 0, 1))
+        h = jnp.swapaxes(seq, 0, 1)
+    return h @ get("fc").T + params["fc_b"]
+
+
+# ------------------------------------------------------------- losses ----
+
+def cross_entropy(logits, labels):
+    """Mean CE over leading axes; labels are int class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+# ------------------------------------------- kernel-backed inference -----
+
+def fc_with_bcr_kernel(compact, x):
+    """Run one FC layer through the L1 Pallas kernel.
+
+    `compact` = (w_tiles, row_idx, col_idx, rows); x is [in_f, N].
+    """
+    w_tiles, row_idx, col_idx, rows = compact
+    return bcr_gemm(w_tiles, row_idx, col_idx, x, rows=rows)
+
+
+def mlp_kernel_forward(compacts, biases, x):
+    """A kernel-backed MLP head: every layer is a Pallas BCR GEMM. Used by
+    aot.py so the exported HLO contains the L1 kernel inline."""
+    h = x  # [in_f, N] column-major batch
+    for compact, b in zip(compacts, biases):
+        h = fc_with_bcr_kernel(compact, h) + b[:, None]
+        h = jax.nn.relu(h)
+    return h

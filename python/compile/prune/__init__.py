@@ -1,0 +1,26 @@
+"""Pruning projections: Euclidean projections onto each sparsity set,
+used as the ADMM Z-step (paper Eq. 5) and for the Table 1-3 baselines.
+
+Every projection takes a dense numpy weight matrix and returns a 0/1 mask
+of the same shape (1 = keep). All are magnitude-based Euclidean
+projections: keep the largest-|w| entries the scheme's structure allows.
+"""
+
+from .bcr import bcr_project, bcr_mask_blocks
+from .baselines import (
+    irregular_project,
+    filter_project,
+    column_project,
+    pattern_project,
+    two_four_project,
+)
+
+__all__ = [
+    "bcr_project",
+    "bcr_mask_blocks",
+    "irregular_project",
+    "filter_project",
+    "column_project",
+    "pattern_project",
+    "two_four_project",
+]

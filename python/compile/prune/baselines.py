@@ -1,0 +1,93 @@
+"""Baseline pruning projections for Tables 1–3: irregular (magnitude),
+filter (whole-row), column (whole-column), pattern-based (PatDNN), and
+NVIDIA 2:4. Each returns (projected_w, mask)."""
+
+import numpy as np
+
+# The 8 canonical 4-entry patterns for 3x3 kernels (matches
+# rust/src/sparse/pattern.rs PATTERNS_3X3).
+PATTERNS_3X3 = np.array([
+    [0, 1, 3, 4], [1, 2, 4, 5], [3, 4, 6, 7], [4, 5, 7, 8],
+    [0, 1, 4, 7], [1, 2, 4, 7], [1, 4, 6, 7], [1, 4, 7, 8],
+])
+
+
+def irregular_project(w, rate):
+    """Keep the top-1/rate fraction by |magnitude| anywhere (Han et al.)."""
+    w = np.asarray(w)
+    k = max(1, int(round(w.size / rate)))
+    thresh = np.partition(np.abs(w).ravel(), -k)[-k]
+    mask = (np.abs(w) >= thresh).astype(np.float32)
+    # ties can overshoot; trim deterministically
+    extra = int(mask.sum()) - k
+    if extra > 0:
+        idx = np.argwhere((np.abs(w) == thresh) & (mask > 0))
+        for i in range(extra):
+            mask[tuple(idx[i])] = 0.0
+    return w * mask, mask
+
+
+def filter_project(w, rate):
+    """Prune whole rows (filters) by row L2 norm."""
+    w = np.asarray(w)
+    rows = w.shape[0]
+    keep = max(1, int(round(rows / rate)))
+    norms = np.linalg.norm(w, axis=1)
+    kept = np.argsort(-norms)[:keep]
+    mask = np.zeros_like(w, dtype=np.float32)
+    mask[kept, :] = 1.0
+    return w * mask, mask
+
+
+def column_project(w, rate):
+    """Prune whole columns by column L2 norm."""
+    w = np.asarray(w)
+    cols = w.shape[1]
+    keep = max(1, int(round(cols / rate)))
+    norms = np.linalg.norm(w, axis=0)
+    kept = np.argsort(-norms)[:keep]
+    mask = np.zeros_like(w, dtype=np.float32)
+    mask[:, kept] = 1.0
+    return w * mask, mask
+
+
+def pattern_project(w, channels, connectivity_rate=0.0):
+    """PatDNN-style: per 3x3 kernel keep the best 4-entry pattern; remove
+    the lowest-magnitude `connectivity_rate` of kernels entirely.
+
+    w is the GEMM matrix [filters, channels*9].
+    """
+    w = np.asarray(w)
+    filters = w.shape[0]
+    assert w.shape[1] == channels * 9, "pattern pruning needs 3x3 kernels"
+    k3 = w.reshape(filters, channels, 9)
+    kmag = np.abs(k3).sum(-1)  # [filters, channels]
+    cut = int(round(connectivity_rate * filters * channels))
+    removed = np.zeros((filters, channels), bool)
+    if cut > 0:
+        order = np.argsort(kmag, axis=None)[:cut]
+        removed[np.unravel_index(order, kmag.shape)] = True
+    mask = np.zeros_like(k3, dtype=np.float32)
+    # score per pattern: sum |w| over pattern entries
+    pat_scores = np.abs(k3)[..., PATTERNS_3X3].sum(-1)  # [F, C, 8]
+    best = np.argmax(pat_scores, axis=-1)
+    for f in range(filters):
+        for c in range(channels):
+            if removed[f, c]:
+                continue
+            mask[f, c, PATTERNS_3X3[best[f, c]]] = 1.0
+    mask = mask.reshape(filters, channels * 9)
+    return w * mask, mask
+
+
+def two_four_project(w):
+    """2:4 structured sparsity: keep the 2 largest of each aligned 4."""
+    w = np.asarray(w)
+    rows, cols = w.shape
+    assert cols % 4 == 0
+    g = np.abs(w).reshape(rows, cols // 4, 4)
+    order = np.argsort(-g, axis=-1)
+    mask = np.zeros_like(g, dtype=np.float32)
+    np.put_along_axis(mask, order[..., :2], 1.0, axis=-1)
+    mask = mask.reshape(rows, cols)
+    return w * mask, mask

@@ -1,0 +1,95 @@
+"""BCR projection (paper §5.2): the Euclidean projection of a weight
+matrix onto the set of BCR-sparse matrices at a target rate.
+
+Per block, whole rows and columns are pruned. The projection must decide,
+per block, how many rows vs columns to remove and which — "the ADMM-based
+solution ... can automatically determine the desirable column and row
+pruning rates for each block" (§5.2). We implement that as a per-block
+greedy energy argument: repeatedly remove the row or column whose
+energy-per-element is smallest, until the block's keep budget is met.
+Greedy row/col elimination is the exact projection when rows/cols are
+removed one at a time (each step removes the least-energy structure), and
+matches the paper's behaviour of unequal row/col rates across blocks.
+"""
+
+import numpy as np
+
+
+def _block_prune(block, keep_frac, force_keep=None):
+    """Greedy row/col elimination on one block.
+
+    Returns (kept_rows, kept_cols) index arrays. `force_keep` optionally
+    pins (r_keep, c_keep) counts — used when the kernel needs uniform
+    tiles across blocks.
+    """
+    br, bc = block.shape
+    e2 = block.astype(np.float64) ** 2
+    alive_r = np.ones(br, bool)
+    alive_c = np.ones(bc, bool)
+
+    if force_keep is not None:
+        rk, ck = force_keep
+        # remove weakest rows then weakest columns (by live energy)
+        while alive_r.sum() > rk:
+            row_e = np.where(alive_r, (e2 * alive_c[None, :]).sum(1), np.inf)
+            alive_r[int(np.argmin(row_e))] = False
+        while alive_c.sum() > ck:
+            col_e = np.where(alive_c, (e2 * alive_r[:, None]).sum(0), np.inf)
+            alive_c[int(np.argmin(col_e))] = False
+        return np.where(alive_r)[0], np.where(alive_c)[0]
+
+    target_keep = keep_frac * br * bc
+    while alive_r.sum() * alive_c.sum() > target_keep:
+        nr, nc = alive_r.sum(), alive_c.sum()
+        if nr <= 1 and nc <= 1:
+            break
+        row_e = np.where(alive_r, (e2 * alive_c[None, :]).sum(1), np.inf)
+        col_e = np.where(alive_c, (e2 * alive_r[:, None]).sum(0), np.inf)
+        # energy removed per weight removed, for the weakest row vs column
+        r_cost = row_e.min() / max(nc, 1)
+        c_cost = col_e.min() / max(nr, 1)
+        if (r_cost <= c_cost and nr > 1) or nc <= 1:
+            alive_r[int(np.argmin(row_e))] = False
+        else:
+            alive_c[int(np.argmin(col_e))] = False
+    return np.where(alive_r)[0], np.where(alive_c)[0]
+
+
+def bcr_mask_blocks(w, grid_r, grid_c, rate, force_uniform=False):
+    """Project w onto the BCR set at `rate`x pruning.
+
+    Returns (mask, blocks) where blocks[(bi,bj)] = (pruned_rows, pruned_cols)
+    local index lists — exactly what the rust .grim loader stores.
+    """
+    w = np.asarray(w)
+    rows, cols = w.shape
+    assert rows % grid_r == 0 and cols % grid_c == 0, \
+        f"grid {grid_r}x{grid_c} must divide {rows}x{cols}"
+    br, bc = rows // grid_r, cols // grid_c
+    keep = 1.0 / rate
+
+    force = None
+    if force_uniform:
+        s = np.sqrt(keep)
+        rk = max(1, int(round(br * s)))
+        ck = max(1, int(round(bc * s)))
+        force = (rk, ck)
+
+    mask = np.zeros_like(w, dtype=np.float32)
+    blocks = {}
+    for bi in range(grid_r):
+        for bj in range(grid_c):
+            blk = w[bi * br:(bi + 1) * br, bj * bc:(bj + 1) * bc]
+            kr, kc = _block_prune(blk, keep, force_keep=force)
+            sub = mask[bi * br:(bi + 1) * br, bj * bc:(bj + 1) * bc]
+            sub[np.ix_(kr, kc)] = 1.0
+            pruned_r = sorted(set(range(br)) - set(kr.tolist()))
+            pruned_c = sorted(set(range(bc)) - set(kc.tolist()))
+            blocks[(bi, bj)] = (pruned_r, pruned_c)
+    return mask, blocks
+
+
+def bcr_project(w, grid_r, grid_c, rate):
+    """Projection operator Π_S(w): zero the pruned structure (Eq. 5)."""
+    mask, _ = bcr_mask_blocks(w, grid_r, grid_c, rate)
+    return np.asarray(w) * mask, mask

@@ -1,0 +1,238 @@
+"""End-to-end training driver: train dense → ADMM BCR prune → retrain →
+export `.grim` (+ metrics json) for the rust serving side.
+
+`--demo` runs the quick configuration used by EXPERIMENTS.md §E2E:
+the micro-CNN on cifar_like and the GRU on timit_like.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import export as E
+from . import model as M
+from .admm import AdmmConfig, admm_prune, sparsity_report
+from .prune import bcr_mask_blocks
+
+
+def fit_divisor(n, want):
+    d = min(max(want, 1), n)
+    while n % d:
+        d -= 1
+    return d
+
+
+def train_cnn_demo(out_dir, rate=6.0, seed=0, admm_epochs=6, retrain_epochs=8,
+                   n_train=1536):
+    rng = np.random.default_rng(seed)
+    widths = (16, 32)
+    in_shape = (3, 32, 32)
+    classes = 10
+    fc_dim = 64
+    X, Y = D.cifar_like(rng, n=n_train, classes=classes, shape=in_shape)
+    (Xtr, Ytr), (Xte, Yte) = D.split(jnp.asarray(X), jnp.asarray(Y))
+
+    params = M.init_cnn(rng, in_shape, classes, widths, fc_dim)
+    fwd = functools.partial(M.cnn_forward, widths=widths)
+
+    def loss(logits, labels):
+        return M.cross_entropy(logits, labels)
+
+    @jax.jit
+    def test_acc(p, masks):
+        return M.accuracy(fwd(p, Xte, masks=masks), Yte)
+
+    # dense pre-training
+    cfg = AdmmConfig(admm_epochs=admm_epochs, retrain_epochs=retrain_epochs,
+                     lr=5e-3, seed=seed)
+    key = jax.random.PRNGKey(seed)
+    for _ in range(6):
+        key, sub = jax.random.split(key)
+        params = _dense_epoch(fwd, loss, params, Xtr, Ytr, cfg, sub)
+    dense_acc = float(test_acc(params, None))
+
+    # prune targets: conv GEMMs (conv1 exempt, as in the paper's deployed
+    # models — the input layer is tiny and sensitive) + fc1; fc2 stays dense
+    targets = {}
+    shapes = {}
+    for i, f in enumerate(widths):
+        name = f"conv{i + 1}"
+        w = np.asarray(params[name])
+        rows, cols = w.shape[0], w.shape[1] * 9
+        gr = rows // fit_divisor(rows, 4)
+        gc = cols // fit_divisor(cols, 16)
+        shapes[name] = (rows, cols, gr, gc)
+        if i > 0:
+            targets[name] = _gemm_projection(rows, cols, gr, gc, rate)
+    rows, cols = np.asarray(params["fc1"]).shape
+    gr, gc = rows // fit_divisor(rows, 4), cols // fit_divisor(cols, 16)
+    shapes["fc1"] = (rows, cols, gr, gc)
+    targets["fc1"] = _gemm_projection(rows, cols, gr, gc, rate)
+
+    params, masks, history = admm_prune(
+        fwd, loss, params, targets, Xtr, Ytr, cfg, eval_fn=test_acc)
+    sparse_acc = float(test_acc(params, masks))
+    rates = sparsity_report(masks)
+
+    # ---- export -------------------------------------------------------
+    irs, layers = [], {}
+    for i, f in enumerate(widths):
+        name = f"conv{i + 1}"
+        rows, cols, gr, gc = shapes[name]
+        w = np.asarray(params[name]).reshape(rows, cols)
+        if name not in targets:  # exempt layer exports dense
+            layers[name] = dict(w=w, bias=np.asarray(params[f"{name}_b"]), blocks=None)
+            continue
+        _, blocks = bcr_mask_blocks(w, gr, gc, rate)
+        w_masked = _apply_blocks(w, gr, gc, blocks)
+        layers[name] = dict(w=w_masked, bias=np.asarray(params[f"{name}_b"]),
+                            blocks=(gr, gc, blocks))
+        irs.append(E.ir_line(name, (rows // gr, cols // gc), rate))
+    rows, cols, gr, gc = shapes["fc1"]
+    w = np.asarray(params["fc1"])
+    _, blocks = bcr_mask_blocks(w, gr, gc, rate)
+    layers["fc1"] = dict(w=_apply_blocks(w, gr, gc, blocks),
+                         bias=np.asarray(params["fc1_b"]), blocks=(gr, gc, blocks))
+    irs.append(E.ir_line("fc1", (rows // gr, cols // gc), rate))
+    layers["fc2"] = dict(w=np.asarray(params["fc2"]),
+                         bias=np.asarray(params["fc2_b"]), blocks=None)
+
+    dsl = E.cnn_dsl(widths, in_shape, fc_dim, classes, irs)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "demo_cnn.grim")
+    E.save_grim(path, dsl, layers)
+
+    metrics = dict(model="demo_cnn", dense_acc=dense_acc, sparse_acc=sparse_acc,
+                   rate=rate, per_layer_rates={k: float(v) for k, v in rates.items()},
+                   history=[(p, e, float(a)) for p, e, a in history])
+    with open(os.path.join(out_dir, "demo_cnn_metrics.json"), "w") as f:
+        json.dump(metrics, f, indent=2)
+    print(json.dumps(metrics, indent=2))
+    return metrics
+
+
+def train_gru_demo(out_dir, rate=10.0, seed=0, admm_epochs=6, retrain_epochs=6,
+                   n_train=768):
+    rng = np.random.default_rng(seed)
+    seq, feat, hidden, layers_n, classes = 20, 39, 64, 2, 40
+    X, Y = D.timit_like(rng, n=n_train, classes=classes, seq=seq, feat=feat)
+    (Xtr, Ytr), (Xte, Yte) = D.split(jnp.asarray(X), jnp.asarray(Y))
+
+    params = M.init_gru(rng, feat, hidden, layers_n, classes)
+    fwd = functools.partial(M.gru_forward, layers=layers_n)
+
+    def loss(logits, labels):
+        return M.cross_entropy(logits, labels)
+
+    @jax.jit
+    def per(p, masks):  # phone-error-rate analog = 1 - frame accuracy
+        return 1.0 - M.accuracy(fwd(p, Xte, masks=masks), Yte)
+
+    cfg = AdmmConfig(admm_epochs=admm_epochs, retrain_epochs=retrain_epochs,
+                     lr=2e-2, seed=seed, batch=32)
+    key = jax.random.PRNGKey(seed)
+    for _ in range(8):
+        key, sub = jax.random.split(key)
+        params = _dense_epoch(fwd, loss, params, Xtr, Ytr, cfg, sub)
+    dense_per = float(per(params, None))
+
+    targets, geom = {}, {}
+    for l in range(layers_n):
+        for gate in "zrh":
+            name = f"gru.l{l}.{gate}"
+            rows, cols = np.asarray(params[name]).shape
+            gr, gc = rows // fit_divisor(rows, 4), cols // fit_divisor(cols, 16)
+            geom[name] = (rows, cols, gr, gc)
+            targets[name] = _gemm_projection(rows, cols, gr, gc, rate)
+
+    params, masks, history = admm_prune(
+        fwd, loss, params, targets, Xtr, Ytr, cfg,
+        eval_fn=lambda p, m: 1.0 - per(p, m))
+    sparse_per = float(per(params, masks))
+    rates = sparsity_report(masks)
+
+    irs, layers = [], {}
+    for name, (rows, cols, gr, gc) in geom.items():
+        w = np.asarray(params[name])
+        _, blocks = bcr_mask_blocks(w, gr, gc, rate)
+        layers[name] = dict(w=_apply_blocks(w, gr, gc, blocks),
+                            bias=np.asarray(params[f"{name}_b"]),
+                            blocks=(gr, gc, blocks))
+    irs.append(E.ir_line("gru", (fit_divisor(hidden, 4), fit_divisor(feat + hidden, 16)), rate))
+    # The rust graph's fc consumes the flattened [seq*hidden] sequence;
+    # tile the per-frame head across time (mean-pool analog): repeat W/seq.
+    wfc = np.asarray(params["fc"])  # [classes, hidden]
+    wfc_seq = np.tile(wfc / seq, (1, seq))  # [classes, seq*hidden]
+    layers["fc"] = dict(w=wfc_seq, bias=np.asarray(params["fc_b"]), blocks=None)
+
+    dsl = E.gru_dsl(seq, feat, hidden, layers_n, classes, irs)
+    os.makedirs(out_dir, exist_ok=True)
+    E.save_grim(os.path.join(out_dir, "demo_gru.grim"), dsl, layers)
+
+    metrics = dict(model="demo_gru", dense_per=dense_per, sparse_per=sparse_per,
+                   rate=rate, per_layer_rates={k: float(v) for k, v in rates.items()},
+                   history=[(p, e, float(a)) for p, e, a in history])
+    with open(os.path.join(out_dir, "demo_gru_metrics.json"), "w") as f:
+        json.dump(metrics, f, indent=2)
+    print(json.dumps(metrics, indent=2))
+    return metrics
+
+
+# ------------------------------------------------------------ helpers ----
+
+def _dense_epoch(fwd, loss, params, X, Y, cfg, key):
+    def l(p, x, y):
+        return loss(fwd(p, x), y)
+
+    from .admm import _sgd_epoch
+    return _sgd_epoch(l, params, X, Y, cfg.lr, cfg.batch, key)
+
+
+def _gemm_projection(rows, cols, gr, gc, rate):
+    """A prune-target closure in GEMM space (handles conv reshape)."""
+    def project(w):
+        w2 = np.asarray(w).reshape(rows, cols)
+        from .prune import bcr_project
+        w_proj, mask = bcr_project(w2, gr, gc, rate)
+        return w_proj.reshape(np.asarray(w).shape), mask.reshape(np.asarray(w).shape)
+
+    return project
+
+
+def _apply_blocks(w, gr, gc, blocks):
+    """Zero w under the block table (guarantees loader consistency)."""
+    rows, cols = w.shape
+    br, bc = rows // gr, cols // gc
+    out = w.copy()
+    for (bi, bj), (pr, pc) in blocks.items():
+        sub = out[bi * br:(bi + 1) * br, bj * bc:(bj + 1) * bc]
+        for r in pr:
+            sub[r, :] = 0.0
+        for c in pc:
+            sub[:, c] = 0.0
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--demo", action="store_true")
+    ap.add_argument("--model", choices=["cnn", "gru", "both"], default="both")
+    ap.add_argument("--rate", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    quick = dict(admm_epochs=4, retrain_epochs=4) if args.demo else {}
+    if args.model in ("cnn", "both"):
+        train_cnn_demo(args.out, rate=args.rate or 6.0, seed=args.seed, **quick)
+    if args.model in ("gru", "both"):
+        train_gru_demo(args.out, rate=args.rate or 10.0, seed=args.seed, **quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Export-format tests: the python .grim writer must produce files the
+rust loader accepts. Byte-level checks here; the cross-language check is
+rust/tests/integration.rs::python_grim_file_loads."""
+
+import struct
+
+import numpy as np
+
+from compile.export import MAGIC, VERSION, cnn_dsl, gru_dsl, ir_line, save_grim
+
+
+def tiny_layers():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((4, 8)).astype(np.float32)
+    blocks = {}
+    br, bc = 2, 4
+    for bi in range(2):
+        for bj in range(2):
+            pr, pc = ([0], [1, 3]) if (bi + bj) % 2 == 0 else ([], [0])
+            blocks[(bi, bj)] = (pr, pc)
+            sub = w[bi * br:(bi + 1) * br, bj * bc:(bj + 1) * bc]
+            for r in pr:
+                sub[r, :] = 0
+            for c in pc:
+                sub[:, c] = 0
+    return {
+        "fc1": dict(w=w, bias=np.zeros(4, np.float32), blocks=(2, 2, blocks)),
+        "fc2": dict(w=rng.standard_normal((2, 4)).astype(np.float32),
+                    bias=np.ones(2, np.float32), blocks=None),
+    }
+
+
+def test_header_layout(tmp_path):
+    path = tmp_path / "t.grim"
+    dsl = "model \"t\"\nin = Input(shape=[8])\nfc1 = FC(in, out_f=4)\n"
+    save_grim(path, dsl, {"fc1": dict(w=np.zeros((4, 8), np.float32),
+                                      bias=np.zeros(4, np.float32), blocks=None)})
+    raw = path.read_bytes()
+    assert raw[:4] == MAGIC
+    assert struct.unpack("<I", raw[4:8])[0] == VERSION
+    dsl_len = struct.unpack("<I", raw[8:12])[0]
+    assert raw[12:12 + dsl_len].decode() == dsl
+
+
+def test_layers_sorted_and_sized(tmp_path):
+    path = tmp_path / "t2.grim"
+    save_grim(path, "model \"x\"\n", tiny_layers())
+    raw = path.read_bytes()
+    # n_layers right after dsl
+    dsl_len = struct.unpack("<I", raw[8:12])[0]
+    off = 12 + dsl_len
+    n = struct.unpack("<I", raw[off:off + 4])[0]
+    assert n == 2
+    # first layer name is fc1 (sorted)
+    off += 4
+    name_len = struct.unpack("<I", raw[off:off + 4])[0]
+    assert raw[off + 4:off + 4 + name_len].decode() == "fc1"
+
+
+def test_dsl_generators_contain_ir():
+    ir = ir_line("conv1", (2, 9), 6.0)
+    text = cnn_dsl((8, 16), (3, 32, 32), 64, 10, [ir])
+    assert "@ir conv1" in text
+    assert "Conv2D(in, out_c=8" in text
+    gtext = gru_dsl(20, 39, 64, 2, 40, [ir_line("gru", (4, 16), 10.0)])
+    assert "GRU(in, hidden=64, layers=2)" in gtext
+    assert "format=bcrc" in gtext
+
+
+def test_ir_line_dense_when_rate_one():
+    assert "format=dense" in ir_line("fc", (4, 16), 1.0)

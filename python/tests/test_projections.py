@@ -1,0 +1,122 @@
+"""Pruning-projection properties: feasibility (the projected matrix lies
+in the scheme's sparsity set) and magnitude-optimality on small cases."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.prune import (bcr_mask_blocks, bcr_project, column_project,
+                           filter_project, irregular_project, pattern_project,
+                           two_four_project)
+
+
+def rand(seed, shape):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- BCR ----
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 9999), gr=st.sampled_from([1, 2, 4]),
+       gc=st.sampled_from([1, 2, 4]), rate=st.sampled_from([2.0, 4.0, 8.0]))
+def test_bcr_projection_feasible(seed, gr, gc, rate):
+    w = rand(seed, (16, 32))
+    w_proj, mask = bcr_project(w, gr, gc, rate)
+    # feasibility: inside each block, zero structure is whole rows/cols
+    br, bc = 16 // gr, 32 // gc
+    for bi in range(gr):
+        for bj in range(gc):
+            sub = mask[bi * br:(bi + 1) * br, bj * bc:(bj + 1) * bc]
+            live_r = sub.any(axis=1)
+            live_c = sub.any(axis=0)
+            expect = np.outer(live_r, live_c).astype(np.float32)
+            np.testing.assert_array_equal(sub, expect)
+    # rate approximately met (greedy stops at/below budget)
+    achieved = mask.size / max(mask.sum(), 1)
+    assert achieved >= rate * 0.7, f"rate {achieved} << target {rate}"
+
+
+def test_bcr_blocks_table_matches_mask():
+    w = rand(1, (16, 32))
+    mask, blocks = bcr_mask_blocks(w, 2, 2, 4.0)
+    br, bc = 8, 16
+    for (bi, bj), (pr, pc) in blocks.items():
+        sub = mask[bi * br:(bi + 1) * br, bj * bc:(bj + 1) * bc]
+        for r in pr:
+            assert not sub[r].any()
+        for c in pc:
+            assert not sub[:, c].any()
+
+
+def test_bcr_uniform_mode_equal_tiles():
+    w = rand(2, (32, 32))
+    _, blocks = bcr_mask_blocks(w, 4, 4, 4.0, force_uniform=True)
+    sizes = {(len(pr), len(pc)) for pr, pc in blocks.values()}
+    assert len(sizes) == 1
+
+
+# ---------------------------------------------------------- baselines ----
+
+def test_irregular_exact_rate_and_topk():
+    w = rand(3, (16, 16))
+    _, mask = irregular_project(w, 4.0)
+    assert int(mask.sum()) == 64
+    kept_min = np.abs(w[mask > 0]).min()
+    dropped_max = np.abs(w[mask == 0]).max()
+    assert kept_min >= dropped_max - 1e-6
+
+
+def test_filter_whole_rows():
+    w = rand(4, (16, 16))
+    _, mask = filter_project(w, 2.0)
+    live = mask.any(axis=1)
+    assert live.sum() == 8
+    for r in range(16):
+        assert mask[r].all() == live[r]
+
+
+def test_column_whole_cols():
+    w = rand(5, (16, 16))
+    _, mask = column_project(w, 4.0)
+    live = mask.any(axis=0)
+    assert live.sum() == 4
+    for c in range(16):
+        assert mask[:, c].all() == live[c]
+
+
+def test_pattern_four_per_kernel():
+    w = rand(6, (8, 4 * 9))
+    _, mask = pattern_project(w, channels=4, connectivity_rate=0.25)
+    m3 = mask.reshape(8, 4, 9)
+    per_kernel = m3.sum(-1)
+    assert set(np.unique(per_kernel)) <= {0.0, 4.0}
+    assert (per_kernel == 0).sum() == 8  # 25% of 32 kernels removed
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 9999))
+def test_two_four_invariant(seed):
+    w = rand(seed, (8, 32))
+    wp, mask = two_four_project(w)
+    g = mask.reshape(8, 8, 4)
+    assert (g.sum(-1) == 2).all()
+    # kept entries dominate dropped within each group
+    a = np.abs(w).reshape(8, 8, 4)
+    kept_min = np.where(g > 0, a, np.inf).min(-1)
+    drop_max = np.where(g == 0, a, -np.inf).max(-1)
+    assert (kept_min >= drop_max - 1e-6).all()
+
+
+def test_projection_idempotent():
+    w = rand(7, (16, 32))
+    for proj in [lambda x: bcr_project(x, 2, 2, 4.0),
+                 lambda x: irregular_project(x, 4.0),
+                 lambda x: two_four_project(x)]:
+        w1, m1 = proj(w)
+        w2, m2 = proj(w1)
+        np.testing.assert_allclose(w1, w2, atol=1e-6)
+
+
+def test_bcr_grid_must_divide():
+    with pytest.raises(AssertionError):
+        bcr_project(rand(8, (15, 32)), 2, 2, 4.0)

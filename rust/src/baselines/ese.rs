@@ -1,0 +1,96 @@
+//! Analytical ESE model (Han et al., FPGA'17) — the paper's RNN
+//! comparator in §6.3 ("ESE completes GRU with around 82 us", and GRIM
+//! claims 38× better energy efficiency).
+//!
+//! We cannot run a Xilinx KU060, so — per the substitution rule — we model
+//! ESE's published operating point: 1024 PEs at 200 MHz processing a
+//! load-balanced compressed LSTM/GRU, 41 W board power. The model exposes
+//! the same two quantities the paper compares: per-inference latency and
+//! energy. Parameters are from the ESE paper's Table 7 and §6.
+
+/// ESE accelerator analytical model.
+#[derive(Clone, Copy, Debug)]
+pub struct EseModel {
+    /// Multiply-accumulate units.
+    pub pes: usize,
+    /// Clock (Hz).
+    pub clock_hz: f64,
+    /// Measured board power (W).
+    pub power_w: f64,
+    /// Load-imbalance efficiency of the PE array on compressed rows
+    /// (ESE reports ~0.88 with their interleaving).
+    pub pe_efficiency: f64,
+}
+
+impl Default for EseModel {
+    fn default() -> Self {
+        // 1024 DSP-slice PEs, each retiring 2 16-bit MACs/cycle -> 2048
+        // effective multiply units at 200 MHz (ESE paper §5/Table 7).
+        EseModel { pes: 2048, clock_hz: 200e6, power_w: 41.0, pe_efficiency: 0.88 }
+    }
+}
+
+impl EseModel {
+    /// Latency (µs) of a batch of `batch` sequences of `timesteps` steps
+    /// over a GRU with `nnz_per_step` surviving multiply-accumulates per
+    /// step. ESE interleaves the batch across its 32 channels; the
+    /// reported latency is the full batch pass: `total MACs / (PEs*eff)`.
+    pub fn latency_us(&self, nnz_per_step: usize, timesteps: usize, batch: usize) -> f64 {
+        let macs = nnz_per_step as f64 * timesteps as f64 * batch as f64;
+        let effective_rate = self.pes as f64 * self.pe_efficiency; // MAC/cycle
+        let cycles = macs / effective_rate;
+        cycles / self.clock_hz * 1e6
+    }
+
+    /// Energy (µJ) per inference.
+    pub fn energy_uj(&self, nnz_per_step: usize, timesteps: usize, batch: usize) -> f64 {
+        self.latency_us(nnz_per_step, timesteps, batch) * self.power_w
+    }
+}
+
+/// Mobile SoC power envelope for the energy-efficiency comparison
+/// (Snapdragon 855 sustained inference ≈ 5 W board power).
+pub const MOBILE_POWER_W: f64 = 5.0;
+
+/// Energy efficiency ratio: (ESE energy) / (GRIM energy) for the same
+/// workload, where GRIM energy = latency × mobile power.
+pub fn energy_efficiency_ratio(ese: &EseModel, nnz_per_step: usize, t: usize, batch: usize, grim_latency_us: f64) -> f64 {
+    let ese_e = ese.energy_uj(nnz_per_step, t, batch);
+    let grim_e = grim_latency_us * MOBILE_POWER_W;
+    ese_e / grim_e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// GRIM §6.3: "GRIM completes GRU inference within 81 us (sequence
+    /// length 1, batch 32)" and "ESE completes GRU with around 82 us".
+    /// The workload: the 9.6M-param GRU at 10× pruning, one timestep,
+    /// batch 32 → nnz/step ≈ 0.96M. The model must land near 82 µs.
+    #[test]
+    fn reproduces_published_operating_point() {
+        let ese = EseModel::default();
+        let nnz_per_step = 9_600_000 / 10;
+        let us = ese.latency_us(nnz_per_step, 1, 32);
+        assert!(us > 55.0 && us < 120.0, "ESE model out of plausible range: {us} us");
+    }
+
+    #[test]
+    fn latency_scales_linearly_with_nnz() {
+        let ese = EseModel::default();
+        let a = ese.latency_us(10_000, 10, 1);
+        let b = ese.latency_us(20_000, 10, 1);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_ratio_favors_low_power_at_equal_latency() {
+        let ese = EseModel::default();
+        let nnz = 48_000;
+        let ese_lat = ese.latency_us(nnz, 20, 32);
+        // if GRIM matches ESE's latency, efficiency ratio == power ratio
+        let ratio = energy_efficiency_ratio(&ese, nnz, 20, 32, ese_lat);
+        assert!((ratio - ese.power_w / MOBILE_POWER_W).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Comparison baselines (DESIGN.md §2 substitution table).
+//!
+//! The dense/CSR framework analogs live in [`crate::compiler::passes::Backend`]
+//! (they share the engine); this module holds what cannot share it: the
+//! analytical ESE FPGA model for the Table-3/§6.3 RNN comparison, and the
+//! named framework registry the benches iterate over.
+
+pub mod ese;
+pub mod registry;
+
+pub use ese::EseModel;
+pub use registry::{framework_backends, FrameworkAnalog};

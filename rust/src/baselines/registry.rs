@@ -1,0 +1,48 @@
+//! Framework-analog registry: the six columns of Figure 11, mapped to the
+//! backends/configs this repo implements (DESIGN.md §2).
+
+use crate::compiler::passes::Backend;
+
+/// One framework analog in the comparison set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameworkAnalog {
+    /// Paper name of the framework.
+    pub paper_name: &'static str,
+    /// Which engine backend reproduces its execution strategy.
+    pub backend: Backend,
+    /// Whether the framework runs the *pruned* model (sparse) or the
+    /// dense model (the paper's dense baselines run dense weights).
+    pub sparse: bool,
+}
+
+/// The Figure-11 comparison set, in the paper's column order.
+pub fn framework_backends() -> Vec<FrameworkAnalog> {
+    vec![
+        FrameworkAnalog { paper_name: "MNN", backend: Backend::OptDense, sparse: false },
+        FrameworkAnalog { paper_name: "TVM", backend: Backend::OptDense, sparse: false },
+        FrameworkAnalog { paper_name: "TFLite", backend: Backend::NaiveDense, sparse: false },
+        FrameworkAnalog { paper_name: "CSR", backend: Backend::CsrSparse, sparse: true },
+        FrameworkAnalog { paper_name: "PatDNN", backend: Backend::CsrSparse, sparse: true },
+        FrameworkAnalog { paper_name: "GRIM", backend: Backend::Grim, sparse: true },
+    ]
+}
+
+/// PatDNN analog note: PatDNN executes pattern-pruned CONVs directly; on
+/// our GEMM-unified engine its analog is the CSR backend running a
+/// pattern-pruned model (fewer nnz than BCR at equal accuracy budget but
+/// no index sharing). The benches construct its weights with
+/// [`crate::sparse::pattern::PatternMask`].
+pub const PATDNN_NOTE: &str = "PatDNN analog = CSR execution over pattern-pruned weights";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_frameworks_grim_last() {
+        let fw = framework_backends();
+        assert_eq!(fw.len(), 6);
+        assert_eq!(fw.last().unwrap().paper_name, "GRIM");
+        assert!(fw.last().unwrap().sparse);
+    }
+}

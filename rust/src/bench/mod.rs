@@ -1,0 +1,141 @@
+//! Shared bench harness: table printing + machine-readable JSON output
+//! under `bench_out/`. Each `benches/figNN_*.rs` binary uses this to emit
+//! exactly the rows/series the paper's figure reports (DESIGN.md §5).
+//!
+//! The vendored dependency set has no criterion; `harness = false` benches
+//! with adaptive median timing (see [`crate::util::timer`]) fill that role.
+
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// A bench report: a named table with columns and rows, mirrored to JSON.
+pub struct Report {
+    pub name: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub meta: Json,
+}
+
+impl Report {
+    pub fn new(name: &str, title: &str, columns: &[&str]) -> Self {
+        Report {
+            name: name.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            meta: Json::obj(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Pretty-print to stdout in the paper's row format.
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                self.rows.iter().map(|r| r[i].len()).chain([c.len()]).max().unwrap_or(4)
+            })
+            .collect();
+        let header: Vec<String> =
+            self.columns.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}")).collect();
+        println!("{}", header.join("  "));
+        println!("{}", "-".repeat(header.join("  ").len()));
+        for r in &self.rows {
+            let line: Vec<String> =
+                r.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}")).collect();
+            println!("{}", line.join("  "));
+        }
+    }
+
+    /// Write JSON to `bench_out/<name>.json`.
+    pub fn save(&self) -> anyhow::Result<PathBuf> {
+        let dir = PathBuf::from("bench_out");
+        std::fs::create_dir_all(&dir)?;
+        let mut obj = Json::obj();
+        obj.set("name", Json::Str(self.name.clone()))
+            .set("title", Json::Str(self.title.clone()))
+            .set(
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+            )
+            .set(
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            )
+            .set("meta", self.meta.clone());
+        let path = dir.join(format!("{}.json", self.name));
+        std::fs::write(&path, obj.to_pretty())?;
+        Ok(path)
+    }
+
+    /// Print + save, logging the output path.
+    pub fn finish(&self) {
+        self.print();
+        match self.save() {
+            Ok(p) => println!("[saved {}]", p.display()),
+            Err(e) => eprintln!("[warn: could not save report: {e}]"),
+        }
+    }
+}
+
+/// Format milliseconds with sensible precision.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 100.0 {
+        format!("{ms:.0}")
+    } else if ms >= 1.0 {
+        format!("{ms:.2}")
+    } else {
+        format!("{ms:.4}")
+    }
+}
+
+/// Format a speedup factor.
+pub fn fmt_x(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Detect quick mode (`GRIM_BENCH_QUICK=1`) for CI-speed runs of the
+/// bench binaries; full runs use more iterations and larger shapes.
+pub fn quick_mode() -> bool {
+    std::env::var("GRIM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_row_width_checked() {
+        let mut r = Report::new("t", "T", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        assert_eq!(r.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut r = Report::new("t", "T", &["a", "b"]);
+        r.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ms(123.4), "123");
+        assert_eq!(fmt_ms(1.234), "1.23");
+        assert_eq!(fmt_ms(0.1234), "0.1234");
+        assert_eq!(fmt_x(2.0), "2.00x");
+    }
+}

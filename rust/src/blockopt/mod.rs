@@ -1,0 +1,170 @@
+//! Block-size optimization (paper §5.1, Listing 1).
+//!
+//! The decoupling insight: accuracy prefers the *smallest* block, while
+//! latency only degrades below some block size — and latency depends on
+//! the pruning *rate and block structure*, not the trained weight values.
+//! So block size is chosen offline by synthesizing random BCR-pruned
+//! layers and timing them on the engine, stopping at the smallest block
+//! whose latency is within `threshold` of the best seen.
+
+use crate::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
+use crate::sparse::{Bcrc, BcrConfig, BcrMask};
+use crate::tensor::Tensor;
+use crate::util::{timer, Rng, ThreadPool};
+
+/// A synthesized layer: random weights under a random BCR mask at the
+/// requested rate and block size (Listing 1, `synthesize`).
+pub struct SynthLayer {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: [usize; 2],
+    pub rate: f64,
+    pub gemm: BcrcGemm,
+}
+
+/// Synthesize a layer: structure (shape / rate / blocks) identical to the
+/// target layer, weights random — "the pruning ratio rather than the
+/// specific location of non-zero weights impacts the latency" (§5.1).
+pub fn synthesize(
+    rows: usize,
+    cols: usize,
+    block: [usize; 2],
+    rate: f64,
+    params: GemmParams,
+    rng: &mut Rng,
+) -> SynthLayer {
+    let cfg = BcrConfig::from_block_size(rows, cols, block[0], block[1]);
+    let mask = BcrMask::random(rows, cols, cfg, rate, rng);
+    let mut w = Tensor::rand_uniform(&[rows, cols], 1.0, rng);
+    mask.apply(&mut w);
+    let enc = Bcrc::from_masked(&w, &mask);
+    SynthLayer { rows, cols, block, rate, gemm: BcrcGemm::new(enc, params) }
+}
+
+/// Measure one synthesized layer's GEMM latency (ms, median).
+pub fn run_layer(layer: &SynthLayer, n: usize, pool: &ThreadPool, iters: usize, rng: &mut Rng) -> f64 {
+    let x = Tensor::rand_uniform(&[layer.cols, n], 1.0, rng);
+    timer::time_median_ms(iters, 1, || {
+        let out = if layer.rows * n >= 16 * 1024 {
+            layer.gemm.execute_parallel(&x, pool)
+        } else {
+            layer.gemm.execute(&x)
+        };
+        std::hint::black_box(out.numel());
+    })
+}
+
+/// Result of the block-size search for one layer.
+#[derive(Clone, Debug)]
+pub struct BlockOptResult {
+    pub opt_block: [usize; 2],
+    pub opt_ms: f64,
+    /// (block, latency-ms) for every candidate tried, in search order.
+    pub tried: Vec<([usize; 2], f64)>,
+}
+
+/// Listing 1, `find_opt_blk`: traverse candidate block sizes from largest
+/// to smallest (coarse → fine) and stop when the latency regression vs the
+/// best-so-far exceeds `threshold` (e.g. 1.10 = allow 10%). Returns the
+/// smallest acceptable block — which maximizes accuracy at equal rate.
+pub fn find_opt_block(
+    rows: usize,
+    cols: usize,
+    rate: f64,
+    candidates: &[[usize; 2]],
+    n: usize,
+    threshold: f64,
+    pool: &ThreadPool,
+    seed: u64,
+) -> BlockOptResult {
+    assert!(threshold >= 1.0);
+    let mut rng = Rng::new(seed);
+    let params = GemmParams::default();
+    let mut tried = Vec::new();
+    let mut best_ms = f64::INFINITY;
+    let mut opt: Option<([usize; 2], f64)> = None;
+    for &block in candidates {
+        if rows % block[0] != 0 || cols % block[1] != 0 {
+            continue; // candidate must divide the layer (Listing 1 precondition)
+        }
+        let layer = synthesize(rows, cols, block, rate, params, &mut rng);
+        let ms = run_layer(&layer, n, pool, 5, &mut rng);
+        tried.push((block, ms));
+        if ms < best_ms {
+            best_ms = ms;
+        }
+        if ms <= best_ms * threshold {
+            // acceptable: smaller (later) blocks are preferred, keep going
+            opt = Some((block, ms));
+        } else if opt.is_some() {
+            // latency fell off a cliff — stop, keep last acceptable block
+            break;
+        }
+    }
+    let (opt_block, opt_ms) = opt.unwrap_or_else(|| {
+        let first = tried.first().copied().unwrap_or(([rows, cols], 0.0));
+        (first.0, first.1)
+    });
+    BlockOptResult { opt_block, opt_ms, tried }
+}
+
+/// The default candidate ladder for a layer: powers of two from the whole
+/// matrix down to fine blocks, second dimension fixed at 16 as in
+/// Figure 10(b) when it divides the layer.
+pub fn default_candidates(rows: usize, cols: usize) -> Vec<[usize; 2]> {
+    let mut out = Vec::new();
+    let mut r = rows;
+    while r >= 1 {
+        let c = if cols % 16 == 0 { 16 } else { cols };
+        out.push([r, c]);
+        if r == 1 {
+            break;
+        }
+        r /= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesize_hits_rate() {
+        let mut rng = Rng::new(1);
+        let l = synthesize(64, 64, [4, 16], 8.0, GemmParams::default(), &mut rng);
+        let nnz = l.gemm.enc.nnz() as f64;
+        let rate = (64.0 * 64.0) / nnz;
+        assert!(rate > 4.0 && rate < 16.0, "rate {rate}");
+    }
+
+    #[test]
+    fn candidates_divide() {
+        let cands = default_candidates(128, 256);
+        assert!(cands.contains(&[128, 16]));
+        assert!(cands.contains(&[1, 16]));
+        for c in &cands {
+            assert_eq!(128 % c[0], 0);
+        }
+    }
+
+    #[test]
+    fn find_opt_block_returns_divisible_candidate() {
+        let pool = ThreadPool::new(2);
+        let res = find_opt_block(64, 64, 4.0, &default_candidates(64, 64), 8, 1.5, &pool, 7);
+        assert_eq!(64 % res.opt_block[0], 0);
+        assert_eq!(64 % res.opt_block[1], 0);
+        assert!(!res.tried.is_empty());
+        assert!(res.opt_ms >= 0.0);
+    }
+
+    #[test]
+    fn indivisible_candidates_skipped() {
+        let pool = ThreadPool::new(1);
+        let res = find_opt_block(60, 60, 2.0, &[[7, 16], [60, 60], [30, 30]], 4, 2.0, &pool, 8);
+        for (b, _) in &res.tried {
+            assert_eq!(60 % b[0], 0);
+            assert_eq!(60 % b[1], 0);
+        }
+    }
+}

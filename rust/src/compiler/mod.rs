@@ -1,0 +1,20 @@
+//! The GRIM compiler (paper §4): lowers a DSL module + weights into an
+//! [`plan::ExecutionPlan`] through a pipeline of BCR-enabled passes:
+//!
+//! 1. **Lowering** — CONV → GEMM geometry (im2col), FC/GRU → GEMM.
+//! 2. **Reorder + storage** (§4.2–4.3) — build the [`crate::sparse::ReorderPlan`]
+//!    and encode weights in BCRC (or CSR/dense per the layer IR).
+//! 3. **LRE + tiling** (§4.4) — select unroll factor and N-tile from the IR
+//!    (later overwritten by the auto-tuner).
+//! 4. **Fusion** — bias + activation epilogues folded into the GEMM step.
+//!
+//! The plan is the "generated code" analog (DESIGN.md §6): a parameterized
+//! record the engine interprets with monomorphized micro-kernels.
+
+pub mod plan;
+pub mod passes;
+pub mod weights;
+
+pub use plan::{Activation, ExecutionPlan, KernelImpl, Step};
+pub use passes::{compile, CompileOptions};
+pub use weights::{LayerWeights, WeightStore};

@@ -1,0 +1,399 @@
+//! Compiler passes: lowering, storage selection (reorder + BCRC/CSR),
+//! LRE/tiling parameterization, and epilogue fusion.
+
+use super::plan::{Activation, ExecutionPlan, GruLayerPlan, KernelImpl, Step};
+use super::weights::{gru_key, LayerWeights, WeightStore};
+use crate::conv::im2col::dead_columns;
+use crate::conv::ConvGeom;
+use crate::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
+use crate::gemm::tiled::TileParams;
+use crate::graph::dsl::Module;
+use crate::graph::{LayerIr, Op, StorageFormat};
+use crate::sparse::{Bcrc, Csr, ReorderPlan};
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+/// Which framework analog to compile for (the Figure 11 sweep axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// GRIM: BCRC + reorder + LRE + tuned parameters from the layer IR.
+    Grim,
+    /// Unoptimized dense (TFLite analog).
+    NaiveDense,
+    /// Optimized dense: tiling + register blocking + Winograd (MNN/TVM analog).
+    OptDense,
+    /// Sparse CSR baseline (clSparse analog; also executes 2:4 models).
+    CsrSparse,
+}
+
+/// Compile options.
+#[derive(Clone, Copy, Debug)]
+pub struct CompileOptions {
+    pub backend: Backend,
+    /// Fuse bias+activation epilogues into GEMM steps.
+    pub fuse: bool,
+    /// Enable im2col dead-column skipping (GRIM only).
+    pub im2col_skip: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions { backend: Backend::Grim, fuse: true, im2col_skip: true }
+    }
+}
+
+impl CompileOptions {
+    pub fn for_backend(backend: Backend) -> Self {
+        CompileOptions { backend, ..Default::default() }
+    }
+}
+
+/// Compile a module + weights into an execution plan.
+pub fn compile(
+    module: &Module,
+    weights: &WeightStore,
+    opts: CompileOptions,
+) -> anyhow::Result<ExecutionPlan> {
+    let graph = &module.graph;
+    let shapes = graph.infer_shapes()?;
+    let mut steps: Vec<(usize, Step)> = Vec::with_capacity(graph.len());
+
+    for node in graph.nodes() {
+        let step = match &node.op {
+            Op::Input { .. } => Step::Input,
+            Op::Conv2d { out_c, kh, kw, stride, pad } => {
+                let in_s = &shapes[node.inputs[0]];
+                let geom = ConvGeom {
+                    in_c: in_s.dim(0),
+                    in_h: in_s.dim(1),
+                    in_w: in_s.dim(2),
+                    out_c: *out_c,
+                    kh: *kh,
+                    kw: *kw,
+                    stride: *stride,
+                    pad: *pad,
+                };
+                let lw = get_weights(weights, &node.name)?;
+                check_shape(&node.name, &lw.w, *out_c, geom.gemm_k())?;
+                let ir = module.ir_for(&node.name);
+                let kernel = build_kernel(&node.name, lw, ir, opts, Some(geom))?;
+                let dead = if opts.im2col_skip && matches!(kernel, KernelImpl::Bcrc { .. }) {
+                    Some(Arc::new(dead_columns(&lw.w)))
+                } else {
+                    None
+                };
+                Step::Conv {
+                    geom,
+                    kernel,
+                    dead_cols: dead,
+                    bias: Arc::new(lw.bias.clone()),
+                    act: Activation::None,
+                }
+            }
+            Op::DwConv2d { kh, kw, stride, pad } => {
+                let lw = get_weights(weights, &node.name)?;
+                let in_c = shapes[node.inputs[0]].dim(0);
+                check_shape(&node.name, &lw.w, in_c, kh * kw)?;
+                // depthwise stays dense: its GEMM rows are length kh*kw (9),
+                // too small for BCR blocks to pay off — the paper prunes the
+                // pointwise (1x1) convs around it instead.
+                // Pre-shape to [C,1,KH,KW] once here, not per inference.
+                Step::DwConv {
+                    kh: *kh,
+                    kw: *kw,
+                    stride: *stride,
+                    pad: *pad,
+                    w: Arc::new(lw.w.clone().reshape(&[in_c, 1, *kh, *kw])),
+                    bias: Arc::new(lw.bias.clone()),
+                    act: Activation::None,
+                }
+            }
+            Op::Fc { out_f } => {
+                let lw = get_weights(weights, &node.name)?;
+                let in_f = shapes[node.inputs[0]].numel();
+                check_shape(&node.name, &lw.w, *out_f, in_f)?;
+                let ir = module.ir_for(&node.name);
+                let kernel = build_kernel(&node.name, lw, ir, opts, None)?;
+                Step::Fc { kernel, bias: Arc::new(lw.bias.clone()), act: Activation::None }
+            }
+            Op::Gru { hidden, layers } => {
+                let in_f0 = shapes[node.inputs[0]].dim(1);
+                let mut plans = Vec::with_capacity(*layers);
+                let mut in_f = in_f0;
+                for l in 0..*layers {
+                    let mut gates = Vec::with_capacity(3);
+                    for gate in ['z', 'r', 'h'] {
+                        let key = gru_key(&node.name, l, gate);
+                        let lw = get_weights(weights, &key)?;
+                        check_shape(&key, &lw.w, *hidden, in_f + hidden)?;
+                        let ir = module.ir_for(&key).or_else(|| module.ir_for(&node.name));
+                        gates.push((build_kernel(&key, lw, ir, opts, None)?, lw.bias.clone()));
+                    }
+                    let mut it = gates.into_iter();
+                    let (wz, bz) = it.next().unwrap();
+                    let (wr, br) = it.next().unwrap();
+                    let (wh, bh) = it.next().unwrap();
+                    plans.push(GruLayerPlan { hidden: *hidden, in_f, wz, wr, wh, bz, br, bh });
+                    in_f = *hidden;
+                }
+                Step::Gru { layers: Arc::new(plans) }
+            }
+            Op::MaxPool2 => Step::MaxPool2,
+            Op::GlobalAvgPool => Step::GlobalAvgPool,
+            Op::Relu => Step::Relu,
+            Op::Relu6 => Step::Relu6,
+            Op::Add => Step::Add,
+            Op::Flatten => Step::Flatten,
+            Op::Softmax => Step::Softmax,
+        };
+        steps.push((node.id, step));
+    }
+
+    if opts.fuse {
+        fuse_activations(graph, &mut steps);
+    }
+
+    // Bypass fused-away (Noop) nodes: rewrite consumer edges to read the
+    // producer directly so no tensor is cloned through the Noop at runtime.
+    let mut redirect: Vec<usize> = (0..steps.len()).collect();
+    for (id, step) in steps.iter() {
+        if matches!(step, Step::Noop) {
+            redirect[*id] = graph.node(*id).inputs[0];
+        }
+    }
+    for i in 0..redirect.len() {
+        let mut r = redirect[i];
+        while redirect[r] != r {
+            r = redirect[r];
+        }
+        redirect[i] = r;
+    }
+    let inputs: Vec<Vec<usize>> = graph
+        .nodes()
+        .iter()
+        .map(|n| n.inputs.iter().map(|i| redirect[*i]).collect())
+        .collect();
+
+    Ok(ExecutionPlan {
+        name: module.name.clone(),
+        steps,
+        inputs,
+        input_id: graph.input()?,
+        output_id: redirect[graph.output()?],
+    })
+}
+
+fn get_weights<'a>(weights: &'a WeightStore, key: &str) -> anyhow::Result<&'a LayerWeights> {
+    weights.get(key).ok_or_else(|| anyhow::anyhow!("missing weights for layer '{key}'"))
+}
+
+fn check_shape(name: &str, w: &Tensor, rows: usize, cols: usize) -> anyhow::Result<()> {
+    let got = w.shape().as_matrix();
+    anyhow::ensure!(
+        got == (rows, cols),
+        "layer '{name}': weight shape {:?} != expected ({rows},{cols})",
+        got
+    );
+    Ok(())
+}
+
+/// Storage + parameter selection for one GEMM (passes 2–3).
+fn build_kernel(
+    name: &str,
+    lw: &LayerWeights,
+    ir: Option<&LayerIr>,
+    opts: CompileOptions,
+    geom: Option<ConvGeom>,
+) -> anyhow::Result<KernelImpl> {
+    lw.check_mask_consistency()
+        .map_err(|e| anyhow::anyhow!("layer '{name}': {e}"))?;
+    match opts.backend {
+        Backend::NaiveDense => Ok(KernelImpl::NaiveDense { w: Arc::new(lw.w.clone()) }),
+        Backend::OptDense => {
+            // Winograd for 3x3 stride-1 convs (as the paper's dense runs).
+            if let Some(g) = geom {
+                if g.kh == 3 && g.kw == 3 && g.stride == 1 {
+                    let w4 = lw.w.clone().reshape(&[g.out_c, g.in_c, 3, 3]);
+                    return Ok(KernelImpl::Winograd { w4: Arc::new(w4) });
+                }
+            }
+            Ok(KernelImpl::Dense { w: Arc::new(lw.w.clone()), params: TileParams::default() })
+        }
+        Backend::CsrSparse => Ok(KernelImpl::Csr { mat: Arc::new(Csr::from_dense(&lw.w)) }),
+        Backend::Grim => {
+            let default_ir;
+            let ir = match ir {
+                Some(ir) => ir,
+                None => {
+                    default_ir = LayerIr::default_for(name, if lw.mask.is_some() { 0.0 } else { 1.0 });
+                    &default_ir
+                }
+            };
+            match (ir.format, &lw.mask) {
+                (StorageFormat::Bcrc, Some(mask)) => {
+                    let plan = if ir.reorder {
+                        ReorderPlan::from_mask(mask)
+                    } else {
+                        let sigs: Vec<Vec<u32>> =
+                            (0..mask.rows).map(|r| mask.row_columns(r)).collect();
+                        ReorderPlan::identity(sigs, mask.rows, mask.cols)
+                    };
+                    let enc = Bcrc::encode(&lw.w, mask, &plan);
+                    let params = GemmParams { unroll: ir.unroll, n_tile: ir.tile, lre: ir.lre };
+                    Ok(KernelImpl::Bcrc { gemm: BcrcGemm::new(enc, params) })
+                }
+                (StorageFormat::Bcrc, None) => {
+                    // IR asks for BCRC but no mask exists: a model bug the
+                    // compiler surfaces rather than silently densifying.
+                    anyhow::bail!("layer '{name}': IR format=bcrc but no BCR mask present")
+                }
+                (StorageFormat::Csr, _) => {
+                    Ok(KernelImpl::Csr { mat: Arc::new(Csr::from_dense(&lw.w)) })
+                }
+                (StorageFormat::Dense, _) => Ok(KernelImpl::Dense {
+                    w: Arc::new(lw.w.clone()),
+                    params: TileParams::default(),
+                }),
+            }
+        }
+    }
+}
+
+/// Pass 4: fold ReLU/ReLU6 nodes into their GEMM producer when it is the
+/// sole consumer.
+fn fuse_activations(graph: &crate::graph::Graph, steps: &mut [(usize, Step)]) {
+    // consumer counts
+    let mut consumers = vec![0usize; graph.len()];
+    for n in graph.nodes() {
+        for &i in &n.inputs {
+            consumers[i] += 1;
+        }
+    }
+    for id in 0..steps.len() {
+        let act = match steps[id].1 {
+            Step::Relu => Activation::Relu,
+            Step::Relu6 => Activation::Relu6,
+            _ => continue,
+        };
+        let producer = graph.node(id).inputs[0];
+        if consumers[producer] != 1 {
+            continue;
+        }
+        let fused = match &mut steps[producer].1 {
+            Step::Conv { act: a, .. } | Step::Fc { act: a, .. } | Step::DwConv { act: a, .. } => {
+                *a = act;
+                true
+            }
+            _ => false,
+        };
+        if fused {
+            steps[id].1 = Step::Noop;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dsl;
+    use crate::sparse::{BcrConfig, BcrMask};
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    fn tiny_module() -> Module {
+        dsl::parse(
+            r#"
+model "tiny"
+in = Input(shape=[3,8,8])
+c1 = Conv2D(in, out_c=4, kh=3, kw=3, stride=1, pad=1)
+r1 = ReLU(c1)
+f = Flatten(r1)
+fc1 = FC(f, out_f=10)
+@ir c1 { block_size=[2,9]; rate=3.0; unroll=4; tile=32 }
+@ir fc1 { block_size=[2,16]; rate=2.0 }
+"#,
+        )
+        .unwrap()
+    }
+
+    fn tiny_weights(seed: u64) -> WeightStore {
+        let mut rng = Rng::new(seed);
+        let mut store = HashMap::new();
+        // conv: [4, 27] -> grid from block [2,9]
+        let mask1 = BcrMask::random(4, 27, BcrConfig::from_block_size(4, 27, 2, 9), 3.0, &mut rng);
+        let mut w1 = Tensor::rand_uniform(&[4, 27], 0.5, &mut rng);
+        mask1.apply(&mut w1);
+        store.insert("c1".to_string(), LayerWeights::dense(w1).with_mask(mask1));
+        // fc: [10, 256]
+        let mask2 =
+            BcrMask::random(10, 256, BcrConfig::from_block_size(10, 256, 2, 16), 2.0, &mut rng);
+        let mut w2 = Tensor::rand_uniform(&[10, 256], 0.5, &mut rng);
+        mask2.apply(&mut w2);
+        store.insert("fc1".to_string(), LayerWeights::dense(w2).with_mask(mask2));
+        store
+    }
+
+    #[test]
+    fn compiles_grim_backend() {
+        let m = tiny_module();
+        let w = tiny_weights(1);
+        let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        assert_eq!(plan.steps.len(), 5);
+        // c1 kernel must be bcrc, act fused
+        match &plan.steps[1].1 {
+            Step::Conv { kernel, act, .. } => {
+                assert!(matches!(kernel, KernelImpl::Bcrc { .. }));
+                assert_eq!(*act, Activation::Relu);
+            }
+            other => panic!("expected Conv, got {other:?}"),
+        }
+        assert!(matches!(plan.steps[2].1, Step::Noop));
+    }
+
+    #[test]
+    fn all_backends_compile() {
+        let m = tiny_module();
+        let w = tiny_weights(2);
+        for b in [Backend::Grim, Backend::NaiveDense, Backend::OptDense, Backend::CsrSparse] {
+            let plan = compile(&m, &w, CompileOptions::for_backend(b)).unwrap();
+            assert_eq!(plan.steps.len(), 5, "backend {b:?}");
+        }
+    }
+
+    #[test]
+    fn optdense_uses_winograd_for_3x3() {
+        let m = tiny_module();
+        let w = tiny_weights(3);
+        let plan = compile(&m, &w, CompileOptions::for_backend(Backend::OptDense)).unwrap();
+        match &plan.steps[1].1 {
+            Step::Conv { kernel, .. } => assert!(matches!(kernel, KernelImpl::Winograd { .. })),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn missing_weights_error() {
+        let m = tiny_module();
+        let w = HashMap::new();
+        let err = compile(&m, &w, CompileOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("missing weights"));
+    }
+
+    #[test]
+    fn bcrc_without_mask_rejected() {
+        let m = tiny_module();
+        let mut w = tiny_weights(4);
+        w.get_mut("c1").unwrap().mask = None;
+        let err = compile(&m, &w, CompileOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("no BCR mask"), "{err}");
+    }
+
+    #[test]
+    fn storage_bytes_smaller_for_bcrc() {
+        let m = tiny_module();
+        let w = tiny_weights(5);
+        let grim = compile(&m, &w, CompileOptions::default()).unwrap();
+        let dense = compile(&m, &w, CompileOptions::for_backend(Backend::NaiveDense)).unwrap();
+        assert!(grim.storage_bytes() < dense.storage_bytes());
+    }
+}

@@ -1,0 +1,175 @@
+//! Execution plans — the compiler's output and the engine's input.
+//!
+//! A plan has one [`Step`] per graph node (fused-away nodes become
+//! [`Step::Noop`]), each weighted step carrying a [`KernelImpl`] that fixes
+//! storage format and micro-kernel parameters. This is the analog of the
+//! paper's generated C++ (DESIGN.md §6).
+
+use crate::conv::ConvGeom;
+use crate::gemm::bcrc_gemm::BcrcGemm;
+use crate::gemm::tiled::TileParams;
+use crate::graph::NodeId;
+use crate::sparse::Csr;
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+/// Fused activation epilogue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Relu6,
+}
+
+/// How a GEMM is executed — the kernel-selection axis Figure 11 sweeps.
+#[derive(Clone, Debug)]
+pub enum KernelImpl {
+    /// Unoptimized dense triple loop (TFLite analog).
+    NaiveDense { w: Arc<Tensor> },
+    /// Tiled + register-blocked dense (MNN/TVM analog, and GRIM's own
+    /// dense layers).
+    Dense { w: Arc<Tensor>, params: TileParams },
+    /// Winograd F(2,3) — dense 3×3 stride-1 CONVs only; holds the
+    /// original `[F,C,3,3]` weights.
+    Winograd { w4: Arc<Tensor> },
+    /// General sparse baseline.
+    Csr { mat: Arc<Csr> },
+    /// GRIM: BCRC + reorder + LRE.
+    Bcrc { gemm: BcrcGemm },
+}
+
+impl KernelImpl {
+    pub fn format_name(&self) -> &'static str {
+        match self {
+            KernelImpl::NaiveDense { .. } => "naive-dense",
+            KernelImpl::Dense { .. } => "dense",
+            KernelImpl::Winograd { .. } => "winograd",
+            KernelImpl::Csr { .. } => "csr",
+            KernelImpl::Bcrc { .. } => "bcrc",
+        }
+    }
+
+    /// Weight-storage bytes of this kernel (Figure 16's total column).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            KernelImpl::NaiveDense { w } | KernelImpl::Dense { w, .. } => 4 * w.numel(),
+            KernelImpl::Winograd { w4 } => 4 * w4.numel(),
+            KernelImpl::Csr { mat } => mat.total_bytes(),
+            KernelImpl::Bcrc { gemm } => gemm.enc.total_bytes(),
+        }
+    }
+}
+
+/// One GRU stacked layer's kernels.
+#[derive(Clone, Debug)]
+pub struct GruLayerPlan {
+    pub hidden: usize,
+    pub in_f: usize,
+    pub wz: KernelImpl,
+    pub wr: KernelImpl,
+    pub wh: KernelImpl,
+    pub bz: Vec<f32>,
+    pub br: Vec<f32>,
+    pub bh: Vec<f32>,
+}
+
+/// One executable step (1:1 with graph nodes).
+#[derive(Clone, Debug)]
+pub enum Step {
+    Input,
+    /// CONV lowered to im2col + GEMM with fused bias/activation.
+    Conv {
+        geom: ConvGeom,
+        kernel: KernelImpl,
+        /// GEMM-weight columns that are entirely zero → im2col skip (§4.5).
+        dead_cols: Option<Arc<Vec<bool>>>,
+        bias: Arc<Vec<f32>>,
+        act: Activation,
+    },
+    /// Depthwise CONV (dense; MobileNet-V2).
+    DwConv {
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        w: Arc<Tensor>,
+        bias: Arc<Vec<f32>>,
+        act: Activation,
+    },
+    /// FC lowered to GEMV/GEMM with fused bias/activation.
+    Fc { kernel: KernelImpl, bias: Arc<Vec<f32>>, act: Activation },
+    /// Stacked GRU over a `[T, in_f]` sequence.
+    Gru { layers: Arc<Vec<GruLayerPlan>> },
+    MaxPool2,
+    GlobalAvgPool,
+    Relu,
+    Relu6,
+    Add,
+    Flatten,
+    Softmax,
+    /// Node fused into its producer.
+    Noop,
+}
+
+/// A compiled model.
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    pub name: String,
+    /// One step per graph node, in topological order.
+    pub steps: Vec<(NodeId, Step)>,
+    /// Inputs of each node (copied from the graph for execution).
+    pub inputs: Vec<Vec<NodeId>>,
+    /// Id of the model input node.
+    pub input_id: NodeId,
+    /// Id of the output node.
+    pub output_id: NodeId,
+}
+
+impl ExecutionPlan {
+    /// Total weight storage across all steps.
+    pub fn storage_bytes(&self) -> usize {
+        let mut total = 0;
+        for (_, s) in &self.steps {
+            match s {
+                Step::Conv { kernel, .. } | Step::Fc { kernel, .. } => {
+                    total += kernel.storage_bytes()
+                }
+                Step::DwConv { w, .. } => total += 4 * w.numel(),
+                Step::Gru { layers } => {
+                    for l in layers.iter() {
+                        total += l.wz.storage_bytes()
+                            + l.wr.storage_bytes()
+                            + l.wh.storage_bytes();
+                    }
+                }
+                _ => {}
+            }
+        }
+        total
+    }
+
+    /// Human-readable per-step summary (CLI `grim inspect`).
+    pub fn describe(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        for (id, step) in &self.steps {
+            let desc = match step {
+                Step::Input => "Input".to_string(),
+                Step::Conv { geom, kernel, .. } => format!(
+                    "Conv {}x{} s{} [{}] k={}",
+                    geom.kh,
+                    geom.kw,
+                    geom.stride,
+                    geom.out_c,
+                    kernel.format_name()
+                ),
+                Step::DwConv { kh, kw, stride, .. } => format!("DwConv {kh}x{kw} s{stride}"),
+                Step::Fc { kernel, .. } => format!("FC k={}", kernel.format_name()),
+                Step::Gru { layers } => format!("GRU x{}", layers.len()),
+                other => format!("{other:?}").split_whitespace().next().unwrap().to_string(),
+            };
+            let _ = writeln!(s, "  [{id:3}] {desc}");
+        }
+        s
+    }
+}

@@ -1,0 +1,88 @@
+//! Model weights: GEMM-space weight matrices, biases, and optional BCR
+//! masks, keyed by layer name. GRU layers store three gate matrices per
+//! stacked layer under derived keys (`<node>.l<i>.{z,r,h}`).
+
+use crate::sparse::BcrMask;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Weights for one GEMM-bearing layer.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    /// GEMM-space weights. CONV: `[out_c, in_c*kh*kw]`; FC: `[out_f, in_f]`;
+    /// depthwise CONV: `[c, kh*kw]`; GRU gate: `[hidden, in+hidden]`.
+    pub w: Tensor,
+    pub bias: Vec<f32>,
+    /// BCR mask, present when the layer is BCR-pruned. Weights must
+    /// already be zero at masked positions (checked at compile).
+    pub mask: Option<BcrMask>,
+}
+
+impl LayerWeights {
+    pub fn dense(w: Tensor) -> Self {
+        let (rows, _) = w.shape().as_matrix();
+        LayerWeights { w, bias: vec![0.0; rows], mask: None }
+    }
+
+    pub fn with_bias(mut self, bias: Vec<f32>) -> Self {
+        let (rows, _) = self.w.shape().as_matrix();
+        assert_eq!(bias.len(), rows, "bias length mismatch");
+        self.bias = bias;
+        self
+    }
+
+    pub fn with_mask(mut self, mask: BcrMask) -> Self {
+        let (rows, cols) = self.w.shape().as_matrix();
+        assert_eq!((rows, cols), (mask.rows, mask.cols), "mask shape mismatch");
+        self.mask = Some(mask);
+        self
+    }
+
+    /// Verify weights are zero wherever the mask prunes.
+    pub fn check_mask_consistency(&self) -> anyhow::Result<()> {
+        if let Some(mask) = &self.mask {
+            let (rows, cols) = self.w.shape().as_matrix();
+            for r in 0..rows {
+                for c in 0..cols {
+                    if !mask.alive(r, c) && self.w.at2(r, c) != 0.0 {
+                        anyhow::bail!("weight ({r},{c}) nonzero under pruned mask");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// All weights of one model.
+pub type WeightStore = HashMap<String, LayerWeights>;
+
+/// GRU gate key helper.
+pub fn gru_key(node: &str, layer: usize, gate: char) -> String {
+    format!("{node}.l{layer}.{gate}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::BcrConfig;
+    use crate::util::Rng;
+
+    #[test]
+    fn mask_consistency_detects_violation() {
+        let mut rng = Rng::new(1);
+        let mask = BcrMask::random(8, 16, BcrConfig::new(2, 2), 4.0, &mut rng);
+        let mut w = Tensor::rand_uniform(&[8, 16], 1.0, &mut rng);
+        // not applied yet -> likely inconsistent
+        let lw = LayerWeights::dense(w.clone()).with_mask(mask.clone());
+        assert!(lw.check_mask_consistency().is_err());
+        mask.apply(&mut w);
+        let lw = LayerWeights::dense(w).with_mask(mask);
+        lw.check_mask_consistency().unwrap();
+    }
+
+    #[test]
+    fn gru_keys() {
+        assert_eq!(gru_key("gru", 0, 'z'), "gru.l0.z");
+    }
+}

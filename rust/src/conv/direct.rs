@@ -1,0 +1,212 @@
+//! Direct (sliding-window) convolution — the correctness reference for the
+//! im2col and Winograd paths, and the depthwise kernel MobileNet-V2 needs.
+
+use crate::tensor::Tensor;
+
+/// Direct 2-D convolution: `x[C,H,W] * w[F,C,KH,KW] -> [F,OH,OW]`.
+pub fn conv2d_direct(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+    let (c, h, wd) = {
+        let d = x.shape().dims();
+        assert_eq!(d.len(), 3);
+        (d[0], d[1], d[2])
+    };
+    let (f, c2, kh, kw) = w.shape().as_nchw();
+    assert_eq!(c, c2, "channel mismatch");
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let mut out = Tensor::zeros(&[f, oh, ow]);
+    let xd = x.data();
+    let wdat = w.data();
+    let od = out.data_mut();
+    for fo in 0..f {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let mut acc = 0.0f32;
+                for ci in 0..c {
+                    for ki in 0..kh {
+                        let ii = (oi * stride + ki) as isize - pad as isize;
+                        if ii < 0 || ii >= h as isize {
+                            continue;
+                        }
+                        for kj in 0..kw {
+                            let jj = (oj * stride + kj) as isize - pad as isize;
+                            if jj < 0 || jj >= wd as isize {
+                                continue;
+                            }
+                            acc += xd[(ci * h + ii as usize) * wd + jj as usize]
+                                * wdat[((fo * c + ci) * kh + ki) * kw + kj];
+                        }
+                    }
+                }
+                od[(fo * oh + oi) * ow + oj] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise 2-D convolution: `x[C,H,W] * w[C,1,KH,KW] -> [C,OH,OW]`
+/// (channel multiplier 1, as in MobileNet-V2).
+pub fn depthwise_conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+    let d = x.shape().dims();
+    let (c, h, wd) = (d[0], d[1], d[2]);
+    let (c2, one, kh, kw) = w.shape().as_nchw();
+    assert_eq!(c, c2);
+    assert_eq!(one, 1, "depthwise expects [C,1,KH,KW]");
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    let xd = x.data();
+    let wdat = w.data();
+    let od = out.data_mut();
+    for ci in 0..c {
+        let xc = &xd[ci * h * wd..(ci + 1) * h * wd];
+        let wc = &wdat[ci * kh * kw..(ci + 1) * kh * kw];
+        let oc = &mut od[ci * oh * ow..(ci + 1) * oh * ow];
+        for oi in 0..oh {
+            let ibase = (oi * stride) as isize - pad as isize;
+            // fast interior path: the whole kernel window is in-bounds for
+            // every kj when jj0 >= 0 and jj0 + kw <= wd — hoists all
+            // branches out of the stencil (the depthwise hot loop).
+            for oj in 0..ow {
+                let jbase = (oj * stride) as isize - pad as isize;
+                let interior = ibase >= 0
+                    && ibase + kh as isize <= h as isize
+                    && jbase >= 0
+                    && jbase + kw as isize <= wd as isize;
+                let mut acc = 0.0f32;
+                if interior {
+                    let (i0, j0) = (ibase as usize, jbase as usize);
+                    for ki in 0..kh {
+                        let xrow = &xc[(i0 + ki) * wd + j0..(i0 + ki) * wd + j0 + kw];
+                        let wrow = &wc[ki * kw..(ki + 1) * kw];
+                        for kj in 0..kw {
+                            acc += xrow[kj] * wrow[kj];
+                        }
+                    }
+                } else {
+                    for ki in 0..kh {
+                        let ii = ibase + ki as isize;
+                        if ii < 0 || ii >= h as isize {
+                            continue;
+                        }
+                        for kj in 0..kw {
+                            let jj = jbase + kj as isize;
+                            if jj < 0 || jj >= wd as isize {
+                                continue;
+                            }
+                            acc += xc[ii as usize * wd + jj as usize] * wc[ki * kw + kj];
+                        }
+                    }
+                }
+                oc[oi * ow + oj] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Channel-parallel depthwise convolution: channels are independent, so
+/// they partition perfectly across the worker pool (the paper's 8-thread
+/// execution). Falls back to the serial kernel for small work.
+pub fn depthwise_conv2d_parallel(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+    pool: &crate::util::ThreadPool,
+) -> Tensor {
+    let d = x.shape().dims();
+    let (c, h, wd) = (d[0], d[1], d[2]);
+    let (c2, _one, kh, kw) = w.shape().as_nchw();
+    assert_eq!(c, c2);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    if c * oh * ow * kh * kw < 64 * 1024 {
+        return depthwise_conv2d(x, w, stride, pad);
+    }
+    use std::sync::{Arc, Mutex};
+    let out = Arc::new(Mutex::new(Tensor::zeros(&[c, oh, ow])));
+    let xd: Arc<Vec<f32>> = Arc::new(x.data().to_vec());
+    let wdat: Arc<Vec<f32>> = Arc::new(w.data().to_vec());
+    let out2 = Arc::clone(&out);
+    pool.run_partitioned(c, move |_wid, lo, hi| {
+        let mut local = vec![0.0f32; (hi - lo) * oh * ow];
+        for ci in lo..hi {
+            let xc = Tensor::from_vec(&[1, h, wd], xd[ci * h * wd..(ci + 1) * h * wd].to_vec());
+            let wc = Tensor::from_vec(
+                &[1, 1, kh, kw],
+                wdat[ci * kh * kw..(ci + 1) * kh * kw].to_vec(),
+            );
+            let oc = depthwise_conv2d(&xc, &wc, stride, pad);
+            local[(ci - lo) * oh * ow..(ci - lo + 1) * oh * ow].copy_from_slice(oc.data());
+        }
+        let mut g = out2.lock().unwrap();
+        g.data_mut()[lo * oh * ow..hi * oh * ow].copy_from_slice(&local);
+    });
+    match Arc::try_unwrap(out) {
+        Ok(m) => m.into_inner().unwrap(),
+        Err(arc) => arc.lock().unwrap().clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_kernel() {
+        // 1x1 kernel of ones with one channel = identity
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d_direct(&x, &w, 1, 0);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn known_3x3() {
+        // all-ones 3x3 kernel, pad 1 => neighborhood sums
+        let x = Tensor::from_vec(&[1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let y = conv2d_direct(&x, &w, 1, 1);
+        // center = sum of all = 45
+        assert_eq!(y.data()[4], 45.0);
+        // corner (0,0) = 1+2+4+5 = 12
+        assert_eq!(y.data()[0], 12.0);
+    }
+
+    #[test]
+    fn depthwise_matches_grouped_direct() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::rand_uniform(&[3, 6, 6], 1.0, &mut rng);
+        let w = Tensor::rand_uniform(&[3, 1, 3, 3], 1.0, &mut rng);
+        let y = depthwise_conv2d(&x, &w, 1, 1);
+        // per-channel check against single-channel direct conv
+        for c in 0..3 {
+            let xc = Tensor::from_vec(&[1, 6, 6], x.data()[c * 36..(c + 1) * 36].to_vec());
+            let wc = Tensor::from_vec(&[1, 1, 3, 3], w.data()[c * 9..(c + 1) * 9].to_vec());
+            let yc = conv2d_direct(&xc, &wc, 1, 1);
+            assert_eq!(&y.data()[c * 36..(c + 1) * 36], yc.data());
+        }
+    }
+}
+
+#[cfg(test)]
+mod parallel_tests {
+    use super::*;
+    use crate::util::{Rng, ThreadPool};
+
+    #[test]
+    fn parallel_depthwise_matches_serial() {
+        let mut rng = Rng::new(9);
+        let pool = ThreadPool::new(4);
+        for (c, h, w) in [(8usize, 16usize, 16usize), (64, 32, 32)] {
+            let x = Tensor::rand_uniform(&[c, h, w], 1.0, &mut rng);
+            let k = Tensor::rand_uniform(&[c, 1, 3, 3], 1.0, &mut rng);
+            let a = depthwise_conv2d(&x, &k, 1, 1);
+            let b = depthwise_conv2d_parallel(&x, &k, 1, 1, &pool);
+            assert!(a.allclose(&b, 1e-6, 1e-6));
+        }
+    }
+}

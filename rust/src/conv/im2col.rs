@@ -1,0 +1,216 @@
+//! im2col: lower CONV to GEMM (paper §3.1).
+//!
+//! A CONV layer `filters[F, C, KH, KW]` over input `x[C, H, W]` becomes
+//! `W_gemm[F, C*KH*KW] · X_col[C*KH*KW, OH*OW]`. GRIM's twist (§4.5): when
+//! BCR pruning kills an entire GEMM weight column in all blocks, the
+//! corresponding input row need not be materialized — `im2col_skip`.
+
+use crate::tensor::Tensor;
+
+/// Static geometry of one convolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// GEMM dims: `[out_c, in_c*kh*kw] x [in_c*kh*kw, out_h*out_w]`.
+    pub fn gemm_k(&self) -> usize {
+        self.in_c * self.kh * self.kw
+    }
+
+    pub fn gemm_n(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// MACs for the dense convolution.
+    pub fn macs(&self) -> usize {
+        self.out_c * self.gemm_k() * self.gemm_n()
+    }
+}
+
+/// Reshape CONV weights `[F, C, KH, KW]` into the GEMM matrix
+/// `[F, C*KH*KW]` (row-major, so this is a pure reshape).
+pub fn weights_to_gemm(w: &Tensor) -> Tensor {
+    let (f, c, kh, kw) = w.shape().as_nchw();
+    w.clone().reshape(&[f, c * kh * kw])
+}
+
+/// Full im2col: `x[C,H,W]` → `[C*KH*KW, OH*OW]`.
+pub fn im2col(x: &Tensor, g: &ConvGeom) -> Tensor {
+    let dims = x.shape().dims();
+    assert_eq!(dims, &[g.in_c, g.in_h, g.in_w], "input shape mismatch");
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let k = g.gemm_k();
+    let n = oh * ow;
+    let mut out = Tensor::zeros(&[k, n]);
+    fill_rows(x, g, out.data_mut(), None);
+    out
+}
+
+/// im2col with row skipping: rows of `X_col` whose GEMM weight column is
+/// fully pruned (`dead_cols[row] == true`) are left as zeros and never
+/// gathered. Returns the same shape as [`im2col`] so downstream GEMM is
+/// unchanged — the saving is the skipped memory traffic.
+pub fn im2col_skip(x: &Tensor, g: &ConvGeom, dead_cols: &[bool]) -> Tensor {
+    assert_eq!(dead_cols.len(), g.gemm_k());
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let mut out = Tensor::zeros(&[g.gemm_k(), oh * ow]);
+    fill_rows(x, g, out.data_mut(), Some(dead_cols));
+    out
+}
+
+fn fill_rows(x: &Tensor, g: &ConvGeom, out: &mut [f32], dead: Option<&[bool]>) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let n = oh * ow;
+    let xd = x.data();
+    let (h, w) = (g.in_h, g.in_w);
+    for c in 0..g.in_c {
+        for ki in 0..g.kh {
+            for kj in 0..g.kw {
+                let row = (c * g.kh + ki) * g.kw + kj;
+                if dead.map(|d| d[row]).unwrap_or(false) {
+                    continue;
+                }
+                let orow = &mut out[row * n..(row + 1) * n];
+                for oi in 0..oh {
+                    let ii = (oi * g.stride + ki) as isize - g.pad as isize;
+                    if ii < 0 || ii >= h as isize {
+                        continue; // padding row: stays zero
+                    }
+                    let xbase = (c * h + ii as usize) * w;
+                    for oj in 0..ow {
+                        let jj = (oj * g.stride + kj) as isize - g.pad as isize;
+                        if jj < 0 || jj >= w as isize {
+                            continue;
+                        }
+                        orow[oi * ow + oj] = xd[xbase + jj as usize];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Which GEMM-weight columns are completely dead (zero in every row)?
+/// Used to drive [`im2col_skip`].
+pub fn dead_columns(w_gemm: &Tensor) -> Vec<bool> {
+    let (rows, cols) = w_gemm.shape().as_matrix();
+    let mut dead = vec![true; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            if dead[c] && w_gemm.at2(r, c) != 0.0 {
+                dead[c] = false;
+            }
+        }
+    }
+    dead
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::conv2d_direct;
+    use crate::gemm::naive_gemm;
+    use crate::util::Rng;
+
+    fn geom() -> ConvGeom {
+        ConvGeom { in_c: 3, in_h: 8, in_w: 8, out_c: 4, kh: 3, kw: 3, stride: 1, pad: 1 }
+    }
+
+    #[test]
+    fn geometry() {
+        let g = geom();
+        assert_eq!((g.out_h(), g.out_w()), (8, 8));
+        assert_eq!(g.gemm_k(), 27);
+        assert_eq!(g.gemm_n(), 64);
+    }
+
+    #[test]
+    fn im2col_gemm_equals_direct_conv() {
+        let g = geom();
+        let mut rng = Rng::new(1);
+        let w = Tensor::rand_uniform(&[g.out_c, g.in_c, g.kh, g.kw], 1.0, &mut rng);
+        let x = Tensor::rand_uniform(&[g.in_c, g.in_h, g.in_w], 1.0, &mut rng);
+        let direct = conv2d_direct(&x, &w, g.stride, g.pad);
+        let cols = im2col(&x, &g);
+        let wg = weights_to_gemm(&w);
+        let out = naive_gemm(&wg, &cols).reshape(&[g.out_c, g.out_h(), g.out_w()]);
+        assert!(out.allclose(&direct, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn strided_no_pad() {
+        let g = ConvGeom { in_c: 2, in_h: 9, in_w: 9, out_c: 3, kh: 3, kw: 3, stride: 2, pad: 0 };
+        let mut rng = Rng::new(2);
+        let w = Tensor::rand_uniform(&[g.out_c, g.in_c, g.kh, g.kw], 1.0, &mut rng);
+        let x = Tensor::rand_uniform(&[g.in_c, g.in_h, g.in_w], 1.0, &mut rng);
+        let direct = conv2d_direct(&x, &w, g.stride, g.pad);
+        let out = naive_gemm(&weights_to_gemm(&w), &im2col(&x, &g))
+            .reshape(&[g.out_c, g.out_h(), g.out_w()]);
+        assert!(out.allclose(&direct, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn skip_matches_full_when_weights_zeroed() {
+        let g = geom();
+        let mut rng = Rng::new(3);
+        let mut w = Tensor::rand_uniform(&[g.out_c, g.in_c, g.kh, g.kw], 1.0, &mut rng);
+        // kill GEMM columns 5..10 in every filter
+        {
+            let f = g.out_c;
+            let k = g.gemm_k();
+            let wd = w.data_mut();
+            for r in 0..f {
+                for c in 5..10 {
+                    wd[r * k + c] = 0.0;
+                }
+            }
+        }
+        let wg = weights_to_gemm(&w);
+        let dead = dead_columns(&wg);
+        assert!(dead[5..10].iter().all(|d| *d));
+        let x = Tensor::rand_uniform(&[g.in_c, g.in_h, g.in_w], 1.0, &mut rng);
+        let full = naive_gemm(&wg, &im2col(&x, &g));
+        let skip = naive_gemm(&wg, &im2col_skip(&x, &g, &dead));
+        assert!(full.allclose(&skip, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn one_by_one_kernel() {
+        let g = ConvGeom { in_c: 4, in_h: 6, in_w: 6, out_c: 2, kh: 1, kw: 1, stride: 1, pad: 0 };
+        let mut rng = Rng::new(4);
+        let w = Tensor::rand_uniform(&[2, 4, 1, 1], 1.0, &mut rng);
+        let x = Tensor::rand_uniform(&[4, 6, 6], 1.0, &mut rng);
+        let direct = conv2d_direct(&x, &w, 1, 0);
+        let out = naive_gemm(&weights_to_gemm(&w), &im2col(&x, &g)).reshape(&[2, 6, 6]);
+        assert!(out.allclose(&direct, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn large_kernel_11x11() {
+        // §6.3 large-kernel validation path
+        let g = ConvGeom { in_c: 2, in_h: 16, in_w: 16, out_c: 2, kh: 11, kw: 11, stride: 1, pad: 5 };
+        let mut rng = Rng::new(5);
+        let w = Tensor::rand_uniform(&[2, 2, 11, 11], 0.2, &mut rng);
+        let x = Tensor::rand_uniform(&[2, 16, 16], 1.0, &mut rng);
+        let direct = conv2d_direct(&x, &w, 1, 5);
+        let out = naive_gemm(&weights_to_gemm(&w), &im2col(&x, &g)).reshape(&[2, 16, 16]);
+        assert!(out.allclose(&direct, 1e-3, 1e-3));
+    }
+}

@@ -1,0 +1,12 @@
+//! Convolution substrate: im2col lowering (with GRIM's pruned-column
+//! skipping, §4.5 "Computation Transformation"), a direct convolution
+//! reference, Winograd F(2×2, 3×3) for the optimized dense baselines, and
+//! the auxiliary layer ops (pooling, activations, normalization).
+
+pub mod im2col;
+pub mod direct;
+pub mod winograd;
+pub mod ops;
+
+pub use direct::conv2d_direct;
+pub use im2col::{im2col, im2col_skip, weights_to_gemm, ConvGeom};

@@ -1,0 +1,175 @@
+//! Elementwise and pooling layer ops shared by all execution paths.
+
+use crate::tensor::Tensor;
+
+/// ReLU in place.
+pub fn relu_(x: &mut Tensor) {
+    for v in x.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU6 in place (MobileNet-V2).
+pub fn relu6_(x: &mut Tensor) {
+    for v in x.data_mut() {
+        *v = v.clamp(0.0, 6.0);
+    }
+}
+
+/// Add a per-channel bias to `x[C, ...]` in place.
+pub fn add_bias_(x: &mut Tensor, bias: &[f32]) {
+    let dims = x.shape().dims().to_vec();
+    let c = dims[0];
+    assert_eq!(bias.len(), c, "bias length mismatch");
+    let per = x.numel() / c;
+    let d = x.data_mut();
+    for ci in 0..c {
+        for i in 0..per {
+            d[ci * per + i] += bias[ci];
+        }
+    }
+}
+
+/// 2×2 max-pool with stride 2 over `x[C,H,W]`.
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    let d = x.shape().dims();
+    let (c, h, w) = (d[0], d[1], d[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for ci in 0..c {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let mut m = f32::MIN;
+                for a in 0..2 {
+                    for b in 0..2 {
+                        m = m.max(xd[(ci * h + oi * 2 + a) * w + oj * 2 + b]);
+                    }
+                }
+                od[(ci * oh + oi) * ow + oj] = m;
+            }
+        }
+    }
+    out
+}
+
+/// Global average pooling `[C,H,W] -> [C,1,1]`.
+pub fn global_avgpool(x: &Tensor) -> Tensor {
+    let d = x.shape().dims();
+    let (c, h, w) = (d[0], d[1], d[2]);
+    let mut out = Tensor::zeros(&[c, 1, 1]);
+    let xd = x.data();
+    let od = out.data_mut();
+    let per = (h * w) as f32;
+    for ci in 0..c {
+        od[ci] = xd[ci * h * w..(ci + 1) * h * w].iter().sum::<f32>() / per;
+    }
+    out
+}
+
+/// Elementwise residual addition (shapes must match).
+pub fn add_(x: &mut Tensor, y: &Tensor) {
+    assert_eq!(x.shape(), y.shape());
+    for (a, b) in x.data_mut().iter_mut().zip(y.data()) {
+        *a += b;
+    }
+}
+
+/// Numerically stable softmax over the last axis of a `[..., n]` tensor
+/// treated as rows.
+pub fn softmax_rows(x: &Tensor, n: usize) -> Tensor {
+    assert_eq!(x.numel() % n, 0);
+    let rows = x.numel() / n;
+    let mut out = Tensor::zeros(&[rows, n]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for r in 0..rows {
+        let row = &xd[r * n..(r + 1) * n];
+        let m = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut denom = 0.0f32;
+        for (j, v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            od[r * n + j] = e;
+            denom += e;
+        }
+        for j in 0..n {
+            od[r * n + j] /= denom;
+        }
+    }
+    out
+}
+
+/// Sigmoid applied elementwise, returning a new tensor.
+pub fn sigmoid(x: &Tensor) -> Tensor {
+    let data = x.data().iter().map(|v| 1.0 / (1.0 + (-v).exp())).collect();
+    Tensor::from_vec(x.shape().dims(), data)
+}
+
+/// Tanh applied elementwise, returning a new tensor.
+pub fn tanh(x: &Tensor) -> Tensor {
+    let data = x.data().iter().map(|v| v.tanh()).collect();
+    Tensor::from_vec(x.shape().dims(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps() {
+        let mut t = Tensor::from_vec(&[4], vec![-1.0, 0.0, 2.0, -0.5]);
+        relu_(&mut t);
+        assert_eq!(t.data(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn relu6_clamps_high() {
+        let mut t = Tensor::from_vec(&[3], vec![-1.0, 3.0, 9.0]);
+        relu6_(&mut t);
+        assert_eq!(t.data(), &[0.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let mut t = Tensor::zeros(&[2, 2, 2]);
+        add_bias_(&mut t, &[1.0, 2.0]);
+        assert_eq!(t.data(), &[1., 1., 1., 1., 2., 2., 2., 2.]);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let t = Tensor::from_vec(&[1, 2, 2], vec![1., 5., 3., 2.]);
+        let p = maxpool2(&t);
+        assert_eq!(p.data(), &[5.0]);
+    }
+
+    #[test]
+    fn gap_averages() {
+        let t = Tensor::from_vec(&[2, 1, 2], vec![1., 3., 10., 20.]);
+        let p = global_avgpool(&t);
+        assert_eq!(p.data(), &[2.0, 15.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 0., 0., 0.]);
+        let s = softmax_rows(&t, 3);
+        for r in 0..2 {
+            let sum: f32 = s.data()[r * 3..(r + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        assert!((s.data()[3] - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sigmoid_tanh_ranges() {
+        let t = Tensor::from_vec(&[3], vec![-10.0, 0.0, 10.0]);
+        let s = sigmoid(&t);
+        assert!(s.data()[0] < 0.001 && (s.data()[1] - 0.5).abs() < 1e-6 && s.data()[2] > 0.999);
+        let th = tanh(&t);
+        assert!(th.data()[0] < -0.999 && th.data()[1].abs() < 1e-6 && th.data()[2] > 0.999);
+    }
+}

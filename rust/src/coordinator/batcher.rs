@@ -1,0 +1,118 @@
+//! Dynamic batching policy: wait for the first request, then gather up to
+//! `max_batch` more within `max_wait`. For CNN plans the engine executes
+//! per-sample (batch = loop), but batching still amortizes dispatch and
+//! keeps all pool workers busy; for GRU GEMV workloads batching converts
+//! matrix-vector into matrix-matrix, which is where the paper's 81 µs @
+//! batch 32 number comes from.
+
+use super::queue::{InferRequest, RequestQueue};
+use std::time::{Duration, Instant};
+
+/// Batch formation policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Pulls batches from a queue according to a policy.
+pub struct Batcher<'a> {
+    queue: &'a RequestQueue,
+    policy: BatchPolicy,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(queue: &'a RequestQueue, policy: BatchPolicy) -> Self {
+        Batcher { queue, policy }
+    }
+
+    /// Block for the next batch; None when the queue is closed and empty.
+    pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
+        let first = self.queue.pop()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let more = self.queue.drain_up_to(self.policy.max_batch - batch.len());
+            if !more.is_empty() {
+                batch.extend(more);
+                continue;
+            }
+            if Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> InferRequest {
+        InferRequest { id, input: Tensor::zeros(&[1]), enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn gathers_waiting_requests() {
+        let q = RequestQueue::new(16);
+        for i in 0..5 {
+            q.push(req(i)).unwrap();
+        }
+        let b = Batcher::new(&q, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.len(), 1);
+    }
+
+    #[test]
+    fn respects_deadline_when_queue_empty() {
+        let q = RequestQueue::new(16);
+        q.push(req(0)).unwrap();
+        let b = Batcher::new(&q, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(3) });
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t.elapsed() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn none_after_close() {
+        let q = RequestQueue::new(4);
+        q.close();
+        let b = Batcher::new(&q, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn no_request_lost_under_concurrency() {
+        let q = Arc::new(RequestQueue::new(64));
+        let total = 200u64;
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            for i in 0..total {
+                q2.push(req(i)).unwrap();
+            }
+            q2.close();
+        });
+        let b = Batcher::new(&q, BatchPolicy { max_batch: 7, max_wait: Duration::from_micros(200) });
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        producer.join().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..total).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,16 @@
+//! The L3 serving coordinator: request queue → dynamic batcher → worker
+//! pool → response collection, with latency/throughput metrics.
+//!
+//! GRIM's paper targets single-stream real-time inference (30 fps); a
+//! deployed mobile runtime still multiplexes streams (camera + audio), so
+//! the coordinator provides the full serving loop: bounded queueing with
+//! backpressure, deadline-aware batching, and per-request latency
+//! percentiles. This is the request path — all-Rust, no Python.
+
+pub mod queue;
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{Batcher, BatchPolicy};
+pub use queue::{InferRequest, InferResponse, RequestQueue};
+pub use server::{Server, ServerConfig, ServerStats};

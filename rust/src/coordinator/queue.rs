@@ -1,0 +1,180 @@
+//! Bounded MPSC request queue with backpressure.
+
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// One inference request.
+#[derive(Debug)]
+pub struct InferRequest {
+    pub id: u64,
+    pub input: Tensor,
+    pub enqueued: Instant,
+}
+
+/// One inference response.
+#[derive(Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    pub output: Tensor,
+    /// Time spent waiting in the queue (ms).
+    pub queue_ms: f64,
+    /// Time spent executing (ms).
+    pub exec_ms: f64,
+}
+
+/// A bounded FIFO with blocking push (backpressure) and blocking pop.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner {
+    q: VecDeque<InferRequest>,
+    closed: bool,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        RequestQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking push; returns Err if the queue is closed.
+    pub fn push(&self, req: InferRequest) -> Result<(), InferRequest> {
+        let mut g = self.inner.lock().unwrap();
+        while g.q.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(req);
+        }
+        g.q.push_back(req);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking push; Err(req) when full or closed.
+    pub fn try_push(&self, req: InferRequest) -> Result<(), InferRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.q.len() >= self.capacity {
+            return Err(req);
+        }
+        g.q.push_back(req);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop one request, blocking until available or closed+drained.
+    pub fn pop(&self) -> Option<InferRequest> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Drain up to `max` requests without blocking (used by the batcher
+    /// after it got the first request).
+    pub fn drain_up_to(&self, max: usize) -> Vec<InferRequest> {
+        let mut g = self.inner.lock().unwrap();
+        let take = g.q.len().min(max);
+        let out: Vec<_> = g.q.drain(..take).collect();
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: pushes fail, pops drain the remainder then return None.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> InferRequest {
+        InferRequest { id, input: Tensor::zeros(&[1]), enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(8);
+        for i in 0..5 {
+            q.push(req(i)).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop().unwrap().id, i);
+        }
+    }
+
+    #[test]
+    fn try_push_full() {
+        let q = RequestQueue::new(2);
+        q.try_push(req(0)).unwrap();
+        q.try_push(req(1)).unwrap();
+        assert!(q.try_push(req(2)).is_err());
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = RequestQueue::new(4);
+        q.push(req(1)).unwrap();
+        q.close();
+        assert!(q.push(req(2)).is_err());
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn backpressure_unblocks() {
+        let q = Arc::new(RequestQueue::new(1));
+        q.push(req(0)).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(req(1)).is_ok());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.pop().unwrap().id, 0); // frees a slot
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn drain_up_to_respects_max() {
+        let q = RequestQueue::new(8);
+        for i in 0..6 {
+            q.push(req(i)).unwrap();
+        }
+        let batch = q.drain_up_to(4);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(q.len(), 2);
+    }
+}

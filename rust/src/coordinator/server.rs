@@ -1,0 +1,224 @@
+//! The serving loop: a scheduler thread pulls batches and executes them on
+//! the engine; clients submit via a handle and receive responses over
+//! per-request channels.
+
+use super::batcher::{Batcher, BatchPolicy};
+use super::queue::{InferRequest, InferResponse, RequestQueue};
+use crate::engine::Engine;
+use crate::tensor::Tensor;
+use crate::util::stats::{summarize, Summary};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub queue_capacity: usize,
+    pub batch: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { queue_capacity: 256, batch: BatchPolicy::default() }
+    }
+}
+
+/// Aggregated serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    pub completed: u64,
+    pub batches: u64,
+    pub latency_ms: Summary,
+    pub queue_ms: Summary,
+    pub exec_ms: Summary,
+    pub throughput_rps: f64,
+}
+
+/// A running inference server over one compiled model.
+pub struct Server {
+    queue: Arc<RequestQueue>,
+    next_id: AtomicU64,
+    pending: Arc<Mutex<HashMap<u64, Sender<InferResponse>>>>,
+    scheduler: Option<std::thread::JoinHandle<()>>,
+    samples: Arc<Mutex<Vec<(f64, f64)>>>, // (queue_ms, exec_ms)
+    started: Instant,
+    completed: Arc<AtomicU64>,
+    batches: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Start the scheduler thread over `engine`.
+    pub fn start(engine: Engine, config: ServerConfig) -> Self {
+        let queue = Arc::new(RequestQueue::new(config.queue_capacity));
+        let pending: Arc<Mutex<HashMap<u64, Sender<InferResponse>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let samples = Arc::new(Mutex::new(Vec::new()));
+        let completed = Arc::new(AtomicU64::new(0));
+        let batches = Arc::new(AtomicU64::new(0));
+
+        let q2 = Arc::clone(&queue);
+        let p2 = Arc::clone(&pending);
+        let s2 = Arc::clone(&samples);
+        let c2 = Arc::clone(&completed);
+        let b2 = Arc::clone(&batches);
+        let policy = config.batch;
+        let scheduler = std::thread::Builder::new()
+            .name("grim-scheduler".into())
+            .spawn(move || {
+                let batcher = Batcher::new(&q2, policy);
+                while let Some(batch) = batcher.next_batch() {
+                    b2.fetch_add(1, Ordering::Relaxed);
+                    for req in batch {
+                        let qms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                        let t = Instant::now();
+                        let out = engine
+                            .run(&req.input)
+                            .unwrap_or_else(|_| Tensor::zeros(&[1]));
+                        let ems = t.elapsed().as_secs_f64() * 1e3;
+                        s2.lock().unwrap().push((qms, ems));
+                        c2.fetch_add(1, Ordering::Relaxed);
+                        let tx = p2.lock().unwrap().remove(&req.id);
+                        if let Some(tx) = tx {
+                            let _ = tx.send(InferResponse {
+                                id: req.id,
+                                output: out,
+                                queue_ms: qms,
+                                exec_ms: ems,
+                            });
+                        }
+                    }
+                }
+            })
+            .expect("spawn scheduler");
+
+        Server {
+            queue,
+            next_id: AtomicU64::new(1),
+            pending,
+            scheduler: Some(scheduler),
+            samples,
+            started: Instant::now(),
+            completed,
+            batches,
+        }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    /// Blocks (backpressure) when the queue is full.
+    pub fn submit(&self, input: Tensor) -> anyhow::Result<std::sync::mpsc::Receiver<InferResponse>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.pending.lock().unwrap().insert(id, tx);
+        self.queue
+            .push(InferRequest { id, input, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server closed"))?;
+        Ok(rx)
+    }
+
+    /// Submit and wait for the response (convenience).
+    pub fn infer(&self, input: Tensor) -> anyhow::Result<InferResponse> {
+        let rx = self.submit(input)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+
+    /// Current stats snapshot.
+    pub fn stats(&self) -> ServerStats {
+        let samples = self.samples.lock().unwrap();
+        let queue_ms: Vec<f64> = samples.iter().map(|(q, _)| *q).collect();
+        let exec_ms: Vec<f64> = samples.iter().map(|(_, e)| *e).collect();
+        let total: Vec<f64> = samples.iter().map(|(q, e)| q + e).collect();
+        let completed = self.completed.load(Ordering::Relaxed);
+        let elapsed = self.started.elapsed().as_secs_f64();
+        ServerStats {
+            completed,
+            batches: self.batches.load(Ordering::Relaxed),
+            latency_ms: summarize(&total),
+            queue_ms: summarize(&queue_ms),
+            exec_ms: summarize(&exec_ms),
+            throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+        }
+    }
+
+    /// Stop accepting requests, drain, and join the scheduler.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.queue.close();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::{compile, CompileOptions};
+    use crate::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+    use crate::util::Rng;
+
+    fn small_server() -> Server {
+        let opts = InitOptions { rate: 4.0, block: [4, 16], seed: 3 };
+        let m = build_model(ModelKind::Gru, Preset::TimitMini, opts);
+        let w = random_weights(&m, opts);
+        let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        Server::start(Engine::new(plan, 2), ServerConfig::default())
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let server = small_server();
+        let mut rng = Rng::new(1);
+        let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+        let resp = server.infer(x).unwrap();
+        assert_eq!(resp.output.numel(), 40);
+        assert!(resp.exec_ms > 0.0);
+    }
+
+    #[test]
+    fn serves_concurrent_requests_no_loss() {
+        let server = Arc::new(small_server());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for _ in 0..10 {
+                    let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+                    let resp = s.infer(x).unwrap();
+                    assert_eq!(resp.output.numel(), 40);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = server.stats();
+        assert_eq!(stats.completed, 40);
+        assert!(stats.throughput_rps > 0.0);
+        assert!(stats.latency_ms.p99 >= stats.latency_ms.p50);
+    }
+
+    #[test]
+    fn shutdown_returns_stats() {
+        let server = small_server();
+        let mut rng = Rng::new(9);
+        for _ in 0..3 {
+            let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+            server.infer(x).unwrap();
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 3);
+    }
+}

@@ -1,0 +1,450 @@
+//! Plan interpreter. Each [`Step`] dispatches to the kernel its
+//! [`KernelImpl`] selected at compile time; GEMMs above a size threshold
+//! run on the worker pool (the "8 threads on CPU" of §6.1).
+
+use crate::compiler::plan::{Activation, ExecutionPlan, GruLayerPlan, KernelImpl, Step};
+use crate::conv::direct::depthwise_conv2d_parallel;
+use crate::conv::im2col::{im2col, im2col_skip, ConvGeom};
+use crate::conv::ops;
+use crate::conv::winograd::conv2d_winograd;
+use crate::gemm::csr_gemm::{csr_gemm, csr_gemm_parallel};
+use crate::gemm::naive::naive_gemm_dense;
+use crate::gemm::tiled::{tiled_gemm, tiled_gemm_parallel};
+use crate::tensor::Tensor;
+use crate::util::{ThreadPool, Timer};
+
+use super::metrics::{LayerMetric, RunMetrics};
+
+/// Minimum GEMM output elements before the parallel path is used; below
+/// this the dispatch overhead dominates.
+const PARALLEL_THRESHOLD: usize = 16 * 1024;
+
+/// The inference engine: a plan bound to a worker pool.
+pub struct Engine {
+    plan: ExecutionPlan,
+    pool: ThreadPool,
+    /// Collect per-layer metrics (small overhead; off on the serving path).
+    pub collect_metrics: bool,
+}
+
+impl Engine {
+    pub fn new(plan: ExecutionPlan, threads: usize) -> Self {
+        Engine { plan, pool: ThreadPool::new(threads.max(1)), collect_metrics: false }
+    }
+
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Run one inference; returns the output tensor.
+    pub fn run(&self, input: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(self.run_with_metrics(input)?.0)
+    }
+
+    /// Run one inference, returning output + per-layer metrics.
+    pub fn run_with_metrics(&self, input: &Tensor) -> anyhow::Result<(Tensor, RunMetrics)> {
+        let n = self.plan.steps.len();
+        let mut values: Vec<Option<Tensor>> = vec![None; n];
+        let mut metrics = RunMetrics::default();
+        for (id, step) in &self.plan.steps {
+            let t = Timer::start();
+            let kind = self.exec_step(*id, step, input, &mut values)?;
+            if self.collect_metrics {
+                metrics.layers.push(LayerMetric { node: *id, kind, micros: t.elapsed_us() });
+            }
+        }
+        let out = values[self.plan.output_id]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("output not produced"))?;
+        Ok((out, metrics))
+    }
+
+    fn value<'a>(
+        &self,
+        values: &'a [Option<Tensor>],
+        id: usize,
+        slot: usize,
+    ) -> anyhow::Result<&'a Tensor> {
+        let src = self.plan.inputs[id]
+            .get(slot)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("node {id}: missing input {slot}"))?;
+        values[src].as_ref().ok_or_else(|| anyhow::anyhow!("node {id}: input {src} not computed"))
+    }
+
+    fn exec_step(
+        &self,
+        id: usize,
+        step: &Step,
+        input: &Tensor,
+        values: &mut Vec<Option<Tensor>>,
+    ) -> anyhow::Result<&'static str> {
+        let kind: &'static str;
+        let out = match step {
+            Step::Input => {
+                kind = "input";
+                Some(input.clone())
+            }
+            Step::Conv { geom, kernel, dead_cols, bias, act } => {
+                kind = "conv";
+                let x = self.value(values, id, 0)?;
+                let out = self.exec_conv(geom, kernel, dead_cols.as_deref(), x)?;
+                let mut out = out.reshape(&[geom.out_c, geom.out_h(), geom.out_w()]);
+                ops::add_bias_(&mut out, bias);
+                apply_act(&mut out, *act);
+                Some(out)
+            }
+            Step::DwConv { kh: _, kw: _, stride, pad, w, bias, act } => {
+                kind = "dwconv";
+                let x = self.value(values, id, 0)?;
+                let mut out = depthwise_conv2d_parallel(x, w, *stride, *pad, &self.pool);
+                ops::add_bias_(&mut out, bias);
+                apply_act(&mut out, *act);
+                Some(out)
+            }
+            Step::Fc { kernel, bias, act } => {
+                kind = "fc";
+                let x = self.value(values, id, 0)?;
+                let xin = x.clone().reshape(&[x.numel(), 1]);
+                let mut out = self.exec_gemm(kernel, &xin)?;
+                let rows = out.shape().dim(0);
+                out = out.reshape(&[rows]);
+                for (o, b) in out.data_mut().iter_mut().zip(bias.iter()) {
+                    *o += b;
+                }
+                apply_act(&mut out, *act);
+                Some(out)
+            }
+            Step::Gru { layers } => {
+                kind = "gru";
+                let x = self.value(values, id, 0)?;
+                Some(self.exec_gru(layers, x)?)
+            }
+            Step::MaxPool2 => {
+                kind = "maxpool";
+                Some(ops::maxpool2(self.value(values, id, 0)?))
+            }
+            Step::GlobalAvgPool => {
+                kind = "gap";
+                Some(ops::global_avgpool(self.value(values, id, 0)?))
+            }
+            Step::Relu => {
+                kind = "relu";
+                let mut v = self.value(values, id, 0)?.clone();
+                ops::relu_(&mut v);
+                Some(v)
+            }
+            Step::Relu6 => {
+                kind = "relu6";
+                let mut v = self.value(values, id, 0)?.clone();
+                ops::relu6_(&mut v);
+                Some(v)
+            }
+            Step::Add => {
+                kind = "add";
+                let mut a = self.value(values, id, 0)?.clone();
+                let b = self.value(values, id, 1)?;
+                ops::add_(&mut a, b);
+                Some(a)
+            }
+            Step::Flatten => {
+                kind = "flatten";
+                let v = self.value(values, id, 0)?.clone();
+                let n = v.numel();
+                Some(v.reshape(&[n]))
+            }
+            Step::Softmax => {
+                kind = "softmax";
+                let v = self.value(values, id, 0)?;
+                let n = v.numel();
+                Some(ops::softmax_rows(&v.clone().reshape(&[1, n]), n).reshape(&[n]))
+            }
+            Step::Noop => {
+                // fused away; consumers were redirected at compile time
+                kind = "noop";
+                None
+            }
+        };
+        values[id] = out;
+        Ok(kind)
+    }
+
+    fn exec_conv(
+        &self,
+        geom: &ConvGeom,
+        kernel: &KernelImpl,
+        dead: Option<&Vec<bool>>,
+        x: &Tensor,
+    ) -> anyhow::Result<Tensor> {
+        // Winograd bypasses im2col entirely.
+        if let KernelImpl::Winograd { w4 } = kernel {
+            return Ok(conv2d_winograd(x, w4, geom.pad));
+        }
+        // 1x1 stride-1 convs: im2col is the identity — feed x directly
+        // ([C,H,W] viewed as [C, H*W]); MobileNet is mostly this case.
+        if geom.kh == 1 && geom.kw == 1 && geom.stride == 1 && geom.pad == 0 {
+            let cols = x.clone().reshape(&[geom.in_c, geom.in_h * geom.in_w]);
+            return self.exec_gemm(kernel, &cols);
+        }
+        let cols = match dead {
+            Some(d) => im2col_skip(x, geom, d),
+            None => im2col(x, geom),
+        };
+        self.exec_gemm(kernel, &cols)
+    }
+
+    fn exec_gemm(&self, kernel: &KernelImpl, x: &Tensor) -> anyhow::Result<Tensor> {
+        let (_, n) = x.shape().as_matrix();
+        Ok(match kernel {
+            KernelImpl::NaiveDense { w } => naive_gemm_dense(w, x), // honest dense: no zero skip
+            KernelImpl::Dense { w, params } => {
+                let (m, _) = w.shape().as_matrix();
+                if m * n >= PARALLEL_THRESHOLD {
+                    tiled_gemm_parallel(w, x, *params, &self.pool)
+                } else {
+                    tiled_gemm(w, x, *params)
+                }
+            }
+            KernelImpl::Winograd { .. } => anyhow::bail!("winograd outside conv"),
+            KernelImpl::Csr { mat } => {
+                if mat.rows * n >= PARALLEL_THRESHOLD {
+                    csr_gemm_parallel(mat, x, &self.pool)
+                } else {
+                    csr_gemm(mat, x)
+                }
+            }
+            KernelImpl::Bcrc { gemm } => {
+                if gemm.enc.rows * n >= PARALLEL_THRESHOLD {
+                    gemm.execute_parallel(x, &self.pool)
+                } else {
+                    gemm.execute(x)
+                }
+            }
+        })
+    }
+
+    /// Stacked GRU over a `[T, in_f]` sequence; returns `[T, hidden]` of
+    /// the last layer.
+    fn exec_gru(&self, layers: &[GruLayerPlan], x: &Tensor) -> anyhow::Result<Tensor> {
+        let (t_len, mut in_f) = x.shape().as_matrix();
+        let mut seq = x.clone();
+        for layer in layers {
+            anyhow::ensure!(in_f == layer.in_f, "gru input width mismatch");
+            let h = layer.hidden;
+            let mut hidden = vec![0.0f32; h];
+            let mut out_seq = Tensor::zeros(&[t_len, h]);
+            let mut cat = vec![0.0f32; in_f + h];
+            for t in 0..t_len {
+                let xt = &seq.data()[t * in_f..(t + 1) * in_f];
+                cat[..in_f].copy_from_slice(xt);
+                cat[in_f..].copy_from_slice(&hidden);
+                let cat_t = Tensor::from_vec(&[in_f + h, 1], cat.clone());
+                let z = self.gate(&layer.wz, &cat_t, &layer.bz, true)?;
+                let r = self.gate(&layer.wr, &cat_t, &layer.br, true)?;
+                // candidate uses [x, r ⊙ h]
+                let mut cat2 = cat.clone();
+                for i in 0..h {
+                    cat2[in_f + i] = r[i] * hidden[i];
+                }
+                let cat2_t = Tensor::from_vec(&[in_f + h, 1], cat2);
+                let hc = self.gate(&layer.wh, &cat2_t, &layer.bh, false)?;
+                for i in 0..h {
+                    hidden[i] = (1.0 - z[i]) * hidden[i] + z[i] * hc[i];
+                }
+                out_seq.data_mut()[t * h..(t + 1) * h].copy_from_slice(&hidden);
+            }
+            seq = out_seq;
+            in_f = h;
+        }
+        Ok(seq)
+    }
+
+    fn gate(
+        &self,
+        kernel: &KernelImpl,
+        x: &Tensor,
+        bias: &[f32],
+        sigmoid: bool,
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut v = self.exec_gemm(kernel, x)?.into_vec();
+        for (o, b) in v.iter_mut().zip(bias) {
+            *o += b;
+            *o = if sigmoid { 1.0 / (1.0 + (-*o).exp()) } else { o.tanh() };
+        }
+        Ok(v)
+    }
+}
+
+fn apply_act(x: &mut Tensor, act: Activation) {
+    match act {
+        Activation::None => {}
+        Activation::Relu => ops::relu_(x),
+        Activation::Relu6 => ops::relu6_(x),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::{compile, Backend, CompileOptions};
+    use crate::compiler::weights::{gru_key, LayerWeights, WeightStore};
+    use crate::graph::dsl;
+    use crate::sparse::{BcrConfig, BcrMask};
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    fn cnn_module() -> dsl::Module {
+        dsl::parse(
+            r#"
+model "tiny"
+in = Input(shape=[3,8,8])
+c1 = Conv2D(in, out_c=8, kh=3, kw=3, stride=1, pad=1)
+r1 = ReLU(c1)
+p1 = MaxPool2(r1)
+f = Flatten(p1)
+fc1 = FC(f, out_f=10)
+out = Softmax(fc1)
+@ir c1 { block_size=[2,9]; rate=3.0 }
+@ir fc1 { block_size=[2,16]; rate=2.0 }
+"#,
+        )
+        .unwrap()
+    }
+
+    fn cnn_weights(seed: u64) -> WeightStore {
+        let mut rng = Rng::new(seed);
+        let mut s = HashMap::new();
+        let m1 = BcrMask::random(8, 27, BcrConfig::from_block_size(8, 27, 2, 9), 3.0, &mut rng);
+        let mut w1 = Tensor::rand_uniform(&[8, 27], 0.5, &mut rng);
+        m1.apply(&mut w1);
+        s.insert("c1".into(), LayerWeights::dense(w1).with_mask(m1).with_bias(vec![0.1; 8]));
+        let m2 = BcrMask::random(10, 128, BcrConfig::from_block_size(10, 128, 2, 16), 2.0, &mut rng);
+        let mut w2 = Tensor::rand_uniform(&[10, 128], 0.5, &mut rng);
+        m2.apply(&mut w2);
+        s.insert("fc1".into(), LayerWeights::dense(w2).with_mask(m2));
+        s
+    }
+
+    /// All four backends must produce identical outputs on the same
+    /// (masked) weights — the cross-backend correctness property that
+    /// anchors every speedup claim in the benches.
+    #[test]
+    fn backends_agree() {
+        let m = cnn_module();
+        let w = cnn_weights(1);
+        let mut rng = Rng::new(42);
+        let x = Tensor::rand_uniform(&[3, 8, 8], 1.0, &mut rng);
+        let mut outputs = Vec::new();
+        for b in [Backend::Grim, Backend::NaiveDense, Backend::OptDense, Backend::CsrSparse] {
+            let plan = compile(&m, &w, CompileOptions::for_backend(b)).unwrap();
+            let engine = Engine::new(plan, 2);
+            outputs.push((b, engine.run(&x).unwrap()));
+        }
+        let (b0, ref0) = &outputs[0];
+        for (b, o) in &outputs[1..] {
+            assert!(
+                o.allclose(ref0, 1e-3, 1e-3),
+                "{b:?} disagrees with {b0:?}: maxdiff={}",
+                o.max_abs_diff(ref0)
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_output_sums_to_one() {
+        let m = cnn_module();
+        let w = cnn_weights(2);
+        let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        let engine = Engine::new(plan, 1);
+        let mut rng = Rng::new(7);
+        let x = Tensor::rand_uniform(&[3, 8, 8], 1.0, &mut rng);
+        let out = engine.run(&x).unwrap();
+        assert_eq!(out.numel(), 10);
+        let sum: f32 = out.data().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn metrics_collected() {
+        let m = cnn_module();
+        let w = cnn_weights(3);
+        let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        let mut engine = Engine::new(plan, 1);
+        engine.collect_metrics = true;
+        let mut rng = Rng::new(8);
+        let x = Tensor::rand_uniform(&[3, 8, 8], 1.0, &mut rng);
+        let (_, metrics) = engine.run_with_metrics(&x).unwrap();
+        assert_eq!(metrics.layers.len(), 7);
+        assert!(metrics.total_micros() > 0.0);
+    }
+
+    fn gru_module() -> dsl::Module {
+        dsl::parse(
+            r#"
+model "gru"
+x = Input(shape=[5,12])
+g = GRU(x, hidden=16, layers=2)
+@ir g { block_size=[4,4]; rate=2.0 }
+"#,
+        )
+        .unwrap()
+    }
+
+    fn gru_weights(seed: u64, sparse: bool) -> WeightStore {
+        let mut rng = Rng::new(seed);
+        let mut s = HashMap::new();
+        let mut in_f = 12usize;
+        for l in 0..2 {
+            for gate in ['z', 'r', 'h'] {
+                let cols = in_f + 16;
+                let mut w = Tensor::rand_uniform(&[16, cols], 0.4, &mut rng);
+                let lw = if sparse {
+                    let mask =
+                        BcrMask::random(16, cols, BcrConfig::from_block_size(16, cols, 4, 4), 2.0, &mut rng);
+                    mask.apply(&mut w);
+                    LayerWeights::dense(w).with_mask(mask)
+                } else {
+                    LayerWeights::dense(w)
+                };
+                s.insert(gru_key("g", l, gate), lw);
+            }
+            in_f = 16;
+        }
+        s
+    }
+
+    #[test]
+    fn gru_backends_agree() {
+        let m = gru_module();
+        let w = gru_weights(5, true);
+        let mut rng = Rng::new(9);
+        let x = Tensor::rand_uniform(&[5, 12], 1.0, &mut rng);
+        let grim = Engine::new(compile(&m, &w, CompileOptions::default()).unwrap(), 1);
+        let dense = Engine::new(
+            compile(&m, &w, CompileOptions::for_backend(Backend::NaiveDense)).unwrap(),
+            1,
+        );
+        let a = grim.run(&x).unwrap();
+        let b = dense.run(&x).unwrap();
+        assert_eq!(a.shape().dims(), &[5, 16]);
+        assert!(a.allclose(&b, 1e-4, 1e-4), "maxdiff={}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn gru_hidden_bounded() {
+        // dense weights -> module without a BCRC IR pragma
+        let m = dsl::parse("model \"gru\"\nx = Input(shape=[5,12])\ng = GRU(x, hidden=16, layers=2)")
+            .unwrap();
+        let w = gru_weights(6, false);
+        let engine = Engine::new(compile(&m, &w, CompileOptions::default()).unwrap(), 1);
+        let mut rng = Rng::new(10);
+        let x = Tensor::rand_uniform(&[5, 12], 2.0, &mut rng);
+        let out = engine.run(&x).unwrap();
+        // GRU hidden state is a convex combination of tanh outputs => |h| <= 1
+        assert!(out.data().iter().all(|v| v.abs() <= 1.0 + 1e-5));
+    }
+}

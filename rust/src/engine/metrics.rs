@@ -1,0 +1,49 @@
+//! Per-layer and per-run execution metrics (feeds Figures 13–15 and the
+//! coordinator's latency reporting).
+
+/// Timing + instrumentation for one executed step.
+#[derive(Clone, Debug)]
+pub struct LayerMetric {
+    pub node: usize,
+    pub kind: &'static str,
+    pub micros: f64,
+}
+
+/// Metrics for one full inference.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub layers: Vec<LayerMetric>,
+}
+
+impl RunMetrics {
+    pub fn total_micros(&self) -> f64 {
+        self.layers.iter().map(|l| l.micros).sum()
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.total_micros() / 1e3
+    }
+
+    /// Time attributed to one node id.
+    pub fn node_micros(&self, node: usize) -> f64 {
+        self.layers.iter().filter(|l| l.node == node).map(|l| l.micros).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let m = RunMetrics {
+            layers: vec![
+                LayerMetric { node: 0, kind: "conv", micros: 100.0 },
+                LayerMetric { node: 1, kind: "fc", micros: 50.0 },
+            ],
+        };
+        assert_eq!(m.total_micros(), 150.0);
+        assert_eq!(m.node_micros(1), 50.0);
+        assert!((m.total_ms() - 0.15).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,8 @@
+//! The inference engine: interprets an [`crate::compiler::ExecutionPlan`]
+//! over a worker pool with per-layer metrics.
+
+pub mod executor;
+pub mod metrics;
+
+pub use executor::Engine;
+pub use metrics::{LayerMetric, RunMetrics};

@@ -1,0 +1,226 @@
+//! The `.grim` model container: DSL text + per-layer weights, biases, and
+//! BCR masks in one little-endian binary file. Written by rust
+//! ([`save_grim`]) and by the python trainer (`python/compile/export.py`,
+//! same layout); read by [`load_grim`] on the serving side.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic   b"GRIM"        4 bytes
+//! version u32            currently 1
+//! dsl_len u32, dsl       utf-8 DSL text (graph + @ir pragmas)
+//! n_layers u32
+//! per layer:
+//!   name_len u32, name   utf-8 (graph layer name or gru gate key)
+//!   rows u32, cols u32
+//!   bias f32 × rows
+//!   has_mask u8
+//!   if has_mask:
+//!     grid_r u32, grid_c u32
+//!     per block (row-major): npr u32, pruned_rows u32×npr,
+//!                            npc u32, pruned_cols u32×npc
+//!   weights f32 × rows*cols   (dense layout; zeros at pruned positions)
+//! ```
+
+use crate::compiler::weights::{LayerWeights, WeightStore};
+use crate::graph::dsl::{self, Module};
+use crate::sparse::{BcrConfig, BcrMask};
+use crate::tensor::Tensor;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"GRIM";
+const VERSION: u32 = 1;
+
+/// Save a module + weights as a `.grim` file.
+pub fn save_grim(path: &Path, module: &Module, weights: &WeightStore) -> anyhow::Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, VERSION);
+    let dsl_text = dsl::print(module);
+    put_bytes(&mut buf, dsl_text.as_bytes());
+    // Deterministic layer order.
+    let mut names: Vec<&String> = weights.keys().collect();
+    names.sort();
+    put_u32(&mut buf, names.len() as u32);
+    for name in names {
+        let lw = &weights[name];
+        put_bytes(&mut buf, name.as_bytes());
+        let (rows, cols) = lw.w.shape().as_matrix();
+        put_u32(&mut buf, rows as u32);
+        put_u32(&mut buf, cols as u32);
+        anyhow::ensure!(lw.bias.len() == rows, "bias length mismatch in '{name}'");
+        for b in &lw.bias {
+            buf.extend_from_slice(&b.to_le_bytes());
+        }
+        match &lw.mask {
+            Some(mask) => {
+                buf.push(1);
+                put_u32(&mut buf, mask.cfg.grid_r as u32);
+                put_u32(&mut buf, mask.cfg.grid_c as u32);
+                for bi in 0..mask.cfg.grid_r {
+                    for bj in 0..mask.cfg.grid_c {
+                        let pr = mask.pruned_rows_of(bi, bj);
+                        put_u32(&mut buf, pr.len() as u32);
+                        for r in pr {
+                            put_u32(&mut buf, *r);
+                        }
+                        let pc = mask.pruned_cols_of(bi, bj);
+                        put_u32(&mut buf, pc.len() as u32);
+                        for c in pc {
+                            put_u32(&mut buf, *c);
+                        }
+                    }
+                }
+            }
+            None => buf.push(0),
+        }
+        for v in lw.w.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load a `.grim` file.
+pub fn load_grim(path: &Path) -> anyhow::Result<(Module, WeightStore)> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut data)?;
+    let mut r = Reader { data: &data, pos: 0 };
+    let magic = r.take(4)?;
+    anyhow::ensure!(magic == MAGIC, "not a .grim file (bad magic)");
+    let version = r.u32()?;
+    anyhow::ensure!(version == VERSION, "unsupported .grim version {version}");
+    let dsl_text = String::from_utf8(r.bytes()?.to_vec())?;
+    let module = dsl::parse(&dsl_text)?;
+    let n = r.u32()? as usize;
+    let mut store = WeightStore::new();
+    for _ in 0..n {
+        let name = String::from_utf8(r.bytes()?.to_vec())?;
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        let mut bias = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            bias.push(r.f32()?);
+        }
+        let has_mask = r.take(1)?[0] == 1;
+        let mask = if has_mask {
+            let grid_r = r.u32()? as usize;
+            let grid_c = r.u32()? as usize;
+            let mut mask = BcrMask::dense(rows, cols, BcrConfig::new(grid_r, grid_c));
+            for bi in 0..grid_r {
+                for bj in 0..grid_c {
+                    let npr = r.u32()? as usize;
+                    let pr: Vec<u32> = (0..npr).map(|_| r.u32()).collect::<anyhow::Result<_>>()?;
+                    let npc = r.u32()? as usize;
+                    let pc: Vec<u32> = (0..npc).map(|_| r.u32()).collect::<anyhow::Result<_>>()?;
+                    mask.prune_rows(bi, bj, &pr);
+                    mask.prune_cols(bi, bj, &pc);
+                }
+            }
+            Some(mask)
+        } else {
+            None
+        };
+        let mut wdata = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            wdata.push(r.f32()?);
+        }
+        let mut lw = LayerWeights::dense(Tensor::from_vec(&[rows, cols], wdata)).with_bias(bias);
+        if let Some(m) = mask {
+            lw = lw.with_mask(m);
+        }
+        lw.check_mask_consistency()
+            .map_err(|e| anyhow::anyhow!("layer '{name}' in {path:?}: {e}"))?;
+        store.insert(name, lw);
+    }
+    anyhow::ensure!(r.pos == data.len(), "trailing bytes in {path:?}");
+    Ok((module, store))
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(buf: &mut Vec<u8>, bytes: &[u8]) {
+    put_u32(buf, bytes.len() as u32);
+    buf.extend_from_slice(bytes);
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.data.len(), "truncated .grim file");
+        let out = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn bytes(&mut self) -> anyhow::Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+
+    #[test]
+    fn round_trip_model() {
+        let opts = InitOptions { rate: 4.0, block: [4, 16], seed: 21 };
+        let module = build_model(ModelKind::Gru, Preset::TimitMini, opts);
+        let weights = random_weights(&module, opts);
+        let tmp = std::env::temp_dir().join("grim_test_roundtrip.grim");
+        save_grim(&tmp, &module, &weights).unwrap();
+        let (m2, w2) = load_grim(&tmp).unwrap();
+        assert_eq!(m2.name, module.name);
+        assert_eq!(m2.graph.len(), module.graph.len());
+        assert_eq!(w2.len(), weights.len());
+        for (name, lw) in &weights {
+            let lw2 = &w2[name];
+            assert_eq!(lw.w, lw2.w, "weights differ in {name}");
+            assert_eq!(lw.bias, lw2.bias);
+            assert_eq!(lw.mask, lw2.mask);
+        }
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let tmp = std::env::temp_dir().join("grim_test_badmagic.grim");
+        std::fs::write(&tmp, b"NOPE....").unwrap();
+        assert!(load_grim(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let opts = InitOptions { rate: 2.0, block: [4, 16], seed: 22 };
+        let module = build_model(ModelKind::Gru, Preset::TimitMini, opts);
+        let weights = random_weights(&module, opts);
+        let tmp = std::env::temp_dir().join("grim_test_trunc.grim");
+        save_grim(&tmp, &module, &weights).unwrap();
+        let data = std::fs::read(&tmp).unwrap();
+        std::fs::write(&tmp, &data[..data.len() / 2]).unwrap();
+        assert!(load_grim(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+}

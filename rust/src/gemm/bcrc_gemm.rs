@@ -1,0 +1,320 @@
+//! The GRIM sparse GEMM: group-parallel execution over BCRC with
+//! register-level load-redundancy elimination (paper §4.2–4.4).
+//!
+//! Execution structure (matching Figure 7):
+//!
+//! * the matrix is processed **group by group** — all rows of a group share
+//!   one column signature, so every thread does identical work per row
+//!   (no divergence);
+//! * within a group, rows are processed in **unroll bundles** of `U` rows:
+//!   each shared input row `X[c, :]` is loaded once and reused by all `U`
+//!   output rows — this is the LRE the paper implements by loop unrolling
+//!   at compile time (Figure 9);
+//! * the N dimension is tiled (`n_tile`) for cache residency — the "matrix
+//!   tiling" of §4.4, with the best size chosen by the auto-tuner.
+//!
+//! The `(unroll, n_tile, lre)` triple comes from the layer's
+//! [`crate::compiler::plan::ExecutionPlan`]; `lre=false` gives the
+//! "+Reorder only" ablation of Figure 13.
+
+use super::microkernel::{axpy_1, axpy_u, dot};
+use crate::sparse::Bcrc;
+use crate::tensor::Tensor;
+use crate::util::sharedbuf::{SharedOut, SharedSlice};
+use crate::util::ThreadPool;
+use std::sync::Arc;
+
+/// Tunable execution parameters for one BCRC GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmParams {
+    /// Row-unroll factor (register block height). 1 disables LRE benefit.
+    pub unroll: usize,
+    /// N-dimension tile width (floats).
+    pub n_tile: usize,
+    /// Enable register-level load redundancy elimination. When false, rows
+    /// are processed one at a time (each input row re-loaded per row).
+    pub lre: bool,
+}
+
+impl Default for GemmParams {
+    fn default() -> Self {
+        GemmParams { unroll: 4, n_tile: 64, lre: true }
+    }
+}
+
+/// A BCRC matrix bound to execution parameters.
+#[derive(Clone, Debug)]
+pub struct BcrcGemm {
+    pub enc: Arc<Bcrc>,
+    pub params: GemmParams,
+}
+
+impl BcrcGemm {
+    pub fn new(enc: Bcrc, params: GemmParams) -> Self {
+        BcrcGemm { enc: Arc::new(enc), params }
+    }
+
+    /// `out[M,N] = W · X[K,N]`, single-threaded.
+    pub fn execute(&self, x: &Tensor) -> Tensor {
+        let (k, n) = x.shape().as_matrix();
+        assert_eq!(k, self.enc.cols, "inner dimension mismatch");
+        let mut out = Tensor::zeros(&[self.enc.rows, n]);
+        let oview = SharedOut::new(out.data_mut());
+        if n == 1 {
+            // SAFETY: single-threaded use of the full range.
+            self.exec_gemv(x.data(), unsafe { oview.range_mut(0, oview.len()) }, 0, self.enc.rows);
+        } else {
+            self.exec_rows(x.data(), oview, n, 0, self.enc.rows);
+        }
+        out
+    }
+
+    /// Multi-threaded execution: reordered rows are partitioned across the
+    /// pool. Because reorder groups equal-signature rows contiguously, the
+    /// static partition is load-balanced (§4.2). Zero-copy: workers write
+    /// their (disjoint, via the reorder bijection) output rows in place.
+    pub fn execute_parallel(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
+        let (k, n) = x.shape().as_matrix();
+        assert_eq!(k, self.enc.cols);
+        let rows = self.enc.rows;
+        let mut out = Tensor::zeros(&[rows, n]);
+        let oview = SharedOut::new(out.data_mut());
+        let this = self.clone();
+        let xv = SharedSlice::new(x.data());
+        pool.run_partitioned(rows, move |_wid, lo, hi| {
+            // SAFETY: buffers outlive the blocking pool call; each worker
+            // owns a disjoint reordered-row range, and reorder is a
+            // bijection, so written original rows never collide.
+            let xd = unsafe { xv.get() };
+            if n == 1 {
+                let od = unsafe { oview.range_mut(0, oview.len()) };
+                this.exec_gemv(xd, od, lo, hi);
+            } else {
+                this.exec_rows(xd, oview, n, lo, hi);
+            }
+        });
+        out
+    }
+
+    /// Compute reordered rows `lo..hi`, writing each row directly to its
+    /// original position (`reorder[r]`) in the shared output.
+    fn exec_rows(&self, xd: &[f32], oview: SharedOut<f32>, n: usize, lo: usize, hi: usize) {
+        let enc = &self.enc;
+        let u = self.params.unroll.max(1);
+        let nt = self.params.n_tile.max(1);
+        for g in 0..enc.num_groups() {
+            let (gs, ge) = enc.group_rows(g);
+            let rs = gs.max(lo);
+            let re = ge.min(hi);
+            if rs >= re {
+                continue;
+            }
+            let cols = enc.group_cols(g);
+            for jc in (0..n).step_by(nt) {
+                let je = (jc + nt).min(n);
+                let mut r = rs;
+                if self.params.lre {
+                    while r + 8 <= re && u >= 8 {
+                        self.bundle::<8>(xd, oview, n, r, jc, je, cols);
+                        r += 8;
+                    }
+                    while r + 4 <= re && u >= 4 {
+                        self.bundle::<4>(xd, oview, n, r, jc, je, cols);
+                        r += 4;
+                    }
+                    while r + 2 <= re && u >= 2 {
+                        self.bundle::<2>(xd, oview, n, r, jc, je, cols);
+                        r += 2;
+                    }
+                }
+                while r < re {
+                    self.single_row(xd, oview, n, r, jc, je, cols);
+                    r += 1;
+                }
+            }
+        }
+    }
+
+    /// U-row unroll bundle: shared input rows loaded once per column.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn bundle<const U: usize>(
+        &self,
+        xd: &[f32],
+        oview: SharedOut<f32>,
+        n: usize,
+        r: usize,
+        jc: usize,
+        je: usize,
+        cols: &[u32],
+    ) {
+        let enc = &self.enc;
+        // SAFETY: reorder is a bijection and r..r+U are distinct reordered
+        // rows, so the U destination slices never alias (and no other
+        // worker owns them).
+        let mut rows: [&mut [f32]; U] = std::array::from_fn(|uu| {
+            let dst = enc.reorder[r + uu] as usize;
+            unsafe { oview.range_mut(dst * n + jc, dst * n + je) }
+        });
+        let wrows: [&[f32]; U] = std::array::from_fn(|uu| enc.row_weights(r + uu));
+        for (kidx, c) in cols.iter().enumerate() {
+            let c = *c as usize;
+            let xrow = &xd[c * n + jc..c * n + je];
+            let wv: [f32; U] = std::array::from_fn(|uu| wrows[uu][kidx]);
+            axpy_u::<U>(&mut rows, &wv, xrow);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn single_row(
+        &self,
+        xd: &[f32],
+        oview: SharedOut<f32>,
+        n: usize,
+        r: usize,
+        jc: usize,
+        je: usize,
+        cols: &[u32],
+    ) {
+        let enc = &self.enc;
+        let dst = enc.reorder[r] as usize;
+        // SAFETY: this worker owns reordered row r exclusively.
+        let orow = unsafe { oview.range_mut(dst * n + jc, dst * n + je) };
+        let wrow = enc.row_weights(r);
+        for (kidx, c) in cols.iter().enumerate() {
+            let c = *c as usize;
+            let xrow = &xd[c * n + jc..c * n + je];
+            axpy_1(orow, wrow[kidx], xrow);
+        }
+    }
+
+    /// GEMV path (`N == 1`): gather the input once per *group* (the
+    /// group-level LRE), then each row is a dense dot product.
+    fn exec_gemv(&self, xd: &[f32], out: &mut [f32], lo: usize, hi: usize) {
+        let enc = &self.enc;
+        let mut xg: Vec<f32> = Vec::new();
+        for g in 0..enc.num_groups() {
+            let (gs, ge) = enc.group_rows(g);
+            let rs = gs.max(lo);
+            let re = ge.min(hi);
+            if rs >= re {
+                continue;
+            }
+            let cols = enc.group_cols(g);
+            if self.params.lre {
+                xg.clear();
+                xg.extend(cols.iter().map(|c| xd[*c as usize]));
+                for r in rs..re {
+                    out[enc.reorder[r] as usize] = dot(enc.row_weights(r), &xg);
+                }
+            } else {
+                for r in rs..re {
+                    let wrow = enc.row_weights(r);
+                    let mut s = 0.0;
+                    for (kidx, c) in cols.iter().enumerate() {
+                        s += wrow[kidx] * xd[*c as usize];
+                    }
+                    out[enc.reorder[r] as usize] = s;
+                }
+            }
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::naive::naive_gemm;
+    use crate::sparse::{BcrConfig, BcrMask};
+    use crate::util::Rng;
+
+    fn setup(seed: u64, m: usize, k: usize, rate: f64) -> (Tensor, Bcrc) {
+        let mut rng = Rng::new(seed);
+        let gr = (m / 8).max(1);
+        let gc = (k / 16).max(1);
+        let mask = BcrMask::random(m, k, BcrConfig::new(gr, gc), rate, &mut rng);
+        let mut w = Tensor::rand_uniform(&[m, k], 1.0, &mut rng);
+        mask.apply(&mut w);
+        let enc = Bcrc::from_masked(&w, &mask);
+        (w, enc)
+    }
+
+    fn check(seed: u64, m: usize, k: usize, n: usize, params: GemmParams) {
+        let (w, enc) = setup(seed, m, k, 4.0);
+        let mut rng = Rng::new(seed + 1000);
+        let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
+        let expect = naive_gemm(&w, &x);
+        let got = BcrcGemm::new(enc, params).execute(&x);
+        assert!(
+            got.allclose(&expect, 1e-3, 1e-3),
+            "m={m} k={k} n={n} {params:?} maxdiff={}",
+            got.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn matches_naive_lre_on() {
+        for (seed, m, k, n) in [(1, 32, 64, 16), (2, 64, 64, 7), (3, 16, 32, 1), (4, 8, 16, 33)] {
+            check(seed, m, k, n, GemmParams::default());
+        }
+    }
+
+    #[test]
+    fn matches_naive_lre_off() {
+        check(5, 32, 64, 16, GemmParams { unroll: 1, n_tile: 32, lre: false });
+        check(6, 32, 64, 1, GemmParams { unroll: 1, n_tile: 32, lre: false });
+    }
+
+    #[test]
+    fn all_unroll_factors_agree() {
+        let (w, enc) = setup(7, 48, 96, 6.0);
+        let mut rng = Rng::new(99);
+        let x = Tensor::rand_uniform(&[96, 24], 1.0, &mut rng);
+        let expect = naive_gemm(&w, &x);
+        for u in [1usize, 2, 4, 8] {
+            for nt in [8usize, 64, 1024] {
+                let g = BcrcGemm::new(enc.clone(), GemmParams { unroll: u, n_tile: nt, lre: true });
+                let got = g.execute(&x);
+                assert!(got.allclose(&expect, 1e-3, 1e-3), "u={u} nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let (_, enc) = setup(8, 64, 64, 4.0);
+        let mut rng = Rng::new(77);
+        let x = Tensor::rand_uniform(&[64, 12], 1.0, &mut rng);
+        let g = BcrcGemm::new(enc, GemmParams::default());
+        let pool = ThreadPool::new(4);
+        let a = g.execute(&x);
+        let b = g.execute_parallel(&x, &pool);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn parallel_gemv_matches() {
+        let (_, enc) = setup(9, 64, 128, 8.0);
+        let mut rng = Rng::new(78);
+        let x = Tensor::rand_uniform(&[128, 1], 1.0, &mut rng);
+        let g = BcrcGemm::new(enc, GemmParams::default());
+        let pool = ThreadPool::new(3);
+        let a = g.execute(&x);
+        let b = g.execute_parallel(&x, &pool);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn fully_pruned_matrix_gives_zeros() {
+        let cfg = BcrConfig::new(1, 1);
+        let mut mask = BcrMask::dense(8, 8, cfg);
+        mask.prune_rows(0, 0, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        let w = Tensor::zeros(&[8, 8]);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let x = Tensor::from_vec(&[8, 2], vec![1.0; 16]);
+        let out = BcrcGemm::new(enc, GemmParams::default()).execute(&x);
+        assert!(out.data().iter().all(|v| *v == 0.0));
+    }
+}

@@ -1,0 +1,117 @@
+//! Sparse GEMM over CSR — the general sparse baseline. Row-parallel with
+//! per-row column indirection; no index sharing, no reorder, so it
+//! suffers exactly the thread-divergence and redundant-load problems the
+//! paper attributes to generic sparse libraries (§4.2).
+
+use crate::sparse::Csr;
+use crate::tensor::Tensor;
+use crate::util::sharedbuf::{SharedOut, SharedSlice};
+use crate::util::ThreadPool;
+
+/// `out[M,N] = csr(W) · X[K,N]`, single-threaded.
+pub fn csr_gemm(w: &Csr, x: &Tensor) -> Tensor {
+    let (k, n) = x.shape().as_matrix();
+    assert_eq!(k, w.cols, "inner dimension mismatch");
+    let mut out = Tensor::zeros(&[w.rows, n]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for r in 0..w.rows {
+        let lo = w.row_ptr[r] as usize;
+        let hi = w.row_ptr[r + 1] as usize;
+        let orow = &mut od[r * n..(r + 1) * n];
+        for idx in lo..hi {
+            let c = w.col_idx[idx] as usize;
+            let v = w.values[idx];
+            let xrow = &xd[c * n..(c + 1) * n];
+            for j in 0..n {
+                orow[j] += v * xrow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Multi-threaded CSR GEMM (static row partition — exhibiting the load
+/// imbalance that GRIM's reorder removes). Zero-copy: workers read the
+/// matrix/input through shared views and write disjoint output rows
+/// directly (the pool call blocks, so the borrows outlive the workers).
+pub fn csr_gemm_parallel(w: &Csr, x: &Tensor, pool: &ThreadPool) -> Tensor {
+    let (k, n) = x.shape().as_matrix();
+    assert_eq!(k, w.cols);
+    let rows = w.rows;
+    let mut out = Tensor::zeros(&[rows, n]);
+    let oview = SharedOut::new(out.data_mut());
+    let row_ptr = SharedSlice::new(&w.row_ptr);
+    let col_idx = SharedSlice::new(&w.col_idx);
+    let values = SharedSlice::new(&w.values);
+    let xv = SharedSlice::new(x.data());
+    pool.run_partitioned(rows, move |_wid, lo, hi| {
+        // SAFETY: buffers outlive the blocking pool call; row ranges are
+        // disjoint across workers.
+        let (row_ptr, col_idx, values, xd) =
+            unsafe { (row_ptr.get(), col_idx.get(), values.get(), xv.get()) };
+        let orows = unsafe { oview.range_mut(lo * n, hi * n) };
+        for r in lo..hi {
+            let s = row_ptr[r] as usize;
+            let e = row_ptr[r + 1] as usize;
+            let orow = &mut orows[(r - lo) * n..(r - lo + 1) * n];
+            for idx in s..e {
+                let c = col_idx[idx] as usize;
+                let v = values[idx];
+                let xrow = &xd[c * n..(c + 1) * n];
+                for j in 0..n {
+                    orow[j] += v * xrow[j];
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::naive::naive_gemm;
+    use crate::sparse::{BcrConfig, BcrMask};
+    use crate::util::Rng;
+
+    fn sparse_w(seed: u64, m: usize, k: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mask = BcrMask::random(m, k, BcrConfig::new(4, 4), 4.0, &mut rng);
+        let mut w = Tensor::rand_uniform(&[m, k], 1.0, &mut rng);
+        mask.apply(&mut w);
+        w
+    }
+
+    #[test]
+    fn matches_naive() {
+        let mut rng = Rng::new(10);
+        let w = sparse_w(1, 32, 64);
+        let x = Tensor::rand_uniform(&[64, 16], 1.0, &mut rng);
+        let expect = naive_gemm(&w, &x);
+        let got = csr_gemm(&Csr::from_dense(&w), &x);
+        assert!(got.allclose(&expect, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::new(11);
+        let w = sparse_w(2, 48, 48);
+        let x = Tensor::rand_uniform(&[48, 8], 1.0, &mut rng);
+        let csr = Csr::from_dense(&w);
+        let pool = ThreadPool::new(4);
+        let a = csr_gemm(&csr, &x);
+        let b = csr_gemm_parallel(&csr, &x, &pool);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn gemv() {
+        let mut rng = Rng::new(12);
+        let w = sparse_w(3, 16, 32);
+        let x = Tensor::rand_uniform(&[32, 1], 1.0, &mut rng);
+        let got = csr_gemm(&Csr::from_dense(&w), &x);
+        let expect = naive_gemm(&w, &x);
+        assert!(got.allclose(&expect, 1e-4, 1e-4));
+    }
+}

@@ -1,0 +1,85 @@
+//! Analytic register-load accounting — the quantity Figure 15 plots.
+//!
+//! Rather than paying for a counter in the inner loop, load counts are
+//! derived from the storage layout: they are exact functions of the mask,
+//! the reorder plan, and the unroll factor, because the kernel's loop
+//! structure is fully determined by those (the same reason the paper can
+//! do LRE at compile time — the sparsity is known statically).
+
+use crate::sparse::{Bcrc, Csr};
+
+/// Input-row register loads for a BCRC GEMM over `n` output columns.
+///
+/// * Without LRE every (row, surviving column) pair loads the input row:
+///   `nnz * n` loads.
+/// * With LRE and unroll `u`, each bundle of up-to-`u` rows in a group
+///   shares one load per (column, n-element): `ceil(rows_g / u) * |sig_g| * n`.
+pub fn bcrc_input_loads(enc: &Bcrc, n: usize, unroll: usize, lre: bool) -> u64 {
+    if !lre || unroll <= 1 {
+        return enc.nnz() as u64 * n as u64;
+    }
+    let mut loads = 0u64;
+    for g in 0..enc.num_groups() {
+        let (lo, hi) = enc.group_rows(g);
+        let rows_g = (hi - lo) as u64;
+        let sig = enc.group_cols(g).len() as u64;
+        let bundles = rows_g.div_ceil(unroll as u64);
+        loads += bundles * sig * n as u64;
+    }
+    loads
+}
+
+/// Input-row loads for CSR: no sharing is possible (each row's indices are
+/// private), so loads = nnz * n always.
+pub fn csr_input_loads(csr: &Csr, n: usize) -> u64 {
+    csr.nnz() as u64 * n as u64
+}
+
+/// Weight loads (identical for both kernels: each weight read once per
+/// n-tile sweep; with full-width tiles that is once).
+pub fn weight_loads(nnz: usize) -> u64 {
+    nnz as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{BcrConfig, BcrMask};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn enc(seed: u64) -> Bcrc {
+        let mut rng = Rng::new(seed);
+        let mask = BcrMask::random(64, 64, BcrConfig::new(4, 4), 4.0, &mut rng);
+        let mut w = Tensor::rand_uniform(&[64, 64], 1.0, &mut rng);
+        mask.apply(&mut w);
+        Bcrc::from_masked(&w, &mask)
+    }
+
+    #[test]
+    fn lre_reduces_loads() {
+        let e = enc(1);
+        let no = bcrc_input_loads(&e, 16, 1, false);
+        let yes = bcrc_input_loads(&e, 16, 4, true);
+        assert!(yes < no, "LRE must reduce loads: {yes} !< {no}");
+        assert_eq!(no, e.nnz() as u64 * 16);
+    }
+
+    #[test]
+    fn lre_factor_bounded_by_unroll() {
+        let e = enc(2);
+        let no = bcrc_input_loads(&e, 8, 1, false) as f64;
+        let yes = bcrc_input_loads(&e, 8, 4, true) as f64;
+        let factor = no / yes;
+        assert!(factor <= 4.0 + 1e-9, "reduction cannot exceed unroll: {factor}");
+        assert!(factor >= 1.0);
+    }
+
+    #[test]
+    fn csr_loads_equal_nolre() {
+        let e = enc(3);
+        let dense = e.decode();
+        let csr = Csr::from_dense(&dense);
+        assert_eq!(csr_input_loads(&csr, 10), bcrc_input_loads(&e, 10, 1, false));
+    }
+}

@@ -1,0 +1,104 @@
+//! Register-blocked micro-kernels.
+//!
+//! The paper's compiler emits a loop nest specialized by an unroll factor
+//! and a vector width; here each `(unroll, n-tile)` point is a
+//! monomorphized Rust function the execution plan selects (DESIGN.md §6).
+//! `axpy_u<U>` performs `U` simultaneous row updates against one shared
+//! input row — the register-level load-redundancy-elimination primitive:
+//! the input row is loaded once and reused by all `U` weight rows.
+
+/// Fused multiply-add over a shared input row for `U` output rows.
+///
+/// `acc[u]` += `wv[u]` * `xrow`, all slices of equal length `nt`.
+#[inline(always)]
+pub fn axpy_u<const U: usize>(acc: &mut [&mut [f32]; U], wv: &[f32; U], xrow: &[f32]) {
+    let nt = xrow.len();
+    for u in 0..U {
+        debug_assert_eq!(acc[u].len(), nt);
+    }
+    // The inner loop is written j-outer so the shared `xrow[j]` load is
+    // hoisted once per j across all U accumulators — this is the LRE.
+    for j in 0..nt {
+        let xv = xrow[j];
+        for u in 0..U {
+            acc[u][j] += wv[u] * xv;
+        }
+    }
+}
+
+/// Single-row axpy (the no-LRE inner kernel).
+#[inline(always)]
+pub fn axpy_1(acc: &mut [f32], wv: f32, xrow: &[f32]) {
+    debug_assert_eq!(acc.len(), xrow.len());
+    for j in 0..acc.len() {
+        acc[j] += wv * xrow[j];
+    }
+}
+
+/// Dot product (GEMV inner kernel).
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way partial sums help the auto-vectorizer.
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Supported unroll factors — the tuner's `unroll` axis.
+pub const UNROLL_FACTORS: [usize; 4] = [1, 2, 4, 8];
+
+/// Supported N-tile widths — the tuner's `n_tile` axis (floats; ×4 bytes).
+pub const N_TILES: [usize; 4] = [16, 32, 64, 128];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_u4_matches_scalar() {
+        let xrow = [1.0f32, 2.0, 3.0];
+        let wv = [0.5f32, -1.0, 2.0, 0.0];
+        let mut a0 = vec![0.0f32; 3];
+        let mut a1 = vec![0.0f32; 3];
+        let mut a2 = vec![0.0f32; 3];
+        let mut a3 = vec![0.0f32; 3];
+        {
+            let mut accs: [&mut [f32]; 4] = [&mut a0, &mut a1, &mut a2, &mut a3];
+            axpy_u::<4>(&mut accs, &wv, &xrow);
+        }
+        assert_eq!(a0, vec![0.5, 1.0, 1.5]);
+        assert_eq!(a1, vec![-1.0, -2.0, -3.0]);
+        assert_eq!(a2, vec![2.0, 4.0, 6.0]);
+        assert_eq!(a3, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dot_matches_reference() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32 - 18.0) * 0.25).collect();
+        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - expect).abs() < 1e-3);
+    }
+
+    #[test]
+    fn axpy_1_basic() {
+        let mut acc = vec![1.0f32, 1.0];
+        axpy_1(&mut acc, 2.0, &[3.0, 4.0]);
+        assert_eq!(acc, vec![7.0, 9.0]);
+    }
+}

@@ -1,0 +1,27 @@
+//! GEMM kernels: `out[M,N] = W[M,K] · X[K,N]` with `W` the (possibly
+//! sparse) weight matrix and `X` the dense input (an im2col'd activation
+//! for CONV, the hidden/input vectors for RNN FC).
+//!
+//! Kernel inventory, mirroring the paper's comparison set:
+//!
+//! | kernel          | stands in for | notes |
+//! |-----------------|---------------|-------|
+//! | [`naive`]       | TFLite        | triple loop, no tiling |
+//! | [`tiled`]       | MNN/TVM dense | cache tiling + register micro-kernel |
+//! | [`csr_gemm`]    | clSparse CSR  | row-parallel, per-row indices |
+//! | [`bcrc_gemm`]   | **GRIM**      | group-parallel, shared indices, LRE |
+//!
+//! All kernels are exact (no approximation); tests check each against
+//! [`naive`] to 1e-4.
+
+pub mod naive;
+pub mod tiled;
+pub mod microkernel;
+pub mod csr_gemm;
+pub mod bcrc_gemm;
+pub mod loadcount;
+
+pub use bcrc_gemm::BcrcGemm;
+pub use csr_gemm::csr_gemm;
+pub use naive::naive_gemm;
+pub use tiled::{tiled_gemm, tiled_gemm_parallel, TileParams};

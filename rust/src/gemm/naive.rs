@@ -1,0 +1,97 @@
+//! Naive dense GEMM — the unoptimized baseline (TFLite analog) and the
+//! correctness oracle for every other kernel in the crate.
+
+use crate::tensor::Tensor;
+
+/// `out[M,N] = W[M,K] · X[K,N]`, plain ijk triple loop.
+pub fn naive_gemm(w: &Tensor, x: &Tensor) -> Tensor {
+    let (m, k) = w.shape().as_matrix();
+    let (k2, n) = x.shape().as_matrix();
+    assert_eq!(k, k2, "inner dimension mismatch: {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let wd = w.data();
+    let xd = x.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        for p in 0..k {
+            let wv = wd[i * k + p];
+            if wv == 0.0 {
+                continue; // the "sparse-aware but unoptimized" path
+            }
+            let xrow = &xd[p * n..(p + 1) * n];
+            let orow = &mut od[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += wv * xrow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Fully-dense variant with no zero skip (used as the FLOP-proportional
+/// reference when we need the *dense* cost).
+pub fn naive_gemm_dense(w: &Tensor, x: &Tensor) -> Tensor {
+    let (m, k) = w.shape().as_matrix();
+    let (k2, n) = x.shape().as_matrix();
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    let wd = w.data();
+    let xd = x.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        for p in 0..k {
+            let wv = wd[i * k + p];
+            let xrow = &xd[p * n..(p + 1) * n];
+            let orow = &mut od[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += wv * xrow[j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn known_product() {
+        let w = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let x = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let out = naive_gemm(&w, &x);
+        assert_eq!(out.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn zero_skip_matches_dense() {
+        let mut rng = Rng::new(1);
+        let mut w = Tensor::rand_uniform(&[7, 9], 1.0, &mut rng);
+        // poke some zeros
+        for i in 0..7 {
+            *w.at2_mut(i, i % 9) = 0.0;
+        }
+        let x = Tensor::rand_uniform(&[9, 5], 1.0, &mut rng);
+        let a = naive_gemm(&w, &x);
+        let b = naive_gemm_dense(&w, &x);
+        assert!(a.allclose(&b, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn gemv_shape() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::rand_uniform(&[4, 6], 1.0, &mut rng);
+        let x = Tensor::rand_uniform(&[6, 1], 1.0, &mut rng);
+        let out = naive_gemm(&w, &x);
+        assert_eq!(out.shape().as_matrix(), (4, 1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_inner_dim_panics() {
+        let w = Tensor::zeros(&[2, 3]);
+        let x = Tensor::zeros(&[4, 2]);
+        naive_gemm(&w, &x);
+    }
+}

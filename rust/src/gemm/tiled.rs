@@ -1,0 +1,166 @@
+//! Cache-tiled, register-blocked dense GEMM — the optimized-dense baseline
+//! (MNN / TVM analog). Also used for the dense FC layers of GRIM itself
+//! when a layer is left unpruned.
+
+use super::microkernel::axpy_u;
+use crate::tensor::Tensor;
+use crate::util::sharedbuf::{SharedOut, SharedSlice};
+use crate::util::ThreadPool;
+
+/// Tiling parameters (tuner genes for the dense path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileParams {
+    /// Rows of W per register block (unroll factor).
+    pub mr: usize,
+    /// K-tile (inner dimension) per cache block.
+    pub kc: usize,
+    /// N-tile per cache block.
+    pub nc: usize,
+}
+
+impl Default for TileParams {
+    fn default() -> Self {
+        TileParams { mr: 4, kc: 256, nc: 64 }
+    }
+}
+
+/// Single-threaded tiled GEMM.
+pub fn tiled_gemm(w: &Tensor, x: &Tensor, p: TileParams) -> Tensor {
+    let (m, k) = w.shape().as_matrix();
+    let (k2, n) = x.shape().as_matrix();
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    tiled_rows(w.data(), x.data(), out.data_mut(), 0, m, m, k, n, p);
+    out
+}
+
+/// Multi-threaded tiled GEMM: W rows partitioned across the pool.
+/// Zero-copy (see util::sharedbuf): workers write disjoint output rows.
+pub fn tiled_gemm_parallel(w: &Tensor, x: &Tensor, p: TileParams, pool: &ThreadPool) -> Tensor {
+    let (m, k) = w.shape().as_matrix();
+    let (k2, n) = x.shape().as_matrix();
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    let oview = SharedOut::new(out.data_mut());
+    let wv = SharedSlice::new(w.data());
+    let xv = SharedSlice::new(x.data());
+    pool.run_partitioned(m, move |_wid, lo, hi| {
+        // SAFETY: buffers outlive the blocking pool call; row ranges disjoint.
+        let (wd, xd) = unsafe { (wv.get(), xv.get()) };
+        let orows = unsafe { oview.range_mut(lo * n, hi * n) };
+        tiled_rows(wd, xd, orows, lo, hi, hi - lo, k, n, p);
+    });
+    out
+}
+
+/// Compute rows `lo..hi` of the product into `out` (out holds `out_rows`
+/// rows starting at logical row `lo`).
+#[allow(clippy::too_many_arguments)]
+fn tiled_rows(
+    wd: &[f32],
+    xd: &[f32],
+    out: &mut [f32],
+    lo: usize,
+    hi: usize,
+    _out_rows: usize,
+    k: usize,
+    n: usize,
+    p: TileParams,
+) {
+    let kc = p.kc.max(1);
+    let nc = p.nc.max(1);
+    for jc in (0..n).step_by(nc) {
+        let je = (jc + nc).min(n);
+        for pc in (0..k).step_by(kc) {
+            let pe = (pc + kc).min(k);
+            let mut i = lo;
+            // mr-row register blocks
+            while i + 4 <= hi && p.mr >= 4 {
+                mk_rows::<4>(wd, xd, out, i, lo, pc, pe, jc, je, k, n);
+                i += 4;
+            }
+            while i + 2 <= hi && p.mr >= 2 {
+                mk_rows::<2>(wd, xd, out, i, lo, pc, pe, jc, je, k, n);
+                i += 2;
+            }
+            while i < hi {
+                mk_rows::<1>(wd, xd, out, i, lo, pc, pe, jc, je, k, n);
+                i += 1;
+            }
+        }
+    }
+}
+
+/// U-row micro block: accumulate W[i..i+U, pc..pe] · X[pc..pe, jc..je].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn mk_rows<const U: usize>(
+    wd: &[f32],
+    xd: &[f32],
+    out: &mut [f32],
+    i: usize,
+    lo: usize,
+    pc: usize,
+    pe: usize,
+    jc: usize,
+    je: usize,
+    k: usize,
+    n: usize,
+) {
+    let nt = je - jc;
+    // split out into U disjoint row slices
+    let mut rows: [&mut [f32]; U] = {
+        let mut it = out[(i - lo) * n..].chunks_mut(n);
+        std::array::from_fn(|_| {
+            let row = it.next().expect("row slice");
+            &mut row[jc..je]
+        })
+    };
+    for ppos in pc..pe {
+        let xrow = &xd[ppos * n + jc..ppos * n + jc + nt];
+        let wv: [f32; U] = std::array::from_fn(|u| wd[(i + u) * k + ppos]);
+        axpy_u::<U>(&mut rows, &wv, xrow);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::naive::naive_gemm_dense;
+    use crate::util::Rng;
+
+    fn check(m: usize, k: usize, n: usize, p: TileParams, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::rand_uniform(&[m, k], 1.0, &mut rng);
+        let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
+        let expect = naive_gemm_dense(&w, &x);
+        let got = tiled_gemm(&w, &x, p);
+        assert!(
+            got.allclose(&expect, 1e-3, 1e-3),
+            "mismatch m={m} k={k} n={n} {p:?} maxdiff={}",
+            got.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        check(8, 8, 8, TileParams::default(), 1);
+        check(17, 31, 13, TileParams::default(), 2);
+        check(1, 64, 1, TileParams::default(), 3);
+        check(64, 1, 64, TileParams::default(), 4);
+        check(33, 65, 127, TileParams { mr: 2, kc: 16, nc: 8 }, 5);
+        check(5, 5, 5, TileParams { mr: 1, kc: 2, nc: 2 }, 6);
+        check(40, 100, 30, TileParams { mr: 8, kc: 64, nc: 32 }, 7);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::new(8);
+        let w = Tensor::rand_uniform(&[37, 53], 1.0, &mut rng);
+        let x = Tensor::rand_uniform(&[53, 29], 1.0, &mut rng);
+        let pool = ThreadPool::new(4);
+        let a = tiled_gemm(&w, &x, TileParams::default());
+        let b = tiled_gemm_parallel(&w, &x, TileParams::default(), &pool);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+}

@@ -1,0 +1,332 @@
+//! The GRIM DSL (paper §4.1, Figure 5): a declarative, line-oriented
+//! surface syntax for models plus `@ir` pragmas carrying the layerwise IR.
+//!
+//! ```text
+//! model "vgg16-mini"
+//! in   = Input(shape=[3,32,32])
+//! c1   = Conv2D(in, out_c=64, kh=3, kw=3, stride=1, pad=1)
+//! r1   = ReLU(c1)
+//! p1   = MaxPool2(r1)
+//! f    = Flatten(p1)
+//! fc1  = FC(f, out_f=10)
+//! out  = Softmax(fc1)
+//! @ir c1 { block_size=[4,16]; rate=8.0; unroll=4; tile=64; lre=true; reorder=true; format=bcrc }
+//! ```
+//!
+//! DSL ↔ graph conversion is loss-free: `parse(print(g)) == g`.
+
+use super::graph::{Graph, NodeId};
+use super::ir::{LayerIr, StorageFormat};
+use super::op::Op;
+use crate::tensor::Shape;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// A parsed DSL module: the graph, its IR table, and the model name.
+#[derive(Clone, Debug)]
+pub struct Module {
+    pub name: String,
+    pub graph: Graph,
+    pub irs: Vec<LayerIr>,
+}
+
+impl Module {
+    pub fn ir_for(&self, layer: &str) -> Option<&LayerIr> {
+        self.irs.iter().find(|ir| ir.layer == layer)
+    }
+}
+
+/// Parse DSL text into a [`Module`].
+pub fn parse(text: &str) -> anyhow::Result<Module> {
+    let mut graph = Graph::new();
+    let mut irs = Vec::new();
+    let mut name = String::from("unnamed");
+    let mut ids: HashMap<String, NodeId> = HashMap::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let err = |msg: String| anyhow::anyhow!("line {}: {msg}", lineno + 1);
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("model") {
+            name = rest.trim().trim_matches('"').to_string();
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("@ir") {
+            irs.push(parse_ir(rest).map_err(|e| err(e.to_string()))?);
+            continue;
+        }
+        // ident = Op(args)
+        let (lhs, rhs) = line
+            .split_once('=')
+            .ok_or_else(|| err(format!("expected 'name = Op(...)', got '{line}'")))?;
+        let node_name = lhs.trim();
+        let rhs = rhs.trim();
+        let open = rhs.find('(').ok_or_else(|| err("missing '('".into()))?;
+        let opname = rhs[..open].trim();
+        anyhow::ensure!(rhs.ends_with(')'), err("missing ')'".into()).to_string());
+        let argstr = &rhs[open + 1..rhs.len() - 1];
+        let (inputs, kwargs) = parse_args(argstr).map_err(|e| err(e.to_string()))?;
+        let input_ids: Vec<NodeId> = inputs
+            .iter()
+            .map(|n| ids.get(n).copied().ok_or_else(|| err(format!("unknown input '{n}'"))))
+            .collect::<anyhow::Result<_>>()?;
+        let op = build_op(opname, &kwargs).map_err(|e| err(e.to_string()))?;
+        let id = graph.add(node_name, op, &input_ids);
+        ids.insert(node_name.to_string(), id);
+    }
+    // verify IR targets exist and are weighted
+    for ir in &irs {
+        let id = graph
+            .find(&ir.layer)
+            .ok_or_else(|| anyhow::anyhow!("@ir references unknown layer '{}'", ir.layer))?;
+        anyhow::ensure!(
+            graph.node(id).op.is_weighted(),
+            "@ir on non-weighted layer '{}'",
+            ir.layer
+        );
+    }
+    Ok(Module { name, graph, irs })
+}
+
+/// Pretty-print a module back to DSL text.
+pub fn print(m: &Module) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "model \"{}\"", m.name);
+    for n in m.graph.nodes() {
+        let mut args: Vec<String> =
+            n.inputs.iter().map(|i| m.graph.node(*i).name.clone()).collect();
+        match &n.op {
+            Op::Input { shape } => {
+                args.push(format!(
+                    "shape=[{}]",
+                    shape.dims().iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+                ));
+            }
+            Op::Conv2d { out_c, kh, kw, stride, pad } => {
+                args.push(format!("out_c={out_c}"));
+                args.push(format!("kh={kh}"));
+                args.push(format!("kw={kw}"));
+                args.push(format!("stride={stride}"));
+                args.push(format!("pad={pad}"));
+            }
+            Op::DwConv2d { kh, kw, stride, pad } => {
+                args.push(format!("kh={kh}"));
+                args.push(format!("kw={kw}"));
+                args.push(format!("stride={stride}"));
+                args.push(format!("pad={pad}"));
+            }
+            Op::Fc { out_f } => args.push(format!("out_f={out_f}")),
+            Op::Gru { hidden, layers } => {
+                args.push(format!("hidden={hidden}"));
+                args.push(format!("layers={layers}"));
+            }
+            _ => {}
+        }
+        let _ = writeln!(out, "{} = {}({})", n.name, n.op.opcode(), args.join(", "));
+    }
+    for ir in &m.irs {
+        let _ = writeln!(out, "{}", ir.to_dsl());
+    }
+    out
+}
+
+fn parse_args(s: &str) -> anyhow::Result<(Vec<String>, HashMap<String, String>)> {
+    let mut inputs = Vec::new();
+    let mut kwargs = HashMap::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    let mut parts = Vec::new();
+    for ch in s.chars() {
+        match ch {
+            '[' => {
+                depth += 1;
+                cur.push(ch);
+            }
+            ']' => {
+                depth = depth.saturating_sub(1);
+                cur.push(ch);
+            }
+            ',' if depth == 0 => {
+                parts.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur.trim().to_string());
+    }
+    for p in parts {
+        if let Some((k, v)) = p.split_once('=') {
+            kwargs.insert(k.trim().to_string(), v.trim().to_string());
+        } else {
+            inputs.push(p);
+        }
+    }
+    Ok((inputs, kwargs))
+}
+
+fn get_usize(kw: &HashMap<String, String>, key: &str) -> anyhow::Result<usize> {
+    kw.get(key)
+        .ok_or_else(|| anyhow::anyhow!("missing argument '{key}'"))?
+        .parse::<usize>()
+        .map_err(|e| anyhow::anyhow!("bad '{key}': {e}"))
+}
+
+fn parse_usize_list(v: &str) -> anyhow::Result<Vec<usize>> {
+    let inner = v.trim().trim_start_matches('[').trim_end_matches(']');
+    inner
+        .split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| t.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("bad list item: {e}")))
+        .collect()
+}
+
+fn build_op(opname: &str, kw: &HashMap<String, String>) -> anyhow::Result<Op> {
+    Ok(match opname {
+        "Input" => {
+            let dims = parse_usize_list(
+                kw.get("shape").ok_or_else(|| anyhow::anyhow!("Input requires shape"))?,
+            )?;
+            Op::Input { shape: Shape::new(&dims) }
+        }
+        "Conv2D" => Op::Conv2d {
+            out_c: get_usize(kw, "out_c")?,
+            kh: get_usize(kw, "kh")?,
+            kw: get_usize(kw, "kw")?,
+            stride: get_usize(kw, "stride")?,
+            pad: get_usize(kw, "pad")?,
+        },
+        "DWConv2D" => Op::DwConv2d {
+            kh: get_usize(kw, "kh")?,
+            kw: get_usize(kw, "kw")?,
+            stride: get_usize(kw, "stride")?,
+            pad: get_usize(kw, "pad")?,
+        },
+        "FC" => Op::Fc { out_f: get_usize(kw, "out_f")? },
+        "MaxPool2" => Op::MaxPool2,
+        "GAP" => Op::GlobalAvgPool,
+        "ReLU" => Op::Relu,
+        "ReLU6" => Op::Relu6,
+        "Add" => Op::Add,
+        "Flatten" => Op::Flatten,
+        "Softmax" => Op::Softmax,
+        "GRU" => Op::Gru { hidden: get_usize(kw, "hidden")?, layers: get_usize(kw, "layers")? },
+        other => anyhow::bail!("unknown op '{other}'"),
+    })
+}
+
+fn parse_ir(rest: &str) -> anyhow::Result<LayerIr> {
+    // "<layer> { k=v; k=v; ... }"
+    let rest = rest.trim();
+    let open = rest.find('{').ok_or_else(|| anyhow::anyhow!("@ir missing '{{'"))?;
+    let layer = rest[..open].trim().to_string();
+    anyhow::ensure!(rest.ends_with('}'), "@ir missing '}}'");
+    let body = &rest[open + 1..rest.len() - 1];
+    let mut ir = LayerIr::default_for(&layer, 1.0);
+    for item in body.split(';') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        let (k, v) = item.split_once('=').ok_or_else(|| anyhow::anyhow!("bad @ir item '{item}'"))?;
+        let (k, v) = (k.trim(), v.trim());
+        match k {
+            "block_size" => {
+                let l = parse_usize_list(v)?;
+                anyhow::ensure!(l.len() == 2, "block_size needs two entries");
+                ir.block_size = [l[0], l[1]];
+            }
+            "rate" => ir.rate = v.parse()?,
+            "unroll" => ir.unroll = v.parse()?,
+            "tile" => ir.tile = v.parse()?,
+            "lre" => ir.lre = v.parse()?,
+            "reorder" => ir.reorder = v.parse()?,
+            "format" => ir.format = StorageFormat::parse(v)?,
+            other => anyhow::bail!("unknown @ir key '{other}'"),
+        }
+    }
+    // re-derive format default if rate given without explicit format
+    if !body.contains("format") {
+        ir.format = if ir.rate > 1.0 { StorageFormat::Bcrc } else { StorageFormat::Dense };
+    }
+    Ok(ir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# tiny CNN
+model "tiny"
+in = Input(shape=[3,8,8])
+c1 = Conv2D(in, out_c=4, kh=3, kw=3, stride=1, pad=1)
+r1 = ReLU(c1)
+p1 = MaxPool2(r1)
+f = Flatten(p1)
+fc1 = FC(f, out_f=10)
+out = Softmax(fc1)
+@ir c1 { block_size=[2,9]; rate=4.0; unroll=4; tile=32; lre=true; reorder=true; format=bcrc }
+@ir fc1 { block_size=[2,16]; rate=2.0 }
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.graph.len(), 7);
+        assert_eq!(m.irs.len(), 2);
+        let ir = m.ir_for("c1").unwrap();
+        assert_eq!(ir.block_size, [2, 9]);
+        assert_eq!(ir.rate, 4.0);
+        let ir2 = m.ir_for("fc1").unwrap();
+        assert_eq!(ir2.format, StorageFormat::Bcrc); // derived from rate
+    }
+
+    #[test]
+    fn round_trip() {
+        let m = parse(SAMPLE).unwrap();
+        let text = print(&m);
+        let m2 = parse(&text).unwrap();
+        assert_eq!(m2.name, m.name);
+        assert_eq!(m2.graph.len(), m.graph.len());
+        for (a, b) in m.graph.nodes().iter().zip(m2.graph.nodes()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.inputs, b.inputs);
+        }
+        assert_eq!(m.irs, m2.irs);
+    }
+
+    #[test]
+    fn shape_inference_through_dsl() {
+        let m = parse(SAMPLE).unwrap();
+        let shapes = m.graph.infer_shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().dims(), &[10]);
+    }
+
+    #[test]
+    fn unknown_input_rejected() {
+        assert!(parse("a = ReLU(bogus)").is_err());
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        assert!(parse("a = Frobnicate()").is_err());
+    }
+
+    #[test]
+    fn ir_on_unweighted_rejected() {
+        let text = "in = Input(shape=[4])\nr = ReLU(in)\n@ir r { rate=2.0 }";
+        assert!(parse(text).is_err());
+    }
+
+    #[test]
+    fn gru_parses() {
+        let m = parse("x = Input(shape=[20,39])\ng = GRU(x, hidden=64, layers=2)").unwrap();
+        assert_eq!(m.graph.node(1).op, Op::Gru { hidden: 64, layers: 2 });
+    }
+}

@@ -1,0 +1,185 @@
+//! Computational graph: named nodes in topological order with shape
+//! inference. The graph is the canonical model form; the DSL is its
+//! concrete syntax (§4.1).
+
+use super::op::Op;
+use crate::tensor::Shape;
+use std::collections::HashMap;
+
+/// Index of a node within its graph.
+pub type NodeId = usize;
+
+/// One graph node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+}
+
+/// A DNN computational graph. Nodes are stored in insertion order, which
+/// must be (and is verified to be) topological.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    by_name: HashMap<String, NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    /// Append a node; inputs must already exist (keeps order topological).
+    pub fn add(&mut self, name: &str, op: Op, inputs: &[NodeId]) -> NodeId {
+        assert!(!self.by_name.contains_key(name), "duplicate node name {name}");
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "input {i} of node {name} not yet defined");
+        }
+        self.nodes.push(Node { id, name: name.to_string(), op, inputs: inputs.to_vec() });
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn find(&self, name: &str) -> Option<NodeId> {
+        self.by_name.get(name).copied()
+    }
+
+    /// The (single) input node.
+    pub fn input(&self) -> anyhow::Result<NodeId> {
+        let mut it = self.nodes.iter().filter(|n| matches!(n.op, Op::Input { .. }));
+        let first = it.next().ok_or_else(|| anyhow::anyhow!("graph has no Input node"))?;
+        anyhow::ensure!(it.next().is_none(), "graph has multiple Input nodes");
+        Ok(first.id)
+    }
+
+    /// The output node (the last node; no other node may consume it).
+    pub fn output(&self) -> anyhow::Result<NodeId> {
+        anyhow::ensure!(!self.nodes.is_empty(), "empty graph");
+        Ok(self.nodes.len() - 1)
+    }
+
+    /// Infer shapes for every node.
+    pub fn infer_shapes(&self) -> anyhow::Result<Vec<Shape>> {
+        let mut shapes: Vec<Shape> = Vec::with_capacity(self.nodes.len());
+        for n in &self.nodes {
+            let ins: Vec<&Shape> = n.inputs.iter().map(|i| &shapes[*i]).collect();
+            let s = n
+                .op
+                .infer_shape(&ins)
+                .map_err(|e| anyhow::anyhow!("shape error at node '{}': {e}", n.name))?;
+            shapes.push(s);
+        }
+        Ok(shapes)
+    }
+
+    /// Names of all weighted (GEMM-bearing) layers, in order.
+    pub fn weighted_layers(&self) -> Vec<&Node> {
+        self.nodes.iter().filter(|n| n.op.is_weighted()).collect()
+    }
+
+    /// Total dense MACs of the model at the given input (for FLOP tables).
+    pub fn dense_macs(&self) -> anyhow::Result<usize> {
+        let shapes = self.infer_shapes()?;
+        let mut macs = 0usize;
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv2d { out_c, kh, kw, .. } => {
+                    let in_s = &shapes[n.inputs[0]];
+                    let out_s = &shapes[n.id];
+                    macs += out_c * in_s.dim(0) * kh * kw * out_s.dim(1) * out_s.dim(2);
+                }
+                Op::DwConv2d { kh, kw, .. } => {
+                    let out_s = &shapes[n.id];
+                    macs += out_s.dim(0) * kh * kw * out_s.dim(1) * out_s.dim(2);
+                }
+                Op::Fc { out_f } => {
+                    macs += out_f * shapes[n.inputs[0]].numel();
+                }
+                Op::Gru { hidden, layers } => {
+                    let in_s = &shapes[n.inputs[0]];
+                    let t = in_s.dim(0);
+                    let mut d_in = in_s.dim(1);
+                    for _ in 0..*layers {
+                        // 3 gates: W[h, d_in] x + U[h, h] h
+                        macs += t * 3 * hidden * (d_in + hidden);
+                        d_in = *hidden;
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(macs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new();
+        let x = g.add("in", Op::Input { shape: Shape::new(&[3, 8, 8]) }, &[]);
+        let c = g.add("conv1", Op::Conv2d { out_c: 4, kh: 3, kw: 3, stride: 1, pad: 1 }, &[x]);
+        let r = g.add("relu1", Op::Relu, &[c]);
+        let p = g.add("pool1", Op::MaxPool2, &[r]);
+        let f = g.add("flat", Op::Flatten, &[p]);
+        g.add("fc1", Op::Fc { out_f: 10 }, &[f]);
+        g
+    }
+
+    #[test]
+    fn shapes_flow() {
+        let g = tiny();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[1].dims(), &[4, 8, 8]);
+        assert_eq!(shapes[3].dims(), &[4, 4, 4]);
+        assert_eq!(shapes[5].dims(), &[10]);
+    }
+
+    #[test]
+    fn finds_input_and_output() {
+        let g = tiny();
+        assert_eq!(g.input().unwrap(), 0);
+        assert_eq!(g.output().unwrap(), 5);
+        assert_eq!(g.find("conv1"), Some(1));
+    }
+
+    #[test]
+    fn weighted_layers_listed_in_order() {
+        let g = tiny();
+        let names: Vec<&str> = g.weighted_layers().iter().map(|n| n.name.as_str()).collect();
+        assert_eq!(names, vec!["conv1", "fc1"]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_name_panics() {
+        let mut g = Graph::new();
+        g.add("a", Op::Input { shape: Shape::new(&[1]) }, &[]);
+        g.add("a", Op::Relu, &[0]);
+    }
+
+    #[test]
+    fn macs_positive() {
+        assert!(tiny().dense_macs().unwrap() > 0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Layerwise IR (paper §4.1, Figure 6): per-layer BCR + tuning metadata
+//! the compiler consumes. Three aspects, as in the paper: block
+//! information, tuning information, and basic information.
+
+use crate::gemm::bcrc_gemm::GemmParams;
+
+/// Storage format chosen for a layer's weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StorageFormat {
+    /// Dense (unpruned or baseline execution).
+    Dense,
+    /// GRIM's compact format (requires a BCR mask).
+    Bcrc,
+    /// CSR — the general sparse baseline, also used for 2:4.
+    Csr,
+}
+
+impl StorageFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StorageFormat::Dense => "dense",
+            StorageFormat::Bcrc => "bcrc",
+            StorageFormat::Csr => "csr",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "dense" => StorageFormat::Dense,
+            "bcrc" => StorageFormat::Bcrc,
+            "csr" => StorageFormat::Csr,
+            other => anyhow::bail!("unknown storage format '{other}'"),
+        })
+    }
+}
+
+/// Per-layer IR record (the `info` of Figures 5–6).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerIr {
+    /// Layer (node) name this IR attaches to.
+    pub layer: String,
+    // -- block information --
+    /// BCR block size `[rows, cols]` in GEMM space.
+    pub block_size: [usize; 2],
+    /// Target pruning rate for the layer (1.0 = dense).
+    pub rate: f64,
+    // -- tuning information --
+    /// Row unroll factor (LRE register block height).
+    pub unroll: usize,
+    /// N-dimension tile width.
+    pub tile: usize,
+    /// Register-level load redundancy elimination on/off.
+    pub lre: bool,
+    /// Matrix reorder on/off (off = identity permutation ablation).
+    pub reorder: bool,
+    // -- basic information --
+    pub format: StorageFormat,
+}
+
+impl LayerIr {
+    /// The paper's default configuration: 4×16 blocks, tuned later.
+    pub fn default_for(layer: &str, rate: f64) -> Self {
+        LayerIr {
+            layer: layer.to_string(),
+            block_size: [4, 16],
+            rate,
+            unroll: 4,
+            tile: 64,
+            lre: true,
+            reorder: true,
+            format: if rate > 1.0 { StorageFormat::Bcrc } else { StorageFormat::Dense },
+        }
+    }
+
+    /// Kernel execution parameters derived from the IR.
+    pub fn gemm_params(&self) -> GemmParams {
+        GemmParams { unroll: self.unroll, n_tile: self.tile, lre: self.lre }
+    }
+
+    /// Serialize as a DSL `@ir` pragma line.
+    pub fn to_dsl(&self) -> String {
+        format!(
+            "@ir {} {{ block_size=[{},{}]; rate={}; unroll={}; tile={}; lre={}; reorder={}; format={} }}",
+            self.layer,
+            self.block_size[0],
+            self.block_size[1],
+            self.rate,
+            self.unroll,
+            self.tile,
+            self.lre,
+            self.reorder,
+            self.format.as_str()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_fields() {
+        let ir = LayerIr::default_for("conv1", 8.0);
+        assert_eq!(ir.block_size, [4, 16]);
+        assert_eq!(ir.format, StorageFormat::Bcrc);
+        assert!(ir.lre && ir.reorder);
+    }
+
+    #[test]
+    fn dense_when_rate_one() {
+        let ir = LayerIr::default_for("fc", 1.0);
+        assert_eq!(ir.format, StorageFormat::Dense);
+    }
+
+    #[test]
+    fn format_round_trip() {
+        for f in [StorageFormat::Dense, StorageFormat::Bcrc, StorageFormat::Csr] {
+            assert_eq!(StorageFormat::parse(f.as_str()).unwrap(), f);
+        }
+        assert!(StorageFormat::parse("blah").is_err());
+    }
+
+    #[test]
+    fn dsl_line_shape() {
+        let ir = LayerIr::default_for("conv1", 8.0);
+        let line = ir.to_dsl();
+        assert!(line.starts_with("@ir conv1 {"));
+        assert!(line.contains("block_size=[4,16]"));
+        assert!(line.contains("format=bcrc"));
+    }
+}

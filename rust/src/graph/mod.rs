@@ -1,0 +1,16 @@
+//! The GRIM model representation: computational graph, layerwise IR, and
+//! the DSL (paper §4.1).
+//!
+//! The DSL and the computational graph are equivalent and convert to each
+//! other (`dsl::parse` / `dsl::print`); the layerwise IR ([`ir::LayerIr`])
+//! attaches BCR-pruning and tuning metadata to each GEMM-bearing layer —
+//! the `info` blocks of Figures 5–6.
+
+pub mod op;
+pub mod graph;
+pub mod ir;
+pub mod dsl;
+
+pub use graph::{Graph, Node, NodeId};
+pub use ir::{LayerIr, StorageFormat};
+pub use op::Op;

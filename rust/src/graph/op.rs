@@ -1,0 +1,157 @@
+//! Graph operators. Every weighted op lowers to GEMM (paper §3.1): CONV
+//! via im2col, FC directly, GRU as a pair of fused gate FCs per step.
+
+use crate::conv::ConvGeom;
+use crate::tensor::Shape;
+
+/// A graph operator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Model input with a fixed shape.
+    Input { shape: Shape },
+    /// 2-D convolution (weights `[out_c, in_c, kh, kw]`).
+    Conv2d { out_c: usize, kh: usize, kw: usize, stride: usize, pad: usize },
+    /// Depthwise convolution (weights `[c, 1, kh, kw]`).
+    DwConv2d { kh: usize, kw: usize, stride: usize, pad: usize },
+    /// Fully-connected layer (weights `[out_f, in_f]`).
+    Fc { out_f: usize },
+    /// 2×2 max-pool, stride 2.
+    MaxPool2,
+    /// Global average pool to `[C,1,1]`.
+    GlobalAvgPool,
+    Relu,
+    Relu6,
+    /// Elementwise residual addition of two inputs.
+    Add,
+    /// Flatten to `[numel]`.
+    Flatten,
+    Softmax,
+    /// A full GRU stack: input `[T, in_f]` → output `[T, hidden]`.
+    /// Weights per layer: update/reset/candidate gate matrices.
+    Gru { hidden: usize, layers: usize },
+}
+
+impl Op {
+    /// Does this op carry weights (and therefore a GEMM + LayerIr)?
+    pub fn is_weighted(&self) -> bool {
+        matches!(self, Op::Conv2d { .. } | Op::DwConv2d { .. } | Op::Fc { .. } | Op::Gru { .. })
+    }
+
+    /// Short opcode used by the DSL printer.
+    pub fn opcode(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "Input",
+            Op::Conv2d { .. } => "Conv2D",
+            Op::DwConv2d { .. } => "DWConv2D",
+            Op::Fc { .. } => "FC",
+            Op::MaxPool2 => "MaxPool2",
+            Op::GlobalAvgPool => "GAP",
+            Op::Relu => "ReLU",
+            Op::Relu6 => "ReLU6",
+            Op::Add => "Add",
+            Op::Flatten => "Flatten",
+            Op::Softmax => "Softmax",
+            Op::Gru { .. } => "GRU",
+        }
+    }
+
+    /// Infer the output shape from input shapes.
+    pub fn infer_shape(&self, inputs: &[&Shape]) -> anyhow::Result<Shape> {
+        let one = |i: usize| -> anyhow::Result<&Shape> {
+            inputs.get(i).copied().ok_or_else(|| anyhow::anyhow!("missing input {i}"))
+        };
+        Ok(match self {
+            Op::Input { shape } => shape.clone(),
+            Op::Conv2d { out_c, kh, kw, stride, pad } => {
+                let d = one(0)?.dims();
+                anyhow::ensure!(d.len() == 3, "Conv2D expects [C,H,W], got {:?}", d);
+                let g = ConvGeom {
+                    in_c: d[0],
+                    in_h: d[1],
+                    in_w: d[2],
+                    out_c: *out_c,
+                    kh: *kh,
+                    kw: *kw,
+                    stride: *stride,
+                    pad: *pad,
+                };
+                Shape::new(&[*out_c, g.out_h(), g.out_w()])
+            }
+            Op::DwConv2d { kh, kw, stride, pad } => {
+                let d = one(0)?.dims();
+                anyhow::ensure!(d.len() == 3, "DWConv2D expects [C,H,W]");
+                let oh = (d[1] + 2 * pad - kh) / stride + 1;
+                let ow = (d[2] + 2 * pad - kw) / stride + 1;
+                Shape::new(&[d[0], oh, ow])
+            }
+            Op::Fc { out_f } => {
+                let n = one(0)?.numel();
+                anyhow::ensure!(n > 0, "FC on empty input");
+                Shape::new(&[*out_f])
+            }
+            Op::MaxPool2 => {
+                let d = one(0)?.dims();
+                anyhow::ensure!(d.len() == 3, "MaxPool2 expects [C,H,W]");
+                Shape::new(&[d[0], d[1] / 2, d[2] / 2])
+            }
+            Op::GlobalAvgPool => {
+                let d = one(0)?.dims();
+                anyhow::ensure!(d.len() == 3, "GAP expects [C,H,W]");
+                Shape::new(&[d[0], 1, 1])
+            }
+            Op::Relu | Op::Relu6 | Op::Softmax => one(0)?.clone(),
+            Op::Add => {
+                let a = one(0)?;
+                let b = one(1)?;
+                anyhow::ensure!(a == b, "Add shape mismatch: {a} vs {b}");
+                a.clone()
+            }
+            Op::Flatten => Shape::new(&[one(0)?.numel()]),
+            Op::Gru { hidden, .. } => {
+                let d = one(0)?.dims();
+                anyhow::ensure!(d.len() == 2, "GRU expects [T, in_f]");
+                Shape::new(&[d[0], *hidden])
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape() {
+        let op = Op::Conv2d { out_c: 8, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let s = Shape::new(&[3, 32, 32]);
+        assert_eq!(op.infer_shape(&[&s]).unwrap().dims(), &[8, 32, 32]);
+    }
+
+    #[test]
+    fn pool_and_fc() {
+        let s = Shape::new(&[8, 16, 16]);
+        assert_eq!(Op::MaxPool2.infer_shape(&[&s]).unwrap().dims(), &[8, 8, 8]);
+        assert_eq!(Op::Fc { out_f: 10 }.infer_shape(&[&s]).unwrap().dims(), &[10]);
+    }
+
+    #[test]
+    fn add_requires_matching_shapes() {
+        let a = Shape::new(&[4]);
+        let b = Shape::new(&[5]);
+        assert!(Op::Add.infer_shape(&[&a, &b]).is_err());
+        assert!(Op::Add.infer_shape(&[&a, &a]).is_ok());
+    }
+
+    #[test]
+    fn gru_shape() {
+        let s = Shape::new(&[20, 39]);
+        let op = Op::Gru { hidden: 64, layers: 2 };
+        assert_eq!(op.infer_shape(&[&s]).unwrap().dims(), &[20, 64]);
+    }
+
+    #[test]
+    fn weighted_flags() {
+        assert!(Op::Fc { out_f: 1 }.is_weighted());
+        assert!(!Op::Relu.is_weighted());
+    }
+}

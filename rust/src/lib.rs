@@ -1,0 +1,51 @@
+//! # GRIM — General Real-time Inference for Mobiles
+//!
+//! A reproduction of *GRIM: A General, Real-Time Deep Learning Inference
+//! Framework for Mobile Devices based on Fine-Grained Structured Weight
+//! Sparsity* (Niu et al., 2021) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate implements, from scratch:
+//!
+//! * **BCR sparsity substrate** ([`sparse`]) — Block-based Column-Row masks,
+//!   the BCRC compact storage format, CSR, matrix reordering, and the
+//!   pattern-based (PatDNN-style) and 2:4 baselines.
+//! * **Compute kernels** ([`gemm`], [`conv`]) — dense GEMM at several
+//!   optimization levels, sparse GEMM over CSR and BCRC with register-level
+//!   load-redundancy elimination, im2col with pruned-column skipping,
+//!   Winograd for the dense baselines.
+//! * **The GRIM compiler** ([`graph`], [`compiler`]) — a DSL and layerwise
+//!   IR carrying BCR metadata, and passes that lower a computational graph
+//!   into an [`compiler::plan::ExecutionPlan`].
+//! * **Auto-tuning** ([`tuner`]) — the paper's genetic-algorithm tuner over
+//!   tiling / unrolling / threading parameters.
+//! * **Block-size optimization** ([`blockopt`]) — Listing 1 of the paper.
+//! * **Models** ([`models`]) — VGG-16, ResNet-18, MobileNet-V2, and GRU
+//!   graph builders with mini presets used in the experiments.
+//! * **Engine + coordinator** ([`engine`], [`coordinator`]) — plan executor
+//!   over a scoped thread pool, and the L3 serving loop (request queue,
+//!   dynamic batcher, workers, latency metrics).
+//! * **PJRT runtime** ([`runtime`]) — loads HLO text AOT-compiled by the
+//!   python layer (`python/compile/aot.py`) and executes it via the `xla`
+//!   crate; this is the XLA dense baseline and the rust↔jax numeric bridge.
+//!
+//! Python (JAX + Pallas) appears only at build time; see `python/compile/`.
+
+pub mod util;
+pub mod tensor;
+pub mod sparse;
+pub mod gemm;
+pub mod conv;
+pub mod graph;
+pub mod compiler;
+pub mod tuner;
+pub mod blockopt;
+pub mod models;
+pub mod engine;
+pub mod coordinator;
+pub mod runtime;
+pub mod baselines;
+pub mod formats;
+pub mod bench;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

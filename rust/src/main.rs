@@ -1,0 +1,318 @@
+//! `grim` — the CLI leader binary.
+//!
+//! Subcommands:
+//!   serve     start the inference server on a model and drive a workload
+//!   run       single inference on a model (random or .grim weights)
+//!   inspect   compile a model and print its execution plan
+//!   tune      auto-tune a model's layers (GA), print chosen configs
+//!   blockopt  run the Listing-1 block-size optimizer for a layer shape
+//!   xla       load + execute an AOT HLO artifact (jax bridge smoke test)
+//!   export    build a model with random BCR weights and save a .grim
+//!
+//! No clap in the vendored dep set — a hand-rolled flag parser keeps the
+//! surface small.
+
+use grim::compiler::passes::{compile, Backend, CompileOptions};
+use grim::coordinator::{Server, ServerConfig};
+use grim::engine::Engine;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::runtime::ArtifactStore;
+use grim::tensor::Tensor;
+use grim::util::Rng;
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&flags),
+        "run" => cmd_run(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "tune" => cmd_tune(&flags),
+        "blockopt" => cmd_blockopt(&flags),
+        "xla" => cmd_xla(&flags),
+        "export" => cmd_export(&flags),
+        "report" => cmd_report(&flags),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "grim — BCR-sparse real-time DNN inference (paper reproduction)
+
+USAGE: grim <command> [--flag value ...]
+
+COMMANDS:
+  serve    --model vgg16 --preset cifar-mini --rate 8 --threads 8 --requests 64 --batch 8
+  run      --model resnet18 --preset cifar-mini --rate 8 [--grim-file m.grim] [--backend grim|naive|opt|csr]
+  inspect  --model vgg16 --preset cifar-mini --rate 8
+  tune     --model vgg16 --preset cifar-mini --rate 8 [--generations 6]
+  blockopt --rows 1024 --cols 1024 --rate 10 [--n 64] [--threshold 1.1]
+  xla      --artifact <stem> (from artifacts/*.hlo.txt)
+  export   --model gru --preset timit-mini --rate 10 --out model.grim
+  report   [--name fig11|table1|...]  pretty-print bench_out/*.json"
+    );
+}
+
+type Flags = HashMap<String, String>;
+
+fn parse_flags(args: &[String]) -> Flags {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn flag<T: std::str::FromStr>(f: &Flags, key: &str, default: T) -> T {
+    f.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn model_from_flags(
+    f: &Flags,
+) -> anyhow::Result<(grim::graph::dsl::Module, grim::compiler::WeightStore)> {
+    if let Some(path) = f.get("grim-file") {
+        return grim::formats::load_grim(std::path::Path::new(path));
+    }
+    let kind = ModelKind::parse(&flag(f, "model", "vgg16".to_string()))?;
+    let preset = Preset::parse(&flag(f, "preset", "cifar-mini".to_string()))?;
+    let opts = InitOptions {
+        rate: flag(f, "rate", 8.0),
+        block: [flag(f, "block-r", 4usize), flag(f, "block-c", 16usize)],
+        seed: flag(f, "seed", 42u64),
+    };
+    let module = build_model(kind, preset, opts);
+    let weights = random_weights(&module, opts);
+    Ok((module, weights))
+}
+
+fn backend_from_flags(f: &Flags) -> anyhow::Result<Backend> {
+    Ok(match flag(f, "backend", "grim".to_string()).as_str() {
+        "grim" => Backend::Grim,
+        "naive" | "tflite" => Backend::NaiveDense,
+        "opt" | "mnn" | "tvm" => Backend::OptDense,
+        "csr" => Backend::CsrSparse,
+        other => anyhow::bail!("unknown backend '{other}'"),
+    })
+}
+
+fn input_for(module: &grim::graph::dsl::Module, rng: &mut Rng) -> anyhow::Result<Tensor> {
+    let shapes = module.graph.infer_shapes()?;
+    let s = &shapes[module.graph.input()?];
+    Ok(Tensor::rand_uniform(s.dims(), 1.0, rng))
+}
+
+fn cmd_run(f: &Flags) -> anyhow::Result<()> {
+    let (module, weights) = model_from_flags(f)?;
+    let backend = backend_from_flags(f)?;
+    let plan = compile(&module, &weights, CompileOptions::for_backend(backend))?;
+    let mut engine = Engine::new(plan, flag(f, "threads", 8usize));
+    engine.collect_metrics = true;
+    let mut rng = Rng::new(7);
+    let x = input_for(&module, &mut rng)?;
+    engine.run(&x)?; // warmup
+    let (out, metrics) = engine.run_with_metrics(&x)?;
+    println!("model={} backend={backend:?}", module.name);
+    println!("output numel={} argmax={}", out.numel(), out.argmax());
+    println!("latency: {:.3} ms", metrics.total_ms());
+    // per-kind time breakdown (profiling view)
+    let mut by_kind: std::collections::BTreeMap<&str, f64> = Default::default();
+    for l in &metrics.layers {
+        *by_kind.entry(l.kind).or_default() += l.micros;
+    }
+    for (k, us) in by_kind {
+        println!("  {k:<8} {:.3} ms", us / 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_inspect(f: &Flags) -> anyhow::Result<()> {
+    let (module, weights) = model_from_flags(f)?;
+    let plan = compile(&module, &weights, CompileOptions::default())?;
+    println!("model: {}", module.name);
+    println!("dense MACs: {}", module.graph.dense_macs()?);
+    println!("storage: {} bytes", plan.storage_bytes());
+    print!("{}", plan.describe());
+    Ok(())
+}
+
+fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
+    let (module, weights) = model_from_flags(f)?;
+    let plan = compile(&module, &weights, CompileOptions::default())?;
+    let engine = Engine::new(plan, flag(f, "threads", 8usize));
+    let mut config = ServerConfig::default();
+    config.batch.max_batch = flag(f, "batch", 8usize);
+    let server = Server::start(engine, config);
+    let n = flag(f, "requests", 64usize);
+    let mut rng = Rng::new(11);
+    println!("serving {n} requests on {} ...", module.name);
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        rxs.push(server.submit(input_for(&module, &mut rng)?)?);
+    }
+    for rx in rxs {
+        rx.recv()?;
+    }
+    let stats = server.shutdown();
+    println!(
+        "completed={} batches={} p50={:.3}ms p90={:.3}ms p99={:.3}ms throughput={:.1} rps",
+        stats.completed,
+        stats.batches,
+        stats.latency_ms.p50,
+        stats.latency_ms.p90,
+        stats.latency_ms.p99,
+        stats.throughput_rps
+    );
+    Ok(())
+}
+
+fn cmd_tune(f: &Flags) -> anyhow::Result<()> {
+    use grim::tuner::{tune_layer, GaConfig, SearchSpace};
+    let (module, weights) = model_from_flags(f)?;
+    let ga = GaConfig {
+        generations: flag(f, "generations", 4usize),
+        population: flag(f, "population", 8usize),
+        ..Default::default()
+    };
+    let space = SearchSpace::default();
+    println!("tuning {} (pop={} gen={})", module.name, ga.population, ga.generations);
+    for node in module.graph.weighted_layers() {
+        let Some(lw) = weights.get(&node.name) else { continue };
+        let Some(mask) = &lw.mask else { continue };
+        let enc = grim::sparse::Bcrc::from_masked(&lw.w, mask);
+        let (rows, cols) = lw.w.shape().as_matrix();
+        let mut rng = Rng::new(5);
+        let x = Tensor::rand_uniform(&[cols, 32], 1.0, &mut rng);
+        let res = tune_layer(&space, ga, |cfg| {
+            let g = grim::gemm::BcrcGemm::new(enc.clone(), cfg.gemm_params());
+            std::hint::black_box(g.execute(&x));
+        });
+        println!(
+            "  {:<16} [{rows}x{cols}] -> unroll={} tile={} ({:.4} ms, {} evals)",
+            node.name, res.best.unroll, res.best.n_tile, res.best_ms, res.evals
+        );
+    }
+    Ok(())
+}
+
+fn cmd_blockopt(f: &Flags) -> anyhow::Result<()> {
+    use grim::blockopt::{default_candidates, find_opt_block};
+    use grim::util::ThreadPool;
+    let rows = flag(f, "rows", 1024usize);
+    let cols = flag(f, "cols", 1024usize);
+    let rate = flag(f, "rate", 10.0f64);
+    let n = flag(f, "n", 64usize);
+    let threshold = flag(f, "threshold", 1.1f64);
+    let pool = ThreadPool::new(flag(f, "threads", 8usize));
+    let cands = default_candidates(rows, cols);
+    let res = find_opt_block(rows, cols, rate, &cands, n, threshold, &pool, 17);
+    println!("block-size search for [{rows}x{cols}] @ {rate}x, N={n}:");
+    for (b, ms) in &res.tried {
+        println!("  block {:>4}x{:<3} -> {:.4} ms", b[0], b[1], ms);
+    }
+    println!("optimal block: {}x{} ({:.4} ms)", res.opt_block[0], res.opt_block[1], res.opt_ms);
+    Ok(())
+}
+
+fn cmd_xla(f: &Flags) -> anyhow::Result<()> {
+    let store = ArtifactStore::default_dir();
+    let stems = store.list();
+    anyhow::ensure!(!stems.is_empty(), "no artifacts found — run `make artifacts`");
+    let stem = flag(f, "artifact", stems[0].clone());
+    println!("available artifacts: {stems:?}");
+    let model = store.load(&stem)?;
+    println!("loaded + compiled '{}'", model.name());
+    Ok(())
+}
+
+fn cmd_report(f: &Flags) -> anyhow::Result<()> {
+    use grim::util::json;
+    let dir = std::path::Path::new("bench_out");
+    anyhow::ensure!(dir.exists(), "bench_out/ not found — run `cargo bench` or `make tableN` first");
+    let filter = f.get("name").cloned();
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?
+        .flatten()
+        .filter(|e| e.path().extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let stem = e.path().file_stem().unwrap().to_string_lossy().to_string();
+        if let Some(fname) = &filter {
+            if &stem != fname {
+                continue;
+            }
+        }
+        let text = std::fs::read_to_string(e.path())?;
+        let v = json::parse(&text)?;
+        if let (Some(title), Some(cols), Some(rows)) = (
+            v.get("title").and_then(|t| t.as_str()),
+            v.get("columns").and_then(|c| c.as_arr()),
+            v.get("rows").and_then(|r| r.as_arr()),
+        ) {
+            // bench Report format
+            println!("\n=== {title} ===");
+            let header: Vec<&str> = cols.iter().filter_map(|c| c.as_str()).collect();
+            println!("{}", header.join("  "));
+            for r in rows {
+                if let Some(cells) = r.as_arr() {
+                    let line: Vec<&str> = cells.iter().filter_map(|c| c.as_str()).collect();
+                    println!("{}", line.join("  "));
+                }
+            }
+        } else {
+            // python experiment format (tables 1-3)
+            println!("\n=== {stem} ===");
+            if let Some(rows) = v.get("rows").and_then(|r| r.as_arr()) {
+                for r in rows {
+                    let scheme = r.get("scheme").and_then(|x| x.as_str()).unwrap_or("?");
+                    let rate = r.get("rate").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                    let acc = r
+                        .get("sparse")
+                        .or_else(|| r.get("sparse_per"))
+                        .and_then(|x| x.as_f64());
+                    match acc {
+                        Some(a) => println!("  {scheme:>10} @ {rate:>6.1}x -> {a:.3}"),
+                        None => println!("  {scheme:>10} @ {rate:>6.1}x -> (failed)"),
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_export(f: &Flags) -> anyhow::Result<()> {
+    let (module, weights) = model_from_flags(f)?;
+    let out = flag(f, "out", "model.grim".to_string());
+    grim::formats::save_grim(std::path::Path::new(&out), &module, &weights)?;
+    println!("wrote {out} ({} layers)", weights.len());
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! The 2-layer GRU of §6.1 ("GRU contains 2 GRU layers and about 9.6M
+//! parameters"), used for the TIMIT-analog experiments (Table 3) and the
+//! RNN kernel benches (Figure 12).
+
+use crate::graph::{Graph, Op};
+use crate::tensor::Shape;
+
+/// Build the GRU classifier: `[T, in_f]` → GRU stack → FC over the whole
+/// sequence output → per-run class logits.
+pub fn gru_model(seq_len: usize, in_f: usize, hidden: usize, layers: usize, classes: usize) -> Graph {
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: Shape::new(&[seq_len, in_f]) }, &[]);
+    let r = g.add("gru", Op::Gru { hidden, layers }, &[x]);
+    let f = g.add("flat", Op::Flatten, &[r]);
+    let fc = g.add("fc", Op::Fc { out_f: classes }, &[f]);
+    g.add("prob", Op::Softmax, &[fc]);
+    g
+}
+
+/// The paper's GRU dimensions (≈9.6M parameters: in=153→1024 hidden ×2
+/// layers ×3 gates). `scale` shrinks hidden width for the mini preset.
+pub fn paper_gru(scale: f64, seq_len: usize, classes: usize) -> Graph {
+    let hidden = ((1024.0 * scale).round() as usize).max(16);
+    let in_f = ((152.0 * scale).round() as usize).max(8);
+    gru_model(seq_len, in_f, hidden, 2, classes)
+}
+
+/// Parameter count of a GRU stack (3 gates × [h, in+h] per layer + biases).
+pub fn gru_params(in_f: usize, hidden: usize, layers: usize) -> usize {
+    let mut total = 0;
+    let mut d = in_f;
+    for _ in 0..layers {
+        total += 3 * (hidden * (d + hidden) + hidden);
+        d = hidden;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let g = gru_model(20, 39, 64, 2, 40);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().dims(), &[40]);
+    }
+
+    #[test]
+    fn paper_scale_is_9_6m() {
+        // full-scale: in=152, hidden=1024, 2 layers
+        let p = gru_params(152, 1024, 2);
+        assert!(p > 9_000_000 && p < 10_500_000, "params={p}");
+    }
+}

@@ -1,0 +1,102 @@
+//! MobileNet-V2 (Sandler et al. 2018): inverted-residual bottlenecks with
+//! depthwise convolutions and ReLU6. The pointwise (1×1) convs carry the
+//! BCR pruning; depthwise layers stay dense (paper §6.2's MobileNet rows
+//! have lower rates for exactly this reason).
+
+use crate::graph::{Graph, NodeId, Op};
+use crate::tensor::Shape;
+
+/// One inverted residual: 1x1 expand → ReLU6 → 3x3 depthwise → ReLU6 →
+/// 1x1 project (+ residual when stride 1 and channels match).
+fn inverted_residual(
+    g: &mut Graph,
+    name: &str,
+    input: NodeId,
+    in_c: usize,
+    out_c: usize,
+    stride: usize,
+    expand: usize,
+) -> NodeId {
+    let hidden = in_c * expand;
+    let mut cur = input;
+    if expand != 1 {
+        cur = g.add(
+            &format!("{name}_expand"),
+            Op::Conv2d { out_c: hidden, kh: 1, kw: 1, stride: 1, pad: 0 },
+            &[cur],
+        );
+        cur = g.add(&format!("{name}_expand_relu"), Op::Relu6, &[cur]);
+    }
+    cur = g.add(
+        &format!("{name}_dw"),
+        Op::DwConv2d { kh: 3, kw: 3, stride, pad: 1 },
+        &[cur],
+    );
+    cur = g.add(&format!("{name}_dw_relu"), Op::Relu6, &[cur]);
+    cur = g.add(
+        &format!("{name}_project"),
+        Op::Conv2d { out_c, kh: 1, kw: 1, stride: 1, pad: 0 },
+        &[cur],
+    );
+    if stride == 1 && in_c == out_c {
+        cur = g.add(&format!("{name}_add"), Op::Add, &[cur, input]);
+    }
+    cur
+}
+
+/// Build MobileNet-V2. `scale` is the width multiplier.
+pub fn mobilenet_v2(scale: f64, in_shape: [usize; 3], classes: usize) -> Graph {
+    let ch = |c: usize| ((c as f64 * scale).round() as usize).max(4);
+    let mut g = Graph::new();
+    let input = g.add("in", Op::Input { shape: Shape::new(&in_shape) }, &[]);
+    let stem = g.add(
+        "stem",
+        Op::Conv2d { out_c: ch(32), kh: 3, kw: 3, stride: 1, pad: 1 },
+        &[input],
+    );
+    let mut cur = g.add("stem_relu", Op::Relu6, &[stem]);
+    // (expand, out_c, repeats, first_stride) — the V2 table, spatially
+    // compressed for 32x32-class inputs.
+    let cfg: [(usize, usize, usize, usize); 5] =
+        [(1, ch(16), 1, 1), (6, ch(24), 2, 1), (6, ch(32), 2, 2), (6, ch(64), 2, 2), (6, ch(96), 2, 1)];
+    let mut in_c = ch(32);
+    for (bi, (t, c, n, s)) in cfg.iter().enumerate() {
+        for r in 0..*n {
+            let stride = if r == 0 { *s } else { 1 };
+            cur = inverted_residual(&mut g, &format!("b{}r{}", bi + 1, r + 1), cur, in_c, *c, stride, *t);
+            in_c = *c;
+        }
+    }
+    let head = g.add(
+        "head",
+        Op::Conv2d { out_c: ch(320), kh: 1, kw: 1, stride: 1, pad: 0 },
+        &[cur],
+    );
+    let head_relu = g.add("head_relu", Op::Relu6, &[head]);
+    let gap = g.add("gap", Op::GlobalAvgPool, &[head_relu]);
+    let flat = g.add("flat", Op::Flatten, &[gap]);
+    let fc = g.add("fc", Op::Fc { out_f: classes }, &[flat]);
+    g.add("prob", Op::Softmax, &[fc]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_infers() {
+        let g = mobilenet_v2(1.0, [3, 32, 32], 10);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().dims(), &[10]);
+    }
+
+    #[test]
+    fn has_depthwise_and_residuals() {
+        let g = mobilenet_v2(0.5, [3, 32, 32], 10);
+        let dw = g.nodes().iter().filter(|n| matches!(n.op, Op::DwConv2d { .. })).count();
+        let adds = g.nodes().iter().filter(|n| matches!(n.op, Op::Add)).count();
+        assert_eq!(dw, 9); // 1+2+2+2+2 blocks
+        assert!(adds >= 3);
+    }
+}

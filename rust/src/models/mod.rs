@@ -1,0 +1,40 @@
+//! Model zoo: graph builders for the paper's four evaluation networks —
+//! VGG-16, ResNet-18, MobileNet-V2 (CNNs, §6.2 Tables 1–2) and the
+//! 2-layer GRU (RNN, Table 3) — plus mini presets scaled for the
+//! synthetic datasets (DESIGN.md §2 substitutions).
+//!
+//! Batch-norm layers are folded into conv biases (standard inference-time
+//! folding; the paper's deployed models do the same).
+
+pub mod vgg;
+pub mod resnet;
+pub mod mobilenet;
+pub mod gru;
+pub mod zoo;
+
+pub use zoo::{build_model, random_weights, InitOptions, ModelKind, Preset};
+
+/// Find the largest divisor of `n` that is `<= want`. Block sizes must
+/// divide the GEMM matrix dims; e.g. a 27-column conv GEMM cannot take
+/// column-block 16, so it degrades to 9.
+pub fn fit_divisor(n: usize, want: usize) -> usize {
+    let mut d = want.min(n).max(1);
+    while n % d != 0 {
+        d -= 1;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_divisor_basics() {
+        assert_eq!(fit_divisor(27, 16), 9);
+        assert_eq!(fit_divisor(64, 16), 16);
+        assert_eq!(fit_divisor(10, 4), 2);
+        assert_eq!(fit_divisor(7, 16), 7);
+        assert_eq!(fit_divisor(1, 4), 1);
+    }
+}

@@ -1,0 +1,90 @@
+//! ResNet-18 (He et al. 2016): 4 stages of 2 basic blocks with identity /
+//! projection shortcuts. BN folded into conv bias.
+
+use crate::graph::{Graph, NodeId, Op};
+use crate::tensor::Shape;
+
+/// One basic block: conv3x3 → relu → conv3x3, plus shortcut, then relu.
+#[allow(clippy::too_many_arguments)]
+fn basic_block(
+    g: &mut Graph,
+    name: &str,
+    input: NodeId,
+    in_c: usize,
+    out_c: usize,
+    stride: usize,
+) -> NodeId {
+    let c1 = g.add(
+        &format!("{name}_conv1"),
+        Op::Conv2d { out_c, kh: 3, kw: 3, stride, pad: 1 },
+        &[input],
+    );
+    let r1 = g.add(&format!("{name}_relu1"), Op::Relu, &[c1]);
+    let c2 = g.add(
+        &format!("{name}_conv2"),
+        Op::Conv2d { out_c, kh: 3, kw: 3, stride: 1, pad: 1 },
+        &[r1],
+    );
+    let shortcut = if stride != 1 || in_c != out_c {
+        g.add(
+            &format!("{name}_proj"),
+            Op::Conv2d { out_c, kh: 1, kw: 1, stride, pad: 0 },
+            &[input],
+        )
+    } else {
+        input
+    };
+    let add = g.add(&format!("{name}_add"), Op::Add, &[c2, shortcut]);
+    g.add(&format!("{name}_relu2"), Op::Relu, &[add])
+}
+
+/// Build ResNet-18. `scale` multiplies channel widths.
+pub fn resnet18(scale: f64, in_shape: [usize; 3], classes: usize) -> Graph {
+    let ch = |c: usize| ((c as f64 * scale).round() as usize).max(4);
+    let mut g = Graph::new();
+    let input = g.add("in", Op::Input { shape: Shape::new(&in_shape) }, &[]);
+    // stem: 3x3 stride 1 for small inputs (CIFAR-style stem)
+    let stem = g.add(
+        "stem",
+        Op::Conv2d { out_c: ch(64), kh: 3, kw: 3, stride: 1, pad: 1 },
+        &[input],
+    );
+    let mut cur = g.add("stem_relu", Op::Relu, &[stem]);
+    let stage_cfg = [(ch(64), 1), (ch(128), 2), (ch(256), 2), (ch(512), 2)];
+    let mut in_c = ch(64);
+    for (si, (out_c, first_stride)) in stage_cfg.iter().enumerate() {
+        for b in 0..2 {
+            let stride = if b == 0 { *first_stride } else { 1 };
+            cur = basic_block(&mut g, &format!("s{}b{}", si + 1, b + 1), cur, in_c, *out_c, stride);
+            in_c = *out_c;
+        }
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, &[cur]);
+    let flat = g.add("flat", Op::Flatten, &[gap]);
+    let fc = g.add("fc", Op::Fc { out_f: classes }, &[flat]);
+    g.add("prob", Op::Softmax, &[fc]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_layer_count() {
+        let g = resnet18(1.0, [3, 32, 32], 10);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().dims(), &[10]);
+        // stem + 8 blocks * 2 convs + 3 projections + fc = 1 + 16 + 3 + 1 = 21
+        assert_eq!(g.weighted_layers().len(), 21);
+    }
+
+    #[test]
+    fn downsampling_halves_spatial() {
+        let g = resnet18(0.25, [3, 32, 32], 10);
+        let shapes = g.infer_shapes().unwrap();
+        let last_add = g.find("s4b2_relu2").unwrap();
+        // 32 -> 32 (s1) -> 16 (s2) -> 8 (s3) -> 4 (s4)
+        assert_eq!(shapes[last_add].dim(1), 4);
+    }
+}

@@ -1,0 +1,84 @@
+//! VGG-16 (Simonyan & Zisserman 2014): 13 CONV layers in 5 stages + FC
+//! head. Table 4 of the paper lists the CONV shapes L1–L9 we reproduce in
+//! the breakdown bench.
+
+use crate::graph::{Graph, Op};
+use crate::tensor::Shape;
+
+/// Build the VGG-16 graph. `scale` multiplies channel widths (1.0 = the
+/// paper's model, 0.25 = the mini preset), `in_shape = [C,H,W]`.
+pub fn vgg16(scale: f64, in_shape: [usize; 3], classes: usize) -> Graph {
+    let ch = |c: usize| ((c as f64 * scale).round() as usize).max(4);
+    let mut g = Graph::new();
+    let mut cur = g.add("in", Op::Input { shape: Shape::new(&in_shape) }, &[]);
+    let stages: [(usize, usize); 5] =
+        [(ch(64), 2), (ch(128), 2), (ch(256), 3), (ch(512), 3), (ch(512), 3)];
+    let mut li = 0;
+    for (si, (c, reps)) in stages.iter().enumerate() {
+        for r in 0..*reps {
+            li += 1;
+            let conv = g.add(
+                &format!("conv{li}"),
+                Op::Conv2d { out_c: *c, kh: 3, kw: 3, stride: 1, pad: 1 },
+                &[cur],
+            );
+            let relu = g.add(&format!("relu{li}"), Op::Relu, &[conv]);
+            cur = relu;
+            let _ = (si, r);
+        }
+        cur = g.add(&format!("pool{}", si + 1), Op::MaxPool2, &[cur]);
+    }
+    cur = g.add("flat", Op::Flatten, &[cur]);
+    // FC head (two hidden FCs as in VGG, scaled)
+    let fc_dim = ch(512);
+    cur = g.add("fc1", Op::Fc { out_f: fc_dim }, &[cur]);
+    cur = g.add("fc1_relu", Op::Relu, &[cur]);
+    cur = g.add("fc2", Op::Fc { out_f: fc_dim }, &[cur]);
+    cur = g.add("fc2_relu", Op::Relu, &[cur]);
+    cur = g.add("fc3", Op::Fc { out_f: classes }, &[cur]);
+    g.add("prob", Op::Softmax, &[cur]);
+    g
+}
+
+/// The paper's Table 4 layer shapes `[out_c, in_c, kh, kw]` for the
+/// Figure 13 breakdown bench.
+pub const TABLE4_LAYERS: [(&str, [usize; 4]); 9] = [
+    ("L1", [64, 3, 3, 3]),
+    ("L2", [64, 64, 3, 3]),
+    ("L3", [128, 64, 3, 3]),
+    ("L4", [128, 128, 3, 3]),
+    ("L5", [256, 128, 3, 3]),
+    ("L6", [256, 256, 3, 3]),
+    ("L7", [512, 256, 3, 3]),
+    ("L8", [512, 512, 3, 3]),
+    ("L9", [512, 512, 3, 3]),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_vgg_shapes() {
+        let g = vgg16(1.0, [3, 32, 32], 10);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().dims(), &[10]);
+        // 13 convs + 3 fcs
+        assert_eq!(g.weighted_layers().len(), 16);
+    }
+
+    #[test]
+    fn mini_vgg_small() {
+        let g = vgg16(0.25, [3, 32, 32], 10);
+        let shapes = g.infer_shapes().unwrap();
+        // first conv has 16 channels at scale 0.25
+        let c1 = g.find("conv1").unwrap();
+        assert_eq!(shapes[c1].dim(0), 16);
+    }
+
+    #[test]
+    fn imagenet_input_works() {
+        let g = vgg16(0.5, [3, 64, 64], 16);
+        assert!(g.infer_shapes().is_ok());
+    }
+}

@@ -1,0 +1,282 @@
+//! Zoo glue: build a DSL [`Module`] for any paper model at any preset, and
+//! synthesize BCR-pruned weights for it (random for benches; trained
+//! weights come from the python export via [`crate::formats`]).
+
+use super::{fit_divisor, gru, mobilenet, resnet, vgg};
+use crate::compiler::weights::{gru_key, LayerWeights, WeightStore};
+use crate::graph::dsl::Module;
+use crate::graph::{Graph, LayerIr, Op};
+use crate::sparse::{BcrConfig, BcrMask};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// The paper's evaluation models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Vgg16,
+    Resnet18,
+    MobilenetV2,
+    Gru,
+}
+
+impl ModelKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::Vgg16 => "vgg16",
+            ModelKind::Resnet18 => "resnet18",
+            ModelKind::MobilenetV2 => "mobilenetv2",
+            ModelKind::Gru => "gru",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "vgg16" | "vgg" => ModelKind::Vgg16,
+            "resnet18" | "rnt" => ModelKind::Resnet18,
+            "mobilenetv2" | "mbnt" => ModelKind::MobilenetV2,
+            "gru" => ModelKind::Gru,
+            other => anyhow::bail!("unknown model '{other}'"),
+        })
+    }
+}
+
+/// Dataset/scale presets (the substitution analogs of §6.1's testbeds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// CIFAR-10 analog: 32×32×3 input, 10 classes, 0.25× channels.
+    CifarMini,
+    /// ImageNet analog: 64×64×3 input, 16 classes, 0.5× channels.
+    ImagenetMini,
+    /// TIMIT analog: 20×39 MFCC-like sequences, 40 phone classes,
+    /// hidden scaled to 128.
+    TimitMini,
+    /// Full-size paper models (for storage/shape accounting only; too
+    /// slow for per-commit tests).
+    Full,
+}
+
+impl Preset {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Preset::CifarMini => "cifar-mini",
+            Preset::ImagenetMini => "imagenet-mini",
+            Preset::TimitMini => "timit-mini",
+            Preset::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "cifar-mini" | "cifar" => Preset::CifarMini,
+            "imagenet-mini" | "imagenet" => Preset::ImagenetMini,
+            "timit-mini" | "timit" => Preset::TimitMini,
+            "full" => Preset::Full,
+            other => anyhow::bail!("unknown preset '{other}'"),
+        })
+    }
+}
+
+/// Build the graph for (kind, preset).
+pub fn build_graph(kind: ModelKind, preset: Preset) -> Graph {
+    match (kind, preset) {
+        (ModelKind::Vgg16, Preset::CifarMini) => vgg::vgg16(0.25, [3, 32, 32], 10),
+        (ModelKind::Vgg16, Preset::ImagenetMini) => vgg::vgg16(0.5, [3, 64, 64], 16),
+        (ModelKind::Vgg16, Preset::Full) => vgg::vgg16(1.0, [3, 224, 224], 1000),
+        (ModelKind::Resnet18, Preset::CifarMini) => resnet::resnet18(0.25, [3, 32, 32], 10),
+        (ModelKind::Resnet18, Preset::ImagenetMini) => resnet::resnet18(0.5, [3, 64, 64], 16),
+        (ModelKind::Resnet18, Preset::Full) => resnet::resnet18(1.0, [3, 224, 224], 1000),
+        (ModelKind::MobilenetV2, Preset::CifarMini) => mobilenet::mobilenet_v2(0.5, [3, 32, 32], 10),
+        (ModelKind::MobilenetV2, Preset::ImagenetMini) => {
+            mobilenet::mobilenet_v2(0.75, [3, 64, 64], 16)
+        }
+        (ModelKind::MobilenetV2, Preset::Full) => mobilenet::mobilenet_v2(1.0, [3, 224, 224], 1000),
+        (ModelKind::Gru, Preset::Full) => gru::paper_gru(1.0, 20, 40),
+        (ModelKind::Gru, _) => gru::paper_gru(0.125, 20, 40),
+        (k, p) => panic!("unsupported combination {k:?}/{p:?}"),
+    }
+}
+
+/// Weight-init options.
+#[derive(Clone, Copy, Debug)]
+pub struct InitOptions {
+    /// Target BCR pruning rate (1.0 = dense).
+    pub rate: f64,
+    /// Preferred block size `[r, c]`; fitted per layer to divide the GEMM.
+    pub block: [usize; 2],
+    pub seed: u64,
+}
+
+impl Default for InitOptions {
+    fn default() -> Self {
+        InitOptions { rate: 8.0, block: [4, 16], seed: 0x6121 }
+    }
+}
+
+/// Build a full DSL module: graph + per-layer IR (block sizes fitted).
+pub fn build_model(kind: ModelKind, preset: Preset, opts: InitOptions) -> Module {
+    let graph = build_graph(kind, preset);
+    let shapes = graph.infer_shapes().expect("zoo graphs infer");
+    let mut irs = Vec::new();
+    for node in graph.weighted_layers() {
+        let (rows, cols) = gemm_dims(&graph, node.id, &shapes, &node.op);
+        // depthwise layers stay dense (cols = kh*kw too small for blocks)
+        let dense = matches!(node.op, Op::DwConv2d { .. }) || opts.rate <= 1.0;
+        let mut ir = LayerIr::default_for(&node.name, if dense { 1.0 } else { opts.rate });
+        ir.block_size = [fit_divisor(rows, opts.block[0]), fit_divisor(cols, opts.block[1])];
+        irs.push(ir);
+    }
+    Module { name: format!("{}-{}", kind.as_str(), preset.as_str()), graph, irs }
+}
+
+/// GEMM dims of one weighted node.
+fn gemm_dims(
+    graph: &Graph,
+    id: usize,
+    shapes: &[crate::tensor::Shape],
+    op: &Op,
+) -> (usize, usize) {
+    let in_shape = &shapes[graph.node(id).inputs[0]];
+    match op {
+        Op::Conv2d { out_c, kh, kw, .. } => (*out_c, in_shape.dim(0) * kh * kw),
+        Op::DwConv2d { kh, kw, .. } => (in_shape.dim(0), kh * kw),
+        Op::Fc { out_f } => (*out_f, in_shape.numel()),
+        Op::Gru { hidden, .. } => (*hidden, in_shape.dim(1) + hidden),
+        _ => unreachable!("not a weighted op"),
+    }
+}
+
+/// Random Kaiming-ish weights + random BCR masks matching the module IRs.
+pub fn random_weights(module: &Module, opts: InitOptions) -> WeightStore {
+    let graph = &module.graph;
+    let shapes = graph.infer_shapes().expect("shapes");
+    let mut rng = Rng::new(opts.seed);
+    let mut store: WeightStore = HashMap::new();
+    for node in graph.weighted_layers() {
+        match &node.op {
+            Op::Gru { hidden, layers } => {
+                let mut in_f = shapes[node.inputs[0]].dim(1);
+                for l in 0..*layers {
+                    for gate in ['z', 'r', 'h'] {
+                        let key = gru_key(&node.name, l, gate);
+                        let lw = make_layer(
+                            module,
+                            &node.name,
+                            *hidden,
+                            in_f + hidden,
+                            opts,
+                            &mut rng,
+                        );
+                        store.insert(key, lw);
+                    }
+                    in_f = *hidden;
+                }
+            }
+            op => {
+                let (rows, cols) = gemm_dims(graph, node.id, &shapes, op);
+                let lw = make_layer(module, &node.name, rows, cols, opts, &mut rng);
+                store.insert(node.name.clone(), lw);
+            }
+        }
+    }
+    store
+}
+
+fn make_layer(
+    module: &Module,
+    layer: &str,
+    rows: usize,
+    cols: usize,
+    _opts: InitOptions,
+    rng: &mut Rng,
+) -> LayerWeights {
+    let std = (2.0 / cols as f64).sqrt() as f32;
+    let mut w = Tensor::rand_normal(&[rows, cols], std, rng);
+    let ir = module.ir_for(layer);
+    let sparse = ir.map(|i| i.rate > 1.0).unwrap_or(false);
+    if sparse {
+        let ir = ir.unwrap();
+        let br = fit_divisor(rows, ir.block_size[0]);
+        let bc = fit_divisor(cols, ir.block_size[1]);
+        let cfg = BcrConfig::from_block_size(rows, cols, br, bc);
+        let mask = BcrMask::random(rows, cols, cfg, ir.rate, rng);
+        mask.apply(&mut w);
+        LayerWeights::dense(w).with_mask(mask).with_bias(vec![0.01; rows])
+    } else {
+        LayerWeights::dense(w).with_bias(vec![0.01; rows])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::{compile, Backend, CompileOptions};
+    use crate::engine::Engine;
+
+    fn opts(rate: f64) -> InitOptions {
+        InitOptions { rate, block: [4, 16], seed: 11 }
+    }
+
+    #[test]
+    fn all_models_compile_and_run_grim() {
+        for kind in [ModelKind::Vgg16, ModelKind::Resnet18, ModelKind::MobilenetV2, ModelKind::Gru] {
+            let m = build_model(kind, Preset::CifarMini, opts(6.0));
+            let w = random_weights(&m, opts(6.0));
+            let plan = compile(&m, &w, CompileOptions::default())
+                .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+            let engine = Engine::new(plan, 2);
+            let shapes = m.graph.infer_shapes().unwrap();
+            let in_shape = shapes[m.graph.input().unwrap()].clone();
+            let mut rng = Rng::new(3);
+            let x = Tensor::rand_uniform(in_shape.dims(), 1.0, &mut rng);
+            let out = engine.run(&x).unwrap();
+            assert!(out.numel() > 0, "{kind:?}");
+            assert!(out.data().iter().all(|v| v.is_finite()), "{kind:?} produced non-finite");
+        }
+    }
+
+    #[test]
+    fn grim_matches_dense_on_resnet() {
+        let m = build_model(ModelKind::Resnet18, Preset::CifarMini, opts(4.0));
+        let w = random_weights(&m, opts(4.0));
+        let grim = Engine::new(compile(&m, &w, CompileOptions::default()).unwrap(), 2);
+        let naive =
+            Engine::new(compile(&m, &w, CompileOptions::for_backend(Backend::NaiveDense)).unwrap(), 2);
+        let mut rng = Rng::new(5);
+        let x = Tensor::rand_uniform(&[3, 32, 32], 1.0, &mut rng);
+        let a = grim.run(&x).unwrap();
+        let b = naive.run(&x).unwrap();
+        assert!(a.allclose(&b, 1e-3, 1e-3), "maxdiff={}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn block_sizes_divide_gemms() {
+        let m = build_model(ModelKind::Vgg16, Preset::CifarMini, opts(8.0));
+        let shapes = m.graph.infer_shapes().unwrap();
+        for node in m.graph.weighted_layers() {
+            if let Some(ir) = m.ir_for(&node.name) {
+                let (rows, cols) = gemm_dims(&m.graph, node.id, &shapes, &node.op);
+                assert_eq!(rows % ir.block_size[0], 0, "{}", node.name);
+                assert_eq!(cols % ir.block_size[1], 0, "{}", node.name);
+            }
+        }
+    }
+
+    #[test]
+    fn storage_shrinks_with_rate() {
+        let lo = build_model(ModelKind::Vgg16, Preset::CifarMini, opts(2.0));
+        let hi = build_model(ModelKind::Vgg16, Preset::CifarMini, opts(16.0));
+        let wl = random_weights(&lo, opts(2.0));
+        let wh = random_weights(&hi, opts(16.0));
+        let pl = compile(&lo, &wl, CompileOptions::default()).unwrap();
+        let ph = compile(&hi, &wh, CompileOptions::default()).unwrap();
+        assert!(ph.storage_bytes() < pl.storage_bytes());
+    }
+
+    #[test]
+    fn model_kind_parse_round_trip() {
+        for k in [ModelKind::Vgg16, ModelKind::Resnet18, ModelKind::MobilenetV2, ModelKind::Gru] {
+            assert_eq!(ModelKind::parse(k.as_str()).unwrap(), k);
+        }
+    }
+}

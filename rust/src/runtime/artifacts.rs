@@ -1,0 +1,93 @@
+//! Artifact registry: discovers `artifacts/*.hlo.txt`, lazily compiles
+//! them, and answers staleness queries (is `make artifacts` needed?).
+
+use super::pjrt::XlaModel;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::cell::RefCell;
+
+/// Discovers and caches compiled HLO artifacts by stem name
+/// (`gru_step` ↔ `artifacts/gru_step.hlo.txt`).
+pub struct ArtifactStore {
+    dir: PathBuf,
+    // Rc because XlaModel is thread-confined (see pjrt.rs).
+    cache: RefCell<HashMap<String, std::rc::Rc<XlaModel>>>,
+}
+
+impl ArtifactStore {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        ArtifactStore { dir: dir.into(), cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Default location relative to the repo root.
+    pub fn default_dir() -> Self {
+        ArtifactStore::new("artifacts")
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// All artifact stems available on disk.
+    pub fn list(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    out.push(stem.to_string());
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    pub fn path_of(&self, stem: &str) -> PathBuf {
+        self.dir.join(format!("{stem}.hlo.txt"))
+    }
+
+    pub fn exists(&self, stem: &str) -> bool {
+        self.path_of(stem).exists()
+    }
+
+    /// Load (compiling at most once per thread/store) an artifact.
+    pub fn load(&self, stem: &str) -> anyhow::Result<std::rc::Rc<XlaModel>> {
+        let mut cache = self.cache.borrow_mut();
+        if let Some(m) = cache.get(stem) {
+            return Ok(std::rc::Rc::clone(m));
+        }
+        let path = self.path_of(stem);
+        anyhow::ensure!(
+            path.exists(),
+            "artifact '{stem}' not found at {path:?} — run `make artifacts` first"
+        );
+        let m = std::rc::Rc::new(XlaModel::load(&path)?);
+        cache.insert(stem.to_string(), std::rc::Rc::clone(&m));
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_gives_actionable_error() {
+        let store = ArtifactStore::new("/nonexistent-dir");
+        let err = store.load("nope").err().expect("must fail");
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn list_empty_dir() {
+        let store = ArtifactStore::new("/nonexistent-dir");
+        assert!(store.list().is_empty());
+    }
+
+    #[test]
+    fn path_naming() {
+        let store = ArtifactStore::new("artifacts");
+        assert_eq!(store.path_of("gru_step"), PathBuf::from("artifacts/gru_step.hlo.txt"));
+    }
+}

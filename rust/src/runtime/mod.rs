@@ -1,0 +1,16 @@
+//! PJRT runtime: load HLO text AOT-compiled by `python/compile/aot.py` and
+//! execute it through the `xla` crate's CPU client.
+//!
+//! This is the rust↔jax bridge of the three-layer architecture: python
+//! lowers the L2 jax model (with the L1 Pallas kernel inlined,
+//! `interpret=True`) to HLO *text* once at build time; the rust side
+//! compiles and runs it with no python on the request path. HLO text (not
+//! serialized proto) is required because jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects (see
+//! /opt/xla-example/README.md).
+
+pub mod pjrt;
+pub mod artifacts;
+
+pub use artifacts::ArtifactStore;
+pub use pjrt::XlaModel;

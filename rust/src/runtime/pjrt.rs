@@ -1,0 +1,80 @@
+//! Thin wrapper over the `xla` crate: one compiled executable per HLO
+//! artifact, executed with f32 tensors.
+
+use crate::tensor::Tensor;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread PJRT CPU client. The `xla` crate's client is `Rc`-based
+    /// (not `Send`), so the runtime is confined to whichever thread loads
+    /// the model — in practice the coordinator's scheduler thread or the
+    /// bench main thread; all parallelism lives inside XLA itself.
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> anyhow::Result<T>) -> anyhow::Result<T> {
+    CLIENT.with(|c| {
+        let mut c = c.borrow_mut();
+        if c.is_none() {
+            *c = Some(
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?,
+            );
+        }
+        f(c.as_ref().unwrap())
+    })
+}
+
+/// A compiled XLA computation loaded from HLO text.
+pub struct XlaModel {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl XlaModel {
+    /// Load + compile an HLO text file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|c| {
+            c.compile(&comp).map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))
+        })?;
+        Ok(XlaModel {
+            exe,
+            name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string(),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 inputs of the given shapes; returns the flat f32
+    /// outputs of the (single-tuple) result — aot.py always lowers with
+    /// `return_tuple=True`.
+    pub fn run(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape().dims().iter().map(|d| *d as i64).collect();
+                xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let tuple = lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}

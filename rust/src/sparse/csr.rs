@@ -1,0 +1,130 @@
+//! CSR (Compressed Sparse Row) — the paper's general sparse baseline
+//! (clSparse analog): per-row column indices, no sharing, no reorder.
+
+use crate::tensor::Tensor;
+
+/// A CSR-encoded sparse matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Length `rows + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Length nnz.
+    pub col_idx: Vec<u32>,
+    /// Length nnz.
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Encode every non-zero of a dense matrix.
+    pub fn from_dense(w: &Tensor) -> Self {
+        let (rows, cols) = w.shape().as_matrix();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = w.at2(r, c);
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        Csr { rows, cols, row_ptr, col_idx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Decode to dense.
+    pub fn decode(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        for r in 0..self.rows {
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            for k in lo..hi {
+                *out.at2_mut(r, self.col_idx[k] as usize) = self.values[k];
+            }
+        }
+        out
+    }
+
+    /// Extra (non-weight) storage in bytes, u32 indices — Figure 16's CSR
+    /// series: `row_ptr` + `col_idx`.
+    pub fn extra_bytes(&self) -> usize {
+        4 * (self.row_ptr.len() + self.col_idx.len())
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        4 * self.values.len() + self.extra_bytes()
+    }
+
+    /// Structural validation.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.row_ptr.len() == self.rows + 1);
+        anyhow::ensure!(self.col_idx.len() == self.values.len());
+        for w in self.row_ptr.windows(2) {
+            anyhow::ensure!(w[0] <= w[1], "row_ptr monotone");
+        }
+        anyhow::ensure!(*self.row_ptr.last().unwrap() as usize == self.values.len());
+        for r in 0..self.rows {
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            for k in lo..hi {
+                anyhow::ensure!((self.col_idx[k] as usize) < self.cols);
+                if k > lo {
+                    anyhow::ensure!(self.col_idx[k - 1] < self.col_idx[k], "cols ascending");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{BcrConfig, BcrMask};
+    use crate::util::Rng;
+
+    #[test]
+    fn round_trip_random_sparse() {
+        let mut rng = Rng::new(2);
+        let mask = BcrMask::random(32, 32, BcrConfig::new(4, 4), 4.0, &mut rng);
+        let mut w = Tensor::rand_uniform(&[32, 32], 1.0, &mut rng);
+        mask.apply(&mut w);
+        let csr = Csr::from_dense(&w);
+        csr.validate().unwrap();
+        assert_eq!(csr.decode(), w);
+    }
+
+    #[test]
+    fn nnz_counts_nonzeros() {
+        let w = Tensor::from_vec(&[2, 3], vec![0., 1., 0., 2., 0., 3.]);
+        let csr = Csr::from_dense(&w);
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.row_ptr, vec![0, 1, 3]);
+        assert_eq!(csr.col_idx, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let w = Tensor::zeros(&[3, 3]);
+        let csr = Csr::from_dense(&w);
+        csr.validate().unwrap();
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.decode(), w);
+    }
+
+    #[test]
+    fn extra_bytes() {
+        let w = Tensor::from_vec(&[2, 2], vec![1., 0., 0., 1.]);
+        let csr = Csr::from_dense(&w);
+        assert_eq!(csr.extra_bytes(), 4 * (3 + 2));
+    }
+}

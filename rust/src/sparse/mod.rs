@@ -1,0 +1,25 @@
+//! Sparsity substrate: BCR masks, the BCRC compact format, CSR, matrix
+//! reordering, and the baseline sparsity schemes (pattern-based / 2:4).
+//!
+//! Terminology follows the paper (§3):
+//!
+//! * A weight matrix `[rows, cols]` is split into a `grid_r × grid_c` grid
+//!   of equal blocks.
+//! * **BCR pruning** removes whole rows and whole columns *within each
+//!   block independently* — the surviving weights of a block still form a
+//!   dense sub-matrix.
+//! * After **matrix reorder** (§4.2) rows with identical surviving-column
+//!   signatures are adjacent, which both minimizes thread divergence and
+//!   lets **BCRC** (§4.3) share column indices between rows.
+
+pub mod mask;
+pub mod bcrc;
+pub mod csr;
+pub mod reorder;
+pub mod pattern;
+pub mod two_four;
+
+pub use bcrc::Bcrc;
+pub use csr::Csr;
+pub use mask::{BcrConfig, BcrMask};
+pub use reorder::ReorderPlan;

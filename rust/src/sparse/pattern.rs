@@ -1,0 +1,200 @@
+//! Pattern-based sparsity (the PatDNN baseline, paper §2 / Figure 1e).
+//!
+//! Kernel-pattern pruning keeps a fixed number of entries (4 of 9 for a
+//! 3×3 kernel) in one of a small library of patterns; connectivity pruning
+//! removes whole kernels. Expressed here in GEMM space: a CONV weight
+//! matrix is `[filters, channels*kh*kw]`, each kernel is a length-`kh*kw`
+//! column segment.
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// The canonical 4-entry pattern library for 3×3 kernels (indices into the
+/// flattened kernel). These are the center-heavy patterns PatDNN's SGD
+/// converges to; the exact library choice does not change the engine-side
+/// behaviour.
+pub const PATTERNS_3X3: [[usize; 4]; 8] = [
+    [0, 1, 3, 4],
+    [1, 2, 4, 5],
+    [3, 4, 6, 7],
+    [4, 5, 7, 8],
+    [0, 1, 4, 7],
+    [1, 2, 4, 7],
+    [1, 4, 6, 7],
+    [1, 4, 7, 8],
+];
+
+/// A pattern-pruning mask over a CONV layer in GEMM layout.
+#[derive(Clone, Debug)]
+pub struct PatternMask {
+    pub filters: usize,
+    pub channels: usize,
+    pub kernel: usize, // kh*kw
+    /// Chosen pattern per (filter, channel); `None` = kernel removed by
+    /// connectivity pruning.
+    pub choice: Vec<Option<u8>>,
+}
+
+impl PatternMask {
+    /// Random pattern assignment with `connectivity_rate` of kernels
+    /// removed entirely. Only supports 3×3 kernels (kernel == 9), as in
+    /// PatDNN.
+    pub fn random(
+        filters: usize,
+        channels: usize,
+        kernel: usize,
+        connectivity_rate: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        assert_eq!(kernel, 9, "pattern pruning defined for 3x3 kernels");
+        let choice = (0..filters * channels)
+            .map(|_| {
+                if rng.chance(connectivity_rate) {
+                    None
+                } else {
+                    Some(rng.index(PATTERNS_3X3.len()) as u8)
+                }
+            })
+            .collect();
+        PatternMask { filters, channels, kernel, choice }
+    }
+
+    /// Pick, per kernel, the pattern retaining the most weight magnitude
+    /// (the projection PatDNN/ADMM uses), with the lowest-magnitude
+    /// `connectivity_rate` kernels removed.
+    pub fn project(w: &Tensor, filters: usize, channels: usize, connectivity_rate: f64) -> Self {
+        let (rows, cols) = w.shape().as_matrix();
+        assert_eq!(rows, filters);
+        assert_eq!(cols, channels * 9);
+        // kernel magnitudes for connectivity pruning
+        let mut kmag: Vec<(f32, usize)> = Vec::with_capacity(filters * channels);
+        for f in 0..filters {
+            for ch in 0..channels {
+                let mut m = 0.0f32;
+                for k in 0..9 {
+                    m += w.at2(f, ch * 9 + k).abs();
+                }
+                kmag.push((m, f * channels + ch));
+            }
+        }
+        kmag.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let cut = ((connectivity_rate * kmag.len() as f64).round() as usize).min(kmag.len());
+        let mut removed = vec![false; filters * channels];
+        for (_, idx) in kmag.iter().take(cut) {
+            removed[*idx] = true;
+        }
+        let mut choice = vec![None; filters * channels];
+        for f in 0..filters {
+            for ch in 0..channels {
+                let idx = f * channels + ch;
+                if removed[idx] {
+                    continue;
+                }
+                // best pattern by retained magnitude
+                let mut best = 0usize;
+                let mut best_mag = f32::MIN;
+                for (p, pat) in PATTERNS_3X3.iter().enumerate() {
+                    let mag: f32 = pat.iter().map(|k| w.at2(f, ch * 9 + k).abs()).sum();
+                    if mag > best_mag {
+                        best_mag = mag;
+                        best = p;
+                    }
+                }
+                choice[idx] = Some(best as u8);
+            }
+        }
+        PatternMask { filters, channels, kernel: 9, choice }
+    }
+
+    /// Does GEMM entry `(f, c)` survive?
+    pub fn alive(&self, f: usize, c: usize) -> bool {
+        let ch = c / self.kernel;
+        let k = c % self.kernel;
+        match self.choice[f * self.channels + ch] {
+            None => false,
+            Some(p) => PATTERNS_3X3[p as usize].contains(&k),
+        }
+    }
+
+    /// Zero out pruned entries.
+    pub fn apply(&self, w: &mut Tensor) {
+        let (rows, cols) = w.shape().as_matrix();
+        assert_eq!(rows, self.filters);
+        assert_eq!(cols, self.channels * self.kernel);
+        for f in 0..rows {
+            for c in 0..cols {
+                if !self.alive(f, c) {
+                    *w.at2_mut(f, c) = 0.0;
+                }
+            }
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.choice.iter().filter(|c| c.is_some()).count() * 4
+    }
+
+    pub fn pruning_rate(&self) -> f64 {
+        let total = self.filters * self.channels * self.kernel;
+        total as f64 / self.nnz().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patterns_have_four_entries_under_nine() {
+        for p in PATTERNS_3X3 {
+            assert_eq!(p.len(), 4);
+            for k in p {
+                assert!(k < 9);
+            }
+        }
+    }
+
+    #[test]
+    fn random_mask_rate() {
+        let mut rng = Rng::new(1);
+        let m = PatternMask::random(16, 8, 9, 0.0, &mut rng);
+        // 4/9 kept
+        assert!((m.pruning_rate() - 2.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn project_keeps_largest() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::rand_uniform(&[4, 4 * 9], 1.0, &mut rng);
+        let m = PatternMask::project(&w, 4, 4, 0.25);
+        // exactly 25% of kernels removed
+        let removed = m.choice.iter().filter(|c| c.is_none()).count();
+        assert_eq!(removed, 4);
+        // surviving kernels keep exactly 4 entries
+        let mut wc = w.clone();
+        m.apply(&mut wc);
+        for f in 0..4 {
+            for ch in 0..4 {
+                let nz = (0..9).filter(|k| wc.at2(f, ch * 9 + k) != 0.0).count();
+                if m.choice[f * 4 + ch].is_some() {
+                    assert_eq!(nz, 4);
+                } else {
+                    assert_eq!(nz, 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn projection_magnitude_optimal_per_kernel() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::rand_uniform(&[1, 9], 1.0, &mut rng);
+        let m = PatternMask::project(&w, 1, 1, 0.0);
+        let chosen = m.choice[0].unwrap() as usize;
+        let chosen_mag: f32 = PATTERNS_3X3[chosen].iter().map(|k| w.at2(0, *k).abs()).sum();
+        for pat in PATTERNS_3X3 {
+            let mag: f32 = pat.iter().map(|k| w.at2(0, *k).abs()).sum();
+            assert!(chosen_mag >= mag - 1e-6);
+        }
+    }
+}

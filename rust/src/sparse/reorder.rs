@@ -1,0 +1,232 @@
+//! Matrix reordering (paper §4.2).
+//!
+//! BCR pruning leaves rows whose surviving columns come in a limited number
+//! of *signatures* (rows in the same block-row band that survive the same
+//! blocks share identical column sets). Reordering groups rows with equal
+//! signatures together, and orders groups by descending nnz, so that:
+//!
+//! * each group is processed by all threads in parallel with near-zero
+//!   divergence (equal work per row), and
+//! * BCRC can store each signature's column indices once per group.
+
+use super::BcrMask;
+use std::collections::HashMap;
+
+/// A contiguous group of reordered rows sharing one column signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowGroup {
+    /// First row (in reordered space).
+    pub start: usize,
+    /// One-past-last row (in reordered space).
+    pub end: usize,
+    /// The shared surviving-column indices.
+    pub cols: Vec<u32>,
+}
+
+/// The output of matrix reordering.
+#[derive(Clone, Debug)]
+pub struct ReorderPlan {
+    /// `perm[new_row] = original_row` (the paper's `reorder` array).
+    pub perm: Vec<usize>,
+    /// Signature groups, in reordered row order.
+    pub groups: Vec<RowGroup>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl ReorderPlan {
+    /// Build the reorder plan from a BCR mask: group rows by identical
+    /// column signature, sort groups by (nnz desc, first-col asc) for
+    /// deterministic output and divergence-free scheduling.
+    pub fn from_mask(mask: &BcrMask) -> Self {
+        let rows = mask.rows;
+        let mut sig_of: Vec<Vec<u32>> = Vec::with_capacity(rows);
+        for r in 0..rows {
+            sig_of.push(mask.row_columns(r));
+        }
+        Self::from_signatures(sig_of, mask.rows, mask.cols)
+    }
+
+    /// Build from arbitrary per-row column signatures (used for CSR-held
+    /// irregular masks in ablations, and by tests).
+    pub fn from_signatures(sig_of: Vec<Vec<u32>>, rows: usize, cols: usize) -> Self {
+        assert_eq!(sig_of.len(), rows);
+        // Group identical signatures.
+        let mut by_sig: HashMap<&[u32], Vec<usize>> = HashMap::new();
+        for (r, sig) in sig_of.iter().enumerate() {
+            by_sig.entry(sig.as_slice()).or_default().push(r);
+        }
+        // Deterministic group order: nnz desc, then lexicographic signature.
+        let mut entries: Vec<(&[u32], Vec<usize>)> = by_sig.into_iter().collect();
+        entries.sort_by(|a, b| b.0.len().cmp(&a.0.len()).then_with(|| a.0.cmp(b.0)));
+
+        let mut perm = Vec::with_capacity(rows);
+        let mut groups = Vec::with_capacity(entries.len());
+        for (sig, mut orig_rows) in entries {
+            orig_rows.sort_unstable();
+            let start = perm.len();
+            perm.extend_from_slice(&orig_rows);
+            groups.push(RowGroup { start, end: perm.len(), cols: sig.to_vec() });
+        }
+        ReorderPlan { perm, groups, rows, cols }
+    }
+
+    /// Identity plan (used by the No-Reorder ablation): one group per row,
+    /// in original order.
+    pub fn identity(sig_of: Vec<Vec<u32>>, rows: usize, cols: usize) -> Self {
+        assert_eq!(sig_of.len(), rows);
+        let perm: Vec<usize> = (0..rows).collect();
+        let groups = sig_of
+            .into_iter()
+            .enumerate()
+            .map(|(r, cols)| RowGroup { start: r, end: r + 1, cols })
+            .collect();
+        ReorderPlan { perm, groups, rows, cols }
+    }
+
+    /// Number of signature groups.
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Total nnz covered by the plan.
+    pub fn nnz(&self) -> usize {
+        self.groups.iter().map(|g| (g.end - g.start) * g.cols.len()).sum()
+    }
+
+    /// nnz of each *original* row (pre-reorder), for Figure 14.
+    pub fn nnz_per_original_row(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.rows];
+        for g in &self.groups {
+            for nr in g.start..g.end {
+                out[self.perm[nr]] = g.cols.len();
+            }
+        }
+        out
+    }
+
+    /// nnz of each *reordered* row, for Figure 14's "Reorder" series.
+    pub fn nnz_per_reordered_row(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.rows];
+        for g in &self.groups {
+            for nr in g.start..g.end {
+                out[nr] = g.cols.len();
+            }
+        }
+        out
+    }
+
+    /// Verify the permutation is a bijection (property-test helper).
+    pub fn is_permutation(&self) -> bool {
+        if self.perm.len() != self.rows {
+            return false;
+        }
+        let mut seen = vec![false; self.rows];
+        for &p in &self.perm {
+            if p >= self.rows || seen[p] {
+                return false;
+            }
+            seen[p] = true;
+        }
+        true
+    }
+
+    /// A simple divergence metric: sum over thread-chunks of
+    /// (max row nnz − min row nnz) when rows are dealt to `threads`
+    /// contiguous chunks. Reordering drives this toward zero.
+    pub fn divergence(&self, threads: usize) -> usize {
+        let nnz = self.nnz_per_reordered_row();
+        if nnz.is_empty() {
+            return 0;
+        }
+        let chunk = nnz.len().div_ceil(threads);
+        nnz.chunks(chunk)
+            .map(|c| {
+                let mx = *c.iter().max().unwrap();
+                let mn = *c.iter().min().unwrap();
+                mx - mn
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{BcrConfig, BcrMask};
+    use crate::util::Rng;
+
+    fn random_mask(seed: u64) -> BcrMask {
+        let mut rng = Rng::new(seed);
+        BcrMask::random(32, 64, BcrConfig::new(4, 4), 4.0, &mut rng)
+    }
+
+    #[test]
+    fn perm_is_bijection() {
+        for seed in 0..10 {
+            let plan = ReorderPlan::from_mask(&random_mask(seed));
+            assert!(plan.is_permutation());
+        }
+    }
+
+    #[test]
+    fn groups_partition_rows() {
+        let plan = ReorderPlan::from_mask(&random_mask(1));
+        let mut covered = 0;
+        for (i, g) in plan.groups.iter().enumerate() {
+            assert_eq!(g.start, covered, "group {i} not contiguous");
+            assert!(g.end > g.start);
+            covered = g.end;
+        }
+        assert_eq!(covered, plan.rows);
+    }
+
+    #[test]
+    fn group_signature_matches_mask() {
+        let mask = random_mask(2);
+        let plan = ReorderPlan::from_mask(&mask);
+        for g in &plan.groups {
+            for nr in g.start..g.end {
+                let orig = plan.perm[nr];
+                assert_eq!(mask.row_columns(orig), g.cols, "row {orig}");
+            }
+        }
+    }
+
+    #[test]
+    fn groups_sorted_by_nnz_desc() {
+        let plan = ReorderPlan::from_mask(&random_mask(3));
+        for w in plan.groups.windows(2) {
+            assert!(w[0].cols.len() >= w[1].cols.len());
+        }
+    }
+
+    #[test]
+    fn reorder_reduces_divergence() {
+        let mask = random_mask(4);
+        let sig: Vec<Vec<u32>> = (0..mask.rows).map(|r| mask.row_columns(r)).collect();
+        let ident = ReorderPlan::identity(sig, mask.rows, mask.cols);
+        let plan = ReorderPlan::from_mask(&mask);
+        assert!(
+            plan.divergence(8) <= ident.divergence(8),
+            "reorder must not increase divergence"
+        );
+    }
+
+    #[test]
+    fn nnz_consistent() {
+        let mask = random_mask(5);
+        let plan = ReorderPlan::from_mask(&mask);
+        assert_eq!(plan.nnz(), mask.nnz());
+        assert_eq!(plan.nnz_per_original_row().iter().sum::<usize>(), mask.nnz());
+    }
+
+    #[test]
+    fn coarse_mask_single_group() {
+        let mut rng = Rng::new(9);
+        let mask = BcrMask::coarse(32, 32, 4.0, &mut rng);
+        let plan = ReorderPlan::from_mask(&mask);
+        // whole-row/col pruning => at most 2 signatures (full sig + empty)
+        assert!(plan.num_groups() <= 2, "got {}", plan.num_groups());
+    }
+}

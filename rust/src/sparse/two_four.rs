@@ -1,0 +1,77 @@
+//! 2:4 structured sparsity (the NVIDIA Ampere baseline the paper compares
+//! against in §6.3): in every group of 4 consecutive weights along a row,
+//! exactly 2 survive. On mobile there is no hardware support, so — exactly
+//! as the paper does — 2:4-pruned matrices are *executed through the CSR
+//! path*; this module only provides the projection.
+
+use crate::tensor::Tensor;
+
+/// Project `w` to 2:4 sparsity in place: keep the 2 largest-magnitude
+/// entries of each aligned group of 4 along each row. Requires `cols % 4
+/// == 0`.
+pub fn project_2_4(w: &mut Tensor) {
+    let (rows, cols) = w.shape().as_matrix();
+    assert!(cols % 4 == 0, "2:4 requires cols divisible by 4");
+    for r in 0..rows {
+        for g in 0..cols / 4 {
+            let base = g * 4;
+            let mut idx = [0usize, 1, 2, 3];
+            idx.sort_by(|a, b| {
+                w.at2(r, base + b)
+                    .abs()
+                    .partial_cmp(&w.at2(r, base + a).abs())
+                    .unwrap()
+            });
+            // zero the two smallest
+            *w.at2_mut(r, base + idx[2]) = 0.0;
+            *w.at2_mut(r, base + idx[3]) = 0.0;
+        }
+    }
+}
+
+/// Check the 2:4 invariant.
+pub fn is_2_4(w: &Tensor) -> bool {
+    let (rows, cols) = w.shape().as_matrix();
+    if cols % 4 != 0 {
+        return false;
+    }
+    for r in 0..rows {
+        for g in 0..cols / 4 {
+            let nz = (0..4).filter(|k| w.at2(r, g * 4 + k) != 0.0).count();
+            if nz > 2 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn projection_satisfies_invariant() {
+        let mut rng = Rng::new(1);
+        let mut w = Tensor::rand_uniform(&[8, 16], 1.0, &mut rng);
+        project_2_4(&mut w);
+        assert!(is_2_4(&w));
+        assert!((w.zero_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn projection_keeps_largest() {
+        let mut w = Tensor::from_vec(&[1, 4], vec![0.1, -3.0, 2.0, 0.5]);
+        project_2_4(&mut w);
+        assert_eq!(w.data(), &[0.0, -3.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn already_sparse_unchanged() {
+        let mut w = Tensor::from_vec(&[1, 4], vec![0.0, 1.0, 0.0, 2.0]);
+        let before = w.clone();
+        project_2_4(&mut w);
+        assert_eq!(w, before);
+    }
+}

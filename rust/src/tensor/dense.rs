@@ -1,0 +1,188 @@
+//! Dense f32 tensor with row-major storage.
+
+use super::Shape;
+use crate::util::Rng;
+
+/// A dense, row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Tensor from existing data (length must match).
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), data.len(), "data length mismatch for {shape}");
+        Tensor { shape, data }
+    }
+
+    /// Uniform random in `[-scale, scale)`.
+    pub fn rand_uniform(dims: &[usize], scale: f32, rng: &mut Rng) -> Self {
+        let shape = Shape::new(dims);
+        let data = (0..shape.numel()).map(|_| rng.range_f32(-scale, scale)).collect();
+        Tensor { shape, data }
+    }
+
+    /// Kaiming-ish normal init.
+    pub fn rand_normal(dims: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let shape = Shape::new(dims);
+        let data = (0..shape.numel()).map(|_| rng.normal() * std).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// 2-D accessor.
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        let (_rows, cols) = self.shape.as_matrix();
+        self.data[r * cols + c]
+    }
+
+    /// 2-D mutable accessor.
+    #[inline]
+    pub fn at2_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        let (_rows, cols) = self.shape.as_matrix();
+        &mut self.data[r * cols + c]
+    }
+
+    /// Reinterpret with a new shape of equal numel.
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        let s = Shape::new(dims);
+        assert_eq!(s.numel(), self.data.len(), "reshape numel mismatch");
+        self.shape = s;
+        self
+    }
+
+    /// Transpose a matrix.
+    pub fn transpose2(&self) -> Tensor {
+        let (r, c) = self.shape.as_matrix();
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Max absolute difference against another tensor of equal shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Approximate equality with mixed absolute/relative tolerance.
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs().max(a.abs()))
+    }
+
+    /// Fraction of exactly-zero entries.
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|x| **x == 0.0).count() as f64 / self.data.len() as f64
+    }
+
+    /// Index of the maximum element (argmax over the flat buffer).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_accessors() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        *t.at2_mut(1, 2) = 5.0;
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.at2(0, 0), 0.0);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::rand_uniform(&[3, 5], 1.0, &mut rng);
+        let tt = t.transpose2().transpose2();
+        assert_eq!(t, tt);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_bad_numel_panics() {
+        Tensor::zeros(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0 + 1e-6, 2.0 - 1e-6]);
+        assert!(a.allclose(&b, 1e-5, 0.0));
+        assert!(!a.allclose(&b, 1e-8, 0.0));
+    }
+
+    #[test]
+    fn zero_fraction() {
+        let t = Tensor::from_vec(&[4], vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(t.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::from_vec(&[4], vec![0.1, 3.0, -1.0, 2.0]);
+        assert_eq!(t.argmax(), 1);
+    }
+}

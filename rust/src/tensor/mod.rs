@@ -1,0 +1,9 @@
+//! Dense tensor substrate: shapes and f32 tensors (NCHW activations,
+//! row-major matrices). All GRIM computation lowers to matrices via
+//! im2col (DESIGN.md §1), so the matrix view is the primary interface.
+
+pub mod shape;
+pub mod dense;
+
+pub use dense::Tensor;
+pub use shape::Shape;

@@ -1,0 +1,119 @@
+//! Tensor shapes with row-major strides.
+
+use std::fmt;
+
+/// An n-dimensional shape. Row-major (C-order) layout throughout; CNN
+/// activations are NCHW, weight matrices are `[rows, cols]`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<usize>,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape { dims: dims.to_vec() }
+    }
+
+    pub fn scalar() -> Self {
+        Shape { dims: vec![] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total number of elements.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.dims.len()];
+        for i in (0..self.dims.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+
+    /// Dimension accessor with bounds check.
+    pub fn dim(&self, i: usize) -> usize {
+        self.dims[i]
+    }
+
+    /// Interpret as a 2-D matrix `[rows, cols]`; panics otherwise.
+    pub fn as_matrix(&self) -> (usize, usize) {
+        assert_eq!(self.rank(), 2, "expected rank-2 shape, got {self}");
+        (self.dims[0], self.dims[1])
+    }
+
+    /// Interpret as NCHW; panics otherwise.
+    pub fn as_nchw(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.rank(), 4, "expected rank-4 shape, got {self}");
+        (self.dims[0], self.dims[1], self.dims[2], self.dims[3])
+    }
+
+    /// Flatten to `[d0, rest]`.
+    pub fn flatten2(&self) -> Shape {
+        assert!(self.rank() >= 1);
+        Shape::new(&[self.dims[0], self.numel() / self.dims[0].max(1)])
+    }
+}
+
+impl fmt::Debug for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_strides() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.numel(), 24);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn matrix_view() {
+        let s = Shape::new(&[5, 7]);
+        assert_eq!(s.as_matrix(), (5, 7));
+    }
+
+    #[test]
+    #[should_panic]
+    fn matrix_view_wrong_rank_panics() {
+        Shape::new(&[5, 7, 2]).as_matrix();
+    }
+
+    #[test]
+    fn flatten2() {
+        let s = Shape::new(&[2, 3, 4]).flatten2();
+        assert_eq!(s.dims(), &[2, 12]);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(format!("{}", Shape::new(&[1, 2])), "[1,2]");
+    }
+}

@@ -1,0 +1,191 @@
+//! Genetic-algorithm auto-tuner.
+//!
+//! The paper prefers GA over TVM-style simulated annealing because "it
+//! allows starting parameter search with initializing an arbitrary number
+//! of chromosomes" (§4.5) — i.e. the initial population parallelizes
+//! trivially. Here population members are [`Config`]s; fitness is the
+//! measured latency of a user-supplied closure (typically one layer's
+//! GEMM on the engine).
+
+use super::space::{Config, SearchSpace};
+use crate::util::{timer, Rng};
+use std::collections::HashMap;
+
+/// GA hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub elite: usize,
+    pub mutation_prob: f64,
+    /// Timed iterations per fitness evaluation.
+    pub eval_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            population: 12,
+            generations: 6,
+            elite: 2,
+            mutation_prob: 0.3,
+            eval_iters: 5,
+            seed: 0xB10C_5EED,
+        }
+    }
+}
+
+/// Tuning outcome.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: Config,
+    pub best_ms: f64,
+    /// (generation, best-so-far ms) — the convergence curve.
+    pub history: Vec<(usize, f64)>,
+    /// Total fitness evaluations actually run (cache misses).
+    pub evals: usize,
+}
+
+/// Tune a single layer: `measure(cfg)` runs the kernel once with `cfg`.
+///
+/// The measured closure is invoked `eval_iters + 1` times per distinct
+/// config (1 warmup); repeated configs hit a memo cache, so total work is
+/// bounded by the number of *distinct* chromosomes — the efficiency claim
+/// of §4.5.
+pub fn tune_layer<F: FnMut(Config)>(
+    space: &SearchSpace,
+    ga: GaConfig,
+    mut measure: F,
+) -> TuneResult {
+    let mut rng = Rng::new(ga.seed);
+    let mut cache: HashMap<Config, f64> = HashMap::new();
+    let mut evals = 0usize;
+
+    let mut eval = |c: Config, cache: &mut HashMap<Config, f64>, evals: &mut usize| -> f64 {
+        if let Some(ms) = cache.get(&c) {
+            return *ms;
+        }
+        let ms = timer::time_median_ms(ga.eval_iters, 1, || measure(c));
+        cache.insert(c, ms);
+        *evals += 1;
+        ms
+    };
+
+    // Initial population: spread over the space, dedup-friendly.
+    let mut pop: Vec<Config> = (0..ga.population).map(|_| space.sample(&mut rng)).collect();
+    let mut history = Vec::new();
+    let mut best = pop[0];
+    let mut best_ms = f64::INFINITY;
+
+    for gen in 0..ga.generations {
+        let mut scored: Vec<(Config, f64)> =
+            pop.iter().map(|c| (*c, eval(*c, &mut cache, &mut evals))).collect();
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        if scored[0].1 < best_ms {
+            best = scored[0].0;
+            best_ms = scored[0].1;
+        }
+        history.push((gen, best_ms));
+
+        // Elitism + tournament selection + crossover + mutation.
+        let mut next: Vec<Config> = scored.iter().take(ga.elite).map(|(c, _)| *c).collect();
+        while next.len() < ga.population {
+            let pick = |rng: &mut Rng| {
+                let a = &scored[rng.index(scored.len())];
+                let b = &scored[rng.index(scored.len())];
+                if a.1 < b.1 {
+                    a.0
+                } else {
+                    b.0
+                }
+            };
+            let pa = pick(&mut rng);
+            let pb = pick(&mut rng);
+            let mut child = space.crossover(pa, pb, &mut rng);
+            if rng.chance(ga.mutation_prob) {
+                child = space.mutate(child, &mut rng);
+            }
+            next.push(child);
+        }
+        pop = next;
+    }
+
+    TuneResult { best, best_ms, history, evals }
+}
+
+/// Exhaustive grid search (the ablation comparator for the GA).
+pub fn grid_search<F: FnMut(Config)>(
+    space: &SearchSpace,
+    eval_iters: usize,
+    mut measure: F,
+) -> TuneResult {
+    let mut best = space.decode(0);
+    let mut best_ms = f64::INFINITY;
+    let mut evals = 0;
+    for c in space.all() {
+        let ms = timer::time_median_ms(eval_iters, 1, || measure(c));
+        evals += 1;
+        if ms < best_ms {
+            best_ms = ms;
+            best = c;
+        }
+    }
+    TuneResult { best, best_ms, history: vec![(0, best_ms)], evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic fitness: sleep-free, deterministic "latency" minimized at
+    /// (unroll=4, n_tile=64). The GA must find it.
+    fn fake_cost(c: Config) -> f64 {
+        let du = (c.unroll as f64).log2() - 2.0;
+        let dt = (c.n_tile as f64).log2() - 6.0;
+        du * du + dt * dt + if c.lre { 0.0 } else { 4.0 }
+    }
+
+    #[test]
+    fn ga_finds_optimum_on_synthetic_landscape() {
+        let space = SearchSpace::with_lre_axis();
+        // burn CPU proportional to cost so wallclock ranks configs
+        let ga = GaConfig { population: 10, generations: 8, eval_iters: 3, ..Default::default() };
+        let res = tune_layer(&space, ga, |c| {
+            let n = (fake_cost(c) * 20_000.0) as usize + 1000;
+            let mut acc = 0.0f64;
+            for i in 0..n {
+                acc += (i as f64).sqrt();
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(fake_cost(res.best) <= 2.0, "GA landed on poor config {:?}", res.best);
+        assert!(res.evals <= space.size(), "cache must bound evals");
+    }
+
+    #[test]
+    fn history_is_monotone_nonincreasing() {
+        let space = SearchSpace::default();
+        let ga = GaConfig { population: 6, generations: 5, eval_iters: 2, ..Default::default() };
+        let res = tune_layer(&space, ga, |c| {
+            let n = (fake_cost(c) * 5_000.0) as usize + 500;
+            let mut acc = 0.0f64;
+            for i in 0..n {
+                acc += (i as f64).sqrt();
+            }
+            std::hint::black_box(acc);
+        });
+        for w in res.history.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn grid_search_evaluates_everything() {
+        let space = SearchSpace::default();
+        let res = grid_search(&space, 1, |_c| {
+            std::hint::black_box(0u64);
+        });
+        assert_eq!(res.evals, space.size());
+    }
+}

@@ -1,0 +1,11 @@
+//! Auto-tuning (paper §4.5): a genetic-algorithm search over per-layer
+//! execution parameters (unroll factor, N-tile), with grid search kept as
+//! an ablation baseline. Fitness is *measured latency* on the engine —
+//! exactly the paper's mobile-testing loop, with the host CPU standing in
+//! for the phone (DESIGN.md §2).
+
+pub mod genetic;
+pub mod space;
+
+pub use genetic::{tune_layer, GaConfig, TuneResult};
+pub use space::{Config, SearchSpace};

@@ -1,0 +1,130 @@
+//! The tuner's search space: the cartesian grid of micro-kernel
+//! parameters the compiler's monomorphized kernels cover.
+
+use crate::gemm::bcrc_gemm::GemmParams;
+use crate::gemm::microkernel::{N_TILES, UNROLL_FACTORS};
+
+/// One point in the search space (a chromosome).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Config {
+    pub unroll: usize,
+    pub n_tile: usize,
+    pub lre: bool,
+}
+
+impl Config {
+    pub fn gemm_params(&self) -> GemmParams {
+        GemmParams { unroll: self.unroll, n_tile: self.n_tile, lre: self.lre }
+    }
+}
+
+/// The discrete search space.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub unrolls: Vec<usize>,
+    pub n_tiles: Vec<usize>,
+    pub lres: Vec<bool>,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        SearchSpace {
+            unrolls: UNROLL_FACTORS.to_vec(),
+            n_tiles: N_TILES.to_vec(),
+            lres: vec![true],
+        }
+    }
+}
+
+impl SearchSpace {
+    /// Full space including LRE on/off (used by the ablation sweep).
+    pub fn with_lre_axis() -> Self {
+        SearchSpace { lres: vec![true, false], ..Default::default() }
+    }
+
+    pub fn size(&self) -> usize {
+        self.unrolls.len() * self.n_tiles.len() * self.lres.len()
+    }
+
+    /// Decode a flat index into a config (for grid enumeration).
+    pub fn decode(&self, idx: usize) -> Config {
+        let nu = self.unrolls.len();
+        let nt = self.n_tiles.len();
+        Config {
+            unroll: self.unrolls[idx % nu],
+            n_tile: self.n_tiles[(idx / nu) % nt],
+            lre: self.lres[(idx / (nu * nt)) % self.lres.len()],
+        }
+    }
+
+    /// All configurations (grid search).
+    pub fn all(&self) -> Vec<Config> {
+        (0..self.size()).map(|i| self.decode(i)).collect()
+    }
+
+    /// Random config.
+    pub fn sample(&self, rng: &mut crate::util::Rng) -> Config {
+        self.decode(rng.index(self.size()))
+    }
+
+    /// Mutate one gene.
+    pub fn mutate(&self, c: Config, rng: &mut crate::util::Rng) -> Config {
+        let mut c = c;
+        match rng.index(3) {
+            0 => c.unroll = self.unrolls[rng.index(self.unrolls.len())],
+            1 => c.n_tile = self.n_tiles[rng.index(self.n_tiles.len())],
+            _ => c.lre = self.lres[rng.index(self.lres.len())],
+        }
+        c
+    }
+
+    /// Uniform crossover.
+    pub fn crossover(&self, a: Config, b: Config, rng: &mut crate::util::Rng) -> Config {
+        Config {
+            unroll: if rng.chance(0.5) { a.unroll } else { b.unroll },
+            n_tile: if rng.chance(0.5) { a.n_tile } else { b.n_tile },
+            lre: if rng.chance(0.5) { a.lre } else { b.lre },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn decode_covers_space() {
+        let s = SearchSpace::with_lre_axis();
+        let all = s.all();
+        assert_eq!(all.len(), s.size());
+        let mut uniq = all.clone();
+        uniq.sort_by_key(|c| (c.unroll, c.n_tile, c.lre));
+        uniq.dedup();
+        assert_eq!(uniq.len(), all.len(), "decode must be injective");
+    }
+
+    #[test]
+    fn mutate_stays_in_space() {
+        let s = SearchSpace::default();
+        let mut rng = Rng::new(1);
+        let mut c = s.sample(&mut rng);
+        for _ in 0..100 {
+            c = s.mutate(c, &mut rng);
+            assert!(s.unrolls.contains(&c.unroll));
+            assert!(s.n_tiles.contains(&c.n_tile));
+            assert!(s.lres.contains(&c.lre));
+        }
+    }
+
+    #[test]
+    fn crossover_mixes_genes() {
+        let s = SearchSpace::default();
+        let mut rng = Rng::new(2);
+        let a = Config { unroll: 1, n_tile: 16, lre: true };
+        let b = Config { unroll: 8, n_tile: 128, lre: true };
+        let c = s.crossover(a, b, &mut rng);
+        assert!(c.unroll == 1 || c.unroll == 8);
+        assert!(c.n_tile == 16 || c.n_tile == 128);
+    }
+}

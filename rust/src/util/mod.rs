@@ -1,0 +1,16 @@
+//! Utility substrate: PRNG, JSON, timing, logging, and a scoped thread pool.
+//!
+//! The vendored dependency set contains no `rand`, `serde`, `rayon`, or
+//! `tokio`, so these are implemented from scratch (see DESIGN.md §4).
+
+pub mod prng;
+pub mod json;
+pub mod timer;
+pub mod logger;
+pub mod threadpool;
+pub mod stats;
+pub mod sharedbuf;
+
+pub use prng::Rng;
+pub use timer::Timer;
+pub use threadpool::ThreadPool;

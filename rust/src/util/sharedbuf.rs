@@ -1,0 +1,130 @@
+//! Zero-copy data sharing for blocking fork-join parallel kernels.
+//!
+//! The worker pool requires `'static` closures, which naively forces every
+//! parallel GEMM call to `Arc`-clone its inputs and merge its output under
+//! a mutex — measured at 30–60% of small-layer latency (EXPERIMENTS.md
+//! §Perf L3-3). Because `ThreadPool::run_partitioned` *blocks until all
+//! workers complete*, the borrowed buffers outlive every worker access, so
+//! raw-pointer wrappers are sound:
+//!
+//! * [`SharedSlice`] — read-only view of a `&[f32]` (inputs, weights);
+//! * [`SharedOut`] — mutable view of a `&mut [f32]` where workers write
+//!   **disjoint** element ranges (each output row has exactly one writer).
+//!
+//! Safety contract (callers must uphold): the wrapped buffer outlives the
+//! `run_partitioned`/`run_dynamic` call, and no two workers write the same
+//! element through the same `SharedOut`.
+
+/// Read-only shared view of a slice.
+pub struct SharedSlice<T: Copy> {
+    ptr: *const T,
+    len: usize,
+}
+
+impl<T: Copy> Clone for SharedSlice<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: Copy> Copy for SharedSlice<T> {}
+
+unsafe impl<T: Copy> Send for SharedSlice<T> {}
+unsafe impl<T: Copy> Sync for SharedSlice<T> {}
+
+impl<T: Copy> SharedSlice<T> {
+    pub fn new(data: &[T]) -> Self {
+        SharedSlice { ptr: data.as_ptr(), len: data.len() }
+    }
+
+    /// # Safety
+    /// The underlying buffer must still be alive (guaranteed when used
+    /// inside a blocking pool call over the borrowing scope).
+    #[inline]
+    pub unsafe fn get(&self) -> &[T] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+/// Write-disjoint shared view of a mutable slice.
+pub struct SharedOut<T: Copy = f32> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T: Copy> Clone for SharedOut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: Copy> Copy for SharedOut<T> {}
+
+unsafe impl<T: Copy> Send for SharedOut<T> {}
+unsafe impl<T: Copy> Sync for SharedOut<T> {}
+
+impl<T: Copy> SharedOut<T> {
+    pub fn new(data: &mut [T]) -> Self {
+        SharedOut { ptr: data.as_mut_ptr(), len: data.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable subrange `[lo, hi)`.
+    ///
+    /// # Safety
+    /// Buffer alive, and `[lo, hi)` disjoint from every other worker's
+    /// ranges for the duration of the parallel region.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ThreadPool;
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let pool = ThreadPool::new(4);
+        let mut buf = vec![0.0f32; 1000];
+        let out = SharedOut::new(&mut buf);
+        pool.run_partitioned(1000, move |_w, lo, hi| {
+            let s = unsafe { out.range_mut(lo, hi) };
+            for (i, v) in s.iter_mut().enumerate() {
+                *v = (lo + i) as f32;
+            }
+        });
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn shared_slice_reads() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let view = SharedSlice::new(&data);
+        let mut sums = vec![0.0f32; 3];
+        let out = SharedOut::new(&mut sums);
+        pool.run_partitioned(3, move |w, lo, hi| {
+            let d = unsafe { view.get() };
+            let s = unsafe { out.range_mut(lo, hi) };
+            for v in s.iter_mut() {
+                *v = d.iter().sum();
+            }
+            let _ = w;
+        });
+        for s in sums {
+            assert_eq!(s, 4950.0);
+        }
+    }
+}

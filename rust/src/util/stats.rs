@@ -1,0 +1,86 @@
+//! Small statistics helpers for metrics and bench reporting.
+
+/// Summary of a latency sample set (all values in the unit supplied).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub stddev: f64,
+}
+
+/// Compute a [`Summary`] from raw samples.
+pub fn summarize(samples: &[f64]) -> Summary {
+    if samples.is_empty() {
+        return Summary::default();
+    }
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        count: n,
+        mean,
+        min: xs[0],
+        max: xs[n - 1],
+        p50: percentile(&xs, 0.50),
+        p90: percentile(&xs, 0.90),
+        p99: percentile(&xs, 0.99),
+        stddev: var.sqrt(),
+    }
+}
+
+/// Nearest-rank percentile over a pre-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Geometric mean (used for cross-layer speedup aggregation, as the paper
+/// aggregates per-model speedups).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.max(1e-30).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+    }
+
+    #[test]
+    fn geomean_of_equal_is_equal() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_default() {
+        let s = summarize(&[]);
+        assert_eq!(s.count, 0);
+    }
+}

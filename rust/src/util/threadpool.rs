@@ -1,0 +1,266 @@
+//! A scoped, fixed-size worker pool.
+//!
+//! The paper runs "8 threads on CPU" on the Snapdragon's Kryo cores; this
+//! pool is the host-side analog. It supports two modes used throughout the
+//! engine:
+//!
+//! * [`ThreadPool::run_partitioned`] — split an index range into one chunk
+//!   per worker and run a closure on each chunk (the row-group-per-thread
+//!   execution model of GRIM's generated code);
+//! * [`ThreadPool::run_dynamic`] — an atomic work-stealing counter over
+//!   items, used when per-item cost is irregular (the *un*-reordered
+//!   baselines, which is exactly where load imbalance shows up).
+//!
+//! Workers are long-lived; jobs are dispatched over channels so the hot
+//! loop does not spawn threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool with a barrier-style `run_*` API.
+pub struct ThreadPool {
+    senders: Vec<Sender<Msg>>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (`size >= 1`).
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1);
+        let mut senders = Vec::with_capacity(size);
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+            senders.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("grim-worker-{i}"))
+                    .spawn(move || {
+                        while let Ok(msg) = rx.recv() {
+                            match msg {
+                                Msg::Run(job) => job(),
+                                Msg::Shutdown => break,
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { senders, handles, size }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f(worker_id, lo, hi)` over a static partition of `0..n`,
+    /// blocking until all workers finish. `f` must be `Sync`; scoped via
+    /// `Arc` + completion channel.
+    pub fn run_partitioned<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize, usize) + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return;
+        }
+        let f = Arc::new(f);
+        let (done_tx, done_rx) = channel::<()>();
+        let chunk = n.div_ceil(self.size);
+        let mut dispatched = 0;
+        for w in 0..self.size {
+            let lo = w * chunk;
+            if lo >= n {
+                break;
+            }
+            let hi = ((w + 1) * chunk).min(n);
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            self.senders[w]
+                .send(Msg::Run(Box::new(move || {
+                    f(w, lo, hi);
+                    // Drop our Arc clone BEFORE signalling completion so the
+                    // caller can unwrap shared state as soon as recv returns.
+                    drop(f);
+                    let _ = done.send(());
+                })))
+                .expect("worker alive");
+            dispatched += 1;
+        }
+        for _ in 0..dispatched {
+            done_rx.recv().expect("worker completed");
+        }
+    }
+
+    /// Run `f(worker_id, item)` with dynamic scheduling over `0..n`.
+    pub fn run_dynamic<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return;
+        }
+        let f = Arc::new(f);
+        let next = Arc::new(AtomicUsize::new(0));
+        let (done_tx, done_rx) = channel::<()>();
+        for w in 0..self.size {
+            let f = Arc::clone(&f);
+            let next = Arc::clone(&next);
+            let done = done_tx.clone();
+            self.senders[w]
+                .send(Msg::Run(Box::new(move || {
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        f(w, i);
+                    }
+                    drop(f); // see run_partitioned: release before signalling
+                    let _ = done.send(());
+                })))
+                .expect("worker alive");
+        }
+        for _ in 0..self.size {
+            done_rx.recv().expect("worker completed");
+        }
+    }
+
+    /// Run arbitrary closures, one per worker slot, returning when all done.
+    /// Used by the coordinator to pin long-running roles onto workers.
+    pub fn run_each<F>(&self, fs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let (done_tx, done_rx) = channel::<()>();
+        let count = fs.len();
+        assert!(count <= self.size, "more jobs than workers");
+        for (w, job) in fs.into_iter().enumerate() {
+            let done = done_tx.clone();
+            self.senders[w]
+                .send(Msg::Run(Box::new(move || {
+                    job();
+                    let _ = done.send(());
+                })))
+                .expect("worker alive");
+        }
+        for _ in 0..count {
+            done_rx.recv().expect("worker completed");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A shared mutable accumulation cell for parallel reductions.
+/// Wraps `Mutex<Vec<f32>>`; fine for per-layer epilogues, never in the
+/// per-element hot loop.
+pub struct SharedAcc {
+    inner: Arc<Mutex<Vec<f32>>>,
+}
+
+impl SharedAcc {
+    pub fn zeros(n: usize) -> Self {
+        SharedAcc { inner: Arc::new(Mutex::new(vec![0.0; n])) }
+    }
+
+    pub fn add_range(&self, lo: usize, vals: &[f32]) {
+        let mut g = self.inner.lock().unwrap();
+        for (i, v) in vals.iter().enumerate() {
+            g[lo + i] += v;
+        }
+    }
+
+    pub fn take(self) -> Vec<f32> {
+        Arc::try_unwrap(self.inner)
+            .map(|m| m.into_inner().unwrap())
+            .unwrap_or_else(|arc| arc.lock().unwrap().clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn partitioned_covers_range_once() {
+        let pool = ThreadPool::new(4);
+        let hits = Arc::new((0..100).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+        let h2 = Arc::clone(&hits);
+        pool.run_partitioned(100, move |_w, lo, hi| {
+            for i in lo..hi {
+                h2[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        for h in hits.iter() {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn dynamic_covers_all_items() {
+        let pool = ThreadPool::new(3);
+        let sum = Arc::new(AtomicU64::new(0));
+        let s2 = Arc::clone(&sum);
+        pool.run_dynamic(1000, move |_w, i| {
+            s2.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn pool_reusable_across_jobs() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..10 {
+            let c = Arc::new(AtomicUsize::new(0));
+            let c2 = Arc::clone(&c);
+            pool.run_dynamic(7, move |_w, _i| {
+                c2.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(c.load(Ordering::SeqCst), 7);
+        }
+    }
+
+    #[test]
+    fn run_each_runs_every_job() {
+        let pool = ThreadPool::new(3);
+        let c = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..3)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.run_each(jobs);
+        assert_eq!(c.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn n_zero_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.run_partitioned(0, |_, _, _| panic!("should not run"));
+        pool.run_dynamic(0, |_, _| panic!("should not run"));
+    }
+}

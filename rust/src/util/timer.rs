@@ -1,0 +1,99 @@
+//! Wall-clock timing helpers used by the bench harness and the tuner.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Run `f` once for warmup, then `iters` timed iterations; return the
+/// median per-iteration time in milliseconds. Median (not mean) so a
+/// single descheduling blip does not skew a table row.
+pub fn time_median_ms<F: FnMut()>(iters: usize, warmup: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_ms());
+    }
+    median(&mut samples)
+}
+
+/// Median of a mutable sample buffer.
+pub fn median(xs: &mut [f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+/// Adaptive timing: repeat `f` until the total measured time exceeds
+/// `min_total_ms`, at least `min_iters` iterations; return median ms.
+pub fn time_adaptive_ms<F: FnMut()>(min_total_ms: f64, min_iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    loop {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_ms());
+        if samples.len() >= min_iters && total.elapsed_ms() >= min_total_ms {
+            break;
+        }
+        if samples.len() > 100_000 {
+            break; // safety
+        }
+    }
+    median(&mut samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn adaptive_runs_min_iters() {
+        let mut count = 0usize;
+        let _ = time_adaptive_ms(0.0, 5, || count += 1);
+        assert!(count >= 5 + 1); // warmup + 5
+    }
+}

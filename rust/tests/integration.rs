@@ -1,0 +1,185 @@
+//! Cross-module integration tests: DSL→compile→execute equivalence,
+//! python↔rust bridges (.grim and HLO artifacts), and the serving loop.
+//! Bridge tests skip (with a notice) when `make artifacts` /
+//! `make train-demo` outputs are absent, so `cargo test` works on a fresh
+//! checkout.
+
+use grim::compiler::passes::{compile, Backend, CompileOptions};
+use grim::engine::Engine;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::tensor::Tensor;
+use grim::util::Rng;
+use std::path::Path;
+
+fn opts(rate: f64, seed: u64) -> InitOptions {
+    InitOptions { rate, block: [4, 16], seed }
+}
+
+/// Full pipeline over every zoo model: all backends agree numerically.
+#[test]
+fn zoo_backends_agree_end_to_end() {
+    for kind in [ModelKind::Vgg16, ModelKind::Resnet18, ModelKind::MobilenetV2, ModelKind::Gru] {
+        let o = opts(6.0, 77);
+        let module = build_model(kind, Preset::CifarMini, o);
+        let weights = random_weights(&module, o);
+        let shapes = module.graph.infer_shapes().unwrap();
+        let dims = shapes[module.graph.input().unwrap()].dims().to_vec();
+        let mut rng = Rng::new(kind as u64);
+        let x = Tensor::rand_uniform(&dims, 1.0, &mut rng);
+        let mut outs = Vec::new();
+        for b in [Backend::Grim, Backend::NaiveDense, Backend::CsrSparse] {
+            let plan = compile(&module, &weights, CompileOptions::for_backend(b)).unwrap();
+            outs.push(Engine::new(plan, 4).run(&x).unwrap());
+        }
+        for o2 in &outs[1..] {
+            assert!(
+                outs[0].allclose(o2, 1e-3, 1e-3),
+                "{kind:?}: backend divergence {}",
+                outs[0].max_abs_diff(o2)
+            );
+        }
+    }
+}
+
+/// .grim round trip through disk preserves inference results exactly.
+#[test]
+fn grim_file_round_trip_preserves_inference() {
+    let o = opts(8.0, 13);
+    let module = build_model(ModelKind::Vgg16, Preset::CifarMini, o);
+    let weights = random_weights(&module, o);
+    let tmp = std::env::temp_dir().join("grim_integration_rt.grim");
+    grim::formats::save_grim(&tmp, &module, &weights).unwrap();
+    let (m2, w2) = grim::formats::load_grim(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+
+    let mut rng = Rng::new(3);
+    let x = Tensor::rand_uniform(&[3, 32, 32], 1.0, &mut rng);
+    let a = Engine::new(compile(&module, &weights, CompileOptions::default()).unwrap(), 2)
+        .run(&x)
+        .unwrap();
+    let b = Engine::new(compile(&m2, &w2, CompileOptions::default()).unwrap(), 2)
+        .run(&x)
+        .unwrap();
+    assert_eq!(a, b, "round-tripped model must be bit-identical in behaviour");
+}
+
+/// Load the python-trained model if present (make train-demo).
+#[test]
+fn python_grim_file_loads_and_runs() {
+    let path = Path::new("artifacts/demo_cnn.grim");
+    if !path.exists() {
+        eprintln!("SKIP python_grim_file_loads_and_runs: run `make train-demo`");
+        return;
+    }
+    let (module, weights) = grim::formats::load_grim(path).unwrap();
+    let plan = compile(&module, &weights, CompileOptions::default()).unwrap();
+    let engine = Engine::new(plan, 2);
+    let mut rng = Rng::new(5);
+    let x = Tensor::rand_uniform(&[3, 32, 32], 1.0, &mut rng);
+    let out = engine.run(&x).unwrap();
+    assert_eq!(out.numel(), 10);
+    let sum: f32 = out.data().iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3, "softmax output must normalize");
+    // sparse layers really are sparse
+    let nnz_frac: f64 = weights
+        .values()
+        .filter(|lw| lw.mask.is_some())
+        .map(|lw| 1.0 - lw.w.zero_fraction())
+        .sum::<f64>()
+        / weights.values().filter(|lw| lw.mask.is_some()).count().max(1) as f64;
+    assert!(nnz_frac < 0.5, "trained model should be majority-pruned, got nnz {nnz_frac}");
+}
+
+/// The jax->HLO-text->PJRT bridge with known numerics (make artifacts).
+#[test]
+fn hlo_bridge_numerics() {
+    let store = grim::runtime::ArtifactStore::default_dir();
+    if !store.exists("bridge_check") {
+        eprintln!("SKIP hlo_bridge_numerics: run `make artifacts`");
+        return;
+    }
+    let model = store.load("bridge_check").unwrap();
+    let x = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let y = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+    let out = model.run(&[x, y]).unwrap();
+    // matmul([[1,2],[3,4]], ones) + 2 = [[5,5],[9,9]]
+    assert_eq!(out[0], vec![5.0, 5.0, 9.0, 9.0]);
+}
+
+/// The Pallas-lowered BCR kernel artifact compiles and executes on the
+/// rust PJRT client (shape check; weights are baked at export time).
+#[test]
+fn pallas_kernel_artifact_executes() {
+    let store = grim::runtime::ArtifactStore::default_dir();
+    if !store.exists("bcr_gemm_256x512") {
+        eprintln!("SKIP pallas_kernel_artifact_executes: run `make artifacts`");
+        return;
+    }
+    let model = store.load("bcr_gemm_256x512").unwrap();
+    let mut rng = Rng::new(6);
+    let x = Tensor::rand_uniform(&[512, 32], 1.0, &mut rng);
+    let out = model.run(&[x]).unwrap();
+    assert_eq!(out[0].len(), 256 * 32);
+    assert!(out[0].iter().all(|v| v.is_finite()));
+}
+
+/// Serving loop correctness under load with the full CNN plan.
+#[test]
+fn server_under_concurrent_load() {
+    use grim::coordinator::{Server, ServerConfig};
+    let o = opts(8.0, 21);
+    let module = build_model(ModelKind::Resnet18, Preset::CifarMini, o);
+    let weights = random_weights(&module, o);
+    let plan = compile(&module, &weights, CompileOptions::default()).unwrap();
+    let server = std::sync::Arc::new(Server::start(Engine::new(plan, 4), ServerConfig::default()));
+    let mut handles = Vec::new();
+    for t in 0..3 {
+        let s = std::sync::Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(900 + t);
+            for _ in 0..8 {
+                let x = Tensor::rand_uniform(&[3, 32, 32], 1.0, &mut rng);
+                let resp = s.infer(x).unwrap();
+                assert_eq!(resp.output.numel(), 10);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(server.stats().completed, 24);
+}
+
+/// The tuner improves (or at least never worsens) a real layer's latency
+/// versus the default configuration.
+#[test]
+fn tuner_never_worsens_layer() {
+    use grim::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
+    use grim::sparse::{Bcrc, BcrConfig, BcrMask};
+    use grim::tuner::{tune_layer, GaConfig, SearchSpace};
+    use grim::util::timer;
+
+    let mut rng = Rng::new(31);
+    let (rows, cols) = (256, 512);
+    let mask = BcrMask::random(rows, cols, BcrConfig::from_block_size(rows, cols, 4, 16), 8.0, &mut rng);
+    let mut w = Tensor::rand_uniform(&[rows, cols], 0.4, &mut rng);
+    mask.apply(&mut w);
+    let enc = Bcrc::from_masked(&w, &mask);
+    let x = Tensor::rand_uniform(&[cols, 32], 1.0, &mut rng);
+
+    let default_ms = timer::time_median_ms(5, 1, || {
+        let g = BcrcGemm::new(enc.clone(), GemmParams::default());
+        std::hint::black_box(g.execute(&x));
+    });
+    let ga = GaConfig { population: 6, generations: 3, eval_iters: 3, ..Default::default() };
+    let res = tune_layer(&SearchSpace::default(), ga, |cfg| {
+        let g = BcrcGemm::new(enc.clone(), cfg.gemm_params());
+        std::hint::black_box(g.execute(&x));
+    });
+    assert!(
+        res.best_ms <= default_ms * 1.5,
+        "tuned {} ms should not be far above default {} ms",
+        res.best_ms,
+        default_ms
+    );
+}

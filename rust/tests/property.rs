@@ -1,0 +1,289 @@
+//! Property-based tests (own harness, seeded xoshiro PRNG — no proptest in
+//! the vendored dep set). Each property runs across many random cases;
+//! failures print the seed for exact replay.
+
+use grim::conv::im2col::{dead_columns, im2col, im2col_skip, weights_to_gemm, ConvGeom};
+use grim::conv::{conv2d_direct, winograd::conv2d_winograd};
+use grim::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
+use grim::gemm::naive::{naive_gemm, naive_gemm_dense};
+use grim::gemm::tiled::{tiled_gemm, TileParams};
+use grim::gemm::{csr_gemm, loadcount};
+use grim::graph::dsl;
+use grim::sparse::{Bcrc, BcrConfig, BcrMask, Csr, ReorderPlan};
+use grim::tensor::Tensor;
+use grim::util::Rng;
+
+const CASES: u64 = 25;
+
+fn random_mask(rng: &mut Rng) -> (BcrMask, Tensor) {
+    let dims = [(16usize, 32usize, 4usize, 4usize), (32, 64, 4, 16), (8, 16, 2, 8), (64, 48, 8, 4)];
+    let (rows, cols, br, bc) = dims[rng.index(dims.len())];
+    let rate = 1.5 + rng.f64() * 10.0;
+    let cfg = BcrConfig::from_block_size(rows, cols, br, bc);
+    let mask = BcrMask::random(rows, cols, cfg, rate, rng);
+    let mut w = Tensor::rand_uniform(&[rows, cols], 1.0, rng);
+    mask.apply(&mut w);
+    (mask, w)
+}
+
+/// Property: BCRC encode∘decode is the identity on masked weights, and the
+/// encoding always validates structurally.
+#[test]
+fn prop_bcrc_round_trip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0xA000 + seed);
+        let (mask, w) = random_mask(&mut rng);
+        let enc = Bcrc::from_masked(&w, &mask);
+        enc.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(enc.decode(), w, "seed {seed}");
+        assert_eq!(enc.nnz(), mask.nnz(), "seed {seed}");
+    }
+}
+
+/// Property: every sparse/dense kernel computes the same product.
+#[test]
+fn prop_all_kernels_agree() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0xB000 + seed);
+        let (mask, w) = random_mask(&mut rng);
+        let n = 1 + rng.index(17);
+        let x = Tensor::rand_uniform(&[mask.cols, n], 1.0, &mut rng);
+        let oracle = naive_gemm(&w, &x);
+
+        let dense = naive_gemm_dense(&w, &x);
+        assert!(dense.allclose(&oracle, 1e-4, 1e-4), "dense seed {seed}");
+
+        let tiled = tiled_gemm(&w, &x, TileParams { mr: 4, kc: 32, nc: 16 });
+        assert!(tiled.allclose(&oracle, 1e-3, 1e-3), "tiled seed {seed}");
+
+        let csr = csr_gemm(&Csr::from_dense(&w), &x);
+        assert!(csr.allclose(&oracle, 1e-3, 1e-3), "csr seed {seed}");
+
+        let params = GemmParams {
+            unroll: [1usize, 2, 4, 8][rng.index(4)],
+            n_tile: [8usize, 64, 1024][rng.index(3)],
+            lre: rng.chance(0.7),
+        };
+        let grim = BcrcGemm::new(Bcrc::from_masked(&w, &mask), params).execute(&x);
+        assert!(grim.allclose(&oracle, 1e-3, 1e-3), "bcrc seed {seed} {params:?}");
+    }
+}
+
+/// Property: reorder is a bijection, never increases divergence, and the
+/// reordered execution equals the identity-order execution.
+#[test]
+fn prop_reorder_safety() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0xC000 + seed);
+        let (mask, w) = random_mask(&mut rng);
+        let plan = ReorderPlan::from_mask(&mask);
+        assert!(plan.is_permutation(), "seed {seed}");
+        let sigs: Vec<Vec<u32>> = (0..mask.rows).map(|r| mask.row_columns(r)).collect();
+        let ident = ReorderPlan::identity(sigs, mask.rows, mask.cols);
+        assert!(plan.divergence(8) <= ident.divergence(8), "seed {seed}");
+
+        let x = Tensor::rand_uniform(&[mask.cols, 4], 1.0, &mut rng);
+        let a = BcrcGemm::new(Bcrc::encode(&w, &mask, &plan), GemmParams::default()).execute(&x);
+        let b = BcrcGemm::new(Bcrc::encode(&w, &mask, &ident), GemmParams::default()).execute(&x);
+        assert!(a.allclose(&b, 1e-4, 1e-4), "seed {seed}");
+    }
+}
+
+/// Property: BCRC never stores more column indices than CSR, and the two
+/// encodings agree on nnz.
+#[test]
+fn prop_bcrc_index_no_worse_than_csr() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0xD000 + seed);
+        let (mask, w) = random_mask(&mut rng);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let csr = Csr::from_dense(&w);
+        assert_eq!(enc.nnz(), csr.nnz(), "seed {seed}");
+        assert!(enc.compact_col.len() <= csr.col_idx.len(), "seed {seed}");
+    }
+}
+
+/// Property: analytic LRE load counts are bounded: no-LRE equals nnz*n,
+/// LRE reduction never exceeds the unroll factor, and is ≥ 1.
+#[test]
+fn prop_loadcount_bounds() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0xE000 + seed);
+        let (mask, w) = random_mask(&mut rng);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let n = 1 + rng.index(40);
+        for u in [2usize, 4, 8] {
+            let no = loadcount::bcrc_input_loads(&enc, n, 1, false);
+            let yes = loadcount::bcrc_input_loads(&enc, n, u, true);
+            assert_eq!(no, enc.nnz() as u64 * n as u64);
+            assert!(yes <= no, "seed {seed} u={u}");
+            assert!(yes * u as u64 >= no, "seed {seed} u={u}: reduction beyond unroll");
+        }
+    }
+}
+
+/// Property: im2col+GEMM == direct convolution == Winograd (3x3/s1) for
+/// random geometries.
+#[test]
+fn prop_conv_lowering_equivalence() {
+    for seed in 0..15 {
+        let mut rng = Rng::new(0xF000 + seed);
+        let in_c = 1 + rng.index(4);
+        let hw = 5 + rng.index(8);
+        let out_c = 1 + rng.index(6);
+        let stride = 1 + rng.index(2);
+        let pad = rng.index(2);
+        let g = ConvGeom { in_c, in_h: hw, in_w: hw, out_c, kh: 3, kw: 3, stride, pad };
+        if g.in_h + 2 * pad < 3 {
+            continue;
+        }
+        let w = Tensor::rand_uniform(&[out_c, in_c, 3, 3], 1.0, &mut rng);
+        let x = Tensor::rand_uniform(&[in_c, hw, hw], 1.0, &mut rng);
+        let direct = conv2d_direct(&x, &w, stride, pad);
+        let gemm = naive_gemm(&weights_to_gemm(&w), &im2col(&x, &g))
+            .reshape(&[out_c, g.out_h(), g.out_w()]);
+        assert!(gemm.allclose(&direct, 1e-3, 1e-3), "seed {seed} im2col");
+        if stride == 1 {
+            let wino = conv2d_winograd(&x, &w, pad);
+            assert!(wino.allclose(&direct, 1e-3, 1e-3), "seed {seed} winograd");
+        }
+    }
+}
+
+/// Property: im2col dead-column skipping never changes the product.
+#[test]
+fn prop_im2col_skip_equivalence() {
+    for seed in 0..15 {
+        let mut rng = Rng::new(0x1F00 + seed);
+        let g = ConvGeom { in_c: 3, in_h: 8, in_w: 8, out_c: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let mut w = Tensor::rand_uniform(&[4, 27], 1.0, &mut rng);
+        // randomly kill some full columns
+        for c in 0..27 {
+            if rng.chance(0.3) {
+                for r in 0..4 {
+                    *w.at2_mut(r, c) = 0.0;
+                }
+            }
+        }
+        let dead = dead_columns(&w);
+        let x = Tensor::rand_uniform(&[3, 8, 8], 1.0, &mut rng);
+        let full = naive_gemm(&w, &im2col(&x, &g));
+        let skip = naive_gemm(&w, &im2col_skip(&x, &g, &dead));
+        assert!(full.allclose(&skip, 1e-5, 1e-5), "seed {seed}");
+    }
+}
+
+/// Property: DSL print∘parse is the identity on randomly generated
+/// programs (graph fuzzing).
+#[test]
+fn prop_dsl_round_trip_fuzz() {
+    for seed in 0..20 {
+        let mut rng = Rng::new(0x2F00 + seed);
+        let mut text = String::from("model \"fuzz\"\nin = Input(shape=[3,16,16])\n");
+        let mut prev = "in".to_string();
+        let mut c = 3usize;
+        let layers = 1 + rng.index(6);
+        for i in 0..layers {
+            let name = format!("n{i}");
+            match rng.index(4) {
+                0 => {
+                    let oc = 1 + rng.index(8);
+                    text.push_str(&format!(
+                        "{name} = Conv2D({prev}, out_c={oc}, kh=3, kw=3, stride=1, pad=1)\n"
+                    ));
+                    c = oc;
+                }
+                1 => text.push_str(&format!("{name} = ReLU({prev})\n")),
+                2 => text.push_str(&format!("{name} = ReLU6({prev})\n")),
+                _ => {
+                    text.push_str(&format!(
+                        "{name} = DWConv2D({prev}, kh=3, kw=3, stride=1, pad=1)\n"
+                    ));
+                }
+            }
+            prev = name;
+        }
+        let _ = c;
+        text.push_str(&format!("f = Flatten({prev})\nfc = FC(f, out_f=10)\n"));
+        let m = dsl::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        let printed = dsl::print(&m);
+        let m2 = dsl::parse(&printed).unwrap();
+        assert_eq!(m.graph.len(), m2.graph.len(), "seed {seed}");
+        for (a, b) in m.graph.nodes().iter().zip(m2.graph.nodes()) {
+            assert_eq!(a.op, b.op, "seed {seed}");
+            assert_eq!(a.inputs, b.inputs, "seed {seed}");
+        }
+        // shapes must infer on every fuzzed graph
+        m.graph.infer_shapes().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+/// Failure injection: corrupted .grim files must be rejected, never
+/// mis-loaded.
+#[test]
+fn prop_grim_file_corruption_rejected() {
+    use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+    let opts = InitOptions { rate: 4.0, block: [4, 16], seed: 55 };
+    let module = build_model(ModelKind::Gru, Preset::TimitMini, opts);
+    let weights = random_weights(&module, opts);
+    let tmp = std::env::temp_dir().join("grim_prop_corrupt.grim");
+    grim::formats::save_grim(&tmp, &module, &weights).unwrap();
+    let good = std::fs::read(&tmp).unwrap();
+    let mut rng = Rng::new(77);
+    let mut rejected = 0;
+    for _ in 0..20 {
+        let mut bad = good.clone();
+        match rng.index(3) {
+            0 => {
+                // truncate
+                let cut = 8 + rng.index(bad.len() - 16);
+                bad.truncate(cut);
+            }
+            1 => {
+                // flip bytes in the header/structure region
+                let i = rng.index(64.min(bad.len()));
+                bad[i] ^= 0xFF;
+            }
+            _ => {
+                // garbage tail
+                bad.extend_from_slice(&[0xDE, 0xAD, 0xBE, 0xEF]);
+            }
+        }
+        std::fs::write(&tmp, &bad).unwrap();
+        match grim::formats::load_grim(&tmp) {
+            Err(_) => rejected += 1,
+            Ok((m, w)) => {
+                // byte flips inside weight payloads can legitimately load;
+                // but the structure must still be coherent
+                assert_eq!(m.graph.len(), module.graph.len());
+                assert_eq!(w.len(), weights.len());
+            }
+        }
+    }
+    assert!(rejected >= 10, "corruption detection too weak: {rejected}/20");
+    std::fs::remove_file(&tmp).ok();
+}
+
+/// Property: the mask generator hits its requested pruning rate within a
+/// factor band and produces signature sharing (the structural property
+/// BCRC depends on).
+#[test]
+fn prop_mask_rate_and_sharing() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0x3F00 + seed);
+        let rate = 2.0 + rng.f64() * 14.0;
+        let mask = BcrMask::random(128, 128, BcrConfig::from_block_size(128, 128, 4, 16), rate, &mut rng);
+        let achieved = mask.pruning_rate();
+        assert!(
+            achieved > rate * 0.45 && achieved < rate * 2.2,
+            "seed {seed}: rate {rate} achieved {achieved}"
+        );
+        let plan = ReorderPlan::from_mask(&mask);
+        assert!(
+            plan.num_groups() < mask.rows,
+            "seed {seed}: no signature sharing at all ({} groups / {} rows)",
+            plan.num_groups(),
+            mask.rows
+        );
+    }
+}

@@ -4,6 +4,8 @@
 //! ~48% total storage reduction.
 
 use grim::bench::Report;
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
 use grim::sparse::{Bcrc, BcrConfig, BcrMask, Csr};
 use grim::tensor::Tensor;
 use grim::util::json::Json;
@@ -51,4 +53,42 @@ fn main() {
         max_saved * 100.0
     );
     assert!(max_saved > 0.3, "BCRC must save substantial index storage");
+
+    // Activation-memory companion: the static planner's packed arena vs
+    // reserving every intermediate + scratch buffer without reuse (the
+    // TFLite-planner-style baseline over the same buffer set).
+    println!("\nactivation memory (static planner arena vs no-reuse reservation):");
+    let mut arena_rep = Report::new(
+        "fig16_arena",
+        "Activation arena: planned vs no-reuse reservation",
+        &["model", "arena_KiB", "no_reuse_KiB", "resident_KiB", "saved"],
+    );
+    let opts = InitOptions { rate: 8.0, block: [4, 16], seed: 16 };
+    for kind in [ModelKind::Vgg16, ModelKind::Resnet18, ModelKind::MobilenetV2, ModelKind::Gru] {
+        let module = build_model(kind, Preset::CifarMini, opts);
+        let weights = random_weights(&module, opts);
+        let plan = compile(&module, &weights, CompileOptions::default()).expect("compile");
+        let mem = &plan.memory;
+        let saved = 1.0 - mem.arena_bytes() as f64 / mem.unplanned_bytes() as f64;
+        assert!(
+            mem.arena_bytes() <= mem.unplanned_bytes(),
+            "{kind:?}: planner must never exceed the unplanned peak"
+        );
+        println!(
+            "  {:12} arena {:6} KiB  no-reuse {:6} KiB  naive-resident {:6} KiB  saved {:5.1}%",
+            kind.as_str(),
+            mem.arena_bytes() / 1024,
+            mem.unplanned_bytes() / 1024,
+            mem.resident_value_bytes() / 1024,
+            saved * 100.0
+        );
+        arena_rep.row(vec![
+            kind.as_str().to_string(),
+            (mem.arena_bytes() / 1024).to_string(),
+            (mem.unplanned_bytes() / 1024).to_string(),
+            (mem.resident_value_bytes() / 1024).to_string(),
+            format!("{:.1}%", saved * 100.0),
+        ]);
+    }
+    arena_rep.finish();
 }

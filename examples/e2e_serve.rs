@@ -32,6 +32,13 @@ fn main() -> anyhow::Result<()> {
 
     let plan = compile(&module, &weights, CompileOptions::default())?;
     println!("storage: {} KiB, {} steps", plan.storage_bytes() / 1024, plan.steps.len());
+    println!(
+        "activation arena: {} KiB planned vs {} KiB no-reuse reservation ({:.1}% saved, {} buffers)",
+        plan.memory.arena_bytes() / 1024,
+        plan.memory.unplanned_bytes() / 1024,
+        100.0 * (1.0 - plan.memory.arena_bytes() as f64 / plan.memory.unplanned_bytes() as f64),
+        plan.memory.buffers.len()
+    );
     let engine = Engine::new(plan, 8);
 
     let config = ServerConfig {
@@ -73,6 +80,12 @@ fn main() -> anyhow::Result<()> {
         stats.latency_ms.p50, stats.latency_ms.p90, stats.latency_ms.p99, stats.latency_ms.max
     );
     println!("exec ms:    p50={:.3}   queue ms: p50={:.3}", stats.exec_ms.p50, stats.queue_ms.p50);
+    println!(
+        "arena pool: {} checkouts over {} arena(s) of {} KiB — zero per-request allocation",
+        stats.arena.checkouts,
+        stats.arena.arenas_created,
+        stats.arena.arena_bytes / 1024
+    );
     let rt = stats.latency_ms.p99 < 33.0;
     println!(
         "real-time criterion (33 ms/frame, §1): {}",

@@ -174,13 +174,19 @@ pub fn compile(
         .map(|n| n.inputs.iter().map(|i| redirect[*i]).collect())
         .collect();
 
-    Ok(ExecutionPlan {
+    let mut plan = ExecutionPlan {
         name: module.name.clone(),
         steps,
         inputs,
         input_id: graph.input()?,
         output_id: redirect[graph.output()?],
-    })
+        memory: crate::memory::MemoryPlan::empty(),
+    };
+    // Pass 5: static activation-memory planning — liveness intervals over
+    // the finished steps, then best-fit arena packing (see crate::memory).
+    let memory = crate::memory::plan_memory(&plan, &shapes)?;
+    plan.memory = memory;
+    Ok(plan)
 }
 
 fn get_weights<'a>(weights: &'a WeightStore, key: &str) -> anyhow::Result<&'a LayerWeights> {

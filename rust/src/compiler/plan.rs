@@ -9,6 +9,7 @@ use crate::conv::ConvGeom;
 use crate::gemm::bcrc_gemm::BcrcGemm;
 use crate::gemm::tiled::TileParams;
 use crate::graph::NodeId;
+use crate::memory::MemoryPlan;
 use crate::sparse::Csr;
 use crate::tensor::Tensor;
 use std::sync::Arc;
@@ -56,6 +57,19 @@ impl KernelImpl {
             KernelImpl::Winograd { w4 } => 4 * w4.numel(),
             KernelImpl::Csr { mat } => mat.total_bytes(),
             KernelImpl::Bcrc { gemm } => gemm.enc.total_bytes(),
+        }
+    }
+
+    /// GEMM output rows (`M`); `None` for Winograd, which never runs as a
+    /// plain GEMM.
+    pub fn out_rows(&self) -> Option<usize> {
+        match self {
+            KernelImpl::NaiveDense { w } | KernelImpl::Dense { w, .. } => {
+                Some(w.shape().as_matrix().0)
+            }
+            KernelImpl::Winograd { .. } => None,
+            KernelImpl::Csr { mat } => Some(mat.rows),
+            KernelImpl::Bcrc { gemm } => Some(gemm.enc.rows),
         }
     }
 }
@@ -123,6 +137,9 @@ pub struct ExecutionPlan {
     pub input_id: NodeId,
     /// Id of the output node.
     pub output_id: NodeId,
+    /// Static activation-memory plan: every intermediate and scratch
+    /// buffer packed into one arena (see [`crate::memory`]).
+    pub memory: MemoryPlan,
 }
 
 impl ExecutionPlan {
@@ -170,6 +187,13 @@ impl ExecutionPlan {
             };
             let _ = writeln!(s, "  [{id:3}] {desc}");
         }
+        let _ = writeln!(
+            s,
+            "  arena: {} KiB for {} buffers (no-reuse: {} KiB)",
+            self.memory.arena_bytes() / 1024,
+            self.memory.buffers.len(),
+            self.memory.unplanned_bytes() / 1024
+        );
         s
     }
 }

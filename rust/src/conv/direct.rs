@@ -2,6 +2,7 @@
 //! im2col and Winograd paths, and the depthwise kernel MobileNet-V2 needs.
 
 use crate::tensor::Tensor;
+use crate::util::sharedbuf::{SharedOut, SharedSlice};
 
 /// Direct 2-D convolution: `x[C,H,W] * w[F,C,KH,KW] -> [F,OH,OW]`.
 pub fn conv2d_direct(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
@@ -45,6 +46,64 @@ pub fn conv2d_direct(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tenso
     out
 }
 
+/// One depthwise channel: stencil `xc[H,W] * wc[KH,KW] -> oc[OH,OW]`.
+/// Shared by the serial, parallel, and arena execution paths so all three
+/// compute bit-identical results.
+#[allow(clippy::too_many_arguments)]
+fn dw_channel(
+    xc: &[f32],
+    wc: &[f32],
+    h: usize,
+    wd: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    oc: &mut [f32],
+) {
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    for oi in 0..oh {
+        let ibase = (oi * stride) as isize - pad as isize;
+        // fast interior path: the whole kernel window is in-bounds for
+        // every kj when jj0 >= 0 and jj0 + kw <= wd — hoists all
+        // branches out of the stencil (the depthwise hot loop).
+        for oj in 0..ow {
+            let jbase = (oj * stride) as isize - pad as isize;
+            let interior = ibase >= 0
+                && ibase + kh as isize <= h as isize
+                && jbase >= 0
+                && jbase + kw as isize <= wd as isize;
+            let mut acc = 0.0f32;
+            if interior {
+                let (i0, j0) = (ibase as usize, jbase as usize);
+                for ki in 0..kh {
+                    let xrow = &xc[(i0 + ki) * wd + j0..(i0 + ki) * wd + j0 + kw];
+                    let wrow = &wc[ki * kw..(ki + 1) * kw];
+                    for kj in 0..kw {
+                        acc += xrow[kj] * wrow[kj];
+                    }
+                }
+            } else {
+                for ki in 0..kh {
+                    let ii = ibase + ki as isize;
+                    if ii < 0 || ii >= h as isize {
+                        continue;
+                    }
+                    for kj in 0..kw {
+                        let jj = jbase + kj as isize;
+                        if jj < 0 || jj >= wd as isize {
+                            continue;
+                        }
+                        acc += xc[ii as usize * wd + jj as usize] * wc[ki * kw + kj];
+                    }
+                }
+            }
+            oc[oi * ow + oj] = acc;
+        }
+    }
+}
+
 /// Depthwise 2-D convolution: `x[C,H,W] * w[C,1,KH,KW] -> [C,OH,OW]`
 /// (channel multiplier 1, as in MobileNet-V2).
 pub fn depthwise_conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
@@ -56,54 +115,77 @@ pub fn depthwise_conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Te
     let oh = (h + 2 * pad - kh) / stride + 1;
     let ow = (wd + 2 * pad - kw) / stride + 1;
     let mut out = Tensor::zeros(&[c, oh, ow]);
-    let xd = x.data();
+    depthwise_conv2d_into(x.data(), c, h, wd, w, stride, pad, out.data_mut(), None);
+    out
+}
+
+/// Arena depthwise convolution: `xd` is `[C,H,W]` flattened, `w` the
+/// `[C,1,KH,KW]` filter tensor; the result is written into `out` of
+/// length `C*OH*OW`. Channels partition across `pool` when provided and
+/// the work is large enough (the paper's 8-thread execution), falling
+/// back to the serial stencil otherwise. Zero-copy in both modes.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_conv2d_into(
+    xd: &[f32],
+    c: usize,
+    h: usize,
+    wd: usize,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+    out: &mut [f32],
+    pool: Option<&crate::util::ThreadPool>,
+) {
+    let (c2, one, kh, kw) = w.shape().as_nchw();
+    assert_eq!(c, c2);
+    assert_eq!(one, 1, "depthwise expects [C,1,KH,KW]");
+    assert_eq!(xd.len(), c * h * wd, "input length mismatch");
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    assert_eq!(out.len(), c * oh * ow, "output length mismatch");
     let wdat = w.data();
-    let od = out.data_mut();
-    for ci in 0..c {
-        let xc = &xd[ci * h * wd..(ci + 1) * h * wd];
-        let wc = &wdat[ci * kh * kw..(ci + 1) * kh * kw];
-        let oc = &mut od[ci * oh * ow..(ci + 1) * oh * ow];
-        for oi in 0..oh {
-            let ibase = (oi * stride) as isize - pad as isize;
-            // fast interior path: the whole kernel window is in-bounds for
-            // every kj when jj0 >= 0 and jj0 + kw <= wd — hoists all
-            // branches out of the stencil (the depthwise hot loop).
-            for oj in 0..ow {
-                let jbase = (oj * stride) as isize - pad as isize;
-                let interior = ibase >= 0
-                    && ibase + kh as isize <= h as isize
-                    && jbase >= 0
-                    && jbase + kw as isize <= wd as isize;
-                let mut acc = 0.0f32;
-                if interior {
-                    let (i0, j0) = (ibase as usize, jbase as usize);
-                    for ki in 0..kh {
-                        let xrow = &xc[(i0 + ki) * wd + j0..(i0 + ki) * wd + j0 + kw];
-                        let wrow = &wc[ki * kw..(ki + 1) * kw];
-                        for kj in 0..kw {
-                            acc += xrow[kj] * wrow[kj];
-                        }
-                    }
-                } else {
-                    for ki in 0..kh {
-                        let ii = ibase + ki as isize;
-                        if ii < 0 || ii >= h as isize {
-                            continue;
-                        }
-                        for kj in 0..kw {
-                            let jj = jbase + kj as isize;
-                            if jj < 0 || jj >= wd as isize {
-                                continue;
-                            }
-                            acc += xc[ii as usize * wd + jj as usize] * wc[ki * kw + kj];
-                        }
-                    }
-                }
-                oc[oi * ow + oj] = acc;
+    let parallel = pool.filter(|_| c * oh * ow * kh * kw >= 64 * 1024);
+    match parallel {
+        None => {
+            for ci in 0..c {
+                dw_channel(
+                    &xd[ci * h * wd..(ci + 1) * h * wd],
+                    &wdat[ci * kh * kw..(ci + 1) * kh * kw],
+                    h,
+                    wd,
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    &mut out[ci * oh * ow..(ci + 1) * oh * ow],
+                );
             }
         }
+        Some(pool) => {
+            let oview = SharedOut::new(out);
+            let xv = SharedSlice::new(xd);
+            let wv = SharedSlice::new(wdat);
+            pool.run_partitioned(c, move |_wid, lo, hi| {
+                // SAFETY: buffers outlive the blocking pool call; each
+                // worker owns a disjoint channel range of the output.
+                let (xd, wdat) = unsafe { (xv.get(), wv.get()) };
+                for ci in lo..hi {
+                    let oc = unsafe { oview.range_mut(ci * oh * ow, (ci + 1) * oh * ow) };
+                    dw_channel(
+                        &xd[ci * h * wd..(ci + 1) * h * wd],
+                        &wdat[ci * kh * kw..(ci + 1) * kh * kw],
+                        h,
+                        wd,
+                        kh,
+                        kw,
+                        stride,
+                        pad,
+                        oc,
+                    );
+                }
+            });
+        }
     }
-    out
 }
 
 /// Channel-parallel depthwise convolution: channels are independent, so
@@ -118,36 +200,12 @@ pub fn depthwise_conv2d_parallel(
 ) -> Tensor {
     let d = x.shape().dims();
     let (c, h, wd) = (d[0], d[1], d[2]);
-    let (c2, _one, kh, kw) = w.shape().as_nchw();
-    assert_eq!(c, c2);
+    let (_c2, _one, kh, kw) = w.shape().as_nchw();
     let oh = (h + 2 * pad - kh) / stride + 1;
     let ow = (wd + 2 * pad - kw) / stride + 1;
-    if c * oh * ow * kh * kw < 64 * 1024 {
-        return depthwise_conv2d(x, w, stride, pad);
-    }
-    use std::sync::{Arc, Mutex};
-    let out = Arc::new(Mutex::new(Tensor::zeros(&[c, oh, ow])));
-    let xd: Arc<Vec<f32>> = Arc::new(x.data().to_vec());
-    let wdat: Arc<Vec<f32>> = Arc::new(w.data().to_vec());
-    let out2 = Arc::clone(&out);
-    pool.run_partitioned(c, move |_wid, lo, hi| {
-        let mut local = vec![0.0f32; (hi - lo) * oh * ow];
-        for ci in lo..hi {
-            let xc = Tensor::from_vec(&[1, h, wd], xd[ci * h * wd..(ci + 1) * h * wd].to_vec());
-            let wc = Tensor::from_vec(
-                &[1, 1, kh, kw],
-                wdat[ci * kh * kw..(ci + 1) * kh * kw].to_vec(),
-            );
-            let oc = depthwise_conv2d(&xc, &wc, stride, pad);
-            local[(ci - lo) * oh * ow..(ci - lo + 1) * oh * ow].copy_from_slice(oc.data());
-        }
-        let mut g = out2.lock().unwrap();
-        g.data_mut()[lo * oh * ow..hi * oh * ow].copy_from_slice(&local);
-    });
-    match Arc::try_unwrap(out) {
-        Ok(m) => m.into_inner().unwrap(),
-        Err(arc) => arc.lock().unwrap().clone(),
-    }
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    depthwise_conv2d_into(x.data(), c, h, wd, w, stride, pad, out.data_mut(), Some(pool));
+    out
 }
 
 #[cfg(test)]

@@ -55,11 +55,10 @@ pub fn weights_to_gemm(w: &Tensor) -> Tensor {
 pub fn im2col(x: &Tensor, g: &ConvGeom) -> Tensor {
     let dims = x.shape().dims();
     assert_eq!(dims, &[g.in_c, g.in_h, g.in_w], "input shape mismatch");
-    let (oh, ow) = (g.out_h(), g.out_w());
     let k = g.gemm_k();
-    let n = oh * ow;
+    let n = g.gemm_n();
     let mut out = Tensor::zeros(&[k, n]);
-    fill_rows(x, g, out.data_mut(), None);
+    fill_rows(x.data(), g, out.data_mut(), None);
     out
 }
 
@@ -69,16 +68,27 @@ pub fn im2col(x: &Tensor, g: &ConvGeom) -> Tensor {
 /// unchanged — the saving is the skipped memory traffic.
 pub fn im2col_skip(x: &Tensor, g: &ConvGeom, dead_cols: &[bool]) -> Tensor {
     assert_eq!(dead_cols.len(), g.gemm_k());
-    let (oh, ow) = (g.out_h(), g.out_w());
-    let mut out = Tensor::zeros(&[g.gemm_k(), oh * ow]);
-    fill_rows(x, g, out.data_mut(), Some(dead_cols));
+    let mut out = Tensor::zeros(&[g.gemm_k(), g.gemm_n()]);
+    fill_rows(x.data(), g, out.data_mut(), Some(dead_cols));
     out
 }
 
-fn fill_rows(x: &Tensor, g: &ConvGeom, out: &mut [f32], dead: Option<&[bool]>) {
+/// Arena variant of [`im2col`]/[`im2col_skip`]: gathers into `out`
+/// (length `gemm_k * gemm_n`), zeroing it first so padding and skipped
+/// rows read as zeros even in a reused workspace slice.
+pub fn im2col_into(xd: &[f32], g: &ConvGeom, dead: Option<&[bool]>, out: &mut [f32]) {
+    assert_eq!(xd.len(), g.in_c * g.in_h * g.in_w, "input length mismatch");
+    assert_eq!(out.len(), g.gemm_k() * g.gemm_n(), "column buffer length mismatch");
+    if let Some(d) = dead {
+        assert_eq!(d.len(), g.gemm_k());
+    }
+    out.fill(0.0);
+    fill_rows(xd, g, out, dead);
+}
+
+fn fill_rows(xd: &[f32], g: &ConvGeom, out: &mut [f32], dead: Option<&[bool]>) {
     let (oh, ow) = (g.out_h(), g.out_w());
     let n = oh * ow;
-    let xd = x.data();
     let (h, w) = (g.in_h, g.in_w);
     for c in 0..g.in_c {
         for ki in 0..g.kh {

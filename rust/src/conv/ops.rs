@@ -1,45 +1,62 @@
 //! Elementwise and pooling layer ops shared by all execution paths.
+//!
+//! Each op has a slice form (`*_slice` / `*_into`) operating on raw
+//! arena ranges — the planned executor's interface — and the original
+//! `Tensor` form delegating to it, so the naive interpreter and the
+//! planned executor run literally the same arithmetic.
 
 use crate::tensor::Tensor;
 
-/// ReLU in place.
-pub fn relu_(x: &mut Tensor) {
-    for v in x.data_mut() {
+/// ReLU in place on a slice.
+pub fn relu_slice(x: &mut [f32]) {
+    for v in x {
         if *v < 0.0 {
             *v = 0.0;
         }
     }
 }
 
+/// ReLU in place.
+pub fn relu_(x: &mut Tensor) {
+    relu_slice(x.data_mut());
+}
+
+/// ReLU6 in place on a slice (MobileNet-V2).
+pub fn relu6_slice(x: &mut [f32]) {
+    for v in x {
+        *v = v.clamp(0.0, 6.0);
+    }
+}
+
 /// ReLU6 in place (MobileNet-V2).
 pub fn relu6_(x: &mut Tensor) {
-    for v in x.data_mut() {
-        *v = v.clamp(0.0, 6.0);
+    relu6_slice(x.data_mut());
+}
+
+/// Add a per-channel bias to a `[C, per]`-laid-out slice in place.
+pub fn add_bias_slice(x: &mut [f32], bias: &[f32]) {
+    let c = bias.len();
+    assert!(c > 0 && x.len() % c == 0, "bias length mismatch");
+    let per = x.len() / c;
+    for ci in 0..c {
+        for v in &mut x[ci * per..(ci + 1) * per] {
+            *v += bias[ci];
+        }
     }
 }
 
 /// Add a per-channel bias to `x[C, ...]` in place.
 pub fn add_bias_(x: &mut Tensor, bias: &[f32]) {
-    let dims = x.shape().dims().to_vec();
-    let c = dims[0];
+    let c = x.shape().dim(0);
     assert_eq!(bias.len(), c, "bias length mismatch");
-    let per = x.numel() / c;
-    let d = x.data_mut();
-    for ci in 0..c {
-        for i in 0..per {
-            d[ci * per + i] += bias[ci];
-        }
-    }
+    add_bias_slice(x.data_mut(), bias);
 }
 
-/// 2×2 max-pool with stride 2 over `x[C,H,W]`.
-pub fn maxpool2(x: &Tensor) -> Tensor {
-    let d = x.shape().dims();
-    let (c, h, w) = (d[0], d[1], d[2]);
+/// 2×2 max-pool with stride 2: `x[C,H,W]` slice → `out[C,H/2,W/2]` slice.
+pub fn maxpool2_into(xd: &[f32], c: usize, h: usize, w: usize, out: &mut [f32]) {
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = Tensor::zeros(&[c, oh, ow]);
-    let xd = x.data();
-    let od = out.data_mut();
+    assert_eq!(xd.len(), c * h * w, "input length mismatch");
+    assert_eq!(out.len(), c * oh * ow, "output length mismatch");
     for ci in 0..c {
         for oi in 0..oh {
             for oj in 0..ow {
@@ -49,11 +66,29 @@ pub fn maxpool2(x: &Tensor) -> Tensor {
                         m = m.max(xd[(ci * h + oi * 2 + a) * w + oj * 2 + b]);
                     }
                 }
-                od[(ci * oh + oi) * ow + oj] = m;
+                out[(ci * oh + oi) * ow + oj] = m;
             }
         }
     }
+}
+
+/// 2×2 max-pool with stride 2 over `x[C,H,W]`.
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    let d = x.shape().dims();
+    let (c, h, w) = (d[0], d[1], d[2]);
+    let mut out = Tensor::zeros(&[c, h / 2, w / 2]);
+    maxpool2_into(x.data(), c, h, w, out.data_mut());
     out
+}
+
+/// Global average pooling on slices: `x[C,H,W]` → `out[C]`.
+pub fn global_avgpool_into(xd: &[f32], c: usize, h: usize, w: usize, out: &mut [f32]) {
+    assert_eq!(xd.len(), c * h * w, "input length mismatch");
+    assert_eq!(out.len(), c, "output length mismatch");
+    let per = (h * w) as f32;
+    for ci in 0..c {
+        out[ci] = xd[ci * h * w..(ci + 1) * h * w].iter().sum::<f32>() / per;
+    }
 }
 
 /// Global average pooling `[C,H,W] -> [C,1,1]`.
@@ -61,20 +96,42 @@ pub fn global_avgpool(x: &Tensor) -> Tensor {
     let d = x.shape().dims();
     let (c, h, w) = (d[0], d[1], d[2]);
     let mut out = Tensor::zeros(&[c, 1, 1]);
-    let xd = x.data();
-    let od = out.data_mut();
-    let per = (h * w) as f32;
-    for ci in 0..c {
-        od[ci] = xd[ci * h * w..(ci + 1) * h * w].iter().sum::<f32>() / per;
-    }
+    global_avgpool_into(x.data(), c, h, w, out.data_mut());
     out
+}
+
+/// Elementwise addition on slices: `x += y`.
+pub fn add_slice(x: &mut [f32], y: &[f32]) {
+    assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
 }
 
 /// Elementwise residual addition (shapes must match).
 pub fn add_(x: &mut Tensor, y: &Tensor) {
     assert_eq!(x.shape(), y.shape());
-    for (a, b) in x.data_mut().iter_mut().zip(y.data()) {
-        *a += b;
+    add_slice(x.data_mut(), y.data());
+}
+
+/// Numerically stable row softmax on slices: `xd` is `[rows, n]`
+/// flattened, `out` the same length.
+pub fn softmax_rows_into(xd: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(xd.len() % n, 0);
+    assert_eq!(out.len(), xd.len());
+    let rows = xd.len() / n;
+    for r in 0..rows {
+        let row = &xd[r * n..(r + 1) * n];
+        let m = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut denom = 0.0f32;
+        for (j, v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            out[r * n + j] = e;
+            denom += e;
+        }
+        for j in 0..n {
+            out[r * n + j] /= denom;
+        }
     }
 }
 
@@ -84,21 +141,7 @@ pub fn softmax_rows(x: &Tensor, n: usize) -> Tensor {
     assert_eq!(x.numel() % n, 0);
     let rows = x.numel() / n;
     let mut out = Tensor::zeros(&[rows, n]);
-    let xd = x.data();
-    let od = out.data_mut();
-    for r in 0..rows {
-        let row = &xd[r * n..(r + 1) * n];
-        let m = row.iter().cloned().fold(f32::MIN, f32::max);
-        let mut denom = 0.0f32;
-        for (j, v) in row.iter().enumerate() {
-            let e = (v - m).exp();
-            od[r * n + j] = e;
-            denom += e;
-        }
-        for j in 0..n {
-            od[r * n + j] /= denom;
-        }
-    }
+    softmax_rows_into(x.data(), n, out.data_mut());
     out
 }
 
@@ -171,5 +214,18 @@ mod tests {
         assert!(s.data()[0] < 0.001 && (s.data()[1] - 0.5).abs() < 1e-6 && s.data()[2] > 0.999);
         let th = tanh(&t);
         assert!(th.data()[0] < -0.999 && th.data()[1].abs() < 1e-6 && th.data()[2] > 0.999);
+    }
+
+    #[test]
+    fn slice_forms_match_tensor_forms() {
+        let x = Tensor::from_vec(&[1, 4, 4], (0..16).map(|v| v as f32 - 6.0).collect());
+        let t = maxpool2(&x);
+        let mut s = vec![0.0; 4];
+        maxpool2_into(x.data(), 1, 4, 4, &mut s);
+        assert_eq!(t.data(), &s[..]);
+
+        let mut g = vec![0.0; 1];
+        global_avgpool_into(x.data(), 1, 4, 4, &mut g);
+        assert_eq!(global_avgpool(&x).data(), &g[..]);
     }
 }

@@ -17,11 +17,14 @@ pub struct InferRequest {
 #[derive(Debug)]
 pub struct InferResponse {
     pub id: u64,
+    /// Model output; a zero placeholder when `error` is set.
     pub output: Tensor,
     /// Time spent waiting in the queue (ms).
     pub queue_ms: f64,
     /// Time spent executing (ms).
     pub exec_ms: f64,
+    /// Execution failure (e.g. wrong input shape); `None` on success.
+    pub error: Option<String>,
 }
 
 /// A bounded FIFO with blocking push (backpressure) and blocking pop.

@@ -5,6 +5,7 @@
 use super::batcher::{Batcher, BatchPolicy};
 use super::queue::{InferRequest, InferResponse, RequestQueue};
 use crate::engine::Engine;
+use crate::memory::{PoolStats, WorkspacePool};
 use crate::tensor::Tensor;
 use crate::util::stats::{summarize, Summary};
 use std::collections::HashMap;
@@ -35,6 +36,14 @@ pub struct ServerStats {
     pub queue_ms: Summary,
     pub exec_ms: Summary,
     pub throughput_rps: f64,
+    /// Requests that failed execution (wrong shape, plan errors). These
+    /// are excluded from `completed` and from the latency/throughput
+    /// summaries so a burst of fast failures cannot flatter the stats.
+    pub failed: u64,
+    /// Workspace-arena pool telemetry: arena size, arenas ever created
+    /// (peak concurrency), checkouts (one per inference) — the zero-alloc
+    /// evidence for the serving path.
+    pub arena: PoolStats,
 }
 
 /// A running inference server over one compiled model.
@@ -46,7 +55,11 @@ pub struct Server {
     samples: Arc<Mutex<Vec<(f64, f64)>>>, // (queue_ms, exec_ms)
     started: Instant,
     completed: Arc<AtomicU64>,
+    failed: Arc<AtomicU64>,
     batches: Arc<AtomicU64>,
+    /// The engine's workspace pool, shared so stats stay observable after
+    /// the engine moves into the scheduler thread.
+    arena: Arc<WorkspacePool>,
 }
 
 impl Server {
@@ -57,13 +70,16 @@ impl Server {
             Arc::new(Mutex::new(HashMap::new()));
         let samples = Arc::new(Mutex::new(Vec::new()));
         let completed = Arc::new(AtomicU64::new(0));
+        let failed = Arc::new(AtomicU64::new(0));
         let batches = Arc::new(AtomicU64::new(0));
 
         let q2 = Arc::clone(&queue);
         let p2 = Arc::clone(&pending);
         let s2 = Arc::clone(&samples);
         let c2 = Arc::clone(&completed);
+        let f2 = Arc::clone(&failed);
         let b2 = Arc::clone(&batches);
+        let arena = engine.workspace_pool();
         let policy = config.batch;
         let scheduler = std::thread::Builder::new()
             .name("grim-scheduler".into())
@@ -74,12 +90,21 @@ impl Server {
                     for req in batch {
                         let qms = req.enqueued.elapsed().as_secs_f64() * 1e3;
                         let t = Instant::now();
-                        let out = engine
-                            .run(&req.input)
-                            .unwrap_or_else(|_| Tensor::zeros(&[1]));
+                        // Failures (wrong input shape, plan errors) must
+                        // reach the caller, not masquerade as results.
+                        let (out, error) = match engine.run(&req.input) {
+                            Ok(out) => (out, None),
+                            Err(e) => (Tensor::zeros(&[1]), Some(e.to_string())),
+                        };
                         let ems = t.elapsed().as_secs_f64() * 1e3;
-                        s2.lock().unwrap().push((qms, ems));
-                        c2.fetch_add(1, Ordering::Relaxed);
+                        if error.is_none() {
+                            // only successful runs feed the latency and
+                            // throughput summaries
+                            s2.lock().unwrap().push((qms, ems));
+                            c2.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            f2.fetch_add(1, Ordering::Relaxed);
+                        }
                         let tx = p2.lock().unwrap().remove(&req.id);
                         if let Some(tx) = tx {
                             let _ = tx.send(InferResponse {
@@ -87,6 +112,7 @@ impl Server {
                                 output: out,
                                 queue_ms: qms,
                                 exec_ms: ems,
+                                error,
                             });
                         }
                     }
@@ -102,7 +128,9 @@ impl Server {
             samples,
             started: Instant::now(),
             completed,
+            failed,
             batches,
+            arena,
         }
     }
 
@@ -118,10 +146,15 @@ impl Server {
         Ok(rx)
     }
 
-    /// Submit and wait for the response (convenience).
+    /// Submit and wait for the response (convenience). Execution
+    /// failures surface as `Err`, never as a placeholder output.
     pub fn infer(&self, input: Tensor) -> anyhow::Result<InferResponse> {
         let rx = self.submit(input)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?;
+        if let Some(e) = &resp.error {
+            anyhow::bail!("inference failed: {e}");
+        }
+        Ok(resp)
     }
 
     /// Current stats snapshot.
@@ -139,6 +172,8 @@ impl Server {
             queue_ms: summarize(&queue_ms),
             exec_ms: summarize(&exec_ms),
             throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+            failed: self.failed.load(Ordering::Relaxed),
+            arena: self.arena.stats(),
         }
     }
 
@@ -208,6 +243,41 @@ mod tests {
         assert_eq!(stats.completed, 40);
         assert!(stats.throughput_rps > 0.0);
         assert!(stats.latency_ms.p99 >= stats.latency_ms.p50);
+    }
+
+    #[test]
+    fn wrong_shape_surfaces_as_error() {
+        let server = small_server();
+        let mut rng = Rng::new(33);
+        // model expects [20, 19]
+        let bad = Tensor::rand_uniform(&[3, 3], 1.0, &mut rng);
+        let err = server.infer(bad).unwrap_err();
+        assert!(err.to_string().contains("inference failed"), "{err}");
+        // server keeps serving valid requests afterwards
+        let good = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+        assert!(server.infer(good).unwrap().error.is_none());
+        // failures are tracked separately and never skew the summaries
+        let stats = server.stats();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.latency_ms.count, 1);
+    }
+
+    #[test]
+    fn serving_reuses_one_arena() {
+        let server = small_server();
+        let mut rng = Rng::new(21);
+        for _ in 0..6 {
+            let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+            server.infer(x).unwrap();
+        }
+        let stats = server.stats();
+        assert_eq!(stats.arena.checkouts, 6, "one arena checkout per request");
+        assert_eq!(
+            stats.arena.arenas_created, 1,
+            "the single scheduler thread must reuse one arena"
+        );
+        assert!(stats.arena.arena_bytes > 0);
     }
 
     #[test]

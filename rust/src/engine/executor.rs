@@ -1,17 +1,33 @@
-//! Plan interpreter. Each [`Step`] dispatches to the kernel its
+//! Plan executor. Each [`Step`] dispatches to the kernel its
 //! [`KernelImpl`] selected at compile time; GEMMs above a size threshold
 //! run on the worker pool (the "8 threads on CPU" of §6.1).
+//!
+//! Two execution paths share every kernel and therefore compute
+//! bit-identical results:
+//!
+//! * **planned** ([`Engine::run`]) — the serving path. All intermediates
+//!   and scratch live at offsets assigned by the compile-time
+//!   [`crate::memory::MemoryPlan`]; the run checks one arena out of the
+//!   engine's [`WorkspacePool`] and performs *no per-step heap
+//!   allocation* (the one exception, noted inline, is the Winograd
+//!   baseline used only by the OptDense backend).
+//! * **naive** ([`Engine::run_naive`]) — the original interpreter holding
+//!   each intermediate as an owned [`Tensor`]. Kept as the correctness
+//!   reference the planned path is property-tested against.
 
 use crate::compiler::plan::{Activation, ExecutionPlan, GruLayerPlan, KernelImpl, Step};
-use crate::conv::direct::depthwise_conv2d_parallel;
-use crate::conv::im2col::{im2col, im2col_skip, ConvGeom};
+use crate::conv::direct::{depthwise_conv2d_into, depthwise_conv2d_parallel};
+use crate::conv::im2col::{im2col, im2col_into, im2col_skip, ConvGeom};
 use crate::conv::ops;
 use crate::conv::winograd::conv2d_winograd;
-use crate::gemm::csr_gemm::{csr_gemm, csr_gemm_parallel};
-use crate::gemm::naive::naive_gemm_dense;
-use crate::gemm::tiled::{tiled_gemm, tiled_gemm_parallel};
+use crate::gemm::csr_gemm::{csr_gemm_into, csr_gemm_parallel_into};
+use crate::gemm::naive::naive_gemm_dense_into;
+use crate::gemm::tiled::{tiled_gemm_into, tiled_gemm_parallel_into};
+use crate::memory::layout::{self, ConvScratch, GruScratch};
+use crate::memory::{Workspace, WorkspacePool};
 use crate::tensor::Tensor;
 use crate::util::{ThreadPool, Timer};
+use std::sync::Arc;
 
 use super::metrics::{LayerMetric, RunMetrics};
 
@@ -19,17 +35,25 @@ use super::metrics::{LayerMetric, RunMetrics};
 /// this the dispatch overhead dominates.
 const PARALLEL_THRESHOLD: usize = 16 * 1024;
 
-/// The inference engine: a plan bound to a worker pool.
+/// The inference engine: a plan bound to a worker pool and a workspace
+/// arena pool.
 pub struct Engine {
     plan: ExecutionPlan,
     pool: ThreadPool,
+    workspaces: Arc<WorkspacePool>,
     /// Collect per-layer metrics (small overhead; off on the serving path).
     pub collect_metrics: bool,
 }
 
 impl Engine {
     pub fn new(plan: ExecutionPlan, threads: usize) -> Self {
-        Engine { plan, pool: ThreadPool::new(threads.max(1)), collect_metrics: false }
+        let workspaces = Arc::new(WorkspacePool::new(plan.memory.arena_len));
+        Engine {
+            plan,
+            pool: ThreadPool::new(threads.max(1)),
+            workspaces,
+            collect_metrics: false,
+        }
     }
 
     pub fn plan(&self) -> &ExecutionPlan {
@@ -40,32 +64,336 @@ impl Engine {
         self.pool.size()
     }
 
+    /// Handle to the engine's arena pool (serving stats, zero-alloc tests).
+    pub fn workspace_pool(&self) -> Arc<WorkspacePool> {
+        Arc::clone(&self.workspaces)
+    }
+
     /// Run one inference; returns the output tensor.
     pub fn run(&self, input: &Tensor) -> anyhow::Result<Tensor> {
         Ok(self.run_with_metrics(input)?.0)
     }
 
-    /// Run one inference, returning output + per-layer metrics.
+    /// Run one inference, returning output + per-layer metrics. Checks a
+    /// workspace out of the pool and executes the planned path.
     pub fn run_with_metrics(&self, input: &Tensor) -> anyhow::Result<(Tensor, RunMetrics)> {
-        let n = self.plan.steps.len();
-        let mut values: Vec<Option<Tensor>> = vec![None; n];
+        let mut ws = self.workspaces.checkout();
+        self.run_planned(input, &mut ws)
+    }
+
+    /// Planned execution in a caller-provided workspace (the arena must
+    /// match this plan's `memory.arena_len`).
+    pub fn run_planned(
+        &self,
+        input: &Tensor,
+        ws: &mut Workspace,
+    ) -> anyhow::Result<(Tensor, RunMetrics)> {
+        let mem = &self.plan.memory;
+        anyhow::ensure!(
+            ws.arena_len() == mem.arena_len,
+            "workspace arena {} != plan arena {}",
+            ws.arena_len(),
+            mem.arena_len
+        );
+        // Full-dims check, not just numel: a transposed same-numel input
+        // would otherwise be silently reinterpreted via the planned shapes.
+        let expect = &mem.shapes[self.plan.input_id];
+        anyhow::ensure!(
+            input.shape().dims() == expect.as_slice(),
+            "input shape {:?} does not match model input {:?}",
+            input.shape().dims(),
+            expect
+        );
         let mut metrics = RunMetrics::default();
         for (id, step) in &self.plan.steps {
             let t = Timer::start();
-            let kind = self.exec_step(*id, step, input, &mut values)?;
+            let kind = self.exec_step_planned(*id, step, input, ws)?;
             if self.collect_metrics {
                 metrics.layers.push(LayerMetric { node: *id, kind, micros: t.elapsed_us() });
             }
         }
-        let out = values[self.plan.output_id]
-            .take()
-            .ok_or_else(|| anyhow::anyhow!("output not produced"))?;
+        let out = match mem.value_range(self.plan.output_id) {
+            Some((off, len)) => {
+                Tensor::from_vec(&mem.shapes[self.plan.output_id], ws.slice(off, len).to_vec())
+            }
+            // Degenerate plan whose output is the external input.
+            None => input.clone(),
+        };
         Ok((out, metrics))
+    }
+
+    // ---------------------------------------------------------------
+    // Planned path
+    // ---------------------------------------------------------------
+
+    /// Arena range of `id`'s input in `slot`; `None` means the external
+    /// input tensor.
+    fn src_range(&self, id: usize, slot: usize) -> anyhow::Result<Option<(usize, usize)>> {
+        let src = self.plan.inputs[id]
+            .get(slot)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("node {id}: missing input {slot}"))?;
+        if let Some(r) = self.plan.memory.value_range(src) {
+            return Ok(Some(r));
+        }
+        anyhow::ensure!(
+            src == self.plan.input_id,
+            "node {id}: input {src} has no planned buffer"
+        );
+        Ok(None)
+    }
+
+    /// Output dims of `id`'s input in `slot` (for dims-carrying kernels).
+    fn src_dims(&self, id: usize, slot: usize) -> &[usize] {
+        &self.plan.memory.shapes[self.plan.inputs[id][slot]]
+    }
+
+    /// Arena range of `id`'s own value buffer.
+    fn out_range(&self, id: usize) -> anyhow::Result<(usize, usize)> {
+        self.plan
+            .memory
+            .value_range(id)
+            .ok_or_else(|| anyhow::anyhow!("node {id}: no planned output buffer"))
+    }
+
+    /// Borrow (output, input) where the input is either an arena value or
+    /// the external input tensor.
+    fn out_and_in<'w>(
+        &self,
+        ws: &'w mut Workspace,
+        out_r: (usize, usize),
+        src: Option<(usize, usize)>,
+        input: &'w Tensor,
+    ) -> (&'w mut [f32], &'w [f32]) {
+        match src {
+            Some(in_r) => {
+                let (o, i) = ws.split2_mut(out_r, in_r);
+                (o, &*i)
+            }
+            None => (ws.slice_mut(out_r.0, out_r.1), input.data()),
+        }
+    }
+
+    /// Borrow (output, gather scratch, input) for a GEMV-style step.
+    fn gemm_operands<'w>(
+        &self,
+        ws: &'w mut Workspace,
+        out_r: (usize, usize),
+        gather_r: Option<(usize, usize)>,
+        src: Option<(usize, usize)>,
+        input: &'w Tensor,
+    ) -> (&'w mut [f32], &'w mut [f32], &'w [f32]) {
+        match (src, gather_r) {
+            (Some(in_r), Some(g_r)) => {
+                let (out, gather, xin) = ws.split3_mut(out_r, g_r, in_r);
+                (out, gather, &*xin)
+            }
+            (Some(in_r), None) => {
+                let (out, xin) = ws.split2_mut(out_r, in_r);
+                (out, &mut [], &*xin)
+            }
+            (None, Some(g_r)) => {
+                let (out, gather) = ws.split2_mut(out_r, g_r);
+                (out, gather, input.data())
+            }
+            (None, None) => (ws.slice_mut(out_r.0, out_r.1), &mut [], input.data()),
+        }
+    }
+
+    fn exec_step_planned(
+        &self,
+        id: usize,
+        step: &Step,
+        input: &Tensor,
+        ws: &mut Workspace,
+    ) -> anyhow::Result<&'static str> {
+        let mem = &self.plan.memory;
+        let kind = match step {
+            Step::Input => "input", // read in place from the caller's tensor
+            Step::Noop => "noop",   // fused away at compile time
+            Step::Conv { geom, kernel, dead_cols, bias, act } => {
+                let out_r = self.out_range(id)?;
+                let src = self.src_range(id, 0)?;
+                if let KernelImpl::Winograd { w4 } = kernel {
+                    // OptDense baseline only: Winograd keeps its internal
+                    // transform allocations; the GRIM serving path never
+                    // selects it.
+                    let xt = match src {
+                        Some((off, len)) => Tensor::from_vec(
+                            &[geom.in_c, geom.in_h, geom.in_w],
+                            ws.slice(off, len).to_vec(),
+                        ),
+                        None => input.clone(),
+                    };
+                    let t = conv2d_winograd(&xt, w4, geom.pad);
+                    ws.slice_mut(out_r.0, out_r.1).copy_from_slice(t.data());
+                } else {
+                    let n = geom.gemm_n();
+                    let sc = ConvScratch::for_step(geom, kernel);
+                    if sc.im2col == 0 {
+                        // 1×1/s1/p0: im2col is the identity; GEMM straight
+                        // off the input viewed as [C, H*W].
+                        let gather_r = mem.scratch_range(id);
+                        let (out, gather, xin) =
+                            self.gemm_operands(ws, out_r, gather_r, src, input);
+                        self.exec_gemm_into(kernel, xin, n, out, gather)?;
+                    } else {
+                        let scratch_r = mem
+                            .scratch_range(id)
+                            .ok_or_else(|| anyhow::anyhow!("node {id}: conv missing scratch"))?;
+                        {
+                            let (scratch, xin) = self.out_and_in(ws, scratch_r, src, input);
+                            im2col_into(
+                                xin,
+                                geom,
+                                dead_cols.as_deref().map(|d| d.as_slice()),
+                                &mut scratch[..sc.im2col],
+                            );
+                        }
+                        let (out, scratch) = ws.split2_mut(out_r, scratch_r);
+                        let (cols, gather) = scratch.split_at_mut(sc.im2col);
+                        self.exec_gemm_into(kernel, cols, n, out, gather)?;
+                    }
+                }
+                let out = ws.slice_mut(out_r.0, out_r.1);
+                ops::add_bias_slice(out, bias);
+                apply_act_slice(out, *act);
+                "conv"
+            }
+            Step::DwConv { stride, pad, w, bias, act, .. } => {
+                let out_r = self.out_range(id)?;
+                let src = self.src_range(id, 0)?;
+                let d = self.src_dims(id, 0);
+                let (c, h, wd) = (d[0], d[1], d[2]);
+                let (out, xin) = self.out_and_in(ws, out_r, src, input);
+                depthwise_conv2d_into(xin, c, h, wd, w, *stride, *pad, out, Some(&self.pool));
+                ops::add_bias_slice(out, bias);
+                apply_act_slice(out, *act);
+                "dwconv"
+            }
+            Step::Fc { kernel, bias, act } => {
+                let out_r = self.out_range(id)?;
+                let src = self.src_range(id, 0)?;
+                let gather_r = mem.scratch_range(id);
+                let (out, gather, xin) = self.gemm_operands(ws, out_r, gather_r, src, input);
+                self.exec_gemm_into(kernel, xin, 1, out, gather)?;
+                for (o, b) in out.iter_mut().zip(bias.iter()) {
+                    *o += b;
+                }
+                apply_act_slice(out, *act);
+                "fc"
+            }
+            Step::Gru { layers } => {
+                let out_r = self.out_range(id)?;
+                let src = self.src_range(id, 0)?;
+                let sdims = self.src_dims(id, 0);
+                let (t_len, in_f0) = (sdims[0], sdims[1]);
+                let scratch_r = mem
+                    .scratch_range(id)
+                    .ok_or_else(|| anyhow::anyhow!("node {id}: gru missing scratch"))?;
+                let gl = GruScratch::for_layers(layers, t_len);
+                let (final_off, h_last) = {
+                    let (scratch, xin) = self.out_and_in(ws, scratch_r, src, input);
+                    self.exec_gru_scratch(layers, t_len, in_f0, xin, scratch, gl)?
+                };
+                let (out, scratch) = ws.split2_mut(out_r, scratch_r);
+                out.copy_from_slice(&scratch[final_off..final_off + t_len * h_last]);
+                "gru"
+            }
+            Step::MaxPool2 => {
+                let out_r = self.out_range(id)?;
+                let src = self.src_range(id, 0)?;
+                let d = self.src_dims(id, 0);
+                let (c, h, w) = (d[0], d[1], d[2]);
+                let (out, xin) = self.out_and_in(ws, out_r, src, input);
+                ops::maxpool2_into(xin, c, h, w, out);
+                "maxpool"
+            }
+            Step::GlobalAvgPool => {
+                let out_r = self.out_range(id)?;
+                let src = self.src_range(id, 0)?;
+                let d = self.src_dims(id, 0);
+                let (c, h, w) = (d[0], d[1], d[2]);
+                let (out, xin) = self.out_and_in(ws, out_r, src, input);
+                ops::global_avgpool_into(xin, c, h, w, out);
+                "gap"
+            }
+            Step::Relu => {
+                let out_r = self.out_range(id)?;
+                let src = self.src_range(id, 0)?;
+                let (out, xin) = self.out_and_in(ws, out_r, src, input);
+                out.copy_from_slice(xin);
+                ops::relu_slice(out);
+                "relu"
+            }
+            Step::Relu6 => {
+                let out_r = self.out_range(id)?;
+                let src = self.src_range(id, 0)?;
+                let (out, xin) = self.out_and_in(ws, out_r, src, input);
+                out.copy_from_slice(xin);
+                ops::relu6_slice(out);
+                "relu6"
+            }
+            Step::Add => {
+                let out_r = self.out_range(id)?;
+                let src0 = self.src_range(id, 0)?;
+                let src1 = self.src_range(id, 1)?;
+                {
+                    let (out, a) = self.out_and_in(ws, out_r, src0, input);
+                    out.copy_from_slice(a);
+                }
+                let (out, b) = self.out_and_in(ws, out_r, src1, input);
+                ops::add_slice(out, b);
+                "add"
+            }
+            Step::Flatten => {
+                let out_r = self.out_range(id)?;
+                let src = self.src_range(id, 0)?;
+                let (out, xin) = self.out_and_in(ws, out_r, src, input);
+                out.copy_from_slice(xin);
+                "flatten"
+            }
+            Step::Softmax => {
+                let out_r = self.out_range(id)?;
+                let src = self.src_range(id, 0)?;
+                let (out, xin) = self.out_and_in(ws, out_r, src, input);
+                ops::softmax_rows_into(xin, xin.len(), out);
+                "softmax"
+            }
+        };
+        Ok(kind)
+    }
+
+    // ---------------------------------------------------------------
+    // Naive reference path
+    // ---------------------------------------------------------------
+
+    /// Reference interpreter holding every intermediate as an owned
+    /// tensor. The planned path is property-tested to match it
+    /// bit-for-bit; it shares all kernel dispatch below.
+    pub fn run_naive(&self, input: &Tensor) -> anyhow::Result<Tensor> {
+        let n = self.plan.steps.len();
+        let mut values: Vec<Option<Tensor>> = vec![None; n];
+        for (id, step) in &self.plan.steps {
+            let out = self.exec_step_naive(*id, step, input, &values)?;
+            values[*id] = out;
+        }
+        match values[self.plan.output_id].take() {
+            Some(out) => Ok(out),
+            None => {
+                anyhow::ensure!(
+                    self.plan.output_id == self.plan.input_id,
+                    "output not produced"
+                );
+                Ok(input.clone())
+            }
+        }
     }
 
     fn value<'a>(
         &self,
         values: &'a [Option<Tensor>],
+        input: &'a Tensor,
         id: usize,
         slot: usize,
     ) -> anyhow::Result<&'a Tensor> {
@@ -73,46 +401,44 @@ impl Engine {
             .get(slot)
             .copied()
             .ok_or_else(|| anyhow::anyhow!("node {id}: missing input {slot}"))?;
-        values[src].as_ref().ok_or_else(|| anyhow::anyhow!("node {id}: input {src} not computed"))
+        if let Some(v) = values[src].as_ref() {
+            return Ok(v);
+        }
+        // The external input is read in place (no passthrough clone).
+        anyhow::ensure!(src == self.plan.input_id, "node {id}: input {src} not computed");
+        Ok(input)
     }
 
-    fn exec_step(
+    fn exec_step_naive(
         &self,
         id: usize,
         step: &Step,
         input: &Tensor,
-        values: &mut Vec<Option<Tensor>>,
-    ) -> anyhow::Result<&'static str> {
-        let kind: &'static str;
-        let out = match step {
-            Step::Input => {
-                kind = "input";
-                Some(input.clone())
-            }
+        values: &[Option<Tensor>],
+    ) -> anyhow::Result<Option<Tensor>> {
+        Ok(match step {
+            Step::Input => None, // consumers read the caller's tensor
+            Step::Noop => None,  // fused away; consumers were redirected
             Step::Conv { geom, kernel, dead_cols, bias, act } => {
-                kind = "conv";
-                let x = self.value(values, id, 0)?;
+                let x = self.value(values, input, id, 0)?;
                 let out = self.exec_conv(geom, kernel, dead_cols.as_deref(), x)?;
                 let mut out = out.reshape(&[geom.out_c, geom.out_h(), geom.out_w()]);
                 ops::add_bias_(&mut out, bias);
                 apply_act(&mut out, *act);
                 Some(out)
             }
-            Step::DwConv { kh: _, kw: _, stride, pad, w, bias, act } => {
-                kind = "dwconv";
-                let x = self.value(values, id, 0)?;
+            Step::DwConv { stride, pad, w, bias, act, .. } => {
+                let x = self.value(values, input, id, 0)?;
                 let mut out = depthwise_conv2d_parallel(x, w, *stride, *pad, &self.pool);
                 ops::add_bias_(&mut out, bias);
                 apply_act(&mut out, *act);
                 Some(out)
             }
             Step::Fc { kernel, bias, act } => {
-                kind = "fc";
-                let x = self.value(values, id, 0)?;
-                let xin = x.clone().reshape(&[x.numel(), 1]);
-                let mut out = self.exec_gemm(kernel, &xin)?;
+                let x = self.value(values, input, id, 0)?;
+                let out = self.exec_gemm_alloc(kernel, x.data(), 1)?;
                 let rows = out.shape().dim(0);
-                out = out.reshape(&[rows]);
+                let mut out = out.reshape(&[rows]);
                 for (o, b) in out.data_mut().iter_mut().zip(bias.iter()) {
                     *o += b;
                 }
@@ -120,57 +446,38 @@ impl Engine {
                 Some(out)
             }
             Step::Gru { layers } => {
-                kind = "gru";
-                let x = self.value(values, id, 0)?;
+                let x = self.value(values, input, id, 0)?;
                 Some(self.exec_gru(layers, x)?)
             }
-            Step::MaxPool2 => {
-                kind = "maxpool";
-                Some(ops::maxpool2(self.value(values, id, 0)?))
-            }
-            Step::GlobalAvgPool => {
-                kind = "gap";
-                Some(ops::global_avgpool(self.value(values, id, 0)?))
-            }
+            Step::MaxPool2 => Some(ops::maxpool2(self.value(values, input, id, 0)?)),
+            Step::GlobalAvgPool => Some(ops::global_avgpool(self.value(values, input, id, 0)?)),
             Step::Relu => {
-                kind = "relu";
-                let mut v = self.value(values, id, 0)?.clone();
+                let mut v = self.value(values, input, id, 0)?.clone();
                 ops::relu_(&mut v);
                 Some(v)
             }
             Step::Relu6 => {
-                kind = "relu6";
-                let mut v = self.value(values, id, 0)?.clone();
+                let mut v = self.value(values, input, id, 0)?.clone();
                 ops::relu6_(&mut v);
                 Some(v)
             }
             Step::Add => {
-                kind = "add";
-                let mut a = self.value(values, id, 0)?.clone();
-                let b = self.value(values, id, 1)?;
+                let mut a = self.value(values, input, id, 0)?.clone();
+                let b = self.value(values, input, id, 1)?;
                 ops::add_(&mut a, b);
                 Some(a)
             }
             Step::Flatten => {
-                kind = "flatten";
-                let v = self.value(values, id, 0)?.clone();
+                let v = self.value(values, input, id, 0)?.clone();
                 let n = v.numel();
                 Some(v.reshape(&[n]))
             }
             Step::Softmax => {
-                kind = "softmax";
-                let v = self.value(values, id, 0)?;
+                let v = self.value(values, input, id, 0)?;
                 let n = v.numel();
-                Some(ops::softmax_rows(&v.clone().reshape(&[1, n]), n).reshape(&[n]))
+                Some(ops::softmax_rows(v, n).reshape(&[n]))
             }
-            Step::Noop => {
-                // fused away; consumers were redirected at compile time
-                kind = "noop";
-                None
-            }
-        };
-        values[id] = out;
-        Ok(kind)
+        })
     }
 
     fn exec_conv(
@@ -186,104 +493,204 @@ impl Engine {
         }
         // 1x1 stride-1 convs: im2col is the identity — feed x directly
         // ([C,H,W] viewed as [C, H*W]); MobileNet is mostly this case.
-        if geom.kh == 1 && geom.kw == 1 && geom.stride == 1 && geom.pad == 0 {
-            let cols = x.clone().reshape(&[geom.in_c, geom.in_h * geom.in_w]);
-            return self.exec_gemm(kernel, &cols);
+        if layout::conv_is_identity_im2col(geom) {
+            return self.exec_gemm_alloc(kernel, x.data(), geom.in_h * geom.in_w);
         }
         let cols = match dead {
             Some(d) => im2col_skip(x, geom, d),
             None => im2col(x, geom),
         };
-        self.exec_gemm(kernel, &cols)
+        self.exec_gemm_alloc(kernel, cols.data(), geom.gemm_n())
     }
 
-    fn exec_gemm(&self, kernel: &KernelImpl, x: &Tensor) -> anyhow::Result<Tensor> {
-        let (_, n) = x.shape().as_matrix();
-        Ok(match kernel {
-            KernelImpl::NaiveDense { w } => naive_gemm_dense(w, x), // honest dense: no zero skip
+    // ---------------------------------------------------------------
+    // Shared kernel dispatch
+    // ---------------------------------------------------------------
+
+    /// Allocating GEMM used by the naive path; routes through
+    /// [`Self::exec_gemm_into`] so both paths run identical kernels.
+    fn exec_gemm_alloc(
+        &self,
+        kernel: &KernelImpl,
+        xd: &[f32],
+        n: usize,
+    ) -> anyhow::Result<Tensor> {
+        let m = kernel
+            .out_rows()
+            .ok_or_else(|| anyhow::anyhow!("winograd outside conv"))?;
+        let mut out = Tensor::zeros(&[m, n]);
+        let mut gather =
+            vec![0.0f32; if n == 1 { layout::kernel_gather_len(kernel) } else { 0 }];
+        self.exec_gemm_into(kernel, xd, n, out.data_mut(), &mut gather)?;
+        Ok(out)
+    }
+
+    /// The single kernel-dispatch point: `out[M,N] = W · X[K,N]` with `x`
+    /// and `out` as flat slices; `gather` is gemv scratch for BCRC.
+    fn exec_gemm_into(
+        &self,
+        kernel: &KernelImpl,
+        xd: &[f32],
+        n: usize,
+        out: &mut [f32],
+        gather: &mut [f32],
+    ) -> anyhow::Result<()> {
+        match kernel {
+            KernelImpl::NaiveDense { w } => naive_gemm_dense_into(w, xd, n, out),
             KernelImpl::Dense { w, params } => {
                 let (m, _) = w.shape().as_matrix();
                 if m * n >= PARALLEL_THRESHOLD {
-                    tiled_gemm_parallel(w, x, *params, &self.pool)
+                    tiled_gemm_parallel_into(w, xd, n, *params, &self.pool, out);
                 } else {
-                    tiled_gemm(w, x, *params)
+                    tiled_gemm_into(w, xd, n, *params, out);
                 }
             }
             KernelImpl::Winograd { .. } => anyhow::bail!("winograd outside conv"),
             KernelImpl::Csr { mat } => {
                 if mat.rows * n >= PARALLEL_THRESHOLD {
-                    csr_gemm_parallel(mat, x, &self.pool)
+                    csr_gemm_parallel_into(mat, xd, n, &self.pool, out);
                 } else {
-                    csr_gemm(mat, x)
+                    csr_gemm_into(mat, xd, n, out);
                 }
             }
             KernelImpl::Bcrc { gemm } => {
                 if gemm.enc.rows * n >= PARALLEL_THRESHOLD {
-                    gemm.execute_parallel(x, &self.pool)
+                    gemm.execute_parallel_into(xd, n, out, &self.pool);
                 } else {
-                    gemm.execute(x)
+                    gemm.execute_into(xd, n, out, gather);
                 }
             }
-        })
+        }
+        Ok(())
     }
 
-    /// Stacked GRU over a `[T, in_f]` sequence; returns `[T, hidden]` of
-    /// the last layer.
+    // ---------------------------------------------------------------
+    // GRU (shared core)
+    // ---------------------------------------------------------------
+
+    /// Naive-path GRU: allocates one scratch region and defers to the
+    /// shared layer core.
     fn exec_gru(&self, layers: &[GruLayerPlan], x: &Tensor) -> anyhow::Result<Tensor> {
-        let (t_len, mut in_f) = x.shape().as_matrix();
-        let mut seq = x.clone();
-        for layer in layers {
+        let (t_len, in_f0) = x.shape().as_matrix();
+        let gl = GruScratch::for_layers(layers, t_len);
+        let mut scratch = vec![0.0f32; gl.total()];
+        let (off, h_last) = self.exec_gru_scratch(layers, t_len, in_f0, x.data(), &mut scratch, gl)?;
+        Ok(Tensor::from_vec(&[t_len, h_last], scratch[off..off + t_len * h_last].to_vec()))
+    }
+
+    /// Run the whole GRU stack inside `scratch` (laid out per
+    /// [`GruScratch`]); returns `(offset, hidden)` of the final `[T, H]`
+    /// sequence within `scratch`.
+    fn exec_gru_scratch(
+        &self,
+        layers: &[GruLayerPlan],
+        t_len: usize,
+        in_f0: usize,
+        xin: &[f32],
+        scratch: &mut [f32],
+        gl: GruScratch,
+    ) -> anyhow::Result<(usize, usize)> {
+        anyhow::ensure!(!layers.is_empty(), "empty GRU stack");
+        anyhow::ensure!(xin.len() == t_len * in_f0, "gru input length mismatch");
+        anyhow::ensure!(scratch.len() >= gl.total(), "gru scratch too small");
+        let (seq_a, rest) = scratch.split_at_mut(gl.seq);
+        let (seq_b, rest) = rest.split_at_mut(gl.seq);
+        let (cat, rest) = rest.split_at_mut(gl.cat);
+        let (cat2, rest) = rest.split_at_mut(gl.cat);
+        let (z, rest) = rest.split_at_mut(gl.h);
+        let (r, rest) = rest.split_at_mut(gl.h);
+        let (hc, rest) = rest.split_at_mut(gl.h);
+        let (hidden, rest) = rest.split_at_mut(gl.h);
+        let gather = &mut rest[..gl.gather];
+
+        let mut in_f = in_f0;
+        for (l, layer) in layers.iter().enumerate() {
             anyhow::ensure!(in_f == layer.in_f, "gru input width mismatch");
             let h = layer.hidden;
-            let mut hidden = vec![0.0f32; h];
-            let mut out_seq = Tensor::zeros(&[t_len, h]);
-            let mut cat = vec![0.0f32; in_f + h];
-            for t in 0..t_len {
-                let xt = &seq.data()[t * in_f..(t + 1) * in_f];
-                cat[..in_f].copy_from_slice(xt);
-                cat[in_f..].copy_from_slice(&hidden);
-                let cat_t = Tensor::from_vec(&[in_f + h, 1], cat.clone());
-                let z = self.gate(&layer.wz, &cat_t, &layer.bz, true)?;
-                let r = self.gate(&layer.wr, &cat_t, &layer.br, true)?;
-                // candidate uses [x, r ⊙ h]
-                let mut cat2 = cat.clone();
-                for i in 0..h {
-                    cat2[in_f + i] = r[i] * hidden[i];
-                }
-                let cat2_t = Tensor::from_vec(&[in_f + h, 1], cat2);
-                let hc = self.gate(&layer.wh, &cat2_t, &layer.bh, false)?;
-                for i in 0..h {
-                    hidden[i] = (1.0 - z[i]) * hidden[i] + z[i] * hc[i];
-                }
-                out_seq.data_mut()[t * h..(t + 1) * h].copy_from_slice(&hidden);
-            }
-            seq = out_seq;
+            hidden[..h].fill(0.0);
+            let (src_seq, dst_seq): (&[f32], &mut [f32]) = if l == 0 {
+                (xin, &mut *seq_a)
+            } else if l % 2 == 1 {
+                (&*seq_a, &mut *seq_b)
+            } else {
+                (&*seq_b, &mut *seq_a)
+            };
+            self.gru_layer(layer, t_len, src_seq, dst_seq, cat, cat2, z, r, hc, hidden, gather)?;
             in_f = h;
         }
-        Ok(seq)
+        let h_last = layers[layers.len() - 1].hidden;
+        let final_off = if (layers.len() - 1) % 2 == 0 { 0 } else { gl.seq };
+        Ok((final_off, h_last))
     }
 
-    fn gate(
+    /// One GRU layer over a `[T, in_f]` sequence — the single
+    /// implementation both execution paths use.
+    #[allow(clippy::too_many_arguments)]
+    fn gru_layer(
+        &self,
+        layer: &GruLayerPlan,
+        t_len: usize,
+        src: &[f32],
+        dst: &mut [f32],
+        cat: &mut [f32],
+        cat2: &mut [f32],
+        z: &mut [f32],
+        r: &mut [f32],
+        hc: &mut [f32],
+        hidden: &mut [f32],
+        gather: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let in_f = layer.in_f;
+        let h = layer.hidden;
+        let cat_w = in_f + h;
+        for t in 0..t_len {
+            let xt = &src[t * in_f..(t + 1) * in_f];
+            cat[..in_f].copy_from_slice(xt);
+            cat[in_f..cat_w].copy_from_slice(&hidden[..h]);
+            self.gate_into(&layer.wz, &cat[..cat_w], &layer.bz, true, &mut z[..h], gather)?;
+            self.gate_into(&layer.wr, &cat[..cat_w], &layer.br, true, &mut r[..h], gather)?;
+            // candidate uses [x, r ⊙ h]
+            cat2[..in_f].copy_from_slice(&cat[..in_f]);
+            for i in 0..h {
+                cat2[in_f + i] = r[i] * hidden[i];
+            }
+            self.gate_into(&layer.wh, &cat2[..cat_w], &layer.bh, false, &mut hc[..h], gather)?;
+            for i in 0..h {
+                hidden[i] = (1.0 - z[i]) * hidden[i] + z[i] * hc[i];
+            }
+            dst[t * h..(t + 1) * h].copy_from_slice(&hidden[..h]);
+        }
+        Ok(())
+    }
+
+    /// One gate: GEMV + bias + sigmoid/tanh into `out`.
+    fn gate_into(
         &self,
         kernel: &KernelImpl,
-        x: &Tensor,
+        x: &[f32],
         bias: &[f32],
         sigmoid: bool,
-    ) -> anyhow::Result<Vec<f32>> {
-        let mut v = self.exec_gemm(kernel, x)?.into_vec();
-        for (o, b) in v.iter_mut().zip(bias) {
+        out: &mut [f32],
+        gather: &mut [f32],
+    ) -> anyhow::Result<()> {
+        self.exec_gemm_into(kernel, x, 1, out, gather)?;
+        for (o, b) in out.iter_mut().zip(bias) {
             *o += b;
             *o = if sigmoid { 1.0 / (1.0 + (-*o).exp()) } else { o.tanh() };
         }
-        Ok(v)
+        Ok(())
     }
 }
 
 fn apply_act(x: &mut Tensor, act: Activation) {
+    apply_act_slice(x.data_mut(), act);
+}
+
+fn apply_act_slice(x: &mut [f32], act: Activation) {
     match act {
         Activation::None => {}
-        Activation::Relu => ops::relu_(x),
-        Activation::Relu6 => ops::relu6_(x),
+        Activation::Relu => ops::relu_slice(x),
+        Activation::Relu6 => ops::relu6_slice(x),
     }
 }
 
@@ -382,6 +789,49 @@ out = Softmax(fc1)
         assert!(metrics.total_micros() > 0.0);
     }
 
+    #[test]
+    fn planned_matches_naive_on_cnn() {
+        let m = cnn_module();
+        let w = cnn_weights(4);
+        let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        let engine = Engine::new(plan, 2);
+        let mut rng = Rng::new(12);
+        for _ in 0..3 {
+            let x = Tensor::rand_uniform(&[3, 8, 8], 1.0, &mut rng);
+            let planned = engine.run(&x).unwrap();
+            let naive = engine.run_naive(&x).unwrap();
+            assert_eq!(planned, naive, "planned path must be bit-identical to naive");
+        }
+    }
+
+    #[test]
+    fn one_checkout_per_run_and_arena_reused() {
+        let m = cnn_module();
+        let w = cnn_weights(5);
+        let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        let engine = Engine::new(plan, 1);
+        let pool = engine.workspace_pool();
+        let mut rng = Rng::new(13);
+        for _ in 0..5 {
+            let x = Tensor::rand_uniform(&[3, 8, 8], 1.0, &mut rng);
+            engine.run(&x).unwrap();
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.checkouts, 5, "exactly one arena checkout per inference");
+        assert_eq!(stats.arenas_created, 1, "sequential runs must reuse one arena");
+        assert!(stats.arena_bytes > 0);
+    }
+
+    #[test]
+    fn wrong_input_size_rejected() {
+        let m = cnn_module();
+        let w = cnn_weights(6);
+        let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        let engine = Engine::new(plan, 1);
+        let bad = Tensor::zeros(&[3, 4, 4]);
+        assert!(engine.run(&bad).is_err());
+    }
+
     fn gru_module() -> dsl::Module {
         dsl::parse(
             r#"
@@ -446,5 +896,17 @@ g = GRU(x, hidden=16, layers=2)
         let out = engine.run(&x).unwrap();
         // GRU hidden state is a convex combination of tanh outputs => |h| <= 1
         assert!(out.data().iter().all(|v| v.abs() <= 1.0 + 1e-5));
+    }
+
+    #[test]
+    fn gru_planned_matches_naive() {
+        let m = gru_module();
+        let w = gru_weights(7, true);
+        let engine = Engine::new(compile(&m, &w, CompileOptions::default()).unwrap(), 1);
+        let mut rng = Rng::new(11);
+        let x = Tensor::rand_uniform(&[5, 12], 1.0, &mut rng);
+        let a = engine.run(&x).unwrap();
+        let b = engine.run_naive(&x).unwrap();
+        assert_eq!(a, b);
     }
 }

@@ -59,14 +59,27 @@ impl BcrcGemm {
         let (k, n) = x.shape().as_matrix();
         assert_eq!(k, self.enc.cols, "inner dimension mismatch");
         let mut out = Tensor::zeros(&[self.enc.rows, n]);
-        let oview = SharedOut::new(out.data_mut());
-        if n == 1 {
-            // SAFETY: single-threaded use of the full range.
-            self.exec_gemv(x.data(), unsafe { oview.range_mut(0, oview.len()) }, 0, self.enc.rows);
-        } else {
-            self.exec_rows(x.data(), oview, n, 0, self.enc.rows);
-        }
+        let gather_len = if n == 1 && self.params.lre { self.enc.max_group_cols() } else { 0 };
+        let mut gather = vec![0.0f32; gather_len];
+        self.execute_into(x.data(), n, out.data_mut(), &mut gather);
         out
+    }
+
+    /// Arena variant of [`Self::execute`]: `x` is `[K, N]` flattened; the
+    /// product is written (not accumulated) into `out` of length
+    /// `rows*N`. `gather` is gemv gather scratch of at least
+    /// [`crate::sparse::Bcrc::max_group_cols`] elements (may be empty when
+    /// `n > 1`, which never touches it).
+    pub fn execute_into(&self, xd: &[f32], n: usize, out: &mut [f32], gather: &mut [f32]) {
+        assert_eq!(xd.len(), self.enc.cols * n, "input length mismatch");
+        assert_eq!(out.len(), self.enc.rows * n, "output length mismatch");
+        out.fill(0.0);
+        if n == 1 {
+            self.exec_gemv(xd, out, 0, self.enc.rows, gather);
+        } else {
+            let oview = SharedOut::new(out);
+            self.exec_rows(xd, oview, n, 0, self.enc.rows);
+        }
     }
 
     /// Multi-threaded execution: reordered rows are partitioned across the
@@ -76,11 +89,23 @@ impl BcrcGemm {
     pub fn execute_parallel(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
         let (k, n) = x.shape().as_matrix();
         assert_eq!(k, self.enc.cols);
+        let mut out = Tensor::zeros(&[self.enc.rows, n]);
+        self.execute_parallel_into(x.data(), n, out.data_mut(), pool);
+        out
+    }
+
+    /// Arena variant of [`Self::execute_parallel`]. The rare parallel
+    /// gemv path allocates a small per-worker gather buffer (it only
+    /// triggers for `rows ≥ PARALLEL_THRESHOLD`, far beyond any model in
+    /// the zoo, so the serving path stays allocation-free).
+    pub fn execute_parallel_into(&self, xd: &[f32], n: usize, out: &mut [f32], pool: &ThreadPool) {
+        assert_eq!(xd.len(), self.enc.cols * n, "input length mismatch");
         let rows = self.enc.rows;
-        let mut out = Tensor::zeros(&[rows, n]);
-        let oview = SharedOut::new(out.data_mut());
+        assert_eq!(out.len(), rows * n, "output length mismatch");
+        out.fill(0.0);
+        let oview = SharedOut::new(out);
         let this = self.clone();
-        let xv = SharedSlice::new(x.data());
+        let xv = SharedSlice::new(xd);
         pool.run_partitioned(rows, move |_wid, lo, hi| {
             // SAFETY: buffers outlive the blocking pool call; each worker
             // owns a disjoint reordered-row range, and reorder is a
@@ -88,12 +113,13 @@ impl BcrcGemm {
             let xd = unsafe { xv.get() };
             if n == 1 {
                 let od = unsafe { oview.range_mut(0, oview.len()) };
-                this.exec_gemv(xd, od, lo, hi);
+                let glen = if this.params.lre { this.enc.max_group_cols() } else { 0 };
+                let mut gather = vec![0.0f32; glen];
+                this.exec_gemv(xd, od, lo, hi, &mut gather);
             } else {
                 this.exec_rows(xd, oview, n, lo, hi);
             }
         });
-        out
     }
 
     /// Compute reordered rows `lo..hi`, writing each row directly to its
@@ -190,10 +216,11 @@ impl BcrcGemm {
     }
 
     /// GEMV path (`N == 1`): gather the input once per *group* (the
-    /// group-level LRE), then each row is a dense dot product.
-    fn exec_gemv(&self, xd: &[f32], out: &mut [f32], lo: usize, hi: usize) {
+    /// group-level LRE), then each row is a dense dot product. `gather`
+    /// is caller-provided scratch of at least `max_group_cols` elements —
+    /// a planned arena slice on the serving path.
+    fn exec_gemv(&self, xd: &[f32], out: &mut [f32], lo: usize, hi: usize, gather: &mut [f32]) {
         let enc = &self.enc;
-        let mut xg: Vec<f32> = Vec::new();
         for g in 0..enc.num_groups() {
             let (gs, ge) = enc.group_rows(g);
             let rs = gs.max(lo);
@@ -203,10 +230,12 @@ impl BcrcGemm {
             }
             let cols = enc.group_cols(g);
             if self.params.lre {
-                xg.clear();
-                xg.extend(cols.iter().map(|c| xd[*c as usize]));
+                let xg = &mut gather[..cols.len()];
+                for (slot, c) in xg.iter_mut().zip(cols.iter()) {
+                    *slot = xd[*c as usize];
+                }
                 for r in rs..re {
-                    out[enc.reorder[r] as usize] = dot(enc.row_weights(r), &xg);
+                    out[enc.reorder[r] as usize] = dot(enc.row_weights(r), xg);
                 }
             } else {
                 for r in rs..re {

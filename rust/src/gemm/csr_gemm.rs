@@ -13,12 +13,20 @@ pub fn csr_gemm(w: &Csr, x: &Tensor) -> Tensor {
     let (k, n) = x.shape().as_matrix();
     assert_eq!(k, w.cols, "inner dimension mismatch");
     let mut out = Tensor::zeros(&[w.rows, n]);
-    let xd = x.data();
-    let od = out.data_mut();
+    csr_gemm_into(w, x.data(), n, out.data_mut());
+    out
+}
+
+/// Arena variant of [`csr_gemm`]: `x` is `[K, N]` flattened; the product
+/// is written (not accumulated) into `out` of length `rows*N`.
+pub fn csr_gemm_into(w: &Csr, xd: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(xd.len(), w.cols * n, "input length mismatch");
+    assert_eq!(out.len(), w.rows * n, "output length mismatch");
+    out.fill(0.0);
     for r in 0..w.rows {
         let lo = w.row_ptr[r] as usize;
         let hi = w.row_ptr[r + 1] as usize;
-        let orow = &mut od[r * n..(r + 1) * n];
+        let orow = &mut out[r * n..(r + 1) * n];
         for idx in lo..hi {
             let c = w.col_idx[idx] as usize;
             let v = w.values[idx];
@@ -28,7 +36,6 @@ pub fn csr_gemm(w: &Csr, x: &Tensor) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Multi-threaded CSR GEMM (static row partition — exhibiting the load
@@ -38,13 +45,22 @@ pub fn csr_gemm(w: &Csr, x: &Tensor) -> Tensor {
 pub fn csr_gemm_parallel(w: &Csr, x: &Tensor, pool: &ThreadPool) -> Tensor {
     let (k, n) = x.shape().as_matrix();
     assert_eq!(k, w.cols);
+    let mut out = Tensor::zeros(&[w.rows, n]);
+    csr_gemm_parallel_into(w, x.data(), n, pool, out.data_mut());
+    out
+}
+
+/// Arena variant of [`csr_gemm_parallel`].
+pub fn csr_gemm_parallel_into(w: &Csr, xd: &[f32], n: usize, pool: &ThreadPool, out: &mut [f32]) {
+    assert_eq!(xd.len(), w.cols * n, "input length mismatch");
     let rows = w.rows;
-    let mut out = Tensor::zeros(&[rows, n]);
-    let oview = SharedOut::new(out.data_mut());
+    assert_eq!(out.len(), rows * n, "output length mismatch");
+    out.fill(0.0);
+    let oview = SharedOut::new(out);
     let row_ptr = SharedSlice::new(&w.row_ptr);
     let col_idx = SharedSlice::new(&w.col_idx);
     let values = SharedSlice::new(&w.values);
-    let xv = SharedSlice::new(x.data());
+    let xv = SharedSlice::new(xd);
     pool.run_partitioned(rows, move |_wid, lo, hi| {
         // SAFETY: buffers outlive the blocking pool call; row ranges are
         // disjoint across workers.
@@ -65,7 +81,6 @@ pub fn csr_gemm_parallel(w: &Csr, x: &Tensor, pool: &ThreadPool) -> Tensor {
             }
         }
     });
-    out
 }
 
 #[cfg(test)]

@@ -35,20 +35,28 @@ pub fn naive_gemm_dense(w: &Tensor, x: &Tensor) -> Tensor {
     let (k2, n) = x.shape().as_matrix();
     assert_eq!(k, k2);
     let mut out = Tensor::zeros(&[m, n]);
+    naive_gemm_dense_into(w, x.data(), n, out.data_mut());
+    out
+}
+
+/// Arena variant of [`naive_gemm_dense`]: `x` is `[K, N]` flattened and
+/// the product is written (not accumulated) into `out` of length `M*N`.
+pub fn naive_gemm_dense_into(w: &Tensor, xd: &[f32], n: usize, out: &mut [f32]) {
+    let (m, k) = w.shape().as_matrix();
+    assert_eq!(xd.len(), k * n, "input length mismatch");
+    assert_eq!(out.len(), m * n, "output length mismatch");
+    out.fill(0.0);
     let wd = w.data();
-    let xd = x.data();
-    let od = out.data_mut();
     for i in 0..m {
         for p in 0..k {
             let wv = wd[i * k + p];
             let xrow = &xd[p * n..(p + 1) * n];
-            let orow = &mut od[i * n..(i + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
             for j in 0..n {
                 orow[j] += wv * xrow[j];
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -26,31 +26,55 @@ impl Default for TileParams {
 
 /// Single-threaded tiled GEMM.
 pub fn tiled_gemm(w: &Tensor, x: &Tensor, p: TileParams) -> Tensor {
-    let (m, k) = w.shape().as_matrix();
-    let (k2, n) = x.shape().as_matrix();
-    assert_eq!(k, k2);
+    let (m, _) = w.shape().as_matrix();
+    let (_, n) = x.shape().as_matrix();
     let mut out = Tensor::zeros(&[m, n]);
-    tiled_rows(w.data(), x.data(), out.data_mut(), 0, m, m, k, n, p);
+    tiled_gemm_into(w, x.data(), n, p, out.data_mut());
     out
+}
+
+/// Arena variant of [`tiled_gemm`]: `x` is `[K, N]` flattened; the
+/// product is written (not accumulated) into `out` of length `M*N`.
+pub fn tiled_gemm_into(w: &Tensor, xd: &[f32], n: usize, p: TileParams, out: &mut [f32]) {
+    let (m, k) = w.shape().as_matrix();
+    assert_eq!(xd.len(), k * n, "input length mismatch");
+    assert_eq!(out.len(), m * n, "output length mismatch");
+    out.fill(0.0);
+    tiled_rows(w.data(), xd, out, 0, m, m, k, n, p);
 }
 
 /// Multi-threaded tiled GEMM: W rows partitioned across the pool.
 /// Zero-copy (see util::sharedbuf): workers write disjoint output rows.
 pub fn tiled_gemm_parallel(w: &Tensor, x: &Tensor, p: TileParams, pool: &ThreadPool) -> Tensor {
-    let (m, k) = w.shape().as_matrix();
-    let (k2, n) = x.shape().as_matrix();
-    assert_eq!(k, k2);
+    let (m, _) = w.shape().as_matrix();
+    let (_, n) = x.shape().as_matrix();
     let mut out = Tensor::zeros(&[m, n]);
-    let oview = SharedOut::new(out.data_mut());
+    tiled_gemm_parallel_into(w, x.data(), n, p, pool, out.data_mut());
+    out
+}
+
+/// Arena variant of [`tiled_gemm_parallel`].
+pub fn tiled_gemm_parallel_into(
+    w: &Tensor,
+    xd: &[f32],
+    n: usize,
+    p: TileParams,
+    pool: &ThreadPool,
+    out: &mut [f32],
+) {
+    let (m, k) = w.shape().as_matrix();
+    assert_eq!(xd.len(), k * n, "input length mismatch");
+    assert_eq!(out.len(), m * n, "output length mismatch");
+    out.fill(0.0);
+    let oview = SharedOut::new(out);
     let wv = SharedSlice::new(w.data());
-    let xv = SharedSlice::new(x.data());
+    let xv = SharedSlice::new(xd);
     pool.run_partitioned(m, move |_wid, lo, hi| {
         // SAFETY: buffers outlive the blocking pool call; row ranges disjoint.
         let (wd, xd) = unsafe { (wv.get(), xv.get()) };
         let orows = unsafe { oview.range_mut(lo * n, hi * n) };
         tiled_rows(wd, xd, orows, lo, hi, hi - lo, k, n, p);
     });
-    out
 }
 
 /// Compute rows `lo..hi` of the product into `out` (out holds `out_rows`

@@ -16,6 +16,11 @@
 //! * **The GRIM compiler** ([`graph`], [`compiler`]) — a DSL and layerwise
 //!   IR carrying BCR metadata, and passes that lower a computational graph
 //!   into an [`compiler::plan::ExecutionPlan`].
+//! * **Static memory planner** ([`memory`]) — liveness analysis over the
+//!   plan's steps, greedy best-fit packing of every intermediate and
+//!   kernel-scratch buffer into one arena (`MemoryPlan` on the plan), and
+//!   the runtime `WorkspacePool` of reusable arenas: steady-state serving
+//!   performs zero heap allocation on the inference path.
 //! * **Auto-tuning** ([`tuner`]) — the paper's genetic-algorithm tuner over
 //!   tiling / unrolling / threading parameters.
 //! * **Block-size optimization** ([`blockopt`]) — Listing 1 of the paper.
@@ -30,6 +35,10 @@
 //!
 //! Python (JAX + Pallas) appears only at build time; see `python/compile/`.
 
+// Index-heavy numeric kernels: explicit index loops mirror the paper's
+// generated code and keep the addressing arithmetic visible.
+#![allow(clippy::needless_range_loop)]
+
 pub mod util;
 pub mod tensor;
 pub mod sparse;
@@ -37,6 +46,7 @@ pub mod gemm;
 pub mod conv;
 pub mod graph;
 pub mod compiler;
+pub mod memory;
 pub mod tuner;
 pub mod blockopt;
 pub mod models;

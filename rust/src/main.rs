@@ -191,6 +191,12 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         stats.latency_ms.p99,
         stats.throughput_rps
     );
+    println!(
+        "arena: {} KiB x{} ({} checkouts, zero per-request allocation)",
+        stats.arena.arena_bytes / 1024,
+        stats.arena.arenas_created,
+        stats.arena.checkouts
+    );
     Ok(())
 }
 

@@ -1,0 +1,138 @@
+//! Scratch-buffer layout rules shared by the memory planner and the
+//! executor.
+//!
+//! The planner must reserve exactly the scratch a step will carve up at
+//! run time, so both sides call the same functions here. All sizes are in
+//! f32 elements.
+
+use crate::compiler::plan::{GruLayerPlan, KernelImpl, Step};
+use crate::conv::ConvGeom;
+
+/// Elements of gather scratch a kernel needs for its GEMV (`N == 1`)
+/// path. Only BCRC with LRE enabled uses one: the group-level LRE
+/// gathers the input entries named by a group's column signature before
+/// the per-row dot products (see `BcrcGemm::exec_gemv`); the non-LRE
+/// gemv never touches it.
+pub fn kernel_gather_len(kernel: &KernelImpl) -> usize {
+    match kernel {
+        KernelImpl::Bcrc { gemm } if gemm.params.lre => gemm.enc.max_group_cols(),
+        _ => 0,
+    }
+}
+
+/// Is this conv the 1×1/stride-1/no-pad case where im2col is the
+/// identity and the input is fed to the GEMM directly?
+pub fn conv_is_identity_im2col(geom: &ConvGeom) -> bool {
+    geom.kh == 1 && geom.kw == 1 && geom.stride == 1 && geom.pad == 0
+}
+
+/// Scratch layout of one Conv step: `[im2col columns][gemv gather]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvScratch {
+    /// im2col column buffer (`gemm_k * gemm_n`); 0 when the conv runs
+    /// Winograd (which bypasses im2col) or the 1×1 identity case.
+    pub im2col: usize,
+    /// BCRC gemv gather buffer; nonzero only when `gemm_n == 1`.
+    pub gather: usize,
+}
+
+impl ConvScratch {
+    pub fn for_step(geom: &ConvGeom, kernel: &KernelImpl) -> ConvScratch {
+        let im2col = if matches!(kernel, KernelImpl::Winograd { .. })
+            || conv_is_identity_im2col(geom)
+        {
+            0
+        } else {
+            geom.gemm_k() * geom.gemm_n()
+        };
+        let gather = if geom.gemm_n() == 1 { kernel_gather_len(kernel) } else { 0 };
+        ConvScratch { im2col, gather }
+    }
+
+    pub fn total(&self) -> usize {
+        self.im2col + self.gather
+    }
+}
+
+/// Scratch layout of one GRU step. The region is carved, in order, into
+/// `[seq_a][seq_b][cat][cat2][z][r][hc][hidden][gather]`, each sized for
+/// the widest layer so one region serves the whole stack:
+///
+/// * `seq_a`/`seq_b` — double-buffered per-layer output sequences;
+/// * `cat`/`cat2` — the `[x_t, h]` and `[x_t, r ⊙ h]` gate inputs;
+/// * `z`/`r`/`hc` — gate outputs; `hidden` — the recurrent state;
+/// * `gather` — BCRC gemv gather shared by all gates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GruScratch {
+    /// Elements of one sequence buffer (`t_len * max layer width`).
+    pub seq: usize,
+    /// Elements of one concatenation buffer (`max(in_f + hidden)`).
+    pub cat: usize,
+    /// Elements of one hidden-sized buffer (`max hidden`).
+    pub h: usize,
+    /// Elements of the shared gemv gather buffer.
+    pub gather: usize,
+}
+
+impl GruScratch {
+    pub fn for_layers(layers: &[GruLayerPlan], t_len: usize) -> GruScratch {
+        let mut width = 0usize;
+        let mut cat = 0usize;
+        let mut h = 0usize;
+        let mut gather = 0usize;
+        for l in layers {
+            width = width.max(l.in_f).max(l.hidden);
+            cat = cat.max(l.in_f + l.hidden);
+            h = h.max(l.hidden);
+            for k in [&l.wz, &l.wr, &l.wh] {
+                gather = gather.max(kernel_gather_len(k));
+            }
+        }
+        GruScratch { seq: t_len * width, cat, h, gather }
+    }
+
+    /// Total region size: 2 sequence buffers, 2 concat buffers, 4
+    /// hidden-sized buffers (`z`, `r`, `hc`, `hidden`), plus gather.
+    pub fn total(&self) -> usize {
+        2 * self.seq + 2 * self.cat + 4 * self.h + self.gather
+    }
+}
+
+/// Scratch elements step `step` needs at run time. `in_dims` is the
+/// output shape of the step's first input (needed by GRU for the sequence
+/// length), `None` for stepless inputs.
+pub fn step_scratch_len(step: &Step, in_dims: Option<&[usize]>) -> usize {
+    match step {
+        Step::Conv { geom, kernel, .. } => ConvScratch::for_step(geom, kernel).total(),
+        Step::Fc { kernel, .. } => kernel_gather_len(kernel),
+        Step::Gru { layers } => {
+            let t_len = in_dims.map(|d| d[0]).unwrap_or(0);
+            GruScratch::for_layers(layers, t_len).total()
+        }
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_conv_detected() {
+        let g = ConvGeom { in_c: 4, in_h: 6, in_w: 6, out_c: 2, kh: 1, kw: 1, stride: 1, pad: 0 };
+        assert!(conv_is_identity_im2col(&g));
+        let g3 = ConvGeom { kh: 3, kw: 3, pad: 1, ..g };
+        assert!(!conv_is_identity_im2col(&g3));
+    }
+
+    #[test]
+    fn conv_scratch_sizes() {
+        let g = ConvGeom { in_c: 3, in_h: 8, in_w: 8, out_c: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let w = std::sync::Arc::new(crate::tensor::Tensor::zeros(&[4, 27]));
+        let k = KernelImpl::NaiveDense { w };
+        let s = ConvScratch::for_step(&g, &k);
+        assert_eq!(s.im2col, 27 * 64);
+        assert_eq!(s.gather, 0);
+        assert_eq!(s.total(), 27 * 64);
+    }
+}

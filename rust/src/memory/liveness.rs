@@ -1,0 +1,146 @@
+//! Liveness analysis over execution-plan steps.
+//!
+//! Steps are 1:1 with graph nodes and stored in topological order, so a
+//! step's index doubles as its program point. Every non-Noop, non-Input
+//! step defines exactly one value at its own index; the value dies after
+//! the last step that reads it (the plan's `inputs` edges are already
+//! redirected past fused Noops at compile time). Scratch buffers are
+//! born and die within their own step. The model input is *not* given a
+//! buffer — the executor reads the caller's tensor in place — and the
+//! output value is pinned live past the final step so nothing reuses its
+//! bytes before extraction.
+
+use super::layout::step_scratch_len;
+use crate::compiler::plan::{ExecutionPlan, Step};
+use crate::tensor::Shape;
+
+/// What a planned buffer holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufferKind {
+    /// A step's output value (one per non-Noop, non-Input step).
+    Value,
+    /// Per-step kernel scratch (im2col columns, GRU gate buffers, BCRC
+    /// gemv gather).
+    Scratch,
+}
+
+/// One arena buffer with its live interval and (after assignment) offset.
+#[derive(Clone, Debug)]
+pub struct PlannedBuffer {
+    /// Owning step / node id.
+    pub node: usize,
+    pub kind: BufferKind,
+    /// Length in f32 elements (always > 0).
+    pub len: usize,
+    /// Step index at which the buffer is written.
+    pub first_use: usize,
+    /// Last step index at which the buffer is read (inclusive). The
+    /// output value uses `steps.len()` to stay live through extraction.
+    pub last_use: usize,
+    /// Arena offset in elements; assigned by the planner.
+    pub offset: usize,
+}
+
+impl PlannedBuffer {
+    /// Do two buffers' live intervals overlap in time?
+    pub fn lifetime_overlaps(&self, other: &PlannedBuffer) -> bool {
+        self.first_use <= other.last_use && other.first_use <= self.last_use
+    }
+}
+
+/// Result of the liveness pass: buffers (offsets still 0) plus per-node
+/// indices into them.
+pub struct Liveness {
+    pub buffers: Vec<PlannedBuffer>,
+    /// node id -> index of its value buffer (`None` for Input/Noop).
+    pub value_of: Vec<Option<usize>>,
+    /// node id -> index of its scratch buffer (`None` if the step needs none).
+    pub scratch_of: Vec<Option<usize>>,
+}
+
+/// Compute first-def/last-use intervals for every intermediate of `plan`.
+/// `shapes` are the per-node output shapes from graph inference.
+pub fn analyze(plan: &ExecutionPlan, shapes: &[Shape]) -> anyhow::Result<Liveness> {
+    let n = plan.steps.len();
+    anyhow::ensure!(shapes.len() == n, "shape count {} != step count {n}", shapes.len());
+    let mut buffers: Vec<PlannedBuffer> = Vec::new();
+    let mut value_of: Vec<Option<usize>> = vec![None; n];
+    let mut scratch_of: Vec<Option<usize>> = vec![None; n];
+
+    for (id, step) in &plan.steps {
+        let id = *id;
+        if matches!(step, Step::Noop) {
+            continue;
+        }
+        if !matches!(step, Step::Input) {
+            let len = shapes[id].numel();
+            anyhow::ensure!(len > 0, "node {id}: zero-sized value");
+            value_of[id] = Some(buffers.len());
+            buffers.push(PlannedBuffer {
+                node: id,
+                kind: BufferKind::Value,
+                len,
+                first_use: id,
+                last_use: id,
+                offset: 0,
+            });
+        }
+        let in_dims = plan.inputs[id].first().map(|s| shapes[*s].dims());
+        let slen = step_scratch_len(step, in_dims);
+        if slen > 0 {
+            scratch_of[id] = Some(buffers.len());
+            buffers.push(PlannedBuffer {
+                node: id,
+                kind: BufferKind::Scratch,
+                len: slen,
+                first_use: id,
+                last_use: id,
+                offset: 0,
+            });
+        }
+    }
+
+    // Extend each value's lifetime to its last reader.
+    for (id, step) in &plan.steps {
+        let id = *id;
+        if matches!(step, Step::Noop | Step::Input) {
+            continue;
+        }
+        for &src in &plan.inputs[id] {
+            match value_of[src] {
+                Some(b) => {
+                    let last = &mut buffers[b].last_use;
+                    *last = (*last).max(id);
+                }
+                None => anyhow::ensure!(
+                    src == plan.input_id,
+                    "node {id} reads node {src}, which has no planned value"
+                ),
+            }
+        }
+    }
+
+    // Keep the output alive through extraction.
+    if let Some(b) = value_of[plan.output_id] {
+        buffers[b].last_use = n;
+    }
+
+    Ok(Liveness { buffers, value_of, scratch_of })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(first: usize, last: usize) -> PlannedBuffer {
+        PlannedBuffer { node: 0, kind: BufferKind::Value, len: 1, first_use: first, last_use: last, offset: 0 }
+    }
+
+    #[test]
+    fn interval_overlap() {
+        assert!(buf(0, 2).lifetime_overlaps(&buf(2, 4)));
+        assert!(buf(2, 4).lifetime_overlaps(&buf(0, 2)));
+        assert!(!buf(0, 1).lifetime_overlaps(&buf(2, 3)));
+        assert!(buf(1, 5).lifetime_overlaps(&buf(2, 3)));
+    }
+}

@@ -1,0 +1,42 @@
+//! Static memory planning + workspace arenas — zero-alloc serving.
+//!
+//! GRIM's real-time claim rests on moving every decision it can to
+//! compile time (§4 of the paper; Fig. 16's storage analysis). This
+//! module extends that philosophy from *weights* to *activations*: all
+//! intermediate tensors and kernel scratch (im2col columns, GRU gate
+//! buffers, BCRC gather buffers) are planned ahead of time into one
+//! contiguous arena, so the steady-state inference path performs **no
+//! heap allocation per request** beyond the response tensor itself.
+//!
+//! The pipeline has three stages:
+//!
+//! 1. **Liveness analysis** ([`liveness`]) — walk the
+//!    [`crate::compiler::plan::ExecutionPlan`] steps in topological order
+//!    and compute a first-def/last-use interval for every intermediate
+//!    value and every per-step scratch buffer (scratch lives only within
+//!    its own step). The model input stays external (zero-copy); the
+//!    output value is pinned live to the end of the run.
+//! 2. **Offset assignment** ([`planner`]) — a greedy best-fit interval
+//!    packer in the style of the TFLite arena planner: buffers are placed
+//!    largest-first, each at the smallest 64-byte-aligned gap between
+//!    already-placed buffers whose lifetimes overlap it. Two buffers may
+//!    share bytes only when their live intervals are disjoint; the result
+//!    is a [`planner::MemoryPlan`] carried on the `ExecutionPlan`.
+//! 3. **Workspace arenas** ([`workspace`]) — at serve time, each
+//!    in-flight request checks one pre-sized arena out of a
+//!    [`workspace::WorkspacePool`] (mutex-guarded free list; arenas are
+//!    created lazily up to the peak concurrency and reused forever
+//!    after). The executor writes every kernel's output directly into its
+//!    planned slice.
+//!
+//! Scratch layout rules shared by the planner and the executor live in
+//! [`layout`] so the two can never drift apart.
+
+pub mod layout;
+pub mod liveness;
+pub mod planner;
+pub mod workspace;
+
+pub use liveness::{BufferKind, PlannedBuffer};
+pub use planner::{plan_memory, MemoryPlan};
+pub use workspace::{PoolStats, PooledWorkspace, Workspace, WorkspacePool};

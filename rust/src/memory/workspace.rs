@@ -1,0 +1,258 @@
+//! Runtime workspace arenas and the per-engine arena pool.
+//!
+//! A [`Workspace`] is one flat f32 arena sized by the
+//! [`super::MemoryPlan`]. The executor addresses it exclusively through
+//! planned `(offset, len)` ranges; [`Workspace::split2_mut`] hands out two
+//! disjoint regions at once (safe `split_at_mut` under the hood — the
+//! planner guarantees live ranges never overlap, and the split panics if
+//! that invariant is ever violated rather than aliasing).
+//!
+//! A [`WorkspacePool`] owns the reusable arenas for one engine: each
+//! in-flight request checks one out (creating lazily on first use, so the
+//! pool grows to peak concurrency and then allocates never again) and the
+//! RAII [`PooledWorkspace`] guard returns it on drop. Checkout and
+//! creation counts are exposed so tests and the serving stats can prove
+//! the zero-alloc property.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One request-scoped arena.
+pub struct Workspace {
+    arena: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new(arena_len: usize) -> Self {
+        Workspace { arena: vec![0.0; arena_len] }
+    }
+
+    pub fn arena_len(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Shared view of a planned range.
+    pub fn slice(&self, off: usize, len: usize) -> &[f32] {
+        &self.arena[off..off + len]
+    }
+
+    /// Mutable view of a planned range.
+    pub fn slice_mut(&mut self, off: usize, len: usize) -> &mut [f32] {
+        &mut self.arena[off..off + len]
+    }
+
+    /// Two disjoint ranges, first mutable-borrowed then usable as
+    /// (writer, reader) or (writer, writer). Panics when the ranges
+    /// overlap — which a validated [`super::MemoryPlan`] never produces.
+    pub fn split2_mut(
+        &mut self,
+        a: (usize, usize),
+        b: (usize, usize),
+    ) -> (&mut [f32], &mut [f32]) {
+        if a.0 + a.1 <= b.0 {
+            let (lo, hi) = self.arena.split_at_mut(b.0);
+            (&mut lo[a.0..a.0 + a.1], &mut hi[..b.1])
+        } else {
+            assert!(
+                b.0 + b.1 <= a.0,
+                "workspace ranges overlap: [{}..{}] vs [{}..{}]",
+                a.0,
+                a.0 + a.1,
+                b.0,
+                b.0 + b.1
+            );
+            let (lo, hi) = self.arena.split_at_mut(a.0);
+            (&mut hi[..a.1], &mut lo[b.0..b.0 + b.1])
+        }
+    }
+
+    /// Three disjoint ranges at once (e.g. GEMV output + gather scratch +
+    /// input). Panics on any overlap, like [`Self::split2_mut`].
+    pub fn split3_mut(
+        &mut self,
+        a: (usize, usize),
+        b: (usize, usize),
+        c: (usize, usize),
+    ) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        // Order the ranges by offset, split the arena twice, then map the
+        // pieces back to argument order.
+        let mut order = [(0usize, a), (1, b), (2, c)];
+        order.sort_by_key(|t| t.1 .0);
+        let (r0, r1, r2) = (order[0].1, order[1].1, order[2].1);
+        assert!(
+            r0.0 + r0.1 <= r1.0 && r1.0 + r1.1 <= r2.0,
+            "workspace ranges overlap: {a:?} {b:?} {c:?}"
+        );
+        let (lo, rest) = self.arena.split_at_mut(r1.0);
+        let (mid, hi) = rest.split_at_mut(r2.0 - r1.0);
+        let s0 = &mut lo[r0.0..r0.0 + r0.1];
+        let s1 = &mut mid[..r1.1];
+        let s2 = &mut hi[..r2.1];
+        match (order[0].0, order[1].0, order[2].0) {
+            (0, 1, 2) => (s0, s1, s2),
+            (0, 2, 1) => (s0, s2, s1),
+            (1, 0, 2) => (s1, s0, s2),
+            (1, 2, 0) => (s2, s0, s1),
+            (2, 0, 1) => (s1, s2, s0),
+            (2, 1, 0) => (s2, s1, s0),
+            _ => unreachable!("orderings are a permutation of (0,1,2)"),
+        }
+    }
+}
+
+/// Aggregate pool statistics (serving telemetry + zero-alloc tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Arena size in bytes (same for every arena in the pool).
+    pub arena_bytes: usize,
+    /// Arenas ever allocated — steady-state this equals peak concurrency.
+    pub arenas_created: usize,
+    /// Total checkouts — one per inference run.
+    pub checkouts: u64,
+}
+
+/// Reusable arena pool for one engine.
+pub struct WorkspacePool {
+    arena_len: usize,
+    free: Mutex<Vec<Workspace>>,
+    created: AtomicUsize,
+    checkouts: AtomicU64,
+}
+
+impl WorkspacePool {
+    pub fn new(arena_len: usize) -> Self {
+        WorkspacePool {
+            arena_len,
+            free: Mutex::new(Vec::new()),
+            created: AtomicUsize::new(0),
+            checkouts: AtomicU64::new(0),
+        }
+    }
+
+    pub fn arena_len(&self) -> usize {
+        self.arena_len
+    }
+
+    /// Check an arena out; creates one only when the free list is empty.
+    pub fn checkout(&self) -> PooledWorkspace<'_> {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let existing = self.free.lock().unwrap().pop();
+        let ws = match existing {
+            Some(ws) => ws,
+            None => {
+                self.created.fetch_add(1, Ordering::Relaxed);
+                Workspace::new(self.arena_len)
+            }
+        };
+        PooledWorkspace { ws: Some(ws), pool: self }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            arena_bytes: 4 * self.arena_len,
+            arenas_created: self.created.load(Ordering::Relaxed),
+            checkouts: self.checkouts.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// RAII checkout guard; returns the arena to the pool on drop.
+pub struct PooledWorkspace<'a> {
+    ws: Option<Workspace>,
+    pool: &'a WorkspacePool,
+}
+
+impl std::ops::Deref for PooledWorkspace<'_> {
+    type Target = Workspace;
+
+    fn deref(&self) -> &Workspace {
+        self.ws.as_ref().expect("workspace present until drop")
+    }
+}
+
+impl std::ops::DerefMut for PooledWorkspace<'_> {
+    fn deref_mut(&mut self) -> &mut Workspace {
+        self.ws.as_mut().expect("workspace present until drop")
+    }
+}
+
+impl Drop for PooledWorkspace<'_> {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            self.pool.free.lock().unwrap().push(ws);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split2_orders_and_overlap_panics() {
+        let mut ws = Workspace::new(32);
+        {
+            let (a, b) = ws.split2_mut((0, 8), (16, 8));
+            a.fill(1.0);
+            b.fill(2.0);
+        }
+        {
+            // reversed order
+            let (a, b) = ws.split2_mut((16, 8), (0, 8));
+            assert_eq!(a[0], 2.0);
+            assert_eq!(b[0], 1.0);
+        }
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = ws.split2_mut((0, 10), (8, 4));
+        }));
+        assert!(res.is_err(), "overlapping split must panic");
+    }
+
+    #[test]
+    fn split3_unpermutes_correctly() {
+        // label each region, then request them in every argument order
+        // and check each returned slice is the region asked for.
+        let regions = [(0usize, 4usize), (8, 4), (16, 4)];
+        let perms =
+            [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+        for p in perms {
+            let mut ws = Workspace::new(24);
+            for (i, (off, len)) in regions.iter().enumerate() {
+                ws.slice_mut(*off, *len).fill(i as f32);
+            }
+            let (a, b, c) =
+                ws.split3_mut(regions[p[0]], regions[p[1]], regions[p[2]]);
+            assert_eq!(a[0], p[0] as f32, "{p:?}");
+            assert_eq!(b[0], p[1] as f32, "{p:?}");
+            assert_eq!(c[0], p[2] as f32, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn pool_reuses_arenas() {
+        let pool = WorkspacePool::new(64);
+        {
+            let _a = pool.checkout();
+        }
+        {
+            let _b = pool.checkout();
+        }
+        let s = pool.stats();
+        assert_eq!(s.checkouts, 2);
+        assert_eq!(s.arenas_created, 1, "sequential checkouts must reuse one arena");
+        assert_eq!(s.arena_bytes, 256);
+    }
+
+    #[test]
+    fn pool_grows_to_concurrency() {
+        let pool = WorkspacePool::new(8);
+        let a = pool.checkout();
+        let b = pool.checkout();
+        drop(a);
+        drop(b);
+        let _c = pool.checkout();
+        let s = pool.stats();
+        assert_eq!(s.arenas_created, 2);
+        assert_eq!(s.checkouts, 3);
+    }
+}

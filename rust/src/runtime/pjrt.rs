@@ -1,80 +1,126 @@
 //! Thin wrapper over the `xla` crate: one compiled executable per HLO
 //! artifact, executed with f32 tensors.
+//!
+//! The bridge is gated behind the `xla` cargo feature because the `xla`
+//! crate (xla_extension FFI) is not part of the hermetic vendored
+//! dependency set. Without the feature, [`XlaModel`] is a stub whose
+//! `load` returns an actionable error — callers that probe artifact
+//! existence first (the integration tests, the CLI `xla` subcommand)
+//! degrade gracefully.
 
 use crate::tensor::Tensor;
-use std::cell::RefCell;
 
-thread_local! {
-    /// Per-thread PJRT CPU client. The `xla` crate's client is `Rc`-based
-    /// (not `Send`), so the runtime is confined to whichever thread loads
-    /// the model — in practice the coordinator's scheduler thread or the
-    /// bench main thread; all parallelism lives inside XLA itself.
-    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
-}
+#[cfg(feature = "xla")]
+mod real {
+    use super::Tensor;
+    use std::cell::RefCell;
 
-fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> anyhow::Result<T>) -> anyhow::Result<T> {
-    CLIENT.with(|c| {
-        let mut c = c.borrow_mut();
-        if c.is_none() {
-            *c = Some(
-                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?,
-            );
-        }
-        f(c.as_ref().unwrap())
-    })
-}
+    thread_local! {
+        /// Per-thread PJRT CPU client. The `xla` crate's client is
+        /// `Rc`-based (not `Send`), so the runtime is confined to whichever
+        /// thread loads the model — in practice the coordinator's scheduler
+        /// thread or the bench main thread; all parallelism lives inside
+        /// XLA itself.
+        static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+    }
 
-/// A compiled XLA computation loaded from HLO text.
-pub struct XlaModel {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
-
-impl XlaModel {
-    /// Load + compile an HLO text file.
-    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = with_client(|c| {
-            c.compile(&comp).map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))
-        })?;
-        Ok(XlaModel {
-            exe,
-            name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string(),
+    fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> anyhow::Result<T>) -> anyhow::Result<T> {
+        CLIENT.with(|c| {
+            let mut c = c.borrow_mut();
+            if c.is_none() {
+                *c = Some(
+                    xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?,
+                );
+            }
+            f(c.as_ref().unwrap())
         })
     }
 
-    pub fn name(&self) -> &str {
-        &self.name
+    /// A compiled XLA computation loaded from HLO text.
+    pub struct XlaModel {
+        exe: xla::PjRtLoadedExecutable,
+        name: String,
     }
 
-    /// Execute with f32 inputs of the given shapes; returns the flat f32
-    /// outputs of the (single-tuple) result — aot.py always lowers with
-    /// `return_tuple=True`.
-    pub fn run(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.shape().dims().iter().map(|d| *d as i64).collect();
-                xla::Literal::vec1(t.data())
-                    .reshape(&dims)
-                    .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+    impl XlaModel {
+        /// Load + compile an HLO text file.
+        pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = with_client(|c| {
+                c.compile(&comp).map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))
+            })?;
+            Ok(XlaModel {
+                exe,
+                name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string(),
             })
-            .collect::<anyhow::Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
-        let tuple = lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
-        tuple
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
-            .collect()
+        }
+
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with f32 inputs of the given shapes; returns the flat
+        /// f32 outputs of the (single-tuple) result — aot.py always lowers
+        /// with `return_tuple=True`.
+        pub fn run(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    let dims: Vec<i64> = t.shape().dims().iter().map(|d| *d as i64).collect();
+                    xla::Literal::vec1(t.data())
+                        .reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+            let tuple = lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+            tuple
+                .into_iter()
+                .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
+                .collect()
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::Tensor;
+
+    /// Stub standing in for the PJRT executable when the crate is built
+    /// without the `xla` feature.
+    pub struct XlaModel {
+        name: String,
+    }
+
+    impl XlaModel {
+        pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+            anyhow::bail!(
+                "grim was built without the `xla` feature — rebuild with \
+                 `--features xla` (and a vendored xla crate) to load {path:?}"
+            )
+        }
+
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        pub fn run(&self, _inputs: &[Tensor]) -> anyhow::Result<Vec<Vec<f32>>> {
+            anyhow::bail!("grim was built without the `xla` feature")
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use real::XlaModel;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaModel;

@@ -93,6 +93,12 @@ impl Bcrc {
         (self.occurrence[k] as usize, self.occurrence[k + 1] as usize)
     }
 
+    /// Widest group signature (elements) — sizes the gemv gather scratch
+    /// the memory planner reserves for this matrix.
+    pub fn max_group_cols(&self) -> usize {
+        (0..self.num_groups()).map(|k| self.group_cols(k).len()).max().unwrap_or(0)
+    }
+
     /// Weights of reordered row `nr`.
     pub fn row_weights(&self, nr: usize) -> &[f32] {
         let lo = self.row_offset[nr] as usize;

@@ -1,0 +1,128 @@
+//! Memory-planner correctness: the planned (arena) executor must be
+//! bit-identical to the naive (owned-tensor) interpreter on every model
+//! preset and backend, the packed arena must honor the no-overlap
+//! invariant, and steady-state serving must stay zero-alloc (exactly one
+//! arena checkout per run, arenas reused).
+
+use grim::compiler::passes::{compile, Backend, CompileOptions};
+use grim::engine::Engine;
+use grim::memory::Workspace;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::tensor::Tensor;
+use grim::util::Rng;
+
+const KINDS: [ModelKind; 4] =
+    [ModelKind::Vgg16, ModelKind::Resnet18, ModelKind::MobilenetV2, ModelKind::Gru];
+
+fn opts(rate: f64, seed: u64) -> InitOptions {
+    InitOptions { rate, block: [4, 16], seed }
+}
+
+fn engine_for(kind: ModelKind, backend: Backend, o: InitOptions, threads: usize) -> Engine {
+    let module = build_model(kind, Preset::CifarMini, o);
+    let weights = random_weights(&module, o);
+    let plan = compile(&module, &weights, CompileOptions::for_backend(backend)).unwrap();
+    Engine::new(plan, threads)
+}
+
+fn input_for(engine: &Engine, rng: &mut Rng) -> Tensor {
+    let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+    Tensor::rand_uniform(&dims, 1.0, rng)
+}
+
+/// Property: across all four presets and several random inputs, planned
+/// execution produces exactly (bit-for-bit) the naive interpreter's
+/// output — both paths share every kernel, so any divergence is a planner
+/// bug (aliasing, stale scratch, wrong offsets).
+#[test]
+fn prop_planned_bit_identical_to_naive() {
+    for (i, kind) in KINDS.iter().enumerate() {
+        let engine = engine_for(*kind, Backend::Grim, opts(6.0, 100 + i as u64), 2);
+        let mut rng = Rng::new(0x6A00 + i as u64);
+        for case in 0..5 {
+            let x = input_for(&engine, &mut rng);
+            let planned = engine.run(&x).unwrap();
+            let naive = engine.run_naive(&x).unwrap();
+            assert_eq!(planned, naive, "{kind:?} case {case}: planned != naive");
+        }
+    }
+}
+
+/// The property must also hold for the baseline backends (they exercise
+/// the dense/tiled/CSR kernels and Winograd's copy-out path).
+#[test]
+fn prop_planned_matches_naive_all_backends() {
+    for backend in [Backend::NaiveDense, Backend::OptDense, Backend::CsrSparse] {
+        for (i, kind) in KINDS.iter().enumerate() {
+            let engine = engine_for(*kind, backend, opts(6.0, 200 + i as u64), 2);
+            let mut rng = Rng::new(0x6B00 + i as u64);
+            let x = input_for(&engine, &mut rng);
+            let planned = engine.run(&x).unwrap();
+            let naive = engine.run_naive(&x).unwrap();
+            assert_eq!(planned, naive, "{backend:?}/{kind:?}: planned != naive");
+        }
+    }
+}
+
+/// No two buffers with overlapping lifetimes may share arena bytes, on
+/// any preset (the planner re-validates internally; this asserts it from
+/// the public API against the shipped plans).
+#[test]
+fn no_live_intervals_overlap_in_arena() {
+    for (i, kind) in KINDS.iter().enumerate() {
+        let engine = engine_for(*kind, Backend::Grim, opts(8.0, 300 + i as u64), 1);
+        let mem = &engine.plan().memory;
+        mem.validate().unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        assert!(mem.arena_len > 0, "{kind:?}: empty arena");
+        for b in &mem.buffers {
+            assert!(b.first_use <= b.last_use, "{kind:?}: inverted interval");
+        }
+    }
+}
+
+/// Zero-alloc serving: each run performs exactly one arena checkout, and
+/// sequential runs reuse one arena (no growth).
+#[test]
+fn runs_check_out_exactly_one_arena() {
+    let engine = engine_for(ModelKind::MobilenetV2, Backend::Grim, opts(6.0, 41), 2);
+    let pool = engine.workspace_pool();
+    let mut rng = Rng::new(0x6C00);
+    for _ in 0..7 {
+        let x = input_for(&engine, &mut rng);
+        engine.run(&x).unwrap();
+    }
+    let stats = pool.stats();
+    assert_eq!(stats.checkouts, 7);
+    assert_eq!(stats.arenas_created, 1);
+}
+
+/// A caller-managed workspace is also accepted (and size-checked).
+#[test]
+fn external_workspace_roundtrip() {
+    let engine = engine_for(ModelKind::Gru, Backend::Grim, opts(4.0, 55), 1);
+    let mut ws = Workspace::new(engine.plan().memory.arena_len);
+    let mut rng = Rng::new(0x6D00);
+    let x = input_for(&engine, &mut rng);
+    let (a, _) = engine.run_planned(&x, &mut ws).unwrap();
+    let b = engine.run(&x).unwrap();
+    assert_eq!(a, b);
+
+    let mut wrong = Workspace::new(engine.plan().memory.arena_len + 1);
+    assert!(engine.run_planned(&x, &mut wrong).is_err(), "size mismatch must be rejected");
+}
+
+/// Dirty arenas must not leak between runs: run once, poison the arena,
+/// run again — outputs identical.
+#[test]
+fn reused_arena_state_cannot_leak() {
+    let engine = engine_for(ModelKind::Resnet18, Backend::Grim, opts(6.0, 77), 2);
+    let mut ws = Workspace::new(engine.plan().memory.arena_len);
+    let mut rng = Rng::new(0x6E00);
+    let x = input_for(&engine, &mut rng);
+    let (first, _) = engine.run_planned(&x, &mut ws).unwrap();
+    // poison every byte of the arena
+    let len = ws.arena_len();
+    ws.slice_mut(0, len).fill(f32::NAN);
+    let (second, _) = engine.run_planned(&x, &mut ws).unwrap();
+    assert_eq!(first, second, "stale arena contents leaked into a later run");
+}

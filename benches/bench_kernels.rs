@@ -1,0 +1,207 @@
+//! Micro-kernel + fusion benchmark: scalar vs dispatched-SIMD GFLOP/s for
+//! the axpy/dot primitives, and fused vs unfused GEMM+Bias+ReLU latency.
+//!
+//! Emits `BENCH_kernels.json` in the working directory (one stable,
+//! machine-diffable artifact tracked across PRs) in addition to the usual
+//! `bench_out/` report. Run via `benches/run_kernels.sh` or
+//! `cargo bench --bench bench_kernels` (`-- --quick` for a fast pass).
+
+use grim::bench::Report;
+use grim::conv::ops;
+use grim::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
+use grim::gemm::simd::{self, Microkernels};
+use grim::gemm::tiled::{tiled_gemm_into, tiled_gemm_into_ep, TileParams};
+use grim::gemm::Epilogue;
+use grim::sparse::{Bcrc, BcrConfig, BcrMask};
+use grim::tensor::Tensor;
+use grim::util::json::{self, Json};
+use grim::util::timer::time_median_ms;
+use grim::util::Rng;
+
+/// GFLOP/s of `flops` total floating-point ops done in `ms`.
+fn gflops(flops: f64, ms: f64) -> f64 {
+    flops / (ms * 1e-3) / 1e9
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
+
+/// Time one microkernel entry at vector length `n`, repeated `reps`
+/// times per sample; returns GFLOP/s.
+fn bench_axpy1(mk: &'static Microkernels, n: usize, reps: usize, iters: usize) -> f64 {
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..n).map(|_| rng.f64() as f32 - 0.5).collect();
+    let mut acc = vec![0.0f32; n];
+    let ms = time_median_ms(iters, 1, || {
+        for r in 0..reps {
+            (mk.axpy_1)(&mut acc, 0.5 + r as f32 * 1e-6, &x);
+        }
+        std::hint::black_box(&mut acc);
+    });
+    gflops(2.0 * n as f64 * reps as f64, ms)
+}
+
+fn bench_axpy4(mk: &'static Microkernels, n: usize, reps: usize, iters: usize) -> f64 {
+    let mut rng = Rng::new(2);
+    let x: Vec<f32> = (0..n).map(|_| rng.f64() as f32 - 0.5).collect();
+    let mut accs = vec![vec![0.0f32; n]; 4];
+    let wv = [0.5f32, -0.25, 0.125, -0.0625];
+    let ms = time_median_ms(iters, 1, || {
+        for _ in 0..reps {
+            let mut it = accs.iter_mut();
+            let mut rows: [&mut [f32]; 4] =
+                std::array::from_fn(|_| it.next().unwrap().as_mut_slice());
+            (mk.axpy_4)(&mut rows, &wv, &x);
+        }
+        std::hint::black_box(&mut accs);
+    });
+    gflops(8.0 * n as f64 * reps as f64, ms)
+}
+
+fn bench_dot(mk: &'static Microkernels, n: usize, reps: usize, iters: usize) -> f64 {
+    let mut rng = Rng::new(3);
+    let a: Vec<f32> = (0..n).map(|_| rng.f64() as f32 - 0.5).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.f64() as f32 - 0.5).collect();
+    let ms = time_median_ms(iters, 1, || {
+        let mut s = 0.0f32;
+        for _ in 0..reps {
+            s += (mk.dot)(&a, &b);
+        }
+        std::hint::black_box(s);
+    });
+    gflops(2.0 * n as f64 * reps as f64, ms)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 5 } else { 15 };
+    let mk = simd::active();
+    let sc = simd::scalar();
+    println!("dispatched backend: {}", mk.name);
+
+    let mut rep = Report::new(
+        "bench_kernels",
+        "Micro-kernels: scalar vs SIMD, fused vs unfused",
+        &["bench", "shape", "scalar", "simd", "speedup"],
+    );
+    let mut kernels = Vec::new();
+    for &n in &[64usize, 256, 1024, 4096] {
+        // keep total work roughly constant per sample
+        let reps = (1 << 20) / n;
+        for (kind, f) in [
+            ("axpy_1", bench_axpy1 as fn(&'static Microkernels, usize, usize, usize) -> f64),
+            ("axpy_4", bench_axpy4),
+            ("dot", bench_dot),
+        ] {
+            let g_sc = f(sc, n, reps, iters);
+            let g_mk = f(mk, n, reps, iters);
+            rep.row(vec![
+                kind.to_string(),
+                format!("n={n}"),
+                format!("{g_sc:.2} GF/s"),
+                format!("{g_mk:.2} GF/s"),
+                format!("{:.2}x", g_mk / g_sc),
+            ]);
+            let mut o = Json::obj();
+            o.set("kind", Json::Str(kind.into()))
+                .set("n", Json::Num(n as f64))
+                .set("scalar_gflops", Json::Num(round2(g_sc)))
+                .set("simd_gflops", Json::Num(round2(g_mk)))
+                .set("speedup", Json::Num(round2(g_mk / g_sc)));
+            kernels.push(o);
+        }
+    }
+
+    // Fused vs unfused GEMM + Bias + ReLU on serving-shaped layers.
+    let mut fused_rows = Vec::new();
+    let shapes: &[(&str, usize, usize, usize)] =
+        &[("fc-ish", 256, 512, 1), ("conv-ish", 128, 256, 196), ("wide", 256, 512, 64)];
+    for &(name, m, k, n) in shapes {
+        let mut rng = Rng::new(11);
+        let mask = BcrMask::random(m, k, BcrConfig::from_block_size(m, k, 4, 16), 6.0, &mut rng);
+        let mut w = Tensor::rand_uniform(&[m, k], 0.4, &mut rng);
+        mask.apply(&mut w);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let g = BcrcGemm::new(enc, GemmParams::default());
+        let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
+        let bias: Vec<f32> = (0..m).map(|i| 0.01 * i as f32 - 0.5).collect();
+        let mut out = vec![0.0f32; m * n];
+        let mut gather = vec![0.0f32; g.enc.max_group_cols()];
+
+        let t_unfused = time_median_ms(iters, 2, || {
+            g.execute_into(x.data(), n, &mut out, &mut gather);
+            ops::add_bias_slice(&mut out, &bias);
+            ops::relu_slice(&mut out);
+            std::hint::black_box(&mut out);
+        });
+        let t_fused = time_median_ms(iters, 2, || {
+            g.execute_into_ep(x.data(), n, &mut out, &mut gather, mk, Epilogue::BiasRelu(&bias));
+            std::hint::black_box(&mut out);
+        });
+        rep.row(vec![
+            "bcrc+bias+relu".into(),
+            format!("{name} [{m}x{k}]xN{n}"),
+            format!("{t_unfused:.4} ms"),
+            format!("{t_fused:.4} ms"),
+            format!("{:.2}x", t_unfused / t_fused),
+        ]);
+        let mut o = Json::obj();
+        o.set("kernel", Json::Str("bcrc".into()))
+            .set("shape", Json::Str(format!("{m}x{k}xN{n}")))
+            .set("unfused_ms", Json::Num(t_unfused))
+            .set("fused_ms", Json::Num(t_fused))
+            .set("speedup", Json::Num(round2(t_unfused / t_fused)));
+        fused_rows.push(o);
+    }
+    // Dense tiled variant of the same comparison.
+    {
+        let (m, k, n) = (128usize, 256usize, 64usize);
+        let mut rng = Rng::new(12);
+        let w = Tensor::rand_uniform(&[m, k], 0.4, &mut rng);
+        let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
+        let bias: Vec<f32> = (0..m).map(|i| 0.01 * i as f32 - 0.5).collect();
+        let p = TileParams::default();
+        let mut out = vec![0.0f32; m * n];
+        let t_unfused = time_median_ms(iters, 2, || {
+            tiled_gemm_into(&w, x.data(), n, p, &mut out);
+            ops::add_bias_slice(&mut out, &bias);
+            ops::relu_slice(&mut out);
+            std::hint::black_box(&mut out);
+        });
+        let t_fused = time_median_ms(iters, 2, || {
+            tiled_gemm_into_ep(&w, x.data(), n, p, &mut out, mk, Epilogue::BiasRelu(&bias));
+            std::hint::black_box(&mut out);
+        });
+        rep.row(vec![
+            "tiled+bias+relu".into(),
+            format!("dense [{m}x{k}]xN{n}"),
+            format!("{t_unfused:.4} ms"),
+            format!("{t_fused:.4} ms"),
+            format!("{:.2}x", t_unfused / t_fused),
+        ]);
+        let mut o = Json::obj();
+        o.set("kernel", Json::Str("tiled-dense".into()))
+            .set("shape", Json::Str(format!("{m}x{k}xN{n}")))
+            .set("unfused_ms", Json::Num(t_unfused))
+            .set("fused_ms", Json::Num(t_fused))
+            .set("speedup", Json::Num(round2(t_unfused / t_fused)));
+        fused_rows.push(o);
+    }
+
+    rep.meta.set("backend", Json::Str(mk.name.into()));
+    rep.print();
+    rep.save()?;
+
+    // The stable cross-PR artifact.
+    let mut doc = Json::obj();
+    doc.set("backend", Json::Str(mk.name.into()))
+        .set("quick", Json::Bool(quick))
+        .set("microkernels", Json::Arr(kernels))
+        .set("fusion", Json::Arr(fused_rows));
+    std::fs::write("BENCH_kernels.json", doc.to_pretty())?;
+    // sanity: the artifact must parse back
+    json::parse(&std::fs::read_to_string("BENCH_kernels.json")?)?;
+    println!("\nwrote BENCH_kernels.json");
+    Ok(())
+}

@@ -50,7 +50,7 @@ fn main() {
         let sigs: Vec<Vec<u32>> = (0..rows).map(|r| mask.row_columns(r)).collect();
         let ident = ReorderPlan::identity(sigs, rows, cols);
         let enc_ident = Bcrc::encode(&w, &mask, &ident);
-        let noopt = BcrcGemm::new(enc_ident, GemmParams { unroll: 1, n_tile: usize::MAX, lre: false });
+        let noopt = BcrcGemm::new(enc_ident, GemmParams { unroll: 1, n_tile: usize::MAX, lre: false, ..Default::default() });
         let t_noopt = timer::time_median_ms(iters, 1, || {
             std::hint::black_box(noopt.execute_parallel(&x, &pool));
         });
@@ -59,13 +59,13 @@ fn main() {
         let plan = ReorderPlan::from_mask(&mask);
         let enc = Bcrc::encode(&w, &mask, &plan);
         let reorder =
-            BcrcGemm::new(enc.clone(), GemmParams { unroll: 1, n_tile: usize::MAX, lre: false });
+            BcrcGemm::new(enc.clone(), GemmParams { unroll: 1, n_tile: usize::MAX, lre: false, ..Default::default() });
         let t_reorder = timer::time_median_ms(iters, 1, || {
             std::hint::black_box(reorder.execute_parallel(&x, &pool));
         });
 
         // +LRE
-        let lre = BcrcGemm::new(enc.clone(), GemmParams { unroll: 4, n_tile: usize::MAX, lre: true });
+        let lre = BcrcGemm::new(enc.clone(), GemmParams { unroll: 4, n_tile: usize::MAX, lre: true, ..Default::default() });
         let t_lre = timer::time_median_ms(iters, 1, || {
             std::hint::black_box(lre.execute_parallel(&x, &pool));
         });

@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# Kernel-benchmark runner: builds in release and emits BENCH_kernels.json
+# in the repo root. Pass --quick for a fast smoke pass.
+set -eu
+cd "$(dirname "$0")/.."
+exec cargo bench --bench bench_kernels -- "$@"

@@ -142,7 +142,7 @@ pub fn compile(
             Op::GlobalAvgPool => Step::GlobalAvgPool,
             Op::Relu => Step::Relu,
             Op::Relu6 => Step::Relu6,
-            Op::Add => Step::Add,
+            Op::Add => Step::Add { act: Activation::None },
             Op::Flatten => Step::Flatten,
             Op::Softmax => Step::Softmax,
         };
@@ -245,7 +245,12 @@ fn build_kernel(
                         ReorderPlan::identity(sigs, mask.rows, mask.cols)
                     };
                     let enc = Bcrc::encode(&lw.w, mask, &plan);
-                    let params = GemmParams { unroll: ir.unroll, n_tile: ir.tile, lre: ir.lre };
+                    let params = GemmParams {
+                        unroll: ir.unroll,
+                        n_tile: ir.tile,
+                        lre: ir.lre,
+                        simd: ir.simd,
+                    };
                     Ok(KernelImpl::Bcrc { gemm: BcrcGemm::new(enc, params) })
                 }
                 (StorageFormat::Bcrc, None) => {
@@ -265,8 +270,12 @@ fn build_kernel(
     }
 }
 
-/// Pass 4: fold ReLU/ReLU6 nodes into their GEMM producer when it is the
-/// sole consumer.
+/// Pass 4: fold ReLU/ReLU6 nodes into their producer when it is the sole
+/// consumer. Producers that accept an epilogue are the GEMM-backed steps
+/// (`Conv`/`Fc`/`DwConv`) and the residual `Add` (the ResNet
+/// `Add → ReLU` pair). The folded node becomes a [`Step::Noop`], which
+/// the memory planner gives **no buffer** — fusion therefore shrinks the
+/// activation arena, not just the instruction count.
 fn fuse_activations(graph: &crate::graph::Graph, steps: &mut [(usize, Step)]) {
     // consumer counts
     let mut consumers = vec![0usize; graph.len()];
@@ -286,9 +295,18 @@ fn fuse_activations(graph: &crate::graph::Graph, steps: &mut [(usize, Step)]) {
             continue;
         }
         let fused = match &mut steps[producer].1 {
-            Step::Conv { act: a, .. } | Step::Fc { act: a, .. } | Step::DwConv { act: a, .. } => {
-                *a = act;
-                true
+            Step::Conv { act: a, .. }
+            | Step::Fc { act: a, .. }
+            | Step::DwConv { act: a, .. }
+            | Step::Add { act: a } => {
+                // Only fold into a producer that has no activation yet
+                // (an act-act chain must keep the second pass separate).
+                if *a == Activation::None {
+                    *a = act;
+                    true
+                } else {
+                    false
+                }
             }
             _ => false,
         };

@@ -22,6 +22,17 @@ pub enum Activation {
     Relu6,
 }
 
+impl Activation {
+    /// Kernel-level activation (the [`crate::gemm::Epilogue`] half).
+    pub fn to_act(self) -> crate::gemm::Act {
+        match self {
+            Activation::None => crate::gemm::Act::None,
+            Activation::Relu => crate::gemm::Act::Relu,
+            Activation::Relu6 => crate::gemm::Act::Relu6,
+        }
+    }
+}
+
 /// How a GEMM is executed — the kernel-selection axis Figure 11 sweeps.
 #[derive(Clone, Debug)]
 pub enum KernelImpl {
@@ -118,7 +129,9 @@ pub enum Step {
     GlobalAvgPool,
     Relu,
     Relu6,
-    Add,
+    /// Residual addition, with an optionally fused trailing activation
+    /// (`Add → ReLU` folds here, deleting the ReLU step's buffer).
+    Add { act: Activation },
     Flatten,
     Softmax,
     /// Node fused into its producer.

@@ -1,6 +1,8 @@
 //! Direct (sliding-window) convolution — the correctness reference for the
 //! im2col and Winograd paths, and the depthwise kernel MobileNet-V2 needs.
 
+use crate::gemm::simd::{self, Microkernels};
+use crate::gemm::Epilogue;
 use crate::tensor::Tensor;
 use crate::util::sharedbuf::{SharedOut, SharedSlice};
 
@@ -136,6 +138,38 @@ pub fn depthwise_conv2d_into(
     out: &mut [f32],
     pool: Option<&crate::util::ThreadPool>,
 ) {
+    depthwise_conv2d_into_ep(
+        xd,
+        c,
+        h,
+        wd,
+        w,
+        stride,
+        pad,
+        out,
+        pool,
+        simd::active(),
+        Epilogue::None,
+    );
+}
+
+/// [`depthwise_conv2d_into`] with a fused per-channel epilogue: each
+/// channel's bias/activation is applied right after its stencil finishes,
+/// while the channel plane is cache-hot (per-worker on the parallel path).
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_conv2d_into_ep(
+    xd: &[f32],
+    c: usize,
+    h: usize,
+    wd: usize,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+    out: &mut [f32],
+    pool: Option<&crate::util::ThreadPool>,
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
+) {
     let (c2, one, kh, kw) = w.shape().as_nchw();
     assert_eq!(c, c2);
     assert_eq!(one, 1, "depthwise expects [C,1,KH,KW]");
@@ -148,6 +182,7 @@ pub fn depthwise_conv2d_into(
     match parallel {
         None => {
             for ci in 0..c {
+                let oc = &mut out[ci * oh * ow..(ci + 1) * oh * ow];
                 dw_channel(
                     &xd[ci * h * wd..(ci + 1) * h * wd],
                     &wdat[ci * kh * kw..(ci + 1) * kh * kw],
@@ -157,18 +192,22 @@ pub fn depthwise_conv2d_into(
                     kw,
                     stride,
                     pad,
-                    &mut out[ci * oh * ow..(ci + 1) * oh * ow],
+                    oc,
                 );
+                ep.apply_row(mk, ci, oc);
             }
         }
         Some(pool) => {
             let oview = SharedOut::new(out);
             let xv = SharedSlice::new(xd);
             let wv = SharedSlice::new(wdat);
+            let (bias, act) = ep.parts();
+            let bias_view = bias.map(SharedSlice::new);
             pool.run_partitioned(c, move |_wid, lo, hi| {
                 // SAFETY: buffers outlive the blocking pool call; each
                 // worker owns a disjoint channel range of the output.
                 let (xd, wdat) = unsafe { (xv.get(), wv.get()) };
+                let ep = Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
                 for ci in lo..hi {
                     let oc = unsafe { oview.range_mut(ci * oh * ow, (ci + 1) * oh * ow) };
                     dw_channel(
@@ -182,6 +221,7 @@ pub fn depthwise_conv2d_into(
                         pad,
                         oc,
                     );
+                    ep.apply_row(mk, ci, oc);
                 }
             });
         }
@@ -198,13 +238,28 @@ pub fn depthwise_conv2d_parallel(
     pad: usize,
     pool: &crate::util::ThreadPool,
 ) -> Tensor {
+    depthwise_conv2d_parallel_ep(x, w, stride, pad, pool, simd::active(), Epilogue::None)
+}
+
+/// [`depthwise_conv2d_parallel`] with a fused per-channel epilogue — the
+/// allocating tensor entry the naive interpreter uses; keeps the output
+/// geometry in one place.
+pub fn depthwise_conv2d_parallel_ep(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+    pool: &crate::util::ThreadPool,
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
+) -> Tensor {
     let d = x.shape().dims();
     let (c, h, wd) = (d[0], d[1], d[2]);
     let (_c2, _one, kh, kw) = w.shape().as_nchw();
     let oh = (h + 2 * pad - kh) / stride + 1;
     let ow = (wd + 2 * pad - kw) / stride + 1;
     let mut out = Tensor::zeros(&[c, oh, ow]);
-    depthwise_conv2d_into(x.data(), c, h, wd, w, stride, pad, out.data_mut(), Some(pool));
+    depthwise_conv2d_into_ep(x.data(), c, h, wd, w, stride, pad, out.data_mut(), Some(pool), mk, ep);
     out
 }
 

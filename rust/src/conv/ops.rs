@@ -108,6 +108,29 @@ pub fn add_slice(x: &mut [f32], y: &[f32]) {
     }
 }
 
+/// Residual add with a fused activation: `x = act(x + y)` in one pass
+/// (the ResNet `Add → ReLU` pair after epilogue fusion). Arithmetic is
+/// element-for-element identical to `add_slice` followed by the
+/// activation pass.
+pub fn add_act_slice(x: &mut [f32], y: &[f32], act: crate::gemm::Act) {
+    use crate::gemm::Act;
+    assert_eq!(x.len(), y.len());
+    match act {
+        Act::None => add_slice(x, y),
+        Act::Relu => {
+            for (a, b) in x.iter_mut().zip(y) {
+                let s = *a + b;
+                *a = if s < 0.0 { 0.0 } else { s };
+            }
+        }
+        Act::Relu6 => {
+            for (a, b) in x.iter_mut().zip(y) {
+                *a = (*a + b).clamp(0.0, 6.0);
+            }
+        }
+    }
+}
+
 /// Elementwise residual addition (shapes must match).
 pub fn add_(x: &mut Tensor, y: &Tensor) {
     assert_eq!(x.shape(), y.shape());

@@ -16,13 +16,15 @@
 //!   reference the planned path is property-tested against.
 
 use crate::compiler::plan::{Activation, ExecutionPlan, GruLayerPlan, KernelImpl, Step};
-use crate::conv::direct::{depthwise_conv2d_into, depthwise_conv2d_parallel};
+use crate::conv::direct::{depthwise_conv2d_into_ep, depthwise_conv2d_parallel_ep};
 use crate::conv::im2col::{im2col, im2col_into, im2col_skip, ConvGeom};
 use crate::conv::ops;
 use crate::conv::winograd::conv2d_winograd;
-use crate::gemm::csr_gemm::{csr_gemm_into, csr_gemm_parallel_into};
-use crate::gemm::naive::naive_gemm_dense_into;
-use crate::gemm::tiled::{tiled_gemm_into, tiled_gemm_parallel_into};
+use crate::gemm::csr_gemm::{csr_gemm_into_ep, csr_gemm_parallel_into_ep};
+use crate::gemm::naive::naive_gemm_dense_into_ep;
+use crate::gemm::simd::{self, Microkernels};
+use crate::gemm::tiled::{tiled_gemm_into_ep, tiled_gemm_parallel_into_ep};
+use crate::gemm::Epilogue;
 use crate::memory::layout::{self, ConvScratch, GruScratch};
 use crate::memory::{Workspace, WorkspacePool};
 use crate::tensor::Tensor;
@@ -35,29 +37,49 @@ use super::metrics::{LayerMetric, RunMetrics};
 /// this the dispatch overhead dominates.
 const PARALLEL_THRESHOLD: usize = 16 * 1024;
 
-/// The inference engine: a plan bound to a worker pool and a workspace
-/// arena pool.
+/// The inference engine: a plan bound to a worker pool, a workspace arena
+/// pool, and the micro-kernel vtable selected at startup.
 pub struct Engine {
     plan: ExecutionPlan,
     pool: ThreadPool,
     workspaces: Arc<WorkspacePool>,
+    /// Micro-kernel table every GEMM/conv step runs on (CPU-dispatched at
+    /// construction; individual BCRC layers can still pin themselves to
+    /// scalar via `GemmParams::simd = false`).
+    mk: &'static Microkernels,
     /// Collect per-layer metrics (small overhead; off on the serving path).
     pub collect_metrics: bool,
 }
 
 impl Engine {
     pub fn new(plan: ExecutionPlan, threads: usize) -> Self {
+        Self::with_microkernels(plan, threads, simd::active())
+    }
+
+    /// Build an engine pinned to a specific micro-kernel table — pass
+    /// [`simd::scalar`] to force the scalar backend (testing/ablation).
+    pub fn with_microkernels(
+        plan: ExecutionPlan,
+        threads: usize,
+        mk: &'static Microkernels,
+    ) -> Self {
         let workspaces = Arc::new(WorkspacePool::new(plan.memory.arena_len));
         Engine {
             plan,
             pool: ThreadPool::new(threads.max(1)),
             workspaces,
+            mk,
             collect_metrics: false,
         }
     }
 
     pub fn plan(&self) -> &ExecutionPlan {
         &self.plan
+    }
+
+    /// The micro-kernel table this engine dispatches to.
+    pub fn microkernels(&self) -> &'static Microkernels {
+        self.mk
     }
 
     pub fn threads(&self) -> usize {
@@ -216,8 +238,8 @@ impl Engine {
                 let src = self.src_range(id, 0)?;
                 if let KernelImpl::Winograd { w4 } = kernel {
                     // OptDense baseline only: Winograd keeps its internal
-                    // transform allocations; the GRIM serving path never
-                    // selects it.
+                    // transform allocations and its unfused epilogue; the
+                    // GRIM serving path never selects it.
                     let xt = match src {
                         Some((off, len)) => Tensor::from_vec(
                             &[geom.in_c, geom.in_h, geom.in_w],
@@ -226,8 +248,12 @@ impl Engine {
                         None => input.clone(),
                     };
                     let t = conv2d_winograd(&xt, w4, geom.pad);
-                    ws.slice_mut(out_r.0, out_r.1).copy_from_slice(t.data());
+                    let out = ws.slice_mut(out_r.0, out_r.1);
+                    out.copy_from_slice(t.data());
+                    ops::add_bias_slice(out, bias);
+                    apply_act_slice(out, *act);
                 } else {
+                    let ep = epilogue_of(bias, *act);
                     let n = geom.gemm_n();
                     let sc = ConvScratch::for_step(geom, kernel);
                     if sc.im2col == 0 {
@@ -236,7 +262,7 @@ impl Engine {
                         let gather_r = mem.scratch_range(id);
                         let (out, gather, xin) =
                             self.gemm_operands(ws, out_r, gather_r, src, input);
-                        self.exec_gemm_into(kernel, xin, n, out, gather)?;
+                        self.exec_gemm_into(kernel, xin, n, out, gather, ep)?;
                     } else {
                         let scratch_r = mem
                             .scratch_range(id)
@@ -252,12 +278,9 @@ impl Engine {
                         }
                         let (out, scratch) = ws.split2_mut(out_r, scratch_r);
                         let (cols, gather) = scratch.split_at_mut(sc.im2col);
-                        self.exec_gemm_into(kernel, cols, n, out, gather)?;
+                        self.exec_gemm_into(kernel, cols, n, out, gather, ep)?;
                     }
                 }
-                let out = ws.slice_mut(out_r.0, out_r.1);
-                ops::add_bias_slice(out, bias);
-                apply_act_slice(out, *act);
                 "conv"
             }
             Step::DwConv { stride, pad, w, bias, act, .. } => {
@@ -266,9 +289,19 @@ impl Engine {
                 let d = self.src_dims(id, 0);
                 let (c, h, wd) = (d[0], d[1], d[2]);
                 let (out, xin) = self.out_and_in(ws, out_r, src, input);
-                depthwise_conv2d_into(xin, c, h, wd, w, *stride, *pad, out, Some(&self.pool));
-                ops::add_bias_slice(out, bias);
-                apply_act_slice(out, *act);
+                depthwise_conv2d_into_ep(
+                    xin,
+                    c,
+                    h,
+                    wd,
+                    w,
+                    *stride,
+                    *pad,
+                    out,
+                    Some(&self.pool),
+                    self.mk,
+                    epilogue_of(bias, *act),
+                );
                 "dwconv"
             }
             Step::Fc { kernel, bias, act } => {
@@ -276,11 +309,7 @@ impl Engine {
                 let src = self.src_range(id, 0)?;
                 let gather_r = mem.scratch_range(id);
                 let (out, gather, xin) = self.gemm_operands(ws, out_r, gather_r, src, input);
-                self.exec_gemm_into(kernel, xin, 1, out, gather)?;
-                for (o, b) in out.iter_mut().zip(bias.iter()) {
-                    *o += b;
-                }
-                apply_act_slice(out, *act);
+                self.exec_gemm_into(kernel, xin, 1, out, gather, epilogue_of(bias, *act))?;
                 "fc"
             }
             Step::Gru { layers } => {
@@ -334,7 +363,7 @@ impl Engine {
                 ops::relu6_slice(out);
                 "relu6"
             }
-            Step::Add => {
+            Step::Add { act } => {
                 let out_r = self.out_range(id)?;
                 let src0 = self.src_range(id, 0)?;
                 let src1 = self.src_range(id, 1)?;
@@ -343,14 +372,18 @@ impl Engine {
                     out.copy_from_slice(a);
                 }
                 let (out, b) = self.out_and_in(ws, out_r, src1, input);
-                ops::add_slice(out, b);
+                ops::add_act_slice(out, b, act.to_act());
                 "add"
             }
             Step::Flatten => {
                 let out_r = self.out_range(id)?;
                 let src = self.src_range(id, 0)?;
-                let (out, xin) = self.out_and_in(ws, out_r, src, input);
-                out.copy_from_slice(xin);
+                // In-place elision: the planner aliases a single-consumer
+                // Flatten onto its producer's buffer — nothing to do.
+                if src != Some(out_r) {
+                    let (out, xin) = self.out_and_in(ws, out_r, src, input);
+                    out.copy_from_slice(xin);
+                }
                 "flatten"
             }
             Step::Softmax => {
@@ -421,29 +454,35 @@ impl Engine {
             Step::Noop => None,  // fused away; consumers were redirected
             Step::Conv { geom, kernel, dead_cols, bias, act } => {
                 let x = self.value(values, input, id, 0)?;
-                let out = self.exec_conv(geom, kernel, dead_cols.as_deref(), x)?;
-                let mut out = out.reshape(&[geom.out_c, geom.out_h(), geom.out_w()]);
-                ops::add_bias_(&mut out, bias);
-                apply_act(&mut out, *act);
-                Some(out)
+                if let KernelImpl::Winograd { w4 } = kernel {
+                    // Winograd stays unfused (baseline-only path).
+                    let mut out = conv2d_winograd(x, w4, geom.pad);
+                    ops::add_bias_(&mut out, bias);
+                    apply_act(&mut out, *act);
+                    Some(out)
+                } else {
+                    let ep = epilogue_of(bias, *act);
+                    let out = self.exec_conv_gemm(geom, kernel, dead_cols.as_deref(), x, ep)?;
+                    Some(out.reshape(&[geom.out_c, geom.out_h(), geom.out_w()]))
+                }
             }
             Step::DwConv { stride, pad, w, bias, act, .. } => {
                 let x = self.value(values, input, id, 0)?;
-                let mut out = depthwise_conv2d_parallel(x, w, *stride, *pad, &self.pool);
-                ops::add_bias_(&mut out, bias);
-                apply_act(&mut out, *act);
-                Some(out)
+                Some(depthwise_conv2d_parallel_ep(
+                    x,
+                    w,
+                    *stride,
+                    *pad,
+                    &self.pool,
+                    self.mk,
+                    epilogue_of(bias, *act),
+                ))
             }
             Step::Fc { kernel, bias, act } => {
                 let x = self.value(values, input, id, 0)?;
-                let out = self.exec_gemm_alloc(kernel, x.data(), 1)?;
+                let out = self.exec_gemm_alloc(kernel, x.data(), 1, epilogue_of(bias, *act))?;
                 let rows = out.shape().dim(0);
-                let mut out = out.reshape(&[rows]);
-                for (o, b) in out.data_mut().iter_mut().zip(bias.iter()) {
-                    *o += b;
-                }
-                apply_act(&mut out, *act);
-                Some(out)
+                Some(out.reshape(&[rows]))
             }
             Step::Gru { layers } => {
                 let x = self.value(values, input, id, 0)?;
@@ -461,10 +500,11 @@ impl Engine {
                 ops::relu6_(&mut v);
                 Some(v)
             }
-            Step::Add => {
+            Step::Add { act } => {
                 let mut a = self.value(values, input, id, 0)?.clone();
                 let b = self.value(values, input, id, 1)?;
-                ops::add_(&mut a, b);
+                assert_eq!(a.shape(), b.shape());
+                ops::add_act_slice(a.data_mut(), b.data(), act.to_act());
                 Some(a)
             }
             Step::Flatten => {
@@ -480,27 +520,26 @@ impl Engine {
         })
     }
 
-    fn exec_conv(
+    /// Naive-path conv as im2col + GEMM with fused epilogue (Winograd is
+    /// handled by the caller — it never runs as a plain GEMM).
+    fn exec_conv_gemm(
         &self,
         geom: &ConvGeom,
         kernel: &KernelImpl,
         dead: Option<&Vec<bool>>,
         x: &Tensor,
+        ep: Epilogue<'_>,
     ) -> anyhow::Result<Tensor> {
-        // Winograd bypasses im2col entirely.
-        if let KernelImpl::Winograd { w4 } = kernel {
-            return Ok(conv2d_winograd(x, w4, geom.pad));
-        }
         // 1x1 stride-1 convs: im2col is the identity — feed x directly
         // ([C,H,W] viewed as [C, H*W]); MobileNet is mostly this case.
         if layout::conv_is_identity_im2col(geom) {
-            return self.exec_gemm_alloc(kernel, x.data(), geom.in_h * geom.in_w);
+            return self.exec_gemm_alloc(kernel, x.data(), geom.in_h * geom.in_w, ep);
         }
         let cols = match dead {
             Some(d) => im2col_skip(x, geom, d),
             None => im2col(x, geom),
         };
-        self.exec_gemm_alloc(kernel, cols.data(), geom.gemm_n())
+        self.exec_gemm_alloc(kernel, cols.data(), geom.gemm_n(), ep)
     }
 
     // ---------------------------------------------------------------
@@ -514,6 +553,7 @@ impl Engine {
         kernel: &KernelImpl,
         xd: &[f32],
         n: usize,
+        ep: Epilogue<'_>,
     ) -> anyhow::Result<Tensor> {
         let m = kernel
             .out_rows()
@@ -521,12 +561,14 @@ impl Engine {
         let mut out = Tensor::zeros(&[m, n]);
         let mut gather =
             vec![0.0f32; if n == 1 { layout::kernel_gather_len(kernel) } else { 0 }];
-        self.exec_gemm_into(kernel, xd, n, out.data_mut(), &mut gather)?;
+        self.exec_gemm_into(kernel, xd, n, out.data_mut(), &mut gather, ep)?;
         Ok(out)
     }
 
     /// The single kernel-dispatch point: `out[M,N] = W · X[K,N]` with `x`
-    /// and `out` as flat slices; `gather` is gemv scratch for BCRC.
+    /// and `out` as flat slices; `gather` is gemv scratch for BCRC, `ep`
+    /// the fused bias/activation epilogue. Every kernel runs on the
+    /// engine's dispatched [`Microkernels`].
     fn exec_gemm_into(
         &self,
         kernel: &KernelImpl,
@@ -534,30 +576,31 @@ impl Engine {
         n: usize,
         out: &mut [f32],
         gather: &mut [f32],
+        ep: Epilogue<'_>,
     ) -> anyhow::Result<()> {
         match kernel {
-            KernelImpl::NaiveDense { w } => naive_gemm_dense_into(w, xd, n, out),
+            KernelImpl::NaiveDense { w } => naive_gemm_dense_into_ep(w, xd, n, out, self.mk, ep),
             KernelImpl::Dense { w, params } => {
                 let (m, _) = w.shape().as_matrix();
                 if m * n >= PARALLEL_THRESHOLD {
-                    tiled_gemm_parallel_into(w, xd, n, *params, &self.pool, out);
+                    tiled_gemm_parallel_into_ep(w, xd, n, *params, &self.pool, out, self.mk, ep);
                 } else {
-                    tiled_gemm_into(w, xd, n, *params, out);
+                    tiled_gemm_into_ep(w, xd, n, *params, out, self.mk, ep);
                 }
             }
             KernelImpl::Winograd { .. } => anyhow::bail!("winograd outside conv"),
             KernelImpl::Csr { mat } => {
                 if mat.rows * n >= PARALLEL_THRESHOLD {
-                    csr_gemm_parallel_into(mat, xd, n, &self.pool, out);
+                    csr_gemm_parallel_into_ep(mat, xd, n, &self.pool, out, self.mk, ep);
                 } else {
-                    csr_gemm_into(mat, xd, n, out);
+                    csr_gemm_into_ep(mat, xd, n, out, self.mk, ep);
                 }
             }
             KernelImpl::Bcrc { gemm } => {
                 if gemm.enc.rows * n >= PARALLEL_THRESHOLD {
-                    gemm.execute_parallel_into(xd, n, out, &self.pool);
+                    gemm.execute_parallel_into_ep(xd, n, out, &self.pool, self.mk, ep);
                 } else {
-                    gemm.execute_into(xd, n, out, gather);
+                    gemm.execute_into_ep(xd, n, out, gather, self.mk, ep);
                 }
             }
         }
@@ -673,13 +716,19 @@ impl Engine {
         out: &mut [f32],
         gather: &mut [f32],
     ) -> anyhow::Result<()> {
-        self.exec_gemm_into(kernel, x, 1, out, gather)?;
+        self.exec_gemm_into(kernel, x, 1, out, gather, Epilogue::None)?;
         for (o, b) in out.iter_mut().zip(bias) {
             *o += b;
             *o = if sigmoid { 1.0 / (1.0 + (-*o).exp()) } else { o.tanh() };
         }
         Ok(())
     }
+}
+
+/// Epilogue for a step's (bias, activation) pair.
+fn epilogue_of(bias: &[f32], act: Activation) -> Epilogue<'_> {
+    let b = if bias.is_empty() { None } else { Some(bias) };
+    Epilogue::from_parts(b, act.to_act())
 }
 
 fn apply_act(x: &mut Tensor, act: Activation) {

@@ -13,11 +13,17 @@
 //! * the N dimension is tiled (`n_tile`) for cache residency — the "matrix
 //!   tiling" of §4.4, with the best size chosen by the auto-tuner.
 //!
-//! The `(unroll, n_tile, lre)` triple comes from the layer's
+//! The `(unroll, n_tile, lre, simd)` tuple comes from the layer's
 //! [`crate::compiler::plan::ExecutionPlan`]; `lre=false` gives the
-//! "+Reorder only" ablation of Figure 13.
+//! "+Reorder only" ablation of Figure 13, `simd=false` pins the layer to
+//! the scalar micro-kernels.
+//!
+//! Inner loops run on a [`Microkernels`] vtable (see [`super::simd`]) and
+//! each output-row tile gets its [`Epilogue`] applied the moment its
+//! accumulation completes — bias/ReLU never re-streams the output.
 
-use super::microkernel::{axpy_1, axpy_u, dot};
+use super::epilogue::Epilogue;
+use super::simd::{self, Microkernels};
 use crate::sparse::Bcrc;
 use crate::tensor::Tensor;
 use crate::util::sharedbuf::{SharedOut, SharedSlice};
@@ -34,11 +40,14 @@ pub struct GemmParams {
     /// Enable register-level load redundancy elimination. When false, rows
     /// are processed one at a time (each input row re-loaded per row).
     pub lre: bool,
+    /// Use the runtime-dispatched SIMD micro-kernels; `false` pins this
+    /// layer to the scalar backend (tuner gene / testing knob).
+    pub simd: bool,
 }
 
 impl Default for GemmParams {
     fn default() -> Self {
-        GemmParams { unroll: 4, n_tile: 64, lre: true }
+        GemmParams { unroll: 4, n_tile: 64, lre: true, simd: true }
     }
 }
 
@@ -54,6 +63,17 @@ impl BcrcGemm {
         BcrcGemm { enc: Arc::new(enc), params }
     }
 
+    /// Resolve the vtable this layer actually runs: the engine's table
+    /// unless `params.simd` pins the layer to scalar.
+    #[inline]
+    fn resolve(&self, mk: &'static Microkernels) -> &'static Microkernels {
+        if self.params.simd {
+            mk
+        } else {
+            simd::scalar()
+        }
+    }
+
     /// `out[M,N] = W · X[K,N]`, single-threaded.
     pub fn execute(&self, x: &Tensor) -> Tensor {
         let (k, n) = x.shape().as_matrix();
@@ -65,20 +85,35 @@ impl BcrcGemm {
         out
     }
 
-    /// Arena variant of [`Self::execute`]: `x` is `[K, N]` flattened; the
-    /// product is written (not accumulated) into `out` of length
-    /// `rows*N`. `gather` is gemv gather scratch of at least
+    /// Arena variant of [`Self::execute`] with the process-dispatched
+    /// micro-kernels and no epilogue; see [`Self::execute_into_ep`].
+    pub fn execute_into(&self, xd: &[f32], n: usize, out: &mut [f32], gather: &mut [f32]) {
+        self.execute_into_ep(xd, n, out, gather, simd::active(), Epilogue::None);
+    }
+
+    /// Arena variant: `x` is `[K, N]` flattened; the product is written
+    /// (not accumulated) into `out` of length `rows*N`, with `ep` fused
+    /// into the kernel. `gather` is gemv gather scratch of at least
     /// [`crate::sparse::Bcrc::max_group_cols`] elements (may be empty when
     /// `n > 1`, which never touches it).
-    pub fn execute_into(&self, xd: &[f32], n: usize, out: &mut [f32], gather: &mut [f32]) {
+    pub fn execute_into_ep(
+        &self,
+        xd: &[f32],
+        n: usize,
+        out: &mut [f32],
+        gather: &mut [f32],
+        mk: &'static Microkernels,
+        ep: Epilogue<'_>,
+    ) {
         assert_eq!(xd.len(), self.enc.cols * n, "input length mismatch");
         assert_eq!(out.len(), self.enc.rows * n, "output length mismatch");
+        let mk = self.resolve(mk);
         out.fill(0.0);
         if n == 1 {
-            self.exec_gemv(xd, out, 0, self.enc.rows, gather);
+            self.exec_gemv(xd, out, 0, self.enc.rows, gather, mk, ep);
         } else {
             let oview = SharedOut::new(out);
-            self.exec_rows(xd, oview, n, 0, self.enc.rows);
+            self.exec_rows(xd, oview, n, 0, self.enc.rows, mk, ep);
         }
     }
 
@@ -94,37 +129,68 @@ impl BcrcGemm {
         out
     }
 
-    /// Arena variant of [`Self::execute_parallel`]. The rare parallel
-    /// gemv path allocates a small per-worker gather buffer (it only
-    /// triggers for `rows ≥ PARALLEL_THRESHOLD`, far beyond any model in
-    /// the zoo, so the serving path stays allocation-free).
+    /// Parallel arena variant with dispatched kernels and no epilogue.
     pub fn execute_parallel_into(&self, xd: &[f32], n: usize, out: &mut [f32], pool: &ThreadPool) {
+        self.execute_parallel_into_ep(xd, n, out, pool, simd::active(), Epilogue::None);
+    }
+
+    /// Parallel arena variant of [`Self::execute_into_ep`]. The gemv path
+    /// borrows each worker's pool-resident scratch buffer for its gather
+    /// staging, so the parallel serving path performs no per-call heap
+    /// allocation (the buffer grows once per worker high-water mark).
+    pub fn execute_parallel_into_ep(
+        &self,
+        xd: &[f32],
+        n: usize,
+        out: &mut [f32],
+        pool: &ThreadPool,
+        mk: &'static Microkernels,
+        ep: Epilogue<'_>,
+    ) {
         assert_eq!(xd.len(), self.enc.cols * n, "input length mismatch");
         let rows = self.enc.rows;
         assert_eq!(out.len(), rows * n, "output length mismatch");
+        let mk = self.resolve(mk);
         out.fill(0.0);
         let oview = SharedOut::new(out);
         let this = self.clone();
         let xv = SharedSlice::new(xd);
-        pool.run_partitioned(rows, move |_wid, lo, hi| {
+        // Epilogue bias borrows cross the 'static worker boundary as a
+        // SharedSlice (sound: the pool call blocks until workers finish).
+        let (bias, act) = ep.parts();
+        let bias_view = bias.map(SharedSlice::new);
+        pool.run_partitioned_scratch(rows, move |scratch, _wid, lo, hi| {
             // SAFETY: buffers outlive the blocking pool call; each worker
             // owns a disjoint reordered-row range, and reorder is a
             // bijection, so written original rows never collide.
             let xd = unsafe { xv.get() };
+            let ep = Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
             if n == 1 {
                 let od = unsafe { oview.range_mut(0, oview.len()) };
                 let glen = if this.params.lre { this.enc.max_group_cols() } else { 0 };
-                let mut gather = vec![0.0f32; glen];
-                this.exec_gemv(xd, od, lo, hi, &mut gather);
+                if scratch.len() < glen {
+                    scratch.resize(glen, 0.0);
+                }
+                this.exec_gemv(xd, od, lo, hi, &mut scratch[..glen], mk, ep);
             } else {
-                this.exec_rows(xd, oview, n, lo, hi);
+                this.exec_rows(xd, oview, n, lo, hi, mk, ep);
             }
         });
     }
 
     /// Compute reordered rows `lo..hi`, writing each row directly to its
     /// original position (`reorder[r]`) in the shared output.
-    fn exec_rows(&self, xd: &[f32], oview: SharedOut<f32>, n: usize, lo: usize, hi: usize) {
+    #[allow(clippy::too_many_arguments)]
+    fn exec_rows(
+        &self,
+        xd: &[f32],
+        oview: SharedOut<f32>,
+        n: usize,
+        lo: usize,
+        hi: usize,
+        mk: &'static Microkernels,
+        ep: Epilogue<'_>,
+    ) {
         let enc = &self.enc;
         let u = self.params.unroll.max(1);
         let nt = self.params.n_tile.max(1);
@@ -141,27 +207,28 @@ impl BcrcGemm {
                 let mut r = rs;
                 if self.params.lre {
                     while r + 8 <= re && u >= 8 {
-                        self.bundle::<8>(xd, oview, n, r, jc, je, cols);
+                        self.bundle::<8>(xd, oview, n, r, jc, je, cols, mk.axpy_8, mk, ep);
                         r += 8;
                     }
                     while r + 4 <= re && u >= 4 {
-                        self.bundle::<4>(xd, oview, n, r, jc, je, cols);
+                        self.bundle::<4>(xd, oview, n, r, jc, je, cols, mk.axpy_4, mk, ep);
                         r += 4;
                     }
                     while r + 2 <= re && u >= 2 {
-                        self.bundle::<2>(xd, oview, n, r, jc, je, cols);
+                        self.bundle::<2>(xd, oview, n, r, jc, je, cols, mk.axpy_2, mk, ep);
                         r += 2;
                     }
                 }
                 while r < re {
-                    self.single_row(xd, oview, n, r, jc, je, cols);
+                    self.single_row(xd, oview, n, r, jc, je, cols, mk, ep);
                     r += 1;
                 }
             }
         }
     }
 
-    /// U-row unroll bundle: shared input rows loaded once per column.
+    /// U-row unroll bundle: shared input rows loaded once per column, and
+    /// the epilogue applied to each finished row tile while it is hot.
     #[allow(clippy::too_many_arguments)]
     #[inline]
     fn bundle<const U: usize>(
@@ -173,21 +240,28 @@ impl BcrcGemm {
         jc: usize,
         je: usize,
         cols: &[u32],
+        kern: fn(&mut [&mut [f32]; U], &[f32; U], &[f32]),
+        mk: &'static Microkernels,
+        ep: Epilogue<'_>,
     ) {
         let enc = &self.enc;
+        let dsts: [usize; U] = std::array::from_fn(|uu| enc.reorder[r + uu] as usize);
         // SAFETY: reorder is a bijection and r..r+U are distinct reordered
         // rows, so the U destination slices never alias (and no other
         // worker owns them).
-        let mut rows: [&mut [f32]; U] = std::array::from_fn(|uu| {
-            let dst = enc.reorder[r + uu] as usize;
-            unsafe { oview.range_mut(dst * n + jc, dst * n + je) }
-        });
+        let mut rows: [&mut [f32]; U] =
+            std::array::from_fn(|uu| unsafe { oview.range_mut(dsts[uu] * n + jc, dsts[uu] * n + je) });
         let wrows: [&[f32]; U] = std::array::from_fn(|uu| enc.row_weights(r + uu));
         for (kidx, c) in cols.iter().enumerate() {
             let c = *c as usize;
             let xrow = &xd[c * n + jc..c * n + je];
             let wv: [f32; U] = std::array::from_fn(|uu| wrows[uu][kidx]);
-            axpy_u::<U>(&mut rows, &wv, xrow);
+            kern(&mut rows, &wv, xrow);
+        }
+        // Each (row, n-tile) pair is visited exactly once across groups,
+        // so this is the single fusion point for these output elements.
+        for (uu, tile) in rows.iter_mut().enumerate() {
+            ep.apply_row(mk, dsts[uu], tile);
         }
     }
 
@@ -202,6 +276,8 @@ impl BcrcGemm {
         jc: usize,
         je: usize,
         cols: &[u32],
+        mk: &'static Microkernels,
+        ep: Epilogue<'_>,
     ) {
         let enc = &self.enc;
         let dst = enc.reorder[r] as usize;
@@ -211,15 +287,27 @@ impl BcrcGemm {
         for (kidx, c) in cols.iter().enumerate() {
             let c = *c as usize;
             let xrow = &xd[c * n + jc..c * n + je];
-            axpy_1(orow, wrow[kidx], xrow);
+            (mk.axpy_1)(orow, wrow[kidx], xrow);
         }
+        ep.apply_row(mk, dst, orow);
     }
 
     /// GEMV path (`N == 1`): gather the input once per *group* (the
     /// group-level LRE), then each row is a dense dot product. `gather`
     /// is caller-provided scratch of at least `max_group_cols` elements —
-    /// a planned arena slice on the serving path.
-    fn exec_gemv(&self, xd: &[f32], out: &mut [f32], lo: usize, hi: usize, gather: &mut [f32]) {
+    /// a planned arena slice (serial) or the worker's pool scratch
+    /// (parallel).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_gemv(
+        &self,
+        xd: &[f32],
+        out: &mut [f32],
+        lo: usize,
+        hi: usize,
+        gather: &mut [f32],
+        mk: &'static Microkernels,
+        ep: Epilogue<'_>,
+    ) {
         let enc = &self.enc;
         for g in 0..enc.num_groups() {
             let (gs, ge) = enc.group_rows(g);
@@ -235,7 +323,8 @@ impl BcrcGemm {
                     *slot = xd[*c as usize];
                 }
                 for r in rs..re {
-                    out[enc.reorder[r] as usize] = dot(enc.row_weights(r), xg);
+                    let dst = enc.reorder[r] as usize;
+                    out[dst] = ep.apply_one(dst, (mk.dot)(enc.row_weights(r), xg));
                 }
             } else {
                 for r in rs..re {
@@ -244,12 +333,12 @@ impl BcrcGemm {
                     for (kidx, c) in cols.iter().enumerate() {
                         s += wrow[kidx] * xd[*c as usize];
                     }
-                    out[enc.reorder[r] as usize] = s;
+                    let dst = enc.reorder[r] as usize;
+                    out[dst] = ep.apply_one(dst, s);
                 }
             }
         }
     }
-
 }
 
 #[cfg(test)]
@@ -292,8 +381,9 @@ mod tests {
 
     #[test]
     fn matches_naive_lre_off() {
-        check(5, 32, 64, 16, GemmParams { unroll: 1, n_tile: 32, lre: false });
-        check(6, 32, 64, 1, GemmParams { unroll: 1, n_tile: 32, lre: false });
+        let p = GemmParams { unroll: 1, n_tile: 32, lre: false, ..Default::default() };
+        check(5, 32, 64, 16, p);
+        check(6, 32, 64, 1, p);
     }
 
     #[test]
@@ -304,10 +394,54 @@ mod tests {
         let expect = naive_gemm(&w, &x);
         for u in [1usize, 2, 4, 8] {
             for nt in [8usize, 64, 1024] {
-                let g = BcrcGemm::new(enc.clone(), GemmParams { unroll: u, n_tile: nt, lre: true });
-                let got = g.execute(&x);
-                assert!(got.allclose(&expect, 1e-3, 1e-3), "u={u} nt={nt}");
+                for simd in [true, false] {
+                    let p = GemmParams { unroll: u, n_tile: nt, lre: true, simd };
+                    let g = BcrcGemm::new(enc.clone(), p);
+                    let got = g.execute(&x);
+                    assert!(got.allclose(&expect, 1e-3, 1e-3), "u={u} nt={nt} simd={simd}");
+                }
             }
+        }
+    }
+
+    #[test]
+    fn scalar_and_simd_backends_agree_closely() {
+        for (seed, m, k, n) in [(21, 64, 128, 24), (22, 48, 96, 1), (23, 32, 64, 7)] {
+            let (_, enc) = setup(seed, m, k, 5.0);
+            let mut rng = Rng::new(seed + 500);
+            let x = Tensor::rand_uniform(&[k, n], 0.5, &mut rng);
+            let fast = BcrcGemm::new(enc.clone(), GemmParams::default()).execute(&x);
+            let slow = BcrcGemm::new(enc, GemmParams { simd: false, ..Default::default() })
+                .execute(&x);
+            assert!(
+                fast.allclose(&slow, 1e-5, 1e-5),
+                "seed {seed}: maxdiff={}",
+                fast.max_abs_diff(&slow)
+            );
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_equals_separate_passes() {
+        use crate::gemm::Epilogue;
+        for n in [1usize, 5, 16] {
+            let (_, enc) = setup(31, 32, 64, 4.0);
+            let mut rng = Rng::new(32);
+            let x = Tensor::rand_uniform(&[64, n], 1.0, &mut rng);
+            let bias: Vec<f32> = (0..32).map(|i| 0.05 * i as f32 - 0.4).collect();
+            let g = BcrcGemm::new(enc, GemmParams::default());
+            let mut gather = vec![0.0f32; g.enc.max_group_cols()];
+
+            let mut fused = vec![0.0f32; 32 * n];
+            g.execute_into_ep(x.data(), n, &mut fused, &mut gather, simd::active(),
+                Epilogue::BiasRelu(&bias));
+
+            let mut sep = vec![0.0f32; 32 * n];
+            g.execute_into(x.data(), n, &mut sep, &mut gather);
+            crate::conv::ops::add_bias_slice(&mut sep, &bias);
+            crate::conv::ops::relu_slice(&mut sep);
+
+            assert_eq!(fused, sep, "n={n}: fusion must not change arithmetic");
         }
     }
 
@@ -333,6 +467,27 @@ mod tests {
         let a = g.execute(&x);
         let b = g.execute_parallel(&x, &pool);
         assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn parallel_fused_epilogue_matches_serial_fused() {
+        use crate::gemm::Epilogue;
+        let (_, enc) = setup(41, 48, 96, 5.0);
+        let bias: Vec<f32> = (0..48).map(|i| 0.1 - 0.01 * i as f32).collect();
+        let pool = ThreadPool::new(4);
+        for n in [1usize, 9] {
+            let mut rng = Rng::new(42);
+            let x = Tensor::rand_uniform(&[96, n], 1.0, &mut rng);
+            let g = BcrcGemm::new(enc.clone(), GemmParams::default());
+            let mut gather = vec![0.0f32; g.enc.max_group_cols()];
+            let mut serial = vec![0.0f32; 48 * n];
+            g.execute_into_ep(x.data(), n, &mut serial, &mut gather, simd::active(),
+                Epilogue::BiasRelu6(&bias));
+            let mut par = vec![0.0f32; 48 * n];
+            g.execute_parallel_into_ep(x.data(), n, &mut par, &pool, simd::active(),
+                Epilogue::BiasRelu6(&bias));
+            assert_eq!(serial, par, "n={n}");
+        }
     }
 
     #[test]

@@ -3,6 +3,8 @@
 //! suffers exactly the thread-divergence and redundant-load problems the
 //! paper attributes to generic sparse libraries (§4.2).
 
+use super::epilogue::Epilogue;
+use super::simd::{self, Microkernels};
 use crate::sparse::Csr;
 use crate::tensor::Tensor;
 use crate::util::sharedbuf::{SharedOut, SharedSlice};
@@ -17,9 +19,22 @@ pub fn csr_gemm(w: &Csr, x: &Tensor) -> Tensor {
     out
 }
 
-/// Arena variant of [`csr_gemm`]: `x` is `[K, N]` flattened; the product
-/// is written (not accumulated) into `out` of length `rows*N`.
+/// Arena variant of [`csr_gemm`] (dispatched kernels, no epilogue).
 pub fn csr_gemm_into(w: &Csr, xd: &[f32], n: usize, out: &mut [f32]) {
+    csr_gemm_into_ep(w, xd, n, out, simd::active(), Epilogue::None);
+}
+
+/// Arena variant: `x` is `[K, N]` flattened; the product is written (not
+/// accumulated) into `out` of length `rows*N`. Each output row is
+/// epilogued the moment its accumulation finishes.
+pub fn csr_gemm_into_ep(
+    w: &Csr,
+    xd: &[f32],
+    n: usize,
+    out: &mut [f32],
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
+) {
     assert_eq!(xd.len(), w.cols * n, "input length mismatch");
     assert_eq!(out.len(), w.rows * n, "output length mismatch");
     out.fill(0.0);
@@ -27,14 +42,21 @@ pub fn csr_gemm_into(w: &Csr, xd: &[f32], n: usize, out: &mut [f32]) {
         let lo = w.row_ptr[r] as usize;
         let hi = w.row_ptr[r + 1] as usize;
         let orow = &mut out[r * n..(r + 1) * n];
-        for idx in lo..hi {
-            let c = w.col_idx[idx] as usize;
-            let v = w.values[idx];
-            let xrow = &xd[c * n..(c + 1) * n];
-            for j in 0..n {
-                orow[j] += v * xrow[j];
+        if n == 1 {
+            // gemv: a register accumulate beats a per-nonzero indirect
+            // call on a length-1 slice.
+            let mut s = 0.0f32;
+            for idx in lo..hi {
+                s += w.values[idx] * xd[w.col_idx[idx] as usize];
+            }
+            orow[0] = s;
+        } else {
+            for idx in lo..hi {
+                let c = w.col_idx[idx] as usize;
+                (mk.axpy_1)(orow, w.values[idx], &xd[c * n..(c + 1) * n]);
             }
         }
+        ep.apply_row(mk, r, orow);
     }
 }
 
@@ -50,8 +72,21 @@ pub fn csr_gemm_parallel(w: &Csr, x: &Tensor, pool: &ThreadPool) -> Tensor {
     out
 }
 
-/// Arena variant of [`csr_gemm_parallel`].
+/// Arena variant of [`csr_gemm_parallel`] (dispatched, no epilogue).
 pub fn csr_gemm_parallel_into(w: &Csr, xd: &[f32], n: usize, pool: &ThreadPool, out: &mut [f32]) {
+    csr_gemm_parallel_into_ep(w, xd, n, pool, out, simd::active(), Epilogue::None);
+}
+
+/// Parallel arena variant with a fused epilogue.
+pub fn csr_gemm_parallel_into_ep(
+    w: &Csr,
+    xd: &[f32],
+    n: usize,
+    pool: &ThreadPool,
+    out: &mut [f32],
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
+) {
     assert_eq!(xd.len(), w.cols * n, "input length mismatch");
     let rows = w.rows;
     assert_eq!(out.len(), rows * n, "output length mismatch");
@@ -61,24 +96,33 @@ pub fn csr_gemm_parallel_into(w: &Csr, xd: &[f32], n: usize, pool: &ThreadPool, 
     let col_idx = SharedSlice::new(&w.col_idx);
     let values = SharedSlice::new(&w.values);
     let xv = SharedSlice::new(xd);
+    let (bias, act) = ep.parts();
+    let bias_view = bias.map(SharedSlice::new);
     pool.run_partitioned(rows, move |_wid, lo, hi| {
         // SAFETY: buffers outlive the blocking pool call; row ranges are
         // disjoint across workers.
         let (row_ptr, col_idx, values, xd) =
             unsafe { (row_ptr.get(), col_idx.get(), values.get(), xv.get()) };
         let orows = unsafe { oview.range_mut(lo * n, hi * n) };
+        let ep = Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
         for r in lo..hi {
             let s = row_ptr[r] as usize;
             let e = row_ptr[r + 1] as usize;
             let orow = &mut orows[(r - lo) * n..(r - lo + 1) * n];
-            for idx in s..e {
-                let c = col_idx[idx] as usize;
-                let v = values[idx];
-                let xrow = &xd[c * n..(c + 1) * n];
-                for j in 0..n {
-                    orow[j] += v * xrow[j];
+            if n == 1 {
+                // gemv: see csr_gemm_into_ep.
+                let mut acc = 0.0f32;
+                for idx in s..e {
+                    acc += values[idx] * xd[col_idx[idx] as usize];
+                }
+                orow[0] = acc;
+            } else {
+                for idx in s..e {
+                    let c = col_idx[idx] as usize;
+                    (mk.axpy_1)(orow, values[idx], &xd[c * n..(c + 1) * n]);
                 }
             }
+            ep.apply_row(mk, r, orow);
         }
     });
 }

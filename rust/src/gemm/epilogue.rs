@@ -1,0 +1,156 @@
+//! Fused elementwise epilogues.
+//!
+//! Every GEMM/conv output row in the zoo is followed by (at most) a
+//! per-channel bias add and a ReLU-family clamp. Running those as
+//! separate full-tensor passes re-streams the whole output through the
+//! cache right after the kernel wrote it; an [`Epilogue`] instead rides
+//! along with the kernel and is applied to each output row *tile* the
+//! moment its accumulation finishes, while the tile is still cache-hot.
+//!
+//! The epilogue is deliberately tiny: a bias source (indexed by output
+//! row = output channel) and an [`Act`]. Arithmetic is identical to the
+//! unfused `add_bias` + `relu` passes — `act(v + b)` per element, in the
+//! same order — so fused and unfused plans produce equal outputs.
+
+use super::simd::{Act, Microkernels};
+
+/// What happens to each output element after GEMM accumulation.
+/// `bias` slices are indexed by output row (`out[r, :] += bias[r]`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Epilogue<'a> {
+    /// Raw GEMM output.
+    None,
+    /// `out[r, j] += bias[r]`.
+    Bias(&'a [f32]),
+    /// `out[r, j] = max(out[r, j] + bias[r], 0)`.
+    BiasRelu(&'a [f32]),
+    /// `out[r, j] = clamp(out[r, j] + bias[r], 0, 6)` (MobileNet-V2).
+    BiasRelu6(&'a [f32]),
+    /// ReLU without bias.
+    Relu,
+    /// ReLU6 without bias.
+    Relu6,
+}
+
+impl<'a> Epilogue<'a> {
+    /// Assemble from the compiler's (bias, activation) step fields.
+    pub fn from_parts(bias: Option<&'a [f32]>, act: Act) -> Self {
+        match (bias, act) {
+            (Some(b), Act::None) => Epilogue::Bias(b),
+            (Some(b), Act::Relu) => Epilogue::BiasRelu(b),
+            (Some(b), Act::Relu6) => Epilogue::BiasRelu6(b),
+            (None, Act::None) => Epilogue::None,
+            (None, Act::Relu) => Epilogue::Relu,
+            (None, Act::Relu6) => Epilogue::Relu6,
+        }
+    }
+
+    /// Decompose into (bias, activation) — the inverse of
+    /// [`Self::from_parts`]; used to ferry an epilogue across the
+    /// `'static` worker-closure boundary as a `SharedSlice`.
+    pub fn parts(&self) -> (Option<&'a [f32]>, Act) {
+        match *self {
+            Epilogue::None => (None, Act::None),
+            Epilogue::Bias(b) => (Some(b), Act::None),
+            Epilogue::BiasRelu(b) => (Some(b), Act::Relu),
+            Epilogue::BiasRelu6(b) => (Some(b), Act::Relu6),
+            Epilogue::Relu => (None, Act::Relu),
+            Epilogue::Relu6 => (None, Act::Relu6),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, Epilogue::None)
+    }
+
+    /// Apply to one finished tile of output row `row` (cache-hot fusion
+    /// point). No-op for `Epilogue::None`.
+    #[inline]
+    pub fn apply_row(&self, mk: &Microkernels, row: usize, tile: &mut [f32]) {
+        if self.is_none() {
+            return;
+        }
+        let (bias, act) = self.parts();
+        let b = bias.map_or(0.0, |bs| bs[row]);
+        (mk.bias_act)(tile, b, act);
+    }
+
+    /// Apply to a single element of output row `row` (the GEMV path).
+    #[inline]
+    pub fn apply_one(&self, row: usize, v: f32) -> f32 {
+        if self.is_none() {
+            return v;
+        }
+        let (bias, act) = self.parts();
+        let s = v + bias.map_or(0.0, |bs| bs[row]);
+        match act {
+            Act::None => s,
+            Act::Relu => {
+                if s < 0.0 {
+                    0.0
+                } else {
+                    s
+                }
+            }
+            Act::Relu6 => s.clamp(0.0, 6.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::simd;
+
+    #[test]
+    fn parts_round_trip() {
+        let bias = [1.0f32, 2.0];
+        for ep in [
+            Epilogue::None,
+            Epilogue::Bias(&bias),
+            Epilogue::BiasRelu(&bias),
+            Epilogue::BiasRelu6(&bias),
+            Epilogue::Relu,
+            Epilogue::Relu6,
+        ] {
+            let (b, a) = ep.parts();
+            assert_eq!(Epilogue::from_parts(b, a), ep);
+        }
+    }
+
+    #[test]
+    fn fused_equals_separate_passes() {
+        let bias = [0.5f32, -1.0];
+        let mk = simd::scalar();
+        for (row, b) in bias.iter().enumerate() {
+            let src = [-2.0f32, -0.4, 0.0, 0.7, 7.2];
+            // separate: add bias, then relu6
+            let mut sep = src;
+            for v in &mut sep {
+                *v += b;
+            }
+            for v in &mut sep {
+                *v = v.clamp(0.0, 6.0);
+            }
+            let mut fused = src;
+            Epilogue::BiasRelu6(&bias).apply_row(mk, row, &mut fused);
+            assert_eq!(sep, fused);
+            for (j, s) in src.iter().enumerate() {
+                assert_eq!(Epilogue::BiasRelu6(&bias).apply_one(row, *s), sep[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_and_dispatched_epilogues_agree() {
+        let bias = [0.25f32];
+        let src: Vec<f32> = (0..37).map(|i| i as f32 * 0.3 - 4.0).collect();
+        for ep in [Epilogue::BiasRelu(&bias), Epilogue::Relu6, Epilogue::Bias(&bias)] {
+            let mut a = src.clone();
+            let mut b = src.clone();
+            ep.apply_row(simd::scalar(), 0, &mut a);
+            ep.apply_row(simd::detect(), 0, &mut b);
+            assert_eq!(a, b, "{ep:?}");
+        }
+    }
+}

@@ -13,6 +13,34 @@
 //!
 //! All kernels are exact (no approximation); tests check each against
 //! [`naive`] to 1e-4.
+//!
+//! # SIMD dispatch
+//!
+//! The inner primitives (`axpy_u`, `axpy_1`, `dot`, and the fused
+//! bias/activation row epilogue) exist in three implementations: scalar
+//! ([`microkernel`], auto-vectorized), AVX2+FMA, and NEON (both in
+//! [`simd`], explicit intrinsics). [`simd::active`] probes the CPU once
+//! per process and returns a [`simd::Microkernels`] vtable; every kernel
+//! entry point either receives that table from the engine or fetches it
+//! itself. Forcing the scalar backend:
+//!
+//! * `GRIM_FORCE_SCALAR=1` in the environment (process-wide, decided at
+//!   first kernel call);
+//! * [`crate::engine::Engine::with_microkernels`] with [`simd::scalar`]
+//!   (one engine);
+//! * `GemmParams::simd = false` (one BCRC layer — the auto-tuner's
+//!   `simd` gene, so `(unroll, n_tile)` is tuned against whichever
+//!   backend actually wins on the layer).
+//!
+//! # Epilogue fusion
+//!
+//! Each `*_into` kernel takes an [`Epilogue`]: the bias/ReLU that used to
+//! run as separate full-tensor passes is applied to each output-row tile
+//! as soon as its accumulation finishes (see [`epilogue`]). The compiler
+//! folds eligible `Relu`/`Relu6` steps into their producer step
+//! (`Conv`/`Fc`/`DwConv`/`Add`), which also deletes the folded step's
+//! intermediate buffer from the `MemoryPlan` — fused plans need a
+//! strictly smaller arena than unfused ones on ReLU-heavy models.
 
 pub mod naive;
 pub mod tiled;
@@ -20,8 +48,12 @@ pub mod microkernel;
 pub mod csr_gemm;
 pub mod bcrc_gemm;
 pub mod loadcount;
+pub mod simd;
+pub mod epilogue;
 
 pub use bcrc_gemm::BcrcGemm;
 pub use csr_gemm::csr_gemm;
+pub use epilogue::Epilogue;
 pub use naive::naive_gemm;
+pub use simd::{Act, Microkernels};
 pub use tiled::{tiled_gemm, tiled_gemm_parallel, TileParams};

@@ -42,20 +42,42 @@ pub fn naive_gemm_dense(w: &Tensor, x: &Tensor) -> Tensor {
 /// Arena variant of [`naive_gemm_dense`]: `x` is `[K, N]` flattened and
 /// the product is written (not accumulated) into `out` of length `M*N`.
 pub fn naive_gemm_dense_into(w: &Tensor, xd: &[f32], n: usize, out: &mut [f32]) {
+    naive_gemm_dense_into_ep(
+        w,
+        xd,
+        n,
+        out,
+        crate::gemm::simd::scalar(),
+        crate::gemm::Epilogue::None,
+    );
+}
+
+/// [`naive_gemm_dense_into`] with a fused per-row epilogue. The GEMM
+/// accumulation itself stays the scalar triple loop (this *is* the
+/// unoptimized baseline); only the epilogue runs on `mk`.
+pub fn naive_gemm_dense_into_ep(
+    w: &Tensor,
+    xd: &[f32],
+    n: usize,
+    out: &mut [f32],
+    mk: &'static crate::gemm::Microkernels,
+    ep: crate::gemm::Epilogue<'_>,
+) {
     let (m, k) = w.shape().as_matrix();
     assert_eq!(xd.len(), k * n, "input length mismatch");
     assert_eq!(out.len(), m * n, "output length mismatch");
     out.fill(0.0);
     let wd = w.data();
     for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
         for p in 0..k {
             let wv = wd[i * k + p];
             let xrow = &xd[p * n..(p + 1) * n];
-            let orow = &mut out[i * n..(i + 1) * n];
             for j in 0..n {
                 orow[j] += wv * xrow[j];
             }
         }
+        ep.apply_row(mk, i, orow);
     }
 }
 

@@ -1,0 +1,167 @@
+//! AVX2+FMA micro-kernels (x86_64).
+//!
+//! Each primitive processes 8 f32 lanes per iteration with FMA
+//! accumulation; remainder lanes use scalar `mul_add` so the whole
+//! kernel is FMA-rounded uniformly. The safe `*_s` wrappers exist only
+//! to populate [`KERNELS`]; the table is handed out exclusively after
+//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+//! (see [`super::detect`]), which is what makes the inner `unsafe` calls
+//! sound.
+
+use super::{Act, Microkernels};
+use std::arch::x86_64::*;
+
+pub static KERNELS: Microkernels = Microkernels {
+    name: "avx2+fma",
+    axpy_1: axpy_1_s,
+    axpy_2: axpy_u_s::<2>,
+    axpy_4: axpy_u_s::<4>,
+    axpy_8: axpy_u_s::<8>,
+    dot: dot_s,
+    bias_act: bias_act_s,
+};
+
+fn axpy_1_s(acc: &mut [f32], wv: f32, xrow: &[f32]) {
+    // SAFETY: table handed out only after AVX2+FMA runtime detection.
+    unsafe { axpy_1(acc, wv, xrow) }
+}
+
+fn axpy_u_s<const U: usize>(acc: &mut [&mut [f32]; U], wv: &[f32; U], xrow: &[f32]) {
+    // SAFETY: as above.
+    unsafe { axpy_u::<U>(acc, wv, xrow) }
+}
+
+fn dot_s(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: as above.
+    unsafe { dot(a, b) }
+}
+
+fn bias_act_s(row: &mut [f32], b: f32, act: Act) {
+    // SAFETY: as above.
+    unsafe { bias_act(row, b, act) }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_1(acc: &mut [f32], wv: f32, xrow: &[f32]) {
+    debug_assert_eq!(acc.len(), xrow.len());
+    let n = acc.len();
+    let a = acc.as_mut_ptr();
+    let x = xrow.as_ptr();
+    let w = _mm256_set1_ps(wv);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let av = _mm256_loadu_ps(a.add(j));
+        let xv = _mm256_loadu_ps(x.add(j));
+        _mm256_storeu_ps(a.add(j), _mm256_fmadd_ps(w, xv, av));
+        j += 8;
+    }
+    while j < n {
+        *a.add(j) = wv.mul_add(*x.add(j), *a.add(j));
+        j += 1;
+    }
+}
+
+/// The LRE bundle: one `xrow` vector load feeds `U` FMA accumulators —
+/// the register-level load-redundancy elimination of paper §4.3, now as
+/// explicit vector code instead of a hoped-for LLVM transform.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_u<const U: usize>(acc: &mut [&mut [f32]; U], wv: &[f32; U], xrow: &[f32]) {
+    let n = xrow.len();
+    for u in 0..U {
+        debug_assert_eq!(acc[u].len(), n);
+    }
+    let x = xrow.as_ptr();
+    let wb: [__m256; U] = std::array::from_fn(|u| _mm256_set1_ps(wv[u]));
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let xv = _mm256_loadu_ps(x.add(j));
+        for u in 0..U {
+            let p = acc[u].as_mut_ptr().add(j);
+            _mm256_storeu_ps(p, _mm256_fmadd_ps(wb[u], xv, _mm256_loadu_ps(p)));
+        }
+        j += 8;
+    }
+    while j < n {
+        let xs = *x.add(j);
+        for u in 0..U {
+            let p = acc[u].as_mut_ptr().add(j);
+            *p = wv[u].mul_add(xs, *p);
+        }
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    // Four independent accumulator vectors hide FMA latency.
+    let mut s0 = _mm256_setzero_ps();
+    let mut s1 = _mm256_setzero_ps();
+    let mut s2 = _mm256_setzero_ps();
+    let mut s3 = _mm256_setzero_ps();
+    let mut j = 0usize;
+    while j + 32 <= n {
+        s0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j)), _mm256_loadu_ps(pb.add(j)), s0);
+        s1 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j + 8)), _mm256_loadu_ps(pb.add(j + 8)), s1);
+        s2 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j + 16)), _mm256_loadu_ps(pb.add(j + 16)), s2);
+        s3 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j + 24)), _mm256_loadu_ps(pb.add(j + 24)), s3);
+        j += 32;
+    }
+    while j + 8 <= n {
+        s0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j)), _mm256_loadu_ps(pb.add(j)), s0);
+        j += 8;
+    }
+    let s = _mm256_add_ps(_mm256_add_ps(s0, s1), _mm256_add_ps(s2, s3));
+    // Horizontal reduce: 8 lanes -> 1.
+    let hi = _mm256_extractf128_ps(s, 1);
+    let lo = _mm256_castps256_ps128(s);
+    let q = _mm_add_ps(lo, hi);
+    let d = _mm_add_ps(q, _mm_movehl_ps(q, q));
+    let r = _mm_add_ss(d, _mm_movehdup_ps(d));
+    let mut acc = _mm_cvtss_f32(r);
+    while j < n {
+        acc = (*pa.add(j)).mul_add(*pb.add(j), acc);
+        j += 1;
+    }
+    acc
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn bias_act(row: &mut [f32], b: f32, act: Act) {
+    let n = row.len();
+    let p = row.as_mut_ptr();
+    let bv = _mm256_set1_ps(b);
+    let zero = _mm256_setzero_ps();
+    let six = _mm256_set1_ps(6.0);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let mut v = _mm256_add_ps(_mm256_loadu_ps(p.add(j)), bv);
+        match act {
+            Act::None => {}
+            // max(v, 0) keeps v's sign of zero semantics identical to the
+            // scalar `if s < 0.0 { 0.0 }` branch for all non-NaN inputs.
+            Act::Relu => v = _mm256_max_ps(v, zero),
+            Act::Relu6 => v = _mm256_min_ps(_mm256_max_ps(v, zero), six),
+        }
+        _mm256_storeu_ps(p.add(j), v);
+        j += 8;
+    }
+    while j < n {
+        let s = *p.add(j) + b;
+        *p.add(j) = match act {
+            Act::None => s,
+            Act::Relu => {
+                if s < 0.0 {
+                    0.0
+                } else {
+                    s
+                }
+            }
+            Act::Relu6 => s.clamp(0.0, 6.0),
+        };
+        j += 1;
+    }
+}

@@ -1,0 +1,239 @@
+//! Runtime-dispatched SIMD micro-kernels.
+//!
+//! The paper's compiler emits NEON intrinsics for the sparse inner loops
+//! (§4.2–4.4); the scalar kernels in [`super::microkernel`] reproduce the
+//! *structure* of that code but lean on LLVM auto-vectorization for the
+//! actual vector issue. This module makes the vectorization explicit and
+//! verifiable: hand-written AVX2+FMA (x86_64) and NEON (aarch64)
+//! implementations of the three inner primitives — `axpy_u`, `axpy_1`,
+//! `dot` — plus the fused bias/activation epilogue row kernel, packaged
+//! behind a [`Microkernels`] vtable.
+//!
+//! Dispatch happens **once** per process: [`active`] probes the CPU the
+//! first time it is called (`is_x86_feature_detected!` / NEON baseline)
+//! and caches the winning table. The scalar table is always available via
+//! [`scalar`] and is force-selectable two ways:
+//!
+//! * process-wide: set `GRIM_FORCE_SCALAR=1` in the environment before
+//!   the first kernel call (CI uses this to cover both code paths);
+//! * per-engine / per-layer: [`crate::engine::Engine::with_microkernels`]
+//!   pins an engine to a table, and `GemmParams::simd = false` pins one
+//!   BCRC layer to scalar (the tuner's `simd` gene).
+//!
+//! Safety: the `unsafe` target-feature implementations are reachable only
+//! through the vtables exported here, and those are handed out only after
+//! the matching CPU feature check (AVX2/FMA) or on an architecture where
+//! the feature is baseline (NEON on aarch64).
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use super::microkernel;
+use std::sync::OnceLock;
+
+/// Activation applied by the fused epilogue row kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Relu6,
+}
+
+/// A table of monomorphized inner-loop kernels for one instruction set.
+///
+/// `axpy_{2,4,8}` are the unroll-bundle LRE kernels (`U` output rows
+/// sharing one input-row load); `axpy_1` the single-row fallback; `dot`
+/// the GEMV inner product; `bias_act` the fused epilogue
+/// `row[j] = act(row[j] + b)` with `b` the row's (output channel's) bias.
+pub struct Microkernels {
+    pub name: &'static str,
+    pub axpy_1: fn(&mut [f32], f32, &[f32]),
+    pub axpy_2: fn(&mut [&mut [f32]; 2], &[f32; 2], &[f32]),
+    pub axpy_4: fn(&mut [&mut [f32]; 4], &[f32; 4], &[f32]),
+    pub axpy_8: fn(&mut [&mut [f32]; 8], &[f32; 8], &[f32]),
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    pub bias_act: fn(&mut [f32], f32, Act),
+}
+
+impl std::fmt::Debug for Microkernels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Microkernels({})", self.name)
+    }
+}
+
+impl PartialEq for Microkernels {
+    fn eq(&self, other: &Self) -> bool {
+        std::ptr::eq(self, other)
+    }
+}
+
+/// Scalar epilogue: `row[j] = act(row[j] + b)`. The SIMD tables implement
+/// the same element-wise expression, which is exact per lane (add and max
+/// round identically in scalar and vector form), so fused output is
+/// bit-identical across backends for the *epilogue* part.
+fn scalar_bias_act(row: &mut [f32], b: f32, act: Act) {
+    match act {
+        Act::None => {
+            for v in row {
+                *v += b;
+            }
+        }
+        Act::Relu => {
+            for v in row {
+                let s = *v + b;
+                *v = if s < 0.0 { 0.0 } else { s };
+            }
+        }
+        Act::Relu6 => {
+            for v in row {
+                *v = (*v + b).clamp(0.0, 6.0);
+            }
+        }
+    }
+}
+
+static SCALAR: Microkernels = Microkernels {
+    name: "scalar",
+    axpy_1: microkernel::axpy_1,
+    axpy_2: microkernel::axpy_u::<2>,
+    axpy_4: microkernel::axpy_u::<4>,
+    axpy_8: microkernel::axpy_u::<8>,
+    dot: microkernel::dot,
+    bias_act: scalar_bias_act,
+};
+
+/// The always-available scalar table (auto-vectorized inner loops).
+pub fn scalar() -> &'static Microkernels {
+    &SCALAR
+}
+
+/// Probe the CPU and return the best table for it. Unlike [`active`],
+/// re-probes on every call and ignores `GRIM_FORCE_SCALAR`; tests use it
+/// to compare backends directly.
+pub fn detect() -> &'static Microkernels {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return &avx2::KERNELS;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON (ASIMD) is baseline on aarch64; keep the probe for
+        // symmetry with x86 and exotic no-FP targets.
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return &neon::KERNELS;
+        }
+    }
+    &SCALAR
+}
+
+/// The process-wide dispatched table: detected once on first use, scalar
+/// when `GRIM_FORCE_SCALAR` is set to anything but `0`.
+pub fn active() -> &'static Microkernels {
+    static ACTIVE: OnceLock<&'static Microkernels> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let forced = std::env::var_os("GRIM_FORCE_SCALAR").is_some_and(|v| v != "0");
+        if forced {
+            &SCALAR
+        } else {
+            detect()
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-5 + 1e-5 * b.abs()
+    }
+
+    /// Compare each vtable entry against the scalar table on shapes that
+    /// exercise full vectors *and* remainder lanes.
+    #[test]
+    fn dispatched_matches_scalar_all_entries() {
+        let mk = detect();
+        let sc = scalar();
+        let mut rng = Rng::new(0x51D0);
+        for len in [1usize, 3, 7, 8, 9, 15, 16, 17, 31, 64, 100, 257] {
+            let xrow: Vec<f32> = (0..len).map(|_| rng.f64() as f32 - 0.5).collect();
+            // axpy_1
+            let mut a = vec![0.25f32; len];
+            let mut b = a.clone();
+            (mk.axpy_1)(&mut a, 0.7, &xrow);
+            (sc.axpy_1)(&mut b, 0.7, &xrow);
+            for j in 0..len {
+                assert!(close(a[j], b[j]), "axpy_1 len={len} j={j}: {} vs {}", a[j], b[j]);
+            }
+            // dot
+            let y: Vec<f32> = (0..len).map(|_| rng.f64() as f32 - 0.5).collect();
+            assert!(
+                close((mk.dot)(&xrow, &y), (sc.dot)(&xrow, &y)),
+                "dot len={len}: {} vs {}",
+                (mk.dot)(&xrow, &y),
+                (sc.dot)(&xrow, &y)
+            );
+            // bias_act
+            for act in [Act::None, Act::Relu, Act::Relu6] {
+                let mut a = xrow.clone();
+                let mut b = xrow.clone();
+                (mk.bias_act)(&mut a, -0.1, act);
+                (sc.bias_act)(&mut b, -0.1, act);
+                assert_eq!(a, b, "bias_act {act:?} len={len} must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_bundles_match_scalar() {
+        let mk = detect();
+        let sc = scalar();
+        let mut rng = Rng::new(0x51D1);
+        for len in [1usize, 5, 8, 13, 32, 63] {
+            let xrow: Vec<f32> = (0..len).map(|_| rng.f64() as f32 - 0.5).collect();
+            macro_rules! check_u {
+                ($u:literal, $field:ident) => {{
+                    let wv: [f32; $u] = std::array::from_fn(|u| 0.1 * u as f32 - 0.3);
+                    let mut a = vec![vec![0.5f32; len]; $u];
+                    let mut b = a.clone();
+                    {
+                        let mut ar: [&mut [f32]; $u] = {
+                            let mut it = a.iter_mut();
+                            std::array::from_fn(|_| it.next().unwrap().as_mut_slice())
+                        };
+                        (mk.$field)(&mut ar, &wv, &xrow);
+                    }
+                    {
+                        let mut br: [&mut [f32]; $u] = {
+                            let mut it = b.iter_mut();
+                            std::array::from_fn(|_| it.next().unwrap().as_mut_slice())
+                        };
+                        (sc.$field)(&mut br, &wv, &xrow);
+                    }
+                    for u in 0..$u {
+                        for j in 0..len {
+                            assert!(
+                                close(a[u][j], b[u][j]),
+                                "axpy_{} len={len} u={u} j={j}",
+                                $u
+                            );
+                        }
+                    }
+                }};
+            }
+            check_u!(2, axpy_2);
+            check_u!(4, axpy_4);
+            check_u!(8, axpy_8);
+        }
+    }
+
+    #[test]
+    fn active_is_stable() {
+        assert!(std::ptr::eq(active(), active()), "dispatch must happen once");
+    }
+}

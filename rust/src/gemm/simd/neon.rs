@@ -1,0 +1,160 @@
+//! NEON micro-kernels (aarch64) — the closest analog to the paper's
+//! actual generated code, which targets the Snapdragon's Kryo cores.
+//!
+//! 4 f32 lanes per vector; `axpy_1` and `dot` run 2–4 independent
+//! accumulators to cover FMLA latency. Remainder lanes use scalar
+//! `mul_add` so rounding is uniformly fused. NEON (ASIMD) is baseline on
+//! aarch64, so [`KERNELS`] is always sound to use there; dispatch still
+//! goes through [`super::detect`] for symmetry with x86.
+
+use super::{Act, Microkernels};
+use std::arch::aarch64::*;
+
+pub static KERNELS: Microkernels = Microkernels {
+    name: "neon",
+    axpy_1: axpy_1_s,
+    axpy_2: axpy_u_s::<2>,
+    axpy_4: axpy_u_s::<4>,
+    axpy_8: axpy_u_s::<8>,
+    dot: dot_s,
+    bias_act: bias_act_s,
+};
+
+fn axpy_1_s(acc: &mut [f32], wv: f32, xrow: &[f32]) {
+    // SAFETY: NEON is baseline on aarch64 (and detect() re-checks).
+    unsafe { axpy_1(acc, wv, xrow) }
+}
+
+fn axpy_u_s<const U: usize>(acc: &mut [&mut [f32]; U], wv: &[f32; U], xrow: &[f32]) {
+    // SAFETY: as above.
+    unsafe { axpy_u::<U>(acc, wv, xrow) }
+}
+
+fn dot_s(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: as above.
+    unsafe { dot(a, b) }
+}
+
+fn bias_act_s(row: &mut [f32], b: f32, act: Act) {
+    // SAFETY: as above.
+    unsafe { bias_act(row, b, act) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_1(acc: &mut [f32], wv: f32, xrow: &[f32]) {
+    debug_assert_eq!(acc.len(), xrow.len());
+    let n = acc.len();
+    let a = acc.as_mut_ptr();
+    let x = xrow.as_ptr();
+    let w = vdupq_n_f32(wv);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let a0 = vfmaq_f32(vld1q_f32(a.add(j)), w, vld1q_f32(x.add(j)));
+        let a1 = vfmaq_f32(vld1q_f32(a.add(j + 4)), w, vld1q_f32(x.add(j + 4)));
+        vst1q_f32(a.add(j), a0);
+        vst1q_f32(a.add(j + 4), a1);
+        j += 8;
+    }
+    while j + 4 <= n {
+        vst1q_f32(a.add(j), vfmaq_f32(vld1q_f32(a.add(j)), w, vld1q_f32(x.add(j))));
+        j += 4;
+    }
+    while j < n {
+        *a.add(j) = wv.mul_add(*x.add(j), *a.add(j));
+        j += 1;
+    }
+}
+
+/// The LRE bundle: one `xrow` vector load feeds `U` FMLA accumulators.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_u<const U: usize>(acc: &mut [&mut [f32]; U], wv: &[f32; U], xrow: &[f32]) {
+    let n = xrow.len();
+    for u in 0..U {
+        debug_assert_eq!(acc[u].len(), n);
+    }
+    let x = xrow.as_ptr();
+    let wb: [float32x4_t; U] = std::array::from_fn(|u| vdupq_n_f32(wv[u]));
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let xv = vld1q_f32(x.add(j));
+        for u in 0..U {
+            let p = acc[u].as_mut_ptr().add(j);
+            vst1q_f32(p, vfmaq_f32(vld1q_f32(p), wb[u], xv));
+        }
+        j += 4;
+    }
+    while j < n {
+        let xs = *x.add(j);
+        for u in 0..U {
+            let p = acc[u].as_mut_ptr().add(j);
+            *p = wv[u].mul_add(xs, *p);
+        }
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut s0 = vdupq_n_f32(0.0);
+    let mut s1 = vdupq_n_f32(0.0);
+    let mut s2 = vdupq_n_f32(0.0);
+    let mut s3 = vdupq_n_f32(0.0);
+    let mut j = 0usize;
+    while j + 16 <= n {
+        s0 = vfmaq_f32(s0, vld1q_f32(pa.add(j)), vld1q_f32(pb.add(j)));
+        s1 = vfmaq_f32(s1, vld1q_f32(pa.add(j + 4)), vld1q_f32(pb.add(j + 4)));
+        s2 = vfmaq_f32(s2, vld1q_f32(pa.add(j + 8)), vld1q_f32(pb.add(j + 8)));
+        s3 = vfmaq_f32(s3, vld1q_f32(pa.add(j + 12)), vld1q_f32(pb.add(j + 12)));
+        j += 16;
+    }
+    while j + 4 <= n {
+        s0 = vfmaq_f32(s0, vld1q_f32(pa.add(j)), vld1q_f32(pb.add(j)));
+        j += 4;
+    }
+    let s = vaddq_f32(vaddq_f32(s0, s1), vaddq_f32(s2, s3));
+    let mut acc = vaddvq_f32(s);
+    while j < n {
+        acc = (*pa.add(j)).mul_add(*pb.add(j), acc);
+        j += 1;
+    }
+    acc
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn bias_act(row: &mut [f32], b: f32, act: Act) {
+    let n = row.len();
+    let p = row.as_mut_ptr();
+    let bv = vdupq_n_f32(b);
+    let zero = vdupq_n_f32(0.0);
+    let six = vdupq_n_f32(6.0);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let mut v = vaddq_f32(vld1q_f32(p.add(j)), bv);
+        match act {
+            Act::None => {}
+            Act::Relu => v = vmaxq_f32(v, zero),
+            Act::Relu6 => v = vminq_f32(vmaxq_f32(v, zero), six),
+        }
+        vst1q_f32(p.add(j), v);
+        j += 4;
+    }
+    while j < n {
+        let s = *p.add(j) + b;
+        *p.add(j) = match act {
+            Act::None => s,
+            Act::Relu => {
+                if s < 0.0 {
+                    0.0
+                } else {
+                    s
+                }
+            }
+            Act::Relu6 => s.clamp(0.0, 6.0),
+        };
+        j += 1;
+    }
+}

@@ -1,8 +1,11 @@
 //! Cache-tiled, register-blocked dense GEMM — the optimized-dense baseline
 //! (MNN / TVM analog). Also used for the dense FC layers of GRIM itself
-//! when a layer is left unpruned.
+//! when a layer is left unpruned. Inner register blocks run on the
+//! dispatched [`Microkernels`] vtable; the [`Epilogue`] is applied per
+//! output-row tile right after its K accumulation completes.
 
-use super::microkernel::axpy_u;
+use super::epilogue::Epilogue;
+use super::simd::{self, Microkernels};
 use crate::tensor::Tensor;
 use crate::util::sharedbuf::{SharedOut, SharedSlice};
 use crate::util::ThreadPool;
@@ -33,14 +36,27 @@ pub fn tiled_gemm(w: &Tensor, x: &Tensor, p: TileParams) -> Tensor {
     out
 }
 
-/// Arena variant of [`tiled_gemm`]: `x` is `[K, N]` flattened; the
-/// product is written (not accumulated) into `out` of length `M*N`.
+/// Arena variant of [`tiled_gemm`] with dispatched kernels, no epilogue.
 pub fn tiled_gemm_into(w: &Tensor, xd: &[f32], n: usize, p: TileParams, out: &mut [f32]) {
+    tiled_gemm_into_ep(w, xd, n, p, out, simd::active(), Epilogue::None);
+}
+
+/// Arena variant: `x` is `[K, N]` flattened; the product is written (not
+/// accumulated) into `out` of length `M*N`, with `ep` fused per row tile.
+pub fn tiled_gemm_into_ep(
+    w: &Tensor,
+    xd: &[f32],
+    n: usize,
+    p: TileParams,
+    out: &mut [f32],
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
+) {
     let (m, k) = w.shape().as_matrix();
     assert_eq!(xd.len(), k * n, "input length mismatch");
     assert_eq!(out.len(), m * n, "output length mismatch");
     out.fill(0.0);
-    tiled_rows(w.data(), xd, out, 0, m, m, k, n, p);
+    tiled_rows(w.data(), xd, out, 0, m, k, n, p, mk, ep);
 }
 
 /// Multi-threaded tiled GEMM: W rows partitioned across the pool.
@@ -53,7 +69,7 @@ pub fn tiled_gemm_parallel(w: &Tensor, x: &Tensor, p: TileParams, pool: &ThreadP
     out
 }
 
-/// Arena variant of [`tiled_gemm_parallel`].
+/// Arena variant of [`tiled_gemm_parallel`] (dispatched, no epilogue).
 pub fn tiled_gemm_parallel_into(
     w: &Tensor,
     xd: &[f32],
@@ -62,6 +78,21 @@ pub fn tiled_gemm_parallel_into(
     pool: &ThreadPool,
     out: &mut [f32],
 ) {
+    tiled_gemm_parallel_into_ep(w, xd, n, p, pool, out, simd::active(), Epilogue::None);
+}
+
+/// Parallel arena variant with a fused epilogue.
+#[allow(clippy::too_many_arguments)]
+pub fn tiled_gemm_parallel_into_ep(
+    w: &Tensor,
+    xd: &[f32],
+    n: usize,
+    p: TileParams,
+    pool: &ThreadPool,
+    out: &mut [f32],
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
+) {
     let (m, k) = w.shape().as_matrix();
     assert_eq!(xd.len(), k * n, "input length mismatch");
     assert_eq!(out.len(), m * n, "output length mismatch");
@@ -69,16 +100,20 @@ pub fn tiled_gemm_parallel_into(
     let oview = SharedOut::new(out);
     let wv = SharedSlice::new(w.data());
     let xv = SharedSlice::new(xd);
+    let (bias, act) = ep.parts();
+    let bias_view = bias.map(SharedSlice::new);
     pool.run_partitioned(m, move |_wid, lo, hi| {
         // SAFETY: buffers outlive the blocking pool call; row ranges disjoint.
         let (wd, xd) = unsafe { (wv.get(), xv.get()) };
         let orows = unsafe { oview.range_mut(lo * n, hi * n) };
-        tiled_rows(wd, xd, orows, lo, hi, hi - lo, k, n, p);
+        let ep = Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
+        tiled_rows(wd, xd, orows, lo, hi, k, n, p, mk, ep);
     });
 }
 
-/// Compute rows `lo..hi` of the product into `out` (out holds `out_rows`
-/// rows starting at logical row `lo`).
+/// Compute rows `lo..hi` of the product into `out` (`out` holds rows
+/// `lo..hi` starting at its origin). The epilogue fires per `(rows, jc)`
+/// cache tile once its K loop finishes.
 #[allow(clippy::too_many_arguments)]
 fn tiled_rows(
     wd: &[f32],
@@ -86,10 +121,11 @@ fn tiled_rows(
     out: &mut [f32],
     lo: usize,
     hi: usize,
-    _out_rows: usize,
     k: usize,
     n: usize,
     p: TileParams,
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
 ) {
     let kc = p.kc.max(1);
     let nc = p.nc.max(1);
@@ -100,16 +136,28 @@ fn tiled_rows(
             let mut i = lo;
             // mr-row register blocks
             while i + 4 <= hi && p.mr >= 4 {
-                mk_rows::<4>(wd, xd, out, i, lo, pc, pe, jc, je, k, n);
+                mk_rows::<4>(wd, xd, out, i, lo, pc, pe, jc, je, k, n, mk.axpy_4);
                 i += 4;
             }
             while i + 2 <= hi && p.mr >= 2 {
-                mk_rows::<2>(wd, xd, out, i, lo, pc, pe, jc, je, k, n);
+                mk_rows::<2>(wd, xd, out, i, lo, pc, pe, jc, je, k, n, mk.axpy_2);
                 i += 2;
             }
             while i < hi {
-                mk_rows::<1>(wd, xd, out, i, lo, pc, pe, jc, je, k, n);
+                // single-row remainder: plain axpy against the shared rows
+                let row = &mut out[(i - lo) * n + jc..(i - lo) * n + je];
+                for ppos in pc..pe {
+                    let xrow = &xd[ppos * n + jc..ppos * n + je];
+                    (mk.axpy_1)(row, wd[i * k + ppos], xrow);
+                }
                 i += 1;
+            }
+        }
+        if !ep.is_none() {
+            // All K blocks done: this column tile of every row is final.
+            for i in lo..hi {
+                let row = &mut out[(i - lo) * n + jc..(i - lo) * n + je];
+                ep.apply_row(mk, i, row);
             }
         }
     }
@@ -130,6 +178,7 @@ fn mk_rows<const U: usize>(
     je: usize,
     k: usize,
     n: usize,
+    kern: fn(&mut [&mut [f32]; U], &[f32; U], &[f32]),
 ) {
     let nt = je - jc;
     // split out into U disjoint row slices
@@ -143,7 +192,7 @@ fn mk_rows<const U: usize>(
     for ppos in pc..pe {
         let xrow = &xd[ppos * n + jc..ppos * n + jc + nt];
         let wv: [f32; U] = std::array::from_fn(|u| wd[(i + u) * k + ppos]);
-        axpy_u::<U>(&mut rows, &wv, xrow);
+        kern(&mut rows, &wv, xrow);
     }
 }
 
@@ -186,5 +235,32 @@ mod tests {
         let a = tiled_gemm(&w, &x, TileParams::default());
         let b = tiled_gemm_parallel(&w, &x, TileParams::default(), &pool);
         assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn fused_epilogue_equals_separate_passes() {
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (19, 37, 23);
+        let w = Tensor::rand_uniform(&[m, k], 0.6, &mut rng);
+        let x = Tensor::rand_uniform(&[k, n], 0.6, &mut rng);
+        let bias: Vec<f32> = (0..m).map(|i| 0.03 * i as f32 - 0.2).collect();
+        // tiles deliberately not dividing the shape (remainder coverage)
+        let p = TileParams { mr: 4, kc: 16, nc: 8 };
+        let pool = ThreadPool::new(3);
+
+        let mut fused = vec![0.0f32; m * n];
+        tiled_gemm_into_ep(&w, x.data(), n, p, &mut fused, simd::active(),
+            Epilogue::BiasRelu(&bias));
+
+        let mut sep = vec![0.0f32; m * n];
+        tiled_gemm_into(&w, x.data(), n, p, &mut sep);
+        crate::conv::ops::add_bias_slice(&mut sep, &bias);
+        crate::conv::ops::relu_slice(&mut sep);
+        assert_eq!(fused, sep);
+
+        let mut par = vec![0.0f32; m * n];
+        tiled_gemm_parallel_into_ep(&w, x.data(), n, p, &pool, &mut par, simd::active(),
+            Epilogue::BiasRelu(&bias));
+        assert_eq!(fused, par);
     }
 }

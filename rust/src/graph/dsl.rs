@@ -10,7 +10,7 @@
 //! f    = Flatten(p1)
 //! fc1  = FC(f, out_f=10)
 //! out  = Softmax(fc1)
-//! @ir c1 { block_size=[4,16]; rate=8.0; unroll=4; tile=64; lre=true; reorder=true; format=bcrc }
+//! @ir c1 { block_size=[4,16]; rate=8.0; unroll=4; tile=64; lre=true; simd=true; reorder=true; format=bcrc }
 //! ```
 //!
 //! DSL ↔ graph conversion is loss-free: `parse(print(g)) == g`.
@@ -243,6 +243,7 @@ fn parse_ir(rest: &str) -> anyhow::Result<LayerIr> {
             "unroll" => ir.unroll = v.parse()?,
             "tile" => ir.tile = v.parse()?,
             "lre" => ir.lre = v.parse()?,
+            "simd" => ir.simd = v.parse()?,
             "reorder" => ir.reorder = v.parse()?,
             "format" => ir.format = StorageFormat::parse(v)?,
             other => anyhow::bail!("unknown @ir key '{other}'"),

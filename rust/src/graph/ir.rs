@@ -51,6 +51,9 @@ pub struct LayerIr {
     pub tile: usize,
     /// Register-level load redundancy elimination on/off.
     pub lre: bool,
+    /// Dispatched SIMD micro-kernels on/off (off pins the layer to the
+    /// scalar backend — a tuner gene, since tiny layers can prefer it).
+    pub simd: bool,
     /// Matrix reorder on/off (off = identity permutation ablation).
     pub reorder: bool,
     // -- basic information --
@@ -67,6 +70,7 @@ impl LayerIr {
             unroll: 4,
             tile: 64,
             lre: true,
+            simd: true,
             reorder: true,
             format: if rate > 1.0 { StorageFormat::Bcrc } else { StorageFormat::Dense },
         }
@@ -74,13 +78,13 @@ impl LayerIr {
 
     /// Kernel execution parameters derived from the IR.
     pub fn gemm_params(&self) -> GemmParams {
-        GemmParams { unroll: self.unroll, n_tile: self.tile, lre: self.lre }
+        GemmParams { unroll: self.unroll, n_tile: self.tile, lre: self.lre, simd: self.simd }
     }
 
     /// Serialize as a DSL `@ir` pragma line.
     pub fn to_dsl(&self) -> String {
         format!(
-            "@ir {} {{ block_size=[{},{}]; rate={}; unroll={}; tile={}; lre={}; reorder={}; format={} }}",
+            "@ir {} {{ block_size=[{},{}]; rate={}; unroll={}; tile={}; lre={}; simd={}; reorder={}; format={} }}",
             self.layer,
             self.block_size[0],
             self.block_size[1],
@@ -88,6 +92,7 @@ impl LayerIr {
             self.unroll,
             self.tile,
             self.lre,
+            self.simd,
             self.reorder,
             self.format.as_str()
         )

@@ -208,7 +208,10 @@ fn cmd_tune(f: &Flags) -> anyhow::Result<()> {
         population: flag(f, "population", 8usize),
         ..Default::default()
     };
-    let space = SearchSpace::default();
+    // Include the scalar-vs-SIMD backend gene: (unroll, n_tile) are
+    // measured against the dispatched kernels, and a layer may still pick
+    // scalar when vectorization loses on it.
+    let space = SearchSpace::with_simd_axis();
     println!("tuning {} (pop={} gen={})", module.name, ga.population, ga.generations);
     for node in module.graph.weighted_layers() {
         let Some(lw) = weights.get(&node.name) else { continue };
@@ -222,8 +225,13 @@ fn cmd_tune(f: &Flags) -> anyhow::Result<()> {
             std::hint::black_box(g.execute(&x));
         });
         println!(
-            "  {:<16} [{rows}x{cols}] -> unroll={} tile={} ({:.4} ms, {} evals)",
-            node.name, res.best.unroll, res.best.n_tile, res.best_ms, res.evals
+            "  {:<16} [{rows}x{cols}] -> unroll={} tile={} backend={} ({:.4} ms, {} evals)",
+            node.name,
+            res.best.unroll,
+            res.best.n_tile,
+            if res.best.simd { grim::gemm::simd::active().name } else { "scalar" },
+            res.best_ms,
+            res.evals
         );
     }
     Ok(())

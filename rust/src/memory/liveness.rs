@@ -58,14 +58,39 @@ pub struct Liveness {
     pub scratch_of: Vec<Option<usize>>,
 }
 
+/// Is this step a pure view of its input — same elements, new dims — so
+/// its "output" can alias the producer's buffer byte-for-byte?
+fn is_view_step(step: &Step) -> bool {
+    matches!(step, Step::Flatten)
+}
+
 /// Compute first-def/last-use intervals for every intermediate of `plan`.
 /// `shapes` are the per-node output shapes from graph inference.
+///
+/// View steps (`Flatten` and future reshape-likes) get **in-place
+/// elision**: when the producer's value has this view as its only
+/// consumer, the view's `value_of` entry aliases the producer's buffer
+/// instead of allocating a new one, and the executor skips the copy. The
+/// aliased buffer's lifetime then extends through the view's readers via
+/// the normal last-use pass.
 pub fn analyze(plan: &ExecutionPlan, shapes: &[Shape]) -> anyhow::Result<Liveness> {
     let n = plan.steps.len();
     anyhow::ensure!(shapes.len() == n, "shape count {} != step count {n}", shapes.len());
     let mut buffers: Vec<PlannedBuffer> = Vec::new();
     let mut value_of: Vec<Option<usize>> = vec![None; n];
     let mut scratch_of: Vec<Option<usize>> = vec![None; n];
+
+    // Runtime consumer counts (Noop steps never read at run time; their
+    // one-time readers were redirected past them at compile time).
+    let mut consumers = vec![0usize; n];
+    for (id, step) in &plan.steps {
+        if matches!(step, Step::Noop | Step::Input) {
+            continue;
+        }
+        for &src in &plan.inputs[*id] {
+            consumers[src] += 1;
+        }
+    }
 
     for (id, step) in &plan.steps {
         let id = *id;
@@ -75,6 +100,16 @@ pub fn analyze(plan: &ExecutionPlan, shapes: &[Shape]) -> anyhow::Result<Livenes
         if !matches!(step, Step::Input) {
             let len = shapes[id].numel();
             anyhow::ensure!(len > 0, "node {id}: zero-sized value");
+            // In-place elision for pure-view steps.
+            if is_view_step(step) {
+                let src = plan.inputs[id][0];
+                if let Some(b) = value_of[src] {
+                    if consumers[src] == 1 && buffers[b].len == len {
+                        value_of[id] = Some(b);
+                        continue;
+                    }
+                }
+            }
             value_of[id] = Some(buffers.len());
             buffers.push(PlannedBuffer {
                 node: id,

@@ -1,5 +1,13 @@
 //! The tuner's search space: the cartesian grid of micro-kernel
 //! parameters the compiler's monomorphized kernels cover.
+//!
+//! Since the SIMD dispatch layer landed, `(unroll, n_tile)` are measured
+//! against the *dispatched* kernels (a [`Config`]'s `gemm_params()`
+//! defaults `simd = true`, so fitness closures built from it run whatever
+//! [`crate::gemm::simd::active`] selected). The optional `simd` axis
+//! ([`SearchSpace::with_simd_axis`]) additionally lets the tuner pin a
+//! layer to the scalar backend when the vector kernels lose on it (tiny
+//! rows, heavy remainder lanes).
 
 use crate::gemm::bcrc_gemm::GemmParams;
 use crate::gemm::microkernel::{N_TILES, UNROLL_FACTORS};
@@ -10,11 +18,13 @@ pub struct Config {
     pub unroll: usize,
     pub n_tile: usize,
     pub lre: bool,
+    /// Run on the dispatched SIMD kernels (false = scalar backend).
+    pub simd: bool,
 }
 
 impl Config {
     pub fn gemm_params(&self) -> GemmParams {
-        GemmParams { unroll: self.unroll, n_tile: self.n_tile, lre: self.lre }
+        GemmParams { unroll: self.unroll, n_tile: self.n_tile, lre: self.lre, simd: self.simd }
     }
 }
 
@@ -24,6 +34,7 @@ pub struct SearchSpace {
     pub unrolls: Vec<usize>,
     pub n_tiles: Vec<usize>,
     pub lres: Vec<bool>,
+    pub simds: Vec<bool>,
 }
 
 impl Default for SearchSpace {
@@ -32,6 +43,7 @@ impl Default for SearchSpace {
             unrolls: UNROLL_FACTORS.to_vec(),
             n_tiles: N_TILES.to_vec(),
             lres: vec![true],
+            simds: vec![true],
         }
     }
 }
@@ -42,18 +54,26 @@ impl SearchSpace {
         SearchSpace { lres: vec![true, false], ..Default::default() }
     }
 
+    /// Space including the scalar-vs-SIMD backend axis, so the tuner can
+    /// fall back to scalar on layers where vectorization does not pay.
+    pub fn with_simd_axis() -> Self {
+        SearchSpace { simds: vec![true, false], ..Default::default() }
+    }
+
     pub fn size(&self) -> usize {
-        self.unrolls.len() * self.n_tiles.len() * self.lres.len()
+        self.unrolls.len() * self.n_tiles.len() * self.lres.len() * self.simds.len()
     }
 
     /// Decode a flat index into a config (for grid enumeration).
     pub fn decode(&self, idx: usize) -> Config {
         let nu = self.unrolls.len();
         let nt = self.n_tiles.len();
+        let nl = self.lres.len();
         Config {
             unroll: self.unrolls[idx % nu],
             n_tile: self.n_tiles[(idx / nu) % nt],
-            lre: self.lres[(idx / (nu * nt)) % self.lres.len()],
+            lre: self.lres[(idx / (nu * nt)) % nl],
+            simd: self.simds[(idx / (nu * nt * nl)) % self.simds.len()],
         }
     }
 
@@ -67,13 +87,30 @@ impl SearchSpace {
         self.decode(rng.index(self.size()))
     }
 
-    /// Mutate one gene.
+    /// Mutate one gene, chosen among the axes that can actually vary (a
+    /// single-candidate axis would make the mutation a guaranteed no-op).
     pub fn mutate(&self, c: Config, rng: &mut crate::util::Rng) -> Config {
+        let mut axes = [0usize; 4];
+        let mut na = 0;
+        for (axis, len) in
+            [self.unrolls.len(), self.n_tiles.len(), self.lres.len(), self.simds.len()]
+                .into_iter()
+                .enumerate()
+        {
+            if len > 1 {
+                axes[na] = axis;
+                na += 1;
+            }
+        }
+        if na == 0 {
+            return c;
+        }
         let mut c = c;
-        match rng.index(3) {
+        match axes[rng.index(na)] {
             0 => c.unroll = self.unrolls[rng.index(self.unrolls.len())],
             1 => c.n_tile = self.n_tiles[rng.index(self.n_tiles.len())],
-            _ => c.lre = self.lres[rng.index(self.lres.len())],
+            2 => c.lre = self.lres[rng.index(self.lres.len())],
+            _ => c.simd = self.simds[rng.index(self.simds.len())],
         }
         c
     }
@@ -84,6 +121,7 @@ impl SearchSpace {
             unroll: if rng.chance(0.5) { a.unroll } else { b.unroll },
             n_tile: if rng.chance(0.5) { a.n_tile } else { b.n_tile },
             lre: if rng.chance(0.5) { a.lre } else { b.lre },
+            simd: if rng.chance(0.5) { a.simd } else { b.simd },
         }
     }
 }
@@ -99,14 +137,23 @@ mod tests {
         let all = s.all();
         assert_eq!(all.len(), s.size());
         let mut uniq = all.clone();
-        uniq.sort_by_key(|c| (c.unroll, c.n_tile, c.lre));
+        uniq.sort_by_key(|c| (c.unroll, c.n_tile, c.lre, c.simd));
         uniq.dedup();
         assert_eq!(uniq.len(), all.len(), "decode must be injective");
     }
 
     #[test]
+    fn simd_axis_doubles_space() {
+        let base = SearchSpace::default();
+        let wide = SearchSpace::with_simd_axis();
+        assert_eq!(wide.size(), 2 * base.size());
+        assert!(wide.all().iter().any(|c| !c.simd));
+        assert!(base.all().iter().all(|c| c.simd), "default space stays on dispatched kernels");
+    }
+
+    #[test]
     fn mutate_stays_in_space() {
-        let s = SearchSpace::default();
+        let s = SearchSpace::with_simd_axis();
         let mut rng = Rng::new(1);
         let mut c = s.sample(&mut rng);
         for _ in 0..100 {
@@ -114,6 +161,7 @@ mod tests {
             assert!(s.unrolls.contains(&c.unroll));
             assert!(s.n_tiles.contains(&c.n_tile));
             assert!(s.lres.contains(&c.lre));
+            assert!(s.simds.contains(&c.simd));
         }
     }
 
@@ -121,8 +169,8 @@ mod tests {
     fn crossover_mixes_genes() {
         let s = SearchSpace::default();
         let mut rng = Rng::new(2);
-        let a = Config { unroll: 1, n_tile: 16, lre: true };
-        let b = Config { unroll: 8, n_tile: 128, lre: true };
+        let a = Config { unroll: 1, n_tile: 16, lre: true, simd: true };
+        let b = Config { unroll: 8, n_tile: 128, lre: true, simd: true };
         let c = s.crossover(a, b, &mut rng);
         assert!(c.unroll == 1 || c.unroll == 8);
         assert!(c.n_tile == 16 || c.n_tile == 128);

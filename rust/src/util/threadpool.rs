@@ -12,14 +12,19 @@
 //!   baselines, which is exactly where load imbalance shows up).
 //!
 //! Workers are long-lived; jobs are dispatched over channels so the hot
-//! loop does not spawn threads.
+//! loop does not spawn threads. Each worker additionally owns a reusable
+//! f32 scratch buffer that survives across jobs
+//! ([`ThreadPool::run_partitioned_scratch`]): kernels that need a small
+//! per-worker gather/staging area (the BCRC parallel GEMV path) borrow it
+//! instead of allocating, so the buffer is grown once per worker lifetime
+//! and the steady-state serving path stays allocation-free.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+type Job = Box<dyn FnOnce(&mut Vec<f32>) + Send + 'static>;
 
 enum Msg {
     Run(Job),
@@ -46,9 +51,12 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("grim-worker-{i}"))
                     .spawn(move || {
+                        // Per-worker scratch: grown on demand by scratch
+                        // jobs, reused across every job this worker runs.
+                        let mut scratch: Vec<f32> = Vec::new();
                         while let Ok(msg) = rx.recv() {
                             match msg {
-                                Msg::Run(job) => job(),
+                                Msg::Run(job) => job(&mut scratch),
                                 Msg::Shutdown => break,
                             }
                         }
@@ -71,6 +79,17 @@ impl ThreadPool {
     where
         F: Fn(usize, usize, usize) + Send + Sync + 'static,
     {
+        self.run_partitioned_scratch(n, move |_scratch, w, lo, hi| f(w, lo, hi));
+    }
+
+    /// Like [`Self::run_partitioned`], but hands each worker its own
+    /// long-lived scratch buffer as well: `f(scratch, worker_id, lo, hi)`.
+    /// The buffer persists across jobs, so `resize`-to-fit inside `f`
+    /// allocates at most once per worker per high-water mark.
+    pub fn run_partitioned_scratch<F>(&self, n: usize, f: F)
+    where
+        F: Fn(&mut Vec<f32>, usize, usize, usize) + Send + Sync + 'static,
+    {
         if n == 0 {
             return;
         }
@@ -87,8 +106,8 @@ impl ThreadPool {
             let f = Arc::clone(&f);
             let done = done_tx.clone();
             self.senders[w]
-                .send(Msg::Run(Box::new(move || {
-                    f(w, lo, hi);
+                .send(Msg::Run(Box::new(move |scratch| {
+                    f(scratch, w, lo, hi);
                     // Drop our Arc clone BEFORE signalling completion so the
                     // caller can unwrap shared state as soon as recv returns.
                     drop(f);
@@ -118,7 +137,7 @@ impl ThreadPool {
             let next = Arc::clone(&next);
             let done = done_tx.clone();
             self.senders[w]
-                .send(Msg::Run(Box::new(move || {
+                .send(Msg::Run(Box::new(move |_scratch| {
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
@@ -148,7 +167,7 @@ impl ThreadPool {
         for (w, job) in fs.into_iter().enumerate() {
             let done = done_tx.clone();
             self.senders[w]
-                .send(Msg::Run(Box::new(move || {
+                .send(Msg::Run(Box::new(move |_scratch| {
                     job();
                     let _ = done.send(());
                 })))
@@ -255,6 +274,27 @@ mod tests {
             .collect();
         pool.run_each(jobs);
         assert_eq!(c.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn worker_scratch_persists_across_jobs() {
+        let pool = ThreadPool::new(2);
+        // First job grows each worker's scratch…
+        pool.run_partitioned_scratch(2, |scratch, _w, _lo, _hi| {
+            if scratch.len() < 64 {
+                scratch.resize(64, 0.0);
+            }
+            scratch[63] = 1.0;
+        });
+        // …the second observes the grown buffer (no fresh allocation).
+        let seen = Arc::new(AtomicUsize::new(0));
+        let s2 = Arc::clone(&seen);
+        pool.run_partitioned_scratch(2, move |scratch, _w, _lo, _hi| {
+            if scratch.len() == 64 && scratch[63] == 1.0 {
+                s2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(seen.load(Ordering::SeqCst), 2, "scratch must persist per worker");
     }
 
     #[test]

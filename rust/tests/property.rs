@@ -63,6 +63,7 @@ fn prop_all_kernels_agree() {
             unroll: [1usize, 2, 4, 8][rng.index(4)],
             n_tile: [8usize, 64, 1024][rng.index(3)],
             lre: rng.chance(0.7),
+            simd: rng.chance(0.5),
         };
         let grim = BcrcGemm::new(Bcrc::from_masked(&w, &mask), params).execute(&x);
         assert!(grim.allclose(&oracle, 1e-3, 1e-3), "bcrc seed {seed} {params:?}");

@@ -9,6 +9,7 @@
 use grim::bench::Report;
 use grim::conv::ops;
 use grim::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
+use grim::gemm::pack::{pack_bcrc, CacheParams, PackOverrides};
 use grim::gemm::simd::{self, Microkernels};
 use grim::gemm::tiled::{tiled_gemm_into, tiled_gemm_into_ep, TileParams};
 use grim::gemm::Epilogue;
@@ -16,7 +17,8 @@ use grim::sparse::{Bcrc, BcrConfig, BcrMask};
 use grim::tensor::Tensor;
 use grim::util::json::{self, Json};
 use grim::util::timer::time_median_ms;
-use grim::util::Rng;
+use grim::util::{Rng, ThreadPool};
+use std::sync::Arc;
 
 /// GFLOP/s of `flops` total floating-point ops done in `ms`.
 fn gflops(flops: f64, ms: f64) -> f64 {
@@ -80,10 +82,14 @@ fn main() -> anyhow::Result<()> {
     let sc = simd::scalar();
     println!("dispatched backend: {}", mk.name);
 
+    // Columns are generic because the sections compare different pairs:
+    // scalar-vs-SIMD GFLOP/s, unfused-vs-fused ms, unpacked-vs-packed
+    // GFLOP/s, even-vs-LPT imbalance. Each row's `bench` cell names the
+    // comparison; baseline/variant hold the two sides.
     let mut rep = Report::new(
         "bench_kernels",
-        "Micro-kernels: scalar vs SIMD, fused vs unfused",
-        &["bench", "shape", "scalar", "simd", "speedup"],
+        "Micro-kernels: scalar vs SIMD, fused vs unfused, unpacked vs packed",
+        &["bench", "shape", "baseline", "variant", "ratio"],
     );
     let mut kernels = Vec::new();
     for &n in &[64usize, 256, 1024, 4096] {
@@ -189,6 +195,125 @@ fn main() -> anyhow::Result<()> {
         fused_rows.push(o);
     }
 
+    // Packed vs unpacked BCRC layout: same matrix, same params, same
+    // kernels — only the plan-time layout (and, parallel, the static
+    // nnz-balanced partition) differs. GFLOP/s over 2*nnz*N ops.
+    let threads = 4usize;
+    let pool = ThreadPool::new(threads);
+    let mut packing_rows = Vec::new();
+    for &(name, m, k, n) in
+        &[("fc-ish", 256usize, 512usize, 1usize), ("conv-ish", 128, 256, 196), ("wide", 256, 512, 64)]
+    {
+        let mut rng = Rng::new(21);
+        let mask = BcrMask::random(m, k, BcrConfig::from_block_size(m, k, 4, 16), 6.0, &mut rng);
+        let mut w = Tensor::rand_uniform(&[m, k], 0.4, &mut rng);
+        mask.apply(&mut w);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let params = GemmParams::default();
+        let plain = BcrcGemm::new(enc.clone(), params);
+        let packed_layout = Arc::new(pack_bcrc(
+            &enc,
+            params,
+            n,
+            CacheParams::default(),
+            threads,
+            PackOverrides::default(),
+        ));
+        let packed = BcrcGemm::new(enc.clone(), params).with_packed(Arc::clone(&packed_layout));
+        let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
+        let flops = 2.0 * enc.nnz() as f64 * n as f64;
+        let mut out = vec![0.0f32; m * n];
+        let mut gather = vec![0.0f32; enc.max_group_cols()];
+
+        let t_unpacked = time_median_ms(iters, 2, || {
+            plain.execute_into_ep(x.data(), n, &mut out, &mut gather, mk, Epilogue::None);
+            std::hint::black_box(&mut out);
+        });
+        let t_packed = time_median_ms(iters, 2, || {
+            packed.execute_into_ep(x.data(), n, &mut out, &mut gather, mk, Epilogue::None);
+            std::hint::black_box(&mut out);
+        });
+        let t_unpacked_par = time_median_ms(iters, 2, || {
+            plain.execute_parallel_into_ep(x.data(), n, &mut out, &pool, mk, Epilogue::None);
+            std::hint::black_box(&mut out);
+        });
+        let t_packed_par = time_median_ms(iters, 2, || {
+            packed.execute_parallel_into_ep(x.data(), n, &mut out, &pool, mk, Epilogue::None);
+            std::hint::black_box(&mut out);
+        });
+        rep.row(vec![
+            "bcrc packed".into(),
+            format!("{name} [{m}x{k}]xN{n}"),
+            format!("{:.2} GF/s", gflops(flops, t_unpacked)),
+            format!("{:.2} GF/s", gflops(flops, t_packed)),
+            format!("{:.2}x", t_unpacked / t_packed),
+        ]);
+        let mut o = Json::obj();
+        o.set("shape", Json::Str(format!("{m}x{k}xN{n}")))
+            .set("unpacked_gflops", Json::Num(round2(gflops(flops, t_unpacked))))
+            .set("packed_gflops", Json::Num(round2(gflops(flops, t_packed))))
+            .set("unpacked_par_gflops", Json::Num(round2(gflops(flops, t_unpacked_par))))
+            .set("packed_par_gflops", Json::Num(round2(gflops(flops, t_packed_par))))
+            .set("speedup_serial", Json::Num(round2(t_unpacked / t_packed)))
+            .set("speedup_parallel", Json::Num(round2(t_unpacked_par / t_packed_par)))
+            .set("u16_indices", Json::Bool(packed_layout.is_u16()));
+        packing_rows.push(o);
+    }
+
+    // Thread-imbalance stats on a sparsity-skewed fixture: nnz per
+    // thread under the even row split vs the LPT partition.
+    let partition_stats = {
+        let (m, k) = (256usize, 256usize);
+        let mut rng = Rng::new(31);
+        let cfg = BcrConfig::new(8, 4);
+        let mut mask = BcrMask::dense(m, k, cfg);
+        let all_cols: Vec<u32> = (0..(k / 4) as u32).collect();
+        for br in 2..8 {
+            for bc in 1..4 {
+                mask.prune_cols(br, bc, &all_cols);
+            }
+        }
+        let mut w = Tensor::rand_uniform(&[m, k], 1.0, &mut rng);
+        mask.apply(&mut w);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let packed_layout = pack_bcrc(
+            &enc,
+            GemmParams::default(),
+            64,
+            CacheParams::default(),
+            threads,
+            PackOverrides::default(),
+        );
+        let chunk = m.div_ceil(threads);
+        let mut even = vec![0usize; threads];
+        for (t, load) in even.iter_mut().enumerate() {
+            for r in (t * chunk).min(m)..((t + 1) * chunk).min(m) {
+                *load += enc.row_weights(r).len();
+            }
+        }
+        let even_ratio = *even.iter().max().unwrap() as f64
+            / (*even.iter().min().unwrap()).max(1) as f64;
+        let lpt_ratio = packed_layout.partition.imbalance();
+        rep.row(vec![
+            "thread imbalance".into(),
+            format!("skewed [{m}x{k}], {threads} threads"),
+            format!("even {even_ratio:.2}x"),
+            format!("lpt {lpt_ratio:.2}x"),
+            format!("{:.2}x better", even_ratio / lpt_ratio),
+        ]);
+        let mut o = Json::obj();
+        o.set("threads", Json::Num(threads as f64))
+            .set("even_split_max_min_ratio", Json::Num(round2(even_ratio)))
+            .set("lpt_max_min_ratio", Json::Num(round2(lpt_ratio)))
+            .set(
+                "lpt_nnz_per_thread",
+                Json::Arr(
+                    packed_layout.partition.loads.iter().map(|l| Json::Num(*l as f64)).collect(),
+                ),
+            );
+        o
+    };
+
     rep.meta.set("backend", Json::Str(mk.name.into()));
     rep.print();
     rep.save()?;
@@ -198,7 +323,9 @@ fn main() -> anyhow::Result<()> {
     doc.set("backend", Json::Str(mk.name.into()))
         .set("quick", Json::Bool(quick))
         .set("microkernels", Json::Arr(kernels))
-        .set("fusion", Json::Arr(fused_rows));
+        .set("fusion", Json::Arr(fused_rows))
+        .set("packing", Json::Arr(packing_rows))
+        .set("partition", partition_stats);
     std::fs::write("BENCH_kernels.json", doc.to_pretty())?;
     // sanity: the artifact must parse back
     json::parse(&std::fs::read_to_string("BENCH_kernels.json")?)?;

@@ -1,6 +1,8 @@
 #!/usr/bin/env sh
 # Kernel-benchmark runner: builds in release and emits BENCH_kernels.json
-# in the repo root. Pass --quick for a fast smoke pass.
+# in the repo root: scalar-vs-SIMD GFLOP/s, fused-vs-unfused latency,
+# packed-vs-unpacked BCRC GFLOP/s, and per-thread nnz-imbalance stats on
+# a skewed-sparsity fixture. Pass --quick for a fast smoke pass.
 set -eu
 cd "$(dirname "$0")/.."
 exec cargo bench --bench bench_kernels -- "$@"

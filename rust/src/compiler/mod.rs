@@ -7,14 +7,19 @@
 //! 3. **LRE + tiling** (§4.4) — select unroll factor and N-tile from the IR
 //!    (later overwritten by the auto-tuner).
 //! 4. **Fusion** — bias + activation epilogues folded into the GEMM step.
+//! 4½. **Packing** ([`packing`]) — weights repacked for the memory
+//!    hierarchy (cache-blocked 64 B-aligned layouts, u16 indices) with a
+//!    static nnz-balanced parallel partition.
 //!
 //! The plan is the "generated code" analog (DESIGN.md §6): a parameterized
 //! record the engine interprets with monomorphized micro-kernels.
 
 pub mod plan;
+pub mod packing;
 pub mod passes;
 pub mod weights;
 
+pub use packing::{PackOptions, PackingStats};
 pub use plan::{Activation, ExecutionPlan, KernelImpl, Step};
 pub use passes::{compile, CompileOptions};
 pub use weights::{LayerWeights, WeightStore};

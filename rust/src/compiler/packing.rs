@@ -1,0 +1,137 @@
+//! Compiler pass 4½: plan-time weight packing + static work
+//! partitioning.
+//!
+//! Runs after epilogue fusion and before memory planning, rewriting each
+//! GEMM-bearing step's [`KernelImpl`] in place:
+//!
+//! * **BCRC layers** get a [`crate::sparse::PackedBcrc`]: groups
+//!   reordered and concatenated into one 64 B-aligned buffer, values
+//!   interleaved in kc×mr cache blocks sized from the [`CacheParams`]
+//!   model, u16 delta column indices where ranges allow, and a static
+//!   nnz-balanced [`crate::sparse::WorkPartition`] (greedy LPT over
+//!   group nnz) the parallel executor consumes instead of an even row
+//!   split. The GEMM N used for shaping is known at compile time
+//!   (`gemm_n` for CONV; 1 for FC and the GRU gates).
+//! * **Tiled-dense layers** get the same panel treatment via
+//!   [`PackedDense`].
+//! * **CSR layers** get a contiguous nnz-balanced row partition
+//!   (RTMobile-style per-thread load balancing).
+//!
+//! Packing never changes arithmetic — packed plans are bit-identical to
+//! unpacked ones (enforced by `tests/packed_parity`). The pass is on by
+//! default and disabled by either `CompileOptions` (the engine switch)
+//! or the `GRIM_FORCE_UNPACKED=1` environment variable, both of which
+//! preserve the encode-order path exactly.
+
+use super::plan::{KernelImpl, Step};
+use crate::gemm::csr_gemm::csr_row_nnz;
+use crate::gemm::pack::{self, CacheParams, PackOverrides, PackedDense};
+use crate::sparse::packed::WorkPartition;
+use std::sync::Arc;
+
+/// Packing-pass options (part of `CompileOptions`).
+#[derive(Clone, Copy, Debug)]
+pub struct PackOptions {
+    /// Engine-level switch; `GRIM_FORCE_UNPACKED=1` also disables.
+    pub enabled: bool,
+    /// Static partition width in worker buckets (the paper runs 8
+    /// threads; a pool with fewer workers drains several buckets each).
+    pub threads: usize,
+    pub cache: CacheParams,
+    /// Tuner-gene overrides for the cache model (0 = derive).
+    pub overrides: PackOverrides,
+}
+
+impl Default for PackOptions {
+    fn default() -> Self {
+        PackOptions {
+            enabled: true,
+            threads: 8,
+            cache: CacheParams::default(),
+            overrides: PackOverrides::default(),
+        }
+    }
+}
+
+/// Is the encode-order layout forced process-wide via the environment?
+/// Read per compile (not cached) so CI legs can flip it between runs.
+pub fn force_unpacked() -> bool {
+    std::env::var_os("GRIM_FORCE_UNPACKED").is_some_and(|v| v != "0")
+}
+
+/// What the packing pass did to a plan (carried on `ExecutionPlan`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PackingStats {
+    pub enabled: bool,
+    pub bcrc_layers: usize,
+    pub dense_layers: usize,
+    pub csr_layers: usize,
+    /// BCRC layers whose column indices compressed to u16 deltas.
+    pub u16_layers: usize,
+    /// Total packed storage in bytes: value buffers (incl. alignment
+    /// padding) plus, for BCRC, the index and group-table bytes.
+    pub packed_bytes: usize,
+}
+
+/// Rewrite every GEMM kernel in `steps` with its packed form.
+pub fn pack_step_kernels(steps: &mut [(usize, Step)], opts: &PackOptions) -> PackingStats {
+    let mut stats =
+        PackingStats { enabled: opts.enabled && !force_unpacked(), ..Default::default() };
+    if !stats.enabled {
+        return stats;
+    }
+    for (_, step) in steps.iter_mut() {
+        match step {
+            Step::Conv { geom, kernel, .. } => {
+                let n = geom.gemm_n();
+                pack_kernel(kernel, n, opts, &mut stats);
+            }
+            Step::Fc { kernel, .. } => pack_kernel(kernel, 1, opts, &mut stats),
+            Step::Gru { layers } => {
+                for l in Arc::make_mut(layers).iter_mut() {
+                    pack_kernel(&mut l.wz, 1, opts, &mut stats);
+                    pack_kernel(&mut l.wr, 1, opts, &mut stats);
+                    pack_kernel(&mut l.wh, 1, opts, &mut stats);
+                }
+            }
+            _ => {}
+        }
+    }
+    stats
+}
+
+fn pack_kernel(k: &mut KernelImpl, n_hint: usize, opts: &PackOptions, stats: &mut PackingStats) {
+    match k {
+        KernelImpl::Bcrc { gemm } => {
+            let p = pack::pack_bcrc(
+                &gemm.enc,
+                gemm.params,
+                n_hint,
+                opts.cache,
+                opts.threads,
+                opts.overrides,
+            );
+            #[cfg(debug_assertions)]
+            p.validate_against(&gemm.enc).expect("packed layout must round-trip");
+            stats.bcrc_layers += 1;
+            if p.is_u16() {
+                stats.u16_layers += 1;
+            }
+            stats.packed_bytes += p.packed_bytes();
+            gemm.packed = Some(Arc::new(p));
+        }
+        KernelImpl::Dense { w, params, packed } => {
+            let pd = PackedDense::pack(w, *params);
+            stats.dense_layers += 1;
+            stats.packed_bytes += 4 * pd.values.len();
+            *packed = Some(Arc::new(pd));
+        }
+        KernelImpl::Csr { mat, part } => {
+            *part = Some(Arc::new(WorkPartition::contiguous(&csr_row_nnz(mat), opts.threads)));
+            stats.csr_layers += 1;
+        }
+        // NaiveDense stays deliberately naive (the TFLite analog);
+        // Winograd's plan-time preparation is its kernel transforms.
+        _ => {}
+    }
+}

@@ -34,17 +34,32 @@ pub struct CompileOptions {
     pub fuse: bool,
     /// Enable im2col dead-column skipping (GRIM only).
     pub im2col_skip: bool,
+    /// Plan-time weight packing + static work partitioning (pass 4½);
+    /// on by default, also disabled by `GRIM_FORCE_UNPACKED=1`.
+    pub pack: super::packing::PackOptions,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { backend: Backend::Grim, fuse: true, im2col_skip: true }
+        CompileOptions {
+            backend: Backend::Grim,
+            fuse: true,
+            im2col_skip: true,
+            pack: super::packing::PackOptions::default(),
+        }
     }
 }
 
 impl CompileOptions {
     pub fn for_backend(backend: Backend) -> Self {
         CompileOptions { backend, ..Default::default() }
+    }
+
+    /// The engine-level packing switch: compile with the encode-order
+    /// weight layout (pre-packing behavior) preserved exactly.
+    pub fn without_packing(mut self) -> Self {
+        self.pack.enabled = false;
+        self
     }
 }
 
@@ -153,6 +168,10 @@ pub fn compile(
         fuse_activations(graph, &mut steps);
     }
 
+    // Pass 4½: repack weights for the memory hierarchy and compute the
+    // static nnz-balanced parallel partitions (see super::packing).
+    let packing = super::packing::pack_step_kernels(&mut steps, &opts.pack);
+
     // Bypass fused-away (Noop) nodes: rewrite consumer edges to read the
     // producer directly so no tensor is cloned through the Noop at runtime.
     let mut redirect: Vec<usize> = (0..steps.len()).collect();
@@ -181,6 +200,7 @@ pub fn compile(
         input_id: graph.input()?,
         output_id: redirect[graph.output()?],
         memory: crate::memory::MemoryPlan::empty(),
+        packing,
     };
     // Pass 5: static activation-memory planning — liveness intervals over
     // the finished steps, then best-fit arena packing (see crate::memory).
@@ -220,12 +240,21 @@ fn build_kernel(
             if let Some(g) = geom {
                 if g.kh == 3 && g.kw == 3 && g.stride == 1 {
                     let w4 = lw.w.clone().reshape(&[g.out_c, g.in_c, 3, 3]);
-                    return Ok(KernelImpl::Winograd { w4: Arc::new(w4) });
+                    // Kernel transforms are weight-only: precompute once
+                    // here so the runtime never re-derives them.
+                    let ut = crate::conv::winograd::transform_kernels(&w4);
+                    return Ok(KernelImpl::Winograd { w4: Arc::new(w4), ut: Arc::new(ut) });
                 }
             }
-            Ok(KernelImpl::Dense { w: Arc::new(lw.w.clone()), params: TileParams::default() })
+            Ok(KernelImpl::Dense {
+                w: Arc::new(lw.w.clone()),
+                params: TileParams::default(),
+                packed: None,
+            })
         }
-        Backend::CsrSparse => Ok(KernelImpl::Csr { mat: Arc::new(Csr::from_dense(&lw.w)) }),
+        Backend::CsrSparse => {
+            Ok(KernelImpl::Csr { mat: Arc::new(Csr::from_dense(&lw.w)), part: None })
+        }
         Backend::Grim => {
             let default_ir;
             let ir = match ir {
@@ -259,11 +288,12 @@ fn build_kernel(
                     anyhow::bail!("layer '{name}': IR format=bcrc but no BCR mask present")
                 }
                 (StorageFormat::Csr, _) => {
-                    Ok(KernelImpl::Csr { mat: Arc::new(Csr::from_dense(&lw.w)) })
+                    Ok(KernelImpl::Csr { mat: Arc::new(Csr::from_dense(&lw.w)), part: None })
                 }
                 (StorageFormat::Dense, _) => Ok(KernelImpl::Dense {
                     w: Arc::new(lw.w.clone()),
                     params: TileParams::default(),
+                    packed: None,
                 }),
             }
         }

@@ -5,11 +5,14 @@
 //! storage format and micro-kernel parameters. This is the analog of the
 //! paper's generated C++ (DESIGN.md §6).
 
+use super::packing::PackingStats;
 use crate::conv::ConvGeom;
 use crate::gemm::bcrc_gemm::BcrcGemm;
+use crate::gemm::pack::PackedDense;
 use crate::gemm::tiled::TileParams;
 use crate::graph::NodeId;
 use crate::memory::MemoryPlan;
+use crate::sparse::packed::WorkPartition;
 use crate::sparse::Csr;
 use crate::tensor::Tensor;
 use std::sync::Arc;
@@ -39,14 +42,18 @@ pub enum KernelImpl {
     /// Unoptimized dense triple loop (TFLite analog).
     NaiveDense { w: Arc<Tensor> },
     /// Tiled + register-blocked dense (MNN/TVM analog, and GRIM's own
-    /// dense layers).
-    Dense { w: Arc<Tensor>, params: TileParams },
+    /// dense layers). `packed` carries the plan-time panel interleave
+    /// the tiled kernel streams when the packing pass ran.
+    Dense { w: Arc<Tensor>, params: TileParams, packed: Option<Arc<PackedDense>> },
     /// Winograd F(2,3) — dense 3×3 stride-1 CONVs only; holds the
-    /// original `[F,C,3,3]` weights.
-    Winograd { w4: Arc<Tensor> },
-    /// General sparse baseline.
-    Csr { mat: Arc<Csr> },
-    /// GRIM: BCRC + reorder + LRE.
+    /// original `[F,C,3,3]` weights plus the kernel transforms
+    /// `U = G g Gᵀ` precomputed at compile time (`[F*C*16]`).
+    Winograd { w4: Arc<Tensor>, ut: Arc<Vec<f32>> },
+    /// General sparse baseline. `part` is the compile-time nnz-balanced
+    /// row partition the parallel kernel consumes when packing ran.
+    Csr { mat: Arc<Csr>, part: Option<Arc<WorkPartition>> },
+    /// GRIM: BCRC + reorder + LRE (the packed layout, when present,
+    /// rides inside [`BcrcGemm`]).
     Bcrc { gemm: BcrcGemm },
 }
 
@@ -65,8 +72,8 @@ impl KernelImpl {
     pub fn storage_bytes(&self) -> usize {
         match self {
             KernelImpl::NaiveDense { w } | KernelImpl::Dense { w, .. } => 4 * w.numel(),
-            KernelImpl::Winograd { w4 } => 4 * w4.numel(),
-            KernelImpl::Csr { mat } => mat.total_bytes(),
+            KernelImpl::Winograd { w4, .. } => 4 * w4.numel(),
+            KernelImpl::Csr { mat, .. } => mat.total_bytes(),
             KernelImpl::Bcrc { gemm } => gemm.enc.total_bytes(),
         }
     }
@@ -79,7 +86,7 @@ impl KernelImpl {
                 Some(w.shape().as_matrix().0)
             }
             KernelImpl::Winograd { .. } => None,
-            KernelImpl::Csr { mat } => Some(mat.rows),
+            KernelImpl::Csr { mat, .. } => Some(mat.rows),
             KernelImpl::Bcrc { gemm } => Some(gemm.enc.rows),
         }
     }
@@ -153,6 +160,8 @@ pub struct ExecutionPlan {
     /// Static activation-memory plan: every intermediate and scratch
     /// buffer packed into one arena (see [`crate::memory`]).
     pub memory: MemoryPlan,
+    /// What the weight-packing pass did (see [`super::packing`]).
+    pub packing: PackingStats,
 }
 
 impl ExecutionPlan {
@@ -207,6 +216,17 @@ impl ExecutionPlan {
             self.memory.buffers.len(),
             self.memory.unplanned_bytes() / 1024
         );
+        if self.packing.enabled {
+            let _ = writeln!(
+                s,
+                "  packing: {} bcrc / {} dense / {} csr layers ({} KiB values, {} u16-indexed)",
+                self.packing.bcrc_layers,
+                self.packing.dense_layers,
+                self.packing.csr_layers,
+                self.packing.packed_bytes / 1024,
+                self.packing.u16_layers
+            );
+        }
         s
     }
 }

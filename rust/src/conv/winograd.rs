@@ -91,40 +91,54 @@ fn transform_output(m: &[f32; 16]) -> [f32; 4] {
     y
 }
 
-/// Winograd F(2×2,3×3) convolution, stride 1, arbitrary padding.
-/// `x[C,H,W] * w[F,C,3,3] -> [F,OH,OW]`.
-pub fn conv2d_winograd(x: &Tensor, w: &Tensor, pad: usize) -> Tensor {
-    let d = x.shape().dims();
-    let (c, h, wd) = (d[0], d[1], d[2]);
-    let (f, c2, kh, kw) = w.shape().as_nchw();
-    assert_eq!(c, c2);
+/// Pre-transform every 3×3 kernel of `w[F,C,3,3]`: `U = G g Gᵀ`,
+/// returned flattened as `[F*C*16]`. Weight-only, so the compiler runs
+/// this once at plan time and carries the result on the kernel.
+pub fn transform_kernels(w: &Tensor) -> Vec<f32> {
+    let (f, c, kh, kw) = w.shape().as_nchw();
     assert_eq!((kh, kw), (3, 3), "winograd F(2,3) requires 3x3 kernels");
+    let wdat = w.data();
+    let mut u = vec![0.0f32; f * c * 16];
+    for i in 0..f * c {
+        u[i * 16..(i + 1) * 16].copy_from_slice(&transform_kernel(&wdat[i * 9..i * 9 + 9]));
+    }
+    u
+}
+
+/// Arena variant of Winograd F(2×2,3×3): input/output are flat slices,
+/// kernel transforms come pre-computed from [`transform_kernels`], and
+/// `vbuf` (≥ `16*C` floats) holds the per-tile input transforms — a
+/// planned workspace slice on the serving path, so the kernel performs
+/// no heap allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_winograd_into(
+    xd: &[f32],
+    c: usize,
+    h: usize,
+    wd: usize,
+    u: &[f32],
+    f: usize,
+    pad: usize,
+    out: &mut [f32],
+    vbuf: &mut [f32],
+) {
+    assert_eq!(xd.len(), c * h * wd, "input length mismatch");
+    assert_eq!(u.len(), f * c * 16, "kernel transform length mismatch");
     let oh = h + 2 * pad - 2;
     let ow = wd + 2 * pad - 2;
+    assert_eq!(out.len(), f * oh * ow, "output length mismatch");
+    assert!(vbuf.len() >= 16 * c, "vbuf scratch too small");
     let tiles_i = oh.div_ceil(2);
     let tiles_j = ow.div_ceil(2);
-
-    // Pre-transform all kernels: U[f][c] 4x4.
-    let wdat = w.data();
-    let mut u = vec![[0.0f32; 16]; f * c];
-    for fo in 0..f {
-        for ci in 0..c {
-            u[fo * c + ci] = transform_kernel(&wdat[((fo * c + ci) * 9)..((fo * c + ci) * 9 + 9)]);
-        }
-    }
-
-    let xd = x.data();
-    let mut out = Tensor::zeros(&[f, oh, ow]);
-    let od = out.data_mut();
     let mut dtile = [0.0f32; 16];
-    // V for all channels of one tile — transformed ONCE per (tile, channel)
-    // and reused by every filter (this is where Winograd's 2.25x lives).
-    let mut vbuf = vec![[0.0f32; 16]; c];
     for ti in 0..tiles_i {
         for tj in 0..tiles_j {
             let i0 = (ti * 2) as isize - pad as isize;
             let j0 = (tj * 2) as isize - pad as isize;
-            for (ci, v) in vbuf.iter_mut().enumerate() {
+            // V for all channels of one tile — transformed ONCE per
+            // (tile, channel) and reused by every filter (this is where
+            // Winograd's 2.25x lives).
+            for ci in 0..c {
                 for a in 0..4 {
                     for b in 0..4 {
                         let ii = i0 + a as isize;
@@ -137,12 +151,13 @@ pub fn conv2d_winograd(x: &Tensor, w: &Tensor, pad: usize) -> Tensor {
                             };
                     }
                 }
-                *v = transform_input(&dtile);
+                vbuf[ci * 16..ci * 16 + 16].copy_from_slice(&transform_input(&dtile));
             }
             for fo in 0..f {
                 let mut macc = [0.0f32; 16];
-                for (ci, v) in vbuf.iter().enumerate() {
-                    let uk = &u[fo * c + ci];
+                for ci in 0..c {
+                    let uk = &u[(fo * c + ci) * 16..(fo * c + ci) * 16 + 16];
+                    let v = &vbuf[ci * 16..ci * 16 + 16];
                     for t in 0..16 {
                         macc[t] += uk[t] * v[t];
                     }
@@ -153,13 +168,29 @@ pub fn conv2d_winograd(x: &Tensor, w: &Tensor, pad: usize) -> Tensor {
                         let oi = ti * 2 + a;
                         let oj = tj * 2 + b;
                         if oi < oh && oj < ow {
-                            od[(fo * oh + oi) * ow + oj] = y[a * 2 + b];
+                            out[(fo * oh + oi) * ow + oj] = y[a * 2 + b];
                         }
                     }
                 }
             }
         }
     }
+}
+
+/// Winograd F(2×2,3×3) convolution, stride 1, arbitrary padding.
+/// `x[C,H,W] * w[F,C,3,3] -> [F,OH,OW]`. Allocating wrapper over
+/// [`conv2d_winograd_into`] (the reference/baseline path).
+pub fn conv2d_winograd(x: &Tensor, w: &Tensor, pad: usize) -> Tensor {
+    let d = x.shape().dims();
+    let (c, h, wd) = (d[0], d[1], d[2]);
+    let (f, c2, _, _) = w.shape().as_nchw();
+    assert_eq!(c, c2);
+    let u = transform_kernels(w);
+    let oh = h + 2 * pad - 2;
+    let ow = wd + 2 * pad - 2;
+    let mut out = Tensor::zeros(&[f, oh, ow]);
+    let mut vbuf = vec![0.0f32; 16 * c];
+    conv2d_winograd_into(x.data(), c, h, wd, &u, f, pad, out.data_mut(), &mut vbuf);
     out
 }
 

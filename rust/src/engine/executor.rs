@@ -9,8 +9,9 @@
 //!   and scratch live at offsets assigned by the compile-time
 //!   [`crate::memory::MemoryPlan`]; the run checks one arena out of the
 //!   engine's [`WorkspacePool`] and performs *no per-step heap
-//!   allocation* (the one exception, noted inline, is the Winograd
-//!   baseline used only by the OptDense backend).
+//!   allocation* (including the Winograd baseline, whose kernel
+//!   transforms are precomputed at compile time and whose per-tile
+//!   scratch is planned into the arena like im2col).
 //! * **naive** ([`Engine::run_naive`]) — the original interpreter holding
 //!   each intermediate as an owned [`Tensor`]. Kept as the correctness
 //!   reference the planned path is property-tested against.
@@ -19,11 +20,16 @@ use crate::compiler::plan::{Activation, ExecutionPlan, GruLayerPlan, KernelImpl,
 use crate::conv::direct::{depthwise_conv2d_into_ep, depthwise_conv2d_parallel_ep};
 use crate::conv::im2col::{im2col, im2col_into, im2col_skip, ConvGeom};
 use crate::conv::ops;
-use crate::conv::winograd::conv2d_winograd;
-use crate::gemm::csr_gemm::{csr_gemm_into_ep, csr_gemm_parallel_into_ep};
+use crate::conv::winograd::{conv2d_winograd, conv2d_winograd_into};
+use crate::gemm::csr_gemm::{
+    csr_gemm_into_ep, csr_gemm_parallel_into_ep, csr_gemm_partitioned_into_ep,
+};
 use crate::gemm::naive::naive_gemm_dense_into_ep;
 use crate::gemm::simd::{self, Microkernels};
-use crate::gemm::tiled::{tiled_gemm_into_ep, tiled_gemm_parallel_into_ep};
+use crate::gemm::tiled::{
+    tiled_gemm_into_ep, tiled_gemm_packed_into_ep, tiled_gemm_packed_parallel_into_ep,
+    tiled_gemm_parallel_into_ep,
+};
 use crate::gemm::Epilogue;
 use crate::memory::layout::{self, ConvScratch, GruScratch};
 use crate::memory::{Workspace, WorkspacePool};
@@ -236,20 +242,20 @@ impl Engine {
             Step::Conv { geom, kernel, dead_cols, bias, act } => {
                 let out_r = self.out_range(id)?;
                 let src = self.src_range(id, 0)?;
-                if let KernelImpl::Winograd { w4 } = kernel {
-                    // OptDense baseline only: Winograd keeps its internal
-                    // transform allocations and its unfused epilogue; the
-                    // GRIM serving path never selects it.
-                    let xt = match src {
-                        Some((off, len)) => Tensor::from_vec(
-                            &[geom.in_c, geom.in_h, geom.in_w],
-                            ws.slice(off, len).to_vec(),
-                        ),
-                        None => input.clone(),
-                    };
-                    let t = conv2d_winograd(&xt, w4, geom.pad);
-                    let out = ws.slice_mut(out_r.0, out_r.1);
-                    out.copy_from_slice(t.data());
+                if let KernelImpl::Winograd { ut, .. } = kernel {
+                    // OptDense baseline: kernel transforms precomputed at
+                    // compile time, per-tile input transforms in a
+                    // planned arena slice — no per-call allocation. The
+                    // epilogue stays two-pass (baseline parity).
+                    let scratch_r = mem
+                        .scratch_range(id)
+                        .ok_or_else(|| anyhow::anyhow!("node {id}: winograd missing scratch"))?;
+                    let (out, vbuf, xin) =
+                        self.gemm_operands(ws, out_r, Some(scratch_r), src, input);
+                    conv2d_winograd_into(
+                        xin, geom.in_c, geom.in_h, geom.in_w, ut, geom.out_c, geom.pad, out,
+                        vbuf,
+                    );
                     ops::add_bias_slice(out, bias);
                     apply_act_slice(out, *act);
                 } else {
@@ -454,7 +460,7 @@ impl Engine {
             Step::Noop => None,  // fused away; consumers were redirected
             Step::Conv { geom, kernel, dead_cols, bias, act } => {
                 let x = self.value(values, input, id, 0)?;
-                if let KernelImpl::Winograd { w4 } = kernel {
+                if let KernelImpl::Winograd { w4, .. } = kernel {
                     // Winograd stays unfused (baseline-only path).
                     let mut out = conv2d_winograd(x, w4, geom.pad);
                     ops::add_bias_(&mut out, bias);
@@ -580,18 +586,33 @@ impl Engine {
     ) -> anyhow::Result<()> {
         match kernel {
             KernelImpl::NaiveDense { w } => naive_gemm_dense_into_ep(w, xd, n, out, self.mk, ep),
-            KernelImpl::Dense { w, params } => {
+            KernelImpl::Dense { w, params, packed } => {
                 let (m, _) = w.shape().as_matrix();
-                if m * n >= PARALLEL_THRESHOLD {
-                    tiled_gemm_parallel_into_ep(w, xd, n, *params, &self.pool, out, self.mk, ep);
-                } else {
-                    tiled_gemm_into_ep(w, xd, n, *params, out, self.mk, ep);
+                let parallel = m * n >= PARALLEL_THRESHOLD;
+                match (packed, parallel) {
+                    (Some(pd), true) => tiled_gemm_packed_parallel_into_ep(
+                        pd, xd, n, *params, &self.pool, out, self.mk, ep,
+                    ),
+                    (Some(pd), false) => {
+                        tiled_gemm_packed_into_ep(pd, xd, n, *params, out, self.mk, ep)
+                    }
+                    (None, true) => tiled_gemm_parallel_into_ep(
+                        w, xd, n, *params, &self.pool, out, self.mk, ep,
+                    ),
+                    (None, false) => tiled_gemm_into_ep(w, xd, n, *params, out, self.mk, ep),
                 }
             }
             KernelImpl::Winograd { .. } => anyhow::bail!("winograd outside conv"),
-            KernelImpl::Csr { mat } => {
+            KernelImpl::Csr { mat, part } => {
                 if mat.rows * n >= PARALLEL_THRESHOLD {
-                    csr_gemm_parallel_into_ep(mat, xd, n, &self.pool, out, self.mk, ep);
+                    match part {
+                        // Compile-time nnz-balanced row partition beats
+                        // the even row split on skewed sparsity.
+                        Some(wp) => csr_gemm_partitioned_into_ep(
+                            mat, wp, xd, n, &self.pool, out, self.mk, ep,
+                        ),
+                        None => csr_gemm_parallel_into_ep(mat, xd, n, &self.pool, out, self.mk, ep),
+                    }
                 } else {
                     csr_gemm_into_ep(mat, xd, n, out, self.mk, ep);
                 }

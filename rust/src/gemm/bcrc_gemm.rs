@@ -24,6 +24,7 @@
 
 use super::epilogue::Epilogue;
 use super::simd::{self, Microkernels};
+use crate::sparse::packed::{ColsRef, PackedBcrc};
 use crate::sparse::Bcrc;
 use crate::tensor::Tensor;
 use crate::util::sharedbuf::{SharedOut, SharedSlice};
@@ -51,16 +52,28 @@ impl Default for GemmParams {
     }
 }
 
-/// A BCRC matrix bound to execution parameters.
+/// A BCRC matrix bound to execution parameters, optionally carrying the
+/// compiler's plan-time [`PackedBcrc`] layout. When `packed` is present
+/// it is the default execution path (bit-identical to the encode-order
+/// path); `GRIM_FORCE_UNPACKED=1` / `CompileOptions` keep it `None`.
 #[derive(Clone, Debug)]
 pub struct BcrcGemm {
     pub enc: Arc<Bcrc>,
     pub params: GemmParams,
+    pub packed: Option<Arc<PackedBcrc>>,
 }
 
 impl BcrcGemm {
     pub fn new(enc: Bcrc, params: GemmParams) -> Self {
-        BcrcGemm { enc: Arc::new(enc), params }
+        BcrcGemm { enc: Arc::new(enc), params, packed: None }
+    }
+
+    /// Attach a plan-time packed layout (the compiler's packing pass).
+    pub fn with_packed(mut self, packed: Arc<PackedBcrc>) -> Self {
+        debug_assert_eq!(packed.rows, self.enc.rows);
+        debug_assert_eq!(packed.cols, self.enc.cols);
+        self.packed = Some(packed);
+        self
     }
 
     /// Resolve the vtable this layer actually runs: the engine's table
@@ -109,6 +122,45 @@ impl BcrcGemm {
         assert_eq!(out.len(), self.enc.rows * n, "output length mismatch");
         let mk = self.resolve(mk);
         out.fill(0.0);
+        if let Some(p) = self.packed.as_ref() {
+            if n == 1 && p.row_major {
+                for gi in 0..p.groups.len() {
+                    let g = p.groups[gi];
+                    self.packed_span_gemv(
+                        p,
+                        gi,
+                        g.rows_lo as usize,
+                        g.rows_hi as usize,
+                        xd,
+                        out,
+                        gather,
+                        mk,
+                        ep,
+                    );
+                }
+                return;
+            }
+            if n > 1 {
+                // Serial traversal in mc-row cache chunks; the packed
+                // value buffer is streamed linearly per chunk sweep.
+                let oview = SharedOut::new(out);
+                let mc = p.shape.mc.max(p.shape.mr.max(1));
+                for gi in 0..p.groups.len() {
+                    let g = p.groups[gi];
+                    let (glo, ghi) = (g.rows_lo as usize, g.rows_hi as usize);
+                    let mut lo = glo;
+                    while lo < ghi {
+                        let hi = (lo + mc).min(ghi);
+                        self.packed_span_rows(p, gi, lo, hi, xd, oview, n, mk, ep);
+                        lo = hi;
+                    }
+                }
+                return;
+            }
+            // n == 1 without a row-major packing (a conv layer probed at
+            // N=1): the interleaved layout cannot serve contiguous rows,
+            // so fall through to the encode-order gemv.
+        }
         if n == 1 {
             self.exec_gemv(xd, out, 0, self.enc.rows, gather, mk, ep);
         } else {
@@ -152,6 +204,67 @@ impl BcrcGemm {
         assert_eq!(out.len(), rows * n, "output length mismatch");
         let mk = self.resolve(mk);
         out.fill(0.0);
+        // Packed path: workers drain the compiler's static nnz-balanced
+        // bucket lists instead of an even row split, so sparsity-skewed
+        // layers no longer leave threads idle.
+        let packed_ok = self.packed.as_ref().is_some_and(|p| n > 1 || p.row_major);
+        if packed_ok {
+            let p = Arc::clone(self.packed.as_ref().expect("checked above"));
+            let nb = p.partition.num_buckets();
+            let this = self.clone();
+            let oview = SharedOut::new(out);
+            let xv = SharedSlice::new(xd);
+            let (bias, act) = ep.parts();
+            let bias_view = bias.map(SharedSlice::new);
+            pool.run_partitioned_scratch(nb, move |scratch, _wid, blo, bhi| {
+                // SAFETY: buffers outlive the blocking pool call; buckets
+                // partition the reordered rows (validated at pack time),
+                // and reorder is a bijection, so written original rows
+                // never collide across workers.
+                let xd = unsafe { xv.get() };
+                let ep =
+                    Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
+                if n == 1 {
+                    let glen = if this.params.lre { p.max_width } else { 0 };
+                    if scratch.len() < glen {
+                        scratch.resize(glen, 0.0);
+                    }
+                    let od = unsafe { oview.range_mut(0, oview.len()) };
+                    for b in blo..bhi {
+                        for s in &p.partition.buckets[b] {
+                            this.packed_span_gemv(
+                                &p,
+                                s.group as usize,
+                                s.lo as usize,
+                                s.hi as usize,
+                                xd,
+                                od,
+                                &mut scratch[..glen],
+                                mk,
+                                ep,
+                            );
+                        }
+                    }
+                } else {
+                    for b in blo..bhi {
+                        for s in &p.partition.buckets[b] {
+                            this.packed_span_rows(
+                                &p,
+                                s.group as usize,
+                                s.lo as usize,
+                                s.hi as usize,
+                                xd,
+                                oview,
+                                n,
+                                mk,
+                                ep,
+                            );
+                        }
+                    }
+                }
+            });
+            return;
+        }
         let oview = SharedOut::new(out);
         let this = self.clone();
         let xv = SharedSlice::new(xd);
@@ -176,6 +289,206 @@ impl BcrcGemm {
                 this.exec_rows(xd, oview, n, lo, hi, mk, ep);
             }
         });
+    }
+
+    // ---------------------------------------------------------------
+    // Packed-layout execution (plan-time `PackedBcrc`)
+    // ---------------------------------------------------------------
+
+    /// Compute reordered rows `lo..hi` of packed group `gi` (an
+    /// `mr`-aligned span) for `n > 1`: per n-tile, per kc column block,
+    /// stream the group's interleaved value panels front-to-back. The
+    /// per-row accumulation order (ascending signature columns) is
+    /// identical to the encode-order path, so results are bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn packed_span_rows(
+        &self,
+        p: &PackedBcrc,
+        gi: usize,
+        lo: usize,
+        hi: usize,
+        xd: &[f32],
+        oview: SharedOut<f32>,
+        n: usize,
+        mk: &'static Microkernels,
+        ep: Epilogue<'_>,
+    ) {
+        let g = p.groups[gi];
+        let glo = g.rows_lo as usize;
+        let rows_g = g.rows();
+        let width = g.width as usize;
+        let cols = p.group_cols(gi);
+        let vd = p.values.as_slice();
+        let mr = p.shape.mr.max(1);
+        let kc = p.shape.kc.max(1);
+        let u = self.params.unroll.max(1);
+        let nt = self.params.n_tile.max(1);
+        let s_lo = lo - glo;
+        let s_hi = hi - glo;
+        debug_assert_eq!(s_lo % mr, 0, "span start must be panel-aligned");
+        for jc in (0..n).step_by(nt) {
+            let je = (jc + nt).min(n);
+            let mut kb_lo = 0usize;
+            while kb_lo < width {
+                let kb_hi = (kb_lo + kc).min(width);
+                let kl = kb_hi - kb_lo;
+                let kb_base = g.val_off + kb_lo * rows_g;
+                let mut ro = s_lo;
+                while ro < s_hi {
+                    let h = mr.min(rows_g - ro);
+                    let pb = kb_base + ro * kl;
+                    self.packed_panel(
+                        p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, h, glo + ro, u, mk,
+                    );
+                    ro += h;
+                }
+                kb_lo = kb_hi;
+            }
+            // Every (row, n-tile) pair finishes all its column blocks
+            // before this point — the single fusion site for the span.
+            if !ep.is_none() {
+                for r in lo..hi {
+                    let dst = p.reorder[r] as usize;
+                    // SAFETY: this worker owns reordered rows lo..hi.
+                    let tile = unsafe { oview.range_mut(dst * n + jc, dst * n + je) };
+                    ep.apply_row(mk, dst, tile);
+                }
+            }
+        }
+    }
+
+    /// One interleaved value panel (`h` rows × `kl` columns): issue the
+    /// largest unroll bundles the panel height and unroll gene allow.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn packed_panel(
+        &self,
+        p: &PackedBcrc,
+        vd: &[f32],
+        cols: ColsRef<'_>,
+        xd: &[f32],
+        oview: SharedOut<f32>,
+        n: usize,
+        jc: usize,
+        je: usize,
+        kb_lo: usize,
+        kl: usize,
+        pb: usize,
+        h: usize,
+        r0: usize,
+        u: usize,
+        mk: &'static Microkernels,
+    ) {
+        let mut u0 = 0usize;
+        while u0 + 8 <= h && u >= 8 {
+            self.packed_bundle::<8>(
+                p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, h, r0 + u0, u0, mk.axpy_8,
+            );
+            u0 += 8;
+        }
+        while u0 + 4 <= h && u >= 4 {
+            self.packed_bundle::<4>(
+                p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, h, r0 + u0, u0, mk.axpy_4,
+            );
+            u0 += 4;
+        }
+        while u0 + 2 <= h && u >= 2 {
+            self.packed_bundle::<2>(
+                p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, h, r0 + u0, u0, mk.axpy_2,
+            );
+            u0 += 2;
+        }
+        while u0 < h {
+            let dst = p.reorder[r0 + u0] as usize;
+            // SAFETY: this worker owns reordered row r0 + u0 exclusively.
+            let orow = unsafe { oview.range_mut(dst * n + jc, dst * n + je) };
+            for kk in 0..kl {
+                let c = cols.at(kb_lo + kk);
+                let xrow = &xd[c * n + jc..c * n + je];
+                (mk.axpy_1)(orow, vd[pb + kk * h + u0], xrow);
+            }
+            u0 += 1;
+        }
+    }
+
+    /// U-row bundle over an interleaved panel: the U weights of one
+    /// column are one contiguous slice of the packed value stream.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn packed_bundle<const U: usize>(
+        &self,
+        p: &PackedBcrc,
+        vd: &[f32],
+        cols: ColsRef<'_>,
+        xd: &[f32],
+        oview: SharedOut<f32>,
+        n: usize,
+        jc: usize,
+        je: usize,
+        kb_lo: usize,
+        kl: usize,
+        pb: usize,
+        h: usize,
+        r_first: usize,
+        u0: usize,
+        kern: fn(&mut [&mut [f32]; U], &[f32; U], &[f32]),
+    ) {
+        let dsts: [usize; U] = std::array::from_fn(|i| p.reorder[r_first + i] as usize);
+        // SAFETY: reorder is a bijection and r_first..r_first+U are
+        // distinct reordered rows owned by this worker, so the U
+        // destination slices never alias.
+        let mut rows: [&mut [f32]; U] = std::array::from_fn(|i| unsafe {
+            oview.range_mut(dsts[i] * n + jc, dsts[i] * n + je)
+        });
+        for kk in 0..kl {
+            let c = cols.at(kb_lo + kk);
+            let xrow = &xd[c * n + jc..c * n + je];
+            let base = pb + kk * h + u0;
+            let wv: [f32; U] = std::array::from_fn(|i| vd[base + i]);
+            kern(&mut rows, &wv, xrow);
+        }
+    }
+
+    /// GEMV over a packed span (row-major packing): gather the group's
+    /// signature once, then contiguous-row dot products — the same
+    /// arithmetic as the encode-order gemv on the same bits.
+    #[allow(clippy::too_many_arguments)]
+    fn packed_span_gemv(
+        &self,
+        p: &PackedBcrc,
+        gi: usize,
+        lo: usize,
+        hi: usize,
+        xd: &[f32],
+        out: &mut [f32],
+        gather: &mut [f32],
+        mk: &'static Microkernels,
+        ep: Epilogue<'_>,
+    ) {
+        let g = p.groups[gi];
+        let glo = g.rows_lo as usize;
+        let width = g.width as usize;
+        let cols = p.group_cols(gi);
+        if self.params.lre {
+            let xg = &mut gather[..width];
+            for (i, slot) in xg.iter_mut().enumerate() {
+                *slot = xd[cols.at(i)];
+            }
+            for r in lo..hi {
+                let dst = p.reorder[r] as usize;
+                out[dst] = ep.apply_one(dst, (mk.dot)(p.row_values(gi, r - glo), xg));
+            }
+        } else {
+            for r in lo..hi {
+                let wrow = p.row_values(gi, r - glo);
+                let mut s = 0.0;
+                for (kk, wv) in wrow.iter().enumerate() {
+                    s += *wv * xd[cols.at(kk)];
+                }
+                let dst = p.reorder[r] as usize;
+                out[dst] = ep.apply_one(dst, s);
+            }
+        }
     }
 
     /// Compute reordered rows `lo..hi`, writing each row directly to its
@@ -500,5 +813,75 @@ mod tests {
         let x = Tensor::from_vec(&[8, 2], vec![1.0; 16]);
         let out = BcrcGemm::new(enc, GemmParams::default()).execute(&x);
         assert!(out.data().iter().all(|v| *v == 0.0));
+    }
+
+    fn packed_for(enc: &Bcrc, params: GemmParams, n_hint: usize, threads: usize) -> BcrcGemm {
+        use crate::gemm::pack::{pack_bcrc, CacheParams, PackOverrides};
+        let p = pack_bcrc(enc, params, n_hint, CacheParams::default(), threads, PackOverrides::default());
+        p.validate_against(enc).unwrap();
+        BcrcGemm::new(enc.clone(), params).with_packed(Arc::new(p))
+    }
+
+    /// The packed layout must be *bit-identical* to the encode-order
+    /// path, serial and parallel, GEMM and GEMV, LRE on and off.
+    #[test]
+    fn packed_bit_identical_to_unpacked() {
+        for (seed, m, k, n) in [(61u64, 48, 96, 24), (62, 64, 64, 7), (63, 64, 128, 1), (64, 32, 48, 1)] {
+            let (_, enc) = setup(seed, m, k, 5.0);
+            for lre in [true, false] {
+                let params = GemmParams { lre, ..Default::default() };
+                let plain = BcrcGemm::new(enc.clone(), params);
+                let packed = packed_for(&enc, params, n, 3);
+                let mut rng = Rng::new(seed + 9000);
+                let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
+                let bias: Vec<f32> = (0..m).map(|i| 0.02 * i as f32 - 0.3).collect();
+                let mut gather = vec![0.0f32; enc.max_group_cols()];
+                let mut a = vec![0.0f32; m * n];
+                let mut b = vec![0.0f32; m * n];
+                plain.execute_into_ep(x.data(), n, &mut a, &mut gather, simd::active(),
+                    Epilogue::BiasRelu(&bias));
+                packed.execute_into_ep(x.data(), n, &mut b, &mut gather, simd::active(),
+                    Epilogue::BiasRelu(&bias));
+                assert_eq!(a, b, "serial m={m} k={k} n={n} lre={lre}");
+
+                let pool = ThreadPool::new(3);
+                let mut c = vec![0.0f32; m * n];
+                packed.execute_parallel_into_ep(x.data(), n, &mut c, &pool, simd::active(),
+                    Epilogue::BiasRelu(&bias));
+                assert_eq!(a, c, "parallel m={m} k={k} n={n} lre={lre}");
+            }
+        }
+    }
+
+    /// Packed parallel must agree for pool sizes above, equal to, and
+    /// below the partition's bucket count.
+    #[test]
+    fn packed_parallel_any_pool_size() {
+        let (_, enc) = setup(71, 96, 96, 6.0);
+        let params = GemmParams::default();
+        let packed = packed_for(&enc, params, 16, 4);
+        let mut rng = Rng::new(72);
+        let x = Tensor::rand_uniform(&[96, 16], 1.0, &mut rng);
+        let serial = packed.execute(&x);
+        for threads in [1usize, 2, 4, 7] {
+            let pool = ThreadPool::new(threads);
+            let par = packed.execute_parallel(&x, &pool);
+            assert_eq!(serial.data(), par.data(), "threads={threads}");
+        }
+    }
+
+    /// A non-row-major packing probed at N=1 must fall back to the
+    /// encode-order gemv and still be exact.
+    #[test]
+    fn packed_interleaved_gemv_falls_back() {
+        let (w, enc) = setup(81, 32, 64, 4.0);
+        let params = GemmParams::default();
+        let packed = packed_for(&enc, params, 49, 2); // packs for n=49
+        assert!(!packed.packed.as_ref().unwrap().row_major);
+        let mut rng = Rng::new(82);
+        let x = Tensor::rand_uniform(&[64, 1], 1.0, &mut rng);
+        let expect = naive_gemm(&w, &x);
+        let got = packed.execute(&x);
+        assert!(got.allclose(&expect, 1e-4, 1e-4));
     }
 }

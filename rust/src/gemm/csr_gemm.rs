@@ -5,10 +5,12 @@
 
 use super::epilogue::Epilogue;
 use super::simd::{self, Microkernels};
+use crate::sparse::packed::WorkPartition;
 use crate::sparse::Csr;
 use crate::tensor::Tensor;
 use crate::util::sharedbuf::{SharedOut, SharedSlice};
 use crate::util::ThreadPool;
+use std::sync::Arc;
 
 /// `out[M,N] = csr(W) · X[K,N]`, single-threaded.
 pub fn csr_gemm(w: &Csr, x: &Tensor) -> Tensor {
@@ -127,6 +129,68 @@ pub fn csr_gemm_parallel_into_ep(
     });
 }
 
+/// Parallel CSR GEMM over a compile-time nnz-balanced
+/// [`WorkPartition`] (contiguous row ranges weighted by row nnz) instead
+/// of the even row split — the RTMobile-style per-thread load balancing.
+/// Per-row arithmetic is identical to [`csr_gemm_into_ep`], so the
+/// result is bit-identical to the serial kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn csr_gemm_partitioned_into_ep(
+    w: &Arc<Csr>,
+    part: &Arc<WorkPartition>,
+    xd: &[f32],
+    n: usize,
+    pool: &ThreadPool,
+    out: &mut [f32],
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
+) {
+    assert_eq!(xd.len(), w.cols * n, "input length mismatch");
+    assert_eq!(out.len(), w.rows * n, "output length mismatch");
+    out.fill(0.0);
+    let oview = SharedOut::new(out);
+    let xv = SharedSlice::new(xd);
+    let (bias, act) = ep.parts();
+    let bias_view = bias.map(SharedSlice::new);
+    let w = Arc::clone(w);
+    let part = Arc::clone(part);
+    let nb = part.num_buckets();
+    pool.run_partitioned(nb, move |_wid, blo, bhi| {
+        // SAFETY: buffers outlive the blocking pool call; bucket row
+        // ranges are disjoint across workers (validated at plan time).
+        let xd = unsafe { xv.get() };
+        let ep = Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
+        for b in blo..bhi {
+            for s in &part.buckets[b] {
+                for r in s.lo as usize..s.hi as usize {
+                    let lo = w.row_ptr[r] as usize;
+                    let hi = w.row_ptr[r + 1] as usize;
+                    let orow = unsafe { oview.range_mut(r * n, (r + 1) * n) };
+                    if n == 1 {
+                        // gemv: see csr_gemm_into_ep.
+                        let mut acc = 0.0f32;
+                        for idx in lo..hi {
+                            acc += w.values[idx] * xd[w.col_idx[idx] as usize];
+                        }
+                        orow[0] = acc;
+                    } else {
+                        for idx in lo..hi {
+                            let c = w.col_idx[idx] as usize;
+                            (mk.axpy_1)(orow, w.values[idx], &xd[c * n..(c + 1) * n]);
+                        }
+                    }
+                    ep.apply_row(mk, r, orow);
+                }
+            }
+        }
+    });
+}
+
+/// Per-row nnz weights for [`WorkPartition::contiguous`].
+pub fn csr_row_nnz(w: &Csr) -> Vec<usize> {
+    w.row_ptr.windows(2).map(|p| (p[1] - p[0]) as usize).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,5 +236,25 @@ mod tests {
         let got = csr_gemm(&Csr::from_dense(&w), &x);
         let expect = naive_gemm(&w, &x);
         assert!(got.allclose(&expect, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn partitioned_bit_identical_to_serial() {
+        let mut rng = Rng::new(13);
+        let w = sparse_w(4, 64, 64);
+        let csr = Arc::new(Csr::from_dense(&w));
+        let part = Arc::new(WorkPartition::contiguous(&csr_row_nnz(&csr), 4));
+        let pool = ThreadPool::new(3);
+        for n in [1usize, 9] {
+            let x = Tensor::rand_uniform(&[64, n], 1.0, &mut rng);
+            let bias: Vec<f32> = (0..64).map(|i| 0.01 * i as f32 - 0.2).collect();
+            let mut serial = vec![0.0f32; 64 * n];
+            csr_gemm_into_ep(&csr, x.data(), n, &mut serial, simd::active(),
+                Epilogue::BiasRelu(&bias));
+            let mut par = vec![0.0f32; 64 * n];
+            csr_gemm_partitioned_into_ep(&csr, &part, x.data(), n, &pool, &mut par,
+                simd::active(), Epilogue::BiasRelu(&bias));
+            assert_eq!(serial, par, "n={n}");
+        }
     }
 }

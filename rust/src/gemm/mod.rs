@@ -32,6 +32,19 @@
 //!   `simd` gene, so `(unroll, n_tile)` is tuned against whichever
 //!   backend actually wins on the layer).
 //!
+//! # Plan-time weight packing
+//!
+//! The compiler's packing pass (see [`pack`] and
+//! `crate::compiler::packing`) rewrites each kernel's weights for the
+//! memory hierarchy: BCRC groups are concatenated into one
+//! 64 B-aligned buffer with values interleaved in kc×mr cache blocks
+//! ([`crate::sparse::PackedBcrc`]), dense tiled weights get the same
+//! panel interleave ([`pack::PackedDense`]), and parallel execution
+//! consumes a static nnz-balanced [`crate::sparse::WorkPartition`]
+//! instead of an even row split. Packed execution is bit-identical to
+//! the encode-order kernels; `GRIM_FORCE_UNPACKED=1` (or
+//! `CompileOptions::without_packing`) preserves the old path.
+//!
 //! # Epilogue fusion
 //!
 //! Each `*_into` kernel takes an [`Epilogue`]: the bias/ReLU that used to
@@ -48,12 +61,14 @@ pub mod microkernel;
 pub mod csr_gemm;
 pub mod bcrc_gemm;
 pub mod loadcount;
+pub mod pack;
 pub mod simd;
 pub mod epilogue;
 
 pub use bcrc_gemm::BcrcGemm;
 pub use csr_gemm::csr_gemm;
 pub use epilogue::Epilogue;
+pub use pack::{CacheParams, PackOverrides, PackedDense};
 pub use naive::naive_gemm;
 pub use simd::{Act, Microkernels};
 pub use tiled::{tiled_gemm, tiled_gemm_parallel, TileParams};

@@ -1,0 +1,302 @@
+//! Plan-time weight packing policy: the [`CacheParams`] model that sizes
+//! cache blocks, the per-layer shape resolver for [`PackedBcrc`], and the
+//! [`PackedDense`] panel layout the tiled kernel streams.
+//!
+//! # Block layout
+//!
+//! Both packed forms use the same two-level blocking (the pire/BLIS
+//! `pack_a` idiom, adapted to BCRC groups):
+//!
+//! ```text
+//! one group (rows 0..6, width 5), mr = 4, kc = 2 — value buffer order:
+//!
+//!   64B-aligned group base
+//!   │
+//!   ▼  kb0 = cols {c0,c1}            kb1 = {c2,c3}        kb2 = {c4}
+//!   ┌───────────────────────────────┬────────────────────┬───────────┐
+//!   │ panel rows 0..4   panel 4..6  │ panel 0..4  p 4..6 │  ...      │
+//!   │ c0: w0 w1 w2 w3   c0: w4 w5   │                    │           │
+//!   │ c1: w0 w1 w2 w3   c1: w4 w5   │                    │           │
+//!   └───────────────────────────────┴────────────────────┴───────────┘
+//!        ▲ one column's mr weights are adjacent → the axpy_u bundle
+//!          loads its weight vector as one contiguous slice and the
+//!          whole buffer is traversed strictly front-to-back per
+//!          (n-tile, kb) sweep — zero per-group pointer chasing.
+//! ```
+//!
+//! * `kc` bounds the distinct input rows touched per sweep so the
+//!   gathered X panel (`kc × n_tile` floats) stays L1-resident;
+//! * `mc` bounds the output rows revisited per kb block so the C tile
+//!   (`mc × n_tile` floats) stays L2-resident;
+//! * `mr` is the register-panel height and equals the kernel's unroll
+//!   bundle (1 for GEMV layers, whose `dot` wants contiguous rows).
+//!
+//! Packing is a pure layout transform: per output element the operation
+//! sequence is unchanged, so packed execution is bit-identical to the
+//! encode-order path (property-tested in `tests/packed_parity`).
+
+use crate::gemm::bcrc_gemm::GemmParams;
+use crate::gemm::tiled::TileParams;
+use crate::memory::aligned::AlignedBuf;
+use crate::sparse::packed::{PackShape, PackedBcrc};
+use crate::sparse::Bcrc;
+use crate::tensor::Tensor;
+
+/// The cache model blocks are sized from. Defaults approximate a big
+/// mobile core (Kryo/Cortex-A7x: 32–64 KiB L1D, 512 KiB L2); override
+/// per-target, or per-layer via the tuner's `pack_kc`/`pack_mc` genes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheParams {
+    pub l1_bytes: usize,
+    pub l2_bytes: usize,
+}
+
+impl Default for CacheParams {
+    fn default() -> Self {
+        CacheParams { l1_bytes: 32 * 1024, l2_bytes: 512 * 1024 }
+    }
+}
+
+impl CacheParams {
+    /// K-block width: the streamed X panel (`kc × n_tile` f32) targets
+    /// half of L1.
+    pub fn kc(&self, n_tile: usize) -> usize {
+        (self.l1_bytes / 2 / (4 * n_tile.max(1))).clamp(16, 4096)
+    }
+
+    /// M-block height: the revisited C tile (`mc × n_tile` f32) targets
+    /// half of L2; rounded up to whole `mr` panels.
+    pub fn mc(&self, n_tile: usize, mr: usize) -> usize {
+        let mr = mr.max(1);
+        let raw = (self.l2_bytes / 2 / (4 * n_tile.max(1))).clamp(mr, 1 << 16);
+        raw.div_ceil(mr) * mr
+    }
+}
+
+/// Tuner-gene overrides for the cache model (0 = derive from
+/// [`CacheParams`]). See `SearchSpace::with_pack_axis`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PackOverrides {
+    pub kc: usize,
+    pub mc: usize,
+}
+
+/// Largest unroll bundle the BCRC kernels issue for a given unroll gene.
+fn bundle_height(unroll: usize) -> usize {
+    match unroll {
+        8.. => 8,
+        4..=7 => 4,
+        2..=3 => 2,
+        _ => 1,
+    }
+}
+
+/// Resolve the packed shape for one BCRC layer. `n_hint` is the layer's
+/// compile-time GEMM N (`gemm_n` for CONV, 1 for FC/GRU gates): GEMV
+/// layers pack row-major (`mr = 1`, one column block) so the dot kernel
+/// reads contiguous rows.
+pub fn bcrc_pack_shape(
+    enc: &Bcrc,
+    params: GemmParams,
+    n_hint: usize,
+    cache: CacheParams,
+    threads: usize,
+    ov: PackOverrides,
+) -> PackShape {
+    let gemv = n_hint <= 1;
+    let mr = if gemv || !params.lre { 1 } else { bundle_height(params.unroll) };
+    let nt = params.n_tile.max(1).min(n_hint.max(1));
+    let kc = if gemv {
+        enc.cols.max(1)
+    } else if ov.kc > 0 {
+        ov.kc
+    } else {
+        cache.kc(nt)
+    };
+    let mc = if ov.mc > 0 { ov.mc.div_ceil(mr) * mr } else { cache.mc(nt, mr) };
+    PackShape { mr, kc, mc, threads: threads.max(1) }
+}
+
+/// Pack one BCRC matrix under the cache model (the compiler pass entry).
+pub fn pack_bcrc(
+    enc: &Bcrc,
+    params: GemmParams,
+    n_hint: usize,
+    cache: CacheParams,
+    threads: usize,
+    ov: PackOverrides,
+) -> PackedBcrc {
+    PackedBcrc::pack(enc, bcrc_pack_shape(enc, params, n_hint, cache, threads, ov))
+}
+
+/// Plan-time packed dense weights for the tiled kernel: the same
+/// kb-major / mr-panel interleave as [`PackedBcrc`], over the full dense
+/// matrix (every column alive). 64 B-aligned base; panels match the
+/// tiled kernel's register blocks, so its inner loop streams the buffer
+/// linearly instead of striding `w[(i+u)*k + p]` loads.
+#[derive(Clone, Debug)]
+pub struct PackedDense {
+    pub m: usize,
+    pub k: usize,
+    /// Panel height (tiled register blocks top out at 4 rows).
+    pub mr: usize,
+    /// Column block width (the TileParams `kc` at pack time).
+    pub kc: usize,
+    pub values: AlignedBuf,
+}
+
+impl PackedDense {
+    pub fn pack(w: &Tensor, p: TileParams) -> PackedDense {
+        let (m, k) = w.shape().as_matrix();
+        let mr = match p.mr {
+            4.. => 4,
+            2..=3 => 2,
+            _ => 1,
+        };
+        let kc = p.kc.max(1);
+        let mut values = AlignedBuf::zeroed(m * k);
+        let wd = w.data();
+        let vd = values.as_mut_slice();
+        let mut kb_lo = 0usize;
+        while kb_lo < k {
+            let kb_hi = (kb_lo + kc).min(k);
+            let kl = kb_hi - kb_lo;
+            let kb_base = kb_lo * m;
+            let mut ro = 0usize;
+            while ro < m {
+                let h = mr.min(m - ro);
+                let pb = kb_base + ro * kl;
+                for kk in 0..kl {
+                    for u in 0..h {
+                        vd[pb + kk * h + u] = wd[(ro + u) * k + kb_lo + kk];
+                    }
+                }
+                ro += h;
+            }
+            kb_lo = kb_hi;
+        }
+        PackedDense { m, k, mr, kc, values }
+    }
+
+    pub fn num_panels(&self) -> usize {
+        self.m.div_ceil(self.mr.max(1))
+    }
+
+    /// Absolute row range of panel `p`.
+    pub fn panel_rows(&self, p: usize) -> (usize, usize) {
+        let mr = self.mr.max(1);
+        (p * mr, ((p + 1) * mr).min(self.m))
+    }
+
+    /// Decode back to row-major (test helper).
+    pub fn decode(&self) -> Vec<f32> {
+        let (m, k) = (self.m, self.k);
+        let vd = self.values.as_slice();
+        let mut out = vec![0.0f32; m * k];
+        let mut kb_lo = 0usize;
+        while kb_lo < k {
+            let kb_hi = (kb_lo + self.kc).min(k);
+            let kl = kb_hi - kb_lo;
+            let kb_base = kb_lo * m;
+            let mut ro = 0usize;
+            while ro < m {
+                let h = self.mr.min(m - ro);
+                let pb = kb_base + ro * kl;
+                for kk in 0..kl {
+                    for u in 0..h {
+                        out[(ro + u) * k + kb_lo + kk] = vd[pb + kk * h + u];
+                    }
+                }
+                ro += h;
+            }
+            kb_lo = kb_hi;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn cache_model_monotone_and_bounded() {
+        let c = CacheParams::default();
+        assert!(c.kc(1) >= c.kc(64));
+        assert!(c.kc(1_000_000) >= 16);
+        assert!(c.kc(1) <= 4096);
+        for mr in [1usize, 2, 4, 8] {
+            assert_eq!(c.mc(64, mr) % mr, 0, "mc must be whole panels (mr={mr})");
+            assert!(c.mc(64, mr) >= mr);
+        }
+    }
+
+    #[test]
+    fn gemv_layers_pack_row_major() {
+        let mut rng = Rng::new(3);
+        let mask = crate::sparse::BcrMask::random(
+            16,
+            32,
+            crate::sparse::BcrConfig::new(4, 2),
+            2.0,
+            &mut rng,
+        );
+        let mut w = Tensor::rand_uniform(&[16, 32], 1.0, &mut rng);
+        mask.apply(&mut w);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let p = pack_bcrc(
+            &enc,
+            GemmParams::default(),
+            1,
+            CacheParams::default(),
+            4,
+            PackOverrides::default(),
+        );
+        assert!(p.row_major);
+        assert_eq!(p.shape.mr, 1);
+        p.validate_against(&enc).unwrap();
+    }
+
+    #[test]
+    fn conv_layers_pack_interleaved_with_overrides() {
+        let mut rng = Rng::new(4);
+        let mask = crate::sparse::BcrMask::random(
+            32,
+            64,
+            crate::sparse::BcrConfig::new(4, 4),
+            3.0,
+            &mut rng,
+        );
+        let mut w = Tensor::rand_uniform(&[32, 64], 1.0, &mut rng);
+        mask.apply(&mut w);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let p = pack_bcrc(
+            &enc,
+            GemmParams::default(),
+            196,
+            CacheParams::default(),
+            4,
+            PackOverrides { kc: 8, mc: 30 },
+        );
+        assert_eq!(p.shape.mr, 4);
+        assert_eq!(p.shape.kc, 8);
+        assert_eq!(p.shape.mc % 4, 0, "override mc rounds to whole panels");
+        p.validate_against(&enc).unwrap();
+    }
+
+    #[test]
+    fn packed_dense_round_trips() {
+        let mut rng = Rng::new(5);
+        for (m, k, p) in [
+            (17, 31, TileParams::default()),
+            (8, 8, TileParams { mr: 2, kc: 3, nc: 4 }),
+            (5, 64, TileParams { mr: 1, kc: 16, nc: 8 }),
+        ] {
+            let w = Tensor::rand_uniform(&[m, k], 1.0, &mut rng);
+            let pd = PackedDense::pack(&w, p);
+            assert_eq!(pd.values.as_slice().as_ptr() as usize % 64, 0);
+            assert_eq!(pd.decode(), w.data(), "m={m} k={k} {p:?}");
+        }
+    }
+}

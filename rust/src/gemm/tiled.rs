@@ -5,10 +5,12 @@
 //! output-row tile right after its K accumulation completes.
 
 use super::epilogue::Epilogue;
+use super::pack::PackedDense;
 use super::simd::{self, Microkernels};
 use crate::tensor::Tensor;
 use crate::util::sharedbuf::{SharedOut, SharedSlice};
 use crate::util::ThreadPool;
+use std::sync::Arc;
 
 /// Tiling parameters (tuner genes for the dense path).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -109,6 +111,176 @@ pub fn tiled_gemm_parallel_into_ep(
         let ep = Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
         tiled_rows(wd, xd, orows, lo, hi, k, n, p, mk, ep);
     });
+}
+
+/// Packed-A serial tiled GEMM: identical arithmetic to
+/// [`tiled_gemm_into_ep`] (bit-identical output), but the weight panels
+/// are streamed linearly from the plan-time [`PackedDense`] interleave
+/// instead of strided `w[(i+u)*k + p]` loads.
+pub fn tiled_gemm_packed_into_ep(
+    pd: &PackedDense,
+    xd: &[f32],
+    n: usize,
+    p: TileParams,
+    out: &mut [f32],
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
+) {
+    assert_eq!(xd.len(), pd.k * n, "input length mismatch");
+    assert_eq!(out.len(), pd.m * n, "output length mismatch");
+    out.fill(0.0);
+    let oview = SharedOut::new(out);
+    packed_panels(pd, xd, oview, n, p, 0, pd.num_panels(), mk, ep);
+}
+
+/// Parallel packed-A tiled GEMM: workers take contiguous *panel* ranges
+/// (so partition boundaries never cut an interleaved register panel).
+#[allow(clippy::too_many_arguments)]
+pub fn tiled_gemm_packed_parallel_into_ep(
+    pd: &Arc<PackedDense>,
+    xd: &[f32],
+    n: usize,
+    p: TileParams,
+    pool: &ThreadPool,
+    out: &mut [f32],
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
+) {
+    assert_eq!(xd.len(), pd.k * n, "input length mismatch");
+    assert_eq!(out.len(), pd.m * n, "output length mismatch");
+    out.fill(0.0);
+    let oview = SharedOut::new(out);
+    let xv = SharedSlice::new(xd);
+    let (bias, act) = ep.parts();
+    let bias_view = bias.map(SharedSlice::new);
+    let np = pd.num_panels();
+    let pd = Arc::clone(pd);
+    pool.run_partitioned(np, move |_wid, plo, phi| {
+        // SAFETY: buffers outlive the blocking pool call; panel (and so
+        // row) ranges are disjoint across workers.
+        let xd = unsafe { xv.get() };
+        let ep = Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
+        packed_panels(&pd, xd, oview, n, p, plo, phi, mk, ep);
+    });
+}
+
+/// Compute panels `plo..phi` of the packed product. Per-element
+/// accumulation order (jc → ascending kb → ascending k) matches
+/// [`tiled_rows`], so packed and unpacked outputs are bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn packed_panels(
+    pd: &PackedDense,
+    xd: &[f32],
+    oview: SharedOut<f32>,
+    n: usize,
+    p: TileParams,
+    plo: usize,
+    phi: usize,
+    mk: &'static Microkernels,
+    ep: Epilogue<'_>,
+) {
+    if plo >= phi {
+        return;
+    }
+    let (m, k) = (pd.m, pd.k);
+    let nc = p.nc.max(1);
+    let kc = pd.kc.max(1);
+    let vd = pd.values.as_slice();
+    let rlo = pd.panel_rows(plo).0;
+    let rhi = pd.panel_rows(phi - 1).1;
+    for jc in (0..n).step_by(nc) {
+        let je = (jc + nc).min(n);
+        let mut kb_lo = 0usize;
+        while kb_lo < k {
+            let kb_hi = (kb_lo + kc).min(k);
+            let kl = kb_hi - kb_lo;
+            let kb_base = kb_lo * m;
+            for pi in plo..phi {
+                let (r0, r1) = pd.panel_rows(pi);
+                let h = r1 - r0;
+                let pb = kb_base + r0 * kl;
+                packed_dense_panel(vd, xd, oview, n, jc, je, kb_lo, kl, pb, h, r0, pd.mr, mk);
+            }
+            kb_lo = kb_hi;
+        }
+        if !ep.is_none() {
+            // All K blocks done: this column tile of every row is final.
+            for r in rlo..rhi {
+                // SAFETY: this worker owns rows rlo..rhi exclusively.
+                let tile = unsafe { oview.range_mut(r * n + jc, r * n + je) };
+                ep.apply_row(mk, r, tile);
+            }
+        }
+    }
+}
+
+/// One packed dense panel: largest register bundles first, remainder
+/// rows via single-row axpy — mirroring [`tiled_rows`]' block schedule.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn packed_dense_panel(
+    vd: &[f32],
+    xd: &[f32],
+    oview: SharedOut<f32>,
+    n: usize,
+    jc: usize,
+    je: usize,
+    kb_lo: usize,
+    kl: usize,
+    pb: usize,
+    h: usize,
+    r0: usize,
+    mr: usize,
+    mk: &'static Microkernels,
+) {
+    let mut u0 = 0usize;
+    while u0 + 4 <= h && mr >= 4 {
+        packed_dense_bundle::<4>(vd, xd, oview, n, jc, je, kb_lo, kl, pb, h, r0 + u0, u0, mk.axpy_4);
+        u0 += 4;
+    }
+    while u0 + 2 <= h && mr >= 2 {
+        packed_dense_bundle::<2>(vd, xd, oview, n, jc, je, kb_lo, kl, pb, h, r0 + u0, u0, mk.axpy_2);
+        u0 += 2;
+    }
+    while u0 < h {
+        // SAFETY: row r0 + u0 belongs to this worker's panel range.
+        let row = unsafe { oview.range_mut((r0 + u0) * n + jc, (r0 + u0) * n + je) };
+        for kk in 0..kl {
+            let xrow = &xd[(kb_lo + kk) * n + jc..(kb_lo + kk) * n + je];
+            (mk.axpy_1)(row, vd[pb + kk * h + u0], xrow);
+        }
+        u0 += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn packed_dense_bundle<const U: usize>(
+    vd: &[f32],
+    xd: &[f32],
+    oview: SharedOut<f32>,
+    n: usize,
+    jc: usize,
+    je: usize,
+    kb_lo: usize,
+    kl: usize,
+    pb: usize,
+    h: usize,
+    r_first: usize,
+    u0: usize,
+    kern: fn(&mut [&mut [f32]; U], &[f32; U], &[f32]),
+) {
+    // SAFETY: rows r_first..r_first+U are distinct rows of this worker's
+    // panel range, so the slices never alias.
+    let mut rows: [&mut [f32]; U] = std::array::from_fn(|i| unsafe {
+        oview.range_mut((r_first + i) * n + jc, (r_first + i) * n + je)
+    });
+    for kk in 0..kl {
+        let xrow = &xd[(kb_lo + kk) * n + jc..(kb_lo + kk) * n + je];
+        let base = pb + kk * h + u0;
+        let wv: [f32; U] = std::array::from_fn(|i| vd[base + i]);
+        kern(&mut rows, &wv, xrow);
+    }
 }
 
 /// Compute rows `lo..hi` of the product into `out` (`out` holds rows
@@ -262,5 +434,35 @@ mod tests {
         tiled_gemm_parallel_into_ep(&w, x.data(), n, p, &pool, &mut par, simd::active(),
             Epilogue::BiasRelu(&bias));
         assert_eq!(fused, par);
+    }
+
+    /// Packed-A execution must be bit-identical to the unpacked tiled
+    /// kernel, serial and parallel, across remainder-heavy shapes.
+    #[test]
+    fn packed_dense_bit_identical() {
+        let mut rng = Rng::new(10);
+        for (m, k, n, p) in [
+            (19usize, 37usize, 23usize, TileParams { mr: 4, kc: 16, nc: 8 }),
+            (7, 9, 1, TileParams { mr: 2, kc: 4, nc: 16 }),
+            (33, 65, 12, TileParams::default()),
+        ] {
+            let w = Tensor::rand_uniform(&[m, k], 0.6, &mut rng);
+            let x = Tensor::rand_uniform(&[k, n], 0.6, &mut rng);
+            let bias: Vec<f32> = (0..m).map(|i| 0.03 * i as f32 - 0.2).collect();
+            let pd = Arc::new(PackedDense::pack(&w, p));
+            let ep = Epilogue::BiasRelu(&bias);
+
+            let mut plain = vec![0.0f32; m * n];
+            tiled_gemm_into_ep(&w, x.data(), n, p, &mut plain, simd::active(), ep);
+            let mut packed = vec![0.0f32; m * n];
+            tiled_gemm_packed_into_ep(&pd, x.data(), n, p, &mut packed, simd::active(), ep);
+            assert_eq!(plain, packed, "serial m={m} k={k} n={n}");
+
+            let pool = ThreadPool::new(3);
+            let mut par = vec![0.0f32; m * n];
+            tiled_gemm_packed_parallel_into_ep(&pd, x.data(), n, p, &pool, &mut par,
+                simd::active(), ep);
+            assert_eq!(plain, par, "parallel m={m} k={k} n={n}");
+        }
     }
 }

@@ -1,0 +1,91 @@
+//! Cache-line-aligned weight buffers.
+//!
+//! Packed weight layouts (see `crate::sparse::packed` and
+//! `crate::gemm::pack`) want their value streams to start on a 64-byte
+//! boundary so every kernel row begins cache-aligned and vector loads
+//! never straddle a line at the buffer head. A plain `Vec<f32>` only
+//! guarantees 4-byte alignment; [`AlignedBuf`] allocates in 64-byte
+//! [`Line`] units and exposes the storage as an `&[f32]` slice.
+//!
+//! This is the weight-side analog of the activation arena: the buffer is
+//! sized and filled once at plan time and never reallocated while
+//! serving.
+
+/// One 64-byte cache line of f32s — the allocation grain.
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct Line([f32; 16]);
+
+/// A heap f32 buffer whose base address is 64-byte aligned.
+#[derive(Clone)]
+pub struct AlignedBuf {
+    lines: Vec<Line>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    /// Allocate `len` zeroed f32 elements (rounded up internally to whole
+    /// cache lines).
+    pub fn zeroed(len: usize) -> Self {
+        AlignedBuf { lines: vec![Line([0.0; 16]); len.div_ceil(16)], len }
+    }
+
+    /// Number of f32 elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: `Line` is `repr(C)` over `[f32; 16]`, so the line array
+        // is a contiguous, properly-aligned run of at least `len` f32s.
+        unsafe { std::slice::from_raw_parts(self.lines.as_ptr().cast::<f32>(), self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as in `as_slice`; `&mut self` gives unique access.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr().cast::<f32>(), self.len) }
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBuf({} f32)", self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_is_64_byte_aligned() {
+        for len in [1usize, 15, 16, 17, 1000] {
+            let b = AlignedBuf::zeroed(len);
+            assert_eq!(b.as_slice().as_ptr() as usize % 64, 0, "len {len}");
+            assert_eq!(b.len(), len);
+            assert!(b.as_slice().iter().all(|v| *v == 0.0));
+        }
+    }
+
+    #[test]
+    fn write_read_round_trip() {
+        let mut b = AlignedBuf::zeroed(40);
+        for (i, v) in b.as_mut_slice().iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        assert_eq!(b.as_slice()[39], 39.0);
+        let c = b.clone();
+        assert_eq!(c.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn empty_buffer_ok() {
+        let b = AlignedBuf::zeroed(0);
+        assert!(b.is_empty());
+        assert_eq!(b.as_slice().len(), 0);
+    }
+}

@@ -26,7 +26,8 @@ pub fn conv_is_identity_im2col(geom: &ConvGeom) -> bool {
     geom.kh == 1 && geom.kw == 1 && geom.stride == 1 && geom.pad == 0
 }
 
-/// Scratch layout of one Conv step: `[im2col columns][gemv gather]`.
+/// Scratch layout of one Conv step: `[im2col columns][gemv gather]`, or
+/// `[winograd input transforms]` for the Winograd baseline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ConvScratch {
     /// im2col column buffer (`gemm_k * gemm_n`); 0 when the conv runs
@@ -34,23 +35,28 @@ pub struct ConvScratch {
     pub im2col: usize,
     /// BCRC gemv gather buffer; nonzero only when `gemm_n == 1`.
     pub gather: usize,
+    /// Winograd per-tile input-transform buffer (`16 * in_c`); nonzero
+    /// only for the Winograd kernel, whose transforms are planned into
+    /// the arena like im2col instead of allocated per call.
+    pub wino: usize,
 }
 
 impl ConvScratch {
     pub fn for_step(geom: &ConvGeom, kernel: &KernelImpl) -> ConvScratch {
-        let im2col = if matches!(kernel, KernelImpl::Winograd { .. })
-            || conv_is_identity_im2col(geom)
-        {
+        if matches!(kernel, KernelImpl::Winograd { .. }) {
+            return ConvScratch { im2col: 0, gather: 0, wino: 16 * geom.in_c };
+        }
+        let im2col = if conv_is_identity_im2col(geom) {
             0
         } else {
             geom.gemm_k() * geom.gemm_n()
         };
         let gather = if geom.gemm_n() == 1 { kernel_gather_len(kernel) } else { 0 };
-        ConvScratch { im2col, gather }
+        ConvScratch { im2col, gather, wino: 0 }
     }
 
     pub fn total(&self) -> usize {
-        self.im2col + self.gather
+        self.im2col + self.gather + self.wino
     }
 }
 
@@ -134,5 +140,17 @@ mod tests {
         assert_eq!(s.im2col, 27 * 64);
         assert_eq!(s.gather, 0);
         assert_eq!(s.total(), 27 * 64);
+    }
+
+    #[test]
+    fn winograd_scratch_planned() {
+        let g = ConvGeom { in_c: 3, in_h: 8, in_w: 8, out_c: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let w4 = std::sync::Arc::new(crate::tensor::Tensor::zeros(&[4, 3, 3, 3]));
+        let ut = std::sync::Arc::new(crate::conv::winograd::transform_kernels(&w4));
+        let k = KernelImpl::Winograd { w4, ut };
+        let s = ConvScratch::for_step(&g, &k);
+        assert_eq!(s.im2col, 0);
+        assert_eq!(s.wino, 16 * 3);
+        assert_eq!(s.total(), 16 * 3);
     }
 }

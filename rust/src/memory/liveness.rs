@@ -68,29 +68,20 @@ fn is_view_step(step: &Step) -> bool {
 /// `shapes` are the per-node output shapes from graph inference.
 ///
 /// View steps (`Flatten` and future reshape-likes) get **in-place
-/// elision**: when the producer's value has this view as its only
-/// consumer, the view's `value_of` entry aliases the producer's buffer
-/// instead of allocating a new one, and the executor skips the copy. The
-/// aliased buffer's lifetime then extends through the view's readers via
-/// the normal last-use pass.
+/// elision**: the view's `value_of` entry aliases the producer's buffer
+/// instead of allocating a new one, and the executor skips the copy.
+/// This holds for *any* fan-out of the producer — a view's bytes are
+/// identical to its producer's, no step ever writes through its inputs,
+/// and the aliased buffer's lifetime extends through both the
+/// producer's and the view's readers via the normal last-use pass — so
+/// multi-consumer values (e.g. a ResNet branch point feeding both a
+/// Flatten and a residual Add) alias too.
 pub fn analyze(plan: &ExecutionPlan, shapes: &[Shape]) -> anyhow::Result<Liveness> {
     let n = plan.steps.len();
     anyhow::ensure!(shapes.len() == n, "shape count {} != step count {n}", shapes.len());
     let mut buffers: Vec<PlannedBuffer> = Vec::new();
     let mut value_of: Vec<Option<usize>> = vec![None; n];
     let mut scratch_of: Vec<Option<usize>> = vec![None; n];
-
-    // Runtime consumer counts (Noop steps never read at run time; their
-    // one-time readers were redirected past them at compile time).
-    let mut consumers = vec![0usize; n];
-    for (id, step) in &plan.steps {
-        if matches!(step, Step::Noop | Step::Input) {
-            continue;
-        }
-        for &src in &plan.inputs[*id] {
-            consumers[src] += 1;
-        }
-    }
 
     for (id, step) in &plan.steps {
         let id = *id;
@@ -100,11 +91,11 @@ pub fn analyze(plan: &ExecutionPlan, shapes: &[Shape]) -> anyhow::Result<Livenes
         if !matches!(step, Step::Input) {
             let len = shapes[id].numel();
             anyhow::ensure!(len > 0, "node {id}: zero-sized value");
-            // In-place elision for pure-view steps.
+            // In-place elision for pure-view steps (any fan-out).
             if is_view_step(step) {
                 let src = plan.inputs[id][0];
                 if let Some(b) = value_of[src] {
-                    if consumers[src] == 1 && buffers[b].len == len {
+                    if buffers[b].len == len {
                         value_of[id] = Some(b);
                         continue;
                     }

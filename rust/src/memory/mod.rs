@@ -24,19 +24,25 @@
 //!    is a [`planner::MemoryPlan`] carried on the `ExecutionPlan`.
 //! 3. **Workspace arenas** ([`workspace`]) — at serve time, each
 //!    in-flight request checks one pre-sized arena out of a
-//!    [`workspace::WorkspacePool`] (mutex-guarded free list; arenas are
-//!    created lazily up to the peak concurrency and reused forever
-//!    after). The executor writes every kernel's output directly into its
-//!    planned slice.
+//!    [`workspace::WorkspacePool`] (lock-free Treiber-stack free list;
+//!    arenas are created lazily up to the peak concurrency and reused
+//!    forever after). The executor writes every kernel's output directly
+//!    into its planned slice.
+//!
+//! Weight-side memory is handled at plan time: packed weight layouts
+//! live in 64-byte-aligned [`aligned::AlignedBuf`] buffers filled once
+//! by the compiler's packing pass (see `crate::compiler::packing`).
 //!
 //! Scratch layout rules shared by the planner and the executor live in
 //! [`layout`] so the two can never drift apart.
 
+pub mod aligned;
 pub mod layout;
 pub mod liveness;
 pub mod planner;
 pub mod workspace;
 
+pub use aligned::AlignedBuf;
 pub use liveness::{BufferKind, PlannedBuffer};
 pub use planner::{plan_memory, MemoryPlan};
 pub use workspace::{PoolStats, PooledWorkspace, Workspace, WorkspacePool};

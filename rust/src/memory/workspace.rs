@@ -10,12 +10,21 @@
 //! A [`WorkspacePool`] owns the reusable arenas for one engine: each
 //! in-flight request checks one out (creating lazily on first use, so the
 //! pool grows to peak concurrency and then allocates never again) and the
-//! RAII [`PooledWorkspace`] guard returns it on drop. Checkout and
-//! creation counts are exposed so tests and the serving stats can prove
-//! the zero-alloc property.
+//! RAII [`PooledWorkspace`] guard returns it on drop.
+//!
+//! The free list is a **lock-free Treiber stack**: checkout and return
+//! are single CAS operations on a tagged head word, so under many
+//! scheduler threads the request path takes no lock at all (previously a
+//! `Mutex<Vec<_>>` — the last lock on the request path). Nodes live in a
+//! fixed slot array ([`MAX_POOLED`] entries, a few KiB) allocated with
+//! the pool; the `Workspace` arenas themselves are still created lazily.
+//! The head word packs a 32-bit ABA tag with a 32-bit slot index, so a
+//! stale compare-exchange can never splice a re-pushed node's outdated
+//! `next` link into the stack. Checkout and creation counts are exposed
+//! so tests and the serving stats can prove the zero-alloc property.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 
 /// One request-scoped arena.
 pub struct Workspace {
@@ -111,19 +120,50 @@ pub struct PoolStats {
     pub checkouts: u64,
 }
 
-/// Reusable arena pool for one engine.
+/// Pooled-slot capacity. Beyond this many *concurrent* in-flight
+/// requests per engine, extra arenas are created untracked and dropped
+/// on return (correct, just not reused) — far above any realistic
+/// per-engine concurrency.
+const MAX_POOLED: usize = 256;
+
+/// One Treiber-stack node. `ws` is owned by whoever holds the slot
+/// exclusively: the thread that popped it, or the stack itself while the
+/// slot is linked (then nobody reads it until a successful pop).
+struct Slot {
+    /// Next slot in the free stack, as `index + 1` (0 = end of list).
+    next: AtomicU32,
+    ws: UnsafeCell<Option<Workspace>>,
+}
+
+/// Reusable arena pool for one engine with a lock-free free list.
 pub struct WorkspacePool {
     arena_len: usize,
-    free: Mutex<Vec<Workspace>>,
+    /// `(aba_tag << 32) | (slot_index + 1)`; low half 0 = empty stack.
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+    /// Slots handed out so far (monotone; may pass `MAX_POOLED`).
+    slots_used: AtomicUsize,
     created: AtomicUsize,
     checkouts: AtomicU64,
 }
 
+// SAFETY: `Slot::ws` is only touched by a thread holding the slot
+// exclusively — the popper that just won the head CAS, or the returner
+// that owns the slot until its push CAS publishes it (with Release
+// ordering, paired with the pop's Acquire).
+unsafe impl Sync for WorkspacePool {}
+
 impl WorkspacePool {
     pub fn new(arena_len: usize) -> Self {
+        let slots = (0..MAX_POOLED)
+            .map(|_| Slot { next: AtomicU32::new(0), ws: UnsafeCell::new(None) })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
         WorkspacePool {
             arena_len,
-            free: Mutex::new(Vec::new()),
+            head: AtomicU64::new(0),
+            slots,
+            slots_used: AtomicUsize::new(0),
             created: AtomicUsize::new(0),
             checkouts: AtomicU64::new(0),
         }
@@ -133,18 +173,63 @@ impl WorkspacePool {
         self.arena_len
     }
 
-    /// Check an arena out; creates one only when the free list is empty.
+    /// Check an arena out; creates one only when the free stack is empty.
+    /// Lock-free: the hot path is one tagged CAS.
     pub fn checkout(&self) -> PooledWorkspace<'_> {
         self.checkouts.fetch_add(1, Ordering::Relaxed);
-        let existing = self.free.lock().unwrap().pop();
-        let ws = match existing {
-            Some(ws) => ws,
-            None => {
-                self.created.fetch_add(1, Ordering::Relaxed);
-                Workspace::new(self.arena_len)
+        if let Some((idx, ws)) = self.pop_slot() {
+            return PooledWorkspace { ws: Some(ws), slot: Some(idx), pool: self };
+        }
+        self.created.fetch_add(1, Ordering::Relaxed);
+        let slot_no = self.slots_used.fetch_add(1, Ordering::Relaxed);
+        let slot = if slot_no < self.slots.len() { Some(slot_no as u32) } else { None };
+        PooledWorkspace { ws: Some(Workspace::new(self.arena_len)), slot, pool: self }
+    }
+
+    fn pop_slot(&self) -> Option<(u32, Workspace)> {
+        loop {
+            let h = self.head.load(Ordering::Acquire);
+            let idx1 = (h & 0xffff_ffff) as u32;
+            if idx1 == 0 {
+                return None;
             }
-        };
-        PooledWorkspace { ws: Some(ws), pool: self }
+            let idx = (idx1 - 1) as usize;
+            let next = self.slots[idx].next.load(Ordering::Relaxed);
+            let tag = (h >> 32).wrapping_add(1);
+            let nh = (tag << 32) | next as u64;
+            if self
+                .head
+                .compare_exchange_weak(h, nh, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                // SAFETY: winning the CAS transfers exclusive ownership
+                // of the slot (and its workspace) to this thread.
+                let ws = unsafe { (*self.slots[idx].ws.get()).take() };
+                return Some((idx as u32, ws.expect("linked slot holds a workspace")));
+            }
+        }
+    }
+
+    fn push_slot(&self, idx: u32, ws: Workspace) {
+        let slot = &self.slots[idx as usize];
+        // SAFETY: this thread owns the slot exclusively until the CAS
+        // below publishes it back onto the stack.
+        unsafe {
+            *slot.ws.get() = Some(ws);
+        }
+        loop {
+            let h = self.head.load(Ordering::Relaxed);
+            slot.next.store((h & 0xffff_ffff) as u32, Ordering::Relaxed);
+            let tag = (h >> 32).wrapping_add(1);
+            let nh = (tag << 32) | (idx as u64 + 1);
+            if self
+                .head
+                .compare_exchange_weak(h, nh, Ordering::Release, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+        }
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -159,6 +244,9 @@ impl WorkspacePool {
 /// RAII checkout guard; returns the arena to the pool on drop.
 pub struct PooledWorkspace<'a> {
     ws: Option<Workspace>,
+    /// Pool slot this arena returns to; `None` for overflow arenas
+    /// beyond [`MAX_POOLED`] concurrent checkouts (dropped on return).
+    slot: Option<u32>,
     pool: &'a WorkspacePool,
 }
 
@@ -179,7 +267,10 @@ impl std::ops::DerefMut for PooledWorkspace<'_> {
 impl Drop for PooledWorkspace<'_> {
     fn drop(&mut self) {
         if let Some(ws) = self.ws.take() {
-            self.pool.free.lock().unwrap().push(ws);
+            match self.slot {
+                Some(idx) => self.pool.push_slot(idx, ws),
+                None => drop(ws),
+            }
         }
     }
 }
@@ -254,5 +345,45 @@ mod tests {
         let s = pool.stats();
         assert_eq!(s.arenas_created, 2);
         assert_eq!(s.checkouts, 3);
+    }
+
+    /// The lock-free stack must neither lose nor duplicate arenas under
+    /// concurrent checkout/return churn.
+    #[test]
+    fn concurrent_checkout_stress() {
+        let pool = WorkspacePool::new(32);
+        let threads = 8usize;
+        let iters = 200u64;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    for _ in 0..iters {
+                        let mut ws = pool.checkout();
+                        let sl = ws.slice_mut(0, 32);
+                        sl.fill(1.0);
+                        assert_eq!(sl[31], 1.0);
+                    }
+                });
+            }
+        });
+        let st = pool.stats();
+        assert_eq!(st.checkouts, threads as u64 * iters);
+        assert!(
+            st.arenas_created <= threads,
+            "created {} arenas for {} threads",
+            st.arenas_created,
+            threads
+        );
+        // After the churn every arena must be back on the stack exactly
+        // once: draining yields `arenas_created` pops then empty.
+        let mut guards = Vec::new();
+        for _ in 0..st.arenas_created {
+            let g = pool.checkout();
+            assert!(g.slot.is_some());
+            guards.push(g);
+        }
+        let fresh = pool.checkout();
+        assert_eq!(pool.stats().arenas_created, st.arenas_created + 1, "stack must be empty");
+        drop(fresh);
     }
 }

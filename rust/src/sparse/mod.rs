@@ -14,12 +14,14 @@
 
 pub mod mask;
 pub mod bcrc;
+pub mod packed;
 pub mod csr;
 pub mod reorder;
 pub mod pattern;
 pub mod two_four;
 
 pub use bcrc::Bcrc;
+pub use packed::{PackedBcrc, WorkPartition};
 pub use csr::Csr;
 pub use mask::{BcrConfig, BcrMask};
 pub use reorder::ReorderPlan;

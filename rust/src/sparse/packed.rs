@@ -1,0 +1,626 @@
+//! Plan-time packed BCRC layout + nnz-balanced work partition.
+//!
+//! [`super::Bcrc`] stores weights in *encode order*: groups appear in the
+//! order the reorder pass emitted them, each row's weights are row-major,
+//! and the whole structure lives in whatever allocation `encode`
+//! produced. The kernels in `crate::gemm::bcrc_gemm` therefore chase one
+//! pointer per group and gather strided `row_weights` slices per unroll
+//! bundle — fine for correctness, but it leaves cache behavior to luck
+//! and (with the executor's even row split) leaves threads idle on
+//! sparsity-skewed layers.
+//!
+//! [`PackedBcrc`] is the compiler's answer (PatDNN-style compact
+//! reordering + RTMobile-style load balancing):
+//!
+//! * **groups reordered** by descending nnz and **concatenated** into one
+//!   contiguous, 64-byte-aligned value buffer
+//!   ([`crate::memory::AlignedBuf`]); every group's block starts on a
+//!   cache line;
+//! * **values interleaved in kc×mr panels** (see [`PackShape`] and the
+//!   layout diagram in `crate::gemm::pack`): within a group, the column
+//!   range is split into `kc`-wide cache blocks and rows into `mr`-high
+//!   register panels; inside a panel the `mr` weights of one column are
+//!   adjacent, so the unroll-bundle kernels stream the buffer linearly
+//!   with zero per-group pointer chasing;
+//! * **column indices delta-compressed to u16** where every group's
+//!   signature span allows it ([`ColIndex::U16`]: one u32 base per group
+//!   plus u16 offsets), halving index traffic; matrices with a wider
+//!   span keep raw u32 indices;
+//! * a **static [`WorkPartition`]**: per-bucket lists of `(group, row
+//!   span)` work items balanced by nnz (greedy LPT over group nnz, large
+//!   groups split at `mr`-aligned row boundaries), which the parallel
+//!   executor consumes instead of an even row split.
+//!
+//! Packing never changes arithmetic: every output row is produced by the
+//! same per-element operation sequence as the encode-order path, so
+//! packed results are bit-identical (enforced by `tests/packed_parity`).
+
+use super::Bcrc;
+use crate::memory::aligned::AlignedBuf;
+
+/// Resolved packing geometry for one matrix (policy lives in
+/// `crate::gemm::pack`; this is the mechanical description).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackShape {
+    /// Row-panel height (register block). 1 ⇒ row-major values (the GEMV
+    /// layers, whose dot kernel needs contiguous rows).
+    pub mr: usize,
+    /// Column cache-block width in signature elements.
+    pub kc: usize,
+    /// Row cache-block height for serial traversal (multiple of `mr`).
+    pub mc: usize,
+    /// Static partition width (worker buckets).
+    pub threads: usize,
+}
+
+/// One signature group inside the packed buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackedGroup {
+    /// Reordered-row span `[rows_lo, rows_hi)` (unchanged from the
+    /// encode-order `Bcrc` — only traversal order moves).
+    pub rows_lo: u32,
+    pub rows_hi: u32,
+    /// Signature width (shared column count).
+    pub width: u32,
+    /// Offset of this group's indices in the matrix index buffer.
+    pub col_off: u32,
+    /// Base column for u16 delta decoding (min of the signature).
+    pub col_base: u32,
+    /// Offset of this group's value block (multiple of 16 ⇒ 64 B).
+    pub val_off: usize,
+}
+
+impl PackedGroup {
+    pub fn rows(&self) -> usize {
+        (self.rows_hi - self.rows_lo) as usize
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows() * self.width as usize
+    }
+}
+
+/// Column-index storage: u16 deltas from a per-group base when every
+/// group's signature span fits, raw u32 otherwise.
+#[derive(Clone, Debug)]
+pub enum ColIndex {
+    U16(Vec<u16>),
+    U32(Vec<u32>),
+}
+
+/// Borrowed view of one group's column signature, decoding lazily.
+#[derive(Clone, Copy)]
+pub enum ColsRef<'a> {
+    U16 { base: u32, deltas: &'a [u16] },
+    U32(&'a [u32]),
+}
+
+impl ColsRef<'_> {
+    /// Absolute column index of signature element `i`.
+    #[inline(always)]
+    pub fn at(&self, i: usize) -> usize {
+        match self {
+            ColsRef::U16 { base, deltas } => *base as usize + deltas[i] as usize,
+            ColsRef::U32(c) => c[i] as usize,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ColsRef::U16 { deltas, .. } => deltas.len(),
+            ColsRef::U32(c) => c.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A contiguous run of reordered rows inside one packed group — the unit
+/// of statically-scheduled parallel work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// Packed group index (into `PackedBcrc::groups`); 0 for row-granular
+    /// partitions (CSR), where only `lo..hi` matter.
+    pub group: u32,
+    /// Reordered-row range `[lo, hi)`.
+    pub lo: u32,
+    pub hi: u32,
+}
+
+/// Static nnz-balanced parallel schedule: one span list per worker
+/// bucket. Buckets are independent of the runtime pool size — a pool
+/// with fewer workers takes several buckets per worker, one with more
+/// leaves the surplus idle.
+#[derive(Clone, Debug, Default)]
+pub struct WorkPartition {
+    pub buckets: Vec<Vec<Span>>,
+    /// Total nnz assigned to each bucket.
+    pub loads: Vec<usize>,
+}
+
+impl WorkPartition {
+    /// Greedy LPT over group nnz: groups whose nnz exceeds the per-bucket
+    /// target are split into `mr`-aligned row chunks first, then every
+    /// item goes to the least-loaded bucket, largest first.
+    pub fn lpt(groups: &[PackedGroup], mr: usize, threads: usize) -> WorkPartition {
+        let t = threads.max(1);
+        let mr = mr.max(1);
+        let total: usize = groups.iter().map(|g| g.nnz()).sum();
+        let target = (total / t).max(1);
+        let mut items: Vec<(usize, Span)> = Vec::new();
+        for (gi, g) in groups.iter().enumerate() {
+            let rows_g = g.rows();
+            let w = g.width as usize;
+            let nnz = rows_g * w;
+            if w == 0 || nnz <= target || rows_g <= mr {
+                items.push((nnz, Span { group: gi as u32, lo: g.rows_lo, hi: g.rows_hi }));
+            } else {
+                // Chunks of ≈ target nnz, rounded up to whole `mr` panels
+                // so spans never cut an interleaved value panel.
+                let cr = (target / w).max(1).div_ceil(mr) * mr;
+                let mut lo = 0usize;
+                while lo < rows_g {
+                    let hi = (lo + cr).min(rows_g);
+                    items.push((
+                        (hi - lo) * w,
+                        Span {
+                            group: gi as u32,
+                            lo: g.rows_lo + lo as u32,
+                            hi: g.rows_lo + hi as u32,
+                        },
+                    ));
+                    lo = hi;
+                }
+            }
+        }
+        items.sort_by(|a, b| {
+            b.0.cmp(&a.0).then((a.1.group, a.1.lo).cmp(&(b.1.group, b.1.lo)))
+        });
+        let mut buckets: Vec<Vec<Span>> = vec![Vec::new(); t];
+        let mut loads = vec![0usize; t];
+        for (nnz, span) in items {
+            let b = (0..t).min_by_key(|&i| loads[i]).expect("t >= 1");
+            loads[b] += nnz;
+            buckets[b].push(span);
+        }
+        // Cache-friendly intra-bucket order: ascending (group, row).
+        for bucket in &mut buckets {
+            bucket.sort_by_key(|s| (s.group, s.lo));
+        }
+        WorkPartition { buckets, loads }
+    }
+
+    /// Contiguous nnz-balanced row ranges (for row-granular formats like
+    /// CSR): rows `0..weights.len()` are cut into at most `threads`
+    /// contiguous pieces with near-equal total weight.
+    pub fn contiguous(weights: &[usize], threads: usize) -> WorkPartition {
+        let t = threads.max(1);
+        let n = weights.len();
+        let total: usize = weights.iter().sum();
+        let mut buckets: Vec<Vec<Span>> = Vec::with_capacity(t);
+        let mut loads: Vec<usize> = Vec::with_capacity(t);
+        let mut lo = 0usize;
+        let mut cum = 0usize;
+        for b in 0..t {
+            if lo >= n {
+                break;
+            }
+            let mut hi = lo;
+            let mut load = 0usize;
+            if b + 1 == t {
+                while hi < n {
+                    load += weights[hi];
+                    hi += 1;
+                }
+            } else {
+                let goal = total * (b + 1) / t;
+                loop {
+                    load += weights[hi];
+                    hi += 1;
+                    if hi >= n || cum + load >= goal {
+                        break;
+                    }
+                }
+            }
+            buckets.push(vec![Span { group: 0, lo: lo as u32, hi: hi as u32 }]);
+            loads.push(load);
+            cum += load;
+            lo = hi;
+        }
+        while buckets.len() < t {
+            buckets.push(Vec::new());
+            loads.push(0);
+        }
+        WorkPartition { buckets, loads }
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn total_nnz(&self) -> usize {
+        self.loads.iter().sum()
+    }
+
+    /// max/min bucket-nnz ratio — the balance figure the bench reports.
+    /// 1.0 when every bucket is empty; infinite when some (but not all)
+    /// buckets got no work.
+    pub fn imbalance(&self) -> f64 {
+        let mx = self.loads.iter().copied().max().unwrap_or(0);
+        let mn = self.loads.iter().copied().min().unwrap_or(0);
+        if mn == 0 {
+            if mx == 0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            mx as f64 / mn as f64
+        }
+    }
+
+    /// Property check: every reordered row of every group is covered by
+    /// exactly one span, and every span stays inside its group.
+    pub fn validate_covers(&self, groups: &[PackedGroup]) -> anyhow::Result<()> {
+        let rows = groups.iter().map(|g| g.rows_hi as usize).max().unwrap_or(0);
+        let mut count = vec![0u32; rows];
+        for bucket in &self.buckets {
+            for s in bucket {
+                let g = groups
+                    .get(s.group as usize)
+                    .ok_or_else(|| anyhow::anyhow!("span names unknown group {}", s.group))?;
+                anyhow::ensure!(s.lo < s.hi, "empty span in group {}", s.group);
+                anyhow::ensure!(
+                    s.lo >= g.rows_lo && s.hi <= g.rows_hi,
+                    "span [{}, {}) outside group rows [{}, {})",
+                    s.lo,
+                    s.hi,
+                    g.rows_lo,
+                    g.rows_hi
+                );
+                for r in s.lo..s.hi {
+                    count[r as usize] += 1;
+                }
+            }
+        }
+        for (r, c) in count.iter().enumerate() {
+            anyhow::ensure!(*c == 1, "reordered row {r} covered {c} times");
+        }
+        Ok(())
+    }
+}
+
+/// A BCRC matrix repacked for the memory hierarchy (see module docs).
+#[derive(Debug)]
+pub struct PackedBcrc {
+    pub rows: usize,
+    pub cols: usize,
+    pub shape: PackShape,
+    /// Groups in packed (descending-nnz) order.
+    pub groups: Vec<PackedGroup>,
+    pub idx: ColIndex,
+    /// Interleaved values, one 64 B-aligned block per group.
+    pub values: AlignedBuf,
+    /// `reorder[new_row] = original_row`, copied from the source `Bcrc`.
+    pub reorder: Vec<u32>,
+    pub nnz: usize,
+    /// Widest signature — sizes the GEMV gather scratch.
+    pub max_width: usize,
+    /// True when rows are stored contiguously (`mr == 1`, single column
+    /// block), which the GEMV dot kernel requires.
+    pub row_major: bool,
+    pub partition: WorkPartition,
+}
+
+impl PackedBcrc {
+    /// Repack `enc` under `shape`. Pure layout transform: decoded values
+    /// and indices are identical to `enc`'s (see [`Self::validate_against`]).
+    pub fn pack(enc: &Bcrc, shape: PackShape) -> PackedBcrc {
+        let mr = shape.mr.max(1);
+        let kc = shape.kc.max(1);
+        let ng = enc.num_groups();
+
+        let gnnz = |k: usize| {
+            let (lo, hi) = enc.group_rows(k);
+            (hi - lo) * enc.group_cols(k).len()
+        };
+        let mut order: Vec<usize> = (0..ng).collect();
+        order.sort_by(|&a, &b| gnnz(b).cmp(&gnnz(a)).then(a.cmp(&b)));
+
+        let fits_u16 = (0..ng).all(|k| {
+            let cols = enc.group_cols(k);
+            match (cols.iter().min(), cols.iter().max()) {
+                (Some(&mn), Some(&mx)) => (mx - mn) as usize <= u16::MAX as usize,
+                _ => true,
+            }
+        });
+
+        let mut groups = Vec::with_capacity(ng);
+        let mut deltas16: Vec<u16> = Vec::new();
+        let mut raw32: Vec<u32> = Vec::new();
+        let mut val_len = 0usize;
+        for &k in &order {
+            let (lo, hi) = enc.group_rows(k);
+            let cols = enc.group_cols(k);
+            let base = cols.iter().copied().min().unwrap_or(0);
+            let col_off = if fits_u16 { deltas16.len() } else { raw32.len() } as u32;
+            if fits_u16 {
+                deltas16.extend(cols.iter().map(|&c| (c - base) as u16));
+            } else {
+                raw32.extend_from_slice(cols);
+            }
+            let val_off = val_len.div_ceil(16) * 16;
+            groups.push(PackedGroup {
+                rows_lo: lo as u32,
+                rows_hi: hi as u32,
+                width: cols.len() as u32,
+                col_off,
+                col_base: base,
+                val_off,
+            });
+            val_len = val_off + (hi - lo) * cols.len();
+        }
+
+        let mut values = AlignedBuf::zeroed(val_len);
+        {
+            let vd = values.as_mut_slice();
+            for g in &groups {
+                let lo = g.rows_lo as usize;
+                let rows_g = g.rows();
+                let width = g.width as usize;
+                let mut kb_lo = 0usize;
+                while kb_lo < width {
+                    let kb_hi = (kb_lo + kc).min(width);
+                    let kl = kb_hi - kb_lo;
+                    let kb_base = g.val_off + kb_lo * rows_g;
+                    let mut ro = 0usize;
+                    while ro < rows_g {
+                        let h = mr.min(rows_g - ro);
+                        let pb = kb_base + ro * kl;
+                        for kk in 0..kl {
+                            for u in 0..h {
+                                vd[pb + kk * h + u] =
+                                    enc.row_weights(lo + ro + u)[kb_lo + kk];
+                            }
+                        }
+                        ro += h;
+                    }
+                    kb_lo = kb_hi;
+                }
+            }
+        }
+
+        let max_width = enc.max_group_cols();
+        let partition = WorkPartition::lpt(&groups, mr, shape.threads);
+        PackedBcrc {
+            rows: enc.rows,
+            cols: enc.cols,
+            shape: PackShape { mr, kc, ..shape },
+            row_major: mr == 1 && kc >= max_width,
+            groups,
+            idx: if fits_u16 { ColIndex::U16(deltas16) } else { ColIndex::U32(raw32) },
+            values,
+            reorder: enc.reorder.clone(),
+            nnz: enc.nnz(),
+            max_width,
+            partition,
+        }
+    }
+
+    pub fn is_u16(&self) -> bool {
+        matches!(self.idx, ColIndex::U16(_))
+    }
+
+    /// Column signature of packed group `gi` (lazily decoded view).
+    pub fn group_cols(&self, gi: usize) -> ColsRef<'_> {
+        let g = &self.groups[gi];
+        let lo = g.col_off as usize;
+        let hi = lo + g.width as usize;
+        match &self.idx {
+            ColIndex::U16(d) => ColsRef::U16 { base: g.col_base, deltas: &d[lo..hi] },
+            ColIndex::U32(c) => ColsRef::U32(&c[lo..hi]),
+        }
+    }
+
+    /// Contiguous weights of row `ro` (group-relative) of packed group
+    /// `gi`. Only valid for row-major packings (`mr == 1`, single column
+    /// block) — the GEMV layers.
+    #[inline]
+    pub fn row_values(&self, gi: usize, ro: usize) -> &[f32] {
+        debug_assert!(self.row_major, "row_values requires a row-major packing");
+        let g = &self.groups[gi];
+        let width = g.width as usize;
+        let off = g.val_off + ro * width;
+        &self.values.as_slice()[off..off + width]
+    }
+
+    /// Packed storage in bytes: aligned values + indices + group table.
+    pub fn packed_bytes(&self) -> usize {
+        let idx = match &self.idx {
+            ColIndex::U16(d) => 2 * d.len(),
+            ColIndex::U32(c) => 4 * c.len(),
+        };
+        4 * self.values.len() + idx + std::mem::size_of_val(self.groups.as_slice())
+    }
+
+    /// Exhaustive round-trip check against the source encoding: every
+    /// group's span, signature, and every interleaved value must match.
+    pub fn validate_against(&self, enc: &Bcrc) -> anyhow::Result<()> {
+        anyhow::ensure!(self.groups.len() == enc.num_groups(), "group count");
+        anyhow::ensure!(self.rows == enc.rows && self.cols == enc.cols, "dims");
+        anyhow::ensure!(self.reorder == enc.reorder, "reorder copy");
+        // Source groups keyed by their (unique) first reordered row.
+        let mut by_lo = std::collections::HashMap::new();
+        for k in 0..enc.num_groups() {
+            by_lo.insert(enc.group_rows(k).0, k);
+        }
+        let vd = self.values.as_slice();
+        let mr = self.shape.mr.max(1);
+        let kc = self.shape.kc.max(1);
+        for (gi, g) in self.groups.iter().enumerate() {
+            anyhow::ensure!(g.val_off % 16 == 0, "group {gi} value block unaligned");
+            let k = *by_lo
+                .get(&(g.rows_lo as usize))
+                .ok_or_else(|| anyhow::anyhow!("group {gi}: no source group at row {}", g.rows_lo))?;
+            let (lo, hi) = enc.group_rows(k);
+            anyhow::ensure!((g.rows_lo as usize, g.rows_hi as usize) == (lo, hi), "group span");
+            let cols = enc.group_cols(k);
+            let view = self.group_cols(gi);
+            anyhow::ensure!(view.len() == cols.len(), "signature width");
+            for (i, c) in cols.iter().enumerate() {
+                anyhow::ensure!(view.at(i) == *c as usize, "group {gi} col {i}");
+            }
+            // Walk the interleaved layout and compare every value.
+            let rows_g = g.rows();
+            let width = g.width as usize;
+            let mut kb_lo = 0usize;
+            while kb_lo < width {
+                let kb_hi = (kb_lo + kc).min(width);
+                let kl = kb_hi - kb_lo;
+                let kb_base = g.val_off + kb_lo * rows_g;
+                let mut ro = 0usize;
+                while ro < rows_g {
+                    let h = mr.min(rows_g - ro);
+                    let pb = kb_base + ro * kl;
+                    for kk in 0..kl {
+                        for u in 0..h {
+                            let got = vd[pb + kk * h + u];
+                            let want = enc.row_weights(lo + ro + u)[kb_lo + kk];
+                            anyhow::ensure!(
+                                got == want,
+                                "group {gi} row {} col {}: {got} != {want}",
+                                ro + u,
+                                kb_lo + kk
+                            );
+                        }
+                    }
+                    ro += h;
+                }
+                kb_lo = kb_hi;
+            }
+        }
+        self.partition.validate_covers(&self.groups)?;
+        anyhow::ensure!(self.partition.total_nnz() == self.nnz, "partition nnz total");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{BcrConfig, BcrMask};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn setup(seed: u64, rows: usize, cols: usize, rate: f64) -> Bcrc {
+        let mut rng = Rng::new(seed);
+        let gr = (rows / 8).max(1);
+        let gc = (cols / 16).max(1);
+        let mask = BcrMask::random(rows, cols, BcrConfig::new(gr, gc), rate, &mut rng);
+        let mut w = Tensor::rand_uniform(&[rows, cols], 1.0, &mut rng);
+        mask.apply(&mut w);
+        Bcrc::from_masked(&w, &mask)
+    }
+
+    fn shape(mr: usize, kc: usize, threads: usize) -> PackShape {
+        PackShape { mr, kc, mc: 64usize.div_ceil(mr.max(1)) * mr.max(1), threads }
+    }
+
+    #[test]
+    fn pack_round_trips_various_shapes() {
+        for (seed, m, k, rate) in [(1u64, 32, 64, 4.0), (2, 64, 128, 8.0), (3, 48, 96, 2.0)] {
+            let enc = setup(seed, m, k, rate);
+            for (mr, kc) in [(1usize, k), (2, 16), (4, 8), (8, 33), (4, 1)] {
+                let p = PackedBcrc::pack(&enc, shape(mr, kc, 4));
+                p.validate_against(&enc)
+                    .unwrap_or_else(|e| panic!("seed {seed} mr={mr} kc={kc}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn u16_compression_selected_and_round_trips() {
+        let enc = setup(5, 32, 64, 4.0);
+        let p = PackedBcrc::pack(&enc, shape(4, 16, 4));
+        assert!(p.is_u16(), "64-column matrix must compress to u16");
+        p.validate_against(&enc).unwrap();
+        // Compressed indices must be strictly smaller than raw u32.
+        let raw: usize = (0..enc.num_groups()).map(|g| 4 * enc.group_cols(g).len()).sum();
+        let packed = match &p.idx {
+            ColIndex::U16(d) => 2 * d.len(),
+            ColIndex::U32(_) => unreachable!(),
+        };
+        assert!(packed < raw.max(1) || raw == 0);
+    }
+
+    #[test]
+    fn u32_fallback_for_wide_spans() {
+        // Hand-built group whose signature spans more than u16::MAX
+        // columns: the whole matrix must fall back to raw u32 indices.
+        let cols = 70_000usize;
+        let enc = Bcrc {
+            rows: 2,
+            cols,
+            reorder: vec![0, 1],
+            row_offset: vec![0, 2, 4],
+            occurrence: vec![0, 2],
+            col_stride: vec![0, 2],
+            compact_col: vec![3, 69_999],
+            weights: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        enc.validate().unwrap();
+        let p = PackedBcrc::pack(&enc, shape(1, cols, 2));
+        assert!(!p.is_u16());
+        p.validate_against(&enc).unwrap();
+        assert_eq!(p.group_cols(0).at(1), 69_999);
+    }
+
+    #[test]
+    fn lpt_partition_covers_and_balances() {
+        let enc = setup(7, 128, 128, 6.0);
+        let p = PackedBcrc::pack(&enc, shape(4, 16, 4));
+        p.partition.validate_covers(&p.groups).unwrap();
+        assert_eq!(p.partition.total_nnz(), enc.nnz());
+        assert_eq!(p.partition.num_buckets(), 4);
+    }
+
+    #[test]
+    fn contiguous_partition_covers_all_rows() {
+        let weights = [10usize, 0, 3, 50, 1, 1, 7, 20, 0, 4];
+        let part = WorkPartition::contiguous(&weights, 3);
+        assert_eq!(part.num_buckets(), 3);
+        let mut seen = vec![0u32; weights.len()];
+        for b in &part.buckets {
+            for s in b {
+                for r in s.lo..s.hi {
+                    seen[r as usize] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|c| *c == 1), "{seen:?}");
+        assert_eq!(part.total_nnz(), weights.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn zero_width_groups_still_partitioned() {
+        // Fully pruned matrix: rows must still be covered so the
+        // executor's epilogue reaches every output row.
+        let cfg = BcrConfig::new(1, 1);
+        let mut mask = BcrMask::dense(8, 8, cfg);
+        mask.prune_rows(0, 0, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        let enc = Bcrc::from_masked(&Tensor::zeros(&[8, 8]), &mask);
+        let p = PackedBcrc::pack(&enc, shape(4, 8, 3));
+        p.partition.validate_covers(&p.groups).unwrap();
+        assert_eq!(p.partition.total_nnz(), 0);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let part = WorkPartition { buckets: vec![vec![], vec![]], loads: vec![100, 80] };
+        assert!((part.imbalance() - 1.25).abs() < 1e-12);
+        let empty = WorkPartition { buckets: vec![], loads: vec![] };
+        assert_eq!(empty.imbalance(), 1.0);
+    }
+}

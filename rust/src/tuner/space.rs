@@ -8,9 +8,17 @@
 //! ([`SearchSpace::with_simd_axis`]) additionally lets the tuner pin a
 //! layer to the scalar backend when the vector kernels lose on it (tiny
 //! rows, heavy remainder lanes).
+//!
+//! With the plan-time packing pass, two more genes exist: `pack_kc` and
+//! `pack_mc` override the [`crate::gemm::pack::CacheParams`]-derived
+//! cache blocks of the packed weight layout (0 = derive from the cache
+//! model). [`SearchSpace::with_pack_axis`] enables them; a pack-aware
+//! fitness closure passes [`Config::pack_overrides`] to
+//! `gemm::pack::pack_bcrc` when building the candidate kernel.
 
 use crate::gemm::bcrc_gemm::GemmParams;
 use crate::gemm::microkernel::{N_TILES, UNROLL_FACTORS};
+use crate::gemm::pack::PackOverrides;
 
 /// One point in the search space (a chromosome).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -20,11 +28,20 @@ pub struct Config {
     pub lre: bool,
     /// Run on the dispatched SIMD kernels (false = scalar backend).
     pub simd: bool,
+    /// Packed-layout K cache block override (0 = CacheParams model).
+    pub pack_kc: usize,
+    /// Packed-layout M cache block override (0 = CacheParams model).
+    pub pack_mc: usize,
 }
 
 impl Config {
     pub fn gemm_params(&self) -> GemmParams {
         GemmParams { unroll: self.unroll, n_tile: self.n_tile, lre: self.lre, simd: self.simd }
+    }
+
+    /// Cache-block overrides for the plan-time packing pass.
+    pub fn pack_overrides(&self) -> PackOverrides {
+        PackOverrides { kc: self.pack_kc, mc: self.pack_mc }
     }
 }
 
@@ -35,6 +52,8 @@ pub struct SearchSpace {
     pub n_tiles: Vec<usize>,
     pub lres: Vec<bool>,
     pub simds: Vec<bool>,
+    pub pack_kcs: Vec<usize>,
+    pub pack_mcs: Vec<usize>,
 }
 
 impl Default for SearchSpace {
@@ -44,6 +63,8 @@ impl Default for SearchSpace {
             n_tiles: N_TILES.to_vec(),
             lres: vec![true],
             simds: vec![true],
+            pack_kcs: vec![0],
+            pack_mcs: vec![0],
         }
     }
 }
@@ -60,8 +81,24 @@ impl SearchSpace {
         SearchSpace { simds: vec![true, false], ..Default::default() }
     }
 
+    /// Space including the packed-layout cache-block axes (0 = derive
+    /// from the CacheParams model), so the tuner can size kc×mc blocks
+    /// per layer instead of trusting the cache model.
+    pub fn with_pack_axis() -> Self {
+        SearchSpace {
+            pack_kcs: vec![0, 64, 128, 256, 512],
+            pack_mcs: vec![0, 32, 128, 512],
+            ..Default::default()
+        }
+    }
+
     pub fn size(&self) -> usize {
-        self.unrolls.len() * self.n_tiles.len() * self.lres.len() * self.simds.len()
+        self.unrolls.len()
+            * self.n_tiles.len()
+            * self.lres.len()
+            * self.simds.len()
+            * self.pack_kcs.len()
+            * self.pack_mcs.len()
     }
 
     /// Decode a flat index into a config (for grid enumeration).
@@ -69,11 +106,15 @@ impl SearchSpace {
         let nu = self.unrolls.len();
         let nt = self.n_tiles.len();
         let nl = self.lres.len();
+        let ns = self.simds.len();
+        let nk = self.pack_kcs.len();
         Config {
             unroll: self.unrolls[idx % nu],
             n_tile: self.n_tiles[(idx / nu) % nt],
             lre: self.lres[(idx / (nu * nt)) % nl],
-            simd: self.simds[(idx / (nu * nt * nl)) % self.simds.len()],
+            simd: self.simds[(idx / (nu * nt * nl)) % ns],
+            pack_kc: self.pack_kcs[(idx / (nu * nt * nl * ns)) % nk],
+            pack_mc: self.pack_mcs[(idx / (nu * nt * nl * ns * nk)) % self.pack_mcs.len()],
         }
     }
 
@@ -90,12 +131,18 @@ impl SearchSpace {
     /// Mutate one gene, chosen among the axes that can actually vary (a
     /// single-candidate axis would make the mutation a guaranteed no-op).
     pub fn mutate(&self, c: Config, rng: &mut crate::util::Rng) -> Config {
-        let mut axes = [0usize; 4];
+        let mut axes = [0usize; 6];
         let mut na = 0;
-        for (axis, len) in
-            [self.unrolls.len(), self.n_tiles.len(), self.lres.len(), self.simds.len()]
-                .into_iter()
-                .enumerate()
+        for (axis, len) in [
+            self.unrolls.len(),
+            self.n_tiles.len(),
+            self.lres.len(),
+            self.simds.len(),
+            self.pack_kcs.len(),
+            self.pack_mcs.len(),
+        ]
+        .into_iter()
+        .enumerate()
         {
             if len > 1 {
                 axes[na] = axis;
@@ -110,7 +157,9 @@ impl SearchSpace {
             0 => c.unroll = self.unrolls[rng.index(self.unrolls.len())],
             1 => c.n_tile = self.n_tiles[rng.index(self.n_tiles.len())],
             2 => c.lre = self.lres[rng.index(self.lres.len())],
-            _ => c.simd = self.simds[rng.index(self.simds.len())],
+            3 => c.simd = self.simds[rng.index(self.simds.len())],
+            4 => c.pack_kc = self.pack_kcs[rng.index(self.pack_kcs.len())],
+            _ => c.pack_mc = self.pack_mcs[rng.index(self.pack_mcs.len())],
         }
         c
     }
@@ -122,6 +171,8 @@ impl SearchSpace {
             n_tile: if rng.chance(0.5) { a.n_tile } else { b.n_tile },
             lre: if rng.chance(0.5) { a.lre } else { b.lre },
             simd: if rng.chance(0.5) { a.simd } else { b.simd },
+            pack_kc: if rng.chance(0.5) { a.pack_kc } else { b.pack_kc },
+            pack_mc: if rng.chance(0.5) { a.pack_mc } else { b.pack_mc },
         }
     }
 }
@@ -137,7 +188,7 @@ mod tests {
         let all = s.all();
         assert_eq!(all.len(), s.size());
         let mut uniq = all.clone();
-        uniq.sort_by_key(|c| (c.unroll, c.n_tile, c.lre, c.simd));
+        uniq.sort_by_key(|c| (c.unroll, c.n_tile, c.lre, c.simd, c.pack_kc, c.pack_mc));
         uniq.dedup();
         assert_eq!(uniq.len(), all.len(), "decode must be injective");
     }
@@ -152,16 +203,32 @@ mod tests {
     }
 
     #[test]
+    fn pack_axis_expands_space() {
+        let base = SearchSpace::default();
+        let wide = SearchSpace::with_pack_axis();
+        assert_eq!(wide.size(), 20 * base.size());
+        assert!(wide.all().iter().any(|c| c.pack_kc == 256 && c.pack_mc == 128));
+        assert!(
+            base.all().iter().all(|c| c.pack_kc == 0 && c.pack_mc == 0),
+            "default space trusts the cache model"
+        );
+        let uniq: std::collections::HashSet<_> = wide.all().into_iter().collect();
+        assert_eq!(uniq.len(), wide.size(), "decode must stay injective with pack axes");
+    }
+
+    #[test]
     fn mutate_stays_in_space() {
-        let s = SearchSpace::with_simd_axis();
+        let s = SearchSpace::with_pack_axis();
         let mut rng = Rng::new(1);
         let mut c = s.sample(&mut rng);
-        for _ in 0..100 {
+        for _ in 0..200 {
             c = s.mutate(c, &mut rng);
             assert!(s.unrolls.contains(&c.unroll));
             assert!(s.n_tiles.contains(&c.n_tile));
             assert!(s.lres.contains(&c.lre));
             assert!(s.simds.contains(&c.simd));
+            assert!(s.pack_kcs.contains(&c.pack_kc));
+            assert!(s.pack_mcs.contains(&c.pack_mc));
         }
     }
 
@@ -169,10 +236,12 @@ mod tests {
     fn crossover_mixes_genes() {
         let s = SearchSpace::default();
         let mut rng = Rng::new(2);
-        let a = Config { unroll: 1, n_tile: 16, lre: true, simd: true };
-        let b = Config { unroll: 8, n_tile: 128, lre: true, simd: true };
+        let a = Config { unroll: 1, n_tile: 16, lre: true, simd: true, pack_kc: 0, pack_mc: 0 };
+        let b =
+            Config { unroll: 8, n_tile: 128, lre: true, simd: true, pack_kc: 64, pack_mc: 32 };
         let c = s.crossover(a, b, &mut rng);
         assert!(c.unroll == 1 || c.unroll == 8);
         assert!(c.n_tile == 16 || c.n_tile == 128);
+        assert!(c.pack_kc == 0 || c.pack_kc == 64);
     }
 }

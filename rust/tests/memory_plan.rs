@@ -111,6 +111,46 @@ fn external_workspace_roundtrip() {
     assert!(engine.run_planned(&x, &mut wrong).is_err(), "size mismatch must be rejected");
 }
 
+/// Multi-consumer view elision: a Flatten whose producer also feeds a
+/// second consumer still aliases the producer's buffer (PR 2 only
+/// aliased single-consumer views), and outputs stay bit-identical.
+#[test]
+fn multi_consumer_flatten_aliases_producer() {
+    let module = grim::graph::dsl::parse(
+        r#"
+model "fanout"
+in = Input(shape=[4,8,8])
+c1 = Conv2D(in, out_c=4, kh=3, kw=3, stride=1, pad=1)
+p1 = MaxPool2(c1)
+f1 = Flatten(p1)
+f2 = Flatten(p1)
+fc1 = FC(f1, out_f=8)
+fc2 = FC(f2, out_f=8)
+out = Add(fc1, fc2)
+"#,
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x7A11);
+    let mut weights = grim::compiler::weights::WeightStore::new();
+    let w1 = Tensor::rand_uniform(&[4, 36], 0.5, &mut rng);
+    weights.insert("c1".into(), grim::compiler::weights::LayerWeights::dense(w1));
+    for name in ["fc1", "fc2"] {
+        let w = Tensor::rand_uniform(&[8, 64], 0.5, &mut rng);
+        weights.insert(name.into(), grim::compiler::weights::LayerWeights::dense(w));
+    }
+    let plan = compile(&module, &weights, CompileOptions::default()).unwrap();
+    // p1 (id 2) fans out to both flattens (ids 3, 4): both must alias
+    // p1's buffer — same arena range, no extra allocation.
+    let p1 = plan.memory.value_range(2).expect("pool output planned");
+    assert_eq!(plan.memory.value_range(3), Some(p1), "f1 must alias p1");
+    assert_eq!(plan.memory.value_range(4), Some(p1), "f2 must alias p1");
+    let engine = Engine::new(plan, 1);
+    let x = Tensor::rand_uniform(&[4, 8, 8], 1.0, &mut rng);
+    let planned = engine.run(&x).unwrap();
+    let naive = engine.run_naive(&x).unwrap();
+    assert_eq!(planned, naive, "aliased views must not change results");
+}
+
 /// Dirty arenas must not leak between runs: run once, poison the arena,
 /// run again — outputs identical.
 #[test]

@@ -1,0 +1,320 @@
+//! Packed-layout acceptance tests:
+//!
+//! * packed plans (the default) are **bit-identical** to unpacked plans
+//!   (`CompileOptions::without_packing`, the `GRIM_FORCE_UNPACKED=1`
+//!   analog) and to `run_naive` on all four model presets, on the
+//!   dispatched *and* the scalar-forced micro-kernel backends (CI also
+//!   re-runs this whole file under `GRIM_FORCE_SCALAR=1` and
+//!   `GRIM_FORCE_UNPACKED=1`);
+//! * the static nnz-balanced `WorkPartition` assigns every nonzero
+//!   exactly once, and on a sparsity-skewed fixture its max/min
+//!   thread-nnz ratio stays ≤ 1.25 where the even row split is badly
+//!   imbalanced;
+//! * u16 delta index compression round-trips (and the u32 fallback
+//!   engages for signature spans wider than u16).
+
+use grim::compiler::packing::PackOptions;
+use grim::compiler::passes::{compile, Backend, CompileOptions};
+use grim::compiler::plan::{KernelImpl, Step};
+use grim::engine::Engine;
+use grim::gemm::bcrc_gemm::GemmParams;
+use grim::gemm::pack::{pack_bcrc, CacheParams, PackOverrides};
+use grim::gemm::simd;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::sparse::{Bcrc, BcrConfig, BcrMask};
+use grim::tensor::Tensor;
+use grim::util::Rng;
+
+const KINDS: [ModelKind; 4] =
+    [ModelKind::Vgg16, ModelKind::Resnet18, ModelKind::MobilenetV2, ModelKind::Gru];
+
+fn opts(seed: u64) -> InitOptions {
+    InitOptions { rate: 6.0, block: [4, 16], seed }
+}
+
+fn compiled(
+    kind: ModelKind,
+    o: InitOptions,
+    copts: CompileOptions,
+) -> grim::compiler::plan::ExecutionPlan {
+    let module = build_model(kind, Preset::CifarMini, o);
+    let weights = random_weights(&module, o);
+    compile(&module, &weights, copts).unwrap()
+}
+
+fn input_for(engine: &Engine, rng: &mut Rng) -> Tensor {
+    let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+    Tensor::rand_uniform(&dims, 1.0, rng)
+}
+
+/// Packed is the default; the engine switch preserves the old path; both
+/// are bit-identical to each other and to the naive interpreter on every
+/// preset (CONV, residual, depthwise, FC, and GRU-gate GEMV coverage).
+#[test]
+fn packed_bit_identical_to_unpacked_and_naive_on_presets() {
+    for (i, kind) in KINDS.iter().enumerate() {
+        let o = opts(900 + i as u64);
+        let packed_plan = compiled(*kind, o, CompileOptions::default());
+        assert!(
+            packed_plan.packing.enabled || grim::compiler::packing::force_unpacked(),
+            "{kind:?}: packing must be on by default"
+        );
+        let unpacked_plan = compiled(*kind, o, CompileOptions::default().without_packing());
+        assert!(!unpacked_plan.packing.enabled);
+        let packed = Engine::new(packed_plan, 2);
+        let unpacked = Engine::new(unpacked_plan, 2);
+        let mut rng = Rng::new(0x9A00 + i as u64);
+        for case in 0..3 {
+            let x = input_for(&packed, &mut rng);
+            let a = packed.run(&x).unwrap();
+            let b = unpacked.run(&x).unwrap();
+            assert_eq!(a, b, "{kind:?} case {case}: packed != unpacked");
+            let naive = packed.run_naive(&x).unwrap();
+            assert_eq!(a, naive, "{kind:?} case {case}: packed != naive");
+        }
+    }
+}
+
+/// The same parity must hold with the engine pinned to the scalar
+/// micro-kernel table (the `GRIM_FORCE_SCALAR=1` analog, runnable
+/// in-process without touching the environment).
+#[test]
+fn packed_parity_on_scalar_backend() {
+    for (i, kind) in KINDS.iter().enumerate() {
+        let o = opts(930 + i as u64);
+        let packed = Engine::with_microkernels(
+            compiled(*kind, o, CompileOptions::default()),
+            2,
+            simd::scalar(),
+        );
+        let unpacked = Engine::with_microkernels(
+            compiled(*kind, o, CompileOptions::default().without_packing()),
+            2,
+            simd::scalar(),
+        );
+        let mut rng = Rng::new(0x9B00 + i as u64);
+        let x = input_for(&packed, &mut rng);
+        let a = packed.run(&x).unwrap();
+        assert_eq!(a, unpacked.run(&x).unwrap(), "{kind:?}: scalar packed != unpacked");
+        assert_eq!(a, packed.run_naive(&x).unwrap(), "{kind:?}: scalar packed != naive");
+    }
+}
+
+/// The engine switch really does keep the encode-order path: no BCRC
+/// kernel carries a packed layout when packing is disabled, and every
+/// BCRC kernel carries one when it is enabled.
+#[test]
+fn packing_switch_controls_kernels() {
+    let o = opts(960);
+    for (copts, expect_packed) in [
+        (CompileOptions::default(), true),
+        (CompileOptions::default().without_packing(), false),
+    ] {
+        // Under GRIM_FORCE_UNPACKED=1 (a CI leg), even the default
+        // options must leave kernels unpacked.
+        let expect_packed = expect_packed && !grim::compiler::packing::force_unpacked();
+        let plan = compiled(ModelKind::Vgg16, o, copts);
+        let mut bcrc_layers = 0;
+        for (_, step) in &plan.steps {
+            let kernel = match step {
+                Step::Conv { kernel, .. } | Step::Fc { kernel, .. } => kernel,
+                _ => continue,
+            };
+            if let KernelImpl::Bcrc { gemm } = kernel {
+                bcrc_layers += 1;
+                assert_eq!(
+                    gemm.packed.is_some(),
+                    expect_packed,
+                    "packed presence must follow the switch"
+                );
+                if let Some(p) = &gemm.packed {
+                    p.validate_against(&gemm.enc).unwrap();
+                }
+            }
+        }
+        assert!(bcrc_layers > 0, "fixture must exercise BCRC layers");
+    }
+}
+
+/// Custom pack threads flow through to the partition width.
+#[test]
+fn pack_threads_option_controls_buckets() {
+    let o = opts(961);
+    let copts = CompileOptions {
+        pack: PackOptions { threads: 3, ..Default::default() },
+        ..Default::default()
+    };
+    let plan = compiled(ModelKind::Vgg16, o, copts);
+    if grim::compiler::packing::force_unpacked() {
+        return; // CI unpacked leg: nothing to inspect
+    }
+    for (_, step) in &plan.steps {
+        if let Step::Conv { kernel: KernelImpl::Bcrc { gemm }, .. } = step {
+            let p = gemm.packed.as_ref().expect("packed by default");
+            assert_eq!(p.partition.num_buckets(), 3);
+        }
+    }
+}
+
+fn random_enc(seed: u64, m: usize, k: usize, rate: f64) -> Bcrc {
+    let mut rng = Rng::new(seed);
+    let gr = (m / 8).max(1);
+    let gc = (k / 16).max(1);
+    let mask = BcrMask::random(m, k, BcrConfig::new(gr, gc), rate, &mut rng);
+    let mut w = Tensor::rand_uniform(&[m, k], 1.0, &mut rng);
+    mask.apply(&mut w);
+    Bcrc::from_masked(&w, &mask)
+}
+
+/// Partition coverage property: across random matrices, shapes, and
+/// thread counts, every nonzero is assigned to exactly one bucket.
+#[test]
+fn partition_assigns_every_nnz_exactly_once() {
+    for seed in 0..10u64 {
+        let m = 32 + 16 * (seed as usize % 5);
+        let k = 64 + 32 * (seed as usize % 3);
+        let enc = random_enc(seed, m, k, 3.0 + seed as f64);
+        for threads in [1usize, 2, 4, 8] {
+            for n_hint in [1usize, 64] {
+                let p = pack_bcrc(
+                    &enc,
+                    GemmParams::default(),
+                    n_hint,
+                    CacheParams::default(),
+                    threads,
+                    PackOverrides::default(),
+                );
+                p.partition
+                    .validate_covers(&p.groups)
+                    .unwrap_or_else(|e| panic!("seed {seed} t={threads} n={n_hint}: {e}"));
+                assert_eq!(p.partition.total_nnz(), enc.nnz(), "seed {seed}");
+            }
+        }
+    }
+}
+
+/// Skewed-sparsity fixture: the first block-rows stay dense while the
+/// rest are heavily pruned, so an even row split concentrates nearly all
+/// nnz on the first threads. The LPT partition must stay within 1.25×
+/// max/min and beat the even split.
+#[test]
+fn skewed_fixture_balances_within_ratio() {
+    let (m, k, threads) = (256usize, 256usize, 4usize);
+    let mut rng = Rng::new(0xBA1A);
+    let cfg = BcrConfig::new(8, 4);
+    let mut mask = BcrMask::dense(m, k, cfg);
+    // Blocks 2..8 of rows: prune 3 of 4 column blocks (rate 4x there).
+    let block_c: Vec<u32> = (0..(k / 4) as u32).collect();
+    for br in 2..8 {
+        for bc in 1..4 {
+            mask.prune_cols(br, bc, &block_c);
+        }
+    }
+    let mut w = Tensor::rand_uniform(&[m, k], 1.0, &mut rng);
+    mask.apply(&mut w);
+    let enc = Bcrc::from_masked(&w, &mask);
+
+    let p = pack_bcrc(
+        &enc,
+        GemmParams::default(),
+        64,
+        CacheParams::default(),
+        threads,
+        PackOverrides::default(),
+    );
+    p.partition.validate_covers(&p.groups).unwrap();
+    let lpt_ratio = p.partition.imbalance();
+    assert!(lpt_ratio <= 1.25, "LPT max/min thread-nnz ratio {lpt_ratio} > 1.25");
+
+    // Even split over reordered rows (the pre-partition executor
+    // behavior): per-chunk nnz from each row's signature width.
+    let chunk = m.div_ceil(threads);
+    let mut even = vec![0usize; threads];
+    for (t, load) in even.iter_mut().enumerate() {
+        for r in (t * chunk).min(m)..((t + 1) * chunk).min(m) {
+            *load += enc.row_weights(r).len();
+        }
+    }
+    let even_ratio =
+        *even.iter().max().unwrap() as f64 / (*even.iter().min().unwrap()).max(1) as f64;
+    assert!(
+        even_ratio > lpt_ratio,
+        "fixture must actually be skewed (even {even_ratio:.2} vs lpt {lpt_ratio:.2})"
+    );
+}
+
+/// u16 index compression round-trips exactly; matrices whose signature
+/// span exceeds u16 fall back to u32 and still round-trip.
+#[test]
+fn index_compression_round_trips() {
+    // Narrow matrix: must select u16 and decode identically.
+    let enc = random_enc(42, 64, 96, 5.0);
+    let p = pack_bcrc(
+        &enc,
+        GemmParams::default(),
+        32,
+        CacheParams::default(),
+        4,
+        PackOverrides::default(),
+    );
+    assert!(p.is_u16());
+    p.validate_against(&enc).unwrap();
+    for gi in 0..p.groups.len() {
+        let view = p.group_cols(gi);
+        for i in 0..view.len() {
+            assert!(view.at(i) < enc.cols);
+        }
+    }
+
+    // Wide hand-built matrix (span > u16::MAX): u32 fallback.
+    let wide = Bcrc {
+        rows: 3,
+        cols: 80_000,
+        reorder: vec![2, 0, 1],
+        row_offset: vec![0, 2, 4, 6],
+        occurrence: vec![0, 3],
+        col_stride: vec![0, 2],
+        compact_col: vec![5, 79_321],
+        weights: vec![0.5, -1.0, 2.0, 0.25, -0.75, 1.5],
+    };
+    wide.validate().unwrap();
+    let pw = pack_bcrc(
+        &wide,
+        GemmParams::default(),
+        1,
+        CacheParams::default(),
+        2,
+        PackOverrides::default(),
+    );
+    assert!(!pw.is_u16(), "span > u16::MAX must fall back to u32");
+    pw.validate_against(&wide).unwrap();
+}
+
+/// Cross-backend sanity doesn't regress with packing on: all four
+/// compile backends still agree on the same masked weights.
+#[test]
+fn backends_still_agree_with_packing() {
+    let o = opts(975);
+    let module = build_model(ModelKind::Resnet18, Preset::CifarMini, o);
+    let weights = random_weights(&module, o);
+    let mut rng = Rng::new(0x975);
+    let mut shared_x: Option<Tensor> = None;
+    let mut outputs: Vec<(Backend, Tensor)> = Vec::new();
+    for b in [Backend::Grim, Backend::NaiveDense, Backend::OptDense, Backend::CsrSparse] {
+        let plan = compile(&module, &weights, CompileOptions::for_backend(b)).unwrap();
+        let engine = Engine::new(plan, 2);
+        let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+        let x = shared_x
+            .get_or_insert_with(|| Tensor::rand_uniform(&dims, 1.0, &mut rng))
+            .clone();
+        outputs.push((b, engine.run(&x).unwrap()));
+    }
+    let (b0, ref0) = &outputs[0];
+    for (b, o) in &outputs[1..] {
+        assert!(
+            o.allclose(ref0, 1e-3, 1e-3),
+            "{b:?} disagrees with {b0:?}: {}",
+            o.max_abs_diff(ref0)
+        );
+    }
+}

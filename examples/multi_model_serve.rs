@@ -1,0 +1,131 @@
+//! Multi-model serving demo — the full compile→artifact→serve workflow:
+//!
+//! 1. **AOT compile** two models (a CNN and a GRU) through the whole
+//!    pipeline (BCR encode → reorder → fuse → kc×mr pack → memory plan)
+//!    and write each finished plan as a `.grimc` artifact;
+//! 2. **hot-load** the artifacts into a `ModelRegistry` — no re-encoding,
+//!    no re-packing; the engines adapt only their work partitions to the
+//!    host's thread count;
+//! 3. serve both models **concurrently** through one coordinator, with
+//!    requests routed by model name and per-model workspace pools;
+//! 4. demonstrate the **resident-bytes LRU budget** evicting the
+//!    least-recently-used model.
+//!
+//!     cargo run --release --example multi_model_serve
+
+use grim::artifact;
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::coordinator::{BatchPolicy, Server, ServerConfig};
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::serving::{plan_resident_bytes, ModelRegistry};
+use grim::tensor::Tensor;
+use grim::util::Rng;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join("grim_multi_model_demo");
+    std::fs::create_dir_all(&dir)?;
+
+    // --- 1. Offline: AOT-compile to .grimc artifacts -------------------
+    println!("=== compile (offline) ===");
+    let specs = [
+        ("vgg16", ModelKind::Vgg16, Preset::CifarMini),
+        ("gru", ModelKind::Gru, Preset::TimitMini),
+    ];
+    for (name, kind, preset) in specs {
+        let opts = InitOptions { rate: 6.0, block: [4, 16], seed: 7 };
+        let module = build_model(kind, preset, opts);
+        let weights = random_weights(&module, opts);
+        let plan = compile(&module, &weights, CompileOptions::default())?;
+        let path = dir.join(format!("{name}.grimc"));
+        artifact::save_grimc(&path, &plan)?;
+        println!(
+            "  {name}: {} KiB on disk, {} KiB resident when loaded",
+            std::fs::metadata(&path)?.len() / 1024,
+            plan_resident_bytes(&plan) / 1024
+        );
+    }
+
+    // --- 2. Serving side: hot-load, zero recompilation -----------------
+    println!("\n=== load + serve ===");
+    let packs_before = grim::sparse::packed::pack_invocations();
+    let registry = Arc::new(ModelRegistry::new(4));
+    let names = registry.load_dir(&dir)?;
+    assert_eq!(
+        grim::sparse::packed::pack_invocations(),
+        packs_before,
+        "artifact loading must never re-pack"
+    );
+    println!("  registry: {names:?} ({} KiB resident)", registry.resident_bytes() / 1024);
+
+    let server = Arc::new(Server::start_registry(
+        Arc::clone(&registry),
+        ServerConfig {
+            queue_capacity: 128,
+            batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+        },
+    ));
+
+    // --- 3. Concurrent clients, routed by model name -------------------
+    let per_client = 32;
+    let mut handles = Vec::new();
+    for (c, name) in names.iter().enumerate() {
+        for t in 0..2u64 {
+            let s = Arc::clone(&server);
+            let reg = Arc::clone(&registry);
+            let name = name.clone();
+            handles.push(std::thread::spawn(move || {
+                let engine = reg.get(&name).expect("model loaded");
+                let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+                let mut rng = Rng::new(1000 + 10 * c as u64 + t);
+                for _ in 0..per_client {
+                    let x = Tensor::rand_uniform(&dims, 1.0, &mut rng);
+                    let resp = s.infer_on(&name, x).expect("infer");
+                    assert!(resp.output.data().iter().all(|v| v.is_finite()));
+                }
+            }));
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let stats = server.stats();
+    println!(
+        "  completed={} batches={} p50={:.3} ms p99={:.3} ms throughput={:.1} rps",
+        stats.completed,
+        stats.batches,
+        stats.latency_ms.p50,
+        stats.latency_ms.p99,
+        stats.throughput_rps
+    );
+    for ms in registry.stats() {
+        println!(
+            "  {:<8} {:>7} KiB resident | {} requests over {} isolated arena(s) of {} KiB",
+            ms.name,
+            ms.resident_bytes / 1024,
+            ms.pool.checkouts,
+            ms.pool.arenas_created,
+            ms.pool.arena_bytes / 1024
+        );
+    }
+
+    // --- 4. Budgeted registry: LRU eviction ----------------------------
+    println!("\n=== resident-bytes budget ===");
+    let sizes: Vec<usize> = registry.stats().iter().map(|m| m.resident_bytes).collect();
+    // Room for the largest model plus a little — not for both.
+    let budget = sizes.iter().copied().max().unwrap_or(1) * 11 / 10;
+    let tiny = ModelRegistry::with_budget(2, budget);
+    for name in &names {
+        tiny.load_file(name.clone(), &dir.join(format!("{name}.grimc")))?;
+    }
+    println!(
+        "  budget {} KiB: {} model(s) resident ({:?}), {} evicted",
+        budget / 1024,
+        tiny.len(),
+        tiny.names(),
+        tiny.evictions()
+    );
+    assert!(tiny.resident_bytes() <= budget || tiny.len() == 1);
+    Ok(())
+}

@@ -1,0 +1,979 @@
+//! `.grimc` reader: header/checksum/section validation plus the exact
+//! mirror of [`super::encode`]'s meta grammar. Reconstruction is pure
+//! data movement — value buffers are bulk-copied into
+//! [`AlignedBuf`]s in their packed order; nothing is re-encoded or
+//! re-packed (asserted by [`super::from_bytes`] via the pack counter).
+
+use super::{fnv1a64, GRIMC_VERSION, HEADER_LEN, MAGIC};
+use crate::compiler::plan::{Activation, ExecutionPlan, GruLayerPlan, KernelImpl, Step};
+use crate::compiler::PackingStats;
+use crate::conv::ConvGeom;
+use crate::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
+use crate::gemm::pack::PackedDense;
+use crate::gemm::tiled::TileParams;
+use crate::memory::aligned::AlignedBuf;
+use crate::memory::liveness::{BufferKind, PlannedBuffer};
+use crate::memory::MemoryPlan;
+use crate::sparse::packed::{ColIndex, PackShape, PackedBcrc, PackedGroup, Span, WorkPartition};
+use crate::sparse::{Bcrc, Csr};
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+/// Meta-stream cursor over a validated artifact.
+struct Reader<'a> {
+    meta: &'a [u8],
+    pos: usize,
+    /// `(byte offset, f32 count)` per section, bounds- and
+    /// alignment-checked against `file` before decoding starts.
+    sections: Vec<(usize, usize)>,
+    file: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.meta.len(), "truncated artifact meta");
+        let out = &self.meta[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn flag(&mut self) -> anyhow::Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => anyhow::bail!("invalid flag byte {other}"),
+        }
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn usize32(&mut self) -> anyhow::Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn len32(&mut self) -> anyhow::Result<usize> {
+        let n = self.u32()? as usize;
+        // Any count must still fit in the remaining meta stream (each
+        // element is at least one byte), so a corrupted length cannot
+        // trigger an absurd allocation.
+        anyhow::ensure!(n <= self.meta.len() - self.pos, "implausible length {n}");
+        Ok(n)
+    }
+
+    fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.len32()?;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+
+    fn u16s(&mut self) -> anyhow::Result<Vec<u16>> {
+        let n = self.len32()?;
+        let b = self.take(2 * n)?;
+        Ok(b.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+    }
+
+    fn u32s(&mut self) -> anyhow::Result<Vec<u32>> {
+        let n = self.len32()?;
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn dims(&mut self) -> anyhow::Result<Vec<usize>> {
+        let n = self.len32()?;
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize)
+            .collect())
+    }
+
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.len32()?;
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Resolve a section reference to its raw bytes.
+    fn section_raw(&mut self) -> anyhow::Result<&'a [u8]> {
+        let idx = self.u32()? as usize;
+        let (off, len) = *self
+            .sections
+            .get(idx)
+            .ok_or_else(|| anyhow::anyhow!("section index {idx} out of range"))?;
+        Ok(&self.file[off..off + 4 * len])
+    }
+
+    fn section(&mut self) -> anyhow::Result<Vec<f32>> {
+        let b = self.section_raw()?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Decode a section directly into a cache-aligned buffer — one pass
+    /// over the bytes, no intermediate `Vec` (this is the bulk path for
+    /// packed value buffers and weights).
+    fn section_aligned(&mut self) -> anyhow::Result<AlignedBuf> {
+        let b = self.section_raw()?;
+        let mut buf = AlignedBuf::zeroed(b.len() / 4);
+        for (dst, c) in buf.as_mut_slice().iter_mut().zip(b.chunks_exact(4)) {
+            *dst = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(buf)
+    }
+}
+
+fn get_act(r: &mut Reader) -> anyhow::Result<Activation> {
+    Ok(match r.u8()? {
+        0 => Activation::None,
+        1 => Activation::Relu,
+        2 => Activation::Relu6,
+        other => anyhow::bail!("invalid activation tag {other}"),
+    })
+}
+
+/// Overflow-proof element count of an untrusted shape.
+fn checked_numel(dims: &[usize]) -> anyhow::Result<usize> {
+    dims.iter()
+        .try_fold(1usize, |a, d| a.checked_mul(*d))
+        .ok_or_else(|| anyhow::anyhow!("shape {dims:?} element count overflows"))
+}
+
+fn get_tensor(r: &mut Reader) -> anyhow::Result<Tensor> {
+    let dims = r.dims()?;
+    let data = r.section()?;
+    let numel = checked_numel(&dims)?;
+    anyhow::ensure!(
+        data.len() == numel,
+        "tensor section holds {} values for shape {dims:?}",
+        data.len()
+    );
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+fn get_partition(r: &mut Reader) -> anyhow::Result<WorkPartition> {
+    let nb = r.len32()?;
+    let mut buckets = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        let ns = r.len32()?;
+        let mut spans = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            spans.push(Span { group: r.u32()?, lo: r.u32()?, hi: r.u32()? });
+        }
+        buckets.push(spans);
+    }
+    let nl = r.len32()?;
+    anyhow::ensure!(nl == nb, "partition loads ({nl}) != buckets ({nb})");
+    let mut loads = Vec::with_capacity(nl);
+    for _ in 0..nl {
+        loads.push(r.u64()? as usize);
+    }
+    // Crafted loads must not be able to wrap the usize sums downstream
+    // (`total_nnz`, the nnz-total checks): if the u128 total fits usize,
+    // every partial usize sum is exact.
+    let total: u128 = loads.iter().map(|l| *l as u128).sum();
+    anyhow::ensure!(total <= usize::MAX as u128, "partition loads overflow");
+    Ok(WorkPartition { buckets, loads })
+}
+
+fn get_bcrc(r: &mut Reader) -> anyhow::Result<Bcrc> {
+    let rows = r.usize32()?;
+    let cols = r.usize32()?;
+    let enc = Bcrc {
+        rows,
+        cols,
+        reorder: r.u32s()?,
+        row_offset: r.u32s()?,
+        occurrence: r.u32s()?,
+        col_stride: r.u32s()?,
+        compact_col: r.u32s()?,
+        weights: r.section()?,
+    };
+    enc.validate().map_err(|e| anyhow::anyhow!("BCRC encoding invalid: {e}"))?;
+    Ok(enc)
+}
+
+fn get_packed_bcrc(r: &mut Reader, enc: &Bcrc) -> anyhow::Result<PackedBcrc> {
+    let rows = r.usize32()?;
+    let cols = r.usize32()?;
+    let shape = PackShape {
+        mr: r.usize32()?,
+        kc: r.usize32()?,
+        mc: r.usize32()?,
+        threads: r.usize32()?,
+    };
+    let ng = r.len32()?;
+    let mut groups = Vec::with_capacity(ng);
+    for _ in 0..ng {
+        groups.push(PackedGroup {
+            rows_lo: r.u32()?,
+            rows_hi: r.u32()?,
+            width: r.u32()?,
+            col_off: r.u32()?,
+            col_base: r.u32()?,
+            val_off: r.u64()? as usize,
+        });
+    }
+    let idx = match r.u8()? {
+        0 => ColIndex::U16(r.u16s()?),
+        1 => ColIndex::U32(r.u32s()?),
+        other => anyhow::bail!("invalid column-index tag {other}"),
+    };
+    let values = r.section_aligned()?;
+    let reorder = r.u32s()?;
+    let nnz = r.u64()? as usize;
+    let max_width = r.u64()? as usize;
+    let row_major = r.flag()?;
+    let partition = get_partition(r)?;
+
+    // Structural validation (no value recomputation): the packed layout
+    // must be internally consistent and agree with its source encoding.
+    anyhow::ensure!(rows == enc.rows && cols == enc.cols, "packed dims disagree with encoding");
+    anyhow::ensure!(reorder == enc.reorder, "packed reorder disagrees with encoding");
+    anyhow::ensure!(ng == enc.num_groups(), "packed group count disagrees with encoding");
+    anyhow::ensure!(max_width == enc.max_group_cols(), "packed max_width disagrees");
+    anyhow::ensure!(nnz == enc.nnz(), "packed nnz disagrees with encoding");
+    let idx_len = match &idx {
+        ColIndex::U16(d) => d.len(),
+        ColIndex::U32(c) => c.len(),
+    };
+    for (gi, g) in groups.iter().enumerate() {
+        anyhow::ensure!(g.rows_lo <= g.rows_hi && g.rows_hi as usize <= rows, "group {gi} rows");
+        anyhow::ensure!(g.val_off % 16 == 0, "group {gi} value block unaligned");
+        anyhow::ensure!(
+            g.col_off as usize + g.width as usize <= idx_len,
+            "group {gi} indices out of range"
+        );
+        // u128 so a crafted val_off cannot wrap the bound in release.
+        anyhow::ensure!(
+            g.val_off as u128 + g.rows() as u128 * g.width as u128 <= values.len() as u128,
+            "group {gi} values out of range"
+        );
+    }
+    let p = PackedBcrc {
+        rows,
+        cols,
+        shape,
+        groups,
+        idx,
+        values,
+        reorder,
+        nnz,
+        max_width,
+        row_major,
+        partition,
+    };
+    // Column signatures must decode to exactly the source encoding's (a
+    // cheap walk over the deduplicated signatures, not the values). This
+    // both proves idx/col_base parity and bounds every packed column
+    // index by `cols` — the kernels index the input with these without
+    // further checks.
+    let mut by_lo = std::collections::HashMap::new();
+    for k in 0..enc.num_groups() {
+        by_lo.insert(enc.group_rows(k).0, k);
+    }
+    for (gi, g) in p.groups.iter().enumerate() {
+        // `remove`, not `get`: with equal group counts this forces a
+        // bijection, so a duplicated packed group cannot stand in for an
+        // omitted one (whose rows would then never be computed).
+        let k = by_lo
+            .remove(&(g.rows_lo as usize))
+            .ok_or_else(|| anyhow::anyhow!("packed group {gi}: no unmatched source group at row {}", g.rows_lo))?;
+        let (lo, hi) = enc.group_rows(k);
+        anyhow::ensure!(
+            (g.rows_lo as usize, g.rows_hi as usize) == (lo, hi),
+            "packed group {gi} span disagrees with encoding"
+        );
+        let src = enc.group_cols(k);
+        let view = p.group_cols(gi);
+        anyhow::ensure!(view.len() == src.len(), "packed group {gi} signature width");
+        for (i, c) in src.iter().enumerate() {
+            anyhow::ensure!(
+                view.at(i) == *c as usize,
+                "packed group {gi} column {i} disagrees with encoding"
+            );
+        }
+    }
+    // row_major = true promises contiguous rows to the GEMV dot kernel;
+    // the shape must actually deliver that (false is always safe — the
+    // executor falls back to the encode-order gemv).
+    anyhow::ensure!(
+        !p.row_major || (p.shape.mr == 1 && p.shape.kc >= p.max_width),
+        "row_major flag inconsistent with pack shape"
+    );
+    p.partition
+        .validate_covers(&p.groups)
+        .map_err(|e| anyhow::anyhow!("packed partition invalid: {e}"))?;
+    anyhow::ensure!(p.partition.total_nnz() == p.nnz, "packed partition nnz total");
+    // Spans must start on mr-panel boundaries: the interleaved executor
+    // only debug_asserts this, so a release build would otherwise read
+    // wrong (in-bounds) values from a misaligned span.
+    let mr = p.shape.mr.max(1);
+    for bucket in &p.partition.buckets {
+        for s in bucket {
+            // validate_covers already proved s.group and the row range.
+            let g = &p.groups[s.group as usize];
+            anyhow::ensure!(
+                (s.lo - g.rows_lo) as usize % mr == 0,
+                "partition span at row {} is not panel-aligned (mr={mr})",
+                s.lo
+            );
+        }
+    }
+    Ok(p)
+}
+
+fn get_packed_dense(r: &mut Reader) -> anyhow::Result<PackedDense> {
+    let m = r.usize32()?;
+    let k = r.usize32()?;
+    let mr = r.usize32()?;
+    let kc = r.usize32()?;
+    let values = r.section_aligned()?;
+    anyhow::ensure!(values.len() == m * k, "packed dense values length");
+    anyhow::ensure!(mr >= 1 && kc >= 1, "packed dense block shape");
+    Ok(PackedDense { m, k, mr, kc, values })
+}
+
+fn get_csr(r: &mut Reader) -> anyhow::Result<Csr> {
+    let rows = r.usize32()?;
+    let cols = r.usize32()?;
+    let mat = Csr {
+        rows,
+        cols,
+        row_ptr: r.u32s()?,
+        col_idx: r.u32s()?,
+        values: r.section()?,
+    };
+    mat.validate().map_err(|e| anyhow::anyhow!("CSR encoding invalid: {e}"))?;
+    Ok(mat)
+}
+
+/// A GEMM weight tensor must be rank 2 — downstream code calls
+/// `as_matrix()`, which panics on other ranks, so the decoder rejects
+/// them first (the same pattern as the Winograd rank-4 check).
+fn get_matrix(r: &mut Reader) -> anyhow::Result<Tensor> {
+    let w = get_tensor(r)?;
+    anyhow::ensure!(
+        w.shape().dims().len() == 2,
+        "GEMM weights must be rank 2, got {:?}",
+        w.shape().dims()
+    );
+    Ok(w)
+}
+
+fn get_kernel(r: &mut Reader) -> anyhow::Result<KernelImpl> {
+    Ok(match r.u8()? {
+        0 => KernelImpl::NaiveDense { w: Arc::new(get_matrix(r)?) },
+        1 => {
+            let w = get_matrix(r)?;
+            let params =
+                TileParams { mr: r.usize32()?, kc: r.usize32()?, nc: r.usize32()? };
+            let packed = if r.flag()? {
+                let pd = get_packed_dense(r)?;
+                let (m, k) = w.shape().as_matrix();
+                anyhow::ensure!((pd.m, pd.k) == (m, k), "packed dense dims disagree");
+                Some(Arc::new(pd))
+            } else {
+                None
+            };
+            KernelImpl::Dense { w: Arc::new(w), params, packed }
+        }
+        2 => {
+            let w4 = get_tensor(r)?;
+            let ut = r.section()?;
+            anyhow::ensure!(
+                w4.shape().dims().len() == 4,
+                "winograd weights must be 4-d, got {:?}",
+                w4.shape().dims()
+            );
+            let (f, c) = (w4.shape().dim(0), w4.shape().dim(1));
+            anyhow::ensure!(
+                ut.len() as u128 == f as u128 * c as u128 * 16,
+                "winograd transform length"
+            );
+            KernelImpl::Winograd { w4: Arc::new(w4), ut: Arc::new(ut) }
+        }
+        3 => {
+            let mat = get_csr(r)?;
+            let part = if r.flag()? {
+                let p = get_partition(r)?;
+                // The parallel CSR executor hands each span's rows to a
+                // worker as an unchecked disjoint &mut range, so the
+                // partition must be proven to cover every row exactly
+                // once before it is trusted (mirrors the packed-BCRC
+                // path). Row-granular spans reuse validate_covers via
+                // one whole-matrix pseudo-group.
+                let all_rows = PackedGroup {
+                    rows_lo: 0,
+                    rows_hi: mat.rows as u32,
+                    width: 0,
+                    col_off: 0,
+                    col_base: 0,
+                    val_off: 0,
+                };
+                p.validate_covers(std::slice::from_ref(&all_rows))
+                    .map_err(|e| anyhow::anyhow!("csr partition invalid: {e}"))?;
+                let total: usize = p.loads.iter().sum();
+                anyhow::ensure!(total == mat.nnz(), "csr partition nnz total");
+                Some(Arc::new(p))
+            } else {
+                None
+            };
+            KernelImpl::Csr { mat: Arc::new(mat), part }
+        }
+        4 => {
+            let params = GemmParams {
+                unroll: r.usize32()?,
+                n_tile: r.usize32()?,
+                lre: r.flag()?,
+                simd: r.flag()?,
+            };
+            let enc = get_bcrc(r)?;
+            let packed = if r.flag()? {
+                Some(Arc::new(get_packed_bcrc(r, &enc)?))
+            } else {
+                None
+            };
+            KernelImpl::Bcrc { gemm: BcrcGemm { enc: Arc::new(enc), params, packed } }
+        }
+        other => anyhow::bail!("invalid kernel tag {other}"),
+    })
+}
+
+/// Bias must match the kernel's output rows (the fused epilogue indexes
+/// it per output row) or be empty (no bias).
+fn check_bias(bias: &[f32], rows: Option<usize>, what: &str) -> anyhow::Result<()> {
+    if let Some(rows) = rows {
+        anyhow::ensure!(
+            bias.is_empty() || bias.len() == rows,
+            "{what}: bias length {} != output rows {rows}",
+            bias.len()
+        );
+    }
+    Ok(())
+}
+
+/// GEMM input width (`K`) of a kernel; `None` for Winograd, which never
+/// runs as a plain GEMM.
+fn kernel_cols(k: &KernelImpl) -> Option<usize> {
+    match k {
+        KernelImpl::NaiveDense { w } | KernelImpl::Dense { w, .. } => Some(w.shape().dim(1)),
+        KernelImpl::Csr { mat, .. } => Some(mat.cols),
+        KernelImpl::Bcrc { gemm } => Some(gemm.enc.cols),
+        KernelImpl::Winograd { .. } => None,
+    }
+}
+
+fn get_gru_layer(r: &mut Reader) -> anyhow::Result<GruLayerPlan> {
+    let hidden = r.usize32()?;
+    let in_f = r.usize32()?;
+    let wz = get_kernel(r)?;
+    let wr = get_kernel(r)?;
+    let wh = get_kernel(r)?;
+    for (gate, k) in [("z", &wz), ("r", &wr), ("h", &wh)] {
+        anyhow::ensure!(
+            k.out_rows() == Some(hidden),
+            "gru gate {gate}: kernel rows disagree with hidden={hidden}"
+        );
+        anyhow::ensure!(
+            kernel_cols(k) == Some(in_f + hidden),
+            "gru gate {gate}: kernel cols disagree with in_f+hidden={}",
+            in_f + hidden
+        );
+    }
+    let bz = r.f32s()?;
+    let br = r.f32s()?;
+    let bh = r.f32s()?;
+    for (gate, b) in [("z", &bz), ("r", &br), ("h", &bh)] {
+        anyhow::ensure!(b.len() == hidden, "gru gate {gate}: bias length");
+    }
+    Ok(GruLayerPlan { hidden, in_f, wz, wr, wh, bz, br, bh })
+}
+
+fn get_step(r: &mut Reader) -> anyhow::Result<Step> {
+    Ok(match r.u8()? {
+        0 => Step::Input,
+        1 => {
+            let geom = ConvGeom {
+                in_c: r.usize32()?,
+                in_h: r.usize32()?,
+                in_w: r.usize32()?,
+                out_c: r.usize32()?,
+                kh: r.usize32()?,
+                kw: r.usize32()?,
+                stride: r.usize32()?,
+                pad: r.usize32()?,
+            };
+            anyhow::ensure!(geom.stride >= 1 && geom.kh >= 1 && geom.kw >= 1, "conv geometry");
+            // out_h()/out_w() must not underflow at inference time.
+            anyhow::ensure!(
+                geom.in_h + 2 * geom.pad >= geom.kh && geom.in_w + 2 * geom.pad >= geom.kw,
+                "conv window larger than padded input"
+            );
+            let kernel = get_kernel(r)?;
+            // The executor feeds this kernel an im2col'd input of
+            // gemm_k × gemm_n; a mismatched K would assert at run time.
+            if let Some(k) = kernel_cols(&kernel) {
+                anyhow::ensure!(
+                    k == geom.gemm_k(),
+                    "conv kernel K={k} disagrees with geometry K={}",
+                    geom.gemm_k()
+                );
+            }
+            anyhow::ensure!(
+                kernel.out_rows().is_none() || kernel.out_rows() == Some(geom.out_c),
+                "conv kernel rows disagree with out_c={}",
+                geom.out_c
+            );
+            if let KernelImpl::Winograd { w4, .. } = &kernel {
+                // The Winograd kernel indexes its transforms by the
+                // geometry's (out_c, in_c).
+                anyhow::ensure!(
+                    w4.shape().dims() == [geom.out_c, geom.in_c, geom.kh, geom.kw].as_slice(),
+                    "winograd weights {:?} disagree with conv geometry",
+                    w4.shape().dims()
+                );
+            }
+            let dead_cols = if r.flag()? {
+                let n = r.len32()?;
+                // im2col_skip asserts this length at run time — reject
+                // the mismatch here instead of panicking the scheduler.
+                anyhow::ensure!(
+                    n == geom.gemm_k(),
+                    "dead_cols length {n} != gemm K {}",
+                    geom.gemm_k()
+                );
+                let bytes = r.take(n)?;
+                Some(Arc::new(bytes.iter().map(|b| *b != 0).collect::<Vec<bool>>()))
+            } else {
+                None
+            };
+            let bias = r.f32s()?;
+            check_bias(&bias, Some(geom.out_c), "conv")?;
+            let act = get_act(r)?;
+            Step::Conv { geom, kernel, dead_cols, bias: Arc::new(bias), act }
+        }
+        2 => {
+            let (kh, kw, stride, pad) =
+                (r.usize32()?, r.usize32()?, r.usize32()?, r.usize32()?);
+            anyhow::ensure!(stride >= 1 && kh >= 1 && kw >= 1, "dwconv geometry");
+            let w = get_tensor(r)?;
+            anyhow::ensure!(
+                w.shape().dims().len() == 4
+                    && w.shape().dim(1) == 1
+                    && w.shape().dim(2) == kh
+                    && w.shape().dim(3) == kw,
+                "dwconv weights must be [C,1,{kh},{kw}], got {:?}",
+                w.shape().dims()
+            );
+            let bias = r.f32s()?;
+            check_bias(&bias, Some(w.shape().dim(0)), "dwconv")?;
+            let act = get_act(r)?;
+            Step::DwConv { kh, kw, stride, pad, w: Arc::new(w), bias: Arc::new(bias), act }
+        }
+        3 => {
+            let kernel = get_kernel(r)?;
+            let bias = r.f32s()?;
+            check_bias(&bias, kernel.out_rows(), "fc")?;
+            let act = get_act(r)?;
+            Step::Fc { kernel, bias: Arc::new(bias), act }
+        }
+        4 => {
+            let nl = r.len32()?;
+            anyhow::ensure!(nl >= 1, "empty GRU stack");
+            let mut layers = Vec::with_capacity(nl);
+            for _ in 0..nl {
+                layers.push(get_gru_layer(r)?);
+            }
+            Step::Gru { layers: Arc::new(layers) }
+        }
+        5 => Step::MaxPool2,
+        6 => Step::GlobalAvgPool,
+        7 => Step::Relu,
+        8 => Step::Relu6,
+        9 => Step::Add { act: get_act(r)? },
+        10 => Step::Flatten,
+        11 => Step::Softmax,
+        12 => Step::Noop,
+        other => anyhow::bail!("invalid step tag {other}"),
+    })
+}
+
+fn get_memory(r: &mut Reader, n: usize) -> anyhow::Result<MemoryPlan> {
+    let arena_len = r.u64()? as usize;
+    let nb = r.len32()?;
+    let mut buffers = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        let b = PlannedBuffer {
+            node: r.usize32()?,
+            kind: match r.u8()? {
+                0 => BufferKind::Value,
+                1 => BufferKind::Scratch,
+                other => anyhow::bail!("invalid buffer kind {other}"),
+            },
+            len: r.u64()? as usize,
+            first_use: r.usize32()?,
+            last_use: r.usize32()?,
+            offset: r.u64()? as usize,
+        };
+        // u128 so crafted offsets cannot wrap the in-arena bound (the
+        // MemoryPlan overlap validation below adds these in usize).
+        anyhow::ensure!(
+            b.offset as u128 + b.len as u128 <= arena_len as u128,
+            "buffer for node {} exceeds arena",
+            b.node
+        );
+        anyhow::ensure!(b.first_use <= b.last_use, "buffer for node {} lifetime inverted", b.node);
+        buffers.push(b);
+    }
+    // The planner sizes the arena to exactly the furthest buffer end, so
+    // an artifact must justify every byte it asks the workspace pool to
+    // allocate — a crafted huge arena_len cannot OOM the serving host.
+    let needed = buffers.iter().map(|b| b.offset as u128 + b.len as u128).max().unwrap_or(0);
+    anyhow::ensure!(
+        arena_len as u128 == needed,
+        "arena length {arena_len} disagrees with buffer extent {needed}"
+    );
+    let mut index_of = |r: &mut Reader| -> anyhow::Result<Vec<Option<usize>>> {
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = r.u32()?;
+            if x == u32::MAX {
+                v.push(None);
+            } else {
+                anyhow::ensure!((x as usize) < nb, "buffer index {x} out of range");
+                v.push(Some(x as usize));
+            }
+        }
+        Ok(v)
+    };
+    let value_of = index_of(r)?;
+    let scratch_of = index_of(r)?;
+    let mut shapes = Vec::with_capacity(n);
+    for _ in 0..n {
+        shapes.push(r.dims()?);
+    }
+    let mem = MemoryPlan { arena_len, buffers, value_of, scratch_of, shapes };
+    mem.validate().map_err(|e| anyhow::anyhow!("memory plan invalid: {e}"))?;
+    Ok(mem)
+}
+
+/// Parse + validate a whole `.grimc` file.
+pub fn decode_artifact(data: &[u8]) -> anyhow::Result<ExecutionPlan> {
+    anyhow::ensure!(data.len() >= HEADER_LEN, "truncated .grimc artifact (no header)");
+    anyhow::ensure!(&data[0..4] == MAGIC, "not a .grimc artifact (bad magic)");
+    let version = u32::from_le_bytes(data[4..8].try_into().expect("4 bytes"));
+    anyhow::ensure!(
+        version == GRIMC_VERSION,
+        "unsupported .grimc version {version} (this build reads version {GRIMC_VERSION}; recompile the model)"
+    );
+    let stored = u64::from_le_bytes(data[8..16].try_into().expect("8 bytes"));
+    anyhow::ensure!(
+        fnv1a64(&data[16..]) == stored,
+        "checksum mismatch — corrupted .grimc artifact"
+    );
+    let meta_len = u64::from_le_bytes(data[16..24].try_into().expect("8 bytes")) as usize;
+    let n_sections = u32::from_le_bytes(data[24..28].try_into().expect("4 bytes")) as usize;
+    let meta_off = HEADER_LEN
+        .checked_add(n_sections.checked_mul(16).ok_or_else(|| anyhow::anyhow!("section count overflow"))?)
+        .ok_or_else(|| anyhow::anyhow!("section count overflow"))?;
+    anyhow::ensure!(
+        meta_off <= data.len() && data.len() - meta_off >= meta_len,
+        "truncated .grimc artifact (meta out of range)"
+    );
+    let mut sections = Vec::with_capacity(n_sections);
+    for i in 0..n_sections {
+        let t = HEADER_LEN + 16 * i;
+        let off = u64::from_le_bytes(data[t..t + 8].try_into().expect("8 bytes")) as usize;
+        let len = u64::from_le_bytes(data[t + 8..t + 16].try_into().expect("8 bytes")) as usize;
+        anyhow::ensure!(off % 64 == 0, "misaligned section {i} (offset {off})");
+        anyhow::ensure!(off >= meta_off + meta_len, "section {i} overlaps the meta stream");
+        let end = len
+            .checked_mul(4)
+            .and_then(|b| off.checked_add(b))
+            .ok_or_else(|| anyhow::anyhow!("section {i} length overflow"))?;
+        anyhow::ensure!(end <= data.len(), "truncated .grimc artifact (section {i} out of range)");
+        sections.push((off, len));
+    }
+    let mut r = Reader {
+        meta: &data[meta_off..meta_off + meta_len],
+        pos: 0,
+        sections,
+        file: data,
+    };
+    let plan = decode_plan(&mut r)?;
+    anyhow::ensure!(r.pos == r.meta.len(), "trailing bytes in artifact meta");
+    Ok(plan)
+}
+
+/// Cross-step consistency: every length relation the executor's kernels
+/// `assert!` at run time is proven here instead, so a checksum-valid but
+/// inconsistent artifact is rejected at load — it can neither panic the
+/// scheduler thread nor silently compute garbage.
+fn validate_plan_consistency(plan: &ExecutionPlan) -> anyhow::Result<()> {
+    let n = plan.steps.len();
+    let shapes = &plan.memory.shapes;
+    // The compiler emits steps in id order (ids are the topological
+    // program points the memory plan's lifetimes are measured in), and
+    // every edge points backward — enforce both so a reordered artifact
+    // cannot make a consumer run before its producer.
+    for (pos, (id, _)) in plan.steps.iter().enumerate() {
+        anyhow::ensure!(*id == pos, "steps out of id order at position {pos}");
+    }
+    for (id, step) in &plan.steps {
+        if matches!(step, Step::Input | Step::Noop) {
+            // These steps compute nothing — the executor reads the
+            // caller's tensor for Input and skips Noops. A planned
+            // buffer on them would shadow the request tensor (consumers
+            // would read unwritten arena bytes) or invite clobbering.
+            anyhow::ensure!(
+                plan.memory.value_of[*id].is_none() && plan.memory.scratch_of[*id].is_none(),
+                "node {id}: Input/Noop steps own no buffers"
+            );
+            continue;
+        }
+        for src in &plan.inputs[*id] {
+            anyhow::ensure!(src < id, "node {id} reads node {src}, which runs later");
+        }
+    }
+    for (id, step) in &plan.steps {
+        let id = *id;
+        if matches!(step, Step::Input | Step::Noop) {
+            continue;
+        }
+        let need = if matches!(step, Step::Add { .. }) { 2 } else { 1 };
+        anyhow::ensure!(
+            plan.inputs[id].len() >= need,
+            "node {id}: {need} input(s) required"
+        );
+        let in0 = &shapes[plan.inputs[id][0]];
+        let out_numel = checked_numel(&shapes[id])?;
+        let in_numel = checked_numel(in0)?;
+        match step {
+            Step::Conv { geom, .. } => {
+                anyhow::ensure!(
+                    in_numel as u128 == geom.in_c as u128 * geom.in_h as u128 * geom.in_w as u128,
+                    "node {id}: conv input numel {in_numel} disagrees with geometry"
+                );
+                anyhow::ensure!(
+                    out_numel as u128
+                        == geom.out_c as u128 * geom.out_h() as u128 * geom.out_w() as u128,
+                    "node {id}: conv output numel {out_numel} disagrees with geometry"
+                );
+            }
+            Step::DwConv { kh, kw, stride, pad, w, .. } => {
+                anyhow::ensure!(in0.len() == 3, "node {id}: dwconv input must be rank 3");
+                let (c, h, wd) = (in0[0], in0[1], in0[2]);
+                anyhow::ensure!(
+                    c == w.shape().dim(0),
+                    "node {id}: dwconv channels disagree with weights"
+                );
+                anyhow::ensure!(
+                    h + 2 * pad >= *kh && wd + 2 * pad >= *kw,
+                    "node {id}: dwconv window larger than padded input"
+                );
+                let oh = (h + 2 * pad - kh) / stride + 1;
+                let ow = (wd + 2 * pad - kw) / stride + 1;
+                anyhow::ensure!(
+                    out_numel as u128 == c as u128 * oh as u128 * ow as u128,
+                    "node {id}: dwconv output numel disagrees with geometry"
+                );
+            }
+            Step::Fc { kernel, .. } => {
+                anyhow::ensure!(
+                    kernel_cols(kernel) == Some(in_numel),
+                    "node {id}: fc kernel cols disagree with input numel {in_numel}"
+                );
+                anyhow::ensure!(
+                    kernel.out_rows() == Some(out_numel),
+                    "node {id}: fc output numel disagrees with kernel rows"
+                );
+            }
+            Step::Gru { layers } => {
+                anyhow::ensure!(in0.len() == 2, "node {id}: gru input must be rank 2");
+                let (t, mut in_f) = (in0[0], in0[1]);
+                for (l, layer) in layers.iter().enumerate() {
+                    anyhow::ensure!(
+                        layer.in_f == in_f,
+                        "node {id}: gru layer {l} in_f disagrees"
+                    );
+                    in_f = layer.hidden;
+                }
+                anyhow::ensure!(
+                    out_numel as u128 == t as u128 * in_f as u128,
+                    "node {id}: gru output numel disagrees with [T, hidden]"
+                );
+            }
+            Step::MaxPool2 => {
+                anyhow::ensure!(in0.len() == 3, "node {id}: maxpool input must be rank 3");
+                anyhow::ensure!(
+                    out_numel as u128
+                        == in0[0] as u128 * (in0[1] / 2) as u128 * (in0[2] / 2) as u128,
+                    "node {id}: maxpool output numel disagrees"
+                );
+            }
+            Step::GlobalAvgPool => {
+                anyhow::ensure!(in0.len() == 3, "node {id}: gap input must be rank 3");
+                anyhow::ensure!(out_numel == in0[0], "node {id}: gap output numel disagrees");
+            }
+            Step::Relu | Step::Relu6 | Step::Flatten | Step::Softmax => {
+                anyhow::ensure!(
+                    out_numel == in_numel,
+                    "node {id}: elementwise output numel disagrees with input"
+                );
+            }
+            Step::Add { .. } => {
+                let in1 = checked_numel(&shapes[plan.inputs[id][1]])?;
+                anyhow::ensure!(
+                    out_numel == in_numel && out_numel == in1,
+                    "node {id}: add operand numels disagree"
+                );
+            }
+            Step::Input | Step::Noop => unreachable!("skipped above"),
+        }
+        // Planned buffer lengths must match what the executor will
+        // carve: the value buffer holds the node's output, the scratch
+        // buffer exactly the layout module's per-step scratch.
+        if let Some((_, len)) = plan.memory.value_range(id) {
+            anyhow::ensure!(
+                len == out_numel,
+                "node {id}: value buffer length {len} != output numel {out_numel}"
+            );
+        } else {
+            anyhow::bail!("node {id}: missing planned value buffer");
+        }
+        let in_dims = plan.inputs[id].first().map(|s| shapes[*s].as_slice());
+        let want = crate::memory::layout::step_scratch_len(step, in_dims);
+        match plan.memory.scratch_range(id) {
+            Some((_, len)) => anyhow::ensure!(
+                len == want,
+                "node {id}: scratch length {len} != required {want}"
+            ),
+            None => anyhow::ensure!(want == 0, "node {id}: missing scratch buffer"),
+        }
+    }
+
+    // Stored buffer lifetimes must *contain* the true use intervals the
+    // decoded steps imply. MemoryPlan::validate (already run) proves
+    // lifetime-overlapping buffers never share bytes; containment here
+    // makes that proof apply to the real execution, so faked lifetimes
+    // cannot smuggle in aliasing.
+    let mem = &plan.memory;
+    let is_noop = |id: usize| matches!(plan.steps[id].1, Step::Noop | Step::Input);
+    for (id, step) in &plan.steps {
+        let id = *id;
+        if matches!(step, Step::Input | Step::Noop) {
+            continue;
+        }
+        // Writer: node id writes its value (and scratch) at step id. An
+        // aliased Flatten is the exception — the executor skips the copy
+        // entirely, so it performs no write of its own.
+        let aliased_view = matches!(step, Step::Flatten)
+            && mem.value_of[plan.inputs[id][0]] == mem.value_of[id];
+        let written = if aliased_view {
+            [None, mem.scratch_of[id]]
+        } else {
+            [mem.value_of[id], mem.scratch_of[id]]
+        };
+        for b in written.into_iter().flatten() {
+            let b = &mem.buffers[b];
+            anyhow::ensure!(
+                b.first_use <= id && id <= b.last_use,
+                "node {id}: buffer lifetime excludes its own step"
+            );
+        }
+        // Readers: every input's value buffer must be live here (an
+        // aliased view reads nothing — it *is* its input's bytes).
+        if !aliased_view {
+            for &src in &plan.inputs[id] {
+                if let Some(b) = mem.value_of[src] {
+                    let b = &mem.buffers[b];
+                    anyhow::ensure!(
+                        b.first_use <= id && id <= b.last_use,
+                        "node {id}: input {src}'s buffer is not live when read"
+                    );
+                }
+            }
+        }
+    }
+    if let Some(b) = mem.value_of[plan.output_id] {
+        anyhow::ensure!(
+            mem.buffers[b].last_use >= n,
+            "output buffer dies before extraction"
+        );
+    }
+    // Value-buffer sharing is legal only for the view-aliasing the
+    // executor actually skips the copy for: a `Flatten` whose input owns
+    // the same buffer. Any other sharing would let one step clobber
+    // another's live output.
+    let mut owner: Vec<Option<usize>> = vec![None; mem.buffers.len()];
+    for (id, step) in &plan.steps {
+        let id = *id;
+        if is_noop(id) {
+            continue;
+        }
+        if let Some(b) = mem.value_of[id] {
+            match owner[b] {
+                None => owner[b] = Some(id),
+                Some(_) => {
+                    let aliases_input = matches!(step, Step::Flatten)
+                        && mem.value_of[plan.inputs[id][0]] == Some(b);
+                    anyhow::ensure!(
+                        aliases_input,
+                        "node {id}: shares a value buffer without being a view of it"
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn decode_plan(r: &mut Reader) -> anyhow::Result<ExecutionPlan> {
+    let name = r.str()?;
+    let input_id = r.usize32()?;
+    let output_id = r.usize32()?;
+    let n = r.len32()?;
+    anyhow::ensure!(n >= 1, "empty plan");
+    anyhow::ensure!(input_id < n && output_id < n, "input/output id out of range");
+    let mut steps = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    for _ in 0..n {
+        let id = r.usize32()?;
+        anyhow::ensure!(id < n, "step id {id} out of range");
+        anyhow::ensure!(!seen[id], "duplicate step id {id}");
+        seen[id] = true;
+        steps.push((id, get_step(r)?));
+    }
+    let mut inputs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ni = r.len32()?;
+        let mut ins = Vec::with_capacity(ni);
+        for _ in 0..ni {
+            let src = r.usize32()?;
+            anyhow::ensure!(src < n, "input edge {src} out of range");
+            ins.push(src);
+        }
+        inputs.push(ins);
+    }
+    let memory = get_memory(r, n)?;
+    let packing = PackingStats {
+        enabled: r.flag()?,
+        bcrc_layers: r.usize32()?,
+        dense_layers: r.usize32()?,
+        csr_layers: r.usize32()?,
+        u16_layers: r.usize32()?,
+        packed_bytes: r.u64()? as usize,
+    };
+    let plan = ExecutionPlan { name, steps, inputs, input_id, output_id, memory, packing };
+    validate_plan_consistency(&plan)?;
+    Ok(plan)
+}

@@ -1,0 +1,383 @@
+//! `.grimc` writer: meta-stream serialization of a compiled
+//! [`ExecutionPlan`] plus 64-byte-aligned f32 sections (see the format
+//! grammar in the module docs — [`super::decode`] is the exact mirror).
+
+use super::{fnv1a64, GRIMC_VERSION, HEADER_LEN, MAGIC};
+use crate::compiler::plan::{Activation, ExecutionPlan, GruLayerPlan, KernelImpl, Step};
+use crate::gemm::pack::PackedDense;
+use crate::memory::liveness::BufferKind;
+use crate::sparse::packed::{ColIndex, PackedBcrc, WorkPartition};
+use crate::sparse::{Bcrc, Csr};
+use crate::tensor::Tensor;
+
+/// Meta-stream + section accumulator.
+#[derive(Default)]
+pub struct Writer {
+    meta: Vec<u8>,
+    /// Raw little-endian f32 bytes, one entry per section.
+    sections: Vec<Vec<u8>>,
+}
+
+fn round64(x: usize) -> usize {
+    x.div_ceil(64) * 64
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.meta.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.meta.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.meta.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.meta.extend_from_slice(s.as_bytes());
+    }
+
+    fn u16s(&mut self, v: &[u16]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.meta.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.meta.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn dims(&mut self, v: &[usize]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.u32(*x as u32);
+        }
+    }
+
+    /// Inline f32 array (small payloads: biases, GRU gate biases).
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.meta.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Bulk f32 payload: stored as a 64 B-aligned section, referenced
+    /// from the meta stream by index.
+    fn section(&mut self, v: &[f32]) {
+        let mut bytes = Vec::with_capacity(4 * v.len());
+        for x in v {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        self.u32(self.sections.len() as u32);
+        self.sections.push(bytes);
+    }
+
+    /// Assemble header + table + meta + aligned section blobs and seal
+    /// the checksum.
+    pub fn finish(self) -> Vec<u8> {
+        let n = self.sections.len();
+        let meta_off = HEADER_LEN + 16 * n;
+        let mut pos = meta_off + self.meta.len();
+        let mut offs = Vec::with_capacity(n);
+        for s in &self.sections {
+            pos = round64(pos);
+            offs.push(pos);
+            pos += s.len();
+        }
+        let mut out = vec![0u8; pos];
+        out[0..4].copy_from_slice(MAGIC);
+        out[4..8].copy_from_slice(&GRIMC_VERSION.to_le_bytes());
+        out[16..24].copy_from_slice(&(self.meta.len() as u64).to_le_bytes());
+        out[24..28].copy_from_slice(&(n as u32).to_le_bytes());
+        for (i, s) in self.sections.iter().enumerate() {
+            let t = HEADER_LEN + 16 * i;
+            out[t..t + 8].copy_from_slice(&(offs[i] as u64).to_le_bytes());
+            out[t + 8..t + 16].copy_from_slice(&((s.len() / 4) as u64).to_le_bytes());
+        }
+        out[meta_off..meta_off + self.meta.len()].copy_from_slice(&self.meta);
+        for (i, s) in self.sections.iter().enumerate() {
+            out[offs[i]..offs[i] + s.len()].copy_from_slice(s);
+        }
+        let ck = fnv1a64(&out[16..]);
+        out[8..16].copy_from_slice(&ck.to_le_bytes());
+        out
+    }
+}
+
+fn put_act(w: &mut Writer, act: Activation) {
+    w.u8(match act {
+        Activation::None => 0,
+        Activation::Relu => 1,
+        Activation::Relu6 => 2,
+    });
+}
+
+fn put_tensor(w: &mut Writer, t: &Tensor) {
+    w.dims(t.shape().dims());
+    w.section(t.data());
+}
+
+fn put_partition(w: &mut Writer, p: &WorkPartition) {
+    w.u32(p.buckets.len() as u32);
+    for b in &p.buckets {
+        w.u32(b.len() as u32);
+        for s in b {
+            w.u32(s.group);
+            w.u32(s.lo);
+            w.u32(s.hi);
+        }
+    }
+    w.u32(p.loads.len() as u32);
+    for l in &p.loads {
+        w.u64(*l as u64);
+    }
+}
+
+fn put_bcrc(w: &mut Writer, enc: &Bcrc) {
+    w.u32(enc.rows as u32);
+    w.u32(enc.cols as u32);
+    w.u32s(&enc.reorder);
+    w.u32s(&enc.row_offset);
+    w.u32s(&enc.occurrence);
+    w.u32s(&enc.col_stride);
+    w.u32s(&enc.compact_col);
+    w.section(&enc.weights);
+}
+
+fn put_packed_bcrc(w: &mut Writer, p: &PackedBcrc) {
+    w.u32(p.rows as u32);
+    w.u32(p.cols as u32);
+    w.u32(p.shape.mr as u32);
+    w.u32(p.shape.kc as u32);
+    w.u32(p.shape.mc as u32);
+    w.u32(p.shape.threads as u32);
+    w.u32(p.groups.len() as u32);
+    for g in &p.groups {
+        w.u32(g.rows_lo);
+        w.u32(g.rows_hi);
+        w.u32(g.width);
+        w.u32(g.col_off);
+        w.u32(g.col_base);
+        w.u64(g.val_off as u64);
+    }
+    match &p.idx {
+        ColIndex::U16(d) => {
+            w.u8(0);
+            w.u16s(d);
+        }
+        ColIndex::U32(c) => {
+            w.u8(1);
+            w.u32s(c);
+        }
+    }
+    w.section(p.values.as_slice());
+    w.u32s(&p.reorder);
+    w.u64(p.nnz as u64);
+    w.u64(p.max_width as u64);
+    w.u8(p.row_major as u8);
+    put_partition(w, &p.partition);
+}
+
+fn put_packed_dense(w: &mut Writer, p: &PackedDense) {
+    w.u32(p.m as u32);
+    w.u32(p.k as u32);
+    w.u32(p.mr as u32);
+    w.u32(p.kc as u32);
+    w.section(p.values.as_slice());
+}
+
+fn put_csr(w: &mut Writer, mat: &Csr) {
+    w.u32(mat.rows as u32);
+    w.u32(mat.cols as u32);
+    w.u32s(&mat.row_ptr);
+    w.u32s(&mat.col_idx);
+    w.section(&mat.values);
+}
+
+fn put_kernel(w: &mut Writer, k: &KernelImpl) {
+    match k {
+        KernelImpl::NaiveDense { w: wt } => {
+            w.u8(0);
+            put_tensor(w, wt);
+        }
+        KernelImpl::Dense { w: wt, params, packed } => {
+            w.u8(1);
+            put_tensor(w, wt);
+            w.u32(params.mr as u32);
+            w.u32(params.kc as u32);
+            w.u32(params.nc as u32);
+            match packed {
+                Some(p) => {
+                    w.u8(1);
+                    put_packed_dense(w, p);
+                }
+                None => w.u8(0),
+            }
+        }
+        KernelImpl::Winograd { w4, ut } => {
+            w.u8(2);
+            put_tensor(w, w4);
+            w.section(ut);
+        }
+        KernelImpl::Csr { mat, part } => {
+            w.u8(3);
+            put_csr(w, mat);
+            match part {
+                Some(p) => {
+                    w.u8(1);
+                    put_partition(w, p);
+                }
+                None => w.u8(0),
+            }
+        }
+        KernelImpl::Bcrc { gemm } => {
+            w.u8(4);
+            w.u32(gemm.params.unroll as u32);
+            w.u32(gemm.params.n_tile as u32);
+            w.u8(gemm.params.lre as u8);
+            w.u8(gemm.params.simd as u8);
+            put_bcrc(w, &gemm.enc);
+            match &gemm.packed {
+                Some(p) => {
+                    w.u8(1);
+                    put_packed_bcrc(w, p);
+                }
+                None => w.u8(0),
+            }
+        }
+    }
+}
+
+fn put_gru_layer(w: &mut Writer, l: &GruLayerPlan) {
+    w.u32(l.hidden as u32);
+    w.u32(l.in_f as u32);
+    put_kernel(w, &l.wz);
+    put_kernel(w, &l.wr);
+    put_kernel(w, &l.wh);
+    w.f32s(&l.bz);
+    w.f32s(&l.br);
+    w.f32s(&l.bh);
+}
+
+fn put_step(w: &mut Writer, step: &Step) {
+    match step {
+        Step::Input => w.u8(0),
+        Step::Conv { geom, kernel, dead_cols, bias, act } => {
+            w.u8(1);
+            for v in [
+                geom.in_c, geom.in_h, geom.in_w, geom.out_c, geom.kh, geom.kw, geom.stride,
+                geom.pad,
+            ] {
+                w.u32(v as u32);
+            }
+            put_kernel(w, kernel);
+            match dead_cols {
+                Some(d) => {
+                    w.u8(1);
+                    w.u32(d.len() as u32);
+                    for b in d.iter() {
+                        w.u8(*b as u8);
+                    }
+                }
+                None => w.u8(0),
+            }
+            w.f32s(bias);
+            put_act(w, *act);
+        }
+        Step::DwConv { kh, kw, stride, pad, w: wt, bias, act } => {
+            w.u8(2);
+            for v in [*kh, *kw, *stride, *pad] {
+                w.u32(v as u32);
+            }
+            put_tensor(w, wt);
+            w.f32s(bias);
+            put_act(w, *act);
+        }
+        Step::Fc { kernel, bias, act } => {
+            w.u8(3);
+            put_kernel(w, kernel);
+            w.f32s(bias);
+            put_act(w, *act);
+        }
+        Step::Gru { layers } => {
+            w.u8(4);
+            w.u32(layers.len() as u32);
+            for l in layers.iter() {
+                put_gru_layer(w, l);
+            }
+        }
+        Step::MaxPool2 => w.u8(5),
+        Step::GlobalAvgPool => w.u8(6),
+        Step::Relu => w.u8(7),
+        Step::Relu6 => w.u8(8),
+        Step::Add { act } => {
+            w.u8(9);
+            put_act(w, *act);
+        }
+        Step::Flatten => w.u8(10),
+        Step::Softmax => w.u8(11),
+        Step::Noop => w.u8(12),
+    }
+}
+
+/// Serialize the full plan into `w`'s meta stream + sections.
+pub fn encode_plan(w: &mut Writer, plan: &ExecutionPlan) -> anyhow::Result<()> {
+    let n = plan.steps.len();
+    anyhow::ensure!(plan.inputs.len() == n, "plan inputs/steps length mismatch");
+    anyhow::ensure!(plan.memory.shapes.len() == n, "plan is missing its memory plan");
+    w.str(&plan.name);
+    w.u32(plan.input_id as u32);
+    w.u32(plan.output_id as u32);
+    w.u32(n as u32);
+    for (id, step) in &plan.steps {
+        w.u32(*id as u32);
+        put_step(w, step);
+    }
+    for ins in &plan.inputs {
+        w.u32(ins.len() as u32);
+        for i in ins {
+            w.u32(*i as u32);
+        }
+    }
+    // Memory plan.
+    let mem = &plan.memory;
+    w.u64(mem.arena_len as u64);
+    w.u32(mem.buffers.len() as u32);
+    for b in &mem.buffers {
+        w.u32(b.node as u32);
+        w.u8(match b.kind {
+            BufferKind::Value => 0,
+            BufferKind::Scratch => 1,
+        });
+        w.u64(b.len as u64);
+        w.u32(b.first_use as u32);
+        w.u32(b.last_use as u32);
+        w.u64(b.offset as u64);
+    }
+    for v in &mem.value_of {
+        w.u32(v.map(|x| x as u32).unwrap_or(u32::MAX));
+    }
+    for v in &mem.scratch_of {
+        w.u32(v.map(|x| x as u32).unwrap_or(u32::MAX));
+    }
+    for s in &mem.shapes {
+        w.dims(s);
+    }
+    // Packing stats.
+    let ps = &plan.packing;
+    w.u8(ps.enabled as u8);
+    w.u32(ps.bcrc_layers as u32);
+    w.u32(ps.dense_layers as u32);
+    w.u32(ps.csr_layers as u32);
+    w.u32(ps.u16_layers as u32);
+    w.u64(ps.packed_bytes as u64);
+    Ok(())
+}

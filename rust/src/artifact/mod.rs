@@ -1,0 +1,134 @@
+//! `.grimc` — ahead-of-time compiled model artifacts.
+//!
+//! GRIM's part (a) is *ahead-of-time* compilation: everything expensive
+//! (BCR encoding, reorder, epilogue fusion, kc×mr cache-blocked packing,
+//! memory planning) happens offline, and the serving side only loads and
+//! runs — the deployment model of the paper's baselines (MNN /
+//! TensorFlow-Lite converted models) and of PatDNN's compiler-generated
+//! code. Where the `.grim` container ([`crate::formats`]) ships *source*
+//! weights that every process start must re-compile, a `.grimc` artifact
+//! ships the finished [`ExecutionPlan`]: step list, fused epilogues,
+//! [`crate::sparse::PackedBcrc`] / [`crate::gemm::PackedDense`] value
+//! buffers, static [`crate::sparse::WorkPartition`]s, the
+//! [`crate::memory::MemoryPlan`], and [`PackingStats`]. [`load_grimc`]
+//! reconstructs an `Engine`-ready plan with **no re-encoding and no
+//! re-packing** — the load path asserts, via
+//! [`crate::sparse::packed::pack_invocations`], that it never invoked a
+//! packing transform. The only per-pool adaptation happens later, in
+//! `Engine::new`, and is pure re-scheduling.
+//!
+//! # On-disk layout (all integers little-endian)
+//!
+//! ```text
+//! 0   magic      b"GRMC"
+//! 4   version    u32 (currently 1; bumped on any format change)
+//! 8   checksum   u64 FNV-1a over every byte from offset 16 to EOF
+//! 16  meta_len   u64 length of the meta stream in bytes
+//! 24  n_sections u32
+//! 28  section table: n × { off u64, len u64 }   (len in f32 elements)
+//! …   meta stream (structural data; references sections by index)
+//! …   zero padding to the next 64-byte boundary
+//! …   section blobs: raw little-endian f32 data, each starting at its
+//!     table offset — **every section offset is a multiple of 64**, so a
+//!     memory-mapped artifact can hand value buffers to the kernels at
+//!     the same cache-line alignment the in-memory
+//!     [`crate::memory::AlignedBuf`] guarantees, with no re-interleaving.
+//! ```
+//!
+//! The loader verifies, in order: length ≥ header, magic, version
+//! (version skew reports *before* the checksum so a skewed-but-intact
+//! file gives the right diagnosis), checksum over `[16..]`, section-table
+//! bounds and 64-byte alignment, then decodes the meta stream with
+//! structural validation (BCRC invariants, partition coverage, memory
+//! plan non-overlap). Truncated files, flipped bytes, version skew, and
+//! misaligned sections are all rejected (`tests/artifact_roundtrip`).
+
+pub mod decode;
+pub mod encode;
+
+use crate::compiler::plan::ExecutionPlan;
+use crate::compiler::PackingStats;
+use std::path::Path;
+
+pub(crate) const MAGIC: &[u8; 4] = b"GRMC";
+
+/// Current `.grimc` format version.
+pub const GRIMC_VERSION: u32 = 1;
+
+/// Fixed header bytes before the section table.
+pub(crate) const HEADER_LEN: usize = 28;
+
+/// The header checksum: FNV-1a 64 over every byte from offset 16 to the
+/// end of the file. Public so robustness tests can re-seal deliberately
+/// corrupted artifacts.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a compiled plan to `.grimc` bytes.
+pub fn to_bytes(plan: &ExecutionPlan) -> anyhow::Result<Vec<u8>> {
+    let mut w = encode::Writer::default();
+    encode::encode_plan(&mut w, plan)?;
+    Ok(w.finish())
+}
+
+/// Reconstruct a compiled plan from `.grimc` bytes. Performs full header
+/// + checksum + structural validation; never re-encodes or re-packs.
+pub fn from_bytes(data: &[u8]) -> anyhow::Result<ExecutionPlan> {
+    let packs_before = crate::sparse::packed::pack_invocations();
+    let plan = decode::decode_artifact(data)?;
+    anyhow::ensure!(
+        crate::sparse::packed::pack_invocations() == packs_before,
+        "artifact load must not re-pack weights"
+    );
+    Ok(plan)
+}
+
+/// Save a fully compiled [`ExecutionPlan`] as a `.grimc` artifact.
+pub fn save_grimc(path: &Path, plan: &ExecutionPlan) -> anyhow::Result<()> {
+    let bytes = to_bytes(plan)?;
+    std::fs::write(path, &bytes)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Load a `.grimc` artifact into an `Engine`-ready [`ExecutionPlan`].
+pub fn load_grimc(path: &Path) -> anyhow::Result<ExecutionPlan> {
+    let data = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    from_bytes(&data).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+/// One-line artifact summary (CLI `grim compile` output).
+pub fn describe_stats(plan: &ExecutionPlan, file_bytes: usize) -> String {
+    let PackingStats { bcrc_layers, dense_layers, csr_layers, .. } = plan.packing;
+    format!(
+        "{}: {} steps, {} KiB weights, {} KiB arena, {} KiB on disk ({} bcrc / {} dense / {} csr packed layers)",
+        plan.name,
+        plan.steps.len(),
+        plan.storage_bytes() / 1024,
+        plan.memory.arena_bytes() / 1024,
+        file_bytes / 1024,
+        bcrc_layers,
+        dense_layers,
+        csr_layers
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+}

@@ -29,6 +29,63 @@ use crate::gemm::pack::{self, CacheParams, PackOverrides, PackedDense};
 use crate::sparse::packed::WorkPartition;
 use std::sync::Arc;
 
+/// Rebuild the static work partitions of every packed/partitioned kernel
+/// in `steps` for `threads` worker buckets. `Engine::new` calls this when
+/// its pool size differs from the compile-time bucket count (default 8),
+/// so freshly compiled plans — and `.grimc` artifacts compiled on another
+/// host — adapt their parallel schedule to the machine they actually run
+/// on instead of draining several (or fractional) buckets per worker.
+///
+/// Pure re-scheduling: only span lists change, never values or indices —
+/// packed execution is bit-identical for any bucket count (see
+/// `tests/packed_parity` and the `packed_parallel_any_pool_size` kernel
+/// test), so this can never change results. No re-packing happens here
+/// (the [`crate::sparse::packed::pack_invocations`] counter is untouched).
+/// Returns the number of kernels whose partition was rebuilt.
+pub fn rebalance_partitions(steps: &mut [(usize, Step)], threads: usize) -> usize {
+    let t = threads.max(1);
+    let mut rebuilt = 0usize;
+    let mut visit = |k: &mut KernelImpl| match k {
+        KernelImpl::Bcrc { gemm } => {
+            if let Some(p) = gemm.packed.as_mut() {
+                if p.partition.num_buckets() != t {
+                    let part = WorkPartition::lpt(&p.groups, p.shape.mr, t);
+                    // On the production paths (compile → engine, or
+                    // artifact load → engine) this Arc is uniquely owned
+                    // and make_mut mutates in place. A *shared* plan
+                    // (e.g. `plan.clone()` in tests) pays a one-time
+                    // deep copy of the packed buffer here; see the
+                    // ROADMAP note about hoisting the partition out of
+                    // `PackedBcrc` if that ever matters in production.
+                    Arc::make_mut(p).partition = part;
+                    rebuilt += 1;
+                }
+            }
+        }
+        KernelImpl::Csr { mat, part } => {
+            if part.as_ref().is_some_and(|wp| wp.num_buckets() != t) {
+                *part = Some(Arc::new(WorkPartition::contiguous(&csr_row_nnz(mat), t)));
+                rebuilt += 1;
+            }
+        }
+        _ => {}
+    };
+    for (_, step) in steps.iter_mut() {
+        match step {
+            Step::Conv { kernel, .. } | Step::Fc { kernel, .. } => visit(kernel),
+            Step::Gru { layers } => {
+                for l in Arc::make_mut(layers).iter_mut() {
+                    visit(&mut l.wz);
+                    visit(&mut l.wr);
+                    visit(&mut l.wh);
+                }
+            }
+            _ => {}
+        }
+    }
+    rebuilt
+}
+
 /// Packing-pass options (part of `CompileOptions`).
 #[derive(Clone, Copy, Debug)]
 pub struct PackOptions {

@@ -33,15 +33,28 @@ impl<'a> Batcher<'a> {
     }
 
     /// Block for the next batch; None when the queue is closed and empty.
+    ///
+    /// Batches are homogeneous in target model: the first request fixes
+    /// the model, further requests are gathered only while they match.
+    /// A head-of-line request for a *different* model ships the batch
+    /// immediately (no point waiting out the deadline — the batch cannot
+    /// grow past it without reordering), and that request seeds the next
+    /// batch.
     pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
         let first = self.queue.pop()?;
+        let model = first.model.clone();
         let mut batch = vec![first];
         let deadline = Instant::now() + self.policy.max_wait;
         while batch.len() < self.policy.max_batch {
-            let more = self.queue.drain_up_to(self.policy.max_batch - batch.len());
+            let more = self
+                .queue
+                .drain_while_matching(self.policy.max_batch - batch.len(), &model);
             if !more.is_empty() {
                 batch.extend(more);
                 continue;
+            }
+            if self.queue.front_matches(&model) == Some(false) {
+                break;
             }
             if Instant::now() >= deadline {
                 break;
@@ -59,7 +72,39 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64) -> InferRequest {
-        InferRequest { id, input: Tensor::zeros(&[1]), enqueued: Instant::now() }
+        InferRequest { id, model: None, input: Tensor::zeros(&[1]), enqueued: Instant::now() }
+    }
+
+    fn req_for(id: u64, model: &str) -> InferRequest {
+        InferRequest {
+            id,
+            model: Some(model.to_string()),
+            input: Tensor::zeros(&[1]),
+            enqueued: Instant::now(),
+        }
+    }
+
+    /// Batches never mix models, preserve FIFO order, and a head-of-line
+    /// request for another model ships the current batch early.
+    #[test]
+    fn batches_are_homogeneous_per_model() {
+        let q = RequestQueue::new(16);
+        for (id, m) in [(0, "a"), (1, "a"), (2, "b"), (3, "b"), (4, "a")] {
+            q.push(req_for(id, m)).unwrap();
+        }
+        let b = Batcher::new(&q, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) });
+        let t = Instant::now();
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(first.iter().all(|r| r.model.as_deref() == Some("a")));
+        assert!(
+            t.elapsed() < Duration::from_millis(40),
+            "a mismatched head must ship the batch before the deadline"
+        );
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        let third = b.next_batch().unwrap();
+        assert_eq!(third.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
     }
 
     #[test]

@@ -9,6 +9,9 @@ use std::time::Instant;
 #[derive(Debug)]
 pub struct InferRequest {
     pub id: u64,
+    /// Target model name for multi-model routing; `None` routes to the
+    /// server's default model (single-model servers).
+    pub model: Option<String>,
     pub input: Tensor,
     pub enqueued: Instant,
 }
@@ -91,16 +94,45 @@ impl RequestQueue {
         }
     }
 
-    /// Drain up to `max` requests without blocking (used by the batcher
-    /// after it got the first request).
-    pub fn drain_up_to(&self, max: usize) -> Vec<InferRequest> {
+    /// Drain the longest front prefix (≤ `max`) whose requests satisfy
+    /// `matches` — the single drain implementation both public variants
+    /// share.
+    fn drain_prefix(
+        &self,
+        max: usize,
+        matches: impl Fn(&InferRequest) -> bool,
+    ) -> Vec<InferRequest> {
         let mut g = self.inner.lock().unwrap();
-        let take = g.q.len().min(max);
+        let mut take = 0usize;
+        while take < max && take < g.q.len() && matches(&g.q[take]) {
+            take += 1;
+        }
         let out: Vec<_> = g.q.drain(..take).collect();
         if !out.is_empty() {
             self.not_full.notify_all();
         }
         out
+    }
+
+    /// Drain up to `max` requests without blocking, regardless of model.
+    pub fn drain_up_to(&self, max: usize) -> Vec<InferRequest> {
+        self.drain_prefix(max, |_| true)
+    }
+
+    /// Drain up to `max` requests from the front **while they target
+    /// `model`** (FIFO order preserved; a batch never mixes models). A
+    /// head-of-line request for another model stops the drain — it will
+    /// seed the next batch.
+    pub fn drain_while_matching(&self, max: usize, model: &Option<String>) -> Vec<InferRequest> {
+        self.drain_prefix(max, |r| r.model == *model)
+    }
+
+    /// Does the head request target `model`? `None` when the queue is
+    /// empty (the batcher uses `Some(false)` to ship a batch early rather
+    /// than waiting out its deadline behind another model's request).
+    pub fn front_matches(&self, model: &Option<String>) -> Option<bool> {
+        let g = self.inner.lock().unwrap();
+        g.q.front().map(|r| r.model == *model)
     }
 
     pub fn len(&self) -> usize {
@@ -126,7 +158,39 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64) -> InferRequest {
-        InferRequest { id, input: Tensor::zeros(&[1]), enqueued: Instant::now() }
+        InferRequest { id, model: None, input: Tensor::zeros(&[1]), enqueued: Instant::now() }
+    }
+
+    fn req_for(id: u64, model: &str) -> InferRequest {
+        InferRequest {
+            id,
+            model: Some(model.to_string()),
+            input: Tensor::zeros(&[1]),
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn drain_while_matching_stops_at_other_model() {
+        let q = RequestQueue::new(8);
+        q.push(req_for(0, "a")).unwrap();
+        q.push(req_for(1, "a")).unwrap();
+        q.push(req_for(2, "b")).unwrap();
+        q.push(req_for(3, "a")).unwrap();
+        let a = Some("a".to_string());
+        let got = q.drain_while_matching(8, &a);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(q.front_matches(&a), Some(false), "model-b request now heads the queue");
+        assert_eq!(q.len(), 2, "mismatched requests stay queued in order");
+        assert_eq!(q.drain_while_matching(8, &Some("b".to_string()))[0].id, 2);
+    }
+
+    #[test]
+    fn front_matches_empty_queue() {
+        let q = RequestQueue::new(2);
+        assert_eq!(q.front_matches(&None), None);
+        q.push(req(1)).unwrap();
+        assert_eq!(q.front_matches(&None), Some(true));
     }
 
     #[test]

@@ -1,16 +1,28 @@
 //! The serving loop: a scheduler thread pulls batches and executes them on
-//! the engine; clients submit via a handle and receive responses over
-//! per-request channels.
+//! the target engine; clients submit via a handle and receive responses
+//! over per-request channels.
+//!
+//! Routing is by model name, threaded end to end through the coordinator:
+//! every [`InferRequest`] names its target model (or `None` for the
+//! server's default), the batcher forms model-homogeneous batches, and
+//! the scheduler resolves each batch's name against a
+//! [`ModelRegistry`] at execution time. A single-model
+//! [`Server::start`] is just a registry of one with that model as the
+//! default; [`Server::start_registry`] serves as many models as the
+//! registry holds, each with its own isolated workspace pool — and the
+//! registry stays shared, so models can be hot-loaded or evicted while
+//! the server runs.
 
 use super::batcher::{Batcher, BatchPolicy};
 use super::queue::{InferRequest, InferResponse, RequestQueue};
 use crate::engine::Engine;
 use crate::memory::{PoolStats, WorkspacePool};
+use crate::serving::ModelRegistry;
 use crate::tensor::Tensor;
 use crate::util::stats::{summarize, Summary};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -36,17 +48,18 @@ pub struct ServerStats {
     pub queue_ms: Summary,
     pub exec_ms: Summary,
     pub throughput_rps: f64,
-    /// Requests that failed execution (wrong shape, plan errors). These
-    /// are excluded from `completed` and from the latency/throughput
-    /// summaries so a burst of fast failures cannot flatter the stats.
+    /// Requests that failed execution (wrong shape, unknown model, plan
+    /// errors). These are excluded from `completed` and from the
+    /// latency/throughput summaries so a burst of fast failures cannot
+    /// flatter the stats.
     pub failed: u64,
-    /// Workspace-arena pool telemetry: arena size, arenas ever created
-    /// (peak concurrency), checkouts (one per inference) — the zero-alloc
-    /// evidence for the serving path.
+    /// Workspace-arena pool telemetry of the *default* model (zeroed for
+    /// registry servers without one — use `ModelRegistry::stats` for the
+    /// per-model breakdown).
     pub arena: PoolStats,
 }
 
-/// A running inference server over one compiled model.
+/// A running inference server over one or many compiled models.
 pub struct Server {
     queue: Arc<RequestQueue>,
     next_id: AtomicU64,
@@ -57,14 +70,38 @@ pub struct Server {
     completed: Arc<AtomicU64>,
     failed: Arc<AtomicU64>,
     batches: Arc<AtomicU64>,
-    /// The engine's workspace pool, shared so stats stay observable after
-    /// the engine moves into the scheduler thread.
-    arena: Arc<WorkspacePool>,
+    /// The model registry requests are resolved against (shared: models
+    /// can be hot-loaded/evicted while serving).
+    registry: Arc<ModelRegistry>,
+    /// Model served when a request names none ([`Self::start`] sets it).
+    default_model: Option<String>,
+    /// The default model's workspace pool, kept observable for stats.
+    arena: Option<Arc<WorkspacePool>>,
 }
 
 impl Server {
-    /// Start the scheduler thread over `engine`.
+    /// Start a single-model server: `engine` becomes the registry's sole
+    /// entry and the default route.
     pub fn start(engine: Engine, config: ServerConfig) -> Self {
+        let name = engine.plan().name.clone();
+        let registry = Arc::new(ModelRegistry::new(engine.threads()));
+        let arena = engine.workspace_pool();
+        registry.insert_engine(name.clone(), engine);
+        Self::start_inner(registry, Some(name), Some(arena), config)
+    }
+
+    /// Start a multi-model server over a shared registry. Requests must
+    /// name their model ([`Self::submit_to`] / [`Self::infer_on`]).
+    pub fn start_registry(registry: Arc<ModelRegistry>, config: ServerConfig) -> Self {
+        Self::start_inner(registry, None, None, config)
+    }
+
+    fn start_inner(
+        registry: Arc<ModelRegistry>,
+        default_model: Option<String>,
+        arena: Option<Arc<WorkspacePool>>,
+        config: ServerConfig,
+    ) -> Self {
         let queue = Arc::new(RequestQueue::new(config.queue_capacity));
         let pending: Arc<Mutex<HashMap<u64, Sender<InferResponse>>>> =
             Arc::new(Mutex::new(HashMap::new()));
@@ -79,7 +116,8 @@ impl Server {
         let c2 = Arc::clone(&completed);
         let f2 = Arc::clone(&failed);
         let b2 = Arc::clone(&batches);
-        let arena = engine.workspace_pool();
+        let reg = Arc::clone(&registry);
+        let default = default_model.clone();
         let policy = config.batch;
         let scheduler = std::thread::Builder::new()
             .name("grim-scheduler".into())
@@ -87,14 +125,30 @@ impl Server {
                 let batcher = Batcher::new(&q2, policy);
                 while let Some(batch) = batcher.next_batch() {
                     b2.fetch_add(1, Ordering::Relaxed);
+                    // Batches are model-homogeneous; resolve once per
+                    // batch, at execution time — a model evicted while
+                    // its requests sat in the queue fails them loudly
+                    // instead of silently pinning its memory.
+                    let target = batch[0].model.clone().or_else(|| default.clone());
+                    let engine = target.as_deref().and_then(|n| reg.get(n));
                     for req in batch {
                         let qms = req.enqueued.elapsed().as_secs_f64() * 1e3;
                         let t = Instant::now();
-                        // Failures (wrong input shape, plan errors) must
-                        // reach the caller, not masquerade as results.
-                        let (out, error) = match engine.run(&req.input) {
-                            Ok(out) => (out, None),
-                            Err(e) => (Tensor::zeros(&[1]), Some(e.to_string())),
+                        // Failures (wrong input shape, unknown model)
+                        // must reach the caller, not masquerade as
+                        // results.
+                        let (out, error) = match &engine {
+                            Some(e) => match e.run(&req.input) {
+                                Ok(out) => (out, None),
+                                Err(e) => (Tensor::zeros(&[1]), Some(e.to_string())),
+                            },
+                            None => (
+                                Tensor::zeros(&[1]),
+                                Some(match &target {
+                                    Some(n) => format!("unknown model '{n}'"),
+                                    None => "request names no model and the server has no default".to_string(),
+                                }),
+                            ),
                         };
                         let ems = t.elapsed().as_secs_f64() * 1e3;
                         if error.is_none() {
@@ -130,26 +184,62 @@ impl Server {
             completed,
             failed,
             batches,
+            registry,
+            default_model,
             arena,
         }
     }
 
-    /// Submit a request; returns a receiver for the response.
-    /// Blocks (backpressure) when the queue is full.
-    pub fn submit(&self, input: Tensor) -> anyhow::Result<std::sync::mpsc::Receiver<InferResponse>> {
+    /// The registry this server routes over (hot-load models through it).
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    fn enqueue(
+        &self,
+        model: Option<String>,
+        input: Tensor,
+    ) -> anyhow::Result<Receiver<InferResponse>> {
+        // Normalize an explicit request for the default model to `None`
+        // so it batches with unnamed requests (the batcher groups by the
+        // literal model field; without this, mixing submit() and
+        // submit_to(default) would fragment every batch).
+        let model = match (&self.default_model, model) {
+            (Some(d), Some(m)) if *d == m => None,
+            (_, m) => m,
+        };
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         self.pending.lock().unwrap().insert(id, tx);
         self.queue
-            .push(InferRequest { id, input, enqueued: Instant::now() })
+            .push(InferRequest { id, model, input, enqueued: Instant::now() })
             .map_err(|_| anyhow::anyhow!("server closed"))?;
         Ok(rx)
+    }
+
+    /// Submit a request to the default model; returns a receiver for the
+    /// response. Blocks (backpressure) when the queue is full.
+    pub fn submit(&self, input: Tensor) -> anyhow::Result<Receiver<InferResponse>> {
+        self.enqueue(None, input)
+    }
+
+    /// Submit a request routed to the named model.
+    pub fn submit_to(&self, model: &str, input: Tensor) -> anyhow::Result<Receiver<InferResponse>> {
+        self.enqueue(Some(model.to_string()), input)
     }
 
     /// Submit and wait for the response (convenience). Execution
     /// failures surface as `Err`, never as a placeholder output.
     pub fn infer(&self, input: Tensor) -> anyhow::Result<InferResponse> {
-        let rx = self.submit(input)?;
+        Self::wait(self.submit(input)?)
+    }
+
+    /// Submit to the named model and wait for the response.
+    pub fn infer_on(&self, model: &str, input: Tensor) -> anyhow::Result<InferResponse> {
+        Self::wait(self.submit_to(model, input)?)
+    }
+
+    fn wait(rx: Receiver<InferResponse>) -> anyhow::Result<InferResponse> {
         let resp = rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?;
         if let Some(e) = &resp.error {
             anyhow::bail!("inference failed: {e}");
@@ -173,7 +263,7 @@ impl Server {
             exec_ms: summarize(&exec_ms),
             throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
             failed: self.failed.load(Ordering::Relaxed),
-            arena: self.arena.stats(),
+            arena: self.arena.as_ref().map(|a| a.stats()).unwrap_or_default(),
         }
     }
 
@@ -184,6 +274,11 @@ impl Server {
             let _ = h.join();
         }
         self.stats()
+    }
+
+    /// The default model's name, when this server has one.
+    pub fn default_model(&self) -> Option<&str> {
+        self.default_model.as_deref()
     }
 }
 
@@ -203,11 +298,15 @@ mod tests {
     use crate::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
     use crate::util::Rng;
 
-    fn small_server() -> Server {
-        let opts = InitOptions { rate: 4.0, block: [4, 16], seed: 3 };
-        let m = build_model(ModelKind::Gru, Preset::TimitMini, opts);
+    fn plan_for(kind: ModelKind, preset: Preset, seed: u64) -> crate::compiler::ExecutionPlan {
+        let opts = InitOptions { rate: 4.0, block: [4, 16], seed };
+        let m = build_model(kind, preset, opts);
         let w = random_weights(&m, opts);
-        let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        compile(&m, &w, CompileOptions::default()).unwrap()
+    }
+
+    fn small_server() -> Server {
+        let plan = plan_for(ModelKind::Gru, Preset::TimitMini, 3);
         Server::start(Engine::new(plan, 2), ServerConfig::default())
     }
 
@@ -290,5 +389,84 @@ mod tests {
         }
         let stats = server.shutdown();
         assert_eq!(stats.completed, 3);
+    }
+
+    /// Two models behind one server: routing by name, concurrent clients,
+    /// no cross-talk, and per-model pool isolation.
+    #[test]
+    fn registry_server_routes_two_models_concurrently() {
+        let registry = Arc::new(ModelRegistry::new(2));
+        registry.insert_plan("cnn", plan_for(ModelKind::Vgg16, Preset::CifarMini, 5));
+        registry.insert_plan("rnn", plan_for(ModelKind::Gru, Preset::TimitMini, 6));
+        let server = Arc::new(Server::start_registry(Arc::clone(&registry), ServerConfig::default()));
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            let s = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(200 + t);
+                for _ in 0..6 {
+                    let x = Tensor::rand_uniform(&[3, 32, 32], 1.0, &mut rng);
+                    let resp = s.infer_on("cnn", x).unwrap();
+                    assert_eq!(resp.output.numel(), 10, "cnn output routed back");
+                }
+            }));
+            let s = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(300 + t);
+                for _ in 0..6 {
+                    let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+                    let resp = s.infer_on("rnn", x).unwrap();
+                    assert_eq!(resp.output.numel(), 40, "rnn output routed back");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.stats().completed, 24);
+        let stats = registry.stats();
+        assert_eq!(stats.len(), 2);
+        for ms in &stats {
+            assert_eq!(
+                ms.pool.checkouts, 12,
+                "model '{}' must serve exactly its own 12 requests",
+                ms.name
+            );
+        }
+    }
+
+    /// Unknown model names and missing defaults fail loudly, and the
+    /// server keeps serving.
+    #[test]
+    fn unknown_model_is_an_error() {
+        let registry = Arc::new(ModelRegistry::new(1));
+        registry.insert_plan("rnn", plan_for(ModelKind::Gru, Preset::TimitMini, 7));
+        let server = Server::start_registry(Arc::clone(&registry), ServerConfig::default());
+        let mut rng = Rng::new(8);
+        let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+        let err = server.infer_on("nope", x.clone()).unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+        // No default on a registry server: unnamed requests fail too.
+        let err = server.infer(x.clone()).unwrap_err();
+        assert!(err.to_string().contains("no default"), "{err}");
+        assert!(server.infer_on("rnn", x).is_ok());
+        let stats = server.stats();
+        assert_eq!(stats.failed, 2);
+        assert_eq!(stats.completed, 1);
+    }
+
+    /// Models hot-loaded (and evicted) while the server is running are
+    /// picked up by the scheduler's execution-time resolution.
+    #[test]
+    fn hot_load_and_evict_while_serving() {
+        let registry = Arc::new(ModelRegistry::new(1));
+        let server = Server::start_registry(Arc::clone(&registry), ServerConfig::default());
+        let mut rng = Rng::new(9);
+        let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+        assert!(server.infer_on("late", x.clone()).is_err(), "not loaded yet");
+        registry.insert_plan("late", plan_for(ModelKind::Gru, Preset::TimitMini, 10));
+        assert!(server.infer_on("late", x.clone()).is_ok(), "hot-loaded model serves");
+        registry.evict("late");
+        assert!(server.infer_on("late", x).is_err(), "evicted model fails loudly");
     }
 }

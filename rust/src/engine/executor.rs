@@ -65,14 +65,21 @@ impl Engine {
     /// Build an engine pinned to a specific micro-kernel table — pass
     /// [`simd::scalar`] to force the scalar backend (testing/ablation).
     pub fn with_microkernels(
-        plan: ExecutionPlan,
+        mut plan: ExecutionPlan,
         threads: usize,
         mk: &'static Microkernels,
     ) -> Self {
+        let threads = threads.max(1);
+        // Per-pool-size partitions: when this engine's worker count
+        // differs from the compile-time bucket count (e.g. a `.grimc`
+        // artifact compiled elsewhere), rebuild the static nnz-balanced
+        // schedules for the pool we actually have. Re-scheduling only —
+        // never re-packing — and bit-identical for any bucket count.
+        crate::compiler::packing::rebalance_partitions(&mut plan.steps, threads);
         let workspaces = Arc::new(WorkspacePool::new(plan.memory.arena_len));
         Engine {
             plan,
-            pool: ThreadPool::new(threads.max(1)),
+            pool: ThreadPool::new(threads),
             workspaces,
             mk,
             collect_metrics: false,
@@ -890,6 +897,38 @@ out = Softmax(fc1)
         assert_eq!(stats.checkouts, 5, "exactly one arena checkout per inference");
         assert_eq!(stats.arenas_created, 1, "sequential runs must reuse one arena");
         assert!(stats.arena_bytes > 0);
+    }
+
+    /// The engine rebalances the compile-time partitions (default 8
+    /// buckets) to its actual pool size — and stays bit-identical.
+    #[test]
+    fn engine_rebalances_partitions_to_pool_size() {
+        let m = cnn_module();
+        let w = cnn_weights(7);
+        let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        let engine = Engine::new(plan.clone(), 3);
+        let mut bcrc = 0;
+        for (_, step) in &engine.plan().steps {
+            let kernel = match step {
+                Step::Conv { kernel, .. } | Step::Fc { kernel, .. } => kernel,
+                _ => continue,
+            };
+            if let KernelImpl::Bcrc { gemm } = kernel {
+                if let Some(p) = &gemm.packed {
+                    bcrc += 1;
+                    assert_eq!(p.partition.num_buckets(), 3, "partition must match pool size");
+                    p.partition.validate_covers(&p.groups).unwrap();
+                }
+            }
+        }
+        if !crate::compiler::packing::force_unpacked() {
+            assert!(bcrc > 0, "fixture must exercise packed BCRC layers");
+        }
+        // Rebalanced engine agrees with an engine at the compile-time width.
+        let eight = Engine::new(plan, 8);
+        let mut rng = Rng::new(71);
+        let x = Tensor::rand_uniform(&[3, 8, 8], 1.0, &mut rng);
+        assert_eq!(engine.run(&x).unwrap(), eight.run(&x).unwrap());
     }
 
     #[test]

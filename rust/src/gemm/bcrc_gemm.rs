@@ -328,22 +328,22 @@ impl BcrcGemm {
         debug_assert_eq!(s_lo % mr, 0, "span start must be panel-aligned");
         for jc in (0..n).step_by(nt) {
             let je = (jc + nt).min(n);
-            let mut kb_lo = 0usize;
-            while kb_lo < width {
-                let kb_hi = (kb_lo + kc).min(width);
-                let kl = kb_hi - kb_lo;
-                let kb_base = g.val_off + kb_lo * rows_g;
-                let mut ro = s_lo;
-                while ro < s_hi {
-                    let h = mr.min(rows_g - ro);
-                    let pb = kb_base + ro * kl;
+            // Shared interleave traversal (single definition of the
+            // layout walk; see sparse::packed::for_each_panel).
+            crate::sparse::packed::for_each_panel(
+                rows_g,
+                width,
+                mr,
+                kc,
+                g.val_off,
+                s_lo,
+                s_hi,
+                |kb_lo, kl, pb, ro, h| {
                     self.packed_panel(
                         p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, h, glo + ro, u, mk,
                     );
-                    ro += h;
-                }
-                kb_lo = kb_hi;
-            }
+                },
+            );
             // Every (row, n-tile) pair finishes all its column blocks
             // before this point — the single fusion site for the span.
             if !ep.is_none() {

@@ -147,6 +147,7 @@ pub struct PackedDense {
 
 impl PackedDense {
     pub fn pack(w: &Tensor, p: TileParams) -> PackedDense {
+        crate::sparse::packed::note_pack();
         let (m, k) = w.shape().as_matrix();
         let mr = match p.mr {
             4.. => 4,
@@ -157,24 +158,13 @@ impl PackedDense {
         let mut values = AlignedBuf::zeroed(m * k);
         let wd = w.data();
         let vd = values.as_mut_slice();
-        let mut kb_lo = 0usize;
-        while kb_lo < k {
-            let kb_hi = (kb_lo + kc).min(k);
-            let kl = kb_hi - kb_lo;
-            let kb_base = kb_lo * m;
-            let mut ro = 0usize;
-            while ro < m {
-                let h = mr.min(m - ro);
-                let pb = kb_base + ro * kl;
-                for kk in 0..kl {
-                    for u in 0..h {
-                        vd[pb + kk * h + u] = wd[(ro + u) * k + kb_lo + kk];
-                    }
+        crate::sparse::packed::for_each_panel(m, k, mr, kc, 0, 0, m, |kb_lo, kl, pb, ro, h| {
+            for kk in 0..kl {
+                for u in 0..h {
+                    vd[pb + kk * h + u] = wd[(ro + u) * k + kb_lo + kk];
                 }
-                ro += h;
             }
-            kb_lo = kb_hi;
-        }
+        });
         PackedDense { m, k, mr, kc, values }
     }
 
@@ -193,24 +183,13 @@ impl PackedDense {
         let (m, k) = (self.m, self.k);
         let vd = self.values.as_slice();
         let mut out = vec![0.0f32; m * k];
-        let mut kb_lo = 0usize;
-        while kb_lo < k {
-            let kb_hi = (kb_lo + self.kc).min(k);
-            let kl = kb_hi - kb_lo;
-            let kb_base = kb_lo * m;
-            let mut ro = 0usize;
-            while ro < m {
-                let h = self.mr.min(m - ro);
-                let pb = kb_base + ro * kl;
-                for kk in 0..kl {
-                    for u in 0..h {
-                        out[(ro + u) * k + kb_lo + kk] = vd[pb + kk * h + u];
-                    }
+        crate::sparse::packed::for_each_panel(m, k, self.mr, self.kc, 0, 0, m, |kb_lo, kl, pb, ro, h| {
+            for kk in 0..kl {
+                for u in 0..h {
+                    out[(ro + u) * k + kb_lo + kk] = vd[pb + kk * h + u];
                 }
-                ro += h;
             }
-            kb_lo = kb_hi;
-        }
+        });
         out
     }
 }

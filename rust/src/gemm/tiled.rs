@@ -190,19 +190,20 @@ fn packed_panels(
     let rhi = pd.panel_rows(phi - 1).1;
     for jc in (0..n).step_by(nc) {
         let je = (jc + nc).min(n);
-        let mut kb_lo = 0usize;
-        while kb_lo < k {
-            let kb_hi = (kb_lo + kc).min(k);
-            let kl = kb_hi - kb_lo;
-            let kb_base = kb_lo * m;
-            for pi in plo..phi {
-                let (r0, r1) = pd.panel_rows(pi);
-                let h = r1 - r0;
-                let pb = kb_base + r0 * kl;
+        // Shared interleave traversal (single definition of the layout
+        // walk; see sparse::packed::for_each_panel).
+        crate::sparse::packed::for_each_panel(
+            m,
+            k,
+            pd.mr,
+            kc,
+            0,
+            rlo,
+            rhi,
+            |kb_lo, kl, pb, r0, h| {
                 packed_dense_panel(vd, xd, oview, n, jc, je, kb_lo, kl, pb, h, r0, pd.mr, mk);
-            }
-            kb_lo = kb_hi;
-        }
+            },
+        );
         if !ep.is_none() {
             // All K blocks done: this column tile of every row is final.
             for r in rlo..rhi {

@@ -29,6 +29,11 @@
 //! * **Engine + coordinator** ([`engine`], [`coordinator`]) — plan executor
 //!   over a scoped thread pool, and the L3 serving loop (request queue,
 //!   dynamic batcher, workers, latency metrics).
+//! * **AOT artifacts + multi-model serving** ([`artifact`], [`serving`]) —
+//!   the `.grimc` compiled-model container (the whole compile pipeline
+//!   runs offline; loading re-encodes and re-packs nothing) and the
+//!   `ModelRegistry` of named, hot-loadable engines with per-model
+//!   workspace pools and a resident-bytes LRU eviction budget.
 //! * **PJRT runtime** ([`runtime`]) — loads HLO text AOT-compiled by the
 //!   python layer (`python/compile/aot.py`) and executes it via the `xla`
 //!   crate; this is the XLA dense baseline and the rust↔jax numeric bridge.
@@ -51,6 +56,8 @@ pub mod tuner;
 pub mod blockopt;
 pub mod models;
 pub mod engine;
+pub mod artifact;
+pub mod serving;
 pub mod coordinator;
 pub mod runtime;
 pub mod baselines;

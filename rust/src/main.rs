@@ -1,8 +1,10 @@
 //! `grim` — the CLI leader binary.
 //!
 //! Subcommands:
-//!   serve     start the inference server on a model and drive a workload
-//!   run       single inference on a model (random or .grim weights)
+//!   compile   AOT-compile a model into a .grimc artifact (encode+pack+plan offline)
+//!   serve     start the inference server on a model — or, with
+//!             --models <dir>, a multi-model registry of .grimc artifacts
+//!   run       single inference on a model (random, .grim, or .grimc)
 //!   inspect   compile a model and print its execution plan
 //!   tune      auto-tune a model's layers (GA), print chosen configs
 //!   blockopt  run the Listing-1 block-size optimizer for a layer shape
@@ -30,6 +32,7 @@ fn main() {
     let cmd = args[0].clone();
     let flags = parse_flags(&args[1..]);
     let result = match cmd.as_str() {
+        "compile" => cmd_compile(&flags),
         "serve" => cmd_serve(&flags),
         "run" => cmd_run(&flags),
         "inspect" => cmd_inspect(&flags),
@@ -61,8 +64,10 @@ fn usage() {
 USAGE: grim <command> [--flag value ...]
 
 COMMANDS:
+  compile  --model vgg16 --preset cifar-mini --rate 8 -o vgg.grimc   AOT-compile to a .grimc artifact
   serve    --model vgg16 --preset cifar-mini --rate 8 --threads 8 --requests 64 --batch 8
-  run      --model resnet18 --preset cifar-mini --rate 8 [--grim-file m.grim] [--backend grim|naive|opt|csr]
+  serve    --models dir/ [--budget-mb 256] --requests 64             multi-model registry of .grimc files
+  run      --model resnet18 --preset cifar-mini --rate 8 [--grim-file m.grim] [--grimc-file m.grimc] [--backend grim|naive|opt|csr]
   inspect  --model vgg16 --preset cifar-mini --rate 8
   tune     --model vgg16 --preset cifar-mini --rate 8 [--generations 6]
   blockopt --rows 1024 --cols 1024 --rate 10 [--n 64] [--threshold 1.1]
@@ -77,15 +82,23 @@ type Flags = HashMap<String, String>;
 fn parse_flags(args: &[String]) -> Flags {
     let mut out = HashMap::new();
     let mut i = 0;
+    // A flag is `--name` or a short `-x` (single dash, non-numeric so a
+    // negative number can never be eaten as a flag).
+    let is_flag = |s: &str| {
+        s.strip_prefix("--").map(|k| !k.is_empty()).unwrap_or(false)
+            || s.strip_prefix('-')
+                .is_some_and(|k| !k.is_empty() && !k.starts_with(|c: char| c.is_ascii_digit()))
+    };
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+        if is_flag(&args[i]) {
+            let key = args[i].trim_start_matches('-').to_string();
+            let val = if i + 1 < args.len() && !is_flag(&args[i + 1]) {
                 i += 1;
                 args[i].clone()
             } else {
                 "true".to_string()
             };
-            out.insert(key.to_string(), val);
+            out.insert(key, val);
         }
         i += 1;
     }
@@ -130,7 +143,42 @@ fn input_for(module: &grim::graph::dsl::Module, rng: &mut Rng) -> anyhow::Result
     Ok(Tensor::rand_uniform(s.dims(), 1.0, rng))
 }
 
+/// AOT compile: run the whole pipeline (encode → fuse → pack → plan)
+/// offline and ship the finished plan as a `.grimc` artifact the serving
+/// side loads with zero recompilation.
+fn cmd_compile(f: &Flags) -> anyhow::Result<()> {
+    let (module, weights) = model_from_flags(f)?;
+    let backend = backend_from_flags(f)?;
+    let plan = compile(&module, &weights, CompileOptions::for_backend(backend))?;
+    let out = f
+        .get("out")
+        .or_else(|| f.get("o"))
+        .cloned()
+        .unwrap_or_else(|| format!("{}.grimc", module.name));
+    let path = std::path::Path::new(&out);
+    grim::artifact::save_grimc(path, &plan)?;
+    let file_bytes = std::fs::metadata(path)?.len() as usize;
+    println!("wrote {out}");
+    println!("  {}", grim::artifact::describe_stats(&plan, file_bytes));
+    Ok(())
+}
+
 fn cmd_run(f: &Flags) -> anyhow::Result<()> {
+    // .grimc artifacts skip compilation entirely: load and run.
+    if let Some(path) = f.get("grimc-file") {
+        let plan = grim::artifact::load_grimc(std::path::Path::new(path))?;
+        let mut engine = Engine::new(plan, flag(f, "threads", 8usize));
+        engine.collect_metrics = true;
+        let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+        let mut rng = Rng::new(7);
+        let x = Tensor::rand_uniform(&dims, 1.0, &mut rng);
+        engine.run(&x)?; // warmup
+        let (out, metrics) = engine.run_with_metrics(&x)?;
+        println!("model={} (AOT artifact {path})", engine.plan().name);
+        println!("output numel={} argmax={}", out.numel(), out.argmax());
+        println!("latency: {:.3} ms", metrics.total_ms());
+        return Ok(());
+    }
     let (module, weights) = model_from_flags(f)?;
     let backend = backend_from_flags(f)?;
     let plan = compile(&module, &weights, CompileOptions::for_backend(backend))?;
@@ -164,7 +212,94 @@ fn cmd_inspect(f: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Multi-model serving: load every `.grimc` in a directory into a
+/// registry and drive requests round-robin across the models, asserting
+/// every model answers (the CI smoke leg relies on the exit code).
+fn cmd_serve_multi(f: &Flags, dir: &str) -> anyhow::Result<()> {
+    use grim::serving::ModelRegistry;
+    use std::sync::Arc;
+    let threads = flag(f, "threads", 8usize);
+    let budget_mb = flag(f, "budget-mb", 0usize);
+    let registry = Arc::new(if budget_mb > 0 {
+        ModelRegistry::with_budget(threads, budget_mb * 1024 * 1024)
+    } else {
+        ModelRegistry::new(threads)
+    });
+    let names = registry.load_dir(std::path::Path::new(dir))?;
+    anyhow::ensure!(!names.is_empty(), "no .grimc artifacts found in {dir}");
+    println!("loaded {} model(s) from {dir}: {names:?}", names.len());
+    let mut config = ServerConfig::default();
+    config.batch.max_batch = flag(f, "batch", 8usize);
+    let server = Server::start_registry(Arc::clone(&registry), config);
+
+    // Under a tight budget some of the loaded models may already have
+    // been LRU-evicted; drive (and assert on) the resident ones.
+    let dims: Vec<(String, Vec<usize>)> = names
+        .iter()
+        .filter_map(|n| {
+            let e = registry.get(n)?;
+            Some((n.clone(), e.plan().memory.shapes[e.plan().input_id].clone()))
+        })
+        .collect();
+    anyhow::ensure!(!dims.is_empty(), "budget evicted every model");
+    for n in &names {
+        if !dims.iter().any(|(d, _)| d == n) {
+            println!("  (model '{n}' was evicted by the {budget_mb} MiB budget)");
+        }
+    }
+    let n = flag(f, "requests", 64usize);
+    let mut rng = Rng::new(11);
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let (name, d) = &dims[i % dims.len()];
+        rxs.push((name.clone(), server.submit_to(name, Tensor::rand_uniform(d, 1.0, &mut rng))?));
+    }
+    let mut per: HashMap<String, u64> = HashMap::new();
+    for (name, rx) in rxs {
+        let resp = rx.recv()?;
+        anyhow::ensure!(resp.error.is_none(), "model '{name}' failed: {:?}", resp.error);
+        *per.entry(name).or_default() += 1;
+    }
+    for (name, _) in &dims {
+        anyhow::ensure!(
+            per.get(name).copied().unwrap_or(0) > 0,
+            "model '{name}' answered no requests"
+        );
+    }
+    let stats = server.stats();
+    println!(
+        "completed={} batches={} p50={:.3}ms p99={:.3}ms throughput={:.1} rps",
+        stats.completed,
+        stats.batches,
+        stats.latency_ms.p50,
+        stats.latency_ms.p99,
+        stats.throughput_rps
+    );
+    for ms in registry.stats() {
+        println!(
+            "  {:<16} {:>8} KiB resident, {} requests over {} arena(s) of {} KiB",
+            ms.name,
+            ms.resident_bytes / 1024,
+            ms.pool.checkouts,
+            ms.pool.arenas_created,
+            ms.pool.arena_bytes / 1024
+        );
+    }
+    if let Some(b) = registry.budget_bytes() {
+        println!(
+            "budget: {} / {} KiB resident, {} eviction(s)",
+            registry.resident_bytes() / 1024,
+            b / 1024,
+            registry.evictions()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
+    if let Some(dir) = f.get("models") {
+        return cmd_serve_multi(f, dir);
+    }
     let (module, weights) = model_from_flags(f)?;
     let plan = compile(&module, &weights, CompileOptions::default())?;
     let engine = Engine::new(plan, flag(f, "threads", 8usize));
@@ -201,34 +336,60 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
 }
 
 fn cmd_tune(f: &Flags) -> anyhow::Result<()> {
+    use grim::gemm::pack::{pack_bcrc, CacheParams};
     use grim::tuner::{tune_layer, GaConfig, SearchSpace};
+    use std::sync::Arc;
     let (module, weights) = model_from_flags(f)?;
+    let threads = flag(f, "threads", 8usize);
     let ga = GaConfig {
         generations: flag(f, "generations", 4usize),
         population: flag(f, "population", 8usize),
         ..Default::default()
     };
-    // Include the scalar-vs-SIMD backend gene: (unroll, n_tile) are
-    // measured against the dispatched kernels, and a layer may still pick
-    // scalar when vectorization loses on it.
-    let space = SearchSpace::with_simd_axis();
+    // Scalar-vs-SIMD backend gene *and* the packed-layout cache-block
+    // genes: fitness runs the exact kc×mc packed layout those genes
+    // would ship, so (unroll, n_tile, pack_kc, pack_mc) are tuned
+    // against the layout the compiled plan executes — not the
+    // encode-order fallback.
+    let space = SearchSpace { simds: vec![true, false], ..SearchSpace::with_pack_axis() };
     println!("tuning {} (pop={} gen={})", module.name, ga.population, ga.generations);
+    const TUNE_N: usize = 32;
     for node in module.graph.weighted_layers() {
         let Some(lw) = weights.get(&node.name) else { continue };
         let Some(mask) = &lw.mask else { continue };
         let enc = grim::sparse::Bcrc::from_masked(&lw.w, mask);
         let (rows, cols) = lw.w.shape().as_matrix();
         let mut rng = Rng::new(5);
-        let x = Tensor::rand_uniform(&[cols, 32], 1.0, &mut rng);
+        let x = Tensor::rand_uniform(&[cols, TUNE_N], 1.0, &mut rng);
+        // Packing is a one-time compile cost, so it must not pollute the
+        // latency measurement: memoize one packed layout per distinct
+        // layout-relevant gene tuple, built on the candidate's first
+        // (warmup) invocation and reused by every timed iteration.
+        let mut packs: HashMap<(usize, usize, bool, usize, usize), Arc<grim::sparse::PackedBcrc>> =
+            HashMap::new();
         let res = tune_layer(&space, ga, |cfg| {
-            let g = grim::gemm::BcrcGemm::new(enc.clone(), cfg.gemm_params());
+            let key = (cfg.unroll, cfg.n_tile, cfg.lre, cfg.pack_kc, cfg.pack_mc);
+            let packed = Arc::clone(packs.entry(key).or_insert_with(|| {
+                Arc::new(pack_bcrc(
+                    &enc,
+                    cfg.gemm_params(),
+                    TUNE_N,
+                    CacheParams::default(),
+                    threads,
+                    cfg.pack_overrides(),
+                ))
+            }));
+            let g = grim::gemm::BcrcGemm::new(enc.clone(), cfg.gemm_params()).with_packed(packed);
             std::hint::black_box(g.execute(&x));
         });
+        let pack_gene = |v: usize| if v == 0 { "auto".to_string() } else { v.to_string() };
         println!(
-            "  {:<16} [{rows}x{cols}] -> unroll={} tile={} backend={} ({:.4} ms, {} evals)",
+            "  {:<16} [{rows}x{cols}] -> unroll={} tile={} pack_kc={} pack_mc={} backend={} ({:.4} ms, {} evals)",
             node.name,
             res.best.unroll,
             res.best.n_tile,
+            pack_gene(res.best.pack_kc),
+            pack_gene(res.best.pack_mc),
             if res.best.simd { grim::gemm::simd::active().name } else { "scalar" },
             res.best_ms,
             res.evals

@@ -1,0 +1,17 @@
+//! Multi-model serving: the [`registry::ModelRegistry`] of named,
+//! hot-loadable engines.
+//!
+//! The coordinator ([`crate::coordinator`]) owns the request path (queue
+//! → batcher → scheduler); this module owns *which models exist*: each
+//! named model is an [`crate::engine::Engine`] — typically reconstructed
+//! from a `.grimc` artifact ([`crate::artifact`]) with zero re-compilation
+//! — holding its own isolated [`crate::memory::WorkspacePool`] and worker
+//! pool. The registry tracks per-model resident bytes (weights + packed
+//! buffers + arena) against an optional budget and evicts
+//! least-recently-used models when loading a new one would exceed it —
+//! the many-model serving tier the ROADMAP's production north star asks
+//! for.
+
+pub mod registry;
+
+pub use registry::{plan_resident_bytes, ModelRegistry, ModelStats};

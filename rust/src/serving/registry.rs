@@ -1,0 +1,340 @@
+//! The model registry: named engines, hot-loaded from `.grimc`
+//! artifacts, with per-model workspace pools and a resident-bytes LRU
+//! eviction budget.
+//!
+//! Design notes:
+//!
+//! * **Isolation** — every model gets its own [`Engine`], which owns its
+//!   own [`crate::memory::WorkspacePool`] (arenas sized to *that* plan)
+//!   and worker pool. One model's traffic can never corrupt or observe
+//!   another's arenas; per-model stats come straight from the pool.
+//! * **Hot loading** — the registry is shared behind an `Arc`; models can
+//!   be inserted or evicted while a
+//!   [`crate::coordinator::Server`] is routing requests over it. The
+//!   scheduler resolves names at execution time, so a request for an
+//!   evicted model fails with a clear error instead of silently pinning
+//!   the engine's memory.
+//! * **Budget** — `resident bytes` per model = weight storage + packed
+//!   buffers + one workspace arena ([`plan_resident_bytes`]). When an
+//!   insert pushes the total over the budget, least-recently-*used*
+//!   models (both `get` and insert bump recency) are evicted until it
+//!   fits; the incoming model itself is never evicted, so a single
+//!   over-budget model still serves (better than serving nothing).
+//!   In-flight requests holding the evicted `Arc<Engine>` finish
+//!   normally; the memory is freed when the last handle drops.
+
+use crate::compiler::plan::ExecutionPlan;
+use crate::engine::Engine;
+use crate::memory::PoolStats;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Bytes a loaded model keeps resident: weight storage (dense tensors or
+/// sparse encodings), the packed weight buffers the packing pass added,
+/// and one workspace arena (steady-state single-stream serving; each
+/// additional concurrent request adds one arena).
+pub fn plan_resident_bytes(plan: &ExecutionPlan) -> usize {
+    plan.storage_bytes() + plan.packing.packed_bytes + plan.memory.arena_bytes()
+}
+
+struct Entry {
+    engine: Arc<Engine>,
+    resident: usize,
+    last_used: u64,
+}
+
+/// Per-model stats snapshot (see [`ModelRegistry::stats`]).
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub name: String,
+    /// Weights + packed buffers + one arena, in bytes.
+    pub resident_bytes: usize,
+    /// This model's isolated workspace-pool telemetry; `checkouts` is the
+    /// number of inferences the model has served.
+    pub pool: PoolStats,
+}
+
+/// Named-model registry with LRU eviction under a resident-bytes budget.
+pub struct ModelRegistry {
+    /// Worker threads per model engine.
+    threads: usize,
+    /// Resident-bytes ceiling (`usize::MAX` = unlimited).
+    budget: usize,
+    inner: Mutex<HashMap<String, Entry>>,
+    /// Logical LRU clock (bumped on every insert and `get`).
+    clock: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// Registry without a resident-bytes budget.
+    pub fn new(threads: usize) -> Self {
+        Self::with_budget(threads, usize::MAX)
+    }
+
+    /// Registry enforcing `budget_bytes` of total model residency.
+    pub fn with_budget(threads: usize, budget_bytes: usize) -> Self {
+        ModelRegistry {
+            threads: threads.max(1),
+            budget: budget_bytes.max(1),
+            inner: Mutex::new(HashMap::new()),
+            clock: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Register an already-built engine under `name` (replacing any
+    /// previous model of that name), then evict LRU models while over
+    /// budget. Returns the shared engine handle.
+    pub fn insert_engine(&self, name: impl Into<String>, engine: Engine) -> Arc<Engine> {
+        let name = name.into();
+        let resident = plan_resident_bytes(engine.plan());
+        let engine = Arc::new(engine);
+        // Entries removed under the lock are torn down *after* it is
+        // released: dropping an Engine joins its worker pool and frees
+        // its buffers, which must not stall concurrent request routing.
+        let mut dropped: Vec<Entry> = Vec::new();
+        {
+            let mut g = self.inner.lock().unwrap();
+            let last_used = self.tick();
+            if let Some(old) =
+                g.insert(name.clone(), Entry { engine: Arc::clone(&engine), resident, last_used })
+            {
+                dropped.push(old);
+            }
+            self.evict_over_budget(&mut g, &name, &mut dropped);
+        }
+        drop(dropped);
+        engine
+    }
+
+    /// Build an engine for `plan` (with this registry's thread count) and
+    /// register it.
+    pub fn insert_plan(&self, name: impl Into<String>, plan: ExecutionPlan) -> Arc<Engine> {
+        self.insert_engine(name, Engine::new(plan, self.threads))
+    }
+
+    /// Hot-load a `.grimc` artifact as model `name` — the full AOT path:
+    /// no graph compilation, no BCR re-encoding, no re-packing.
+    pub fn load_file(&self, name: impl Into<String>, path: &Path) -> anyhow::Result<Arc<Engine>> {
+        Ok(self.insert_plan(name, crate::artifact::load_grimc(path)?))
+    }
+
+    /// Load every `*.grimc` in `dir` (model name = file stem), sorted for
+    /// determinism. Returns the loaded names.
+    pub fn load_dir(&self, dir: &Path) -> anyhow::Result<Vec<String>> {
+        let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "grimc"))
+            .collect();
+        paths.sort();
+        let mut names = Vec::with_capacity(paths.len());
+        for p in paths {
+            let name = p
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .ok_or_else(|| anyhow::anyhow!("bad artifact file name {}", p.display()))?
+                .to_string();
+            self.load_file(name.clone(), &p)?;
+            names.push(name);
+        }
+        Ok(names)
+    }
+
+    /// Look a model up, bumping its LRU recency.
+    pub fn get(&self, name: &str) -> Option<Arc<Engine>> {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.get_mut(name)?;
+        e.last_used = self.clock.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::clone(&e.engine))
+    }
+
+    /// Remove a model by name; returns whether it was present. The
+    /// engine itself is torn down after the lock is released.
+    pub fn evict(&self, name: &str) -> bool {
+        let removed = { self.inner.lock().unwrap().remove(name) };
+        removed.is_some()
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total resident bytes across registered models.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().values().map(|e| e.resident).sum()
+    }
+
+    /// The budget, or `None` when unlimited.
+    pub fn budget_bytes(&self) -> Option<usize> {
+        (self.budget != usize::MAX).then_some(self.budget)
+    }
+
+    /// Models evicted by the budget (not counting explicit [`Self::evict`]).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Per-model stats snapshot, sorted by name.
+    pub fn stats(&self) -> Vec<ModelStats> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<ModelStats> = g
+            .iter()
+            .map(|(name, e)| ModelStats {
+                name: name.clone(),
+                resident_bytes: e.resident,
+                pool: e.engine.workspace_pool().stats(),
+            })
+            .collect();
+        drop(g);
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Evict least-recently-used models (never `keep`) until the total
+    /// fits the budget. Removed entries are pushed to `dropped` so the
+    /// caller can tear them down outside the registry lock.
+    fn evict_over_budget(
+        &self,
+        g: &mut HashMap<String, Entry>,
+        keep: &str,
+        dropped: &mut Vec<Entry>,
+    ) {
+        loop {
+            let total: usize = g.values().map(|e| e.resident).sum();
+            if total <= self.budget || g.len() <= 1 {
+                return;
+            }
+            let victim = g
+                .iter()
+                .filter(|(n, _)| n.as_str() != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(n, _)| n.clone());
+            match victim {
+                Some(v) => {
+                    if let Some(e) = g.remove(&v) {
+                        dropped.push(e);
+                    }
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                // Only `keep` is left: over budget, but never evicted.
+                None => return,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::{compile, CompileOptions};
+    use crate::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn plan_for(kind: ModelKind, seed: u64) -> ExecutionPlan {
+        let o = InitOptions { rate: 6.0, block: [4, 16], seed };
+        let m = build_model(kind, Preset::CifarMini, o);
+        let w = random_weights(&m, o);
+        compile(&m, &w, CompileOptions::default()).unwrap()
+    }
+
+    fn input_for(engine: &Engine, rng: &mut Rng) -> Tensor {
+        let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+        Tensor::rand_uniform(&dims, 1.0, rng)
+    }
+
+    #[test]
+    fn serves_two_models_with_isolated_pools() {
+        let reg = ModelRegistry::new(2);
+        reg.insert_plan("cnn", plan_for(ModelKind::Vgg16, 1));
+        reg.insert_plan("rnn", plan_for(ModelKind::Gru, 2));
+        assert_eq!(reg.names(), vec!["cnn".to_string(), "rnn".to_string()]);
+        let cnn = reg.get("cnn").unwrap();
+        let rnn = reg.get("rnn").unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..3 {
+            cnn.run(&input_for(&cnn, &mut rng)).unwrap();
+        }
+        for _ in 0..5 {
+            rnn.run(&input_for(&rnn, &mut rng)).unwrap();
+        }
+        let stats = reg.stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].name, "cnn");
+        assert_eq!(stats[0].pool.checkouts, 3, "cnn pool counts only cnn requests");
+        assert_eq!(stats[1].pool.checkouts, 5, "rnn pool counts only rnn requests");
+        assert!(stats[0].resident_bytes > 0 && stats[1].resident_bytes > 0);
+        assert_eq!(reg.resident_bytes(), stats[0].resident_bytes + stats[1].resident_bytes);
+    }
+
+    #[test]
+    fn budget_evicts_least_recently_used() {
+        let a = plan_for(ModelKind::Gru, 10);
+        let one = plan_resident_bytes(&a);
+        // Room for two models of this size, not three.
+        let reg = ModelRegistry::with_budget(1, 2 * one + one / 2);
+        reg.insert_plan("a", a);
+        reg.insert_plan("b", plan_for(ModelKind::Gru, 11));
+        assert_eq!(reg.len(), 2);
+        // Touch "a" so "b" becomes the LRU victim.
+        assert!(reg.get("a").is_some());
+        reg.insert_plan("c", plan_for(ModelKind::Gru, 12));
+        assert_eq!(reg.len(), 2, "third insert must evict one model");
+        assert!(reg.get("b").is_none(), "least-recently-used model evicted");
+        assert!(reg.get("a").is_some() && reg.get("c").is_some());
+        assert_eq!(reg.evictions(), 1);
+        assert!(reg.resident_bytes() <= reg.budget_bytes().unwrap());
+    }
+
+    #[test]
+    fn single_over_budget_model_still_serves() {
+        let plan = plan_for(ModelKind::Gru, 20);
+        let reg = ModelRegistry::with_budget(1, 1); // absurdly small budget
+        reg.insert_plan("only", plan);
+        let e = reg.get("only").expect("sole model never evicted");
+        let mut rng = Rng::new(4);
+        e.run(&input_for(&e, &mut rng)).unwrap();
+    }
+
+    #[test]
+    fn in_flight_handle_survives_eviction() {
+        let reg = ModelRegistry::new(1);
+        reg.insert_plan("m", plan_for(ModelKind::Gru, 30));
+        let handle = reg.get("m").unwrap();
+        assert!(reg.evict("m"));
+        assert!(reg.get("m").is_none());
+        // The held Arc keeps the engine alive and runnable.
+        let mut rng = Rng::new(5);
+        handle.run(&input_for(&handle, &mut rng)).unwrap();
+    }
+
+    #[test]
+    fn replacing_a_name_keeps_registry_consistent() {
+        let reg = ModelRegistry::new(1);
+        reg.insert_plan("m", plan_for(ModelKind::Gru, 40));
+        let first = reg.get("m").unwrap();
+        reg.insert_plan("m", plan_for(ModelKind::Gru, 41));
+        assert_eq!(reg.len(), 1, "re-inserting a name replaces, never duplicates");
+        let second = reg.get("m").unwrap();
+        assert!(!Arc::ptr_eq(&first, &second), "replacement installs the new engine");
+    }
+}

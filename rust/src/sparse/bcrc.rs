@@ -139,18 +139,41 @@ impl Bcrc {
         4 * self.weights.len() + self.extra_bytes()
     }
 
-    /// Structural validation (property-test helper): offsets monotone,
-    /// group boundaries aligned, per-row widths equal the group signature.
+    /// Structural validation (property-test helper, and the `.grimc`
+    /// artifact loader's gate on untrusted input): offsets monotone and
+    /// bounded, group boundaries aligned, per-row widths equal the group
+    /// signature. Every bound is established *before* the accessors that
+    /// rely on it run, so a malformed encoding returns `Err` — it never
+    /// panics.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.reorder.len() == self.rows, "reorder length");
         anyhow::ensure!(self.row_offset.len() == self.rows + 1, "row_offset length");
         anyhow::ensure!(self.occurrence.len() == self.col_stride.len(), "group arrays");
+        anyhow::ensure!(!self.occurrence.is_empty(), "empty group arrays");
+        // All three offset arrays must start at zero, or leading rows /
+        // indices would be covered by no group.
+        anyhow::ensure!(self.occurrence[0] == 0, "occ start");
+        anyhow::ensure!(self.col_stride[0] == 0, "col_stride start");
+        anyhow::ensure!(self.row_offset[0] == 0, "row_offset start");
         anyhow::ensure!(*self.occurrence.last().unwrap() as usize == self.rows, "occ end");
+        anyhow::ensure!(
+            *self.col_stride.last().unwrap() as usize == self.compact_col.len(),
+            "col_stride end"
+        );
+        anyhow::ensure!(
+            *self.row_offset.last().unwrap() as usize == self.weights.len(),
+            "weights length"
+        );
+        // Monotonicity + the end-value checks above bound every offset,
+        // making the group/row accessors below panic-free.
         for w in self.row_offset.windows(2) {
             anyhow::ensure!(w[0] <= w[1], "row_offset monotonicity");
         }
         for w in self.occurrence.windows(2) {
             anyhow::ensure!(w[0] < w[1], "occurrence strict monotonicity");
+        }
+        for w in self.col_stride.windows(2) {
+            anyhow::ensure!(w[0] <= w[1], "col_stride monotonicity");
         }
         for k in 0..self.num_groups() {
             let width = self.group_cols(k).len();
@@ -166,10 +189,6 @@ impl Bcrc {
                 anyhow::ensure!((*c as usize) < self.cols, "col index out of range");
             }
         }
-        anyhow::ensure!(
-            *self.row_offset.last().unwrap() as usize == self.weights.len(),
-            "weights length"
-        );
         // reorder must be a permutation
         let mut seen = vec![false; self.rows];
         for &p in &self.reorder {

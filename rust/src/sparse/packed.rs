@@ -37,6 +37,73 @@
 
 use super::Bcrc;
 use crate::memory::aligned::AlignedBuf;
+use std::cell::Cell;
+
+thread_local! {
+    /// Per-thread count of layout-packing invocations (see
+    /// [`pack_invocations`]). Thread-local because packing only ever
+    /// happens on the calling thread (compile, tune), which lets the
+    /// artifact loader assert "this load re-packed nothing" without
+    /// cross-test races.
+    static PACK_CALLS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// How many times this thread has run a weight-packing transform
+/// ([`PackedBcrc::pack`] or `PackedDense::pack`). The `.grimc` artifact
+/// loader snapshots this before and after a load to prove the load path
+/// performs **no re-packing** — artifacts ship the packed bytes as-is.
+pub fn pack_invocations() -> u64 {
+    PACK_CALLS.with(|c| c.get())
+}
+
+/// Record one packing invocation (called by the pack entry points).
+pub(crate) fn note_pack() {
+    PACK_CALLS.with(|c| c.set(c.get() + 1));
+}
+
+/// Walk the kc×mr interleaved value layout of one block: rows
+/// `[r_lo, r_hi)` (`r_lo` must be panel-aligned) of a group holding
+/// `rows` total rows and `width` signature columns, with its value block
+/// starting at `val_off`. Invokes `f(kb_lo, kl, pb, ro, h)` once per
+/// (column cache block, row register panel): columns `kb_lo..kb_lo+kl`,
+/// group-relative first row `ro`, panel height `h`, and `pb` the panel's
+/// base offset in the value buffer (element `(kk, u)` of the panel lives
+/// at `pb + kk*h + u`).
+///
+/// This is the **single definition** of the interleave traversal — the
+/// packers, validators, and both packed executors (`sparse::packed`,
+/// `gemm::pack`, `gemm::bcrc_gemm`, `gemm::tiled`) all walk through it,
+/// so a layout change cannot silently break the bit-parity invariant in
+/// one copy.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn for_each_panel(
+    rows: usize,
+    width: usize,
+    mr: usize,
+    kc: usize,
+    val_off: usize,
+    r_lo: usize,
+    r_hi: usize,
+    mut f: impl FnMut(usize, usize, usize, usize, usize),
+) {
+    let mr = mr.max(1);
+    let kc = kc.max(1);
+    debug_assert_eq!(r_lo % mr, 0, "panel walk must start panel-aligned");
+    let mut kb_lo = 0usize;
+    while kb_lo < width {
+        let kb_hi = (kb_lo + kc).min(width);
+        let kl = kb_hi - kb_lo;
+        let kb_base = val_off + kb_lo * rows;
+        let mut ro = r_lo;
+        while ro < r_hi {
+            let h = mr.min(rows - ro);
+            f(kb_lo, kl, kb_base + ro * kl, ro, h);
+            ro += h;
+        }
+        kb_lo = kb_hi;
+    }
+}
 
 /// Resolved packing geometry for one matrix (policy lives in
 /// `crate::gemm::pack`; this is the mechanical description).
@@ -293,7 +360,9 @@ impl WorkPartition {
 }
 
 /// A BCRC matrix repacked for the memory hierarchy (see module docs).
-#[derive(Debug)]
+/// `Clone` is required by `Arc::make_mut` in the engine's per-pool-size
+/// partition rebalance (the unique-owner case never deep-copies).
+#[derive(Clone, Debug)]
 pub struct PackedBcrc {
     pub rows: usize,
     pub cols: usize,
@@ -318,6 +387,7 @@ impl PackedBcrc {
     /// Repack `enc` under `shape`. Pure layout transform: decoded values
     /// and indices are identical to `enc`'s (see [`Self::validate_against`]).
     pub fn pack(enc: &Bcrc, shape: PackShape) -> PackedBcrc {
+        note_pack();
         let mr = shape.mr.max(1);
         let kc = shape.kc.max(1);
         let ng = enc.num_groups();
@@ -370,25 +440,13 @@ impl PackedBcrc {
                 let lo = g.rows_lo as usize;
                 let rows_g = g.rows();
                 let width = g.width as usize;
-                let mut kb_lo = 0usize;
-                while kb_lo < width {
-                    let kb_hi = (kb_lo + kc).min(width);
-                    let kl = kb_hi - kb_lo;
-                    let kb_base = g.val_off + kb_lo * rows_g;
-                    let mut ro = 0usize;
-                    while ro < rows_g {
-                        let h = mr.min(rows_g - ro);
-                        let pb = kb_base + ro * kl;
-                        for kk in 0..kl {
-                            for u in 0..h {
-                                vd[pb + kk * h + u] =
-                                    enc.row_weights(lo + ro + u)[kb_lo + kk];
-                            }
+                for_each_panel(rows_g, width, mr, kc, g.val_off, 0, rows_g, |kb_lo, kl, pb, ro, h| {
+                    for kk in 0..kl {
+                        for u in 0..h {
+                            vd[pb + kk * h + u] = enc.row_weights(lo + ro + u)[kb_lo + kk];
                         }
-                        ro += h;
                     }
-                    kb_lo = kb_hi;
-                }
+                });
             }
         }
 
@@ -475,30 +533,28 @@ impl PackedBcrc {
             // Walk the interleaved layout and compare every value.
             let rows_g = g.rows();
             let width = g.width as usize;
-            let mut kb_lo = 0usize;
-            while kb_lo < width {
-                let kb_hi = (kb_lo + kc).min(width);
-                let kl = kb_hi - kb_lo;
-                let kb_base = g.val_off + kb_lo * rows_g;
-                let mut ro = 0usize;
-                while ro < rows_g {
-                    let h = mr.min(rows_g - ro);
-                    let pb = kb_base + ro * kl;
-                    for kk in 0..kl {
-                        for u in 0..h {
-                            let got = vd[pb + kk * h + u];
-                            let want = enc.row_weights(lo + ro + u)[kb_lo + kk];
-                            anyhow::ensure!(
-                                got == want,
+            let mut mismatch: Option<String> = None;
+            for_each_panel(rows_g, width, mr, kc, g.val_off, 0, rows_g, |kb_lo, kl, pb, ro, h| {
+                if mismatch.is_some() {
+                    return;
+                }
+                for kk in 0..kl {
+                    for u in 0..h {
+                        let got = vd[pb + kk * h + u];
+                        let want = enc.row_weights(lo + ro + u)[kb_lo + kk];
+                        if got != want {
+                            mismatch = Some(format!(
                                 "group {gi} row {} col {}: {got} != {want}",
                                 ro + u,
                                 kb_lo + kk
-                            );
+                            ));
+                            return;
                         }
                     }
-                    ro += h;
                 }
-                kb_lo = kb_hi;
+            });
+            if let Some(m) = mismatch {
+                anyhow::bail!(m);
             }
         }
         self.partition.validate_covers(&self.groups)?;
@@ -614,6 +670,40 @@ mod tests {
         let p = PackedBcrc::pack(&enc, shape(4, 8, 3));
         p.partition.validate_covers(&p.groups).unwrap();
         assert_eq!(p.partition.total_nnz(), 0);
+    }
+
+    /// The shared panel walker is the single source of truth for the
+    /// interleave: pin its enumeration on the module-doc example
+    /// (6 rows × 5 cols, mr = 4, kc = 2) plus a restricted row span.
+    #[test]
+    fn panel_walk_enumerates_layout_in_order() {
+        let mut seen = Vec::new();
+        for_each_panel(6, 5, 4, 2, 16, 0, 6, |kb_lo, kl, pb, ro, h| {
+            seen.push((kb_lo, kl, pb, ro, h))
+        });
+        assert_eq!(
+            seen,
+            vec![
+                (0, 2, 16, 0, 4),
+                (0, 2, 24, 4, 2),
+                (2, 2, 28, 0, 4),
+                (2, 2, 36, 4, 2),
+                (4, 1, 40, 0, 4),
+                (4, 1, 44, 4, 2),
+            ]
+        );
+        // A span restricted to the trailing panel visits only it per block.
+        let mut sub = Vec::new();
+        for_each_panel(6, 5, 4, 2, 16, 4, 6, |kb_lo, _kl, pb, ro, h| sub.push((kb_lo, pb, ro, h)));
+        assert_eq!(sub, vec![(0, 24, 4, 2), (2, 36, 4, 2), (4, 44, 4, 2)]);
+    }
+
+    #[test]
+    fn pack_invocations_counter_increments() {
+        let enc = setup(99, 16, 32, 2.0);
+        let before = pack_invocations();
+        let _ = PackedBcrc::pack(&enc, shape(4, 8, 2));
+        assert_eq!(pack_invocations(), before + 1);
     }
 
     #[test]

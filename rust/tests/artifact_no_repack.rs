@@ -1,0 +1,54 @@
+//! The `.grimc` acceptance invariant the whole AOT story rests on: the
+//! load path performs **no BCR re-encoding and no re-packing** — the
+//! expensive pipeline ran offline, serving only moves bytes. Verified
+//! via the thread-local pack-invocation counter
+//! (`sparse::packed::pack_invocations`), which every packing transform
+//! bumps and which must therefore stay flat across loads and across
+//! engine construction (whose per-pool partition rebalance is pure
+//! re-scheduling).
+
+use grim::artifact;
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::engine::Engine;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::sparse::packed::pack_invocations;
+use grim::tensor::Tensor;
+use grim::util::Rng;
+
+#[test]
+fn load_path_never_packs() {
+    // Compile (this *does* pack — the offline half of the story).
+    let o = InitOptions { rate: 6.0, block: [4, 16], seed: 42 };
+    let m = build_model(ModelKind::Vgg16, Preset::CifarMini, o);
+    let w = random_weights(&m, o);
+    let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+    let compile_packs = pack_invocations();
+    if !grim::compiler::packing::force_unpacked() {
+        assert!(compile_packs > 0, "compilation must have packed layers");
+    }
+    let bytes = artifact::to_bytes(&plan).unwrap();
+
+    // Serving half: save/load cycles and engine construction (at several
+    // pool sizes, exercising the partition rebalance) pack nothing.
+    let before = pack_invocations();
+    let loaded = artifact::from_bytes(&bytes).unwrap();
+    let loaded2 = artifact::from_bytes(&bytes).unwrap();
+    assert_eq!(pack_invocations(), before, "artifact loads must not re-pack");
+    let e3 = Engine::new(loaded, 3);
+    let e8 = Engine::new(loaded2, 8);
+    assert_eq!(
+        pack_invocations(),
+        before,
+        "engine construction (partition rebalance) must not re-pack"
+    );
+
+    // And the loaded engines still agree with the in-memory plan.
+    let mem = Engine::new(plan, 2);
+    assert_eq!(pack_invocations(), before, "engine over an in-memory plan must not re-pack");
+    let mut rng = Rng::new(0xAA07);
+    let dims = mem.plan().memory.shapes[mem.plan().input_id].clone();
+    let x = Tensor::rand_uniform(&dims, 1.0, &mut rng);
+    let a = mem.run(&x).unwrap();
+    assert_eq!(a, e3.run(&x).unwrap());
+    assert_eq!(a, e8.run(&x).unwrap());
+}

@@ -1,0 +1,190 @@
+//! `.grimc` artifact acceptance tests:
+//!
+//! * loading an artifact produces **bit-identical** inference outputs to
+//!   the in-memory compile path on all four model presets (CI re-runs
+//!   this file under `GRIM_FORCE_UNPACKED=1` and `GRIM_FORCE_SCALAR=1`);
+//! * robustness: truncated files, flipped bytes (checksum), version
+//!   skew, bad magic, and misaligned value sections are all rejected;
+//! * a registry of artifact-loaded models serves ≥ 2 models concurrently
+//!   with isolated per-model pools.
+
+use grim::artifact;
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::compiler::plan::ExecutionPlan;
+use grim::coordinator::{Server, ServerConfig};
+use grim::engine::Engine;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::serving::ModelRegistry;
+use grim::tensor::Tensor;
+use grim::util::Rng;
+use std::sync::Arc;
+
+const KINDS: [ModelKind; 4] =
+    [ModelKind::Vgg16, ModelKind::Resnet18, ModelKind::MobilenetV2, ModelKind::Gru];
+
+fn compiled(kind: ModelKind, seed: u64) -> ExecutionPlan {
+    let o = InitOptions { rate: 6.0, block: [4, 16], seed };
+    let m = build_model(kind, Preset::CifarMini, o);
+    let w = random_weights(&m, o);
+    compile(&m, &w, CompileOptions::default()).unwrap()
+}
+
+fn input_for(engine: &Engine, rng: &mut Rng) -> Tensor {
+    let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+    Tensor::rand_uniform(&dims, 1.0, rng)
+}
+
+/// Round-trip through bytes: the loaded plan must run bit-identically to
+/// the in-memory plan on every preset (CONV, residual, depthwise, FC,
+/// GRU-gate GEMV, packed and — under GRIM_FORCE_UNPACKED — unpacked).
+#[test]
+fn loaded_artifacts_bit_identical_on_presets() {
+    for (i, kind) in KINDS.iter().enumerate() {
+        let plan = compiled(*kind, 700 + i as u64);
+        let bytes = artifact::to_bytes(&plan).unwrap();
+        let loaded = artifact::from_bytes(&bytes).unwrap();
+        assert_eq!(loaded.name, plan.name, "{kind:?}");
+        assert_eq!(loaded.steps.len(), plan.steps.len(), "{kind:?}");
+        assert_eq!(loaded.storage_bytes(), plan.storage_bytes(), "{kind:?}");
+        assert_eq!(loaded.memory.arena_len, plan.memory.arena_len, "{kind:?}");
+        assert_eq!(loaded.describe(), plan.describe(), "{kind:?}");
+        let mem = Engine::new(plan, 2);
+        let aot = Engine::new(loaded, 2);
+        let mut rng = Rng::new(0x6A00 + i as u64);
+        for case in 0..3 {
+            let x = input_for(&mem, &mut rng);
+            let a = mem.run(&x).unwrap();
+            let b = aot.run(&x).unwrap();
+            assert_eq!(a, b, "{kind:?} case {case}: artifact output must be bit-identical");
+        }
+    }
+}
+
+/// The artifact also round-trips through the filesystem, and the loaded
+/// engine adapts its partitions to a different pool size while staying
+/// bit-identical.
+#[test]
+fn file_round_trip_and_pool_adaptation() {
+    let plan = compiled(ModelKind::Vgg16, 710);
+    let tmp = std::env::temp_dir().join("grim_test_roundtrip.grimc");
+    artifact::save_grimc(&tmp, &plan).unwrap();
+    let loaded = artifact::load_grimc(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+    let mem = Engine::new(plan, 2);
+    // 3 workers ≠ the compile-time 8 buckets: Engine::new rebalances.
+    let aot = Engine::new(loaded, 3);
+    let mut rng = Rng::new(0x6B00);
+    let x = input_for(&mem, &mut rng);
+    assert_eq!(mem.run(&x).unwrap(), aot.run(&x).unwrap());
+}
+
+fn sample_bytes() -> Vec<u8> {
+    artifact::to_bytes(&compiled(ModelKind::Gru, 720)).unwrap()
+}
+
+#[test]
+fn rejects_truncated() {
+    let bytes = sample_bytes();
+    for keep in [0usize, 8, 27, bytes.len() / 10, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            artifact::from_bytes(&bytes[..keep]).is_err(),
+            "truncation to {keep}/{} bytes must be rejected",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn rejects_corrupted_checksum() {
+    let mut bytes = sample_bytes();
+    // Flip one byte deep in the payload (value sections live at the end).
+    let at = bytes.len() - 9;
+    bytes[at] ^= 0x40;
+    let err = artifact::from_bytes(&bytes).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+}
+
+#[test]
+fn rejects_version_skew() {
+    let mut bytes = sample_bytes();
+    bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+    let err = artifact::from_bytes(&bytes).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+}
+
+#[test]
+fn rejects_bad_magic() {
+    let mut bytes = sample_bytes();
+    bytes[0..4].copy_from_slice(b"NOPE");
+    let err = artifact::from_bytes(&bytes).unwrap_err();
+    assert!(err.to_string().contains("magic"), "{err}");
+}
+
+#[test]
+fn rejects_misaligned_section() {
+    let mut bytes = sample_bytes();
+    let n_sections = u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+    assert!(n_sections > 0, "fixture must carry value sections");
+    // Nudge the first section off its 64-byte boundary, then re-seal the
+    // checksum so only the alignment check can object.
+    let off = u64::from_le_bytes(bytes[28..36].try_into().unwrap());
+    bytes[28..36].copy_from_slice(&(off + 4).to_le_bytes());
+    let ck = artifact::fnv1a64(&bytes[16..]);
+    bytes[8..16].copy_from_slice(&ck.to_le_bytes());
+    let err = artifact::from_bytes(&bytes).unwrap_err();
+    assert!(err.to_string().contains("misaligned"), "{err}");
+}
+
+#[test]
+fn rejects_meta_garbage_with_valid_checksum() {
+    let mut bytes = sample_bytes();
+    let n_sections = u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+    // Corrupt the first meta byte (the model-name length) and re-seal:
+    // structural validation, not the checksum, must catch it.
+    let meta_off = 28 + 16 * n_sections;
+    bytes[meta_off] = 0xFF;
+    bytes[meta_off + 1] = 0xFF;
+    bytes[meta_off + 2] = 0xFF;
+    bytes[meta_off + 3] = 0xFF;
+    let ck = artifact::fnv1a64(&bytes[16..]);
+    bytes[8..16].copy_from_slice(&ck.to_le_bytes());
+    assert!(artifact::from_bytes(&bytes).is_err());
+}
+
+/// Two artifact-loaded models served concurrently through one registry
+/// server: isolated pools, correct routing, eviction budget honored.
+#[test]
+fn registry_serves_two_artifact_models() {
+    let dir = std::env::temp_dir().join("grim_test_registry_models");
+    std::fs::create_dir_all(&dir).unwrap();
+    artifact::save_grimc(&dir.join("cnn.grimc"), &compiled(ModelKind::MobilenetV2, 730)).unwrap();
+    artifact::save_grimc(&dir.join("rnn.grimc"), &compiled(ModelKind::Gru, 731)).unwrap();
+
+    let registry = Arc::new(ModelRegistry::new(2));
+    let names = registry.load_dir(&dir).unwrap();
+    assert_eq!(names, vec!["cnn".to_string(), "rnn".to_string()]);
+    let server = Arc::new(Server::start_registry(Arc::clone(&registry), ServerConfig::default()));
+    let mut handles = Vec::new();
+    for (t, name) in [(0u64, "cnn"), (1, "rnn"), (2, "cnn"), (3, "rnn")] {
+        let s = Arc::clone(&server);
+        let reg = Arc::clone(&registry);
+        handles.push(std::thread::spawn(move || {
+            let engine = reg.get(name).unwrap();
+            let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+            let mut rng = Rng::new(400 + t);
+            for _ in 0..4 {
+                let x = Tensor::rand_uniform(&dims, 1.0, &mut rng);
+                let resp = s.infer_on(name, x).unwrap();
+                assert!(resp.output.data().iter().all(|v| v.is_finite()));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(server.stats().completed, 16);
+    for ms in registry.stats() {
+        assert_eq!(ms.pool.checkouts, 8, "model '{}' pool must count only its own runs", ms.name);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

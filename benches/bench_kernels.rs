@@ -216,9 +216,11 @@ fn main() -> anyhow::Result<()> {
             params,
             n,
             CacheParams::default(),
-            threads,
             PackOverrides::default(),
         ));
+        // The parallel schedule now lives beside the layout (the plan's
+        // ScheduleSet in compiled models); build it for the bench pool.
+        let partition = Arc::new(packed_layout.lpt_partition(threads));
         let packed = BcrcGemm::new(enc.clone(), params).with_packed(Arc::clone(&packed_layout));
         let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
         let flops = 2.0 * enc.nnz() as f64 * n as f64;
@@ -234,11 +236,13 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(&mut out);
         });
         let t_unpacked_par = time_median_ms(iters, 2, || {
-            plain.execute_parallel_into_ep(x.data(), n, &mut out, &pool, mk, Epilogue::None);
+            plain.execute_parallel_into_ep(x.data(), n, &mut out, None, &pool, mk, Epilogue::None);
             std::hint::black_box(&mut out);
         });
         let t_packed_par = time_median_ms(iters, 2, || {
-            packed.execute_parallel_into_ep(x.data(), n, &mut out, &pool, mk, Epilogue::None);
+            packed.execute_parallel_into_ep(
+                x.data(), n, &mut out, Some(&partition), &pool, mk, Epilogue::None,
+            );
             std::hint::black_box(&mut out);
         });
         rep.row(vec![
@@ -281,9 +285,9 @@ fn main() -> anyhow::Result<()> {
             GemmParams::default(),
             64,
             CacheParams::default(),
-            threads,
             PackOverrides::default(),
         );
+        let lpt = packed_layout.lpt_partition(threads);
         let chunk = m.div_ceil(threads);
         let mut even = vec![0usize; threads];
         for (t, load) in even.iter_mut().enumerate() {
@@ -293,7 +297,7 @@ fn main() -> anyhow::Result<()> {
         }
         let even_ratio = *even.iter().max().unwrap() as f64
             / (*even.iter().min().unwrap()).max(1) as f64;
-        let lpt_ratio = packed_layout.partition.imbalance();
+        let lpt_ratio = lpt.imbalance();
         rep.row(vec![
             "thread imbalance".into(),
             format!("skewed [{m}x{k}], {threads} threads"),
@@ -308,7 +312,7 @@ fn main() -> anyhow::Result<()> {
             .set(
                 "lpt_nnz_per_thread",
                 Json::Arr(
-                    packed_layout.partition.loads.iter().map(|l| Json::Num(*l as f64)).collect(),
+                    lpt.loads.iter().map(|l| Json::Num(*l as f64)).collect(),
                 ),
             );
         o

@@ -3,9 +3,11 @@
 //! 1. **AOT compile** two models (a CNN and a GRU) through the whole
 //!    pipeline (BCR encode → reorder → fuse → kc×mr pack → memory plan)
 //!    and write each finished plan as a `.grimc` artifact;
-//! 2. **hot-load** the artifacts into a `ModelRegistry` — no re-encoding,
-//!    no re-packing; the engines adapt only their work partitions to the
-//!    host's thread count;
+//! 2. **hot-load** the artifacts into a `ModelRegistry` sharing **one**
+//!    process-wide `exec::Runtime` — no re-encoding, no re-packing, no
+//!    per-model thread pools; the engines adapt only their work
+//!    schedules (pure metadata) to the runtime's thread count and their
+//!    fair-share quotas;
 //! 3. serve both models **concurrently** through one coordinator, with
 //!    requests routed by model name and per-model workspace pools;
 //! 4. demonstrate the **resident-bytes LRU budget** evicting the
@@ -49,14 +51,28 @@ fn main() -> anyhow::Result<()> {
     // --- 2. Serving side: hot-load, zero recompilation -----------------
     println!("\n=== load + serve ===");
     let packs_before = grim::sparse::packed::pack_invocations();
-    let registry = Arc::new(ModelRegistry::new(4));
+    // One shared 4-worker runtime: both models borrow these threads
+    // (total pool threads stays 4 no matter how many models load), and
+    // the GRU gets a 2-bucket fair-share quota.
+    let runtime = grim::exec::Runtime::new(4);
+    let registry = Arc::new(ModelRegistry::with_runtime(Arc::clone(&runtime), usize::MAX));
+    registry.set_quota("gru", 2);
     let names = registry.load_dir(&dir)?;
     assert_eq!(
         grim::sparse::packed::pack_invocations(),
         packs_before,
         "artifact loading must never re-pack"
     );
-    println!("  registry: {names:?} ({} KiB resident)", registry.resident_bytes() / 1024);
+    for name in &names {
+        let e = registry.get(name).expect("loaded");
+        assert!(Arc::ptr_eq(&e.runtime(), &runtime), "engines share the one runtime");
+    }
+    println!(
+        "  registry: {names:?} ({} KiB resident) on one {}-thread runtime, quotas {:?}",
+        registry.resident_bytes() / 1024,
+        runtime.threads(),
+        runtime.quotas()
+    );
 
     let server = Arc::new(Server::start_registry(
         Arc::clone(&registry),

@@ -3,9 +3,19 @@
 //! data movement — value buffers are bulk-copied into
 //! [`AlignedBuf`]s in their packed order; nothing is re-encoded or
 //! re-packed (asserted by [`super::from_bytes`] via the pack counter).
+//!
+//! Reads **v2** (schedules in their own plan-level block) and the
+//! legacy **v1** (partitions embedded in `PackedBcrc` / CSR kernels).
+//! The v1 path hoists every embedded partition into a synthesized
+//! [`ScheduleSet`] as it decodes, so old artifacts run unchanged on the
+//! shared-runtime engine. All schedule validation (coverage, nnz
+//! totals, panel alignment, reference bijection) happens once, version-
+//! independently, in [`validate_schedules`].
 
-use super::{fnv1a64, GRIMC_VERSION, HEADER_LEN, MAGIC};
-use crate::compiler::plan::{Activation, ExecutionPlan, GruLayerPlan, KernelImpl, Step};
+use super::{fnv1a64, GRIMC_MIN_READ_VERSION, GRIMC_VERSION, HEADER_LEN, MAGIC};
+use crate::compiler::plan::{
+    Activation, ExecutionPlan, GruLayerPlan, KernelImpl, ScheduleSet, Step,
+};
 use crate::compiler::PackingStats;
 use crate::conv::ConvGeom;
 use crate::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
@@ -27,6 +37,12 @@ struct Reader<'a> {
     /// alignment-checked against `file` before decoding starts.
     sections: Vec<(usize, usize)>,
     file: &'a [u8],
+    /// Format version from the header (1 or 2).
+    version: u32,
+    /// v1 compat: partitions hoisted out of their legacy in-kernel
+    /// positions while kernels decode; becomes the plan's
+    /// [`ScheduleSet`] (v2 reads the set from its own block instead).
+    v1_parts: Vec<Arc<WorkPartition>>,
 }
 
 impl<'a> Reader<'a> {
@@ -129,6 +145,19 @@ impl<'a> Reader<'a> {
         }
         Ok(buf)
     }
+
+    /// Hoist a legacy (v1) embedded partition into the synthesized
+    /// schedule set, returning its new schedule id.
+    fn push_v1_part(&mut self, part: WorkPartition) -> u32 {
+        let id = self.v1_parts.len() as u32;
+        self.v1_parts.push(Arc::new(part));
+        id
+    }
+}
+
+/// Optional schedule-id reference (v2 grammar).
+fn get_sched(r: &mut Reader) -> anyhow::Result<Option<u32>> {
+    Ok(if r.flag()? { Some(r.u32()?) } else { None })
 }
 
 fn get_act(r: &mut Reader) -> anyhow::Result<Activation> {
@@ -201,15 +230,20 @@ fn get_bcrc(r: &mut Reader) -> anyhow::Result<Bcrc> {
     Ok(enc)
 }
 
-fn get_packed_bcrc(r: &mut Reader, enc: &Bcrc) -> anyhow::Result<PackedBcrc> {
+/// Decode a packed layout; for v1 also returns the embedded partition
+/// (hoisted by the caller into the synthesized schedule set).
+fn get_packed_bcrc(
+    r: &mut Reader,
+    enc: &Bcrc,
+) -> anyhow::Result<(PackedBcrc, Option<WorkPartition>)> {
     let rows = r.usize32()?;
     let cols = r.usize32()?;
-    let shape = PackShape {
-        mr: r.usize32()?,
-        kc: r.usize32()?,
-        mc: r.usize32()?,
-        threads: r.usize32()?,
-    };
+    let shape = PackShape { mr: r.usize32()?, kc: r.usize32()?, mc: r.usize32()? };
+    if r.version == 1 {
+        // v1 carried the partition width inside the shape; the engine
+        // rebalances to its own quota anyway, so only skip it.
+        let _threads = r.usize32()?;
+    }
     let ng = r.len32()?;
     let mut groups = Vec::with_capacity(ng);
     for _ in 0..ng {
@@ -232,7 +266,7 @@ fn get_packed_bcrc(r: &mut Reader, enc: &Bcrc) -> anyhow::Result<PackedBcrc> {
     let nnz = r.u64()? as usize;
     let max_width = r.u64()? as usize;
     let row_major = r.flag()?;
-    let partition = get_partition(r)?;
+    let v1_part = if r.version == 1 { Some(get_partition(r)?) } else { None };
 
     // Structural validation (no value recomputation): the packed layout
     // must be internally consistent and agree with its source encoding.
@@ -269,7 +303,6 @@ fn get_packed_bcrc(r: &mut Reader, enc: &Bcrc) -> anyhow::Result<PackedBcrc> {
         nnz,
         max_width,
         row_major,
-        partition,
     };
     // Column signatures must decode to exactly the source encoding's (a
     // cheap walk over the deduplicated signatures, not the values). This
@@ -309,26 +342,10 @@ fn get_packed_bcrc(r: &mut Reader, enc: &Bcrc) -> anyhow::Result<PackedBcrc> {
         !p.row_major || (p.shape.mr == 1 && p.shape.kc >= p.max_width),
         "row_major flag inconsistent with pack shape"
     );
-    p.partition
-        .validate_covers(&p.groups)
-        .map_err(|e| anyhow::anyhow!("packed partition invalid: {e}"))?;
-    anyhow::ensure!(p.partition.total_nnz() == p.nnz, "packed partition nnz total");
-    // Spans must start on mr-panel boundaries: the interleaved executor
-    // only debug_asserts this, so a release build would otherwise read
-    // wrong (in-bounds) values from a misaligned span.
-    let mr = p.shape.mr.max(1);
-    for bucket in &p.partition.buckets {
-        for s in bucket {
-            // validate_covers already proved s.group and the row range.
-            let g = &p.groups[s.group as usize];
-            anyhow::ensure!(
-                (s.lo - g.rows_lo) as usize % mr == 0,
-                "partition span at row {} is not panel-aligned (mr={mr})",
-                s.lo
-            );
-        }
-    }
-    Ok(p)
+    // Partition validation (coverage, nnz total, panel alignment) runs
+    // once over the assembled plan in `validate_schedules` — identical
+    // for an embedded v1 partition and a v2 schedules-block entry.
+    Ok((p, v1_part))
 }
 
 fn get_packed_dense(r: &mut Reader) -> anyhow::Result<PackedDense> {
@@ -384,7 +401,9 @@ fn get_kernel(r: &mut Reader) -> anyhow::Result<KernelImpl> {
             } else {
                 None
             };
-            KernelImpl::Dense { w: Arc::new(w), params, packed }
+            // v1 had no dense schedules (even panel split at run time).
+            let sched = if r.version >= 2 { get_sched(r)? } else { None };
+            KernelImpl::Dense { w: Arc::new(w), params, packed, sched }
         }
         2 => {
             let w4 = get_tensor(r)?;
@@ -403,31 +422,20 @@ fn get_kernel(r: &mut Reader) -> anyhow::Result<KernelImpl> {
         }
         3 => {
             let mat = get_csr(r)?;
-            let part = if r.flag()? {
-                let p = get_partition(r)?;
-                // The parallel CSR executor hands each span's rows to a
-                // worker as an unchecked disjoint &mut range, so the
-                // partition must be proven to cover every row exactly
-                // once before it is trusted (mirrors the packed-BCRC
-                // path). Row-granular spans reuse validate_covers via
-                // one whole-matrix pseudo-group.
-                let all_rows = PackedGroup {
-                    rows_lo: 0,
-                    rows_hi: mat.rows as u32,
-                    width: 0,
-                    col_off: 0,
-                    col_base: 0,
-                    val_off: 0,
-                };
-                p.validate_covers(std::slice::from_ref(&all_rows))
-                    .map_err(|e| anyhow::anyhow!("csr partition invalid: {e}"))?;
-                let total: usize = p.loads.iter().sum();
-                anyhow::ensure!(total == mat.nnz(), "csr partition nnz total");
-                Some(Arc::new(p))
+            // Coverage/nnz validation of the partition happens in
+            // `validate_schedules` over the assembled plan (the parallel
+            // CSR executor hands each span's rows to a worker as an
+            // unchecked disjoint &mut range, so it runs before any
+            // schedule is trusted).
+            let sched = if r.version >= 2 {
+                get_sched(r)?
+            } else if r.flag()? {
+                let part = get_partition(r)?;
+                Some(r.push_v1_part(part))
             } else {
                 None
             };
-            KernelImpl::Csr { mat: Arc::new(mat), part }
+            KernelImpl::Csr { mat: Arc::new(mat), sched }
         }
         4 => {
             let params = GemmParams {
@@ -437,12 +445,18 @@ fn get_kernel(r: &mut Reader) -> anyhow::Result<KernelImpl> {
                 simd: r.flag()?,
             };
             let enc = get_bcrc(r)?;
-            let packed = if r.flag()? {
-                Some(Arc::new(get_packed_bcrc(r, &enc)?))
+            let (packed, v1_part) = if r.flag()? {
+                let (p, v1_part) = get_packed_bcrc(r, &enc)?;
+                (Some(Arc::new(p)), v1_part)
             } else {
-                None
+                (None, None)
             };
-            KernelImpl::Bcrc { gemm: BcrcGemm { enc: Arc::new(enc), params, packed } }
+            let sched = if r.version >= 2 {
+                get_sched(r)?
+            } else {
+                v1_part.map(|part| r.push_v1_part(part))
+            };
+            KernelImpl::Bcrc { gemm: BcrcGemm { enc: Arc::new(enc), params, packed, sched } }
         }
         other => anyhow::bail!("invalid kernel tag {other}"),
     })
@@ -672,8 +686,9 @@ pub fn decode_artifact(data: &[u8]) -> anyhow::Result<ExecutionPlan> {
     anyhow::ensure!(&data[0..4] == MAGIC, "not a .grimc artifact (bad magic)");
     let version = u32::from_le_bytes(data[4..8].try_into().expect("4 bytes"));
     anyhow::ensure!(
-        version == GRIMC_VERSION,
-        "unsupported .grimc version {version} (this build reads version {GRIMC_VERSION}; recompile the model)"
+        (GRIMC_MIN_READ_VERSION..=GRIMC_VERSION).contains(&version),
+        "unsupported .grimc version {version} (this build reads versions \
+         {GRIMC_MIN_READ_VERSION}..={GRIMC_VERSION}; recompile the model)"
     );
     let stored = u64::from_le_bytes(data[8..16].try_into().expect("8 bytes"));
     anyhow::ensure!(
@@ -708,10 +723,93 @@ pub fn decode_artifact(data: &[u8]) -> anyhow::Result<ExecutionPlan> {
         pos: 0,
         sections,
         file: data,
+        version,
+        v1_parts: Vec::new(),
     };
     let plan = decode_plan(&mut r)?;
     anyhow::ensure!(r.pos == r.meta.len(), "trailing bytes in artifact meta");
     Ok(plan)
+}
+
+/// Validate the plan's schedules against the kernels that reference
+/// them — identically for a v2 schedules block and a v1 synthesized set.
+/// Every referenced partition must cover its kernel's work exactly once
+/// (the parallel executors rely on this for write disjointness), match
+/// its nnz/element totals, keep BCRC spans `mr`-panel-aligned (the
+/// interleaved executor only debug_asserts that), and every schedule
+/// entry must be referenced by exactly one kernel — a duplicated or
+/// orphaned reference means a corrupt or crafted file.
+fn validate_schedules(plan: &ExecutionPlan) -> anyhow::Result<()> {
+    let scheds = &plan.schedules;
+    let mut kernels: Vec<&KernelImpl> = Vec::new();
+    crate::compiler::plan::for_each_kernel(&plan.steps, |k| kernels.push(k));
+    let mut used = vec![false; scheds.len()];
+    for k in kernels {
+        let sid = match k {
+            KernelImpl::Bcrc { gemm } => gemm.sched,
+            KernelImpl::Dense { sched, .. } | KernelImpl::Csr { sched, .. } => *sched,
+            _ => None,
+        };
+        let Some(sid) = sid else { continue };
+        let part = scheds
+            .get(Some(sid))
+            .ok_or_else(|| anyhow::anyhow!("schedule id {sid} out of range"))?;
+        anyhow::ensure!(
+            !std::mem::replace(&mut used[sid as usize], true),
+            "schedule id {sid} referenced by two kernels"
+        );
+        let whole = |rows: usize| PackedGroup {
+            rows_lo: 0,
+            rows_hi: rows as u32,
+            width: 0,
+            col_off: 0,
+            col_base: 0,
+            val_off: 0,
+        };
+        match k {
+            KernelImpl::Bcrc { gemm } => {
+                let p = gemm
+                    .packed
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("BCRC schedule without a packed layout"))?;
+                part.validate_covers(&p.groups)
+                    .map_err(|e| anyhow::anyhow!("bcrc schedule invalid: {e}"))?;
+                anyhow::ensure!(part.total_nnz() == p.nnz, "bcrc schedule nnz total");
+                let mr = p.shape.mr.max(1);
+                for bucket in &part.buckets {
+                    for sp in bucket {
+                        // validate_covers proved sp.group and the range.
+                        let g = &p.groups[sp.group as usize];
+                        anyhow::ensure!(
+                            (sp.lo - g.rows_lo) as usize % mr == 0,
+                            "schedule span at row {} is not panel-aligned (mr={mr})",
+                            sp.lo
+                        );
+                    }
+                }
+            }
+            KernelImpl::Dense { w, packed, .. } => {
+                let pd = packed
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("dense schedule without a packed layout"))?;
+                // Spans index *panels* for the packed tiled kernel.
+                part.validate_covers(std::slice::from_ref(&whole(pd.num_panels())))
+                    .map_err(|e| anyhow::anyhow!("dense schedule invalid: {e}"))?;
+                let (m, kk) = w.shape().as_matrix();
+                anyhow::ensure!(part.total_nnz() == m * kk, "dense schedule element total");
+            }
+            KernelImpl::Csr { mat, .. } => {
+                part.validate_covers(std::slice::from_ref(&whole(mat.rows)))
+                    .map_err(|e| anyhow::anyhow!("csr schedule invalid: {e}"))?;
+                anyhow::ensure!(part.total_nnz() == mat.nnz(), "csr schedule nnz total");
+            }
+            _ => unreachable!("sid only set for schedulable kernels"),
+        }
+    }
+    for (i, u) in used.iter().enumerate() {
+        anyhow::ensure!(*u, "orphan schedule entry {i} referenced by no kernel");
+    }
+    Ok(())
 }
 
 /// Cross-step consistency: every length relation the executor's kernels
@@ -973,7 +1071,25 @@ fn decode_plan(r: &mut Reader) -> anyhow::Result<ExecutionPlan> {
         u16_layers: r.usize32()?,
         packed_bytes: r.u64()? as usize,
     };
-    let plan = ExecutionPlan { name, steps, inputs, input_id, output_id, memory, packing };
+    let schedules = if r.version >= 2 {
+        // v2: the plan's schedules as their own block.
+        let threads = r.usize32()?;
+        let np = r.len32()?;
+        let mut parts = Vec::with_capacity(np);
+        for _ in 0..np {
+            parts.push(Arc::new(get_partition(r)?));
+        }
+        ScheduleSet { threads, parts }
+    } else {
+        // v1: partitions were hoisted out of the kernels as they
+        // decoded; their bucket width stands in for the set's.
+        let parts = std::mem::take(&mut r.v1_parts);
+        let threads = parts.first().map(|pt| pt.num_buckets()).unwrap_or(0);
+        ScheduleSet { threads, parts }
+    };
+    let plan =
+        ExecutionPlan { name, steps, inputs, input_id, output_id, memory, packing, schedules };
     validate_plan_consistency(&plan)?;
+    validate_schedules(&plan)?;
     Ok(plan)
 }

@@ -1,9 +1,16 @@
 //! `.grimc` writer: meta-stream serialization of a compiled
 //! [`ExecutionPlan`] plus 64-byte-aligned f32 sections (see the format
 //! grammar in the module docs — [`super::decode`] is the exact mirror).
+//!
+//! Writes **v2** by default (work partitions in the plan-level
+//! schedules block, kernels carrying `sched` ids) and can still emit
+//! the legacy **v1** grammar (partitions embedded in `PackedBcrc` /
+//! the CSR kernel) for downgrade and compatibility testing.
 
-use super::{fnv1a64, GRIMC_VERSION, HEADER_LEN, MAGIC};
-use crate::compiler::plan::{Activation, ExecutionPlan, GruLayerPlan, KernelImpl, Step};
+use super::{fnv1a64, HEADER_LEN, MAGIC};
+use crate::compiler::plan::{
+    Activation, ExecutionPlan, GruLayerPlan, KernelImpl, ScheduleSet, Step,
+};
 use crate::gemm::pack::PackedDense;
 use crate::memory::liveness::BufferKind;
 use crate::sparse::packed::{ColIndex, PackedBcrc, WorkPartition};
@@ -81,8 +88,8 @@ impl Writer {
     }
 
     /// Assemble header + table + meta + aligned section blobs and seal
-    /// the checksum.
-    pub fn finish(self) -> Vec<u8> {
+    /// the checksum, stamping `version` into the header.
+    pub fn finish(self, version: u32) -> Vec<u8> {
         let n = self.sections.len();
         let meta_off = HEADER_LEN + 16 * n;
         let mut pos = meta_off + self.meta.len();
@@ -94,7 +101,7 @@ impl Writer {
         }
         let mut out = vec![0u8; pos];
         out[0..4].copy_from_slice(MAGIC);
-        out[4..8].copy_from_slice(&GRIMC_VERSION.to_le_bytes());
+        out[4..8].copy_from_slice(&version.to_le_bytes());
         out[16..24].copy_from_slice(&(self.meta.len() as u64).to_le_bytes());
         out[24..28].copy_from_slice(&(n as u32).to_le_bytes());
         for (i, s) in self.sections.iter().enumerate() {
@@ -152,13 +159,19 @@ fn put_bcrc(w: &mut Writer, enc: &Bcrc) {
     w.section(&enc.weights);
 }
 
-fn put_packed_bcrc(w: &mut Writer, p: &PackedBcrc) {
+/// Packed-BCRC body. v2 is partition-free; the v1 grammar embedded the
+/// partition (and the bucket count inside the shape), so the v1 writer
+/// receives the kernel's schedule to embed.
+fn put_packed_bcrc(w: &mut Writer, p: &PackedBcrc, v1_part: Option<&WorkPartition>) {
     w.u32(p.rows as u32);
     w.u32(p.cols as u32);
     w.u32(p.shape.mr as u32);
     w.u32(p.shape.kc as u32);
     w.u32(p.shape.mc as u32);
-    w.u32(p.shape.threads as u32);
+    if let Some(part) = v1_part {
+        // v1 carried the partition width inside the pack shape.
+        w.u32(part.num_buckets() as u32);
+    }
     w.u32(p.groups.len() as u32);
     for g in &p.groups {
         w.u32(g.rows_lo);
@@ -183,7 +196,9 @@ fn put_packed_bcrc(w: &mut Writer, p: &PackedBcrc) {
     w.u64(p.nnz as u64);
     w.u64(p.max_width as u64);
     w.u8(p.row_major as u8);
-    put_partition(w, &p.partition);
+    if let Some(part) = v1_part {
+        put_partition(w, part);
+    }
 }
 
 fn put_packed_dense(w: &mut Writer, p: &PackedDense) {
@@ -202,13 +217,33 @@ fn put_csr(w: &mut Writer, mat: &Csr) {
     w.section(&mat.values);
 }
 
-fn put_kernel(w: &mut Writer, k: &KernelImpl) {
+/// Optional schedule-id reference (v2 grammar).
+fn put_sched(w: &mut Writer, sched: Option<u32>) {
+    match sched {
+        Some(id) => {
+            w.u8(1);
+            w.u32(id);
+        }
+        None => w.u8(0),
+    }
+}
+
+fn put_kernel(w: &mut Writer, k: &KernelImpl, schedules: &ScheduleSet, version: u32) {
+    // v1 embeds partitions in the kernels; resolve them from the plan's
+    // schedule set (where the compiler now puts them).
+    let v1_part = |sid: Option<u32>| {
+        if version == 1 {
+            schedules.get(sid).map(|p| &**p)
+        } else {
+            None
+        }
+    };
     match k {
         KernelImpl::NaiveDense { w: wt } => {
             w.u8(0);
             put_tensor(w, wt);
         }
-        KernelImpl::Dense { w: wt, params, packed } => {
+        KernelImpl::Dense { w: wt, params, packed, sched } => {
             w.u8(1);
             put_tensor(w, wt);
             w.u32(params.mr as u32);
@@ -221,21 +256,29 @@ fn put_kernel(w: &mut Writer, k: &KernelImpl) {
                 }
                 None => w.u8(0),
             }
+            // v1 had no dense schedules (the even panel split at load).
+            if version >= 2 {
+                put_sched(w, *sched);
+            }
         }
         KernelImpl::Winograd { w4, ut } => {
             w.u8(2);
             put_tensor(w, w4);
             w.section(ut);
         }
-        KernelImpl::Csr { mat, part } => {
+        KernelImpl::Csr { mat, sched } => {
             w.u8(3);
             put_csr(w, mat);
-            match part {
-                Some(p) => {
-                    w.u8(1);
-                    put_partition(w, p);
+            if version >= 2 {
+                put_sched(w, *sched);
+            } else {
+                match v1_part(*sched) {
+                    Some(p) => {
+                        w.u8(1);
+                        put_partition(w, p);
+                    }
+                    None => w.u8(0),
                 }
-                None => w.u8(0),
             }
         }
         KernelImpl::Bcrc { gemm } => {
@@ -248,26 +291,29 @@ fn put_kernel(w: &mut Writer, k: &KernelImpl) {
             match &gemm.packed {
                 Some(p) => {
                     w.u8(1);
-                    put_packed_bcrc(w, p);
+                    put_packed_bcrc(w, p, v1_part(gemm.sched));
                 }
                 None => w.u8(0),
+            }
+            if version >= 2 {
+                put_sched(w, gemm.sched);
             }
         }
     }
 }
 
-fn put_gru_layer(w: &mut Writer, l: &GruLayerPlan) {
+fn put_gru_layer(w: &mut Writer, l: &GruLayerPlan, schedules: &ScheduleSet, version: u32) {
     w.u32(l.hidden as u32);
     w.u32(l.in_f as u32);
-    put_kernel(w, &l.wz);
-    put_kernel(w, &l.wr);
-    put_kernel(w, &l.wh);
+    put_kernel(w, &l.wz, schedules, version);
+    put_kernel(w, &l.wr, schedules, version);
+    put_kernel(w, &l.wh, schedules, version);
     w.f32s(&l.bz);
     w.f32s(&l.br);
     w.f32s(&l.bh);
 }
 
-fn put_step(w: &mut Writer, step: &Step) {
+fn put_step(w: &mut Writer, step: &Step, schedules: &ScheduleSet, version: u32) {
     match step {
         Step::Input => w.u8(0),
         Step::Conv { geom, kernel, dead_cols, bias, act } => {
@@ -278,7 +324,7 @@ fn put_step(w: &mut Writer, step: &Step) {
             ] {
                 w.u32(v as u32);
             }
-            put_kernel(w, kernel);
+            put_kernel(w, kernel, schedules, version);
             match dead_cols {
                 Some(d) => {
                     w.u8(1);
@@ -303,7 +349,7 @@ fn put_step(w: &mut Writer, step: &Step) {
         }
         Step::Fc { kernel, bias, act } => {
             w.u8(3);
-            put_kernel(w, kernel);
+            put_kernel(w, kernel, schedules, version);
             w.f32s(bias);
             put_act(w, *act);
         }
@@ -311,7 +357,7 @@ fn put_step(w: &mut Writer, step: &Step) {
             w.u8(4);
             w.u32(layers.len() as u32);
             for l in layers.iter() {
-                put_gru_layer(w, l);
+                put_gru_layer(w, l, schedules, version);
             }
         }
         Step::MaxPool2 => w.u8(5),
@@ -328,18 +374,31 @@ fn put_step(w: &mut Writer, step: &Step) {
     }
 }
 
-/// Serialize the full plan into `w`'s meta stream + sections.
-pub fn encode_plan(w: &mut Writer, plan: &ExecutionPlan) -> anyhow::Result<()> {
+/// Serialize the full plan into `w`'s meta stream + sections, using the
+/// grammar of `version` (1 = legacy embedded partitions, 2 = current).
+pub fn encode_plan(w: &mut Writer, plan: &ExecutionPlan, version: u32) -> anyhow::Result<()> {
     let n = plan.steps.len();
     anyhow::ensure!(plan.inputs.len() == n, "plan inputs/steps length mismatch");
     anyhow::ensure!(plan.memory.shapes.len() == n, "plan is missing its memory plan");
+    if version == 1 {
+        // The v1 grammar embeds every packed-BCRC kernel's partition;
+        // refuse to write a plan whose schedule went missing rather
+        // than emit an unreadable file.
+        let mut missing = false;
+        crate::compiler::plan::for_each_kernel(&plan.steps, |k| {
+            if let KernelImpl::Bcrc { gemm } = k {
+                missing |= gemm.packed.is_some() && plan.schedules.get(gemm.sched).is_none();
+            }
+        });
+        anyhow::ensure!(!missing, "packed BCRC kernel lacks a schedule (cannot write v1)");
+    }
     w.str(&plan.name);
     w.u32(plan.input_id as u32);
     w.u32(plan.output_id as u32);
     w.u32(n as u32);
     for (id, step) in &plan.steps {
         w.u32(*id as u32);
-        put_step(w, step);
+        put_step(w, step, &plan.schedules, version);
     }
     for ins in &plan.inputs {
         w.u32(ins.len() as u32);
@@ -379,5 +438,16 @@ pub fn encode_plan(w: &mut Writer, plan: &ExecutionPlan) -> anyhow::Result<()> {
     w.u32(ps.csr_layers as u32);
     w.u32(ps.u16_layers as u32);
     w.u64(ps.packed_bytes as u64);
+    // v2: the plan's schedules as their own trailing block — partitions
+    // hoisted out of the packed structures, referenced by kernel `sched`
+    // ids written above.
+    if version >= 2 {
+        let sc = &plan.schedules;
+        w.u32(sc.threads as u32);
+        w.u32(sc.parts.len() as u32);
+        for part in &sc.parts {
+            put_partition(w, part);
+        }
+    }
     Ok(())
 }

@@ -21,7 +21,7 @@
 //!
 //! ```text
 //! 0   magic      b"GRMC"
-//! 4   version    u32 (currently 1; bumped on any format change)
+//! 4   version    u32 (currently 2; bumped on any format change)
 //! 8   checksum   u64 FNV-1a over every byte from offset 16 to EOF
 //! 16  meta_len   u64 length of the meta stream in bytes
 //! 24  n_sections u32
@@ -34,6 +34,19 @@
 //!     the same cache-line alignment the in-memory
 //!     [`crate::memory::AlignedBuf`] guarantees, with no re-interleaving.
 //! ```
+//!
+//! # Versions
+//!
+//! * **v2** (current): work partitions live in a dedicated *schedules*
+//!   block at the end of the meta stream (the plan's `ScheduleSet`);
+//!   GEMM kernels reference entries by `sched` id. Packed layouts are
+//!   partition-free, so rebalancing a loaded plan to the serving host's
+//!   worker quota never copies a value buffer.
+//! * **v1** (read-compatible): partitions serialized *inside*
+//!   `PackedBcrc` / the CSR kernel. The v1 reader hoists them into a
+//!   synthesized `ScheduleSet` at load, so v1 artifacts serve unchanged
+//!   (bit-identical) on the v2 runtime. [`to_bytes_versioned`] can still
+//!   write v1 for downgrade testing.
 //!
 //! The loader verifies, in order: length ≥ header, magic, version
 //! (version skew reports *before* the checksum so a skewed-but-intact
@@ -52,8 +65,11 @@ use std::path::Path;
 
 pub(crate) const MAGIC: &[u8; 4] = b"GRMC";
 
-/// Current `.grimc` format version.
-pub const GRIMC_VERSION: u32 = 1;
+/// Current `.grimc` format version (written by [`to_bytes`]).
+pub const GRIMC_VERSION: u32 = 2;
+
+/// Oldest version [`from_bytes`] still reads.
+pub const GRIMC_MIN_READ_VERSION: u32 = 1;
 
 /// Fixed header bytes before the section table.
 pub(crate) const HEADER_LEN: usize = 28;
@@ -70,11 +86,21 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Serialize a compiled plan to `.grimc` bytes.
+/// Serialize a compiled plan to `.grimc` bytes (current version).
 pub fn to_bytes(plan: &ExecutionPlan) -> anyhow::Result<Vec<u8>> {
+    to_bytes_versioned(plan, GRIMC_VERSION)
+}
+
+/// Serialize a compiled plan as a specific format version (v1 keeps the
+/// legacy partitions-inside-packed grammar for downgrade/compat tests).
+pub fn to_bytes_versioned(plan: &ExecutionPlan, version: u32) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(
+        (GRIMC_MIN_READ_VERSION..=GRIMC_VERSION).contains(&version),
+        "cannot write .grimc version {version}"
+    );
     let mut w = encode::Writer::default();
-    encode::encode_plan(&mut w, plan)?;
-    Ok(w.finish())
+    encode::encode_plan(&mut w, plan, version)?;
+    Ok(w.finish(version))
 }
 
 /// Reconstruct a compiled plan from `.grimc` bytes. Performs full header

@@ -8,8 +8,10 @@
 //!    (later overwritten by the auto-tuner).
 //! 4. **Fusion** — bias + activation epilogues folded into the GEMM step.
 //! 4½. **Packing** ([`packing`]) — weights repacked for the memory
-//!    hierarchy (cache-blocked 64 B-aligned layouts, u16 indices) with a
-//!    static nnz-balanced parallel partition.
+//!    hierarchy (cache-blocked 64 B-aligned layouts, u16 indices); the
+//!    static nnz-balanced parallel partitions are emitted into the
+//!    plan's [`plan::ScheduleSet`], *beside* the packed buffers, so
+//!    rebalancing them to a runtime's worker quota is pure metadata.
 //!
 //! The plan is the "generated code" analog (DESIGN.md §6): a parameterized
 //! record the engine interprets with monomorphized micro-kernels.
@@ -20,6 +22,6 @@ pub mod passes;
 pub mod weights;
 
 pub use packing::{PackOptions, PackingStats};
-pub use plan::{Activation, ExecutionPlan, KernelImpl, Step};
+pub use plan::{Activation, ExecutionPlan, KernelImpl, ScheduleSet, Step};
 pub use passes::{compile, CompileOptions};
 pub use weights::{LayerWeights, WeightStore};

@@ -2,88 +2,92 @@
 //! partitioning.
 //!
 //! Runs after epilogue fusion and before memory planning, rewriting each
-//! GEMM-bearing step's [`KernelImpl`] in place:
+//! GEMM-bearing step's [`KernelImpl`] in place and emitting the plan's
+//! [`ScheduleSet`]:
 //!
 //! * **BCRC layers** get a [`crate::sparse::PackedBcrc`]: groups
 //!   reordered and concatenated into one 64 B-aligned buffer, values
 //!   interleaved in kc×mr cache blocks sized from the [`CacheParams`]
-//!   model, u16 delta column indices where ranges allow, and a static
+//!   model, and u16 delta column indices where ranges allow. The static
 //!   nnz-balanced [`crate::sparse::WorkPartition`] (greedy LPT over
 //!   group nnz) the parallel executor consumes instead of an even row
-//!   split. The GEMM N used for shaping is known at compile time
-//!   (`gemm_n` for CONV; 1 for FC and the GRU gates).
+//!   split goes into the `ScheduleSet`, referenced by the kernel's
+//!   `sched` id — it sits *beside* the packed `Arc`, never inside it.
+//!   The GEMM N used for shaping is known at compile time (`gemm_n` for
+//!   CONV; 1 for FC and the GRU gates).
 //! * **Tiled-dense layers** get the same panel treatment via
-//!   [`PackedDense`].
+//!   [`PackedDense`], plus a contiguous panel-granular schedule.
 //! * **CSR layers** get a contiguous nnz-balanced row partition
-//!   (RTMobile-style per-thread load balancing).
+//!   (RTMobile-style per-thread load balancing) in the `ScheduleSet`.
 //!
 //! Packing never changes arithmetic — packed plans are bit-identical to
 //! unpacked ones (enforced by `tests/packed_parity`). The pass is on by
 //! default and disabled by either `CompileOptions` (the engine switch)
 //! or the `GRIM_FORCE_UNPACKED=1` environment variable, both of which
-//! preserve the encode-order path exactly.
+//! preserve the encode-order path exactly (and emit an empty
+//! `ScheduleSet`).
 
-use super::plan::{KernelImpl, Step};
+use super::plan::{KernelImpl, ScheduleSet, Step};
 use crate::gemm::csr_gemm::csr_row_nnz;
 use crate::gemm::pack::{self, CacheParams, PackOverrides, PackedDense};
 use crate::sparse::packed::WorkPartition;
 use std::sync::Arc;
 
-/// Rebuild the static work partitions of every packed/partitioned kernel
-/// in `steps` for `threads` worker buckets. `Engine::new` calls this when
-/// its pool size differs from the compile-time bucket count (default 8),
-/// so freshly compiled plans — and `.grimc` artifacts compiled on another
-/// host — adapt their parallel schedule to the machine they actually run
-/// on instead of draining several (or fractional) buckets per worker.
+/// Rebuild the static work partitions of `schedules` for `threads`
+/// worker buckets, reading (never mutating) `steps` for the kernel
+/// metadata each schedule is derived from. The engine calls this when
+/// its runtime quota differs from the schedule's current bucket count,
+/// so freshly compiled plans — and `.grimc` artifacts compiled on
+/// another host — adapt their parallel schedule to the machine (and
+/// fair-share quota) they actually run on.
 ///
-/// Pure re-scheduling: only span lists change, never values or indices —
-/// packed execution is bit-identical for any bucket count (see
-/// `tests/packed_parity` and the `packed_parallel_any_pool_size` kernel
-/// test), so this can never change results. No re-packing happens here
-/// (the [`crate::sparse::packed::pack_invocations`] counter is untouched).
-/// Returns the number of kernels whose partition was rebuilt.
-pub fn rebalance_partitions(steps: &mut [(usize, Step)], threads: usize) -> usize {
+/// **Zero-copy by construction**: `steps` is a shared borrow, so this
+/// function *cannot* touch a packed value buffer — rebalancing rebuilds
+/// only `Arc<WorkPartition>` metadata (the old `Arc::make_mut` deep-copy
+/// path over `PackedBcrc` is gone). Entries already at `threads` buckets
+/// are carried over by `Arc` clone. No re-packing happens here (the
+/// [`crate::sparse::packed::pack_invocations`] counter is untouched).
+///
+/// Returns the rebalanced set and the number of partitions rebuilt.
+/// Bit-identical execution for any bucket count (see
+/// `tests/packed_parity` and the kernel-level `*_any_pool_size` tests).
+pub fn rebalance_partitions(
+    steps: &[(usize, Step)],
+    schedules: &ScheduleSet,
+    threads: usize,
+) -> (ScheduleSet, usize) {
     let t = threads.max(1);
+    let mut parts = schedules.parts.clone();
     let mut rebuilt = 0usize;
-    let mut visit = |k: &mut KernelImpl| match k {
-        KernelImpl::Bcrc { gemm } => {
-            if let Some(p) = gemm.packed.as_mut() {
-                if p.partition.num_buckets() != t {
-                    let part = WorkPartition::lpt(&p.groups, p.shape.mr, t);
-                    // On the production paths (compile → engine, or
-                    // artifact load → engine) this Arc is uniquely owned
-                    // and make_mut mutates in place. A *shared* plan
-                    // (e.g. `plan.clone()` in tests) pays a one-time
-                    // deep copy of the packed buffer here; see the
-                    // ROADMAP note about hoisting the partition out of
-                    // `PackedBcrc` if that ever matters in production.
-                    Arc::make_mut(p).partition = part;
-                    rebuilt += 1;
-                }
-            }
+    super::plan::for_each_kernel(steps, |k| {
+        // Resolve the kernel's schedule id and check the existing bucket
+        // count FIRST — a no-op rebalance (engine already at the quota)
+        // must cost nothing, not an LPT/row-nnz rebuild per layer.
+        let sid = match k {
+            KernelImpl::Bcrc { gemm } if gemm.packed.is_some() => gemm.sched,
+            KernelImpl::Dense { sched, packed: Some(_), .. } => *sched,
+            KernelImpl::Csr { sched, .. } => *sched,
+            _ => None,
+        };
+        let Some(sid) = sid else { return };
+        let Some(slot) = parts.get_mut(sid as usize) else { return };
+        if slot.num_buckets() == t {
+            return;
         }
-        KernelImpl::Csr { mat, part } => {
-            if part.as_ref().is_some_and(|wp| wp.num_buckets() != t) {
-                *part = Some(Arc::new(WorkPartition::contiguous(&csr_row_nnz(mat), t)));
-                rebuilt += 1;
+        let fresh = match k {
+            KernelImpl::Bcrc { gemm } => {
+                gemm.packed.as_ref().expect("checked above").lpt_partition(t)
             }
-        }
-        _ => {}
-    };
-    for (_, step) in steps.iter_mut() {
-        match step {
-            Step::Conv { kernel, .. } | Step::Fc { kernel, .. } => visit(kernel),
-            Step::Gru { layers } => {
-                for l in Arc::make_mut(layers).iter_mut() {
-                    visit(&mut l.wz);
-                    visit(&mut l.wr);
-                    visit(&mut l.wh);
-                }
+            KernelImpl::Dense { packed, .. } => {
+                packed.as_ref().expect("checked above").panel_partition(t)
             }
-            _ => {}
-        }
-    }
-    rebuilt
+            KernelImpl::Csr { mat, .. } => WorkPartition::contiguous(&csr_row_nnz(mat), t),
+            _ => unreachable!("sid only resolved for schedulable kernels"),
+        };
+        *slot = Arc::new(fresh);
+        rebuilt += 1;
+    });
+    (ScheduleSet { threads: t, parts }, rebuilt)
 }
 
 /// Packing-pass options (part of `CompileOptions`).
@@ -92,8 +96,13 @@ pub struct PackOptions {
     /// Engine-level switch; `GRIM_FORCE_UNPACKED=1` also disables.
     pub enabled: bool,
     /// Static partition width in worker buckets (the paper runs 8
-    /// threads; a pool with fewer workers drains several buckets each).
+    /// threads; engines rebalance to their runtime quota at load).
     pub threads: usize,
+    /// Cache model the block sizes derive from. Defaults to the
+    /// *compile host's* probed caches — right for same-host serving;
+    /// for cross-compiling to a different target, set this explicitly
+    /// (or export `GRIM_NO_CACHE_PROBE=1` for the generic mobile-core
+    /// model) so panels are blocked for the machine that will run them.
     pub cache: CacheParams,
     /// Tuner-gene overrides for the cache model (0 = derive).
     pub overrides: PackOverrides,
@@ -104,7 +113,9 @@ impl Default for PackOptions {
         PackOptions {
             enabled: true,
             threads: 8,
-            cache: CacheParams::default(),
+            // Host caches probed from sysfs once per process, generic
+            // mobile-core defaults otherwise (logged on first use).
+            cache: CacheParams::detected(),
             overrides: PackOverrides::default(),
         }
     }
@@ -130,44 +141,49 @@ pub struct PackingStats {
     pub packed_bytes: usize,
 }
 
-/// Rewrite every GEMM kernel in `steps` with its packed form.
-pub fn pack_step_kernels(steps: &mut [(usize, Step)], opts: &PackOptions) -> PackingStats {
+/// Rewrite every GEMM kernel in `steps` with its packed form, emitting
+/// the plan's [`ScheduleSet`] alongside the stats.
+pub fn pack_step_kernels(
+    steps: &mut [(usize, Step)],
+    opts: &PackOptions,
+) -> (PackingStats, ScheduleSet) {
     let mut stats =
         PackingStats { enabled: opts.enabled && !force_unpacked(), ..Default::default() };
+    let mut schedules = ScheduleSet { threads: opts.threads.max(1), ..Default::default() };
     if !stats.enabled {
-        return stats;
+        return (stats, schedules);
     }
     for (_, step) in steps.iter_mut() {
         match step {
             Step::Conv { geom, kernel, .. } => {
                 let n = geom.gemm_n();
-                pack_kernel(kernel, n, opts, &mut stats);
+                pack_kernel(kernel, n, opts, &mut stats, &mut schedules);
             }
-            Step::Fc { kernel, .. } => pack_kernel(kernel, 1, opts, &mut stats),
+            Step::Fc { kernel, .. } => pack_kernel(kernel, 1, opts, &mut stats, &mut schedules),
             Step::Gru { layers } => {
                 for l in Arc::make_mut(layers).iter_mut() {
-                    pack_kernel(&mut l.wz, 1, opts, &mut stats);
-                    pack_kernel(&mut l.wr, 1, opts, &mut stats);
-                    pack_kernel(&mut l.wh, 1, opts, &mut stats);
+                    pack_kernel(&mut l.wz, 1, opts, &mut stats, &mut schedules);
+                    pack_kernel(&mut l.wr, 1, opts, &mut stats, &mut schedules);
+                    pack_kernel(&mut l.wh, 1, opts, &mut stats, &mut schedules);
                 }
             }
             _ => {}
         }
     }
-    stats
+    (stats, schedules)
 }
 
-fn pack_kernel(k: &mut KernelImpl, n_hint: usize, opts: &PackOptions, stats: &mut PackingStats) {
+fn pack_kernel(
+    k: &mut KernelImpl,
+    n_hint: usize,
+    opts: &PackOptions,
+    stats: &mut PackingStats,
+    schedules: &mut ScheduleSet,
+) {
+    let threads = opts.threads.max(1);
     match k {
         KernelImpl::Bcrc { gemm } => {
-            let p = pack::pack_bcrc(
-                &gemm.enc,
-                gemm.params,
-                n_hint,
-                opts.cache,
-                opts.threads,
-                opts.overrides,
-            );
+            let p = pack::pack_bcrc(&gemm.enc, gemm.params, n_hint, opts.cache, opts.overrides);
             #[cfg(debug_assertions)]
             p.validate_against(&gemm.enc).expect("packed layout must round-trip");
             stats.bcrc_layers += 1;
@@ -175,16 +191,18 @@ fn pack_kernel(k: &mut KernelImpl, n_hint: usize, opts: &PackOptions, stats: &mu
                 stats.u16_layers += 1;
             }
             stats.packed_bytes += p.packed_bytes();
+            gemm.sched = Some(schedules.push(p.lpt_partition(threads)));
             gemm.packed = Some(Arc::new(p));
         }
-        KernelImpl::Dense { w, params, packed } => {
+        KernelImpl::Dense { w, params, packed, sched } => {
             let pd = PackedDense::pack(w, *params);
             stats.dense_layers += 1;
             stats.packed_bytes += 4 * pd.values.len();
+            *sched = Some(schedules.push(pd.panel_partition(threads)));
             *packed = Some(Arc::new(pd));
         }
-        KernelImpl::Csr { mat, part } => {
-            *part = Some(Arc::new(WorkPartition::contiguous(&csr_row_nnz(mat), opts.threads)));
+        KernelImpl::Csr { mat, sched } => {
+            *sched = Some(schedules.push(WorkPartition::contiguous(&csr_row_nnz(mat), threads)));
             stats.csr_layers += 1;
         }
         // NaiveDense stays deliberately naive (the TFLite analog);

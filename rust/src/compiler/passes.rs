@@ -169,8 +169,9 @@ pub fn compile(
     }
 
     // Pass 4½: repack weights for the memory hierarchy and compute the
-    // static nnz-balanced parallel partitions (see super::packing).
-    let packing = super::packing::pack_step_kernels(&mut steps, &opts.pack);
+    // static nnz-balanced parallel partitions, emitted as the plan's
+    // ScheduleSet beside the packed kernels (see super::packing).
+    let (packing, schedules) = super::packing::pack_step_kernels(&mut steps, &opts.pack);
 
     // Bypass fused-away (Noop) nodes: rewrite consumer edges to read the
     // producer directly so no tensor is cloned through the Noop at runtime.
@@ -201,6 +202,7 @@ pub fn compile(
         output_id: redirect[graph.output()?],
         memory: crate::memory::MemoryPlan::empty(),
         packing,
+        schedules,
     };
     // Pass 5: static activation-memory planning — liveness intervals over
     // the finished steps, then best-fit arena packing (see crate::memory).
@@ -250,10 +252,11 @@ fn build_kernel(
                 w: Arc::new(lw.w.clone()),
                 params: TileParams::default(),
                 packed: None,
+                sched: None,
             })
         }
         Backend::CsrSparse => {
-            Ok(KernelImpl::Csr { mat: Arc::new(Csr::from_dense(&lw.w)), part: None })
+            Ok(KernelImpl::Csr { mat: Arc::new(Csr::from_dense(&lw.w)), sched: None })
         }
         Backend::Grim => {
             let default_ir;
@@ -288,12 +291,13 @@ fn build_kernel(
                     anyhow::bail!("layer '{name}': IR format=bcrc but no BCR mask present")
                 }
                 (StorageFormat::Csr, _) => {
-                    Ok(KernelImpl::Csr { mat: Arc::new(Csr::from_dense(&lw.w)), part: None })
+                    Ok(KernelImpl::Csr { mat: Arc::new(Csr::from_dense(&lw.w)), sched: None })
                 }
                 (StorageFormat::Dense, _) => Ok(KernelImpl::Dense {
                     w: Arc::new(lw.w.clone()),
                     params: TileParams::default(),
                     packed: None,
+                    sched: None,
                 }),
             }
         }

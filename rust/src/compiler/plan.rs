@@ -36,24 +36,71 @@ impl Activation {
     }
 }
 
+/// The plan's static parallel schedules, hoisted out of the packed
+/// weight structures so they sit *beside* the packed `Arc`s instead of
+/// inside them. Kernels reference entries by index (their `sched` id);
+/// rebalancing to a different worker-bucket count rebuilds only these
+/// `Arc<WorkPartition>`s — the packed value buffers are never touched,
+/// copied, or even uniquely borrowed
+/// (see `super::packing::rebalance_partitions`).
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleSet {
+    /// Worker-bucket count the partitions are currently balanced for
+    /// (informational; each partition also knows its own bucket count).
+    pub threads: usize,
+    /// One partition per scheduled kernel, indexed by `sched` id.
+    pub parts: Vec<Arc<WorkPartition>>,
+}
+
+impl ScheduleSet {
+    /// Append a partition, returning its schedule id.
+    pub fn push(&mut self, part: WorkPartition) -> u32 {
+        let id = self.parts.len() as u32;
+        self.parts.push(Arc::new(part));
+        id
+    }
+
+    /// Resolve a kernel's optional schedule id.
+    pub fn get(&self, id: Option<u32>) -> Option<&Arc<WorkPartition>> {
+        self.parts.get(id? as usize)
+    }
+
+    pub fn len(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+}
+
 /// How a GEMM is executed — the kernel-selection axis Figure 11 sweeps.
+/// GEMM-parallel kernels carry a `sched` id into the plan's
+/// [`ScheduleSet`] (assigned by the packing pass) instead of owning
+/// their partition.
 #[derive(Clone, Debug)]
 pub enum KernelImpl {
     /// Unoptimized dense triple loop (TFLite analog).
     NaiveDense { w: Arc<Tensor> },
     /// Tiled + register-blocked dense (MNN/TVM analog, and GRIM's own
     /// dense layers). `packed` carries the plan-time panel interleave
-    /// the tiled kernel streams when the packing pass ran.
-    Dense { w: Arc<Tensor>, params: TileParams, packed: Option<Arc<PackedDense>> },
+    /// the tiled kernel streams when the packing pass ran; `sched` the
+    /// panel-granular parallel schedule.
+    Dense {
+        w: Arc<Tensor>,
+        params: TileParams,
+        packed: Option<Arc<PackedDense>>,
+        sched: Option<u32>,
+    },
     /// Winograd F(2,3) — dense 3×3 stride-1 CONVs only; holds the
     /// original `[F,C,3,3]` weights plus the kernel transforms
     /// `U = G g Gᵀ` precomputed at compile time (`[F*C*16]`).
     Winograd { w4: Arc<Tensor>, ut: Arc<Vec<f32>> },
-    /// General sparse baseline. `part` is the compile-time nnz-balanced
-    /// row partition the parallel kernel consumes when packing ran.
-    Csr { mat: Arc<Csr>, part: Option<Arc<WorkPartition>> },
+    /// General sparse baseline. `sched` references the compile-time
+    /// nnz-balanced row partition the parallel kernel consumes.
+    Csr { mat: Arc<Csr>, sched: Option<u32> },
     /// GRIM: BCRC + reorder + LRE (the packed layout, when present,
-    /// rides inside [`BcrcGemm`]).
+    /// rides inside [`BcrcGemm`], which also carries the `sched` id).
     Bcrc { gemm: BcrcGemm },
 }
 
@@ -103,6 +150,28 @@ pub struct GruLayerPlan {
     pub bz: Vec<f32>,
     pub br: Vec<f32>,
     pub bh: Vec<f32>,
+}
+
+/// Visit every GEMM kernel in `steps` (Conv/FC kernels plus all three
+/// gate kernels of every GRU layer) — the **single definition** of the
+/// kernel walk, shared by the packing pass's rebalance, the artifact
+/// schedule validation, the v1 writer's pre-check, and tests, so a new
+/// kernel-bearing [`Step`] variant cannot be silently missed in one
+/// copy.
+pub fn for_each_kernel<'p>(steps: &'p [(NodeId, Step)], mut f: impl FnMut(&'p KernelImpl)) {
+    for (_, step) in steps {
+        match step {
+            Step::Conv { kernel, .. } | Step::Fc { kernel, .. } => f(kernel),
+            Step::Gru { layers } => {
+                for l in layers.iter() {
+                    f(&l.wz);
+                    f(&l.wr);
+                    f(&l.wh);
+                }
+            }
+            _ => {}
+        }
+    }
 }
 
 /// One executable step (1:1 with graph nodes).
@@ -162,6 +231,11 @@ pub struct ExecutionPlan {
     pub memory: MemoryPlan,
     /// What the weight-packing pass did (see [`super::packing`]).
     pub packing: PackingStats,
+    /// Static parallel schedules, one per GEMM-parallel kernel, sitting
+    /// beside the packed weight `Arc`s (never inside them). The engine
+    /// rebalances a *copy* of this to its runtime quota; the plan's own
+    /// set stays as compiled (and is what `.grimc` serializes).
+    pub schedules: ScheduleSet,
 }
 
 impl ExecutionPlan {
@@ -225,6 +299,14 @@ impl ExecutionPlan {
                 self.packing.csr_layers,
                 self.packing.packed_bytes / 1024,
                 self.packing.u16_layers
+            );
+        }
+        if !self.schedules.is_empty() {
+            let _ = writeln!(
+                s,
+                "  schedules: {} kernel partitions x {} buckets",
+                self.schedules.len(),
+                self.schedules.threads
             );
         }
         s

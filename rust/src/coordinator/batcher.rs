@@ -21,34 +21,62 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Pulls batches from a queue according to a policy.
+/// Resolves the batching policy for a batch's target model. Registry
+/// servers install one backed by per-model policy overrides; `None`
+/// from the resolver falls back to the batcher's default policy.
+pub type PolicyResolver<'a> = Box<dyn Fn(Option<&str>) -> Option<BatchPolicy> + Send + 'a>;
+
+/// Pulls batches from a queue according to a policy — either one fixed
+/// default, or a per-model override resolved per batch head.
 pub struct Batcher<'a> {
     queue: &'a RequestQueue,
     policy: BatchPolicy,
+    resolver: Option<PolicyResolver<'a>>,
 }
 
 impl<'a> Batcher<'a> {
     pub fn new(queue: &'a RequestQueue, policy: BatchPolicy) -> Self {
-        Batcher { queue, policy }
+        Batcher { queue, policy, resolver: None }
+    }
+
+    /// Batcher whose policy is resolved per batch from the head
+    /// request's target model (falling back to `default` when the
+    /// resolver returns `None`) — a latency-sensitive RNN and a
+    /// throughput CNN behind one server get different knobs.
+    pub fn with_policy_resolver(
+        queue: &'a RequestQueue,
+        default: BatchPolicy,
+        resolver: PolicyResolver<'a>,
+    ) -> Self {
+        Batcher { queue, policy: default, resolver: Some(resolver) }
+    }
+
+    /// The policy governing a batch headed by a request for `model`.
+    fn policy_for(&self, model: &Option<String>) -> BatchPolicy {
+        self.resolver
+            .as_ref()
+            .and_then(|r| r(model.as_deref()))
+            .unwrap_or(self.policy)
     }
 
     /// Block for the next batch; None when the queue is closed and empty.
     ///
     /// Batches are homogeneous in target model: the first request fixes
-    /// the model, further requests are gathered only while they match.
-    /// A head-of-line request for a *different* model ships the batch
-    /// immediately (no point waiting out the deadline — the batch cannot
-    /// grow past it without reordering), and that request seeds the next
-    /// batch.
+    /// the model (and, via the resolver, the policy), further requests
+    /// are gathered only while they match. A head-of-line request for a
+    /// *different* model ships the batch immediately (no point waiting
+    /// out the deadline — the batch cannot grow past it without
+    /// reordering), and that request seeds the next batch.
     pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
         let first = self.queue.pop()?;
         let model = first.model.clone();
+        let policy = self.policy_for(&model);
         let mut batch = vec![first];
-        let deadline = Instant::now() + self.policy.max_wait;
-        while batch.len() < self.policy.max_batch {
+        let deadline = Instant::now() + policy.max_wait;
+        while batch.len() < policy.max_batch {
             let more = self
                 .queue
-                .drain_while_matching(self.policy.max_batch - batch.len(), &model);
+                .drain_while_matching(policy.max_batch - batch.len(), &model);
             if !more.is_empty() {
                 batch.extend(more);
                 continue;
@@ -138,6 +166,36 @@ mod tests {
         q.close();
         let b = Batcher::new(&q, BatchPolicy::default());
         assert!(b.next_batch().is_none());
+    }
+
+    /// A per-model policy override caps one model's batches while the
+    /// default still governs the other.
+    #[test]
+    fn per_model_policy_overrides_batch_size() {
+        let q = RequestQueue::new(16);
+        for (id, m) in [(0, "rt"), (1, "rt"), (2, "rt"), (3, "bulk"), (4, "bulk"), (5, "bulk")] {
+            q.push(req_for(id, m)).unwrap();
+        }
+        let default = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        let b = Batcher::with_policy_resolver(
+            &q,
+            default,
+            Box::new(|m| match m {
+                // latency-sensitive model: no batching at all
+                Some("rt") => {
+                    Some(BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(0) })
+                }
+                _ => None,
+            }),
+        );
+        assert_eq!(b.next_batch().unwrap().iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(b.next_batch().unwrap().iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(b.next_batch().unwrap().iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        // the bulk model batches under the default policy
+        assert_eq!(
+            b.next_batch().unwrap().iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![3, 4, 5]
+        );
     }
 
     #[test]

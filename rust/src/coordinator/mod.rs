@@ -12,5 +12,5 @@ pub mod batcher;
 pub mod server;
 
 pub use batcher::{Batcher, BatchPolicy};
-pub use queue::{InferRequest, InferResponse, RequestQueue};
+pub use queue::{InferRequest, InferResponse, RequestQueue, ServeError};
 pub use server::{Server, ServerConfig, ServerStats};

@@ -1,9 +1,40 @@
-//! Bounded MPSC request queue with backpressure.
+//! Bounded MPSC request queue with backpressure, plus the typed
+//! serving-error taxonomy responses carry.
 
 use crate::tensor::Tensor;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
+
+/// Why a request failed, as a typed variant rather than a formatted
+/// string — admission control and per-model miss counters hook on
+/// [`ServeError::ModelNotResident`] without parsing messages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request named a model the registry does not currently hold
+    /// (never loaded, or LRU-evicted while the request sat queued).
+    ModelNotResident { model: String },
+    /// The request named no model and the server has no default.
+    NoDefaultModel,
+    /// The target engine rejected or failed the request.
+    Exec(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::ModelNotResident { model } => {
+                write!(f, "model '{model}' is not resident (unknown or evicted)")
+            }
+            ServeError::NoDefaultModel => {
+                write!(f, "request names no model and the server has no default")
+            }
+            ServeError::Exec(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// One inference request.
 #[derive(Debug)]
@@ -26,8 +57,9 @@ pub struct InferResponse {
     pub queue_ms: f64,
     /// Time spent executing (ms).
     pub exec_ms: f64,
-    /// Execution failure (e.g. wrong input shape); `None` on success.
-    pub error: Option<String>,
+    /// Typed failure (non-resident model, engine error); `None` on
+    /// success.
+    pub error: Option<ServeError>,
 }
 
 /// A bounded FIFO with blocking push (backpressure) and blocking pop.

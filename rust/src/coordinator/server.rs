@@ -14,7 +14,7 @@
 //! the server runs.
 
 use super::batcher::{Batcher, BatchPolicy};
-use super::queue::{InferRequest, InferResponse, RequestQueue};
+use super::queue::{InferRequest, InferResponse, RequestQueue, ServeError};
 use crate::engine::Engine;
 use crate::memory::{PoolStats, WorkspacePool};
 use crate::serving::ModelRegistry;
@@ -84,7 +84,9 @@ impl Server {
     /// entry and the default route.
     pub fn start(engine: Engine, config: ServerConfig) -> Self {
         let name = engine.plan().name.clone();
-        let registry = Arc::new(ModelRegistry::new(engine.threads()));
+        // The one-model registry borrows the engine's runtime — no
+        // second worker pool is spawned.
+        let registry = Arc::new(ModelRegistry::with_runtime(engine.runtime(), usize::MAX));
         let arena = engine.workspace_pool();
         registry.insert_engine(name.clone(), engine);
         Self::start_inner(registry, Some(name), Some(arena), config)
@@ -122,7 +124,20 @@ impl Server {
         let scheduler = std::thread::Builder::new()
             .name("grim-scheduler".into())
             .spawn(move || {
-                let batcher = Batcher::new(&q2, policy);
+                // Per-model batching: the registry's policy overrides
+                // win over the server-wide default, resolved per batch
+                // head (unnamed requests resolve through the default
+                // model's name).
+                let preg = Arc::clone(&reg);
+                let pdefault = default.clone();
+                let batcher = Batcher::with_policy_resolver(
+                    &q2,
+                    policy,
+                    Box::new(move |m| {
+                        let name = m.or(pdefault.as_deref())?;
+                        preg.policy_for(name)
+                    }),
+                );
                 while let Some(batch) = batcher.next_batch() {
                     b2.fetch_add(1, Ordering::Relaxed);
                     // Batches are model-homogeneous; resolve once per
@@ -131,22 +146,32 @@ impl Server {
                     // instead of silently pinning its memory.
                     let target = batch[0].model.clone().or_else(|| default.clone());
                     let engine = target.as_deref().and_then(|n| reg.get(n));
+                    if let (None, Some(n)) = (&engine, &target) {
+                        // One miss per failed request (batched: one
+                        // lock); the counter is the admission-control
+                        // signal.
+                        reg.note_misses(n, batch.len() as u64);
+                    }
                     for req in batch {
                         let qms = req.enqueued.elapsed().as_secs_f64() * 1e3;
                         let t = Instant::now();
-                        // Failures (wrong input shape, unknown model)
-                        // must reach the caller, not masquerade as
-                        // results.
+                        // Failures (wrong input shape, non-resident
+                        // model) must reach the caller as typed errors,
+                        // not masquerade as results.
                         let (out, error) = match &engine {
                             Some(e) => match e.run(&req.input) {
                                 Ok(out) => (out, None),
-                                Err(e) => (Tensor::zeros(&[1]), Some(e.to_string())),
+                                Err(e) => {
+                                    (Tensor::zeros(&[1]), Some(ServeError::Exec(e.to_string())))
+                                }
                             },
                             None => (
                                 Tensor::zeros(&[1]),
                                 Some(match &target {
-                                    Some(n) => format!("unknown model '{n}'"),
-                                    None => "request names no model and the server has no default".to_string(),
+                                    Some(n) => {
+                                        ServeError::ModelNotResident { model: n.clone() }
+                                    }
+                                    None => ServeError::NoDefaultModel,
                                 }),
                             ),
                         };
@@ -445,13 +470,21 @@ mod tests {
         let mut rng = Rng::new(8);
         let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
         let err = server.infer_on("nope", x.clone()).unwrap_err();
-        assert!(err.to_string().contains("unknown model"), "{err}");
+        assert!(err.to_string().contains("not resident"), "{err}");
+        // The typed variant is observable on the raw response path, and
+        // the per-model miss counter advanced.
+        let resp = server.submit_to("nope", x.clone()).unwrap().recv().unwrap();
+        assert_eq!(
+            resp.error,
+            Some(ServeError::ModelNotResident { model: "nope".to_string() })
+        );
+        assert_eq!(registry.not_resident("nope"), 2);
         // No default on a registry server: unnamed requests fail too.
         let err = server.infer(x.clone()).unwrap_err();
         assert!(err.to_string().contains("no default"), "{err}");
         assert!(server.infer_on("rnn", x).is_ok());
         let stats = server.stats();
-        assert_eq!(stats.failed, 2);
+        assert_eq!(stats.failed, 3);
         assert_eq!(stats.completed, 1);
     }
 

@@ -16,11 +16,15 @@
 //!   each intermediate as an owned [`Tensor`]. Kept as the correctness
 //!   reference the planned path is property-tested against.
 
-use crate::compiler::plan::{Activation, ExecutionPlan, GruLayerPlan, KernelImpl, Step};
+use crate::compiler::packing::rebalance_partitions;
+use crate::compiler::plan::{
+    Activation, ExecutionPlan, GruLayerPlan, KernelImpl, ScheduleSet, Step,
+};
 use crate::conv::direct::{depthwise_conv2d_into_ep, depthwise_conv2d_parallel_ep};
 use crate::conv::im2col::{im2col, im2col_into, im2col_skip, ConvGeom};
 use crate::conv::ops;
 use crate::conv::winograd::{conv2d_winograd, conv2d_winograd_into};
+use crate::exec::Runtime;
 use crate::gemm::csr_gemm::{
     csr_gemm_into_ep, csr_gemm_parallel_into_ep, csr_gemm_partitioned_into_ep,
 };
@@ -35,7 +39,7 @@ use crate::memory::layout::{self, ConvScratch, GruScratch};
 use crate::memory::{Workspace, WorkspacePool};
 use crate::tensor::Tensor;
 use crate::util::{ThreadPool, Timer};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use super::metrics::{LayerMetric, RunMetrics};
 
@@ -43,11 +47,25 @@ use super::metrics::{LayerMetric, RunMetrics};
 /// this the dispatch overhead dominates.
 const PARALLEL_THRESHOLD: usize = 16 * 1024;
 
-/// The inference engine: a plan bound to a worker pool, a workspace arena
-/// pool, and the micro-kernel vtable selected at startup.
+/// The inference engine: a plan bound to a (usually shared) execution
+/// [`Runtime`], a workspace arena pool, and the micro-kernel vtable
+/// selected at startup.
+///
+/// The plan itself is **immutable** after construction — in particular,
+/// the packed weight `Arc`s are never uniquely borrowed. The engine's
+/// only mutable state besides the arena pool is its active
+/// [`ScheduleSet`]: a rebalanced copy of the plan's compile-time
+/// schedules, swapped atomically (behind an `RwLock<Arc<_>>`, read once
+/// per inference) when the runtime quota changes.
 pub struct Engine {
     plan: ExecutionPlan,
-    pool: ThreadPool,
+    /// The execution runtime this engine dispatches on. Registry engines
+    /// share one process-wide runtime; `Engine::with_threads` builds a
+    /// private one for standalone use.
+    rt: Arc<Runtime>,
+    /// Active parallel schedules, rebalanced to the runtime quota.
+    /// Snapshot-per-run: each inference clones the `Arc` once.
+    sched: RwLock<Arc<ScheduleSet>>,
     workspaces: Arc<WorkspacePool>,
     /// Micro-kernel table every GEMM/conv step runs on (CPU-dispatched at
     /// construction; individual BCRC layers can still pin themselves to
@@ -58,28 +76,71 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Engine over a **private** runtime of `threads` workers (alias of
+    /// [`Self::with_threads`], kept as the historical constructor).
     pub fn new(plan: ExecutionPlan, threads: usize) -> Self {
-        Self::with_microkernels(plan, threads, simd::active())
+        Self::with_threads(plan, threads)
+    }
+
+    /// Build an engine that owns a private `threads`-worker [`Runtime`].
+    /// Standalone tools and tests use this; the serving tier shares one
+    /// process-wide runtime via [`Self::with_runtime`] instead.
+    pub fn with_threads(plan: ExecutionPlan, threads: usize) -> Self {
+        let rt = Runtime::new(threads);
+        let buckets = rt.threads();
+        Self::with_runtime_mk(plan, rt, buckets, simd::active())
     }
 
     /// Build an engine pinned to a specific micro-kernel table — pass
     /// [`simd::scalar`] to force the scalar backend (testing/ablation).
     pub fn with_microkernels(
-        mut plan: ExecutionPlan,
+        plan: ExecutionPlan,
         threads: usize,
         mk: &'static Microkernels,
     ) -> Self {
-        let threads = threads.max(1);
-        // Per-pool-size partitions: when this engine's worker count
-        // differs from the compile-time bucket count (e.g. a `.grimc`
-        // artifact compiled elsewhere), rebuild the static nnz-balanced
-        // schedules for the pool we actually have. Re-scheduling only —
-        // never re-packing — and bit-identical for any bucket count.
-        crate::compiler::packing::rebalance_partitions(&mut plan.steps, threads);
+        let rt = Runtime::new(threads);
+        let buckets = rt.threads();
+        Self::with_runtime_mk(plan, rt, buckets, mk)
+    }
+
+    /// Build an engine that **borrows** a shared runtime instead of
+    /// spawning its own workers. N engines on one runtime keep the
+    /// process at exactly the runtime's thread count. Schedules are
+    /// balanced to the full pool width; fair-share quotas are keyed by
+    /// *registry* model name (not the plan's internal name, which can
+    /// collide across hot-load aliases), so the registry applies them
+    /// via [`Self::rebalance`] once the model is registered.
+    pub fn with_runtime(plan: ExecutionPlan, rt: Arc<Runtime>) -> Self {
+        let buckets = rt.threads();
+        Self::with_runtime_buckets(plan, rt, buckets)
+    }
+
+    /// [`Self::with_runtime`] balancing the schedules to `buckets`
+    /// directly (the registry passes the model's quota here, so a
+    /// quota'd load builds its schedules exactly once instead of
+    /// pool-width-then-rebalance).
+    pub fn with_runtime_buckets(plan: ExecutionPlan, rt: Arc<Runtime>, buckets: usize) -> Self {
+        Self::with_runtime_mk(plan, rt, buckets, simd::active())
+    }
+
+    /// [`Self::with_runtime_buckets`] with an explicit micro-kernel table.
+    pub fn with_runtime_mk(
+        plan: ExecutionPlan,
+        rt: Arc<Runtime>,
+        buckets: usize,
+        mk: &'static Microkernels,
+    ) -> Self {
+        // Rebalance the compile-time schedules to the requested bucket
+        // count (e.g. a `.grimc` artifact compiled on another host, or
+        // a fair-share quota below the pool width). Pure re-scheduling
+        // over an immutable plan — never re-packing, never a value
+        // buffer copy — and bit-identical for any bucket count.
+        let (sched, _) = rebalance_partitions(&plan.steps, &plan.schedules, buckets);
         let workspaces = Arc::new(WorkspacePool::new(plan.memory.arena_len));
         Engine {
             plan,
-            pool: ThreadPool::new(threads),
+            rt,
+            sched: RwLock::new(Arc::new(sched)),
             workspaces,
             mk,
             collect_metrics: false,
@@ -95,8 +156,36 @@ impl Engine {
         self.mk
     }
 
+    /// The execution runtime this engine dispatches on.
+    pub fn runtime(&self) -> Arc<Runtime> {
+        Arc::clone(&self.rt)
+    }
+
+    /// Worker count of the (possibly shared) runtime pool.
     pub fn threads(&self) -> usize {
-        self.pool.size()
+        self.rt.threads()
+    }
+
+    #[inline]
+    fn pool(&self) -> &ThreadPool {
+        self.rt.pool()
+    }
+
+    /// Snapshot of the engine's active parallel schedules.
+    pub fn schedules(&self) -> Arc<ScheduleSet> {
+        Arc::clone(&self.sched.read().unwrap())
+    }
+
+    /// Rebalance the engine's schedules to `buckets` worker buckets
+    /// (quota changes). Pure metadata: rebuilds `WorkPartition`s from the
+    /// immutable plan and atomically installs the new set — in-flight
+    /// inferences finish on the old snapshot. Returns the number of
+    /// kernel schedules rebuilt.
+    pub fn rebalance(&self, buckets: usize) -> usize {
+        let current = self.schedules();
+        let (next, rebuilt) = rebalance_partitions(&self.plan.steps, &current, buckets);
+        *self.sched.write().unwrap() = Arc::new(next);
+        rebuilt
     }
 
     /// Handle to the engine's arena pool (serving stats, zero-alloc tests).
@@ -140,9 +229,12 @@ impl Engine {
             expect
         );
         let mut metrics = RunMetrics::default();
+        // One schedule snapshot per inference: a concurrent rebalance
+        // (quota change) swaps the Arc; this run keeps its consistent set.
+        let sched = self.schedules();
         for (id, step) in &self.plan.steps {
             let t = Timer::start();
-            let kind = self.exec_step_planned(*id, step, input, ws)?;
+            let kind = self.exec_step_planned(*id, step, input, ws, &sched)?;
             if self.collect_metrics {
                 metrics.layers.push(LayerMetric { node: *id, kind, micros: t.elapsed_us() });
             }
@@ -241,6 +333,7 @@ impl Engine {
         step: &Step,
         input: &Tensor,
         ws: &mut Workspace,
+        sched: &ScheduleSet,
     ) -> anyhow::Result<&'static str> {
         let mem = &self.plan.memory;
         let kind = match step {
@@ -275,7 +368,7 @@ impl Engine {
                         let gather_r = mem.scratch_range(id);
                         let (out, gather, xin) =
                             self.gemm_operands(ws, out_r, gather_r, src, input);
-                        self.exec_gemm_into(kernel, xin, n, out, gather, ep)?;
+                        self.exec_gemm_into(kernel, sched, xin, n, out, gather, ep)?;
                     } else {
                         let scratch_r = mem
                             .scratch_range(id)
@@ -291,7 +384,7 @@ impl Engine {
                         }
                         let (out, scratch) = ws.split2_mut(out_r, scratch_r);
                         let (cols, gather) = scratch.split_at_mut(sc.im2col);
-                        self.exec_gemm_into(kernel, cols, n, out, gather, ep)?;
+                        self.exec_gemm_into(kernel, sched, cols, n, out, gather, ep)?;
                     }
                 }
                 "conv"
@@ -311,7 +404,7 @@ impl Engine {
                     *stride,
                     *pad,
                     out,
-                    Some(&self.pool),
+                    Some(self.pool()),
                     self.mk,
                     epilogue_of(bias, *act),
                 );
@@ -322,7 +415,7 @@ impl Engine {
                 let src = self.src_range(id, 0)?;
                 let gather_r = mem.scratch_range(id);
                 let (out, gather, xin) = self.gemm_operands(ws, out_r, gather_r, src, input);
-                self.exec_gemm_into(kernel, xin, 1, out, gather, epilogue_of(bias, *act))?;
+                self.exec_gemm_into(kernel, sched, xin, 1, out, gather, epilogue_of(bias, *act))?;
                 "fc"
             }
             Step::Gru { layers } => {
@@ -336,7 +429,7 @@ impl Engine {
                 let gl = GruScratch::for_layers(layers, t_len);
                 let (final_off, h_last) = {
                     let (scratch, xin) = self.out_and_in(ws, scratch_r, src, input);
-                    self.exec_gru_scratch(layers, t_len, in_f0, xin, scratch, gl)?
+                    self.exec_gru_scratch(layers, sched, t_len, in_f0, xin, scratch, gl)?
                 };
                 let (out, scratch) = ws.split2_mut(out_r, scratch_r);
                 out.copy_from_slice(&scratch[final_off..final_off + t_len * h_last]);
@@ -420,8 +513,9 @@ impl Engine {
     pub fn run_naive(&self, input: &Tensor) -> anyhow::Result<Tensor> {
         let n = self.plan.steps.len();
         let mut values: Vec<Option<Tensor>> = vec![None; n];
+        let sched = self.schedules();
         for (id, step) in &self.plan.steps {
-            let out = self.exec_step_naive(*id, step, input, &values)?;
+            let out = self.exec_step_naive(*id, step, input, &values, &sched)?;
             values[*id] = out;
         }
         match values[self.plan.output_id].take() {
@@ -461,6 +555,7 @@ impl Engine {
         step: &Step,
         input: &Tensor,
         values: &[Option<Tensor>],
+        sched: &ScheduleSet,
     ) -> anyhow::Result<Option<Tensor>> {
         Ok(match step {
             Step::Input => None, // consumers read the caller's tensor
@@ -475,7 +570,8 @@ impl Engine {
                     Some(out)
                 } else {
                     let ep = epilogue_of(bias, *act);
-                    let out = self.exec_conv_gemm(geom, kernel, dead_cols.as_deref(), x, ep)?;
+                    let out =
+                        self.exec_conv_gemm(geom, kernel, sched, dead_cols.as_deref(), x, ep)?;
                     Some(out.reshape(&[geom.out_c, geom.out_h(), geom.out_w()]))
                 }
             }
@@ -486,20 +582,21 @@ impl Engine {
                     w,
                     *stride,
                     *pad,
-                    &self.pool,
+                    self.pool(),
                     self.mk,
                     epilogue_of(bias, *act),
                 ))
             }
             Step::Fc { kernel, bias, act } => {
                 let x = self.value(values, input, id, 0)?;
-                let out = self.exec_gemm_alloc(kernel, x.data(), 1, epilogue_of(bias, *act))?;
+                let out =
+                    self.exec_gemm_alloc(kernel, sched, x.data(), 1, epilogue_of(bias, *act))?;
                 let rows = out.shape().dim(0);
                 Some(out.reshape(&[rows]))
             }
             Step::Gru { layers } => {
                 let x = self.value(values, input, id, 0)?;
-                Some(self.exec_gru(layers, x)?)
+                Some(self.exec_gru(layers, sched, x)?)
             }
             Step::MaxPool2 => Some(ops::maxpool2(self.value(values, input, id, 0)?)),
             Step::GlobalAvgPool => Some(ops::global_avgpool(self.value(values, input, id, 0)?)),
@@ -535,10 +632,12 @@ impl Engine {
 
     /// Naive-path conv as im2col + GEMM with fused epilogue (Winograd is
     /// handled by the caller — it never runs as a plain GEMM).
+    #[allow(clippy::too_many_arguments)]
     fn exec_conv_gemm(
         &self,
         geom: &ConvGeom,
         kernel: &KernelImpl,
+        sched: &ScheduleSet,
         dead: Option<&Vec<bool>>,
         x: &Tensor,
         ep: Epilogue<'_>,
@@ -546,13 +645,13 @@ impl Engine {
         // 1x1 stride-1 convs: im2col is the identity — feed x directly
         // ([C,H,W] viewed as [C, H*W]); MobileNet is mostly this case.
         if layout::conv_is_identity_im2col(geom) {
-            return self.exec_gemm_alloc(kernel, x.data(), geom.in_h * geom.in_w, ep);
+            return self.exec_gemm_alloc(kernel, sched, x.data(), geom.in_h * geom.in_w, ep);
         }
         let cols = match dead {
             Some(d) => im2col_skip(x, geom, d),
             None => im2col(x, geom),
         };
-        self.exec_gemm_alloc(kernel, cols.data(), geom.gemm_n(), ep)
+        self.exec_gemm_alloc(kernel, sched, cols.data(), geom.gemm_n(), ep)
     }
 
     // ---------------------------------------------------------------
@@ -564,6 +663,7 @@ impl Engine {
     fn exec_gemm_alloc(
         &self,
         kernel: &KernelImpl,
+        sched: &ScheduleSet,
         xd: &[f32],
         n: usize,
         ep: Epilogue<'_>,
@@ -574,17 +674,21 @@ impl Engine {
         let mut out = Tensor::zeros(&[m, n]);
         let mut gather =
             vec![0.0f32; if n == 1 { layout::kernel_gather_len(kernel) } else { 0 }];
-        self.exec_gemm_into(kernel, xd, n, out.data_mut(), &mut gather, ep)?;
+        self.exec_gemm_into(kernel, sched, xd, n, out.data_mut(), &mut gather, ep)?;
         Ok(out)
     }
 
     /// The single kernel-dispatch point: `out[M,N] = W · X[K,N]` with `x`
     /// and `out` as flat slices; `gather` is gemv scratch for BCRC, `ep`
     /// the fused bias/activation epilogue. Every kernel runs on the
-    /// engine's dispatched [`Microkernels`].
+    /// engine's dispatched [`Microkernels`]; parallel kernels resolve
+    /// their static partition through `sched` (the engine's active,
+    /// quota-rebalanced `ScheduleSet` snapshot).
+    #[allow(clippy::too_many_arguments)]
     fn exec_gemm_into(
         &self,
         kernel: &KernelImpl,
+        sched: &ScheduleSet,
         xd: &[f32],
         n: usize,
         out: &mut [f32],
@@ -593,32 +697,34 @@ impl Engine {
     ) -> anyhow::Result<()> {
         match kernel {
             KernelImpl::NaiveDense { w } => naive_gemm_dense_into_ep(w, xd, n, out, self.mk, ep),
-            KernelImpl::Dense { w, params, packed } => {
+            KernelImpl::Dense { w, params, packed, sched: sid } => {
                 let (m, _) = w.shape().as_matrix();
                 let parallel = m * n >= PARALLEL_THRESHOLD;
                 match (packed, parallel) {
                     (Some(pd), true) => tiled_gemm_packed_parallel_into_ep(
-                        pd, xd, n, *params, &self.pool, out, self.mk, ep,
+                        pd, xd, n, *params, sched.get(*sid), self.pool(), out, self.mk, ep,
                     ),
                     (Some(pd), false) => {
                         tiled_gemm_packed_into_ep(pd, xd, n, *params, out, self.mk, ep)
                     }
                     (None, true) => tiled_gemm_parallel_into_ep(
-                        w, xd, n, *params, &self.pool, out, self.mk, ep,
+                        w, xd, n, *params, self.pool(), out, self.mk, ep,
                     ),
                     (None, false) => tiled_gemm_into_ep(w, xd, n, *params, out, self.mk, ep),
                 }
             }
             KernelImpl::Winograd { .. } => anyhow::bail!("winograd outside conv"),
-            KernelImpl::Csr { mat, part } => {
+            KernelImpl::Csr { mat, sched: sid } => {
                 if mat.rows * n >= PARALLEL_THRESHOLD {
-                    match part {
+                    match sched.get(*sid) {
                         // Compile-time nnz-balanced row partition beats
                         // the even row split on skewed sparsity.
                         Some(wp) => csr_gemm_partitioned_into_ep(
-                            mat, wp, xd, n, &self.pool, out, self.mk, ep,
+                            mat, wp, xd, n, self.pool(), out, self.mk, ep,
                         ),
-                        None => csr_gemm_parallel_into_ep(mat, xd, n, &self.pool, out, self.mk, ep),
+                        None => {
+                            csr_gemm_parallel_into_ep(mat, xd, n, self.pool(), out, self.mk, ep)
+                        }
                     }
                 } else {
                     csr_gemm_into_ep(mat, xd, n, out, self.mk, ep);
@@ -626,7 +732,15 @@ impl Engine {
             }
             KernelImpl::Bcrc { gemm } => {
                 if gemm.enc.rows * n >= PARALLEL_THRESHOLD {
-                    gemm.execute_parallel_into_ep(xd, n, out, &self.pool, self.mk, ep);
+                    gemm.execute_parallel_into_ep(
+                        xd,
+                        n,
+                        out,
+                        sched.get(gemm.sched),
+                        self.pool(),
+                        self.mk,
+                        ep,
+                    );
                 } else {
                     gemm.execute_into_ep(xd, n, out, gather, self.mk, ep);
                 }
@@ -641,20 +755,28 @@ impl Engine {
 
     /// Naive-path GRU: allocates one scratch region and defers to the
     /// shared layer core.
-    fn exec_gru(&self, layers: &[GruLayerPlan], x: &Tensor) -> anyhow::Result<Tensor> {
+    fn exec_gru(
+        &self,
+        layers: &[GruLayerPlan],
+        sched: &ScheduleSet,
+        x: &Tensor,
+    ) -> anyhow::Result<Tensor> {
         let (t_len, in_f0) = x.shape().as_matrix();
         let gl = GruScratch::for_layers(layers, t_len);
         let mut scratch = vec![0.0f32; gl.total()];
-        let (off, h_last) = self.exec_gru_scratch(layers, t_len, in_f0, x.data(), &mut scratch, gl)?;
+        let (off, h_last) =
+            self.exec_gru_scratch(layers, sched, t_len, in_f0, x.data(), &mut scratch, gl)?;
         Ok(Tensor::from_vec(&[t_len, h_last], scratch[off..off + t_len * h_last].to_vec()))
     }
 
     /// Run the whole GRU stack inside `scratch` (laid out per
     /// [`GruScratch`]); returns `(offset, hidden)` of the final `[T, H]`
     /// sequence within `scratch`.
+    #[allow(clippy::too_many_arguments)]
     fn exec_gru_scratch(
         &self,
         layers: &[GruLayerPlan],
+        sched: &ScheduleSet,
         t_len: usize,
         in_f0: usize,
         xin: &[f32],
@@ -686,7 +808,9 @@ impl Engine {
             } else {
                 (&*seq_b, &mut *seq_a)
             };
-            self.gru_layer(layer, t_len, src_seq, dst_seq, cat, cat2, z, r, hc, hidden, gather)?;
+            self.gru_layer(
+                layer, sched, t_len, src_seq, dst_seq, cat, cat2, z, r, hc, hidden, gather,
+            )?;
             in_f = h;
         }
         let h_last = layers[layers.len() - 1].hidden;
@@ -700,6 +824,7 @@ impl Engine {
     fn gru_layer(
         &self,
         layer: &GruLayerPlan,
+        sched: &ScheduleSet,
         t_len: usize,
         src: &[f32],
         dst: &mut [f32],
@@ -718,14 +843,14 @@ impl Engine {
             let xt = &src[t * in_f..(t + 1) * in_f];
             cat[..in_f].copy_from_slice(xt);
             cat[in_f..cat_w].copy_from_slice(&hidden[..h]);
-            self.gate_into(&layer.wz, &cat[..cat_w], &layer.bz, true, &mut z[..h], gather)?;
-            self.gate_into(&layer.wr, &cat[..cat_w], &layer.br, true, &mut r[..h], gather)?;
+            self.gate_into(&layer.wz, sched, &cat[..cat_w], &layer.bz, true, &mut z[..h], gather)?;
+            self.gate_into(&layer.wr, sched, &cat[..cat_w], &layer.br, true, &mut r[..h], gather)?;
             // candidate uses [x, r ⊙ h]
             cat2[..in_f].copy_from_slice(&cat[..in_f]);
             for i in 0..h {
                 cat2[in_f + i] = r[i] * hidden[i];
             }
-            self.gate_into(&layer.wh, &cat2[..cat_w], &layer.bh, false, &mut hc[..h], gather)?;
+            self.gate_into(&layer.wh, sched, &cat2[..cat_w], &layer.bh, false, &mut hc[..h], gather)?;
             for i in 0..h {
                 hidden[i] = (1.0 - z[i]) * hidden[i] + z[i] * hc[i];
             }
@@ -735,16 +860,18 @@ impl Engine {
     }
 
     /// One gate: GEMV + bias + sigmoid/tanh into `out`.
+    #[allow(clippy::too_many_arguments)]
     fn gate_into(
         &self,
         kernel: &KernelImpl,
+        sched: &ScheduleSet,
         x: &[f32],
         bias: &[f32],
         sigmoid: bool,
         out: &mut [f32],
         gather: &mut [f32],
     ) -> anyhow::Result<()> {
-        self.exec_gemm_into(kernel, x, 1, out, gather, Epilogue::None)?;
+        self.exec_gemm_into(kernel, sched, x, 1, out, gather, Epilogue::None)?;
         for (o, b) in out.iter_mut().zip(bias) {
             *o += b;
             *o = if sigmoid { 1.0 / (1.0 + (-*o).exp()) } else { o.tanh() };
@@ -899,14 +1026,37 @@ out = Softmax(fc1)
         assert!(stats.arena_bytes > 0);
     }
 
-    /// The engine rebalances the compile-time partitions (default 8
-    /// buckets) to its actual pool size — and stays bit-identical.
+    /// The engine rebalances the compile-time schedules (default 8
+    /// buckets) to its actual pool size — pure metadata, zero packed
+    /// value-buffer copies even for a *shared* plan — and stays
+    /// bit-identical.
     #[test]
     fn engine_rebalances_partitions_to_pool_size() {
         let m = cnn_module();
         let w = cnn_weights(7);
         let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        // Packed-buffer pointers before engine construction: the clone
+        // shares the kernel Arcs, which used to force a deep copy.
+        let packed_ptrs = |p: &crate::compiler::ExecutionPlan| -> Vec<*const f32> {
+            let mut v = Vec::new();
+            crate::compiler::plan::for_each_kernel(&p.steps, |k| {
+                if let KernelImpl::Bcrc { gemm } = k {
+                    if let Some(pk) = &gemm.packed {
+                        v.push(pk.values.as_slice().as_ptr());
+                    }
+                }
+            });
+            v
+        };
+        let before = packed_ptrs(&plan);
         let engine = Engine::new(plan.clone(), 3);
+        assert_eq!(
+            packed_ptrs(engine.plan()),
+            before,
+            "rebalance must never copy a packed value buffer, even on a shared plan"
+        );
+        let sched = engine.schedules();
+        assert_eq!(sched.threads, 3);
         let mut bcrc = 0;
         for (_, step) in &engine.plan().steps {
             let kernel = match step {
@@ -916,8 +1066,9 @@ out = Softmax(fc1)
             if let KernelImpl::Bcrc { gemm } = kernel {
                 if let Some(p) = &gemm.packed {
                     bcrc += 1;
-                    assert_eq!(p.partition.num_buckets(), 3, "partition must match pool size");
-                    p.partition.validate_covers(&p.groups).unwrap();
+                    let part = sched.get(gemm.sched).expect("packed kernel has a schedule");
+                    assert_eq!(part.num_buckets(), 3, "partition must match pool size");
+                    part.validate_covers(&p.groups).unwrap();
                 }
             }
         }

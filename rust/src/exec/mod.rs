@@ -1,0 +1,17 @@
+//! The shared execution runtime: one process-wide scheduler every model
+//! borrows instead of owning.
+//!
+//! GRIM's real-time guarantee comes from deciding *everything* at compile
+//! time — BCR packing, static nnz-balanced work partitions, memory plans.
+//! The serving tier used to undercut that at scale: every registry model
+//! owned a private [`crate::util::ThreadPool`], so N resident models
+//! spawned N×T worker threads that fought the OS scheduler. The
+//! [`Runtime`] restores the compile-time discipline at the process level:
+//! one worker pool, per-model fair-share quotas expressed as *worker
+//! bucket counts* the models' static schedules are balanced into, and
+//! quota changes that re-balance pure schedule metadata (never packed
+//! weight bytes).
+
+pub mod runtime;
+
+pub use runtime::Runtime;

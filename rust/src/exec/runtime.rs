@@ -1,0 +1,132 @@
+//! The process-wide execution runtime: one [`ThreadPool`] shared by every
+//! engine, plus per-model fair-share quotas.
+//!
+//! # Semantics
+//!
+//! * **One pool.** A `Runtime` owns exactly one fixed-size worker pool.
+//!   Engines built with [`crate::engine::Engine::with_runtime`] borrow it;
+//!   the pool's worker count is therefore the process's thread ceiling no
+//!   matter how many models are resident (`N models × 1 pool`, not
+//!   `N × T` threads).
+//! * **Quotas are bucket counts.** A model's quota caps how many worker
+//!   buckets its static schedules are balanced into
+//!   ([`crate::compiler::plan::ScheduleSet`]). A model with quota `k` on
+//!   a `T`-worker runtime dispatches its *statically scheduled* kernels
+//!   (packed BCRC/dense, partitioned CSR — the hot path of a compiled
+//!   GRIM plan) to at most `k` workers per call, leaving the rest free
+//!   for other models' concurrently submitted batches (the pool
+//!   rotates its chunk→worker mapping per call, so narrow jobs from
+//!   different callers spread across all workers instead of piling on
+//!   workers `0..k`). Kernels without a schedule (baseline
+//!   Winograd/depthwise, unpacked fallbacks) still use the full pool —
+//!   the quota shapes scheduling, it is not a hard isolation boundary,
+//!   and a server with a single scheduler thread executes its batches
+//!   sequentially regardless. Quotas are clamped to `1..=T`.
+//! * **Quota changes are pure metadata.** Applying a quota re-runs the
+//!   static balancing (LPT over group nnz / contiguous row splits) over
+//!   the *existing* packed layouts — no value buffer is copied or moved
+//!   (see `compiler::packing::rebalance_partitions`, which takes the
+//!   plan's steps immutably).
+//!
+//! Execution itself is unchanged: a kernel call blocks until its buckets
+//! drain, and concurrent callers interleave their jobs on the shared
+//! workers' queues. The runtime bounds *threads*, the schedules bound
+//! *work granularity*; the OS stops being an accidental scheduler of
+//! N×T oversubscribed threads.
+
+use crate::util::ThreadPool;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A shared worker pool with per-model bucket quotas.
+pub struct Runtime {
+    pool: ThreadPool,
+    /// Model name → bucket quota (clamped to `1..=threads`).
+    quotas: Mutex<HashMap<String, usize>>,
+}
+
+impl Runtime {
+    /// Build a runtime with `threads` workers (`threads >= 1` enforced).
+    pub fn new(threads: usize) -> Arc<Runtime> {
+        Arc::new(Runtime {
+            pool: ThreadPool::new(threads.max(1)),
+            quotas: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Worker count — the process-wide parallelism ceiling.
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// The shared pool kernels dispatch on.
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// Set `model`'s fair-share quota in worker buckets; returns the
+    /// effective (clamped) value. The caller (registry/engine) is
+    /// responsible for rebalancing the model's schedules to it.
+    pub fn set_quota(&self, model: &str, buckets: usize) -> usize {
+        let eff = buckets.clamp(1, self.threads());
+        self.quotas.lock().unwrap().insert(model.to_string(), eff);
+        eff
+    }
+
+    /// Remove `model`'s quota (back to the full pool width).
+    pub fn clear_quota(&self, model: &str) {
+        self.quotas.lock().unwrap().remove(model);
+    }
+
+    /// The raw quota for `model`, if one is set.
+    pub fn quota(&self, model: &str) -> Option<usize> {
+        self.quotas.lock().unwrap().get(model).copied()
+    }
+
+    /// Bucket count `model`'s schedules should be balanced for: its
+    /// quota when set, the full pool width otherwise.
+    pub fn effective_threads(&self, model: &str) -> usize {
+        self.quota(model).unwrap_or_else(|| self.threads())
+    }
+
+    /// Snapshot of all quotas, sorted by model name (CLI/stats).
+    pub fn quotas(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> =
+            self.quotas.lock().unwrap().iter().map(|(k, q)| (k.clone(), *q)).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quotas_clamp_to_pool_width() {
+        let rt = Runtime::new(4);
+        assert_eq!(rt.threads(), 4);
+        assert_eq!(rt.set_quota("a", 0), 1, "quota floors at 1 bucket");
+        assert_eq!(rt.set_quota("a", 9), 4, "quota caps at the pool width");
+        assert_eq!(rt.set_quota("a", 2), 2);
+        assert_eq!(rt.quota("a"), Some(2));
+        assert_eq!(rt.effective_threads("a"), 2);
+        assert_eq!(rt.effective_threads("unquotad"), 4);
+        rt.clear_quota("a");
+        assert_eq!(rt.effective_threads("a"), 4);
+    }
+
+    #[test]
+    fn quota_snapshot_sorted() {
+        let rt = Runtime::new(3);
+        rt.set_quota("b", 2);
+        rt.set_quota("a", 1);
+        assert_eq!(rt.quotas(), vec![("a".to_string(), 1), ("b".to_string(), 2)]);
+    }
+
+    #[test]
+    fn zero_threads_rounds_up() {
+        let rt = Runtime::new(0);
+        assert_eq!(rt.threads(), 1);
+    }
+}

@@ -24,7 +24,7 @@
 
 use super::epilogue::Epilogue;
 use super::simd::{self, Microkernels};
-use crate::sparse::packed::{ColsRef, PackedBcrc};
+use crate::sparse::packed::{ColsRef, PackedBcrc, WorkPartition};
 use crate::sparse::Bcrc;
 use crate::tensor::Tensor;
 use crate::util::sharedbuf::{SharedOut, SharedSlice};
@@ -56,16 +56,22 @@ impl Default for GemmParams {
 /// compiler's plan-time [`PackedBcrc`] layout. When `packed` is present
 /// it is the default execution path (bit-identical to the encode-order
 /// path); `GRIM_FORCE_UNPACKED=1` / `CompileOptions` keep it `None`.
+/// The parallel schedule over the packed groups is *not* stored here —
+/// `sched` references the plan's `ScheduleSet`, and the parallel entry
+/// points take the resolved partition as an argument.
 #[derive(Clone, Debug)]
 pub struct BcrcGemm {
     pub enc: Arc<Bcrc>,
     pub params: GemmParams,
     pub packed: Option<Arc<PackedBcrc>>,
+    /// Schedule id into the plan's `ScheduleSet` (assigned by the
+    /// packing pass alongside `packed`).
+    pub sched: Option<u32>,
 }
 
 impl BcrcGemm {
     pub fn new(enc: Bcrc, params: GemmParams) -> Self {
-        BcrcGemm { enc: Arc::new(enc), params, packed: None }
+        BcrcGemm { enc: Arc::new(enc), params, packed: None, sched: None }
     }
 
     /// Attach a plan-time packed layout (the compiler's packing pass).
@@ -169,32 +175,61 @@ impl BcrcGemm {
         }
     }
 
-    /// Multi-threaded execution: reordered rows are partitioned across the
-    /// pool. Because reorder groups equal-signature rows contiguously, the
-    /// static partition is load-balanced (§4.2). Zero-copy: workers write
-    /// their (disjoint, via the reorder bijection) output rows in place.
+    /// Multi-threaded execution without a static schedule: reordered rows
+    /// are split evenly across the pool (the encode-order path). Because
+    /// reorder groups equal-signature rows contiguously, the static
+    /// partition is load-balanced (§4.2). Zero-copy: workers write their
+    /// (disjoint, via the reorder bijection) output rows in place.
     pub fn execute_parallel(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
+        self.execute_parallel_part(x, pool, None)
+    }
+
+    /// Multi-threaded execution draining `part`'s nnz-balanced buckets
+    /// over the packed layout when provided (the plan's `ScheduleSet`
+    /// entry for this kernel); falls back to the even row split over the
+    /// encode order when `part` is `None` or no packed layout is
+    /// attached.
+    pub fn execute_parallel_part(
+        &self,
+        x: &Tensor,
+        pool: &ThreadPool,
+        part: Option<&Arc<WorkPartition>>,
+    ) -> Tensor {
         let (k, n) = x.shape().as_matrix();
         assert_eq!(k, self.enc.cols);
         let mut out = Tensor::zeros(&[self.enc.rows, n]);
-        self.execute_parallel_into(x.data(), n, out.data_mut(), pool);
+        self.execute_parallel_into_ep(
+            x.data(),
+            n,
+            out.data_mut(),
+            part,
+            pool,
+            simd::active(),
+            Epilogue::None,
+        );
         out
     }
 
     /// Parallel arena variant with dispatched kernels and no epilogue.
     pub fn execute_parallel_into(&self, xd: &[f32], n: usize, out: &mut [f32], pool: &ThreadPool) {
-        self.execute_parallel_into_ep(xd, n, out, pool, simd::active(), Epilogue::None);
+        self.execute_parallel_into_ep(xd, n, out, None, pool, simd::active(), Epilogue::None);
     }
 
-    /// Parallel arena variant of [`Self::execute_into_ep`]. The gemv path
-    /// borrows each worker's pool-resident scratch buffer for its gather
-    /// staging, so the parallel serving path performs no per-call heap
-    /// allocation (the buffer grows once per worker high-water mark).
+    /// Parallel arena variant of [`Self::execute_into_ep`]. `part` is the
+    /// kernel's static nnz-balanced schedule (hoisted into the plan's
+    /// `ScheduleSet`); with a packed layout attached, workers drain its
+    /// buckets instead of an even row split, so sparsity-skewed layers no
+    /// longer leave threads idle. The gemv path borrows each worker's
+    /// pool-resident scratch buffer for its gather staging, so the
+    /// parallel serving path performs no per-call heap allocation (the
+    /// buffer grows once per worker high-water mark).
+    #[allow(clippy::too_many_arguments)]
     pub fn execute_parallel_into_ep(
         &self,
         xd: &[f32],
         n: usize,
         out: &mut [f32],
+        part: Option<&Arc<WorkPartition>>,
         pool: &ThreadPool,
         mk: &'static Microkernels,
         ep: Epilogue<'_>,
@@ -207,10 +242,18 @@ impl BcrcGemm {
         // Packed path: workers drain the compiler's static nnz-balanced
         // bucket lists instead of an even row split, so sparsity-skewed
         // layers no longer leave threads idle.
-        let packed_ok = self.packed.as_ref().is_some_and(|p| n > 1 || p.row_major);
+        let packed_ok =
+            part.is_some() && self.packed.as_ref().is_some_and(|p| n > 1 || p.row_major);
         if packed_ok {
             let p = Arc::clone(self.packed.as_ref().expect("checked above"));
-            let nb = p.partition.num_buckets();
+            let part = Arc::clone(part.expect("checked above"));
+            // The schedule must cover this layout's reordered rows
+            // exactly once — guaranteed for plan schedules (validated at
+            // compile/decode); re-checked here in debug builds because
+            // the workers rely on it for disjointness.
+            debug_assert!(part.validate_covers(&p.groups).is_ok());
+            debug_assert_eq!(part.total_nnz(), p.nnz);
+            let nb = part.num_buckets();
             let this = self.clone();
             let oview = SharedOut::new(out);
             let xv = SharedSlice::new(xd);
@@ -218,9 +261,9 @@ impl BcrcGemm {
             let bias_view = bias.map(SharedSlice::new);
             pool.run_partitioned_scratch(nb, move |scratch, _wid, blo, bhi| {
                 // SAFETY: buffers outlive the blocking pool call; buckets
-                // partition the reordered rows (validated at pack time),
-                // and reorder is a bijection, so written original rows
-                // never collide across workers.
+                // partition the reordered rows (validated at compile or
+                // artifact-decode time), and reorder is a bijection, so
+                // written original rows never collide across workers.
                 let xd = unsafe { xv.get() };
                 let ep =
                     Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
@@ -231,7 +274,7 @@ impl BcrcGemm {
                     }
                     let od = unsafe { oview.range_mut(0, oview.len()) };
                     for b in blo..bhi {
-                        for s in &p.partition.buckets[b] {
+                        for s in &part.buckets[b] {
                             this.packed_span_gemv(
                                 &p,
                                 s.group as usize,
@@ -247,7 +290,7 @@ impl BcrcGemm {
                     }
                 } else {
                     for b in blo..bhi {
-                        for s in &p.partition.buckets[b] {
+                        for s in &part.buckets[b] {
                             this.packed_span_rows(
                                 &p,
                                 s.group as usize,
@@ -797,7 +840,7 @@ mod tests {
             g.execute_into_ep(x.data(), n, &mut serial, &mut gather, simd::active(),
                 Epilogue::BiasRelu6(&bias));
             let mut par = vec![0.0f32; 48 * n];
-            g.execute_parallel_into_ep(x.data(), n, &mut par, &pool, simd::active(),
+            g.execute_parallel_into_ep(x.data(), n, &mut par, None, &pool, simd::active(),
                 Epilogue::BiasRelu6(&bias));
             assert_eq!(serial, par, "n={n}");
         }
@@ -815,11 +858,15 @@ mod tests {
         assert!(out.data().iter().all(|v| *v == 0.0));
     }
 
-    fn packed_for(enc: &Bcrc, params: GemmParams, n_hint: usize, threads: usize) -> BcrcGemm {
+    fn packed_for(enc: &Bcrc, params: GemmParams, n_hint: usize, threads: usize)
+        -> (BcrcGemm, Arc<WorkPartition>)
+    {
         use crate::gemm::pack::{pack_bcrc, CacheParams, PackOverrides};
-        let p = pack_bcrc(enc, params, n_hint, CacheParams::default(), threads, PackOverrides::default());
+        let p = pack_bcrc(enc, params, n_hint, CacheParams::default(), PackOverrides::default());
         p.validate_against(enc).unwrap();
-        BcrcGemm::new(enc.clone(), params).with_packed(Arc::new(p))
+        let part = Arc::new(p.lpt_partition(threads));
+        part.validate_covers(&p.groups).unwrap();
+        (BcrcGemm::new(enc.clone(), params).with_packed(Arc::new(p)), part)
     }
 
     /// The packed layout must be *bit-identical* to the encode-order
@@ -831,7 +878,7 @@ mod tests {
             for lre in [true, false] {
                 let params = GemmParams { lre, ..Default::default() };
                 let plain = BcrcGemm::new(enc.clone(), params);
-                let packed = packed_for(&enc, params, n, 3);
+                let (packed, part) = packed_for(&enc, params, n, 3);
                 let mut rng = Rng::new(seed + 9000);
                 let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
                 let bias: Vec<f32> = (0..m).map(|i| 0.02 * i as f32 - 0.3).collect();
@@ -846,27 +893,35 @@ mod tests {
 
                 let pool = ThreadPool::new(3);
                 let mut c = vec![0.0f32; m * n];
-                packed.execute_parallel_into_ep(x.data(), n, &mut c, &pool, simd::active(),
-                    Epilogue::BiasRelu(&bias));
+                packed.execute_parallel_into_ep(x.data(), n, &mut c, Some(&part), &pool,
+                    simd::active(), Epilogue::BiasRelu(&bias));
                 assert_eq!(a, c, "parallel m={m} k={k} n={n} lre={lre}");
             }
         }
     }
 
     /// Packed parallel must agree for pool sizes above, equal to, and
-    /// below the partition's bucket count.
+    /// below the partition's bucket count — and with no partition at all
+    /// (the even-split fallback).
     #[test]
     fn packed_parallel_any_pool_size() {
         let (_, enc) = setup(71, 96, 96, 6.0);
         let params = GemmParams::default();
-        let packed = packed_for(&enc, params, 16, 4);
+        let (packed, part) = packed_for(&enc, params, 16, 4);
         let mut rng = Rng::new(72);
         let x = Tensor::rand_uniform(&[96, 16], 1.0, &mut rng);
         let serial = packed.execute(&x);
         for threads in [1usize, 2, 4, 7] {
             let pool = ThreadPool::new(threads);
-            let par = packed.execute_parallel(&x, &pool);
+            let par = packed.execute_parallel_part(&x, &pool, Some(&part));
             assert_eq!(serial.data(), par.data(), "threads={threads}");
+            // Rebalanced schedule for this pool width: same bits.
+            let local = Arc::new(packed.packed.as_ref().unwrap().lpt_partition(threads));
+            let par2 = packed.execute_parallel_part(&x, &pool, Some(&local));
+            assert_eq!(serial.data(), par2.data(), "rebalanced threads={threads}");
+            // No schedule: the encode-order fallback is still exact.
+            let fallback = packed.execute_parallel(&x, &pool);
+            assert_eq!(serial.data(), fallback.data(), "fallback threads={threads}");
         }
     }
 
@@ -876,7 +931,7 @@ mod tests {
     fn packed_interleaved_gemv_falls_back() {
         let (w, enc) = setup(81, 32, 64, 4.0);
         let params = GemmParams::default();
-        let packed = packed_for(&enc, params, 49, 2); // packs for n=49
+        let (packed, _part) = packed_for(&enc, params, 49, 2); // packs for n=49
         assert!(!packed.packed.as_ref().unwrap().row_major);
         let mut rng = Rng::new(82);
         let x = Tensor::rand_uniform(&[64, 1], 1.0, &mut rng);

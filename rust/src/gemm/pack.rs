@@ -38,13 +38,17 @@
 use crate::gemm::bcrc_gemm::GemmParams;
 use crate::gemm::tiled::TileParams;
 use crate::memory::aligned::AlignedBuf;
-use crate::sparse::packed::{PackShape, PackedBcrc};
+use crate::sparse::packed::{PackShape, PackedBcrc, WorkPartition};
 use crate::sparse::Bcrc;
 use crate::tensor::Tensor;
+use std::path::Path;
+use std::sync::OnceLock;
 
 /// The cache model blocks are sized from. Defaults approximate a big
 /// mobile core (Kryo/Cortex-A7x: 32–64 KiB L1D, 512 KiB L2); override
 /// per-target, or per-layer via the tuner's `pack_kc`/`pack_mc` genes.
+/// [`CacheParams::detected`] probes the host's real sizes from sysfs and
+/// falls back to these defaults where the probe fails.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CacheParams {
     pub l1_bytes: usize,
@@ -56,6 +60,8 @@ impl Default for CacheParams {
         CacheParams { l1_bytes: 32 * 1024, l2_bytes: 512 * 1024 }
     }
 }
+
+static DETECTED: OnceLock<(CacheParams, &'static str)> = OnceLock::new();
 
 impl CacheParams {
     /// K-block width: the streamed X panel (`kc × n_tile` f32) targets
@@ -71,6 +77,97 @@ impl CacheParams {
         let raw = (self.l2_bytes / 2 / (4 * n_tile.max(1))).clamp(mr, 1 << 16);
         raw.div_ceil(mr) * mr
     }
+
+    /// Host cache sizes, probed once per process from
+    /// `/sys/devices/system/cpu/cpu0/cache/` with the generic
+    /// mobile-core defaults as fallback. Logs which source won on first
+    /// use. `GRIM_NO_CACHE_PROBE=1` forces the defaults (reproducible
+    /// cross-host artifact builds).
+    pub fn detected() -> CacheParams {
+        Self::detected_with_source().0
+    }
+
+    /// Like [`Self::detected`], also naming the winning source
+    /// (`"sysfs"` or `"default"`).
+    pub fn detected_with_source() -> (CacheParams, &'static str) {
+        *DETECTED.get_or_init(|| {
+            let forced = std::env::var_os("GRIM_NO_CACHE_PROBE").is_some_and(|v| v != "0");
+            let probed = if forced {
+                None
+            } else {
+                Self::probe_sysfs(Path::new("/sys/devices/system/cpu/cpu0/cache"))
+            };
+            match probed {
+                Some(c) => {
+                    crate::log_info!(
+                        "cache params from sysfs: L1d {} KiB, L2 {} KiB",
+                        c.l1_bytes / 1024,
+                        c.l2_bytes / 1024
+                    );
+                    (c, "sysfs")
+                }
+                None => {
+                    let c = CacheParams::default();
+                    crate::log_info!(
+                        "cache params: sysfs probe unavailable, using generic mobile-core \
+                         defaults (L1d {} KiB, L2 {} KiB)",
+                        c.l1_bytes / 1024,
+                        c.l2_bytes / 1024
+                    );
+                    (c, "default")
+                }
+            }
+        })
+    }
+
+    /// Probe one CPU's cache hierarchy from a sysfs-style directory
+    /// (`index*/{level,type,size}`). Returns `None` unless both an L1
+    /// data (or unified) cache and an L2 cache report plausible sizes.
+    pub fn probe_sysfs(dir: &Path) -> Option<CacheParams> {
+        let mut l1 = None;
+        let mut l2 = None;
+        for entry in std::fs::read_dir(dir).ok()?.flatten() {
+            let p = entry.path();
+            if !p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.starts_with("index")) {
+                continue;
+            }
+            let read = |f: &str| std::fs::read_to_string(p.join(f)).ok();
+            // A malformed index entry skips itself, not the whole probe.
+            let Some(level) = read("level").and_then(|v| v.trim().parse::<u32>().ok()) else {
+                continue;
+            };
+            let Some(kind) = read("type").map(|v| v.trim().to_string()) else {
+                continue;
+            };
+            let Some(size) = read("size").and_then(|v| parse_cache_size(v.trim())) else {
+                continue;
+            };
+            match (level, kind.as_str()) {
+                (1, "Data") | (1, "Unified") => l1 = Some(size),
+                (2, "Data") | (2, "Unified") => l2 = Some(size),
+                _ => {}
+            }
+        }
+        match (l1, l2) {
+            // Sanity bounds: reject absurd values a malformed sysfs
+            // could report (the block sizers clamp anyway, but a 0-byte
+            // L1 would still be wrong to trust).
+            (Some(l1), Some(l2)) if (1024..=1 << 21).contains(&l1) && l2 >= l1 => {
+                Some(CacheParams { l1_bytes: l1, l2_bytes: l2 })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Parse a sysfs cache size string (`"32K"`, `"1024K"`, `"1M"`, `"512"`).
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let (num, mult) = match *s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    num.trim().parse::<usize>().ok().map(|v| v * mult)
 }
 
 /// Tuner-gene overrides for the cache model (0 = derive from
@@ -100,7 +197,6 @@ pub fn bcrc_pack_shape(
     params: GemmParams,
     n_hint: usize,
     cache: CacheParams,
-    threads: usize,
     ov: PackOverrides,
 ) -> PackShape {
     let gemv = n_hint <= 1;
@@ -114,19 +210,21 @@ pub fn bcrc_pack_shape(
         cache.kc(nt)
     };
     let mc = if ov.mc > 0 { ov.mc.div_ceil(mr) * mr } else { cache.mc(nt, mr) };
-    PackShape { mr, kc, mc, threads: threads.max(1) }
+    PackShape { mr, kc, mc }
 }
 
 /// Pack one BCRC matrix under the cache model (the compiler pass entry).
+/// The parallel schedule is built separately (the partition lives in the
+/// plan's `ScheduleSet`, not in the packed layout — see
+/// [`PackedBcrc::lpt_partition`]).
 pub fn pack_bcrc(
     enc: &Bcrc,
     params: GemmParams,
     n_hint: usize,
     cache: CacheParams,
-    threads: usize,
     ov: PackOverrides,
 ) -> PackedBcrc {
-    PackedBcrc::pack(enc, bcrc_pack_shape(enc, params, n_hint, cache, threads, ov))
+    PackedBcrc::pack(enc, bcrc_pack_shape(enc, params, n_hint, cache, ov))
 }
 
 /// Plan-time packed dense weights for the tiled kernel: the same
@@ -178,6 +276,20 @@ impl PackedDense {
         (p * mr, ((p + 1) * mr).min(self.m))
     }
 
+    /// Static parallel schedule over *panels* (spans index panels, not
+    /// rows, so bucket boundaries can never cut an interleaved register
+    /// panel): contiguous near-equal-work panel ranges, weighted by each
+    /// panel's element count. Pure metadata — never touches `values`.
+    pub fn panel_partition(&self, threads: usize) -> WorkPartition {
+        let weights: Vec<usize> = (0..self.num_panels())
+            .map(|p| {
+                let (lo, hi) = self.panel_rows(p);
+                (hi - lo) * self.k
+            })
+            .collect();
+        WorkPartition::contiguous(&weights, threads)
+    }
+
     /// Decode back to row-major (test helper).
     pub fn decode(&self) -> Vec<f32> {
         let (m, k) = (self.m, self.k);
@@ -224,14 +336,7 @@ mod tests {
         let mut w = Tensor::rand_uniform(&[16, 32], 1.0, &mut rng);
         mask.apply(&mut w);
         let enc = Bcrc::from_masked(&w, &mask);
-        let p = pack_bcrc(
-            &enc,
-            GemmParams::default(),
-            1,
-            CacheParams::default(),
-            4,
-            PackOverrides::default(),
-        );
+        let p = pack_bcrc(&enc, GemmParams::default(), 1, CacheParams::default(), PackOverrides::default());
         assert!(p.row_major);
         assert_eq!(p.shape.mr, 1);
         p.validate_against(&enc).unwrap();
@@ -255,13 +360,71 @@ mod tests {
             GemmParams::default(),
             196,
             CacheParams::default(),
-            4,
             PackOverrides { kc: 8, mc: 30 },
         );
         assert_eq!(p.shape.mr, 4);
         assert_eq!(p.shape.kc, 8);
         assert_eq!(p.shape.mc % 4, 0, "override mc rounds to whole panels");
         p.validate_against(&enc).unwrap();
+    }
+
+    #[test]
+    fn sysfs_probe_parses_a_fabricated_hierarchy() {
+        let dir = std::env::temp_dir().join(format!("grim_cache_probe_{}", std::process::id()));
+        for (idx, level, kind, size) in [
+            ("index0", "1", "Data", "48K"),
+            ("index1", "1", "Instruction", "32K"),
+            ("index2", "2", "Unified", "1M"),
+        ] {
+            let d = dir.join(idx);
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("level"), level).unwrap();
+            std::fs::write(d.join("type"), kind).unwrap();
+            std::fs::write(d.join("size"), size).unwrap();
+        }
+        let c = CacheParams::probe_sysfs(&dir).expect("probe must succeed");
+        assert_eq!(c.l1_bytes, 48 * 1024, "L1d, not L1i");
+        assert_eq!(c.l2_bytes, 1024 * 1024);
+        // Missing L2 ⇒ no probe result (defaults win).
+        std::fs::remove_dir_all(dir.join("index2")).unwrap();
+        assert!(CacheParams::probe_sysfs(&dir).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+        // Nonexistent directory is a clean fallback, not an error.
+        assert!(CacheParams::probe_sysfs(Path::new("/nonexistent/grim")).is_none());
+    }
+
+    #[test]
+    fn cache_size_strings_parse() {
+        assert_eq!(parse_cache_size("32K"), Some(32 * 1024));
+        assert_eq!(parse_cache_size("1M"), Some(1024 * 1024));
+        assert_eq!(parse_cache_size("512"), Some(512));
+        assert_eq!(parse_cache_size("bogus"), None);
+    }
+
+    #[test]
+    fn detected_names_a_source_and_is_plausible() {
+        let (c, src) = CacheParams::detected_with_source();
+        assert!(src == "sysfs" || src == "default");
+        assert!(c.l1_bytes >= 1024 && c.l2_bytes >= c.l1_bytes);
+    }
+
+    #[test]
+    fn panel_partition_covers_all_panels() {
+        let mut rng = Rng::new(9);
+        let w = Tensor::rand_uniform(&[19, 7], 1.0, &mut rng);
+        let pd = PackedDense::pack(&w, TileParams { mr: 4, kc: 4, nc: 8 });
+        let part = pd.panel_partition(3);
+        assert_eq!(part.num_buckets(), 3);
+        let mut seen = vec![0u32; pd.num_panels()];
+        for b in &part.buckets {
+            for s in b {
+                for p in s.lo..s.hi {
+                    seen[p as usize] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|c| *c == 1), "every panel exactly once: {seen:?}");
+        assert_eq!(part.total_nnz(), 19 * 7);
     }
 
     #[test]

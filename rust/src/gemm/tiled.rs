@@ -7,6 +7,7 @@
 use super::epilogue::Epilogue;
 use super::pack::PackedDense;
 use super::simd::{self, Microkernels};
+use crate::sparse::packed::WorkPartition;
 use crate::tensor::Tensor;
 use crate::util::sharedbuf::{SharedOut, SharedSlice};
 use crate::util::ThreadPool;
@@ -135,12 +136,15 @@ pub fn tiled_gemm_packed_into_ep(
 
 /// Parallel packed-A tiled GEMM: workers take contiguous *panel* ranges
 /// (so partition boundaries never cut an interleaved register panel).
+/// `part` is the plan's static panel-granular schedule (spans index
+/// panels); `None` falls back to an even panel split over the pool.
 #[allow(clippy::too_many_arguments)]
 pub fn tiled_gemm_packed_parallel_into_ep(
     pd: &Arc<PackedDense>,
     xd: &[f32],
     n: usize,
     p: TileParams,
+    part: Option<&Arc<WorkPartition>>,
     pool: &ThreadPool,
     out: &mut [f32],
     mk: &'static Microkernels,
@@ -155,13 +159,43 @@ pub fn tiled_gemm_packed_parallel_into_ep(
     let bias_view = bias.map(SharedSlice::new);
     let np = pd.num_panels();
     let pd = Arc::clone(pd);
-    pool.run_partitioned(np, move |_wid, plo, phi| {
-        // SAFETY: buffers outlive the blocking pool call; panel (and so
-        // row) ranges are disjoint across workers.
-        let xd = unsafe { xv.get() };
-        let ep = Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
-        packed_panels(&pd, xd, oview, n, p, plo, phi, mk, ep);
-    });
+    match part {
+        Some(wp) => {
+            // Spans hold disjoint panel ranges covering 0..np exactly
+            // once (validated at compile/decode time).
+            debug_assert_eq!(
+                wp.buckets.iter().flatten().map(|s| (s.hi - s.lo) as usize).sum::<usize>(),
+                np,
+                "panel schedule must cover every panel"
+            );
+            let wp = Arc::clone(wp);
+            let nb = wp.num_buckets();
+            pool.run_partitioned(nb, move |_wid, blo, bhi| {
+                // SAFETY: buffers outlive the blocking pool call; panel
+                // (and so row) ranges are disjoint across buckets.
+                let xd = unsafe { xv.get() };
+                let ep =
+                    Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
+                for b in blo..bhi {
+                    for s in &wp.buckets[b] {
+                        packed_panels(
+                            &pd, xd, oview, n, p, s.lo as usize, s.hi as usize, mk, ep,
+                        );
+                    }
+                }
+            });
+        }
+        None => {
+            pool.run_partitioned(np, move |_wid, plo, phi| {
+                // SAFETY: buffers outlive the blocking pool call; panel
+                // (and so row) ranges are disjoint across workers.
+                let xd = unsafe { xv.get() };
+                let ep =
+                    Epilogue::from_parts(bias_view.as_ref().map(|v| unsafe { v.get() }), act);
+                packed_panels(&pd, xd, oview, n, p, plo, phi, mk, ep);
+            });
+        }
+    }
 }
 
 /// Compute panels `plo..phi` of the packed product. Per-element
@@ -461,9 +495,18 @@ mod tests {
 
             let pool = ThreadPool::new(3);
             let mut par = vec![0.0f32; m * n];
-            tiled_gemm_packed_parallel_into_ep(&pd, x.data(), n, p, &pool, &mut par,
+            tiled_gemm_packed_parallel_into_ep(&pd, x.data(), n, p, None, &pool, &mut par,
                 simd::active(), ep);
             assert_eq!(plain, par, "parallel m={m} k={k} n={n}");
+
+            // With a static panel schedule (any bucket count): same bits.
+            for threads in [1usize, 2, 5] {
+                let part = Arc::new(pd.panel_partition(threads));
+                let mut sp = vec![0.0f32; m * n];
+                tiled_gemm_packed_parallel_into_ep(&pd, x.data(), n, p, Some(&part), &pool,
+                    &mut sp, simd::active(), ep);
+                assert_eq!(plain, sp, "scheduled m={m} k={k} n={n} t={threads}");
+            }
         }
     }
 }

@@ -26,9 +26,12 @@
 //! * **Block-size optimization** ([`blockopt`]) — Listing 1 of the paper.
 //! * **Models** ([`models`]) — VGG-16, ResNet-18, MobileNet-V2, and GRU
 //!   graph builders with mini presets used in the experiments.
-//! * **Engine + coordinator** ([`engine`], [`coordinator`]) — plan executor
-//!   over a scoped thread pool, and the L3 serving loop (request queue,
-//!   dynamic batcher, workers, latency metrics).
+//! * **Engine + shared runtime + coordinator** ([`engine`], [`exec`],
+//!   [`coordinator`]) — plan executor over a worker pool, the
+//!   process-wide [`exec::Runtime`] (one shared pool + per-model quotas
+//!   that all registry engines borrow instead of owning), and the L3
+//!   serving loop (request queue, dynamic batcher, workers, latency
+//!   metrics).
 //! * **AOT artifacts + multi-model serving** ([`artifact`], [`serving`]) —
 //!   the `.grimc` compiled-model container (the whole compile pipeline
 //!   runs offline; loading re-encodes and re-packs nothing) and the
@@ -55,6 +58,7 @@ pub mod memory;
 pub mod tuner;
 pub mod blockopt;
 pub mod models;
+pub mod exec;
 pub mod engine;
 pub mod artifact;
 pub mod serving;

@@ -64,9 +64,11 @@ fn usage() {
 USAGE: grim <command> [--flag value ...]
 
 COMMANDS:
-  compile  --model vgg16 --preset cifar-mini --rate 8 -o vgg.grimc   AOT-compile to a .grimc artifact
+  compile  --model vgg16 --preset cifar-mini --rate 8 -o vgg.grimc [--cache generic|native]
+           AOT-compile to a .grimc artifact (cache blocking for the generic mobile target by default)
   serve    --model vgg16 --preset cifar-mini --rate 8 --threads 8 --requests 64 --batch 8
-  serve    --models dir/ [--budget-mb 256] --requests 64             multi-model registry of .grimc files
+  serve    --models dir/ [--budget-mb 256] [--threads 8] [--quota m=2,m2=4] [--batch-for m=1] --requests 64
+           multi-model registry of .grimc files on ONE shared runtime (per-model quotas + batch policies)
   run      --model resnet18 --preset cifar-mini --rate 8 [--grim-file m.grim] [--grimc-file m.grimc] [--backend grim|naive|opt|csr]
   inspect  --model vgg16 --preset cifar-mini --rate 8
   tune     --model vgg16 --preset cifar-mini --rate 8 [--generations 6]
@@ -109,6 +111,21 @@ fn flag<T: std::str::FromStr>(f: &Flags, key: &str, default: T) -> T {
     f.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Parse a `name=value,name2=value2` list (the `--quota` / `--batch-for`
+/// flag grammar). Empty input parses to an empty list.
+fn parse_kv_list(s: &str) -> anyhow::Result<Vec<(String, usize)>> {
+    let mut out = Vec::new();
+    for item in s.split(',').map(str::trim).filter(|i| !i.is_empty()) {
+        let (name, val) = item
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("expected name=value, got '{item}'"))?;
+        let val: usize =
+            val.trim().parse().map_err(|_| anyhow::anyhow!("bad value in '{item}'"))?;
+        out.push((name.trim().to_string(), val));
+    }
+    Ok(out)
+}
+
 fn model_from_flags(
     f: &Flags,
 ) -> anyhow::Result<(grim::graph::dsl::Module, grim::compiler::WeightStore)> {
@@ -149,7 +166,17 @@ fn input_for(module: &grim::graph::dsl::Module, rng: &mut Rng) -> anyhow::Result
 fn cmd_compile(f: &Flags) -> anyhow::Result<()> {
     let (module, weights) = model_from_flags(f)?;
     let backend = backend_from_flags(f)?;
-    let plan = compile(&module, &weights, CompileOptions::for_backend(backend))?;
+    let mut copts = CompileOptions::for_backend(backend);
+    // Artifacts usually cross hosts (compile on a build machine, serve
+    // on-device), so `compile` defaults to the generic mobile-core
+    // cache model rather than the build host's probed caches;
+    // `--cache native` opts into probing for same-host serving.
+    copts.pack.cache = match flag(f, "cache", "generic".to_string()).as_str() {
+        "generic" => grim::gemm::CacheParams::default(),
+        "native" => grim::gemm::CacheParams::detected(),
+        other => anyhow::bail!("unknown --cache '{other}' (generic|native)"),
+    };
+    let plan = compile(&module, &weights, copts)?;
     let out = f
         .get("out")
         .or_else(|| f.get("o"))
@@ -216,18 +243,39 @@ fn cmd_inspect(f: &Flags) -> anyhow::Result<()> {
 /// registry and drive requests round-robin across the models, asserting
 /// every model answers (the CI smoke leg relies on the exit code).
 fn cmd_serve_multi(f: &Flags, dir: &str) -> anyhow::Result<()> {
+    use grim::exec::Runtime;
     use grim::serving::ModelRegistry;
     use std::sync::Arc;
     let threads = flag(f, "threads", 8usize);
     let budget_mb = flag(f, "budget-mb", 0usize);
-    let registry = Arc::new(if budget_mb > 0 {
-        ModelRegistry::with_budget(threads, budget_mb * 1024 * 1024)
-    } else {
-        ModelRegistry::new(threads)
-    });
+    // One process-wide runtime: every model borrows these workers, so N
+    // resident models never exceed `threads` worker threads.
+    let runtime = Runtime::new(threads);
+    let budget =
+        if budget_mb > 0 { budget_mb * 1024 * 1024 } else { usize::MAX };
+    let registry = Arc::new(ModelRegistry::with_runtime(Arc::clone(&runtime), budget));
+    // Per-model fair-share quotas (`--quota m=2,m2=4`, in worker
+    // buckets) — set before loading so engines balance to them at load.
+    for (name, q) in parse_kv_list(f.get("quota").map(String::as_str).unwrap_or(""))? {
+        let eff = registry.set_quota(&name, q);
+        println!("quota: {name} -> {eff} of {threads} worker buckets");
+    }
+    // Per-model batch-size overrides (`--batch-for m=1`): the batcher
+    // consults these instead of the global policy.
+    for (name, mb) in parse_kv_list(f.get("batch-for").map(String::as_str).unwrap_or(""))? {
+        let policy = grim::coordinator::BatchPolicy {
+            max_batch: mb.max(1),
+            ..Default::default()
+        };
+        registry.set_policy(&name, policy);
+        println!("batch policy: {name} -> max_batch {}", policy.max_batch);
+    }
     let names = registry.load_dir(std::path::Path::new(dir))?;
     anyhow::ensure!(!names.is_empty(), "no .grimc artifacts found in {dir}");
-    println!("loaded {} model(s) from {dir}: {names:?}", names.len());
+    println!(
+        "loaded {} model(s) from {dir} onto one {threads}-thread runtime: {names:?}",
+        names.len()
+    );
     let mut config = ServerConfig::default();
     config.batch.max_batch = flag(f, "batch", 8usize);
     let server = Server::start_registry(Arc::clone(&registry), config);
@@ -277,12 +325,21 @@ fn cmd_serve_multi(f: &Flags, dir: &str) -> anyhow::Result<()> {
     );
     for ms in registry.stats() {
         println!(
-            "  {:<16} {:>8} KiB resident, {} requests over {} arena(s) of {} KiB",
+            "  {:<16} {:>8} KiB resident, {} requests over {} arena(s) of {} KiB{}{}",
             ms.name,
             ms.resident_bytes / 1024,
             ms.pool.checkouts,
             ms.pool.arenas_created,
-            ms.pool.arena_bytes / 1024
+            ms.pool.arena_bytes / 1024,
+            match ms.quota {
+                Some(q) => format!(", quota {q}"),
+                None => String::new(),
+            },
+            if ms.not_resident > 0 {
+                format!(", {} not-resident misses", ms.not_resident)
+            } else {
+                String::new()
+            }
         );
     }
     if let Some(b) = registry.budget_bytes() {
@@ -340,7 +397,6 @@ fn cmd_tune(f: &Flags) -> anyhow::Result<()> {
     use grim::tuner::{tune_layer, GaConfig, SearchSpace};
     use std::sync::Arc;
     let (module, weights) = model_from_flags(f)?;
-    let threads = flag(f, "threads", 8usize);
     let ga = GaConfig {
         generations: flag(f, "generations", 4usize),
         population: flag(f, "population", 8usize),
@@ -370,12 +426,14 @@ fn cmd_tune(f: &Flags) -> anyhow::Result<()> {
         let res = tune_layer(&space, ga, |cfg| {
             let key = (cfg.unroll, cfg.n_tile, cfg.lre, cfg.pack_kc, cfg.pack_mc);
             let packed = Arc::clone(packs.entry(key).or_insert_with(|| {
+                // Same cache model the compile path defaults to
+                // (PackOptions::default), so 'auto' genes are measured
+                // on the exact layout the shipped plan will use.
                 Arc::new(pack_bcrc(
                     &enc,
                     cfg.gemm_params(),
                     TUNE_N,
-                    CacheParams::default(),
-                    threads,
+                    CacheParams::detected(),
                     cfg.pack_overrides(),
                 ))
             }));

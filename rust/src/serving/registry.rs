@@ -1,12 +1,21 @@
 //! The model registry: named engines, hot-loaded from `.grimc`
-//! artifacts, with per-model workspace pools and a resident-bytes LRU
-//! eviction budget.
+//! artifacts, sharing **one** process-wide execution runtime, with
+//! per-model workspace pools, fair-share quotas, batch-policy
+//! overrides, and a resident-bytes LRU eviction budget.
 //!
 //! Design notes:
 //!
-//! * **Isolation** — every model gets its own [`Engine`], which owns its
-//!   own [`crate::memory::WorkspacePool`] (arenas sized to *that* plan)
-//!   and worker pool. One model's traffic can never corrupt or observe
+//! * **One scheduler** — the registry owns a single
+//!   [`crate::exec::Runtime`]; every engine it builds *borrows* that
+//!   runtime instead of spawning a private pool, so N resident models
+//!   keep the process at exactly the runtime's worker count (the old
+//!   N×T thread explosion is structurally impossible). Per-model
+//!   quotas ([`ModelRegistry::set_quota`]) bound how many worker
+//!   buckets a model's static schedules use — applied as a
+//!   pure-metadata rebalance, never a packed-buffer copy.
+//! * **Memory isolation** — every model still gets its own [`Engine`]
+//!   with its own [`crate::memory::WorkspacePool`] (arenas sized to
+//!   *that* plan). One model's traffic can never corrupt or observe
 //!   another's arenas; per-model stats come straight from the pool.
 //! * **Hot loading** — the registry is shared behind an `Arc`; models can
 //!   be inserted or evicted while a
@@ -24,7 +33,9 @@
 //!   normally; the memory is freed when the last handle drops.
 
 use crate::compiler::plan::ExecutionPlan;
+use crate::coordinator::BatchPolicy;
 use crate::engine::Engine;
+use crate::exec::Runtime;
 use crate::memory::PoolStats;
 use std::collections::HashMap;
 use std::path::Path;
@@ -54,35 +65,66 @@ pub struct ModelStats {
     /// This model's isolated workspace-pool telemetry; `checkouts` is the
     /// number of inferences the model has served.
     pub pool: PoolStats,
+    /// Fair-share quota in shared-runtime worker buckets, when set.
+    pub quota: Option<usize>,
+    /// Requests that targeted this model while it was not resident
+    /// (admission control hooks on this).
+    pub not_resident: u64,
 }
 
-/// Named-model registry with LRU eviction under a resident-bytes budget.
+/// Named-model registry with a shared execution runtime and LRU
+/// eviction under a resident-bytes budget.
 pub struct ModelRegistry {
-    /// Worker threads per model engine.
-    threads: usize,
+    /// The one process-wide scheduler every engine borrows.
+    runtime: Arc<Runtime>,
     /// Resident-bytes ceiling (`usize::MAX` = unlimited).
     budget: usize,
     inner: Mutex<HashMap<String, Entry>>,
     /// Logical LRU clock (bumped on every insert and `get`).
     clock: AtomicU64,
     evictions: AtomicU64,
+    /// Per-model batching-policy overrides (survive eviction, so a
+    /// reloaded model keeps its knobs).
+    policies: Mutex<HashMap<String, BatchPolicy>>,
+    /// Per-model count of requests that missed (model not resident).
+    misses: Mutex<HashMap<String, u64>>,
+    /// Serializes quota store + engine rebalance so concurrent
+    /// `set_quota`/`insert_engine` calls cannot interleave into a
+    /// stored-quota/active-schedule mismatch.
+    quota_apply: Mutex<()>,
 }
 
 impl ModelRegistry {
-    /// Registry without a resident-bytes budget.
+    /// Registry without a resident-bytes budget, over a fresh
+    /// `threads`-worker runtime.
     pub fn new(threads: usize) -> Self {
         Self::with_budget(threads, usize::MAX)
     }
 
-    /// Registry enforcing `budget_bytes` of total model residency.
+    /// Registry enforcing `budget_bytes` of total model residency, over
+    /// a fresh `threads`-worker runtime.
     pub fn with_budget(threads: usize, budget_bytes: usize) -> Self {
+        Self::with_runtime(Runtime::new(threads), budget_bytes)
+    }
+
+    /// Registry over an **existing** shared runtime — several registries
+    /// (or a registry plus standalone engines) can borrow one scheduler.
+    pub fn with_runtime(runtime: Arc<Runtime>, budget_bytes: usize) -> Self {
         ModelRegistry {
-            threads: threads.max(1),
+            runtime,
             budget: budget_bytes.max(1),
             inner: Mutex::new(HashMap::new()),
             clock: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            policies: Mutex::new(HashMap::new()),
+            misses: Mutex::new(HashMap::new()),
+            quota_apply: Mutex::new(()),
         }
+    }
+
+    /// The shared runtime all registry engines dispatch on.
+    pub fn runtime(&self) -> Arc<Runtime> {
+        Arc::clone(&self.runtime)
     }
 
     fn tick(&self) -> u64 {
@@ -94,11 +136,21 @@ impl ModelRegistry {
     /// budget. Returns the shared engine handle.
     pub fn insert_engine(&self, name: impl Into<String>, engine: Engine) -> Arc<Engine> {
         let name = name.into();
+        // The one-pool invariant is structural: a registry engine MUST
+        // dispatch on the registry's runtime, or the process grows extra
+        // worker pools and quota rebalances would steer a pool the
+        // registry does not own. Build engines with `insert_plan` or
+        // `Engine::with_runtime(plan, registry.runtime())`.
+        assert!(
+            Arc::ptr_eq(&engine.runtime(), &self.runtime),
+            "registry engines must borrow the registry's shared runtime"
+        );
         let resident = plan_resident_bytes(engine.plan());
         let engine = Arc::new(engine);
         // Entries removed under the lock are torn down *after* it is
-        // released: dropping an Engine joins its worker pool and frees
-        // its buffers, which must not stall concurrent request routing.
+        // released: dropping an Engine releases its buffers (and, for a
+        // private-runtime engine, joins its pool), which must not stall
+        // concurrent request routing.
         let mut dropped: Vec<Entry> = Vec::new();
         {
             let mut g = self.inner.lock().unwrap();
@@ -111,13 +163,113 @@ impl ModelRegistry {
             self.evict_over_budget(&mut g, &name, &mut dropped);
         }
         drop(dropped);
+        // Reconcile the engine's schedule width with the quota AFTER the
+        // entry is resident: quotas are keyed by the registry name (not
+        // the plan's internal name), and a `set_quota`/`clear_quota`
+        // racing the insert either already updated the store (read here,
+        // under the apply lock) or will find the engine via `peek` — in
+        // every interleaving the engine converges to the stored state.
+        // Unconditional reconcile, so a quota *cleared* mid-insert also
+        // snaps back to the full pool width; the fast path (engine
+        // already at the target — `insert_plan` pre-read it) rebuilds
+        // nothing.
+        {
+            let _apply = self.quota_apply.lock().unwrap();
+            let want = self.runtime.effective_threads(&name);
+            if engine.schedules().threads != want {
+                engine.rebalance(want);
+            }
+        }
         engine
     }
 
-    /// Build an engine for `plan` (with this registry's thread count) and
-    /// register it.
+    /// Set `model`'s fair-share quota (worker buckets on the shared
+    /// runtime; clamped to `1..=threads`) and rebalance the resident
+    /// engine's schedules to it — pure metadata, no packed-buffer
+    /// copies, applied atomically between inferences. Returns the
+    /// effective quota.
+    pub fn set_quota(&self, model: &str, buckets: usize) -> usize {
+        // Store + rebalance under the apply lock: two racing set_quota
+        // calls (or a set_quota racing an insert) serialize, so the
+        // stored quota and the engine's active schedule width cannot
+        // end up permanently out of sync.
+        let _apply = self.quota_apply.lock().unwrap();
+        let eff = self.runtime.set_quota(model, buckets);
+        if let Some(engine) = self.peek(model) {
+            engine.rebalance(eff);
+        }
+        eff
+    }
+
+    /// Remove `model`'s quota, rebalancing back to the full pool width.
+    pub fn clear_quota(&self, model: &str) {
+        let _apply = self.quota_apply.lock().unwrap();
+        self.runtime.clear_quota(model);
+        if let Some(engine) = self.peek(model) {
+            engine.rebalance(self.runtime.threads());
+        }
+    }
+
+    /// Override `model`'s batching policy (consumed by the server's
+    /// batcher instead of the global default; survives eviction).
+    pub fn set_policy(&self, model: &str, policy: BatchPolicy) {
+        self.policies.lock().unwrap().insert(model.to_string(), policy);
+    }
+
+    /// The batching-policy override for `model`, if any.
+    pub fn policy_for(&self, model: &str) -> Option<BatchPolicy> {
+        self.policies.lock().unwrap().get(model).copied()
+    }
+
+    /// Record a request that targeted `model` while it was not resident.
+    /// The map is keyed by client-supplied names, so it is capped: once
+    /// [`Self::MISS_NAME_CAP`] distinct names are tracked, misses for
+    /// *new* names fold into the `"*"` overflow bucket instead of
+    /// growing the map (a fuzzer rotating model names cannot leak
+    /// memory in a long-running server).
+    pub fn note_miss(&self, model: &str) {
+        self.note_misses(model, 1);
+    }
+
+    /// [`Self::note_miss`] for a whole batch: one lock, one entry.
+    pub fn note_misses(&self, model: &str, count: u64) {
+        if count == 0 {
+            return;
+        }
+        let mut g = self.misses.lock().unwrap();
+        if g.contains_key(model) || g.len() < Self::MISS_NAME_CAP {
+            *g.entry(model.to_string()).or_default() += count;
+        } else {
+            *g.entry("*".to_string()).or_default() += count;
+        }
+    }
+
+    /// Distinct non-resident model names tracked before misses fold
+    /// into the `"*"` overflow bucket.
+    pub const MISS_NAME_CAP: usize = 1024;
+
+    /// Requests that targeted `model` while it was not resident (`"*"`
+    /// reads the overflow bucket).
+    pub fn not_resident(&self, model: &str) -> u64 {
+        self.misses.lock().unwrap().get(model).copied().unwrap_or(0)
+    }
+
+    /// Look a model up *without* bumping its LRU recency (internal
+    /// bookkeeping must not distort eviction order).
+    fn peek(&self, name: &str) -> Option<Arc<Engine>> {
+        self.inner.lock().unwrap().get(name).map(|e| Arc::clone(&e.engine))
+    }
+
+    /// Build an engine for `plan` **on the shared runtime** (no new
+    /// threads) and register it; the engine's schedules are balanced to
+    /// the model's quota (read up front so a quota'd load builds its
+    /// schedules exactly once — the post-insert application in
+    /// `insert_engine` then degenerates to a no-op check).
     pub fn insert_plan(&self, name: impl Into<String>, plan: ExecutionPlan) -> Arc<Engine> {
-        self.insert_engine(name, Engine::new(plan, self.threads))
+        let name = name.into();
+        let buckets = self.runtime.effective_threads(&name);
+        let engine = Engine::with_runtime_buckets(plan, Arc::clone(&self.runtime), buckets);
+        self.insert_engine(name, engine)
     }
 
     /// Hot-load a `.grimc` artifact as model `name` — the full AOT path:
@@ -193,18 +345,47 @@ impl ModelRegistry {
         self.evictions.load(Ordering::Relaxed)
     }
 
-    /// Per-model stats snapshot, sorted by name.
+    /// Per-model stats snapshot, sorted by name. The registry lock is
+    /// held only to copy the entry list — per-model telemetry (pool
+    /// stats, quotas, miss counts, each behind its own lock) is gathered
+    /// afterwards so a stats scrape never stalls request routing.
     pub fn stats(&self) -> Vec<ModelStats> {
-        let g = self.inner.lock().unwrap();
-        let mut v: Vec<ModelStats> = g
-            .iter()
-            .map(|(name, e)| ModelStats {
-                name: name.clone(),
-                resident_bytes: e.resident,
-                pool: e.engine.workspace_pool().stats(),
+        let entries: Vec<(String, usize, Arc<Engine>)> = {
+            let g = self.inner.lock().unwrap();
+            g.iter()
+                .map(|(name, e)| (name.clone(), e.resident, Arc::clone(&e.engine)))
+                .collect()
+        };
+        let mut v: Vec<ModelStats> = entries
+            .into_iter()
+            .map(|(name, resident_bytes, engine)| ModelStats {
+                pool: engine.workspace_pool().stats(),
+                quota: self.runtime.quota(&name),
+                not_resident: self.not_resident(&name),
+                name,
+                resident_bytes,
             })
             .collect();
-        drop(g);
+        // Misses against models that are NOT resident (never loaded, or
+        // evicted) are the primary admission-control signal — surface
+        // them as zero-resident rows instead of hiding them until the
+        // model happens to load. Includes the "*" overflow bucket.
+        let missed: Vec<(String, u64)> = {
+            let g = self.misses.lock().unwrap();
+            g.iter()
+                .filter(|(name, _)| !v.iter().any(|m| &m.name == *name))
+                .map(|(name, n)| (name.clone(), *n))
+                .collect()
+        };
+        for (name, not_resident) in missed {
+            v.push(ModelStats {
+                quota: self.runtime.quota(&name),
+                name,
+                resident_bytes: 0,
+                pool: PoolStats::default(),
+                not_resident,
+            });
+        }
         v.sort_by(|a, b| a.name.cmp(&b.name));
         v
     }
@@ -325,6 +506,44 @@ mod tests {
         // The held Arc keeps the engine alive and runnable.
         let mut rng = Rng::new(5);
         handle.run(&input_for(&handle, &mut rng)).unwrap();
+    }
+
+    #[test]
+    fn engines_share_the_registry_runtime() {
+        let reg = ModelRegistry::new(3);
+        let a = reg.insert_plan("a", plan_for(ModelKind::Gru, 50));
+        let b = reg.insert_plan("b", plan_for(ModelKind::Gru, 51));
+        assert!(
+            Arc::ptr_eq(&a.runtime(), &reg.runtime()) && Arc::ptr_eq(&b.runtime(), &reg.runtime()),
+            "every registry engine must borrow the one shared runtime"
+        );
+        assert_eq!(a.threads(), 3);
+        // Quota applies to the resident engine as a schedule rebalance.
+        assert_eq!(reg.set_quota("a", 2), 2);
+        assert_eq!(a.schedules().threads, 2);
+        assert_eq!(b.schedules().threads, 3, "other models keep the full width");
+        // A model inserted after its quota was set picks it up.
+        reg.set_quota("c", 1);
+        let c = reg.insert_plan("c", plan_for(ModelKind::Gru, 52));
+        assert_eq!(c.schedules().threads, 1);
+        reg.clear_quota("a");
+        assert_eq!(a.schedules().threads, 3);
+    }
+
+    #[test]
+    fn miss_counter_and_policy_survive_eviction() {
+        let reg = ModelRegistry::new(1);
+        let policy = crate::coordinator::BatchPolicy {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_millis(0),
+        };
+        reg.set_policy("m", policy);
+        reg.note_miss("m");
+        reg.insert_plan("m", plan_for(ModelKind::Gru, 60));
+        assert!(reg.evict("m"));
+        reg.note_miss("m");
+        assert_eq!(reg.not_resident("m"), 2);
+        assert_eq!(reg.policy_for("m").map(|p| p.max_batch), Some(1));
     }
 
     #[test]

@@ -26,10 +26,16 @@
 //!   signature span allows it ([`ColIndex::U16`]: one u32 base per group
 //!   plus u16 offsets), halving index traffic; matrices with a wider
 //!   span keep raw u32 indices;
-//! * a **static [`WorkPartition`]**: per-bucket lists of `(group, row
-//!   span)` work items balanced by nnz (greedy LPT over group nnz, large
-//!   groups split at `mr`-aligned row boundaries), which the parallel
-//!   executor consumes instead of an even row split.
+//! The static [`WorkPartition`] — per-bucket lists of `(group, row span)`
+//! work items balanced by nnz (greedy LPT over group nnz, large groups
+//! split at `mr`-aligned row boundaries), which the parallel executor
+//! consumes instead of an even row split — is built *from* the packed
+//! groups ([`PackedBcrc::lpt_partition`]) but deliberately lives
+//! **outside** this struct, in the plan's
+//! `crate::compiler::plan::ScheduleSet`: rebalancing a schedule to a
+//! different worker count is then a pure-metadata operation that can
+//! never touch (or copy) the packed value buffer, even when the buffer's
+//! `Arc` is shared across plans.
 //!
 //! Packing never changes arithmetic: every output row is produced by the
 //! same per-element operation sequence as the encode-order path, so
@@ -116,8 +122,6 @@ pub struct PackShape {
     pub kc: usize,
     /// Row cache-block height for serial traversal (multiple of `mr`).
     pub mc: usize,
-    /// Static partition width (worker buckets).
-    pub threads: usize,
 }
 
 /// One signature group inside the packed buffer.
@@ -360,8 +364,11 @@ impl WorkPartition {
 }
 
 /// A BCRC matrix repacked for the memory hierarchy (see module docs).
-/// `Clone` is required by `Arc::make_mut` in the engine's per-pool-size
-/// partition rebalance (the unique-owner case never deep-copies).
+/// Deliberately partition-free: the parallel schedule over these groups
+/// lives in the plan's `ScheduleSet`, so this struct is immutable for
+/// the whole lifetime of a loaded model and its `Arc` can be shared
+/// freely (across plans, engines, and rebalances) without ever being
+/// deep-copied.
 #[derive(Clone, Debug)]
 pub struct PackedBcrc {
     pub rows: usize,
@@ -380,7 +387,6 @@ pub struct PackedBcrc {
     /// True when rows are stored contiguously (`mr == 1`, single column
     /// block), which the GEMV dot kernel requires.
     pub row_major: bool,
-    pub partition: WorkPartition,
 }
 
 impl PackedBcrc {
@@ -451,7 +457,6 @@ impl PackedBcrc {
         }
 
         let max_width = enc.max_group_cols();
-        let partition = WorkPartition::lpt(&groups, mr, shape.threads);
         PackedBcrc {
             rows: enc.rows,
             cols: enc.cols,
@@ -463,8 +468,16 @@ impl PackedBcrc {
             reorder: enc.reorder.clone(),
             nnz: enc.nnz(),
             max_width,
-            partition,
         }
+    }
+
+    /// The static nnz-balanced schedule for this layout at `threads`
+    /// buckets (greedy LPT over group nnz with `mr`-aligned splits).
+    /// Pure metadata over the group table — building one never reads or
+    /// writes the value buffer, which is why rebalancing a plan to a new
+    /// worker count is free of packed-buffer copies.
+    pub fn lpt_partition(&self, threads: usize) -> WorkPartition {
+        WorkPartition::lpt(&self.groups, self.shape.mr, threads)
     }
 
     pub fn is_u16(&self) -> bool {
@@ -557,8 +570,6 @@ impl PackedBcrc {
                 anyhow::bail!(m);
             }
         }
-        self.partition.validate_covers(&self.groups)?;
-        anyhow::ensure!(self.partition.total_nnz() == self.nnz, "partition nnz total");
         Ok(())
     }
 }
@@ -580,8 +591,8 @@ mod tests {
         Bcrc::from_masked(&w, &mask)
     }
 
-    fn shape(mr: usize, kc: usize, threads: usize) -> PackShape {
-        PackShape { mr, kc, mc: 64usize.div_ceil(mr.max(1)) * mr.max(1), threads }
+    fn shape(mr: usize, kc: usize) -> PackShape {
+        PackShape { mr, kc, mc: 64usize.div_ceil(mr.max(1)) * mr.max(1) }
     }
 
     #[test]
@@ -589,7 +600,7 @@ mod tests {
         for (seed, m, k, rate) in [(1u64, 32, 64, 4.0), (2, 64, 128, 8.0), (3, 48, 96, 2.0)] {
             let enc = setup(seed, m, k, rate);
             for (mr, kc) in [(1usize, k), (2, 16), (4, 8), (8, 33), (4, 1)] {
-                let p = PackedBcrc::pack(&enc, shape(mr, kc, 4));
+                let p = PackedBcrc::pack(&enc, shape(mr, kc));
                 p.validate_against(&enc)
                     .unwrap_or_else(|e| panic!("seed {seed} mr={mr} kc={kc}: {e}"));
             }
@@ -599,7 +610,7 @@ mod tests {
     #[test]
     fn u16_compression_selected_and_round_trips() {
         let enc = setup(5, 32, 64, 4.0);
-        let p = PackedBcrc::pack(&enc, shape(4, 16, 4));
+        let p = PackedBcrc::pack(&enc, shape(4, 16));
         assert!(p.is_u16(), "64-column matrix must compress to u16");
         p.validate_against(&enc).unwrap();
         // Compressed indices must be strictly smaller than raw u32.
@@ -627,7 +638,7 @@ mod tests {
             weights: vec![1.0, 2.0, 3.0, 4.0],
         };
         enc.validate().unwrap();
-        let p = PackedBcrc::pack(&enc, shape(1, cols, 2));
+        let p = PackedBcrc::pack(&enc, shape(1, cols));
         assert!(!p.is_u16());
         p.validate_against(&enc).unwrap();
         assert_eq!(p.group_cols(0).at(1), 69_999);
@@ -636,10 +647,11 @@ mod tests {
     #[test]
     fn lpt_partition_covers_and_balances() {
         let enc = setup(7, 128, 128, 6.0);
-        let p = PackedBcrc::pack(&enc, shape(4, 16, 4));
-        p.partition.validate_covers(&p.groups).unwrap();
-        assert_eq!(p.partition.total_nnz(), enc.nnz());
-        assert_eq!(p.partition.num_buckets(), 4);
+        let p = PackedBcrc::pack(&enc, shape(4, 16));
+        let part = p.lpt_partition(4);
+        part.validate_covers(&p.groups).unwrap();
+        assert_eq!(part.total_nnz(), enc.nnz());
+        assert_eq!(part.num_buckets(), 4);
     }
 
     #[test]
@@ -667,9 +679,10 @@ mod tests {
         let mut mask = BcrMask::dense(8, 8, cfg);
         mask.prune_rows(0, 0, &[0, 1, 2, 3, 4, 5, 6, 7]);
         let enc = Bcrc::from_masked(&Tensor::zeros(&[8, 8]), &mask);
-        let p = PackedBcrc::pack(&enc, shape(4, 8, 3));
-        p.partition.validate_covers(&p.groups).unwrap();
-        assert_eq!(p.partition.total_nnz(), 0);
+        let p = PackedBcrc::pack(&enc, shape(4, 8));
+        let part = p.lpt_partition(3);
+        part.validate_covers(&p.groups).unwrap();
+        assert_eq!(part.total_nnz(), 0);
     }
 
     /// The shared panel walker is the single source of truth for the
@@ -702,7 +715,11 @@ mod tests {
     fn pack_invocations_counter_increments() {
         let enc = setup(99, 16, 32, 2.0);
         let before = pack_invocations();
-        let _ = PackedBcrc::pack(&enc, shape(4, 8, 2));
+        let p = PackedBcrc::pack(&enc, shape(4, 8));
+        assert_eq!(pack_invocations(), before + 1);
+        // Building a schedule from the packed groups is pure metadata —
+        // it must never register as a packing transform.
+        let _ = p.lpt_partition(4);
         assert_eq!(pack_invocations(), before + 1);
     }
 

@@ -31,11 +31,35 @@ enum Msg {
     Shutdown,
 }
 
+/// Monotonic count of worker threads ever spawned by any pool in this
+/// process. The shared-runtime tests assert on *deltas* of this to prove
+/// "N models share exactly one pool" without racing on teardown timing.
+static WORKERS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Count of worker threads currently alive (decremented by each worker
+/// as it exits its receive loop).
+static WORKERS_LIVE: AtomicUsize = AtomicUsize::new(0);
+
+/// Total pool worker threads ever spawned process-wide (monotonic).
+pub fn workers_spawned() -> usize {
+    WORKERS_SPAWNED.load(Ordering::SeqCst)
+}
+
+/// Pool worker threads currently alive process-wide.
+pub fn workers_live() -> usize {
+    WORKERS_LIVE.load(Ordering::SeqCst)
+}
+
 /// Fixed-size thread pool with a barrier-style `run_*` API.
 pub struct ThreadPool {
     senders: Vec<Sender<Msg>>,
     handles: Vec<JoinHandle<()>>,
     size: usize,
+    /// Rotates the chunk→worker mapping of `run_partitioned*` calls so
+    /// jobs narrower than the pool (quota'd models on a shared runtime)
+    /// spread across all workers over time instead of piling onto
+    /// workers `0..n` (see `exec::Runtime`).
+    rotor: AtomicUsize,
 }
 
 impl ThreadPool {
@@ -47,6 +71,8 @@ impl ThreadPool {
         for i in 0..size {
             let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
             senders.push(tx);
+            WORKERS_SPAWNED.fetch_add(1, Ordering::SeqCst);
+            WORKERS_LIVE.fetch_add(1, Ordering::SeqCst);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("grim-worker-{i}"))
@@ -60,11 +86,12 @@ impl ThreadPool {
                                 Msg::Shutdown => break,
                             }
                         }
+                        WORKERS_LIVE.fetch_sub(1, Ordering::SeqCst);
                     })
                     .expect("spawn worker"),
             );
         }
-        ThreadPool { senders, handles, size }
+        ThreadPool { senders, handles, size, rotor: AtomicUsize::new(0) }
     }
 
     /// Number of workers.
@@ -72,9 +99,12 @@ impl ThreadPool {
         self.size
     }
 
-    /// Run `f(worker_id, lo, hi)` over a static partition of `0..n`,
-    /// blocking until all workers finish. `f` must be `Sync`; scoped via
-    /// `Arc` + completion channel.
+    /// Run `f(chunk_id, lo, hi)` over a static partition of `0..n`,
+    /// blocking until all workers finish. `chunk_id` numbers the chunk
+    /// (`lo/chunk`), **not** the physical worker executing it — the
+    /// rotor maps chunks onto different workers per call, so callers
+    /// must not correlate it with per-worker state. `f` must be `Sync`;
+    /// scoped via `Arc` + completion channel.
     pub fn run_partitioned<F>(&self, n: usize, f: F)
     where
         F: Fn(usize, usize, usize) + Send + Sync + 'static,
@@ -82,10 +112,12 @@ impl ThreadPool {
         self.run_partitioned_scratch(n, move |_scratch, w, lo, hi| f(w, lo, hi));
     }
 
-    /// Like [`Self::run_partitioned`], but hands each worker its own
-    /// long-lived scratch buffer as well: `f(scratch, worker_id, lo, hi)`.
-    /// The buffer persists across jobs, so `resize`-to-fit inside `f`
-    /// allocates at most once per worker per high-water mark.
+    /// Like [`Self::run_partitioned`], but hands each job the executing
+    /// worker's long-lived scratch buffer as well:
+    /// `f(scratch, chunk_id, lo, hi)`. The buffer belongs to whichever
+    /// worker the rotor assigned the chunk to (NOT `chunk_id`) and
+    /// persists across jobs, so `resize`-to-fit inside `f` allocates at
+    /// most once per worker per high-water mark.
     pub fn run_partitioned_scratch<F>(&self, n: usize, f: F)
     where
         F: Fn(&mut Vec<f32>, usize, usize, usize) + Send + Sync + 'static,
@@ -96,6 +128,11 @@ impl ThreadPool {
         let f = Arc::new(f);
         let (done_tx, done_rx) = channel::<()>();
         let chunk = n.div_ceil(self.size);
+        // Rotate which worker gets chunk 0: a call using fewer chunks
+        // than workers (a quota'd model's buckets) then lands on a
+        // different worker subset each time, so concurrent narrow jobs
+        // from different models statistically use the whole pool.
+        let start = self.rotor.fetch_add(1, Ordering::Relaxed);
         let mut dispatched = 0;
         for w in 0..self.size {
             let lo = w * chunk;
@@ -105,7 +142,7 @@ impl ThreadPool {
             let hi = ((w + 1) * chunk).min(n);
             let f = Arc::clone(&f);
             let done = done_tx.clone();
-            self.senders[w]
+            self.senders[(start + w) % self.size]
                 .send(Msg::Run(Box::new(move |scratch| {
                     f(scratch, w, lo, hi);
                     // Drop our Arc clone BEFORE signalling completion so the

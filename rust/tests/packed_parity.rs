@@ -136,7 +136,8 @@ fn packing_switch_controls_kernels() {
     }
 }
 
-/// Custom pack threads flow through to the partition width.
+/// Custom pack threads flow through to the plan's schedule set (where
+/// the partitions now live — beside the packed layouts, not inside).
 #[test]
 fn pack_threads_option_controls_buckets() {
     let o = opts(961);
@@ -146,12 +147,19 @@ fn pack_threads_option_controls_buckets() {
     };
     let plan = compiled(ModelKind::Vgg16, o, copts);
     if grim::compiler::packing::force_unpacked() {
-        return; // CI unpacked leg: nothing to inspect
+        assert!(plan.schedules.is_empty(), "unpacked plans carry no schedules");
+        return; // CI unpacked leg: nothing else to inspect
+    }
+    assert_eq!(plan.schedules.threads, 3);
+    assert!(!plan.schedules.is_empty());
+    for part in &plan.schedules.parts {
+        assert_eq!(part.num_buckets(), 3);
     }
     for (_, step) in &plan.steps {
         if let Step::Conv { kernel: KernelImpl::Bcrc { gemm }, .. } = step {
             let p = gemm.packed.as_ref().expect("packed by default");
-            assert_eq!(p.partition.num_buckets(), 3);
+            let part = plan.schedules.get(gemm.sched).expect("kernel references a schedule");
+            part.validate_covers(&p.groups).unwrap();
         }
     }
 }
@@ -181,13 +189,12 @@ fn partition_assigns_every_nnz_exactly_once() {
                     GemmParams::default(),
                     n_hint,
                     CacheParams::default(),
-                    threads,
                     PackOverrides::default(),
                 );
-                p.partition
-                    .validate_covers(&p.groups)
+                let part = p.lpt_partition(threads);
+                part.validate_covers(&p.groups)
                     .unwrap_or_else(|e| panic!("seed {seed} t={threads} n={n_hint}: {e}"));
-                assert_eq!(p.partition.total_nnz(), enc.nnz(), "seed {seed}");
+                assert_eq!(part.total_nnz(), enc.nnz(), "seed {seed}");
             }
         }
     }
@@ -219,11 +226,11 @@ fn skewed_fixture_balances_within_ratio() {
         GemmParams::default(),
         64,
         CacheParams::default(),
-        threads,
         PackOverrides::default(),
     );
-    p.partition.validate_covers(&p.groups).unwrap();
-    let lpt_ratio = p.partition.imbalance();
+    let part = p.lpt_partition(threads);
+    part.validate_covers(&p.groups).unwrap();
+    let lpt_ratio = part.imbalance();
     assert!(lpt_ratio <= 1.25, "LPT max/min thread-nnz ratio {lpt_ratio} > 1.25");
 
     // Even split over reordered rows (the pre-partition executor
@@ -254,7 +261,6 @@ fn index_compression_round_trips() {
         GemmParams::default(),
         32,
         CacheParams::default(),
-        4,
         PackOverrides::default(),
     );
     assert!(p.is_u16());
@@ -283,7 +289,6 @@ fn index_compression_round_trips() {
         GemmParams::default(),
         1,
         CacheParams::default(),
-        2,
         PackOverrides::default(),
     );
     assert!(!pw.is_u16(), "span > u16::MAX must fall back to u32");

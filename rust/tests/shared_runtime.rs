@@ -1,0 +1,246 @@
+//! Shared execution-runtime acceptance tests (the one-scheduler serving
+//! tier):
+//!
+//! * N registry models share exactly **one** worker pool — the process
+//!   spawns precisely `runtime.threads()` workers no matter how many
+//!   models are resident or how much traffic they serve concurrently;
+//! * partition rebalancing (pool-size adaptation and quota changes) is a
+//!   **pure-metadata** operation: packed value buffers keep their
+//!   pointer identity even when the plan's kernel `Arc`s are shared (the
+//!   old `Arc::make_mut` deep-copy path is gone), the pack-invocation
+//!   counter stays flat, and results stay bit-identical to `run_naive`;
+//! * LRU eviction under in-flight load never breaks a held engine;
+//! * unpacked plans (`GRIM_FORCE_UNPACKED=1` CI leg) carry no schedules
+//!   and rebalance as a no-op.
+
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::compiler::plan::{ExecutionPlan, KernelImpl};
+use grim::coordinator::{Server, ServerConfig};
+use grim::engine::Engine;
+use grim::exec::Runtime;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::serving::{plan_resident_bytes, ModelRegistry};
+use grim::sparse::packed::pack_invocations;
+use grim::tensor::Tensor;
+use grim::util::threadpool::{workers_live, workers_spawned};
+use grim::util::Rng;
+use std::sync::{Arc, Mutex};
+
+/// The worker counters are process-global and tests in this file run
+/// concurrently, so every test that creates pools or reads the counters
+/// serializes on this lock.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn plan_for(kind: ModelKind, preset: Preset, seed: u64) -> ExecutionPlan {
+    let o = InitOptions { rate: 6.0, block: [4, 16], seed };
+    let m = build_model(kind, preset, o);
+    let w = random_weights(&m, o);
+    compile(&m, &w, CompileOptions::default()).unwrap()
+}
+
+fn input_for(engine: &Engine, rng: &mut Rng) -> Tensor {
+    let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+    Tensor::rand_uniform(&dims, 1.0, rng)
+}
+
+/// Pointer identity of every packed BCRC value buffer (and the packed
+/// `Arc`s themselves) in a plan — the zero-copy witness.
+fn packed_ptrs(plan: &ExecutionPlan) -> Vec<(*const grim::sparse::PackedBcrc, *const f32)> {
+    let mut v = Vec::new();
+    grim::compiler::plan::for_each_kernel(&plan.steps, |k| {
+        if let KernelImpl::Bcrc { gemm } = k {
+            if let Some(p) = &gemm.packed {
+                v.push((Arc::as_ptr(p), p.values.as_slice().as_ptr()));
+            }
+        }
+    });
+    v
+}
+
+/// Tentpole invariant: two resident models, one shared runtime, exactly
+/// `threads` worker threads alive — including under concurrent traffic
+/// to both models.
+#[test]
+fn registry_models_share_exactly_one_pool() {
+    let _g = lock();
+    let live_before = workers_live();
+    let spawned_before = workers_spawned();
+    {
+        let runtime = Runtime::new(4);
+        assert_eq!(workers_spawned() - spawned_before, 4, "runtime spawns its workers once");
+        let registry = Arc::new(ModelRegistry::with_runtime(Arc::clone(&runtime), usize::MAX));
+        registry.insert_plan("cnn", plan_for(ModelKind::Vgg16, Preset::CifarMini, 11));
+        registry.insert_plan("rnn", plan_for(ModelKind::Gru, Preset::TimitMini, 12));
+        let cnn = registry.get("cnn").unwrap();
+        let rnn = registry.get("rnn").unwrap();
+        assert!(
+            Arc::ptr_eq(&cnn.runtime(), &runtime) && Arc::ptr_eq(&rnn.runtime(), &runtime),
+            "both engines must borrow the registry's runtime"
+        );
+        assert_eq!(
+            workers_spawned() - spawned_before,
+            4,
+            "inserting models must spawn no additional worker threads"
+        );
+        assert_eq!(workers_live() - live_before, 4, "total live workers == runtime size");
+
+        // Concurrent submits to both models through one server.
+        let server =
+            Arc::new(Server::start_registry(Arc::clone(&registry), ServerConfig::default()));
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            for name in ["cnn", "rnn"] {
+                let s = Arc::clone(&server);
+                let reg = Arc::clone(&registry);
+                handles.push(std::thread::spawn(move || {
+                    let engine = reg.get(name).unwrap();
+                    let mut rng = Rng::new(500 + t);
+                    for _ in 0..4 {
+                        let x = input_for(&engine, &mut rng);
+                        let resp = s.infer_on(name, x).unwrap();
+                        assert!(resp.output.data().iter().all(|v| v.is_finite()));
+                    }
+                }));
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.stats().completed, 16);
+        assert_eq!(
+            workers_spawned() - spawned_before,
+            4,
+            "serving 16 requests across 2 models spawned no extra workers"
+        );
+        assert_eq!(workers_live() - live_before, 4);
+    }
+}
+
+/// Rebalancing a *shared* plan (cloned `Arc`s — the case that used to
+/// deep-copy packed buffers via `Arc::make_mut`) to two different pool
+/// sizes keeps every packed value buffer at its original address, packs
+/// nothing, and stays bit-identical to `run_naive`.
+#[test]
+fn rebalance_performs_zero_packed_buffer_copies() {
+    let _g = lock();
+    let plan = plan_for(ModelKind::Vgg16, Preset::CifarMini, 21);
+    let before = packed_ptrs(&plan);
+    if plan.packing.enabled {
+        assert!(!before.is_empty(), "fixture must carry packed BCRC layers");
+    }
+    let packs_before = pack_invocations();
+    // plan.clone() shares every kernel Arc with `plan` — engines at 3
+    // and 8 buckets then rebalance over genuinely shared packed data.
+    let e3 = Engine::new(plan.clone(), 3);
+    let e8 = Engine::new(plan.clone(), 8);
+    assert_eq!(pack_invocations(), packs_before, "rebalance must never re-pack");
+    assert_eq!(
+        packed_ptrs(e3.plan()),
+        before,
+        "3-bucket rebalance must keep packed value Arc pointer identity"
+    );
+    assert_eq!(
+        packed_ptrs(e8.plan()),
+        before,
+        "8-bucket rebalance must keep packed value Arc pointer identity"
+    );
+    if plan.packing.enabled {
+        let s3 = e3.schedules();
+        assert_eq!(s3.threads, 3);
+        assert!(s3.parts.iter().all(|p| p.num_buckets() == 3));
+    }
+    let mut rng = Rng::new(0xC0DE);
+    for _ in 0..2 {
+        let x = input_for(&e3, &mut rng);
+        let a = e3.run(&x).unwrap();
+        assert_eq!(a, e8.run(&x).unwrap(), "bucket count must not change results");
+        assert_eq!(a, e3.run_naive(&x).unwrap(), "rebalanced engine must match run_naive");
+    }
+}
+
+/// Quota changes on a live registry model rebalance pure metadata:
+/// pointer identity holds, outputs stay bit-identical, and the engine's
+/// schedule width follows the quota.
+#[test]
+fn quota_change_is_pure_metadata_and_bit_identical() {
+    let _g = lock();
+    let registry = ModelRegistry::new(4);
+    let engine = registry.insert_plan("m", plan_for(ModelKind::Vgg16, Preset::CifarMini, 31));
+    let before = packed_ptrs(engine.plan());
+    let mut rng = Rng::new(0xF00D);
+    let x = input_for(&engine, &mut rng);
+    let base = engine.run(&x).unwrap();
+    let naive = engine.run_naive(&x).unwrap();
+    assert_eq!(base, naive);
+
+    let packs_before = pack_invocations();
+    assert_eq!(registry.set_quota("m", 2), 2);
+    assert_eq!(engine.schedules().threads, 2, "quota applies to the resident engine");
+    assert_eq!(pack_invocations(), packs_before, "quota rebalance must never re-pack");
+    assert_eq!(packed_ptrs(engine.plan()), before, "quota rebalance must not copy buffers");
+    assert_eq!(engine.run(&x).unwrap(), base, "quota must not change results");
+
+    registry.clear_quota("m");
+    assert_eq!(engine.schedules().threads, 4);
+    assert_eq!(engine.run(&x).unwrap(), base);
+}
+
+/// LRU eviction while the evicted model has traffic in flight: the held
+/// engine handle keeps serving to completion (its memory is freed when
+/// the last handle drops), and the registry stays consistent.
+#[test]
+fn lru_eviction_under_inflight_load() {
+    let _g = lock();
+    let a = plan_for(ModelKind::Gru, Preset::TimitMini, 41);
+    let one = plan_resident_bytes(&a);
+    // Room for two of these models, not three.
+    let registry = Arc::new(ModelRegistry::with_budget(2, 2 * one + one / 2));
+    let victim = registry.insert_plan("a", a);
+    registry.insert_plan("b", plan_for(ModelKind::Gru, Preset::TimitMini, 42));
+    // Touch "b" last so "a" is the LRU victim while we hold its handle.
+    registry.get("a").unwrap();
+    registry.get("b").unwrap();
+
+    let worker = {
+        let victim = Arc::clone(&victim);
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(0xE71);
+            for _ in 0..10 {
+                let x = input_for(&victim, &mut rng);
+                victim.run(&x).expect("in-flight handle must keep serving");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        })
+    };
+    // Evict "a" mid-traffic by inserting a third model over budget.
+    registry.insert_plan("c", plan_for(ModelKind::Gru, Preset::TimitMini, 43));
+    assert!(registry.get("a").is_none(), "LRU victim must be evicted");
+    assert!(registry.get("b").is_some() && registry.get("c").is_some());
+    assert_eq!(registry.evictions(), 1);
+    worker.join().unwrap();
+    // The evicted model's traffic now counts as not-resident misses.
+    registry.note_miss("a");
+    assert_eq!(registry.not_resident("a"), 1);
+}
+
+/// Unpacked plans (the `GRIM_FORCE_UNPACKED=1` CI leg compiles this way
+/// unconditionally) carry no schedules; rebalancing is a no-op and the
+/// even-split fallback stays bit-identical to `run_naive`.
+#[test]
+fn unpacked_plans_rebalance_as_noop() {
+    let _g = lock();
+    let o = InitOptions { rate: 6.0, block: [4, 16], seed: 51 };
+    let m = build_model(ModelKind::Resnet18, Preset::CifarMini, o);
+    let w = random_weights(&m, o);
+    let plan = compile(&m, &w, CompileOptions::default().without_packing()).unwrap();
+    assert!(plan.schedules.is_empty(), "unpacked plans carry no schedules");
+    let engine = Engine::new(plan, 3);
+    assert_eq!(engine.rebalance(5), 0, "nothing to rebuild");
+    let mut rng = Rng::new(0xAB);
+    let x = input_for(&engine, &mut rng);
+    assert_eq!(engine.run(&x).unwrap(), engine.run_naive(&x).unwrap());
+}

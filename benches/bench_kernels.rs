@@ -318,6 +318,53 @@ fn main() -> anyhow::Result<()> {
         o
     };
 
+    // Tracing overhead on a full compiled-model run: the same engine and
+    // input, timed with span tracing off (the production default — one
+    // relaxed atomic load per span site) and on (always-sampled, worst
+    // case). The ratio is the observability tax the obs module promises
+    // to keep negligible.
+    let tracing_stats = {
+        use grim::compiler::passes::{compile, CompileOptions};
+        use grim::engine::Engine;
+        use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+        use grim::obs::trace;
+        let opts = InitOptions { rate: 6.0, block: [4, 16], seed: 51 };
+        let module = build_model(ModelKind::Gru, Preset::TimitMini, opts);
+        let weights = random_weights(&module, opts);
+        let plan = compile(&module, &weights, CompileOptions::default())?;
+        let engine = Engine::new(plan, threads);
+        let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+        let mut rng = Rng::new(41);
+        let x = Tensor::rand_uniform(&dims, 1.0, &mut rng);
+        let runs = if quick { 20 } else { 60 };
+        trace::disable();
+        let t_off = time_median_ms(iters, 2, || {
+            for _ in 0..runs {
+                std::hint::black_box(engine.run(&x).unwrap());
+            }
+        }) / runs as f64;
+        trace::enable(1);
+        let t_on = time_median_ms(iters, 2, || {
+            for _ in 0..runs {
+                std::hint::black_box(engine.run(&x).unwrap());
+            }
+        }) / runs as f64;
+        trace::disable();
+        rep.row(vec![
+            "tracing overhead".into(),
+            "gru timit-mini".into(),
+            format!("off {:.4} ms", t_off),
+            format!("on {:.4} ms", t_on),
+            format!("{:.2}x", t_on / t_off),
+        ]);
+        let mut o = Json::obj();
+        o.set("model", Json::Str("gru-timit-mini".into()))
+            .set("off_ms", Json::Num(t_off))
+            .set("on_ms", Json::Num(t_on))
+            .set("overhead", Json::Num(round2(t_on / t_off)));
+        o
+    };
+
     rep.meta.set("backend", Json::Str(mk.name.into()));
     rep.print();
     rep.save()?;
@@ -329,7 +376,8 @@ fn main() -> anyhow::Result<()> {
         .set("microkernels", Json::Arr(kernels))
         .set("fusion", Json::Arr(fused_rows))
         .set("packing", Json::Arr(packing_rows))
-        .set("partition", partition_stats);
+        .set("partition", partition_stats)
+        .set("tracing", tracing_stats);
     std::fs::write("BENCH_kernels.json", doc.to_pretty())?;
     // sanity: the artifact must parse back
     json::parse(&std::fs::read_to_string("BENCH_kernels.json")?)?;

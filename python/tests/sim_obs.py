@@ -1,0 +1,128 @@
+"""Cross-validation of the Rust log2-bucketed histogram quantile logic.
+
+Mirrors ``rust/src/obs/metrics.rs``:
+
+* ``bucket_index(v)``: 0 holds the value 0; bucket i >= 1 holds
+  ``[2**(i-1), 2**i - 1]``; the top bucket (63) is open-ended.
+* ``quantile(q)``: nearest-rank (``rank = ceil(q*n)`` clamped to
+  ``[1, n]``) over the cumulative bucket counts, linear interpolation
+  inside the landing bucket with the upper bound tightened to the
+  observed max, clamped to ``[min, max]``.
+
+The property checked — identical to the Rust-side test
+``histogram_quantiles_match_exact_percentile_buckets`` — is that the
+bucket estimate always lands in the same log2 bucket as the exact
+sorted nearest-rank percentile, and that estimates are monotone in q.
+No Rust toolchain is needed: this is the executable spec the Rust
+implementation was written against.
+"""
+
+import math
+import random
+
+HIST_BUCKETS = 64
+
+
+def bucket_index(v: int) -> int:
+    if v == 0:
+        return 0
+    return min(v.bit_length(), HIST_BUCKETS - 1)
+
+
+def bucket_lower(i: int) -> int:
+    return 0 if i == 0 else 1 << (i - 1)
+
+
+def bucket_upper(i: int) -> int:
+    if i == 0:
+        return 0
+    if i >= HIST_BUCKETS - 1:
+        return (1 << 64) - 1
+    return (1 << i) - 1
+
+
+class Hist:
+    def __init__(self):
+        self.buckets = [0] * HIST_BUCKETS
+        self.n = 0
+        self.lo = None
+        self.hi = 0
+
+    def record(self, v: int):
+        self.buckets[bucket_index(v)] += 1
+        self.n += 1
+        self.lo = v if self.lo is None else min(self.lo, v)
+        self.hi = max(self.hi, v)
+
+    def quantile(self, q: float) -> float:
+        if self.n == 0:
+            return 0.0
+        rank = min(max(math.ceil(q * self.n), 1), self.n)
+        cum = 0
+        for i in range(HIST_BUCKETS):
+            c = self.buckets[i]
+            if c == 0:
+                continue
+            if cum + c >= rank:
+                blo = float(bucket_lower(i))
+                bhi = float(min(bucket_upper(i), self.hi))
+                frac = (rank - cum) / c
+                est = blo + frac * (bhi - blo)
+                return min(max(est, float(self.lo)), float(self.hi))
+            cum += c
+        return float(self.hi)
+
+
+def exact_percentile(sorted_xs, q: float) -> int:
+    rank = min(max(math.ceil(q * len(sorted_xs)), 1), len(sorted_xs))
+    return sorted_xs[rank - 1]
+
+
+def main():
+    rng = random.Random(0xB0B)
+    trials = 200
+    for trial in range(trials):
+        n = 1 + rng.randrange(400)
+        h = Hist()
+        xs = []
+        for _ in range(n):
+            v = rng.randrange(10 ** (1 + rng.randrange(5)))
+            h.record(v)
+            xs.append(v)
+        xs.sort()
+        assert h.n == n
+        assert h.lo == xs[0] and h.hi == xs[-1]
+        prev = -1.0
+        for q in (0.5, 0.9, 0.99):
+            est = h.quantile(q)
+            exact = exact_percentile(xs, q)
+            bi_est = bucket_index(round(est))
+            bi_exact = bucket_index(exact)
+            assert bi_est == bi_exact, (
+                f"trial {trial}: q={q} estimate {est} (bucket {bi_est}) vs "
+                f"exact {exact} (bucket {bi_exact}), xs={xs}"
+            )
+            assert est >= prev, f"trial {trial}: quantiles must be monotone in q"
+            prev = est
+
+    # Bucket boundary spot checks mirror the Rust unit test.
+    assert bucket_index(0) == 0
+    assert bucket_index(1) == 1
+    assert bucket_index(2) == 2
+    assert bucket_index(3) == 2
+    assert bucket_index(4) == 3
+    assert bucket_index((1 << 64) - 1) == HIST_BUCKETS - 1
+    for i in range(1, HIST_BUCKETS - 1):
+        assert bucket_index(bucket_lower(i)) == i
+        assert bucket_index(bucket_upper(i)) == i
+
+    # Single-sample histograms are exact at every quantile (min==max clamp).
+    h = Hist()
+    h.record(750)
+    assert h.quantile(0.5) == 750.0 and h.quantile(0.99) == 750.0
+
+    print(f"PASS sim_obs: {trials} trials, quantile estimates bucket-exact")
+
+
+if __name__ == "__main__":
+    main()

@@ -139,6 +139,44 @@ impl KernelImpl {
     }
 }
 
+/// Resident weight bytes a kernel's execution path actually streams:
+/// the packed layout's size when one exists (that is what the kernel
+/// reads), the encoded/storage size otherwise. Distinct from
+/// [`KernelImpl::storage_bytes`], which reports the *encoding* size
+/// regardless of packing. Derives only from state preserved across
+/// `.grimc` save/load, so `describe()` output round-trips.
+pub fn kernel_weight_bytes(k: &KernelImpl) -> usize {
+    match k {
+        KernelImpl::Dense { w, packed, .. } => {
+            packed.as_ref().map(|p| 4 * p.values.len()).unwrap_or(4 * w.numel())
+        }
+        KernelImpl::Bcrc { gemm } => gemm
+            .packed
+            .as_ref()
+            .map(|p| p.packed_bytes())
+            .unwrap_or_else(|| gemm.enc.total_bytes()),
+        other => other.storage_bytes(),
+    }
+}
+
+/// Weight bytes one [`Step`] touches per inference (0 for weightless
+/// steps; all three gate kernels for every GRU layer).
+pub fn step_weight_bytes(step: &Step) -> usize {
+    match step {
+        Step::Conv { kernel, .. } | Step::Fc { kernel, .. } => kernel_weight_bytes(kernel),
+        Step::DwConv { w, .. } => 4 * w.numel(),
+        Step::Gru { layers } => layers
+            .iter()
+            .map(|l| {
+                kernel_weight_bytes(&l.wz)
+                    + kernel_weight_bytes(&l.wr)
+                    + kernel_weight_bytes(&l.wh)
+            })
+            .sum(),
+        _ => 0,
+    }
+}
+
 /// One GRU stacked layer's kernels.
 #[derive(Clone, Debug)]
 pub struct GruLayerPlan {
@@ -281,7 +319,12 @@ impl ExecutionPlan {
                 Step::Gru { layers } => format!("GRU x{}", layers.len()),
                 other => format!("{other:?}").split_whitespace().next().unwrap().to_string(),
             };
-            let _ = writeln!(s, "  [{id:3}] {desc}");
+            let wb = step_weight_bytes(step);
+            if wb > 0 {
+                let _ = writeln!(s, "  [{id:3}] {desc} w={} KiB", wb.div_ceil(1024));
+            } else {
+                let _ = writeln!(s, "  [{id:3}] {desc}");
+            }
         }
         let _ = writeln!(
             s,

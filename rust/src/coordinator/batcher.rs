@@ -21,6 +21,33 @@ impl Default for BatchPolicy {
     }
 }
 
+/// One formed batch with its formation window: `started` is when the
+/// batcher picked up the first request, `formed` when it stopped
+/// gathering — the difference is the batch-form latency reported in
+/// [`super::queue::InferResponse::batch_ms`] and traced as the
+/// `batch-form` span.
+#[derive(Debug)]
+pub struct Batch {
+    pub reqs: Vec<InferRequest>,
+    pub started: Instant,
+    pub formed: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    /// Batch-formation window in milliseconds.
+    pub fn form_ms(&self) -> f64 {
+        self.formed.saturating_duration_since(self.started).as_secs_f64() * 1e3
+    }
+}
+
 /// Resolves the batching policy for a batch's target model. Registry
 /// servers install one backed by per-model policy overrides; `None`
 /// from the resolver falls back to the batcher's default policy.
@@ -67,12 +94,13 @@ impl<'a> Batcher<'a> {
     /// *different* model ships the batch immediately (no point waiting
     /// out the deadline — the batch cannot grow past it without
     /// reordering), and that request seeds the next batch.
-    pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
+    pub fn next_batch(&self) -> Option<Batch> {
         let first = self.queue.pop()?;
+        let started = Instant::now();
         let model = first.model.clone();
         let policy = self.policy_for(&model);
         let mut batch = vec![first];
-        let deadline = Instant::now() + policy.max_wait;
+        let deadline = started + policy.max_wait;
         while batch.len() < policy.max_batch {
             let more = self
                 .queue
@@ -89,7 +117,7 @@ impl<'a> Batcher<'a> {
             }
             std::thread::sleep(Duration::from_micros(100));
         }
-        Some(batch)
+        Some(Batch { reqs: batch, started, formed: Instant::now() })
     }
 }
 
@@ -123,16 +151,17 @@ mod tests {
         let b = Batcher::new(&q, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) });
         let t = Instant::now();
         let first = b.next_batch().unwrap();
-        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
-        assert!(first.iter().all(|r| r.model.as_deref() == Some("a")));
+        assert_eq!(first.reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(first.reqs.iter().all(|r| r.model.as_deref() == Some("a")));
+        assert!(first.formed >= first.started, "formation window must be well-ordered");
         assert!(
             t.elapsed() < Duration::from_millis(40),
             "a mismatched head must ship the batch before the deadline"
         );
         let second = b.next_batch().unwrap();
-        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(second.reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
         let third = b.next_batch().unwrap();
-        assert_eq!(third.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(third.reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
     }
 
     #[test]
@@ -144,7 +173,7 @@ mod tests {
         let b = Batcher::new(&q, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 4);
-        assert_eq!(batch[0].id, 0);
+        assert_eq!(batch.reqs[0].id, 0);
         let batch2 = b.next_batch().unwrap();
         assert_eq!(batch2.len(), 1);
     }
@@ -158,6 +187,7 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t.elapsed() >= Duration::from_millis(2));
+        assert!(batch.form_ms() >= 2.0, "the deadline wait is the formation window");
     }
 
     #[test]
@@ -188,12 +218,12 @@ mod tests {
                 _ => None,
             }),
         );
-        assert_eq!(b.next_batch().unwrap().iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
-        assert_eq!(b.next_batch().unwrap().iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
-        assert_eq!(b.next_batch().unwrap().iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(b.next_batch().unwrap().reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(b.next_batch().unwrap().reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(b.next_batch().unwrap().reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
         // the bulk model batches under the default policy
         assert_eq!(
-            b.next_batch().unwrap().iter().map(|r| r.id).collect::<Vec<_>>(),
+            b.next_batch().unwrap().reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
             vec![3, 4, 5]
         );
     }
@@ -212,7 +242,7 @@ mod tests {
         let b = Batcher::new(&q, BatchPolicy { max_batch: 7, max_wait: Duration::from_micros(200) });
         let mut seen = Vec::new();
         while let Some(batch) = b.next_batch() {
-            seen.extend(batch.iter().map(|r| r.id));
+            seen.extend(batch.reqs.iter().map(|r| r.id));
         }
         producer.join().unwrap();
         seen.sort_unstable();

@@ -11,6 +11,6 @@ pub mod queue;
 pub mod batcher;
 pub mod server;
 
-pub use batcher::{Batcher, BatchPolicy};
+pub use batcher::{Batch, Batcher, BatchPolicy};
 pub use queue::{InferRequest, InferResponse, RequestQueue, ServeError};
 pub use server::{Server, ServerConfig, ServerStats};

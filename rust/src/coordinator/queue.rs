@@ -53,8 +53,12 @@ pub struct InferResponse {
     pub id: u64,
     /// Model output; a zero placeholder when `error` is set.
     pub output: Tensor,
-    /// Time spent waiting in the queue (ms).
+    /// Time from enqueue until the request's batch was formed (ms).
     pub queue_ms: f64,
+    /// Batch-formation window of the request's batch (ms) — how long the
+    /// batcher held the first request while gathering companions; the
+    /// same value for every request in one batch.
+    pub batch_ms: f64,
     /// Time spent executing (ms).
     pub exec_ms: f64,
     /// Typed failure (non-resident model, engine error); `None` on

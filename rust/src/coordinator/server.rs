@@ -17,9 +17,11 @@ use super::batcher::{Batcher, BatchPolicy};
 use super::queue::{InferRequest, InferResponse, RequestQueue, ServeError};
 use crate::engine::Engine;
 use crate::memory::{PoolStats, WorkspacePool};
+use crate::obs::trace::{self, SpanKind};
+use crate::obs::{Counter, Histogram, Registry};
 use crate::serving::ModelRegistry;
 use crate::tensor::Tensor;
-use crate::util::stats::{summarize, Summary};
+use crate::util::stats::Summary;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -39,14 +41,24 @@ impl Default for ServerConfig {
     }
 }
 
-/// Aggregated serving statistics.
+/// Aggregated serving statistics. Summaries come from bounded
+/// log₂-bucketed histograms ([`crate::obs::Histogram`]), not an
+/// unbounded sample vector — count/mean/min/max are exact,
+/// p50/p90/p99 are bucket estimates.
 #[derive(Clone, Debug)]
 pub struct ServerStats {
     pub completed: u64,
     pub batches: u64,
+    /// End-to-end request latency (enqueue → response ready).
     pub latency_ms: Summary,
+    /// Queue wait (enqueue → the request's batch formed).
     pub queue_ms: Summary,
+    /// Engine execution time.
     pub exec_ms: Summary,
+    /// Batch-formation window (one sample per batch).
+    pub batch_form_ms: Summary,
+    /// Batch-size distribution (one sample per batch, unitless).
+    pub batch_size: Summary,
     pub throughput_rps: f64,
     /// Requests that failed execution (wrong shape, unknown model, plan
     /// errors). These are excluded from `completed` and from the
@@ -57,6 +69,10 @@ pub struct ServerStats {
     /// registry servers without one — use `ModelRegistry::stats` for the
     /// per-model breakdown).
     pub arena: PoolStats,
+    /// Per-model end-to-end latency summaries (ms), sorted by model
+    /// name; unnamed-default traffic appears under the default model's
+    /// name.
+    pub per_model: Vec<(String, Summary)>,
 }
 
 /// A running inference server over one or many compiled models.
@@ -65,7 +81,16 @@ pub struct Server {
     next_id: AtomicU64,
     pending: Arc<Mutex<HashMap<u64, Sender<InferResponse>>>>,
     scheduler: Option<std::thread::JoinHandle<()>>,
-    samples: Arc<Mutex<Vec<(f64, f64)>>>, // (queue_ms, exec_ms)
+    /// Per-model labeled series (latency/queue/exec/batch/step
+    /// histograms + completion counters) — the Prometheus surface.
+    metrics: Arc<Registry>,
+    /// Server-wide histograms, kept out of the registry so the labeled
+    /// per-model families stay label-consistent in the text dump.
+    hist_latency: Arc<Histogram>,
+    hist_queue: Arc<Histogram>,
+    hist_exec: Arc<Histogram>,
+    hist_batch_form: Arc<Histogram>,
+    hist_batch_size: Arc<Histogram>,
     started: Instant,
     completed: Arc<AtomicU64>,
     failed: Arc<AtomicU64>,
@@ -77,6 +102,51 @@ pub struct Server {
     default_model: Option<String>,
     /// The default model's workspace pool, kept observable for stats.
     arena: Option<Arc<WorkspacePool>>,
+}
+
+/// Cached per-model metric handles: one registry-mutex hit per new
+/// model (and per new kernel kind), pure atomics in steady state.
+struct ModelHists {
+    latency: Arc<Histogram>,
+    queue: Arc<Histogram>,
+    exec: Arc<Histogram>,
+    batch_size: Arc<Histogram>,
+    completed: Arc<Counter>,
+    failed: Arc<Counter>,
+    steps: HashMap<&'static str, Arc<Histogram>>,
+    trace_id: u32,
+}
+
+impl ModelHists {
+    fn new(reg: &Registry, model: &str) -> Self {
+        let l: &[(&str, &str)] = &[("model", model)];
+        ModelHists {
+            latency: reg.histogram("grim_request_latency_us", l),
+            queue: reg.histogram("grim_queue_wait_us", l),
+            exec: reg.histogram("grim_exec_time_us", l),
+            batch_size: reg.histogram("grim_batch_size", l),
+            completed: reg.counter("grim_requests_completed_total", l),
+            failed: reg.counter("grim_requests_failed_total", l),
+            steps: HashMap::new(),
+            trace_id: 0,
+        }
+    }
+
+    /// Step-time histogram for one kernel kind, registered on first use.
+    fn step(&mut self, reg: &Registry, model: &str, kind: &'static str) -> &Histogram {
+        self.steps.entry(kind).or_insert_with(|| {
+            reg.histogram("grim_step_time_us", &[("model", model), ("kind", kind)])
+        })
+    }
+
+    /// Interned trace id of the model label, resolved on the first
+    /// sampled batch (never on the tracing-off path).
+    fn trace_id(&mut self, model: &str) -> u32 {
+        if self.trace_id == 0 {
+            self.trace_id = trace::intern(model);
+        }
+        self.trace_id
+    }
 }
 
 impl Server {
@@ -107,14 +177,24 @@ impl Server {
         let queue = Arc::new(RequestQueue::new(config.queue_capacity));
         let pending: Arc<Mutex<HashMap<u64, Sender<InferResponse>>>> =
             Arc::new(Mutex::new(HashMap::new()));
-        let samples = Arc::new(Mutex::new(Vec::new()));
+        let metrics = Arc::new(Registry::new());
+        let hist_latency = Arc::new(Histogram::new());
+        let hist_queue = Arc::new(Histogram::new());
+        let hist_exec = Arc::new(Histogram::new());
+        let hist_batch_form = Arc::new(Histogram::new());
+        let hist_batch_size = Arc::new(Histogram::new());
         let completed = Arc::new(AtomicU64::new(0));
         let failed = Arc::new(AtomicU64::new(0));
         let batches = Arc::new(AtomicU64::new(0));
 
         let q2 = Arc::clone(&queue);
         let p2 = Arc::clone(&pending);
-        let s2 = Arc::clone(&samples);
+        let m2 = Arc::clone(&metrics);
+        let h_lat = Arc::clone(&hist_latency);
+        let h_q = Arc::clone(&hist_queue);
+        let h_ex = Arc::clone(&hist_exec);
+        let h_bf = Arc::clone(&hist_batch_form);
+        let h_bs = Arc::clone(&hist_batch_size);
         let c2 = Arc::clone(&completed);
         let f2 = Arc::clone(&failed);
         let b2 = Arc::clone(&batches);
@@ -138,13 +218,16 @@ impl Server {
                         preg.policy_for(name)
                     }),
                 );
+                // Per-model metric handles, cached so the steady state
+                // never touches the registry mutex.
+                let mut hists: HashMap<String, ModelHists> = HashMap::new();
                 while let Some(batch) = batcher.next_batch() {
                     b2.fetch_add(1, Ordering::Relaxed);
                     // Batches are model-homogeneous; resolve once per
                     // batch, at execution time — a model evicted while
                     // its requests sat in the queue fails them loudly
                     // instead of silently pinning its memory.
-                    let target = batch[0].model.clone().or_else(|| default.clone());
+                    let target = batch.reqs[0].model.clone().or_else(|| default.clone());
                     let engine = target.as_deref().and_then(|n| reg.get(n));
                     if let (None, Some(n)) = (&engine, &target) {
                         // One miss per failed request (batched: one
@@ -152,18 +235,69 @@ impl Server {
                         // signal.
                         reg.note_misses(n, batch.len() as u64);
                     }
-                    for req in batch {
-                        let qms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                    let label = target.as_deref().unwrap_or("_none").to_string();
+                    let mh = hists
+                        .entry(label.clone())
+                        .or_insert_with(|| ModelHists::new(&m2, &label));
+                    // 1/N batch sampling decides whether this batch's
+                    // spans are recorded (tracing-off cost: one relaxed
+                    // load inside on_batch_start).
+                    let sampled = trace::on_batch_start();
+                    if sampled {
+                        trace::record_span(
+                            SpanKind::BatchForm,
+                            batch.started,
+                            batch.formed,
+                            0,
+                            mh.trace_id(&label),
+                            batch.len() as u64,
+                        );
+                    }
+                    let form_ms = batch.form_ms();
+                    h_bf.record_ms(form_ms);
+                    h_bs.record(batch.len() as u64);
+                    mh.batch_size.record(batch.len() as u64);
+                    for req in batch.reqs {
+                        let qms = batch
+                            .formed
+                            .saturating_duration_since(req.enqueued)
+                            .as_secs_f64()
+                            * 1e3;
+                        if sampled {
+                            trace::record_span(
+                                SpanKind::Queue,
+                                req.enqueued,
+                                batch.formed,
+                                0,
+                                mh.trace_id(&label),
+                                req.id,
+                            );
+                        }
                         let t = Instant::now();
                         // Failures (wrong input shape, non-resident
                         // model) must reach the caller as typed errors,
-                        // not masquerade as results.
-                        let (out, error) = match &engine {
-                            Some(e) => match e.run(&req.input) {
-                                Ok(out) => (out, None),
-                                Err(e) => {
-                                    (Tensor::zeros(&[1]), Some(ServeError::Exec(e.to_string())))
+                        // not masquerade as results. Engines collecting
+                        // per-layer metrics (all registry-served ones)
+                        // additionally feed the per-kernel-kind step
+                        // histograms.
+                        let (out, error, layers) = match &engine {
+                            Some(e) if e.collect_metrics => {
+                                match e.run_with_metrics(&req.input) {
+                                    Ok((out, m)) => (out, None, Some(m)),
+                                    Err(e) => (
+                                        Tensor::zeros(&[1]),
+                                        Some(ServeError::Exec(e.to_string())),
+                                        None,
+                                    ),
                                 }
+                            }
+                            Some(e) => match e.run(&req.input) {
+                                Ok(out) => (out, None, None),
+                                Err(e) => (
+                                    Tensor::zeros(&[1]),
+                                    Some(ServeError::Exec(e.to_string())),
+                                    None,
+                                ),
                             },
                             None => (
                                 Tensor::zeros(&[1]),
@@ -173,26 +307,65 @@ impl Server {
                                     }
                                     None => ServeError::NoDefaultModel,
                                 }),
+                                None,
                             ),
                         };
                         let ems = t.elapsed().as_secs_f64() * 1e3;
+                        if sampled {
+                            trace::record_span(
+                                SpanKind::Dispatch,
+                                t,
+                                Instant::now(),
+                                0,
+                                mh.trace_id(&label),
+                                req.id,
+                            );
+                        }
+                        if let Some(m) = &layers {
+                            for l in &m.layers {
+                                mh.step(&m2, &label, l.kind).record(l.micros.round() as u64);
+                            }
+                        }
+                        // End-to-end latency includes intra-batch wait
+                        // (requests dispatched later in the batch carry
+                        // their true time-to-response).
+                        let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
                         if error.is_none() {
                             // only successful runs feed the latency and
                             // throughput summaries
-                            s2.lock().unwrap().push((qms, ems));
+                            h_lat.record_ms(latency_ms);
+                            h_q.record_ms(qms);
+                            h_ex.record_ms(ems);
+                            mh.latency.record_ms(latency_ms);
+                            mh.queue.record_ms(qms);
+                            mh.exec.record_ms(ems);
+                            mh.completed.inc();
                             c2.fetch_add(1, Ordering::Relaxed);
                         } else {
+                            mh.failed.inc();
                             f2.fetch_add(1, Ordering::Relaxed);
                         }
+                        let respond_start = sampled.then(Instant::now);
                         let tx = p2.lock().unwrap().remove(&req.id);
                         if let Some(tx) = tx {
                             let _ = tx.send(InferResponse {
                                 id: req.id,
                                 output: out,
                                 queue_ms: qms,
+                                batch_ms: form_ms,
                                 exec_ms: ems,
                                 error,
                             });
+                        }
+                        if let Some(start) = respond_start {
+                            trace::record_span(
+                                SpanKind::Respond,
+                                start,
+                                Instant::now(),
+                                0,
+                                mh.trace_id(&label),
+                                req.id,
+                            );
                         }
                     }
                 }
@@ -204,7 +377,12 @@ impl Server {
             next_id: AtomicU64::new(1),
             pending,
             scheduler: Some(scheduler),
-            samples,
+            metrics,
+            hist_latency,
+            hist_queue,
+            hist_exec,
+            hist_batch_form,
+            hist_batch_size,
             started: Instant::now(),
             completed,
             failed,
@@ -274,22 +452,76 @@ impl Server {
 
     /// Current stats snapshot.
     pub fn stats(&self) -> ServerStats {
-        let samples = self.samples.lock().unwrap();
-        let queue_ms: Vec<f64> = samples.iter().map(|(q, _)| *q).collect();
-        let exec_ms: Vec<f64> = samples.iter().map(|(_, e)| *e).collect();
-        let total: Vec<f64> = samples.iter().map(|(q, e)| q + e).collect();
         let completed = self.completed.load(Ordering::Relaxed);
         let elapsed = self.started.elapsed().as_secs_f64();
+        let mut per_model: Vec<(String, Summary)> = self
+            .metrics
+            .histograms_named("grim_request_latency_us")
+            .into_iter()
+            .map(|(labels, h)| {
+                let name = labels
+                    .iter()
+                    .find(|(k, _)| k == "model")
+                    .map(|(_, v)| v.clone())
+                    .unwrap_or_default();
+                (name, h.summary(1e-3))
+            })
+            .collect();
+        per_model.sort_by(|a, b| a.0.cmp(&b.0));
         ServerStats {
             completed,
             batches: self.batches.load(Ordering::Relaxed),
-            latency_ms: summarize(&total),
-            queue_ms: summarize(&queue_ms),
-            exec_ms: summarize(&exec_ms),
+            latency_ms: self.hist_latency.summary(1e-3),
+            queue_ms: self.hist_queue.summary(1e-3),
+            exec_ms: self.hist_exec.summary(1e-3),
+            batch_form_ms: self.hist_batch_form.summary(1e-3),
+            batch_size: self.hist_batch_size.summary(1.0),
             throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
             failed: self.failed.load(Ordering::Relaxed),
             arena: self.arena.as_ref().map(|a| a.stats()).unwrap_or_default(),
+            per_model,
         }
+    }
+
+    /// The server's metric registry (per-model labeled series).
+    pub fn metrics(&self) -> Arc<Registry> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Render the full metrics surface in Prometheus text exposition
+    /// format: per-model labeled series from the registry, server-level
+    /// counters/uptime, and the model registry's resident/arena/quota
+    /// gauges. `grim serve --stats-out` writes this; `grim stats`
+    /// parses it back.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut out = self.metrics.render();
+        let _ = writeln!(out, "# TYPE grim_server_requests_completed_total counter");
+        let _ = writeln!(
+            out,
+            "grim_server_requests_completed_total {}",
+            self.completed.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(out, "# TYPE grim_server_requests_failed_total counter");
+        let _ = writeln!(
+            out,
+            "grim_server_requests_failed_total {}",
+            self.failed.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(out, "# TYPE grim_server_batches_total counter");
+        let _ = writeln!(
+            out,
+            "grim_server_batches_total {}",
+            self.batches.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(out, "# TYPE grim_server_uptime_seconds gauge");
+        let _ = writeln!(
+            out,
+            "grim_server_uptime_seconds {:.3}",
+            self.started.elapsed().as_secs_f64()
+        );
+        self.registry.render_prometheus_into(&mut out);
+        out
     }
 
     /// Stop accepting requests, drain, and join the scheduler.

@@ -18,7 +18,7 @@
 
 use crate::compiler::packing::rebalance_partitions;
 use crate::compiler::plan::{
-    Activation, ExecutionPlan, GruLayerPlan, KernelImpl, ScheduleSet, Step,
+    step_weight_bytes, Activation, ExecutionPlan, GruLayerPlan, KernelImpl, ScheduleSet, Step,
 };
 use crate::conv::direct::{depthwise_conv2d_into_ep, depthwise_conv2d_parallel_ep};
 use crate::conv::im2col::{im2col, im2col_into, im2col_skip, ConvGeom};
@@ -38,8 +38,11 @@ use crate::gemm::Epilogue;
 use crate::memory::layout::{self, ConvScratch, GruScratch};
 use crate::memory::{Workspace, WorkspacePool};
 use crate::tensor::Tensor;
+use crate::obs::trace;
 use crate::util::{ThreadPool, Timer};
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::{Arc, RwLock};
+use std::time::Instant;
 
 use super::metrics::{LayerMetric, RunMetrics};
 
@@ -71,7 +74,15 @@ pub struct Engine {
     /// construction; individual BCRC layers can still pin themselves to
     /// scalar via `GemmParams::simd = false`).
     mk: &'static Microkernels,
-    /// Collect per-layer metrics (small overhead; off on the serving path).
+    /// Weight bytes each step streams, precomputed so metrics collection
+    /// costs an indexed load per step (parallel to `plan.steps`).
+    step_bytes: Vec<usize>,
+    /// Interned trace id of the plan's model name; 0 until the first
+    /// sampled run resolves it (engines are usually built before tracing
+    /// is enabled, so this cannot be interned eagerly).
+    trace_model: AtomicU32,
+    /// Collect per-layer metrics (small overhead; the registry turns it
+    /// on for served engines so step-time histograms can be fed).
     pub collect_metrics: bool,
 }
 
@@ -137,14 +148,30 @@ impl Engine {
         // buffer copy — and bit-identical for any bucket count.
         let (sched, _) = rebalance_partitions(&plan.steps, &plan.schedules, buckets);
         let workspaces = Arc::new(WorkspacePool::new(plan.memory.arena_len));
+        trace::init_from_env();
+        let step_bytes = plan.steps.iter().map(|(_, s)| step_weight_bytes(s)).collect();
         Engine {
             plan,
             rt,
             sched: RwLock::new(Arc::new(sched)),
             workspaces,
             mk,
+            step_bytes,
+            trace_model: AtomicU32::new(0),
             collect_metrics: false,
         }
+    }
+
+    /// Interned trace id of the model name, resolved lazily on the first
+    /// sampled run (never called on the tracing-off path).
+    fn resolve_trace_model(&self) -> u32 {
+        let cached = self.trace_model.load(Ordering::Relaxed);
+        if cached != 0 {
+            return cached;
+        }
+        let id = trace::intern(&self.plan.name);
+        self.trace_model.store(id, Ordering::Relaxed);
+        id
     }
 
     pub fn plan(&self) -> &ExecutionPlan {
@@ -229,15 +256,55 @@ impl Engine {
             expect
         );
         let mut metrics = RunMetrics::default();
+        if self.collect_metrics {
+            metrics.layers.reserve(self.plan.steps.len());
+            // Sticky-on busy-time accounting (one relaxed load when
+            // already on) so parallel steps get a wall-vs-busy split.
+            if !crate::obs::pool_timing() {
+                crate::obs::set_pool_timing(true);
+            }
+        }
         // One schedule snapshot per inference: a concurrent rebalance
         // (quota change) swaps the Arc; this run keeps its consistent set.
         let sched = self.schedules();
-        for (id, step) in &self.plan.steps {
+        // Tracing-off cost of this whole block: the one relaxed load
+        // inside `begin` (it returns None without reading the clock).
+        let run_start = trace::begin();
+        let tmodel = match run_start {
+            Some(_) => {
+                let id = self.resolve_trace_model();
+                trace::set_current_model(id); // labels worker-lane spans
+                id
+            }
+            None => 0,
+        };
+        for (i, (id, step)) in self.plan.steps.iter().enumerate() {
             let t = Timer::start();
+            let busy0 = if self.collect_metrics { crate::obs::pool_busy_nanos() } else { 0 };
             let kind = self.exec_step_planned(*id, step, input, ws, &sched)?;
             if self.collect_metrics {
-                metrics.layers.push(LayerMetric { node: *id, kind, micros: t.elapsed_us() });
+                let busy = crate::obs::pool_busy_nanos() - busy0;
+                metrics.layers.push(LayerMetric {
+                    node: *id,
+                    kind,
+                    micros: t.elapsed_us(),
+                    busy_micros: busy as f64 / 1e3,
+                    weight_bytes: self.step_bytes[i],
+                });
             }
+            if run_start.is_some() {
+                trace::record_span(
+                    trace::SpanKind::Step,
+                    t.started_at(),
+                    Instant::now(),
+                    trace::step_kind_id(kind),
+                    tmodel,
+                    *id as u64,
+                );
+            }
+        }
+        if let Some(start) = run_start {
+            trace::record_span(trace::SpanKind::Run, start, Instant::now(), 0, tmodel, 0);
         }
         let out = match mem.value_range(self.plan.output_id) {
             Some((off, len)) => {

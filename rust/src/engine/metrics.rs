@@ -2,11 +2,27 @@
 //! coordinator's latency reporting).
 
 /// Timing + instrumentation for one executed step.
+///
+/// `micros` is wall time for the step; `busy_micros` is the *summed*
+/// time threadpool workers spent inside the step's chunks, so for a
+/// parallel step `busy_micros / micros` approximates effective worker
+/// occupancy (≈ the step's parallel speedup), while a serial step has
+/// `busy_micros == 0`. The split is what the paper's per-layer figures
+/// need: wall time answers "where does latency go", busy time answers
+/// "was the pool actually used".
 #[derive(Clone, Debug)]
 pub struct LayerMetric {
     pub node: usize,
     pub kind: &'static str,
+    /// Wall-clock step time.
     pub micros: f64,
+    /// Summed per-worker busy time inside the step (0 for serial steps;
+    /// an upper bound when other engines share the pool concurrently).
+    pub busy_micros: f64,
+    /// Resident weight bytes the step's kernel reads (packed size when
+    /// a packed layout exists, encoded size otherwise; 0 for
+    /// weightless steps).
+    pub weight_bytes: usize,
 }
 
 /// Metrics for one full inference.
@@ -24,6 +40,16 @@ impl RunMetrics {
         self.total_micros() / 1e3
     }
 
+    /// Summed worker busy time across all steps.
+    pub fn total_busy_micros(&self) -> f64 {
+        self.layers.iter().map(|l| l.busy_micros).sum()
+    }
+
+    /// Total weight bytes touched across all steps.
+    pub fn total_weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_bytes).sum()
+    }
+
     /// Time attributed to one node id.
     pub fn node_micros(&self, node: usize) -> f64 {
         self.layers.iter().filter(|l| l.node == node).map(|l| l.micros).sum()
@@ -38,12 +64,26 @@ mod tests {
     fn totals() {
         let m = RunMetrics {
             layers: vec![
-                LayerMetric { node: 0, kind: "conv", micros: 100.0 },
-                LayerMetric { node: 1, kind: "fc", micros: 50.0 },
+                LayerMetric {
+                    node: 0,
+                    kind: "conv",
+                    micros: 100.0,
+                    busy_micros: 320.0,
+                    weight_bytes: 4096,
+                },
+                LayerMetric {
+                    node: 1,
+                    kind: "fc",
+                    micros: 50.0,
+                    busy_micros: 0.0,
+                    weight_bytes: 1024,
+                },
             ],
         };
         assert_eq!(m.total_micros(), 150.0);
         assert_eq!(m.node_micros(1), 50.0);
         assert!((m.total_ms() - 0.15).abs() < 1e-12);
+        assert_eq!(m.total_busy_micros(), 320.0);
+        assert_eq!(m.total_weight_bytes(), 5120);
     }
 }

@@ -48,6 +48,10 @@ pub struct Runtime {
 impl Runtime {
     /// Build a runtime with `threads` workers (`threads >= 1` enforced).
     pub fn new(threads: usize) -> Arc<Runtime> {
+        // Every execution path funnels through a runtime, so this is the
+        // one place ambient tracing (`GRIM_TRACE`) is picked up before
+        // worker threads exist. Idempotent and cheap when unset.
+        crate::obs::trace::init_from_env();
         Arc::new(Runtime {
             pool: ThreadPool::new(threads.max(1)),
             quotas: Mutex::new(HashMap::new()),

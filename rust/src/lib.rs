@@ -37,6 +37,10 @@
 //!   runs offline; loading re-encodes and re-packs nothing) and the
 //!   `ModelRegistry` of named, hot-loadable engines with per-model
 //!   workspace pools and a resident-bytes LRU eviction budget.
+//! * **Observability** ([`obs`]) — request/kernel span tracing into
+//!   lock-free per-thread rings (Chrome trace-event export, Perfetto
+//!   compatible) and a Prometheus-style metrics registry of counters,
+//!   gauges, and log₂-bucketed latency histograms.
 //! * **PJRT runtime** ([`runtime`]) — loads HLO text AOT-compiled by the
 //!   python layer (`python/compile/aot.py`) and executes it via the `xla`
 //!   crate; this is the XLA dense baseline and the rust↔jax numeric bridge.
@@ -48,6 +52,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod util;
+pub mod obs;
 pub mod tensor;
 pub mod sparse;
 pub mod gemm;

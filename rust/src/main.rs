@@ -41,6 +41,7 @@ fn main() {
         "xla" => cmd_xla(&flags),
         "export" => cmd_export(&flags),
         "report" => cmd_report(&flags),
+        "stats" => cmd_stats(&flags),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -69,13 +70,16 @@ COMMANDS:
   serve    --model vgg16 --preset cifar-mini --rate 8 --threads 8 --requests 64 --batch 8
   serve    --models dir/ [--budget-mb 256] [--threads 8] [--quota m=2,m2=4] [--batch-for m=1] --requests 64
            multi-model registry of .grimc files on ONE shared runtime (per-model quotas + batch policies)
+           both serve forms accept [--trace out.json] [--trace-sample N] (Chrome/Perfetto span trace,
+           1 batch in N sampled) and [--stats-out out.prom] (Prometheus text metrics dump)
   run      --model resnet18 --preset cifar-mini --rate 8 [--grim-file m.grim] [--grimc-file m.grimc] [--backend grim|naive|opt|csr]
   inspect  --model vgg16 --preset cifar-mini --rate 8
   tune     --model vgg16 --preset cifar-mini --rate 8 [--generations 6]
   blockopt --rows 1024 --cols 1024 --rate 10 [--n 64] [--threshold 1.1]
   xla      --artifact <stem> (from artifacts/*.hlo.txt)
   export   --model gru --preset timit-mini --rate 10 --out model.grim
-  report   [--name fig11|table1|...]  pretty-print bench_out/*.json"
+  report   [--name fig11|table1|...]  pretty-print bench_out/*.json
+  stats    --file out.prom  parse a --stats-out dump and print counters, gauges and histogram quantiles"
     );
 }
 
@@ -239,6 +243,61 @@ fn cmd_inspect(f: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Turn tracing on when `--trace out.json` was given — BEFORE engines
+/// and worker threads are built, so their ring registrations and first
+/// spans are captured. Returns the output path.
+fn trace_setup(f: &Flags) -> Option<String> {
+    let path = f.get("trace").cloned()?;
+    grim::obs::trace::enable(flag(f, "trace-sample", 1u64));
+    Some(path)
+}
+
+/// Export the recorded spans as Chrome trace-event JSON, write them to
+/// `path`, and structurally self-validate the document (the CI smoke leg
+/// relies on the exit code). `min_models` asserts coverage: a multi-model
+/// serve must show spans for at least that many distinct models.
+fn write_trace(path: &str, min_models: usize) -> anyhow::Result<()> {
+    grim::obs::trace::disable();
+    let json = grim::obs::trace::export_chrome();
+    std::fs::write(path, &json)?;
+    let summary = grim::obs::trace::validate_chrome(&json)?;
+    anyhow::ensure!(
+        summary.events > 0,
+        "trace: no spans recorded (was the server driven with tracing on?)"
+    );
+    anyhow::ensure!(
+        summary.models.len() >= min_models,
+        "trace: expected spans from >= {min_models} model(s), saw {:?}",
+        summary.models
+    );
+    println!(
+        "trace: {} span(s) across {} model(s) -> {path} (open in ui.perfetto.dev)",
+        summary.events,
+        summary.models.len()
+    );
+    Ok(())
+}
+
+/// Write the server's Prometheus text dump to `--stats-out` (when given),
+/// round-tripping it through the crate's own parser as a self-check.
+fn write_stats(f: &Flags, prom: &str) -> anyhow::Result<()> {
+    let Some(path) = f.get("stats-out") else { return Ok(()) };
+    grim::obs::parse_text(prom)?;
+    std::fs::write(path, prom)?;
+    println!("stats: wrote {} sample line(s) -> {path}", prom.lines().filter(|l| !l.starts_with('#')).count());
+    Ok(())
+}
+
+/// Per-model latency quantiles from a server stats snapshot.
+fn print_per_model(stats: &grim::coordinator::ServerStats) {
+    for (name, s) in &stats.per_model {
+        println!(
+            "  {name:<16} n={:<5} p50={:.3}ms p90={:.3}ms p99={:.3}ms",
+            s.count, s.p50, s.p90, s.p99
+        );
+    }
+}
+
 /// Multi-model serving: load every `.grimc` in a directory into a
 /// registry and drive requests round-robin across the models, asserting
 /// every model answers (the CI smoke leg relies on the exit code).
@@ -248,6 +307,7 @@ fn cmd_serve_multi(f: &Flags, dir: &str) -> anyhow::Result<()> {
     use std::sync::Arc;
     let threads = flag(f, "threads", 8usize);
     let budget_mb = flag(f, "budget-mb", 0usize);
+    let trace_path = trace_setup(f);
     // One process-wide runtime: every model borrows these workers, so N
     // resident models never exceed `threads` worker threads.
     let runtime = Runtime::new(threads);
@@ -323,6 +383,11 @@ fn cmd_serve_multi(f: &Flags, dir: &str) -> anyhow::Result<()> {
         stats.latency_ms.p99,
         stats.throughput_rps
     );
+    print_per_model(&stats);
+    write_stats(f, &server.render_prometheus())?;
+    if let Some(path) = &trace_path {
+        write_trace(path, dims.len().min(2))?;
+    }
     for ms in registry.stats() {
         println!(
             "  {:<16} {:>8} KiB resident, {} requests over {} arena(s) of {} KiB{}{}",
@@ -357,6 +422,7 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     if let Some(dir) = f.get("models") {
         return cmd_serve_multi(f, dir);
     }
+    let trace_path = trace_setup(f);
     let (module, weights) = model_from_flags(f)?;
     let plan = compile(&module, &weights, CompileOptions::default())?;
     let engine = Engine::new(plan, flag(f, "threads", 8usize));
@@ -373,6 +439,7 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     for rx in rxs {
         rx.recv()?;
     }
+    write_stats(f, &server.render_prometheus())?;
     let stats = server.shutdown();
     println!(
         "completed={} batches={} p50={:.3}ms p90={:.3}ms p99={:.3}ms throughput={:.1} rps",
@@ -383,12 +450,16 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         stats.latency_ms.p99,
         stats.throughput_rps
     );
+    print_per_model(&stats);
     println!(
         "arena: {} KiB x{} ({} checkouts, zero per-request allocation)",
         stats.arena.arena_bytes / 1024,
         stats.arena.arenas_created,
         stats.arena.checkouts
     );
+    if let Some(path) = &trace_path {
+        write_trace(path, 1)?;
+    }
     Ok(())
 }
 
@@ -538,6 +609,57 @@ fn cmd_report(f: &Flags) -> anyhow::Result<()> {
                 }
             }
         }
+    }
+    Ok(())
+}
+
+/// Parse a `--stats-out` Prometheus dump and pretty-print it: plain
+/// counters/gauges first, then one quantile row per histogram series
+/// (reconstructed from its cumulative `_bucket` lines). Exits non-zero
+/// on any parse failure, which the CI smoke leg relies on.
+fn cmd_stats(f: &Flags) -> anyhow::Result<()> {
+    let path = f
+        .get("file")
+        .ok_or_else(|| anyhow::anyhow!("stats: --file <out.prom> is required"))?;
+    let text = std::fs::read_to_string(path)?;
+    let samples = grim::obs::parse_text(&text)?;
+    let hists = grim::obs::fold_histograms(&samples);
+    // Scalar series = everything that is not part of a histogram family.
+    let hist_prefixes: Vec<String> = hists.iter().map(|h| h.name.clone()).collect();
+    let is_hist_part = |n: &str| {
+        hist_prefixes.iter().any(|p| {
+            n == format!("{p}_bucket") || n == format!("{p}_sum") || n == format!("{p}_count")
+        })
+    };
+    println!("== scalars ==");
+    for s in samples.iter().filter(|s| !is_hist_part(&s.name)) {
+        let labels = if s.labels.is_empty() {
+            String::new()
+        } else {
+            format!(
+                "{{{}}}",
+                s.labels.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(",")
+            )
+        };
+        println!("  {}{labels} = {}", s.name, s.value);
+    }
+    println!("== histograms ==");
+    for h in &hists {
+        let labels = h
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        println!(
+            "  {}{{{labels}}} n={} mean={:.1} p50={:.1} p90={:.1} p99={:.1}",
+            h.name,
+            h.count,
+            if h.count > 0.0 { h.sum / h.count } else { 0.0 },
+            h.quantile(0.50),
+            h.quantile(0.90),
+            h.quantile(0.99)
+        );
     }
     Ok(())
 }

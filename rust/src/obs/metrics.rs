@@ -1,0 +1,623 @@
+//! Counters, gauges, and log₂-bucketed histograms behind a Prometheus
+//! text-exposition surface.
+//!
+//! Design constraints (shared with the tracing half in [`super::trace`]):
+//!
+//! * **The hot path is pure atomics.** Handles ([`Counter`], [`Gauge`],
+//!   [`Histogram`]) are `Arc`s resolved from the [`Registry`] once — one
+//!   mutex hit at registration, never per sample. Recording is a handful
+//!   of `Relaxed` RMWs and allocates nothing.
+//! * **Histograms are log₂-bucketed.** Bucket `0` holds the value `0`;
+//!   bucket `i ≥ 1` holds `[2^(i-1), 2^i - 1]` (the last bucket is open
+//!   at the top). Quantiles are nearest-rank over the cumulative bucket
+//!   counts with linear interpolation inside the landing bucket, clamped
+//!   to the observed `[min, max]` — the estimate therefore always lands
+//!   in the same bucket as the exact sort-based
+//!   [`crate::util::stats::percentile`] (property-tested in
+//!   `rust/tests/obs.rs` and cross-validated by
+//!   `python/tests/sim_obs.py`).
+//! * **Registry keys are flattened series names** — `name{k="v",…}` with
+//!   labels sorted, which is exactly the Prometheus series identity, so
+//!   [`Registry::render`] is a sorted walk and [`parse_text`] round-trips
+//!   it (the `grim stats` subcommand and the CI smoke leg rely on that).
+
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// Number of log₂ buckets per [`Histogram`] (covers the full `u64` range).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Monotonic event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Lock-free log₂-bucketed histogram over `u64` samples (latencies are
+/// recorded in microseconds). `count`/`sum`/`min`/`max` are exact; the
+/// percentile estimates come from the buckets.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    /// Σ v² as f64 bits (CAS loop) — feeds [`Summary::stddev`].
+    sumsq: AtomicU64,
+    /// `u64::MAX` until the first sample.
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            sumsq: AtomicU64::new(0f64.to_bits()),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// The bucket a value lands in: `0` holds 0, bucket `i ≥ 1` holds
+    /// `[2^(i-1), 2^i - 1]`, the top bucket is open-ended.
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive lower bound of bucket `i`.
+    pub fn bucket_lower(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` (`u64::MAX` for the open top).
+    pub fn bucket_upper(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= HIST_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one sample. A handful of `Relaxed` atomic RMWs, no locks,
+    /// no allocation.
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        let vf = v as f64;
+        let mut cur = self.sumsq.load(Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + vf * vf).to_bits();
+            match self.sumsq.compare_exchange_weak(cur, next, Relaxed, Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        self.min.fetch_min(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Relaxed);
+    }
+
+    /// Record a fractional-millisecond duration as whole microseconds.
+    pub fn record_ms(&self, ms: f64) {
+        self.record((ms * 1e3).round().max(0.0) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Relaxed)
+    }
+
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.buckets[i].load(Relaxed)
+    }
+
+    /// Nearest-rank quantile estimate for `q ∈ [0, 1]`: walk the
+    /// cumulative bucket counts to the bucket holding the rank,
+    /// interpolate linearly inside it, and clamp to the observed
+    /// `[min, max]` (which makes single-sample and single-bucket
+    /// populations exact and keeps the estimate inside the same bucket
+    /// as the exact sorted percentile).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let (lo, hi) = (self.min() as f64, self.max() as f64);
+        let mut cum = 0u64;
+        for i in 0..HIST_BUCKETS {
+            let c = self.buckets[i].load(Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                let blo = Self::bucket_lower(i) as f64;
+                let bhi = Self::bucket_upper(i).min(self.max()) as f64;
+                let frac = (rank - cum) as f64 / c as f64;
+                return (blo + frac * (bhi - blo)).clamp(lo, hi);
+            }
+            cum += c;
+        }
+        // A concurrent writer bumped `count` before its bucket store
+        // became visible; the max is the best consistent answer.
+        hi
+    }
+
+    /// Snapshot as a [`Summary`]; `scale` converts the recorded integer
+    /// unit to the reported one (`1e-3` for µs → ms). Count, mean, min,
+    /// max, and stddev are exact; p50/p90/p99 are bucket estimates.
+    pub fn summary(&self, scale: f64) -> Summary {
+        let n = self.count();
+        if n == 0 {
+            return Summary::default();
+        }
+        let mean = self.sum() as f64 / n as f64;
+        let sumsq = f64::from_bits(self.sumsq.load(Relaxed));
+        let var = (sumsq / n as f64 - mean * mean).max(0.0);
+        Summary {
+            count: n as usize,
+            mean: mean * scale,
+            min: self.min() as f64 * scale,
+            max: self.max() as f64 * scale,
+            p50: self.quantile(0.50) * scale,
+            p90: self.quantile(0.90) * scale,
+            p99: self.quantile(0.99) * scale,
+            stddev: var.sqrt() * scale,
+        }
+    }
+}
+
+/// A registered metric handle.
+#[derive(Clone)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+/// Metric registry keyed by flattened series identity. Servers own one
+/// each (not a process global) so concurrently running servers — and the
+/// test binary's parallel tests — never share series.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Entry>>,
+}
+
+/// Prometheus series identity: `name{k="v",…}` with labels as given
+/// (callers pass them sorted), or the bare name without labels.
+pub fn series_key(name: &str, labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut s = String::from(name);
+    s.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        s.push_str(v);
+        s.push('"');
+    }
+    s.push('}');
+    s
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let mut labels: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        labels.sort();
+        let key = series_key(name, &labels);
+        let mut g = self.inner.lock().unwrap();
+        g.entry(key)
+            .or_insert_with(|| Entry { name: name.to_string(), labels, metric: make() })
+            .metric
+            .clone()
+    }
+
+    /// Counter handle for `name{labels}`, created on first use.
+    /// Panics if the series exists with a different type.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.get_or_insert(name, labels, || Metric::Counter(Arc::new(Counter::default()))) {
+            Metric::Counter(c) => c,
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Gauge handle for `name{labels}`, created on first use.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.get_or_insert(name, labels, || Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => g,
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Histogram handle for `name{labels}`, created on first use.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        match self.get_or_insert(name, labels, || Metric::Histogram(Arc::new(Histogram::new()))) {
+            Metric::Histogram(h) => h,
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// All `(labels, handle)` pairs of one histogram family, sorted by
+    /// series identity (per-model stat rollups walk this).
+    pub fn histograms_named(&self, name: &str) -> Vec<(Vec<(String, String)>, Arc<Histogram>)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|e| e.name == name)
+            .filter_map(|e| match &e.metric {
+                Metric::Histogram(h) => Some((e.labels.clone(), Arc::clone(h))),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Render every registered series in the Prometheus text exposition
+    /// format: one `# TYPE` line per family, histograms as cumulative
+    /// `_bucket{le="…"}` series (only boundaries whose count changed,
+    /// plus `+Inf`), `_sum`, and `_count`.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let g = self.inner.lock().unwrap();
+        // Sort by (family, labels), NOT raw key: `{` collates after
+        // letters, so `foo_bar` would otherwise interleave into the
+        // `foo{…}` family and split its `# TYPE` group.
+        let mut entries: Vec<&Entry> = g.values().collect();
+        entries.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+        let mut out = String::new();
+        let mut last: Option<&str> = None;
+        for e in entries {
+            if last != Some(e.name.as_str()) {
+                let ty = match &e.metric {
+                    Metric::Counter(_) => "counter",
+                    Metric::Gauge(_) => "gauge",
+                    Metric::Histogram(_) => "histogram",
+                };
+                let _ = writeln!(out, "# TYPE {} {}", e.name, ty);
+                last = Some(e.name.as_str());
+            }
+            match &e.metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{} {}", series_key(&e.name, &e.labels), c.get());
+                }
+                Metric::Gauge(gv) => {
+                    let _ = writeln!(out, "{} {}", series_key(&e.name, &e.labels), gv.get());
+                }
+                Metric::Histogram(h) => {
+                    let count = h.count();
+                    let mut cum = 0u64;
+                    for i in 0..HIST_BUCKETS - 1 {
+                        let c = h.bucket_count(i);
+                        cum += c;
+                        if c == 0 {
+                            continue;
+                        }
+                        let mut ls = e.labels.clone();
+                        ls.push(("le".into(), Histogram::bucket_upper(i).to_string()));
+                        let _ = writeln!(
+                            out,
+                            "{} {}",
+                            series_key(&format!("{}_bucket", e.name), &ls),
+                            cum
+                        );
+                    }
+                    let mut ls = e.labels.clone();
+                    ls.push(("le".into(), "+Inf".into()));
+                    let _ = writeln!(
+                        out,
+                        "{} {}",
+                        series_key(&format!("{}_bucket", e.name), &ls),
+                        count
+                    );
+                    let _ = writeln!(
+                        out,
+                        "{} {}",
+                        series_key(&format!("{}_sum", e.name), &e.labels),
+                        h.sum()
+                    );
+                    let _ = writeln!(
+                        out,
+                        "{} {}",
+                        series_key(&format!("{}_count", e.name), &e.labels),
+                        count
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One parsed exposition line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// The value of label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Minimal parser for the text produced by [`Registry::render`]:
+/// `# `-comments are skipped, every other line must be
+/// `name{k="v",…} value` or `name value`. Label values must not contain
+/// spaces, commas, or quotes (our model names never do). This is the
+/// consumer side of the round-trip the CI smoke leg asserts.
+pub fn parse_text(text: &str) -> crate::Result<Vec<Sample>> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let bad = || anyhow::anyhow!("stats line {}: malformed: {line:?}", i + 1);
+        let (series, value) = line.rsplit_once(' ').ok_or_else(bad)?;
+        let value: f64 = value.parse().map_err(|_| bad())?;
+        let (name, labels) = match series.split_once('{') {
+            Some((n, rest)) => {
+                let body = rest.strip_suffix('}').ok_or_else(bad)?;
+                let mut ls = Vec::new();
+                for kv in body.split(',').filter(|s| !s.is_empty()) {
+                    let (k, v) = kv.split_once("=\"").ok_or_else(bad)?;
+                    let v = v.strip_suffix('"').ok_or_else(bad)?;
+                    ls.push((k.to_string(), v.to_string()));
+                }
+                (n.to_string(), ls)
+            }
+            None => (series.to_string(), Vec::new()),
+        };
+        out.push(Sample { name, labels, value });
+    }
+    Ok(out)
+}
+
+/// A histogram family member reassembled from parsed text (the `grim
+/// stats` subcommand prints percentiles from these).
+#[derive(Clone, Debug)]
+pub struct ParsedHist {
+    /// Base family name (without the `_bucket` suffix).
+    pub name: String,
+    /// Series labels, `le` excluded.
+    pub labels: Vec<(String, String)>,
+    pub count: f64,
+    pub sum: f64,
+    /// `(upper_bound, cumulative_count)`, ascending; `+Inf` is
+    /// `f64::INFINITY`.
+    pub buckets: Vec<(f64, f64)>,
+}
+
+impl ParsedHist {
+    /// Nearest-rank quantile over the parsed cumulative buckets,
+    /// interpolated between adjacent bounds (mirrors
+    /// [`Histogram::quantile`] without access to the exact min/max).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count <= 0.0 {
+            return 0.0;
+        }
+        let rank = (q * self.count).ceil().clamp(1.0, self.count);
+        let mut prev_bound = 0.0;
+        for (bound, cum) in &self.buckets {
+            if *cum >= rank {
+                return if bound.is_finite() { *bound } else { prev_bound };
+            }
+            if bound.is_finite() {
+                prev_bound = *bound;
+            }
+        }
+        prev_bound
+    }
+}
+
+/// Group `_bucket`/`_sum`/`_count` samples back into histogram families.
+pub fn fold_histograms(samples: &[Sample]) -> Vec<ParsedHist> {
+    let mut map: BTreeMap<String, ParsedHist> = BTreeMap::new();
+    for s in samples {
+        let (base, is_bucket) = if let Some(b) = s.name.strip_suffix("_bucket") {
+            (b, true)
+        } else if let Some(b) = s.name.strip_suffix("_sum") {
+            (b, false)
+        } else if let Some(b) = s.name.strip_suffix("_count") {
+            (b, false)
+        } else {
+            continue;
+        };
+        let labels: Vec<(String, String)> =
+            s.labels.iter().filter(|(k, _)| k != "le").cloned().collect();
+        let key = series_key(base, &labels);
+        let e = map.entry(key).or_insert_with(|| ParsedHist {
+            name: base.to_string(),
+            labels,
+            count: 0.0,
+            sum: 0.0,
+            buckets: Vec::new(),
+        });
+        if is_bucket {
+            let bound = match s.label("le") {
+                Some("+Inf") => f64::INFINITY,
+                Some(b) => b.parse().unwrap_or(f64::INFINITY),
+                None => continue,
+            };
+            e.buckets.push((bound, s.value));
+        } else if s.name.ends_with("_sum") {
+            e.sum = s.value;
+        } else {
+            e.count = s.value;
+        }
+    }
+    let mut out: Vec<ParsedHist> = map.into_values().collect();
+    for h in &mut out {
+        h.buckets.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        for i in 1..HIST_BUCKETS - 1 {
+            assert_eq!(Histogram::bucket_index(Histogram::bucket_lower(i)), i);
+            assert_eq!(Histogram::bucket_index(Histogram::bucket_upper(i)), i);
+        }
+    }
+
+    #[test]
+    fn exact_fields_and_single_sample_quantiles() {
+        let h = Histogram::new();
+        h.record(750);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum(), 750);
+        assert_eq!(h.min(), 750);
+        assert_eq!(h.max(), 750);
+        // min==max clamp makes a single sample exact at every quantile
+        assert_eq!(h.quantile(0.5), 750.0);
+        assert_eq!(h.quantile(0.99), 750.0);
+    }
+
+    #[test]
+    fn summary_scales_units() {
+        let h = Histogram::new();
+        h.record(1000);
+        h.record(3000);
+        let s = h.summary(1e-3);
+        assert_eq!(s.count, 2);
+        assert!((s.mean - 2.0).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!(s.p50 >= s.min && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn registry_reuses_series_and_renders() {
+        let r = Registry::new();
+        let c1 = r.counter("grim_x_total", &[("model", "a")]);
+        let c2 = r.counter("grim_x_total", &[("model", "a")]);
+        c1.inc();
+        c2.inc();
+        assert_eq!(c1.get(), 2, "same series → same handle");
+        r.histogram("grim_lat_us", &[("model", "a")]).record(100);
+        let text = r.render();
+        assert!(text.contains("# TYPE grim_x_total counter"));
+        assert!(text.contains("grim_x_total{model=\"a\"} 2"));
+        assert!(text.contains("grim_lat_us_bucket{model=\"a\",le=\"+Inf\"} 1"));
+        let parsed = parse_text(&text).unwrap();
+        assert!(parsed.iter().any(|s| s.name == "grim_lat_us_count" && s.value == 1.0));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_text("not a metric line").is_err());
+        assert!(parse_text("name{unterminated 3").is_err());
+    }
+
+    #[test]
+    fn fold_histograms_round_trip_quantile() {
+        let r = Registry::new();
+        let h = r.histogram("grim_q_us", &[]);
+        for v in [10u64, 20, 40, 80, 5000] {
+            h.record(v);
+        }
+        let folded = fold_histograms(&parse_text(&r.render()).unwrap());
+        assert_eq!(folded.len(), 1);
+        assert_eq!(folded[0].count, 5.0);
+        assert_eq!(folded[0].sum, 5150.0);
+        // the parsed-side p50 lands in the same bucket as the live one
+        let live = Histogram::bucket_index(h.quantile(0.5).round() as u64);
+        let parsed = Histogram::bucket_index(folded[0].quantile(0.5).round() as u64);
+        assert_eq!(live, parsed);
+    }
+}

@@ -1,0 +1,51 @@
+//! Process-wide observability: span tracing and a metrics registry.
+//!
+//! * [`trace`] — per-request / per-kernel spans in lock-free per-thread
+//!   ring buffers, exported as Chrome trace-event JSON (Perfetto).
+//! * [`metrics`] — counters, gauges, and log₂-bucketed histograms with a
+//!   Prometheus text exposition surface.
+//!
+//! Both halves are built to cost one relaxed atomic load per
+//! instrumentation site when disabled — see the module docs for the
+//! exact protocols. This module also hosts the threadpool busy-time
+//! accumulator shared by the two halves.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    fold_histograms, parse_text, Counter, Gauge, Histogram, Metric, ParsedHist, Registry, Sample,
+};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+
+/// Gate for per-chunk busy-time accounting in the threadpool. Sticky-on:
+/// flipped by [`trace::enable`] and by engines collecting metrics, never
+/// cleared on the hot path, so the off-path stays one relaxed load.
+static POOL_TIMING: AtomicBool = AtomicBool::new(false);
+
+/// Total nanoseconds threadpool workers spent executing chunks while
+/// [`pool_timing`] was on. Deltas around an engine step attribute pool
+/// busy time to that step (exact when one engine runs at a time;
+/// inflated — never deflated — when engines share the pool
+/// concurrently, which is the honest upper bound for utilisation).
+static POOL_BUSY_NANOS: AtomicU64 = AtomicU64::new(0);
+
+/// One relaxed load; the threadpool checks this once per chunk.
+#[inline]
+pub fn pool_timing() -> bool {
+    POOL_TIMING.load(Relaxed)
+}
+
+pub fn set_pool_timing(on: bool) {
+    POOL_TIMING.store(on, Relaxed);
+}
+
+/// Cumulative worker busy nanoseconds (monotonic while timing is on).
+pub fn pool_busy_nanos() -> u64 {
+    POOL_BUSY_NANOS.load(Relaxed)
+}
+
+pub fn add_pool_busy_nanos(n: u64) {
+    POOL_BUSY_NANOS.fetch_add(n, Relaxed);
+}

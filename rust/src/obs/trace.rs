@@ -1,0 +1,537 @@
+//! Request- and kernel-level span tracing with Chrome trace-event export.
+//!
+//! Spans (queue-wait → batch-form → dispatch → run → per-step kernel →
+//! respond, plus threadpool worker chunks) are recorded into bounded
+//! per-thread ring buffers and exported as Chrome trace-event JSON, which
+//! opens directly in Perfetto (`ui.perfetto.dev`) or `chrome://tracing`.
+//!
+//! ## Cost model
+//!
+//! * **Off (the default):** every span site is guarded by [`active`],
+//!   which is a single `Relaxed` load of [`ENABLED`] (the `&&` with
+//!   [`SAMPLING`] short-circuits, so the second load never happens when
+//!   tracing is off). No allocation, no `Instant::now()`, nothing else.
+//!   `rust/tests/obs.rs` asserts the default-off path records nothing;
+//!   the one-relaxed-load claim is by inspection of [`active`] — the
+//!   entire off-path is `ENABLED.load(Relaxed) == false`.
+//! * **On:** each span is two `Instant::now()` calls plus seven `Relaxed`
+//!   stores into a pre-allocated ring slot (see the seqlock protocol on
+//!   [`Ring`]). Still allocation-free; string data is interned once.
+//!
+//! ## Sampling
+//!
+//! `enable(n)` samples one batch in `n`: the server calls
+//! [`on_batch_start`] per formed batch, which flips the process-wide
+//! [`SAMPLING`] flag for the duration of that batch. Standalone engine
+//! runs (no batcher) never clear the flag, so they are always sampled
+//! when tracing is on.
+
+use crate::util::json::Json;
+use std::cell::OnceCell;
+use std::collections::BTreeSet;
+use std::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Spans per thread-local ring; older spans are overwritten.
+pub const RING_CAP: usize = 4096;
+
+/// Sentinel `seq` marking a slot mid-write.
+const WRITING: u64 = u64::MAX;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SAMPLING: AtomicBool = AtomicBool::new(true);
+static SAMPLE_EVERY: AtomicU64 = AtomicU64::new(1);
+static BATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+/// Interned name of the model the current batch runs (worker-lane label
+/// hint; one writer — the scheduler — so last-write-wins is fine).
+static CURRENT_MODEL: AtomicU32 = AtomicU32::new(0);
+
+/// Common zero point for all span timestamps.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn micros_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+// ---------------------------------------------------------------------------
+// String interning — span payloads are fixed-width integers; names are
+// interned once (one mutex hit per *new* string, never per span).
+// ---------------------------------------------------------------------------
+
+fn interner() -> &'static Mutex<Vec<String>> {
+    static INTERNER: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+    // id 0 is reserved for "no name"
+    INTERNER.get_or_init(|| Mutex::new(vec![String::new()]))
+}
+
+/// Intern `s`, returning a stable id for span payloads.
+pub fn intern(s: &str) -> u32 {
+    let mut g = interner().lock().unwrap();
+    if let Some(i) = g.iter().position(|x| x == s) {
+        return i as u32;
+    }
+    g.push(s.to_string());
+    (g.len() - 1) as u32
+}
+
+fn resolve(id: u32) -> String {
+    let g = interner().lock().unwrap();
+    g.get(id as usize).cloned().unwrap_or_default()
+}
+
+/// Step kind strings in the order used by [`step_kind_id`]; index 0 is
+/// the unknown kind.
+pub const STEP_KINDS: &[&str] = &[
+    "?", "input", "noop", "conv", "dwconv", "fc", "gru", "maxpool", "gap", "relu", "relu6", "add",
+    "flatten", "softmax",
+];
+
+/// Map an executor step-kind string to its index in [`STEP_KINDS`]
+/// (no interner traffic on the step hot path).
+pub fn step_kind_id(kind: &str) -> u32 {
+    STEP_KINDS.iter().position(|k| *k == kind).unwrap_or(0) as u32
+}
+
+// ---------------------------------------------------------------------------
+// Span model
+// ---------------------------------------------------------------------------
+
+/// What a span measures; encoded into the slot's `kd` word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Request sat in the queue (enqueue → batch formed). `a` = request id.
+    Queue = 0,
+    /// Batch formation window. `a` = batch size.
+    BatchForm = 1,
+    /// Scheduler dispatched the request into an engine. `a` = request id.
+    Dispatch = 2,
+    /// One full engine run. `a` = request id (0 standalone).
+    Run = 3,
+    /// One executor step. `detail` = [`STEP_KINDS`] index, `a` = node id.
+    Step = 4,
+    /// One threadpool worker chunk. `detail` = worker index, `a` = items.
+    Worker = 5,
+    /// Response send back to the caller. `a` = request id.
+    Respond = 6,
+}
+
+impl SpanKind {
+    fn from_u32(v: u32) -> SpanKind {
+        match v {
+            0 => SpanKind::Queue,
+            1 => SpanKind::BatchForm,
+            2 => SpanKind::Dispatch,
+            3 => SpanKind::Run,
+            4 => SpanKind::Step,
+            5 => SpanKind::Worker,
+            _ => SpanKind::Respond,
+        }
+    }
+
+    /// Chrome trace `cat` field.
+    fn category(self) -> &'static str {
+        match self {
+            SpanKind::Queue | SpanKind::BatchForm | SpanKind::Dispatch | SpanKind::Respond => {
+                "request"
+            }
+            SpanKind::Run | SpanKind::Step => "kernel",
+            SpanKind::Worker => "worker",
+        }
+    }
+}
+
+/// A decoded span, as returned by [`snapshot`].
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// µs since the trace epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Kind-specific discriminator (step kind, worker index).
+    pub detail: u32,
+    /// Interned model-name id (0 = unknown).
+    pub model: u32,
+    /// Kind-specific payload (request id, node id, items).
+    pub a: u64,
+    /// Ring index the span was read from (one ring per thread).
+    pub tid: usize,
+}
+
+impl Span {
+    /// Chrome trace `name` field.
+    pub fn name(&self) -> String {
+        match self.kind {
+            SpanKind::Queue => "queue-wait".into(),
+            SpanKind::BatchForm => "batch-form".into(),
+            SpanKind::Dispatch => "dispatch".into(),
+            SpanKind::Run => "run".into(),
+            SpanKind::Step => {
+                STEP_KINDS.get(self.detail as usize).copied().unwrap_or("?").to_string()
+            }
+            SpanKind::Worker => "chunk".into(),
+            SpanKind::Respond => "respond".into(),
+        }
+    }
+
+    pub fn model_name(&self) -> String {
+        resolve(self.model)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread seqlock rings
+// ---------------------------------------------------------------------------
+
+/// One slot: all fields atomic so concurrent snapshot reads are defined
+/// behaviour. `seq` holds `generation + 1` when the slot is committed,
+/// [`WRITING`] mid-write.
+struct Slot {
+    seq: AtomicU64,
+    ts: AtomicU64,
+    dur: AtomicU64,
+    /// `(kind as u64) << 32 | detail`.
+    kd: AtomicU64,
+    model: AtomicU64,
+    a: AtomicU64,
+}
+
+/// Bounded single-writer ring. The owning thread writes under a seqlock
+/// per slot; [`snapshot`] readers on other threads drop torn slots
+/// instead of blocking the writer:
+///
+/// * writer: `seq ← WRITING` (Relaxed), `fence(Release)`, payload stores
+///   (Relaxed), `seq ← gen+1` (Release), `head ← gen+1` (Release);
+/// * reader: `head` (Acquire), then per generation `g`: `s1 = seq`
+///   (Acquire) — skip unless `s1 == g+1`; payload loads (Relaxed);
+///   `fence(Acquire)`; re-check `seq == g+1` (Relaxed) — skip if the
+///   writer lapped us mid-read.
+struct Ring {
+    /// Count of committed spans (monotonic; slot = gen % RING_CAP).
+    head: AtomicU64,
+    slots: Vec<Slot>,
+    /// OS thread name at registration (becomes the Chrome lane name).
+    thread_name: String,
+}
+
+impl Ring {
+    fn new(thread_name: String) -> Ring {
+        Ring {
+            head: AtomicU64::new(0),
+            slots: (0..RING_CAP)
+                .map(|_| Slot {
+                    seq: AtomicU64::new(0),
+                    ts: AtomicU64::new(0),
+                    dur: AtomicU64::new(0),
+                    kd: AtomicU64::new(0),
+                    model: AtomicU64::new(0),
+                    a: AtomicU64::new(0),
+                })
+                .collect(),
+            thread_name,
+        }
+    }
+
+    /// Owner thread only.
+    fn push(&self, ts: u64, dur: u64, kind: SpanKind, detail: u32, model: u32, a: u64) {
+        let gen = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(gen % RING_CAP as u64) as usize];
+        slot.seq.store(WRITING, Ordering::Relaxed);
+        fence(Ordering::Release);
+        slot.ts.store(ts, Ordering::Relaxed);
+        slot.dur.store(dur, Ordering::Relaxed);
+        slot.kd.store((kind as u64) << 32 | detail as u64, Ordering::Relaxed);
+        slot.model.store(model as u64, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.seq.store(gen + 1, Ordering::Release);
+        self.head.store(gen + 1, Ordering::Release);
+    }
+
+    /// Any thread; returns committed, un-torn spans (oldest first).
+    fn read(&self, tid: usize, out: &mut Vec<Span>) {
+        let head = self.head.load(Ordering::Acquire);
+        let first = head.saturating_sub(RING_CAP as u64);
+        for gen in first..head {
+            let slot = &self.slots[(gen % RING_CAP as u64) as usize];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 != gen + 1 {
+                continue; // overwritten or mid-write
+            }
+            let ts = slot.ts.load(Ordering::Relaxed);
+            let dur = slot.dur.load(Ordering::Relaxed);
+            let kd = slot.kd.load(Ordering::Relaxed);
+            let model = slot.model.load(Ordering::Relaxed);
+            let a = slot.a.load(Ordering::Relaxed);
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != gen + 1 {
+                continue; // torn: writer lapped us mid-read
+            }
+            out.push(Span {
+                kind: SpanKind::from_u32((kd >> 32) as u32),
+                start_us: ts,
+                dur_us: dur,
+                detail: kd as u32,
+                model: model as u32,
+                a,
+                tid,
+            });
+        }
+    }
+}
+
+fn ring_registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_RING: OnceCell<(usize, Arc<Ring>)> = const { OnceCell::new() };
+}
+
+fn with_local_ring(f: impl FnOnce(&Ring)) {
+    LOCAL_RING.with(|cell| {
+        let (_, ring) = cell.get_or_init(|| {
+            let name = std::thread::current().name().unwrap_or("thread").to_string();
+            let ring = Arc::new(Ring::new(name));
+            let mut g = ring_registry().lock().unwrap();
+            g.push(Arc::clone(&ring));
+            (g.len() - 1, ring)
+        });
+        f(ring);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Public control surface
+// ---------------------------------------------------------------------------
+
+/// Is tracing enabled at all? One `Relaxed` load.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Should the current work be recorded? When tracing is off this is a
+/// single `Relaxed` load (the `&&` short-circuits before touching
+/// `SAMPLING`) — the entire off-path cost at every span site.
+#[inline]
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed) && SAMPLING.load(Ordering::Relaxed)
+}
+
+/// Timestamp the start of a would-be span: `None` (and no clock read)
+/// when tracing is off or this batch is not sampled.
+#[inline]
+pub fn begin() -> Option<Instant> {
+    if active() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Turn tracing on, sampling one batch in `every` (0 is treated as 1).
+/// Also enables threadpool busy-time accounting (worker lanes need it).
+pub fn enable(every: u64) {
+    epoch(); // pin the zero point before any span
+    SAMPLE_EVERY.store(every.max(1), Ordering::Relaxed);
+    SAMPLING.store(true, Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Relaxed);
+    super::set_pool_timing(true);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Honour `GRIM_TRACE` (any non-`0` value enables tracing; a numeric
+/// value > 1 is the sampling period). Called from `Runtime::new` and the
+/// engine constructor so any entry point picks the env var up.
+pub fn init_from_env() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        if let Ok(v) = std::env::var("GRIM_TRACE") {
+            if !v.is_empty() && v != "0" {
+                enable(v.parse().unwrap_or(1));
+            }
+        }
+    });
+}
+
+/// Per-batch sampling hook: batch `seq` is sampled iff
+/// `seq % every == 0`. Returns whether the batch is sampled. No-op
+/// (one relaxed load) when tracing is off.
+pub fn on_batch_start() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let every = SAMPLE_EVERY.load(Ordering::Relaxed);
+    let seq = BATCH_SEQ.fetch_add(1, Ordering::Relaxed);
+    let sampled = seq % every == 0;
+    SAMPLING.store(sampled, Ordering::Relaxed);
+    sampled
+}
+
+/// Label hint for worker-lane spans: the interned name of the model the
+/// current batch runs.
+pub fn set_current_model(id: u32) {
+    CURRENT_MODEL.store(id, Ordering::Relaxed);
+}
+
+pub fn current_model() -> u32 {
+    CURRENT_MODEL.load(Ordering::Relaxed)
+}
+
+/// Record a completed span into the calling thread's ring. Callers guard
+/// with [`begin`]/[`active`]; recording itself is allocation-free after
+/// the thread's first span.
+pub fn record_span(
+    kind: SpanKind,
+    start: Instant,
+    end: Instant,
+    detail: u32,
+    model: u32,
+    a: u64,
+) {
+    let ts = micros_since_epoch(start);
+    let dur = end.saturating_duration_since(start).as_micros() as u64;
+    with_local_ring(|ring| ring.push(ts, dur, kind, detail, model, a));
+}
+
+/// Decode every committed span across all thread rings (oldest first per
+/// ring). Torn slots are dropped, not blocked on.
+pub fn snapshot() -> Vec<Span> {
+    let rings: Vec<Arc<Ring>> = ring_registry().lock().unwrap().clone();
+    let mut out = Vec::new();
+    for (tid, ring) in rings.iter().enumerate() {
+        ring.read(tid, &mut out);
+    }
+    out
+}
+
+/// `(ring index, thread name)` for every registered thread.
+pub fn threads() -> Vec<(usize, String)> {
+    ring_registry()
+        .lock()
+        .unwrap()
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (i, r.thread_name.clone()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+/// Serialize all recorded spans as a Chrome trace-event JSON document
+/// (open in Perfetto or `chrome://tracing`). One `pid` (1), one `tid`
+/// per ring, `thread_name` metadata per lane, `"X"` complete events.
+pub fn export_chrome() -> String {
+    let spans = snapshot();
+    let mut events = Vec::new();
+    for (tid, name) in threads() {
+        let mut args = Json::obj();
+        args.set("name", Json::Str(name));
+        let mut m = Json::obj();
+        m.set("ph", Json::Str("M".into()))
+            .set("name", Json::Str("thread_name".into()))
+            .set("pid", Json::Num(1.0))
+            .set("tid", Json::Num(tid as f64))
+            .set("args", args);
+        events.push(m);
+    }
+    for s in &spans {
+        let mut args = Json::obj();
+        let model = s.model_name();
+        if !model.is_empty() {
+            args.set("model", Json::Str(model));
+        }
+        match s.kind {
+            SpanKind::Queue | SpanKind::Dispatch | SpanKind::Respond | SpanKind::Run => {
+                args.set("request", Json::Num(s.a as f64));
+            }
+            SpanKind::BatchForm => {
+                args.set("batch_size", Json::Num(s.a as f64));
+            }
+            SpanKind::Step => {
+                args.set("node", Json::Num(s.a as f64));
+            }
+            SpanKind::Worker => {
+                args.set("items", Json::Num(s.a as f64));
+                args.set("worker", Json::Num(s.detail as f64));
+            }
+        }
+        let mut e = Json::obj();
+        e.set("name", Json::Str(s.name()))
+            .set("cat", Json::Str(s.kind.category().into()))
+            .set("ph", Json::Str("X".into()))
+            .set("ts", Json::Num(s.start_us as f64))
+            .set("dur", Json::Num(s.dur_us.max(1) as f64))
+            .set("pid", Json::Num(1.0))
+            .set("tid", Json::Num(s.tid as f64))
+            .set("args", args);
+        events.push(e);
+    }
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", Json::Str("ms".into()));
+    doc.to_string()
+}
+
+/// What [`validate_chrome`] found in a trace document.
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    /// Total `"X"` duration events.
+    pub events: usize,
+    /// Distinct `args.model` values seen.
+    pub models: BTreeSet<String>,
+    /// Distinct event names seen.
+    pub names: BTreeSet<String>,
+    /// Distinct categories seen.
+    pub cats: BTreeSet<String>,
+}
+
+/// Parse and structurally validate a Chrome trace-event document:
+/// `traceEvents` must be an array; every `"X"` event needs string
+/// `name`/`cat` and numeric `ts`/`dur`/`pid`/`tid`. Used both by the
+/// CLI after writing `--trace` output and by the test suite.
+pub fn validate_chrome(text: &str) -> crate::Result<TraceSummary> {
+    let doc = crate::util::json::parse(text)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("trace: missing traceEvents array"))?;
+    let mut summary = TraceSummary::default();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| anyhow::anyhow!("trace event {i}: missing ph"))?;
+        if ph != "X" {
+            continue;
+        }
+        let name = e
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow::anyhow!("trace event {i}: missing name"))?;
+        let cat = e
+            .get("cat")
+            .and_then(|c| c.as_str())
+            .ok_or_else(|| anyhow::anyhow!("trace event {i}: missing cat"))?;
+        for field in ["ts", "dur", "pid", "tid"] {
+            e.get(field)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("trace event {i}: missing numeric {field}"))?;
+        }
+        if let Some(m) = e.get("args").and_then(|a| a.get("model")).and_then(|m| m.as_str()) {
+            summary.models.insert(m.to_string());
+        }
+        summary.names.insert(name.to_string());
+        summary.cats.insert(cat.to_string());
+        summary.events += 1;
+    }
+    Ok(summary)
+}

@@ -136,6 +136,12 @@ impl ModelRegistry {
     /// budget. Returns the shared engine handle.
     pub fn insert_engine(&self, name: impl Into<String>, engine: Engine) -> Arc<Engine> {
         let name = name.into();
+        // Served engines always collect per-layer metrics: the server's
+        // per-kernel-kind step histograms feed from `run_with_metrics`,
+        // and the per-step overhead (one Instant + two atomic reads per
+        // layer) is noise next to the kernels themselves.
+        let mut engine = engine;
+        engine.collect_metrics = true;
         // The one-pool invariant is structural: a registry engine MUST
         // dispatch on the registry's runtime, or the process grows extra
         // worker pools and quota rebalances would steer a pool the
@@ -390,6 +396,74 @@ impl ModelRegistry {
         v
     }
 
+    /// Append the registry's gauges and counters in Prometheus text
+    /// format: one `grim_model_*` row per resident model (labelled
+    /// `{model="..."}`), plus registry-level residency/budget/eviction
+    /// totals. Families are grouped under one `# TYPE` line each, as the
+    /// exposition format requires.
+    pub fn render_prometheus_into(&self, out: &mut String) {
+        use std::fmt::Write;
+        let stats = self.stats();
+        let mut family = |name: &str,
+                          kind: &str,
+                          rows: Vec<(String, String)>| {
+            if rows.is_empty() {
+                return;
+            }
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            for (model, value) in rows {
+                let _ = writeln!(out, "{name}{{model=\"{model}\"}} {value}");
+            }
+        };
+        family(
+            "grim_model_resident_bytes",
+            "gauge",
+            stats.iter().map(|m| (m.name.clone(), m.resident_bytes.to_string())).collect(),
+        );
+        family(
+            "grim_model_arena_bytes",
+            "gauge",
+            stats.iter().map(|m| (m.name.clone(), m.pool.arena_bytes.to_string())).collect(),
+        );
+        family(
+            "grim_model_arenas",
+            "gauge",
+            stats.iter().map(|m| (m.name.clone(), m.pool.arenas_created.to_string())).collect(),
+        );
+        family(
+            "grim_model_checkouts_total",
+            "counter",
+            stats.iter().map(|m| (m.name.clone(), m.pool.checkouts.to_string())).collect(),
+        );
+        family(
+            "grim_model_quota_buckets",
+            "gauge",
+            stats
+                .iter()
+                .filter_map(|m| m.quota.map(|q| (m.name.clone(), q.to_string())))
+                .collect(),
+        );
+        family(
+            "grim_model_not_resident_total",
+            "counter",
+            stats
+                .iter()
+                .filter(|m| m.not_resident > 0)
+                .map(|m| (m.name.clone(), m.not_resident.to_string()))
+                .collect(),
+        );
+        let _ = writeln!(out, "# TYPE grim_registry_resident_bytes gauge");
+        let _ = writeln!(out, "grim_registry_resident_bytes {}", self.resident_bytes());
+        if let Some(b) = self.budget_bytes() {
+            let _ = writeln!(out, "# TYPE grim_registry_budget_bytes gauge");
+            let _ = writeln!(out, "grim_registry_budget_bytes {b}");
+        }
+        let _ = writeln!(out, "# TYPE grim_registry_evictions_total counter");
+        let _ = writeln!(out, "grim_registry_evictions_total {}", self.evictions());
+        let _ = writeln!(out, "# TYPE grim_runtime_threads gauge");
+        let _ = writeln!(out, "grim_runtime_threads {}", self.runtime.threads());
+    }
+
     /// Evict least-recently-used models (never `keep`) until the total
     /// fits the budget. Removed entries are pushed to `dropped` so the
     /// caller can tear them down outside the registry lock.
@@ -544,6 +618,29 @@ mod tests {
         reg.note_miss("m");
         assert_eq!(reg.not_resident("m"), 2);
         assert_eq!(reg.policy_for("m").map(|p| p.max_batch), Some(1));
+    }
+
+    /// The Prometheus rendering covers every resident model and parses
+    /// back with the crate's own minimal parser.
+    #[test]
+    fn prometheus_rows_cover_resident_models() {
+        let reg = ModelRegistry::new(1);
+        reg.insert_plan("m", plan_for(ModelKind::Gru, 70));
+        let e = reg.get("m").unwrap();
+        let mut rng = Rng::new(6);
+        e.run(&input_for(&e, &mut rng)).unwrap();
+        let mut out = String::new();
+        reg.render_prometheus_into(&mut out);
+        assert!(out.contains("grim_model_resident_bytes{model=\"m\"}"));
+        let samples = crate::obs::parse_text(&out).unwrap();
+        let threads = samples.iter().find(|s| s.name == "grim_runtime_threads").unwrap();
+        assert_eq!(threads.value, 1.0);
+        let checkouts = samples
+            .iter()
+            .find(|s| s.name == "grim_model_checkouts_total")
+            .unwrap();
+        assert_eq!(checkouts.label("model"), Some("m"));
+        assert!(checkouts.value >= 1.0);
     }
 
     #[test]

@@ -144,7 +144,7 @@ impl ThreadPool {
             let done = done_tx.clone();
             self.senders[(start + w) % self.size]
                 .send(Msg::Run(Box::new(move |scratch| {
-                    f(scratch, w, lo, hi);
+                    run_instrumented(w, (hi - lo) as u64, || f(scratch, w, lo, hi));
                     // Drop our Arc clone BEFORE signalling completion so the
                     // caller can unwrap shared state as soon as recv returns.
                     drop(f);
@@ -175,12 +175,18 @@ impl ThreadPool {
             let done = done_tx.clone();
             self.senders[w]
                 .send(Msg::Run(Box::new(move |_scratch| {
+                    let t0 = crate::obs::pool_timing().then(std::time::Instant::now);
+                    let mut items = 0u64;
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
                         f(w, i);
+                        items += 1;
+                    }
+                    if let Some(t0) = t0 {
+                        finish_chunk(t0, w, items);
                     }
                     drop(f); // see run_partitioned: release before signalling
                     let _ = done.send(());
@@ -213,6 +219,33 @@ impl ThreadPool {
         for _ in 0..count {
             done_rx.recv().expect("worker completed");
         }
+    }
+}
+
+/// Wrap one worker chunk with busy-time accounting and (when sampled) a
+/// worker-lane trace span. Off-path cost: one relaxed atomic load.
+fn run_instrumented(w: usize, items: u64, f: impl FnOnce()) {
+    if crate::obs::pool_timing() {
+        let t0 = std::time::Instant::now();
+        f();
+        finish_chunk(t0, w, items);
+    } else {
+        f();
+    }
+}
+
+fn finish_chunk(t0: std::time::Instant, w: usize, items: u64) {
+    let end = std::time::Instant::now();
+    crate::obs::add_pool_busy_nanos(end.duration_since(t0).as_nanos() as u64);
+    if crate::obs::trace::active() {
+        crate::obs::trace::record_span(
+            crate::obs::trace::SpanKind::Worker,
+            t0,
+            end,
+            w as u32,
+            crate::obs::trace::current_model(),
+            items,
+        );
     }
 }
 

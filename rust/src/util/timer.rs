@@ -16,6 +16,11 @@ impl Timer {
         self.start.elapsed()
     }
 
+    /// The instant the stopwatch was started (span-start for tracing).
+    pub fn started_at(&self) -> Instant {
+        self.start
+    }
+
     pub fn elapsed_ms(&self) -> f64 {
         self.start.elapsed().as_secs_f64() * 1e3
     }

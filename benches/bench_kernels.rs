@@ -1,5 +1,6 @@
 //! Micro-kernel + fusion benchmark: scalar vs dispatched-SIMD GFLOP/s for
-//! the axpy/dot primitives, and fused vs unfused GEMM+Bias+ReLU latency.
+//! the axpy/dot primitives, fused vs unfused GEMM+Bias+ReLU latency, and
+//! register-tiled vs axpy GFLOP/s on packed layouts per ISA table.
 //!
 //! Emits `BENCH_kernels.json` in the working directory (one stable,
 //! machine-diffable artifact tracked across PRs) in addition to the usual
@@ -10,7 +11,7 @@ use grim::bench::Report;
 use grim::conv::ops;
 use grim::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
 use grim::gemm::pack::{pack_bcrc, CacheParams, PackOverrides};
-use grim::gemm::simd::{self, Microkernels};
+use grim::gemm::simd::{self, HwConfig, Microkernels};
 use grim::gemm::tiled::{tiled_gemm_into, tiled_gemm_into_ep, TileParams};
 use grim::gemm::Epilogue;
 use grim::sparse::{Bcrc, BcrConfig, BcrMask};
@@ -215,7 +216,7 @@ fn main() -> anyhow::Result<()> {
             &enc,
             params,
             n,
-            CacheParams::default(),
+            HwConfig::for_kernels(mk, CacheParams::default()),
             PackOverrides::default(),
         ));
         // The parallel schedule now lives beside the layout (the plan's
@@ -264,6 +265,66 @@ fn main() -> anyhow::Result<()> {
         packing_rows.push(o);
     }
 
+    // Register-tiled vs axpy kernel shape on packed layouts: same
+    // matrix, same params, same epilogue — the variant layout's
+    // oversized mr (> every tile's max_mr) makes dispatch take the
+    // axpy-through-memory fallback, the same code path
+    // `GRIM_FORCE_AXPY=1` forces process-wide (the env latch is a
+    // OnceLock, so an in-process A/B has to go through the guard).
+    // Reported per runtime-available ISA table: the dispatched vtable
+    // and the scalar row.
+    let mut regtile_rows = Vec::new();
+    for &(name, m, k, n) in
+        &[("conv-ish", 128usize, 256usize, 196usize), ("wide", 256, 512, 64), ("tail", 96, 192, 17)]
+    {
+        let mut rng = Rng::new(51);
+        let mask = BcrMask::random(m, k, BcrConfig::from_block_size(m, k, 4, 16), 6.0, &mut rng);
+        let mut w = Tensor::rand_uniform(&[m, k], 0.4, &mut rng);
+        mask.apply(&mut w);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let params = GemmParams::default();
+        let hw = HwConfig::for_kernels(mk, CacheParams::default());
+        let tile_layout = Arc::new(pack_bcrc(&enc, params, n, hw, PackOverrides::default()));
+        let axpy_layout =
+            Arc::new(pack_bcrc(&enc, params, n, hw, PackOverrides { kc: 0, mc: 0, mr: 16 }));
+        let tiled = BcrcGemm::new(enc.clone(), params).with_packed(Arc::clone(&tile_layout));
+        let axpy = BcrcGemm::new(enc.clone(), params).with_packed(Arc::clone(&axpy_layout));
+        let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
+        let bias: Vec<f32> = (0..m).map(|i| 0.01 * i as f32 - 0.5).collect();
+        let flops = 2.0 * enc.nnz() as f64 * n as f64;
+        let mut out = vec![0.0f32; m * n];
+        let mut gather = vec![0.0f32; enc.max_group_cols()];
+        for table in [mk, sc] {
+            let t_axpy = time_median_ms(iters, 2, || {
+                axpy.execute_into_ep(
+                    x.data(), n, &mut out, &mut gather, table, Epilogue::BiasRelu(&bias),
+                );
+                std::hint::black_box(&mut out);
+            });
+            let t_tile = time_median_ms(iters, 2, || {
+                tiled.execute_into_ep(
+                    x.data(), n, &mut out, &mut gather, table, Epilogue::BiasRelu(&bias),
+                );
+                std::hint::black_box(&mut out);
+            });
+            rep.row(vec![
+                "regtile vs axpy".into(),
+                format!("{name} [{m}x{k}]xN{n} ({})", table.name),
+                format!("{:.2} GF/s", gflops(flops, t_axpy)),
+                format!("{:.2} GF/s", gflops(flops, t_tile)),
+                format!("{:.2}x", t_axpy / t_tile),
+            ]);
+            let mut o = Json::obj();
+            o.set("shape", Json::Str(format!("{m}x{k}xN{n}")))
+                .set("isa", Json::Str(table.isa.name().into()))
+                .set("tile", Json::Str(table.tile.name.into()))
+                .set("axpy_gflops", Json::Num(round2(gflops(flops, t_axpy))))
+                .set("regtile_gflops", Json::Num(round2(gflops(flops, t_tile))))
+                .set("speedup", Json::Num(round2(t_axpy / t_tile)));
+            regtile_rows.push(o);
+        }
+    }
+
     // Thread-imbalance stats on a sparsity-skewed fixture: nnz per
     // thread under the even row split vs the LPT partition.
     let partition_stats = {
@@ -284,7 +345,7 @@ fn main() -> anyhow::Result<()> {
             &enc,
             GemmParams::default(),
             64,
-            CacheParams::default(),
+            HwConfig::for_kernels(mk, CacheParams::default()),
             PackOverrides::default(),
         );
         let lpt = packed_layout.lpt_partition(threads);
@@ -376,6 +437,7 @@ fn main() -> anyhow::Result<()> {
         .set("microkernels", Json::Arr(kernels))
         .set("fusion", Json::Arr(fused_rows))
         .set("packing", Json::Arr(packing_rows))
+        .set("regtile", Json::Arr(regtile_rows))
         .set("partition", partition_stats)
         .set("tracing", tracing_stats);
     std::fs::write("BENCH_kernels.json", doc.to_pretty())?;

@@ -4,7 +4,8 @@
 //! [`AlignedBuf`]s in their packed order; nothing is re-encoded or
 //! re-packed (asserted by [`super::from_bytes`] via the pack counter).
 //!
-//! Reads **v2** (schedules in their own plan-level block) and the
+//! Reads **v3** (mixed-width column indices + hardware-matrix stats),
+//! **v2** (schedules in their own plan-level block) and the
 //! legacy **v1** (partitions embedded in `PackedBcrc` / CSR kernels).
 //! The v1 path hoists every embedded partition into a synthesized
 //! [`ScheduleSet`] as it decodes, so old artifacts run unchanged on the
@@ -20,6 +21,7 @@ use crate::compiler::PackingStats;
 use crate::conv::ConvGeom;
 use crate::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
 use crate::gemm::pack::PackedDense;
+use crate::gemm::simd::Isa;
 use crate::gemm::tiled::TileParams;
 use crate::memory::aligned::AlignedBuf;
 use crate::memory::liveness::{BufferKind, PlannedBuffer};
@@ -37,7 +39,7 @@ struct Reader<'a> {
     /// alignment-checked against `file` before decoding starts.
     sections: Vec<(usize, usize)>,
     file: &'a [u8],
-    /// Format version from the header (1 or 2).
+    /// Format version from the header (1..=3).
     version: u32,
     /// v1 compat: partitions hoisted out of their legacy in-kernel
     /// positions while kernels decode; becomes the plan's
@@ -259,6 +261,18 @@ fn get_packed_bcrc(
     let idx = match r.u8()? {
         0 => ColIndex::U16(r.u16s()?),
         1 => ColIndex::U32(r.u32s()?),
+        // v3 per-group mixed widths: u16 delta pool, u32 pool, and one
+        // flag per group saying which pool its `col_off` indexes.
+        2 => {
+            let narrow = r.u16s()?;
+            let wide = r.u32s()?;
+            let nf = r.len32()?;
+            let mut wide_groups = Vec::with_capacity(nf);
+            for _ in 0..nf {
+                wide_groups.push(r.flag()?);
+            }
+            ColIndex::Mixed { narrow, wide, wide_groups }
+        }
         other => anyhow::bail!("invalid column-index tag {other}"),
     };
     let values = r.section_aligned()?;
@@ -275,15 +289,27 @@ fn get_packed_bcrc(
     anyhow::ensure!(ng == enc.num_groups(), "packed group count disagrees with encoding");
     anyhow::ensure!(max_width == enc.max_group_cols(), "packed max_width disagrees");
     anyhow::ensure!(nnz == enc.nnz(), "packed nnz disagrees with encoding");
-    let idx_len = match &idx {
+    if let ColIndex::Mixed { wide_groups, .. } = &idx {
+        anyhow::ensure!(wide_groups.len() == ng, "mixed-width flags ({}) != groups ({ng})", wide_groups.len());
+    }
+    // Mixed layouts have one `col_off` namespace per pool, so the index
+    // bound is per group.
+    let group_idx_len = |gi: usize| match &idx {
         ColIndex::U16(d) => d.len(),
         ColIndex::U32(c) => c.len(),
+        ColIndex::Mixed { narrow, wide, wide_groups } => {
+            if wide_groups[gi] {
+                wide.len()
+            } else {
+                narrow.len()
+            }
+        }
     };
     for (gi, g) in groups.iter().enumerate() {
         anyhow::ensure!(g.rows_lo <= g.rows_hi && g.rows_hi as usize <= rows, "group {gi} rows");
         anyhow::ensure!(g.val_off % 16 == 0, "group {gi} value block unaligned");
         anyhow::ensure!(
-            g.col_off as usize + g.width as usize <= idx_len,
+            g.col_off as usize + g.width as usize <= group_idx_len(gi),
             "group {gi} indices out of range"
         );
         // u128 so a crafted val_off cannot wrap the bound in release.
@@ -1008,10 +1034,11 @@ fn validate_plan_consistency(plan: &ExecutionPlan) -> anyhow::Result<()> {
             "output buffer dies before extraction"
         );
     }
-    // Value-buffer sharing is legal only for the view-aliasing the
-    // executor actually skips the copy for: a `Flatten` whose input owns
-    // the same buffer. Any other sharing would let one step clobber
-    // another's live output.
+    // Value-buffer sharing is legal only for the in-place elisions the
+    // executor actually implements: a `Flatten` (copy skipped) or a
+    // standalone `Relu`/`Relu6` (activation applied over the producer's
+    // bytes) whose input owns the same buffer. Any other sharing would
+    // let one step clobber another's live output.
     let mut owner: Vec<Option<usize>> = vec![None; mem.buffers.len()];
     for (id, step) in &plan.steps {
         let id = *id;
@@ -1022,7 +1049,7 @@ fn validate_plan_consistency(plan: &ExecutionPlan) -> anyhow::Result<()> {
             match owner[b] {
                 None => owner[b] = Some(id),
                 Some(_) => {
-                    let aliases_input = matches!(step, Step::Flatten)
+                    let aliases_input = matches!(step, Step::Flatten | Step::Relu | Step::Relu6)
                         && mem.value_of[plan.inputs[id][0]] == Some(b);
                     anyhow::ensure!(
                         aliases_input,
@@ -1030,6 +1057,37 @@ fn validate_plan_consistency(plan: &ExecutionPlan) -> anyhow::Result<()> {
                     );
                 }
             }
+        }
+    }
+    // Unlike a Flatten (pure view), an aliased activation *overwrites*
+    // the shared bytes, so it must be the final reader of every earlier
+    // value on its buffer — a crafted artifact aliasing a ReLU over a
+    // value some later step (or output extraction) still reads would
+    // silently corrupt that reader.
+    let mut last_read = vec![0usize; n];
+    for (id, step) in &plan.steps {
+        if matches!(step, Step::Noop | Step::Input) {
+            continue;
+        }
+        for &src in &plan.inputs[*id] {
+            last_read[src] = last_read[src].max(*id);
+        }
+    }
+    last_read[plan.output_id] = last_read[plan.output_id].max(n);
+    for (id, step) in &plan.steps {
+        let id = *id;
+        if !matches!(step, Step::Relu | Step::Relu6) {
+            continue;
+        }
+        let b = mem.value_of[id];
+        if b.is_none() || mem.value_of[plan.inputs[id][0]] != b {
+            continue;
+        }
+        for v in 0..id {
+            anyhow::ensure!(
+                mem.value_of[v] != b || last_read[v] <= id,
+                "node {id}: in-place activation clobbers node {v}'s still-live value"
+            );
         }
     }
     Ok(())
@@ -1063,14 +1121,26 @@ fn decode_plan(r: &mut Reader) -> anyhow::Result<ExecutionPlan> {
         inputs.push(ins);
     }
     let memory = get_memory(r, n)?;
-    let packing = PackingStats {
+    let mut packing = PackingStats {
         enabled: r.flag()?,
         bcrc_layers: r.usize32()?,
         dense_layers: r.usize32()?,
         csr_layers: r.usize32()?,
         u16_layers: r.usize32()?,
         packed_bytes: r.u64()? as usize,
+        ..Default::default()
     };
+    if r.version >= 3 {
+        // v3: hardware-matrix row + mixed-width counters. Older files
+        // keep the defaults (Isa::Scalar, zeros) — the fields are
+        // informational, never used to re-derive shapes at load.
+        let isa_tag = r.u8()?;
+        packing.isa = Isa::from_u8(isa_tag)
+            .ok_or_else(|| anyhow::anyhow!("invalid packing ISA tag {isa_tag}"))?;
+        packing.hw_mr = r.usize32()?;
+        packing.mixed_layers = r.usize32()?;
+        packing.wide_groups = r.usize32()?;
+    }
     let schedules = if r.version >= 2 {
         // v2: the plan's schedules as their own block.
         let threads = r.usize32()?;

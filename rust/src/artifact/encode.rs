@@ -190,6 +190,19 @@ fn put_packed_bcrc(w: &mut Writer, p: &PackedBcrc, v1_part: Option<&WorkPartitio
             w.u8(1);
             w.u32s(c);
         }
+        // Per-group mixed widths (v3 packers). The tag is written
+        // unconditionally: pre-v3 writers could never produce a Mixed
+        // layout, so old files simply never contain it, and the reader
+        // accepts the tag at any file version.
+        ColIndex::Mixed { narrow, wide, wide_groups } => {
+            w.u8(2);
+            w.u16s(narrow);
+            w.u32s(wide);
+            w.u32(wide_groups.len() as u32);
+            for f in wide_groups {
+                w.u8(*f as u8);
+            }
+        }
     }
     w.section(p.values.as_slice());
     w.u32s(&p.reorder);
@@ -438,6 +451,14 @@ pub fn encode_plan(w: &mut Writer, plan: &ExecutionPlan, version: u32) -> anyhow
     w.u32(ps.csr_layers as u32);
     w.u32(ps.u16_layers as u32);
     w.u64(ps.packed_bytes as u64);
+    // v3: the hardware-matrix row the shapes came from, plus the
+    // mixed-width index counters.
+    if version >= 3 {
+        w.u8(ps.isa.to_u8());
+        w.u32(ps.hw_mr as u32);
+        w.u32(ps.mixed_layers as u32);
+        w.u32(ps.wide_groups as u32);
+    }
     // v2: the plan's schedules as their own trailing block — partitions
     // hoisted out of the packed structures, referenced by kernel `sched`
     // ids written above.

@@ -21,7 +21,7 @@
 //!
 //! ```text
 //! 0   magic      b"GRMC"
-//! 4   version    u32 (currently 2; bumped on any format change)
+//! 4   version    u32 (currently 3; bumped on any format change)
 //! 8   checksum   u64 FNV-1a over every byte from offset 16 to EOF
 //! 16  meta_len   u64 length of the meta stream in bytes
 //! 24  n_sections u32
@@ -37,7 +37,12 @@
 //!
 //! # Versions
 //!
-//! * **v2** (current): work partitions live in a dedicated *schedules*
+//! * **v3** (current): column indices may use the per-group mixed-width
+//!   grammar (tag 2: u16 delta pool + u32 pool + per-group flags), and
+//!   the trailing [`PackingStats`] carry the hardware-matrix row (ISA +
+//!   register-panel height) plus mixed-width counters. Otherwise
+//!   identical to v2.
+//! * **v2** (read-compatible): work partitions live in a dedicated *schedules*
 //!   block at the end of the meta stream (the plan's `ScheduleSet`);
 //!   GEMM kernels reference entries by `sched` id. Packed layouts are
 //!   partition-free, so rebalancing a loaded plan to the serving host's
@@ -66,7 +71,7 @@ use std::path::Path;
 pub(crate) const MAGIC: &[u8; 4] = b"GRMC";
 
 /// Current `.grimc` format version (written by [`to_bytes`]).
-pub const GRIMC_VERSION: u32 = 2;
+pub const GRIMC_VERSION: u32 = 3;
 
 /// Oldest version [`from_bytes`] still reads.
 pub const GRIMC_MIN_READ_VERSION: u32 = 1;

@@ -7,8 +7,9 @@
 //!
 //! * **BCRC layers** get a [`crate::sparse::PackedBcrc`]: groups
 //!   reordered and concatenated into one 64 B-aligned buffer, values
-//!   interleaved in kc×mr cache blocks sized from the [`CacheParams`]
-//!   model, and u16 delta column indices where ranges allow. The static
+//!   interleaved in kc×mr cache blocks sized from the [`HwConfig`]
+//!   hardware matrix (detected ISA row + cache model), and per-group
+//!   u16 delta column indices where ranges allow. The static
 //!   nnz-balanced [`crate::sparse::WorkPartition`] (greedy LPT over
 //!   group nnz) the parallel executor consumes instead of an even row
 //!   split goes into the `ScheduleSet`, referenced by the kernel's
@@ -29,8 +30,9 @@
 
 use super::plan::{KernelImpl, ScheduleSet, Step};
 use crate::gemm::csr_gemm::csr_row_nnz;
-use crate::gemm::pack::{self, CacheParams, PackOverrides, PackedDense};
-use crate::sparse::packed::WorkPartition;
+use crate::gemm::pack::{self, PackOverrides, PackedDense};
+use crate::gemm::simd::{HwConfig, Isa};
+use crate::sparse::packed::{ColIndex, WorkPartition};
 use std::sync::Arc;
 
 /// Rebuild the static work partitions of `schedules` for `threads`
@@ -98,13 +100,15 @@ pub struct PackOptions {
     /// Static partition width in worker buckets (the paper runs 8
     /// threads; engines rebalance to their runtime quota at load).
     pub threads: usize,
-    /// Cache model the block sizes derive from. Defaults to the
-    /// *compile host's* probed caches — right for same-host serving;
-    /// for cross-compiling to a different target, set this explicitly
-    /// (or export `GRIM_NO_CACHE_PROBE=1` for the generic mobile-core
-    /// model) so panels are blocked for the machine that will run them.
-    pub cache: CacheParams,
-    /// Tuner-gene overrides for the cache model (0 = derive).
+    /// Hardware matrix the block sizes and register-panel height derive
+    /// from. Defaults to the *compile host's* detected ISA + probed
+    /// caches — right for same-host serving; for cross-compiling to a
+    /// different target, set this explicitly (e.g.
+    /// `HwConfig::for_isa(Isa::Neon, target_caches)`, or export
+    /// `GRIM_NO_CACHE_PROBE=1` for the generic mobile-core cache model)
+    /// so panels are blocked for the machine that will run them.
+    pub hw: HwConfig,
+    /// Tuner-gene overrides for the hardware matrix (0 = derive).
     pub overrides: PackOverrides,
 }
 
@@ -113,9 +117,9 @@ impl Default for PackOptions {
         PackOptions {
             enabled: true,
             threads: 8,
-            // Host caches probed from sysfs once per process, generic
-            // mobile-core defaults otherwise (logged on first use).
-            cache: CacheParams::detected(),
+            // ISA dispatched and host caches probed once per process,
+            // generic mobile-core defaults otherwise (logged on first use).
+            hw: HwConfig::detected(),
             overrides: PackOverrides::default(),
         }
     }
@@ -134,11 +138,22 @@ pub struct PackingStats {
     pub bcrc_layers: usize,
     pub dense_layers: usize,
     pub csr_layers: usize,
-    /// BCRC layers whose column indices compressed to u16 deltas.
+    /// BCRC layers whose column indices compressed *entirely* to u16
+    /// deltas.
     pub u16_layers: usize,
     /// Total packed storage in bytes: value buffers (incl. alignment
     /// padding) plus, for BCRC, the index and group-table bytes.
     pub packed_bytes: usize,
+    /// Hardware-matrix row the shapes were derived from.
+    pub isa: Isa,
+    /// Register-panel height that row prescribed (before overrides).
+    pub hw_mr: usize,
+    /// BCRC layers holding *both* u16 and u32 index pools (per-group
+    /// mixed widths).
+    pub mixed_layers: usize,
+    /// Packed groups that stayed on raw u32 indices — the groups that
+    /// downgraded out of delta compression, summed over all BCRC layers.
+    pub wide_groups: usize,
 }
 
 /// Rewrite every GEMM kernel in `steps` with its packed form, emitting
@@ -147,8 +162,12 @@ pub fn pack_step_kernels(
     steps: &mut [(usize, Step)],
     opts: &PackOptions,
 ) -> (PackingStats, ScheduleSet) {
-    let mut stats =
-        PackingStats { enabled: opts.enabled && !force_unpacked(), ..Default::default() };
+    let mut stats = PackingStats {
+        enabled: opts.enabled && !force_unpacked(),
+        isa: opts.hw.isa,
+        hw_mr: opts.hw.mr,
+        ..Default::default()
+    };
     let mut schedules = ScheduleSet { threads: opts.threads.max(1), ..Default::default() };
     if !stats.enabled {
         return (stats, schedules);
@@ -183,13 +202,17 @@ fn pack_kernel(
     let threads = opts.threads.max(1);
     match k {
         KernelImpl::Bcrc { gemm } => {
-            let p = pack::pack_bcrc(&gemm.enc, gemm.params, n_hint, opts.cache, opts.overrides);
+            let p = pack::pack_bcrc(&gemm.enc, gemm.params, n_hint, opts.hw, opts.overrides);
             #[cfg(debug_assertions)]
             p.validate_against(&gemm.enc).expect("packed layout must round-trip");
             stats.bcrc_layers += 1;
             if p.is_u16() {
                 stats.u16_layers += 1;
             }
+            if matches!(p.idx, ColIndex::Mixed { .. }) {
+                stats.mixed_layers += 1;
+            }
+            stats.wide_groups += p.wide_group_count();
             stats.packed_bytes += p.packed_bytes();
             gemm.sched = Some(schedules.push(p.lpt_partition(threads)));
             gemm.packed = Some(Arc::new(p));

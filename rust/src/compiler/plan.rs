@@ -336,12 +336,21 @@ impl ExecutionPlan {
         if self.packing.enabled {
             let _ = writeln!(
                 s,
-                "  packing: {} bcrc / {} dense / {} csr layers ({} KiB values, {} u16-indexed)",
+                "  packing: {} bcrc / {} dense / {} csr layers ({} KiB values, {} u16-indexed, \
+                 {} mixed-width, {} wide groups)",
                 self.packing.bcrc_layers,
                 self.packing.dense_layers,
                 self.packing.csr_layers,
                 self.packing.packed_bytes / 1024,
-                self.packing.u16_layers
+                self.packing.u16_layers,
+                self.packing.mixed_layers,
+                self.packing.wide_groups
+            );
+            let _ = writeln!(
+                s,
+                "  hardware matrix: isa={} mr={}",
+                self.packing.isa.name(),
+                self.packing.hw_mr
             );
         }
         if !self.schedules.is_empty() {

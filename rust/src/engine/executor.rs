@@ -523,17 +523,28 @@ impl Engine {
             Step::Relu => {
                 let out_r = self.out_range(id)?;
                 let src = self.src_range(id, 0)?;
-                let (out, xin) = self.out_and_in(ws, out_r, src, input);
-                out.copy_from_slice(xin);
-                ops::relu_slice(out);
+                // In-place elision: when the planner proved this step is
+                // its producer's final reader it aliased the buffers, so
+                // the activation runs directly over the producer's bytes.
+                if src == Some(out_r) {
+                    ops::relu_slice(ws.slice_mut(out_r.0, out_r.1));
+                } else {
+                    let (out, xin) = self.out_and_in(ws, out_r, src, input);
+                    out.copy_from_slice(xin);
+                    ops::relu_slice(out);
+                }
                 "relu"
             }
             Step::Relu6 => {
                 let out_r = self.out_range(id)?;
                 let src = self.src_range(id, 0)?;
-                let (out, xin) = self.out_and_in(ws, out_r, src, input);
-                out.copy_from_slice(xin);
-                ops::relu6_slice(out);
+                if src == Some(out_r) {
+                    ops::relu6_slice(ws.slice_mut(out_r.0, out_r.1));
+                } else {
+                    let (out, xin) = self.out_and_in(ws, out_r, src, input);
+                    out.copy_from_slice(xin);
+                    ops::relu6_slice(out);
+                }
                 "relu6"
             }
             Step::Add { act } => {

@@ -23,7 +23,7 @@
 //! accumulation completes — bias/ReLU never re-streams the output.
 
 use super::epilogue::Epilogue;
-use super::simd::{self, Microkernels};
+use super::simd::{self, ColsTile, Microkernels, RegTile};
 use crate::sparse::packed::{ColsRef, PackedBcrc, WorkPartition};
 use crate::sparse::Bcrc;
 use crate::tensor::Tensor;
@@ -343,6 +343,13 @@ impl BcrcGemm {
     /// stream the group's interleaved value panels front-to-back. The
     /// per-row accumulation order (ascending signature columns) is
     /// identical to the encode-order path, so results are bit-identical.
+    ///
+    /// Default inner loop is the vtable's register tile ([`RegTile`]):
+    /// each panel's C rows stay in accumulator registers across the
+    /// whole kc block, and the fused epilogue is applied in-register on
+    /// the group's final column block. The axpy bundle path remains for
+    /// `GRIM_FORCE_AXPY=1`, zero-width groups, and layouts whose `mr`
+    /// exceeds the tile's register budget.
     #[allow(clippy::too_many_arguments)]
     fn packed_span_rows(
         &self,
@@ -369,8 +376,32 @@ impl BcrcGemm {
         let s_lo = lo - glo;
         let s_hi = hi - glo;
         debug_assert_eq!(s_lo % mr, 0, "span start must be panel-aligned");
+        let tile = mk.tile;
+        let use_tile = width > 0 && mr <= tile.max_mr && !simd::force_axpy();
         for jc in (0..n).step_by(nt) {
             let je = (jc + nt).min(n);
+            if use_tile {
+                // Register-tiled traversal: the epilogue fuses into the
+                // final column block's store, so the trailing per-row
+                // pass below is not needed.
+                crate::sparse::packed::for_each_panel(
+                    rows_g,
+                    width,
+                    mr,
+                    kc,
+                    g.val_off,
+                    s_lo,
+                    s_hi,
+                    |kb_lo, kl, pb, ro, h| {
+                        let fuse = if kb_lo + kl == width { ep } else { Epilogue::None };
+                        self.packed_tile_panel(
+                            p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, h, glo + ro, tile,
+                            fuse,
+                        );
+                    },
+                );
+                continue;
+            }
             // Shared interleave traversal (single definition of the
             // layout walk; see sparse::packed::for_each_panel).
             crate::sparse::packed::for_each_panel(
@@ -398,6 +429,90 @@ impl BcrcGemm {
                 }
             }
         }
+    }
+
+    /// Register-tiled panel: monomorphize on the panel height so the row
+    /// bundle lives in a fixed-size array (no per-panel allocation).
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn packed_tile_panel(
+        &self,
+        p: &PackedBcrc,
+        vd: &[f32],
+        cols: ColsRef<'_>,
+        xd: &[f32],
+        oview: SharedOut<f32>,
+        n: usize,
+        jc: usize,
+        je: usize,
+        kb_lo: usize,
+        kl: usize,
+        pb: usize,
+        h: usize,
+        r0: usize,
+        tile: &'static RegTile,
+        ep: Epilogue<'_>,
+    ) {
+        match h {
+            1 => self.packed_tile_bundle::<1>(p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+            2 => self.packed_tile_bundle::<2>(p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+            3 => self.packed_tile_bundle::<3>(p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+            4 => self.packed_tile_bundle::<4>(p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+            5 => self.packed_tile_bundle::<5>(p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+            6 => self.packed_tile_bundle::<6>(p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+            7 => self.packed_tile_bundle::<7>(p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+            8 => self.packed_tile_bundle::<8>(p, vd, cols, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+            _ => unreachable!("panel height bounded by RegTile::max_mr"),
+        }
+    }
+
+    /// One register-tile invocation: H destination row tiles, the
+    /// panel's value block, its column slice, and (on the group's final
+    /// column block) the per-row bias gathered for the fused epilogue.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn packed_tile_bundle<const H: usize>(
+        &self,
+        p: &PackedBcrc,
+        vd: &[f32],
+        cols: ColsRef<'_>,
+        xd: &[f32],
+        oview: SharedOut<f32>,
+        n: usize,
+        jc: usize,
+        je: usize,
+        kb_lo: usize,
+        kl: usize,
+        pb: usize,
+        r0: usize,
+        tile: &'static RegTile,
+        ep: Epilogue<'_>,
+    ) {
+        let dsts: [usize; H] = std::array::from_fn(|i| p.reorder[r0 + i] as usize);
+        // SAFETY: reorder is a bijection and r0..r0+H are distinct
+        // reordered rows owned by this worker, so the H destination
+        // slices never alias.
+        let mut rows: [&mut [f32]; H] =
+            std::array::from_fn(|i| unsafe { oview.range_mut(dsts[i] * n + jc, dsts[i] * n + je) });
+        let ct = match cols {
+            ColsRef::U16 { base, deltas } => {
+                ColsTile::U16 { base, deltas: &deltas[kb_lo..kb_lo + kl] }
+            }
+            ColsRef::U32(c) => ColsTile::U32(&c[kb_lo..kb_lo + kl]),
+        };
+        let mut bb = [0.0f32; H];
+        let fuse = if ep.is_none() {
+            None
+        } else {
+            let (bias, act) = ep.parts();
+            if let Some(bs) = bias {
+                for (slot, d) in bb.iter_mut().zip(dsts) {
+                    *slot = bs[d];
+                }
+            }
+            Some((&bb[..], act))
+        };
+        (tile.panel)(&mut rows, &vd[pb..pb + kl * H], kl, xd, n, jc, &ct, fuse);
     }
 
     /// One interleaved value panel (`h` rows × `kl` columns): issue the
@@ -858,15 +973,28 @@ mod tests {
         assert!(out.data().iter().all(|v| *v == 0.0));
     }
 
-    fn packed_for(enc: &Bcrc, params: GemmParams, n_hint: usize, threads: usize)
-        -> (BcrcGemm, Arc<WorkPartition>)
-    {
-        use crate::gemm::pack::{pack_bcrc, CacheParams, PackOverrides};
-        let p = pack_bcrc(enc, params, n_hint, CacheParams::default(), PackOverrides::default());
+    fn packed_for_ov(
+        enc: &Bcrc,
+        params: GemmParams,
+        n_hint: usize,
+        threads: usize,
+        ov: crate::gemm::pack::PackOverrides,
+    ) -> (BcrcGemm, Arc<WorkPartition>) {
+        use crate::gemm::pack::{pack_bcrc, CacheParams};
+        // Packed against the table we execute with, so the layout's mr
+        // matches the register tile under test.
+        let hw = simd::HwConfig::for_kernels(simd::active(), CacheParams::default());
+        let p = pack_bcrc(enc, params, n_hint, hw, ov);
         p.validate_against(enc).unwrap();
         let part = Arc::new(p.lpt_partition(threads));
         part.validate_covers(&p.groups).unwrap();
         (BcrcGemm::new(enc.clone(), params).with_packed(Arc::new(p)), part)
+    }
+
+    fn packed_for(enc: &Bcrc, params: GemmParams, n_hint: usize, threads: usize)
+        -> (BcrcGemm, Arc<WorkPartition>)
+    {
+        packed_for_ov(enc, params, n_hint, threads, Default::default())
     }
 
     /// The packed layout must be *bit-identical* to the encode-order
@@ -898,6 +1026,40 @@ mod tests {
                 assert_eq!(a, c, "parallel m={m} k={k} n={n} lre={lre}");
             }
         }
+    }
+
+    /// A packed `mr` above the register tile's budget must take the axpy
+    /// fallback in-process — and still match the encode-order path
+    /// bitwise (this is the same fallback `GRIM_FORCE_AXPY=1` forces
+    /// globally, reachable here without env games).
+    #[test]
+    fn oversized_mr_takes_axpy_fallback_bitwise() {
+        let (m, k, n) = (48usize, 96usize, 13usize);
+        let (_, enc) = setup(71, m, k, 5.0);
+        let params = GemmParams::default();
+        let ov = crate::gemm::pack::PackOverrides { kc: 0, mc: 0, mr: 16 };
+        let (packed, part) = packed_for_ov(&enc, params, n, 3, ov);
+        assert!(
+            packed.packed.as_ref().unwrap().shape.mr > simd::active().tile.max_mr,
+            "override must exceed the register budget for this test to bite"
+        );
+        let plain = BcrcGemm::new(enc.clone(), params);
+        let mut rng = Rng::new(71 + 9000);
+        let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
+        let bias: Vec<f32> = (0..m).map(|i| 0.02 * i as f32 - 0.3).collect();
+        let mut gather = vec![0.0f32; enc.max_group_cols()];
+        let mut a = vec![0.0f32; m * n];
+        let mut b = vec![0.0f32; m * n];
+        plain.execute_into_ep(x.data(), n, &mut a, &mut gather, simd::active(),
+            Epilogue::BiasRelu(&bias));
+        packed.execute_into_ep(x.data(), n, &mut b, &mut gather, simd::active(),
+            Epilogue::BiasRelu(&bias));
+        assert_eq!(a, b, "serial axpy fallback");
+        let pool = ThreadPool::new(3);
+        let mut c = vec![0.0f32; m * n];
+        packed.execute_parallel_into_ep(x.data(), n, &mut c, Some(&part), &pool,
+            simd::active(), Epilogue::BiasRelu(&bias));
+        assert_eq!(a, c, "parallel axpy fallback");
     }
 
     /// Packed parallel must agree for pool sizes above, equal to, and

@@ -70,5 +70,5 @@ pub use csr_gemm::csr_gemm;
 pub use epilogue::Epilogue;
 pub use pack::{CacheParams, PackOverrides, PackedDense};
 pub use naive::naive_gemm;
-pub use simd::{Act, Microkernels};
+pub use simd::{Act, HwConfig, Isa, Microkernels, RegTile};
 pub use tiled::{tiled_gemm, tiled_gemm_parallel, TileParams};

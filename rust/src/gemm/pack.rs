@@ -28,14 +28,17 @@
 //!   gathered X panel (`kc × n_tile` floats) stays L1-resident;
 //! * `mc` bounds the output rows revisited per kb block so the C tile
 //!   (`mc × n_tile` floats) stays L2-resident;
-//! * `mr` is the register-panel height and equals the kernel's unroll
-//!   bundle (1 for GEMV layers, whose `dot` wants contiguous rows).
+//! * `mr` is the register-panel height, taken from the
+//!   [`HwConfig`] hardware matrix (the detected ISA's register-tile
+//!   height; 1 for GEMV layers, whose `dot` wants contiguous rows) or
+//!   the tuner's `pack_mr` gene.
 //!
 //! Packing is a pure layout transform: per output element the operation
 //! sequence is unchanged, so packed execution is bit-identical to the
 //! encode-order path (property-tested in `tests/packed_parity`).
 
 use crate::gemm::bcrc_gemm::GemmParams;
+use crate::gemm::simd::HwConfig;
 use crate::gemm::tiled::TileParams;
 use crate::memory::aligned::AlignedBuf;
 use crate::sparse::packed::{PackShape, PackedBcrc, WorkPartition};
@@ -170,61 +173,62 @@ fn parse_cache_size(s: &str) -> Option<usize> {
     num.trim().parse::<usize>().ok().map(|v| v * mult)
 }
 
-/// Tuner-gene overrides for the cache model (0 = derive from
-/// [`CacheParams`]). See `SearchSpace::with_pack_axis`.
+/// Tuner-gene overrides for the hardware matrix (0 = derive from
+/// [`HwConfig`]). See `SearchSpace::with_pack_axis`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PackOverrides {
     pub kc: usize,
     pub mc: usize,
-}
-
-/// Largest unroll bundle the BCRC kernels issue for a given unroll gene.
-fn bundle_height(unroll: usize) -> usize {
-    match unroll {
-        8.. => 8,
-        4..=7 => 4,
-        2..=3 => 2,
-        _ => 1,
-    }
+    /// Register-panel height override (`pack_mr` gene); values above the
+    /// active [`RegTile`](crate::gemm::simd::RegTile)'s `max_mr` force
+    /// the axpy fallback at execution time.
+    pub mr: usize,
 }
 
 /// Resolve the packed shape for one BCRC layer. `n_hint` is the layer's
 /// compile-time GEMM N (`gemm_n` for CONV, 1 for FC/GRU gates): GEMV
 /// layers pack row-major (`mr = 1`, one column block) so the dot kernel
-/// reads contiguous rows.
+/// reads contiguous rows. `hw` is the hardware-matrix row driving both
+/// the register-panel height and the cache blocking.
 pub fn bcrc_pack_shape(
     enc: &Bcrc,
     params: GemmParams,
     n_hint: usize,
-    cache: CacheParams,
+    hw: HwConfig,
     ov: PackOverrides,
 ) -> PackShape {
     let gemv = n_hint <= 1;
-    let mr = if gemv || !params.lre { 1 } else { bundle_height(params.unroll) };
+    let mr = if gemv || !params.lre {
+        1
+    } else if ov.mr > 0 {
+        ov.mr
+    } else {
+        hw.mr.max(1)
+    };
     let nt = params.n_tile.max(1).min(n_hint.max(1));
     let kc = if gemv {
         enc.cols.max(1)
     } else if ov.kc > 0 {
         ov.kc
     } else {
-        cache.kc(nt)
+        hw.cache.kc(nt)
     };
-    let mc = if ov.mc > 0 { ov.mc.div_ceil(mr) * mr } else { cache.mc(nt, mr) };
+    let mc = if ov.mc > 0 { ov.mc.div_ceil(mr) * mr } else { hw.cache.mc(nt, mr) };
     PackShape { mr, kc, mc }
 }
 
-/// Pack one BCRC matrix under the cache model (the compiler pass entry).
-/// The parallel schedule is built separately (the partition lives in the
-/// plan's `ScheduleSet`, not in the packed layout — see
+/// Pack one BCRC matrix under the hardware matrix (the compiler pass
+/// entry). The parallel schedule is built separately (the partition
+/// lives in the plan's `ScheduleSet`, not in the packed layout — see
 /// [`PackedBcrc::lpt_partition`]).
 pub fn pack_bcrc(
     enc: &Bcrc,
     params: GemmParams,
     n_hint: usize,
-    cache: CacheParams,
+    hw: HwConfig,
     ov: PackOverrides,
 ) -> PackedBcrc {
-    PackedBcrc::pack(enc, bcrc_pack_shape(enc, params, n_hint, cache, ov))
+    PackedBcrc::pack(enc, bcrc_pack_shape(enc, params, n_hint, hw, ov))
 }
 
 /// Plan-time packed dense weights for the tiled kernel: the same
@@ -336,7 +340,8 @@ mod tests {
         let mut w = Tensor::rand_uniform(&[16, 32], 1.0, &mut rng);
         mask.apply(&mut w);
         let enc = Bcrc::from_masked(&w, &mask);
-        let p = pack_bcrc(&enc, GemmParams::default(), 1, CacheParams::default(), PackOverrides::default());
+        let hw = HwConfig::for_isa(crate::gemm::simd::Isa::Avx2Fma, CacheParams::default());
+        let p = pack_bcrc(&enc, GemmParams::default(), 1, hw, PackOverrides::default());
         assert!(p.row_major);
         assert_eq!(p.shape.mr, 1);
         p.validate_against(&enc).unwrap();
@@ -355,17 +360,46 @@ mod tests {
         let mut w = Tensor::rand_uniform(&[32, 64], 1.0, &mut rng);
         mask.apply(&mut w);
         let enc = Bcrc::from_masked(&w, &mask);
+        let hw = HwConfig::for_isa(crate::gemm::simd::Isa::Avx2Fma, CacheParams::default());
         let p = pack_bcrc(
             &enc,
             GemmParams::default(),
             196,
-            CacheParams::default(),
-            PackOverrides { kc: 8, mc: 30 },
+            hw,
+            PackOverrides { kc: 8, mc: 30, mr: 0 },
         );
-        assert_eq!(p.shape.mr, 4);
+        assert_eq!(p.shape.mr, 4, "AVX2 hardware-matrix row packs 4-high panels");
         assert_eq!(p.shape.kc, 8);
         assert_eq!(p.shape.mc % 4, 0, "override mc rounds to whole panels");
         p.validate_against(&enc).unwrap();
+    }
+
+    #[test]
+    fn pack_mr_override_wins_over_hardware_matrix() {
+        let mut rng = Rng::new(11);
+        let mask = crate::sparse::BcrMask::random(
+            16,
+            32,
+            crate::sparse::BcrConfig::new(4, 2),
+            2.0,
+            &mut rng,
+        );
+        let mut w = Tensor::rand_uniform(&[16, 32], 1.0, &mut rng);
+        mask.apply(&mut w);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let hw = HwConfig::for_isa(crate::gemm::simd::Isa::Avx512f, CacheParams::default());
+        for mr in [2usize, 8, 16] {
+            let p = pack_bcrc(
+                &enc,
+                GemmParams::default(),
+                64,
+                hw,
+                PackOverrides { kc: 0, mc: 0, mr },
+            );
+            assert_eq!(p.shape.mr, mr);
+            assert_eq!(p.shape.mc % mr, 0);
+            p.validate_against(&enc).unwrap();
+        }
     }
 
     #[test]

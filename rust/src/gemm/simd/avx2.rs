@@ -3,40 +3,44 @@
 //! Each primitive processes 8 f32 lanes per iteration with FMA
 //! accumulation; remainder lanes use scalar `mul_add` so the whole
 //! kernel is FMA-rounded uniformly. The safe `*_s` wrappers exist only
-//! to populate [`KERNELS`]; the table is handed out exclusively after
-//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
-//! (see [`super::detect`]), which is what makes the inner `unsafe` calls
-//! sound.
+//! to populate [`KERNELS`] (the AVX-512F table in [`super::tile_avx512`]
+//! reuses them for its streaming entries); the table is handed out
+//! exclusively after `is_x86_feature_detected!("avx2") &&
+//! is_x86_feature_detected!("fma")` (see [`super::detect`]), which is
+//! what makes the inner `unsafe` calls sound.
 
+use super::hw::Isa;
 use super::{Act, Microkernels};
 use std::arch::x86_64::*;
 
 pub static KERNELS: Microkernels = Microkernels {
     name: "avx2+fma",
+    isa: Isa::Avx2Fma,
     axpy_1: axpy_1_s,
     axpy_2: axpy_u_s::<2>,
     axpy_4: axpy_u_s::<4>,
     axpy_8: axpy_u_s::<8>,
     dot: dot_s,
     bias_act: bias_act_s,
+    tile: &super::tile_avx2::TILE,
 };
 
-fn axpy_1_s(acc: &mut [f32], wv: f32, xrow: &[f32]) {
+pub(super) fn axpy_1_s(acc: &mut [f32], wv: f32, xrow: &[f32]) {
     // SAFETY: table handed out only after AVX2+FMA runtime detection.
     unsafe { axpy_1(acc, wv, xrow) }
 }
 
-fn axpy_u_s<const U: usize>(acc: &mut [&mut [f32]; U], wv: &[f32; U], xrow: &[f32]) {
+pub(super) fn axpy_u_s<const U: usize>(acc: &mut [&mut [f32]; U], wv: &[f32; U], xrow: &[f32]) {
     // SAFETY: as above.
     unsafe { axpy_u::<U>(acc, wv, xrow) }
 }
 
-fn dot_s(a: &[f32], b: &[f32]) -> f32 {
+pub(super) fn dot_s(a: &[f32], b: &[f32]) -> f32 {
     // SAFETY: as above.
     unsafe { dot(a, b) }
 }
 
-fn bias_act_s(row: &mut [f32], b: f32, act: Act) {
+pub(super) fn bias_act_s(row: &mut [f32], b: f32, act: Act) {
     // SAFETY: as above.
     unsafe { bias_act(row, b, act) }
 }

@@ -1,0 +1,163 @@
+//! Runtime hardware matrix: one table mapping the detected ISA + cache
+//! model to the block geometry *both* the packing pass and the kernel
+//! dispatcher consume (the pire `RUNTIME_HW_CONFIG` / `get_mcnckc()`
+//! idiom).
+//!
+//! Before this table existed, panel geometry (pass 4½) and microkernel
+//! register shape (dispatch) were chosen by two independent heuristics;
+//! now [`HwConfig::detected`] is the single source: `mr` is the
+//! register-panel height the ISA's tile kernel holds in accumulators,
+//! `n_step` its full-width C tile in columns, and
+//! [`HwConfig::get_mcnckc`] derives the (mc, nc, kc) cache blocking from
+//! [`CacheParams`] around them.
+//!
+//! Tests construct explicit `HwConfig { isa, cache, .. }` values (via
+//! [`HwConfig::for_isa`]) so packed layouts stay deterministic across
+//! hosts; only production compile paths use the detected table.
+
+use super::Microkernels;
+use crate::gemm::pack::CacheParams;
+use std::sync::OnceLock;
+
+/// Instruction sets the dispatcher distinguishes. Recorded (as a `u8`
+/// tag) in `PackingStats` so artifacts carry the matrix row they were
+/// shaped by.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Isa {
+    #[default]
+    Scalar,
+    Avx2Fma,
+    Avx512f,
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2Fma => "avx2+fma",
+            Isa::Avx512f => "avx512f",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Stable artifact tag (`.grimc` v3 PackingStats).
+    pub fn to_u8(self) -> u8 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Avx2Fma => 1,
+            Isa::Avx512f => 2,
+            Isa::Neon => 3,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Isa> {
+        match v {
+            0 => Some(Isa::Scalar),
+            1 => Some(Isa::Avx2Fma),
+            2 => Some(Isa::Avx512f),
+            3 => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// The hardware matrix row for one machine: ISA + cache model + the
+/// register-tile shape the packing pass and dispatcher agree on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HwConfig {
+    pub isa: Isa,
+    pub cache: CacheParams,
+    /// Register-panel height (C rows held in accumulators). Packing's
+    /// interleaved-panel `mr` for GEMM-shaped BCRC layers.
+    pub mr: usize,
+    /// Full-width register C tile in columns (the tile kernels chunk
+    /// `n_tile` internally by this).
+    pub n_step: usize,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig::for_isa(Isa::Scalar, CacheParams::default())
+    }
+}
+
+impl HwConfig {
+    /// The matrix proper: ISA → (mr, n_step). AVX2 holds 4×16 f32 of C
+    /// in 8 ymm (half the file, leaving room for x and broadcasts);
+    /// AVX-512F doubles both lanes and registers to 8×32 in 16 zmm;
+    /// NEON's 32 q-registers fit 8×8 in 16; the scalar row mirrors the
+    /// legacy `bundle_height(4)` packing so forced-scalar layouts are
+    /// unchanged.
+    pub fn for_isa(isa: Isa, cache: CacheParams) -> HwConfig {
+        let (mr, n_step) = match isa {
+            Isa::Scalar => (4, 4),
+            Isa::Avx2Fma => (4, 16),
+            Isa::Avx512f => (8, 32),
+            Isa::Neon => (8, 8),
+        };
+        HwConfig { isa, cache, mr, n_step }
+    }
+
+    /// Matrix row for a dispatched kernel table.
+    pub fn for_kernels(mk: &Microkernels, cache: CacheParams) -> HwConfig {
+        HwConfig::for_isa(mk.isa, cache)
+    }
+
+    /// The process-wide config: [`super::active`] dispatch (so
+    /// `GRIM_FORCE_SCALAR` selects the scalar row) + probed caches.
+    /// Resolved once and cached.
+    pub fn detected() -> HwConfig {
+        static DETECTED: OnceLock<HwConfig> = OnceLock::new();
+        *DETECTED.get_or_init(|| HwConfig::for_kernels(super::active(), CacheParams::detected()))
+    }
+
+    /// pire-style blocking query: cache blocking for one layer's GEMM at
+    /// column-tile width `n_tile`. Returns `(mc, nc, kc)` — `mc` rounded
+    /// to whole `mr` panels, `nc` the column tile, `kc` the packed
+    /// K-block width.
+    pub fn get_mcnckc(&self, n_tile: usize) -> (usize, usize, usize) {
+        let nc = n_tile.max(1);
+        (self.cache.mc(nc, self.mr), nc, self.cache.kc(nc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_rows_fit_their_tiles() {
+        // The matrix mr must never exceed what the ISA's tile kernel can
+        // hold, or dispatch would silently fall back to axpy.
+        let mk = super::super::detect();
+        let hw = HwConfig::for_kernels(mk, CacheParams::default());
+        assert!(hw.mr <= mk.tile.max_mr, "{}: mr {} > tile max {}", mk.name, hw.mr, mk.tile.max_mr);
+        assert!(hw.mr >= 1 && hw.n_step >= 1);
+    }
+
+    #[test]
+    fn get_mcnckc_is_consistent_with_cache_model() {
+        let hw = HwConfig::for_isa(Isa::Avx2Fma, CacheParams::default());
+        let (mc, nc, kc) = hw.get_mcnckc(64);
+        assert_eq!(nc, 64);
+        assert_eq!(kc, hw.cache.kc(64));
+        assert_eq!(mc % hw.mr, 0, "mc must be whole register panels");
+        // Wider tiles shrink kc (L1 is shared between X panel and tile).
+        let (_, _, kc1) = hw.get_mcnckc(1);
+        assert!(kc1 >= kc);
+    }
+
+    #[test]
+    fn isa_tags_round_trip() {
+        for isa in [Isa::Scalar, Isa::Avx2Fma, Isa::Avx512f, Isa::Neon] {
+            assert_eq!(Isa::from_u8(isa.to_u8()), Some(isa));
+        }
+        assert_eq!(Isa::from_u8(250), None);
+    }
+
+    #[test]
+    fn detected_is_stable() {
+        assert_eq!(HwConfig::detected(), HwConfig::detected());
+    }
+}

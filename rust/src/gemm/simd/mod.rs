@@ -20,6 +20,13 @@
 //!   pins an engine to a table, and `GemmParams::simd = false` pins one
 //!   BCRC layer to scalar (the tuner's `simd` gene).
 //!
+//! Each table also carries a [`RegTile`] — the register-tiled panel
+//! kernel (scalar reference in [`tile`], per-ISA implementations in
+//! `tile_avx2` / `tile_avx512` / `tile_neon`) that the packed GEMM paths
+//! use by default, keeping the axpy entries as the `GRIM_FORCE_AXPY=1`
+//! fallback — and an [`Isa`] tag tying it to the [`hw::HwConfig`]
+//! hardware matrix that chooses packing geometry.
+//!
 //! Safety: the `unsafe` target-feature implementations are reachable only
 //! through the vtables exported here, and those are handed out only after
 //! the matching CPU feature check (AVX2/FMA) or on an architecture where
@@ -27,8 +34,19 @@
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+pub mod hw;
 #[cfg(target_arch = "aarch64")]
 mod neon;
+pub mod tile;
+#[cfg(target_arch = "x86_64")]
+mod tile_avx2;
+#[cfg(target_arch = "x86_64")]
+mod tile_avx512;
+#[cfg(target_arch = "aarch64")]
+mod tile_neon;
+
+pub use hw::{HwConfig, Isa};
+pub use tile::{force_axpy, ColsTile, RegTile};
 
 use super::microkernel;
 use std::sync::OnceLock;
@@ -49,12 +67,17 @@ pub enum Act {
 /// `row[j] = act(row[j] + b)` with `b` the row's (output channel's) bias.
 pub struct Microkernels {
     pub name: &'static str,
+    /// Which hardware-matrix row ([`hw::HwConfig`]) this table belongs to.
+    pub isa: Isa,
     pub axpy_1: fn(&mut [f32], f32, &[f32]),
     pub axpy_2: fn(&mut [&mut [f32]; 2], &[f32; 2], &[f32]),
     pub axpy_4: fn(&mut [&mut [f32]; 4], &[f32; 4], &[f32]),
     pub axpy_8: fn(&mut [&mut [f32]; 8], &[f32; 8], &[f32]),
     pub dot: fn(&[f32], &[f32]) -> f32,
     pub bias_act: fn(&mut [f32], f32, Act),
+    /// Register-tiled panel kernel (the default packed inner loop;
+    /// `GRIM_FORCE_AXPY=1` falls back to the axpy entries above).
+    pub tile: &'static RegTile,
 }
 
 impl std::fmt::Debug for Microkernels {
@@ -96,12 +119,14 @@ fn scalar_bias_act(row: &mut [f32], b: f32, act: Act) {
 
 static SCALAR: Microkernels = Microkernels {
     name: "scalar",
+    isa: Isa::Scalar,
     axpy_1: microkernel::axpy_1,
     axpy_2: microkernel::axpy_u::<2>,
     axpy_4: microkernel::axpy_u::<4>,
     axpy_8: microkernel::axpy_u::<8>,
     dot: microkernel::dot,
     bias_act: scalar_bias_act,
+    tile: &tile::SCALAR,
 };
 
 /// The always-available scalar table (auto-vectorized inner loops).
@@ -115,6 +140,14 @@ pub fn scalar() -> &'static Microkernels {
 pub fn detect() -> &'static Microkernels {
     #[cfg(target_arch = "x86_64")]
     {
+        // AVX-512F implies wider register tiles; its streaming kernels
+        // still require (and reuse) AVX2+FMA.
+        if is_x86_feature_detected!("avx512f")
+            && is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+        {
+            return &tile_avx512::KERNELS;
+        }
         if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
             return &avx2::KERNELS;
         }

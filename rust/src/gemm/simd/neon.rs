@@ -7,17 +7,20 @@
 //! aarch64, so [`KERNELS`] is always sound to use there; dispatch still
 //! goes through [`super::detect`] for symmetry with x86.
 
+use super::hw::Isa;
 use super::{Act, Microkernels};
 use std::arch::aarch64::*;
 
 pub static KERNELS: Microkernels = Microkernels {
     name: "neon",
+    isa: Isa::Neon,
     axpy_1: axpy_1_s,
     axpy_2: axpy_u_s::<2>,
     axpy_4: axpy_u_s::<4>,
     axpy_8: axpy_u_s::<8>,
     dot: dot_s,
     bias_act: bias_act_s,
+    tile: &super::tile_neon::TILE,
 };
 
 fn axpy_1_s(acc: &mut [f32], wv: f32, xrow: &[f32]) {

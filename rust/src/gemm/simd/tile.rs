@@ -1,0 +1,241 @@
+//! Register-tiled panel microkernels: the vtable shape, the column-index
+//! view the packed walks hand them, and the scalar reference
+//! implementation.
+//!
+//! The axpy vtable streams the C tile through memory once per nonzero
+//! bundle; a [`RegTile`] kernel instead loads an h×n_step block of C into
+//! accumulator registers once per kc panel, runs every packed value of
+//! the panel against it, and stores back — applying the fused epilogue
+//! in-register on the last K block. Per output element the operation
+//! sequence (and FMA rounding) is identical to the axpy path, so packed
+//! regtile execution stays bit-identical to the unpacked path per
+//! backend (enforced by `packed_bit_identical_to_unpacked` and
+//! `tests/ukernel_parity`).
+//!
+//! `GRIM_FORCE_AXPY=1` disables the regtile path process-wide (the
+//! analog of `GRIM_FORCE_SCALAR` one level up); kernels also fall back
+//! per-layer when a packed layout's `mr` exceeds [`RegTile::max_mr`].
+
+use super::Act;
+use std::sync::OnceLock;
+
+/// Column indices of one kc panel, as the packed layouts store them:
+/// implicit (packed dense), u16 deltas off a group base, or raw u32.
+#[derive(Clone, Copy, Debug)]
+pub enum ColsTile<'a> {
+    /// Dense panel: column `k0 + kk`.
+    Contig(usize),
+    /// Delta-compressed sparse columns: `base + deltas[kk]`.
+    U16 { base: u32, deltas: &'a [u16] },
+    /// Raw sparse columns.
+    U32(&'a [u32]),
+}
+
+impl ColsTile<'_> {
+    #[inline(always)]
+    pub fn at(&self, kk: usize) -> usize {
+        match self {
+            ColsTile::Contig(k0) => k0 + kk,
+            ColsTile::U16 { base, deltas } => *base as usize + deltas[kk] as usize,
+            ColsTile::U32(cols) => cols[kk] as usize,
+        }
+    }
+}
+
+/// One register-tiled panel kernel invocation:
+///
+/// * `rows` — the h C-row tiles of this panel (all the same length,
+///   `je - j0` ≤ the layer's n_tile), pre-sliced to the current column
+///   tile; `h = rows.len()` ≤ [`RegTile::max_mr`].
+/// * `vals` — the panel's packed values, `vals[kk * h + u]` the weight
+///   of panel row `u` at panel column `kk`, `kk < kl`.
+/// * `xd` — the full input matrix (row-major, leading dimension `n`);
+///   the X tile for panel column `kk` starts at
+///   `xd[cols.at(kk) * n + j0]`.
+/// * `ep` — `Some((bias, act))` on the final K block only: apply
+///   `act(c + bias[u])` in-register before the store. `bias[u]` is
+///   already gathered for panel row `u` (0.0 for bias-less epilogues).
+pub type PanelFn = fn(
+    rows: &mut [&mut [f32]],
+    vals: &[f32],
+    kl: usize,
+    xd: &[f32],
+    n: usize,
+    j0: usize,
+    cols: &ColsTile<'_>,
+    ep: Option<(&[f32], Act)>,
+);
+
+/// A register-tile backend for one ISA (carried on the
+/// [`super::Microkernels`] vtable).
+pub struct RegTile {
+    pub name: &'static str,
+    /// Largest panel height the kernel holds in registers; packed
+    /// layouts with `shape.mr` above this fall back to the axpy path.
+    pub max_mr: usize,
+    /// Native full-width C tile in columns (reported by benches; the
+    /// kernel handles any tile width with narrower chunks + a scalar
+    /// remainder).
+    pub n_step: usize,
+    pub panel: PanelFn,
+}
+
+impl std::fmt::Debug for RegTile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RegTile({})", self.name)
+    }
+}
+
+/// Scalar reference tile: plain mul-then-add like
+/// [`crate::gemm::microkernel::axpy_u`], so forced-scalar regtile output
+/// is bit-identical to the scalar axpy path.
+pub static SCALAR: RegTile =
+    RegTile { name: "scalar", max_mr: 8, n_step: 4, panel: panel_scalar };
+
+/// Is the axpy fallback forced process-wide? Read once, like
+/// `GRIM_FORCE_SCALAR` (CI uses this to keep the legacy path covered).
+pub fn force_axpy() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| std::env::var_os("GRIM_FORCE_AXPY").is_some_and(|v| v != "0"))
+}
+
+fn panel_scalar(
+    rows: &mut [&mut [f32]],
+    vals: &[f32],
+    kl: usize,
+    xd: &[f32],
+    n: usize,
+    j0: usize,
+    cols: &ColsTile<'_>,
+    ep: Option<(&[f32], Act)>,
+) {
+    let h = rows.len();
+    debug_assert!(vals.len() >= kl * h);
+    for (u, row) in rows.iter_mut().enumerate() {
+        for kk in 0..kl {
+            let c = cols.at(kk);
+            let w = vals[kk * h + u];
+            let x = &xd[c * n + j0..c * n + j0 + row.len()];
+            for (rv, xv) in row.iter_mut().zip(x) {
+                *rv += w * *xv;
+            }
+        }
+        if let Some((bias, act)) = ep {
+            let b = bias[u];
+            match act {
+                Act::None => {
+                    for rv in row.iter_mut() {
+                        *rv += b;
+                    }
+                }
+                Act::Relu => {
+                    for rv in row.iter_mut() {
+                        let s = *rv + b;
+                        *rv = if s < 0.0 { 0.0 } else { s };
+                    }
+                }
+                Act::Relu6 => {
+                    for rv in row.iter_mut() {
+                        *rv = (*rv + b).clamp(0.0, 6.0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Drive one panel through a tile kernel and through the scalar
+    /// reference; both against a from-scratch naive computation.
+    fn check_tile(tile: &RegTile, h: usize, kl: usize, jl: usize, ep: Option<Act>) {
+        let mut rng = Rng::new((h * 1000 + kl * 10 + jl) as u64);
+        let n = jl + 3; // leading dimension wider than the tile
+        let k = kl + 2;
+        let xd: Vec<f32> = (0..k * n).map(|_| rng.f64() as f32 - 0.5).collect();
+        let vals: Vec<f32> = (0..kl * h).map(|_| rng.f64() as f32 - 0.5).collect();
+        let cols_raw: Vec<u32> = (0..kl as u32).collect();
+        let cols = ColsTile::U32(&cols_raw);
+        let bias: Vec<f32> = (0..h).map(|u| 0.1 * u as f32 - 0.2).collect();
+        let init: Vec<Vec<f32>> = (0..h).map(|_| vec![0.25f32; jl]).collect();
+
+        let run = |t: &RegTile| {
+            let mut c = init.clone();
+            let mut refs: Vec<&mut [f32]> = c.iter_mut().map(|r| r.as_mut_slice()).collect();
+            (t.panel)(
+                &mut refs,
+                &vals,
+                kl,
+                &xd,
+                n,
+                1,
+                &cols,
+                ep.map(|a| (bias.as_slice(), a)),
+            );
+            c
+        };
+        let got = run(tile);
+        let want = run(&SCALAR);
+        for u in 0..h {
+            for j in 0..jl {
+                let d = (got[u][j] - want[u][j]).abs();
+                assert!(
+                    d <= 1e-5 + 1e-5 * want[u][j].abs(),
+                    "{} h={h} kl={kl} jl={jl} ep={ep:?} u={u} j={j}: {} vs {}",
+                    tile.name,
+                    got[u][j],
+                    want[u][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_tile_matches_scalar_reference() {
+        let tile = super::super::detect().tile;
+        for h in 1..=8usize {
+            for kl in [1usize, 2, 7] {
+                for jl in [1usize, 3, 8, 15, 16, 17, 33] {
+                    for ep in [None, Some(Act::None), Some(Act::Relu), Some(Act::Relu6)] {
+                        check_tile(tile, h, kl, jl, ep);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_tile_matches_axpy_sequence_bitwise() {
+        // One panel via the scalar tile vs the same sequence through the
+        // scalar axpy kernel: must be assert_eq-identical (same ops).
+        let mut rng = Rng::new(77);
+        let (h, kl, jl, n) = (4usize, 5usize, 9usize, 12usize);
+        let xd: Vec<f32> = (0..(kl + 1) * n).map(|_| rng.f64() as f32 - 0.5).collect();
+        let vals: Vec<f32> = (0..kl * h).map(|_| rng.f64() as f32 - 0.5).collect();
+        let cols_raw: Vec<u32> = (0..kl as u32).collect();
+
+        let mut tiled: Vec<Vec<f32>> = (0..h).map(|_| vec![0.5f32; jl]).collect();
+        {
+            let mut refs: Vec<&mut [f32]> = tiled.iter_mut().map(|r| r.as_mut_slice()).collect();
+            (SCALAR.panel)(&mut refs, &vals, kl, &xd, n, 0, &ColsTile::U32(&cols_raw), None);
+        }
+
+        let mut axpy: Vec<Vec<f32>> = (0..h).map(|_| vec![0.5f32; jl]).collect();
+        for kk in 0..kl {
+            let wv: [f32; 4] = std::array::from_fn(|u| vals[kk * h + u]);
+            let mut it = axpy.iter_mut();
+            let mut refs: [&mut [f32]; 4] =
+                std::array::from_fn(|_| it.next().unwrap().as_mut_slice());
+            crate::gemm::microkernel::axpy_u::<4>(&mut refs, &wv, &xd[kk * n..kk * n + jl]);
+        }
+        assert_eq!(tiled, axpy);
+    }
+
+    #[test]
+    fn force_axpy_reads_env_once() {
+        assert_eq!(force_axpy(), force_axpy());
+    }
+}

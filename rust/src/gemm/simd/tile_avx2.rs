@@ -1,0 +1,164 @@
+//! AVX2+FMA register-tiled panel kernel: up to 8 C rows × 16 columns
+//! (two ymm per row) held in accumulators across a whole kc panel, with
+//! the fused epilogue applied in-register on the final K block.
+//!
+//! Rounding matches the axpy path exactly: every accumulation is a
+//! single-rounded FMA (`_mm256_fmadd_ps` on vector lanes, `mul_add` on
+//! the scalar remainder), and the epilogue ops (`add`/`max`/`min`) are
+//! exact per lane — so regtile output is bit-identical to
+//! [`super::avx2`]'s axpy + `bias_act` sequence.
+
+use super::tile::{ColsTile, RegTile};
+use super::Act;
+use std::arch::x86_64::*;
+
+pub static TILE: RegTile =
+    RegTile { name: "avx2+fma", max_mr: 8, n_step: 16, panel: panel_s };
+
+#[allow(clippy::too_many_arguments)]
+fn panel_s(
+    rows: &mut [&mut [f32]],
+    vals: &[f32],
+    kl: usize,
+    xd: &[f32],
+    n: usize,
+    j0: usize,
+    cols: &ColsTile<'_>,
+    ep: Option<(&[f32], Act)>,
+) {
+    debug_assert!(rows.len() <= TILE.max_mr);
+    // SAFETY: this table is handed out only after the AVX2+FMA probe in
+    // super::detect() succeeds.
+    unsafe {
+        match rows.len() {
+            1 => panel_h::<1>(rows, vals, kl, xd, n, j0, cols, ep),
+            2 => panel_h::<2>(rows, vals, kl, xd, n, j0, cols, ep),
+            3 => panel_h::<3>(rows, vals, kl, xd, n, j0, cols, ep),
+            4 => panel_h::<4>(rows, vals, kl, xd, n, j0, cols, ep),
+            5 => panel_h::<5>(rows, vals, kl, xd, n, j0, cols, ep),
+            6 => panel_h::<6>(rows, vals, kl, xd, n, j0, cols, ep),
+            7 => panel_h::<7>(rows, vals, kl, xd, n, j0, cols, ep),
+            8 => panel_h::<8>(rows, vals, kl, xd, n, j0, cols, ep),
+            _ => unreachable!("panel height bounded by max_mr"),
+        }
+    }
+}
+
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn apply_ep(v: __m256, b: __m256, act: Act) -> __m256 {
+    // max(v, 0) maps a -0.0 sum to +0.0 where the scalar branch keeps
+    // -0.0; the two compare equal, which is all parity asserts (same
+    // note as avx2::bias_act).
+    let v = _mm256_add_ps(v, b);
+    match act {
+        Act::None => v,
+        Act::Relu => _mm256_max_ps(v, _mm256_setzero_ps()),
+        Act::Relu6 => _mm256_min_ps(_mm256_max_ps(v, _mm256_setzero_ps()), _mm256_set1_ps(6.0)),
+    }
+}
+
+#[inline(always)]
+fn apply_ep_scalar(s: f32, b: f32, act: Act) -> f32 {
+    let s = s + b;
+    match act {
+        Act::None => s,
+        Act::Relu => {
+            if s < 0.0 {
+                0.0
+            } else {
+                s
+            }
+        }
+        Act::Relu6 => s.clamp(0.0, 6.0),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn panel_h<const H: usize>(
+    rows: &mut [&mut [f32]],
+    vals: &[f32],
+    kl: usize,
+    xd: &[f32],
+    n: usize,
+    j0: usize,
+    cols: &ColsTile<'_>,
+    ep: Option<(&[f32], Act)>,
+) {
+    debug_assert_eq!(rows.len(), H);
+    debug_assert!(vals.len() >= kl * H);
+    let jl = rows[0].len();
+    let vp = vals.as_ptr();
+    let xp = xd.as_ptr();
+    let mut j = 0usize;
+    // 16-wide C tile: 2 ymm per row, H rows resident.
+    while j + 16 <= jl {
+        let mut acc = [[_mm256_setzero_ps(); 2]; H];
+        for (u, row) in rows.iter().enumerate() {
+            let p = row.as_ptr().add(j);
+            acc[u][0] = _mm256_loadu_ps(p);
+            acc[u][1] = _mm256_loadu_ps(p.add(8));
+        }
+        for kk in 0..kl {
+            let q = xp.add(cols.at(kk) * n + j0 + j);
+            let x0 = _mm256_loadu_ps(q);
+            let x1 = _mm256_loadu_ps(q.add(8));
+            for (u, a) in acc.iter_mut().enumerate() {
+                let w = _mm256_broadcast_ss(&*vp.add(kk * H + u));
+                a[0] = _mm256_fmadd_ps(w, x0, a[0]);
+                a[1] = _mm256_fmadd_ps(w, x1, a[1]);
+            }
+        }
+        if let Some((bias, act)) = ep {
+            for (u, a) in acc.iter_mut().enumerate() {
+                let b = _mm256_set1_ps(bias[u]);
+                a[0] = apply_ep(a[0], b, act);
+                a[1] = apply_ep(a[1], b, act);
+            }
+        }
+        for (u, row) in rows.iter_mut().enumerate() {
+            let p = row.as_mut_ptr().add(j);
+            _mm256_storeu_ps(p, acc[u][0]);
+            _mm256_storeu_ps(p.add(8), acc[u][1]);
+        }
+        j += 16;
+    }
+    // 8-wide remainder tile.
+    while j + 8 <= jl {
+        let mut acc = [_mm256_setzero_ps(); H];
+        for (u, row) in rows.iter().enumerate() {
+            acc[u] = _mm256_loadu_ps(row.as_ptr().add(j));
+        }
+        for kk in 0..kl {
+            let xv = _mm256_loadu_ps(xp.add(cols.at(kk) * n + j0 + j));
+            for (u, a) in acc.iter_mut().enumerate() {
+                *a = _mm256_fmadd_ps(_mm256_broadcast_ss(&*vp.add(kk * H + u)), xv, *a);
+            }
+        }
+        if let Some((bias, act)) = ep {
+            for (u, a) in acc.iter_mut().enumerate() {
+                *a = apply_ep(*a, _mm256_set1_ps(bias[u]), act);
+            }
+        }
+        for (u, row) in rows.iter_mut().enumerate() {
+            _mm256_storeu_ps(row.as_mut_ptr().add(j), acc[u]);
+        }
+        j += 8;
+    }
+    // Scalar remainder lanes: fused `mul_add`, matching the axpy tails.
+    while j < jl {
+        for (u, row) in rows.iter_mut().enumerate() {
+            let p = row.as_mut_ptr().add(j);
+            let mut s = *p;
+            for kk in 0..kl {
+                s = (*vp.add(kk * H + u)).mul_add(*xp.add(cols.at(kk) * n + j0 + j), s);
+            }
+            if let Some((bias, act)) = ep {
+                s = apply_ep_scalar(s, bias[u], act);
+            }
+            *p = s;
+        }
+        j += 1;
+    }
+}

@@ -1,0 +1,175 @@
+//! AVX-512F backend: the register-tiled panel kernel (up to 8 C rows ×
+//! 32 columns — two zmm per row — resident in accumulators) plus its
+//! [`Microkernels`] table. The axpy/dot/bias_act entries reuse the
+//! AVX2+FMA implementations (dispatch requires AVX2+FMA alongside
+//! AVX-512F, and those kernels are memory-bound enough that wider
+//! vectors buy nothing through the streaming path); the register tile is
+//! where the 512-bit file pays.
+//!
+//! Same rounding contract as the other tiles: FMA everywhere
+//! (`_mm512_fmadd_ps` + `mul_add` remainder), exact epilogue ops.
+
+use super::hw::Isa;
+use super::tile::{ColsTile, RegTile};
+use super::{Act, Microkernels};
+use std::arch::x86_64::*;
+
+pub static KERNELS: Microkernels = Microkernels {
+    name: "avx512f",
+    isa: Isa::Avx512f,
+    axpy_1: super::avx2::axpy_1_s,
+    axpy_2: super::avx2::axpy_u_s::<2>,
+    axpy_4: super::avx2::axpy_u_s::<4>,
+    axpy_8: super::avx2::axpy_u_s::<8>,
+    dot: super::avx2::dot_s,
+    bias_act: super::avx2::bias_act_s,
+    tile: &TILE,
+};
+
+pub static TILE: RegTile =
+    RegTile { name: "avx512f", max_mr: 8, n_step: 32, panel: panel_s };
+
+#[allow(clippy::too_many_arguments)]
+fn panel_s(
+    rows: &mut [&mut [f32]],
+    vals: &[f32],
+    kl: usize,
+    xd: &[f32],
+    n: usize,
+    j0: usize,
+    cols: &ColsTile<'_>,
+    ep: Option<(&[f32], Act)>,
+) {
+    debug_assert!(rows.len() <= TILE.max_mr);
+    // SAFETY: handed out only after the AVX-512F (+AVX2+FMA) probe in
+    // super::detect() succeeds.
+    unsafe {
+        match rows.len() {
+            1 => panel_h::<1>(rows, vals, kl, xd, n, j0, cols, ep),
+            2 => panel_h::<2>(rows, vals, kl, xd, n, j0, cols, ep),
+            3 => panel_h::<3>(rows, vals, kl, xd, n, j0, cols, ep),
+            4 => panel_h::<4>(rows, vals, kl, xd, n, j0, cols, ep),
+            5 => panel_h::<5>(rows, vals, kl, xd, n, j0, cols, ep),
+            6 => panel_h::<6>(rows, vals, kl, xd, n, j0, cols, ep),
+            7 => panel_h::<7>(rows, vals, kl, xd, n, j0, cols, ep),
+            8 => panel_h::<8>(rows, vals, kl, xd, n, j0, cols, ep),
+            _ => unreachable!("panel height bounded by max_mr"),
+        }
+    }
+}
+
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn apply_ep(v: __m512, b: __m512, act: Act) -> __m512 {
+    let v = _mm512_add_ps(v, b);
+    match act {
+        Act::None => v,
+        Act::Relu => _mm512_max_ps(v, _mm512_setzero_ps()),
+        Act::Relu6 => _mm512_min_ps(_mm512_max_ps(v, _mm512_setzero_ps()), _mm512_set1_ps(6.0)),
+    }
+}
+
+#[inline(always)]
+fn apply_ep_scalar(s: f32, b: f32, act: Act) -> f32 {
+    let s = s + b;
+    match act {
+        Act::None => s,
+        Act::Relu => {
+            if s < 0.0 {
+                0.0
+            } else {
+                s
+            }
+        }
+        Act::Relu6 => s.clamp(0.0, 6.0),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx512f")]
+unsafe fn panel_h<const H: usize>(
+    rows: &mut [&mut [f32]],
+    vals: &[f32],
+    kl: usize,
+    xd: &[f32],
+    n: usize,
+    j0: usize,
+    cols: &ColsTile<'_>,
+    ep: Option<(&[f32], Act)>,
+) {
+    debug_assert_eq!(rows.len(), H);
+    debug_assert!(vals.len() >= kl * H);
+    let jl = rows[0].len();
+    let vp = vals.as_ptr();
+    let xp = xd.as_ptr();
+    let mut j = 0usize;
+    // 32-wide C tile: 2 zmm per row, H rows resident.
+    while j + 32 <= jl {
+        let mut acc = [[_mm512_setzero_ps(); 2]; H];
+        for (u, row) in rows.iter().enumerate() {
+            let p = row.as_ptr().add(j);
+            acc[u][0] = _mm512_loadu_ps(p);
+            acc[u][1] = _mm512_loadu_ps(p.add(16));
+        }
+        for kk in 0..kl {
+            let q = xp.add(cols.at(kk) * n + j0 + j);
+            let x0 = _mm512_loadu_ps(q);
+            let x1 = _mm512_loadu_ps(q.add(16));
+            for (u, a) in acc.iter_mut().enumerate() {
+                let w = _mm512_set1_ps(*vp.add(kk * H + u));
+                a[0] = _mm512_fmadd_ps(w, x0, a[0]);
+                a[1] = _mm512_fmadd_ps(w, x1, a[1]);
+            }
+        }
+        if let Some((bias, act)) = ep {
+            for (u, a) in acc.iter_mut().enumerate() {
+                let b = _mm512_set1_ps(bias[u]);
+                a[0] = apply_ep(a[0], b, act);
+                a[1] = apply_ep(a[1], b, act);
+            }
+        }
+        for (u, row) in rows.iter_mut().enumerate() {
+            let p = row.as_mut_ptr().add(j);
+            _mm512_storeu_ps(p, acc[u][0]);
+            _mm512_storeu_ps(p.add(16), acc[u][1]);
+        }
+        j += 32;
+    }
+    // 16-wide remainder tile.
+    while j + 16 <= jl {
+        let mut acc = [_mm512_setzero_ps(); H];
+        for (u, row) in rows.iter().enumerate() {
+            acc[u] = _mm512_loadu_ps(row.as_ptr().add(j));
+        }
+        for kk in 0..kl {
+            let xv = _mm512_loadu_ps(xp.add(cols.at(kk) * n + j0 + j));
+            for (u, a) in acc.iter_mut().enumerate() {
+                *a = _mm512_fmadd_ps(_mm512_set1_ps(*vp.add(kk * H + u)), xv, *a);
+            }
+        }
+        if let Some((bias, act)) = ep {
+            for (u, a) in acc.iter_mut().enumerate() {
+                *a = apply_ep(*a, _mm512_set1_ps(bias[u]), act);
+            }
+        }
+        for (u, row) in rows.iter_mut().enumerate() {
+            _mm512_storeu_ps(row.as_mut_ptr().add(j), acc[u]);
+        }
+        j += 16;
+    }
+    // Scalar remainder lanes: fused `mul_add`, matching the axpy tails.
+    while j < jl {
+        for (u, row) in rows.iter_mut().enumerate() {
+            let p = row.as_mut_ptr().add(j);
+            let mut s = *p;
+            for kk in 0..kl {
+                s = (*vp.add(kk * H + u)).mul_add(*xp.add(cols.at(kk) * n + j0 + j), s);
+            }
+            if let Some((bias, act)) = ep {
+                s = apply_ep_scalar(s, bias[u], act);
+            }
+            *p = s;
+        }
+        j += 1;
+    }
+}

@@ -1,0 +1,158 @@
+//! NEON register-tiled panel kernel: up to 8 C rows × 8 columns (two
+//! q-registers per row) resident in accumulators — 16 of the 32
+//! q-registers for C, the rest for the X tile and weight broadcasts.
+//! This is the shape the paper's generated Snapdragon kernels use.
+//!
+//! Rounding matches [`super::neon`]'s axpy path: FMLA on vector lanes,
+//! `mul_add` on the scalar remainder, exact epilogue ops.
+
+use super::tile::{ColsTile, RegTile};
+use super::Act;
+use std::arch::aarch64::*;
+
+pub static TILE: RegTile =
+    RegTile { name: "neon", max_mr: 8, n_step: 8, panel: panel_s };
+
+#[allow(clippy::too_many_arguments)]
+fn panel_s(
+    rows: &mut [&mut [f32]],
+    vals: &[f32],
+    kl: usize,
+    xd: &[f32],
+    n: usize,
+    j0: usize,
+    cols: &ColsTile<'_>,
+    ep: Option<(&[f32], Act)>,
+) {
+    debug_assert!(rows.len() <= TILE.max_mr);
+    // SAFETY: NEON is baseline on aarch64 (and detect() re-checks).
+    unsafe {
+        match rows.len() {
+            1 => panel_h::<1>(rows, vals, kl, xd, n, j0, cols, ep),
+            2 => panel_h::<2>(rows, vals, kl, xd, n, j0, cols, ep),
+            3 => panel_h::<3>(rows, vals, kl, xd, n, j0, cols, ep),
+            4 => panel_h::<4>(rows, vals, kl, xd, n, j0, cols, ep),
+            5 => panel_h::<5>(rows, vals, kl, xd, n, j0, cols, ep),
+            6 => panel_h::<6>(rows, vals, kl, xd, n, j0, cols, ep),
+            7 => panel_h::<7>(rows, vals, kl, xd, n, j0, cols, ep),
+            8 => panel_h::<8>(rows, vals, kl, xd, n, j0, cols, ep),
+            _ => unreachable!("panel height bounded by max_mr"),
+        }
+    }
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn apply_ep(v: float32x4_t, b: float32x4_t, act: Act) -> float32x4_t {
+    let v = vaddq_f32(v, b);
+    match act {
+        Act::None => v,
+        Act::Relu => vmaxq_f32(v, vdupq_n_f32(0.0)),
+        Act::Relu6 => vminq_f32(vmaxq_f32(v, vdupq_n_f32(0.0)), vdupq_n_f32(6.0)),
+    }
+}
+
+#[inline(always)]
+fn apply_ep_scalar(s: f32, b: f32, act: Act) -> f32 {
+    let s = s + b;
+    match act {
+        Act::None => s,
+        Act::Relu => {
+            if s < 0.0 {
+                0.0
+            } else {
+                s
+            }
+        }
+        Act::Relu6 => s.clamp(0.0, 6.0),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn panel_h<const H: usize>(
+    rows: &mut [&mut [f32]],
+    vals: &[f32],
+    kl: usize,
+    xd: &[f32],
+    n: usize,
+    j0: usize,
+    cols: &ColsTile<'_>,
+    ep: Option<(&[f32], Act)>,
+) {
+    debug_assert_eq!(rows.len(), H);
+    debug_assert!(vals.len() >= kl * H);
+    let jl = rows[0].len();
+    let vp = vals.as_ptr();
+    let xp = xd.as_ptr();
+    let mut j = 0usize;
+    // 8-wide C tile: 2 q-registers per row, H rows resident.
+    while j + 8 <= jl {
+        let mut acc = [[vdupq_n_f32(0.0); 2]; H];
+        for (u, row) in rows.iter().enumerate() {
+            let p = row.as_ptr().add(j);
+            acc[u][0] = vld1q_f32(p);
+            acc[u][1] = vld1q_f32(p.add(4));
+        }
+        for kk in 0..kl {
+            let q = xp.add(cols.at(kk) * n + j0 + j);
+            let x0 = vld1q_f32(q);
+            let x1 = vld1q_f32(q.add(4));
+            for (u, a) in acc.iter_mut().enumerate() {
+                let w = vdupq_n_f32(*vp.add(kk * H + u));
+                a[0] = vfmaq_f32(a[0], w, x0);
+                a[1] = vfmaq_f32(a[1], w, x1);
+            }
+        }
+        if let Some((bias, act)) = ep {
+            for (u, a) in acc.iter_mut().enumerate() {
+                let b = vdupq_n_f32(bias[u]);
+                a[0] = apply_ep(a[0], b, act);
+                a[1] = apply_ep(a[1], b, act);
+            }
+        }
+        for (u, row) in rows.iter_mut().enumerate() {
+            let p = row.as_mut_ptr().add(j);
+            vst1q_f32(p, acc[u][0]);
+            vst1q_f32(p.add(4), acc[u][1]);
+        }
+        j += 8;
+    }
+    // 4-wide remainder tile.
+    while j + 4 <= jl {
+        let mut acc = [vdupq_n_f32(0.0); H];
+        for (u, row) in rows.iter().enumerate() {
+            acc[u] = vld1q_f32(row.as_ptr().add(j));
+        }
+        for kk in 0..kl {
+            let xv = vld1q_f32(xp.add(cols.at(kk) * n + j0 + j));
+            for (u, a) in acc.iter_mut().enumerate() {
+                *a = vfmaq_f32(*a, vdupq_n_f32(*vp.add(kk * H + u)), xv);
+            }
+        }
+        if let Some((bias, act)) = ep {
+            for (u, a) in acc.iter_mut().enumerate() {
+                *a = apply_ep(*a, vdupq_n_f32(bias[u]), act);
+            }
+        }
+        for (u, row) in rows.iter_mut().enumerate() {
+            vst1q_f32(row.as_mut_ptr().add(j), acc[u]);
+        }
+        j += 4;
+    }
+    // Scalar remainder lanes: fused `mul_add`, matching the axpy tails.
+    while j < jl {
+        for (u, row) in rows.iter_mut().enumerate() {
+            let p = row.as_mut_ptr().add(j);
+            let mut s = *p;
+            for kk in 0..kl {
+                s = (*vp.add(kk * H + u)).mul_add(*xp.add(cols.at(kk) * n + j0 + j), s);
+            }
+            if let Some((bias, act)) = ep {
+                s = apply_ep_scalar(s, bias[u], act);
+            }
+            *p = s;
+        }
+        j += 1;
+    }
+}

@@ -6,7 +6,7 @@
 
 use super::epilogue::Epilogue;
 use super::pack::PackedDense;
-use super::simd::{self, Microkernels};
+use super::simd::{self, ColsTile, Microkernels, RegTile};
 use crate::sparse::packed::WorkPartition;
 use crate::tensor::Tensor;
 use crate::util::sharedbuf::{SharedOut, SharedSlice};
@@ -201,6 +201,11 @@ pub fn tiled_gemm_packed_parallel_into_ep(
 /// Compute panels `plo..phi` of the packed product. Per-element
 /// accumulation order (jc → ascending kb → ascending k) matches
 /// [`tiled_rows`], so packed and unpacked outputs are bit-identical.
+///
+/// Default inner loop is the vtable's [`RegTile`] (C rows pinned in
+/// registers for a whole kc block, epilogue fused into the final block's
+/// store); the axpy bundle path remains for `GRIM_FORCE_AXPY=1` and for
+/// layouts whose `mr` exceeds the tile's register budget.
 #[allow(clippy::too_many_arguments)]
 fn packed_panels(
     pd: &PackedDense,
@@ -222,8 +227,30 @@ fn packed_panels(
     let vd = pd.values.as_slice();
     let rlo = pd.panel_rows(plo).0;
     let rhi = pd.panel_rows(phi - 1).1;
+    let tile = mk.tile;
+    let use_tile = k > 0 && pd.mr <= tile.max_mr && !simd::force_axpy();
     for jc in (0..n).step_by(nc) {
         let je = (jc + nc).min(n);
+        if use_tile {
+            // Register-tiled traversal; the fused epilogue rides on the
+            // final K block, so no trailing per-row pass is needed.
+            crate::sparse::packed::for_each_panel(
+                m,
+                k,
+                pd.mr,
+                kc,
+                0,
+                rlo,
+                rhi,
+                |kb_lo, kl, pb, r0, h| {
+                    let fuse = if kb_lo + kl == k { ep } else { Epilogue::None };
+                    packed_tile_dense_panel(
+                        vd, xd, oview, n, jc, je, kb_lo, kl, pb, h, r0, tile, fuse,
+                    );
+                },
+            );
+            continue;
+        }
         // Shared interleave traversal (single definition of the layout
         // walk; see sparse::packed::for_each_panel).
         crate::sparse::packed::for_each_panel(
@@ -247,6 +274,74 @@ fn packed_panels(
             }
         }
     }
+}
+
+/// Register-tiled dense panel: monomorphize on the panel height so the
+/// row bundle lives in a fixed-size array.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn packed_tile_dense_panel(
+    vd: &[f32],
+    xd: &[f32],
+    oview: SharedOut<f32>,
+    n: usize,
+    jc: usize,
+    je: usize,
+    kb_lo: usize,
+    kl: usize,
+    pb: usize,
+    h: usize,
+    r0: usize,
+    tile: &'static RegTile,
+    ep: Epilogue<'_>,
+) {
+    match h {
+        1 => packed_tile_dense_bundle::<1>(vd, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+        2 => packed_tile_dense_bundle::<2>(vd, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+        3 => packed_tile_dense_bundle::<3>(vd, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+        4 => packed_tile_dense_bundle::<4>(vd, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+        5 => packed_tile_dense_bundle::<5>(vd, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+        6 => packed_tile_dense_bundle::<6>(vd, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+        7 => packed_tile_dense_bundle::<7>(vd, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+        8 => packed_tile_dense_bundle::<8>(vd, xd, oview, n, jc, je, kb_lo, kl, pb, r0, tile, ep),
+        _ => unreachable!("panel height bounded by RegTile::max_mr"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn packed_tile_dense_bundle<const H: usize>(
+    vd: &[f32],
+    xd: &[f32],
+    oview: SharedOut<f32>,
+    n: usize,
+    jc: usize,
+    je: usize,
+    kb_lo: usize,
+    kl: usize,
+    pb: usize,
+    r0: usize,
+    tile: &'static RegTile,
+    ep: Epilogue<'_>,
+) {
+    // SAFETY: rows r0..r0+H are distinct rows of this worker's panel
+    // range, so the slices never alias.
+    let mut rows: [&mut [f32]; H] =
+        std::array::from_fn(|i| unsafe { oview.range_mut((r0 + i) * n + jc, (r0 + i) * n + je) });
+    let ct = ColsTile::Contig(kb_lo);
+    let mut bb = [0.0f32; H];
+    let fuse = if ep.is_none() {
+        None
+    } else {
+        let (bias, act) = ep.parts();
+        if let Some(bs) = bias {
+            for (slot, b) in bb.iter_mut().zip(&bs[r0..r0 + H]) {
+                *slot = *b;
+            }
+        }
+        Some((&bb[..], act))
+    };
+    (tile.panel)(&mut rows, &vd[pb..pb + kl * H], kl, xd, n, jc, &ct, fuse);
 }
 
 /// One packed dense panel: largest register bundles first, remainder

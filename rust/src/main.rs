@@ -174,12 +174,16 @@ fn cmd_compile(f: &Flags) -> anyhow::Result<()> {
     // Artifacts usually cross hosts (compile on a build machine, serve
     // on-device), so `compile` defaults to the generic mobile-core
     // cache model rather than the build host's probed caches;
-    // `--cache native` opts into probing for same-host serving.
-    copts.pack.cache = match flag(f, "cache", "generic".to_string()).as_str() {
+    // `--cache native` opts into probing for same-host serving. The
+    // ISA row of the hardware matrix always comes from the dispatched
+    // kernel table (layouts stay valid on any host; the serving side
+    // falls back to axpy if its register budget is smaller).
+    let cache = match flag(f, "cache", "generic".to_string()).as_str() {
         "generic" => grim::gemm::CacheParams::default(),
         "native" => grim::gemm::CacheParams::detected(),
         other => anyhow::bail!("unknown --cache '{other}' (generic|native)"),
     };
+    copts.pack.hw = grim::gemm::HwConfig::for_kernels(grim::gemm::simd::active(), cache);
     let plan = compile(&module, &weights, copts)?;
     let out = f
         .get("out")
@@ -464,7 +468,7 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
 }
 
 fn cmd_tune(f: &Flags) -> anyhow::Result<()> {
-    use grim::gemm::pack::{pack_bcrc, CacheParams};
+    use grim::gemm::pack::pack_bcrc;
     use grim::tuner::{tune_layer, GaConfig, SearchSpace};
     use std::sync::Arc;
     let (module, weights) = model_from_flags(f)?;
@@ -492,19 +496,22 @@ fn cmd_tune(f: &Flags) -> anyhow::Result<()> {
         // latency measurement: memoize one packed layout per distinct
         // layout-relevant gene tuple, built on the candidate's first
         // (warmup) invocation and reused by every timed iteration.
-        let mut packs: HashMap<(usize, usize, bool, usize, usize), Arc<grim::sparse::PackedBcrc>> =
-            HashMap::new();
+        #[allow(clippy::type_complexity)]
+        let mut packs: HashMap<
+            (usize, usize, bool, usize, usize, usize),
+            Arc<grim::sparse::PackedBcrc>,
+        > = HashMap::new();
         let res = tune_layer(&space, ga, |cfg| {
-            let key = (cfg.unroll, cfg.n_tile, cfg.lre, cfg.pack_kc, cfg.pack_mc);
+            let key = (cfg.unroll, cfg.n_tile, cfg.lre, cfg.pack_kc, cfg.pack_mc, cfg.pack_mr);
             let packed = Arc::clone(packs.entry(key).or_insert_with(|| {
-                // Same cache model the compile path defaults to
+                // Same hardware matrix the compile path defaults to
                 // (PackOptions::default), so 'auto' genes are measured
                 // on the exact layout the shipped plan will use.
                 Arc::new(pack_bcrc(
                     &enc,
                     cfg.gemm_params(),
                     TUNE_N,
-                    CacheParams::detected(),
+                    grim::gemm::HwConfig::detected(),
                     cfg.pack_overrides(),
                 ))
             }));
@@ -513,12 +520,13 @@ fn cmd_tune(f: &Flags) -> anyhow::Result<()> {
         });
         let pack_gene = |v: usize| if v == 0 { "auto".to_string() } else { v.to_string() };
         println!(
-            "  {:<16} [{rows}x{cols}] -> unroll={} tile={} pack_kc={} pack_mc={} backend={} ({:.4} ms, {} evals)",
+            "  {:<16} [{rows}x{cols}] -> unroll={} tile={} pack_kc={} pack_mc={} pack_mr={} backend={} ({:.4} ms, {} evals)",
             node.name,
             res.best.unroll,
             res.best.n_tile,
             pack_gene(res.best.pack_kc),
             pack_gene(res.best.pack_mc),
+            pack_gene(res.best.pack_mr),
             if res.best.simd { grim::gemm::simd::active().name } else { "scalar" },
             res.best_ms,
             res.evals

@@ -64,6 +64,14 @@ fn is_view_step(step: &Step) -> bool {
     matches!(step, Step::Flatten)
 }
 
+/// Is this step a standalone elementwise activation whose output may
+/// overwrite its input *when it is the input's final reader*? (These are
+/// the ReLUs that survived epilogue fusion — un-fusable fan-out or a
+/// non-GEMM producer.)
+fn is_inplace_step(step: &Step) -> bool {
+    matches!(step, Step::Relu | Step::Relu6)
+}
+
 /// Compute first-def/last-use intervals for every intermediate of `plan`.
 /// `shapes` are the per-node output shapes from graph inference.
 ///
@@ -76,12 +84,38 @@ fn is_view_step(step: &Step) -> bool {
 /// producer's and the view's readers via the normal last-use pass — so
 /// multi-consumer values (e.g. a ResNet branch point feeding both a
 /// Flatten and a residual Add) alias too.
+///
+/// Standalone `Relu`/`Relu6` steps get the *conditional* form: unlike a
+/// view they clobber the bytes, so the activation may only alias its
+/// producer's buffer when no later step reads that buffer — i.e. the
+/// activation is the final reader of every value sharing the buffer
+/// (alias chains included) and the buffer is not the pinned model
+/// output. Fan-out producers (a branch point feeding a residual Add as
+/// well as the ReLU) keep the copy.
 pub fn analyze(plan: &ExecutionPlan, shapes: &[Shape]) -> anyhow::Result<Liveness> {
     let n = plan.steps.len();
     anyhow::ensure!(shapes.len() == n, "shape count {} != step count {n}", shapes.len());
     let mut buffers: Vec<PlannedBuffer> = Vec::new();
     let mut value_of: Vec<Option<usize>> = vec![None; n];
     let mut scratch_of: Vec<Option<usize>> = vec![None; n];
+
+    // Per-node last reader, known up front (edges are static). The model
+    // output counts as read at `n` (extraction after the final step).
+    let mut last_read_node = vec![0usize; n];
+    for (id, step) in &plan.steps {
+        if matches!(step, Step::Noop | Step::Input) {
+            continue;
+        }
+        for &src in &plan.inputs[*id] {
+            last_read_node[src] = last_read_node[src].max(*id);
+        }
+    }
+    last_read_node[plan.output_id] = n;
+    // Per-buffer last reader across every value aliased onto it so far;
+    // grown in lockstep with `buffers`. Nodes are visited in program
+    // order, so by the time an in-place candidate at `id` checks its
+    // source buffer, every earlier alias has already been folded in.
+    let mut buf_last_read: Vec<usize> = Vec::new();
 
     for (id, step) in &plan.steps {
         let id = *id;
@@ -91,12 +125,19 @@ pub fn analyze(plan: &ExecutionPlan, shapes: &[Shape]) -> anyhow::Result<Livenes
         if !matches!(step, Step::Input) {
             let len = shapes[id].numel();
             anyhow::ensure!(len > 0, "node {id}: zero-sized value");
-            // In-place elision for pure-view steps (any fan-out).
-            if is_view_step(step) {
+            // In-place elision for pure-view steps (any fan-out), and
+            // for final-reader activations (which overwrite the bytes).
+            let aliasable = is_view_step(step)
+                || (is_inplace_step(step) && {
+                    let src = plan.inputs[id][0];
+                    value_of[src].is_some_and(|b| buf_last_read[b] <= id)
+                });
+            if aliasable {
                 let src = plan.inputs[id][0];
                 if let Some(b) = value_of[src] {
                     if buffers[b].len == len {
                         value_of[id] = Some(b);
+                        buf_last_read[b] = buf_last_read[b].max(last_read_node[id]);
                         continue;
                     }
                 }
@@ -110,6 +151,7 @@ pub fn analyze(plan: &ExecutionPlan, shapes: &[Shape]) -> anyhow::Result<Livenes
                 last_use: id,
                 offset: 0,
             });
+            buf_last_read.push(last_read_node[id]);
         }
         let in_dims = plan.inputs[id].first().map(|s| shapes[*s].dims());
         let slen = step_scratch_len(step, in_dims);

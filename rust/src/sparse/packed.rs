@@ -22,10 +22,11 @@
 //!   register panels; inside a panel the `mr` weights of one column are
 //!   adjacent, so the unroll-bundle kernels stream the buffer linearly
 //!   with zero per-group pointer chasing;
-//! * **column indices delta-compressed to u16** where every group's
-//!   signature span allows it ([`ColIndex::U16`]: one u32 base per group
-//!   plus u16 offsets), halving index traffic; matrices with a wider
-//!   span keep raw u32 indices;
+//! * **column indices delta-compressed to u16** per group where the
+//!   group's signature span allows it ([`ColIndex::U16`]: one u32 base
+//!   per group plus u16 offsets), halving index traffic; a group whose
+//!   span overflows u16 keeps raw u32 indices for itself only
+//!   ([`ColIndex::Mixed`]) instead of forcing the whole matrix wide;
 //! The static [`WorkPartition`] — per-bucket lists of `(group, row span)`
 //! work items balanced by nnz (greedy LPT over group nnz, large groups
 //! split at `mr`-aligned row boundaries), which the parallel executor
@@ -151,12 +152,21 @@ impl PackedGroup {
     }
 }
 
-/// Column-index storage: u16 deltas from a per-group base when every
-/// group's signature span fits, raw u32 otherwise.
+/// Column-index storage: u16 deltas from a per-group base for every
+/// group whose signature span fits, raw u32 for the rest. Homogeneous
+/// matrices use the `U16`/`U32` forms; `Mixed` carries both pools plus a
+/// per-packed-group width flag, so one wide group no longer forces the
+/// whole matrix to u32.
 #[derive(Clone, Debug)]
 pub enum ColIndex {
     U16(Vec<u16>),
     U32(Vec<u32>),
+    Mixed {
+        narrow: Vec<u16>,
+        wide: Vec<u32>,
+        /// `wide_groups[gi]` ⇒ packed group `gi` indexes into `wide`.
+        wide_groups: Vec<bool>,
+    },
 }
 
 /// Borrowed view of one group's column signature, decoding lazily.
@@ -405,24 +415,29 @@ impl PackedBcrc {
         let mut order: Vec<usize> = (0..ng).collect();
         order.sort_by(|&a, &b| gnnz(b).cmp(&gnnz(a)).then(a.cmp(&b)));
 
-        let fits_u16 = (0..ng).all(|k| {
+        // Per-group width choice: a group stores u16 deltas iff its own
+        // signature span fits (zero-width groups count as narrow).
+        let fits_u16 = |k: usize| {
             let cols = enc.group_cols(k);
             match (cols.iter().min(), cols.iter().max()) {
                 (Some(&mn), Some(&mx)) => (mx - mn) as usize <= u16::MAX as usize,
                 _ => true,
             }
-        });
+        };
 
         let mut groups = Vec::with_capacity(ng);
         let mut deltas16: Vec<u16> = Vec::new();
         let mut raw32: Vec<u32> = Vec::new();
+        let mut wide_flags: Vec<bool> = Vec::with_capacity(ng);
         let mut val_len = 0usize;
         for &k in &order {
             let (lo, hi) = enc.group_rows(k);
             let cols = enc.group_cols(k);
             let base = cols.iter().copied().min().unwrap_or(0);
-            let col_off = if fits_u16 { deltas16.len() } else { raw32.len() } as u32;
-            if fits_u16 {
+            let narrow = fits_u16(k);
+            wide_flags.push(!narrow);
+            let col_off = if narrow { deltas16.len() } else { raw32.len() } as u32;
+            if narrow {
                 deltas16.extend(cols.iter().map(|&c| (c - base) as u16));
             } else {
                 raw32.extend_from_slice(cols);
@@ -463,7 +478,13 @@ impl PackedBcrc {
             shape: PackShape { mr, kc, ..shape },
             row_major: mr == 1 && kc >= max_width,
             groups,
-            idx: if fits_u16 { ColIndex::U16(deltas16) } else { ColIndex::U32(raw32) },
+            idx: if wide_flags.iter().all(|w| !w) {
+                ColIndex::U16(deltas16)
+            } else if wide_flags.iter().all(|w| *w) {
+                ColIndex::U32(raw32)
+            } else {
+                ColIndex::Mixed { narrow: deltas16, wide: raw32, wide_groups: wide_flags }
+            },
             values,
             reorder: enc.reorder.clone(),
             nnz: enc.nnz(),
@@ -484,6 +505,25 @@ impl PackedBcrc {
         matches!(self.idx, ColIndex::U16(_))
     }
 
+    /// Does packed group `gi` store raw u32 indices?
+    pub fn group_is_wide(&self, gi: usize) -> bool {
+        match &self.idx {
+            ColIndex::U16(_) => false,
+            ColIndex::U32(_) => true,
+            ColIndex::Mixed { wide_groups, .. } => wide_groups[gi],
+        }
+    }
+
+    /// How many packed groups were downgraded to raw u32 indices
+    /// (`PackingStats` records the sum across layers).
+    pub fn wide_group_count(&self) -> usize {
+        match &self.idx {
+            ColIndex::U16(_) => 0,
+            ColIndex::U32(_) => self.groups.len(),
+            ColIndex::Mixed { wide_groups, .. } => wide_groups.iter().filter(|w| **w).count(),
+        }
+    }
+
     /// Column signature of packed group `gi` (lazily decoded view).
     pub fn group_cols(&self, gi: usize) -> ColsRef<'_> {
         let g = &self.groups[gi];
@@ -492,6 +532,13 @@ impl PackedBcrc {
         match &self.idx {
             ColIndex::U16(d) => ColsRef::U16 { base: g.col_base, deltas: &d[lo..hi] },
             ColIndex::U32(c) => ColsRef::U32(&c[lo..hi]),
+            ColIndex::Mixed { narrow, wide, wide_groups } => {
+                if wide_groups[gi] {
+                    ColsRef::U32(&wide[lo..hi])
+                } else {
+                    ColsRef::U16 { base: g.col_base, deltas: &narrow[lo..hi] }
+                }
+            }
         }
     }
 
@@ -512,6 +559,9 @@ impl PackedBcrc {
         let idx = match &self.idx {
             ColIndex::U16(d) => 2 * d.len(),
             ColIndex::U32(c) => 4 * c.len(),
+            ColIndex::Mixed { narrow, wide, wide_groups } => {
+                2 * narrow.len() + 4 * wide.len() + wide_groups.len()
+            }
         };
         4 * self.values.len() + idx + std::mem::size_of_val(self.groups.as_slice())
     }
@@ -640,8 +690,36 @@ mod tests {
         enc.validate().unwrap();
         let p = PackedBcrc::pack(&enc, shape(1, cols));
         assert!(!p.is_u16());
+        assert_eq!(p.wide_group_count(), 1, "the single wide group counts as downgraded");
         p.validate_against(&enc).unwrap();
         assert_eq!(p.group_cols(0).at(1), 69_999);
+    }
+
+    #[test]
+    fn mixed_width_keeps_narrow_groups_compressed() {
+        // Two groups: one spans nearly the full 70k columns (wide), one
+        // sits in a 6-column window (narrow). Before per-group widths,
+        // the wide group forced the whole matrix to u32.
+        let cols = 70_000usize;
+        let enc = Bcrc {
+            rows: 4,
+            cols,
+            reorder: vec![0, 1, 2, 3],
+            row_offset: vec![0, 2, 4, 6, 8],
+            occurrence: vec![0, 2, 4],
+            col_stride: vec![0, 2, 4],
+            compact_col: vec![3, 69_999, 5, 9],
+            weights: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+        };
+        enc.validate().unwrap();
+        let p = PackedBcrc::pack(&enc, shape(2, cols));
+        assert!(matches!(p.idx, ColIndex::Mixed { .. }), "one wide + one narrow ⇒ Mixed");
+        assert_eq!(p.wide_group_count(), 1);
+        let (wide_gi, narrow_gi) = if p.group_is_wide(0) { (0, 1) } else { (1, 0) };
+        assert!(!p.group_is_wide(narrow_gi));
+        assert!(matches!(p.group_cols(narrow_gi), ColsRef::U16 { .. }));
+        assert!(matches!(p.group_cols(wide_gi), ColsRef::U32(_)));
+        p.validate_against(&enc).unwrap();
     }
 
     #[test]

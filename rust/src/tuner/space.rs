@@ -9,11 +9,12 @@
 //! layer to the scalar backend when the vector kernels lose on it (tiny
 //! rows, heavy remainder lanes).
 //!
-//! With the plan-time packing pass, two more genes exist: `pack_kc` and
-//! `pack_mc` override the [`crate::gemm::pack::CacheParams`]-derived
-//! cache blocks of the packed weight layout (0 = derive from the cache
-//! model). [`SearchSpace::with_pack_axis`] enables them; a pack-aware
-//! fitness closure passes [`Config::pack_overrides`] to
+//! With the plan-time packing pass, three more genes exist: `pack_kc`,
+//! `pack_mc`, and `pack_mr` override the
+//! [`crate::gemm::simd::HwConfig`]-derived cache blocks and
+//! register-panel height of the packed weight layout (0 = derive from
+//! the hardware matrix). [`SearchSpace::with_pack_axis`] enables them; a
+//! pack-aware fitness closure passes [`Config::pack_overrides`] to
 //! `gemm::pack::pack_bcrc` when building the candidate kernel.
 
 use crate::gemm::bcrc_gemm::GemmParams;
@@ -28,10 +29,13 @@ pub struct Config {
     pub lre: bool,
     /// Run on the dispatched SIMD kernels (false = scalar backend).
     pub simd: bool,
-    /// Packed-layout K cache block override (0 = CacheParams model).
+    /// Packed-layout K cache block override (0 = hardware matrix).
     pub pack_kc: usize,
-    /// Packed-layout M cache block override (0 = CacheParams model).
+    /// Packed-layout M cache block override (0 = hardware matrix).
     pub pack_mc: usize,
+    /// Packed-layout register-panel height override (0 = hardware
+    /// matrix; above the tile's `max_mr` forces the axpy fallback).
+    pub pack_mr: usize,
 }
 
 impl Config {
@@ -39,9 +43,9 @@ impl Config {
         GemmParams { unroll: self.unroll, n_tile: self.n_tile, lre: self.lre, simd: self.simd }
     }
 
-    /// Cache-block overrides for the plan-time packing pass.
+    /// Hardware-matrix overrides for the plan-time packing pass.
     pub fn pack_overrides(&self) -> PackOverrides {
-        PackOverrides { kc: self.pack_kc, mc: self.pack_mc }
+        PackOverrides { kc: self.pack_kc, mc: self.pack_mc, mr: self.pack_mr }
     }
 }
 
@@ -54,6 +58,7 @@ pub struct SearchSpace {
     pub simds: Vec<bool>,
     pub pack_kcs: Vec<usize>,
     pub pack_mcs: Vec<usize>,
+    pub pack_mrs: Vec<usize>,
 }
 
 impl Default for SearchSpace {
@@ -65,6 +70,7 @@ impl Default for SearchSpace {
             simds: vec![true],
             pack_kcs: vec![0],
             pack_mcs: vec![0],
+            pack_mrs: vec![0],
         }
     }
 }
@@ -81,13 +87,15 @@ impl SearchSpace {
         SearchSpace { simds: vec![true, false], ..Default::default() }
     }
 
-    /// Space including the packed-layout cache-block axes (0 = derive
-    /// from the CacheParams model), so the tuner can size kc×mc blocks
-    /// per layer instead of trusting the cache model.
+    /// Space including the packed-layout hardware-matrix axes (0 =
+    /// derive from the HwConfig row), so the tuner can size kc×mc
+    /// blocks and the register-panel height per layer instead of
+    /// trusting the matrix.
     pub fn with_pack_axis() -> Self {
         SearchSpace {
             pack_kcs: vec![0, 64, 128, 256, 512],
             pack_mcs: vec![0, 32, 128, 512],
+            pack_mrs: vec![0, 4, 8],
             ..Default::default()
         }
     }
@@ -99,6 +107,7 @@ impl SearchSpace {
             * self.simds.len()
             * self.pack_kcs.len()
             * self.pack_mcs.len()
+            * self.pack_mrs.len()
     }
 
     /// Decode a flat index into a config (for grid enumeration).
@@ -108,13 +117,15 @@ impl SearchSpace {
         let nl = self.lres.len();
         let ns = self.simds.len();
         let nk = self.pack_kcs.len();
+        let nm = self.pack_mcs.len();
         Config {
             unroll: self.unrolls[idx % nu],
             n_tile: self.n_tiles[(idx / nu) % nt],
             lre: self.lres[(idx / (nu * nt)) % nl],
             simd: self.simds[(idx / (nu * nt * nl)) % ns],
             pack_kc: self.pack_kcs[(idx / (nu * nt * nl * ns)) % nk],
-            pack_mc: self.pack_mcs[(idx / (nu * nt * nl * ns * nk)) % self.pack_mcs.len()],
+            pack_mc: self.pack_mcs[(idx / (nu * nt * nl * ns * nk)) % nm],
+            pack_mr: self.pack_mrs[(idx / (nu * nt * nl * ns * nk * nm)) % self.pack_mrs.len()],
         }
     }
 
@@ -131,7 +142,7 @@ impl SearchSpace {
     /// Mutate one gene, chosen among the axes that can actually vary (a
     /// single-candidate axis would make the mutation a guaranteed no-op).
     pub fn mutate(&self, c: Config, rng: &mut crate::util::Rng) -> Config {
-        let mut axes = [0usize; 6];
+        let mut axes = [0usize; 7];
         let mut na = 0;
         for (axis, len) in [
             self.unrolls.len(),
@@ -140,6 +151,7 @@ impl SearchSpace {
             self.simds.len(),
             self.pack_kcs.len(),
             self.pack_mcs.len(),
+            self.pack_mrs.len(),
         ]
         .into_iter()
         .enumerate()
@@ -159,7 +171,8 @@ impl SearchSpace {
             2 => c.lre = self.lres[rng.index(self.lres.len())],
             3 => c.simd = self.simds[rng.index(self.simds.len())],
             4 => c.pack_kc = self.pack_kcs[rng.index(self.pack_kcs.len())],
-            _ => c.pack_mc = self.pack_mcs[rng.index(self.pack_mcs.len())],
+            5 => c.pack_mc = self.pack_mcs[rng.index(self.pack_mcs.len())],
+            _ => c.pack_mr = self.pack_mrs[rng.index(self.pack_mrs.len())],
         }
         c
     }
@@ -173,6 +186,7 @@ impl SearchSpace {
             simd: if rng.chance(0.5) { a.simd } else { b.simd },
             pack_kc: if rng.chance(0.5) { a.pack_kc } else { b.pack_kc },
             pack_mc: if rng.chance(0.5) { a.pack_mc } else { b.pack_mc },
+            pack_mr: if rng.chance(0.5) { a.pack_mr } else { b.pack_mr },
         }
     }
 }
@@ -188,7 +202,7 @@ mod tests {
         let all = s.all();
         assert_eq!(all.len(), s.size());
         let mut uniq = all.clone();
-        uniq.sort_by_key(|c| (c.unroll, c.n_tile, c.lre, c.simd, c.pack_kc, c.pack_mc));
+        uniq.sort_by_key(|c| (c.unroll, c.n_tile, c.lre, c.simd, c.pack_kc, c.pack_mc, c.pack_mr));
         uniq.dedup();
         assert_eq!(uniq.len(), all.len(), "decode must be injective");
     }
@@ -206,11 +220,11 @@ mod tests {
     fn pack_axis_expands_space() {
         let base = SearchSpace::default();
         let wide = SearchSpace::with_pack_axis();
-        assert_eq!(wide.size(), 20 * base.size());
-        assert!(wide.all().iter().any(|c| c.pack_kc == 256 && c.pack_mc == 128));
+        assert_eq!(wide.size(), 60 * base.size());
+        assert!(wide.all().iter().any(|c| c.pack_kc == 256 && c.pack_mc == 128 && c.pack_mr == 8));
         assert!(
-            base.all().iter().all(|c| c.pack_kc == 0 && c.pack_mc == 0),
-            "default space trusts the cache model"
+            base.all().iter().all(|c| c.pack_kc == 0 && c.pack_mc == 0 && c.pack_mr == 0),
+            "default space trusts the hardware matrix"
         );
         let uniq: std::collections::HashSet<_> = wide.all().into_iter().collect();
         assert_eq!(uniq.len(), wide.size(), "decode must stay injective with pack axes");
@@ -229,6 +243,7 @@ mod tests {
             assert!(s.simds.contains(&c.simd));
             assert!(s.pack_kcs.contains(&c.pack_kc));
             assert!(s.pack_mcs.contains(&c.pack_mc));
+            assert!(s.pack_mrs.contains(&c.pack_mr));
         }
     }
 
@@ -236,9 +251,24 @@ mod tests {
     fn crossover_mixes_genes() {
         let s = SearchSpace::default();
         let mut rng = Rng::new(2);
-        let a = Config { unroll: 1, n_tile: 16, lre: true, simd: true, pack_kc: 0, pack_mc: 0 };
-        let b =
-            Config { unroll: 8, n_tile: 128, lre: true, simd: true, pack_kc: 64, pack_mc: 32 };
+        let a = Config {
+            unroll: 1,
+            n_tile: 16,
+            lre: true,
+            simd: true,
+            pack_kc: 0,
+            pack_mc: 0,
+            pack_mr: 0,
+        };
+        let b = Config {
+            unroll: 8,
+            n_tile: 128,
+            lre: true,
+            simd: true,
+            pack_kc: 64,
+            pack_mc: 32,
+            pack_mr: 8,
+        };
         let c = s.crossover(a, b, &mut rng);
         assert!(c.unroll == 1 || c.unroll == 8);
         assert!(c.n_tile == 16 || c.n_tile == 128);

@@ -78,36 +78,54 @@ fn file_round_trip_and_pool_adaptation() {
     assert_eq!(mem.run(&x).unwrap(), aot.run(&x).unwrap());
 }
 
-/// Legacy v1 artifacts (work partitions embedded inside the packed
-/// structures) still load on the v2 runtime: the reader hoists the
-/// partitions into a synthesized `ScheduleSet` and the loaded engine is
-/// bit-identical to the v2 round-trip and to the in-memory plan — at
-/// the compile-time bucket count *and* after a pool-size rebalance.
+/// Legacy artifacts still load on the current runtime: v1 (work
+/// partitions embedded inside the packed structures) gets its
+/// partitions hoisted into a synthesized `ScheduleSet`; v2 (no
+/// hardware-matrix stats, no mixed-width grammar) reads with default
+/// stats. Both are bit-identical to the current-version round-trip and
+/// to the in-memory plan — at the compile-time bucket count *and* after
+/// a pool-size rebalance.
 #[test]
-fn v1_artifacts_still_load_bit_identically() {
+fn old_version_artifacts_still_load_bit_identically() {
     for (i, kind) in [ModelKind::Vgg16, ModelKind::Gru].iter().enumerate() {
         let plan = compiled(*kind, 740 + i as u64);
         let v1 = artifact::to_bytes_versioned(&plan, 1).unwrap();
         assert_eq!(u32::from_le_bytes(v1[4..8].try_into().unwrap()), 1, "v1 header version");
-        let v2 = artifact::to_bytes(&plan).unwrap();
+        let v2 = artifact::to_bytes_versioned(&plan, 2).unwrap();
         assert_eq!(u32::from_le_bytes(v2[4..8].try_into().unwrap()), 2, "v2 header version");
+        let v3 = artifact::to_bytes(&plan).unwrap();
+        assert_eq!(
+            u32::from_le_bytes(v3[4..8].try_into().unwrap()),
+            artifact::GRIMC_VERSION,
+            "current header version"
+        );
         let from_v1 = artifact::from_bytes(&v1).unwrap();
         let from_v2 = artifact::from_bytes(&v2).unwrap();
+        let from_v3 = artifact::from_bytes(&v3).unwrap();
         if plan.packing.enabled {
             assert!(
                 !from_v1.schedules.is_empty(),
                 "{kind:?}: v1 load must synthesize a schedule set"
             );
         }
+        // Pre-v3 files carry no hardware-matrix stats; the current
+        // version round-trips them exactly.
+        assert_eq!(from_v2.packing.hw_mr, 0, "{kind:?}: v2 stats must default");
+        assert_eq!(from_v3.packing.isa, plan.packing.isa, "{kind:?}: v3 must keep the ISA row");
+        assert_eq!(from_v3.packing.hw_mr, plan.packing.hw_mr, "{kind:?}");
+        assert_eq!(from_v3.packing.mixed_layers, plan.packing.mixed_layers, "{kind:?}");
+        assert_eq!(from_v3.packing.wide_groups, plan.packing.wide_groups, "{kind:?}");
         let mem = Engine::new(plan, 2);
         let e1 = Engine::new(from_v1, 2);
         let e2 = Engine::new(from_v2, 3); // different pool: rebalance leg
+        let e3 = Engine::new(from_v3, 2);
         let mut rng = Rng::new(0x6C00 + i as u64);
         for case in 0..2 {
             let x = input_for(&mem, &mut rng);
             let a = mem.run(&x).unwrap();
             assert_eq!(a, e1.run(&x).unwrap(), "{kind:?} case {case}: v1 artifact differs");
             assert_eq!(a, e2.run(&x).unwrap(), "{kind:?} case {case}: v2 artifact differs");
+            assert_eq!(a, e3.run(&x).unwrap(), "{kind:?} case {case}: v3 artifact differs");
         }
     }
 }

@@ -151,6 +151,87 @@ out = Add(fc1, fc2)
     assert_eq!(planned, naive, "aliased views must not change results");
 }
 
+/// In-place ReLU elision: a standalone ReLU that survived epilogue
+/// fusion (non-GEMM producer) and is its producer's final reader runs
+/// over the producer's buffer — no copy, no extra allocation — and the
+/// planned output stays bit-identical to the naive interpreter.
+#[test]
+fn final_reader_relu_aliases_producer() {
+    let module = grim::graph::dsl::parse(
+        r#"
+model "inplace-relu"
+in = Input(shape=[4,8,8])
+c1 = Conv2D(in, out_c=4, kh=3, kw=3, stride=1, pad=1)
+p1 = MaxPool2(c1)
+r1 = ReLU(p1)
+f1 = Flatten(r1)
+out = FC(f1, out_f=8)
+"#,
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x7B22);
+    let mut weights = grim::compiler::weights::WeightStore::new();
+    let w1 = Tensor::rand_uniform(&[4, 36], 0.5, &mut rng);
+    weights.insert("c1".into(), grim::compiler::weights::LayerWeights::dense(w1));
+    let w2 = Tensor::rand_uniform(&[8, 64], 0.5, &mut rng);
+    weights.insert("out".into(), grim::compiler::weights::LayerWeights::dense(w2));
+    let plan = compile(&module, &weights, CompileOptions::default()).unwrap();
+    // r1 (id 3) is p1's (id 2) only reader: the activation overwrites
+    // the pool output in place, and the downstream Flatten (id 4)
+    // aliases the same bytes in turn.
+    let p1 = plan.memory.value_range(2).expect("pool output planned");
+    assert_eq!(plan.memory.value_range(3), Some(p1), "r1 must alias p1");
+    assert_eq!(plan.memory.value_range(4), Some(p1), "f1 must alias r1");
+    let engine = Engine::new(plan, 1);
+    let x = Tensor::rand_uniform(&[4, 8, 8], 1.0, &mut rng);
+    assert_eq!(
+        engine.run(&x).unwrap(),
+        engine.run_naive(&x).unwrap(),
+        "in-place ReLU must not change results"
+    );
+}
+
+/// The elision must NOT fire when the producer has a later reader: a
+/// ReLU overwriting a branch point would corrupt the other branch.
+#[test]
+fn fanout_relu_keeps_its_own_buffer() {
+    let module = grim::graph::dsl::parse(
+        r#"
+model "fanout-relu"
+in = Input(shape=[4,8,8])
+c1 = Conv2D(in, out_c=4, kh=3, kw=3, stride=1, pad=1)
+p1 = MaxPool2(c1)
+r1 = ReLU(p1)
+f1 = Flatten(p1)
+f2 = Flatten(r1)
+fc1 = FC(f1, out_f=8)
+fc2 = FC(f2, out_f=8)
+out = Add(fc1, fc2)
+"#,
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x7C33);
+    let mut weights = grim::compiler::weights::WeightStore::new();
+    let w1 = Tensor::rand_uniform(&[4, 36], 0.5, &mut rng);
+    weights.insert("c1".into(), grim::compiler::weights::LayerWeights::dense(w1));
+    for name in ["fc1", "fc2"] {
+        let w = Tensor::rand_uniform(&[8, 64], 0.5, &mut rng);
+        weights.insert(name.into(), grim::compiler::weights::LayerWeights::dense(w));
+    }
+    let plan = compile(&module, &weights, CompileOptions::default()).unwrap();
+    // p1 (id 2) is also read by the Flatten at id 4, *after* the ReLU at
+    // id 3 — so r1 must get its own buffer and keep the copy.
+    let p1 = plan.memory.value_range(2).expect("pool output planned");
+    assert_ne!(plan.memory.value_range(3), Some(p1), "fan-out ReLU must not alias p1");
+    let engine = Engine::new(plan, 1);
+    let x = Tensor::rand_uniform(&[4, 8, 8], 1.0, &mut rng);
+    assert_eq!(
+        engine.run(&x).unwrap(),
+        engine.run_naive(&x).unwrap(),
+        "copied ReLU must match naive"
+    );
+}
+
 /// Dirty arenas must not leak between runs: run once, poison the arena,
 /// run again — outputs identical.
 #[test]

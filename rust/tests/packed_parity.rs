@@ -20,6 +20,7 @@ use grim::engine::Engine;
 use grim::gemm::bcrc_gemm::GemmParams;
 use grim::gemm::pack::{pack_bcrc, CacheParams, PackOverrides};
 use grim::gemm::simd;
+use grim::gemm::simd::{HwConfig, Isa};
 use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
 use grim::sparse::{Bcrc, BcrConfig, BcrMask};
 use grim::tensor::Tensor;
@@ -188,7 +189,7 @@ fn partition_assigns_every_nnz_exactly_once() {
                     &enc,
                     GemmParams::default(),
                     n_hint,
-                    CacheParams::default(),
+                    HwConfig::for_isa(Isa::Avx2Fma, CacheParams::default()),
                     PackOverrides::default(),
                 );
                 let part = p.lpt_partition(threads);
@@ -225,7 +226,7 @@ fn skewed_fixture_balances_within_ratio() {
         &enc,
         GemmParams::default(),
         64,
-        CacheParams::default(),
+        HwConfig::for_isa(Isa::Avx2Fma, CacheParams::default()),
         PackOverrides::default(),
     );
     let part = p.lpt_partition(threads);
@@ -260,7 +261,7 @@ fn index_compression_round_trips() {
         &enc,
         GemmParams::default(),
         32,
-        CacheParams::default(),
+        HwConfig::for_isa(Isa::Avx2Fma, CacheParams::default()),
         PackOverrides::default(),
     );
     assert!(p.is_u16());
@@ -288,7 +289,7 @@ fn index_compression_round_trips() {
         &wide,
         GemmParams::default(),
         1,
-        CacheParams::default(),
+        HwConfig::for_isa(Isa::Avx2Fma, CacheParams::default()),
         PackOverrides::default(),
     );
     assert!(!pw.is_u16(), "span > u16::MAX must fall back to u32");

@@ -1,0 +1,273 @@
+//! Register-tiled microkernel parity suite.
+//!
+//! The regtile path (one mr×n_tile block of C held in accumulators
+//! across a whole kc panel, epilogue applied in-register on the final
+//! K block) must be **bit-identical** to the unpacked axpy-through-
+//! memory path for every panel height 1..=max_mr, every j-tail shape
+//! (full vectors, one vector, scalar tail), degenerate kc, and every
+//! hardware-matrix row — on the dispatched vtable *and* the scalar
+//! table. CI re-runs this file under `GRIM_FORCE_AXPY=1`, where the
+//! same assertions pin the packed axpy fallback instead; the oversized-
+//! mr test exercises that fallback in-process regardless of the
+//! environment.
+
+use grim::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
+use grim::gemm::pack::{pack_bcrc, CacheParams, PackOverrides, PackedDense};
+use grim::gemm::simd::{self, HwConfig, Isa};
+use grim::gemm::tiled::{tiled_gemm_into_ep, tiled_gemm_packed_into_ep, TileParams};
+use grim::gemm::Epilogue;
+use grim::sparse::{Bcrc, BcrConfig, BcrMask};
+use grim::tensor::Tensor;
+use grim::util::{Rng, ThreadPool};
+use std::sync::Arc;
+
+fn random_enc(seed: u64, m: usize, k: usize, rate: f64) -> Bcrc {
+    let mut rng = Rng::new(seed);
+    let gr = (m / 4).max(1);
+    let gc = (k / 8).max(1);
+    let mask = BcrMask::random(m, k, BcrConfig::new(gr, gc), rate, &mut rng);
+    let mut w = Tensor::rand_uniform(&[m, k], 1.0, &mut rng);
+    mask.apply(&mut w);
+    Bcrc::from_masked(&w, &mask)
+}
+
+fn rand_x(seed: u64, k: usize, n: usize) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::rand_uniform(&[k, n], 1.0, &mut rng)
+}
+
+fn rand_bias(seed: u64, m: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    Tensor::rand_uniform(&[m], 1.0, &mut rng).data().to_vec()
+}
+
+/// Run packed (regtile) and unpacked (axpy) BCRC GEMM on identical
+/// inputs and assert bit-equality, on both kernel tables.
+#[allow(clippy::too_many_arguments)]
+fn assert_bcrc_parity(
+    enc: &Bcrc,
+    params: GemmParams,
+    hw: HwConfig,
+    ov: PackOverrides,
+    n: usize,
+    ep_bias: Option<&[f32]>,
+    seed: u64,
+    what: &str,
+) {
+    let p = pack_bcrc(enc, params, n, hw, ov);
+    p.validate_against(enc).unwrap_or_else(|e| panic!("{what}: {e}"));
+    let packed = BcrcGemm::new(enc.clone(), params).with_packed(Arc::new(p));
+    let plain = BcrcGemm::new(enc.clone(), params);
+    let x = rand_x(seed, enc.cols, n);
+    let eps = [
+        Epilogue::None,
+        Epilogue::Relu,
+        match ep_bias {
+            Some(b) => Epilogue::BiasRelu6(b),
+            None => Epilogue::Relu6,
+        },
+    ];
+    for mk in [simd::active(), simd::scalar()] {
+        for ep in eps {
+            let mut a = vec![0.0f32; enc.rows * n];
+            let mut b = vec![0.0f32; enc.rows * n];
+            let mut gather = vec![0.0f32; enc.max_group_cols()];
+            packed.execute_into_ep(x.data(), n, &mut a, &mut gather, mk, ep);
+            plain.execute_into_ep(x.data(), n, &mut b, &mut gather, mk, ep);
+            assert_eq!(a, b, "{what} [{} ep={ep:?}]: packed != unpacked", mk.name);
+        }
+    }
+}
+
+/// Every panel height the dispatch guard admits (1..=max_mr) must be
+/// bit-identical to the axpy path, across remainder-heavy shapes.
+#[test]
+fn panel_heights_sweep_bitwise() {
+    let max_mr = simd::active().tile.max_mr;
+    assert!(max_mr >= 1, "tile must admit at least scalar panels");
+    for mr in 1..=max_mr {
+        for (m, k, n) in [(7usize, 32usize, 5usize), (24, 48, 16), (36, 64, 17)] {
+            let enc = random_enc(0x51EE + mr as u64, m, k, 4.0);
+            let bias = rand_bias(0xB1A5 + mr as u64, m);
+            assert_bcrc_parity(
+                &enc,
+                GemmParams::default(),
+                HwConfig::for_isa(Isa::Avx2Fma, CacheParams::default()),
+                PackOverrides { kc: 0, mc: 0, mr },
+                n,
+                Some(&bias),
+                0x11AA + mr as u64,
+                &format!("mr={mr} m={m} k={k} n={n}"),
+            );
+        }
+    }
+}
+
+/// Degenerate cache blocks: kc=1 (one K step per panel, epilogue fires
+/// on every block boundary decision), tiny mc, and n tails of every
+/// flavor (sub-vector, one-vector, vector+scalar remainder).
+#[test]
+fn degenerate_blocks_and_n_tails() {
+    let enc = random_enc(0xDE6E, 24, 64, 5.0);
+    let bias = rand_bias(0xDE61, 24);
+    for kc in [1usize, 2, 5] {
+        for n in [2usize, 3, 8, 15, 16, 17, 33] {
+            assert_bcrc_parity(
+                &enc,
+                GemmParams { n_tile: 16, ..GemmParams::default() },
+                HwConfig::for_isa(Isa::Avx512f, CacheParams::default()),
+                PackOverrides { kc, mc: 8, mr: 0 },
+                n,
+                Some(&bias),
+                0x22BB + (kc * 100 + n) as u64,
+                &format!("kc={kc} n={n}"),
+            );
+        }
+    }
+}
+
+/// Every hardware-matrix row's prescribed (mr, blocking) stays
+/// bit-identical — layouts packed *for* another ISA still run correctly
+/// on this host's kernels (the guard only checks mr <= max_mr).
+#[test]
+fn hardware_matrix_rows_all_parity() {
+    let enc = random_enc(0x15A0, 40, 96, 6.0);
+    let bias = rand_bias(0x15A1, 40);
+    for isa in [Isa::Scalar, Isa::Avx2Fma, Isa::Avx512f, Isa::Neon] {
+        let hw = HwConfig::for_isa(isa, CacheParams::default());
+        let runnable = hw.mr <= simd::active().tile.max_mr;
+        assert!(runnable, "matrix rows must fit the universal max_mr");
+        assert_bcrc_parity(
+            &enc,
+            GemmParams::default(),
+            hw,
+            PackOverrides::default(),
+            13,
+            Some(&bias),
+            0x33CC + isa.to_u8() as u64,
+            &format!("isa={}", isa.name()),
+        );
+    }
+}
+
+/// A pack_mr above the tile's max_mr must take the in-process axpy
+/// fallback (same guard the `GRIM_FORCE_AXPY=1` env leg forces) and
+/// stay bit-identical.
+#[test]
+fn oversized_mr_takes_axpy_fallback() {
+    let enc = random_enc(0x0E51, 48, 96, 5.0);
+    let bias = rand_bias(0x0E52, 48);
+    let hw = HwConfig::for_isa(Isa::Avx2Fma, CacheParams::default());
+    let ov = PackOverrides { kc: 0, mc: 0, mr: 16 };
+    let p = pack_bcrc(&enc, GemmParams::default(), 13, hw, ov);
+    assert!(
+        p.shape.mr > simd::active().tile.max_mr,
+        "fixture must exceed the register-tile height"
+    );
+    assert_bcrc_parity(&enc, GemmParams::default(), hw, ov, 13, Some(&bias), 0x44DD, "mr=16");
+}
+
+/// lre=false and gemv-shaped layers pack to mr=1 row-major layouts;
+/// both must stay bit-identical (n=1 never enters the tile path, n>1
+/// runs height-1 panels).
+#[test]
+fn mr1_and_gemv_layouts_parity() {
+    let enc = random_enc(0x6E3F, 32, 64, 4.0);
+    let bias = rand_bias(0x6E30, 32);
+    let hw = HwConfig::for_isa(Isa::Avx2Fma, CacheParams::default());
+    // lre=false: mr=1 interleave, n>1.
+    assert_bcrc_parity(
+        &enc,
+        GemmParams { lre: false, ..GemmParams::default() },
+        hw,
+        PackOverrides::default(),
+        9,
+        Some(&bias),
+        0x55EE,
+        "lre=false",
+    );
+    // gemv: row-major packing, n=1.
+    assert_bcrc_parity(
+        &enc,
+        GemmParams::default(),
+        hw,
+        PackOverrides::default(),
+        1,
+        Some(&bias),
+        0x55EF,
+        "gemv",
+    );
+}
+
+/// The parallel packed path (static LPT schedule over the same layout)
+/// agrees with the serial regtile path bit-for-bit at several bucket
+/// counts.
+#[test]
+fn parallel_regtile_matches_serial() {
+    let enc = random_enc(0x9A10, 56, 96, 5.0);
+    let params = GemmParams::default();
+    let hw = HwConfig::for_isa(Isa::Avx512f, CacheParams::default());
+    let p = Arc::new(pack_bcrc(&enc, params, 16, hw, PackOverrides::default()));
+    let gemm = BcrcGemm::new(enc.clone(), params).with_packed(Arc::clone(&p));
+    let bias = rand_bias(0x9A11, enc.rows);
+    let x = rand_x(0x9A12, enc.cols, 16);
+    let mut serial = vec![0.0f32; enc.rows * 16];
+    let mut gather = vec![0.0f32; enc.max_group_cols()];
+    gemm.execute_into_ep(
+        x.data(),
+        16,
+        &mut serial,
+        &mut gather,
+        simd::active(),
+        Epilogue::BiasRelu(&bias),
+    );
+    for threads in [1usize, 2, 5] {
+        let pool = ThreadPool::new(threads);
+        let part = Arc::new(p.lpt_partition(threads));
+        let mut par = vec![0.0f32; enc.rows * 16];
+        gemm.execute_parallel_into_ep(
+            x.data(),
+            16,
+            &mut par,
+            Some(&part),
+            &pool,
+            simd::active(),
+            Epilogue::BiasRelu(&bias),
+        );
+        assert_eq!(serial, par, "threads={threads}: parallel != serial");
+    }
+}
+
+/// Packed-dense regtile panels (contiguous column tiles) are bit-
+/// identical to the strided tiled kernel across mr clamps, degenerate
+/// kc, and n tails — serial path, both kernel tables.
+#[test]
+fn dense_packed_regtile_parity() {
+    let mut rng = Rng::new(0xD3A5);
+    for (m, k) in [(5usize, 16usize), (24, 48), (31, 96)] {
+        let w = Tensor::rand_uniform(&[m, k], 1.0, &mut rng);
+        let bias = rand_bias(0xD3A6, m);
+        for mr in [1usize, 2, 4] {
+            for kc in [1usize, 7, 256] {
+                let p = TileParams { mr, kc, nc: 32 };
+                let pd = PackedDense::pack(&w, p);
+                for n in [2usize, 8, 17] {
+                    let x = rand_x(0xD3A7 + n as u64, k, n);
+                    for mk in [simd::active(), simd::scalar()] {
+                        for ep in [Epilogue::None, Epilogue::BiasRelu(&bias)] {
+                            let mut a = vec![0.0f32; m * n];
+                            let mut b = vec![0.0f32; m * n];
+                            tiled_gemm_packed_into_ep(&pd, x.data(), n, p, &mut a, mk, ep);
+                            tiled_gemm_into_ep(&w, x.data(), n, p, &mut b, mk, ep);
+                            assert_eq!(
+                                a, b,
+                                "dense m={m} k={k} mr={mr} kc={kc} n={n} [{}]: packed != strided",
+                                mk.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Multi-model serving benchmark: the same two-model workload driven
+//! through the coordinator once with serial dispatch (`max_inflight = 1`,
+//! the pre-lane scheduler) and once with concurrent dispatcher lanes.
+//! Reports wall time, throughput, and per-model p50/p99, and emits the
+//! stable `BENCH_serve.json` artifact (plus the usual `bench_out/`
+//! report). Run via `cargo bench --bench bench_serve` (`-- --quick` or
+//! `GRIM_BENCH_QUICK=1` for a fast pass).
+
+use grim::bench::{quick_mode, Report};
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::coordinator::{BatchPolicy, Server, ServerConfig};
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::serving::ModelRegistry;
+use grim::tensor::Tensor;
+use grim::util::json::{self, Json};
+use grim::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const THREADS: usize = 4;
+const CLIENTS_PER_MODEL: u64 = 2;
+
+fn plan_for(kind: ModelKind, preset: Preset, seed: u64) -> grim::compiler::ExecutionPlan {
+    let opts = InitOptions { rate: 8.0, block: [4, 16], seed };
+    let m = build_model(kind, preset, opts);
+    let w = random_weights(&m, opts);
+    compile(&m, &w, CompileOptions::default()).unwrap()
+}
+
+struct RunResult {
+    wall_ms: f64,
+    throughput_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    per_model: Vec<(String, f64, f64)>,
+    lanes: usize,
+}
+
+/// Drive `reqs_per_client` requests per client thread per model through
+/// a fresh two-model server with `lanes` dispatcher lanes.
+fn run_workload(lanes: usize, reqs_per_client: usize) -> RunResult {
+    let registry = Arc::new(ModelRegistry::new(THREADS));
+    registry.insert_plan("cnn", plan_for(ModelKind::Vgg16, Preset::CifarMini, 5));
+    registry.insert_plan("rnn", plan_for(ModelKind::Gru, Preset::TimitMini, 6));
+    let config = ServerConfig {
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        max_inflight: Some(lanes),
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::start_registry(Arc::clone(&registry), config));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for model in ["cnn", "rnn"] {
+        for c in 0..CLIENTS_PER_MODEL {
+            let s = Arc::clone(&server);
+            let reg = Arc::clone(&registry);
+            let name = model.to_string();
+            handles.push(std::thread::spawn(move || {
+                let engine = reg.get(&name).expect("model resident");
+                let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+                let mut rng = Rng::new(100 * c + 9);
+                for _ in 0..reqs_per_client {
+                    let x = Tensor::rand_uniform(&dims, 1.0, &mut rng);
+                    s.infer_on(&name, x).expect("bench request failed");
+                }
+            }));
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let lanes = server.dispatch_lanes();
+    let server = Arc::try_unwrap(server).unwrap_or_else(|_| panic!("clients done"));
+    let stats = server.shutdown();
+    RunResult {
+        wall_ms,
+        throughput_rps: stats.completed as f64 / (wall_ms * 1e-3),
+        p50_ms: stats.latency_ms.p50,
+        p99_ms: stats.latency_ms.p99,
+        per_model: stats
+            .per_model
+            .iter()
+            .map(|(n, s)| (n.clone(), s.p50, s.p99))
+            .collect(),
+        lanes,
+    }
+}
+
+fn result_json(r: &RunResult) -> Json {
+    let mut o = Json::obj();
+    o.set("lanes", Json::Num(r.lanes as f64))
+        .set("wall_ms", Json::Num(r.wall_ms))
+        .set("throughput_rps", Json::Num(r.throughput_rps))
+        .set("p50_ms", Json::Num(r.p50_ms))
+        .set("p99_ms", Json::Num(r.p99_ms));
+    let mut pm = Json::obj();
+    for (name, p50, p99) in &r.per_model {
+        let mut m = Json::obj();
+        m.set("p50_ms", Json::Num(*p50)).set("p99_ms", Json::Num(*p99));
+        pm.set(name, m);
+    }
+    o.set("per_model", pm);
+    o
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode() || std::env::args().any(|a| a == "--quick");
+    let reqs = if quick { 6 } else { 24 };
+    println!(
+        "serve bench: 2 models x {CLIENTS_PER_MODEL} clients x {reqs} requests, {THREADS} runtime threads"
+    );
+
+    // Warm the page cache / lazy init outside the timed runs.
+    let _ = run_workload(1, 2);
+
+    let serial = run_workload(1, reqs);
+    let concurrent = run_workload(2, reqs);
+    let speedup = serial.wall_ms / concurrent.wall_ms;
+
+    let mut rep = Report::new(
+        "serve",
+        "Multi-model serving: serial vs concurrent dispatch",
+        &["dispatch", "lanes", "wall ms", "rps", "p50 ms", "p99 ms"],
+    );
+    for (label, r) in [("serial", &serial), ("concurrent", &concurrent)] {
+        rep.row(vec![
+            label.into(),
+            r.lanes.to_string(),
+            format!("{:.1}", r.wall_ms),
+            format!("{:.1}", r.throughput_rps),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p99_ms),
+        ]);
+    }
+    rep.meta.set("speedup", Json::Num(speedup));
+    rep.finish();
+    println!("concurrent dispatch speedup: {speedup:.2}x wall-clock");
+
+    // The stable cross-PR artifact.
+    let mut doc = Json::obj();
+    doc.set("quick", Json::Bool(quick))
+        .set("threads", Json::Num(THREADS as f64))
+        .set("clients_per_model", Json::Num(CLIENTS_PER_MODEL as f64))
+        .set("requests_per_client", Json::Num(reqs as f64))
+        .set("serial", result_json(&serial))
+        .set("concurrent", result_json(&concurrent))
+        .set("dispatch_speedup", Json::Num(speedup));
+    std::fs::write("BENCH_serve.json", doc.to_pretty())?;
+    // sanity: the artifact must parse back
+    json::parse(&std::fs::read_to_string("BENCH_serve.json")?)?;
+    println!("wrote BENCH_serve.json");
+    Ok(())
+}

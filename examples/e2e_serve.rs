@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
     let config = ServerConfig {
         queue_capacity: 256,
         batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+        ..ServerConfig::default()
     };
     let server = Server::start(engine, config);
 

@@ -79,6 +79,7 @@ fn main() -> anyhow::Result<()> {
         ServerConfig {
             queue_capacity: 128,
             batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+            ..ServerConfig::default()
         },
     ));
 

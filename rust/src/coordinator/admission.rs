@@ -1,0 +1,208 @@
+//! Registry-aware admission control: a request for a model that is not
+//! resident — but whose `.grimc` artifact exists in the registry's
+//! artifact directory — is **parked** in a bounded pending set while the
+//! artifact is loaded on a background thread, then re-enqueued, instead
+//! of failing with [`ServeError::ModelNotResident`].
+//!
+//! Invariants (all maintained under the one `parked` lock):
+//!
+//! * A model with parked requests always has a loader in flight: parking
+//!   and the loader-liveness check happen under the lock, and a loader
+//!   drains its model's parked list in the same critical section in
+//!   which it retires itself — a request parked after that drain finds
+//!   no loader registered and spawns a fresh one (which finds the model
+//!   resident and turns into a cheap re-enqueue).
+//! * Parked requests are bounded by `pending_cap` across all models;
+//!   overflow is rejected back to the dispatcher, which fails those
+//!   requests with the classic typed error.
+//! * A request re-enqueued after a background load carries
+//!   `requeued = true`; if it misses again (the model was evicted in
+//!   between) it fails immediately rather than looping park → load →
+//!   evict forever.
+
+use super::queue::{InferRequest, InferResponse, RequestQueue, ServeError};
+use super::server::PendingMap;
+use crate::obs::Counter;
+use crate::serving::ModelRegistry;
+use crate::tensor::Tensor;
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Requests waiting out a background load, plus loader liveness.
+struct Parked {
+    by_model: HashMap<String, Vec<InferRequest>>,
+    /// Total parked requests across models (bounded by the cap).
+    total: usize,
+    /// Models with a loader thread in flight.
+    loading: HashSet<String>,
+}
+
+/// The admission controller shared by every dispatcher lane.
+pub(crate) struct Admission {
+    registry: Arc<ModelRegistry>,
+    queue: Arc<RequestQueue>,
+    pending_resp: Arc<PendingMap>,
+    parked: Mutex<Parked>,
+    cap: usize,
+    /// `grim_background_loads_total{result="ok"|"failed"}`.
+    loads_ok: Arc<Counter>,
+    loads_failed: Arc<Counter>,
+    loaders: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Admission {
+    pub fn new(
+        registry: Arc<ModelRegistry>,
+        queue: Arc<RequestQueue>,
+        pending_resp: Arc<PendingMap>,
+        cap: usize,
+        loads_ok: Arc<Counter>,
+        loads_failed: Arc<Counter>,
+    ) -> Arc<Admission> {
+        Arc::new(Admission {
+            registry,
+            queue,
+            pending_resp,
+            parked: Mutex::new(Parked {
+                by_model: HashMap::new(),
+                total: 0,
+                loading: HashSet::new(),
+            }),
+            cap,
+            loads_ok,
+            loads_failed,
+            loaders: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Try to park `reqs` (all targeting non-resident `model`) for a
+    /// background artifact load. Returns the requests that could NOT be
+    /// admitted — no artifact on disk, pending set full, or the request
+    /// already went around once (`requeued`) — which the caller must
+    /// fail with the typed error. An empty return means every request
+    /// was parked and will be answered later.
+    pub fn try_admit(self: &Arc<Self>, model: &str, reqs: Vec<InferRequest>) -> Vec<InferRequest> {
+        let Some(path) = self.registry.artifact_path_for(model) else {
+            return reqs;
+        };
+        let mut rejected = Vec::new();
+        let spawn_loader = {
+            let mut g = self.parked.lock().unwrap();
+            for req in reqs {
+                if req.requeued || g.total >= self.cap {
+                    rejected.push(req);
+                } else {
+                    g.total += 1;
+                    g.by_model.entry(model.to_string()).or_default().push(req);
+                }
+            }
+            let has_parked = g.by_model.get(model).is_some_and(|v| !v.is_empty());
+            has_parked && g.loading.insert(model.to_string())
+        };
+        if spawn_loader {
+            let this = Arc::clone(self);
+            let name = model.to_string();
+            let handle = std::thread::Builder::new()
+                .name(format!("grim-load-{model}"))
+                .spawn(move || this.run_load(&name, &path))
+                .expect("spawn background loader");
+            self.loaders.lock().unwrap().push(handle);
+        }
+        rejected
+    }
+
+    /// Loader thread body: load the artifact (unless the model raced
+    /// back in through another path), then drain this model's parked
+    /// requests — re-enqueue on success, fail them on error.
+    fn run_load(&self, model: &str, path: &Path) {
+        // Off the request path: dispatcher lanes keep executing resident
+        // models' batches while this thread pays the artifact I/O.
+        let result = if self.registry.get(model).is_some() {
+            Ok(())
+        } else {
+            self.registry.load_file(model.to_string(), path).map(|_| ())
+        };
+        // Retire the loader and take the parked list in ONE critical
+        // section — see the module invariants.
+        let reqs = {
+            let mut g = self.parked.lock().unwrap();
+            g.loading.remove(model);
+            let reqs = g.by_model.remove(model).unwrap_or_default();
+            g.total -= reqs.len();
+            reqs
+        };
+        match result {
+            Ok(()) => {
+                self.loads_ok.inc();
+                for mut req in reqs {
+                    req.requeued = true;
+                    // Re-enqueued requests keep their original `enqueued`
+                    // stamp, so their latency honestly includes the park.
+                    if let Err(req) = self.queue.push(req) {
+                        // Queue closed (shutdown): answer directly.
+                        self.fail(&req, model);
+                    }
+                }
+            }
+            Err(e) => {
+                self.loads_failed.inc();
+                eprintln!("background load of '{model}' from {} failed: {e}", path.display());
+                for req in reqs {
+                    self.fail(&req, model);
+                }
+            }
+        }
+    }
+
+    fn fail(&self, req: &InferRequest, model: &str) {
+        super::server::respond_error(
+            &self.pending_resp,
+            req,
+            ServeError::ModelNotResident { model: model.to_string() },
+        );
+    }
+
+    /// Currently parked requests (tests / stats).
+    pub fn parked_total(&self) -> usize {
+        self.parked.lock().unwrap().total
+    }
+
+    /// Shutdown: join loader threads (their queue pushes fail once the
+    /// queue is closed and turn into direct error responses), then fail
+    /// anything still parked. Idempotent.
+    pub fn shutdown(&self) {
+        let handles: Vec<_> = self.loaders.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let leftovers: Vec<(String, Vec<InferRequest>)> = {
+            let mut g = self.parked.lock().unwrap();
+            g.total = 0;
+            g.by_model.drain().collect()
+        };
+        for (model, reqs) in leftovers {
+            for req in reqs {
+                self.fail(&req, &model);
+            }
+        }
+    }
+}
+
+/// Placeholder output for error responses.
+pub(crate) fn error_output() -> Tensor {
+    Tensor::zeros(&[1])
+}
+
+/// Build the error [`InferResponse`] for `req` (shared by the dispatcher
+/// lanes and the admission controller).
+pub(crate) fn error_response(req: &InferRequest, error: ServeError) -> InferResponse {
+    InferResponse {
+        id: req.id,
+        output: error_output(),
+        queue_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
+        batch_ms: 0.0,
+        exec_ms: 0.0,
+        error: Some(error),
+    }
+}

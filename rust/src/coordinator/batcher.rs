@@ -128,16 +128,18 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64) -> InferRequest {
-        InferRequest { id, model: None, input: Tensor::zeros(&[1]), enqueued: Instant::now() }
+        InferRequest {
+            id,
+            model: None,
+            input: Tensor::zeros(&[1]),
+            enqueued: Instant::now(),
+            deadline: None,
+            requeued: false,
+        }
     }
 
     fn req_for(id: u64, model: &str) -> InferRequest {
-        InferRequest {
-            id,
-            model: Some(model.to_string()),
-            input: Tensor::zeros(&[1]),
-            enqueued: Instant::now(),
-        }
+        InferRequest { model: Some(model.to_string()), ..req(id) }
     }
 
     /// Batches never mix models, preserve FIFO order, and a head-of-line

@@ -1,0 +1,418 @@
+//! Minimal std-only HTTP/JSON serving front end: an accept-loop thread
+//! plus one short-lived handler thread per connection (no async runtime
+//! — the vendored dependency set has no tokio/hyper, and the coordinator
+//! already is the concurrency layer: handlers block on the same
+//! [`Server`] submit/recv path every in-process client uses, so HTTP
+//! adds an ingress, not a second scheduler).
+//!
+//! Endpoints:
+//!
+//! * `GET /healthz` — liveness, `{"status":"ok"}`.
+//! * `GET /metrics` — the full Prometheus text surface
+//!   ([`Server::render_prometheus`]).
+//! * `GET /stats` — JSON snapshot of [`Server::stats`].
+//! * `POST /v1/infer` — run one request. Body (all fields optional):
+//!   `{"model": "name", "input": [floats] | "random", "shape": [dims],
+//!   "deadline_ms": N}`. Omitted/`"random"` input synthesizes a uniform
+//!   random tensor of the target model's input shape (`"shape"`
+//!   overrides), so a smoke test needs no float payload. Typed serve
+//!   errors map to status codes: deadline → 504, not-resident/no-default
+//!   → 404, execution → 400.
+
+use super::queue::ServeError;
+use super::server::Server;
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+use crate::util::Rng;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Largest accepted request body (a [3,32,32] CIFAR input is ~40 KB of
+/// JSON floats; 8 MiB leaves headroom without letting one socket OOM
+/// the process).
+const MAX_BODY: usize = 8 << 20;
+/// Largest accepted header block.
+const MAX_HEAD: usize = 64 << 10;
+
+/// A running HTTP ingress bound to one [`Server`].
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    handled: Arc<AtomicU64>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`; port 0 picks a free port)
+    /// and start accepting connections against `server`.
+    pub fn start(server: Arc<Server>, addr: &str) -> anyhow::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("http bind {addr} failed: {e}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let handled = Arc::new(AtomicU64::new(0));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let handled = Arc::clone(&handled);
+            std::thread::Builder::new()
+                .name("grim-http".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        let server = Arc::clone(&server);
+                        let handled = Arc::clone(&handled);
+                        // Handlers are detached: each serves exactly one
+                        // request (Connection: close) with read timeouts,
+                        // so they cannot outlive shutdown by much.
+                        let _ = std::thread::Builder::new()
+                            .name("grim-http-conn".into())
+                            .spawn(move || {
+                                handle_connection(&server, stream);
+                                handled.fetch_add(1, Ordering::Relaxed);
+                            });
+                    }
+                })
+                .expect("spawn http accept loop")
+        };
+        Ok(HttpServer { addr: local, stop, accept: Some(accept), handled })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections served so far.
+    pub fn handled(&self) -> u64 {
+        self.handled.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and join the accept loop. In-flight handlers
+    /// finish their one request on their own threads.
+    pub fn shutdown(mut self) {
+        self.stop_accepting();
+    }
+
+    fn stop_accepting(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Poke the blocking accept() so it observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_accepting();
+    }
+}
+
+fn handle_connection(server: &Server, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let (status, content_type, body) = match read_request(&mut stream) {
+        Ok(req) => route(server, &req),
+        Err(e) => (400, "application/json", err_json(&e)),
+    };
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        504 => "Gateway Timeout",
+        _ => "Error",
+    };
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// Read one HTTP/1.1 request: header block to CRLFCRLF, then exactly
+/// `Content-Length` body bytes.
+fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(p) = find_head_end(&buf) {
+            break p;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err("header block too large".into());
+        }
+        let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-request".into());
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.lines();
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().map_err(|_| "bad content-length")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(format!("body too large ({content_length} bytes)"));
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).map_err(|e| format!("read body: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-body".into());
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let body = String::from_utf8(body).map_err(|_| "body is not utf-8")?;
+    Ok(Request { method, path, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn route(server: &Server, req: &Request) -> (u16, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let mut o = Json::obj();
+            o.set("status", Json::Str("ok".into()));
+            (200, "application/json", o.to_string())
+        }
+        ("GET", "/metrics") => (200, "text/plain; version=0.0.4", server.render_prometheus()),
+        ("GET", "/stats") => (200, "application/json", stats_json(server)),
+        ("POST", "/v1/infer") => handle_infer(server, &req.body),
+        ("GET" | "POST", _) => (404, "application/json", err_json("no such endpoint")),
+        _ => (405, "application/json", err_json("method not allowed")),
+    }
+}
+
+fn stats_json(server: &Server) -> String {
+    let st = server.stats();
+    let mut o = Json::obj();
+    o.set("completed", Json::Num(st.completed as f64));
+    o.set("failed", Json::Num(st.failed as f64));
+    o.set("expired", Json::Num(st.expired as f64));
+    o.set("batches", Json::Num(st.batches as f64));
+    o.set("dispatch_lanes", Json::Num(st.dispatch_lanes as f64));
+    o.set("inflight_batches", Json::Num(server.inflight_batches() as f64));
+    o.set("throughput_rps", Json::Num(st.throughput_rps));
+    o.set("latency_p50_ms", Json::Num(st.latency_ms.p50));
+    o.set("latency_p99_ms", Json::Num(st.latency_ms.p99));
+    let mut models = Json::obj();
+    for (name, s) in &st.per_model {
+        let mut m = Json::obj();
+        m.set("count", Json::Num(s.count as f64));
+        m.set("p50_ms", Json::Num(s.p50));
+        m.set("p99_ms", Json::Num(s.p99));
+        models.set(name, m);
+    }
+    o.set("per_model", models);
+    o.to_string()
+}
+
+/// Fresh per-request seed for synthesized `"random"` inputs.
+static INFER_SEED: AtomicU64 = AtomicU64::new(0x9e37);
+
+fn handle_infer(server: &Server, body: &str) -> (u16, &'static str, String) {
+    let parsed = if body.trim().is_empty() {
+        Json::obj()
+    } else {
+        match json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return (400, "application/json", err_json(&format!("bad json: {e}"))),
+        }
+    };
+    let model = parsed.get("model").and_then(|m| m.as_str()).map(str::to_string);
+    let deadline = parsed.get("deadline_ms").and_then(|d| d.as_f64());
+    let shape: Option<Vec<usize>> = parsed
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect());
+    // The target model's compiled input shape backs `"random"` inputs
+    // and validates explicit ones; unknown for non-resident models (the
+    // client must then send an explicit shape).
+    let model_shape: Option<Vec<usize>> = model
+        .as_deref()
+        .or(server.default_model())
+        .and_then(|n| server.registry().get(n))
+        .map(|e| e.plan().memory.shapes[e.plan().input_id].clone());
+    let input = match parsed.get("input") {
+        Some(Json::Arr(vals)) => {
+            let data: Vec<f32> = vals.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
+            if data.len() != vals.len() {
+                return (400, "application/json", err_json("input must be an array of numbers"));
+            }
+            let Some(dims) = shape.or(model_shape) else {
+                return (400, "application/json", err_json("model is not resident; send \"shape\""));
+            };
+            if dims.iter().product::<usize>() != data.len() {
+                return (
+                    400,
+                    "application/json",
+                    err_json(&format!("input has {} values but shape {dims:?} needs {}",
+                        data.len(), dims.iter().product::<usize>())),
+                );
+            }
+            Tensor::from_vec(&dims, data)
+        }
+        None | Some(Json::Str(_)) => {
+            // "random" (or omitted): synthesize — the smoke-test path.
+            let Some(dims) = shape.or(model_shape) else {
+                return (400, "application/json", err_json("model is not resident; send \"shape\""));
+            };
+            let mut rng = Rng::new(INFER_SEED.fetch_add(1, Ordering::Relaxed));
+            Tensor::rand_uniform(&dims, 1.0, &mut rng)
+        }
+        Some(_) => {
+            return (400, "application/json", err_json("input must be an array or \"random\""))
+        }
+    };
+    let submitted = match deadline {
+        Some(ms) => server.submit_with_deadline(
+            model.as_deref(),
+            input,
+            Duration::from_secs_f64((ms / 1e3).max(0.0)),
+        ),
+        None => match &model {
+            Some(m) => server.submit_to(m, input),
+            None => server.submit(input),
+        },
+    };
+    let rx = match submitted {
+        Ok(rx) => rx,
+        Err(e) => return (503, "application/json", err_json(&e.to_string())),
+    };
+    let resp = match rx.recv() {
+        Ok(r) => r,
+        Err(_) => return (500, "application/json", err_json("server dropped request")),
+    };
+    if let Some(err) = &resp.error {
+        let status = match err {
+            ServeError::DeadlineExceeded => 504,
+            ServeError::ModelNotResident { .. } | ServeError::NoDefaultModel => 404,
+            ServeError::Exec(_) => 400,
+        };
+        return (status, "application/json", err_json(&err.to_string()));
+    }
+    let mut o = Json::obj();
+    o.set("id", Json::Num(resp.id as f64));
+    o.set("argmax", Json::Num(resp.output.argmax() as f64));
+    o.set("numel", Json::Num(resp.output.numel() as f64));
+    o.set("output", json::num_arr(resp.output.data().iter().map(|&x| x as f64)));
+    o.set("queue_ms", Json::Num(resp.queue_ms));
+    o.set("batch_ms", Json::Num(resp.batch_ms));
+    o.set("exec_ms", Json::Num(resp.exec_ms));
+    (200, "application/json", o.to_string())
+}
+
+fn err_json(msg: &str) -> String {
+    let mut o = Json::obj();
+    o.set("error", Json::Str(msg.to_string()));
+    o.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::{compile, CompileOptions};
+    use crate::engine::Engine;
+    use crate::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+    use crate::coordinator::ServerConfig;
+
+    fn small_server() -> Arc<Server> {
+        let opts = InitOptions { rate: 4.0, block: [4, 16], seed: 3 };
+        let m = build_model(ModelKind::Gru, Preset::TimitMini, opts);
+        let w = random_weights(&m, opts);
+        let plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        Arc::new(Server::start(Engine::new(plan, 2), ServerConfig::default()))
+    }
+
+    fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+        http_request(addr, &format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n"))
+    }
+
+    fn http_request(addr: SocketAddr, raw: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        let status: u16 = resp.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let body = resp.split("\r\n\r\n").nth(1).unwrap_or_default().to_string();
+        (status, body)
+    }
+
+    #[test]
+    fn http_end_to_end() {
+        let server = small_server();
+        let http = HttpServer::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let addr = http.local_addr();
+
+        let (status, body) = http_get(addr, "/healthz");
+        assert_eq!(status, 200);
+        assert!(body.contains("ok"), "{body}");
+
+        // Random-input inference — the curl-smoke path: no payload
+        // beyond an empty JSON object.
+        let req = "POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: 2\r\n\r\n{}";
+        let (status, body) = http_request(addr, req);
+        assert_eq!(status, 200, "{body}");
+        let j = json::parse(&body).unwrap();
+        assert_eq!(j.get("numel").and_then(|n| n.as_usize()), Some(40));
+
+        // Explicit input with the wrong element count is a 400, not a
+        // panic or a 200 with garbage.
+        let bad = r#"{"input": [1.0, 2.0], "shape": [3]}"#;
+        let req =
+            format!("POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{bad}", bad.len());
+        let (status, body) = http_request(addr, &req);
+        assert_eq!(status, 400, "{body}");
+
+        // Unknown model → typed 404 (no artifact dir, nothing to load).
+        let miss = r#"{"model": "nope", "shape": [4]}"#;
+        let req = format!(
+            "POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{miss}",
+            miss.len()
+        );
+        let (status, body) = http_request(addr, &req);
+        assert_eq!(status, 404, "{body}");
+        assert!(body.contains("not resident"), "{body}");
+
+        let (status, body) = http_get(addr, "/metrics");
+        assert_eq!(status, 200);
+        assert!(body.contains("grim_dispatch_lanes"), "{body}");
+        let (status, body) = http_get(addr, "/stats");
+        assert_eq!(status, 200);
+        assert!(body.contains("dispatch_lanes"), "{body}");
+
+        let (status, _) = http_get(addr, "/nope");
+        assert_eq!(status, 404);
+
+        assert!(http.handled() >= 6);
+        http.shutdown();
+    }
+}

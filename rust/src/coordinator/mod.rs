@@ -4,13 +4,19 @@
 //! GRIM's paper targets single-stream real-time inference (30 fps); a
 //! deployed mobile runtime still multiplexes streams (camera + audio), so
 //! the coordinator provides the full serving loop: bounded queueing with
-//! backpressure, deadline-aware batching, and per-request latency
-//! percentiles. This is the request path — all-Rust, no Python.
+//! backpressure, deadline-aware batching, concurrent multi-model dispatch
+//! over a pool of lanes ([`server`]), registry-aware admission control
+//! with background artifact loads ([`admission`]), an HTTP/JSON ingress
+//! ([`http`]), and per-request latency percentiles. This is the request
+//! path — all-Rust, no Python.
 
 pub mod queue;
 pub mod batcher;
+pub(crate) mod admission;
 pub mod server;
+pub mod http;
 
 pub use batcher::{Batch, Batcher, BatchPolicy};
+pub use http::HttpServer;
 pub use queue::{InferRequest, InferResponse, RequestQueue, ServeError};
 pub use server::{Server, ServerConfig, ServerStats};

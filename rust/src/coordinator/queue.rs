@@ -12,10 +12,16 @@ use std::time::Instant;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
     /// The request named a model the registry does not currently hold
-    /// (never loaded, or LRU-evicted while the request sat queued).
+    /// (never loaded, or LRU-evicted while the request sat queued) and
+    /// admission control could not park it for a background load
+    /// (no artifact on disk, pending queue full, or the load failed).
     ModelNotResident { model: String },
     /// The request named no model and the server has no default.
     NoDefaultModel,
+    /// The request's deadline passed before a dispatcher lane picked it
+    /// up — the scheduler drops dead work at dequeue instead of burning
+    /// kernel time on an answer nobody is waiting for.
+    DeadlineExceeded,
     /// The target engine rejected or failed the request.
     Exec(String),
 }
@@ -28,6 +34,9 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::NoDefaultModel => {
                 write!(f, "request names no model and the server has no default")
+            }
+            ServeError::DeadlineExceeded => {
+                write!(f, "request deadline expired before dispatch")
             }
             ServeError::Exec(e) => write!(f, "{e}"),
         }
@@ -45,6 +54,14 @@ pub struct InferRequest {
     pub model: Option<String>,
     pub input: Tensor,
     pub enqueued: Instant,
+    /// Drop-dead time: a dispatcher lane that dequeues the request after
+    /// this instant responds [`ServeError::DeadlineExceeded`] without
+    /// executing it. `None` = no deadline.
+    pub deadline: Option<Instant>,
+    /// Set when admission control re-enqueued the request after a
+    /// background model load — a second miss then fails immediately
+    /// instead of parking again (bounds the park→load→evict loop).
+    pub requeued: bool,
 }
 
 /// One inference response.
@@ -194,16 +211,18 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64) -> InferRequest {
-        InferRequest { id, model: None, input: Tensor::zeros(&[1]), enqueued: Instant::now() }
+        InferRequest {
+            id,
+            model: None,
+            input: Tensor::zeros(&[1]),
+            enqueued: Instant::now(),
+            deadline: None,
+            requeued: false,
+        }
     }
 
     fn req_for(id: u64, model: &str) -> InferRequest {
-        InferRequest {
-            id,
-            model: Some(model.to_string()),
-            input: Tensor::zeros(&[1]),
-            enqueued: Instant::now(),
-        }
+        InferRequest { model: Some(model.to_string()), ..req(id) }
     }
 
     #[test]

@@ -1,43 +1,90 @@
-//! The serving loop: a scheduler thread pulls batches and executes them on
-//! the target engine; clients submit via a handle and receive responses
-//! over per-request channels.
+//! The serving loop: a batch-former thread pulls model-homogeneous
+//! batches from the request queue and ships them over a bounded channel
+//! to a pool of **dispatcher lanes**, which execute batches concurrently
+//! on the shared [`crate::exec::Runtime`]; clients submit via a handle
+//! and receive responses over per-request channels.
 //!
-//! Routing is by model name, threaded end to end through the coordinator:
-//! every [`InferRequest`] names its target model (or `None` for the
-//! server's default), the batcher forms model-homogeneous batches, and
-//! the scheduler resolves each batch's name against a
-//! [`ModelRegistry`] at execution time. A single-model
-//! [`Server::start`] is just a registry of one with that model as the
-//! default; [`Server::start_registry`] serves as many models as the
-//! registry holds, each with its own isolated workspace pool — and the
-//! registry stays shared, so models can be hot-loaded or evicted while
-//! the server runs.
+//! Concurrency model (PR 8): with `N` resident models and `L` dispatcher
+//! lanes (`ServerConfig::max_inflight`, default = resident-model count
+//! clamped to the runtime width), up to `L` batches execute at once —
+//! per-model runtime quotas now bound genuinely overlapping kernel
+//! fan-out instead of sequential slices. `L = 1` (or
+//! `GRIM_SERIAL_DISPATCH=1`) restores the old serial dispatch exactly:
+//! one lane thread executes every batch in arrival order.
+//!
+//! Routing is by model name, threaded end to end through the
+//! coordinator: every [`InferRequest`] names its target model (or `None`
+//! for the server's default), the batcher forms model-homogeneous
+//! batches, and each lane resolves its batch's name against a
+//! [`ModelRegistry`] at execution time. A request for a **non-resident**
+//! model whose artifact exists in the registry's artifact directory is
+//! parked by the admission controller ([`super::admission`]) while the
+//! model loads on a background thread, then re-enqueued — the typed
+//! [`ServeError::ModelNotResident`] is reserved for models that cannot
+//! be made resident. Requests carrying a deadline are dropped at
+//! dequeue with [`ServeError::DeadlineExceeded`] instead of running dead
+//! work. A quota governor (when `ServerConfig::slo_ms` names targets)
+//! widens or narrows per-model runtime quotas to chase p99 latency SLOs.
 
-use super::batcher::{Batcher, BatchPolicy};
+use super::admission::{self, Admission};
+use super::batcher::{Batch, Batcher, BatchPolicy};
 use super::queue::{InferRequest, InferResponse, RequestQueue, ServeError};
 use crate::engine::Engine;
 use crate::memory::{PoolStats, WorkspacePool};
 use crate::obs::trace::{self, SpanKind};
-use crate::obs::{Counter, Histogram, Registry};
+use crate::obs::{Counter, Gauge, Histogram, Registry};
 use crate::serving::ModelRegistry;
 use crate::tensor::Tensor;
 use crate::util::stats::Summary;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub queue_capacity: usize,
     pub batch: BatchPolicy,
+    /// Dispatcher lanes = maximum concurrently executing batches.
+    /// `None` resolves at start to the resident-model count clamped to
+    /// the runtime's worker count (min 1). `Some(1)` — or the
+    /// `GRIM_SERIAL_DISPATCH=1` env override, which wins over any
+    /// setting — forces the old serial dispatch.
+    pub max_inflight: Option<usize>,
+    /// Per-model p99 latency targets in ms (`--slo-ms m=N`): a governor
+    /// thread widens the model's runtime quota while its observed p99
+    /// exceeds the target and narrows it while p99 sits under half the
+    /// target. Quota changes are pure schedule metadata (PR 5).
+    pub slo_ms: Vec<(String, f64)>,
+    /// Requests parked awaiting background model loads, across all
+    /// models; overflow fails with the typed not-resident error.
+    pub pending_cap: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { queue_capacity: 256, batch: BatchPolicy::default() }
+        ServerConfig {
+            queue_capacity: 256,
+            batch: BatchPolicy::default(),
+            max_inflight: None,
+            slo_ms: Vec::new(),
+            pending_cap: 256,
+        }
+    }
+}
+
+/// Response-channel map: request id → the sender its response goes to.
+pub(crate) type PendingMap = Mutex<HashMap<u64, Sender<InferResponse>>>;
+
+/// Answer `req` with a typed error (used by dispatcher lanes and the
+/// admission controller's loader threads). A missing sender means the
+/// client dropped its receiver — nothing to do.
+pub(crate) fn respond_error(pending: &PendingMap, req: &InferRequest, error: ServeError) {
+    let tx = pending.lock().unwrap().remove(&req.id);
+    if let Some(tx) = tx {
+        let _ = tx.send(admission::error_response(req, error));
     }
 }
 
@@ -60,11 +107,17 @@ pub struct ServerStats {
     /// Batch-size distribution (one sample per batch, unitless).
     pub batch_size: Summary,
     pub throughput_rps: f64,
-    /// Requests that failed execution (wrong shape, unknown model, plan
-    /// errors). These are excluded from `completed` and from the
-    /// latency/throughput summaries so a burst of fast failures cannot
-    /// flatter the stats.
+    /// Requests that failed (wrong shape, unknown model, plan errors,
+    /// expired deadlines). These are excluded from `completed` and from
+    /// the latency/throughput summaries so a burst of fast failures
+    /// cannot flatter the stats; `completed + failed` = total responses.
     pub failed: u64,
+    /// Requests dropped at dequeue because their deadline had passed
+    /// (a subset of `failed`, also counted per model in
+    /// `grim_requests_expired_total`).
+    pub expired: u64,
+    /// Dispatcher lanes — the concurrent-batch ceiling.
+    pub dispatch_lanes: usize,
     /// Workspace-arena pool telemetry of the *default* model (zeroed for
     /// registry servers without one — use `ModelRegistry::stats` for the
     /// per-model breakdown).
@@ -79,8 +132,9 @@ pub struct ServerStats {
 pub struct Server {
     queue: Arc<RequestQueue>,
     next_id: AtomicU64,
-    pending: Arc<Mutex<HashMap<u64, Sender<InferResponse>>>>,
-    scheduler: Option<std::thread::JoinHandle<()>>,
+    pending: Arc<PendingMap>,
+    /// Batch former + dispatcher lanes (+ governor), joined on shutdown.
+    workers: Vec<std::thread::JoinHandle<()>>,
     /// Per-model labeled series (latency/queue/exec/batch/step
     /// histograms + completion counters) — the Prometheus surface.
     metrics: Arc<Registry>,
@@ -94,7 +148,10 @@ pub struct Server {
     started: Instant,
     completed: Arc<AtomicU64>,
     failed: Arc<AtomicU64>,
+    expired: Arc<AtomicU64>,
     batches: Arc<AtomicU64>,
+    /// Batches currently executing on dispatcher lanes.
+    inflight: Arc<Gauge>,
     /// The model registry requests are resolved against (shared: models
     /// can be hot-loaded/evicted while serving).
     registry: Arc<ModelRegistry>,
@@ -102,6 +159,9 @@ pub struct Server {
     default_model: Option<String>,
     /// The default model's workspace pool, kept observable for stats.
     arena: Option<Arc<WorkspacePool>>,
+    admission: Arc<Admission>,
+    lanes: usize,
+    governor_stop: Arc<AtomicBool>,
 }
 
 /// Cached per-model metric handles: one registry-mutex hit per new
@@ -111,8 +171,11 @@ struct ModelHists {
     queue: Arc<Histogram>,
     exec: Arc<Histogram>,
     batch_size: Arc<Histogram>,
+    /// Batch formed → a dispatcher lane picked it up (µs).
+    dispatch_wait: Arc<Histogram>,
     completed: Arc<Counter>,
     failed: Arc<Counter>,
+    expired: Arc<Counter>,
     steps: HashMap<&'static str, Arc<Histogram>>,
     trace_id: u32,
 }
@@ -125,8 +188,10 @@ impl ModelHists {
             queue: reg.histogram("grim_queue_wait_us", l),
             exec: reg.histogram("grim_exec_time_us", l),
             batch_size: reg.histogram("grim_batch_size", l),
+            dispatch_wait: reg.histogram("grim_dispatch_wait_us", l),
             completed: reg.counter("grim_requests_completed_total", l),
             failed: reg.counter("grim_requests_failed_total", l),
+            expired: reg.counter("grim_requests_expired_total", l),
             steps: HashMap::new(),
             trace_id: 0,
         }
@@ -149,6 +214,26 @@ impl ModelHists {
     }
 }
 
+/// Everything a dispatcher lane shares with its peers; per-lane state
+/// (the `ModelHists` cache) stays thread-local.
+struct LaneShared {
+    pending: Arc<PendingMap>,
+    metrics: Arc<Registry>,
+    registry: Arc<ModelRegistry>,
+    default_model: Option<String>,
+    admission: Arc<Admission>,
+    inflight: Arc<Gauge>,
+    hist_latency: Arc<Histogram>,
+    hist_queue: Arc<Histogram>,
+    hist_exec: Arc<Histogram>,
+    hist_batch_form: Arc<Histogram>,
+    hist_batch_size: Arc<Histogram>,
+    completed: Arc<AtomicU64>,
+    failed: Arc<AtomicU64>,
+    expired: Arc<AtomicU64>,
+    batches: Arc<AtomicU64>,
+}
+
 impl Server {
     /// Start a single-model server: `engine` becomes the registry's sole
     /// entry and the default route.
@@ -168,6 +253,19 @@ impl Server {
         Self::start_inner(registry, None, None, config)
     }
 
+    /// Resolve the dispatcher-lane count: explicit config (floored at 1)
+    /// beats the default of one lane per resident model clamped to the
+    /// runtime width; `GRIM_SERIAL_DISPATCH=1` beats everything.
+    fn resolve_lanes(registry: &ModelRegistry, config: &ServerConfig) -> usize {
+        if std::env::var("GRIM_SERIAL_DISPATCH").is_ok_and(|v| v == "1") {
+            return 1;
+        }
+        match config.max_inflight {
+            Some(n) => n.max(1),
+            None => registry.len().clamp(1, registry.runtime().threads().max(1)),
+        }
+    }
+
     fn start_inner(
         registry: Arc<ModelRegistry>,
         default_model: Option<String>,
@@ -175,221 +273,148 @@ impl Server {
         config: ServerConfig,
     ) -> Self {
         let queue = Arc::new(RequestQueue::new(config.queue_capacity));
-        let pending: Arc<Mutex<HashMap<u64, Sender<InferResponse>>>> =
-            Arc::new(Mutex::new(HashMap::new()));
+        let pending: Arc<PendingMap> = Arc::new(Mutex::new(HashMap::new()));
         let metrics = Arc::new(Registry::new());
-        let hist_latency = Arc::new(Histogram::new());
-        let hist_queue = Arc::new(Histogram::new());
-        let hist_exec = Arc::new(Histogram::new());
-        let hist_batch_form = Arc::new(Histogram::new());
-        let hist_batch_size = Arc::new(Histogram::new());
-        let completed = Arc::new(AtomicU64::new(0));
-        let failed = Arc::new(AtomicU64::new(0));
-        let batches = Arc::new(AtomicU64::new(0));
+        let lanes = Self::resolve_lanes(&registry, &config);
+        metrics.gauge("grim_dispatch_lanes", &[]).set(lanes as u64);
+        let inflight = metrics.gauge("grim_inflight_batches", &[]);
+        // Pre-register both background-load outcomes so the series show
+        // up (at 0) in scrapes before the first cold-model request.
+        let loads_ok = metrics.counter("grim_background_loads_total", &[("result", "ok")]);
+        let loads_failed = metrics.counter("grim_background_loads_total", &[("result", "failed")]);
+        let admission = Admission::new(
+            Arc::clone(&registry),
+            Arc::clone(&queue),
+            Arc::clone(&pending),
+            config.pending_cap,
+            loads_ok,
+            loads_failed,
+        );
+        let shared = Arc::new(LaneShared {
+            pending: Arc::clone(&pending),
+            metrics: Arc::clone(&metrics),
+            registry: Arc::clone(&registry),
+            default_model: default_model.clone(),
+            admission: Arc::clone(&admission),
+            inflight: Arc::clone(&inflight),
+            hist_latency: Arc::new(Histogram::new()),
+            hist_queue: Arc::new(Histogram::new()),
+            hist_exec: Arc::new(Histogram::new()),
+            hist_batch_form: Arc::new(Histogram::new()),
+            hist_batch_size: Arc::new(Histogram::new()),
+            completed: Arc::new(AtomicU64::new(0)),
+            failed: Arc::new(AtomicU64::new(0)),
+            expired: Arc::new(AtomicU64::new(0)),
+            batches: Arc::new(AtomicU64::new(0)),
+        });
 
-        let q2 = Arc::clone(&queue);
-        let p2 = Arc::clone(&pending);
-        let m2 = Arc::clone(&metrics);
-        let h_lat = Arc::clone(&hist_latency);
-        let h_q = Arc::clone(&hist_queue);
-        let h_ex = Arc::clone(&hist_exec);
-        let h_bf = Arc::clone(&hist_batch_form);
-        let h_bs = Arc::clone(&hist_batch_size);
-        let c2 = Arc::clone(&completed);
-        let f2 = Arc::clone(&failed);
-        let b2 = Arc::clone(&batches);
-        let reg = Arc::clone(&registry);
-        let default = default_model.clone();
-        let policy = config.batch;
-        let scheduler = std::thread::Builder::new()
-            .name("grim-scheduler".into())
-            .spawn(move || {
-                // Per-model batching: the registry's policy overrides
-                // win over the server-wide default, resolved per batch
-                // head (unnamed requests resolve through the default
-                // model's name).
-                let preg = Arc::clone(&reg);
-                let pdefault = default.clone();
-                let batcher = Batcher::with_policy_resolver(
-                    &q2,
-                    policy,
-                    Box::new(move |m| {
-                        let name = m.or(pdefault.as_deref())?;
-                        preg.policy_for(name)
-                    }),
-                );
-                // Per-model metric handles, cached so the steady state
-                // never touches the registry mutex.
-                let mut hists: HashMap<String, ModelHists> = HashMap::new();
-                while let Some(batch) = batcher.next_batch() {
-                    b2.fetch_add(1, Ordering::Relaxed);
-                    // Batches are model-homogeneous; resolve once per
-                    // batch, at execution time — a model evicted while
-                    // its requests sat in the queue fails them loudly
-                    // instead of silently pinning its memory.
-                    let target = batch.reqs[0].model.clone().or_else(|| default.clone());
-                    let engine = target.as_deref().and_then(|n| reg.get(n));
-                    if let (None, Some(n)) = (&engine, &target) {
-                        // One miss per failed request (batched: one
-                        // lock); the counter is the admission-control
-                        // signal.
-                        reg.note_misses(n, batch.len() as u64);
-                    }
-                    let label = target.as_deref().unwrap_or("_none").to_string();
-                    let mh = hists
-                        .entry(label.clone())
-                        .or_insert_with(|| ModelHists::new(&m2, &label));
-                    // 1/N batch sampling decides whether this batch's
-                    // spans are recorded (tracing-off cost: one relaxed
-                    // load inside on_batch_start).
-                    let sampled = trace::on_batch_start();
-                    if sampled {
-                        trace::record_span(
-                            SpanKind::BatchForm,
-                            batch.started,
-                            batch.formed,
-                            0,
-                            mh.trace_id(&label),
-                            batch.len() as u64,
+        let mut workers = Vec::with_capacity(lanes + 2);
+
+        // --- batch former: queue → bounded batch channel ---------------
+        // The channel is the inflight bound: `lanes` executing + up to
+        // `lanes` formed-and-waiting batches; dispatch_wait measures the
+        // formed → picked-up gap.
+        let (batch_tx, batch_rx) = sync_channel::<Batch>(lanes);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        {
+            let q2 = Arc::clone(&queue);
+            let preg = Arc::clone(&registry);
+            let pdefault = default_model.clone();
+            let policy = config.batch;
+            workers.push(
+                std::thread::Builder::new()
+                    .name("grim-batcher".into())
+                    .spawn(move || {
+                        // Per-model batching: the registry's policy
+                        // overrides win over the server-wide default,
+                        // resolved per batch head (unnamed requests
+                        // resolve through the default model's name).
+                        let rreg = Arc::clone(&preg);
+                        let rdefault = pdefault.clone();
+                        let batcher = Batcher::with_policy_resolver(
+                            &q2,
+                            policy,
+                            Box::new(move |m| {
+                                let name = m.or(rdefault.as_deref())?;
+                                rreg.policy_for(name)
+                            }),
                         );
-                    }
-                    let form_ms = batch.form_ms();
-                    h_bf.record_ms(form_ms);
-                    h_bs.record(batch.len() as u64);
-                    mh.batch_size.record(batch.len() as u64);
-                    for req in batch.reqs {
-                        let qms = batch
-                            .formed
-                            .saturating_duration_since(req.enqueued)
-                            .as_secs_f64()
-                            * 1e3;
-                        if sampled {
-                            trace::record_span(
-                                SpanKind::Queue,
-                                req.enqueued,
-                                batch.formed,
-                                0,
-                                mh.trace_id(&label),
-                                req.id,
-                            );
-                        }
-                        let t = Instant::now();
-                        // Failures (wrong input shape, non-resident
-                        // model) must reach the caller as typed errors,
-                        // not masquerade as results. Engines collecting
-                        // per-layer metrics (all registry-served ones)
-                        // additionally feed the per-kernel-kind step
-                        // histograms.
-                        let (out, error, layers) = match &engine {
-                            Some(e) if e.collect_metrics => {
-                                match e.run_with_metrics(&req.input) {
-                                    Ok((out, m)) => (out, None, Some(m)),
-                                    Err(e) => (
-                                        Tensor::zeros(&[1]),
-                                        Some(ServeError::Exec(e.to_string())),
-                                        None,
-                                    ),
-                                }
-                            }
-                            Some(e) => match e.run(&req.input) {
-                                Ok(out) => (out, None, None),
-                                Err(e) => (
-                                    Tensor::zeros(&[1]),
-                                    Some(ServeError::Exec(e.to_string())),
-                                    None,
-                                ),
-                            },
-                            None => (
-                                Tensor::zeros(&[1]),
-                                Some(match &target {
-                                    Some(n) => {
-                                        ServeError::ModelNotResident { model: n.clone() }
-                                    }
-                                    None => ServeError::NoDefaultModel,
-                                }),
-                                None,
-                            ),
-                        };
-                        let ems = t.elapsed().as_secs_f64() * 1e3;
-                        if sampled {
-                            trace::record_span(
-                                SpanKind::Dispatch,
-                                t,
-                                Instant::now(),
-                                0,
-                                mh.trace_id(&label),
-                                req.id,
-                            );
-                        }
-                        if let Some(m) = &layers {
-                            for l in &m.layers {
-                                mh.step(&m2, &label, l.kind).record(l.micros.round() as u64);
+                        while let Some(batch) = batcher.next_batch() {
+                            if batch_tx.send(batch).is_err() {
+                                break; // lanes gone
                             }
                         }
-                        // End-to-end latency includes intra-batch wait
-                        // (requests dispatched later in the batch carry
-                        // their true time-to-response).
-                        let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-                        if error.is_none() {
-                            // only successful runs feed the latency and
-                            // throughput summaries
-                            h_lat.record_ms(latency_ms);
-                            h_q.record_ms(qms);
-                            h_ex.record_ms(ems);
-                            mh.latency.record_ms(latency_ms);
-                            mh.queue.record_ms(qms);
-                            mh.exec.record_ms(ems);
-                            mh.completed.inc();
-                            c2.fetch_add(1, Ordering::Relaxed);
-                        } else {
-                            mh.failed.inc();
-                            f2.fetch_add(1, Ordering::Relaxed);
+                        // Dropping batch_tx closes the channel; lanes
+                        // drain what is buffered and exit.
+                    })
+                    .expect("spawn batch former"),
+            );
+        }
+
+        // --- dispatcher lanes: batch channel → engines ------------------
+        for lane in 0..lanes {
+            let shared = Arc::clone(&shared);
+            let rx = Arc::clone(&batch_rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("grim-dispatch-{lane}"))
+                    .spawn(move || {
+                        // Per-lane metric-handle cache (handles resolve
+                        // to the same shared atomics in the registry).
+                        let mut hists: HashMap<String, ModelHists> = HashMap::new();
+                        loop {
+                            // Exactly one idle lane blocks in recv()
+                            // while holding the lock; the others queue on
+                            // the mutex — batches hand off one at a time.
+                            let batch = { rx.lock().unwrap().recv() };
+                            match batch {
+                                Ok(b) => process_batch(&shared, &mut hists, b),
+                                Err(_) => break, // former exited
+                            }
                         }
-                        let respond_start = sampled.then(Instant::now);
-                        let tx = p2.lock().unwrap().remove(&req.id);
-                        if let Some(tx) = tx {
-                            let _ = tx.send(InferResponse {
-                                id: req.id,
-                                output: out,
-                                queue_ms: qms,
-                                batch_ms: form_ms,
-                                exec_ms: ems,
-                                error,
-                            });
-                        }
-                        if let Some(start) = respond_start {
-                            trace::record_span(
-                                SpanKind::Respond,
-                                start,
-                                Instant::now(),
-                                0,
-                                mh.trace_id(&label),
-                                req.id,
-                            );
-                        }
-                    }
-                }
-            })
-            .expect("spawn scheduler");
+                    })
+                    .expect("spawn dispatcher lane"),
+            );
+        }
+
+        // --- quota governor: per-model p99 vs SLO → runtime quotas ------
+        let governor_stop = Arc::new(AtomicBool::new(false));
+        if !config.slo_ms.is_empty() {
+            let stop = Arc::clone(&governor_stop);
+            let reg = Arc::clone(&registry);
+            let m2 = Arc::clone(&metrics);
+            let slo = config.slo_ms.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name("grim-governor".into())
+                    .spawn(move || run_governor(&stop, &reg, &m2, &slo))
+                    .expect("spawn quota governor"),
+            );
+        }
 
         Server {
             queue,
             next_id: AtomicU64::new(1),
             pending,
-            scheduler: Some(scheduler),
+            workers,
             metrics,
-            hist_latency,
-            hist_queue,
-            hist_exec,
-            hist_batch_form,
-            hist_batch_size,
+            hist_latency: Arc::clone(&shared.hist_latency),
+            hist_queue: Arc::clone(&shared.hist_queue),
+            hist_exec: Arc::clone(&shared.hist_exec),
+            hist_batch_form: Arc::clone(&shared.hist_batch_form),
+            hist_batch_size: Arc::clone(&shared.hist_batch_size),
             started: Instant::now(),
-            completed,
-            failed,
-            batches,
+            completed: Arc::clone(&shared.completed),
+            failed: Arc::clone(&shared.failed),
+            expired: Arc::clone(&shared.expired),
+            batches: Arc::clone(&shared.batches),
+            inflight,
             registry,
             default_model,
             arena,
+            admission,
+            lanes,
+            governor_stop,
         }
     }
 
@@ -398,10 +423,22 @@ impl Server {
         Arc::clone(&self.registry)
     }
 
+    /// Dispatcher-lane count — the concurrent-batch ceiling this server
+    /// was started with.
+    pub fn dispatch_lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Batches executing on dispatcher lanes right now.
+    pub fn inflight_batches(&self) -> u64 {
+        self.inflight.get()
+    }
+
     fn enqueue(
         &self,
         model: Option<String>,
         input: Tensor,
+        deadline: Option<Duration>,
     ) -> anyhow::Result<Receiver<InferResponse>> {
         // Normalize an explicit request for the default model to `None`
         // so it batches with unnamed requests (the batcher groups by the
@@ -414,21 +451,47 @@ impl Server {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         self.pending.lock().unwrap().insert(id, tx);
+        let now = Instant::now();
         self.queue
-            .push(InferRequest { id, model, input, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("server closed"))?;
+            .push(InferRequest {
+                id,
+                model,
+                input,
+                enqueued: now,
+                deadline: deadline.map(|d| now + d),
+                requeued: false,
+            })
+            .map_err(|req| {
+                // Closed queue: retire the parked sender so the map
+                // cannot grow on a rejected submit.
+                self.pending.lock().unwrap().remove(&req.id);
+                anyhow::anyhow!("server closed")
+            })?;
         Ok(rx)
     }
 
     /// Submit a request to the default model; returns a receiver for the
     /// response. Blocks (backpressure) when the queue is full.
     pub fn submit(&self, input: Tensor) -> anyhow::Result<Receiver<InferResponse>> {
-        self.enqueue(None, input)
+        self.enqueue(None, input, None)
     }
 
     /// Submit a request routed to the named model.
     pub fn submit_to(&self, model: &str, input: Tensor) -> anyhow::Result<Receiver<InferResponse>> {
-        self.enqueue(Some(model.to_string()), input)
+        self.enqueue(Some(model.to_string()), input, None)
+    }
+
+    /// Submit with a drop-dead deadline (relative to now): if no
+    /// dispatcher lane picks the request up in time it is answered with
+    /// [`ServeError::DeadlineExceeded`] instead of executing.
+    /// `model = None` routes to the default model.
+    pub fn submit_with_deadline(
+        &self,
+        model: Option<&str>,
+        input: Tensor,
+        deadline: Duration,
+    ) -> anyhow::Result<Receiver<InferResponse>> {
+        self.enqueue(model.map(str::to_string), input, Some(deadline))
     }
 
     /// Submit and wait for the response (convenience). Execution
@@ -478,6 +541,8 @@ impl Server {
             batch_size: self.hist_batch_size.summary(1.0),
             throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
             failed: self.failed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            dispatch_lanes: self.lanes,
             arena: self.arena.as_ref().map(|a| a.stats()).unwrap_or_default(),
             per_model,
         }
@@ -489,10 +554,12 @@ impl Server {
     }
 
     /// Render the full metrics surface in Prometheus text exposition
-    /// format: per-model labeled series from the registry, server-level
-    /// counters/uptime, and the model registry's resident/arena/quota
-    /// gauges. `grim serve --stats-out` writes this; `grim stats`
-    /// parses it back.
+    /// format: per-model labeled series from the registry (including
+    /// `grim_dispatch_wait_us`, `grim_inflight_batches`,
+    /// `grim_background_loads_total`, `grim_requests_expired_total`),
+    /// server-level counters/uptime, and the model registry's
+    /// resident/arena/quota gauges. `grim serve --stats-out` writes
+    /// this; `grim stats` parses it back.
     pub fn render_prometheus(&self) -> String {
         use std::fmt::Write;
         let mut out = self.metrics.render();
@@ -507,6 +574,12 @@ impl Server {
             out,
             "grim_server_requests_failed_total {}",
             self.failed.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(out, "# TYPE grim_server_requests_expired_total counter");
+        let _ = writeln!(
+            out,
+            "grim_server_requests_expired_total {}",
+            self.expired.load(Ordering::Relaxed)
         );
         let _ = writeln!(out, "# TYPE grim_server_batches_total counter");
         let _ = writeln!(
@@ -524,12 +597,23 @@ impl Server {
         out
     }
 
-    /// Stop accepting requests, drain, and join the scheduler.
-    pub fn shutdown(mut self) -> ServerStats {
+    /// Stop accepting requests, drain in-flight work, join every worker
+    /// thread, and flush admission-parked requests.
+    fn stop_workers(&mut self) {
         self.queue.close();
-        if let Some(h) = self.scheduler.take() {
+        self.governor_stop.store(true, Ordering::Relaxed);
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        // After the lanes are gone nothing will re-dispatch re-enqueued
+        // requests; loader threads answer them directly (closed queue),
+        // and anything still parked is failed here.
+        self.admission.shutdown();
+    }
+
+    /// Stop accepting requests, drain, and join the workers.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.stop_workers();
         self.stats()
     }
 
@@ -541,9 +625,222 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.queue.close();
-        if let Some(h) = self.scheduler.take() {
-            let _ = h.join();
+        self.stop_workers();
+    }
+}
+
+/// Execute one model-homogeneous batch on a dispatcher lane: resolve the
+/// model, run admission control for non-resident targets, drop expired
+/// requests, execute the rest, and answer every response channel.
+fn process_batch(shared: &LaneShared, hists: &mut HashMap<String, ModelHists>, mut batch: Batch) {
+    let picked = Instant::now();
+    shared.batches.fetch_add(1, Ordering::Relaxed);
+    // Batches are model-homogeneous; resolve once per batch, at
+    // execution time — a model evicted while its requests sat in the
+    // queue fails them loudly instead of silently pinning its memory.
+    let target = batch.reqs[0].model.clone().or_else(|| shared.default_model.clone());
+    let mut engine = target.as_deref().and_then(|n| shared.registry.get(n));
+    if engine.is_none() {
+        if let Some(n) = target.as_deref() {
+            // One miss per failed request (batched: one lock); the
+            // counter is the admission-control signal.
+            shared.registry.note_misses(n, batch.len() as u64);
+            // Park what can be parked for a background artifact load;
+            // only the rejects fall through to the typed error.
+            let reqs = std::mem::take(&mut batch.reqs);
+            batch.reqs = shared.admission.try_admit(n, reqs);
+            if batch.reqs.is_empty() {
+                return; // every request parked — answered after the load
+            }
+            // A rejected `requeued` request may still win: the loader
+            // that re-enqueued it made the model resident — resolve once
+            // more before failing.
+            engine = shared.registry.get(n);
+        }
+    }
+    shared.inflight.inc();
+    let label = target.as_deref().unwrap_or("_none").to_string();
+    let mh = hists.entry(label.clone()).or_insert_with(|| ModelHists::new(&shared.metrics, &label));
+    mh.dispatch_wait
+        .record(picked.saturating_duration_since(batch.formed).as_micros() as u64);
+    // 1/N batch sampling decides whether this batch's spans are recorded
+    // (tracing-off cost: one relaxed load inside on_batch_start).
+    let sampled = trace::on_batch_start();
+    if sampled {
+        trace::record_span(
+            SpanKind::BatchForm,
+            batch.started,
+            batch.formed,
+            0,
+            mh.trace_id(&label),
+            batch.len() as u64,
+        );
+    }
+    let form_ms = batch.form_ms();
+    shared.hist_batch_form.record_ms(form_ms);
+    shared.hist_batch_size.record(batch.len() as u64);
+    mh.batch_size.record(batch.len() as u64);
+    for req in batch.reqs {
+        let qms = batch.formed.saturating_duration_since(req.enqueued).as_secs_f64() * 1e3;
+        if sampled {
+            trace::record_span(
+                SpanKind::Queue,
+                req.enqueued,
+                batch.formed,
+                0,
+                mh.trace_id(&label),
+                req.id,
+            );
+        }
+        // Expired requests are dropped at dequeue: nobody is waiting
+        // for the answer, so the kernels never run.
+        if req.deadline.is_some_and(|d| Instant::now() > d) {
+            mh.expired.inc();
+            mh.failed.inc();
+            shared.expired.fetch_add(1, Ordering::Relaxed);
+            shared.failed.fetch_add(1, Ordering::Relaxed);
+            respond_error(&shared.pending, &req, ServeError::DeadlineExceeded);
+            continue;
+        }
+        let t = Instant::now();
+        // Failures (wrong input shape, non-resident model) must reach
+        // the caller as typed errors, not masquerade as results. Engines
+        // collecting per-layer metrics (all registry-served ones)
+        // additionally feed the per-kernel-kind step histograms.
+        let (out, error, layers) = match &engine {
+            Some(e) if e.collect_metrics => match e.run_with_metrics(&req.input) {
+                Ok((out, m)) => (out, None, Some(m)),
+                Err(e) => {
+                    (admission::error_output(), Some(ServeError::Exec(e.to_string())), None)
+                }
+            },
+            Some(e) => match e.run(&req.input) {
+                Ok(out) => (out, None, None),
+                Err(e) => {
+                    (admission::error_output(), Some(ServeError::Exec(e.to_string())), None)
+                }
+            },
+            None => (
+                admission::error_output(),
+                Some(match &target {
+                    Some(n) => ServeError::ModelNotResident { model: n.clone() },
+                    None => ServeError::NoDefaultModel,
+                }),
+                None,
+            ),
+        };
+        let ems = t.elapsed().as_secs_f64() * 1e3;
+        if sampled {
+            trace::record_span(
+                SpanKind::Dispatch,
+                t,
+                Instant::now(),
+                0,
+                mh.trace_id(&label),
+                req.id,
+            );
+        }
+        if let Some(m) = &layers {
+            for l in &m.layers {
+                mh.step(&shared.metrics, &label, l.kind).record(l.micros.round() as u64);
+            }
+        }
+        // End-to-end latency includes intra-batch wait (requests
+        // dispatched later in the batch carry their true
+        // time-to-response).
+        let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+        if error.is_none() {
+            // only successful runs feed the latency and throughput
+            // summaries
+            shared.hist_latency.record_ms(latency_ms);
+            shared.hist_queue.record_ms(qms);
+            shared.hist_exec.record_ms(ems);
+            mh.latency.record_ms(latency_ms);
+            mh.queue.record_ms(qms);
+            mh.exec.record_ms(ems);
+            mh.completed.inc();
+            shared.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            mh.failed.inc();
+            shared.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        let respond_start = sampled.then(Instant::now);
+        let tx = shared.pending.lock().unwrap().remove(&req.id);
+        if let Some(tx) = tx {
+            let _ = tx.send(InferResponse {
+                id: req.id,
+                output: out,
+                queue_ms: qms,
+                batch_ms: form_ms,
+                exec_ms: ems,
+                error,
+            });
+        }
+        if let Some(start) = respond_start {
+            trace::record_span(
+                SpanKind::Respond,
+                start,
+                Instant::now(),
+                0,
+                mh.trace_id(&label),
+                req.id,
+            );
+        }
+    }
+    shared.inflight.dec();
+}
+
+/// Quota-governor loop: every tick, compare each SLO'd model's observed
+/// p99 (cumulative, from the server's latency histograms) against its
+/// target and nudge the model's runtime quota by one bucket — up while
+/// over target, down while under half the target. Acts only when the
+/// model saw new completed traffic since the last adjustment, so an idle
+/// model's quota is never churned.
+fn run_governor(
+    stop: &AtomicBool,
+    registry: &ModelRegistry,
+    metrics: &Registry,
+    slo: &[(String, f64)],
+) {
+    /// Completed samples a model must accumulate before the governor
+    /// trusts its p99 estimate.
+    const MIN_SAMPLES: usize = 8;
+    let width = registry.runtime().threads();
+    let mut last_count: HashMap<&str, usize> = HashMap::new();
+    let hists: Vec<(&str, f64, Arc<Histogram>, Arc<Counter>)> = slo
+        .iter()
+        .map(|(m, t)| {
+            (
+                m.as_str(),
+                *t,
+                metrics.histogram("grim_request_latency_us", &[("model", m)]),
+                metrics.counter("grim_quota_adjustments_total", &[("model", m)]),
+            )
+        })
+        .collect();
+    while !stop.load(Ordering::Relaxed) {
+        // ~100 ms cadence, but responsive to shutdown.
+        for _ in 0..5 {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        for (model, target_ms, hist, adjustments) in &hists {
+            let s = hist.summary(1e-3); // µs → ms
+            let seen = last_count.entry(model).or_insert(0);
+            if s.count < MIN_SAMPLES || s.count == *seen {
+                continue;
+            }
+            *seen = s.count;
+            let cur = registry.runtime().effective_threads(model);
+            if s.p99 > *target_ms && cur < width {
+                registry.set_quota(model, cur + 1);
+                adjustments.inc();
+            } else if s.p99 < 0.5 * target_ms && cur > 1 {
+                registry.set_quota(model, cur - 1);
+                adjustments.inc();
+            }
         }
     }
 }
@@ -622,6 +919,9 @@ mod tests {
     #[test]
     fn serving_reuses_one_arena() {
         let server = small_server();
+        // A single-model server defaults to one dispatcher lane — the
+        // serial-dispatch guarantee the arena assertion depends on.
+        assert_eq!(server.dispatch_lanes(), 1);
         let mut rng = Rng::new(21);
         for _ in 0..6 {
             let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
@@ -631,7 +931,7 @@ mod tests {
         assert_eq!(stats.arena.checkouts, 6, "one arena checkout per request");
         assert_eq!(
             stats.arena.arenas_created, 1,
-            "the single scheduler thread must reuse one arena"
+            "a single dispatcher lane must reuse one arena"
         );
         assert!(stats.arena.arena_bytes > 0);
     }
@@ -646,6 +946,25 @@ mod tests {
         }
         let stats = server.shutdown();
         assert_eq!(stats.completed, 3);
+    }
+
+    /// Explicit lane config wins over the resident-model default, and
+    /// the zero floor holds.
+    #[test]
+    fn lane_config_resolution() {
+        let plan = plan_for(ModelKind::Gru, Preset::TimitMini, 4);
+        let server = Server::start(
+            Engine::new(plan, 2),
+            ServerConfig { max_inflight: Some(3), ..ServerConfig::default() },
+        );
+        if std::env::var("GRIM_SERIAL_DISPATCH").is_ok_and(|v| v == "1") {
+            assert_eq!(server.dispatch_lanes(), 1, "env override forces serial dispatch");
+        } else {
+            assert_eq!(server.dispatch_lanes(), 3);
+        }
+        let mut rng = Rng::new(5);
+        let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+        assert!(server.infer(x).is_ok());
     }
 
     /// Two models behind one server: routing by name, concurrent clients,
@@ -693,7 +1012,9 @@ mod tests {
     }
 
     /// Unknown model names and missing defaults fail loudly, and the
-    /// server keeps serving.
+    /// server keeps serving. (No artifact directory is configured, so
+    /// admission control cannot park these — the classic typed-error
+    /// path must be fully preserved.)
     #[test]
     fn unknown_model_is_an_error() {
         let registry = Arc::new(ModelRegistry::new(1));
@@ -721,7 +1042,7 @@ mod tests {
     }
 
     /// Models hot-loaded (and evicted) while the server is running are
-    /// picked up by the scheduler's execution-time resolution.
+    /// picked up by the lanes' execution-time resolution.
     #[test]
     fn hot_load_and_evict_while_serving() {
         let registry = Arc::new(ModelRegistry::new(1));
@@ -733,5 +1054,35 @@ mod tests {
         assert!(server.infer_on("late", x.clone()).is_ok(), "hot-loaded model serves");
         registry.evict("late");
         assert!(server.infer_on("late", x).is_err(), "evicted model fails loudly");
+    }
+
+    /// An already-expired deadline surfaces the typed error without
+    /// executing, and the expired accounting advances.
+    #[test]
+    fn expired_deadline_is_dropped_at_dequeue() {
+        let server = small_server();
+        let mut rng = Rng::new(12);
+        let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+        let resp = server
+            .submit_with_deadline(None, x.clone(), Duration::ZERO)
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert_eq!(resp.error, Some(ServeError::DeadlineExceeded));
+        assert_eq!(resp.exec_ms, 0.0, "expired requests must never execute");
+        // A generous deadline still serves.
+        let ok = server
+            .submit_with_deadline(None, x, Duration::from_secs(60))
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert!(ok.error.is_none());
+        let stats = server.stats();
+        assert_eq!(stats.expired, 1);
+        assert_eq!(stats.failed, 1, "expired counts as failed");
+        assert_eq!(stats.completed, 1);
+        let prom = server.render_prometheus();
+        assert!(prom.contains("grim_requests_expired_total"), "{prom}");
+        assert!(prom.contains("grim_dispatch_lanes"), "{prom}");
     }
 }

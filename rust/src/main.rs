@@ -15,7 +15,7 @@
 //! surface small.
 
 use grim::compiler::passes::{compile, Backend, CompileOptions};
-use grim::coordinator::{Server, ServerConfig};
+use grim::coordinator::{BatchPolicy, HttpServer, Server, ServerConfig};
 use grim::engine::Engine;
 use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
 use grim::runtime::ArtifactStore;
@@ -72,6 +72,11 @@ COMMANDS:
            multi-model registry of .grimc files on ONE shared runtime (per-model quotas + batch policies)
            both serve forms accept [--trace out.json] [--trace-sample N] (Chrome/Perfetto span trace,
            1 batch in N sampled) and [--stats-out out.prom] (Prometheus text metrics dump)
+           concurrency: [--max-inflight-batches N] dispatcher lanes (default: resident models,
+           clamped to --threads; GRIM_SERIAL_DISPATCH=1 forces 1), [--slo-ms m=N] p99 latency
+           targets driving dynamic per-model quotas, [--pending-cap N] admission-parked bound,
+           [--http addr:port] JSON ingress (GET /healthz /metrics /stats, POST /v1/infer),
+           [--duration secs] keep serving (e.g. for curl) before exiting
   run      --model resnet18 --preset cifar-mini --rate 8 [--grim-file m.grim] [--grimc-file m.grimc] [--backend grim|naive|opt|csr]
   inspect  --model vgg16 --preset cifar-mini --rate 8
   tune     --model vgg16 --preset cifar-mini --rate 8 [--generations 6]
@@ -292,6 +297,52 @@ fn write_stats(f: &Flags, prom: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Build a [`ServerConfig`] from the shared serve-flag grammar.
+fn server_config_from_flags(f: &Flags) -> anyhow::Result<ServerConfig> {
+    let slo_ms: Vec<(String, f64)> =
+        parse_kv_list(f.get("slo-ms").map(String::as_str).unwrap_or(""))?
+            .into_iter()
+            .map(|(m, v)| (m, v as f64))
+            .collect();
+    let max_inflight = match f.get("max-inflight-batches") {
+        Some(v) => Some(
+            v.parse()
+                .map_err(|_| anyhow::anyhow!("bad --max-inflight-batches '{v}'"))?,
+        ),
+        None => None,
+    };
+    Ok(ServerConfig {
+        batch: BatchPolicy { max_batch: flag(f, "batch", 8usize), ..BatchPolicy::default() },
+        max_inflight,
+        slo_ms,
+        pending_cap: flag(f, "pending-cap", 256usize),
+        ..ServerConfig::default()
+    })
+}
+
+/// Start the optional `--http` ingress, hold the server open for
+/// `--duration` seconds (so external clients can drive it), then stop
+/// accepting. No-op without either flag.
+fn serve_http_window(f: &Flags, server: &std::sync::Arc<Server>) -> anyhow::Result<()> {
+    let http = match f.get("http") {
+        Some(addr) => {
+            let h = HttpServer::start(std::sync::Arc::clone(server), addr)?;
+            println!("http: listening on {}", h.local_addr());
+            Some(h)
+        }
+        None => None,
+    };
+    let dur = flag(f, "duration", 0.0f64);
+    if dur > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(dur));
+    }
+    if let Some(h) = http {
+        println!("http: served {} connection(s)", h.handled());
+        h.shutdown();
+    }
+    Ok(())
+}
+
 /// Per-model latency quantiles from a server stats snapshot.
 fn print_per_model(stats: &grim::coordinator::ServerStats) {
     for (name, s) in &stats.per_model {
@@ -340,9 +391,12 @@ fn cmd_serve_multi(f: &Flags, dir: &str) -> anyhow::Result<()> {
         "loaded {} model(s) from {dir} onto one {threads}-thread runtime: {names:?}",
         names.len()
     );
-    let mut config = ServerConfig::default();
-    config.batch.max_batch = flag(f, "batch", 8usize);
-    let server = Server::start_registry(Arc::clone(&registry), config);
+    let config = server_config_from_flags(f)?;
+    for (m, t) in &config.slo_ms {
+        println!("slo: {m} -> p99 <= {t} ms (dynamic quota governor)");
+    }
+    let server = Arc::new(Server::start_registry(Arc::clone(&registry), config));
+    println!("dispatch: {} concurrent lane(s)", server.dispatch_lanes());
 
     // Under a tight budget some of the loaded models may already have
     // been LRU-evicted; drive (and assert on) the resident ones.
@@ -378,6 +432,7 @@ fn cmd_serve_multi(f: &Flags, dir: &str) -> anyhow::Result<()> {
             "model '{name}' answered no requests"
         );
     }
+    serve_http_window(f, &server)?;
     let stats = server.stats();
     println!(
         "completed={} batches={} p50={:.3}ms p99={:.3}ms throughput={:.1} rps",
@@ -430,12 +485,11 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     let (module, weights) = model_from_flags(f)?;
     let plan = compile(&module, &weights, CompileOptions::default())?;
     let engine = Engine::new(plan, flag(f, "threads", 8usize));
-    let mut config = ServerConfig::default();
-    config.batch.max_batch = flag(f, "batch", 8usize);
-    let server = Server::start(engine, config);
+    let config = server_config_from_flags(f)?;
+    let server = std::sync::Arc::new(Server::start(engine, config));
     let n = flag(f, "requests", 64usize);
     let mut rng = Rng::new(11);
-    println!("serving {n} requests on {} ...", module.name);
+    println!("serving {n} requests on {} ({} dispatch lane(s)) ...", module.name, server.dispatch_lanes());
     let mut rxs = Vec::new();
     for _ in 0..n {
         rxs.push(server.submit(input_for(&module, &mut rng)?)?);
@@ -443,8 +497,9 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     for rx in rxs {
         rx.recv()?;
     }
+    serve_http_window(f, &server)?;
     write_stats(f, &server.render_prometheus())?;
-    let stats = server.shutdown();
+    let stats = server.stats();
     println!(
         "completed={} batches={} p50={:.3}ms p90={:.3}ms p99={:.3}ms throughput={:.1} rps",
         stats.completed,

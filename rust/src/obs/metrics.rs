@@ -59,6 +59,20 @@ impl Gauge {
     pub fn get(&self) -> u64 {
         self.0.load(Relaxed)
     }
+
+    /// Atomic increment — level gauges (e.g. in-flight batches) are
+    /// bumped/dropped from many threads, so read-modify-write must not
+    /// lose updates the way `set(get()+1)` would.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    /// Atomic decrement. Saturates at zero instead of wrapping, so a
+    /// (buggy or racing) unbalanced `dec` can never render as 2^64-1 in
+    /// a metrics dump.
+    pub fn dec(&self) {
+        let _ = self.0.fetch_update(Relaxed, Relaxed, |v| Some(v.saturating_sub(1)));
+    }
 }
 
 /// Lock-free log₂-bucketed histogram over `u64` samples (latencies are

@@ -88,6 +88,11 @@ pub struct ModelRegistry {
     policies: Mutex<HashMap<String, BatchPolicy>>,
     /// Per-model count of requests that missed (model not resident).
     misses: Mutex<HashMap<String, u64>>,
+    /// Where `.grimc` artifacts live for **background loads**: a request
+    /// for a non-resident model whose artifact exists here is parked and
+    /// the model loaded off the request path instead of erroring.
+    /// Set explicitly or implicitly by [`Self::load_dir`].
+    artifact_dir: Mutex<Option<std::path::PathBuf>>,
     /// Serializes quota store + engine rebalance so concurrent
     /// `set_quota`/`insert_engine` calls cannot interleave into a
     /// stored-quota/active-schedule mismatch.
@@ -118,8 +123,34 @@ impl ModelRegistry {
             evictions: AtomicU64::new(0),
             policies: Mutex::new(HashMap::new()),
             misses: Mutex::new(HashMap::new()),
+            artifact_dir: Mutex::new(None),
             quota_apply: Mutex::new(()),
         }
+    }
+
+    /// Declare where `.grimc` artifacts for this registry live, enabling
+    /// background loads of cold models ([`Self::artifact_path_for`]).
+    /// [`Self::load_dir`] sets this automatically.
+    pub fn set_artifact_dir(&self, dir: impl Into<std::path::PathBuf>) {
+        *self.artifact_dir.lock().unwrap() = Some(dir.into());
+    }
+
+    /// The configured artifact directory, if any.
+    pub fn artifact_dir(&self) -> Option<std::path::PathBuf> {
+        self.artifact_dir.lock().unwrap().clone()
+    }
+
+    /// Path of the on-disk artifact that could back model `name`
+    /// (`<artifact_dir>/<name>.grimc`), if the directory is configured
+    /// and the file exists. Names with path separators are rejected —
+    /// the model namespace must not become a filesystem traversal.
+    pub fn artifact_path_for(&self, name: &str) -> Option<std::path::PathBuf> {
+        if name.is_empty() || name.contains('/') || name.contains('\\') || name.contains("..") {
+            return None;
+        }
+        let dir = self.artifact_dir.lock().unwrap().clone()?;
+        let path = dir.join(format!("{name}.grimc"));
+        path.is_file().then_some(path)
     }
 
     /// The shared runtime all registry engines dispatch on.
@@ -285,8 +316,11 @@ impl ModelRegistry {
     }
 
     /// Load every `*.grimc` in `dir` (model name = file stem), sorted for
-    /// determinism. Returns the loaded names.
+    /// determinism, and remember `dir` as the artifact directory so
+    /// models evicted (or added to the directory) later can come back
+    /// via background loads. Returns the loaded names.
     pub fn load_dir(&self, dir: &Path) -> anyhow::Result<Vec<String>> {
+        self.set_artifact_dir(dir);
         let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?
             .filter_map(|e| e.ok().map(|e| e.path()))

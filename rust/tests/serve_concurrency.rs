@@ -1,0 +1,322 @@
+//! Concurrent-dispatch acceptance tests (the PR 8 serving tentpole):
+//!
+//! * two resident models' batches demonstrably **overlap in time** on
+//!   different dispatcher lanes (trace-span evidence),
+//! * forcing serial dispatch (`max_inflight = 1`) puts every batch on
+//!   one lane thread,
+//! * no request is lost under concurrent dispatch racing LRU eviction,
+//! * a request for a cold model is answered after a **background
+//!   artifact load** instead of failing,
+//! * deadline expiry surfaces as the typed [`ServeError::DeadlineExceeded`].
+//!
+//! Tracing state is process-global; tests that flip it serialize on
+//! [`trace_lock`] and look only for their own interned model names.
+
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::coordinator::{BatchPolicy, ServeError, Server, ServerConfig};
+use grim::engine::Engine;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::obs::trace::{self, SpanKind};
+use grim::serving::ModelRegistry;
+use grim::tensor::Tensor;
+use grim::util::Rng;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Serializes tests that flip the process-global tracing state.
+fn trace_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn plan_for(kind: ModelKind, preset: Preset, seed: u64) -> grim::compiler::ExecutionPlan {
+    let opts = InitOptions { rate: 4.0, block: [4, 16], seed };
+    let m = build_model(kind, preset, opts);
+    let w = random_weights(&m, opts);
+    compile(&m, &w, CompileOptions::default()).unwrap()
+}
+
+fn gru_plan(seed: u64) -> grim::compiler::ExecutionPlan {
+    plan_for(ModelKind::Gru, Preset::TimitMini, seed)
+}
+
+fn serial_forced() -> bool {
+    std::env::var("GRIM_SERIAL_DISPATCH").is_ok_and(|v| v == "1")
+}
+
+fn config_with_lanes(lanes: usize) -> ServerConfig {
+    ServerConfig {
+        batch: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+        max_inflight: Some(lanes),
+        ..ServerConfig::default()
+    }
+}
+
+/// Drive `reqs` requests per client thread against `model` and assert
+/// every one succeeds.
+fn hammer(server: &Arc<Server>, model: &str, clients: u64, reqs: usize) -> Vec<std::thread::JoinHandle<()>> {
+    (0..clients)
+        .map(|t| {
+            let s = Arc::clone(server);
+            let name = model.to_string();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(1000 * t + 7);
+                for _ in 0..reqs {
+                    let x = Tensor::rand_uniform(&[3, 32, 32], 1.0, &mut rng);
+                    let resp = s.infer_on(&name, x).unwrap();
+                    assert!(resp.error.is_none());
+                }
+            })
+        })
+        .collect()
+}
+
+/// (a) With two dispatcher lanes and two busy models, some pair of
+/// dispatch spans — one per model, on different lane threads — must
+/// overlap in wall time. Skipped under the serial-dispatch CI leg,
+/// where one lane is the whole point.
+#[test]
+fn two_models_batches_overlap_across_lanes() {
+    if serial_forced() {
+        return;
+    }
+    let _g = trace_lock();
+    trace::enable(1); // sample every batch
+    let registry = Arc::new(ModelRegistry::new(4));
+    // CNNs run for milliseconds per batch — with both models saturated
+    // and two lanes, overlap is structural, not a lucky race.
+    registry.insert_plan("conc-cnn-a", plan_for(ModelKind::Vgg16, Preset::CifarMini, 51));
+    registry.insert_plan("conc-cnn-b", plan_for(ModelKind::Vgg16, Preset::CifarMini, 52));
+    let server = Arc::new(Server::start_registry(Arc::clone(&registry), config_with_lanes(2)));
+    assert_eq!(server.dispatch_lanes(), 2);
+
+    let mut handles = hammer(&server, "conc-cnn-a", 2, 6);
+    handles.extend(hammer(&server, "conc-cnn-b", 2, 6));
+    for h in handles {
+        h.join().unwrap();
+    }
+    trace::disable();
+
+    let stats = server.stats();
+    assert_eq!(stats.completed, 24);
+    assert_eq!(stats.failed, 0, "no request loss under concurrent dispatch");
+
+    let id_a = trace::intern("conc-cnn-a");
+    let id_b = trace::intern("conc-cnn-b");
+    let spans = trace::snapshot();
+    let dispatch =
+        |id: u32| spans.iter().filter(move |s| s.kind == SpanKind::Dispatch && s.model == id);
+    assert!(dispatch(id_a).count() > 0 && dispatch(id_b).count() > 0, "both models traced");
+    let overlap = dispatch(id_a).any(|a| {
+        dispatch(id_b).any(|b| {
+            a.tid != b.tid
+                && a.start_us < b.start_us + b.dur_us
+                && b.start_us < a.start_us + a.dur_us
+        })
+    });
+    assert!(
+        overlap,
+        "expected a model-a dispatch span and a model-b dispatch span on \
+         different lanes overlapping in time"
+    );
+
+    // The new metric families exist and saw traffic.
+    let metrics = server.metrics();
+    let waits = metrics.histograms_named("grim_dispatch_wait_us");
+    assert!(!waits.is_empty(), "dispatch_wait histograms registered");
+    let total: u64 = waits.iter().map(|(_, h)| h.count()).sum();
+    assert!(total > 0, "dispatch_wait recorded per batch");
+    let prom = server.render_prometheus();
+    assert!(prom.contains("grim_inflight_batches"), "{prom}");
+    assert!(prom.contains("grim_dispatch_wait_us"), "{prom}");
+
+    // Everything drained: once the lanes are joined by shutdown, the
+    // inflight gauge must be back to zero.
+    assert_eq!(stats.dispatch_lanes, 2);
+    let server = Arc::try_unwrap(server).unwrap_or_else(|_| panic!("clients still hold refs"));
+    server.shutdown();
+    assert_eq!(metrics.gauge("grim_inflight_batches", &[]).get(), 0);
+}
+
+/// Serial dispatch (`max_inflight = 1`) is exactly the old scheduler:
+/// one lane thread executes every batch, so all dispatch spans of both
+/// models carry the same thread ring id.
+#[test]
+fn serial_dispatch_runs_on_one_lane() {
+    let _g = trace_lock();
+    trace::enable(1);
+    let registry = Arc::new(ModelRegistry::new(2));
+    registry.insert_plan("ser-rnn-a", gru_plan(61));
+    registry.insert_plan("ser-rnn-b", gru_plan(62));
+    let server = Arc::new(Server::start_registry(Arc::clone(&registry), config_with_lanes(1)));
+    assert_eq!(server.dispatch_lanes(), 1);
+    let mut rng = Rng::new(5);
+    for i in 0..12 {
+        let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+        let name = if i % 2 == 0 { "ser-rnn-a" } else { "ser-rnn-b" };
+        server.infer_on(name, x).unwrap();
+    }
+    trace::disable();
+    let ids = [trace::intern("ser-rnn-a"), trace::intern("ser-rnn-b")];
+    let tids: std::collections::HashSet<usize> = trace::snapshot()
+        .iter()
+        .filter(|s| s.kind == SpanKind::Dispatch && ids.contains(&s.model))
+        .map(|s| s.tid)
+        .collect();
+    assert_eq!(tids.len(), 1, "serial dispatch must use exactly one lane thread, saw {tids:?}");
+}
+
+/// (b) Concurrent dispatch racing LRU eviction: every submitted request
+/// gets exactly one response — success or a typed error — and the
+/// server neither hangs nor drops requests when a model is evicted
+/// mid-traffic.
+#[test]
+fn no_request_loss_under_eviction() {
+    // Measure one resident model, then budget the real registry so two
+    // can never be resident together.
+    let one_model_bytes = {
+        let probe = ModelRegistry::new(1);
+        probe.insert_plan("probe", gru_plan(71));
+        probe.resident_bytes()
+    };
+    let registry = Arc::new(ModelRegistry::with_budget(4, one_model_bytes + one_model_bytes / 2));
+    registry.insert_plan("ev-a", gru_plan(72));
+    let server = Arc::new(Server::start_registry(Arc::clone(&registry), config_with_lanes(2)));
+
+    let total_per_thread = 30usize;
+    let counts: Vec<std::thread::JoinHandle<(u64, u64)>> = (0..4u64)
+        .map(|t| {
+            let s = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(400 + t);
+                let (mut ok, mut failed) = (0u64, 0u64);
+                for i in 0..total_per_thread {
+                    let name = if (i as u64 + t) % 2 == 0 { "ev-a" } else { "ev-b" };
+                    let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+                    let rx = s.submit_to(name, x).unwrap();
+                    // Every request MUST be answered: recv() hanging or
+                    // erroring here is request loss.
+                    let resp = rx.recv().expect("request dropped without a response");
+                    match resp.error {
+                        None => ok += 1,
+                        Some(ServeError::ModelNotResident { .. }) => failed += 1,
+                        Some(other) => panic!("unexpected error: {other}"),
+                    }
+                }
+                (ok, failed)
+            })
+        })
+        .collect();
+    // Mid-traffic, load the second model; the budget evicts the first.
+    std::thread::sleep(Duration::from_millis(30));
+    registry.insert_plan("ev-b", gru_plan(73));
+    let (mut ok, mut failed) = (0u64, 0u64);
+    for h in counts {
+        let (o, f) = h.join().unwrap();
+        ok += o;
+        failed += f;
+    }
+    assert_eq!(ok + failed, 4 * total_per_thread as u64, "every request answered exactly once");
+    assert!(ok > 0, "some requests must succeed");
+    let stats = server.stats();
+    assert_eq!(stats.completed, ok);
+    assert_eq!(stats.failed, failed);
+    assert!(registry.evictions() >= 1, "the budget must have evicted a model");
+}
+
+/// Scratch directory for artifact tests, cleaned up on drop.
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!("grim-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// (c) A request for a model that is not resident but has an artifact on
+/// disk is parked, loaded in the background, re-enqueued, and answered
+/// successfully — the client just sees a slower first request. A corrupt
+/// artifact fails the parked request with the typed error instead.
+#[test]
+fn cold_model_served_via_background_load() {
+    let tmp = TempDir::new("serve-cold");
+    grim::artifact::save_grimc(&tmp.0.join("cold-rnn.grimc"), &gru_plan(77)).unwrap();
+    std::fs::write(tmp.0.join("corrupt.grimc"), b"not an artifact").unwrap();
+
+    let registry = Arc::new(ModelRegistry::new(2));
+    registry.set_artifact_dir(&tmp.0);
+    let server = Server::start_registry(Arc::clone(&registry), ServerConfig::default());
+    assert!(registry.get("cold-rnn").is_none(), "cold at start");
+
+    let mut rng = Rng::new(9);
+    let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+    let resp = server.infer_on("cold-rnn", x.clone()).expect("cold request must succeed");
+    assert!(resp.error.is_none());
+    assert!(registry.get("cold-rnn").is_some(), "model resident after background load");
+    let loads_ok = server.metrics().counter("grim_background_loads_total", &[("result", "ok")]);
+    assert_eq!(loads_ok.get(), 1, "exactly one background load");
+
+    // Now warm: a second request is served without another load.
+    server.infer_on("cold-rnn", x.clone()).unwrap();
+    assert_eq!(loads_ok.get(), 1);
+
+    // Corrupt artifact: the load runs, fails, and the parked request
+    // comes back with the typed not-resident error (not a hang).
+    let resp = server.submit_to("corrupt", x).unwrap().recv().unwrap();
+    assert_eq!(resp.error, Some(ServeError::ModelNotResident { model: "corrupt".into() }));
+    let loads_failed =
+        server.metrics().counter("grim_background_loads_total", &[("result", "failed")]);
+    assert_eq!(loads_failed.get(), 1);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed, 1);
+}
+
+/// (d) Deadline expiry at dequeue: the typed error comes back, the
+/// request never executes, and the expired accounting shows up in both
+/// `ServerStats` and the per-model Prometheus counter.
+#[test]
+fn deadline_expiry_surfaces_typed_error() {
+    let plan = gru_plan(81);
+    let model_name = plan.name.clone();
+    let server = Server::start(Engine::new(plan, 2), ServerConfig::default());
+    let mut rng = Rng::new(13);
+    let x = Tensor::rand_uniform(&[20, 19], 1.0, &mut rng);
+
+    let resp = server
+        .submit_with_deadline(None, x.clone(), Duration::ZERO)
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert_eq!(resp.error, Some(ServeError::DeadlineExceeded));
+    assert_eq!(resp.exec_ms, 0.0, "expired requests must not execute");
+
+    // A comfortable deadline serves normally.
+    let ok = server
+        .submit_with_deadline(None, x, Duration::from_secs(30))
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(ok.error.is_none());
+
+    let expired = server
+        .metrics()
+        .counter("grim_requests_expired_total", &[("model", &model_name)]);
+    assert_eq!(expired.get(), 1, "per-model expired counter");
+    let stats = server.shutdown();
+    assert_eq!(stats.expired, 1);
+    assert_eq!(stats.failed, 1, "expired is a subset of failed");
+    assert_eq!(stats.completed, 1);
+}

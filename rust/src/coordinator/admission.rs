@@ -19,14 +19,20 @@
 //!   `requeued = true`; if it misses again (the model was evicted in
 //!   between) it fails immediately rather than looping park → load →
 //!   evict forever.
+//! * Every request answered with an error here (failed load, closed
+//!   queue on re-enqueue, shutdown leftovers) advances the server-wide
+//!   and per-model failed counters, exactly like dispatcher-lane
+//!   failures — `completed + failed = total responses` holds on the
+//!   admission path too.
 
 use super::queue::{InferRequest, InferResponse, RequestQueue, ServeError};
 use super::server::PendingMap;
-use crate::obs::Counter;
+use crate::obs::{Counter, Registry};
 use crate::serving::ModelRegistry;
 use crate::tensor::Tensor;
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Requests waiting out a background load, plus loader liveness.
@@ -48,6 +54,11 @@ pub(crate) struct Admission {
     /// `grim_background_loads_total{result="ok"|"failed"}`.
     loads_ok: Arc<Counter>,
     loads_failed: Arc<Counter>,
+    /// The server's metric registry — [`Self::fail`] charges the
+    /// per-model `grim_requests_failed_total` series through it.
+    metrics: Arc<Registry>,
+    /// The server-wide failed-request count (shared with the lanes).
+    failed: Arc<AtomicU64>,
     loaders: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -59,6 +70,8 @@ impl Admission {
         cap: usize,
         loads_ok: Arc<Counter>,
         loads_failed: Arc<Counter>,
+        metrics: Arc<Registry>,
+        failed: Arc<AtomicU64>,
     ) -> Arc<Admission> {
         Arc::new(Admission {
             registry,
@@ -72,6 +85,8 @@ impl Admission {
             cap,
             loads_ok,
             loads_failed,
+            metrics,
+            failed,
             loaders: Mutex::new(Vec::new()),
         })
     }
@@ -155,7 +170,12 @@ impl Admission {
         }
     }
 
+    /// Answer `req` with the typed not-resident error and account it as
+    /// failed, server-wide and per-model, mirroring the dispatcher
+    /// lanes' failure accounting.
     fn fail(&self, req: &InferRequest, model: &str) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.counter("grim_requests_failed_total", &[("model", model)]).inc();
         super::server::respond_error(
             &self.pending_resp,
             req,

@@ -3,7 +3,13 @@
 //! — the vendored dependency set has no tokio/hyper, and the coordinator
 //! already is the concurrency layer: handlers block on the same
 //! [`Server`] submit/recv path every in-process client uses, so HTTP
-//! adds an ingress, not a second scheduler).
+//! adds an ingress, not a second scheduler). Handler threads are
+//! bounded by a [`MAX_HANDLERS`]-permit semaphore — while all permits
+//! are taken the accept loop stops pulling connections (they queue in
+//! the OS backlog), so a connection flood cannot grow OS threads
+//! without bound — and infer handlers wait at most [`INFER_TIMEOUT`]
+//! for the coordinator's response (504 after that), so a stalled model
+//! load cannot pin handlers forever.
 //!
 //! Endpoints:
 //!
@@ -27,7 +33,8 @@ use crate::util::Rng;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 /// Largest accepted request body (a [3,32,32] CIFAR input is ~40 KB of
@@ -36,6 +43,52 @@ use std::time::Duration;
 const MAX_BODY: usize = 8 << 20;
 /// Largest accepted header block.
 const MAX_HEAD: usize = 64 << 10;
+/// Maximum concurrently running connection-handler threads.
+const MAX_HANDLERS: usize = 64;
+/// Longest an infer handler waits for the coordinator's response before
+/// answering 504 (generous: it exists to unpin handlers from a stalled
+/// background model load, not to race healthy requests).
+const INFER_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Minimal counting semaphore (std has none) bounding handler threads.
+struct Permits {
+    free: Mutex<usize>,
+    cv: Condvar,
+}
+
+/// One taken permit; returned on drop (so a panicking or failed-to-spawn
+/// handler can never leak capacity).
+struct Permit(Arc<Permits>);
+
+impl Permits {
+    fn new(n: usize) -> Arc<Permits> {
+        Arc::new(Permits { free: Mutex::new(n), cv: Condvar::new() })
+    }
+
+    /// Take a permit, polling `stop` so shutdown cannot hang behind
+    /// stalled handlers; `None` once stopping.
+    fn acquire(self: &Arc<Self>, stop: &AtomicBool) -> Option<Permit> {
+        let mut free = self.free.lock().unwrap();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return None;
+            }
+            if *free > 0 {
+                *free -= 1;
+                return Some(Permit(Arc::clone(self)));
+            }
+            let (g, _) = self.cv.wait_timeout(free, Duration::from_millis(50)).unwrap();
+            free = g;
+        }
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        *self.0.free.lock().unwrap() += 1;
+        self.0.cv.notify_one();
+    }
+}
 
 /// A running HTTP ingress bound to one [`Server`].
 pub struct HttpServer {
@@ -60,19 +113,28 @@ impl HttpServer {
             std::thread::Builder::new()
                 .name("grim-http".into())
                 .spawn(move || {
+                    let permits = Permits::new(MAX_HANDLERS);
                     for conn in listener.incoming() {
                         if stop.load(Ordering::Relaxed) {
                             break;
                         }
                         let Ok(stream) = conn else { continue };
+                        // Bound handler concurrency: block until a
+                        // permit frees up (further connections queue in
+                        // the OS accept backlog meanwhile); a stop
+                        // request while saturated drops this connection
+                        // and exits.
+                        let Some(permit) = permits.acquire(&stop) else { break };
                         let server = Arc::clone(&server);
                         let handled = Arc::clone(&handled);
                         // Handlers are detached: each serves exactly one
-                        // request (Connection: close) with read timeouts,
-                        // so they cannot outlive shutdown by much.
+                        // request (Connection: close) with read and
+                        // response timeouts, so they cannot outlive
+                        // shutdown by much.
                         let _ = std::thread::Builder::new()
                             .name("grim-http-conn".into())
                             .spawn(move || {
+                                let _permit = permit;
                                 handle_connection(&server, stream);
                                 handled.fetch_add(1, Ordering::Relaxed);
                             });
@@ -126,6 +188,8 @@ fn handle_connection(server: &Server, mut stream: TcpStream) {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Error",
     };
@@ -307,9 +371,17 @@ fn handle_infer(server: &Server, body: &str) -> (u16, &'static str, String) {
         Ok(rx) => rx,
         Err(e) => return (503, "application/json", err_json(&e.to_string())),
     };
-    let resp = match rx.recv() {
+    let resp = match rx.recv_timeout(INFER_TIMEOUT) {
         Ok(r) => r,
-        Err(_) => return (500, "application/json", err_json("server dropped request")),
+        // E.g. a background model load that never completes: free this
+        // handler thread (and its permit) instead of pinning it forever.
+        // The coordinator's eventual response is dropped harmlessly.
+        Err(RecvTimeoutError::Timeout) => {
+            return (504, "application/json", err_json("timed out waiting for inference response"))
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            return (500, "application/json", err_json("server dropped request"))
+        }
     };
     if let Some(err) = &resp.error {
         let status = match err {

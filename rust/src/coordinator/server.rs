@@ -31,6 +31,7 @@ use super::batcher::{Batch, Batcher, BatchPolicy};
 use super::queue::{InferRequest, InferResponse, RequestQueue, ServeError};
 use crate::engine::Engine;
 use crate::memory::{PoolStats, WorkspacePool};
+use crate::obs::metrics::HIST_BUCKETS;
 use crate::obs::trace::{self, SpanKind};
 use crate::obs::{Counter, Gauge, Histogram, Registry};
 use crate::serving::ModelRegistry;
@@ -282,6 +283,9 @@ impl Server {
         // up (at 0) in scrapes before the first cold-model request.
         let loads_ok = metrics.counter("grim_background_loads_total", &[("result", "ok")]);
         let loads_failed = metrics.counter("grim_background_loads_total", &[("result", "failed")]);
+        // Shared with the admission controller: requests it fails on the
+        // load path count exactly like lane failures.
+        let failed = Arc::new(AtomicU64::new(0));
         let admission = Admission::new(
             Arc::clone(&registry),
             Arc::clone(&queue),
@@ -289,6 +293,8 @@ impl Server {
             config.pending_cap,
             loads_ok,
             loads_failed,
+            Arc::clone(&metrics),
+            Arc::clone(&failed),
         );
         let shared = Arc::new(LaneShared {
             pending: Arc::clone(&pending),
@@ -303,7 +309,7 @@ impl Server {
             hist_batch_form: Arc::new(Histogram::new()),
             hist_batch_size: Arc::new(Histogram::new()),
             completed: Arc::new(AtomicU64::new(0)),
-            failed: Arc::new(AtomicU64::new(0)),
+            failed,
             expired: Arc::new(AtomicU64::new(0)),
             batches: Arc::new(AtomicU64::new(0)),
         });
@@ -664,8 +670,11 @@ fn process_batch(shared: &LaneShared, hists: &mut HashMap<String, ModelHists>, m
     mh.dispatch_wait
         .record(picked.saturating_duration_since(batch.formed).as_micros() as u64);
     // 1/N batch sampling decides whether this batch's spans are recorded
-    // (tracing-off cost: one relaxed load inside on_batch_start).
-    let sampled = trace::on_batch_start();
+    // (tracing-off cost: one relaxed load inside on_batch_start). The
+    // guard keeps runtime-side span sites active for this batch's window
+    // and is dropped when the batch finishes.
+    let batch_trace = trace::on_batch_start();
+    let sampled = batch_trace.sampled();
     if sampled {
         trace::record_span(
             SpanKind::BatchForm,
@@ -791,22 +800,26 @@ fn process_batch(shared: &LaneShared, hists: &mut HashMap<String, ModelHists>, m
 }
 
 /// Quota-governor loop: every tick, compare each SLO'd model's observed
-/// p99 (cumulative, from the server's latency histograms) against its
-/// target and nudge the model's runtime quota by one bucket — up while
-/// over target, down while under half the target. Acts only when the
-/// model saw new completed traffic since the last adjustment, so an idle
-/// model's quota is never churned.
+/// p99 against its target and nudge the model's runtime quota by one
+/// bucket — up while over target, down while under half the target.
+///
+/// The p99 is **windowed**, not cumulative: the governor keeps a bucket
+/// snapshot per model and summarizes only the samples that arrived since
+/// its last adjustment decision, so an early latency spike ages out of
+/// the estimate instead of pinning p99 above target forever (which would
+/// make the narrowing branch unreachable). A window thinner than
+/// `MIN_SAMPLES` keeps accumulating across ticks, so an idle or trickle
+/// model's quota is never churned on noise.
 fn run_governor(
     stop: &AtomicBool,
     registry: &ModelRegistry,
     metrics: &Registry,
     slo: &[(String, f64)],
 ) {
-    /// Completed samples a model must accumulate before the governor
-    /// trusts its p99 estimate.
-    const MIN_SAMPLES: usize = 8;
+    /// New samples a model's window must hold before the governor trusts
+    /// its p99 estimate.
+    const MIN_SAMPLES: u64 = 8;
     let width = registry.runtime().threads();
-    let mut last_count: HashMap<&str, usize> = HashMap::new();
     let hists: Vec<(&str, f64, Arc<Histogram>, Arc<Counter>)> = slo
         .iter()
         .map(|(m, t)| {
@@ -818,6 +831,8 @@ fn run_governor(
             )
         })
         .collect();
+    // Per-model bucket baseline, advanced whenever a window is consumed.
+    let mut base: Vec<[u64; HIST_BUCKETS]> = vec![[0; HIST_BUCKETS]; hists.len()];
     while !stop.load(Ordering::Relaxed) {
         // ~100 ms cadence, but responsive to shutdown.
         for _ in 0..5 {
@@ -826,23 +841,50 @@ fn run_governor(
             }
             std::thread::sleep(Duration::from_millis(20));
         }
-        for (model, target_ms, hist, adjustments) in &hists {
-            let s = hist.summary(1e-3); // µs → ms
-            let seen = last_count.entry(model).or_insert(0);
-            if s.count < MIN_SAMPLES || s.count == *seen {
-                continue;
+        for (i, (model, target_ms, hist, adjustments)) in hists.iter().enumerate() {
+            let cur_buckets: [u64; HIST_BUCKETS] =
+                std::array::from_fn(|b| hist.bucket_count(b));
+            let delta: [u64; HIST_BUCKETS] =
+                std::array::from_fn(|b| cur_buckets[b].saturating_sub(base[i][b]));
+            let n: u64 = delta.iter().sum();
+            if n < MIN_SAMPLES {
+                continue; // window too thin — keep accumulating
             }
-            *seen = s.count;
+            base[i] = cur_buckets;
+            let p99_ms = delta_quantile_us(&delta, n, 0.99) * 1e-3;
             let cur = registry.runtime().effective_threads(model);
-            if s.p99 > *target_ms && cur < width {
+            if p99_ms > *target_ms && cur < width {
                 registry.set_quota(model, cur + 1);
                 adjustments.inc();
-            } else if s.p99 < 0.5 * target_ms && cur > 1 {
+            } else if p99_ms < 0.5 * target_ms && cur > 1 {
                 registry.set_quota(model, cur - 1);
                 adjustments.inc();
             }
         }
     }
+}
+
+/// Nearest-rank quantile (in recorded µs) over a bucket-count delta —
+/// the windowed analogue of [`Histogram::quantile`], interpolated
+/// linearly inside the landing bucket. Without the exact min/max of the
+/// window the open top bucket reports its lower bound. `n` is the sample
+/// count of `delta` (must be > 0).
+fn delta_quantile_us(delta: &[u64; HIST_BUCKETS], n: u64, q: f64) -> f64 {
+    let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+    let mut cum = 0u64;
+    for (i, &c) in delta.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if cum + c >= rank {
+            let lo = Histogram::bucket_lower(i) as f64;
+            let hi = if i + 1 >= HIST_BUCKETS { lo } else { Histogram::bucket_upper(i) as f64 };
+            let frac = (rank - cum) as f64 / c as f64;
+            return lo + frac * (hi - lo);
+        }
+        cum += c;
+    }
+    0.0
 }
 
 #[cfg(test)]

@@ -8,8 +8,8 @@
 //! ## Cost model
 //!
 //! * **Off (the default):** every span site is guarded by [`active`],
-//!   which is a single `Relaxed` load of [`ENABLED`] (the `&&` with
-//!   [`SAMPLING`] short-circuits, so the second load never happens when
+//!   which is a single `Relaxed` load of [`ENABLED`] (the `&&` with the
+//!   sampling counters short-circuits, so their loads never happen when
 //!   tracing is off). No allocation, no `Instant::now()`, nothing else.
 //!   `rust/tests/obs.rs` asserts the default-off path records nothing;
 //!   the one-relaxed-load claim is by inspection of [`active`] — the
@@ -20,11 +20,16 @@
 //!
 //! ## Sampling
 //!
-//! `enable(n)` samples one batch in `n`: the server calls
-//! [`on_batch_start`] per formed batch, which flips the process-wide
-//! [`SAMPLING`] flag for the duration of that batch. Standalone engine
-//! runs (no batcher) never clear the flag, so they are always sampled
-//! when tracing is on.
+//! `enable(n)` samples one batch in `n`: each dispatcher lane calls
+//! [`on_batch_start`] per batch and holds the returned [`BatchGuard`]
+//! for the batch's execution window. Runtime-side span sites
+//! ([`active`]) record while **any** in-flight batch is sampled — with
+//! concurrent lanes, worker/kernel spans of an overlapping unsampled
+//! batch may therefore be recorded too (a conservative
+//! over-approximation; spans of sampled batches are never dropped, and
+//! one lane's decision cannot clobber another's). Standalone engine
+//! runs (no batcher, zero batches in flight) are always sampled when
+//! tracing is on.
 
 use crate::util::json::Json;
 use std::cell::OnceCell;
@@ -40,7 +45,10 @@ pub const RING_CAP: usize = 4096;
 const WRITING: u64 = u64::MAX;
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
-static SAMPLING: AtomicBool = AtomicBool::new(true);
+/// Batches currently executing on dispatcher lanes (sampled or not).
+static INFLIGHT_BATCHES: AtomicU64 = AtomicU64::new(0);
+/// Currently executing batches whose 1-in-N draw selected them.
+static SAMPLED_INFLIGHT: AtomicU64 = AtomicU64::new(0);
 static SAMPLE_EVERY: AtomicU64 = AtomicU64::new(1);
 static BATCH_SEQ: AtomicU64 = AtomicU64::new(0);
 /// Interned name of the model the current batch runs (worker-lane label
@@ -314,11 +322,15 @@ pub fn enabled() -> bool {
 }
 
 /// Should the current work be recorded? When tracing is off this is a
-/// single `Relaxed` load (the `&&` short-circuits before touching
-/// `SAMPLING`) — the entire off-path cost at every span site.
+/// single `Relaxed` load (the `&&` short-circuits before touching the
+/// sampling counters) — the entire off-path cost at every span site.
+/// When on: record while any in-flight batch is sampled, or while no
+/// batch is in flight at all (standalone engine runs).
 #[inline]
 pub fn active() -> bool {
-    ENABLED.load(Ordering::Relaxed) && SAMPLING.load(Ordering::Relaxed)
+    ENABLED.load(Ordering::Relaxed)
+        && (SAMPLED_INFLIGHT.load(Ordering::Relaxed) > 0
+            || INFLIGHT_BATCHES.load(Ordering::Relaxed) == 0)
 }
 
 /// Timestamp the start of a would-be span: `None` (and no clock read)
@@ -337,7 +349,6 @@ pub fn begin() -> Option<Instant> {
 pub fn enable(every: u64) {
     epoch(); // pin the zero point before any span
     SAMPLE_EVERY.store(every.max(1), Ordering::Relaxed);
-    SAMPLING.store(true, Ordering::Relaxed);
     ENABLED.store(true, Ordering::Relaxed);
     super::set_pool_timing(true);
 }
@@ -360,18 +371,53 @@ pub fn init_from_env() {
     });
 }
 
+/// RAII token for one batch's execution window: returned by
+/// [`on_batch_start`], it keeps the batch counted as in flight (and, if
+/// sampled, keeps runtime span recording active) until dropped at batch
+/// end. The decision travels with the batch instead of through a
+/// process-global flag, so concurrent dispatcher lanes cannot clobber
+/// each other's draws.
+#[must_use = "hold the guard for the batch's execution window"]
+pub struct BatchGuard {
+    /// Whether this guard incremented the in-flight counters (tracing
+    /// was enabled at batch start) and must decrement them on drop.
+    counted: bool,
+    sampled: bool,
+}
+
+impl BatchGuard {
+    /// Whether this batch's spans should be recorded.
+    pub fn sampled(&self) -> bool {
+        self.sampled
+    }
+}
+
+impl Drop for BatchGuard {
+    fn drop(&mut self) {
+        if self.counted {
+            if self.sampled {
+                SAMPLED_INFLIGHT.fetch_sub(1, Ordering::Relaxed);
+            }
+            INFLIGHT_BATCHES.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
 /// Per-batch sampling hook: batch `seq` is sampled iff
-/// `seq % every == 0`. Returns whether the batch is sampled. No-op
-/// (one relaxed load) when tracing is off.
-pub fn on_batch_start() -> bool {
+/// `seq % every == 0`. No-op (one relaxed load) when tracing is off.
+/// The caller holds the returned guard for the batch's execution window.
+pub fn on_batch_start() -> BatchGuard {
     if !enabled() {
-        return false;
+        return BatchGuard { counted: false, sampled: false };
     }
     let every = SAMPLE_EVERY.load(Ordering::Relaxed);
     let seq = BATCH_SEQ.fetch_add(1, Ordering::Relaxed);
     let sampled = seq % every == 0;
-    SAMPLING.store(sampled, Ordering::Relaxed);
-    sampled
+    INFLIGHT_BATCHES.fetch_add(1, Ordering::Relaxed);
+    if sampled {
+        SAMPLED_INFLIGHT.fetch_add(1, Ordering::Relaxed);
+    }
+    BatchGuard { counted: true, sampled }
 }
 
 /// Label hint for worker-lane spans: the interned name of the model the

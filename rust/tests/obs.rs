@@ -184,11 +184,34 @@ fn concurrent_writers_and_reader_yield_only_committed_spans() {
 fn batch_sampling_is_one_in_n() {
     let _g = trace_lock();
     trace::enable(3);
-    let sampled: Vec<bool> = (0..9).map(|_| trace::on_batch_start()).collect();
+    let sampled: Vec<bool> =
+        (0..9).map(|_| trace::on_batch_start().sampled()).collect();
     trace::disable();
     assert_eq!(sampled.iter().filter(|s| **s).count(), 3, "one batch in three is sampled");
-    // restore: subsequent tests (and standalone runs) expect sampling on
-    trace::enable(1);
+}
+
+/// The per-batch sampling decision travels with each batch's guard:
+/// while a sampled batch is in flight, runtime span sites stay active
+/// even when an unsampled batch starts concurrently on another lane
+/// (the old process-global flag let the later batch clobber the
+/// earlier decision), and with only unsampled batches in flight they
+/// are inactive.
+#[test]
+fn concurrent_batch_guards_do_not_clobber_sampling() {
+    let _g = trace_lock();
+    trace::enable(2); // sample every other batch
+    // The global batch sequence carries over from other tests, so which
+    // of two consecutive draws is the sampled one is not fixed — but
+    // with period 2 it is exactly one of them.
+    let a = trace::on_batch_start();
+    let b = trace::on_batch_start();
+    assert_ne!(a.sampled(), b.sampled(), "period 2 → one of two consecutive batches sampled");
+    let (sampled, unsampled) = if a.sampled() { (a, b) } else { (b, a) };
+    assert!(trace::active(), "a concurrent unsampled batch must not disable recording");
+    drop(sampled);
+    assert!(!trace::active(), "only an unsampled batch left in flight");
+    drop(unsampled);
+    assert!(trace::active(), "standalone (no batch in flight) is always sampled");
     trace::disable();
 }
 

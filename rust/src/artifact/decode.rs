@@ -4,9 +4,12 @@
 //! [`AlignedBuf`]s in their packed order; nothing is re-encoded or
 //! re-packed (asserted by [`super::from_bytes`] via the pack counter).
 //!
-//! Reads **v3** (mixed-width column indices + hardware-matrix stats),
-//! **v2** (schedules in their own plan-level block) and the
-//! legacy **v1** (partitions embedded in `PackedBcrc` / CSR kernels).
+//! Reads **v4** (trailing cost-model table, recomputed and
+//! cross-checked rather than trusted), **v3** (mixed-width column
+//! indices + hardware-matrix stats), **v2** (schedules in their own
+//! plan-level block) and the legacy **v1** (partitions embedded in
+//! `PackedBcrc` / CSR kernels). Pre-v4 files get their cost table
+//! recomputed at load, so every loaded plan carries one.
 //! The v1 path hoists every embedded partition into a synthesized
 //! [`ScheduleSet`] as it decodes, so old artifacts run unchanged on the
 //! shared-runtime engine. All schedule validation (coverage, nnz
@@ -17,6 +20,7 @@ use super::{fnv1a64, GRIMC_MIN_READ_VERSION, GRIMC_VERSION, HEADER_LEN, MAGIC};
 use crate::compiler::plan::{
     Activation, ExecutionPlan, GruLayerPlan, KernelImpl, ScheduleSet, Step,
 };
+use crate::compiler::cost::LayerCost;
 use crate::compiler::PackingStats;
 use crate::conv::ConvGeom;
 use crate::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
@@ -39,7 +43,7 @@ struct Reader<'a> {
     /// alignment-checked against `file` before decoding starts.
     sections: Vec<(usize, usize)>,
     file: &'a [u8],
-    /// Format version from the header (1..=3).
+    /// Format version from the header (1..=4).
     version: u32,
     /// v1 compat: partitions hoisted out of their legacy in-kernel
     /// positions while kernels decode; becomes the plan's
@@ -1157,8 +1161,51 @@ fn decode_plan(r: &mut Reader) -> anyhow::Result<ExecutionPlan> {
         let threads = parts.first().map(|pt| pt.num_buckets()).unwrap_or(0);
         ScheduleSet { threads, parts }
     };
-    let plan =
-        ExecutionPlan { name, steps, inputs, input_id, output_id, memory, packing, schedules };
+    // v4: the stored cost table. The costs are pure plan arithmetic,
+    // so instead of trusting the file the reader recomputes the pass
+    // over the decoded plan and requires bit-exact agreement (integer
+    // counters; one deterministic f64 division) — a stale or corrupted
+    // table is a decode error, not silently-wrong telemetry. Pre-v4
+    // files get the same recomputed table for free.
+    let stored_costs = if r.version >= 4 {
+        let nc = r.len32()?;
+        anyhow::ensure!(nc == n, "cost table has {nc} entries for {n} steps");
+        let mut costs = Vec::with_capacity(nc);
+        for _ in 0..nc {
+            costs.push(LayerCost {
+                flops: r.u64()?,
+                dense_flops: r.u64()?,
+                weight_bytes: r.u64()?,
+                act_bytes: r.u64()?,
+                nnz: r.u64()?,
+                arithmetic_intensity: f64::from_bits(r.u64()?),
+            });
+        }
+        Some(costs)
+    } else {
+        None
+    };
+    let mut plan = ExecutionPlan {
+        name,
+        steps,
+        inputs,
+        input_id,
+        output_id,
+        memory,
+        packing,
+        schedules,
+        costs: Vec::new(),
+    };
+    plan.costs = crate::compiler::cost::cost_pass(&plan);
+    if let Some(stored) = stored_costs {
+        for (i, (got, want)) in stored.iter().zip(&plan.costs).enumerate() {
+            anyhow::ensure!(
+                got == want,
+                "stored cost table disagrees with the plan at step {i} \
+                 (stored {got:?}, recomputed {want:?})"
+            );
+        }
+    }
     validate_plan_consistency(&plan)?;
     validate_schedules(&plan)?;
     Ok(plan)

@@ -388,7 +388,8 @@ fn put_step(w: &mut Writer, step: &Step, schedules: &ScheduleSet, version: u32) 
 }
 
 /// Serialize the full plan into `w`'s meta stream + sections, using the
-/// grammar of `version` (1 = legacy embedded partitions, 2 = current).
+/// grammar of `version` (1 = legacy embedded partitions, 4 = current;
+/// see the version list in [`super`]'s module docs).
 pub fn encode_plan(w: &mut Writer, plan: &ExecutionPlan, version: u32) -> anyhow::Result<()> {
     let n = plan.steps.len();
     anyhow::ensure!(plan.inputs.len() == n, "plan inputs/steps length mismatch");
@@ -468,6 +469,26 @@ pub fn encode_plan(w: &mut Writer, plan: &ExecutionPlan, version: u32) -> anyhow
         w.u32(sc.parts.len() as u32);
         for part in &sc.parts {
             put_partition(w, part);
+        }
+    }
+    // v4: the per-step cost-model table, one entry per step in step
+    // order. The reader recomputes and cross-checks it (the table is
+    // deterministic plan arithmetic), so a corrupted or stale table is
+    // rejected rather than trusted.
+    if version >= 4 {
+        anyhow::ensure!(
+            plan.costs.len() == n,
+            "plan cost table has {} entries for {n} steps",
+            plan.costs.len()
+        );
+        w.u32(plan.costs.len() as u32);
+        for c in &plan.costs {
+            w.u64(c.flops);
+            w.u64(c.dense_flops);
+            w.u64(c.weight_bytes);
+            w.u64(c.act_bytes);
+            w.u64(c.nnz);
+            w.u64(c.arithmetic_intensity.to_bits());
         }
     }
     Ok(())

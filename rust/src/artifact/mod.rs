@@ -21,7 +21,7 @@
 //!
 //! ```text
 //! 0   magic      b"GRMC"
-//! 4   version    u32 (currently 3; bumped on any format change)
+//! 4   version    u32 (currently 4; bumped on any format change)
 //! 8   checksum   u64 FNV-1a over every byte from offset 16 to EOF
 //! 16  meta_len   u64 length of the meta stream in bytes
 //! 24  n_sections u32
@@ -37,7 +37,14 @@
 //!
 //! # Versions
 //!
-//! * **v3** (current): column indices may use the per-group mixed-width
+//! * **v4** (current): a trailing per-step cost-model block (the
+//!   compiler's [`crate::compiler::cost::LayerCost`] table — flops,
+//!   dense-equivalent flops, weight/activation bytes, nnz, arithmetic
+//!   intensity) after the schedules block. The counts are pure plan
+//!   arithmetic, so the reader *recomputes* the table and rejects a
+//!   file whose stored costs disagree; v1–v3 artifacts simply get the
+//!   table recomputed at load. Otherwise identical to v3.
+//! * **v3** (read-compatible): column indices may use the per-group mixed-width
 //!   grammar (tag 2: u16 delta pool + u32 pool + per-group flags), and
 //!   the trailing [`PackingStats`] carry the hardware-matrix row (ISA +
 //!   register-panel height) plus mixed-width counters. Otherwise
@@ -71,7 +78,7 @@ use std::path::Path;
 pub(crate) const MAGIC: &[u8; 4] = b"GRMC";
 
 /// Current `.grimc` format version (written by [`to_bytes`]).
-pub const GRIMC_VERSION: u32 = 3;
+pub const GRIMC_VERSION: u32 = 4;
 
 /// Oldest version [`from_bytes`] still reads.
 pub const GRIMC_MIN_READ_VERSION: u32 = 1;

@@ -55,27 +55,35 @@ impl Report {
         }
     }
 
-    /// Write JSON to `bench_out/<name>.json`.
+    /// The report as a `grim_bench_schema` JSON object (the one shape
+    /// every emitter writes — see [`crate::obs::prof`]), stamped with
+    /// the machine model the run used.
+    pub fn to_json(&self) -> Json {
+        let machine = crate::obs::prof::MachineModel::detect(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        );
+        self.to_json_with(&machine)
+    }
+
+    /// [`Self::to_json`] with an explicit machine model (callers that
+    /// ran on a specific thread count, like `grim profile --threads`).
+    pub fn to_json_with(&self, machine: &crate::obs::prof::MachineModel) -> Json {
+        crate::obs::prof::report_json(
+            &self.name,
+            &self.title,
+            &self.columns,
+            &self.rows,
+            &self.meta,
+            machine,
+        )
+    }
+
+    /// Write schema-validated JSON to `bench_out/<name>.json`.
     pub fn save(&self) -> anyhow::Result<PathBuf> {
         let dir = PathBuf::from("bench_out");
         std::fs::create_dir_all(&dir)?;
-        let mut obj = Json::obj();
-        obj.set("name", Json::Str(self.name.clone()))
-            .set("title", Json::Str(self.title.clone()))
-            .set(
-                "columns",
-                Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
-            )
-            .set(
-                "rows",
-                Json::Arr(
-                    self.rows
-                        .iter()
-                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
-                        .collect(),
-                ),
-            )
-            .set("meta", self.meta.clone());
+        let obj = self.to_json();
+        crate::obs::prof::validate_report(&obj)?;
         let path = dir.join(format!("{}.json", self.name));
         std::fs::write(&path, obj.to_pretty())?;
         Ok(path)
@@ -129,6 +137,13 @@ mod tests {
     fn wrong_width_panics() {
         let mut r = Report::new("t", "T", &["a", "b"]);
         r.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn report_json_is_schema_valid() {
+        let mut r = Report::new("t", "T", &["kernel", "ms"]);
+        r.row(vec!["k1".into(), "2.0".into()]);
+        crate::obs::prof::validate_report(&r.to_json()).unwrap();
     }
 
     #[test]

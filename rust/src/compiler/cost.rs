@@ -1,0 +1,207 @@
+//! Pass 6: plan-time per-step **cost model** — the static half of the
+//! roofline attribution in [`crate::obs::prof`].
+//!
+//! For every step the pass counts, from nothing but the compiled plan:
+//!
+//! * **sparse-effective FLOPs** — the multiply-adds the selected kernel
+//!   actually performs (BCR/CSR kernels skip zero blocks, so this is
+//!   `2·nnz·N` for a GEMM-shaped layer);
+//! * **dense-equivalent FLOPs** — what a dense kernel of the same layer
+//!   geometry would perform (`2·M·K·N`); the ratio is the per-layer BCR
+//!   win the paper's Fig. 12/13 report;
+//! * **weight bytes** streamed per inference ([`step_weight_bytes`]:
+//!   the packed layout when one exists — that is what the kernel
+//!   reads);
+//! * **activation bytes** — inputs read + output written, from the
+//!   memory plan's shapes;
+//! * **nnz** and the resulting **arithmetic intensity**
+//!   `flops / (weight_bytes + act_bytes)`.
+//!
+//! The arithmetic is pure integer counting plus one final f64 division,
+//! so recomputing the table from a decoded plan is bit-exact — the
+//! `.grimc` v4 reader exploits that to *validate* a stored table
+//! instead of trusting it (see [`crate::artifact::decode`]). The same
+//! conventions are enumerated independently by
+//! `python/tests/sim_prof.py`.
+
+use super::plan::{step_weight_bytes, ExecutionPlan, KernelImpl, Step};
+use crate::memory::MemoryPlan;
+use crate::graph::NodeId;
+
+/// Static cost of one executable step. All counts are per single
+/// inference (batch 1, the plan's native shape).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerCost {
+    /// Multiply-adds the selected kernel performs (×2: mul + add).
+    pub flops: u64,
+    /// What a dense kernel of the same geometry would perform.
+    pub dense_flops: u64,
+    /// Weight bytes streamed per inference (packed size when packed).
+    pub weight_bytes: u64,
+    /// Activation bytes: inputs read + output written (f32).
+    pub act_bytes: u64,
+    /// Stored non-zeros across the step's kernels.
+    pub nnz: u64,
+    /// `flops / (weight_bytes + act_bytes)`; 0 when no bytes move.
+    pub arithmetic_intensity: f64,
+}
+
+impl LayerCost {
+    fn finish(mut self) -> LayerCost {
+        let bytes = self.weight_bytes + self.act_bytes;
+        self.arithmetic_intensity =
+            if bytes == 0 { 0.0 } else { self.flops as f64 / bytes as f64 };
+        self
+    }
+}
+
+/// Stored non-zeros of one GEMM kernel. Dense formats count every
+/// element; Winograd counts the transformed-domain weights it streams
+/// (so its dense-equivalent ratio is exactly 1 — Winograd never skips).
+pub fn kernel_nnz(k: &KernelImpl) -> u64 {
+    match k {
+        KernelImpl::NaiveDense { w } | KernelImpl::Dense { w, .. } => w.numel() as u64,
+        KernelImpl::Winograd { w4, .. } => w4.numel() as u64,
+        KernelImpl::Csr { mat, .. } => mat.nnz() as u64,
+        KernelImpl::Bcrc { gemm } => gemm.enc.nnz() as u64,
+    }
+}
+
+/// Dense GEMM shape `(M, K)` of one kernel.
+fn kernel_mk(k: &KernelImpl) -> (u64, u64) {
+    match k {
+        KernelImpl::NaiveDense { w } | KernelImpl::Dense { w, .. } => {
+            let (m, kk) = w.shape().as_matrix();
+            (m as u64, kk as u64)
+        }
+        // Winograd holds the original [F,C,3,3] weights; its GEMM-shaped
+        // equivalent is the im2col view (handled by the Conv arm, which
+        // uses geometry, not this helper — keep the direct layout here).
+        KernelImpl::Winograd { w4, .. } => (w4.numel() as u64, 1),
+        KernelImpl::Csr { mat, .. } => (mat.rows as u64, mat.cols as u64),
+        KernelImpl::Bcrc { gemm } => (gemm.enc.rows as u64, gemm.enc.cols as u64),
+    }
+}
+
+fn numel(dims: &[usize]) -> u64 {
+    dims.iter().map(|&d| d as u64).product()
+}
+
+/// Cost of one step given the plan's topology and memory shapes.
+fn step_cost(step: &Step, inputs: &[NodeId], id: NodeId, mem: &MemoryPlan) -> LayerCost {
+    // Input and Noop move nothing the engine accounts to a kernel.
+    if matches!(step, Step::Input | Step::Noop) {
+        return LayerCost::default();
+    }
+    let out_n = numel(&mem.shapes[id]);
+    let in_n: u64 = inputs.iter().map(|&s| numel(&mem.shapes[s])).sum();
+    let mut c = LayerCost {
+        weight_bytes: step_weight_bytes(step) as u64,
+        act_bytes: 4 * (in_n + out_n),
+        ..Default::default()
+    };
+    match step {
+        Step::Input | Step::Noop => unreachable!(),
+        Step::Conv { geom, kernel, .. } => {
+            let n = geom.gemm_n() as u64;
+            c.nnz = kernel_nnz(kernel);
+            c.flops = 2 * c.nnz * n;
+            c.dense_flops = 2 * (geom.out_c * geom.gemm_k()) as u64 * n;
+        }
+        Step::DwConv { kh, kw, w, .. } => {
+            // One kh×kw MAC window per output element, per channel.
+            c.nnz = w.numel() as u64;
+            c.flops = 2 * (kh * kw) as u64 * out_n;
+            c.dense_flops = c.flops;
+        }
+        Step::Fc { kernel, .. } => {
+            let (m, k) = kernel_mk(kernel);
+            c.nnz = kernel_nnz(kernel);
+            c.flops = 2 * c.nnz;
+            c.dense_flops = 2 * m * k;
+        }
+        Step::Gru { layers } => {
+            // Input is a [T, in_f] sequence; every gate GEMV runs per step.
+            let t = mem.shapes[inputs[0]].first().copied().unwrap_or(1) as u64;
+            for l in layers.iter() {
+                for k in [&l.wz, &l.wr, &l.wh] {
+                    let nnz = kernel_nnz(k);
+                    c.nnz += nnz;
+                    c.flops += 2 * nnz * t;
+                    c.dense_flops += 2 * (l.hidden * (l.in_f + l.hidden)) as u64 * t;
+                }
+            }
+        }
+        // Elementwise / reduction steps: counted in ops per output (or
+        // input) element so they show up as the memory-bound streams
+        // they are.
+        Step::Relu | Step::Relu6 | Step::Add { .. } => {
+            c.flops = out_n;
+            c.dense_flops = out_n;
+        }
+        Step::Softmax => {
+            // max scan + exp + sum + normalize.
+            c.flops = 4 * out_n;
+            c.dense_flops = c.flops;
+        }
+        Step::MaxPool2 => {
+            // 3 compares per output element (2×2 window).
+            c.flops = 3 * out_n;
+            c.dense_flops = c.flops;
+        }
+        Step::GlobalAvgPool => {
+            c.flops = in_n + out_n;
+            c.dense_flops = c.flops;
+        }
+        Step::Flatten => {}
+    }
+    c.finish()
+}
+
+/// The pass proper: one [`LayerCost`] per plan step, indexed like
+/// `plan.steps` (NOT by node id — by position, matching `RunMetrics`).
+pub fn cost_pass(plan: &ExecutionPlan) -> Vec<LayerCost> {
+    plan.steps
+        .iter()
+        .map(|(id, step)| step_cost(step, &plan.inputs[*id], *id, &plan.memory))
+        .collect()
+}
+
+/// Sum a cost table into whole-plan totals (intensity recomputed from
+/// the summed counters).
+pub fn total(costs: &[LayerCost]) -> LayerCost {
+    let mut t = LayerCost::default();
+    for c in costs {
+        t.flops += c.flops;
+        t.dense_flops += c.dense_flops;
+        t.weight_bytes += c.weight_bytes;
+        t.act_bytes += c.act_bytes;
+        t.nnz += c.nnz;
+    }
+    t.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intensity_is_flops_over_bytes() {
+        let c = LayerCost { flops: 100, weight_bytes: 10, act_bytes: 40, ..Default::default() }
+            .finish();
+        assert_eq!(c.arithmetic_intensity, 2.0);
+        let z = LayerCost::default().finish();
+        assert_eq!(z.arithmetic_intensity, 0.0);
+    }
+
+    #[test]
+    fn totals_sum_counters() {
+        let costs = vec![
+            LayerCost { flops: 10, dense_flops: 20, weight_bytes: 4, act_bytes: 4, nnz: 5, ..Default::default() },
+            LayerCost { flops: 30, dense_flops: 30, weight_bytes: 0, act_bytes: 12, nnz: 0, ..Default::default() },
+        ];
+        let t = total(&costs);
+        assert_eq!((t.flops, t.dense_flops, t.weight_bytes, t.act_bytes, t.nnz), (40, 50, 4, 16, 5));
+        assert_eq!(t.arithmetic_intensity, 2.0);
+    }
+}

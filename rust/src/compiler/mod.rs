@@ -12,15 +12,20 @@
 //!    static nnz-balanced parallel partitions are emitted into the
 //!    plan's [`plan::ScheduleSet`], *beside* the packed buffers, so
 //!    rebalancing them to a runtime's worker quota is pure metadata.
+//! 6. **Cost model** ([`cost`]) — per-step FLOP/byte/nnz counts and
+//!    arithmetic intensity, stored on the plan for the runtime roofline
+//!    join in [`crate::obs::prof`].
 //!
 //! The plan is the "generated code" analog (DESIGN.md §6): a parameterized
 //! record the engine interprets with monomorphized micro-kernels.
 
+pub mod cost;
 pub mod plan;
 pub mod packing;
 pub mod passes;
 pub mod weights;
 
+pub use cost::LayerCost;
 pub use packing::{PackOptions, PackingStats};
 pub use plan::{Activation, ExecutionPlan, KernelImpl, ScheduleSet, Step};
 pub use passes::{compile, CompileOptions};

@@ -203,11 +203,14 @@ pub fn compile(
         memory: crate::memory::MemoryPlan::empty(),
         packing,
         schedules,
+        costs: Vec::new(),
     };
     // Pass 5: static activation-memory planning — liveness intervals over
     // the finished steps, then best-fit arena packing (see crate::memory).
     let memory = crate::memory::plan_memory(&plan, &shapes)?;
     plan.memory = memory;
+    // Pass 6: static cost model (needs the memory plan's shapes).
+    plan.costs = super::cost::cost_pass(&plan);
     Ok(plan)
 }
 

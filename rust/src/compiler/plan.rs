@@ -274,6 +274,10 @@ pub struct ExecutionPlan {
     /// rebalances a *copy* of this to its runtime quota; the plan's own
     /// set stays as compiled (and is what `.grimc` serializes).
     pub schedules: ScheduleSet,
+    /// Static per-step cost model ([`super::cost::cost_pass`]), indexed
+    /// like `steps`. Serialized in `.grimc` v4; recomputed (bit-exact)
+    /// when loading older artifacts.
+    pub costs: Vec<super::cost::LayerCost>,
 }
 
 impl ExecutionPlan {
@@ -359,6 +363,18 @@ impl ExecutionPlan {
                 "  schedules: {} kernel partitions x {} buckets",
                 self.schedules.len(),
                 self.schedules.threads
+            );
+        }
+        if !self.costs.is_empty() {
+            let t = super::cost::total(&self.costs);
+            let _ = writeln!(
+                s,
+                "  cost model: {:.1} MFLOP effective / {:.1} MFLOP dense ({:.2}x), \
+                 intensity {:.2} flop/B",
+                t.flops as f64 / 1e6,
+                t.dense_flops as f64 / 1e6,
+                if t.flops > 0 { t.dense_flops as f64 / t.flops as f64 } else { 0.0 },
+                t.arithmetic_intensity
             );
         }
         s

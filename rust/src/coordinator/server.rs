@@ -31,9 +31,8 @@ use super::batcher::{Batch, Batcher, BatchPolicy};
 use super::queue::{InferRequest, InferResponse, RequestQueue, ServeError};
 use crate::engine::Engine;
 use crate::memory::{PoolStats, WorkspacePool};
-use crate::obs::metrics::HIST_BUCKETS;
 use crate::obs::trace::{self, SpanKind};
-use crate::obs::{Counter, Gauge, Histogram, Registry};
+use crate::obs::{Counter, Gauge, Histogram, HistogramWindow, Registry};
 use crate::serving::ModelRegistry;
 use crate::tensor::Tensor;
 use crate::util::stats::Summary;
@@ -224,6 +223,12 @@ struct LaneShared {
     default_model: Option<String>,
     admission: Arc<Admission>,
     inflight: Arc<Gauge>,
+    /// Default model's workspace pool, sampled into trace counter
+    /// tracks (`arena_bytes`) on sampled batches.
+    arena: Option<Arc<WorkspacePool>>,
+    /// Roofline denominator for per-model gauges, resolved once at
+    /// server start.
+    machine: crate::obs::prof::MachineModel,
     hist_latency: Arc<Histogram>,
     hist_queue: Arc<Histogram>,
     hist_exec: Arc<Histogram>,
@@ -303,6 +308,8 @@ impl Server {
             default_model: default_model.clone(),
             admission: Arc::clone(&admission),
             inflight: Arc::clone(&inflight),
+            arena: arena.clone(),
+            machine: crate::obs::prof::MachineModel::detect(registry.runtime().threads()),
             hist_latency: Arc::new(Histogram::new()),
             hist_queue: Arc::new(Histogram::new()),
             hist_exec: Arc::new(Histogram::new()),
@@ -684,6 +691,10 @@ fn process_batch(shared: &LaneShared, hists: &mut HashMap<String, ModelHists>, m
             mh.trace_id(&label),
             batch.len() as u64,
         );
+        // Counter tracks bracket the batch: this sample shows the
+        // rising edge (inflight just incremented), the one at the end
+        // shows the fall.
+        record_counters(shared, mh.trace_id(&label));
     }
     let form_ms = batch.form_ms();
     shared.hist_batch_form.record_ms(form_ms);
@@ -753,6 +764,14 @@ fn process_batch(shared: &LaneShared, hists: &mut HashMap<String, ModelHists>, m
             for l in &m.layers {
                 mh.step(&shared.metrics, &label, l.kind).record(l.micros.round() as u64);
             }
+            // Roofline gauges: join the plan's static cost table with
+            // this run's measured per-step times. Gauges overwrite, so
+            // the scrape carries the latest run's attainment.
+            if let Some(e) = &engine {
+                if let Ok(p) = crate::obs::prof::join(&e.plan().costs, m, &shared.machine) {
+                    crate::obs::prof::set_roofline_gauges(&shared.metrics, &label, &p);
+                }
+            }
         }
         // End-to-end latency includes intra-batch wait (requests
         // dispatched later in the batch carry their true
@@ -797,19 +816,43 @@ fn process_batch(shared: &LaneShared, hists: &mut HashMap<String, ModelHists>, m
         }
     }
     shared.inflight.dec();
+    if sampled {
+        record_counters(shared, mh.trace_id(&label));
+    }
+}
+
+/// Sample the process gauges into Chrome counter tracks (`"C"` events):
+/// inflight batches, admission-parked requests, and resident workspace
+/// arena bytes. Only called on sampled batches.
+fn record_counters(shared: &LaneShared, model: u32) {
+    trace::record_counter(trace::CTR_INFLIGHT, model, shared.inflight.get());
+    trace::record_counter(
+        trace::CTR_PENDING_ADMISSIONS,
+        model,
+        shared.admission.parked_total() as u64,
+    );
+    if let Some(pool) = &shared.arena {
+        let s = pool.stats();
+        trace::record_counter(
+            trace::CTR_ARENA_BYTES,
+            model,
+            (s.arena_bytes * s.arenas_created) as u64,
+        );
+    }
 }
 
 /// Quota-governor loop: every tick, compare each SLO'd model's observed
 /// p99 against its target and nudge the model's runtime quota by one
 /// bucket — up while over target, down while under half the target.
 ///
-/// The p99 is **windowed**, not cumulative: the governor keeps a bucket
-/// snapshot per model and summarizes only the samples that arrived since
-/// its last adjustment decision, so an early latency spike ages out of
-/// the estimate instead of pinning p99 above target forever (which would
-/// make the narrowing branch unreachable). A window thinner than
-/// `MIN_SAMPLES` keeps accumulating across ticks, so an idle or trickle
-/// model's quota is never churned on noise.
+/// The p99 is **windowed**, not cumulative: each model's latency
+/// histogram is wrapped in a [`HistogramWindow`], which summarizes only
+/// the samples that arrived since the governor's last adjustment
+/// decision, so an early latency spike ages out of the estimate instead
+/// of pinning p99 above target forever (which would make the narrowing
+/// branch unreachable). A window thinner than `MIN_SAMPLES` keeps
+/// accumulating across ticks, so an idle or trickle model's quota is
+/// never churned on noise.
 fn run_governor(
     stop: &AtomicBool,
     registry: &ModelRegistry,
@@ -820,19 +863,19 @@ fn run_governor(
     /// its p99 estimate.
     const MIN_SAMPLES: u64 = 8;
     let width = registry.runtime().threads();
-    let hists: Vec<(&str, f64, Arc<Histogram>, Arc<Counter>)> = slo
+    let mut windows: Vec<(&str, f64, HistogramWindow, Arc<Counter>)> = slo
         .iter()
         .map(|(m, t)| {
             (
                 m.as_str(),
                 *t,
-                metrics.histogram("grim_request_latency_us", &[("model", m)]),
+                HistogramWindow::new(
+                    metrics.histogram("grim_request_latency_us", &[("model", m)]),
+                ),
                 metrics.counter("grim_quota_adjustments_total", &[("model", m)]),
             )
         })
         .collect();
-    // Per-model bucket baseline, advanced whenever a window is consumed.
-    let mut base: Vec<[u64; HIST_BUCKETS]> = vec![[0; HIST_BUCKETS]; hists.len()];
     while !stop.load(Ordering::Relaxed) {
         // ~100 ms cadence, but responsive to shutdown.
         for _ in 0..5 {
@@ -841,50 +884,22 @@ fn run_governor(
             }
             std::thread::sleep(Duration::from_millis(20));
         }
-        for (i, (model, target_ms, hist, adjustments)) in hists.iter().enumerate() {
-            let cur_buckets: [u64; HIST_BUCKETS] =
-                std::array::from_fn(|b| hist.bucket_count(b));
-            let delta: [u64; HIST_BUCKETS] =
-                std::array::from_fn(|b| cur_buckets[b].saturating_sub(base[i][b]));
-            let n: u64 = delta.iter().sum();
-            if n < MIN_SAMPLES {
+        for (model, target_ms, window, adjustments) in windows.iter_mut() {
+            if window.count() < MIN_SAMPLES {
                 continue; // window too thin — keep accumulating
             }
-            base[i] = cur_buckets;
-            let p99_ms = delta_quantile_us(&delta, n, 0.99) * 1e-3;
+            let p99_ms = window.quantile(0.99) * 1e-3;
+            window.advance();
             let cur = registry.runtime().effective_threads(model);
             if p99_ms > *target_ms && cur < width {
                 registry.set_quota(model, cur + 1);
                 adjustments.inc();
-            } else if p99_ms < 0.5 * target_ms && cur > 1 {
+            } else if p99_ms < 0.5 * *target_ms && cur > 1 {
                 registry.set_quota(model, cur - 1);
                 adjustments.inc();
             }
         }
     }
-}
-
-/// Nearest-rank quantile (in recorded µs) over a bucket-count delta —
-/// the windowed analogue of [`Histogram::quantile`], interpolated
-/// linearly inside the landing bucket. Without the exact min/max of the
-/// window the open top bucket reports its lower bound. `n` is the sample
-/// count of `delta` (must be > 0).
-fn delta_quantile_us(delta: &[u64; HIST_BUCKETS], n: u64, q: f64) -> f64 {
-    let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
-    let mut cum = 0u64;
-    for (i, &c) in delta.iter().enumerate() {
-        if c == 0 {
-            continue;
-        }
-        if cum + c >= rank {
-            let lo = Histogram::bucket_lower(i) as f64;
-            let hi = if i + 1 >= HIST_BUCKETS { lo } else { Histogram::bucket_upper(i) as f64 };
-            let frac = (rank - cum) as f64 / c as f64;
-            return lo + frac * (hi - lo);
-        }
-        cum += c;
-    }
-    0.0
 }
 
 #[cfg(test)]

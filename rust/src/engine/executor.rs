@@ -280,10 +280,14 @@ impl Engine {
         };
         for (i, (id, step)) in self.plan.steps.iter().enumerate() {
             let t = Timer::start();
-            let busy0 = if self.collect_metrics { crate::obs::pool_busy_nanos() } else { 0 };
+            // Task-scoped (thread-local) busy deltas: pool barriers credit
+            // each call's worker time to the calling thread, so this step's
+            // delta is exact even when other dispatcher lanes run
+            // concurrently on the shared pool.
+            let busy0 = if self.collect_metrics { crate::obs::task_busy_nanos() } else { 0 };
             let kind = self.exec_step_planned(*id, step, input, ws, &sched)?;
             if self.collect_metrics {
-                let busy = crate::obs::pool_busy_nanos() - busy0;
+                let busy = crate::obs::task_busy_nanos() - busy0;
                 metrics.layers.push(LayerMetric {
                     node: *id,
                     kind,

@@ -16,8 +16,10 @@ pub struct LayerMetric {
     pub kind: &'static str,
     /// Wall-clock step time.
     pub micros: f64,
-    /// Summed per-worker busy time inside the step (0 for serial steps;
-    /// an upper bound when other engines share the pool concurrently).
+    /// Summed per-worker busy time inside the step's own pool chunks.
+    /// Task-scoped (`crate::obs::task_busy_nanos`): exact even when
+    /// other engines run concurrently on the shared pool — 0 for
+    /// serial steps.
     pub busy_micros: f64,
     /// Resident weight bytes the step's kernel reads (packed size when
     /// a packed layout exists, encoded size otherwise; 0 for

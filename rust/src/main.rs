@@ -10,6 +10,8 @@
 //!   blockopt  run the Listing-1 block-size optimizer for a layer shape
 //!   xla       load + execute an AOT HLO artifact (jax bridge smoke test)
 //!   export    build a model with random BCR weights and save a .grim
+//!   profile   per-layer roofline attribution for a .grimc artifact
+//!   bench-diff  compare two bench reports, exit 1 on regression
 //!
 //! No clap in the vendored dep set — a hand-rolled flag parser keeps the
 //! surface small.
@@ -20,6 +22,7 @@ use grim::engine::Engine;
 use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
 use grim::runtime::ArtifactStore;
 use grim::tensor::Tensor;
+use grim::util::json::Json;
 use grim::util::Rng;
 use std::collections::HashMap;
 
@@ -42,6 +45,8 @@ fn main() {
         "export" => cmd_export(&flags),
         "report" => cmd_report(&flags),
         "stats" => cmd_stats(&flags),
+        "profile" => cmd_profile(&args[1..], &flags),
+        "bench-diff" => cmd_bench_diff(&args[1..], &flags),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -84,32 +89,57 @@ COMMANDS:
   xla      --artifact <stem> (from artifacts/*.hlo.txt)
   export   --model gru --preset timit-mini --rate 10 --out model.grim
   report   [--name fig11|table1|...]  pretty-print bench_out/*.json
-  stats    --file out.prom  parse a --stats-out dump and print counters, gauges and histogram quantiles"
+  stats    --file out.prom  parse a --stats-out dump and print counters, gauges and histogram quantiles
+  profile  model.grimc [--iters 10] [--threads 8] [--json out.json]
+           per-layer roofline attribution: the artifact's plan-time cost table (flops, bytes,
+           intensity) joined with measured wall/busy time against this machine's ISA peak
+  bench-diff old.json new.json [--threshold 5]
+           compare two bench reports (bench_kernels, bench_serve, or profile JSON);
+           exit 1 when any metric regressed more than the threshold percent"
     );
 }
 
 type Flags = HashMap<String, String>;
 
+/// A flag is `--name` or a short `-x` (single dash, non-numeric so a
+/// negative number can never be eaten as a flag).
+fn is_flag_token(s: &str) -> bool {
+    s.strip_prefix("--").map(|k| !k.is_empty()).unwrap_or(false)
+        || s.strip_prefix('-')
+            .is_some_and(|k| !k.is_empty() && !k.starts_with(|c: char| c.is_ascii_digit()))
+}
+
 fn parse_flags(args: &[String]) -> Flags {
     let mut out = HashMap::new();
     let mut i = 0;
-    // A flag is `--name` or a short `-x` (single dash, non-numeric so a
-    // negative number can never be eaten as a flag).
-    let is_flag = |s: &str| {
-        s.strip_prefix("--").map(|k| !k.is_empty()).unwrap_or(false)
-            || s.strip_prefix('-')
-                .is_some_and(|k| !k.is_empty() && !k.starts_with(|c: char| c.is_ascii_digit()))
-    };
     while i < args.len() {
-        if is_flag(&args[i]) {
+        if is_flag_token(&args[i]) {
             let key = args[i].trim_start_matches('-').to_string();
-            let val = if i + 1 < args.len() && !is_flag(&args[i + 1]) {
+            let val = if i + 1 < args.len() && !is_flag_token(&args[i + 1]) {
                 i += 1;
                 args[i].clone()
             } else {
                 "true".to_string()
             };
             out.insert(key, val);
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Positional (non-flag) arguments, skipping each flag's value token
+/// with the same pairing rule as [`parse_flags`].
+fn positionals(args: &[String]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if is_flag_token(&args[i]) {
+            if i + 1 < args.len() && !is_flag_token(&args[i + 1]) {
+                i += 1; // the flag's value
+            }
+        } else {
+            out.push(args[i].clone());
         }
         i += 1;
     }
@@ -294,6 +324,116 @@ fn write_stats(f: &Flags, prom: &str) -> anyhow::Result<()> {
     grim::obs::parse_text(prom)?;
     std::fs::write(path, prom)?;
     println!("stats: wrote {} sample line(s) -> {path}", prom.lines().filter(|l| !l.starts_with('#')).count());
+    Ok(())
+}
+
+/// `grim profile model.grimc [--iters N] [--threads N] [--json out.json]`:
+/// run the artifact N times (after a warmup fifth), join its plan-time
+/// cost table with the last run's measured per-step wall/busy time, and
+/// print per-layer achieved GFLOP/s, GB/s, and %-of-roofline against
+/// this machine's ISA peak. `--json` additionally writes the
+/// schema-validated report (the same `grim_bench_schema` shape the bench
+/// binaries emit, so `grim bench-diff` works across all of them).
+fn cmd_profile(args: &[String], f: &Flags) -> anyhow::Result<()> {
+    use grim::obs::prof;
+    let path = positionals(args)
+        .into_iter()
+        .next()
+        .or_else(|| f.get("grimc-file").cloned())
+        .ok_or_else(|| anyhow::anyhow!("profile needs a .grimc path (grim profile model.grimc)"))?;
+    let plan = grim::artifact::load_grimc(std::path::Path::new(&path))?;
+    let threads = flag(f, "threads", 8usize);
+    let iters = flag(f, "iters", 10usize).max(1);
+    let mut engine = Engine::new(plan, threads);
+    engine.collect_metrics = true;
+    let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+    let mut rng = Rng::new(7);
+    let x = Tensor::rand_uniform(&dims, 1.0, &mut rng);
+    let machine = prof::MachineModel::detect(threads);
+
+    // Warm/steady split through a HistogramWindow: every run lands in
+    // one histogram; the window is read after the warmup fifth, then
+    // advanced, so the steady quantiles exclude page-fault and
+    // cache-warming noise without a second histogram.
+    let hist = std::sync::Arc::new(grim::obs::Histogram::new());
+    let mut window = grim::obs::HistogramWindow::new(std::sync::Arc::clone(&hist));
+    let warmup = (iters / 5).max(1);
+    let mut last = None;
+    for _ in 0..warmup {
+        let (_, m) = engine.run_with_metrics(&x)?;
+        hist.record(m.total_micros().round() as u64);
+        last = Some(m);
+    }
+    let warm_p50 = window.quantile(0.5);
+    window.advance();
+    for _ in 0..iters {
+        let (_, m) = engine.run_with_metrics(&x)?;
+        hist.record(m.total_micros().round() as u64);
+        last = Some(m);
+    }
+    let (steady_p50, steady_p99) = (window.quantile(0.5), window.quantile(0.99));
+    let metrics = last.expect("iters >= 1");
+
+    let profile = prof::join(&engine.plan().costs, &metrics, &machine)?;
+    let model = engine.plan().name.clone();
+    let mut report = prof::profile_report(&model, &profile, &machine);
+    report
+        .meta
+        .set("artifact", Json::Str(path.clone()))
+        .set("iters", Json::Num(iters as f64))
+        .set("warmup_iters", Json::Num(warmup as f64))
+        .set("warm_p50_us", Json::Num(warm_p50))
+        .set("steady_p50_us", Json::Num(steady_p50))
+        .set("steady_p99_us", Json::Num(steady_p99));
+    report.print();
+    println!(
+        "machine: {} x{} @ {:.1} GHz — peak {:.1} GFLOP/s, {:.1} GB/s, ridge {:.2} flop/B",
+        machine.isa.name(),
+        machine.threads,
+        machine.freq_ghz,
+        machine.peak_gflops,
+        machine.mem_gbps,
+        machine.ridge()
+    );
+    println!(
+        "latency: warm p50 {warm_p50:.0} us, steady p50 {steady_p50:.0} us / p99 {steady_p99:.0} us ({iters} iters)"
+    );
+    if let Some(out) = f.get("json") {
+        let obj = report.to_json_with(&machine);
+        prof::validate_report(&obj)?;
+        std::fs::write(out, obj.to_pretty())?;
+        println!("profile: wrote {out}");
+    }
+    Ok(())
+}
+
+/// `grim bench-diff old.json new.json [--threshold pct]`: compare two
+/// `grim_bench_schema` reports (any emitter) and exit 1 when a metric
+/// moved past the threshold in its worse direction.
+fn cmd_bench_diff(args: &[String], f: &Flags) -> anyhow::Result<()> {
+    let pos = positionals(args);
+    let [old_path, new_path] = &pos[..] else {
+        anyhow::bail!("bench-diff needs exactly two report paths (old.json new.json)");
+    };
+    let threshold = flag(f, "threshold", 5.0f64);
+    let old = grim::util::json::parse(&std::fs::read_to_string(old_path)?)?;
+    let new = grim::util::json::parse(&std::fs::read_to_string(new_path)?)?;
+    let d = grim::obs::prof::diff_reports(&old, &new, threshold)?;
+    println!(
+        "bench-diff: {} metric cell(s) compared, {} improvement(s), {} regression(s) (threshold {threshold}%)",
+        d.compared,
+        d.improvements,
+        d.regressions.len()
+    );
+    for r in &d.regressions {
+        println!(
+            "  REGRESSION {} / {}: {} -> {} ({:+.1}% worse)",
+            r.row, r.column, r.old, r.new, r.worse_pct
+        );
+    }
+    if !d.regressions.is_empty() {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

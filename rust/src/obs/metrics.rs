@@ -551,6 +551,78 @@ pub fn fold_histograms(samples: &[Sample]) -> Vec<ParsedHist> {
     out
 }
 
+/// A windowed view over a live [`Histogram`]: quantiles computed from
+/// only the samples recorded since the window's baseline snapshot.
+///
+/// Shared by the serving quota governor (p99-since-last-adjustment, so
+/// an early latency spike ages out instead of pinning the estimate) and
+/// `grim profile --iters` (steady-state latency with the warm-up runs
+/// excluded). The estimate is nearest-rank over the per-bucket count
+/// deltas with linear interpolation inside the landing bucket; without
+/// the baseline's min/max the open top bucket reports its lower bound.
+pub struct HistogramWindow {
+    hist: Arc<Histogram>,
+    base: [u64; HIST_BUCKETS],
+}
+
+impl HistogramWindow {
+    /// Open a window whose baseline is the histogram's current state:
+    /// everything already recorded is excluded from quantiles.
+    pub fn new(hist: Arc<Histogram>) -> Self {
+        let base = std::array::from_fn(|i| hist.bucket_count(i));
+        HistogramWindow { hist, base }
+    }
+
+    /// The underlying live histogram.
+    pub fn histogram(&self) -> &Arc<Histogram> {
+        &self.hist
+    }
+
+    fn delta(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.hist.bucket_count(i).saturating_sub(self.base[i]))
+    }
+
+    /// Samples recorded since the baseline.
+    pub fn count(&self) -> u64 {
+        self.delta().iter().sum()
+    }
+
+    /// Nearest-rank quantile over the window's samples (0 when the
+    /// window is empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let delta = self.delta();
+        let n: u64 = delta.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, &c) in delta.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                let lo = Histogram::bucket_lower(i) as f64;
+                let hi = if i + 1 >= HIST_BUCKETS {
+                    lo // open top bucket: report its lower bound
+                } else {
+                    Histogram::bucket_upper(i) as f64
+                };
+                let frac = (rank - cum) as f64 / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            cum += c;
+        }
+        0.0
+    }
+
+    /// Slide the baseline up to the current state: subsequent quantiles
+    /// summarize only samples recorded after this call.
+    pub fn advance(&mut self) {
+        self.base = std::array::from_fn(|i| self.hist.bucket_count(i));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -616,6 +688,29 @@ mod tests {
     fn parse_rejects_garbage() {
         assert!(parse_text("not a metric line").is_err());
         assert!(parse_text("name{unterminated 3").is_err());
+    }
+
+    #[test]
+    fn window_excludes_baseline_and_advances() {
+        let h = Arc::new(Histogram::new());
+        for _ in 0..100 {
+            h.record(10_000); // old spike
+        }
+        let mut w = HistogramWindow::new(Arc::clone(&h));
+        assert_eq!(w.count(), 0);
+        assert_eq!(w.quantile(0.99), 0.0);
+        for _ in 0..50 {
+            h.record(100);
+        }
+        assert_eq!(w.count(), 50);
+        // The window p99 lands in value-100's bucket, not the spike's.
+        let q = w.quantile(0.99);
+        assert_eq!(Histogram::bucket_index(q.round() as u64), Histogram::bucket_index(100));
+        // Full-histogram p99 still sees the spike — that is the bug the
+        // window exists to avoid.
+        assert!(h.quantile(0.99) > 1000.0);
+        w.advance();
+        assert_eq!(w.count(), 0);
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //!   ring buffers, exported as Chrome trace-event JSON (Perfetto).
 //! * [`metrics`] — counters, gauges, and log₂-bucketed histograms with a
 //!   Prometheus text exposition surface.
+//! * [`prof`] — the roofline join: the compiler's static per-step cost
+//!   model × measured wall/busy time → achieved GFLOP/s, GB/s, and
+//!   %-of-roofline per layer, plus the unified bench report schema.
 //!
 //! Both halves are built to cost one relaxed atomic load per
 //! instrumentation site when disabled — see the module docs for the
@@ -14,9 +17,13 @@ pub mod metrics;
 pub mod trace;
 
 pub use metrics::{
-    fold_histograms, parse_text, Counter, Gauge, Histogram, Metric, ParsedHist, Registry, Sample,
+    fold_histograms, parse_text, Counter, Gauge, Histogram, HistogramWindow, Metric, ParsedHist,
+    Registry, Sample,
 };
 
+pub mod prof;
+
+use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 
 /// Gate for per-chunk busy-time accounting in the threadpool. Sticky-on:
@@ -25,11 +32,21 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 static POOL_TIMING: AtomicBool = AtomicBool::new(false);
 
 /// Total nanoseconds threadpool workers spent executing chunks while
-/// [`pool_timing`] was on. Deltas around an engine step attribute pool
-/// busy time to that step (exact when one engine runs at a time;
-/// inflated — never deflated — when engines share the pool
-/// concurrently, which is the honest upper bound for utilisation).
+/// [`pool_timing`] was on, across ALL callers — a process-wide
+/// utilisation counter. Per-step attribution does NOT use deltas of
+/// this (concurrent dispatcher lanes would cross-contaminate); the
+/// engine reads the caller-scoped [`task_busy_nanos`] instead.
 static POOL_BUSY_NANOS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Caller-scoped busy accounting: every blocking `ThreadPool::run_*`
+    /// barrier credits the worker-nanoseconds of *its own chunks* to the
+    /// calling thread's cell when it returns. An engine stepping on a
+    /// dispatcher lane therefore sees only its own kernels' busy time in
+    /// deltas of [`task_busy_nanos`], no matter how many other lanes
+    /// share the pool concurrently.
+    static TASK_BUSY_NANOS: Cell<u64> = const { Cell::new(0) };
+}
 
 /// One relaxed load; the threadpool checks this once per chunk.
 #[inline]
@@ -41,11 +58,26 @@ pub fn set_pool_timing(on: bool) {
     POOL_TIMING.store(on, Relaxed);
 }
 
-/// Cumulative worker busy nanoseconds (monotonic while timing is on).
+/// Cumulative worker busy nanoseconds (monotonic while timing is on),
+/// summed over every caller sharing the pool.
 pub fn pool_busy_nanos() -> u64 {
     POOL_BUSY_NANOS.load(Relaxed)
 }
 
 pub fn add_pool_busy_nanos(n: u64) {
     POOL_BUSY_NANOS.fetch_add(n, Relaxed);
+}
+
+/// Worker busy nanoseconds credited to pool calls issued from THIS
+/// thread (monotonic while timing is on). Deltas around an engine step
+/// attribute busy time to that step exactly, even under concurrent
+/// dispatch.
+pub fn task_busy_nanos() -> u64 {
+    TASK_BUSY_NANOS.with(|c| c.get())
+}
+
+/// Credit `n` worker-nanoseconds to the calling thread's task counter
+/// (called by the threadpool as each barrier completes).
+pub fn add_task_busy_nanos(n: u64) {
+    TASK_BUSY_NANOS.with(|c| c.set(c.get() + n));
 }

@@ -1,0 +1,625 @@
+//! Per-layer roofline profiling and the unified bench-report schema.
+//!
+//! The **static half** comes from the compiler: every `ExecutionPlan`
+//! carries a [`LayerCost`] table (flops, dense-equivalent flops,
+//! weight/activation bytes, nnz, arithmetic intensity — see
+//! [`crate::compiler::cost`]). The **dynamic half** is the engine's
+//! [`RunMetrics`] (wall + task-scoped busy µs per step). This module
+//! joins them against a [`MachineModel`] — peak FMA throughput for the
+//! active [`HwConfig`] ISA row and a static memory-bandwidth model — to
+//! report, per layer: achieved GFLOP/s, achieved GB/s, the roofline
+//! bound `min(peak, AI × bandwidth)`, %-of-roofline, and a
+//! compute-bound vs memory-bound classification. The dense-equivalent /
+//! sparse-effective ratio quantifies the per-layer BCR win (the paper's
+//! Fig. 12/13 evidence, reproduced as first-class telemetry).
+//!
+//! The module also owns the **versioned bench-report schema** — one
+//! JSON shape (`grim_bench_schema`) emitted by `bench_kernels`,
+//! `bench_serve`, and `grim profile`, validated before every write
+//! (like `trace::validate_chrome`), and diffed by `grim bench-diff` to
+//! flag regressions beyond a noise threshold.
+
+use crate::compiler::cost::{self, LayerCost};
+use crate::engine::RunMetrics;
+use crate::gemm::simd::Isa;
+use crate::gemm::HwConfig;
+use crate::util::json::Json;
+
+/// Current `grim_bench_schema` version stamped into every report.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Peak-throughput model of the machine the measurements ran on.
+///
+/// `peak_gflops` is `flops_per_cycle(isa) × freq_ghz × threads` — a
+/// *nominal* FMA roofline, not a measured one: the point is a stable
+/// denominator so %-of-roofline is comparable across runs, not perfect
+/// absolute accuracy. Frequency and bandwidth default to a mobile-class
+/// core (the paper's Snapdragon setting) and are overridable with
+/// `GRIM_FREQ_GHZ` / `GRIM_MEM_GBPS` when profiling other hosts.
+#[derive(Clone, Copy, Debug)]
+pub struct MachineModel {
+    pub isa: Isa,
+    pub threads: usize,
+    pub freq_ghz: f64,
+    pub mem_gbps: f64,
+    pub peak_gflops: f64,
+}
+
+/// Nominal sustained FMA flops per cycle per core for one ISA row
+/// (one FMA = 2 flops; vector width from the row's register tile).
+pub fn flops_per_cycle(isa: Isa) -> f64 {
+    match isa {
+        Isa::Scalar => 2.0,
+        Isa::Avx2Fma => 16.0,
+        Isa::Avx512f => 32.0,
+        Isa::Neon => 8.0,
+    }
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).filter(|v: &f64| *v > 0.0).unwrap_or(default)
+}
+
+impl MachineModel {
+    /// Model for an explicit ISA row + worker count.
+    pub fn for_isa(isa: Isa, threads: usize) -> MachineModel {
+        let threads = threads.max(1);
+        let freq_ghz = env_f64("GRIM_FREQ_GHZ", 3.0);
+        // Static mobile-class LPDDR4X-ish bandwidth; override per host.
+        let mem_gbps = env_f64("GRIM_MEM_GBPS", 25.6);
+        MachineModel {
+            isa,
+            threads,
+            freq_ghz,
+            mem_gbps,
+            peak_gflops: flops_per_cycle(isa) * freq_ghz * threads as f64,
+        }
+    }
+
+    /// Model for the process's detected hardware-matrix row.
+    pub fn detect(threads: usize) -> MachineModel {
+        MachineModel::for_isa(HwConfig::detected().isa, threads)
+    }
+
+    /// The ridge point: the arithmetic intensity (flop/byte) where the
+    /// memory roof meets the compute roof.
+    pub fn ridge(&self) -> f64 {
+        if self.mem_gbps > 0.0 { self.peak_gflops / self.mem_gbps } else { f64::INFINITY }
+    }
+
+    /// Attainable GFLOP/s at intensity `ai`: `min(peak, ai × bw)`.
+    pub fn attainable_gflops(&self, ai: f64) -> f64 {
+        (ai * self.mem_gbps).min(self.peak_gflops)
+    }
+
+    fn to_json(self) -> Json {
+        let mut m = Json::obj();
+        m.set("isa", Json::Str(self.isa.name().to_string()))
+            .set("threads", Json::Num(self.threads as f64))
+            .set("freq_ghz", Json::Num(self.freq_ghz))
+            .set("mem_gbps", Json::Num(self.mem_gbps))
+            .set("peak_gflops", Json::Num(self.peak_gflops));
+        m
+    }
+}
+
+/// Which roof a layer sits under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+}
+
+impl Bound {
+    pub fn name(self) -> &'static str {
+        match self {
+            Bound::Compute => "compute",
+            Bound::Memory => "memory",
+        }
+    }
+}
+
+/// One layer's static cost joined with its measured time.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    pub node: usize,
+    pub kind: &'static str,
+    pub cost: LayerCost,
+    /// Wall-clock step time (µs).
+    pub wall_us: f64,
+    /// Task-scoped summed worker busy time (µs; 0 for serial steps).
+    pub busy_us: f64,
+    /// Achieved sparse-effective GFLOP/s over wall time.
+    pub gflops: f64,
+    /// Achieved memory traffic (weights + activations) GB/s over wall.
+    pub gbps: f64,
+    /// Roofline bound at this layer's intensity: `min(peak, AI × bw)`.
+    pub roof_gflops: f64,
+    /// `100 × gflops / roof_gflops`.
+    pub roof_pct: f64,
+    pub bound: Bound,
+}
+
+impl LayerProfile {
+    /// Dense-equivalent over sparse-effective flops — the per-layer BCR
+    /// win (1.0 for dense/weightless layers).
+    pub fn sparsity_win(&self) -> f64 {
+        if self.cost.flops > 0 { self.cost.dense_flops as f64 / self.cost.flops as f64 } else { 1.0 }
+    }
+}
+
+/// A whole run profiled: per-layer rows plus plan totals.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub layers: Vec<LayerProfile>,
+    /// Totals joined the same way (sum costs × total wall/busy).
+    pub total: LayerProfile,
+}
+
+fn join_one(node: usize, kind: &'static str, c: LayerCost, wall_us: f64, busy_us: f64, m: &MachineModel) -> LayerProfile {
+    // flops / (µs × 1e3) = flops / (s × 1e9) = GFLOP/s.
+    let gflops = if wall_us > 0.0 { c.flops as f64 / (wall_us * 1e3) } else { 0.0 };
+    let bytes = (c.weight_bytes + c.act_bytes) as f64;
+    let gbps = if wall_us > 0.0 { bytes / (wall_us * 1e3) } else { 0.0 };
+    let roof_gflops = m.attainable_gflops(c.arithmetic_intensity);
+    let roof_pct = if roof_gflops > 0.0 { 100.0 * gflops / roof_gflops } else { 0.0 };
+    let bound =
+        if c.arithmetic_intensity < m.ridge() { Bound::Memory } else { Bound::Compute };
+    LayerProfile { node, kind, cost: c, wall_us, busy_us, gflops, gbps, roof_gflops, roof_pct, bound }
+}
+
+/// Join a plan's cost table with one run's measured metrics. The two
+/// sides index the same step list in the same order (the engine pushes
+/// one `LayerMetric` per step when collecting metrics).
+pub fn join(costs: &[LayerCost], run: &RunMetrics, machine: &MachineModel) -> anyhow::Result<ModelProfile> {
+    anyhow::ensure!(
+        costs.len() == run.layers.len(),
+        "cost table has {} steps but the run measured {} (metrics collection off?)",
+        costs.len(),
+        run.layers.len()
+    );
+    let layers: Vec<LayerProfile> = costs
+        .iter()
+        .zip(&run.layers)
+        .map(|(c, l)| join_one(l.node, l.kind, *c, l.micros, l.busy_micros, machine))
+        .collect();
+    let total = join_one(
+        usize::MAX,
+        "total",
+        cost::total(costs),
+        run.total_micros(),
+        run.total_busy_micros(),
+        machine,
+    );
+    Ok(ModelProfile { layers, total })
+}
+
+/// Publish a profiled run's roofline summary as per-model gauges:
+/// `grim_roofline_pct{model=…}` (integer percent of the attainable
+/// roof, whole plan) and `grim_achieved_mflops{model=…}`.
+pub fn set_roofline_gauges(registry: &super::metrics::Registry, model: &str, p: &ModelProfile) {
+    let labels = [("model", model)];
+    registry.gauge("grim_roofline_pct", &labels).set(p.total.roof_pct.round().max(0.0) as u64);
+    registry
+        .gauge("grim_achieved_mflops", &labels)
+        .set((p.total.gflops * 1e3).round().max(0.0) as u64);
+}
+
+// ---------------------------------------------------------------------
+// Unified bench-report schema
+// ---------------------------------------------------------------------
+
+/// Build a schema-versioned report object — the ONE shape every bench
+/// emitter ([`crate::bench::Report::save`], `grim profile`) writes.
+pub fn report_json(
+    name: &str,
+    title: &str,
+    columns: &[String],
+    rows: &[Vec<String>],
+    meta: &Json,
+    machine: &MachineModel,
+) -> Json {
+    let mut obj = Json::obj();
+    obj.set("grim_bench_schema", Json::Num(BENCH_SCHEMA_VERSION as f64))
+        .set("name", Json::Str(name.to_string()))
+        .set("title", Json::Str(title.to_string()))
+        .set("columns", crate::util::json::str_arr(columns.iter().cloned()))
+        .set(
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| crate::util::json::str_arr(r.iter().cloned()))
+                    .collect(),
+            ),
+        )
+        .set("meta", meta.clone())
+        .set("machine", machine.to_json());
+    obj
+}
+
+/// Validate a report against the schema; every emitter calls this
+/// BEFORE writing (a malformed report is a bug, not an artifact).
+pub fn validate_report(r: &Json) -> anyhow::Result<()> {
+    let ver = r
+        .get("grim_bench_schema")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("report missing grim_bench_schema"))?;
+    anyhow::ensure!(
+        ver == BENCH_SCHEMA_VERSION as f64,
+        "unsupported bench schema version {ver}"
+    );
+    for key in ["name", "title"] {
+        anyhow::ensure!(
+            r.get(key).and_then(Json::as_str).is_some(),
+            "report missing string field '{key}'"
+        );
+    }
+    let cols = r
+        .get("columns")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("report missing columns array"))?;
+    anyhow::ensure!(!cols.is_empty(), "report has no columns");
+    anyhow::ensure!(
+        cols.iter().all(|c| c.as_str().is_some()),
+        "report columns must be strings"
+    );
+    let rows = r
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("report missing rows array"))?;
+    for (i, row) in rows.iter().enumerate() {
+        let cells = row
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("report row {i} is not an array"))?;
+        anyhow::ensure!(
+            cells.len() == cols.len(),
+            "report row {i} has {} cells for {} columns",
+            cells.len(),
+            cols.len()
+        );
+        anyhow::ensure!(
+            cells.iter().all(|c| c.as_str().is_some()),
+            "report row {i} cells must be strings"
+        );
+    }
+    anyhow::ensure!(
+        matches!(r.get("meta"), Some(Json::Obj(_))),
+        "report missing meta object"
+    );
+    let m = r
+        .get("machine")
+        .ok_or_else(|| anyhow::anyhow!("report missing machine object"))?;
+    anyhow::ensure!(
+        m.get("isa").and_then(Json::as_str).is_some(),
+        "machine model missing isa"
+    );
+    for key in ["threads", "freq_ghz", "mem_gbps", "peak_gflops"] {
+        anyhow::ensure!(
+            m.get(key).and_then(Json::as_f64).is_some(),
+            "machine model missing numeric '{key}'"
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Baseline diffing (`grim bench-diff`)
+// ---------------------------------------------------------------------
+
+/// One metric that moved past the threshold in the worse direction.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub row: String,
+    pub column: String,
+    pub old: f64,
+    pub new: f64,
+    /// Signed percent change, positive = worse.
+    pub worse_pct: f64,
+}
+
+/// Outcome of comparing two reports.
+#[derive(Clone, Debug, Default)]
+pub struct DiffOutcome {
+    pub regressions: Vec<Regression>,
+    /// Metrics that moved past the threshold in the better direction.
+    pub improvements: usize,
+    /// Metric cells compared (both sides numeric, direction known).
+    pub compared: usize,
+}
+
+/// Direction of one column, inferred from its name: `Some(true)` =
+/// lower is better (latencies, byte counts), `Some(false)` = higher is
+/// better (throughputs, speedups), `None` = not comparable.
+pub fn column_lower_is_better(name: &str) -> Option<bool> {
+    let n = name.to_ascii_lowercase();
+    const LOWER: &[&str] = &["ms", "us", "ns", "wall", "bytes", "kib", "miss", "imbalance"];
+    const HIGHER: &[&str] =
+        &["gflop", "gf/s", "gbps", "gb/s", "rps", "req/s", "roof", "pct", "speedup", "win", "x"];
+    // Exact-token match first (a column literally named "x" is a speedup).
+    let tokens: Vec<&str> = n.split(|c: char| !c.is_ascii_alphanumeric() && c != '/').collect();
+    for t in &tokens {
+        if LOWER.contains(t) {
+            return Some(true);
+        }
+        if HIGHER.contains(t) {
+            return Some(false);
+        }
+    }
+    // Substring fallback only for keys long enough not to false-match
+    // inside ordinary words ("x" would hit "matrix").
+    if LOWER.iter().any(|k| k.len() >= 3 && n.contains(k)) {
+        return Some(true);
+    }
+    if HIGHER.iter().any(|k| k.len() >= 3 && n.contains(k)) {
+        return Some(false);
+    }
+    None
+}
+
+/// Leading numeric prefix of a cell ("2.00x" → 2.0, "123 KiB" → 123.0).
+pub fn leading_number(cell: &str) -> Option<f64> {
+    let s = cell.trim();
+    let end = s
+        .char_indices()
+        .take_while(|(i, c)| {
+            c.is_ascii_digit()
+                || *c == '.'
+                || ((*c == '-' || *c == '+') && *i == 0)
+                || ((*c == 'e' || *c == 'E') && *i > 0)
+        })
+        .map(|(i, c)| i + c.len_utf8())
+        .last()?;
+    s[..end].parse().ok()
+}
+
+/// Compare two schema-validated reports row-by-row (rows keyed by their
+/// first cell, columns matched by name). A metric regresses when it
+/// moves more than `threshold_pct` percent in its worse direction.
+pub fn diff_reports(old: &Json, new: &Json, threshold_pct: f64) -> anyhow::Result<DiffOutcome> {
+    validate_report(old)?;
+    validate_report(new)?;
+    let cols_of = |r: &Json| -> Vec<String> {
+        r.get("columns")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|c| c.as_str().map(str::to_string))
+            .collect()
+    };
+    let rows_of = |r: &Json| -> Vec<Vec<String>> {
+        r.get("rows")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|row| {
+                row.as_arr()
+                    .map(|cells| cells.iter().filter_map(|c| c.as_str().map(str::to_string)).collect())
+            })
+            .collect()
+    };
+    let (old_cols, new_cols) = (cols_of(old), cols_of(new));
+    let old_rows = rows_of(old);
+    let mut out = DiffOutcome::default();
+    for new_row in rows_of(new) {
+        let Some(key) = new_row.first() else { continue };
+        let Some(old_row) = old_rows.iter().find(|r| r.first() == Some(key)) else { continue };
+        for (ci, col) in new_cols.iter().enumerate().skip(1) {
+            let Some(lower_better) = column_lower_is_better(col) else { continue };
+            let Some(oi) = old_cols.iter().position(|c| c == col) else { continue };
+            let (Some(new_v), Some(old_v)) = (
+                new_row.get(ci).map(String::as_str).and_then(leading_number),
+                old_row.get(oi).map(String::as_str).and_then(leading_number),
+            ) else {
+                continue;
+            };
+            if old_v == 0.0 {
+                continue;
+            }
+            out.compared += 1;
+            let change_pct = 100.0 * (new_v - old_v) / old_v.abs();
+            let worse_pct = if lower_better { change_pct } else { -change_pct };
+            if worse_pct > threshold_pct {
+                out.regressions.push(Regression {
+                    row: key.clone(),
+                    column: col.clone(),
+                    old: old_v,
+                    new: new_v,
+                    worse_pct,
+                });
+            } else if worse_pct < -threshold_pct {
+                out.improvements += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// `grim profile` report assembly
+// ---------------------------------------------------------------------
+
+fn layer_row(p: &LayerProfile) -> Vec<String> {
+    vec![
+        if p.node == usize::MAX { "TOTAL".to_string() } else { format!("{}:{}", p.node, p.kind) },
+        p.kind.to_string(),
+        format!("{:.1}", p.wall_us),
+        format!("{:.1}", p.busy_us),
+        format!("{:.3}", p.cost.flops as f64 / 1e6),
+        format!("{:.3}", p.cost.dense_flops as f64 / 1e6),
+        format!("{:.2}x", p.sparsity_win()),
+        format!("{}", p.cost.weight_bytes + p.cost.act_bytes),
+        format!("{:.3}", p.cost.arithmetic_intensity),
+        format!("{:.2}", p.gflops),
+        format!("{:.2}", p.gbps),
+        format!("{:.2}", p.roof_gflops),
+        format!("{:.1}", p.roof_pct),
+        p.bound.name().to_string(),
+    ]
+}
+
+/// Per-layer roofline table for one profiled model, as a bench report
+/// (printable + JSON-saveable through the unified schema).
+pub fn profile_report(model: &str, p: &ModelProfile, machine: &MachineModel) -> crate::bench::Report {
+    let mut r = crate::bench::Report::new(
+        &format!("profile_{model}"),
+        &format!("{model}: per-layer roofline ({}, {} threads)", machine.isa.name(), machine.threads),
+        &[
+            "step", "kind", "wall_us", "busy_us", "mflop", "dense_mflop", "win", "bytes",
+            "intensity", "gflops", "gbps", "roof_gflops", "roof_pct", "bound",
+        ],
+    );
+    for l in &p.layers {
+        r.row(layer_row(l));
+    }
+    r.row(layer_row(&p.total));
+    r.meta
+        .set("model", Json::Str(model.to_string()))
+        .set("ridge_flop_per_byte", Json::Num(machine.ridge()))
+        .set(
+            "layers",
+            Json::Arr(
+                p.layers
+                    .iter()
+                    .map(|l| {
+                        let mut o = Json::obj();
+                        o.set("node", Json::Num(l.node as f64))
+                            .set("kind", Json::Str(l.kind.to_string()))
+                            .set("flops", Json::Num(l.cost.flops as f64))
+                            .set("dense_flops", Json::Num(l.cost.dense_flops as f64))
+                            .set("weight_bytes", Json::Num(l.cost.weight_bytes as f64))
+                            .set("act_bytes", Json::Num(l.cost.act_bytes as f64))
+                            .set("nnz", Json::Num(l.cost.nnz as f64))
+                            .set("intensity", Json::Num(l.cost.arithmetic_intensity))
+                            .set("wall_us", Json::Num(l.wall_us))
+                            .set("busy_us", Json::Num(l.busy_us))
+                            .set("gflops", Json::Num(l.gflops))
+                            .set("roof_gflops", Json::Num(l.roof_gflops))
+                            .set("roof_pct", Json::Num(l.roof_pct))
+                            .set("bound", Json::Str(l.bound.name().to_string()));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_machine() -> MachineModel {
+        MachineModel {
+            isa: Isa::Avx2Fma,
+            threads: 4,
+            freq_ghz: 3.0,
+            mem_gbps: 25.6,
+            peak_gflops: 16.0 * 3.0 * 4.0,
+        }
+    }
+
+    #[test]
+    fn roofline_classification() {
+        let m = mk_machine();
+        // ridge = 192 / 25.6 = 7.5 flop/byte
+        assert!((m.ridge() - 7.5).abs() < 1e-9);
+        let lo = join_one(
+            0,
+            "fc",
+            LayerCost { flops: 100, weight_bytes: 50, act_bytes: 50, arithmetic_intensity: 1.0, ..Default::default() },
+            10.0,
+            0.0,
+            &m,
+        );
+        assert_eq!(lo.bound, Bound::Memory);
+        assert!((lo.roof_gflops - 25.6).abs() < 1e-9);
+        let hi = join_one(
+            1,
+            "conv",
+            LayerCost { flops: 1000, weight_bytes: 50, act_bytes: 50, arithmetic_intensity: 10.0, ..Default::default() },
+            10.0,
+            0.0,
+            &m,
+        );
+        assert_eq!(hi.bound, Bound::Compute);
+        assert!((hi.roof_gflops - 192.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn achieved_units() {
+        let m = mk_machine();
+        // 1e6 flops in 1000 µs = 1e6 / 1e9 s-worth = 1 GFLOP/s.
+        let p = join_one(
+            0,
+            "fc",
+            LayerCost { flops: 1_000_000, weight_bytes: 1_000_000, act_bytes: 0, arithmetic_intensity: 1.0, ..Default::default() },
+            1000.0,
+            0.0,
+            &m,
+        );
+        assert!((p.gflops - 1.0).abs() < 1e-9);
+        assert!((p.gbps - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schema_round_trip_validates() {
+        let m = mk_machine();
+        let meta = Json::obj();
+        let r = report_json(
+            "t",
+            "T",
+            &["k".into(), "ms".into()],
+            &[vec!["a".into(), "1.5".into()]],
+            &meta,
+            &m,
+        );
+        validate_report(&r).unwrap();
+        let back = crate::util::json::parse(&r.to_pretty()).unwrap();
+        validate_report(&back).unwrap();
+        let mut bad = back.clone();
+        bad.set("rows", Json::Arr(vec![Json::Arr(vec![Json::Str("a".into())])]));
+        assert!(validate_report(&bad).is_err());
+        assert!(validate_report(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn diff_directions_and_self_compare() {
+        let m = mk_machine();
+        let meta = Json::obj();
+        let cols: Vec<String> = vec!["kernel".into(), "ms".into(), "gflops".into()];
+        let old = report_json("t", "T", &cols, &[vec!["k1".into(), "10.0".into(), "5.0".into()]], &meta, &m);
+        // Self-compare: zero regressions by construction.
+        let d = diff_reports(&old, &old, 5.0).unwrap();
+        assert!(d.regressions.is_empty());
+        assert_eq!(d.compared, 2);
+        // ms up 50% = regression; gflops down 50% = regression.
+        let worse =
+            report_json("t", "T", &cols, &[vec!["k1".into(), "15.0".into(), "2.5".into()]], &meta, &m);
+        let d = diff_reports(&old, &worse, 5.0).unwrap();
+        assert_eq!(d.regressions.len(), 2);
+        assert!(d.regressions.iter().all(|r| r.worse_pct > 5.0));
+        // The same movement in the good direction: improvements, not
+        // regressions.
+        let d = diff_reports(&worse, &old, 5.0).unwrap();
+        assert!(d.regressions.is_empty());
+        assert_eq!(d.improvements, 2);
+    }
+
+    #[test]
+    fn column_direction_inference() {
+        assert_eq!(column_lower_is_better("wall ms"), Some(true));
+        assert_eq!(column_lower_is_better("p99_us"), Some(true));
+        assert_eq!(column_lower_is_better("gflops"), Some(false));
+        assert_eq!(column_lower_is_better("speedup"), Some(false));
+        assert_eq!(column_lower_is_better("x"), Some(false));
+        assert_eq!(column_lower_is_better("kernel"), None);
+    }
+
+    #[test]
+    fn leading_number_parses_suffixed_cells() {
+        assert_eq!(leading_number("2.00x"), Some(2.0));
+        assert_eq!(leading_number("123 KiB"), Some(123.0));
+        assert_eq!(leading_number("-1.5e2rest"), Some(-150.0));
+        assert_eq!(leading_number("n/a"), None);
+    }
+}

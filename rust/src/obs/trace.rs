@@ -125,6 +125,10 @@ pub enum SpanKind {
     Worker = 5,
     /// Response send back to the caller. `a` = request id.
     Respond = 6,
+    /// One process-gauge sample, exported as a Chrome `"C"` counter
+    /// event. `detail` = [`COUNTER_NAMES`] index, `a` = value; duration
+    /// is always 0 (counters are instants).
+    Counter = 7,
 }
 
 impl SpanKind {
@@ -136,6 +140,7 @@ impl SpanKind {
             3 => SpanKind::Run,
             4 => SpanKind::Step,
             5 => SpanKind::Worker,
+            7 => SpanKind::Counter,
             _ => SpanKind::Respond,
         }
     }
@@ -148,9 +153,19 @@ impl SpanKind {
             }
             SpanKind::Run | SpanKind::Step => "kernel",
             SpanKind::Worker => "worker",
+            SpanKind::Counter => "counter",
         }
     }
 }
+
+/// Counter-track names for [`SpanKind::Counter`] samples (`detail`
+/// indexes this table the way [`STEP_KINDS`] does for steps).
+pub const COUNTER_NAMES: &[&str] = &["inflight_batches", "pending_admissions", "arena_bytes"];
+
+/// [`COUNTER_NAMES`] indices, named so call sites read.
+pub const CTR_INFLIGHT: u32 = 0;
+pub const CTR_PENDING_ADMISSIONS: u32 = 1;
+pub const CTR_ARENA_BYTES: u32 = 2;
 
 /// A decoded span, as returned by [`snapshot`].
 #[derive(Clone, Debug)]
@@ -182,6 +197,9 @@ impl Span {
             }
             SpanKind::Worker => "chunk".into(),
             SpanKind::Respond => "respond".into(),
+            SpanKind::Counter => {
+                COUNTER_NAMES.get(self.detail as usize).copied().unwrap_or("counter").to_string()
+            }
         }
     }
 
@@ -446,6 +464,14 @@ pub fn record_span(
     with_local_ring(|ring| ring.push(ts, dur, kind, detail, model, a));
 }
 
+/// Record one counter sample — the instantaneous value of process gauge
+/// [`COUNTER_NAMES`]`[name_id]` — exported as a `"C"` event. Callers
+/// guard with [`active`] like every other span site.
+pub fn record_counter(name_id: u32, model: u32, value: u64) {
+    let now = Instant::now();
+    record_span(SpanKind::Counter, now, now, name_id, model, value);
+}
+
 /// Decode every committed span across all thread rings (oldest first per
 /// ring). Torn slots are dropped, not blocked on.
 pub fn snapshot() -> Vec<Span> {
@@ -495,6 +521,21 @@ pub fn export_chrome() -> String {
         if !model.is_empty() {
             args.set("model", Json::Str(model));
         }
+        if s.kind == SpanKind::Counter {
+            // Counter samples are instant `"C"` events: Perfetto draws
+            // one track per (name, pid) from args key → value.
+            args.set("value", Json::Num(s.a as f64));
+            let mut e = Json::obj();
+            e.set("name", Json::Str(s.name()))
+                .set("cat", Json::Str(s.kind.category().into()))
+                .set("ph", Json::Str("C".into()))
+                .set("ts", Json::Num(s.start_us as f64))
+                .set("pid", Json::Num(1.0))
+                .set("tid", Json::Num(s.tid as f64))
+                .set("args", args);
+            events.push(e);
+            continue;
+        }
         match s.kind {
             SpanKind::Queue | SpanKind::Dispatch | SpanKind::Respond | SpanKind::Run => {
                 args.set("request", Json::Num(s.a as f64));
@@ -509,6 +550,7 @@ pub fn export_chrome() -> String {
                 args.set("items", Json::Num(s.a as f64));
                 args.set("worker", Json::Num(s.detail as f64));
             }
+            SpanKind::Counter => {} // handled above
         }
         let mut e = Json::obj();
         e.set("name", Json::Str(s.name()))
@@ -532,6 +574,8 @@ pub fn export_chrome() -> String {
 pub struct TraceSummary {
     /// Total `"X"` duration events.
     pub events: usize,
+    /// Total `"C"` counter samples.
+    pub counters: usize,
     /// Distinct `args.model` values seen.
     pub models: BTreeSet<String>,
     /// Distinct event names seen.
@@ -542,8 +586,10 @@ pub struct TraceSummary {
 
 /// Parse and structurally validate a Chrome trace-event document:
 /// `traceEvents` must be an array; every `"X"` event needs string
-/// `name`/`cat` and numeric `ts`/`dur`/`pid`/`tid`. Used both by the
-/// CLI after writing `--trace` output and by the test suite.
+/// `name`/`cat` and numeric `ts`/`dur`/`pid`/`tid`; every `"C"` counter
+/// sample needs string `name`, numeric `ts`/`pid`/`tid`, and a numeric
+/// `args.value`. Used both by the CLI after writing `--trace` output and
+/// by the test suite.
 pub fn validate_chrome(text: &str) -> crate::Result<TraceSummary> {
     let doc = crate::util::json::parse(text)?;
     let events = doc
@@ -556,6 +602,24 @@ pub fn validate_chrome(text: &str) -> crate::Result<TraceSummary> {
             .get("ph")
             .and_then(|p| p.as_str())
             .ok_or_else(|| anyhow::anyhow!("trace event {i}: missing ph"))?;
+        if ph == "C" {
+            let name = e
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow::anyhow!("trace event {i}: counter missing name"))?;
+            for field in ["ts", "pid", "tid"] {
+                e.get(field)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("trace event {i}: missing numeric {field}"))?;
+            }
+            e.get("args")
+                .and_then(|a| a.get("value"))
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("trace event {i}: counter missing args.value"))?;
+            summary.names.insert(name.to_string());
+            summary.counters += 1;
+            continue;
+        }
         if ph != "X" {
             continue;
         }

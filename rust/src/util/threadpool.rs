@@ -19,7 +19,7 @@
 //! instead of allocating, so the buffer is grown once per worker lifetime
 //! and the steady-state serving path stays allocation-free.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -127,6 +127,10 @@ impl ThreadPool {
         }
         let f = Arc::new(f);
         let (done_tx, done_rx) = channel::<()>();
+        // Per-call busy accumulator: chunks add their worker time here,
+        // and the barrier credits the total to the CALLER's scope below
+        // (see `crate::obs::task_busy_nanos`).
+        let busy = Arc::new(AtomicU64::new(0));
         let chunk = n.div_ceil(self.size);
         // Rotate which worker gets chunk 0: a call using fewer chunks
         // than workers (a quota'd model's buckets) then lands on a
@@ -141,10 +145,11 @@ impl ThreadPool {
             }
             let hi = ((w + 1) * chunk).min(n);
             let f = Arc::clone(&f);
+            let busy = Arc::clone(&busy);
             let done = done_tx.clone();
             self.senders[(start + w) % self.size]
                 .send(Msg::Run(Box::new(move |scratch| {
-                    run_instrumented(w, (hi - lo) as u64, || f(scratch, w, lo, hi));
+                    run_instrumented(w, (hi - lo) as u64, &busy, || f(scratch, w, lo, hi));
                     // Drop our Arc clone BEFORE signalling completion so the
                     // caller can unwrap shared state as soon as recv returns.
                     drop(f);
@@ -156,6 +161,7 @@ impl ThreadPool {
         for _ in 0..dispatched {
             done_rx.recv().expect("worker completed");
         }
+        credit_busy(&busy);
     }
 
     /// Run `f(worker_id, item)` with dynamic scheduling over `0..n`.
@@ -169,9 +175,11 @@ impl ThreadPool {
         let f = Arc::new(f);
         let next = Arc::new(AtomicUsize::new(0));
         let (done_tx, done_rx) = channel::<()>();
+        let busy = Arc::new(AtomicU64::new(0));
         for w in 0..self.size {
             let f = Arc::clone(&f);
             let next = Arc::clone(&next);
+            let busy = Arc::clone(&busy);
             let done = done_tx.clone();
             self.senders[w]
                 .send(Msg::Run(Box::new(move |_scratch| {
@@ -186,7 +194,7 @@ impl ThreadPool {
                         items += 1;
                     }
                     if let Some(t0) = t0 {
-                        finish_chunk(t0, w, items);
+                        finish_chunk(t0, w, items, &busy);
                     }
                     drop(f); // see run_partitioned: release before signalling
                     let _ = done.send(());
@@ -196,6 +204,7 @@ impl ThreadPool {
         for _ in 0..self.size {
             done_rx.recv().expect("worker completed");
         }
+        credit_busy(&busy);
     }
 
     /// Run arbitrary closures, one per worker slot, returning when all done.
@@ -224,19 +233,22 @@ impl ThreadPool {
 
 /// Wrap one worker chunk with busy-time accounting and (when sampled) a
 /// worker-lane trace span. Off-path cost: one relaxed atomic load.
-fn run_instrumented(w: usize, items: u64, f: impl FnOnce()) {
+/// Chunk time lands in `busy`, the issuing call's private accumulator —
+/// the global and caller-scoped counters are credited once, at the
+/// barrier, by [`credit_busy`].
+fn run_instrumented(w: usize, items: u64, busy: &AtomicU64, f: impl FnOnce()) {
     if crate::obs::pool_timing() {
         let t0 = std::time::Instant::now();
         f();
-        finish_chunk(t0, w, items);
+        finish_chunk(t0, w, items, busy);
     } else {
         f();
     }
 }
 
-fn finish_chunk(t0: std::time::Instant, w: usize, items: u64) {
+fn finish_chunk(t0: std::time::Instant, w: usize, items: u64, busy: &AtomicU64) {
     let end = std::time::Instant::now();
-    crate::obs::add_pool_busy_nanos(end.duration_since(t0).as_nanos() as u64);
+    busy.fetch_add(end.duration_since(t0).as_nanos() as u64, Ordering::Relaxed);
     if crate::obs::trace::active() {
         crate::obs::trace::record_span(
             crate::obs::trace::SpanKind::Worker,
@@ -246,6 +258,18 @@ fn finish_chunk(t0: std::time::Instant, w: usize, items: u64) {
             crate::obs::trace::current_model(),
             items,
         );
+    }
+}
+
+/// Credit a completed barrier's accumulated chunk time to the global
+/// pool counter AND the calling thread's task-scoped counter. Runs on
+/// the caller's thread after every worker finished, so concurrent
+/// `run_*` calls from different threads can never mix attributions.
+fn credit_busy(busy: &AtomicU64) {
+    let total = busy.load(Ordering::Relaxed);
+    if total > 0 {
+        crate::obs::add_pool_busy_nanos(total);
+        crate::obs::add_task_busy_nanos(total);
     }
 }
 
@@ -289,7 +313,6 @@ impl SharedAcc {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
 
     #[test]
     fn partitioned_covers_range_once() {

@@ -82,9 +82,10 @@ fn file_round_trip_and_pool_adaptation() {
 /// partitions embedded inside the packed structures) gets its
 /// partitions hoisted into a synthesized `ScheduleSet`; v2 (no
 /// hardware-matrix stats, no mixed-width grammar) reads with default
-/// stats. Both are bit-identical to the current-version round-trip and
-/// to the in-memory plan — at the compile-time bucket count *and* after
-/// a pool-size rebalance.
+/// stats; v3 (no cost table) gets its cost model recomputed at load.
+/// All are bit-identical to the current-version round-trip and to the
+/// in-memory plan — at the compile-time bucket count *and* after a
+/// pool-size rebalance.
 #[test]
 fn old_version_artifacts_still_load_bit_identically() {
     for (i, kind) in [ModelKind::Vgg16, ModelKind::Gru].iter().enumerate() {
@@ -93,15 +94,18 @@ fn old_version_artifacts_still_load_bit_identically() {
         assert_eq!(u32::from_le_bytes(v1[4..8].try_into().unwrap()), 1, "v1 header version");
         let v2 = artifact::to_bytes_versioned(&plan, 2).unwrap();
         assert_eq!(u32::from_le_bytes(v2[4..8].try_into().unwrap()), 2, "v2 header version");
-        let v3 = artifact::to_bytes(&plan).unwrap();
+        let v3 = artifact::to_bytes_versioned(&plan, 3).unwrap();
+        assert_eq!(u32::from_le_bytes(v3[4..8].try_into().unwrap()), 3, "v3 header version");
+        let v4 = artifact::to_bytes(&plan).unwrap();
         assert_eq!(
-            u32::from_le_bytes(v3[4..8].try_into().unwrap()),
+            u32::from_le_bytes(v4[4..8].try_into().unwrap()),
             artifact::GRIMC_VERSION,
             "current header version"
         );
         let from_v1 = artifact::from_bytes(&v1).unwrap();
         let from_v2 = artifact::from_bytes(&v2).unwrap();
         let from_v3 = artifact::from_bytes(&v3).unwrap();
+        let from_v4 = artifact::from_bytes(&v4).unwrap();
         if plan.packing.enabled {
             assert!(
                 !from_v1.schedules.is_empty(),
@@ -111,14 +115,24 @@ fn old_version_artifacts_still_load_bit_identically() {
         // Pre-v3 files carry no hardware-matrix stats; the current
         // version round-trips them exactly.
         assert_eq!(from_v2.packing.hw_mr, 0, "{kind:?}: v2 stats must default");
-        assert_eq!(from_v3.packing.isa, plan.packing.isa, "{kind:?}: v3 must keep the ISA row");
-        assert_eq!(from_v3.packing.hw_mr, plan.packing.hw_mr, "{kind:?}");
-        assert_eq!(from_v3.packing.mixed_layers, plan.packing.mixed_layers, "{kind:?}");
-        assert_eq!(from_v3.packing.wide_groups, plan.packing.wide_groups, "{kind:?}");
+        assert_eq!(from_v4.packing.isa, plan.packing.isa, "{kind:?}: v4 must keep the ISA row");
+        assert_eq!(from_v4.packing.hw_mr, plan.packing.hw_mr, "{kind:?}");
+        assert_eq!(from_v4.packing.mixed_layers, plan.packing.mixed_layers, "{kind:?}");
+        assert_eq!(from_v4.packing.wide_groups, plan.packing.wide_groups, "{kind:?}");
+        // Every load path ends with the full cost table: v4 stores and
+        // validates it, pre-v4 recomputes it — all bit-equal to the
+        // compile-time pass.
+        for (tag, loaded) in
+            [("v1", &from_v1), ("v2", &from_v2), ("v3", &from_v3), ("v4", &from_v4)]
+        {
+            assert_eq!(loaded.costs.len(), plan.steps.len(), "{kind:?}: {tag} cost table size");
+            assert_eq!(loaded.costs, plan.costs, "{kind:?}: {tag} cost table differs");
+        }
         let mem = Engine::new(plan, 2);
         let e1 = Engine::new(from_v1, 2);
         let e2 = Engine::new(from_v2, 3); // different pool: rebalance leg
         let e3 = Engine::new(from_v3, 2);
+        let e4 = Engine::new(from_v4, 2);
         let mut rng = Rng::new(0x6C00 + i as u64);
         for case in 0..2 {
             let x = input_for(&mem, &mut rng);
@@ -126,6 +140,7 @@ fn old_version_artifacts_still_load_bit_identically() {
             assert_eq!(a, e1.run(&x).unwrap(), "{kind:?} case {case}: v1 artifact differs");
             assert_eq!(a, e2.run(&x).unwrap(), "{kind:?} case {case}: v2 artifact differs");
             assert_eq!(a, e3.run(&x).unwrap(), "{kind:?} case {case}: v3 artifact differs");
+            assert_eq!(a, e4.run(&x).unwrap(), "{kind:?} case {case}: v4 artifact differs");
         }
     }
 }

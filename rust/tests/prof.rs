@@ -1,0 +1,133 @@
+//! Cost-model + roofline-profile acceptance tests:
+//!
+//! * the compiler's cost pass covers every step of every preset and its
+//!   counters obey the model's invariants (sparse-effective flops never
+//!   exceed dense-equivalent, intensity is exactly flops/bytes, totals
+//!   are field sums);
+//! * a measured run joins against the cost table into a per-layer
+//!   profile whose report validates against the `grim_bench_schema`
+//!   shape and self-diffs clean (the `grim bench-diff` identity).
+//!
+//! The flop/byte conventions themselves are cross-validated by an
+//! independent pure-Python enumeration in `python/tests/sim_prof.py`.
+
+use grim::compiler::cost;
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::compiler::plan::ExecutionPlan;
+use grim::engine::Engine;
+use grim::gemm::Isa;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::obs::prof;
+use grim::tensor::Tensor;
+use grim::util::Rng;
+
+const KINDS: [ModelKind; 4] =
+    [ModelKind::Vgg16, ModelKind::Resnet18, ModelKind::MobilenetV2, ModelKind::Gru];
+
+fn compiled(kind: ModelKind, seed: u64) -> ExecutionPlan {
+    let o = InitOptions { rate: 6.0, block: [4, 16], seed };
+    let m = build_model(kind, Preset::CifarMini, o);
+    let w = random_weights(&m, o);
+    compile(&m, &w, CompileOptions::default()).unwrap()
+}
+
+fn input_for(engine: &Engine, rng: &mut Rng) -> Tensor {
+    let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+    Tensor::rand_uniform(&dims, 1.0, rng)
+}
+
+/// The cost table is total (one entry per step) and each entry obeys
+/// the model's invariants on every preset: sparse-effective flops never
+/// exceed the dense-equivalent count, stored nnz never exceeds the
+/// dense element count implied by the flop ratio, and the recorded
+/// intensity is exactly `flops / (weight_bytes + act_bytes)`.
+#[test]
+fn cost_tables_cover_presets_with_sparse_leq_dense() {
+    for (i, kind) in KINDS.iter().enumerate() {
+        let plan = compiled(*kind, 900 + i as u64);
+        assert_eq!(plan.costs.len(), plan.steps.len(), "{kind:?}: one cost per step");
+        let mut any_flops = false;
+        for (si, c) in plan.costs.iter().enumerate() {
+            assert!(
+                c.flops <= c.dense_flops,
+                "{kind:?} step {si}: sparse flops {} > dense {}",
+                c.flops,
+                c.dense_flops
+            );
+            let bytes = c.weight_bytes + c.act_bytes;
+            let want = if bytes == 0 { 0.0 } else { c.flops as f64 / bytes as f64 };
+            assert_eq!(
+                c.arithmetic_intensity, want,
+                "{kind:?} step {si}: intensity must be exactly flops/bytes"
+            );
+            any_flops |= c.flops > 0;
+        }
+        assert!(any_flops, "{kind:?}: a compiled model must cost > 0 flops");
+        // Sparsified GEMM layers exist in every preset at rate 6.0, so
+        // the whole-plan dense-equivalent total must strictly exceed
+        // the sparse-effective total.
+        let t = cost::total(&plan.costs);
+        assert!(t.dense_flops > t.flops, "{kind:?}: no plan-level sparsity win");
+    }
+}
+
+/// Plan totals are exact field sums of the per-step table.
+#[test]
+fn totals_are_field_sums() {
+    let plan = compiled(ModelKind::Resnet18, 910);
+    let t = cost::total(&plan.costs);
+    let sum = |f: fn(&cost::LayerCost) -> u64| plan.costs.iter().map(f).sum::<u64>();
+    assert_eq!(t.flops, sum(|c| c.flops));
+    assert_eq!(t.dense_flops, sum(|c| c.dense_flops));
+    assert_eq!(t.weight_bytes, sum(|c| c.weight_bytes));
+    assert_eq!(t.act_bytes, sum(|c| c.act_bytes));
+    assert_eq!(t.nnz, sum(|c| c.nnz));
+}
+
+/// Joining a measured run with the cost table yields one profile row
+/// per step, classifies every layer under exactly one roof, and emits a
+/// report that passes schema validation and self-diffs with zero
+/// regressions at any threshold.
+#[test]
+fn profile_joins_measure_and_validates_schema() {
+    for (i, kind) in KINDS.iter().enumerate() {
+        let plan = compiled(*kind, 920 + i as u64);
+        let mut engine = Engine::new(plan, 2);
+        engine.collect_metrics = true;
+        let mut rng = Rng::new(0x9F00 + i as u64);
+        let x = input_for(&engine, &mut rng);
+        let (_, m) = engine.run_with_metrics(&x).unwrap();
+        // A pinned machine model keeps the assertions host-independent.
+        let machine = prof::MachineModel::for_isa(Isa::Scalar, 2);
+        let p = prof::join(&engine.plan().costs, &m, &machine).unwrap();
+        assert_eq!(p.layers.len(), engine.plan().steps.len(), "{kind:?}");
+        for l in &p.layers {
+            assert!(l.wall_us >= 0.0 && l.busy_us >= 0.0, "{kind:?}");
+            assert!(l.sparsity_win() >= 1.0, "{kind:?} node {}: win < 1", l.node);
+            let expect_mem = l.cost.arithmetic_intensity < machine.ridge();
+            assert_eq!(l.bound == prof::Bound::Memory, expect_mem, "{kind:?} node {}", l.node);
+            assert!(l.roof_gflops <= machine.peak_gflops + 1e-9, "{kind:?}");
+        }
+        assert_eq!(p.total.cost.flops, cost::total(&engine.plan().costs).flops, "{kind:?}");
+        let report = prof::profile_report(&format!("{kind:?}"), &p, &machine);
+        let obj = report.to_json_with(&machine);
+        prof::validate_report(&obj).unwrap();
+        // bench-diff identity: a report compared against itself is
+        // regression-free even at threshold 0.
+        let d = prof::diff_reports(&obj, &obj, 0.0).unwrap();
+        assert!(d.regressions.is_empty(), "{kind:?}: self-diff regressed");
+        assert!(d.compared > 0, "{kind:?}: self-diff compared nothing");
+    }
+}
+
+/// Joining refuses a run whose metrics were not collected (length
+/// mismatch) instead of silently misattributing.
+#[test]
+fn join_rejects_mismatched_metrics() {
+    let plan = compiled(ModelKind::Gru, 930);
+    let costs = plan.costs.clone();
+    let machine = prof::MachineModel::for_isa(Isa::Scalar, 2);
+    let empty = grim::engine::RunMetrics::default();
+    let err = prof::join(&costs, &empty, &machine).unwrap_err();
+    assert!(err.to_string().contains("metrics collection off"), "{err}");
+}

@@ -1,6 +1,8 @@
 //! Micro-kernel + fusion benchmark: scalar vs dispatched-SIMD GFLOP/s for
-//! the axpy/dot primitives, fused vs unfused GEMM+Bias+ReLU latency, and
-//! register-tiled vs axpy GFLOP/s on packed layouts per ISA table.
+//! the axpy/dot primitives, fused vs unfused GEMM+Bias+ReLU latency,
+//! register-tiled vs axpy GFLOP/s on packed layouts per ISA table, and
+//! quantized i8 vs f32 throughput + packed-bytes ratio on the same
+//! panels.
 //!
 //! Emits `BENCH_kernels.json` in the working directory (one stable,
 //! machine-diffable artifact tracked across PRs) in addition to the usual
@@ -14,6 +16,7 @@ use grim::gemm::pack::{pack_bcrc, CacheParams, PackOverrides};
 use grim::gemm::simd::{self, HwConfig, Microkernels};
 use grim::gemm::tiled::{tiled_gemm_into, tiled_gemm_into_ep, TileParams};
 use grim::gemm::Epilogue;
+use grim::quant;
 use grim::sparse::{Bcrc, BcrConfig, BcrMask};
 use grim::tensor::Tensor;
 use grim::util::json::{self, Json};
@@ -77,7 +80,7 @@ fn bench_dot(mk: &'static Microkernels, n: usize, reps: usize, iters: usize) -> 
 }
 
 fn main() -> anyhow::Result<()> {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = std::env::args().any(|a| a == "--quick") || grim::bench::quick_mode();
     let iters = if quick { 5 } else { 15 };
     let mk = simd::active();
     let sc = simd::scalar();
@@ -325,6 +328,65 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Quantized (i8) vs f32 execution on the SAME packed panels: only
+    // the value type differs (i8 codes, i32 accumulation, fused
+    // requantize epilogue). "GFLOP/s" counts the same 2*nnz*N ops on
+    // both sides so the ratio is an apples-to-apples throughput
+    // comparison; packed_bytes_ratio is the storage win (approaching 4x
+    // — 1-byte codes against 4-byte floats, less the shared index/group
+    // overhead plus the per-row i32 weight sums the epilogue needs).
+    let mut i8_rows = Vec::new();
+    for &(name, m, k, n) in
+        &[("fc-ish", 256usize, 512usize, 1usize), ("conv-ish", 128, 256, 196), ("wide", 256, 512, 64)]
+    {
+        let mut rng = Rng::new(61);
+        let mask = BcrMask::random(m, k, BcrConfig::from_block_size(m, k, 4, 16), 6.0, &mut rng);
+        let mut w = Tensor::rand_uniform(&[m, k], 0.4, &mut rng);
+        mask.apply(&mut w);
+        let enc = Bcrc::from_masked(&w, &mask);
+        let params = GemmParams::default();
+        let hw = HwConfig::for_kernels(mk, CacheParams::default());
+        let f32_layout = Arc::new(pack_bcrc(&enc, params, n, hw, PackOverrides::default()));
+        let i8_layout = Arc::new(f32_layout.quantize_i8());
+        let fgemm = BcrcGemm::new(enc.clone(), params).with_packed(Arc::clone(&f32_layout));
+        let qgemm = BcrcGemm::new(enc.clone(), params).with_packed(Arc::clone(&i8_layout));
+        let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
+        let (xlo, xhi) = quant::minmax(x.data());
+        let qx = quant::choose_qparams(xlo, xhi);
+        let mut xq = vec![0u8; x.data().len()];
+        quant::quantize_activations(x.data(), qx, &mut xq);
+        let bias: Vec<f32> = (0..m).map(|i| 0.01 * i as f32 - 0.5).collect();
+        let flops = 2.0 * enc.nnz() as f64 * n as f64;
+        let mut out = vec![0.0f32; m * n];
+        let mut gather = vec![0.0f32; enc.max_group_cols()];
+        let mut gather8 = vec![0u8; i8_layout.max_width.max(1)];
+        let t_f32 = time_median_ms(iters, 2, || {
+            fgemm.execute_into_ep(x.data(), n, &mut out, &mut gather, mk, Epilogue::BiasRelu(&bias));
+            std::hint::black_box(&mut out);
+        });
+        let t_i8 = time_median_ms(iters, 2, || {
+            qgemm.execute_i8_into_ep(&xq, n, &mut out, &mut gather8, qx, mk, Epilogue::BiasRelu(&bias));
+            std::hint::black_box(&mut out);
+        });
+        let bytes_ratio = f32_layout.packed_bytes() as f64 / i8_layout.packed_bytes() as f64;
+        rep.row(vec![
+            "i8 vs f32 packed".into(),
+            format!("{name} [{m}x{k}]xN{n}"),
+            format!("{:.2} GF/s", gflops(flops, t_f32)),
+            format!("{:.2} GF/s", gflops(flops, t_i8)),
+            format!("{bytes_ratio:.2}x bytes"),
+        ]);
+        let mut o = Json::obj();
+        o.set("shape", Json::Str(format!("{m}x{k}xN{n}")))
+            .set("f32_gflops", Json::Num(round2(gflops(flops, t_f32))))
+            .set("i8_gflops", Json::Num(round2(gflops(flops, t_i8))))
+            .set("speedup", Json::Num(round2(t_f32 / t_i8)))
+            .set("f32_packed_bytes", Json::Num(f32_layout.packed_bytes() as f64))
+            .set("i8_packed_bytes", Json::Num(i8_layout.packed_bytes() as f64))
+            .set("packed_bytes_ratio", Json::Num(round2(bytes_ratio)));
+        i8_rows.push(o);
+    }
+
     // Thread-imbalance stats on a sparsity-skewed fixture: nnz per
     // thread under the even row split vs the LPT partition.
     let partition_stats = {
@@ -438,6 +500,7 @@ fn main() -> anyhow::Result<()> {
         .set("fusion", Json::Arr(fused_rows))
         .set("packing", Json::Arr(packing_rows))
         .set("regtile", Json::Arr(regtile_rows))
+        .set("i8", Json::Arr(i8_rows))
         .set("partition", partition_stats)
         .set("tracing", tracing_stats);
     std::fs::write("BENCH_kernels.json", doc.to_pretty())?;

@@ -95,7 +95,13 @@ def gru_dsl(seq, in_f, hidden, layers, classes, irs):
     return "\n".join(lines) + "\n"
 
 
-def ir_line(layer, block, rate, fmt=None):
+def ir_line(layer, block, rate, fmt=None, dtype=None):
+    """One `@ir` pragma. `dtype="i8"` requests post-training int8 codes
+    for the layer's packed weights (the Rust quantize pass still applies
+    its own eligibility rules — packed BCRC only)."""
     fmt = fmt or ("bcrc" if rate > 1.0 else "dense")
+    tail = f"format={fmt}"
+    if dtype is not None:
+        tail += f"; dtype={dtype}"
     return (f"@ir {layer} {{ block_size=[{block[0]},{block[1]}]; rate={rate}; "
-            f"unroll=4; tile=64; lre=true; reorder=true; format={fmt} }}")
+            f"unroll=4; tile=64; lre=true; reorder=true; {tail} }}")

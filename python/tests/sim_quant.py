@@ -1,0 +1,246 @@
+"""Executable spec for the int8 quantization arithmetic in
+rust/src/quant/mod.rs (and the epilogue contract the i8 kernels in
+rust/src/gemm/simd/tile_i8*.rs and rust/src/gemm/bcrc_gemm.rs rely on).
+No Rust toolchain is needed: this is the executable spec.
+
+Mirrors, function for function:
+  * weight_scale / quantize_weight  — static symmetric i8 weights
+  * minmax / choose_qparams / quantize_activations — dynamic asymmetric
+    u8 activations (range widened to include 0.0, zp clamped to
+    [0, 255], degenerate range -> scale 1.0)
+  * requantize                      — the zero-point folding identity
+        sum_k w_q[r,k]*(x_q[k] - zp) == acc - zp*wsum[r]
+    checked exactly in integers, plus the fused f32 epilogue
+  * quantize_multiplier / rounding_doubling_high_mul /
+    rounding_right_shift / requantize_u8 — gemmlowp-style pure-integer
+    requantization, property-checked against the float reference
+  * the end-to-end analytic error bound the Rust test
+    quantized_i8_tracks_f32_and_is_deterministic asserts:
+        |y_i8 - y_f32| <= K*(wmax*s_x/2 + xmax*s_w/2 + s_w*s_x/4)*1.05 + 1e-4
+"""
+
+import math
+import random
+
+I32_MIN = -(1 << 31)
+I32_MAX = (1 << 31) - 1
+
+
+def wrap_i32(v):
+    v &= 0xFFFFFFFF
+    return v - (1 << 32) if v >= (1 << 31) else v
+
+
+# -- weights: static symmetric i8 -------------------------------------
+
+def weight_scale(maxabs):
+    return maxabs / 127.0 if maxabs > 0.0 and math.isfinite(maxabs) else 1.0
+
+
+def quantize_weight(v, scale):
+    q = round(v / scale)
+    return max(-127, min(127, q))
+
+
+# -- activations: dynamic asymmetric u8 -------------------------------
+
+def minmax(xs):
+    lo, hi = math.inf, -math.inf
+    for v in xs:
+        lo = min(lo, v)
+        hi = max(hi, v)
+    return lo, hi
+
+
+def choose_qparams(lo, hi):
+    lo = min(lo, 0.0)
+    hi = max(hi, 0.0)
+    if hi > lo and math.isfinite(hi - lo) and hi - lo > 0.0:
+        scale = (hi - lo) / 255.0
+        if not (scale > 0.0 and math.isfinite(scale)):
+            scale = 1.0
+    else:
+        scale = 1.0
+    zp = int(max(0.0, min(255.0, round(-lo / scale))))
+    return scale, zp
+
+
+def quantize_activation(v, scale, zp):
+    return int(max(0.0, min(255.0, round(v / scale + zp))))
+
+
+# -- the fused requantize epilogue ------------------------------------
+
+def requantize(acc, wsum_r, zp, scale, bias, act="none"):
+    corr = wrap_i32(acc - wrap_i32(zp * wsum_r))
+    y = corr * scale + bias
+    if act == "relu":
+        return max(0.0, y)
+    if act == "relu6":
+        return max(0.0, min(6.0, y))
+    return y
+
+
+# -- gemmlowp-style pure-integer requantization -----------------------
+
+def quantize_multiplier(m):
+    assert m > 0.0 and math.isfinite(m)
+    frac, exp = math.frexp(m)  # frac in [0.5, 1)
+    q = round(frac * (1 << 31))
+    shift = -exp
+    if q == (1 << 31):
+        q //= 2
+        shift -= 1
+    return q, shift
+
+
+def rounding_doubling_high_mul(a, b):
+    if a == I32_MIN and b == I32_MIN:
+        return I32_MAX
+    ab = a * b
+    nudge = (1 << 30) if ab >= 0 else 1 - (1 << 30)
+    # Truncating (toward-zero) division by 2^31, as in Rust/C, not
+    # Python's flooring // — they differ on negative values.
+    v = ab + nudge
+    return -((-v) >> 31) if v < 0 else v >> 31
+
+
+def rounding_right_shift(x, s):
+    if s <= 0:
+        return wrap_i32(x << (-s))
+    mask = (1 << s) - 1
+    remainder = x & mask
+    threshold = (mask >> 1) + (1 if x < 0 else 0)
+    return (x >> s) + (1 if remainder > threshold else 0)
+
+
+def requantize_u8(acc, mult, shift, out_zp):
+    x = rounding_right_shift(rounding_doubling_high_mul(acc, mult), shift)
+    return max(0, min(255, x + out_zp))
+
+
+# -- checks -----------------------------------------------------------
+
+def check_weight_quantization(rng):
+    ws = [rng.uniform(-1.3, 1.3) for _ in range(512)]
+    maxabs = max(abs(v) for v in ws)
+    s = weight_scale(maxabs)
+    for v in ws:
+        q = quantize_weight(v, s)
+        assert abs(q * s - v) <= s * 0.5 + 1e-6, (v, q, s)
+    assert quantize_weight(maxabs, s) == 127
+    assert quantize_weight(-maxabs, s) == -127
+    assert weight_scale(0.0) == 1.0
+
+
+def check_activation_quantization(rng):
+    for lo_hint, hi_hint in [(-3.0, 5.0), (0.1, 2.0), (-4.0, -0.5), (0.0, 0.0)]:
+        xs = [rng.uniform(lo_hint, hi_hint) for _ in range(256)]
+        scale, zp = choose_qparams(*minmax(xs))
+        assert scale > 0.0 and 0 <= zp <= 255
+        # Zero quantizes exactly (the range is widened to include it).
+        assert (quantize_activation(0.0, scale, zp) - zp) * scale == 0.0
+        for v in xs:
+            code = quantize_activation(v, scale, zp)
+            assert abs((code - zp) * scale - v) <= scale * 0.5 + 1e-6
+    # Degenerate ranges fall back to scale 1.0.
+    assert choose_qparams(math.inf, -math.inf) == (1.0, 0)
+    assert choose_qparams(0.0, 0.0) == (1.0, 0)
+
+
+def check_zero_point_folding(rng):
+    """sum_k w_q*(x_q - zp) == acc - zp*wsum, exactly, in integers."""
+    for _ in range(200):
+        k = rng.randrange(1, 64)
+        zp = rng.randrange(0, 256)
+        wq = [rng.randrange(-127, 128) for _ in range(k)]
+        xq = [rng.randrange(0, 256) for _ in range(k)]
+        acc = sum(w * x for w, x in zip(wq, xq))
+        wsum = sum(wq)
+        assert sum(w * (x - zp) for w, x in zip(wq, xq)) == acc - zp * wsum
+
+
+def check_requantize_epilogue():
+    acc, wsum, zp, s, b = 12345, 321, 7, 0.031, 0.25
+    want = s * (acc - zp * wsum) + b
+    assert abs(requantize(acc, wsum, zp, s, b) - want) < 1e-6
+    assert requantize(-acc, wsum, zp, s, b, "relu") == 0.0
+    assert requantize(acc * 100, wsum, zp, s, b, "relu6") == 6.0
+
+
+def check_dot_product_error_bound(rng):
+    """The analytic bound the Rust test asserts: per-output error of the
+    i8 pipeline vs f32 is at most
+        K*(wmax*s_x/2 + xmax*s_w/2 + s_w*s_x/4)
+    (each of K products errs by at most a half-step on each factor plus
+    the cross term), padded by 5% slack + 1e-4 in the Rust test for f32
+    rounding in the float reference itself."""
+    for trial in range(100):
+        k = rng.randrange(1, 256)
+        ws = [rng.uniform(-1.0, 1.0) for _ in range(k)]
+        xs = [rng.uniform(-2.0, 3.0) for _ in range(k)]
+        s_w = weight_scale(max(abs(v) for v in ws))
+        s_x, zp = choose_qparams(*minmax(xs))
+        wq = [quantize_weight(v, s_w) for v in ws]
+        xq = [quantize_activation(v, s_x, zp) for v in xs]
+        acc = sum(w * x for w, x in zip(wq, xq))
+        wsum = sum(wq)
+        y_i8 = requantize(acc, wsum, zp, s_x * s_w, 0.0)
+        y_f32 = sum(w * x for w, x in zip(ws, xs))
+        wmax = max(abs(v) for v in ws)
+        xmax = max(abs(v) for v in xs)
+        bound = k * (wmax * s_x / 2 + xmax * s_w / 2 + s_w * s_x / 4) * 1.05 + 1e-4
+        err = abs(y_i8 - y_f32)
+        assert err <= bound, f"trial {trial}: err {err} > bound {bound}"
+
+
+def check_multiplier_round_trip(rng):
+    for m in [0.0007, 0.013, 0.25, 0.4999, 0.5, 0.9999, 1.0, 1.7, 123.456] + [
+        10 ** rng.uniform(-7, 2) for _ in range(200)
+    ]:
+        mult, shift = quantize_multiplier(m)
+        assert (1 << 30) <= mult <= I32_MAX
+        recon = mult * 2.0 ** (-31 - shift)
+        assert abs(recon - m) / m < 1e-8, (m, mult, shift, recon)
+
+
+def check_fixed_point_primitives():
+    assert rounding_doubling_high_mul(I32_MIN, I32_MIN) == I32_MAX
+    assert rounding_doubling_high_mul(1 << 30, 1 << 30) == 1 << 29
+    assert rounding_doubling_high_mul(0, 12345) == 0
+    assert rounding_doubling_high_mul(-(1 << 30), 1 << 30) == -(1 << 29)
+    assert rounding_right_shift(5, 1) == 3      # 2.5 rounds away from zero
+    assert rounding_right_shift(-5, 1) == -3
+    assert rounding_right_shift(4, 1) == 2
+    assert rounding_right_shift(7, 0) == 7
+    assert rounding_right_shift(3, -2) == 12    # negative shift = left
+
+
+def check_integer_requantize_tracks_float(rng):
+    for _ in range(2000):
+        acc = rng.randrange(-2_000_000, 2_000_000)
+        m = 1e-6 + rng.random() * 0.01
+        out_zp = rng.randrange(0, 256)
+        mult, shift = quantize_multiplier(m)
+        got = requantize_u8(acc, mult, shift, out_zp)
+        want = max(0.0, min(255.0, acc * m + out_zp))
+        assert abs(got - want) <= 1.5, (acc, m, out_zp, got, want)
+
+
+def main():
+    rng = random.Random(20260808)
+    check_weight_quantization(rng)
+    check_activation_quantization(rng)
+    check_zero_point_folding(rng)
+    check_requantize_epilogue()
+    check_dot_product_error_bound(rng)
+    check_multiplier_round_trip(rng)
+    check_fixed_point_primitives()
+    check_integer_requantize_tracks_float(rng)
+    print("PASS sim_quant: symmetric i8 weights, dynamic u8 activations, "
+          "zero-point folding, analytic error bound, and integer "
+          "requantization all hold")
+
+
+if __name__ == "__main__":
+    main()

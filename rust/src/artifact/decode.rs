@@ -4,12 +4,15 @@
 //! [`AlignedBuf`]s in their packed order; nothing is re-encoded or
 //! re-packed (asserted by [`super::from_bytes`] via the pack counter).
 //!
-//! Reads **v4** (trailing cost-model table, recomputed and
-//! cross-checked rather than trusted), **v3** (mixed-width column
-//! indices + hardware-matrix stats), **v2** (schedules in their own
-//! plan-level block) and the legacy **v1** (partitions embedded in
-//! `PackedBcrc` / CSR kernels). Pre-v4 files get their cost table
-//! recomputed at load, so every loaded plan carries one.
+//! Reads **v5** (per-section value dtype; i8 packed-BCRC bodies carry
+//! their weight scale and code bytes, and the per-row code sums are
+//! recomputed here — never trusted from the file), **v4** (trailing
+//! cost-model table, recomputed and cross-checked rather than trusted),
+//! **v3** (mixed-width column indices + hardware-matrix stats), **v2**
+//! (schedules in their own plan-level block) and the legacy **v1**
+//! (partitions embedded in `PackedBcrc` / CSR kernels). Pre-v5 files
+//! are f32 throughout; pre-v4 files get their cost table recomputed at
+//! load, so every loaded plan carries one.
 //! The v1 path hoists every embedded partition into a synthesized
 //! [`ScheduleSet`] as it decodes, so old artifacts run unchanged on the
 //! shared-runtime engine. All schedule validation (coverage, nnz
@@ -27,7 +30,8 @@ use crate::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
 use crate::gemm::pack::PackedDense;
 use crate::gemm::simd::Isa;
 use crate::gemm::tiled::TileParams;
-use crate::memory::aligned::AlignedBuf;
+use crate::memory::aligned::{AlignedBuf, AlignedBytes};
+use crate::quant::DType;
 use crate::memory::liveness::{BufferKind, PlannedBuffer};
 use crate::memory::MemoryPlan;
 use crate::sparse::packed::{ColIndex, PackShape, PackedBcrc, PackedGroup, Span, WorkPartition};
@@ -43,7 +47,7 @@ struct Reader<'a> {
     /// alignment-checked against `file` before decoding starts.
     sections: Vec<(usize, usize)>,
     file: &'a [u8],
-    /// Format version from the header (1..=4).
+    /// Format version from the header (1..=5).
     version: u32,
     /// v1 compat: partitions hoisted out of their legacy in-kernel
     /// positions while kernels decode; becomes the plan's
@@ -284,6 +288,37 @@ fn get_packed_bcrc(
     let nnz = r.u64()? as usize;
     let max_width = r.u64()? as usize;
     let row_major = r.flag()?;
+    // v5: value dtype; i8 layouts add the weight scale, the true code
+    // byte count, and the code bytes as their own padded section (the
+    // section table counts f32 slots). Pre-v5 files are f32 throughout.
+    let (dtype, w_scale, values_i8) = if r.version >= 5 {
+        let dtype = DType::from_u8(r.u8()?)?;
+        if dtype == DType::I8 {
+            let w_scale = f32::from_bits(r.u32()?);
+            anyhow::ensure!(
+                w_scale.is_finite() && w_scale > 0.0,
+                "i8 weight scale {w_scale} not a positive finite value"
+            );
+            let blen = r.u64()? as usize;
+            let raw = r.section_raw()?;
+            anyhow::ensure!(
+                blen <= raw.len() && raw.len() - blen < 4,
+                "i8 code section holds {} bytes for stored length {blen}",
+                raw.len()
+            );
+            let mut codes = AlignedBytes::zeroed(blen);
+            codes.as_mut_slice().copy_from_slice(&raw[..blen]);
+            anyhow::ensure!(
+                values.is_empty(),
+                "i8 layout must not also carry an f32 value buffer"
+            );
+            (dtype, w_scale, codes)
+        } else {
+            (dtype, 1.0, AlignedBytes::zeroed(0))
+        }
+    } else {
+        (DType::F32, 1.0, AlignedBytes::zeroed(0))
+    };
     let v1_part = if r.version == 1 { Some(get_partition(r)?) } else { None };
 
     // Structural validation (no value recomputation): the packed layout
@@ -317,12 +352,18 @@ fn get_packed_bcrc(
             "group {gi} indices out of range"
         );
         // u128 so a crafted val_off cannot wrap the bound in release.
+        // The capacity is in value elements either way — f32 slots or
+        // i8 code bytes, whichever buffer this dtype actually uses.
+        let vcap = match dtype {
+            DType::F32 => values.len(),
+            DType::I8 => values_i8.len(),
+        };
         anyhow::ensure!(
-            g.val_off as u128 + g.rows() as u128 * g.width as u128 <= values.len() as u128,
+            g.val_off as u128 + g.rows() as u128 * g.width as u128 <= vcap as u128,
             "group {gi} values out of range"
         );
     }
-    let p = PackedBcrc {
+    let mut p = PackedBcrc {
         rows,
         cols,
         shape,
@@ -333,7 +374,18 @@ fn get_packed_bcrc(
         nnz,
         max_width,
         row_major,
+        dtype,
+        values_i8,
+        wsum: Vec::new(),
+        w_scale,
     };
+    // The per-row code sums the requantize epilogue folds the
+    // activation zero-point with are derived state: recompute them from
+    // the codes (the same walk `quantize_i8` uses) instead of trusting
+    // anything on disk.
+    if p.dtype == DType::I8 {
+        p.wsum = p.computed_wsum();
+    }
     // Column signatures must decode to exactly the source encoding's (a
     // cheap walk over the deduplicated signatures, not the values). This
     // both proves idx/col_base parity and bounds every packed column
@@ -386,7 +438,11 @@ fn get_packed_dense(r: &mut Reader) -> anyhow::Result<PackedDense> {
     let values = r.section_aligned()?;
     anyhow::ensure!(values.len() == m * k, "packed dense values length");
     anyhow::ensure!(mr >= 1 && kc >= 1, "packed dense block shape");
-    Ok(PackedDense { m, k, mr, kc, values })
+    // v5 grammar slot; dense packing is f32-only today, so anything
+    // else is a crafted or future file this build cannot serve.
+    let dtype = if r.version >= 5 { DType::from_u8(r.u8()?)? } else { DType::F32 };
+    anyhow::ensure!(dtype == DType::F32, "packed dense layouts are f32-only");
+    Ok(PackedDense { m, k, mr, kc, values, dtype })
 }
 
 fn get_csr(r: &mut Reader) -> anyhow::Result<Csr> {
@@ -1144,6 +1200,11 @@ fn decode_plan(r: &mut Reader) -> anyhow::Result<ExecutionPlan> {
         packing.hw_mr = r.usize32()?;
         packing.mixed_layers = r.usize32()?;
         packing.wide_groups = r.usize32()?;
+    }
+    if r.version >= 5 {
+        // v5: quantized-layer counter (pre-v5 files are f32 throughout,
+        // so the default 0 is exact).
+        packing.i8_layers = r.usize32()?;
     }
     let schedules = if r.version >= 2 {
         // v2: the plan's schedules as their own block.

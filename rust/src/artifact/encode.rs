@@ -2,10 +2,11 @@
 //! [`ExecutionPlan`] plus 64-byte-aligned f32 sections (see the format
 //! grammar in the module docs — [`super::decode`] is the exact mirror).
 //!
-//! Writes **v2** by default (work partitions in the plan-level
-//! schedules block, kernels carrying `sched` ids) and can still emit
-//! the legacy **v1** grammar (partitions embedded in `PackedBcrc` /
-//! the CSR kernel) for downgrade and compatibility testing.
+//! Writes the current version by default (see the version list in the
+//! module docs) and can still emit every older grammar down to **v1**
+//! (partitions embedded in `PackedBcrc` / the CSR kernel) for downgrade
+//! and compatibility testing — except that quantized (i8) plans refuse
+//! any version below 5, the first grammar with a dtype slot.
 
 use super::{fnv1a64, HEADER_LEN, MAGIC};
 use crate::compiler::plan::{
@@ -87,6 +88,17 @@ impl Writer {
         self.sections.push(bytes);
     }
 
+    /// Bulk byte payload (v5 i8 weight codes): stored like [`Self::section`]
+    /// but zero-padded to a whole number of f32 slots, because the section
+    /// table counts f32 elements (`len / 4` in [`Self::finish`]). The true
+    /// byte count travels separately in the meta stream.
+    fn section_bytes(&mut self, v: &[u8]) {
+        let mut bytes = v.to_vec();
+        bytes.resize(bytes.len().div_ceil(4) * 4, 0);
+        self.u32(self.sections.len() as u32);
+        self.sections.push(bytes);
+    }
+
     /// Assemble header + table + meta + aligned section blobs and seal
     /// the checksum, stamping `version` into the header.
     pub fn finish(self, version: u32) -> Vec<u8> {
@@ -161,8 +173,14 @@ fn put_bcrc(w: &mut Writer, enc: &Bcrc) {
 
 /// Packed-BCRC body. v2 is partition-free; the v1 grammar embedded the
 /// partition (and the bucket count inside the shape), so the v1 writer
-/// receives the kernel's schedule to embed.
-fn put_packed_bcrc(w: &mut Writer, p: &PackedBcrc, v1_part: Option<&WorkPartition>) {
+/// receives the kernel's schedule to embed. v5 appends the value dtype
+/// after `row_major` (see the version list in [`super`]'s module docs).
+fn put_packed_bcrc(
+    w: &mut Writer,
+    p: &PackedBcrc,
+    v1_part: Option<&WorkPartition>,
+    version: u32,
+) {
     w.u32(p.rows as u32);
     w.u32(p.cols as u32);
     w.u32(p.shape.mr as u32);
@@ -209,17 +227,35 @@ fn put_packed_bcrc(w: &mut Writer, p: &PackedBcrc, v1_part: Option<&WorkPartitio
     w.u64(p.nnz as u64);
     w.u64(p.max_width as u64);
     w.u8(p.row_major as u8);
+    // v5: value dtype; i8 layouts add the weight scale, the true code
+    // byte count, and the code bytes as their own (padded) section. The
+    // f32 values section above stays in the grammar — empty for i8 — so
+    // the field order is identical across dtypes. `wsum` is derived
+    // state and is deliberately not serialized.
+    if version >= 5 {
+        w.u8(p.dtype.to_u8());
+        if p.dtype == crate::quant::DType::I8 {
+            w.u32(p.w_scale.to_bits());
+            w.u64(p.values_i8.len() as u64);
+            w.section_bytes(p.values_i8.as_slice());
+        }
+    }
     if let Some(part) = v1_part {
         put_partition(w, part);
     }
 }
 
-fn put_packed_dense(w: &mut Writer, p: &PackedDense) {
+fn put_packed_dense(w: &mut Writer, p: &PackedDense, version: u32) {
     w.u32(p.m as u32);
     w.u32(p.k as u32);
     w.u32(p.mr as u32);
     w.u32(p.kc as u32);
     w.section(p.values.as_slice());
+    // v5: trailing value dtype (dense packing is f32-only today, but the
+    // grammar slot keeps dense and BCRC bodies symmetric).
+    if version >= 5 {
+        w.u8(p.dtype.to_u8());
+    }
 }
 
 fn put_csr(w: &mut Writer, mat: &Csr) {
@@ -265,7 +301,7 @@ fn put_kernel(w: &mut Writer, k: &KernelImpl, schedules: &ScheduleSet, version: 
             match packed {
                 Some(p) => {
                     w.u8(1);
-                    put_packed_dense(w, p);
+                    put_packed_dense(w, p, version);
                 }
                 None => w.u8(0),
             }
@@ -304,7 +340,7 @@ fn put_kernel(w: &mut Writer, k: &KernelImpl, schedules: &ScheduleSet, version: 
             match &gemm.packed {
                 Some(p) => {
                     w.u8(1);
-                    put_packed_bcrc(w, p, v1_part(gemm.sched));
+                    put_packed_bcrc(w, p, v1_part(gemm.sched), version);
                 }
                 None => w.u8(0),
             }
@@ -406,6 +442,23 @@ pub fn encode_plan(w: &mut Writer, plan: &ExecutionPlan, version: u32) -> anyhow
         });
         anyhow::ensure!(!missing, "packed BCRC kernel lacks a schedule (cannot write v1)");
     }
+    if version < 5 {
+        // Pre-v5 grammars have no dtype slot; a quantized plan written
+        // there would silently drop its i8 codes. Refuse the downgrade.
+        let mut quantized = false;
+        crate::compiler::plan::for_each_kernel(&plan.steps, |k| {
+            if let KernelImpl::Bcrc { gemm } = k {
+                quantized |= gemm
+                    .packed
+                    .as_deref()
+                    .is_some_and(|p| p.dtype != crate::quant::DType::F32);
+            }
+        });
+        anyhow::ensure!(
+            !quantized,
+            "quantized (i8) plans require .grimc version >= 5 (asked for v{version})"
+        );
+    }
     w.str(&plan.name);
     w.u32(plan.input_id as u32);
     w.u32(plan.output_id as u32);
@@ -459,6 +512,10 @@ pub fn encode_plan(w: &mut Writer, plan: &ExecutionPlan, version: u32) -> anyhow
         w.u32(ps.hw_mr as u32);
         w.u32(ps.mixed_layers as u32);
         w.u32(ps.wide_groups as u32);
+    }
+    // v5: quantized-layer counter.
+    if version >= 5 {
+        w.u32(ps.i8_layers as u32);
     }
     // v2: the plan's schedules as their own trailing block — partitions
     // hoisted out of the packed structures, referenced by kernel `sched`

@@ -21,7 +21,7 @@
 //!
 //! ```text
 //! 0   magic      b"GRMC"
-//! 4   version    u32 (currently 4; bumped on any format change)
+//! 4   version    u32 (currently 5; bumped on any format change)
 //! 8   checksum   u64 FNV-1a over every byte from offset 16 to EOF
 //! 16  meta_len   u64 length of the meta stream in bytes
 //! 24  n_sections u32
@@ -37,7 +37,21 @@
 //!
 //! # Versions
 //!
-//! * **v4** (current): a trailing per-step cost-model block (the
+//! * **v5** (current): per-section value dtype. Every `PackedBcrc` body
+//!   carries a dtype tag (u8: 0 = f32, 1 = i8) right after its
+//!   `row_major` flag; an i8 body then adds the symmetric per-tensor
+//!   weight scale (f32 bits as u32), the true code-byte count (u64),
+//!   and a byte section holding the interleaved i8 codes zero-padded to
+//!   a whole number of f32 slots (the section table counts f32
+//!   elements) — the f32 values section is still written, but empty.
+//!   The per-row code sums (`wsum`) the requantize epilogue needs are
+//!   **recomputed from the codes at load**, never serialized, so stored
+//!   and derived state cannot drift. `PackedDense` bodies likewise gain
+//!   a trailing dtype tag (always f32 today), and [`PackingStats`]
+//!   appends the `i8_layers` counter after `wide_groups`. Quantized
+//!   plans refuse to downgrade: [`to_bytes_versioned`] rejects any plan
+//!   holding an i8 layout at version < 5. Otherwise identical to v4.
+//! * **v4** (read-compatible): a trailing per-step cost-model block (the
 //!   compiler's [`crate::compiler::cost::LayerCost`] table — flops,
 //!   dense-equivalent flops, weight/activation bytes, nnz, arithmetic
 //!   intensity) after the schedules block. The counts are pure plan
@@ -78,7 +92,7 @@ use std::path::Path;
 pub(crate) const MAGIC: &[u8; 4] = b"GRMC";
 
 /// Current `.grimc` format version (written by [`to_bytes`]).
-pub const GRIMC_VERSION: u32 = 4;
+pub const GRIMC_VERSION: u32 = 5;
 
 /// Oldest version [`from_bytes`] still reads.
 pub const GRIMC_MIN_READ_VERSION: u32 = 1;

@@ -154,6 +154,10 @@ pub struct PackingStats {
     /// Packed groups that stayed on raw u32 indices — the groups that
     /// downgraded out of delta compression, summed over all BCRC layers.
     pub wide_groups: usize,
+    /// BCRC layers rewritten to i8 codes by the quantize pass
+    /// (`--dtype i8`); their bytes are already reflected in
+    /// `packed_bytes`.
+    pub i8_layers: usize,
 }
 
 /// Rewrite every GEMM kernel in `steps` with its packed form, emitting
@@ -190,6 +194,52 @@ pub fn pack_step_kernels(
         }
     }
     (stats, schedules)
+}
+
+/// Compiler pass 4¾: post-training weight quantization (`--dtype i8`).
+///
+/// Rewrites every *packed* BCRC conv/FC kernel with
+/// [`crate::sparse::packed::PackedBcrc::quantize_i8`] — same groups,
+/// same indices, same schedules, i8 value codes — and adjusts
+/// `stats.packed_bytes` to the i8 footprint. Deliberately skipped:
+///
+/// * **GRU gates** — the sigmoid/tanh recurrence compounds activation
+///   quantization error across timesteps, unlike feed-forward ReLU
+///   stacks;
+/// * **unpacked kernels** (`GRIM_FORCE_UNPACKED=1`, packing disabled) —
+///   the encode-order f32 path is the correctness baseline;
+/// * layouts with `mr > 8` (tuner overrides) — the i8 panel kernel's
+///   stack C tile tops out at the hardware matrix's tallest panel.
+///
+/// Returns the number of kernels rewritten.
+pub fn quantize_step_kernels(steps: &mut [(usize, Step)], stats: &mut PackingStats) -> usize {
+    let mut quantized = 0usize;
+    for (_, step) in steps.iter_mut() {
+        match step {
+            Step::Conv { kernel, .. } | Step::Fc { kernel, .. } => {
+                quantized += quantize_kernel(kernel, stats);
+            }
+            _ => {}
+        }
+    }
+    quantized
+}
+
+fn quantize_kernel(k: &mut KernelImpl, stats: &mut PackingStats) -> usize {
+    use crate::quant::DType;
+    if let KernelImpl::Bcrc { gemm } = k {
+        if let Some(p) = gemm.packed.as_ref() {
+            if p.dtype == DType::F32 && p.shape.mr <= 8 {
+                let old = p.packed_bytes();
+                let q = p.quantize_i8();
+                stats.packed_bytes = stats.packed_bytes - old + q.packed_bytes();
+                stats.i8_layers += 1;
+                gemm.packed = Some(Arc::new(q));
+                return 1;
+            }
+        }
+    }
+    0
 }
 
 fn pack_kernel(

@@ -37,6 +37,11 @@ pub struct CompileOptions {
     /// Plan-time weight packing + static work partitioning (pass 4½);
     /// on by default, also disabled by `GRIM_FORCE_UNPACKED=1`.
     pub pack: super::packing::PackOptions,
+    /// Value type of the served weights (`grim compile --dtype i8`).
+    /// `I8` runs post-training quantization (pass 4¾) over every packed
+    /// BCRC conv/FC kernel; everything else (GRU gates, dense, CSR, and
+    /// unpacked plans) stays f32.
+    pub dtype: crate::quant::DType,
 }
 
 impl Default for CompileOptions {
@@ -46,6 +51,7 @@ impl Default for CompileOptions {
             fuse: true,
             im2col_skip: true,
             pack: super::packing::PackOptions::default(),
+            dtype: crate::quant::DType::F32,
         }
     }
 }
@@ -171,7 +177,15 @@ pub fn compile(
     // Pass 4½: repack weights for the memory hierarchy and compute the
     // static nnz-balanced parallel partitions, emitted as the plan's
     // ScheduleSet beside the packed kernels (see super::packing).
-    let (packing, schedules) = super::packing::pack_step_kernels(&mut steps, &opts.pack);
+    let (mut packing, schedules) = super::packing::pack_step_kernels(&mut steps, &opts.pack);
+
+    // Pass 4¾: post-training weight quantization (`--dtype i8`). Runs
+    // before memory planning and the cost pass so both see the i8
+    // scratch regions and byte counts; adjusts `packing.packed_bytes`
+    // in place.
+    if opts.dtype == crate::quant::DType::I8 {
+        super::packing::quantize_step_kernels(&mut steps, &mut packing);
+    }
 
     // Bypass fused-away (Noop) nodes: rewrite consumer edges to read the
     // producer directly so no tensor is cloned through the Noop at runtime.

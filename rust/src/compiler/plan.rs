@@ -125,6 +125,28 @@ impl KernelImpl {
         }
     }
 
+    /// Value type the kernel's execution path streams: `I8` only for a
+    /// quantized packed BCRC layout; every other kernel serves f32.
+    pub fn dtype(&self) -> crate::quant::DType {
+        match self {
+            KernelImpl::Bcrc { gemm } => gemm
+                .packed
+                .as_deref()
+                .map(|p| p.dtype)
+                .unwrap_or(crate::quant::DType::F32),
+            _ => crate::quant::DType::F32,
+        }
+    }
+
+    /// `format_name` plus the served value type when it isn't f32
+    /// (`bcrc:i8`) — the label `describe()` and `grim stats` print.
+    pub fn format_label(&self) -> String {
+        match self.dtype() {
+            crate::quant::DType::F32 => self.format_name().to_string(),
+            crate::quant::DType::I8 => format!("{}:i8", self.format_name()),
+        }
+    }
+
     /// GEMM output rows (`M`); `None` for Winograd, which never runs as a
     /// plain GEMM.
     pub fn out_rows(&self) -> Option<usize> {
@@ -281,6 +303,27 @@ pub struct ExecutionPlan {
 }
 
 impl ExecutionPlan {
+    /// Resident weight bytes split by served value type, in a fixed
+    /// (f32, i8) order — what the per-model
+    /// `grim_weight_bytes{model,dtype}` gauges export. Sums the same
+    /// per-kernel figure as [`kernel_weight_bytes`] (plus the dense
+    /// depthwise weights, always f32), so the two views always total
+    /// the same bytes.
+    pub fn weight_bytes_by_dtype(&self) -> [(crate::quant::DType, usize); 2] {
+        let mut f32_bytes = 0usize;
+        let mut i8_bytes = 0usize;
+        for_each_kernel(&self.steps, |k| match k.dtype() {
+            crate::quant::DType::F32 => f32_bytes += kernel_weight_bytes(k),
+            crate::quant::DType::I8 => i8_bytes += kernel_weight_bytes(k),
+        });
+        for (_, step) in &self.steps {
+            if let Step::DwConv { w, .. } = step {
+                f32_bytes += 4 * w.numel();
+            }
+        }
+        [(crate::quant::DType::F32, f32_bytes), (crate::quant::DType::I8, i8_bytes)]
+    }
+
     /// Total weight storage across all steps.
     pub fn storage_bytes(&self) -> usize {
         let mut total = 0;
@@ -316,10 +359,10 @@ impl ExecutionPlan {
                     geom.kw,
                     geom.stride,
                     geom.out_c,
-                    kernel.format_name()
+                    kernel.format_label()
                 ),
                 Step::DwConv { kh, kw, stride, .. } => format!("DwConv {kh}x{kw} s{stride}"),
-                Step::Fc { kernel, .. } => format!("FC k={}", kernel.format_name()),
+                Step::Fc { kernel, .. } => format!("FC k={}", kernel.format_label()),
                 Step::Gru { layers } => format!("GRU x{}", layers.len()),
                 other => format!("{other:?}").split_whitespace().next().unwrap().to_string(),
             };
@@ -341,14 +384,15 @@ impl ExecutionPlan {
             let _ = writeln!(
                 s,
                 "  packing: {} bcrc / {} dense / {} csr layers ({} KiB values, {} u16-indexed, \
-                 {} mixed-width, {} wide groups)",
+                 {} mixed-width, {} wide groups, {} i8)",
                 self.packing.bcrc_layers,
                 self.packing.dense_layers,
                 self.packing.csr_layers,
                 self.packing.packed_bytes / 1024,
                 self.packing.u16_layers,
                 self.packing.mixed_layers,
-                self.packing.wide_groups
+                self.packing.wide_groups,
+                self.packing.i8_layers
             );
             let _ = writeln!(
                 s,

@@ -754,8 +754,12 @@ impl Engine {
             .out_rows()
             .ok_or_else(|| anyhow::anyhow!("winograd outside conv"))?;
         let mut out = Tensor::zeros(&[m, n]);
-        let mut gather =
-            vec![0.0f32; if n == 1 { layout::kernel_gather_len(kernel) } else { 0 }];
+        // Same carve the planner reserves: [gemv gather][quant scratch].
+        let mut gather = vec![
+            0.0f32;
+            (if n == 1 { layout::kernel_gather_len(kernel) } else { 0 })
+                + layout::kernel_quant_len(kernel, n)
+        ];
         self.exec_gemm_into(kernel, sched, xd, n, out.data_mut(), &mut gather, ep)?;
         Ok(out)
     }
@@ -813,7 +817,56 @@ impl Engine {
                 }
             }
             KernelImpl::Bcrc { gemm } => {
-                if gemm.enc.rows * n >= PARALLEL_THRESHOLD {
+                // Quantization scratch rides at the tail of the planned
+                // gather region (see memory::layout); zero-length for
+                // every f32 kernel.
+                let ql = layout::kernel_quant_len(kernel, n);
+                let (gather, quant) = gather.split_at_mut(gather.len() - ql);
+                // The i8 layout serves every shape it was packed for; the
+                // one mismatch (gemv over an interleaved packing) routes
+                // through the encode-order f32 path below, which reads
+                // the original values retained in `gemm.enc`.
+                let i8_ok = gemm
+                    .packed
+                    .as_deref()
+                    .is_some_and(|p| p.dtype == crate::quant::DType::I8 && (n > 1 || p.row_major));
+                if i8_ok {
+                    let p = gemm.packed.as_deref().expect("checked above");
+                    // Dynamic per-tensor activation quantization: range,
+                    // params, then u8 codes staged in the quant scratch.
+                    let (lo, hi) = crate::quant::minmax(xd);
+                    let qx = crate::quant::choose_qparams(lo, hi);
+                    let codes = gemm.enc.cols * n;
+                    let cslots = crate::quant::f32_slots_for_bytes(codes);
+                    let (cbuf, gbuf) = quant.split_at_mut(cslots);
+                    let xq = crate::quant::as_u8_mut(cbuf);
+                    crate::quant::quantize_activations(xd, qx, &mut xq[..codes]);
+                    let part = sched.get(gemm.sched);
+                    if gemm.enc.rows * n >= PARALLEL_THRESHOLD && part.is_some() {
+                        gemm.execute_i8_parallel_into_ep(
+                            &xq[..codes],
+                            n,
+                            out,
+                            part.expect("checked above"),
+                            self.pool(),
+                            qx,
+                            self.mk,
+                            ep,
+                        );
+                    } else {
+                        let g8 = crate::quant::as_u8_mut(gbuf);
+                        let gw = if n == 1 { p.max_width } else { 0 };
+                        gemm.execute_i8_into_ep(
+                            &xq[..codes],
+                            n,
+                            out,
+                            &mut g8[..gw],
+                            qx,
+                            self.mk,
+                            ep,
+                        );
+                    }
+                } else if gemm.enc.rows * n >= PARALLEL_THRESHOLD {
                     gemm.execute_parallel_into_ep(
                         xd,
                         n,
@@ -1162,6 +1215,40 @@ out = Softmax(fc1)
         let mut rng = Rng::new(71);
         let x = Tensor::rand_uniform(&[3, 8, 8], 1.0, &mut rng);
         assert_eq!(engine.run(&x).unwrap(), eight.run(&x).unwrap());
+    }
+
+    /// `--dtype i8` serving: the quantized plan tracks the f32 plan
+    /// within the quantization error budget, shrinks the packed bytes,
+    /// and the planned path still matches the naive reference bitwise
+    /// (both route through the same i8 kernels on the same codes).
+    #[test]
+    fn quantized_plan_tracks_f32_and_matches_naive() {
+        let m = cnn_module();
+        let w = cnn_weights(9);
+        let f32_plan = compile(&m, &w, CompileOptions::default()).unwrap();
+        let q_opts = CompileOptions { dtype: crate::quant::DType::I8, ..Default::default() };
+        let q_plan = compile(&m, &w, q_opts).unwrap();
+        if crate::compiler::packing::force_unpacked() {
+            return; // nothing packed to quantize under GRIM_FORCE_UNPACKED
+        }
+        assert!(q_plan.packing.i8_layers > 0, "fixture must quantize at least one layer");
+        assert!(
+            q_plan.packing.packed_bytes < f32_plan.packing.packed_bytes,
+            "i8 packing must shrink weight bytes: {} vs {}",
+            q_plan.packing.packed_bytes,
+            f32_plan.packing.packed_bytes
+        );
+        let ef = Engine::new(f32_plan, 2);
+        let eq = Engine::new(q_plan, 2);
+        let mut rng = Rng::new(90);
+        let x = Tensor::rand_uniform(&[3, 8, 8], 1.0, &mut rng);
+        let a = ef.run(&x).unwrap();
+        let b = eq.run(&x).unwrap();
+        // Post-softmax probabilities; two small quantized layers stay
+        // well inside this budget (the tight analytic per-layer bound
+        // lives in the bcrc_gemm and tier-2 quant tests).
+        assert!(a.allclose(&b, 8e-2, 8e-2), "maxdiff={}", a.max_abs_diff(&b));
+        assert_eq!(b, eq.run_naive(&x).unwrap(), "planned i8 must match naive i8 bitwise");
     }
 
     #[test]

@@ -23,7 +23,8 @@
 //! accumulation completes — bias/ReLU never re-streams the output.
 
 use super::epilogue::Epilogue;
-use super::simd::{self, ColsTile, Microkernels, RegTile};
+use super::simd::{self, Act, ColsTile, Microkernels, RegTile};
+use crate::quant::QParams;
 use crate::sparse::packed::{ColsRef, PackedBcrc, WorkPartition};
 use crate::sparse::Bcrc;
 use crate::tensor::Tensor;
@@ -649,6 +650,295 @@ impl BcrcGemm {
         }
     }
 
+    // ---------------------------------------------------------------
+    // Quantized (i8) packed execution
+    // ---------------------------------------------------------------
+
+    /// Quantized serial execution over an i8 packed layout: `xq` is the
+    /// u8-coded input `[K, N]` (see [`crate::quant::quantize_activations`]),
+    /// `qx` its quantization parameters, `gather` gemv gather scratch of
+    /// at least `max_width` bytes (untouched when `n > 1`). The i32
+    /// accumulation is exact, so scalar and SIMD backends are
+    /// bit-identical; the requantize epilogue fuses `ep`'s bias and
+    /// activation into the f32 store.
+    ///
+    /// Callers route shapes the i8 layout cannot serve (`n == 1` on a
+    /// non-row-major packing, no packing at all) through the f32 path —
+    /// `self.enc` keeps the original f32 values for exactly that.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_i8_into_ep(
+        &self,
+        xq: &[u8],
+        n: usize,
+        out: &mut [f32],
+        gather: &mut [u8],
+        qx: QParams,
+        mk: &'static Microkernels,
+        ep: Epilogue<'_>,
+    ) {
+        let p = self.packed.as_ref().expect("quantized execution requires a packed layout");
+        debug_assert_eq!(p.dtype, crate::quant::DType::I8);
+        assert_eq!(xq.len(), self.enc.cols * n, "input length mismatch");
+        assert_eq!(out.len(), self.enc.rows * n, "output length mismatch");
+        let mk = self.resolve(mk);
+        let scale = qx.scale * p.w_scale;
+        let zp = qx.zero_point;
+        let (bias, act) = ep.parts();
+        if n == 1 {
+            debug_assert!(p.row_major, "gemv requires a row-major i8 packing");
+            for gi in 0..p.groups.len() {
+                let g = p.groups[gi];
+                self.packed_span_gemv_i8(
+                    p,
+                    gi,
+                    g.rows_lo as usize,
+                    g.rows_hi as usize,
+                    xq,
+                    out,
+                    gather,
+                    zp,
+                    scale,
+                    bias,
+                    act,
+                    mk,
+                );
+            }
+            return;
+        }
+        let oview = SharedOut::new(out);
+        for gi in 0..p.groups.len() {
+            let g = p.groups[gi];
+            self.packed_span_rows_i8(
+                p,
+                gi,
+                g.rows_lo as usize,
+                g.rows_hi as usize,
+                xq,
+                oview,
+                n,
+                zp,
+                scale,
+                bias,
+                act,
+                mk,
+            );
+        }
+    }
+
+    /// Parallel variant of [`Self::execute_i8_into_ep`] draining the
+    /// kernel's static schedule. Gemv gather staging borrows the
+    /// worker's pool-resident f32 scratch viewed as bytes, so the hot
+    /// path stays allocation-free after each worker's high-water mark.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_i8_parallel_into_ep(
+        &self,
+        xq: &[u8],
+        n: usize,
+        out: &mut [f32],
+        part: &Arc<WorkPartition>,
+        pool: &ThreadPool,
+        qx: QParams,
+        mk: &'static Microkernels,
+        ep: Epilogue<'_>,
+    ) {
+        let p = Arc::clone(self.packed.as_ref().expect("quantized execution requires a packed layout"));
+        debug_assert_eq!(p.dtype, crate::quant::DType::I8);
+        assert_eq!(xq.len(), self.enc.cols * n, "input length mismatch");
+        assert_eq!(out.len(), self.enc.rows * n, "output length mismatch");
+        let mk = self.resolve(mk);
+        debug_assert!(part.validate_covers(&p.groups).is_ok());
+        let scale = qx.scale * p.w_scale;
+        let zp = qx.zero_point;
+        let nb = part.num_buckets();
+        let this = self.clone();
+        let part = Arc::clone(part);
+        let oview = SharedOut::new(out);
+        let xv = SharedSlice::new(xq);
+        let (bias, act) = ep.parts();
+        let bias_view = bias.map(SharedSlice::new);
+        pool.run_partitioned_scratch(nb, move |scratch, _wid, blo, bhi| {
+            // SAFETY: buffers outlive the blocking pool call; buckets
+            // partition the reordered rows and reorder is a bijection, so
+            // written original rows never collide across workers.
+            let xq = unsafe { xv.get() };
+            let bias = bias_view.as_ref().map(|v| unsafe { v.get() });
+            if n == 1 {
+                let glen = crate::quant::f32_slots_for_bytes(p.max_width);
+                if scratch.len() < glen {
+                    scratch.resize(glen, 0.0);
+                }
+                let gat = crate::quant::as_u8_mut(&mut scratch[..glen]);
+                let od = unsafe { oview.range_mut(0, oview.len()) };
+                for b in blo..bhi {
+                    for s in &part.buckets[b] {
+                        this.packed_span_gemv_i8(
+                            &p,
+                            s.group as usize,
+                            s.lo as usize,
+                            s.hi as usize,
+                            xq,
+                            od,
+                            &mut gat[..p.max_width],
+                            zp,
+                            scale,
+                            bias,
+                            act,
+                            mk,
+                        );
+                    }
+                }
+            } else {
+                for b in blo..bhi {
+                    for s in &part.buckets[b] {
+                        this.packed_span_rows_i8(
+                            &p,
+                            s.group as usize,
+                            s.lo as usize,
+                            s.hi as usize,
+                            xq,
+                            oview,
+                            n,
+                            zp,
+                            scale,
+                            bias,
+                            act,
+                            mk,
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    /// Quantized rows `lo..hi` of packed group `gi` for `n > 1`, with the
+    /// loop order *inverted* relative to [`Self::packed_span_rows`]:
+    /// row-panel outer, K blocks inner, so each panel's i32 C tile lives
+    /// on the stack across the group's whole width and the requantize
+    /// epilogue runs exactly once per output element. The value stream is
+    /// still traversed panel-contiguously within each K block
+    /// (`pb = val_off + kb_lo·rows + ro·kl`, the same interleave
+    /// `for_each_panel` walks).
+    #[allow(clippy::too_many_arguments)]
+    fn packed_span_rows_i8(
+        &self,
+        p: &PackedBcrc,
+        gi: usize,
+        lo: usize,
+        hi: usize,
+        xq: &[u8],
+        oview: SharedOut<f32>,
+        n: usize,
+        zp: i32,
+        scale: f32,
+        bias: Option<&[f32]>,
+        act: Act,
+        mk: &'static Microkernels,
+    ) {
+        // The stack C tile bounds the panel height; the quantize pass
+        // only quantizes layouts with mr ≤ 8 (matching every hardware
+        // matrix row), so this never falls back.
+        const ACC_W: usize = 64;
+        let g = p.groups[gi];
+        let glo = g.rows_lo as usize;
+        let rows_g = g.rows();
+        let width = g.width as usize;
+        if width == 0 {
+            // Fully pruned group: every output element is still written
+            // exactly once (acc = 0 ⇒ act(bias)), like the f32 path's
+            // trailing epilogue pass.
+            for r in lo..hi {
+                let dst = p.reorder[r] as usize;
+                let b = bias.map_or(0.0, |bs| bs[dst]);
+                let orow = unsafe { oview.range_mut(dst * n, (dst + 1) * n) };
+                for slot in orow.iter_mut() {
+                    *slot = crate::quant::requantize(0, 0, zp, scale, b, act);
+                }
+            }
+            return;
+        }
+        let cols = p.group_cols(gi);
+        let vals = p.values_i8.as_i8();
+        let mr = p.shape.mr.max(1);
+        let kc = p.shape.kc.max(1);
+        debug_assert!(mr <= 8, "i8 quantization requires mr ≤ 8");
+        let s_lo = lo - glo;
+        let s_hi = hi - glo;
+        debug_assert_eq!(s_lo % mr, 0, "span start must be panel-aligned");
+        let mut acc = [0i32; 8 * ACC_W];
+        for jc in (0..n).step_by(ACC_W) {
+            let je = (jc + ACC_W).min(n);
+            let jl = je - jc;
+            let mut ro = s_lo;
+            while ro < s_hi {
+                let h = mr.min(rows_g - ro).min(s_hi - ro);
+                let tile = &mut acc[..h * jl];
+                tile.fill(0);
+                let mut kb_lo = 0usize;
+                while kb_lo < width {
+                    let kl = kc.min(width - kb_lo);
+                    let pb = g.val_off + kb_lo * rows_g + ro * kl;
+                    let ct = match cols {
+                        ColsRef::U16 { base, deltas } => {
+                            ColsTile::U16 { base, deltas: &deltas[kb_lo..kb_lo + kl] }
+                        }
+                        ColsRef::U32(c) => ColsTile::U32(&c[kb_lo..kb_lo + kl]),
+                    };
+                    (mk.panel_i8)(tile, h, &vals[pb..pb + kl * h], kl, xq, n, jc, je, &ct);
+                    kb_lo += kl;
+                }
+                for u in 0..h {
+                    let r = glo + ro + u;
+                    let dst = p.reorder[r] as usize;
+                    let wsum_r = p.wsum[r];
+                    let b = bias.map_or(0.0, |bs| bs[dst]);
+                    // SAFETY: this worker owns reordered rows lo..hi and
+                    // reorder is a bijection, so dst rows never collide.
+                    let orow = unsafe { oview.range_mut(dst * n + jc, dst * n + je) };
+                    for (j, slot) in orow.iter_mut().enumerate() {
+                        *slot =
+                            crate::quant::requantize(tile[u * jl + j], wsum_r, zp, scale, b, act);
+                    }
+                }
+                ro += h;
+            }
+        }
+    }
+
+    /// Quantized GEMV over a row-major packed span: gather the group's
+    /// signature codes once, then contiguous-row i8 dot products with the
+    /// requantize epilogue applied per output element.
+    #[allow(clippy::too_many_arguments)]
+    fn packed_span_gemv_i8(
+        &self,
+        p: &PackedBcrc,
+        gi: usize,
+        lo: usize,
+        hi: usize,
+        xq: &[u8],
+        out: &mut [f32],
+        gather: &mut [u8],
+        zp: i32,
+        scale: f32,
+        bias: Option<&[f32]>,
+        act: Act,
+        mk: &'static Microkernels,
+    ) {
+        let g = p.groups[gi];
+        let glo = g.rows_lo as usize;
+        let width = g.width as usize;
+        let cols = p.group_cols(gi);
+        let xg = &mut gather[..width];
+        for (i, slot) in xg.iter_mut().enumerate() {
+            *slot = xq[cols.at(i)];
+        }
+        for r in lo..hi {
+            let dst = p.reorder[r] as usize;
+            let acc = (mk.dot_i8)(p.row_values_i8(gi, r - glo), xg);
+            let b = bias.map_or(0.0, |bs| bs[dst]);
+            out[dst] = crate::quant::requantize(acc, p.wsum[r], zp, scale, b, act);
+        }
+    }
+
     /// Compute reordered rows `lo..hi`, writing each row directly to its
     /// original position (`reorder[r]`) in the shared output.
     #[allow(clippy::too_many_arguments)]
@@ -1084,6 +1374,75 @@ mod tests {
             // No schedule: the encode-order fallback is still exact.
             let fallback = packed.execute_parallel(&x, &pool);
             assert_eq!(serial.data(), fallback.data(), "fallback threads={threads}");
+        }
+    }
+
+    /// Quantized execution: (a) tracks the f32 packed path within the
+    /// analytic per-element quantization error bound; (b) scalar and
+    /// dispatched SIMD backends are bit-identical (integer accumulation
+    /// is exact); (c) serial and parallel are bit-identical.
+    #[test]
+    fn quantized_i8_tracks_f32_and_is_deterministic() {
+        use crate::quant;
+        for (seed, m, k, n) in [(91u64, 48, 96, 24), (92, 64, 128, 1), (93, 32, 64, 7)] {
+            let (_, enc) = setup(seed, m, k, 5.0);
+            let params = GemmParams::default();
+            let (packed_f32, part) = packed_for(&enc, params, n, 3);
+            let q = Arc::new(packed_f32.packed.as_ref().unwrap().quantize_i8());
+            let gq = BcrcGemm::new(enc.clone(), params).with_packed(Arc::clone(&q));
+            let mut rng = Rng::new(seed + 7000);
+            let x = Tensor::rand_uniform(&[k, n], 1.0, &mut rng);
+            let bias: Vec<f32> = (0..m).map(|i| 0.02 * i as f32 - 0.3).collect();
+
+            let mut want = vec![0.0f32; m * n];
+            let mut gather = vec![0.0f32; enc.max_group_cols()];
+            packed_f32.execute_into_ep(x.data(), n, &mut want, &mut gather, simd::active(),
+                Epilogue::BiasRelu(&bias));
+
+            let (lo, hi) = quant::minmax(x.data());
+            let qx = quant::choose_qparams(lo, hi);
+            let mut xq = vec![0u8; k * n];
+            quant::quantize_activations(x.data(), qx, &mut xq);
+            let mut got = vec![0.0f32; m * n];
+            let mut gat8 = vec![0u8; q.max_width];
+            gq.execute_i8_into_ep(&xq, n, &mut got, &mut gat8, qx, simd::active(),
+                Epilogue::BiasRelu(&bias));
+
+            // Per-element bound: each of the ≤ max_width products errs by
+            // at most wmax·s_x/2 + xmax·s_w/2 + s_w·s_x/4 (weight code
+            // error ≤ s_w/2, activation code error ≤ s_x/2); ReLU only
+            // shrinks differences. Small slack covers the f32 requantize
+            // arithmetic itself.
+            let (sw, sx) = (q.w_scale, qx.scale);
+            let wmax = 127.0 * sw;
+            let xmax = lo.abs().max(hi.abs());
+            let bound =
+                q.max_width as f32 * (wmax * sx / 2.0 + xmax * sw / 2.0 + sw * sx / 4.0) * 1.05
+                    + 1e-4;
+            for i in 0..m * n {
+                assert!(
+                    (got[i] - want[i]).abs() <= bound,
+                    "seed {seed} i={i}: {} vs {} (bound {bound})",
+                    got[i],
+                    want[i]
+                );
+            }
+
+            // Scalar backend: exact i32 accumulation ⇒ bit-identical.
+            let gq_sc = BcrcGemm::new(enc.clone(), GemmParams { simd: false, ..params })
+                .with_packed(Arc::clone(&q));
+            let mut got_sc = vec![0.0f32; m * n];
+            gq_sc.execute_i8_into_ep(&xq, n, &mut got_sc, &mut gat8, qx, simd::active(),
+                Epilogue::BiasRelu(&bias));
+            assert_eq!(got, got_sc, "seed {seed}: scalar vs simd must be bit-identical");
+
+            // Parallel: same schedule the f32 layout used (quantization
+            // preserves groups), same bits.
+            let pool = ThreadPool::new(3);
+            let mut par = vec![0.0f32; m * n];
+            gq.execute_i8_parallel_into_ep(&xq, n, &mut par, &part, &pool, qx, simd::active(),
+                Epilogue::BiasRelu(&bias));
+            assert_eq!(got, par, "seed {seed}: serial vs parallel must be bit-identical");
         }
     }
 

@@ -41,6 +41,7 @@ use crate::gemm::bcrc_gemm::GemmParams;
 use crate::gemm::simd::HwConfig;
 use crate::gemm::tiled::TileParams;
 use crate::memory::aligned::AlignedBuf;
+use crate::quant::DType;
 use crate::sparse::packed::{PackShape, PackedBcrc, WorkPartition};
 use crate::sparse::Bcrc;
 use crate::tensor::Tensor;
@@ -245,6 +246,11 @@ pub struct PackedDense {
     /// Column block width (the TileParams `kc` at pack time).
     pub kc: usize,
     pub values: AlignedBuf,
+    /// Value element type. Dense packing currently always stores f32
+    /// (the quantized path covers sparse BCRC kernels only); the field
+    /// exists so the `.grimc` v5 grammar carries a dtype per packed
+    /// section uniformly.
+    pub dtype: DType,
 }
 
 impl PackedDense {
@@ -267,7 +273,7 @@ impl PackedDense {
                 }
             }
         });
-        PackedDense { m, k, mr, kc, values }
+        PackedDense { m, k, mr, kc, values, dtype: DType::F32 }
     }
 
     pub fn num_panels(&self) -> usize {

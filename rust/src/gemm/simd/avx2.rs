@@ -23,6 +23,8 @@ pub static KERNELS: Microkernels = Microkernels {
     dot: dot_s,
     bias_act: bias_act_s,
     tile: &super::tile_avx2::TILE,
+    panel_i8: super::tile_i8_avx2::panel_i8_s,
+    dot_i8: super::tile_i8_avx2::dot_i8_s,
 };
 
 pub(super) fn axpy_1_s(acc: &mut [f32], wv: f32, xrow: &[f32]) {

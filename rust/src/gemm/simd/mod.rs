@@ -42,11 +42,17 @@ pub mod tile;
 mod tile_avx2;
 #[cfg(target_arch = "x86_64")]
 mod tile_avx512;
+pub mod tile_i8;
+#[cfg(target_arch = "x86_64")]
+mod tile_i8_avx2;
+#[cfg(target_arch = "aarch64")]
+mod tile_i8_neon;
 #[cfg(target_arch = "aarch64")]
 mod tile_neon;
 
 pub use hw::{HwConfig, Isa};
 pub use tile::{force_axpy, ColsTile, RegTile};
+pub use tile_i8::{DotI8Fn, PanelI8Fn};
 
 use super::microkernel;
 use std::sync::OnceLock;
@@ -78,6 +84,12 @@ pub struct Microkernels {
     /// Register-tiled panel kernel (the default packed inner loop;
     /// `GRIM_FORCE_AXPY=1` falls back to the axpy entries above).
     pub tile: &'static RegTile,
+    /// Quantized panel kernel: i8 weight codes × u8 activation codes
+    /// accumulated into a caller-held i32 tile (exact across backends;
+    /// see [`tile_i8`]).
+    pub panel_i8: PanelI8Fn,
+    /// Quantized GEMV inner product (row-major i8 weights).
+    pub dot_i8: DotI8Fn,
 }
 
 impl std::fmt::Debug for Microkernels {
@@ -127,6 +139,8 @@ static SCALAR: Microkernels = Microkernels {
     dot: microkernel::dot,
     bias_act: scalar_bias_act,
     tile: &tile::SCALAR,
+    panel_i8: tile_i8::panel_i8_scalar,
+    dot_i8: tile_i8::dot_i8_scalar,
 };
 
 /// The always-available scalar table (auto-vectorized inner loops).

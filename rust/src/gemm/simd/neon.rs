@@ -21,6 +21,8 @@ pub static KERNELS: Microkernels = Microkernels {
     dot: dot_s,
     bias_act: bias_act_s,
     tile: &super::tile_neon::TILE,
+    panel_i8: super::tile_i8_neon::panel_i8_s,
+    dot_i8: super::tile_i8_neon::dot_i8_s,
 };
 
 fn axpy_1_s(acc: &mut [f32], wv: f32, xrow: &[f32]) {

@@ -24,6 +24,10 @@ pub static KERNELS: Microkernels = Microkernels {
     dot: super::avx2::dot_s,
     bias_act: super::avx2::bias_act_s,
     tile: &TILE,
+    // The i8 path is 256-bit everywhere (mullo_epi32 throughput is flat
+    // across ymm/zmm on current cores); reuse the AVX2 entries.
+    panel_i8: super::tile_i8_avx2::panel_i8_s,
+    dot_i8: super::tile_i8_avx2::dot_i8_s,
 };
 
 pub static TILE: RegTile =

@@ -1,0 +1,135 @@
+//! Quantized (i8 × u8 → i32) panel microkernels: the vtable shape and
+//! the scalar reference implementation.
+//!
+//! The quantized BCRC path keeps the f32 layout's kc×mr value panels but
+//! stores i8 weight codes and streams u8 activation codes; every product
+//! accumulates into an i32 C tile held by the caller, and the requantize
+//! epilogue (see [`crate::quant::requantize`]) converts back to f32 once
+//! per output element. Because integer multiply-accumulate is exact,
+//! every backend of [`PanelI8Fn`] / [`DotI8Fn`] must produce
+//! **bit-identical** i32 accumulators — there is no rounding contract to
+//! relax, and `tests/ukernel_parity` asserts exact equality rather than
+//! a tolerance.
+//!
+//! All arithmetic is wrapping: a saturating or UB-on-overflow lane would
+//! break scalar↔SIMD parity in debug builds long before an accumulator
+//! could plausibly wrap in practice (127 · 255 · k fits i32 for any
+//! k ≤ 66 000 columns).
+
+use super::tile::ColsTile;
+
+/// One quantized panel invocation. Accumulates (never stores final
+/// output — the caller owns the requantize epilogue):
+///
+/// * `acc` — the caller's i32 C tile, row-major `h × (je - jc)`;
+///   `acc[u * (je - jc) + (j - jc)]` is panel row `u`, output column `j`.
+/// * `vals` — the panel's packed i8 codes, `vals[kk * h + u]` the weight
+///   of panel row `u` at panel column `kk`, `kk < kl` (same interleave
+///   as the f32 [`super::tile::PanelFn`]).
+/// * `xq` — the quantized input matrix (row-major u8 codes, leading
+///   dimension `n`); the X tile for panel column `kk` spans
+///   `xq[cols.at(kk) * n + jc .. cols.at(kk) * n + je]`.
+pub type PanelI8Fn = fn(
+    acc: &mut [i32],
+    h: usize,
+    vals: &[i8],
+    kl: usize,
+    xq: &[u8],
+    n: usize,
+    jc: usize,
+    je: usize,
+    cols: &ColsTile<'_>,
+);
+
+/// Quantized GEMV inner product: `Σ w[i] as i32 * x[i] as i32` with
+/// wrapping accumulation (the row-major i8 layout stores one row's codes
+/// contiguously, mirroring the f32 `dot` entry).
+pub type DotI8Fn = fn(&[i8], &[u8]) -> i32;
+
+#[allow(clippy::too_many_arguments)]
+pub fn panel_i8_scalar(
+    acc: &mut [i32],
+    h: usize,
+    vals: &[i8],
+    kl: usize,
+    xq: &[u8],
+    n: usize,
+    jc: usize,
+    je: usize,
+    cols: &ColsTile<'_>,
+) {
+    let jl = je - jc;
+    debug_assert!(acc.len() >= h * jl);
+    debug_assert!(vals.len() >= kl * h);
+    for kk in 0..kl {
+        let c = cols.at(kk);
+        let x = &xq[c * n + jc..c * n + je];
+        for u in 0..h {
+            let w = vals[kk * h + u] as i32;
+            let row = &mut acc[u * jl..u * jl + jl];
+            for (av, xv) in row.iter_mut().zip(x) {
+                *av = av.wrapping_add(w.wrapping_mul(*xv as i32));
+            }
+        }
+    }
+}
+
+pub fn dot_i8_scalar(w: &[i8], x: &[u8]) -> i32 {
+    debug_assert_eq!(w.len(), x.len());
+    let mut s = 0i32;
+    for (wv, xv) in w.iter().zip(x) {
+        s = s.wrapping_add((*wv as i32).wrapping_mul(*xv as i32));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_codes(rng: &mut Rng, n: usize) -> (Vec<i8>, Vec<u8>) {
+        let w: Vec<i8> = (0..n).map(|_| (rng.next_u64() as i8).max(-127)).collect();
+        let x: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        (w, x)
+    }
+
+    #[test]
+    fn scalar_dot_i8_matches_i64_reference() {
+        let mut rng = Rng::new(0x1808);
+        for len in [0usize, 1, 7, 8, 9, 31, 32, 33, 257] {
+            let (w, x) = rand_codes(&mut rng, len);
+            let want: i64 = w.iter().zip(&x).map(|(a, b)| *a as i64 * *b as i64).sum();
+            assert_eq!(dot_i8_scalar(&w, &x) as i64, want, "len {len}");
+        }
+    }
+
+    /// The dispatched table's i8 entries must be *bit-identical* to the
+    /// scalar reference (integer MAC is exact — no tolerance).
+    #[test]
+    fn dispatched_i8_entries_match_scalar_exactly() {
+        let mk = super::super::detect();
+        let mut rng = Rng::new(0x1809);
+        for len in [1usize, 5, 8, 13, 16, 17, 40, 100] {
+            let (w, x) = rand_codes(&mut rng, len);
+            assert_eq!((mk.dot_i8)(&w, &x), dot_i8_scalar(&w, &x), "dot len {len}");
+        }
+        for h in [1usize, 2, 4, 7, 8] {
+            for kl in [1usize, 2, 5] {
+                for jl in [1usize, 3, 7, 8, 9, 16, 17, 33] {
+                    let n = jl + 2;
+                    let k = kl + 1;
+                    let (vals, _) = rand_codes(&mut rng, kl * h);
+                    let xq: Vec<u8> = (0..k * n).map(|_| rng.next_u64() as u8).collect();
+                    let cols_raw: Vec<u32> = (0..kl as u32).collect();
+                    let cols = ColsTile::U32(&cols_raw);
+                    let mut a = vec![7i32; h * jl];
+                    let mut b = a.clone();
+                    (mk.panel_i8)(&mut a, h, &vals, kl, &xq, n, 1, 1 + jl, &cols);
+                    panel_i8_scalar(&mut b, h, &vals, kl, &xq, n, 1, 1 + jl, &cols);
+                    assert_eq!(a, b, "panel h={h} kl={kl} jl={jl}");
+                }
+            }
+        }
+    }
+}

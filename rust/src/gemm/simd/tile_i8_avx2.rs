@@ -1,0 +1,122 @@
+//! AVX2 quantized panel kernel: 8 i32 lanes per vector, u8 codes widened
+//! with `cvtepu8_epi32` and multiplied with `mullo_epi32`.
+//!
+//! Deliberately NOT `maddubs`: `_mm256_maddubs_epi16` pairs adjacent
+//! lanes and **saturates** the i16 intermediate, so its result can
+//! diverge from the scalar i32 accumulation (e.g. two 127·255 products
+//! in one pair exceed i16::MAX). The widen-multiply-add sequence used
+//! here is exact, which keeps every backend's i32 accumulator
+//! bit-identical to [`super::tile_i8`]'s scalar reference — the property
+//! `tests/ukernel_parity` asserts with `assert_eq`.
+
+use super::tile::ColsTile;
+use std::arch::x86_64::*;
+
+#[allow(clippy::too_many_arguments)]
+pub(super) fn panel_i8_s(
+    acc: &mut [i32],
+    h: usize,
+    vals: &[i8],
+    kl: usize,
+    xq: &[u8],
+    n: usize,
+    jc: usize,
+    je: usize,
+    cols: &ColsTile<'_>,
+) {
+    // SAFETY: table handed out only after AVX2 runtime detection.
+    unsafe { panel_i8(acc, h, vals, kl, xq, n, jc, je, cols) }
+}
+
+pub(super) fn dot_i8_s(w: &[i8], x: &[u8]) -> i32 {
+    // SAFETY: as above.
+    unsafe { dot_i8(w, x) }
+}
+
+/// Widen 8 u8 codes starting at `p` to 8 i32 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn load_u8x8_as_i32(p: *const u8) -> __m256i {
+    _mm256_cvtepu8_epi32(_mm_loadl_epi64(p.cast()))
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn panel_i8(
+    acc: &mut [i32],
+    h: usize,
+    vals: &[i8],
+    kl: usize,
+    xq: &[u8],
+    n: usize,
+    jc: usize,
+    je: usize,
+    cols: &ColsTile<'_>,
+) {
+    let jl = je - jc;
+    debug_assert!(acc.len() >= h * jl);
+    debug_assert!(vals.len() >= kl * h);
+    let ap = acc.as_mut_ptr();
+    let xp = xq.as_ptr();
+    for kk in 0..kl {
+        let x = xp.add(cols.at(kk) * n + jc);
+        for u in 0..h {
+            let w = vals[kk * h + u] as i32;
+            let wb = _mm256_set1_epi32(w);
+            let row = ap.add(u * jl);
+            let mut j = 0usize;
+            while j + 8 <= jl {
+                let xv = load_u8x8_as_i32(x.add(j));
+                let av = _mm256_loadu_si256(row.add(j).cast());
+                let prod = _mm256_mullo_epi32(wb, xv);
+                _mm256_storeu_si256(row.add(j).cast(), _mm256_add_epi32(av, prod));
+                j += 8;
+            }
+            while j < jl {
+                let a = row.add(j);
+                *a = (*a).wrapping_add(w.wrapping_mul(*x.add(j) as i32));
+                j += 1;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8(w: &[i8], x: &[u8]) -> i32 {
+    debug_assert_eq!(w.len(), x.len());
+    let n = w.len();
+    let pw = w.as_ptr();
+    let px = x.as_ptr();
+    let mut s0 = _mm256_setzero_si256();
+    let mut s1 = _mm256_setzero_si256();
+    let mut j = 0usize;
+    while j + 16 <= n {
+        let w0 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(pw.add(j).cast()));
+        let w1 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(pw.add(j + 8).cast()));
+        let x0 = load_u8x8_as_i32(px.add(j));
+        let x1 = load_u8x8_as_i32(px.add(j + 8));
+        s0 = _mm256_add_epi32(s0, _mm256_mullo_epi32(w0, x0));
+        s1 = _mm256_add_epi32(s1, _mm256_mullo_epi32(w1, x1));
+        j += 16;
+    }
+    while j + 8 <= n {
+        let w0 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(pw.add(j).cast()));
+        let x0 = load_u8x8_as_i32(px.add(j));
+        s0 = _mm256_add_epi32(s0, _mm256_mullo_epi32(w0, x0));
+        j += 8;
+    }
+    let s = _mm256_add_epi32(s0, s1);
+    // Horizontal reduce: 8 i32 lanes -> 1 (integer adds wrap, matching
+    // the scalar wrapping_add chain exactly).
+    let hi = _mm256_extracti128_si256(s, 1);
+    let lo = _mm256_castsi256_si128(s);
+    let q = _mm_add_epi32(lo, hi);
+    let d = _mm_add_epi32(q, _mm_shuffle_epi32(q, 0b00_00_11_10));
+    let r = _mm_add_epi32(d, _mm_shuffle_epi32(d, 0b00_00_00_01));
+    let mut acc = _mm_cvtsi128_si32(r);
+    while j < n {
+        acc = acc.wrapping_add((*pw.add(j) as i32).wrapping_mul(*px.add(j) as i32));
+        j += 1;
+    }
+    acc
+}

@@ -1,0 +1,112 @@
+//! NEON quantized panel kernel: u8 codes widened with `vmovl` (u8 → u16
+//! → u32) and accumulated with `vmlaq_s32` — 4 i32 lanes per vector,
+//! two vectors per 8-code step.
+//!
+//! As in the AVX2 backend, no saturating pairwise-multiply idiom
+//! (`vqdmull`/`sdot`-style shortcuts) is used: integer widen-multiply-
+//! accumulate is exact and keeps the i32 accumulator bit-identical to
+//! [`super::tile_i8`]'s scalar reference across backends.
+
+use super::tile::ColsTile;
+use std::arch::aarch64::*;
+
+#[allow(clippy::too_many_arguments)]
+pub(super) fn panel_i8_s(
+    acc: &mut [i32],
+    h: usize,
+    vals: &[i8],
+    kl: usize,
+    xq: &[u8],
+    n: usize,
+    jc: usize,
+    je: usize,
+    cols: &ColsTile<'_>,
+) {
+    // SAFETY: NEON is baseline on aarch64 (and detect() re-checks).
+    unsafe { panel_i8(acc, h, vals, kl, xq, n, jc, je, cols) }
+}
+
+pub(super) fn dot_i8_s(w: &[i8], x: &[u8]) -> i32 {
+    // SAFETY: as above.
+    unsafe { dot_i8(w, x) }
+}
+
+/// Widen 8 u8 codes at `p` to two s32x4 vectors (low, high).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn load_u8x8_as_i32x2(p: *const u8) -> (int32x4_t, int32x4_t) {
+    let wide = vmovl_u8(vld1_u8(p));
+    let lo = vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(wide)));
+    let hi = vreinterpretq_s32_u32(vmovl_u16(vget_high_u16(wide)));
+    (lo, hi)
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn panel_i8(
+    acc: &mut [i32],
+    h: usize,
+    vals: &[i8],
+    kl: usize,
+    xq: &[u8],
+    n: usize,
+    jc: usize,
+    je: usize,
+    cols: &ColsTile<'_>,
+) {
+    let jl = je - jc;
+    debug_assert!(acc.len() >= h * jl);
+    debug_assert!(vals.len() >= kl * h);
+    let ap = acc.as_mut_ptr();
+    let xp = xq.as_ptr();
+    for kk in 0..kl {
+        let x = xp.add(cols.at(kk) * n + jc);
+        for u in 0..h {
+            let w = vals[kk * h + u] as i32;
+            let wb = vdupq_n_s32(w);
+            let row = ap.add(u * jl);
+            let mut j = 0usize;
+            while j + 8 <= jl {
+                let (x0, x1) = load_u8x8_as_i32x2(x.add(j));
+                let a0 = vmlaq_s32(vld1q_s32(row.add(j)), wb, x0);
+                let a1 = vmlaq_s32(vld1q_s32(row.add(j + 4)), wb, x1);
+                vst1q_s32(row.add(j), a0);
+                vst1q_s32(row.add(j + 4), a1);
+                j += 8;
+            }
+            while j < jl {
+                let a = row.add(j);
+                *a = (*a).wrapping_add(w.wrapping_mul(*x.add(j) as i32));
+                j += 1;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_i8(w: &[i8], x: &[u8]) -> i32 {
+    debug_assert_eq!(w.len(), x.len());
+    let n = w.len();
+    let pw = w.as_ptr();
+    let px = x.as_ptr();
+    let mut s0 = vdupq_n_s32(0);
+    let mut s1 = vdupq_n_s32(0);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let wide = vmovl_s8(vld1_s8(pw.add(j)));
+        let w0 = vmovl_s16(vget_low_s16(wide));
+        let w1 = vmovl_s16(vget_high_s16(wide));
+        let (x0, x1) = load_u8x8_as_i32x2(px.add(j));
+        s0 = vmlaq_s32(s0, w0, x0);
+        s1 = vmlaq_s32(s1, w1, x1);
+        j += 8;
+    }
+    // vaddvq wraps like the hardware adds feeding it, matching the
+    // scalar wrapping_add chain exactly.
+    let mut acc = vaddvq_s32(vaddq_s32(s0, s1));
+    while j < n {
+        acc = acc.wrapping_add((*pw.add(j) as i32).wrapping_mul(*px.add(j) as i32));
+        j += 1;
+    }
+    acc
+}

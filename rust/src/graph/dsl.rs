@@ -246,6 +246,7 @@ fn parse_ir(rest: &str) -> anyhow::Result<LayerIr> {
             "simd" => ir.simd = v.parse()?,
             "reorder" => ir.reorder = v.parse()?,
             "format" => ir.format = StorageFormat::parse(v)?,
+            "dtype" => ir.dtype = crate::quant::DType::parse(v)?,
             other => anyhow::bail!("unknown @ir key '{other}'"),
         }
     }

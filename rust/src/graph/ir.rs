@@ -58,6 +58,10 @@ pub struct LayerIr {
     pub reorder: bool,
     // -- basic information --
     pub format: StorageFormat,
+    /// Served value type the layer requests (`i8` asks the quantize
+    /// pass for post-training int8 codes; the pass still applies its
+    /// own eligibility rules — packed BCRC only). `f32` by default.
+    pub dtype: crate::quant::DType,
 }
 
 impl LayerIr {
@@ -73,6 +77,7 @@ impl LayerIr {
             simd: true,
             reorder: true,
             format: if rate > 1.0 { StorageFormat::Bcrc } else { StorageFormat::Dense },
+            dtype: crate::quant::DType::F32,
         }
     }
 
@@ -84,7 +89,7 @@ impl LayerIr {
     /// Serialize as a DSL `@ir` pragma line.
     pub fn to_dsl(&self) -> String {
         format!(
-            "@ir {} {{ block_size=[{},{}]; rate={}; unroll={}; tile={}; lre={}; simd={}; reorder={}; format={} }}",
+            "@ir {} {{ block_size=[{},{}]; rate={}; unroll={}; tile={}; lre={}; simd={}; reorder={}; format={}; dtype={} }}",
             self.layer,
             self.block_size[0],
             self.block_size[1],
@@ -94,7 +99,8 @@ impl LayerIr {
             self.lre,
             self.simd,
             self.reorder,
-            self.format.as_str()
+            self.format.as_str(),
+            self.dtype.as_str()
         )
     }
 }

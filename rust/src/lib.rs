@@ -63,6 +63,7 @@ pub mod memory;
 pub mod tuner;
 pub mod blockopt;
 pub mod models;
+pub mod quant;
 pub mod exec;
 pub mod engine;
 pub mod artifact;

@@ -70,8 +70,10 @@ fn usage() {
 USAGE: grim <command> [--flag value ...]
 
 COMMANDS:
-  compile  --model vgg16 --preset cifar-mini --rate 8 -o vgg.grimc [--cache generic|native]
-           AOT-compile to a .grimc artifact (cache blocking for the generic mobile target by default)
+  compile  --model vgg16 --preset cifar-mini --rate 8 -o vgg.grimc [--cache generic|native] [--dtype f32|i8]
+           AOT-compile to a .grimc artifact (cache blocking for the generic mobile target by default);
+           --dtype i8 post-training-quantizes every packed BCRC layer (i8 codes, s32 accumulation,
+           fused requantize epilogue at serve time)
   serve    --model vgg16 --preset cifar-mini --rate 8 --threads 8 --requests 64 --batch 8
   serve    --models dir/ [--budget-mb 256] [--threads 8] [--quota m=2,m2=4] [--batch-for m=1] --requests 64
            multi-model registry of .grimc files on ONE shared runtime (per-model quotas + batch policies)
@@ -219,6 +221,7 @@ fn cmd_compile(f: &Flags) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown --cache '{other}' (generic|native)"),
     };
     copts.pack.hw = grim::gemm::HwConfig::for_kernels(grim::gemm::simd::active(), cache);
+    copts.dtype = grim::quant::DType::parse(&flag(f, "dtype", "f32".to_string()))?;
     let plan = compile(&module, &weights, copts)?;
     let out = f
         .get("out")

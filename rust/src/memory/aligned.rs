@@ -57,6 +57,64 @@ impl std::fmt::Debug for AlignedBuf {
     }
 }
 
+/// One 64-byte cache line of bytes — the i8 allocation grain.
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct LineU8([u8; 64]);
+
+/// A heap byte buffer whose base address is 64-byte aligned: the
+/// [`AlignedBuf`] analog for quantized (i8) packed weight values.
+#[derive(Clone)]
+pub struct AlignedBytes {
+    lines: Vec<LineU8>,
+    len: usize,
+}
+
+impl AlignedBytes {
+    /// Allocate `len` zeroed bytes (rounded up internally to whole
+    /// cache lines).
+    pub fn zeroed(len: usize) -> Self {
+        AlignedBytes { lines: vec![LineU8([0; 64]); len.div_ceil(64)], len }
+    }
+
+    /// Number of bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: `LineU8` is `repr(C)` over `[u8; 64]`, so the line
+        // array is a contiguous, properly-aligned run of >= `len` bytes.
+        unsafe { std::slice::from_raw_parts(self.lines.as_ptr().cast::<u8>(), self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        // SAFETY: as in `as_slice`; `&mut self` gives unique access.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr().cast::<u8>(), self.len) }
+    }
+
+    /// The same storage viewed as i8 (packed quantized weight codes).
+    pub fn as_i8(&self) -> &[i8] {
+        // SAFETY: u8 and i8 have identical layout and no invalid values.
+        unsafe { std::slice::from_raw_parts(self.lines.as_ptr().cast::<i8>(), self.len) }
+    }
+
+    pub fn as_i8_mut(&mut self) -> &mut [i8] {
+        // SAFETY: as in `as_i8`; `&mut self` gives unique access.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr().cast::<i8>(), self.len) }
+    }
+}
+
+impl std::fmt::Debug for AlignedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBytes({} B)", self.len)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +145,18 @@ mod tests {
         let b = AlignedBuf::zeroed(0);
         assert!(b.is_empty());
         assert_eq!(b.as_slice().len(), 0);
+    }
+
+    #[test]
+    fn bytes_aligned_and_round_trip() {
+        for len in [1usize, 63, 64, 65, 1000] {
+            let mut b = AlignedBytes::zeroed(len);
+            assert_eq!(b.as_slice().as_ptr() as usize % 64, 0, "len {len}");
+            assert_eq!(b.len(), len);
+            b.as_i8_mut()[len - 1] = -5;
+            assert_eq!(b.as_i8()[len - 1], -5);
+            assert_eq!(b.as_slice()[len - 1], (-5i8) as u8);
+        }
+        assert!(AlignedBytes::zeroed(0).is_empty());
     }
 }

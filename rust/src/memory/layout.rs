@@ -20,14 +20,35 @@ pub fn kernel_gather_len(kernel: &KernelImpl) -> usize {
     }
 }
 
+/// Elements (f32 slots) of quantization scratch a kernel needs per
+/// execution at GEMM width `n`: the u8 activation-code matrix
+/// (`K · n` bytes) plus, on the gemv path, the u8 signature gather
+/// (`max_width` bytes), both byte regions viewed through
+/// [`crate::quant::as_u8_mut`]. Zero for every f32 kernel.
+pub fn kernel_quant_len(kernel: &KernelImpl, n: usize) -> usize {
+    match kernel {
+        KernelImpl::Bcrc { gemm } => match gemm.packed.as_deref() {
+            Some(p) if p.dtype == crate::quant::DType::I8 => {
+                let codes = crate::quant::f32_slots_for_bytes(gemm.enc.cols * n);
+                let gather =
+                    if n == 1 { crate::quant::f32_slots_for_bytes(p.max_width) } else { 0 };
+                codes + gather
+            }
+            _ => 0,
+        },
+        _ => 0,
+    }
+}
+
 /// Is this conv the 1×1/stride-1/no-pad case where im2col is the
 /// identity and the input is fed to the GEMM directly?
 pub fn conv_is_identity_im2col(geom: &ConvGeom) -> bool {
     geom.kh == 1 && geom.kw == 1 && geom.stride == 1 && geom.pad == 0
 }
 
-/// Scratch layout of one Conv step: `[im2col columns][gemv gather]`, or
-/// `[winograd input transforms]` for the Winograd baseline.
+/// Scratch layout of one Conv step: `[im2col columns][gemv gather]
+/// [quant codes]`, or `[winograd input transforms]` for the Winograd
+/// baseline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ConvScratch {
     /// im2col column buffer (`gemm_k * gemm_n`); 0 when the conv runs
@@ -39,12 +60,15 @@ pub struct ConvScratch {
     /// only for the Winograd kernel, whose transforms are planned into
     /// the arena like im2col instead of allocated per call.
     pub wino: usize,
+    /// Quantization scratch ([`kernel_quant_len`]); nonzero only for i8
+    /// BCRC kernels.
+    pub quant: usize,
 }
 
 impl ConvScratch {
     pub fn for_step(geom: &ConvGeom, kernel: &KernelImpl) -> ConvScratch {
         if matches!(kernel, KernelImpl::Winograd { .. }) {
-            return ConvScratch { im2col: 0, gather: 0, wino: 16 * geom.in_c };
+            return ConvScratch { im2col: 0, gather: 0, wino: 16 * geom.in_c, quant: 0 };
         }
         let im2col = if conv_is_identity_im2col(geom) {
             0
@@ -52,11 +76,12 @@ impl ConvScratch {
             geom.gemm_k() * geom.gemm_n()
         };
         let gather = if geom.gemm_n() == 1 { kernel_gather_len(kernel) } else { 0 };
-        ConvScratch { im2col, gather, wino: 0 }
+        let quant = kernel_quant_len(kernel, geom.gemm_n());
+        ConvScratch { im2col, gather, wino: 0, quant }
     }
 
     pub fn total(&self) -> usize {
-        self.im2col + self.gather + self.wino
+        self.im2col + self.gather + self.wino + self.quant
     }
 }
 
@@ -110,7 +135,7 @@ impl GruScratch {
 pub fn step_scratch_len(step: &Step, in_dims: Option<&[usize]>) -> usize {
     match step {
         Step::Conv { geom, kernel, .. } => ConvScratch::for_step(geom, kernel).total(),
-        Step::Fc { kernel, .. } => kernel_gather_len(kernel),
+        Step::Fc { kernel, .. } => kernel_gather_len(kernel) + kernel_quant_len(kernel, 1),
         Step::Gru { layers } => {
             let t_len = in_dims.map(|d| d[0]).unwrap_or(0);
             GruScratch::for_layers(layers, t_len).total()

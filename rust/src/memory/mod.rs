@@ -42,7 +42,7 @@ pub mod liveness;
 pub mod planner;
 pub mod workspace;
 
-pub use aligned::AlignedBuf;
+pub use aligned::{AlignedBuf, AlignedBytes};
 pub use liveness::{BufferKind, PlannedBuffer};
 pub use planner::{plan_memory, MemoryPlan};
 pub use workspace::{PoolStats, PooledWorkspace, Workspace, WorkspacePool};

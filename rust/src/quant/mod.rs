@@ -1,0 +1,426 @@
+//! Int8 post-training quantization arithmetic: the value-type axis of
+//! the packed BCRC path (ROADMAP item 3).
+//!
+//! The scheme is the standard mobile-inference recipe (gemmlowp /
+//! TFLite):
+//!
+//! * **Weights** — static symmetric per-tensor int8, chosen at compile
+//!   time from the packed value buffer: `q = round(v / s_w)` clamped to
+//!   `[-127, 127]` with `s_w = maxabs / 127`. Symmetric weights keep the
+//!   kernel free of a weight zero-point term.
+//! * **Activations** — dynamic asymmetric per-tensor u8, chosen at
+//!   execute time from the actual kernel input's min/max (always
+//!   widened to include 0.0, so padding and ReLU zeros are exact):
+//!   `s_x = (hi - lo) / 255`, `zp = round(-lo / s_x)` clamped to
+//!   `[0, 255]`. Dynamic ranges need no calibration pass and track the
+//!   request distribution exactly.
+//! * **Accumulation** — i32. With u8·i8 products bounded by 255·127,
+//!   a K-deep dot product stays under `2^31` for any K this stack
+//!   ships (K·255·127 < 2^31 for K up to ~66 000); the kernels use
+//!   wrapping ops anyway so a hostile K degrades to wrong numbers, not
+//!   a debug-build panic.
+//! * **Requantize** — the asymmetric input folds out algebraically:
+//!   `sum_k w_q[r,k]·(x_q[k] - zp) = acc - zp·wsum[r]` where
+//!   `wsum[r] = sum_k w_q[r,k]` is precomputed per row. The epilogue is
+//!   then one fused f32 multiply: `y = s_x·s_w·(acc - zp·wsum) + bias`,
+//!   followed by the layer's ReLU/ReLU6 clamp.
+//!
+//! Every path (scalar, AVX2, NEON, serial, parallel) funnels its i32
+//! accumulators through the single [`requantize`] below, so scalar-vs-
+//! SIMD bit-parity of the f32 outputs reduces to i32 accumulator
+//! equality — which holds exactly, because i32 addition is associative.
+//!
+//! [`requantize_u8`] + the multiplier helpers cover the pure-integer
+//! variant (store u8 activations without any float math) used when a
+//! consumer wants a float-free pipeline; the serving hot path stores
+//! f32 activations, so it uses the float epilogue above.
+
+use crate::gemm::simd::Act;
+
+/// Value type of a packed weight buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 32-bit float (the default; every pre-v5 artifact).
+    F32,
+    /// Symmetric per-tensor int8 weights, i32 accumulation.
+    I8,
+}
+
+impl Default for DType {
+    fn default() -> Self {
+        DType::F32
+    }
+}
+
+impl DType {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I8 => "i8",
+        }
+    }
+
+    /// `.grimc` v5 on-disk tag.
+    pub fn to_u8(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> anyhow::Result<Self> {
+        Ok(match v {
+            0 => DType::F32,
+            1 => DType::I8,
+            other => anyhow::bail!("unknown dtype tag {other}"),
+        })
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i8" | "int8" => DType::I8,
+            other => anyhow::bail!("unknown dtype '{other}' (f32|i8)"),
+        })
+    }
+
+    /// Bytes per packed weight value.
+    pub fn value_bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// Asymmetric u8 activation quantization parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    /// Step size (`> 0` always — degenerate ranges get 1.0).
+    pub scale: f32,
+    /// u8 code of real 0.0, in `[0, 255]`.
+    pub zero_point: i32,
+}
+
+/// Min/max of a slice, ignoring nothing (NaNs would poison the range,
+/// but upstream activations are finite by the engine's own tests).
+pub fn minmax(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in xs {
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+    }
+    (lo, hi)
+}
+
+/// Choose asymmetric u8 params covering `[lo, hi]`. The range is always
+/// widened to include 0.0 so zero quantizes exactly (padding columns and
+/// post-ReLU zeros contribute nothing, as in f32), and a degenerate
+/// (empty or single-point) range falls back to scale 1.0.
+pub fn choose_qparams(lo: f32, hi: f32) -> QParams {
+    let lo = lo.min(0.0);
+    let hi = hi.max(0.0);
+    let scale = if hi > lo && (hi - lo).is_finite() && hi - lo > 0.0 {
+        let s = (hi - lo) / 255.0;
+        if s > 0.0 && s.is_finite() {
+            s
+        } else {
+            1.0
+        }
+    } else {
+        1.0
+    };
+    let zp = (-lo / scale).round().clamp(0.0, 255.0) as i32;
+    QParams { scale, zero_point: zp }
+}
+
+/// Quantize `xs` into u8 codes with `q`. `out.len() == xs.len()`.
+pub fn quantize_activations(xs: &[f32], q: QParams, out: &mut [u8]) {
+    debug_assert_eq!(xs.len(), out.len());
+    let inv = 1.0 / q.scale;
+    let zp = q.zero_point as f32;
+    for (o, &v) in out.iter_mut().zip(xs) {
+        *o = (v * inv + zp).round().clamp(0.0, 255.0) as u8;
+    }
+}
+
+/// Symmetric per-tensor weight scale from the tensor's max |v|.
+/// A zero tensor gets scale 1.0 (all codes 0, exact).
+pub fn weight_scale(maxabs: f32) -> f32 {
+    if maxabs > 0.0 && maxabs.is_finite() {
+        maxabs / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Quantize one weight value with the symmetric scale.
+pub fn quantize_weight(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// The single requantize every i8 path funnels through: fold out the
+/// activation zero-point via the row's precomputed weight sum, convert
+/// to f32 with one multiply (NOT `mul_add` — a fused multiply here
+/// would make bit-parity depend on which path computed it), add the
+/// bias, clamp.
+#[inline(always)]
+pub fn requantize(acc: i32, wsum_r: i32, zp: i32, scale: f32, bias: f32, act: Act) -> f32 {
+    let corr = acc.wrapping_sub(zp.wrapping_mul(wsum_r));
+    let y = (corr as f32) * scale + bias;
+    match act {
+        Act::None => y,
+        Act::Relu => {
+            if y < 0.0 {
+                0.0
+            } else {
+                y
+            }
+        }
+        Act::Relu6 => y.clamp(0.0, 6.0),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pure-integer requantization (gemmlowp's fixed-point multiply-shift).
+// ---------------------------------------------------------------------
+
+/// Decompose a positive real multiplier `m < 1` into a Q31 fixed-point
+/// multiplier and a right-shift: `m ≈ mult · 2^(-31 - shift)` with
+/// `mult` in `[2^30, 2^31)`. Multipliers ≥ 1 get a negative shift
+/// (left shift), matching gemmlowp's `QuantizeMultiplier`.
+pub fn quantize_multiplier(m: f64) -> (i32, i32) {
+    assert!(m > 0.0 && m.is_finite(), "multiplier must be positive and finite");
+    let (frac, exp) = frexp(m);
+    // frac in [0.5, 1): scale to [2^30, 2^31).
+    let mut q = (frac * (1i64 << 31) as f64).round() as i64;
+    let mut shift = -exp;
+    if q == (1i64 << 31) {
+        // Rounding overflowed to exactly 2^31: halve and adjust.
+        q /= 2;
+        shift -= 1;
+    }
+    (q as i32, shift)
+}
+
+/// `frexp(m) = (frac, exp)` with `m = frac * 2^exp`, `frac in [0.5, 1)`.
+fn frexp(m: f64) -> (f64, i32) {
+    let mut exp = 0i32;
+    let mut frac = m;
+    while frac >= 1.0 {
+        frac /= 2.0;
+        exp += 1;
+    }
+    while frac < 0.5 {
+        frac *= 2.0;
+        exp -= 1;
+    }
+    (frac, exp)
+}
+
+/// Saturating rounding doubling high multiply: `(a*b + nudge) / 2^31`
+/// in 64-bit with truncating division (NOT a `>>` shift — flooring
+/// would bias negative products down by one even on exact quotients),
+/// saturated at `i32::MAX` for the single overflow case
+/// (`a == b == i32::MIN`). gemmlowp's `SaturatingRoundingDoublingHighMul`.
+pub fn rounding_doubling_high_mul(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX;
+    }
+    let ab = (a as i64) * (b as i64);
+    let nudge = if ab >= 0 { 1i64 << 30 } else { 1 - (1i64 << 30) };
+    ((ab + nudge) / (1i64 << 31)) as i32
+}
+
+/// Rounding (round-half-away-from-zero) arithmetic right shift.
+pub fn rounding_right_shift(x: i32, s: i32) -> i32 {
+    if s <= 0 {
+        return x.wrapping_shl((-s) as u32);
+    }
+    let mask = (1i64 << s) - 1;
+    let x64 = x as i64;
+    let remainder = x64 & mask;
+    let threshold = (mask >> 1) + i64::from(x64 < 0);
+    ((x64 >> s) + i64::from(remainder > threshold)) as i32
+}
+
+/// Pure-integer requantize of an i32 accumulator to a u8 code:
+/// fixed-point multiply, rounding shift, add the output zero-point,
+/// saturate to `[0, 255]`.
+pub fn requantize_u8(acc: i32, mult: i32, shift: i32, out_zp: i32) -> u8 {
+    let x = rounding_doubling_high_mul(acc, mult);
+    let x = rounding_right_shift(x, shift);
+    (x.saturating_add(out_zp)).clamp(0, 255) as u8
+}
+
+// ---------------------------------------------------------------------
+// Scratch views: the planner's arenas are f32 slices; the i8 path
+// stages u8 codes in them.
+// ---------------------------------------------------------------------
+
+/// f32 slots needed to stage `n` bytes.
+pub fn f32_slots_for_bytes(n: usize) -> usize {
+    n.div_ceil(4)
+}
+
+/// View a planned f32 scratch region as bytes. Alignment is trivially
+/// satisfied (u8), and the length covers exactly the same storage.
+pub fn as_u8_mut(xs: &mut [f32]) -> &mut [u8] {
+    // SAFETY: u8 has alignment 1 and no validity requirements; the
+    // region is exclusively borrowed and sized from the f32 slice.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut u8, xs.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_round_trip() {
+        for d in [DType::F32, DType::I8] {
+            assert_eq!(DType::from_u8(d.to_u8()).unwrap(), d);
+            assert_eq!(DType::parse(d.as_str()).unwrap(), d);
+        }
+        assert!(DType::from_u8(9).is_err());
+        assert!(DType::parse("f16").is_err());
+    }
+
+    #[test]
+    fn qparams_zero_is_exact() {
+        for (lo, hi) in [(-1.5f32, 3.0f32), (0.0, 5.0), (-4.0, 0.0), (0.25, 2.0), (-3.0, -0.5)] {
+            let q = choose_qparams(lo, hi);
+            let mut code = [0u8; 1];
+            quantize_activations(&[0.0], q, &mut code);
+            let deq = (code[0] as i32 - q.zero_point) as f32 * q.scale;
+            assert_eq!(deq, 0.0, "zero must round-trip exactly for [{lo},{hi}]");
+            assert!(q.scale > 0.0);
+            assert!((0..=255).contains(&q.zero_point));
+        }
+    }
+
+    #[test]
+    fn qparams_degenerate_ranges() {
+        let q = choose_qparams(f32::INFINITY, f32::NEG_INFINITY); // empty minmax
+        assert_eq!(q.scale, 1.0);
+        let q = choose_qparams(0.0, 0.0);
+        assert_eq!((q.scale, q.zero_point), (1.0, 0));
+    }
+
+    #[test]
+    fn activation_round_trip_within_half_step() {
+        let mut rng = crate::util::Rng::new(9);
+        let xs: Vec<f32> = (0..512).map(|_| rng.range_f32(-3.0, 5.0)).collect();
+        let (lo, hi) = minmax(&xs);
+        let q = choose_qparams(lo, hi);
+        let mut codes = vec![0u8; xs.len()];
+        quantize_activations(&xs, q, &mut codes);
+        for (&c, &v) in codes.iter().zip(&xs) {
+            let deq = (c as i32 - q.zero_point) as f32 * q.scale;
+            assert!(
+                (deq - v).abs() <= q.scale * 0.5 + 1e-6,
+                "code {c} dequantizes to {deq}, want {v} within half a step ({})",
+                q.scale
+            );
+        }
+    }
+
+    #[test]
+    fn weight_round_trip_within_half_step() {
+        let mut rng = crate::util::Rng::new(10);
+        let ws: Vec<f32> = (0..512).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let maxabs = ws.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let s = weight_scale(maxabs);
+        for &v in &ws {
+            let q = quantize_weight(v, s);
+            assert!((q as f32 * s - v).abs() <= s * 0.5 + 1e-6);
+        }
+        // Extremes hit +/-127 exactly.
+        assert_eq!(quantize_weight(maxabs, s), 127);
+        assert_eq!(quantize_weight(-maxabs, s), -127);
+        assert_eq!(weight_scale(0.0), 1.0);
+    }
+
+    #[test]
+    fn requantize_matches_reference() {
+        // acc = sum w_q * x_q; reference: s * sum w_q * (x_q - zp) + bias.
+        let (acc, wsum, zp, s, b) = (12345i32, 321i32, 7i32, 0.031f32, 0.25f32);
+        let want = s * ((acc - zp * wsum) as f32) + b;
+        assert_eq!(requantize(acc, wsum, zp, s, b, Act::None), want);
+        assert_eq!(requantize(-acc, wsum, zp, s, b, Act::Relu), 0.0);
+        assert_eq!(requantize(acc * 100, wsum, zp, s, b, Act::Relu6), 6.0);
+    }
+
+    #[test]
+    fn multiplier_decomposition_accuracy() {
+        // m ≈ mult * 2^(-31-shift) to within one ulp of Q31.
+        for &m in &[0.0007, 0.013, 0.25, 0.4999, 0.5, 0.9999, 1.0, 1.7, 123.456] {
+            let (mult, shift) = quantize_multiplier(m);
+            assert!((1 << 30..=i32::MAX).contains(&mult), "m={m} mult={mult}");
+            let recon = mult as f64 * 2f64.powi(-31 - shift);
+            assert!(
+                (recon - m).abs() / m < 1e-8,
+                "m={m}: mult={mult} shift={shift} recon={recon}"
+            );
+        }
+    }
+
+    #[test]
+    fn rounding_doubling_high_mul_cases() {
+        assert_eq!(rounding_doubling_high_mul(i32::MIN, i32::MIN), i32::MAX);
+        assert_eq!(rounding_doubling_high_mul(1 << 30, 1 << 30), 1 << 29);
+        assert_eq!(rounding_doubling_high_mul(0, 12345), 0);
+        // Sign symmetry (away-from-zero rounding).
+        assert_eq!(
+            rounding_doubling_high_mul(-(1 << 30), 1 << 30),
+            -rounding_doubling_high_mul(1 << 30, 1 << 30)
+        );
+    }
+
+    #[test]
+    fn rounding_right_shift_cases() {
+        assert_eq!(rounding_right_shift(5, 1), 3); // 2.5 rounds away to 3
+        assert_eq!(rounding_right_shift(-5, 1), -3);
+        assert_eq!(rounding_right_shift(4, 1), 2);
+        assert_eq!(rounding_right_shift(7, 0), 7);
+        assert_eq!(rounding_right_shift(3, -2), 12); // negative = left shift
+    }
+
+    /// Property: the integer pipeline agrees with the float reference to
+    /// within one output step across random accumulators and scales.
+    #[test]
+    fn integer_requantize_tracks_float_reference() {
+        let mut rng = crate::util::Rng::new(77);
+        for _ in 0..2000 {
+            let acc = (rng.next_u64() as i32) % 2_000_000;
+            let m = 1e-6 + rng.f64() * 0.01; // realistic s_x*s_w/s_out
+            let out_zp = (rng.next_u64() % 256) as i32;
+            let (mult, shift) = quantize_multiplier(m);
+            let got = requantize_u8(acc, mult, shift, out_zp) as f64;
+            let want = (acc as f64 * m + out_zp as f64).clamp(0.0, 255.0);
+            assert!(
+                (got - want).abs() <= 1.5,
+                "acc={acc} m={m} zp={out_zp}: int {got} vs float {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn u8_view_aliases_f32_storage() {
+        let mut buf = vec![0.0f32; 4];
+        {
+            let bytes = as_u8_mut(&mut buf);
+            assert_eq!(bytes.len(), 16);
+            bytes[0] = 0x3f;
+            bytes[3] = 0x3f;
+        }
+        assert_ne!(buf[0], 0.0);
+        assert_eq!(f32_slots_for_bytes(0), 0);
+        assert_eq!(f32_slots_for_bytes(1), 1);
+        assert_eq!(f32_slots_for_bytes(9), 3);
+    }
+}

@@ -65,6 +65,9 @@ pub struct ModelStats {
     /// This model's isolated workspace-pool telemetry; `checkouts` is the
     /// number of inferences the model has served.
     pub pool: PoolStats,
+    /// Weight bytes resident per value type (`f32` storage vs packed
+    /// `i8` codes + their row sums) — the quantization win, per model.
+    pub weight_bytes: [(crate::quant::DType, usize); 2],
     /// Fair-share quota in shared-runtime worker buckets, when set.
     pub quota: Option<usize>,
     /// Requests that targeted this model while it was not resident
@@ -400,6 +403,7 @@ impl ModelRegistry {
             .into_iter()
             .map(|(name, resident_bytes, engine)| ModelStats {
                 pool: engine.workspace_pool().stats(),
+                weight_bytes: engine.plan().weight_bytes_by_dtype(),
                 quota: self.runtime.quota(&name),
                 not_resident: self.not_resident(&name),
                 name,
@@ -422,6 +426,7 @@ impl ModelRegistry {
                 quota: self.runtime.quota(&name),
                 name,
                 resident_bytes: 0,
+                weight_bytes: [(crate::quant::DType::F32, 0), (crate::quant::DType::I8, 0)],
                 pool: PoolStats::default(),
                 not_resident,
             });
@@ -486,6 +491,28 @@ impl ModelRegistry {
                 .map(|m| (m.name.clone(), m.not_resident.to_string()))
                 .collect(),
         );
+        // Per-model, per-dtype weight residency: the only two-label
+        // family here, written directly (the `family` closure above is
+        // single-label). `{dtype="i8"}` rows appearing at all means the
+        // quantize pass took some layers; the f32/i8 byte split is the
+        // quantization win per model.
+        let dtype_rows: Vec<(String, &'static str, usize)> = stats
+            .iter()
+            .flat_map(|m| {
+                m.weight_bytes
+                    .iter()
+                    .filter(|(_, bytes)| *bytes > 0)
+                    .map(|(d, bytes)| (m.name.clone(), d.as_str(), *bytes))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        if !dtype_rows.is_empty() {
+            let _ = writeln!(out, "# TYPE grim_weight_bytes gauge");
+            for (model, dtype, bytes) in dtype_rows {
+                let _ =
+                    writeln!(out, "grim_weight_bytes{{model=\"{model}\",dtype=\"{dtype}\"}} {bytes}");
+            }
+        }
         let _ = writeln!(out, "# TYPE grim_registry_resident_bytes gauge");
         let _ = writeln!(out, "grim_registry_resident_bytes {}", self.resident_bytes());
         if let Some(b) = self.budget_bytes() {
@@ -663,10 +690,27 @@ mod tests {
         let e = reg.get("m").unwrap();
         let mut rng = Rng::new(6);
         e.run(&input_for(&e, &mut rng)).unwrap();
+        // A second model compiled with --dtype i8 must surface per-dtype
+        // weight rows: i8 bytes for its packed layers, f32 for the rest.
+        let o = InitOptions { rate: 6.0, block: [4, 16], seed: 71 };
+        let m = build_model(ModelKind::Gru, Preset::CifarMini, o);
+        let w = random_weights(&m, o);
+        let copts = CompileOptions { dtype: crate::quant::DType::I8, ..Default::default() };
+        reg.insert_plan("q", compile(&m, &w, copts).unwrap());
         let mut out = String::new();
         reg.render_prometheus_into(&mut out);
         assert!(out.contains("grim_model_resident_bytes{model=\"m\"}"));
+        assert!(out.contains("grim_weight_bytes{model=\"m\",dtype=\"f32\"}"));
+        assert!(
+            out.contains("grim_weight_bytes{model=\"q\",dtype=\"i8\"}"),
+            "quantized model must report i8 weight bytes:\n{out}"
+        );
         let samples = crate::obs::parse_text(&out).unwrap();
+        let i8_row = samples
+            .iter()
+            .find(|s| s.name == "grim_weight_bytes" && s.label("dtype") == Some("i8"))
+            .unwrap();
+        assert!(i8_row.value > 0.0);
         let threads = samples.iter().find(|s| s.name == "grim_runtime_threads").unwrap();
         assert_eq!(threads.value, 1.0);
         let checkouts = samples

@@ -43,7 +43,8 @@
 //! packed results are bit-identical (enforced by `tests/packed_parity`).
 
 use super::Bcrc;
-use crate::memory::aligned::AlignedBuf;
+use crate::memory::aligned::{AlignedBuf, AlignedBytes};
+use crate::quant::DType;
 use std::cell::Cell;
 
 thread_local! {
@@ -387,7 +388,9 @@ pub struct PackedBcrc {
     /// Groups in packed (descending-nnz) order.
     pub groups: Vec<PackedGroup>,
     pub idx: ColIndex,
-    /// Interleaved values, one 64 B-aligned block per group.
+    /// Interleaved f32 values, one 64 B-aligned block per group. Empty
+    /// when `dtype == I8` (a quantized layout replaces — never
+    /// duplicates — the f32 buffer, so the 4× density is real).
     pub values: AlignedBuf,
     /// `reorder[new_row] = original_row`, copied from the source `Bcrc`.
     pub reorder: Vec<u32>,
@@ -397,6 +400,18 @@ pub struct PackedBcrc {
     /// True when rows are stored contiguously (`mr == 1`, single column
     /// block), which the GEMV dot kernel requires.
     pub row_major: bool,
+    /// Value type of the packed buffer in use.
+    pub dtype: DType,
+    /// Interleaved i8 values (same offsets as `values` would use, one
+    /// byte per element). Empty when `dtype == F32`.
+    pub values_i8: AlignedBytes,
+    /// Per-reordered-row sum of the i8 weight codes (`wsum[new_row]`),
+    /// used by the requantize epilogue to fold out the activation
+    /// zero-point. Recomputed from `values_i8` at artifact load — never
+    /// serialized. Empty when `dtype == F32`.
+    pub wsum: Vec<i32>,
+    /// Symmetric per-tensor weight scale (`1.0` for f32 layouts).
+    pub w_scale: f32,
 }
 
 impl PackedBcrc {
@@ -489,7 +504,63 @@ impl PackedBcrc {
             reorder: enc.reorder.clone(),
             nnz: enc.nnz(),
             max_width,
+            dtype: DType::F32,
+            values_i8: AlignedBytes::zeroed(0),
+            wsum: Vec::new(),
+            w_scale: 1.0,
         }
+    }
+
+    /// Quantize this f32 layout to symmetric per-tensor i8: same groups,
+    /// indices, and panel interleave; the value buffer shrinks 4× and
+    /// gains the per-row code sums the requantize epilogue needs. A
+    /// weight-packing transform (compile-time only — artifacts ship the
+    /// quantized bytes, and the loader's no-repack counter proves it).
+    pub fn quantize_i8(&self) -> PackedBcrc {
+        assert_eq!(self.dtype, DType::F32, "already quantized");
+        note_pack();
+        let src = self.values.as_slice();
+        let maxabs = src.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let w_scale = crate::quant::weight_scale(maxabs);
+        let mut values_i8 = AlignedBytes::zeroed(src.len());
+        for (d, &v) in values_i8.as_i8_mut().iter_mut().zip(src) {
+            *d = crate::quant::quantize_weight(v, w_scale);
+        }
+        let mut out = PackedBcrc {
+            dtype: DType::I8,
+            values: AlignedBuf::zeroed(0),
+            values_i8,
+            wsum: Vec::new(),
+            w_scale,
+            ..self.clone()
+        };
+        out.wsum = out.computed_wsum();
+        out
+    }
+
+    /// Per-reordered-row sums of the i8 codes, recomputed from the
+    /// packed buffer (the single definition both `quantize_i8` and the
+    /// artifact loader use, so serialized and derived state can't drift).
+    pub fn computed_wsum(&self) -> Vec<i32> {
+        debug_assert_eq!(self.dtype, DType::I8);
+        let vals = self.values_i8.as_i8();
+        let mut wsum = vec![0i32; self.rows];
+        let mr = self.shape.mr.max(1);
+        let kc = self.shape.kc.max(1);
+        for g in &self.groups {
+            let rows_g = g.rows();
+            let width = g.width as usize;
+            let lo = g.rows_lo as usize;
+            for_each_panel(rows_g, width, mr, kc, g.val_off, 0, rows_g, |_kb, kl, pb, ro, h| {
+                for kk in 0..kl {
+                    for u in 0..h {
+                        wsum[lo + ro + u] =
+                            wsum[lo + ro + u].wrapping_add(vals[pb + kk * h + u] as i32);
+                    }
+                }
+            });
+        }
+        wsum
     }
 
     /// The static nnz-balanced schedule for this layout at `threads`
@@ -554,7 +625,19 @@ impl PackedBcrc {
         &self.values.as_slice()[off..off + width]
     }
 
-    /// Packed storage in bytes: aligned values + indices + group table.
+    /// [`Self::row_values`] for a quantized layout: the contiguous i8
+    /// codes of row `ro` (group-relative) of packed group `gi`.
+    #[inline]
+    pub fn row_values_i8(&self, gi: usize, ro: usize) -> &[i8] {
+        debug_assert!(self.row_major, "row_values_i8 requires a row-major packing");
+        let g = &self.groups[gi];
+        let width = g.width as usize;
+        let off = g.val_off + ro * width;
+        &self.values_i8.as_i8()[off..off + width]
+    }
+
+    /// Packed storage in bytes: aligned values (+ row code sums for i8)
+    /// + indices + group table.
     pub fn packed_bytes(&self) -> usize {
         let idx = match &self.idx {
             ColIndex::U16(d) => 2 * d.len(),
@@ -563,15 +646,28 @@ impl PackedBcrc {
                 2 * narrow.len() + 4 * wide.len() + wide_groups.len()
             }
         };
-        4 * self.values.len() + idx + std::mem::size_of_val(self.groups.as_slice())
+        let vals = match self.dtype {
+            DType::F32 => 4 * self.values.len(),
+            DType::I8 => self.values_i8.len() + 4 * self.wsum.len(),
+        };
+        vals + idx + std::mem::size_of_val(self.groups.as_slice())
     }
 
     /// Exhaustive round-trip check against the source encoding: every
-    /// group's span, signature, and every interleaved value must match.
+    /// group's span, signature, and every interleaved value must match —
+    /// exactly for f32 layouts, as `round(v / w_scale)` codes (plus
+    /// consistent row sums) for i8 layouts.
     pub fn validate_against(&self, enc: &Bcrc) -> anyhow::Result<()> {
         anyhow::ensure!(self.groups.len() == enc.num_groups(), "group count");
         anyhow::ensure!(self.rows == enc.rows && self.cols == enc.cols, "dims");
         anyhow::ensure!(self.reorder == enc.reorder, "reorder copy");
+        if self.dtype == DType::I8 {
+            anyhow::ensure!(
+                self.values.is_empty(),
+                "quantized layout must not retain the f32 buffer"
+            );
+            anyhow::ensure!(self.wsum == self.computed_wsum(), "wsum inconsistent with codes");
+        }
         // Source groups keyed by their (unique) first reordered row.
         let mut by_lo = std::collections::HashMap::new();
         for k in 0..enc.num_groups() {
@@ -603,11 +699,17 @@ impl PackedBcrc {
                 }
                 for kk in 0..kl {
                     for u in 0..h {
-                        let got = vd[pb + kk * h + u];
                         let want = enc.row_weights(lo + ro + u)[kb_lo + kk];
-                        if got != want {
+                        let ok = match self.dtype {
+                            DType::F32 => vd[pb + kk * h + u] == want,
+                            DType::I8 => {
+                                self.values_i8.as_i8()[pb + kk * h + u]
+                                    == crate::quant::quantize_weight(want, self.w_scale)
+                            }
+                        };
+                        if !ok {
                             mismatch = Some(format!(
-                                "group {gi} row {} col {}: {got} != {want}",
+                                "group {gi} row {} col {}: packed value != {want}",
                                 ro + u,
                                 kb_lo + kk
                             ));
@@ -799,6 +901,34 @@ mod tests {
         // it must never register as a packing transform.
         let _ = p.lpt_partition(4);
         assert_eq!(pack_invocations(), before + 1);
+    }
+
+    #[test]
+    fn quantize_i8_round_trips_and_shrinks() {
+        for (mr, kc) in [(4usize, 16usize), (1, 128), (8, 33)] {
+            let enc = setup(21, 64, 128, 6.0);
+            let p = PackedBcrc::pack(&enc, shape(mr, kc));
+            let before = pack_invocations();
+            let q = p.quantize_i8();
+            assert_eq!(pack_invocations(), before + 1, "quantize is a packing transform");
+            assert_eq!(q.dtype, DType::I8);
+            assert!(q.values.is_empty() && q.values_i8.len() == p.values.len());
+            q.validate_against(&enc).unwrap_or_else(|e| panic!("mr={mr} kc={kc}: {e}"));
+            // Every code dequantizes to within half a step of the source.
+            let vd = p.values.as_slice();
+            let qd = q.values_i8.as_i8();
+            for (i, (&v, &c)) in vd.iter().zip(qd).enumerate() {
+                assert!(
+                    (c as f32 * q.w_scale - v).abs() <= q.w_scale * 0.5 + 1e-6,
+                    "elem {i}: code {c} scale {} vs {v}",
+                    q.w_scale
+                );
+            }
+            assert_eq!(q.wsum, q.computed_wsum());
+            // ~4x value-byte density (wsum + shared index/group overhead
+            // keep the whole-layout ratio below 4 but well above 2).
+            assert!(q.packed_bytes() < p.packed_bytes());
+        }
     }
 
     #[test]

@@ -21,7 +21,7 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce(&mut Vec<f32>) + Send + 'static>;
@@ -48,6 +48,17 @@ pub fn workers_spawned() -> usize {
 /// Pool worker threads currently alive process-wide.
 pub fn workers_live() -> usize {
     WORKERS_LIVE.load(Ordering::SeqCst)
+}
+
+/// `GRIM_STICKY_WORKERS=1` pins the chunk→worker mapping of
+/// `run_partitioned*`: chunk `w` always runs on worker `w`, disabling
+/// the per-call rotor rotation. Sticky mapping keeps each worker's
+/// scratch buffer (and its cache footprint) tied to the same row range
+/// across calls — the right trade when one model owns the whole pool
+/// and the rotation's fairness between quota'd models buys nothing.
+pub fn sticky_workers() -> bool {
+    static STICKY: OnceLock<bool> = OnceLock::new();
+    *STICKY.get_or_init(|| std::env::var_os("GRIM_STICKY_WORKERS").is_some_and(|v| v != "0"))
 }
 
 /// Fixed-size thread pool with a barrier-style `run_*` API.
@@ -136,7 +147,9 @@ impl ThreadPool {
         // than workers (a quota'd model's buckets) then lands on a
         // different worker subset each time, so concurrent narrow jobs
         // from different models statistically use the whole pool.
-        let start = self.rotor.fetch_add(1, Ordering::Relaxed);
+        // GRIM_STICKY_WORKERS=1 opts out: chunk w stays on worker w.
+        let start =
+            if sticky_workers() { 0 } else { self.rotor.fetch_add(1, Ordering::Relaxed) };
         let mut dispatched = 0;
         for w in 0..self.size {
             let lo = w * chunk;
@@ -395,5 +408,32 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.run_partitioned(0, |_, _, _| panic!("should not run"));
         pool.run_dynamic(0, |_, _| panic!("should not run"));
+    }
+
+    /// A single-chunk job lands on the same worker every call when
+    /// `GRIM_STICKY_WORKERS=1` (the CI leg that sets it drives the
+    /// sticky branch), and rotates across workers otherwise. Each call
+    /// marks the executing worker's scratch; a full-width job then
+    /// reads the per-worker mark counts back.
+    #[test]
+    fn narrow_jobs_sticky_or_rotating() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..8 {
+            pool.run_partitioned_scratch(1, |scratch, _w, _lo, _hi| {
+                scratch.push(1.0);
+            });
+        }
+        let counts = Arc::new(Mutex::new(Vec::new()));
+        let c2 = Arc::clone(&counts);
+        pool.run_partitioned_scratch(2, move |scratch, _w, _lo, _hi| {
+            c2.lock().unwrap().push(scratch.len());
+        });
+        let mut counts = counts.lock().unwrap().clone();
+        counts.sort_unstable();
+        if sticky_workers() {
+            assert_eq!(counts, [0, 8], "sticky mapping must pin the chunk to one worker");
+        } else {
+            assert_eq!(counts, [4, 4], "the rotor must alternate narrow jobs across workers");
+        }
     }
 }

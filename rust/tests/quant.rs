@@ -1,0 +1,142 @@
+//! Quantized (`--dtype i8`) serving acceptance tests:
+//!
+//! * on all four model presets, the i8 plan tracks the f32 plan's
+//!   post-softmax outputs within a fixed budget while shrinking the
+//!   packed weight bytes;
+//! * a quantized plan round-trips through the v5 `.grimc` grammar
+//!   bit-identically (codes, row sums recomputed at load, scale);
+//! * pre-v5 grammars still write/load f32 plans, and **refuse** to
+//!   write a quantized plan (no silent i8 drop on downgrade).
+
+use grim::artifact;
+use grim::compiler::passes::{compile, CompileOptions};
+use grim::compiler::plan::ExecutionPlan;
+use grim::engine::Engine;
+use grim::models::{build_model, random_weights, InitOptions, ModelKind, Preset};
+use grim::quant::DType;
+use grim::tensor::Tensor;
+use grim::util::Rng;
+
+const KINDS: [ModelKind; 4] =
+    [ModelKind::Vgg16, ModelKind::Resnet18, ModelKind::MobilenetV2, ModelKind::Gru];
+
+fn compiled(kind: ModelKind, seed: u64, dtype: DType) -> ExecutionPlan {
+    let o = InitOptions { rate: 6.0, block: [4, 16], seed };
+    let m = build_model(kind, Preset::CifarMini, o);
+    let w = random_weights(&m, o);
+    compile(&m, &w, CompileOptions { dtype, ..Default::default() }).unwrap()
+}
+
+fn input_for(engine: &Engine, rng: &mut Rng) -> Tensor {
+    let dims = engine.plan().memory.shapes[engine.plan().input_id].clone();
+    Tensor::rand_uniform(&dims, 1.0, rng)
+}
+
+/// Every preset's i8 plan stays within the serving error budget of its
+/// f32 twin on post-softmax outputs, quantizes at least one layer, and
+/// carries strictly fewer packed bytes. (The tight per-layer analytic
+/// bound lives in the bcrc_gemm unit test; this is the end-to-end
+/// budget across stacked quantized layers.)
+#[test]
+fn i8_tracks_f32_on_all_presets() {
+    if grim::compiler::packing::force_unpacked() {
+        return; // nothing packed to quantize under GRIM_FORCE_UNPACKED
+    }
+    for (i, kind) in KINDS.iter().enumerate() {
+        let f32_plan = compiled(*kind, 900 + i as u64, DType::F32);
+        let q_plan = compiled(*kind, 900 + i as u64, DType::I8);
+        assert!(q_plan.packing.i8_layers > 0, "{kind:?}: no layer quantized");
+        assert!(
+            q_plan.packing.packed_bytes < f32_plan.packing.packed_bytes,
+            "{kind:?}: i8 must shrink packed bytes ({} vs {})",
+            q_plan.packing.packed_bytes,
+            f32_plan.packing.packed_bytes
+        );
+        let [(_, fq_f32), (_, fq_i8)] = q_plan.weight_bytes_by_dtype();
+        assert!(fq_i8 > 0, "{kind:?}: dtype split must report i8 bytes");
+        let [(_, ff_f32), (_, ff_i8)] = f32_plan.weight_bytes_by_dtype();
+        assert_eq!(ff_i8, 0, "{kind:?}: f32 plan must report no i8 bytes");
+        assert!(fq_f32 + fq_i8 < ff_f32, "{kind:?}: total weight bytes must shrink");
+        let ef = Engine::new(f32_plan, 2);
+        let eq = Engine::new(q_plan, 2);
+        let mut rng = Rng::new(0x9100 + i as u64);
+        for case in 0..2 {
+            let x = input_for(&ef, &mut rng);
+            let a = ef.run(&x).unwrap();
+            let b = eq.run(&x).unwrap();
+            assert!(
+                a.allclose(&b, 1e-1, 1e-1),
+                "{kind:?} case {case}: i8 drifted from f32 by {}",
+                a.max_abs_diff(&b)
+            );
+        }
+    }
+}
+
+/// A quantized plan survives the v5 byte round-trip bit-identically:
+/// same i8 layer count, same packed bytes, same outputs.
+#[test]
+fn v5_round_trip_preserves_quantized_plans() {
+    if grim::compiler::packing::force_unpacked() {
+        return;
+    }
+    for (i, kind) in [ModelKind::Vgg16, ModelKind::Gru].iter().enumerate() {
+        let plan = compiled(*kind, 910 + i as u64, DType::I8);
+        let bytes = artifact::to_bytes(&plan).unwrap();
+        assert_eq!(
+            u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+            artifact::GRIMC_VERSION,
+            "quantized artifacts write the current version"
+        );
+        let loaded = artifact::from_bytes(&bytes).unwrap();
+        assert_eq!(loaded.packing.i8_layers, plan.packing.i8_layers, "{kind:?}");
+        assert_eq!(loaded.packing.packed_bytes, plan.packing.packed_bytes, "{kind:?}");
+        assert_eq!(loaded.describe(), plan.describe(), "{kind:?}");
+        assert_eq!(loaded.weight_bytes_by_dtype(), plan.weight_bytes_by_dtype(), "{kind:?}");
+        let mem = Engine::new(plan, 2);
+        let aot = Engine::new(loaded, 2);
+        let mut rng = Rng::new(0x9200 + i as u64);
+        for case in 0..2 {
+            let x = input_for(&mem, &mut rng);
+            assert_eq!(
+                mem.run(&x).unwrap(),
+                aot.run(&x).unwrap(),
+                "{kind:?} case {case}: loaded i8 plan must run bit-identically"
+            );
+        }
+    }
+}
+
+/// f32 plans still write at every historical version (v1–v4) and load
+/// bit-identically; quantized plans refuse every pre-v5 version with a
+/// clear error instead of silently dropping their codes.
+#[test]
+fn pre_v5_versions_load_f32_and_reject_i8() {
+    let plan = compiled(ModelKind::Gru, 920, DType::F32);
+    let mut rng = Rng::new(0x9300);
+    let mem = Engine::new(plan.clone(), 2);
+    let x = input_for(&mem, &mut rng);
+    let want = mem.run(&x).unwrap();
+    for v in 1..=4u32 {
+        let bytes = artifact::to_bytes_versioned(&plan, v)
+            .unwrap_or_else(|e| panic!("f32 plan must encode at v{v}: {e}"));
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), v);
+        let loaded = artifact::from_bytes(&bytes).unwrap_or_else(|e| panic!("load v{v}: {e}"));
+        assert_eq!(loaded.packing.i8_layers, 0, "pre-v5 artifacts are all-f32");
+        let aot = Engine::new(loaded, 2);
+        assert_eq!(want, aot.run(&x).unwrap(), "v{v} artifact must run bit-identically");
+    }
+    if grim::compiler::packing::force_unpacked() {
+        return;
+    }
+    let q_plan = compiled(ModelKind::Gru, 920, DType::I8);
+    for v in 1..=4u32 {
+        let err = artifact::to_bytes_versioned(&q_plan, v)
+            .expect_err("quantized plans must refuse pre-v5 versions");
+        assert!(
+            err.to_string().contains("version >= 5"),
+            "v{v}: unexpected error {err}"
+        );
+    }
+    assert!(artifact::to_bytes_versioned(&q_plan, 5).is_ok());
+}

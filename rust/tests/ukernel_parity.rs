@@ -12,6 +12,7 @@
 //! environment.
 
 use grim::gemm::bcrc_gemm::{BcrcGemm, GemmParams};
+use grim::quant;
 use grim::gemm::pack::{pack_bcrc, CacheParams, PackOverrides, PackedDense};
 use grim::gemm::simd::{self, HwConfig, Isa};
 use grim::gemm::tiled::{tiled_gemm_into_ep, tiled_gemm_packed_into_ep, TileParams};
@@ -235,6 +236,87 @@ fn parallel_regtile_matches_serial() {
             Epilogue::BiasRelu(&bias),
         );
         assert_eq!(serial, par, "threads={threads}: parallel != serial");
+    }
+}
+
+fn quantize_input(x: &Tensor) -> (Vec<u8>, quant::QParams) {
+    let (lo, hi) = quant::minmax(x.data());
+    let qx = quant::choose_qparams(lo, hi);
+    let mut xq = vec![0u8; x.data().len()];
+    quant::quantize_activations(x.data(), qx, &mut xq);
+    (xq, qx)
+}
+
+/// i8 packed execution must be **bit-identical** between the scalar and
+/// dispatched kernel tables — not merely close. Every i8 path
+/// accumulates in i32 (exact, order-independent) and funnels through
+/// the single `quant::requantize`, so the f32 outputs can be compared
+/// with `assert_eq!`. Covers n>1 panel spans, the n=1 row-major gemv,
+/// and all three epilogue flavors.
+#[test]
+fn i8_scalar_vs_simd_exact_parity() {
+    let enc = random_enc(0x18A0, 40, 96, 5.0);
+    let params = GemmParams::default();
+    let hw = HwConfig::for_isa(Isa::Avx2Fma, CacheParams::default());
+    let bias = rand_bias(0x18A1, enc.rows);
+    for n in [1usize, 5, 16, 17] {
+        let p = Arc::new(pack_bcrc(&enc, params, n, hw, PackOverrides::default()).quantize_i8());
+        p.validate_against(&enc).unwrap();
+        let gemm = BcrcGemm::new(enc.clone(), params).with_packed(Arc::clone(&p));
+        let x = rand_x(0x18A2 + n as u64, enc.cols, n);
+        let (xq, qx) = quantize_input(&x);
+        for ep in [Epilogue::None, Epilogue::BiasRelu(&bias), Epilogue::Relu6] {
+            let mut a = vec![0.0f32; enc.rows * n];
+            let mut b = vec![0.0f32; enc.rows * n];
+            let mut gather = vec![0u8; p.max_width.max(1)];
+            gemm.execute_i8_into_ep(&xq, n, &mut a, &mut gather, qx, simd::active(), ep);
+            gemm.execute_i8_into_ep(&xq, n, &mut b, &mut gather, qx, simd::scalar(), ep);
+            assert_eq!(a, b, "n={n} ep={ep:?}: i8 dispatched != scalar");
+        }
+    }
+}
+
+/// The parallel i8 path (static LPT schedule) is bit-identical to the
+/// serial i8 path at several bucket counts, for both the panel (n>1)
+/// and gemv (n=1) shapes.
+#[test]
+fn i8_parallel_matches_serial() {
+    let enc = random_enc(0x18B0, 56, 96, 5.0);
+    let params = GemmParams::default();
+    let hw = HwConfig::for_isa(Isa::Avx2Fma, CacheParams::default());
+    let bias = rand_bias(0x18B1, enc.rows);
+    for n in [1usize, 16] {
+        let p = Arc::new(pack_bcrc(&enc, params, n, hw, PackOverrides::default()).quantize_i8());
+        let gemm = BcrcGemm::new(enc.clone(), params).with_packed(Arc::clone(&p));
+        let x = rand_x(0x18B2 + n as u64, enc.cols, n);
+        let (xq, qx) = quantize_input(&x);
+        let mut serial = vec![0.0f32; enc.rows * n];
+        let mut gather = vec![0u8; p.max_width.max(1)];
+        gemm.execute_i8_into_ep(
+            &xq,
+            n,
+            &mut serial,
+            &mut gather,
+            qx,
+            simd::active(),
+            Epilogue::BiasRelu(&bias),
+        );
+        for threads in [1usize, 2, 5] {
+            let pool = ThreadPool::new(threads);
+            let part = Arc::new(p.lpt_partition(threads));
+            let mut par = vec![0.0f32; enc.rows * n];
+            gemm.execute_i8_parallel_into_ep(
+                &xq,
+                n,
+                &mut par,
+                &part,
+                &pool,
+                qx,
+                simd::active(),
+                Epilogue::BiasRelu(&bias),
+            );
+            assert_eq!(serial, par, "n={n} threads={threads}: i8 parallel != serial");
+        }
     }
 }
 
